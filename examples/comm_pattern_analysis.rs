@@ -1,0 +1,88 @@
+//! Reproduces **Figs. 1 and 2** as text: the butterfly network's round-by-
+//! round knowledge propagation for fanout 1 and fanout 4 over 16 compute
+//! nodes (the (b)–(f) subfigure sequence), the non-power-of-two hotspot of
+//! Fig 1(f), and the §3 cost comparison against all-to-all.
+//!
+//! Run: `cargo run --release --example comm_pattern_analysis`
+
+use butterfly_bfs::comm::analysis::{comm_costs, propagate_knowledge};
+use butterfly_bfs::comm::{Butterfly, CommPattern, ConcurrentAllToAll, IterativeAllToAll};
+use butterfly_bfs::harness::table::Table;
+use butterfly_bfs::net::model::NetModel;
+use butterfly_bfs::net::sim::simulate_uniform;
+
+fn knowledge_string(k: u128, cn: u32) -> String {
+    (0..cn)
+        .map(|g| if k >> g & 1 == 1 { 'x' } else { '.' })
+        .collect()
+}
+
+fn show_butterfly(fanout: u32, cn: u32) {
+    let bf = Butterfly::new(fanout);
+    let s = bf.schedule(cn);
+    println!(
+        "butterfly fanout {fanout}, {cn} nodes: {} rounds, {} messages",
+        s.depth(),
+        s.total_messages()
+    );
+    // Recreate the (b)-(f) panels: node 0's knowledge after each round.
+    let mut know: Vec<u128> = (0..cn).map(|g| 1u128 << g).collect();
+    println!("  node 0 knows: {}   (start — Fig (b))", knowledge_string(know[0], cn));
+    for (i, round) in s.rounds.iter().enumerate() {
+        let snap = know.clone();
+        for t in round {
+            know[t.dst as usize] |= snap[t.src as usize];
+        }
+        println!(
+            "  node 0 knows: {}   (after round {i})",
+            knowledge_string(know[0], cn)
+        );
+    }
+    let done = propagate_knowledge(&s);
+    assert!(done.iter().all(|&k| k == (1u128 << cn) - 1));
+    println!("  all {cn} nodes hold all frontiers ✓\n");
+}
+
+fn main() {
+    println!("== Fig 1: butterfly, fanout 1, 16 nodes ==");
+    show_butterfly(1, 16);
+
+    println!("== Fig 2: butterfly, fanout 4, 16 nodes ==");
+    show_butterfly(4, 16);
+
+    println!("== Fig 1(f): 9 nodes, fanout 1 — the last-round hotspot ==");
+    let s9 = Butterfly::new(1).schedule(9);
+    for (i, round) in s9.rounds.iter().enumerate() {
+        let from8 = round.iter().filter(|t| t.src == 8).count();
+        println!(
+            "  round {i}: {} transfers, {} sent by node 8",
+            round.len(),
+            from8
+        );
+    }
+    println!();
+
+    println!("== §3 cost comparison (16 nodes, 1 MB payloads, DGX-2 model) ==");
+    let net = NetModel::dgx2();
+    let payload = 1u64 << 20;
+    let mut t = Table::new(&["pattern", "rounds", "messages", "buffer MB", "sim ms"]);
+    let pats: Vec<(&str, Box<dyn CommPattern>)> = vec![
+        ("butterfly f=1", Box::new(Butterfly::new(1))),
+        ("butterfly f=4", Box::new(Butterfly::new(4))),
+        ("all-to-all concurrent", Box::new(ConcurrentAllToAll)),
+        ("all-to-all iterative", Box::new(IterativeAllToAll)),
+    ];
+    for (name, p) in pats {
+        let s = p.schedule(16);
+        let c = comm_costs(&s, payload);
+        let sim = simulate_uniform(&s, &net, payload);
+        t.row(vec![
+            name.into(),
+            c.rounds.to_string(),
+            c.messages.to_string(),
+            format!("{:.1}", c.buffer_bytes as f64 / (1 << 20) as f64),
+            format!("{:.3}", sim.total() * 1e3),
+        ]);
+    }
+    println!("{}", t.render());
+}

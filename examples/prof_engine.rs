@@ -1,0 +1,26 @@
+//! Profiling driver for the §Perf pass: 30 back-to-back 16-node
+//! traversals of a kron scale-16 graph — the workload behind the
+//! before/after numbers in EXPERIMENTS.md §Perf.
+//!
+//! Usage: `cargo build --release --example prof_engine &&
+//!         perf record -g ./target/release/examples/prof_engine &&
+//!         perf report --no-children`
+
+use butterfly_bfs::coordinator::{ButterflyBfs, EngineConfig};
+use butterfly_bfs::graph::gen::kronecker::{kronecker, KroneckerParams};
+
+fn main() {
+    let (g, _) = kronecker(KroneckerParams::graph500(16, 16), 42);
+    let mut engine = ButterflyBfs::new(&g, EngineConfig::dgx2(16, 4));
+    let t0 = std::time::Instant::now();
+    for _ in 0..30 {
+        engine.run(0);
+    }
+    let dt = t0.elapsed().as_secs_f64();
+    println!(
+        "30 runs in {:.3} s  ({:.1} ms/run, dist[1]={})",
+        dt,
+        dt / 30.0 * 1e3,
+        engine.dist()[1]
+    );
+}

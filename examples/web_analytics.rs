@@ -1,0 +1,95 @@
+//! Domain example: web-graph analytics — the workload class the paper's
+//! intro motivates (host-level web graphs, long-tail crawls).
+//!
+//! Builds the Webbase-2001-shaped analog (power-law web core + 400-vertex
+//! crawl tail), then uses the distributed engine as a library to answer
+//! analytics questions:
+//!
+//! * reachability + hop histogram from a seed page (BFS levels);
+//! * the paper's §5 observation that the crawl tail starves parallelism —
+//!   shown by per-level frontier sizes and the comm share;
+//! * 2/3-hop neighborhood sizes (the intro's "people connected two or
+//!   three hops away" query);
+//! * s–t hop distances between seeds.
+//!
+//! Run: `cargo run --release --example web_analytics`
+
+use butterfly_bfs::bfs::serial::INF;
+use butterfly_bfs::coordinator::{ButterflyBfs, EngineConfig};
+use butterfly_bfs::graph::gen::weblike::{weblike, WeblikeParams};
+use butterfly_bfs::graph::props;
+use butterfly_bfs::harness::table::{count, Table};
+
+fn main() {
+    // The Webbase-2001 analog: web core + long crawl tail (DESIGN.md §7).
+    let (g, _) = weblike(
+        WeblikeParams { tail_len: 400, strand_frac: 0.15, strand_len: 25, ..WeblikeParams::core(1 << 16, 8) },
+        0xB0B0_0001,
+    );
+    println!(
+        "web graph: |V|={} |E|={} pseudo-diameter {}\n",
+        count(g.num_vertices() as u64),
+        count(g.num_edges()),
+        props::pseudo_diameter(&g, 0)
+    );
+
+    let mut engine = ButterflyBfs::new(&g, EngineConfig::dgx2(16, 4));
+
+    // --- Reachability + hop histogram from the seed page ---
+    let m = engine.run(0);
+    engine.assert_agreement().unwrap();
+    let dist = engine.dist().to_vec();
+    println!("from seed page 0: reached {} pages in {} levels", count(m.reached), m.depth());
+    let mut t = Table::new(&["hops", "pages", "frontier share"]);
+    let reached = m.reached as f64;
+    for (lvl, l) in m.levels.iter().enumerate().take(12) {
+        t.row(vec![
+            lvl.to_string(),
+            count(l.frontier),
+            format!("{:.2}%", l.frontier as f64 / reached * 100.0),
+        ]);
+    }
+    if m.depth() > 12 {
+        t.row(vec![format!("13..{}", m.depth()), "tail".into(), "~1 page/level".into()]);
+    }
+    println!("{}", t.render());
+
+    // --- The crawl-tail pathology (§5 Webbase discussion) ---
+    let tail_levels = m.levels.iter().filter(|l| l.frontier <= 2).count();
+    println!(
+        "crawl-tail effect: {} of {} levels have ≤2 active pages (synchronization-dominated; \
+         comm share {:.1}%)\n",
+        tail_levels,
+        m.depth(),
+        m.sim_comm_fraction() * 100.0
+    );
+
+    // --- k-hop neighborhoods (the intro's 2-3 hop query) ---
+    let mut t = Table::new(&["seed", "1-hop", "2-hop", "3-hop"]);
+    for seed in [0u32, 17, 4242] {
+        engine.run(seed);
+        let d = engine.dist();
+        let khop = |k: u32| d.iter().filter(|&&x| x != INF && x <= k && x > 0).count() as u64;
+        t.row(vec![
+            seed.to_string(),
+            count(khop(1)),
+            count(khop(2)),
+            count(khop(3)),
+        ]);
+    }
+    println!("k-hop neighborhood sizes:\n{}", t.render());
+
+    // --- s-t hop distances ---
+    engine.run(0);
+    let d = engine.dist();
+    let mut t = Table::new(&["target page", "hops from seed 0"]);
+    for target in [1u32, 1000, 65_535, 65_935] {
+        let hops = d[target as usize];
+        t.row(vec![
+            target.to_string(),
+            if hops == INF { "unreachable".into() } else { hops.to_string() },
+        ]);
+    }
+    println!("s–t distances (65935 = end of the crawl tail):\n{}", t.render());
+    let _ = dist;
+}

@@ -1,0 +1,64 @@
+"""AOT lowering: JAX model -> HLO text artifacts for the Rust runtime.
+
+HLO *text* (never ``.serialize()``): jax >= 0.5 emits HloModuleProto with
+64-bit instruction ids which the xla crate's xla_extension 0.5.1 rejects
+(``proto.id() <= INT_MAX``); the text parser reassigns ids and round-trips
+cleanly. See /opt/xla-example/load_hlo/ and the repo DESIGN.md.
+
+Usage (from python/):  python -m compile.aot --out-dir ../artifacts
+Emits frontier_step_v{256,1024,2048}.hlo.txt plus a manifest.
+"""
+
+import argparse
+import json
+import os
+
+import jax
+from jax._src.lib import xla_client as xc
+
+from .model import example_args, frontier_step
+
+# Padded sizes to emit; must stay in sync with
+# rust/src/runtime/artifacts.rs::ARTIFACT_SIZES.
+SIZES = (256, 1024, 2048)
+
+
+def to_hlo_text(lowered) -> str:
+    """StableHLO -> XlaComputation -> HLO text (return_tuple=True)."""
+    mlir_mod = lowered.compiler_ir("stablehlo")
+    comp = xc._xla.mlir.mlir_module_to_xla_computation(
+        str(mlir_mod), use_tuple_args=False, return_tuple=True
+    )
+    return comp.as_hlo_text()
+
+
+def lower_frontier_step(num_vertices: int) -> str:
+    lowered = jax.jit(frontier_step).lower(*example_args(num_vertices))
+    return to_hlo_text(lowered)
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser(description=__doc__)
+    ap.add_argument("--out-dir", default="../artifacts")
+    ap.add_argument(
+        "--sizes", type=int, nargs="*", default=list(SIZES),
+        help="padded vertex counts to lower",
+    )
+    args = ap.parse_args()
+    os.makedirs(args.out_dir, exist_ok=True)
+    manifest = {}
+    for v in args.sizes:
+        text = lower_frontier_step(v)
+        name = f"frontier_step_v{v}.hlo.txt"
+        path = os.path.join(args.out_dir, name)
+        with open(path, "w") as f:
+            f.write(text)
+        manifest[name] = {"num_vertices": v, "chars": len(text)}
+        print(f"wrote {path} ({len(text)} chars)")
+    with open(os.path.join(args.out_dir, "manifest.json"), "w") as f:
+        json.dump(manifest, f, indent=2, sort_keys=True)
+    print(f"manifest: {len(manifest)} artifacts")
+
+
+if __name__ == "__main__":
+    main()

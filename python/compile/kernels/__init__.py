@@ -1,0 +1,5 @@
+"""L1: Pallas kernels for the paper's compute hot-spot (frontier expansion)
+plus the pure-jnp oracle they are verified against."""
+
+from .frontier import TILE, frontier_expand, vmem_bytes  # noqa: F401
+from .ref import bfs_reference, frontier_step_ref  # noqa: F401

@@ -1,0 +1,104 @@
+"""L1 Pallas kernel: tiled frontier expansion for the MXU.
+
+GPU->TPU adaptation (DESIGN.md section 6): the paper's CUDA hot loop is an
+irregular per-warp frontier expansion balanced by LRB. The MXU-regular
+form of the same work is a tiled 0/1 vector-matrix product over the
+boolean semiring: frontier (1, V) times adjacency (V, V), saturated, then
+masked by the visited set. BlockSpec expresses the HBM->VMEM schedule the
+CUDA version expressed with threadblocks:
+
+  * grid = (V/T, V/T) over (reduction tiles k, output tiles j);
+  * adjacency streams through VMEM one (T, T) tile at a time;
+  * the (1, T) output tile stays resident across the k-loop (accumulator);
+  * saturation + visited-masking happen in the epilogue of the last k
+    step, so the output bitmap never round-trips to HBM unsaturated.
+
+``interpret=True`` everywhere: the CPU PJRT plugin cannot execute Mosaic
+custom-calls; real-TPU lowering would only change the `pallas_call`
+backend, not the kernel. VMEM/MXU estimates for the real-TPU variant are
+recorded in EXPERIMENTS.md section Perf.
+"""
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+# MXU systolic-array tile edge. 128x128 f32 tiles: one adjacency tile is
+# 64 KiB of VMEM; with the (1, T) frontier, visited, and output tiles the
+# working set stays ~200 KiB -- far under the ~16 MiB VMEM budget, leaving
+# room for double-buffering the adjacency stream.
+TILE = 128
+
+
+def _expand_kernel(f_ref, a_ref, v_ref, o_ref, *, nk):
+    """One grid step: accumulate f-tile @ a-tile into the output tile.
+
+    Grid is (nk, nj): k = reduction index over the V dimension,
+    j = output-column tile. The output tile is revisited across k
+    (accumulator-in-VMEM pattern); the epilogue at k == nk-1 saturates to
+    0/1 and applies the visited mask.
+    """
+    k = pl.program_id(0)
+
+    @pl.when(k == 0)
+    def _init():
+        o_ref[...] = jnp.zeros_like(o_ref)
+
+    o_ref[...] += jnp.dot(f_ref[...], a_ref[...])
+
+    @pl.when(k == nk - 1)
+    def _epilogue():
+        saturated = jnp.minimum(o_ref[...], 1.0)
+        o_ref[...] = saturated * (1.0 - v_ref[...])
+
+
+@functools.partial(jax.jit, static_argnames=("tile",))
+def frontier_expand(adj, frontier, visited, *, tile=TILE):
+    """One BFS level step via the Pallas kernel.
+
+    Args:
+      adj: ``f32[V, V]`` 0/1 adjacency slab (V divisible by ``tile``).
+      frontier: ``f32[V]`` 0/1 frontier indicator.
+      visited: ``f32[V]`` 0/1 visited indicator.
+      tile: VMEM tile edge (default 128, the MXU shape).
+
+    Returns:
+      ``f32[V]`` 0/1 newly-discovered indicator.
+    """
+    v = adj.shape[0]
+    assert adj.shape == (v, v), f"adjacency must be square, got {adj.shape}"
+    assert frontier.shape == (v,) and visited.shape == (v,)
+    assert v % tile == 0, f"V={v} must be a multiple of tile={tile}"
+    nk = v // tile
+    nj = v // tile
+
+    f2 = frontier.reshape(1, v)
+    vis2 = visited.reshape(1, v)
+
+    out = pl.pallas_call(
+        functools.partial(_expand_kernel, nk=nk),
+        grid=(nk, nj),
+        in_specs=[
+            # frontier: row vector, reduction tile k.
+            pl.BlockSpec((1, tile), lambda k, j: (0, k)),
+            # adjacency: (k, j) tile of the matrix.
+            pl.BlockSpec((tile, tile), lambda k, j: (k, j)),
+            # visited: output-column tile j (used in the epilogue).
+            pl.BlockSpec((1, tile), lambda k, j: (0, j)),
+        ],
+        out_specs=pl.BlockSpec((1, tile), lambda k, j: (0, j)),
+        out_shape=jax.ShapeDtypeStruct((1, v), jnp.float32),
+        interpret=True,  # CPU PJRT cannot run Mosaic custom-calls
+    )(f2, adj, vis2)
+    return out.reshape(v)
+
+
+def vmem_bytes(tile=TILE):
+    """Estimated VMEM working set of one grid step (for DESIGN/EXPERIMENTS):
+    one adjacency tile + frontier, visited, and output row tiles, double-
+    buffered adjacency stream."""
+    adj_tile = tile * tile * 4
+    row_tiles = 3 * tile * 4
+    return 2 * adj_tile + row_tiles  # x2: double buffering

@@ -1,0 +1,50 @@
+"""Pure-jnp oracle for the frontier-expansion kernel.
+
+One BFS level in the Buluc-Madduri BLAS formulation over the boolean
+semiring, carried in f32 0/1 values (MXU-native):
+
+    reached = saturate(frontier @ adj)          # OR over in-neighbors
+    new     = reached * (1 - visited)           # first-discovery mask
+
+``adj[i, j] = 1`` iff arc ``i -> j`` exists *and* row ``i`` is owned by the
+executing compute node (rows of foreign nodes are zero -- the 1D partition
+slab densified; see rust/src/runtime/executable.rs).
+
+This module is the correctness contract: the Pallas kernel
+(``kernels/frontier.py``) and the AOT artifact must match it bit-for-bit
+on 0/1 inputs.
+"""
+
+import jax.numpy as jnp
+
+
+def frontier_step_ref(adj, frontier, visited):
+    """Reference frontier expansion.
+
+    Args:
+      adj: ``f32[V, V]`` 0/1 adjacency slab (row-owned arcs only).
+      frontier: ``f32[V]`` 0/1 active-frontier indicator.
+      visited: ``f32[V]`` 0/1 already-discovered indicator.
+
+    Returns:
+      ``f32[V]`` 0/1 vector of newly discovered vertices.
+    """
+    reached = jnp.minimum(frontier @ adj, 1.0)
+    return reached * (1.0 - visited)
+
+
+def bfs_reference(adj, root, max_levels):
+    """Full multi-level BFS distances via the reference step (test oracle).
+
+    Returns ``i32[V]`` distances with ``-1`` for unreachable vertices.
+    """
+    v = adj.shape[0]
+    dist = jnp.full((v,), -1, dtype=jnp.int32).at[root].set(0)
+    visited = jnp.zeros((v,), dtype=jnp.float32).at[root].set(1.0)
+    frontier = jnp.zeros((v,), dtype=jnp.float32).at[root].set(1.0)
+    for level in range(1, max_levels + 1):
+        new = frontier_step_ref(adj, frontier, visited)
+        dist = jnp.where(new > 0.5, level, dist)
+        visited = jnp.minimum(visited + new, 1.0)
+        frontier = new
+    return dist

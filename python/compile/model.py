@@ -1,0 +1,51 @@
+"""L2: the per-compute-node BFS level step as a JAX computation.
+
+This is the model the Rust coordinator executes via PJRT: given a node's
+densified adjacency slab, the current frontier bitmap, and the visited
+bitmap, produce the newly-discovered bitmap. The inner product is the L1
+Pallas kernel; everything lowers into one HLO module per padded size
+(``aot.py``).
+
+The step is deliberately side-effect-free and fixed-shape: the L3
+coordinator owns all state (queues, distance arrays, the butterfly
+exchange), calling this step once per node per level -- mirroring how the
+paper's CUDA kernel is launched by the OpenMP host threads.
+"""
+
+import jax
+import jax.numpy as jnp
+
+from .kernels.frontier import frontier_expand
+from .kernels.ref import frontier_step_ref
+
+
+def frontier_step(adj, frontier, visited):
+    """One BFS level on one compute node (Pallas-kernel path).
+
+    Args:
+      adj: ``f32[V, V]`` 0/1 row-owned adjacency slab.
+      frontier: ``f32[V]`` 0/1 frontier indicator (owned vertices only;
+        foreign rows of ``adj`` are zero so foreign frontier bits are
+        harmless).
+      visited: ``f32[V]`` 0/1 this-node-knows indicator.
+
+    Returns:
+      A 1-tuple ``(new,)`` with ``f32[V]`` 0/1 discoveries, matching the
+      ``return_tuple=True`` convention the Rust loader unwraps.
+    """
+    return (frontier_expand(adj, frontier, visited),)
+
+
+def frontier_step_jnp(adj, frontier, visited):
+    """Same computation on the pure-jnp path (fallback / A-B testing)."""
+    return (frontier_step_ref(adj, frontier, visited),)
+
+
+def example_args(num_vertices):
+    """ShapeDtypeStructs for lowering at a given padded size."""
+    v = num_vertices
+    return (
+        jax.ShapeDtypeStruct((v, v), jnp.float32),
+        jax.ShapeDtypeStruct((v,), jnp.float32),
+        jax.ShapeDtypeStruct((v,), jnp.float32),
+    )

@@ -1,0 +1,123 @@
+"""L1 kernel correctness: Pallas frontier_expand vs the pure-jnp oracle
+and a plain-numpy BFS-step oracle, across shapes, densities, and seeds
+(hypothesis), plus analytic edge cases."""
+
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from hypothesis import given, settings
+from hypothesis import strategies as st
+
+from compile.kernels import TILE, frontier_expand, frontier_step_ref, vmem_bytes
+
+SIZES = [128, 256, 384]
+
+
+def numpy_oracle(adj, frontier, visited):
+    """Independent numpy formulation of one BFS step."""
+    reached = (adj[frontier.astype(bool)].sum(axis=0) > 0).astype(np.float32)
+    return reached * (1.0 - visited)
+
+
+def random_case(v, density, frontier_p, visited_p, seed):
+    rng = np.random.default_rng(seed)
+    adj = (rng.random((v, v)) < density).astype(np.float32)
+    np.fill_diagonal(adj, 0.0)
+    frontier = (rng.random(v) < frontier_p).astype(np.float32)
+    # visited must contain the frontier (BFS invariant).
+    visited = np.maximum(frontier, (rng.random(v) < visited_p).astype(np.float32))
+    return adj, frontier, visited
+
+
+@pytest.mark.parametrize("v", SIZES)
+def test_kernel_matches_ref_basic(v):
+    adj, f, vis = random_case(v, 0.03, 0.1, 0.2, seed=v)
+    got = np.array(frontier_expand(jnp.array(adj), jnp.array(f), jnp.array(vis)))
+    want = np.array(frontier_step_ref(jnp.array(adj), jnp.array(f), jnp.array(vis)))
+    np.testing.assert_array_equal(got, want)
+
+
+@pytest.mark.parametrize("v", SIZES)
+def test_kernel_matches_numpy_oracle(v):
+    adj, f, vis = random_case(v, 0.05, 0.15, 0.1, seed=100 + v)
+    got = np.array(frontier_expand(jnp.array(adj), jnp.array(f), jnp.array(vis)))
+    want = numpy_oracle(adj, f, vis)
+    np.testing.assert_array_equal(got, want)
+
+
+@settings(max_examples=25, deadline=None)
+@given(
+    v=st.sampled_from(SIZES),
+    density=st.floats(0.0, 0.2),
+    frontier_p=st.floats(0.0, 1.0),
+    visited_p=st.floats(0.0, 1.0),
+    seed=st.integers(0, 2**31 - 1),
+)
+def test_kernel_matches_ref_hypothesis(v, density, frontier_p, visited_p, seed):
+    adj, f, vis = random_case(v, density, frontier_p, visited_p, seed)
+    got = np.array(frontier_expand(jnp.array(adj), jnp.array(f), jnp.array(vis)))
+    want = np.array(frontier_step_ref(jnp.array(adj), jnp.array(f), jnp.array(vis)))
+    np.testing.assert_array_equal(got, want)
+    # BFS-step invariants: output is 0/1 and disjoint from visited.
+    assert set(np.unique(got)).issubset({0.0, 1.0})
+    assert np.all(got * vis == 0.0)
+
+
+def test_empty_frontier_discovers_nothing():
+    v = 256
+    adj, _, _ = random_case(v, 0.05, 0.0, 0.0, seed=1)
+    f = np.zeros(v, dtype=np.float32)
+    vis = np.zeros(v, dtype=np.float32)
+    got = np.array(frontier_expand(jnp.array(adj), jnp.array(f), jnp.array(vis)))
+    assert got.sum() == 0.0
+
+
+def test_all_visited_discovers_nothing():
+    v = 128
+    adj, f, _ = random_case(v, 0.1, 0.3, 0.0, seed=2)
+    vis = np.ones(v, dtype=np.float32)
+    got = np.array(frontier_expand(jnp.array(adj), jnp.array(f), jnp.array(vis)))
+    assert got.sum() == 0.0
+
+
+def test_path_graph_single_step():
+    """Analytic case: a directed path 0->1->...->V-1."""
+    v = 256
+    adj = np.zeros((v, v), dtype=np.float32)
+    adj[np.arange(v - 1), np.arange(1, v)] = 1.0
+    f = np.zeros(v, dtype=np.float32)
+    f[7] = 1.0
+    vis = f.copy()
+    got = np.array(frontier_expand(jnp.array(adj), jnp.array(f), jnp.array(vis)))
+    want = np.zeros(v, dtype=np.float32)
+    want[8] = 1.0
+    np.testing.assert_array_equal(got, want)
+
+
+def test_hub_saturation():
+    """A hub with every in-edge: counts > 1 must saturate to exactly 1.0."""
+    v = 128
+    adj = np.zeros((v, v), dtype=np.float32)
+    adj[:, 0] = 1.0  # everyone points at vertex 0
+    adj[0, 0] = 0.0
+    f = np.ones(v, dtype=np.float32)
+    f[0] = 0.0
+    vis = f.copy()
+    got = np.array(frontier_expand(jnp.array(adj), jnp.array(f), jnp.array(vis)))
+    assert got[0] == 1.0  # exactly 1.0, not 127.0
+    assert got.sum() == 1.0
+
+
+def test_non_multiple_of_tile_rejected():
+    v = 100
+    adj = jnp.zeros((v, v), dtype=jnp.float32)
+    f = jnp.zeros(v, dtype=jnp.float32)
+    with pytest.raises(AssertionError):
+        frontier_expand(adj, f, f)
+
+
+def test_vmem_budget():
+    """The BlockSpec working set must fit VMEM with double buffering."""
+    assert vmem_bytes(TILE) < 16 * 1024 * 1024
+    # and stays modest: ~130 KiB for the default tile.
+    assert vmem_bytes(TILE) < 256 * 1024

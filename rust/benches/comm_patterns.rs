@@ -1,0 +1,111 @@
+//! Regenerates the **§3 communication-complexity analysis** and the
+//! **§5 "Other Multi-GPU BFS Algorithms"** comparison:
+//!
+//! 1. messages / rounds / buffer-bound vs node count, butterfly vs
+//!    all-to-all (the paper's closed-form claims, measured);
+//! 2. end-to-end BFS: ButterFly vs the Gunrock/Groute-shaped baseline
+//!    (all-to-all + dynamic buffer allocation) on the kron_g500-logn21
+//!    analog — the paper reports Gunrock *slowing down* with more GPUs
+//!    and ButterFly ≈50× faster at 16.
+//!
+//! Run: `cargo bench --bench comm_patterns`
+
+use butterfly_bfs::comm::analysis::{comm_costs, paper_message_formula};
+use butterfly_bfs::comm::{Butterfly, CommPattern, ConcurrentAllToAll, IterativeAllToAll};
+use butterfly_bfs::coordinator::{ButterflyBfs, EngineConfig, PatternKind};
+use butterfly_bfs::graph::gen::kronecker::{kronecker, KroneckerParams};
+use butterfly_bfs::harness::roots::{run_protocol, RootProtocol};
+use butterfly_bfs::harness::table::{count, f2, ms, Table};
+use butterfly_bfs::net::model::NetModel;
+
+fn main() {
+    let proto = RootProtocol::from_env();
+    // §3 complexity table: payload = 1 MB bitmap equivalent.
+    println!("== §3 message/round/buffer accounting (1 MB payloads) ==\n");
+    let payload = 1u64 << 20;
+    let mut t = Table::new(&[
+        "CN",
+        "pattern",
+        "rounds",
+        "messages",
+        "paper formula",
+        "buffer bound MB",
+        "max fanout",
+    ]);
+    for cn in [8u32, 9, 16, 32, 64] {
+        let pats: Vec<(String, Box<dyn CommPattern>)> = vec![
+            ("butterfly-f1".into(), Box::new(Butterfly::new(1))),
+            ("butterfly-f4".into(), Box::new(Butterfly::new(4))),
+            ("alltoall-conc".into(), Box::new(ConcurrentAllToAll)),
+            ("alltoall-iter".into(), Box::new(IterativeAllToAll)),
+        ];
+        for (name, p) in pats {
+            let s = p.schedule(cn);
+            let c = comm_costs(&s, payload);
+            let formula = if name.starts_with("butterfly") {
+                let f = if name.ends_with("f1") { 1 } else { 4 };
+                format!("{}", paper_message_formula(cn, f) as u64)
+            } else {
+                format!("{}", (cn as u64) * (cn as u64 - 1))
+            };
+            t.row(vec![
+                cn.to_string(),
+                name,
+                c.rounds.to_string(),
+                c.messages.to_string(),
+                formula,
+                f2(c.buffer_bytes as f64 / (1 << 20) as f64),
+                c.max_fanout.to_string(),
+            ]);
+        }
+    }
+    println!("{}", t.render());
+
+    // §5 other-multi-GPU comparison on the kron_g500-logn21 analog.
+    let scale_delta: i32 = std::env::var("BBFS_SCALE_DELTA")
+        .ok()
+        .and_then(|s| s.parse().ok())
+        .unwrap_or(0);
+    let scale = ((16 + scale_delta).max(8)) as u32;
+    let (g, _) = kronecker(KroneckerParams::graph500(scale, 44), 0xB0B0_1021);
+    println!(
+        "== §5 vs Gunrock/Groute-shaped baseline (kron_g500-logn21 analog: |V|={}, |E|={}) ==\n",
+        count(g.num_vertices() as u64),
+        count(g.num_edges())
+    );
+    let mut t = Table::new(&[
+        "nodes",
+        "butterfly-f4 ms",
+        "naive (a2a+dynalloc) ms",
+        "butterfly speedup",
+    ]);
+    let mut prev_naive = 0.0;
+    let mut naive_increases = true;
+    for nodes in [2usize, 4, 8, 16] {
+        let mut bf = ButterflyBfs::new(&g, EngineConfig::dgx2(nodes, 4));
+        let (t_bf, _) = run_protocol(&g, &proto, |r| bf.run(r).sim_seconds());
+        let naive_cfg = EngineConfig {
+            pattern: PatternKind::AllToAllConcurrent,
+            net: NetModel::dynamic_alloc_baseline(),
+            ..EngineConfig::dgx2(nodes, 1)
+        };
+        let mut naive = ButterflyBfs::new(&g, naive_cfg);
+        let (t_naive, _) = run_protocol(&g, &proto, |r| naive.run(r).sim_seconds());
+        if nodes > 2 && t_naive < prev_naive {
+            naive_increases = false;
+        }
+        prev_naive = t_naive;
+        t.row(vec![
+            nodes.to_string(),
+            ms(t_bf),
+            ms(t_naive),
+            f2(t_naive / t_bf),
+        ]);
+    }
+    println!("{}", t.render());
+    println!(
+        "naive baseline time increases with node count: {} (paper: Gunrock's \"execution time \
+         increased with each additional GPU\")",
+        naive_increases
+    );
+}

@@ -1,0 +1,114 @@
+//! Regenerates the **§5 Fanout Difference** analysis plus two ablations
+//! the paper calls out:
+//!
+//! 1. Fanout sweep f ∈ {1, 2, 4, 8, 16} at 16 nodes — rounds vs messages
+//!    vs simulated sync time (the §3 trade-off made concrete).
+//! 2. The 8 → 9 node fanout-1 regression (Fig 1(f) bottleneck).
+//! 3. Ablation: LRB on/off (load-balance effect on the slowest node).
+//! 4. Ablation: degree-sort relabeling (the paper's future-work item).
+//!
+//! Run: `cargo bench --bench fanout_ablation`
+
+use butterfly_bfs::comm::{Butterfly, CommPattern};
+use butterfly_bfs::coordinator::{ButterflyBfs, EngineConfig};
+use butterfly_bfs::graph::gen::table1_suite;
+use butterfly_bfs::harness::roots::{run_protocol, RootProtocol};
+use butterfly_bfs::harness::table::{f2, ms, Table};
+use butterfly_bfs::net::model::NetModel;
+use butterfly_bfs::net::sim::simulate_uniform;
+use butterfly_bfs::partition::relabel::{apply_relabeling, degree_sort_relabeling};
+
+fn main() {
+    let proto = RootProtocol::from_env();
+    let scale_delta: i32 = std::env::var("BBFS_SCALE_DELTA")
+        .ok()
+        .and_then(|s| s.parse().ok())
+        .unwrap_or(0);
+    let spec = table1_suite().into_iter().find(|s| s.name == "kron-like").unwrap();
+    let g = spec.generate_scaled(scale_delta);
+    println!(
+        "== Fanout ablations on {} (|V|={}, |E|={}) ==\n",
+        spec.name,
+        g.num_vertices(),
+        g.num_edges()
+    );
+
+    // 1. Fanout sweep at 16 nodes.
+    println!("-- fanout sweep, 16 nodes (paper §3 trade-off) --");
+    let mut t = Table::new(&["fanout", "rounds", "messages", "sync ms (1MB msgs)", "bfs sim ms"]);
+    let net = NetModel::dgx2();
+    for f in [1u32, 2, 4, 8, 16] {
+        let s = Butterfly::new(f).schedule(16);
+        let sync = simulate_uniform(&s, &net, 1 << 20);
+        let mut engine = ButterflyBfs::new(&g, EngineConfig::dgx2(16, f));
+        let (bfs_time, _) = run_protocol(&g, &proto, |r| engine.run(r).sim_seconds());
+        t.row(vec![
+            f.to_string(),
+            s.depth().to_string(),
+            s.total_messages().to_string(),
+            ms(sync.total()),
+            ms(bfs_time),
+        ]);
+    }
+    println!("{}", t.render());
+
+    // 2. The 8 -> 9 node regression.
+    println!("-- 8 -> 9 node regression (Fig 1(f) bottleneck) --");
+    let mut t = Table::new(&["nodes", "f1 sim ms", "f4 sim ms"]);
+    for nodes in [8usize, 9] {
+        let mut row = vec![nodes.to_string()];
+        for f in [1u32, 4] {
+            let mut engine = ButterflyBfs::new(&g, EngineConfig::dgx2(nodes, f));
+            let (time, _) = run_protocol(&g, &proto, |r| engine.run(r).sim_seconds());
+            row.push(ms(time));
+        }
+        t.row(row);
+    }
+    println!("{}", t.render());
+
+    // 3. LRB ablation: effect on the slowest node's edge count.
+    println!("-- LRB on/off (max node edges per level, load balance) --");
+    let mut t = Table::new(&["lrb", "sim ms", "max/mean node edges"]);
+    for lrb in [true, false] {
+        let cfg = EngineConfig { use_lrb: lrb, ..EngineConfig::dgx2(16, 4) };
+        let mut engine = ButterflyBfs::new(&g, cfg);
+        let m = engine.run(0);
+        let (time, _) = run_protocol(&g, &proto, |r| engine.run(r).sim_seconds());
+        let imbalance: f64 = {
+            let tot: u64 = m.levels.iter().map(|l| l.edges_examined).sum();
+            let max: u64 = m.levels.iter().map(|l| l.max_node_edges).sum();
+            max as f64 * 16.0 / tot.max(1) as f64
+        };
+        t.row(vec![lrb.to_string(), ms(time), f2(imbalance)]);
+    }
+    println!("{}", t.render());
+
+    // 3b. Direction ablation (paper contribution 3 / future work: the
+    // butterfly sync composes with bottom-up and direction-optimizing).
+    println!("-- traversal direction (contribution 3) --");
+    let mut t = Table::new(&["direction", "sim ms", "edges examined"]);
+    use butterfly_bfs::coordinator::DirectionMode;
+    for (name, dir) in [
+        ("topdown", DirectionMode::TopDown),
+        ("diropt", DirectionMode::diropt()),
+    ] {
+        let cfg = EngineConfig { direction: dir, ..EngineConfig::dgx2(16, 4) };
+        let mut engine = ButterflyBfs::new(&g, cfg);
+        let m = engine.run(0);
+        let (time, _) = run_protocol(&g, &proto, |r| engine.run(r).sim_seconds());
+        t.row(vec![name.into(), ms(time), m.edges_examined().to_string()]);
+    }
+    println!("{}", t.render());
+
+    // 4. Relabeling ablation (paper future work).
+    println!("-- degree-sort relabeling (paper future-work ablation) --");
+    let relabeled = apply_relabeling(&g, &degree_sort_relabeling(&g));
+    let mut t = Table::new(&["graph", "partition imbalance", "sim ms"]);
+    for (name, graph) in [("original", &g), ("degree-sorted", &relabeled)] {
+        let mut engine = ButterflyBfs::new(graph, EngineConfig::dgx2(16, 4));
+        let imb = engine.partition().imbalance(graph);
+        let (time, _) = run_protocol(graph, &proto, |r| engine.run(r).sim_seconds());
+        t.row(vec![name.into(), f2(imb), ms(time)]);
+    }
+    println!("{}", t.render());
+}

@@ -1,0 +1,110 @@
+//! Regenerates **Fig. 3** (strong scaling) and the **§5 speedup /
+//! utilization** list: simulated execution time vs node count for fanout
+//! 1 and fanout 4, per suite graph, plus Speedup/Ideal/Utilization
+//! derived exactly as the paper defines them.
+//!
+//! Expected shape (paper): steady improvement with node count for the big
+//! small-world graphs; a visible fanout-1 regression from 8 → 9 nodes;
+//! webbase-like nearly flat (no parallelism); utilization ~70–95 %.
+//!
+//! Run: `cargo bench --bench fig3_strong_scaling`
+
+use butterfly_bfs::graph::gen::table1_suite;
+use butterfly_bfs::harness::experiments::scaling_sweep;
+use butterfly_bfs::harness::roots::RootProtocol;
+use butterfly_bfs::harness::table::{f2, ms, Table};
+use butterfly_bfs::util::json::Json;
+use butterfly_bfs::util::stats::scaling_utilization;
+
+fn main() {
+    let proto = RootProtocol::from_env();
+    let scale_delta: i32 = std::env::var("BBFS_SCALE_DELTA")
+        .ok()
+        .and_then(|s| s.parse().ok())
+        .unwrap_or(0);
+    // The paper sweeps from each graph's minimal GPU count to 16; at our
+    // scale every graph fits everywhere, so we sweep the same axis and
+    // include 9 to expose the fanout-1 bottleneck.
+    let node_counts = [2usize, 4, 8, 9, 12, 16];
+    let fanouts = [1u32, 4];
+    println!(
+        "== Fig 3: strong scaling (nodes x fanout, {} roots trim {}) ==\n",
+        proto.num_roots, proto.trim
+    );
+    let mut json_graphs = Vec::new();
+    for spec in table1_suite() {
+        let g = spec.generate_scaled(scale_delta);
+        let pts = scaling_sweep(&g, &node_counts, &fanouts, &proto);
+        let mut table = Table::new(&["nodes", "fanout-1 ms", "fanout-4 ms", "f1/f4"]);
+        for &n in &node_counts {
+            let t1 = pts.iter().find(|p| p.nodes == n && p.fanout == 1).unwrap();
+            let t4 = pts.iter().find(|p| p.nodes == n && p.fanout == 4).unwrap();
+            table.row(vec![
+                n.to_string(),
+                ms(t1.sim_time),
+                ms(t4.sim_time),
+                f2(t1.sim_time / t4.sim_time),
+            ]);
+        }
+        println!("-- {} (analog of {}) --", spec.name, spec.paper_graph);
+        println!("{}", table.render());
+        // §5 Speedup Analysis (fanout 4). The paper computes speedup from
+        // each graph's *minimal feasible* GPU count (500 M edges/GPU ⇒ 8
+        // for the big rows) to 16, so Ideal is ~2; we report that window
+        // plus the full 2→16 sweep for context.
+        let at = |n: usize| {
+            pts.iter()
+                .find(|p| p.nodes == n && p.fanout == 4)
+                .unwrap()
+                .sim_time
+        };
+        let u_paper = scaling_utilization(at(8), 8, at(16), 16);
+        let u_full = scaling_utilization(
+            at(node_counts[0]),
+            node_counts[0],
+            at(*node_counts.last().unwrap()),
+            *node_counts.last().unwrap(),
+        );
+        println!(
+            "   paper window 8->16: speedup {:.2}, ideal {:.2}, utilization {:.1}%",
+            u_paper.speedup,
+            u_paper.ideal,
+            u_paper.utilization * 100.0
+        );
+        println!(
+            "   full sweep {}->{}: speedup {:.2}, ideal {:.2}, utilization {:.1}%\n",
+            node_counts[0],
+            node_counts.last().unwrap(),
+            u_full.speedup,
+            u_full.ideal,
+            u_full.utilization * 100.0
+        );
+        let u = u_paper;
+        json_graphs.push(Json::obj(vec![
+            ("graph", Json::s(spec.name)),
+            (
+                "points",
+                Json::Arr(
+                    pts.iter()
+                        .map(|p| {
+                            Json::obj(vec![
+                                ("nodes", Json::u(p.nodes as u64)),
+                                ("fanout", Json::u(p.fanout as u64)),
+                                ("sim_s", Json::n(p.sim_time)),
+                            ])
+                        })
+                        .collect(),
+                ),
+            ),
+            ("speedup", Json::n(u.speedup)),
+            ("utilization", Json::n(u.utilization)),
+        ]));
+    }
+    std::fs::create_dir_all("target/bench-results").ok();
+    std::fs::write(
+        "target/bench-results/fig3.json",
+        Json::obj(vec![("fig3", Json::Arr(json_graphs))]).render(),
+    )
+    .ok();
+    println!("json: target/bench-results/fig3.json");
+}

@@ -1,0 +1,97 @@
+//! Hot-path microbenchmarks for the §Perf optimization pass: the pieces
+//! of the level loop measured in isolation so regressions are attributable.
+//!
+//! * frontier expansion (native backend, LRB on/off) — wallclock edges/s;
+//! * LRB binning throughput;
+//! * bitmap ops (union, iterate);
+//! * butterfly schedule generation;
+//! * end-to-end engine wallclock (the number §Perf tracks);
+//! * XLA frontier step (when artifacts are built).
+//!
+//! Run: `cargo bench --bench microbench`
+
+use butterfly_bfs::bfs::frontier::Bitmap;
+use butterfly_bfs::bfs::lrb::bin_frontier;
+use butterfly_bfs::bfs::topdown::topdown_bfs;
+use butterfly_bfs::comm::{Butterfly, CommPattern};
+use butterfly_bfs::coordinator::{ButterflyBfs, EngineConfig};
+use butterfly_bfs::graph::gen::kronecker::{kronecker, KroneckerParams};
+use butterfly_bfs::harness::bench::{bench, black_box, BenchConfig};
+use butterfly_bfs::harness::table::count;
+
+fn main() {
+    let cfg = BenchConfig::from_env();
+    let scale: u32 = std::env::var("BBFS_MICRO_SCALE")
+        .ok()
+        .and_then(|s| s.parse().ok())
+        .unwrap_or(16);
+    let (g, _) = kronecker(KroneckerParams::graph500(scale, 16), 42);
+    println!(
+        "graph: kron scale {scale} ef 16 (|V|={}, |E|={})\n",
+        count(g.num_vertices() as u64),
+        count(g.num_edges())
+    );
+
+    // Full single-node top-down traversal (the Phase-1 engine).
+    for lrb in [false, true] {
+        let m = bench(&cfg, &format!("topdown/lrb={lrb}"), || {
+            topdown_bfs(&g, 0, lrb)
+        });
+        let r = topdown_bfs(&g, 0, lrb);
+        println!(
+            "    -> {:.1} M examined-edges/s",
+            r.edges_examined as f64 / m.seconds.median / 1e6
+        );
+    }
+
+    // LRB binning alone.
+    let frontier: Vec<u32> = (0..g.num_vertices() as u32).collect();
+    bench(&cfg, "lrb/bin_full_vertex_set", || {
+        bin_frontier(black_box(&frontier), |v| g.degree(v))
+    });
+
+    // Bitmap operations.
+    let n = g.num_vertices();
+    let a = Bitmap::from_queue(n, &frontier[..n / 3]);
+    let b = Bitmap::from_queue(n, &frontier[n / 4..n / 2]);
+    bench(&cfg, "bitmap/union", || {
+        let mut x = a.clone();
+        x.union_in(&b)
+    });
+    bench(&cfg, "bitmap/iterate", || a.iter().count());
+
+    // Schedule generation (engine-construction path).
+    bench(&cfg, "butterfly/schedule_cn64_f4", || {
+        Butterfly::new(4).schedule(64)
+    });
+
+    // End-to-end distributed engine wallclock.
+    for (nodes, fanout) in [(16usize, 1u32), (16, 4)] {
+        let mut engine = ButterflyBfs::new(&g, EngineConfig::dgx2(nodes, fanout));
+        let m = bench(&cfg, &format!("engine/n{nodes}_f{fanout}"), || engine.run(0));
+        let metrics = engine.run(0);
+        println!(
+            "    -> wall {:.1} M edges/s, sim {:.2} GTEPS (|E|/t), comm {:.1}%",
+            metrics.edges_examined() as f64 / m.seconds.median / 1e6,
+            metrics.sim_gteps(),
+            metrics.sim_comm_fraction() * 100.0
+        );
+    }
+
+    // XLA frontier step (only when artifacts exist).
+    use butterfly_bfs::runtime::{find_artifact, ArtifactKey, FrontierStep};
+    if let Some(path) = find_artifact(ArtifactKey { num_vertices: 1024 }) {
+        let step = FrontierStep::load(&path, 1024).expect("artifact compiles");
+        let (small, _) = kronecker(KroneckerParams::graph500(10, 8), 7);
+        let slab = small.row_slice(0, small.num_vertices() as u32);
+        let adj = step.adjacency_literal(&slab).unwrap();
+        let mut frontier = vec![0f32; 1024];
+        frontier[0] = 1.0;
+        let visited = frontier.clone();
+        bench(&cfg, "xla/frontier_step_v1024", || {
+            step.run(&adj, &frontier, &visited).unwrap()
+        });
+    } else {
+        println!("xla/frontier_step_v1024: skipped (run `make artifacts`)");
+    }
+}

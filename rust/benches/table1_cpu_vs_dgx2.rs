@@ -1,0 +1,82 @@
+//! Regenerates **Table 1**: CPU (direction-optimizing and top-down) vs
+//! simulated DGX-2 ButterFly BFS across the nine-graph analog suite, with
+//! the paper's root protocol (100 roots, trim 25/25 under
+//! `BBFS_BENCH_PROFILE=full`; a scaled-down protocol otherwise).
+//!
+//! Expected shape (paper): DGX2/CPU-DO in 2×–22×, DGX2/CPU-TD in 2×–233×
+//! with the kron row the extreme; CPU DO/TD largest on kron/urand
+//! small-world rows, near 1 on the high-diameter web rows.
+//!
+//! Run: `cargo bench --bench table1_cpu_vs_dgx2`
+//! Full profile: `BBFS_BENCH_PROFILE=full cargo bench --bench table1_cpu_vs_dgx2`
+
+use butterfly_bfs::graph::gen::table1_suite;
+use butterfly_bfs::harness::experiments::table1_row;
+use butterfly_bfs::harness::roots::RootProtocol;
+use butterfly_bfs::harness::table::{count, f2, ms, Table};
+use butterfly_bfs::util::json::Json;
+
+fn main() {
+    let proto = RootProtocol::from_env();
+    let scale_delta: i32 = std::env::var("BBFS_SCALE_DELTA")
+        .ok()
+        .and_then(|s| s.parse().ok())
+        .unwrap_or(0);
+    println!(
+        "== Table 1 (analog suite, scale_delta={scale_delta}, {} roots trim {}) ==\n",
+        proto.num_roots, proto.trim
+    );
+    let mut table = Table::new(&[
+        "graph",
+        "paper",
+        "|V|",
+        "|E|",
+        "diam",
+        "CPU-DO ms",
+        "CPU-TD ms",
+        "DO/TD",
+        "DGX2 ms",
+        "DGX2 GTEPS",
+        "DGX2/CPU-DO",
+        "DGX2/CPU-TD",
+    ]);
+    let mut rows_json = Vec::new();
+    for spec in table1_suite() {
+        let g = spec.generate_scaled(scale_delta);
+        let row = table1_row(&spec, &g, &proto);
+        table.row(vec![
+            row.name.into(),
+            row.paper_graph.into(),
+            count(row.vertices),
+            count(row.edges),
+            row.diameter.to_string(),
+            ms(row.cpu_do_time),
+            ms(row.cpu_td_time),
+            f2(row.cpu_do_over_td()),
+            ms(row.dgx2_time),
+            f2(row.dgx2_gteps),
+            f2(row.dgx2_over_cpu_do()),
+            f2(row.dgx2_over_cpu_td()),
+        ]);
+        rows_json.push(Json::obj(vec![
+            ("graph", Json::s(row.name)),
+            ("paper_graph", Json::s(row.paper_graph)),
+            ("vertices", Json::u(row.vertices)),
+            ("edges", Json::u(row.edges)),
+            ("diameter", Json::u(row.diameter as u64)),
+            ("cpu_do_s", Json::n(row.cpu_do_time)),
+            ("cpu_td_s", Json::n(row.cpu_td_time)),
+            ("dgx2_s", Json::n(row.dgx2_time)),
+            ("dgx2_gteps", Json::n(row.dgx2_gteps)),
+            ("speedup_do_over_td", Json::n(row.cpu_do_over_td())),
+            ("speedup_dgx2_over_do", Json::n(row.dgx2_over_cpu_do())),
+            ("speedup_dgx2_over_td", Json::n(row.dgx2_over_cpu_td())),
+        ]));
+        eprintln!("  finished {}", spec.name);
+    }
+    println!("{}", table.render());
+    let out = Json::obj(vec![("table1", Json::Arr(rows_json))]).render();
+    std::fs::create_dir_all("target/bench-results").ok();
+    std::fs::write("target/bench-results/table1.json", &out).ok();
+    println!("json: target/bench-results/table1.json");
+}

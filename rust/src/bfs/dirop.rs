@@ -1,0 +1,206 @@
+//! Direction-optimizing BFS (Beamer et al.) — the GapBS-equivalent CPU
+//! baseline of Table 1's "CPU (DO)" columns.
+//!
+//! Each level picks top-down or bottom-up using GapBS's two heuristics
+//! with the same default constants (α = 15, β = 18):
+//!
+//! * switch TD → BU when `m_f > m_u / α` (edges from the frontier exceed
+//!   1/α of the edges from unexplored vertices);
+//! * switch BU → TD when `n_f < n / β` (frontier shrinks below |V|/β).
+
+use super::bottomup::bottomup_step;
+use super::frontier::Bitmap;
+use super::serial::INF;
+use super::topdown::LevelStats;
+use crate::graph::csr::{Csr, VertexId};
+
+/// Tuning constants (GapBS defaults; the paper notes per-graph tuning
+/// helps but uses the defaults, as do we).
+#[derive(Clone, Copy, Debug)]
+pub struct DirOptParams {
+    /// TD→BU switch threshold divisor (`0` disables bottom-up entirely,
+    /// degrading to classic top-down — the "CPU (TD)" baseline).
+    pub alpha: u64,
+    /// BU→TD switch threshold divisor.
+    pub beta: u64,
+}
+
+impl Default for DirOptParams {
+    fn default() -> Self {
+        Self { alpha: 15, beta: 18 }
+    }
+}
+
+/// Which direction a level ran in (for the metrics/ablation output).
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum Direction {
+    /// Classic parent-finds-child.
+    TopDown,
+    /// Child-finds-parent.
+    BottomUp,
+}
+
+/// Result of a direction-optimizing traversal.
+#[derive(Clone, Debug)]
+pub struct DirOptResult {
+    /// Distance array.
+    pub dist: Vec<u32>,
+    /// Per-level stats.
+    pub levels: Vec<LevelStats>,
+    /// Direction chosen per level.
+    pub directions: Vec<Direction>,
+    /// Total edges examined (the *honest* traversal count; the Graph500
+    /// convention divides |E| by time instead — see `util::stats::gteps`).
+    pub edges_examined: u64,
+}
+
+/// Direction-optimizing BFS.
+pub fn diropt_bfs(g: &Csr, root: VertexId, p: DirOptParams) -> DirOptResult {
+    let n = g.num_vertices();
+    let mut dist = vec![INF; n];
+    let mut levels = Vec::new();
+    let mut directions = Vec::new();
+    let mut edges_total = 0u64;
+    if n == 0 {
+        return DirOptResult { dist, levels, directions, edges_examined: 0 };
+    }
+    dist[root as usize] = 0;
+    let mut frontier: Vec<VertexId> = vec![root];
+    // m_u: edges incident to unexplored vertices (upper bound, decremented
+    // as vertices are discovered) — GapBS bookkeeping.
+    let mut m_unexplored: u64 = g.num_edges();
+    let mut level = 0u32;
+    let mut bottom_up = false;
+    let mut prev_n_frontier = 0u64;
+    while !frontier.is_empty() {
+        let m_frontier: u64 = frontier.iter().map(|&v| g.degree(v) as u64).sum();
+        let n_frontier = frontier.len() as u64;
+        // GapBS hysteresis: enter bottom-up only while the frontier is
+        // *growing* (prevents flapping on plateau/band frontiers, where
+        // each bottom-up entry costs a full unvisited scan), leave it only
+        // once the frontier is *shrinking* below |V|/β.
+        let growing = n_frontier > prev_n_frontier;
+        if !bottom_up && p.alpha > 0 && growing && m_frontier > m_unexplored / p.alpha {
+            bottom_up = true;
+        } else if bottom_up
+            && p.beta > 0
+            && !growing
+            && n_frontier < (n as u64) / p.beta
+        {
+            bottom_up = false;
+        }
+        prev_n_frontier = n_frontier;
+        let mut stats = LevelStats { frontier_size: n_frontier, ..Default::default() };
+        if bottom_up {
+            directions.push(Direction::BottomUp);
+            let fb = Bitmap::from_queue(n, &frontier);
+            let (next, e) = bottomup_step(g, &fb, &mut dist, level);
+            stats.edges_examined = e;
+            stats.discovered = next.count();
+            frontier = next.to_queue();
+        } else {
+            directions.push(Direction::TopDown);
+            let mut next = Vec::new();
+            for &v in &frontier {
+                for &u in g.neighbors(v) {
+                    stats.edges_examined += 1;
+                    if dist[u as usize] == INF {
+                        dist[u as usize] = level + 1;
+                        next.push(u);
+                        stats.discovered += 1;
+                    }
+                }
+            }
+            frontier = next;
+        }
+        for &v in &frontier {
+            m_unexplored = m_unexplored.saturating_sub(g.degree(v) as u64);
+        }
+        edges_total += stats.edges_examined;
+        levels.push(stats);
+        level += 1;
+    }
+    DirOptResult { dist, levels, directions, edges_examined: edges_total }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::bfs::serial::serial_bfs;
+    use crate::bfs::topdown::topdown_bfs;
+    use crate::graph::gen::kronecker::{kronecker, KroneckerParams};
+    use crate::graph::gen::structured::{grid2d, path};
+    use crate::graph::gen::urand::uniform_random;
+
+    #[test]
+    fn matches_serial_everywhere() {
+        let graphs = vec![
+            path(64),
+            grid2d(8, 8),
+            kronecker(KroneckerParams::graph500(11, 16), 3).0,
+            uniform_random(2000, 16, 9).0,
+        ];
+        for (i, g) in graphs.iter().enumerate() {
+            for root in [0u32, 7u32.min(g.num_vertices() as u32 - 1)] {
+                let want = serial_bfs(g, root);
+                let got = diropt_bfs(g, root, DirOptParams::default());
+                assert_eq!(got.dist, want, "graph {i} root {root}");
+            }
+        }
+    }
+
+    #[test]
+    fn small_world_uses_bottom_up_and_saves_edges() {
+        // Kron/urand small-world graphs: the middle (huge) levels should
+        // run bottom-up and examine far fewer edges than pure top-down.
+        let (g, _) = uniform_random(4000, 16, 4);
+        let td = topdown_bfs(&g, 0, false);
+        let dor = diropt_bfs(&g, 0, DirOptParams::default());
+        assert!(
+            dor.directions.contains(&Direction::BottomUp),
+            "expected a bottom-up level: {:?}",
+            dor.directions
+        );
+        assert!(
+            dor.edges_examined < td.edges_examined,
+            "DO {} vs TD {}",
+            dor.edges_examined,
+            td.edges_examined
+        );
+    }
+
+    #[test]
+    fn high_diameter_mostly_top_down() {
+        // A path frontier never exceeds 1 vertex: the heuristic may flip
+        // to bottom-up briefly near the tail (when few unexplored edges
+        // remain), but the overwhelming majority of levels stay top-down
+        // — the §5 Webbase-2001 discussion.
+        let g = path(200);
+        let dor = diropt_bfs(&g, 0, DirOptParams::default());
+        let bu = dor
+            .directions
+            .iter()
+            .filter(|&&d| d == Direction::BottomUp)
+            .count();
+        assert!(
+            bu * 10 < dor.directions.len(),
+            "{bu}/{} levels bottom-up",
+            dor.directions.len()
+        );
+    }
+
+    #[test]
+    fn directions_len_matches_levels() {
+        let (g, _) = kronecker(KroneckerParams::graph500(9, 8), 2);
+        let r = diropt_bfs(&g, 0, DirOptParams::default());
+        assert_eq!(r.directions.len(), r.levels.len());
+    }
+
+    #[test]
+    fn custom_params_change_switching() {
+        let (g, _) = uniform_random(4000, 16, 4);
+        // alpha=0 disables bottom-up.
+        let never = diropt_bfs(&g, 0, DirOptParams { alpha: 0, beta: 18 });
+        assert!(never.directions.iter().all(|&d| d == Direction::TopDown));
+    }
+}

@@ -1,0 +1,266 @@
+//! Frontier representations: vertex queue and bitmap, with conversions.
+//!
+//! Top-down traversals want a queue (work ∝ frontier size); bottom-up and
+//! the butterfly exchange want bitmaps (fixed O(V/8) payloads, constant-
+//! time dedup). The paper's tight memory bound on communication buffers
+//! (contribution 4) is what [`Bitmap`] provides: a frontier is never larger
+//! than `ceil(V/64)` words regardless of how many vertices it contains.
+
+use crate::graph::csr::VertexId;
+
+/// A dense bitmap over vertex ids.
+#[derive(Clone, Debug, PartialEq, Eq)]
+pub struct Bitmap {
+    words: Vec<u64>,
+    len: usize,
+}
+
+impl Bitmap {
+    /// Empty bitmap over `len` vertices.
+    pub fn new(len: usize) -> Self {
+        Self { words: vec![0; len.div_ceil(64)], len }
+    }
+
+    /// Number of vertices covered.
+    #[inline]
+    pub fn len(&self) -> usize {
+        self.len
+    }
+
+    /// True when no bit is set.
+    pub fn is_empty(&self) -> bool {
+        self.words.iter().all(|&w| w == 0)
+    }
+
+    /// Test bit `v`.
+    #[inline]
+    pub fn get(&self, v: VertexId) -> bool {
+        debug_assert!((v as usize) < self.len);
+        (self.words[(v / 64) as usize] >> (v % 64)) & 1 == 1
+    }
+
+    /// Set bit `v`.
+    #[inline]
+    pub fn set(&mut self, v: VertexId) {
+        debug_assert!((v as usize) < self.len);
+        self.words[(v / 64) as usize] |= 1 << (v % 64);
+    }
+
+    /// Clear bit `v`.
+    #[inline]
+    pub fn clear(&mut self, v: VertexId) {
+        debug_assert!((v as usize) < self.len);
+        self.words[(v / 64) as usize] &= !(1 << (v % 64));
+    }
+
+    /// Set bit `v`, returning whether it was previously clear (compare-and-
+    /// set used for first-discovery semantics).
+    #[inline]
+    pub fn test_and_set(&mut self, v: VertexId) -> bool {
+        let w = (v / 64) as usize;
+        let mask = 1u64 << (v % 64);
+        let was = self.words[w] & mask;
+        self.words[w] |= mask;
+        was == 0
+    }
+
+    /// Number of set bits.
+    pub fn count(&self) -> u64 {
+        self.words.iter().map(|w| w.count_ones() as u64).sum()
+    }
+
+    /// Zero all bits (keeps allocation).
+    pub fn reset(&mut self) {
+        self.words.iter_mut().for_each(|w| *w = 0);
+    }
+
+    /// `self |= other`; returns the number of *newly* set bits.
+    pub fn union_in(&mut self, other: &Bitmap) -> u64 {
+        assert_eq!(self.len, other.len, "bitmap length mismatch");
+        let mut new_bits = 0;
+        for (a, &b) in self.words.iter_mut().zip(&other.words) {
+            new_bits += (b & !*a).count_ones() as u64;
+            *a |= b;
+        }
+        new_bits
+    }
+
+    /// Iterate over set bits in ascending order.
+    pub fn iter(&self) -> impl Iterator<Item = VertexId> + '_ {
+        self.words.iter().enumerate().flat_map(|(wi, &w)| {
+            let mut w = w;
+            std::iter::from_fn(move || {
+                if w == 0 {
+                    return None;
+                }
+                let b = w.trailing_zeros();
+                w &= w - 1;
+                Some((wi as u32) * 64 + b)
+            })
+        })
+    }
+
+    /// Collect set bits into a vector.
+    pub fn to_queue(&self) -> Vec<VertexId> {
+        self.iter().collect()
+    }
+
+    /// Build from a queue of vertex ids.
+    pub fn from_queue(len: usize, q: &[VertexId]) -> Self {
+        let mut b = Self::new(len);
+        for &v in q {
+            b.set(v);
+        }
+        b
+    }
+
+    /// Raw words (for serialization into transfer buffers).
+    pub fn words(&self) -> &[u64] {
+        &self.words
+    }
+
+    /// Payload size in bytes when shipped over the interconnect.
+    pub fn payload_bytes(&self) -> u64 {
+        (self.words.len() * 8) as u64
+    }
+}
+
+/// A frontier in whichever representation is currently cheaper, mirroring
+/// the queue/bitmap duality the direction-optimizing literature uses.
+#[derive(Clone, Debug)]
+pub enum Frontier {
+    /// Sparse: explicit vertex list.
+    Queue(Vec<VertexId>),
+    /// Dense: bitmap over all vertices.
+    Dense(Bitmap),
+}
+
+impl Frontier {
+    /// Number of active vertices.
+    pub fn active(&self) -> u64 {
+        match self {
+            Frontier::Queue(q) => q.len() as u64,
+            Frontier::Dense(b) => b.count(),
+        }
+    }
+
+    /// True when the frontier has no active vertices.
+    pub fn is_empty(&self) -> bool {
+        match self {
+            Frontier::Queue(q) => q.is_empty(),
+            Frontier::Dense(b) => b.is_empty(),
+        }
+    }
+
+    /// Convert to a queue representation (clone-free when already sparse).
+    pub fn into_queue(self) -> Vec<VertexId> {
+        match self {
+            Frontier::Queue(q) => q,
+            Frontier::Dense(b) => b.to_queue(),
+        }
+    }
+
+    /// Convert to a dense representation over `len` vertices.
+    pub fn into_dense(self, len: usize) -> Bitmap {
+        match self {
+            Frontier::Queue(q) => Bitmap::from_queue(len, &q),
+            Frontier::Dense(b) => {
+                assert_eq!(b.len(), len);
+                b
+            }
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn set_get_clear() {
+        let mut b = Bitmap::new(130);
+        assert!(!b.get(0) && !b.get(129));
+        b.set(0);
+        b.set(64);
+        b.set(129);
+        assert!(b.get(0) && b.get(64) && b.get(129));
+        assert_eq!(b.count(), 3);
+        b.clear(64);
+        assert!(!b.get(64));
+        assert_eq!(b.count(), 2);
+    }
+
+    #[test]
+    fn test_and_set_semantics() {
+        let mut b = Bitmap::new(10);
+        assert!(b.test_and_set(3));
+        assert!(!b.test_and_set(3));
+        assert!(b.get(3));
+    }
+
+    #[test]
+    fn union_counts_new_bits() {
+        let mut a = Bitmap::from_queue(100, &[1, 2, 3]);
+        let b = Bitmap::from_queue(100, &[3, 4, 99]);
+        let new_bits = a.union_in(&b);
+        assert_eq!(new_bits, 2);
+        assert_eq!(a.count(), 5);
+        assert!(a.get(99));
+    }
+
+    #[test]
+    fn iter_ascending_roundtrip() {
+        let q = vec![5u32, 63, 64, 65, 127, 128];
+        let b = Bitmap::from_queue(200, &q);
+        assert_eq!(b.to_queue(), q);
+    }
+
+    #[test]
+    fn payload_is_fixed_size() {
+        // The paper's bounded-buffer property: payload depends only on V.
+        let empty = Bitmap::new(1000);
+        let mut full = Bitmap::new(1000);
+        for v in 0..1000u32 {
+            full.set(v);
+        }
+        assert_eq!(empty.payload_bytes(), full.payload_bytes());
+        assert_eq!(empty.payload_bytes(), 1000u64.div_ceil(64) * 8);
+    }
+
+    #[test]
+    fn frontier_conversions() {
+        let f = Frontier::Queue(vec![1, 5, 9]);
+        assert_eq!(f.active(), 3);
+        let d = f.into_dense(16);
+        assert!(d.get(5));
+        let f2 = Frontier::Dense(d);
+        assert_eq!(f2.into_queue(), vec![1, 5, 9]);
+    }
+
+    #[test]
+    fn reset_keeps_len() {
+        let mut b = Bitmap::from_queue(75, &[0, 74]);
+        b.reset();
+        assert!(b.is_empty());
+        assert_eq!(b.len(), 75);
+    }
+
+    #[test]
+    fn bitmap_property_union_is_or() {
+        use crate::util::propcheck::{forall, gen, Config};
+        forall(Config::cases(64), "union_in == bitwise or", |rng| {
+            let n = gen::usize_in(rng, 1, 300);
+            let qa: Vec<u32> =
+                gen::vec_below(rng, 40, n as u64).iter().map(|&x| x as u32).collect();
+            let qb: Vec<u32> =
+                gen::vec_below(rng, 40, n as u64).iter().map(|&x| x as u32).collect();
+            let mut a = Bitmap::from_queue(n, &qa);
+            let b = Bitmap::from_queue(n, &qb);
+            let before = a.count();
+            let newb = a.union_in(&b);
+            let ok = (0..n as u32).all(|v| a.get(v) == (qa.contains(&v) || qb.contains(&v)))
+                && a.count() == before + newb;
+            (ok, format!("n={n}"))
+        });
+    }
+}

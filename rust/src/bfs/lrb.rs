@@ -1,0 +1,149 @@
+//! Logarithmic Radix Binning (LRB) — the paper's per-device load balancer
+//! (Green et al., HPEC'18/'19).
+//!
+//! LRB groups frontier vertices into ~32/64 bins by `ceil(log2(degree))`:
+//! all vertices in a bin have adjacency lists within 2× of each other, so
+//! one "kernel dispatch" per bin does uniform work. On the GPU each bin got
+//! its own thread-block shape; in this simulator the bins give (a) a
+//! deterministic dispatch order (largest work first — better tail latency)
+//! and (b) the per-bin batching structure the XLA backend consumes.
+
+use crate::graph::csr::VertexId;
+
+/// Number of bins: degree fits in u32, so 33 bins cover every degree
+/// (bin b holds degrees in [2^(b-1), 2^b), bin 0 holds degree 0 and 1).
+pub const NUM_BINS: usize = 33;
+
+/// The result of binning one frontier.
+#[derive(Clone, Debug)]
+pub struct Binned {
+    /// Vertices grouped by bin, concatenated: bin `b` occupies
+    /// `starts[b]..starts[b+1]`.
+    pub vertices: Vec<VertexId>,
+    /// Bin boundaries (length `NUM_BINS + 1`).
+    pub starts: Vec<u32>,
+}
+
+impl Binned {
+    /// Vertices of bin `b`.
+    pub fn bin(&self, b: usize) -> &[VertexId] {
+        &self.vertices[self.starts[b] as usize..self.starts[b + 1] as usize]
+    }
+
+    /// Indices of non-empty bins, largest degree class first (the dispatch
+    /// order: schedule the biggest work items first).
+    pub fn dispatch_order(&self) -> Vec<usize> {
+        (0..NUM_BINS).rev().filter(|&b| self.starts[b + 1] > self.starts[b]).collect()
+    }
+
+    /// Total number of binned vertices.
+    pub fn len(&self) -> usize {
+        self.vertices.len()
+    }
+
+    /// True when no vertex was binned.
+    pub fn is_empty(&self) -> bool {
+        self.vertices.is_empty()
+    }
+}
+
+/// Bin index for a degree: 0 for degree ≤ 1, else `ceil(log2(d))`.
+#[inline]
+pub fn bin_of_degree(d: u32) -> usize {
+    if d <= 1 {
+        0
+    } else {
+        (32 - (d - 1).leading_zeros()) as usize
+    }
+}
+
+/// Bin `frontier` by vertex degree (two-pass counting sort — exactly the
+/// GPU formulation, which needs stable O(frontier) work).
+pub fn bin_frontier<F: Fn(VertexId) -> u32>(frontier: &[VertexId], degree: F) -> Binned {
+    let mut counts = [0u32; NUM_BINS];
+    for &v in frontier {
+        counts[bin_of_degree(degree(v))] += 1;
+    }
+    let mut starts = vec![0u32; NUM_BINS + 1];
+    for b in 0..NUM_BINS {
+        starts[b + 1] = starts[b] + counts[b];
+    }
+    let mut cursor = starts.clone();
+    let mut vertices = vec![0 as VertexId; frontier.len()];
+    for &v in frontier {
+        let b = bin_of_degree(degree(v));
+        vertices[cursor[b] as usize] = v;
+        cursor[b] += 1;
+    }
+    Binned { vertices, starts }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::graph::gen::kronecker::{kronecker, KroneckerParams};
+
+    #[test]
+    fn bin_of_degree_boundaries() {
+        assert_eq!(bin_of_degree(0), 0);
+        assert_eq!(bin_of_degree(1), 0);
+        assert_eq!(bin_of_degree(2), 1);
+        assert_eq!(bin_of_degree(3), 2);
+        assert_eq!(bin_of_degree(4), 2);
+        assert_eq!(bin_of_degree(5), 3);
+        assert_eq!(bin_of_degree(8), 3);
+        assert_eq!(bin_of_degree(9), 4);
+        assert_eq!(bin_of_degree(u32::MAX), 32);
+    }
+
+    #[test]
+    fn within_bin_degrees_within_2x() {
+        // The paper's LRB invariant: within a bin, no adjacency list is
+        // more than twice as big (or small) as any other.
+        let (g, _) = kronecker(KroneckerParams::graph500(12, 8), 17);
+        let frontier: Vec<VertexId> = (0..g.num_vertices() as u32).collect();
+        let binned = bin_frontier(&frontier, |v| g.degree(v));
+        for b in 1..NUM_BINS {
+            let vs = binned.bin(b);
+            if vs.len() < 2 {
+                continue;
+            }
+            let degs: Vec<u32> = vs.iter().map(|&v| g.degree(v)).collect();
+            let (min, max) = (
+                *degs.iter().min().unwrap(),
+                *degs.iter().max().unwrap(),
+            );
+            assert!(max <= min * 2, "bin {b}: min {min} max {max}");
+        }
+    }
+
+    #[test]
+    fn binning_is_a_permutation() {
+        let (g, _) = kronecker(KroneckerParams::graph500(10, 8), 23);
+        let frontier: Vec<VertexId> = (0..g.num_vertices() as u32).step_by(3).collect();
+        let binned = bin_frontier(&frontier, |v| g.degree(v));
+        assert_eq!(binned.len(), frontier.len());
+        let mut a = binned.vertices.clone();
+        let mut b = frontier.clone();
+        a.sort_unstable();
+        b.sort_unstable();
+        assert_eq!(a, b);
+    }
+
+    #[test]
+    fn dispatch_order_largest_first() {
+        let degrees = [1u32, 2, 100, 5];
+        let frontier = [0u32, 1, 2, 3];
+        let binned = bin_frontier(&frontier, |v| degrees[v as usize]);
+        let order = binned.dispatch_order();
+        assert_eq!(order[0], bin_of_degree(100));
+        assert_eq!(*order.last().unwrap(), 0);
+    }
+
+    #[test]
+    fn empty_frontier() {
+        let binned = bin_frontier(&[], |_| 0);
+        assert!(binned.is_empty());
+        assert!(binned.dispatch_order().is_empty());
+    }
+}

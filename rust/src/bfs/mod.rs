@@ -1,0 +1,14 @@
+//! BFS traversal engines: the serial oracle, single-node top-down /
+//! bottom-up / direction-optimizing baselines (the paper's CPU columns),
+//! frontier representations, and the LRB load balancer.
+
+pub mod bottomup;
+pub mod dirop;
+pub mod frontier;
+pub mod lrb;
+pub mod serial;
+pub mod topdown;
+
+pub use frontier::{Bitmap, Frontier};
+pub use serial::{serial_bfs, INF};
+pub use topdown::{topdown_bfs, BfsResult};

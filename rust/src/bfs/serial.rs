@@ -1,0 +1,110 @@
+//! Trivially correct serial BFS — the oracle every other engine in the
+//! repository is tested against.
+
+use crate::graph::csr::{Csr, VertexId};
+use std::collections::VecDeque;
+
+/// Distance value for unreachable vertices.
+pub const INF: u32 = u32::MAX;
+
+/// Textbook queue-based BFS; returns the distance array (`INF` =
+/// unreachable).
+pub fn serial_bfs(g: &Csr, root: VertexId) -> Vec<u32> {
+    let n = g.num_vertices();
+    let mut dist = vec![INF; n];
+    if n == 0 {
+        return dist;
+    }
+    assert!((root as usize) < n, "root {root} out of range");
+    let mut q = VecDeque::new();
+    dist[root as usize] = 0;
+    q.push_back(root);
+    while let Some(v) = q.pop_front() {
+        let dv = dist[v as usize];
+        for &u in g.neighbors(v) {
+            if dist[u as usize] == INF {
+                dist[u as usize] = dv + 1;
+                q.push_back(u);
+            }
+        }
+    }
+    dist
+}
+
+/// Parent-pointer BFS used to validate traversal trees: returns
+/// `parent[v]` (self for the root, `INF` cast to u32::MAX sentinel for
+/// unreachable).
+pub fn serial_bfs_parents(g: &Csr, root: VertexId) -> Vec<VertexId> {
+    let n = g.num_vertices();
+    let mut parent = vec![VertexId::MAX; n];
+    if n == 0 {
+        return parent;
+    }
+    let mut q = VecDeque::new();
+    parent[root as usize] = root;
+    q.push_back(root);
+    while let Some(v) = q.pop_front() {
+        for &u in g.neighbors(v) {
+            if parent[u as usize] == VertexId::MAX {
+                parent[u as usize] = v;
+                q.push_back(u);
+            }
+        }
+    }
+    parent
+}
+
+/// Number of edges a top-down traversal from `root` touches (sum of
+/// degrees of reachable vertices) — the denominator of *honest* TEPS, as
+/// opposed to the Graph500 |E|/time convention the paper critiques.
+pub fn traversed_edges(g: &Csr, dist: &[u32]) -> u64 {
+    dist.iter()
+        .enumerate()
+        .filter(|(_, &d)| d != INF)
+        .map(|(v, _)| g.degree(v as VertexId) as u64)
+        .sum()
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::graph::builder::GraphBuilder;
+    use crate::graph::gen::structured::{binary_tree, path};
+
+    #[test]
+    fn unreachable_stay_inf() {
+        let mut b = GraphBuilder::new(4);
+        b.add_edge(0, 1);
+        let (g, _) = b.build_undirected();
+        let d = serial_bfs(&g, 0);
+        assert_eq!(d, vec![0, 1, INF, INF]);
+    }
+
+    #[test]
+    fn parents_form_valid_tree() {
+        let g = binary_tree(31);
+        let p = serial_bfs_parents(&g, 0);
+        let d = serial_bfs(&g, 0);
+        assert_eq!(p[0], 0);
+        for v in 1..31usize {
+            let pv = p[v] as usize;
+            assert!(g.has_edge(p[v], v as u32));
+            assert_eq!(d[v], d[pv] + 1, "parent one level up");
+        }
+    }
+
+    #[test]
+    fn traversed_edges_path() {
+        let g = path(10); // 18 arcs total
+        let d = serial_bfs(&g, 0);
+        assert_eq!(traversed_edges(&g, &d), 18);
+    }
+
+    #[test]
+    fn empty_graph_ok() {
+        let g = Csr::from_edges(0, &[]);
+        assert!(serial_bfs(&g, 0).is_empty());
+    }
+
+    use crate::graph::csr::Csr;
+}

@@ -1,0 +1,189 @@
+//! Level-synchronous top-down BFS (Alg. 1 of the paper) — the single
+//! compute-node baseline, and the per-node Phase-1 engine of the
+//! distributed algorithm.
+
+use super::frontier::Bitmap;
+use super::lrb::bin_frontier;
+use super::serial::INF;
+use crate::graph::csr::{Csr, VertexId};
+
+/// Per-level statistics (for the metrics pipeline and the honest-TEPS
+/// accounting the paper discusses).
+#[derive(Clone, Copy, Debug, Default)]
+pub struct LevelStats {
+    /// Vertices in the frontier entering this level.
+    pub frontier_size: u64,
+    /// Edges examined this level.
+    pub edges_examined: u64,
+    /// Vertices newly discovered this level.
+    pub discovered: u64,
+}
+
+/// Result of a full traversal.
+#[derive(Clone, Debug)]
+pub struct BfsResult {
+    /// Distance array (`INF` = unreachable).
+    pub dist: Vec<u32>,
+    /// Per-level stats.
+    pub levels: Vec<LevelStats>,
+    /// Total edges examined.
+    pub edges_examined: u64,
+}
+
+impl BfsResult {
+    /// Number of levels (eccentricity of the root + 1 frontiers).
+    pub fn depth(&self) -> usize {
+        self.levels.len()
+    }
+
+    /// Number of reachable vertices.
+    pub fn reached(&self) -> u64 {
+        self.dist.iter().filter(|&&d| d != INF).count() as u64
+    }
+}
+
+/// Top-down BFS with queue frontiers and LRB-ordered edge processing.
+///
+/// `use_lrb` toggles Logarithmic Radix Binning of each frontier: on real
+/// accelerators this is the load balancer; here it also fixes the edge
+/// examination order, making runs bit-reproducible regardless of frontier
+/// discovery order.
+pub fn topdown_bfs(g: &Csr, root: VertexId, use_lrb: bool) -> BfsResult {
+    let n = g.num_vertices();
+    let mut dist = vec![INF; n];
+    let mut levels = Vec::new();
+    let mut edges_total = 0u64;
+    if n == 0 {
+        return BfsResult { dist, levels, edges_examined: 0 };
+    }
+    assert!((root as usize) < n, "root out of range");
+    dist[root as usize] = 0;
+    let mut frontier = vec![root];
+    let mut next = Vec::new();
+    let mut level = 0u32;
+    while !frontier.is_empty() {
+        let mut stats = LevelStats {
+            frontier_size: frontier.len() as u64,
+            ..Default::default()
+        };
+        let order: Vec<VertexId> = if use_lrb {
+            let binned = bin_frontier(&frontier, |v| g.degree(v));
+            binned
+                .dispatch_order()
+                .into_iter()
+                .flat_map(|b| binned.bin(b).to_vec())
+                .collect()
+        } else {
+            std::mem::take(&mut frontier)
+        };
+        for v in order {
+            for &u in g.neighbors(v) {
+                stats.edges_examined += 1;
+                if dist[u as usize] == INF {
+                    dist[u as usize] = level + 1;
+                    stats.discovered += 1;
+                    next.push(u);
+                }
+            }
+        }
+        edges_total += stats.edges_examined;
+        levels.push(stats);
+        frontier = std::mem::take(&mut next);
+        level += 1;
+    }
+    BfsResult { dist, levels, edges_examined: edges_total }
+}
+
+/// Bitmap-frontier top-down step over a *slab* (used by the distributed
+/// engine's Phase 1): expand every owned vertex in `local_frontier`,
+/// recording discoveries against `visited` (global bitmap). Returns
+/// `(discovered_queue, edges_examined)`.
+///
+/// Mirrors Alg. 2 Phase 1: discoveries go to the node's **global queue**
+/// regardless of ownership; `visited` here is the node's local view
+/// (`d_local != INF`).
+pub fn expand_slab(
+    slab: &crate::graph::csr::CsrSlab,
+    local_frontier: &[VertexId],
+    visited: &mut Bitmap,
+    discovered: &mut Vec<VertexId>,
+) -> u64 {
+    let mut edges = 0u64;
+    for &v in local_frontier {
+        debug_assert!(slab.owns(v));
+        for &u in slab.neighbors_global(v) {
+            edges += 1;
+            if visited.test_and_set(u) {
+                discovered.push(u);
+            }
+        }
+    }
+    edges
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::bfs::serial::serial_bfs;
+    use crate::graph::gen::kronecker::{kronecker, KroneckerParams};
+    use crate::graph::gen::structured::{grid2d, path, star};
+    use crate::graph::gen::urand::uniform_random;
+
+    #[test]
+    fn matches_serial_on_suite() {
+        let graphs: Vec<Csr> = vec![
+            path(64),
+            star(128),
+            grid2d(9, 13),
+            kronecker(KroneckerParams::graph500(10, 8), 3).0,
+            uniform_random(700, 6, 4).0,
+        ];
+        for (i, g) in graphs.iter().enumerate() {
+            for root in [0u32, (g.num_vertices() / 2) as u32] {
+                let want = serial_bfs(g, root);
+                for lrb in [false, true] {
+                    let got = topdown_bfs(g, root, lrb);
+                    assert_eq!(got.dist, want, "graph {i} root {root} lrb {lrb}");
+                }
+            }
+        }
+    }
+
+    #[test]
+    fn level_stats_consistent() {
+        let (g, _) = kronecker(KroneckerParams::graph500(9, 8), 5);
+        let r = topdown_bfs(&g, 0, true);
+        let total_discovered: u64 = r.levels.iter().map(|l| l.discovered).sum();
+        assert_eq!(total_discovered + 1, r.reached()); // +1 for the root
+        let sum_edges: u64 = r.levels.iter().map(|l| l.edges_examined).sum();
+        assert_eq!(sum_edges, r.edges_examined);
+        // Level 0 frontier is exactly the root.
+        assert_eq!(r.levels[0].frontier_size, 1);
+    }
+
+    #[test]
+    fn depth_equals_eccentricity_plus_one() {
+        let g = path(10);
+        let r = topdown_bfs(&g, 0, false);
+        // Levels 0..9 each have a nonempty frontier = 10 frontiers.
+        assert_eq!(r.depth(), 10);
+    }
+
+    #[test]
+    fn expand_slab_discovers_each_vertex_once() {
+        let (g, _) = uniform_random(200, 8, 9);
+        let slab = g.row_slice(0, 200);
+        let mut visited = Bitmap::new(200);
+        visited.set(0);
+        let mut disc = Vec::new();
+        let edges = expand_slab(&slab, &[0], &mut visited, &mut disc);
+        assert_eq!(edges, g.degree(0) as u64);
+        let mut sorted = disc.clone();
+        sorted.sort_unstable();
+        sorted.dedup();
+        assert_eq!(sorted.len(), disc.len(), "no duplicates");
+        for v in disc {
+            assert!(g.has_edge(0, v));
+        }
+    }
+}

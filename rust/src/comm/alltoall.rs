@@ -1,0 +1,104 @@
+//! All-to-all baselines (§3's two "widely used and naive approaches").
+//!
+//! * [`ConcurrentAllToAll`] — one bulk round: every node sends to every
+//!   other node simultaneously. Lowest depth, `CN·(CN−1)` messages, worst
+//!   congestion, and an unbounded receive buffer (`O(CN·V)`).
+//! * [`IterativeAllToAll`] — `CN−1` ring-shifted rounds: in round `k` node
+//!   `g` sends to `(g+k+1) mod CN`. Same message count, `O(V)` buffer,
+//!   `CN−1` rounds of latency.
+//!
+//! These are the comparators for the message/volume/time benches, and
+//! [`ConcurrentAllToAll`] doubles as the Gunrock/Groute-style baseline when
+//! priced with dynamic-allocation overhead in `net::sim`.
+
+use super::pattern::{CommPattern, Schedule, Transfer};
+
+/// Single-round bulk all-to-all.
+#[derive(Clone, Copy, Debug, Default)]
+pub struct ConcurrentAllToAll;
+
+impl CommPattern for ConcurrentAllToAll {
+    fn name(&self) -> &'static str {
+        "alltoall-concurrent"
+    }
+
+    fn schedule(&self, cn: u32) -> Schedule {
+        let mut round = Vec::with_capacity((cn as usize) * (cn as usize - 1));
+        for src in 0..cn {
+            for dst in 0..cn {
+                if src != dst {
+                    round.push(Transfer { src, dst });
+                }
+            }
+        }
+        let rounds = if round.is_empty() { vec![] } else { vec![round] };
+        Schedule { num_nodes: cn, rounds }
+    }
+}
+
+/// `CN−1` ring-shifted pairwise rounds.
+#[derive(Clone, Copy, Debug, Default)]
+pub struct IterativeAllToAll;
+
+impl CommPattern for IterativeAllToAll {
+    fn name(&self) -> &'static str {
+        "alltoall-iterative"
+    }
+
+    fn schedule(&self, cn: u32) -> Schedule {
+        let mut rounds = Vec::new();
+        for k in 1..cn {
+            let round = (0..cn)
+                .map(|g| Transfer { src: g, dst: (g + k) % cn })
+                .collect();
+            rounds.push(round);
+        }
+        Schedule { num_nodes: cn, rounds }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::comm::analysis::verify_full_coverage;
+
+    #[test]
+    fn concurrent_counts() {
+        let s = ConcurrentAllToAll.schedule(16);
+        // Paper: all-to-all requires CN^2 messages (CN·(CN−1) exactly).
+        assert_eq!(s.total_messages(), 16 * 15);
+        assert_eq!(s.depth(), 1);
+        assert_eq!(s.max_recvs_per_round(), 15);
+        s.validate().unwrap();
+        verify_full_coverage(&s).unwrap();
+    }
+
+    #[test]
+    fn iterative_counts() {
+        let s = IterativeAllToAll.schedule(16);
+        assert_eq!(s.total_messages(), 16 * 15);
+        assert_eq!(s.depth(), 15);
+        // One send and one receive per node per round: O(V) buffers.
+        assert_eq!(s.max_recvs_per_round(), 1);
+        assert_eq!(s.max_sends_per_round(), 1);
+        s.validate().unwrap();
+        verify_full_coverage(&s).unwrap();
+    }
+
+    #[test]
+    fn single_node_degenerate() {
+        assert_eq!(ConcurrentAllToAll.schedule(1).total_messages(), 0);
+        assert_eq!(IterativeAllToAll.schedule(1).total_messages(), 0);
+    }
+
+    #[test]
+    fn coverage_property() {
+        use crate::util::propcheck::{forall, gen, Config};
+        forall(Config::cases(40), "all-to-all covers", |rng| {
+            let cn = gen::usize_in(rng, 1, 40) as u32;
+            let ok = verify_full_coverage(&ConcurrentAllToAll.schedule(cn)).is_ok()
+                && verify_full_coverage(&IterativeAllToAll.schedule(cn)).is_ok();
+            (ok, format!("cn={cn}"))
+        });
+    }
+}

@@ -1,0 +1,184 @@
+//! Executable versions of the paper's §3 complexity analysis: knowledge
+//! propagation, coverage verification, message/volume/buffer accounting.
+//!
+//! `verify_full_coverage` is the correctness invariant of every pattern:
+//! running the schedule with allgather semantics must leave every node
+//! knowing every node's frontier. `CommCosts` turns a schedule into the
+//! closed-form quantities the paper trades off (messages, rounds, buffer
+//! bound, data volume), which `net::sim` prices into time.
+
+use super::pattern::Schedule;
+
+/// Simulate knowledge propagation: `knowledge[g]` is the set of nodes
+/// whose frontier `g` holds (as a bitset; supports up to 128 nodes which
+/// covers every experiment — the DGX-2 has 16).
+pub fn propagate_knowledge(s: &Schedule) -> Vec<u128> {
+    assert!(s.num_nodes <= 128, "knowledge bitset supports <= 128 nodes");
+    let mut know: Vec<u128> = (0..s.num_nodes).map(|g| 1u128 << g).collect();
+    for round in &s.rounds {
+        // Transfers within a round are concurrent: merge from a snapshot.
+        let snap = know.clone();
+        for t in round {
+            know[t.dst as usize] |= snap[t.src as usize];
+        }
+    }
+    know
+}
+
+/// Verify that after the schedule every node knows every node's frontier.
+pub fn verify_full_coverage(s: &Schedule) -> Result<(), String> {
+    let want: u128 = if s.num_nodes == 128 {
+        u128::MAX
+    } else {
+        (1u128 << s.num_nodes) - 1
+    };
+    for (g, k) in propagate_knowledge(s).iter().enumerate() {
+        if *k != want {
+            return Err(format!(
+                "node {g} knows {:#b}, wants {:#b} ({} of {} nodes)",
+                k,
+                want,
+                k.count_ones(),
+                s.num_nodes
+            ));
+        }
+    }
+    Ok(())
+}
+
+/// Closed-form-style cost accounting for a schedule, assuming each
+/// transfer ships the sender's accumulated knowledge as a fixed-size
+/// bitmap payload of `payload_bytes_per_frontier` (the paper's bounded
+/// O(V)-per-message regime).
+#[derive(Clone, Copy, Debug, PartialEq)]
+pub struct CommCosts {
+    /// Total messages across all rounds.
+    pub messages: u64,
+    /// Rounds of synchronization (network depth).
+    pub rounds: u64,
+    /// Total bytes shipped.
+    pub volume_bytes: u64,
+    /// Receive-buffer bound: max messages into one node in one round ×
+    /// payload — the paper's `O(f·V)` (contribution 4).
+    pub buffer_bytes: u64,
+    /// Max messages sent by one node in one round (Fig 1(f) hotspot).
+    pub max_fanout: u64,
+}
+
+/// Compute [`CommCosts`] for a schedule with a fixed per-message payload.
+pub fn comm_costs(s: &Schedule, payload_bytes: u64) -> CommCosts {
+    CommCosts {
+        messages: s.total_messages(),
+        rounds: s.depth() as u64,
+        volume_bytes: s.total_messages() * payload_bytes,
+        buffer_bytes: s.max_recvs_per_round() * payload_bytes,
+        max_fanout: s.max_sends_per_round(),
+    }
+}
+
+/// The paper's approximate message-count formula `CN · f · log_f(CN)`
+/// (§3). Exposed so benches can print "paper formula" next to measured.
+pub fn paper_message_formula(cn: u32, fanout: u32) -> f64 {
+    if cn <= 1 {
+        return 0.0;
+    }
+    let f = fanout.max(2) as f64; // log_1 undefined; paper uses log2 for f=1
+    cn as f64 * fanout as f64 * (cn as f64).log(f).ceil()
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::comm::alltoall::{ConcurrentAllToAll, IterativeAllToAll};
+    use crate::comm::butterfly::Butterfly;
+    use crate::comm::pattern::CommPattern;
+
+    #[test]
+    fn butterfly_buffer_bound_matches_paper() {
+        // Contribution 4: buffer is O(f·V) — for radix r the bound is
+        // (r−1) messages × O(V) payload, independent of CN.
+        let payload = 1_000_000; // pretend V/8 = 1 MB
+        for cn in [16u32, 32, 64] {
+            let c1 = comm_costs(&Butterfly::new(1).schedule(cn), payload);
+            assert_eq!(c1.buffer_bytes, payload, "f=1 cn={cn}"); // 1 msg/round
+            let c4 = comm_costs(&Butterfly::new(4).schedule(cn), payload);
+            assert_eq!(c4.buffer_bytes, 3 * payload, "f=4 cn={cn}");
+        }
+        // All-to-all concurrent has NO CN-independent bound:
+        let ca = comm_costs(&ConcurrentAllToAll.schedule(64), payload);
+        assert_eq!(ca.buffer_bytes, 63 * payload);
+    }
+
+    #[test]
+    fn butterfly_beats_alltoall_on_messages() {
+        // §3: butterfly reduces messages vs all-to-all for CN >= 8.
+        for cn in [8u32, 16, 32, 64] {
+            let bf = Butterfly::new(1).schedule(cn).total_messages();
+            let a2a = ConcurrentAllToAll.schedule(cn).total_messages();
+            assert!(bf < a2a, "cn={cn}: {bf} vs {a2a}");
+        }
+    }
+
+    #[test]
+    fn fanout_tradeoff_rounds_vs_messages() {
+        // §3: higher fanout => fewer rounds, more messages (16 nodes).
+        let f1 = Butterfly::new(1).schedule(16);
+        let f4 = Butterfly::new(4).schedule(16);
+        assert!(f4.depth() < f1.depth());
+        assert!(f4.total_messages() > f1.total_messages());
+    }
+
+    #[test]
+    fn paper_formula_examples() {
+        // §3: fanout 1, 16 CN -> 64; fanout 4, 16 CN -> 128.
+        assert_eq!(paper_message_formula(16, 1) as u64, 64);
+        assert_eq!(paper_message_formula(16, 4) as u64, 128);
+    }
+
+    #[test]
+    fn paper_formula_upper_bounds_measured() {
+        use crate::util::propcheck::{forall, gen, Config};
+        forall(Config::cases(60), "formula >= measured", |rng| {
+            let cn = gen::usize_in(rng, 2, 64) as u32;
+            let f = gen::usize_in(rng, 1, 8) as u32;
+            let measured = Butterfly::new(f).schedule(cn).total_messages() as f64;
+            // The paper's formula assumes f sends per round; actual radix
+            // exchange sends r−1 ≤ f, plus padded-virtual extras which stay
+            // within one extra round's worth.
+            let bound = paper_message_formula(cn, f)
+                + (cn as f64) * (f.max(2) as f64); // slack for padding round
+            (measured <= bound, format!("cn={cn} f={f} measured={measured} bound={bound}"))
+        });
+    }
+
+    #[test]
+    fn knowledge_monotone_nondecreasing() {
+        use crate::util::propcheck::{forall, gen, Config};
+        forall(Config::cases(40), "knowledge only grows", |rng| {
+            let cn = gen::usize_in(rng, 2, 48) as u32;
+            let f = gen::usize_in(rng, 1, 6) as u32;
+            let s = Butterfly::new(f).schedule(cn);
+            let mut know: Vec<u128> = (0..cn).map(|g| 1u128 << g).collect();
+            let mut ok = true;
+            for round in &s.rounds {
+                let snap = know.clone();
+                for t in round {
+                    know[t.dst as usize] |= snap[t.src as usize];
+                }
+                for g in 0..cn as usize {
+                    ok &= (snap[g] & !know[g]) == 0;
+                }
+            }
+            (ok, format!("cn={cn} f={f}"))
+        });
+    }
+
+    #[test]
+    fn iterative_alltoall_costs() {
+        let c = comm_costs(&IterativeAllToAll.schedule(9), 100);
+        assert_eq!(c.messages, 72);
+        assert_eq!(c.rounds, 8);
+        assert_eq!(c.buffer_bytes, 100);
+        assert_eq!(c.max_fanout, 1);
+    }
+}

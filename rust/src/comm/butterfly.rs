@@ -1,0 +1,233 @@
+//! The butterfly synchronization network — the paper's core contribution.
+//!
+//! For radix `r` (the paper's *fanout*; `fanout 1` means the classic
+//! radix-2 butterfly), round `i` groups nodes whose base-`r` ids differ
+//! only in digit `i`; group members exchange their accumulated frontier
+//! knowledge. After `ceil(log_r CN)` rounds every node holds every node's
+//! frontier — the all-to-all outcome with
+//! `CN·(r−1)·ceil(log_r CN)` messages instead of `CN·(CN−1)`.
+//!
+//! **Non-power-of-`r` node counts** use the paper's padded scheme: the id
+//! space is padded to `r^depth`, and a virtual node's accumulated block is
+//! held by the *last real node* (`CN−1`). This exactly reproduces the
+//! Fig 1(f) pathology the paper reports: with 9 nodes and fanout 1, node 8
+//! must serve nodes 1–7 in the final round (8 sends from one NIC), which
+//! `net::sim` then prices as the 8→9-GPU regression visible in Fig 3.
+
+use super::pattern::{CommPattern, Schedule, Transfer};
+
+/// Butterfly pattern with a configurable fanout.
+#[derive(Clone, Copy, Debug)]
+pub struct Butterfly {
+    /// The paper's fanout parameter. `1` ⇒ classic radix-2 butterfly;
+    /// `f ≥ 2` ⇒ radix-`f` digit-group exchange; `f = CN` degenerates to
+    /// single-round all-to-all (§3 "it is possible to set the fanout
+    /// f = CN").
+    pub fanout: u32,
+}
+
+impl Butterfly {
+    /// Create a butterfly pattern with the given fanout (≥ 1).
+    pub fn new(fanout: u32) -> Self {
+        assert!(fanout >= 1, "fanout must be >= 1");
+        Self { fanout }
+    }
+
+    /// Effective radix: fanout 1 means radix 2 (one partner per round).
+    pub fn radix(&self) -> u32 {
+        self.fanout.max(2)
+    }
+
+    /// Schedule depth for `cn` nodes: `ceil(log_radix cn)`.
+    pub fn depth_for(&self, cn: u32) -> u32 {
+        depth(cn, self.radix())
+    }
+
+    /// The paper's `ButterflyDirection()` oracle: the set of *real* source
+    /// nodes that node `g` receives from in round `i`.
+    pub fn butterfly_direction(&self, cn: u32, g: u32, round: u32) -> Vec<u32> {
+        let r = self.radix() as u64;
+        let stride = r.pow(round);
+        let digit = (g as u64 / stride) % r;
+        let base = g as u64 - digit * stride;
+        let mut srcs = Vec::new();
+        for j in 0..r {
+            if j == digit {
+                continue;
+            }
+            let partner = base + j * stride;
+            // Virtual partners' blocks are held by the last real node.
+            let holder = if partner >= cn as u64 { cn - 1 } else { partner as u32 };
+            if holder != g && !srcs.contains(&holder) {
+                srcs.push(holder);
+            }
+        }
+        srcs
+    }
+}
+
+/// `ceil(log_r cn)` with `depth(1) = 0`.
+fn depth(cn: u32, radix: u32) -> u32 {
+    assert!(radix >= 2);
+    let mut d = 0;
+    let mut span: u64 = 1;
+    while span < cn as u64 {
+        span *= radix as u64;
+        d += 1;
+    }
+    d
+}
+
+impl CommPattern for Butterfly {
+    fn name(&self) -> &'static str {
+        "butterfly"
+    }
+
+    fn schedule(&self, cn: u32) -> Schedule {
+        assert!(cn >= 1, "need at least one node");
+        let t = self.depth_for(cn);
+        let mut rounds = Vec::with_capacity(t as usize);
+        for i in 0..t {
+            let mut round = Vec::new();
+            for g in 0..cn {
+                for src in self.butterfly_direction(cn, g, i) {
+                    round.push(Transfer { src, dst: g });
+                }
+            }
+            // Deterministic order; dedup identical (src,dst) pairs that can
+            // arise when several virtual partners share a holder.
+            round.sort_by_key(|tr| (tr.src, tr.dst));
+            round.dedup();
+            rounds.push(round);
+        }
+        Schedule { num_nodes: cn, rounds }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::comm::analysis::verify_full_coverage;
+
+    #[test]
+    fn fanout1_16_nodes_matches_paper() {
+        // Paper §3: "For a fanout of 1 and 16 compute-nodes, a total
+        // number of 64 messages are necessary", depth log2(16) = 4.
+        let s = Butterfly::new(1).schedule(16);
+        assert_eq!(s.depth(), 4);
+        assert_eq!(s.total_messages(), 64);
+        s.validate().unwrap();
+        verify_full_coverage(&s).unwrap();
+    }
+
+    #[test]
+    fn fanout4_16_nodes_two_rounds() {
+        // Paper: fanout 4 with 16 GPUs needs two rounds (vs four for f=1).
+        let s = Butterfly::new(4).schedule(16);
+        assert_eq!(s.depth(), 2);
+        // Radix-4 digit exchange: 16 nodes × 3 partners × 2 rounds = 96
+        // messages (the paper's f·log_f formula rounds this up to 128).
+        assert_eq!(s.total_messages(), 96);
+        verify_full_coverage(&s).unwrap();
+    }
+
+    #[test]
+    fn fig1_coverage_growth_for_node0() {
+        // Fig 1 (b)-(f): node 0's knowledge doubles each round:
+        // {0} -> {0,1} -> {0..3} -> {0..7} -> {0..15}.
+        let bf = Butterfly::new(1);
+        let cn = 16;
+        let mut know: u64 = 1; // node 0 knows itself
+        let mut all_know: Vec<u64> = (0..cn).map(|g| 1u64 << g).collect();
+        for round in 0..4 {
+            let mut next = all_know.clone();
+            for g in 0..cn {
+                for src in bf.butterfly_direction(cn as u32, g as u32, round) {
+                    next[g] |= all_know[src as usize];
+                }
+            }
+            all_know = next;
+            know = all_know[0];
+            let expect_count = 1u64 << (round + 1);
+            assert_eq!(know.count_ones() as u64, expect_count, "round {round}");
+        }
+        assert_eq!(know, 0xFFFF);
+    }
+
+    #[test]
+    fn fig2_fanout4_first_round_groups_of_four() {
+        // Fig 2(c): after one round node 0 has synchronized against 0-3.
+        let bf = Butterfly::new(4);
+        let srcs = bf.butterfly_direction(16, 0, 0);
+        assert_eq!(srcs, vec![1, 2, 3]);
+        // Fig 2(d): round 1 brings 4, 8, 12 (holding 4-7, 8-11, 12-15).
+        let srcs = bf.butterfly_direction(16, 0, 1);
+        assert_eq!(srcs, vec![4, 8, 12]);
+    }
+
+    #[test]
+    fn nine_nodes_fanout1_last_round_bottleneck() {
+        // Paper Fig 1(f): with 9 nodes, node 8 communicates with 8
+        // different nodes in the last round.
+        let s = Butterfly::new(1).schedule(9);
+        assert_eq!(s.depth(), 4);
+        let last = s.rounds.last().unwrap();
+        let sends_from_8 = last.iter().filter(|t| t.src == 8).count();
+        assert_eq!(sends_from_8, 8, "node 8 must serve all others: {last:?}");
+        verify_full_coverage(&s).unwrap();
+        // Contrast: 8 nodes have no such hotspot.
+        let s8 = Butterfly::new(1).schedule(8);
+        assert_eq!(s8.max_sends_per_round(), 1);
+    }
+
+    #[test]
+    fn fanout_cn_is_single_round_alltoall() {
+        let s = Butterfly::new(8).schedule(8);
+        assert_eq!(s.depth(), 1);
+        assert_eq!(s.total_messages(), 8 * 7);
+        verify_full_coverage(&s).unwrap();
+    }
+
+    #[test]
+    fn one_node_needs_no_communication() {
+        let s = Butterfly::new(1).schedule(1);
+        assert_eq!(s.depth(), 0);
+        assert_eq!(s.total_messages(), 0);
+    }
+
+    #[test]
+    fn coverage_for_all_cn_and_fanout() {
+        use crate::util::propcheck::{forall, gen, Config};
+        forall(Config::cases(80), "butterfly covers all nodes", |rng| {
+            let cn = gen::usize_in(rng, 1, 48) as u32;
+            let f = gen::usize_in(rng, 1, 9) as u32;
+            let s = Butterfly::new(f).schedule(cn);
+            let ok = s.validate().is_ok() && verify_full_coverage(&s).is_ok();
+            (ok, format!("cn={cn} fanout={f}"))
+        });
+    }
+
+    #[test]
+    fn message_count_formula_power_of_radix() {
+        // Exact count for cn = r^t: cn·(r−1)·t.
+        for (f, cn) in [(1u32, 32u32), (2, 32), (4, 64), (8, 64)] {
+            let s = Butterfly::new(f).schedule(cn);
+            let r = f.max(2) as u64;
+            let t = s.depth() as u64;
+            assert_eq!(
+                s.total_messages(),
+                cn as u64 * (r - 1) * t,
+                "f={f} cn={cn}"
+            );
+        }
+    }
+
+    #[test]
+    fn depth_matches_log() {
+        assert_eq!(Butterfly::new(1).depth_for(16), 4);
+        assert_eq!(Butterfly::new(4).depth_for(16), 2);
+        assert_eq!(Butterfly::new(4).depth_for(17), 3);
+        assert_eq!(Butterfly::new(2).depth_for(9), 4);
+        assert_eq!(Butterfly::new(16).depth_for(16), 1);
+    }
+}

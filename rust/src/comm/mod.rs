@@ -1,0 +1,11 @@
+//! Frontier-synchronization communication patterns: the paper's butterfly
+//! network, all-to-all baselines, and the executable complexity analysis.
+
+pub mod alltoall;
+pub mod analysis;
+pub mod butterfly;
+pub mod pattern;
+
+pub use alltoall::{ConcurrentAllToAll, IterativeAllToAll};
+pub use butterfly::Butterfly;
+pub use pattern::{CommPattern, Schedule, Transfer};

@@ -1,0 +1,141 @@
+//! Communication-schedule abstraction.
+//!
+//! A [`Schedule`] is a list of synchronization *rounds*; each round is a set
+//! of [`Transfer`]s that may proceed concurrently. The semantics of a
+//! transfer are allgather-style: **`src` ships its entire accumulated
+//! frontier knowledge to `dst`**, and `dst` merges it. After the final
+//! round every node must know every node's frontier — the invariant
+//! [`crate::comm::analysis::verify_full_coverage`] checks for every pattern.
+
+/// One directed message within a round.
+#[derive(Clone, Copy, Debug, PartialEq, Eq, Hash)]
+pub struct Transfer {
+    /// Sending compute node.
+    pub src: u32,
+    /// Receiving compute node.
+    pub dst: u32,
+}
+
+/// A complete per-level synchronization schedule.
+#[derive(Clone, Debug, PartialEq, Eq)]
+pub struct Schedule {
+    /// Number of compute nodes.
+    pub num_nodes: u32,
+    /// Rounds of concurrent transfers.
+    pub rounds: Vec<Vec<Transfer>>,
+}
+
+impl Schedule {
+    /// Total number of messages across all rounds.
+    pub fn total_messages(&self) -> u64 {
+        self.rounds.iter().map(|r| r.len() as u64).sum()
+    }
+
+    /// Depth (number of rounds).
+    pub fn depth(&self) -> usize {
+        self.rounds.len()
+    }
+
+    /// Maximum number of messages any single node *sends* in any round —
+    /// the paper's Fig 1(f) bottleneck metric.
+    pub fn max_sends_per_round(&self) -> u64 {
+        self.rounds
+            .iter()
+            .flat_map(|r| {
+                let mut counts = std::collections::HashMap::new();
+                for t in r {
+                    *counts.entry(t.src).or_insert(0u64) += 1;
+                }
+                counts.into_values()
+            })
+            .max()
+            .unwrap_or(0)
+    }
+
+    /// Maximum number of messages any single node *receives* in any round
+    /// — bounds the preallocated receive buffer (`O(f·V)`, contribution 4).
+    pub fn max_recvs_per_round(&self) -> u64 {
+        self.rounds
+            .iter()
+            .flat_map(|r| {
+                let mut counts = std::collections::HashMap::new();
+                for t in r {
+                    *counts.entry(t.dst).or_insert(0u64) += 1;
+                }
+                counts.into_values()
+            })
+            .max()
+            .unwrap_or(0)
+    }
+
+    /// Sanity checks: src/dst in range, no self-messages, no duplicate
+    /// (src,dst) pair within one round.
+    pub fn validate(&self) -> Result<(), String> {
+        for (i, round) in self.rounds.iter().enumerate() {
+            let mut seen = std::collections::HashSet::new();
+            for t in round {
+                if t.src >= self.num_nodes || t.dst >= self.num_nodes {
+                    return Err(format!("round {i}: transfer {t:?} out of range"));
+                }
+                if t.src == t.dst {
+                    return Err(format!("round {i}: self-message {t:?}"));
+                }
+                if !seen.insert((t.src, t.dst)) {
+                    return Err(format!("round {i}: duplicate transfer {t:?}"));
+                }
+            }
+        }
+        Ok(())
+    }
+}
+
+/// A synchronization-pattern generator.
+pub trait CommPattern {
+    /// Human-readable name (used in bench tables).
+    fn name(&self) -> &'static str;
+    /// Build the schedule for `num_nodes` compute nodes.
+    fn schedule(&self, num_nodes: u32) -> Schedule;
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn sched(rounds: Vec<Vec<(u32, u32)>>) -> Schedule {
+        Schedule {
+            num_nodes: 4,
+            rounds: rounds
+                .into_iter()
+                .map(|r| r.into_iter().map(|(src, dst)| Transfer { src, dst }).collect())
+                .collect(),
+        }
+    }
+
+    #[test]
+    fn counters() {
+        let s = sched(vec![vec![(0, 1), (2, 3)], vec![(0, 2), (0, 3), (1, 0)]]);
+        assert_eq!(s.total_messages(), 5);
+        assert_eq!(s.depth(), 2);
+        assert_eq!(s.max_sends_per_round(), 2); // node 0 in round 1
+        assert_eq!(s.max_recvs_per_round(), 1);
+        assert!(s.validate().is_ok());
+    }
+
+    #[test]
+    fn validate_rejects_self_message() {
+        let s = sched(vec![vec![(1, 1)]]);
+        assert!(s.validate().is_err());
+    }
+
+    #[test]
+    fn validate_rejects_out_of_range() {
+        let s = sched(vec![vec![(0, 9)]]);
+        assert!(s.validate().is_err());
+    }
+
+    #[test]
+    fn validate_rejects_duplicates_in_round() {
+        let s = sched(vec![vec![(0, 1), (0, 1)]]);
+        assert!(s.validate().is_err());
+    }
+}

@@ -1,0 +1,158 @@
+//! Engine configuration: fanout, pattern choice, payload encoding,
+//! backend, and the simulated hardware models.
+
+use crate::net::model::{DeviceModel, NetModel};
+
+/// Which synchronization pattern Phase 2 uses.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum PatternKind {
+    /// The paper's butterfly network with the given fanout.
+    Butterfly {
+        /// Fanout `f` (1 = classic radix-2 butterfly).
+        fanout: u32,
+    },
+    /// Single-round bulk all-to-all (naive baseline 1).
+    AllToAllConcurrent,
+    /// `CN−1` ring rounds (naive baseline 2).
+    AllToAllIterative,
+}
+
+impl PatternKind {
+    /// Build the pattern object.
+    pub fn build(&self) -> Box<dyn crate::comm::CommPattern + Send + Sync> {
+        match *self {
+            PatternKind::Butterfly { fanout } => {
+                Box::new(crate::comm::Butterfly::new(fanout))
+            }
+            PatternKind::AllToAllConcurrent => Box::new(crate::comm::ConcurrentAllToAll),
+            PatternKind::AllToAllIterative => Box::new(crate::comm::IterativeAllToAll),
+        }
+    }
+
+    /// Display name.
+    pub fn name(&self) -> String {
+        match *self {
+            PatternKind::Butterfly { fanout } => format!("butterfly-f{fanout}"),
+            PatternKind::AllToAllConcurrent => "alltoall-concurrent".to_string(),
+            PatternKind::AllToAllIterative => "alltoall-iterative".to_string(),
+        }
+    }
+}
+
+/// How frontier payloads are encoded on the wire.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum PayloadEncoding {
+    /// Explicit vertex list: `4·|queue|` bytes — cheap for sparse
+    /// frontiers, unbounded worst case.
+    Queue,
+    /// Dense bitmap: `ceil(V/64)·8` bytes — the paper's tight bound,
+    /// independent of frontier size.
+    Bitmap,
+    /// Per-message minimum of the two (what a production system would
+    /// negotiate); still bounded by the bitmap size.
+    Auto,
+}
+
+impl PayloadEncoding {
+    /// Bytes on the wire for a message carrying `queue_len` vertices of a
+    /// `num_vertices`-vertex graph.
+    pub fn bytes(&self, queue_len: u64, num_vertices: usize) -> u64 {
+        let q = queue_len * 4;
+        let b = (num_vertices as u64).div_ceil(64) * 8;
+        match self {
+            PayloadEncoding::Queue => q,
+            PayloadEncoding::Bitmap => b,
+            PayloadEncoding::Auto => q.min(b),
+        }
+    }
+}
+
+/// Traversal direction policy for Phase 1 (the paper's contribution 3:
+/// the butterfly sync composes with either formulation unchanged).
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum DirectionMode {
+    /// Classic top-down only (the paper's evaluated configuration).
+    TopDown,
+    /// Bottom-up only (test/ablation vehicle).
+    BottomUp,
+    /// Direction-optimizing with GapBS-style α/β switching on *global*
+    /// frontier statistics (the paper's "promising optimization").
+    DirOpt {
+        /// TD→BU switch divisor (GapBS default 15).
+        alpha: u64,
+        /// BU→TD switch divisor (GapBS default 18).
+        beta: u64,
+    },
+}
+
+impl DirectionMode {
+    /// Direction-optimizing with GapBS defaults.
+    pub fn diropt() -> Self {
+        DirectionMode::DirOpt { alpha: 15, beta: 18 }
+    }
+}
+
+/// Full engine configuration.
+#[derive(Clone, Debug)]
+pub struct EngineConfig {
+    /// Number of simulated compute nodes (GPUs).
+    pub num_nodes: usize,
+    /// Synchronization pattern.
+    pub pattern: PatternKind,
+    /// Payload encoding.
+    pub payload: PayloadEncoding,
+    /// Use LRB binning in Phase 1.
+    pub use_lrb: bool,
+    /// Phase-1 direction policy.
+    pub direction: DirectionMode,
+    /// Run Phase 1 across worker threads (native backend only).
+    pub parallel_phase1: bool,
+    /// Interconnect model for simulated communication time.
+    pub net: NetModel,
+    /// Device model for simulated compute time.
+    pub device: DeviceModel,
+}
+
+impl EngineConfig {
+    /// The paper's headline configuration: 16 nodes, fanout 4, DGX-2.
+    pub fn dgx2(num_nodes: usize, fanout: u32) -> Self {
+        Self {
+            num_nodes,
+            pattern: PatternKind::Butterfly { fanout },
+            payload: PayloadEncoding::Auto,
+            use_lrb: true,
+            direction: DirectionMode::TopDown,
+            parallel_phase1: false,
+            net: NetModel::dgx2(),
+            device: DeviceModel::v100(),
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn payload_encoding_bytes() {
+        // 100 vertices => bitmap = ceil(100/64)*8 = 16 bytes.
+        assert_eq!(PayloadEncoding::Bitmap.bytes(50, 100), 16);
+        assert_eq!(PayloadEncoding::Queue.bytes(50, 100), 200);
+        assert_eq!(PayloadEncoding::Auto.bytes(50, 100), 16);
+        assert_eq!(PayloadEncoding::Auto.bytes(2, 100), 8);
+    }
+
+    #[test]
+    fn pattern_names() {
+        assert_eq!(PatternKind::Butterfly { fanout: 4 }.name(), "butterfly-f4");
+        assert_eq!(PatternKind::AllToAllConcurrent.name(), "alltoall-concurrent");
+    }
+
+    #[test]
+    fn dgx2_preset() {
+        let c = EngineConfig::dgx2(16, 4);
+        assert_eq!(c.num_nodes, 16);
+        assert!(matches!(c.pattern, PatternKind::Butterfly { fanout: 4 }));
+        assert_eq!(c.net.name, "dgx2-nvswitch");
+    }
+}

@@ -1,0 +1,580 @@
+//! The distributed ButterFly BFS engine — Alg. 2 of the paper.
+//!
+//! Each level runs two strictly separated phases:
+//!
+//! 1. **Traversal** — every compute node expands its owned frontier over
+//!    its adjacency slab (via its [`ComputeBackend`]), discovering vertices
+//!    into its global queue and distance array.
+//! 2. **Butterfly synchronization** — the configured [`CommPattern`]'s
+//!    rounds execute with allgather semantics: each transfer ships the
+//!    sender's accumulated global queue (snapshotted at round start, the
+//!    paper's `CopyFrontier`); receivers dedup against their distance
+//!    array, extend their own global queue (so later rounds relay), and
+//!    route owned vertices into their next local queue.
+//!
+//! The engine also keeps the simulated clock: Phase-1 compute is priced by
+//! the [`DeviceModel`](crate::net::model::DeviceModel) (slowest node wins —
+//! the bulk-synchronous barrier), Phase-2 by the interconnect simulator
+//! with the *actual measured payloads* of every message.
+
+use super::backend::{ComputeBackend, ExpandOutput, NativeCsr};
+use super::config::{DirectionMode, EngineConfig};
+use super::metrics::RunMetrics;
+use super::node::ComputeNode;
+use crate::bfs::serial::INF;
+use crate::comm::pattern::Schedule;
+use crate::graph::csr::{Csr, VertexId};
+use crate::net::sim::simulate_schedule;
+use crate::partition::one_d::{partition_1d, Partition1D};
+
+/// The multi-node BFS engine.
+pub struct ButterflyBfs {
+    config: EngineConfig,
+    partition: Partition1D,
+    nodes: Vec<ComputeNode>,
+    backends: Vec<Box<dyn ComputeBackend>>,
+    schedule: Schedule,
+    num_vertices: usize,
+    graph_edges: u64,
+    scratch: Vec<ExpandOutput>,
+}
+
+impl ButterflyBfs {
+    /// Build an engine over `g` with the native CSR backend on every node.
+    pub fn new(g: &Csr, config: EngineConfig) -> Self {
+        let backends: Vec<Box<dyn ComputeBackend>> = (0..config.num_nodes)
+            .map(|_| Box::new(NativeCsr::new(config.use_lrb)) as Box<dyn ComputeBackend>)
+            .collect();
+        Self::with_backends(g, config, backends)
+    }
+
+    /// Build an engine with caller-supplied per-node backends (e.g. the
+    /// XLA/PJRT backend from `runtime::`).
+    pub fn with_backends(
+        g: &Csr,
+        config: EngineConfig,
+        backends: Vec<Box<dyn ComputeBackend>>,
+    ) -> Self {
+        assert_eq!(backends.len(), config.num_nodes, "one backend per node");
+        assert!(config.num_nodes >= 1);
+        let partition = partition_1d(g, config.num_nodes);
+        let nodes: Vec<ComputeNode> = partition
+            .slabs(g)
+            .into_iter()
+            .enumerate()
+            .map(|(i, slab)| ComputeNode::new(i as u32, slab, g.num_vertices()))
+            .collect();
+        let schedule = config.pattern.build().schedule(config.num_nodes as u32);
+        schedule.validate().expect("generated schedule invalid");
+        let scratch = (0..config.num_nodes).map(|_| ExpandOutput::default()).collect();
+        Self {
+            config,
+            partition,
+            nodes,
+            backends,
+            schedule,
+            num_vertices: g.num_vertices(),
+            graph_edges: g.num_edges(),
+            scratch,
+        }
+    }
+
+    /// The partition in use.
+    pub fn partition(&self) -> &Partition1D {
+        &self.partition
+    }
+
+    /// The synchronization schedule in use.
+    pub fn schedule(&self) -> &Schedule {
+        &self.schedule
+    }
+
+    /// Engine configuration.
+    pub fn config(&self) -> &EngineConfig {
+        &self.config
+    }
+
+    /// Run a full traversal from `root`; returns metrics. Distances are
+    /// afterwards available via [`Self::dist`].
+    pub fn run(&mut self, root: VertexId) -> RunMetrics {
+        assert!((root as usize) < self.num_vertices, "root out of range");
+        let t0 = std::time::Instant::now();
+        for n in &mut self.nodes {
+            n.init_root(root);
+        }
+        let mut metrics = RunMetrics {
+            graph_edges: self.graph_edges,
+            ..Default::default()
+        };
+        let mut level = 0u32;
+        // Direction-optimizing state (global statistics — the leader
+        // computes these from per-node counts each level).
+        let mut bottom_up = false;
+        let mut prev_frontier = 0u64;
+        let mut m_unexplored = self.graph_edges;
+        loop {
+            let frontier: u64 = self.nodes.iter().map(|n| n.q_local.len() as u64).sum();
+            if frontier == 0 {
+                break;
+            }
+            // ---- Direction choice (contribution 3: independent of sync) ----
+            match self.config.direction {
+                DirectionMode::TopDown => {}
+                DirectionMode::BottomUp => bottom_up = true,
+                DirectionMode::DirOpt { alpha, beta } => {
+                    let m_frontier: u64 = self
+                        .nodes
+                        .iter()
+                        .flat_map(|n| n.q_local.iter().map(|&v| n.slab.degree_global(v) as u64))
+                        .sum();
+                    let growing = frontier > prev_frontier;
+                    if !bottom_up && alpha > 0 && growing && m_frontier > m_unexplored / alpha {
+                        bottom_up = true;
+                    } else if bottom_up
+                        && beta > 0
+                        && !growing
+                        && frontier < (self.num_vertices as u64) / beta
+                    {
+                        bottom_up = false;
+                    }
+                    prev_frontier = frontier;
+                }
+            }
+            // ---- Phase 1: traversal ----
+            self.phase1(level, bottom_up);
+            let edges: u64 = self.nodes.iter().map(|n| n.edges_this_level).sum();
+            let max_node_edges =
+                self.nodes.iter().map(|n| n.edges_this_level).max().unwrap_or(0);
+            let sim_compute = self.config.device.level_time_dir(max_node_edges, bottom_up);
+
+            // ---- Phase 2: frontier synchronization ----
+            let payloads = self.phase2(level);
+            let comm = simulate_schedule(&self.schedule, &self.config.net, |r, t| {
+                payloads[r][t]
+            });
+
+            // After full coverage, every node's global queue holds the
+            // complete deduped set of this level's discoveries.
+            let discovered = self.nodes[0].q_global.len() as u64;
+            metrics.push_level(
+                level,
+                frontier,
+                edges,
+                max_node_edges,
+                discovered,
+                &comm,
+                sim_compute,
+            );
+
+            // Update the DO bookkeeping before queues rotate.
+            if let DirectionMode::DirOpt { .. } = self.config.direction {
+                let next_edges: u64 = self
+                    .nodes
+                    .iter()
+                    .flat_map(|n| {
+                        n.q_local_next.iter().map(|&v| n.slab.degree_global(v) as u64)
+                    })
+                    .sum();
+                m_unexplored = m_unexplored.saturating_sub(next_edges);
+            }
+            for n in &mut self.nodes {
+                n.swap_queues();
+            }
+            level += 1;
+        }
+        metrics.wall_seconds = t0.elapsed().as_secs_f64();
+        metrics.reached = self.nodes[0]
+            .d_local
+            .iter()
+            .filter(|&&d| d != INF)
+            .count() as u64;
+        metrics
+    }
+
+    /// Phase 1: expand every node's owned frontier (top-down) or scan its
+    /// owned unvisited vertices against the full frontier (bottom-up).
+    /// Discoveries are routed into global/local queues (Alg. 2's inner
+    /// loop).
+    fn phase1(&mut self, level: u32, bottom_up: bool) {
+        if self.config.parallel_phase1 {
+            // Each (node, backend, scratch) triple is disjoint: scoped
+            // threads give safe parallelism without locks.
+            std::thread::scope(|s| {
+                for ((node, backend), out) in self
+                    .nodes
+                    .iter_mut()
+                    .zip(self.backends.iter_mut())
+                    .zip(self.scratch.iter_mut())
+                {
+                    s.spawn(move || {
+                        expand_node(node, backend.as_mut(), out, bottom_up);
+                    });
+                }
+            });
+        } else {
+            for ((node, backend), out) in self
+                .nodes
+                .iter_mut()
+                .zip(self.backends.iter_mut())
+                .zip(self.scratch.iter_mut())
+            {
+                expand_node(node, backend.as_mut(), out, bottom_up);
+            }
+        }
+        // Route discoveries (cheap, sequential: O(discovered)).
+        for (node, out) in self.nodes.iter_mut().zip(self.scratch.iter()) {
+            node.edges_this_level = out.edges_examined;
+            for &v in &out.discovered {
+                // Backend already marked `visited`; record queues+distance.
+                node.d_local[v as usize] = level + 1;
+                node.q_global.push(v);
+                node.q_global_bits.set(v);
+                if node.owns(v) {
+                    node.q_local_next.push(v);
+                }
+            }
+        }
+    }
+
+    /// Phase 2: execute the synchronization schedule. Returns per-round
+    /// per-transfer payload byte sizes for the interconnect simulator.
+    fn phase2(&mut self, level: u32) -> Vec<Vec<u64>> {
+        let encoding = self.config.payload;
+        let nv = self.num_vertices;
+        let words = nv.div_ceil(64);
+        // Dense/sparse dispatch threshold (§Perf optimization 1): word-wise
+        // bitmap merge costs O(V/64) per transfer; entry-wise costs
+        // O(queue). Cross-over at queue ≈ V/16 entries (4 words of queue
+        // per bitmap word, measured on the microbench).
+        let dense_threshold = (nv / 16).max(64);
+        let mut payloads = Vec::with_capacity(self.schedule.rounds.len());
+        // `CopyFrontier` semantics: transfers in a round see round-start
+        // state. Queues are frozen by snapshotting *lengths* (they only
+        // grow); bitmaps by copying words into a flat scratch buffer.
+        let mut bit_snap: Vec<u64> = Vec::new();
+        for round in 0..self.schedule.rounds.len() {
+            let snap_len: Vec<usize> =
+                self.nodes.iter().map(|n| n.q_global.len()).collect();
+            let any_dense = snap_len.iter().any(|&l| l >= dense_threshold);
+            if any_dense {
+                bit_snap.clear();
+                bit_snap.reserve(words * self.nodes.len());
+                for n in &self.nodes {
+                    bit_snap.extend_from_slice(n.q_global_bits.words());
+                }
+            }
+            let transfers = std::mem::take(&mut self.schedule.rounds[round]);
+            let mut round_payloads = Vec::with_capacity(transfers.len());
+            for t in &transfers {
+                let src = t.src as usize;
+                let dst = t.dst as usize;
+                let take = snap_len[src];
+                round_payloads.push(encoding.bytes(take as u64, nv));
+                if take >= dense_threshold {
+                    // Dense path: 64-way duplicate rejection.
+                    let src_words = &bit_snap[src * words..(src + 1) * words];
+                    self.nodes[dst].merge_bits(src_words, level);
+                } else {
+                    // Sparse path: entry-wise merge of the frozen prefix.
+                    let (sender, receiver) = if src < dst {
+                        let (lo, hi) = self.nodes.split_at_mut(dst);
+                        (&lo[src], &mut hi[0])
+                    } else {
+                        let (lo, hi) = self.nodes.split_at_mut(src);
+                        (&hi[0] as &ComputeNode, &mut lo[dst])
+                    };
+                    for i in 0..take {
+                        let v = sender.q_global[i];
+                        receiver.discover(v, level);
+                    }
+                }
+            }
+            self.schedule.rounds[round] = transfers;
+            payloads.push(round_payloads);
+        }
+        payloads
+    }
+
+    /// Distance array after a run (node 0's view; `assert_agreement`
+    /// verifies all views coincide).
+    pub fn dist(&self) -> &[u32] {
+        &self.nodes[0].d_local
+    }
+
+    /// Check that every node ended with an identical distance array — the
+    /// correctness invariant of the synchronization pattern.
+    pub fn assert_agreement(&self) -> Result<(), String> {
+        let d0 = &self.nodes[0].d_local;
+        for n in &self.nodes[1..] {
+            if &n.d_local != d0 {
+                let bad = d0
+                    .iter()
+                    .zip(&n.d_local)
+                    .position(|(a, b)| a != b)
+                    .unwrap();
+                return Err(format!(
+                    "node {} disagrees with node 0 at vertex {bad}: {} vs {}",
+                    n.id, n.d_local[bad], d0[bad]
+                ));
+            }
+        }
+        Ok(())
+    }
+}
+
+fn expand_node(
+    node: &mut ComputeNode,
+    backend: &mut dyn ComputeBackend,
+    out: &mut ExpandOutput,
+    bottom_up: bool,
+) {
+    if bottom_up {
+        // The full-frontier bitmap is moved out so the backend can borrow
+        // it alongside the mutable visited bitmap.
+        let frontier_full = std::mem::replace(
+            &mut node.frontier_full,
+            crate::bfs::frontier::Bitmap::new(0),
+        );
+        backend.expand_bottom_up(&node.slab, &frontier_full, &mut node.visited, out);
+        node.frontier_full = frontier_full;
+    } else {
+        // The frontier is moved out so backend gets plain slices.
+        let frontier = std::mem::take(&mut node.q_local);
+        backend.expand(&node.slab, &frontier, &mut node.visited, out);
+        node.q_local = frontier; // restored for metrics/debug; cleared at swap
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::bfs::serial::serial_bfs;
+    use crate::coordinator::config::{PatternKind, PayloadEncoding};
+    use crate::graph::gen::kronecker::{kronecker, KroneckerParams};
+    use crate::graph::gen::structured::{grid2d, path, star};
+    use crate::graph::gen::urand::uniform_random;
+
+    fn check_against_serial(g: &Csr, cfg: EngineConfig, root: VertexId) {
+        let mut engine = ButterflyBfs::new(g, cfg);
+        let metrics = engine.run(root);
+        engine.assert_agreement().unwrap();
+        let want = serial_bfs(g, root);
+        assert_eq!(engine.dist(), &want[..], "distances match serial");
+        let reached = want.iter().filter(|&&d| d != INF).count() as u64;
+        assert_eq!(metrics.reached, reached);
+    }
+
+    #[test]
+    fn matches_serial_16_nodes_fanout1_and_4() {
+        let (g, _) = kronecker(KroneckerParams::graph500(11, 8), 31);
+        for fanout in [1, 4] {
+            check_against_serial(&g, EngineConfig::dgx2(16, fanout), 0);
+        }
+    }
+
+    #[test]
+    fn matches_serial_all_patterns() {
+        let (g, _) = uniform_random(900, 8, 77);
+        for pattern in [
+            PatternKind::Butterfly { fanout: 1 },
+            PatternKind::Butterfly { fanout: 2 },
+            PatternKind::Butterfly { fanout: 4 },
+            PatternKind::AllToAllConcurrent,
+            PatternKind::AllToAllIterative,
+        ] {
+            let cfg = EngineConfig {
+                pattern,
+                ..EngineConfig::dgx2(8, 1)
+            };
+            check_against_serial(&g, cfg, 13);
+        }
+    }
+
+    #[test]
+    fn matches_serial_non_power_of_two_nodes() {
+        let (g, _) = uniform_random(1100, 8, 5);
+        for nodes in [3, 5, 9, 13] {
+            check_against_serial(&g, EngineConfig::dgx2(nodes, 1), 1);
+            check_against_serial(&g, EngineConfig::dgx2(nodes, 4), 1);
+        }
+    }
+
+    #[test]
+    fn structured_graphs_all_roots() {
+        let graphs = vec![path(40), star(50), grid2d(6, 8)];
+        for g in &graphs {
+            for root in [0u32, (g.num_vertices() - 1) as u32] {
+                check_against_serial(g, EngineConfig::dgx2(4, 1), root);
+            }
+        }
+    }
+
+    #[test]
+    fn disconnected_graph_unreached_stay_inf() {
+        use crate::graph::builder::GraphBuilder;
+        let mut b = GraphBuilder::new(40);
+        for v in 1..20u32 {
+            b.add_edge(0, v);
+        }
+        b.add_edge(30, 31); // island
+        let (g, _) = b.build_undirected();
+        let mut engine = ButterflyBfs::new(&g, EngineConfig::dgx2(4, 2));
+        let m = engine.run(0);
+        assert_eq!(m.reached, 20);
+        assert_eq!(engine.dist()[30], INF);
+        engine.assert_agreement().unwrap();
+    }
+
+    #[test]
+    fn single_node_degenerates_to_local_bfs() {
+        let (g, _) = uniform_random(400, 8, 3);
+        let mut engine = ButterflyBfs::new(&g, EngineConfig::dgx2(1, 1));
+        let m = engine.run(0);
+        assert_eq!(engine.dist(), &serial_bfs(&g, 0)[..]);
+        assert_eq!(m.messages(), 0, "one node never communicates");
+    }
+
+    #[test]
+    fn parallel_phase1_matches_sequential() {
+        let (g, _) = kronecker(KroneckerParams::graph500(10, 8), 4);
+        let mut seq = ButterflyBfs::new(&g, EngineConfig::dgx2(8, 4));
+        let mut par = ButterflyBfs::new(
+            &g,
+            EngineConfig {
+                parallel_phase1: true,
+                ..EngineConfig::dgx2(8, 4)
+            },
+        );
+        let ms = seq.run(9);
+        let mp = par.run(9);
+        assert_eq!(seq.dist(), par.dist());
+        assert_eq!(ms.edges_examined(), mp.edges_examined());
+    }
+
+    #[test]
+    fn metrics_level_structure() {
+        let g = path(12);
+        let mut engine = ButterflyBfs::new(&g, EngineConfig::dgx2(2, 1));
+        let m = engine.run(0);
+        // Path of 12 vertices from one end: 11 expansion levels with
+        // nonempty frontiers.
+        assert_eq!(m.depth(), 12);
+        assert!(m.levels.iter().all(|l| l.frontier >= 1));
+        // Graph500 vs honest GTEPS both finite.
+        assert!(m.sim_gteps() > 0.0);
+        assert!(m.sim_seconds() > 0.0);
+    }
+
+    #[test]
+    fn message_count_per_level_matches_schedule() {
+        let (g, _) = uniform_random(600, 8, 8);
+        let mut engine = ButterflyBfs::new(&g, EngineConfig::dgx2(16, 1));
+        let sched_msgs = engine.schedule().total_messages();
+        let m = engine.run(0);
+        for l in &m.levels {
+            assert_eq!(l.messages, sched_msgs, "level {}", l.level);
+        }
+    }
+
+    #[test]
+    fn bitmap_payload_is_level_invariant() {
+        let (g, _) = uniform_random(640, 8, 2);
+        let cfg = EngineConfig {
+            payload: PayloadEncoding::Bitmap,
+            ..EngineConfig::dgx2(4, 1)
+        };
+        let mut engine = ButterflyBfs::new(&g, cfg);
+        let m = engine.run(0);
+        // Bitmap encoding: every level ships the same number of bytes —
+        // the paper's tight bound (contribution 4).
+        let per_level: Vec<u64> = m.levels.iter().map(|l| l.bytes).collect();
+        assert!(per_level.windows(2).all(|w| w[0] == w[1]), "{per_level:?}");
+    }
+
+    #[test]
+    fn rerunning_engine_is_reusable() {
+        let (g, _) = uniform_random(500, 8, 6);
+        let mut engine = ButterflyBfs::new(&g, EngineConfig::dgx2(4, 4));
+        let d1 = {
+            engine.run(3);
+            engine.dist().to_vec()
+        };
+        engine.run(10);
+        let want = serial_bfs(&g, 10);
+        assert_eq!(engine.dist(), &want[..]);
+        assert_ne!(d1, want, "different roots differ");
+    }
+
+    #[test]
+    fn bottom_up_mode_matches_serial() {
+        use crate::coordinator::config::DirectionMode;
+        let (g, _) = uniform_random(800, 8, 12);
+        let cfg = EngineConfig {
+            direction: DirectionMode::BottomUp,
+            ..EngineConfig::dgx2(8, 4)
+        };
+        let mut engine = ButterflyBfs::new(&g, cfg);
+        engine.run(0);
+        engine.assert_agreement().unwrap();
+        assert_eq!(engine.dist(), &serial_bfs(&g, 0)[..]);
+    }
+
+    #[test]
+    fn diropt_mode_matches_serial_and_saves_edges() {
+        use crate::coordinator::config::DirectionMode;
+        let (g, _) = uniform_random(4000, 16, 6);
+        let mut td = ButterflyBfs::new(&g, EngineConfig::dgx2(8, 4));
+        let cfg = EngineConfig {
+            direction: DirectionMode::diropt(),
+            ..EngineConfig::dgx2(8, 4)
+        };
+        let mut dopt = ButterflyBfs::new(&g, cfg);
+        let mtd = td.run(0);
+        let mdo = dopt.run(0);
+        dopt.assert_agreement().unwrap();
+        assert_eq!(dopt.dist(), td.dist());
+        assert_eq!(dopt.dist(), &serial_bfs(&g, 0)[..]);
+        // Small-world graph: DO must examine fewer edges (the paper's
+        // "promising optimization").
+        assert!(
+            mdo.edges_examined() < mtd.edges_examined(),
+            "DO {} vs TD {}",
+            mdo.edges_examined(),
+            mtd.edges_examined()
+        );
+    }
+
+    #[test]
+    fn diropt_mode_many_node_counts() {
+        use crate::coordinator::config::DirectionMode;
+        let (g, _) = kronecker(KroneckerParams::graph500(11, 8), 5);
+        for nodes in [1usize, 3, 9, 16] {
+            let cfg = EngineConfig {
+                direction: DirectionMode::diropt(),
+                ..EngineConfig::dgx2(nodes, 1)
+            };
+            let mut engine = ButterflyBfs::new(&g, cfg);
+            engine.run(2);
+            engine.assert_agreement().unwrap();
+            assert_eq!(engine.dist(), &serial_bfs(&g, 2)[..], "nodes={nodes}");
+        }
+    }
+
+    #[test]
+    fn property_distributed_equals_serial() {
+        use crate::util::propcheck::{forall, gen, Config};
+        forall(Config::cases(25), "butterfly bfs == serial bfs", |rng| {
+            let n = gen::usize_in(rng, 10, 500);
+            let ef = gen::usize_in(rng, 1, 8) as u32;
+            let nodes = gen::usize_in(rng, 1, 10.min(n));
+            let fanout = gen::usize_in(rng, 1, 5) as u32;
+            let (g, _) = uniform_random(n, ef, rng.next_u64());
+            let root = rng.next_usize(n) as u32;
+            let mut engine = ButterflyBfs::new(&g, EngineConfig::dgx2(nodes, fanout));
+            engine.run(root);
+            let ok = engine.assert_agreement().is_ok()
+                && engine.dist() == &serial_bfs(&g, root)[..];
+            (ok, format!("n={n} ef={ef} nodes={nodes} f={fanout} root={root}"))
+        });
+    }
+}

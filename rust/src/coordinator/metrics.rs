@@ -1,0 +1,193 @@
+//! Per-level and per-run metrics for the distributed engine: everything
+//! the paper's evaluation reports (times, GTEPS, message/byte counts,
+//! per-phase split) plus the simulated-device timeline (DESIGN.md §2).
+
+use crate::net::sim::CommTiming;
+use crate::util::json::Json;
+use crate::util::stats::gteps;
+
+/// Metrics of one BFS level.
+#[derive(Clone, Debug, Default)]
+pub struct LevelMetrics {
+    /// Level index.
+    pub level: u32,
+    /// Total active (owned) frontier vertices entering the level.
+    pub frontier: u64,
+    /// Edges examined across all nodes in Phase 1.
+    pub edges_examined: u64,
+    /// Max edges examined by any single node (load-balance signal).
+    pub max_node_edges: u64,
+    /// New vertices discovered (deduped, global).
+    pub discovered: u64,
+    /// Butterfly/all-to-all messages this level.
+    pub messages: u64,
+    /// Bytes shipped this level.
+    pub bytes: u64,
+    /// Simulated Phase-1 compute time (slowest node).
+    pub sim_compute: f64,
+    /// Simulated Phase-2 communication time.
+    pub sim_comm: f64,
+}
+
+/// Metrics of a full traversal.
+#[derive(Clone, Debug, Default)]
+pub struct RunMetrics {
+    /// Per-level breakdown.
+    pub levels: Vec<LevelMetrics>,
+    /// Measured wallclock of the whole traversal (this process).
+    pub wall_seconds: f64,
+    /// Number of vertices reached.
+    pub reached: u64,
+    /// |E| of the input graph (for the Graph500 TEPS convention).
+    pub graph_edges: u64,
+}
+
+impl RunMetrics {
+    /// Simulated end-to-end device time: Σ levels (compute + comm).
+    pub fn sim_seconds(&self) -> f64 {
+        self.levels.iter().map(|l| l.sim_compute + l.sim_comm).sum()
+    }
+
+    /// Simulated communication share of total time — the paper contrasts
+    /// its small share against Gluon's ~70 % (§2 Multi-GPU BFS).
+    pub fn sim_comm_fraction(&self) -> f64 {
+        let total = self.sim_seconds();
+        if total == 0.0 {
+            return 0.0;
+        }
+        self.levels.iter().map(|l| l.sim_comm).sum::<f64>() / total
+    }
+
+    /// Total edges examined.
+    pub fn edges_examined(&self) -> u64 {
+        self.levels.iter().map(|l| l.edges_examined).sum()
+    }
+
+    /// Total messages.
+    pub fn messages(&self) -> u64 {
+        self.levels.iter().map(|l| l.messages).sum()
+    }
+
+    /// Total bytes shipped.
+    pub fn bytes(&self) -> u64 {
+        self.levels.iter().map(|l| l.bytes).sum()
+    }
+
+    /// Graph500-convention GTEPS on the simulated clock (|E| / time — the
+    /// convention the paper reports and critiques in §2).
+    pub fn sim_gteps(&self) -> f64 {
+        gteps(self.graph_edges, self.sim_seconds())
+    }
+
+    /// Honest GTEPS: actually-examined edges / simulated time.
+    pub fn sim_honest_gteps(&self) -> f64 {
+        gteps(self.edges_examined(), self.sim_seconds())
+    }
+
+    /// Number of BFS levels.
+    pub fn depth(&self) -> usize {
+        self.levels.len()
+    }
+
+    /// Record one level from raw phase outputs.
+    pub fn push_level(
+        &mut self,
+        level: u32,
+        frontier: u64,
+        edges_examined: u64,
+        max_node_edges: u64,
+        discovered: u64,
+        comm: &CommTiming,
+        sim_compute: f64,
+    ) {
+        self.levels.push(LevelMetrics {
+            level,
+            frontier,
+            edges_examined,
+            max_node_edges,
+            discovered,
+            messages: comm.total_messages,
+            bytes: comm.total_bytes,
+            sim_compute,
+            sim_comm: comm.total(),
+        });
+    }
+
+    /// JSON dump for the machine-readable bench logs.
+    pub fn to_json(&self) -> Json {
+        Json::obj(vec![
+            ("wall_seconds", Json::n(self.wall_seconds)),
+            ("sim_seconds", Json::n(self.sim_seconds())),
+            ("sim_gteps", Json::n(self.sim_gteps())),
+            ("sim_comm_fraction", Json::n(self.sim_comm_fraction())),
+            ("reached", Json::u(self.reached)),
+            ("depth", Json::u(self.depth() as u64)),
+            ("edges_examined", Json::u(self.edges_examined())),
+            ("messages", Json::u(self.messages())),
+            ("bytes", Json::u(self.bytes())),
+            (
+                "levels",
+                Json::Arr(
+                    self.levels
+                        .iter()
+                        .map(|l| {
+                            Json::obj(vec![
+                                ("level", Json::u(l.level as u64)),
+                                ("frontier", Json::u(l.frontier)),
+                                ("edges", Json::u(l.edges_examined)),
+                                ("discovered", Json::u(l.discovered)),
+                                ("messages", Json::u(l.messages)),
+                                ("bytes", Json::u(l.bytes)),
+                                ("sim_compute", Json::n(l.sim_compute)),
+                                ("sim_comm", Json::n(l.sim_comm)),
+                            ])
+                        })
+                        .collect(),
+                ),
+            ),
+        ])
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn timing(msgs: u64, bytes: u64, secs: f64) -> CommTiming {
+        CommTiming {
+            round_times: vec![secs],
+            total_bytes: bytes,
+            total_messages: msgs,
+        }
+    }
+
+    #[test]
+    fn aggregation() {
+        let mut m = RunMetrics { graph_edges: 1000, ..Default::default() };
+        m.push_level(0, 1, 100, 60, 5, &timing(4, 400, 0.001), 0.002);
+        m.push_level(1, 5, 900, 500, 20, &timing(4, 800, 0.003), 0.004);
+        assert_eq!(m.depth(), 2);
+        assert_eq!(m.edges_examined(), 1000);
+        assert_eq!(m.messages(), 8);
+        assert_eq!(m.bytes(), 1200);
+        assert!((m.sim_seconds() - 0.010).abs() < 1e-12);
+        assert!((m.sim_comm_fraction() - 0.4).abs() < 1e-9);
+    }
+
+    #[test]
+    fn gteps_conventions_differ() {
+        let mut m = RunMetrics { graph_edges: 2000, ..Default::default() };
+        m.push_level(0, 1, 500, 500, 5, &timing(0, 0, 0.0), 1.0);
+        // Graph500 convention uses |E| = 2000, honest uses 500.
+        assert!(m.sim_gteps() > m.sim_honest_gteps());
+    }
+
+    #[test]
+    fn json_renders() {
+        let mut m = RunMetrics { graph_edges: 10, ..Default::default() };
+        m.push_level(0, 1, 2, 2, 1, &timing(1, 8, 0.5), 0.5);
+        let s = m.to_json().render();
+        assert!(s.contains("\"sim_seconds\":1"));
+        assert!(s.contains("\"levels\":[{"));
+    }
+}

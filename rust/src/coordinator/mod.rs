@@ -1,0 +1,15 @@
+//! The L3 coordinator: simulated compute nodes, the distributed ButterFly
+//! BFS engine (Alg. 2), pluggable Phase-1 backends, configuration, and
+//! metrics.
+
+pub mod backend;
+pub mod config;
+pub mod engine;
+pub mod metrics;
+pub mod node;
+
+pub use backend::{ComputeBackend, ExpandOutput, NativeCsr};
+pub use config::{DirectionMode, EngineConfig, PatternKind, PayloadEncoding};
+pub use engine::ButterflyBfs;
+pub use metrics::{LevelMetrics, RunMetrics};
+pub use node::ComputeNode;

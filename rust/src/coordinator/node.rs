@@ -1,0 +1,234 @@
+//! The simulated compute node: one GPU's worth of state (Alg. 2's
+//! per-`CN` variables), owning only its own memory.
+//!
+//! Per the paper each node holds: its adjacency slab (1D partition), a
+//! **full-size local distance array** `d_local` ("All CN set their d"), a
+//! **local queue** (owned frontier vertices — next level's work), and a
+//! **global queue** (every vertex this node discovered or relayed this
+//! level — the butterfly payload). The receive buffer is preallocated at
+//! the `O(f·V)` bound (contribution 4): no allocation happens on the
+//! traversal path after construction.
+
+use crate::bfs::frontier::Bitmap;
+use crate::bfs::serial::INF;
+use crate::graph::csr::{CsrSlab, VertexId};
+
+/// One simulated device.
+#[derive(Clone, Debug)]
+pub struct ComputeNode {
+    /// Node id (0-based rank).
+    pub id: u32,
+    /// The adjacency rows this node owns (global column ids).
+    pub slab: CsrSlab,
+    /// This node's view of every vertex's distance.
+    pub d_local: Vec<u32>,
+    /// Bitmap shadow of `d_local != INF` for O(1) membership tests.
+    pub visited: Bitmap,
+    /// Owned vertices active in the *current* level.
+    pub q_local: Vec<VertexId>,
+    /// Owned vertices discovered for the *next* level.
+    pub q_local_next: Vec<VertexId>,
+    /// All vertices this node learned this level (phase-1 discoveries plus
+    /// butterfly-relayed) — the accumulated knowledge shipped onward.
+    pub q_global: Vec<VertexId>,
+    /// Bitmap shadow of `q_global` (maintained in lockstep) — the dense
+    /// transfer representation: receivers merge it word-wise, skipping
+    /// already-known vertices 64 at a time (§Perf optimization 1).
+    pub q_global_bits: Bitmap,
+    /// The complete *current* frontier as a bitmap — every node holds it
+    /// after the previous level's butterfly exchange; this is what the
+    /// bottom-up step scans against (paper contribution 3).
+    pub frontier_full: Bitmap,
+    /// Edges examined by this node in the current level (metrics).
+    pub edges_this_level: u64,
+}
+
+impl ComputeNode {
+    /// Construct a node with preallocated buffers.
+    ///
+    /// `fanout_bound` is the pattern's max receives per round; the global
+    /// queue gets `O(V)` capacity and the node never reallocates during
+    /// traversal (asserted in debug builds).
+    pub fn new(id: u32, slab: CsrSlab, num_vertices: usize) -> Self {
+        Self {
+            id,
+            slab,
+            d_local: vec![INF; num_vertices],
+            visited: Bitmap::new(num_vertices),
+            // Preallocation (contribution 4): a frontier can never exceed
+            // V vertices, so V-capacity buffers are the tight bound.
+            q_local: Vec::with_capacity(1024),
+            q_local_next: Vec::with_capacity(1024),
+            q_global: Vec::with_capacity(1024),
+            q_global_bits: Bitmap::new(num_vertices),
+            frontier_full: Bitmap::new(num_vertices),
+            edges_this_level: 0,
+        }
+    }
+
+    /// True when this node owns global vertex `v`.
+    #[inline]
+    pub fn owns(&self, v: VertexId) -> bool {
+        self.slab.owns(v)
+    }
+
+    /// Initialize for a traversal from `root` (Alg. 2 prologue): every
+    /// node sets `d[root] = 0`; only the owner enqueues it locally.
+    pub fn init_root(&mut self, root: VertexId) {
+        self.reset();
+        self.d_local[root as usize] = 0;
+        self.visited.set(root);
+        self.frontier_full.set(root);
+        if self.owns(root) {
+            self.q_local.push(root);
+        }
+    }
+
+    /// Clear all traversal state (keeps allocations).
+    pub fn reset(&mut self) {
+        self.d_local.iter_mut().for_each(|d| *d = INF);
+        self.visited.reset();
+        self.frontier_full.reset();
+        self.q_local.clear();
+        self.q_local_next.clear();
+        self.q_global.clear();
+        self.q_global_bits.reset();
+        self.edges_this_level = 0;
+    }
+
+    /// Record the discovery of `v` at `level + 1` if it is new to this
+    /// node; routes it to the global queue and, when owned, the next local
+    /// queue. Returns true when newly discovered. This is the shared inner
+    /// step of Phase 1 (from edge expansion) and Phase 2 (from received
+    /// frontiers) in Alg. 2.
+    #[inline]
+    pub fn discover(&mut self, v: VertexId, level: u32) -> bool {
+        if !self.visited.test_and_set(v) {
+            return false;
+        }
+        self.d_local[v as usize] = level + 1;
+        self.q_global.push(v);
+        self.q_global_bits.set(v);
+        if self.owns(v) {
+            self.q_local_next.push(v);
+        }
+        true
+    }
+
+    /// Word-wise merge of a sender's global-queue bitmap snapshot:
+    /// duplicates are rejected 64 vertices per AND-NOT; only genuinely new
+    /// vertices take the per-vertex path. Returns the number discovered.
+    pub fn merge_bits(&mut self, src_words: &[u64], level: u32) -> u64 {
+        debug_assert_eq!(src_words.len(), self.visited.words().len());
+        let mut discovered = 0;
+        for (wi, &sw) in src_words.iter().enumerate() {
+            let mut new = sw & !self.visited.words()[wi];
+            while new != 0 {
+                let b = new.trailing_zeros();
+                new &= new - 1;
+                let v = (wi as u32) * 64 + b;
+                discovered += u64::from(self.discover(v, level));
+            }
+        }
+        discovered
+    }
+
+    /// End-of-level bookkeeping (Alg. 2's `SwapQueues`): the next local
+    /// queue becomes current; the post-sync global queue — the complete
+    /// set of this level's discoveries — becomes the next full-frontier
+    /// bitmap; the global queue then empties for the next level.
+    pub fn swap_queues(&mut self) -> u64 {
+        std::mem::swap(&mut self.q_local, &mut self.q_local_next);
+        self.q_local_next.clear();
+        // The post-sync global-queue bitmap IS the next full frontier.
+        std::mem::swap(&mut self.frontier_full, &mut self.q_global_bits);
+        self.q_global_bits.reset();
+        self.q_global.clear();
+        let edges = self.edges_this_level;
+        self.edges_this_level = 0;
+        edges
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::graph::gen::structured::path;
+    use crate::partition::one_d::partition_1d;
+
+    fn two_nodes() -> Vec<ComputeNode> {
+        let g = path(10);
+        let part = partition_1d(&g, 2);
+        part.slabs(&g)
+            .into_iter()
+            .enumerate()
+            .map(|(i, s)| ComputeNode::new(i as u32, s, 10))
+            .collect()
+    }
+
+    #[test]
+    fn init_root_only_owner_enqueues() {
+        let mut nodes = two_nodes();
+        for n in &mut nodes {
+            n.init_root(2);
+        }
+        assert_eq!(nodes[0].q_local, vec![2]);
+        assert!(nodes[1].q_local.is_empty());
+        // Both set d[root] = 0 (the paper: "All CN set their d").
+        assert_eq!(nodes[0].d_local[2], 0);
+        assert_eq!(nodes[1].d_local[2], 0);
+    }
+
+    #[test]
+    fn discover_routes_to_queues() {
+        let mut nodes = two_nodes();
+        nodes[0].init_root(0);
+        // Node 0 discovers an owned vertex and a foreign vertex.
+        assert!(nodes[0].discover(1, 0)); // owned by node 0
+        assert!(nodes[0].discover(9, 0)); // owned by node 1
+        assert_eq!(nodes[0].q_global, vec![1, 9]);
+        assert_eq!(nodes[0].q_local_next, vec![1]);
+        assert_eq!(nodes[0].d_local[9], 1);
+    }
+
+    #[test]
+    fn discover_dedups() {
+        let mut nodes = two_nodes();
+        nodes[0].init_root(0);
+        assert!(nodes[0].discover(5, 0));
+        assert!(!nodes[0].discover(5, 0), "second discovery is a no-op");
+        assert_eq!(nodes[0].q_global, vec![5]);
+    }
+
+    #[test]
+    fn discover_ignores_already_visited_root() {
+        let mut nodes = two_nodes();
+        nodes[0].init_root(0);
+        assert!(!nodes[0].discover(0, 0));
+    }
+
+    #[test]
+    fn swap_queues_rotates_state() {
+        let mut nodes = two_nodes();
+        nodes[0].init_root(0);
+        nodes[0].discover(1, 0);
+        nodes[0].edges_this_level = 42;
+        let edges = nodes[0].swap_queues();
+        assert_eq!(edges, 42);
+        assert_eq!(nodes[0].q_local, vec![1]);
+        assert!(nodes[0].q_global.is_empty());
+        assert!(nodes[0].q_local_next.is_empty());
+        assert_eq!(nodes[0].edges_this_level, 0);
+    }
+
+    #[test]
+    fn reset_restores_fresh_state() {
+        let mut nodes = two_nodes();
+        nodes[0].init_root(0);
+        nodes[0].discover(3, 0);
+        nodes[0].reset();
+        assert!(nodes[0].d_local.iter().all(|&d| d == INF));
+        assert!(nodes[0].q_local.is_empty());
+        assert!(nodes[0].visited.is_empty());
+    }
+}

@@ -1,0 +1,180 @@
+//! Graph ETL: the paper's input pipeline (§4 Inputs).
+//!
+//! "All directed graphs get converted into undirected graphs … all
+//! duplicate edges and self-edges get removed." This module is that
+//! pipeline: collect raw arcs → drop self-loops → symmetrize → sort →
+//! dedup → CSR.
+
+use super::csr::{Csr, VertexId};
+
+/// Accumulates raw (possibly dirty) arcs and produces clean CSR graphs.
+#[derive(Clone, Debug, Default)]
+pub struct GraphBuilder {
+    n: usize,
+    arcs: Vec<(VertexId, VertexId)>,
+}
+
+/// Summary of what the ETL removed/added; the paper reports |E| before and
+/// |Ê| after cleaning.
+#[derive(Clone, Copy, Debug, Default, PartialEq, Eq)]
+pub struct EtlStats {
+    /// Arcs given to the builder.
+    pub raw_arcs: u64,
+    /// Self-loops dropped.
+    pub self_loops: u64,
+    /// Duplicate arcs dropped (after symmetrization).
+    pub duplicates: u64,
+    /// Arcs in the final symmetric CSR (2× undirected edge count).
+    pub final_arcs: u64,
+}
+
+impl GraphBuilder {
+    /// Builder over `n` vertices.
+    pub fn new(n: usize) -> Self {
+        Self { n, arcs: Vec::new() }
+    }
+
+    /// Number of vertices.
+    pub fn num_vertices(&self) -> usize {
+        self.n
+    }
+
+    /// Add one directed arc.
+    pub fn add_edge(&mut self, u: VertexId, v: VertexId) {
+        debug_assert!((u as usize) < self.n && (v as usize) < self.n);
+        self.arcs.push((u, v));
+    }
+
+    /// Add many directed arcs.
+    pub fn add_edges(&mut self, es: &[(VertexId, VertexId)]) {
+        self.arcs.extend_from_slice(es);
+    }
+
+    /// Reserve capacity for `m` additional arcs.
+    pub fn reserve(&mut self, m: usize) {
+        self.arcs.reserve(m);
+    }
+
+    /// Run the paper's ETL: drop self-loops, symmetrize, dedup, build CSR.
+    pub fn build_undirected(self) -> (Csr, EtlStats) {
+        let mut stats = EtlStats {
+            raw_arcs: self.arcs.len() as u64,
+            ..Default::default()
+        };
+        // Symmetrize: emit both directions, dropping self-loops.
+        let mut arcs = Vec::with_capacity(self.arcs.len() * 2);
+        for (u, v) in self.arcs {
+            if u == v {
+                stats.self_loops += 1;
+                continue;
+            }
+            arcs.push((u, v));
+            arcs.push((v, u));
+        }
+        // Sort + dedup.
+        arcs.sort_unstable();
+        let before = arcs.len() as u64;
+        arcs.dedup();
+        stats.duplicates = before - arcs.len() as u64;
+        stats.final_arcs = arcs.len() as u64;
+        (Csr::from_edges(self.n, &arcs), stats)
+    }
+
+    /// Build a *directed* CSR (dedup + self-loop removal only); used by
+    /// tests that need asymmetric inputs.
+    pub fn build_directed(self) -> (Csr, EtlStats) {
+        let mut stats = EtlStats {
+            raw_arcs: self.arcs.len() as u64,
+            ..Default::default()
+        };
+        let mut arcs: Vec<_> = self
+            .arcs
+            .into_iter()
+            .filter(|&(u, v)| {
+                if u == v {
+                    stats.self_loops += 1;
+                    false
+                } else {
+                    true
+                }
+            })
+            .collect();
+        arcs.sort_unstable();
+        let before = arcs.len() as u64;
+        arcs.dedup();
+        stats.duplicates = before - arcs.len() as u64;
+        stats.final_arcs = arcs.len() as u64;
+        (Csr::from_edges(self.n, &arcs), stats)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn symmetrizes() {
+        let mut b = GraphBuilder::new(3);
+        b.add_edge(0, 1);
+        b.add_edge(1, 2);
+        let (g, stats) = b.build_undirected();
+        assert!(g.has_edge(1, 0), "reverse arc added");
+        assert!(g.has_edge(2, 1));
+        assert_eq!(g.num_edges(), 4);
+        assert_eq!(stats.final_arcs, 4);
+        assert_eq!(stats.self_loops, 0);
+    }
+
+    #[test]
+    fn drops_self_loops() {
+        let mut b = GraphBuilder::new(3);
+        b.add_edges(&[(0, 0), (1, 1), (0, 1)]);
+        let (g, stats) = b.build_undirected();
+        assert_eq!(stats.self_loops, 2);
+        assert_eq!(g.num_edges(), 2);
+        assert!(!g.has_edge(0, 0));
+    }
+
+    #[test]
+    fn drops_duplicates_including_mirrored() {
+        let mut b = GraphBuilder::new(3);
+        // (0,1) three times plus its mirror once: all collapse to one
+        // undirected edge = two arcs.
+        b.add_edges(&[(0, 1), (0, 1), (0, 1), (1, 0)]);
+        let (g, stats) = b.build_undirected();
+        assert_eq!(g.num_edges(), 2);
+        assert_eq!(stats.duplicates, 8 - 2);
+    }
+
+    #[test]
+    fn directed_build_keeps_asymmetry() {
+        let mut b = GraphBuilder::new(3);
+        b.add_edges(&[(0, 1), (0, 1), (2, 2)]);
+        let (g, stats) = b.build_directed();
+        assert!(g.has_edge(0, 1));
+        assert!(!g.has_edge(1, 0));
+        assert_eq!(stats.self_loops, 1);
+        assert_eq!(stats.duplicates, 1);
+        assert_eq!(g.num_edges(), 1);
+    }
+
+    #[test]
+    fn etl_stats_consistency_property() {
+        use crate::util::propcheck::{forall, gen, Config};
+        forall(Config::cases(50), "raw = final/2 + dropped (undirected)", |rng| {
+            let n = gen::usize_in(rng, 1, 40);
+            let m = gen::usize_in(rng, 0, 200);
+            let es = gen::edge_list(rng, n, m);
+            let mut b = GraphBuilder::new(n);
+            b.add_edges(&es);
+            let (g, s) = b.build_undirected();
+            // Every surviving arc pairs with its mirror.
+            let symmetric = (0..n as u32).all(|u| {
+                g.neighbors(u).iter().all(|&v| g.has_edge(v, u))
+            });
+            let accounting =
+                s.raw_arcs == m as u64 && s.final_arcs == g.num_edges();
+            (symmetric && accounting, format!("n={n} m={m}"))
+        });
+    }
+}

@@ -1,0 +1,279 @@
+//! Compressed Sparse Row graph storage.
+//!
+//! Vertex ids are `u32` (the paper's graphs stay under 2³² vertices; 32-bit
+//! ids halve memory traffic on the traversal hot path — see DESIGN.md §8).
+//! Offsets are `u64` so edge counts can exceed 4 B.
+
+/// A vertex identifier.
+pub type VertexId = u32;
+
+/// An immutable CSR graph (directed adjacency; undirected graphs store both
+/// arcs, as the paper's ETL does after symmetrization).
+#[derive(Clone, Debug, PartialEq)]
+pub struct Csr {
+    /// `offsets[v]..offsets[v+1]` indexes `edges` with `v`'s out-neighbors.
+    offsets: Vec<u64>,
+    /// Flattened adjacency arrays, sorted within each vertex.
+    edges: Vec<VertexId>,
+}
+
+impl Csr {
+    /// Build from raw parts. `offsets` must be monotone, start at 0, have
+    /// length `n+1`, and end at `edges.len()`.
+    pub fn from_parts(offsets: Vec<u64>, edges: Vec<VertexId>) -> Self {
+        assert!(!offsets.is_empty(), "offsets must have length n+1 >= 1");
+        assert_eq!(offsets[0], 0, "offsets[0] must be 0");
+        assert_eq!(
+            *offsets.last().unwrap(),
+            edges.len() as u64,
+            "offsets must end at edges.len()"
+        );
+        debug_assert!(offsets.windows(2).all(|w| w[0] <= w[1]), "offsets monotone");
+        Self { offsets, edges }
+    }
+
+    /// Build a CSR from an (already clean) edge list: counting sort by
+    /// source. Does **not** dedup or symmetrize — that is
+    /// [`crate::graph::builder::GraphBuilder`]'s job.
+    pub fn from_edges(n: usize, edge_list: &[(VertexId, VertexId)]) -> Self {
+        let mut counts = vec![0u64; n + 1];
+        for &(u, _) in edge_list {
+            assert!((u as usize) < n, "source {u} out of range (n={n})");
+            counts[u as usize + 1] += 1;
+        }
+        for i in 0..n {
+            counts[i + 1] += counts[i];
+        }
+        let offsets = counts.clone();
+        let mut cursor = counts;
+        let mut edges = vec![0 as VertexId; edge_list.len()];
+        for &(u, v) in edge_list {
+            assert!((v as usize) < n, "target {v} out of range (n={n})");
+            let slot = cursor[u as usize];
+            edges[slot as usize] = v;
+            cursor[u as usize] += 1;
+        }
+        // Sort each adjacency run for deterministic traversal order and
+        // binary-searchable neighbor lookups.
+        for v in 0..n {
+            let (s, e) = (offsets[v] as usize, offsets[v + 1] as usize);
+            edges[s..e].sort_unstable();
+        }
+        Self { offsets, edges }
+    }
+
+    /// Number of vertices.
+    #[inline]
+    pub fn num_vertices(&self) -> usize {
+        self.offsets.len() - 1
+    }
+
+    /// Number of stored arcs (2× the undirected edge count after
+    /// symmetrization).
+    #[inline]
+    pub fn num_edges(&self) -> u64 {
+        *self.offsets.last().unwrap()
+    }
+
+    /// Out-degree of `v`.
+    #[inline]
+    pub fn degree(&self, v: VertexId) -> u32 {
+        (self.offsets[v as usize + 1] - self.offsets[v as usize]) as u32
+    }
+
+    /// Out-neighbors of `v` (sorted).
+    #[inline]
+    pub fn neighbors(&self, v: VertexId) -> &[VertexId] {
+        let s = self.offsets[v as usize] as usize;
+        let e = self.offsets[v as usize + 1] as usize;
+        &self.edges[s..e]
+    }
+
+    /// True when arc `(u, v)` is present (binary search).
+    pub fn has_edge(&self, u: VertexId, v: VertexId) -> bool {
+        self.neighbors(u).binary_search(&v).is_ok()
+    }
+
+    /// Raw offsets (length `n+1`).
+    #[inline]
+    pub fn offsets(&self) -> &[u64] {
+        &self.offsets
+    }
+
+    /// Raw flattened edge array.
+    #[inline]
+    pub fn edges(&self) -> &[VertexId] {
+        &self.edges
+    }
+
+    /// Maximum out-degree.
+    pub fn max_degree(&self) -> u32 {
+        (0..self.num_vertices() as VertexId)
+            .map(|v| self.degree(v))
+            .max()
+            .unwrap_or(0)
+    }
+
+    /// Extract the subgraph rows for vertices `[lo, hi)` — the adjacency
+    /// "slab" a compute node owns under 1D partitioning. Column ids stay
+    /// global.
+    pub fn row_slice(&self, lo: VertexId, hi: VertexId) -> CsrSlab {
+        assert!(lo <= hi && (hi as usize) <= self.num_vertices());
+        let s = self.offsets[lo as usize];
+        let e = self.offsets[hi as usize];
+        let offsets: Vec<u64> = self.offsets[lo as usize..=hi as usize]
+            .iter()
+            .map(|o| o - s)
+            .collect();
+        CsrSlab {
+            first_vertex: lo,
+            offsets,
+            edges: self.edges[s as usize..e as usize].to_vec(),
+        }
+    }
+
+    /// Memory footprint in bytes (offsets + edges).
+    pub fn bytes(&self) -> u64 {
+        (self.offsets.len() * std::mem::size_of::<u64>()
+            + self.edges.len() * std::mem::size_of::<VertexId>()) as u64
+    }
+}
+
+/// A contiguous row-range of a CSR: the per-compute-node partition slab.
+/// Rows are local (`0..num_rows`), columns remain global vertex ids —
+/// exactly the paper's 1D layout where any node can *discover* any vertex
+/// but owns only its own row range.
+#[derive(Clone, Debug, PartialEq)]
+pub struct CsrSlab {
+    /// Global id of local row 0.
+    pub first_vertex: VertexId,
+    /// Local offsets, length `num_rows + 1`.
+    pub offsets: Vec<u64>,
+    /// Flattened adjacency (global column ids).
+    pub edges: Vec<VertexId>,
+}
+
+impl CsrSlab {
+    /// Number of owned rows.
+    #[inline]
+    pub fn num_rows(&self) -> usize {
+        self.offsets.len() - 1
+    }
+
+    /// Number of stored arcs.
+    #[inline]
+    pub fn num_edges(&self) -> u64 {
+        *self.offsets.last().unwrap()
+    }
+
+    /// One past the last owned global vertex id.
+    #[inline]
+    pub fn end_vertex(&self) -> VertexId {
+        self.first_vertex + self.num_rows() as VertexId
+    }
+
+    /// True when this slab owns global vertex `v`.
+    #[inline]
+    pub fn owns(&self, v: VertexId) -> bool {
+        v >= self.first_vertex && v < self.end_vertex()
+    }
+
+    /// Neighbors of *global* vertex `v` (must be owned).
+    #[inline]
+    pub fn neighbors_global(&self, v: VertexId) -> &[VertexId] {
+        debug_assert!(self.owns(v));
+        let r = (v - self.first_vertex) as usize;
+        let s = self.offsets[r] as usize;
+        let e = self.offsets[r + 1] as usize;
+        &self.edges[s..e]
+    }
+
+    /// Out-degree of *global* vertex `v` (must be owned).
+    #[inline]
+    pub fn degree_global(&self, v: VertexId) -> u32 {
+        debug_assert!(self.owns(v));
+        let r = (v - self.first_vertex) as usize;
+        (self.offsets[r + 1] - self.offsets[r]) as u32
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn diamond() -> Csr {
+        // 0-1, 0-2, 1-3, 2-3 undirected (both arcs stored)
+        Csr::from_edges(
+            4,
+            &[(0, 1), (1, 0), (0, 2), (2, 0), (1, 3), (3, 1), (2, 3), (3, 2)],
+        )
+    }
+
+    #[test]
+    fn from_edges_basic() {
+        let g = diamond();
+        assert_eq!(g.num_vertices(), 4);
+        assert_eq!(g.num_edges(), 8);
+        assert_eq!(g.neighbors(0), &[1, 2]);
+        assert_eq!(g.neighbors(3), &[1, 2]);
+        assert_eq!(g.degree(1), 2);
+        assert_eq!(g.max_degree(), 2);
+    }
+
+    #[test]
+    fn neighbors_sorted_even_if_input_unsorted() {
+        let g = Csr::from_edges(3, &[(0, 2), (0, 1)]);
+        assert_eq!(g.neighbors(0), &[1, 2]);
+    }
+
+    #[test]
+    fn has_edge() {
+        let g = diamond();
+        assert!(g.has_edge(0, 1));
+        assert!(!g.has_edge(0, 3));
+    }
+
+    #[test]
+    fn empty_graph() {
+        let g = Csr::from_edges(0, &[]);
+        assert_eq!(g.num_vertices(), 0);
+        assert_eq!(g.num_edges(), 0);
+    }
+
+    #[test]
+    fn isolated_vertices() {
+        let g = Csr::from_edges(5, &[(0, 1)]);
+        assert_eq!(g.degree(3), 0);
+        assert_eq!(g.neighbors(3), &[] as &[VertexId]);
+    }
+
+    #[test]
+    fn row_slice_slab() {
+        let g = diamond();
+        let slab = g.row_slice(1, 3); // rows 1 and 2
+        assert_eq!(slab.num_rows(), 2);
+        assert_eq!(slab.first_vertex, 1);
+        assert!(slab.owns(1) && slab.owns(2));
+        assert!(!slab.owns(0) && !slab.owns(3));
+        assert_eq!(slab.neighbors_global(1), &[0, 3]);
+        assert_eq!(slab.neighbors_global(2), &[0, 3]);
+        assert_eq!(slab.degree_global(2), 2);
+        assert_eq!(slab.num_edges(), 4);
+    }
+
+    #[test]
+    fn row_slice_full_equals_graph() {
+        let g = diamond();
+        let slab = g.row_slice(0, 4);
+        assert_eq!(slab.num_edges(), g.num_edges());
+        for v in 0..4u32 {
+            assert_eq!(slab.neighbors_global(v), g.neighbors(v));
+        }
+    }
+
+    #[test]
+    #[should_panic]
+    fn from_parts_bad_offsets() {
+        Csr::from_parts(vec![0, 5], vec![1, 2]);
+    }
+}

@@ -1,0 +1,21 @@
+//! Synthetic graph generators.
+//!
+//! The paper evaluates on SuiteSparse graphs with 1–7 B edges; those are
+//! substituted here by scaled-down analogs from the same generator
+//! families (DESIGN.md §7): Kronecker/RMAT (Graph500, `GAP_kron`,
+//! `GAP_twitter`), uniform random (`GAP_urand`), and a power-law web-like
+//! generator with an optional long path tail (`Webbase-2001`'s pathological
+//! diameter). Structured graphs (path, grid, star, complete, binary tree)
+//! support tests with analytically known BFS distances.
+
+pub mod kronecker;
+pub mod structured;
+pub mod suite;
+pub mod urand;
+pub mod weblike;
+
+pub use kronecker::{kronecker, KroneckerParams};
+pub use structured::{binary_tree, complete, grid2d, path, star};
+pub use suite::{table1_suite, GraphSpec};
+pub use urand::uniform_random;
+pub use weblike::{weblike, WeblikeParams};

@@ -1,0 +1,124 @@
+//! Structured graphs with analytically known BFS distances — the test
+//! oracles for every traversal engine in the repository.
+
+use crate::graph::builder::GraphBuilder;
+use crate::graph::csr::{Csr, VertexId};
+
+/// Path graph `0 - 1 - … - n−1`. Distance from 0 to v is exactly `v`;
+/// diameter `n−1`. The worst case for BFS parallelism (one vertex per
+/// level — the `Webbase-2001` pathology in its purest form).
+pub fn path(n: usize) -> Csr {
+    let mut b = GraphBuilder::new(n);
+    for v in 1..n as VertexId {
+        b.add_edge(v - 1, v);
+    }
+    b.build_undirected().0
+}
+
+/// Star graph: center 0 connected to `n−1` leaves. Two BFS levels; the
+/// extreme load-imbalance case for LRB (one huge adjacency, many tiny).
+pub fn star(n: usize) -> Csr {
+    assert!(n >= 1);
+    let mut b = GraphBuilder::new(n);
+    for v in 1..n as VertexId {
+        b.add_edge(0, v);
+    }
+    b.build_undirected().0
+}
+
+/// Complete graph K_n. One BFS level from any root.
+pub fn complete(n: usize) -> Csr {
+    let mut b = GraphBuilder::new(n);
+    for u in 0..n as VertexId {
+        for v in (u + 1)..n as VertexId {
+            b.add_edge(u, v);
+        }
+    }
+    b.build_undirected().0
+}
+
+/// `rows × cols` 2D grid; distance from corner (0,0) to (r,c) is `r+c`
+/// (Manhattan). Mid-diameter structured input.
+pub fn grid2d(rows: usize, cols: usize) -> Csr {
+    let n = rows * cols;
+    let id = |r: usize, c: usize| (r * cols + c) as VertexId;
+    let mut b = GraphBuilder::new(n);
+    for r in 0..rows {
+        for c in 0..cols {
+            if c + 1 < cols {
+                b.add_edge(id(r, c), id(r, c + 1));
+            }
+            if r + 1 < rows {
+                b.add_edge(id(r, c), id(r + 1, c));
+            }
+        }
+    }
+    b.build_undirected().0
+}
+
+/// Complete binary tree with `n` vertices (heap indexing: children of `v`
+/// are `2v+1`, `2v+2`). Distance from root 0 to v is `floor(log2(v+1))`.
+pub fn binary_tree(n: usize) -> Csr {
+    let mut b = GraphBuilder::new(n);
+    for v in 1..n {
+        b.add_edge(((v - 1) / 2) as VertexId, v as VertexId);
+    }
+    b.build_undirected().0
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::bfs::serial::serial_bfs;
+
+    #[test]
+    fn path_distances() {
+        let g = path(50);
+        let d = serial_bfs(&g, 0);
+        for v in 0..50 {
+            assert_eq!(d[v], v as u32);
+        }
+    }
+
+    #[test]
+    fn star_distances() {
+        let g = star(100);
+        let d = serial_bfs(&g, 0);
+        assert_eq!(d[0], 0);
+        assert!(d[1..].iter().all(|&x| x == 1));
+        let d_leaf = serial_bfs(&g, 42);
+        assert_eq!(d_leaf[0], 1);
+        assert_eq!(d_leaf[42], 0);
+        assert_eq!(d_leaf[43], 2);
+    }
+
+    #[test]
+    fn complete_one_level() {
+        let g = complete(20);
+        let d = serial_bfs(&g, 3);
+        assert_eq!(d[3], 0);
+        assert!(d.iter().enumerate().all(|(v, &x)| v == 3 || x == 1));
+    }
+
+    #[test]
+    fn grid_manhattan() {
+        let (rows, cols) = (7, 9);
+        let g = grid2d(rows, cols);
+        let d = serial_bfs(&g, 0);
+        for r in 0..rows {
+            for c in 0..cols {
+                assert_eq!(d[r * cols + c], (r + c) as u32, "({r},{c})");
+            }
+        }
+    }
+
+    #[test]
+    fn binary_tree_depth() {
+        let g = binary_tree(127); // full tree of depth 6
+        let d = serial_bfs(&g, 0);
+        for v in 0..127usize {
+            let depth = (usize::BITS - (v + 1).leading_zeros() - 1) as u32;
+            assert_eq!(d[v], depth, "v={v}");
+        }
+    }
+}

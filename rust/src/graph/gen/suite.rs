@@ -1,0 +1,194 @@
+//! The Table-1 analog graph suite (DESIGN.md §7).
+//!
+//! Each paper input is mapped to a synthetic analog from the same
+//! generator family / degree class / diameter class, at a scale that runs
+//! on one core in minutes. `GraphSpec::generate` is the single entry point
+//! used by benches and examples so every experiment sees the same suite.
+
+use super::kronecker::{kronecker, KroneckerParams};
+use super::urand::uniform_random;
+use super::weblike::{weblike, WeblikeParams};
+use crate::graph::csr::Csr;
+
+/// How a suite graph is generated.
+#[derive(Clone, Copy, Debug)]
+pub enum Family {
+    /// Graph500 Kronecker/R-MAT.
+    Kronecker {
+        /// log2 of vertex count.
+        scale: u32,
+        /// arcs per vertex.
+        edge_factor: u32,
+    },
+    /// Uniform random (Erdős–Rényi-like).
+    Urand {
+        /// log2 of vertex count.
+        scale: u32,
+        /// arcs per vertex.
+        edge_factor: u32,
+    },
+    /// Preferential-attachment web core with deep strands and an optional
+    /// path tail (diameter control without moving the mass).
+    Weblike {
+        /// log2 of vertex count.
+        scale: u32,
+        /// arcs per vertex.
+        edge_factor: u32,
+        /// appended path-tail length.
+        tail: usize,
+        /// fraction of vertices in deep strands (per-mille to stay Copy).
+        strand_permille: u32,
+        /// strand length.
+        strand_len: usize,
+    },
+}
+
+/// A named workload in the suite.
+#[derive(Clone, Copy, Debug)]
+pub struct GraphSpec {
+    /// Analog name (the paper graph it stands in for).
+    pub name: &'static str,
+    /// The paper's original graph this substitutes.
+    pub paper_graph: &'static str,
+    /// Generator family + parameters.
+    pub family: Family,
+    /// RNG seed (fixed so every run/bench sees identical graphs).
+    pub seed: u64,
+    /// Diameter class of the original (for reporting).
+    pub paper_diameter: u32,
+}
+
+impl GraphSpec {
+    /// Generate the graph (symmetrized, deduplicated).
+    pub fn generate(&self) -> Csr {
+        self.generate_scaled(0)
+    }
+
+    /// Generate with `scale_delta` added to the scale exponent (used by the
+    /// quick CI profile vs the full bench profile).
+    pub fn generate_scaled(&self, scale_delta: i32) -> Csr {
+        let adj = |s: u32| ((s as i32 + scale_delta).max(4)) as u32;
+        match self.family {
+            Family::Kronecker { scale, edge_factor } => {
+                kronecker(KroneckerParams::graph500(adj(scale), edge_factor), self.seed).0
+            }
+            Family::Urand { scale, edge_factor } => {
+                uniform_random(1usize << adj(scale), edge_factor, self.seed).0
+            }
+            Family::Weblike { scale, edge_factor, tail, strand_permille, strand_len } => {
+                weblike(
+                    WeblikeParams {
+                        n: 1usize << adj(scale),
+                        edge_factor,
+                        copy_prob: 0.25,
+                        tail_len: tail,
+                        window: 0,
+                        strand_frac: strand_permille as f64 / 1000.0,
+                        strand_len,
+                    },
+                    self.seed,
+                )
+                .0
+            }
+        }
+    }
+}
+
+/// The nine Table-1 rows, in the paper's order (smallest to largest edge
+/// count, matching Fig. 3's layout).
+pub fn table1_suite() -> Vec<GraphSpec> {
+    vec![
+        GraphSpec {
+            name: "webbase-like",
+            paper_graph: "Webbase-2001",
+            family: Family::Weblike { scale: 20, edge_factor: 8, tail: 340, strand_permille: 150, strand_len: 30 },
+            seed: 0xB0B0_0001,
+            paper_diameter: 375,
+        },
+        GraphSpec {
+            name: "it-like",
+            paper_graph: "It-2004",
+            family: Family::Weblike { scale: 20, edge_factor: 16, tail: 0, strand_permille: 200, strand_len: 11 },
+            seed: 0xB0B0_0002,
+            paper_diameter: 26,
+        },
+        GraphSpec {
+            name: "uk-like",
+            paper_graph: "Uk-2005",
+            family: Family::Weblike { scale: 20, edge_factor: 24, tail: 0, strand_permille: 150, strand_len: 8 },
+            seed: 0xB0B0_0003,
+            paper_diameter: 21,
+        },
+        GraphSpec {
+            name: "twitter-like",
+            paper_graph: "GAP_twitter",
+            family: Family::Kronecker { scale: 20, edge_factor: 24 },
+            seed: 0xB0B0_0004,
+            paper_diameter: 14,
+        },
+        GraphSpec {
+            name: "friendster-like",
+            paper_graph: "com-Friendster",
+            family: Family::Kronecker { scale: 20, edge_factor: 28 },
+            seed: 0xB0B0_0005,
+            paper_diameter: 19,
+        },
+        GraphSpec {
+            name: "web-like",
+            paper_graph: "GAP_web",
+            family: Family::Weblike { scale: 20, edge_factor: 38, tail: 0, strand_permille: 180, strand_len: 9 },
+            seed: 0xB0B0_0006,
+            paper_diameter: 23,
+        },
+        GraphSpec {
+            name: "kron-like",
+            paper_graph: "GAP_kron",
+            family: Family::Kronecker { scale: 21, edge_factor: 16 },
+            seed: 0xB0B0_0007,
+            paper_diameter: 5,
+        },
+        GraphSpec {
+            name: "urand-like",
+            paper_graph: "GAP_urand",
+            family: Family::Urand { scale: 21, edge_factor: 16 },
+            seed: 0xB0B0_0008,
+            paper_diameter: 7,
+        },
+        GraphSpec {
+            name: "moliere-like",
+            paper_graph: "MOLIERE_2016",
+            family: Family::Urand { scale: 19, edge_factor: 50 },
+            seed: 0xB0B0_0009,
+            paper_diameter: 15,
+        },
+    ]
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn suite_has_nine_rows_in_paper_order() {
+        let s = table1_suite();
+        assert_eq!(s.len(), 9);
+        assert_eq!(s[0].paper_graph, "Webbase-2001");
+        assert_eq!(s[8].paper_graph, "MOLIERE_2016");
+    }
+
+    #[test]
+    fn all_specs_generate_at_reduced_scale() {
+        for spec in table1_suite() {
+            let g = spec.generate_scaled(-6); // tiny versions for CI
+            assert!(g.num_vertices() > 0, "{}", spec.name);
+            assert!(g.num_edges() > 0, "{}", spec.name);
+        }
+    }
+
+    #[test]
+    fn names_unique() {
+        let s = table1_suite();
+        let set: std::collections::HashSet<_> = s.iter().map(|x| x.name).collect();
+        assert_eq!(set.len(), s.len());
+    }
+}

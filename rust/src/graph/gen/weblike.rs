@@ -1,0 +1,185 @@
+//! Web-crawl-like generator: power-law degrees with tunable diameter, plus
+//! an optional long path "tail" reproducing `Webbase-2001`'s pathology
+//! (§5: "a large tail of about one hundred vertices long — one at each
+//! level", which starves parallelism and makes synchronization dominate).
+//!
+//! Mechanism: a preferential-attachment core (each new vertex attaches
+//! `edge_factor` arcs to earlier vertices, biased by a copying model)
+//! yields the power-law host-graph structure of It-2004/Uk-2005/GAP_web;
+//! `tail_len > 0` appends a path of that length hanging off vertex 0.
+
+use crate::graph::builder::{EtlStats, GraphBuilder};
+use crate::graph::csr::{Csr, VertexId};
+use crate::util::prng::Xoshiro256StarStar;
+
+/// Parameters of the web-like generator.
+#[derive(Clone, Copy, Debug)]
+pub struct WeblikeParams {
+    /// Vertices in the preferential-attachment core.
+    pub n: usize,
+    /// Arcs attached per new vertex.
+    pub edge_factor: u32,
+    /// Probability of copying a neighbor of the chosen target instead of
+    /// the target itself (higher ⇒ heavier tail, more clustering).
+    pub copy_prob: f64,
+    /// Length of the appended path tail (0 = none). The tail adds
+    /// `tail_len` vertices and `tail_len` edges and raises the diameter by
+    /// `tail_len`.
+    pub tail_len: usize,
+    /// Attachment locality window: targets are drawn from the last
+    /// `window` attachment endpoints instead of all of history
+    /// (0 = global). Produces banded crawl-order structure.
+    pub window: usize,
+    /// Fraction of vertices allocated to *deep strands*: thin chains
+    /// hanging off the core. Real host-level web graphs (It-2004,
+    /// Uk-2005) are small-world cores (most mass within a few hops of
+    /// hubs) whose 20–26 diameters come from sparse deep paths — not from
+    /// the bulk being far away. Strands reproduce that: they add depth
+    /// without mass, which is also what keeps direction-optimizing BFS
+    /// only mildly better than top-down on these inputs (Table 1's
+    /// 1.07–1.9× web rows).
+    pub strand_frac: f64,
+    /// Length of each strand (vertices per chain).
+    pub strand_len: usize,
+}
+
+impl WeblikeParams {
+    /// A plain global preferential-attachment core (no strands/tail).
+    pub fn core(n: usize, edge_factor: u32) -> Self {
+        Self {
+            n,
+            edge_factor,
+            copy_prob: 0.25,
+            tail_len: 0,
+            window: 0,
+            strand_frac: 0.0,
+            strand_len: 0,
+        }
+    }
+}
+
+/// Generate a symmetrized web-like graph.
+pub fn weblike(p: WeblikeParams, seed: u64) -> (Csr, EtlStats) {
+    assert!(p.n >= 2);
+    assert!((0.0..1.0).contains(&p.strand_frac));
+    // Strand vertices are carved out of `n`; the core shrinks accordingly.
+    let strand_total = (p.n as f64 * p.strand_frac) as usize;
+    let n_core = (p.n - strand_total).max(2);
+    let total = p.n + p.tail_len;
+    let mut rng = Xoshiro256StarStar::seed_from_u64(seed);
+    let mut b = GraphBuilder::new(total);
+    b.reserve(p.n * p.edge_factor as usize + p.tail_len);
+    // Seed edge so early vertices have something to attach to.
+    b.add_edge(0, 1);
+    // Growing arc list for preferential attachment by arc-endpoint
+    // sampling (classic Barabási–Albert trick: sampling a uniform endpoint
+    // of an existing arc is degree-proportional sampling).
+    let mut endpoints: Vec<VertexId> = vec![0, 1];
+    for v in 2..n_core as VertexId {
+        for _ in 0..p.edge_factor {
+            // Locality window: degree-proportional sampling restricted to
+            // the most recent attachments (crawl locality).
+            let lo = if p.window > 0 && endpoints.len() > p.window {
+                endpoints.len() - p.window
+            } else {
+                0
+            };
+            let mut t = endpoints[lo + rng.next_usize(endpoints.len() - lo)];
+            if rng.next_bool(p.copy_prob) {
+                // Copying model: jump to a uniform vertex in the same
+                // locality window instead.
+                let wlo = if p.window > 0 && (v as usize) > p.window {
+                    v as usize - p.window
+                } else {
+                    0
+                };
+                t = (wlo + rng.next_usize(v as usize - wlo)) as VertexId;
+            }
+            b.add_edge(v, t);
+            endpoints.push(v);
+            endpoints.push(t);
+        }
+    }
+    // Deep strands: thin chains rooted at uniform core vertices. Depth
+    // without mass — the source of real web-graph diameters.
+    if strand_total > 0 {
+        let strand_len = p.strand_len.max(1);
+        let mut next_id = n_core as VertexId;
+        let end = (n_core + strand_total) as VertexId;
+        while next_id < end {
+            let mut prev = rng.next_usize(n_core) as VertexId; // root in core
+            for _ in 0..strand_len {
+                if next_id >= end {
+                    break;
+                }
+                b.add_edge(prev, next_id);
+                prev = next_id;
+                next_id += 1;
+            }
+        }
+    }
+    // Appended path tail off vertex 0: 0 - n - n+1 - ... - n+tail_len-1.
+    let mut prev = 0 as VertexId;
+    for i in 0..p.tail_len {
+        let t = (p.n + i) as VertexId;
+        b.add_edge(prev, t);
+        prev = t;
+    }
+    b.build_undirected()
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::bfs::serial::serial_bfs;
+
+    fn core(n: usize, ef: u32) -> WeblikeParams {
+        WeblikeParams { copy_prob: 0.2, ..WeblikeParams::core(n, ef) }
+    }
+
+    #[test]
+    fn sizes() {
+        let (g, _) = weblike(core(2000, 8), 1);
+        assert_eq!(g.num_vertices(), 2000);
+        assert!(g.num_edges() > 2000);
+    }
+
+    #[test]
+    fn deterministic() {
+        assert_eq!(weblike(core(500, 4), 9).0, weblike(core(500, 4), 9).0);
+    }
+
+    #[test]
+    fn power_law_ish() {
+        let (g, _) = weblike(core(8192, 8), 2);
+        let mean = g.num_edges() as f64 / g.num_vertices() as f64;
+        assert!(
+            (g.max_degree() as f64) > 10.0 * mean,
+            "expected hubs: max {} vs mean {mean}",
+            g.max_degree()
+        );
+    }
+
+    #[test]
+    fn tail_raises_eccentricity() {
+        let p = WeblikeParams { tail_len: 100, ..core(1000, 8) };
+        let (g, _) = weblike(p, 3);
+        assert_eq!(g.num_vertices(), 1100);
+        // BFS from the tail end must reach depth >= 100.
+        let d = serial_bfs(&g, (1099) as VertexId);
+        let max_d = d.iter().filter(|&&x| x != u32::MAX).max().copied().unwrap();
+        assert!(max_d >= 100, "max depth {max_d}");
+    }
+
+    #[test]
+    fn connected_core() {
+        // Preferential attachment always attaches to existing component:
+        // the core is connected.
+        let (g, _) = weblike(core(300, 4), 5);
+        let d = serial_bfs(&g, 0);
+        assert!(
+            d.iter().take(300).all(|&x| x != u32::MAX),
+            "core must be one component"
+        );
+    }
+}

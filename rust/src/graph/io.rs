@@ -1,0 +1,279 @@
+//! Graph I/O: edge-list text, Matrix Market (SuiteSparse's format), and a
+//! fast binary snapshot format (`.bbfs`).
+
+use super::builder::{EtlStats, GraphBuilder};
+use super::csr::{Csr, VertexId};
+use std::io::{BufRead, BufReader, BufWriter, Read, Write};
+use std::path::Path;
+
+/// I/O errors.
+#[derive(Debug, thiserror::Error)]
+pub enum IoError {
+    /// Underlying filesystem error.
+    #[error("io: {0}")]
+    Io(#[from] std::io::Error),
+    /// Malformed input file.
+    #[error("parse error at line {line}: {msg}")]
+    Parse {
+        /// 1-based line number.
+        line: usize,
+        /// Description.
+        msg: String,
+    },
+    /// Bad magic / version in binary snapshot.
+    #[error("bad .bbfs snapshot: {0}")]
+    BadSnapshot(String),
+}
+
+fn parse_err(line: usize, msg: impl Into<String>) -> IoError {
+    IoError::Parse { line, msg: msg.into() }
+}
+
+/// Read a whitespace-separated edge list (`u v` per line, `#`/`%` comments).
+/// Vertex count is `max id + 1` unless `n_hint` is larger.
+pub fn read_edge_list(path: &Path, n_hint: Option<usize>) -> Result<(Csr, EtlStats), IoError> {
+    let f = std::fs::File::open(path)?;
+    let mut edges: Vec<(VertexId, VertexId)> = Vec::new();
+    let mut max_id: u64 = 0;
+    for (i, line) in BufReader::new(f).lines().enumerate() {
+        let line = line?;
+        let t = line.trim();
+        if t.is_empty() || t.starts_with('#') || t.starts_with('%') {
+            continue;
+        }
+        let mut it = t.split_whitespace();
+        let u: u64 = it
+            .next()
+            .ok_or_else(|| parse_err(i + 1, "missing source"))?
+            .parse()
+            .map_err(|e| parse_err(i + 1, format!("bad source: {e}")))?;
+        let v: u64 = it
+            .next()
+            .ok_or_else(|| parse_err(i + 1, "missing target"))?
+            .parse()
+            .map_err(|e| parse_err(i + 1, format!("bad target: {e}")))?;
+        if u >= u32::MAX as u64 || v >= u32::MAX as u64 {
+            return Err(parse_err(i + 1, "vertex id exceeds u32"));
+        }
+        max_id = max_id.max(u).max(v);
+        edges.push((u as VertexId, v as VertexId));
+    }
+    let n = n_hint.unwrap_or(0).max(if edges.is_empty() { 0 } else { max_id as usize + 1 });
+    let mut b = GraphBuilder::new(n);
+    b.add_edges(&edges);
+    Ok(b.build_undirected())
+}
+
+/// Write a CSR as an edge list (each arc once; the reader re-symmetrizes).
+pub fn write_edge_list(g: &Csr, path: &Path) -> Result<(), IoError> {
+    let f = std::fs::File::create(path)?;
+    let mut w = BufWriter::new(f);
+    writeln!(w, "# {} vertices, {} arcs", g.num_vertices(), g.num_edges())?;
+    for u in 0..g.num_vertices() as VertexId {
+        for &v in g.neighbors(u) {
+            if u <= v {
+                writeln!(w, "{u} {v}")?;
+            }
+        }
+    }
+    Ok(())
+}
+
+/// Read a Matrix Market coordinate-pattern file (SuiteSparse's interchange
+/// format; 1-based indices). Only `matrix coordinate` headers are accepted;
+/// values (if present) are ignored, so `pattern`/`real`/`integer` all work.
+pub fn read_matrix_market(path: &Path) -> Result<(Csr, EtlStats), IoError> {
+    let f = std::fs::File::open(path)?;
+    let mut lines = BufReader::new(f).lines().enumerate();
+    // Header
+    let (i0, header) = lines
+        .next()
+        .ok_or_else(|| parse_err(1, "empty file"))
+        .and_then(|(i, l)| Ok((i, l?)))?;
+    if !header.starts_with("%%MatrixMarket matrix coordinate") {
+        return Err(parse_err(i0 + 1, "not a MatrixMarket coordinate matrix"));
+    }
+    // Size line (after comments)
+    let mut dims: Option<(usize, usize, usize)> = None;
+    let mut edges: Vec<(VertexId, VertexId)> = Vec::new();
+    for (i, line) in lines {
+        let line = line?;
+        let t = line.trim();
+        if t.is_empty() || t.starts_with('%') {
+            continue;
+        }
+        let mut it = t.split_whitespace();
+        if dims.is_none() {
+            let r: usize = it
+                .next()
+                .ok_or_else(|| parse_err(i + 1, "missing rows"))?
+                .parse()
+                .map_err(|e| parse_err(i + 1, format!("bad rows: {e}")))?;
+            let c: usize = it
+                .next()
+                .ok_or_else(|| parse_err(i + 1, "missing cols"))?
+                .parse()
+                .map_err(|e| parse_err(i + 1, format!("bad cols: {e}")))?;
+            let nnz: usize = it
+                .next()
+                .ok_or_else(|| parse_err(i + 1, "missing nnz"))?
+                .parse()
+                .map_err(|e| parse_err(i + 1, format!("bad nnz: {e}")))?;
+            dims = Some((r, c, nnz));
+            edges.reserve(nnz);
+            continue;
+        }
+        let u: usize = it
+            .next()
+            .ok_or_else(|| parse_err(i + 1, "missing row"))?
+            .parse()
+            .map_err(|e| parse_err(i + 1, format!("bad row: {e}")))?;
+        let v: usize = it
+            .next()
+            .ok_or_else(|| parse_err(i + 1, "missing col"))?
+            .parse()
+            .map_err(|e| parse_err(i + 1, format!("bad col: {e}")))?;
+        if u == 0 || v == 0 {
+            return Err(parse_err(i + 1, "MatrixMarket indices are 1-based"));
+        }
+        edges.push(((u - 1) as VertexId, (v - 1) as VertexId));
+    }
+    let (r, c, _) = dims.ok_or_else(|| parse_err(0, "missing size line"))?;
+    let n = r.max(c);
+    let mut b = GraphBuilder::new(n);
+    b.add_edges(&edges);
+    Ok(b.build_undirected())
+}
+
+const BBFS_MAGIC: &[u8; 8] = b"BBFSCSR1";
+
+/// Write the binary `.bbfs` snapshot (magic, n, m, offsets, edges; LE).
+pub fn write_binary(g: &Csr, path: &Path) -> Result<(), IoError> {
+    let f = std::fs::File::create(path)?;
+    let mut w = BufWriter::new(f);
+    w.write_all(BBFS_MAGIC)?;
+    w.write_all(&(g.num_vertices() as u64).to_le_bytes())?;
+    w.write_all(&g.num_edges().to_le_bytes())?;
+    for &o in g.offsets() {
+        w.write_all(&o.to_le_bytes())?;
+    }
+    for &e in g.edges() {
+        w.write_all(&e.to_le_bytes())?;
+    }
+    Ok(())
+}
+
+/// Read a `.bbfs` snapshot written by [`write_binary`].
+pub fn read_binary(path: &Path) -> Result<Csr, IoError> {
+    let f = std::fs::File::open(path)?;
+    let mut r = BufReader::new(f);
+    let mut magic = [0u8; 8];
+    r.read_exact(&mut magic)?;
+    if &magic != BBFS_MAGIC {
+        return Err(IoError::BadSnapshot("wrong magic".into()));
+    }
+    let mut b8 = [0u8; 8];
+    r.read_exact(&mut b8)?;
+    let n = u64::from_le_bytes(b8) as usize;
+    r.read_exact(&mut b8)?;
+    let m = u64::from_le_bytes(b8) as usize;
+    let mut offsets = Vec::with_capacity(n + 1);
+    for _ in 0..=n {
+        r.read_exact(&mut b8)?;
+        offsets.push(u64::from_le_bytes(b8));
+    }
+    let mut edges = Vec::with_capacity(m);
+    let mut b4 = [0u8; 4];
+    for _ in 0..m {
+        r.read_exact(&mut b4)?;
+        edges.push(u32::from_le_bytes(b4));
+    }
+    if offsets.last().copied() != Some(m as u64) {
+        return Err(IoError::BadSnapshot("offsets/edges mismatch".into()));
+    }
+    Ok(Csr::from_parts(offsets, edges))
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::graph::gen::kronecker::{kronecker, KroneckerParams};
+
+    fn tmp(name: &str) -> std::path::PathBuf {
+        let mut p = std::env::temp_dir();
+        p.push(format!("bbfs-test-{}-{name}", std::process::id()));
+        p
+    }
+
+    #[test]
+    fn edge_list_roundtrip() {
+        let (g, _) = kronecker(KroneckerParams::graph500(8, 4), 11);
+        let p = tmp("el.txt");
+        write_edge_list(&g, &p).unwrap();
+        let (g2, _) = read_edge_list(&p, Some(g.num_vertices())).unwrap();
+        assert_eq!(g, g2);
+        std::fs::remove_file(&p).ok();
+    }
+
+    #[test]
+    fn edge_list_comments_and_blanks() {
+        let p = tmp("el2.txt");
+        std::fs::write(&p, "# comment\n\n0 1\n% another\n1 2\n").unwrap();
+        let (g, _) = read_edge_list(&p, None).unwrap();
+        assert_eq!(g.num_vertices(), 3);
+        assert_eq!(g.num_edges(), 4);
+        std::fs::remove_file(&p).ok();
+    }
+
+    #[test]
+    fn edge_list_bad_token_errors() {
+        let p = tmp("el3.txt");
+        std::fs::write(&p, "0 x\n").unwrap();
+        assert!(matches!(
+            read_edge_list(&p, None),
+            Err(IoError::Parse { line: 1, .. })
+        ));
+        std::fs::remove_file(&p).ok();
+    }
+
+    #[test]
+    fn matrix_market_basic() {
+        let p = tmp("mm.mtx");
+        std::fs::write(
+            &p,
+            "%%MatrixMarket matrix coordinate pattern symmetric\n% c\n3 3 2\n1 2\n2 3\n",
+        )
+        .unwrap();
+        let (g, _) = read_matrix_market(&p).unwrap();
+        assert_eq!(g.num_vertices(), 3);
+        assert!(g.has_edge(0, 1) && g.has_edge(1, 0));
+        assert!(g.has_edge(1, 2));
+        std::fs::remove_file(&p).ok();
+    }
+
+    #[test]
+    fn matrix_market_rejects_non_coordinate() {
+        let p = tmp("mm2.mtx");
+        std::fs::write(&p, "%%MatrixMarket matrix array real general\n2 2\n1\n2\n3\n4\n").unwrap();
+        assert!(read_matrix_market(&p).is_err());
+        std::fs::remove_file(&p).ok();
+    }
+
+    #[test]
+    fn binary_roundtrip() {
+        let (g, _) = kronecker(KroneckerParams::graph500(9, 8), 13);
+        let p = tmp("g.bbfs");
+        write_binary(&g, &p).unwrap();
+        let g2 = read_binary(&p).unwrap();
+        assert_eq!(g, g2);
+        std::fs::remove_file(&p).ok();
+    }
+
+    #[test]
+    fn binary_rejects_garbage() {
+        let p = tmp("bad.bbfs");
+        std::fs::write(&p, b"NOTMAGIC________").unwrap();
+        assert!(matches!(read_binary(&p), Err(IoError::BadSnapshot(_))));
+        std::fs::remove_file(&p).ok();
+    }
+}

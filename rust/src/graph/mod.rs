@@ -1,0 +1,12 @@
+//! Graph substrate: CSR storage, ETL (the paper's §4 input pipeline),
+//! synthetic generators for the Table-1 analog suite, file I/O, and
+//! property analysis.
+
+pub mod builder;
+pub mod csr;
+pub mod gen;
+pub mod io;
+pub mod props;
+
+pub use builder::{EtlStats, GraphBuilder};
+pub use csr::{Csr, CsrSlab, VertexId};

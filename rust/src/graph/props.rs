@@ -1,0 +1,206 @@
+//! Graph property analysis: degree statistics, connected components, and
+//! pseudo-diameter — the columns of the paper's Table 1 that describe the
+//! inputs (|V|, |E|, average diameter) plus the "90–95 % of vertices are in
+//! the largest component" observation the root-sampling protocol relies on.
+
+use super::csr::{Csr, VertexId};
+use crate::bfs::serial::serial_bfs;
+
+/// Degree distribution summary.
+#[derive(Clone, Debug)]
+pub struct DegreeStats {
+    /// Minimum degree.
+    pub min: u32,
+    /// Maximum degree.
+    pub max: u32,
+    /// Mean degree.
+    pub mean: f64,
+    /// Histogram over log2 bins: `hist[i]` counts vertices with degree in
+    /// `[2^i, 2^(i+1))`; `hist[0]` also counts degree 0..2.
+    pub log2_hist: Vec<u64>,
+}
+
+/// Compute degree statistics.
+pub fn degree_stats(g: &Csr) -> DegreeStats {
+    let n = g.num_vertices();
+    if n == 0 {
+        return DegreeStats { min: 0, max: 0, mean: 0.0, log2_hist: vec![] };
+    }
+    let mut min = u32::MAX;
+    let mut max = 0u32;
+    let mut hist = vec![0u64; 33];
+    for v in 0..n as VertexId {
+        let d = g.degree(v);
+        min = min.min(d);
+        max = max.max(d);
+        let bin = if d <= 1 { 0 } else { 32 - (d - 1).leading_zeros() } as usize;
+        hist[bin] += 1;
+    }
+    while hist.len() > 1 && *hist.last().unwrap() == 0 {
+        hist.pop();
+    }
+    DegreeStats {
+        min,
+        max,
+        mean: g.num_edges() as f64 / n as f64,
+        log2_hist: hist,
+    }
+}
+
+/// Connected-components result.
+#[derive(Clone, Debug)]
+pub struct Components {
+    /// Component label per vertex.
+    pub label: Vec<u32>,
+    /// Size of each component, indexed by label.
+    pub sizes: Vec<u64>,
+}
+
+impl Components {
+    /// Number of components.
+    pub fn count(&self) -> usize {
+        self.sizes.len()
+    }
+
+    /// Label of the largest component.
+    pub fn largest(&self) -> u32 {
+        self.sizes
+            .iter()
+            .enumerate()
+            .max_by_key(|(_, &s)| s)
+            .map(|(i, _)| i as u32)
+            .unwrap_or(0)
+    }
+
+    /// Fraction of vertices in the largest component.
+    pub fn largest_fraction(&self) -> f64 {
+        let total: u64 = self.sizes.iter().sum();
+        if total == 0 {
+            return 0.0;
+        }
+        self.sizes[self.largest() as usize] as f64 / total as f64
+    }
+}
+
+/// Label connected components by repeated BFS (undirected graphs).
+pub fn connected_components(g: &Csr) -> Components {
+    let n = g.num_vertices();
+    let mut label = vec![u32::MAX; n];
+    let mut sizes = Vec::new();
+    let mut queue: Vec<VertexId> = Vec::new();
+    for s in 0..n as VertexId {
+        if label[s as usize] != u32::MAX {
+            continue;
+        }
+        let c = sizes.len() as u32;
+        let mut size = 0u64;
+        label[s as usize] = c;
+        queue.clear();
+        queue.push(s);
+        while let Some(v) = queue.pop() {
+            size += 1;
+            for &u in g.neighbors(v) {
+                if label[u as usize] == u32::MAX {
+                    label[u as usize] = c;
+                    queue.push(u);
+                }
+            }
+        }
+        sizes.push(size);
+    }
+    Components { label, sizes }
+}
+
+/// Pseudo-diameter via the double-sweep heuristic: BFS from `start`, then
+/// BFS from the farthest vertex found; the second eccentricity is a lower
+/// bound that is exact on trees and very tight on real graphs. This is the
+/// "Ave. Diam." column of Table 1. An isolated `start` is replaced by the
+/// max-degree vertex (so permuted Kronecker graphs don't report 0).
+pub fn pseudo_diameter(g: &Csr, start: VertexId) -> u32 {
+    if g.num_vertices() == 0 {
+        return 0;
+    }
+    let start = if g.degree(start) == 0 {
+        (0..g.num_vertices() as VertexId)
+            .max_by_key(|&v| g.degree(v))
+            .unwrap()
+    } else {
+        start
+    };
+    let d1 = serial_bfs(g, start);
+    let far = farthest(&d1).unwrap_or(start);
+    let d2 = serial_bfs(g, far);
+    d2.iter().filter(|&&x| x != u32::MAX).max().copied().unwrap_or(0)
+}
+
+fn farthest(dist: &[u32]) -> Option<VertexId> {
+    dist.iter()
+        .enumerate()
+        .filter(|(_, &d)| d != u32::MAX)
+        .max_by_key(|(_, &d)| d)
+        .map(|(v, _)| v as VertexId)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::graph::gen::structured::{complete, grid2d, path, star};
+    use crate::graph::gen::urand::uniform_random;
+
+    #[test]
+    fn degree_stats_star() {
+        let g = star(101);
+        let s = degree_stats(&g);
+        assert_eq!(s.max, 100);
+        assert_eq!(s.min, 1);
+        assert!((s.mean - 200.0 / 101.0).abs() < 1e-9);
+    }
+
+    #[test]
+    fn log2_hist_sums_to_n() {
+        let (g, _) = uniform_random(500, 8, 3);
+        let s = degree_stats(&g);
+        assert_eq!(s.log2_hist.iter().sum::<u64>(), 500);
+    }
+
+    #[test]
+    fn components_two_islands() {
+        use crate::graph::builder::GraphBuilder;
+        let mut b = GraphBuilder::new(6);
+        b.add_edges(&[(0, 1), (1, 2), (3, 4)]);
+        let (g, _) = b.build_undirected();
+        let c = connected_components(&g);
+        assert_eq!(c.count(), 3); // {0,1,2}, {3,4}, {5}
+        assert_eq!(c.sizes[c.largest() as usize], 3);
+        assert!((c.largest_fraction() - 0.5).abs() < 1e-12);
+        assert_eq!(c.label[0], c.label[2]);
+        assert_ne!(c.label[0], c.label[3]);
+    }
+
+    #[test]
+    fn components_connected_random() {
+        let (g, _) = uniform_random(300, 16, 5);
+        let c = connected_components(&g);
+        // ef=16 uniform is connected whp; largest fraction ~1.
+        assert!(c.largest_fraction() > 0.99);
+    }
+
+    #[test]
+    fn pseudo_diameter_exact_on_path() {
+        let g = path(64);
+        // Start in the middle; double sweep must still find 63.
+        assert_eq!(pseudo_diameter(&g, 31), 63);
+    }
+
+    #[test]
+    fn pseudo_diameter_grid() {
+        let g = grid2d(5, 9);
+        assert_eq!(pseudo_diameter(&g, 22), 4 + 8);
+    }
+
+    #[test]
+    fn pseudo_diameter_complete() {
+        let g = complete(10);
+        assert_eq!(pseudo_diameter(&g, 0), 1);
+    }
+}

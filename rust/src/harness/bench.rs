@@ -1,0 +1,119 @@
+//! Criterion-lite benchmarking harness (no `criterion` in the offline
+//! set): warmup + timed iterations + summary statistics, with a text
+//! report in criterion's familiar shape.
+
+use crate::util::stats::Summary;
+use std::time::Instant;
+
+/// Benchmark configuration.
+#[derive(Clone, Copy, Debug)]
+pub struct BenchConfig {
+    /// Warmup iterations (not measured).
+    pub warmup_iters: usize,
+    /// Measured iterations.
+    pub iters: usize,
+}
+
+impl Default for BenchConfig {
+    fn default() -> Self {
+        Self { warmup_iters: 2, iters: 10 }
+    }
+}
+
+impl BenchConfig {
+    /// Environment profile: `BBFS_BENCH_PROFILE=quick|full` (quick default
+    /// keeps `cargo bench` total under a few minutes on one core).
+    pub fn from_env() -> Self {
+        match std::env::var("BBFS_BENCH_PROFILE").as_deref() {
+            Ok("full") => Self { warmup_iters: 3, iters: 20 },
+            _ => Self { warmup_iters: 1, iters: 5 },
+        }
+    }
+}
+
+/// One benchmark measurement.
+#[derive(Clone, Debug)]
+pub struct Measurement {
+    /// Benchmark id (`group/name`).
+    pub id: String,
+    /// Summary over measured iterations (seconds).
+    pub seconds: Summary,
+}
+
+impl Measurement {
+    /// criterion-style one-liner.
+    pub fn report(&self) -> String {
+        format!(
+            "{:<44} time: [{} {} {}]  (± {})",
+            self.id,
+            fmt_time(self.seconds.min),
+            fmt_time(self.seconds.median),
+            fmt_time(self.seconds.max),
+            fmt_time(self.seconds.stddev),
+        )
+    }
+}
+
+/// Format seconds with an adaptive unit.
+pub fn fmt_time(s: f64) -> String {
+    if s >= 1.0 {
+        format!("{s:.3} s")
+    } else if s >= 1e-3 {
+        format!("{:.3} ms", s * 1e3)
+    } else if s >= 1e-6 {
+        format!("{:.3} µs", s * 1e6)
+    } else {
+        format!("{:.1} ns", s * 1e9)
+    }
+}
+
+/// Run one benchmark: `f` is called once per iteration; its return value
+/// is black-boxed to keep the optimizer honest.
+pub fn bench<T, F: FnMut() -> T>(cfg: &BenchConfig, id: &str, mut f: F) -> Measurement {
+    for _ in 0..cfg.warmup_iters {
+        black_box(f());
+    }
+    let mut times = Vec::with_capacity(cfg.iters);
+    for _ in 0..cfg.iters {
+        let t0 = Instant::now();
+        black_box(f());
+        times.push(t0.elapsed().as_secs_f64());
+    }
+    let m = Measurement { id: id.to_string(), seconds: Summary::of(&times) };
+    println!("{}", m.report());
+    m
+}
+
+/// Optimizer barrier (stable-Rust version of `std::hint::black_box`).
+#[inline]
+pub fn black_box<T>(x: T) -> T {
+    std::hint::black_box(x)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn bench_measures_something() {
+        let cfg = BenchConfig { warmup_iters: 1, iters: 3 };
+        let m = bench(&cfg, "test/spin", || {
+            let mut acc = 0u64;
+            for i in 0..10_000u64 {
+                acc = acc.wrapping_add(i * i);
+            }
+            acc
+        });
+        assert_eq!(m.seconds.n, 3);
+        assert!(m.seconds.min > 0.0);
+        assert!(m.seconds.min <= m.seconds.median);
+    }
+
+    #[test]
+    fn fmt_time_units() {
+        assert!(fmt_time(2.5).ends_with(" s"));
+        assert!(fmt_time(2.5e-3).ends_with(" ms"));
+        assert!(fmt_time(2.5e-6).ends_with(" µs"));
+        assert!(fmt_time(2.5e-9).ends_with(" ns"));
+    }
+}

@@ -1,0 +1,190 @@
+//! Shared experiment drivers: the code behind every bench/example that
+//! regenerates a paper table or figure (DESIGN.md §5 experiment index).
+
+use crate::bfs::dirop::{diropt_bfs, DirOptParams};
+use crate::bfs::topdown::topdown_bfs;
+use crate::coordinator::{ButterflyBfs, EngineConfig, PatternKind};
+use crate::graph::csr::Csr;
+use crate::graph::gen::GraphSpec;
+use crate::harness::roots::{run_protocol, RootProtocol};
+use crate::net::model::DeviceModel;
+use crate::util::stats::gteps;
+
+/// One Table-1 row: CPU (DO/TD) vs simulated DGX-2 ButterFly BFS.
+#[derive(Clone, Debug)]
+pub struct Table1Row {
+    /// Analog graph name.
+    pub name: &'static str,
+    /// Paper graph this substitutes.
+    pub paper_graph: &'static str,
+    /// |V|.
+    pub vertices: u64,
+    /// |E| (arcs).
+    pub edges: u64,
+    /// Measured pseudo-diameter of the analog.
+    pub diameter: u32,
+    /// CPU direction-optimizing simulated time (s).
+    pub cpu_do_time: f64,
+    /// CPU top-down simulated time (s).
+    pub cpu_td_time: f64,
+    /// Simulated DGX-2 (16 nodes, fanout 4) time (s).
+    pub dgx2_time: f64,
+    /// DGX-2 GTEPS (|E|/t convention).
+    pub dgx2_gteps: f64,
+}
+
+impl Table1Row {
+    /// DO speedup over TD on the CPU (the paper's "CPU-DO/CPU-TD" column).
+    pub fn cpu_do_over_td(&self) -> f64 {
+        self.cpu_td_time / self.cpu_do_time
+    }
+
+    /// DGX-2 speedup over CPU-DO.
+    pub fn dgx2_over_cpu_do(&self) -> f64 {
+        self.cpu_do_time / self.dgx2_time
+    }
+
+    /// DGX-2 speedup over CPU-TD.
+    pub fn dgx2_over_cpu_td(&self) -> f64 {
+        self.cpu_td_time / self.dgx2_time
+    }
+}
+
+/// CPU-baseline simulated time for a traversal: examined edges priced by
+/// the CPU device model (plus per-level overhead), the same simulated
+/// clock the DGX-2 runs use — apples-to-apples shape comparison.
+pub fn cpu_sim_time(levels: &[crate::bfs::topdown::LevelStats], dev: &DeviceModel) -> f64 {
+    levels.iter().map(|l| dev.level_time(l.edges_examined)).sum()
+}
+
+/// Direction-aware variant for the direction-optimizing baseline:
+/// bottom-up levels pay the BU edge-cost factor.
+pub fn cpu_sim_time_directed(
+    levels: &[crate::bfs::topdown::LevelStats],
+    directions: &[crate::bfs::dirop::Direction],
+    dev: &DeviceModel,
+) -> f64 {
+    levels
+        .iter()
+        .zip(directions)
+        .map(|(l, d)| {
+            dev.level_time_dir(
+                l.edges_examined,
+                *d == crate::bfs::dirop::Direction::BottomUp,
+            )
+        })
+        .sum()
+}
+
+/// Run one Table-1 row on the given graph (root protocol applied to every
+/// engine).
+pub fn table1_row(spec: &GraphSpec, g: &Csr, proto: &RootProtocol) -> Table1Row {
+    let cpu = DeviceModel::xeon_8168_dual();
+    // CPU direction-optimizing (GapBS-DO analog).
+    let (cpu_do_time, _) = run_protocol(g, proto, |r| {
+        let res = diropt_bfs(g, r, DirOptParams::default());
+        cpu_sim_time_directed(&res.levels, &res.directions, &cpu)
+    });
+    // CPU top-down (GapBS-TD analog).
+    let (cpu_td_time, _) = run_protocol(g, proto, |r| {
+        let res = topdown_bfs(g, r, true);
+        cpu_sim_time(&res.levels, &cpu)
+    });
+    // Simulated DGX-2: 16 nodes, butterfly fanout 4.
+    let mut engine = ButterflyBfs::new(g, EngineConfig::dgx2(16, 4));
+    let (dgx2_time, _) = run_protocol(g, proto, |r| engine.run(r).sim_seconds());
+    Table1Row {
+        name: spec.name,
+        paper_graph: spec.paper_graph,
+        vertices: g.num_vertices() as u64,
+        edges: g.num_edges(),
+        diameter: crate::graph::props::pseudo_diameter(g, 0),
+        cpu_do_time,
+        cpu_td_time,
+        dgx2_time,
+        dgx2_gteps: gteps(g.num_edges(), dgx2_time),
+    }
+}
+
+/// One Fig-3 data point: simulated time at a node count and fanout.
+#[derive(Clone, Copy, Debug)]
+pub struct ScalingPoint {
+    /// Node count.
+    pub nodes: usize,
+    /// Butterfly fanout.
+    pub fanout: u32,
+    /// Trimmed-mean simulated time (s).
+    pub sim_time: f64,
+}
+
+/// Fig-3 strong-scaling sweep for one graph: node counts × fanouts.
+pub fn scaling_sweep(
+    g: &Csr,
+    node_counts: &[usize],
+    fanouts: &[u32],
+    proto: &RootProtocol,
+) -> Vec<ScalingPoint> {
+    let mut out = Vec::new();
+    for &nodes in node_counts {
+        for &fanout in fanouts {
+            let mut engine = ButterflyBfs::new(g, EngineConfig::dgx2(nodes, fanout));
+            let (sim_time, _) = run_protocol(g, proto, |r| engine.run(r).sim_seconds());
+            out.push(ScalingPoint { nodes, fanout, sim_time });
+        }
+    }
+    out
+}
+
+/// Comparison of communication patterns on one graph at one node count
+/// (the §S4 Gunrock/Groute-shaped experiment when run with the
+/// dynamic-alloc net model).
+pub fn pattern_comparison(
+    g: &Csr,
+    nodes: usize,
+    patterns: &[(PatternKind, crate::net::model::NetModel)],
+    proto: &RootProtocol,
+) -> Vec<(String, f64)> {
+    patterns
+        .iter()
+        .map(|(p, net)| {
+            let cfg = EngineConfig {
+                pattern: *p,
+                net: *net,
+                ..EngineConfig::dgx2(nodes, 1)
+            };
+            let mut engine = ButterflyBfs::new(g, cfg);
+            let (t, _) = run_protocol(g, proto, |r| engine.run(r).sim_seconds());
+            (format!("{}@{}", p.name(), net.name), t)
+        })
+        .collect()
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::graph::gen::table1_suite;
+
+    #[test]
+    fn table1_row_runs_on_tiny_graph() {
+        let spec = &table1_suite()[6]; // kron-like
+        let g = spec.generate_scaled(-7); // tiny
+        let proto = RootProtocol { num_roots: 4, trim: 1, seed: 1 };
+        let row = table1_row(spec, &g, &proto);
+        assert!(row.cpu_do_time > 0.0);
+        assert!(row.cpu_td_time > 0.0);
+        assert!(row.dgx2_time > 0.0);
+        assert!(row.dgx2_gteps > 0.0);
+        // Small-world kron: DO should beat TD on the CPU.
+        assert!(row.cpu_do_over_td() >= 1.0, "{}", row.cpu_do_over_td());
+    }
+
+    #[test]
+    fn scaling_sweep_shapes() {
+        let spec = &table1_suite()[7]; // urand-like
+        let g = spec.generate_scaled(-7);
+        let proto = RootProtocol { num_roots: 4, trim: 1, seed: 2 };
+        let pts = scaling_sweep(&g, &[2, 4], &[1, 4], &proto);
+        assert_eq!(pts.len(), 4);
+        assert!(pts.iter().all(|p| p.sim_time > 0.0));
+    }
+}

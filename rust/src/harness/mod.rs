@@ -1,0 +1,11 @@
+//! Benchmarking harness: criterion-lite timing, the paper's root-sampling
+//! protocol, and table rendering.
+
+pub mod bench;
+pub mod experiments;
+pub mod roots;
+pub mod table;
+
+pub use bench::{bench, black_box, BenchConfig, Measurement};
+pub use roots::{run_protocol, sample_roots, RootProtocol};
+pub use table::Table;

@@ -1,0 +1,29 @@
+//! # ButterFly BFS
+//!
+//! A reproduction of *“ButterFly BFS — An Efficient Communication Pattern
+//! for Multi Node Traversals”* (Oded Green, 2021) as a three-layer
+//! Rust + JAX/Pallas system:
+//!
+//! * **L3 (this crate)** — the coordinator: graph ETL + partitioning,
+//!   simulated multi-device compute nodes, the butterfly frontier
+//!   synchronization network with configurable fanout, single-node BFS
+//!   baselines (top-down / bottom-up / direction-optimizing), an
+//!   interconnect simulator with DGX-2/NVSwitch presets, and the
+//!   benchmarking harness reproducing the paper's Table 1 and Figs 1–3.
+//! * **L2/L1 (build-time Python)** — the BLAS-formulation BFS level step
+//!   (`python/compile/model.py`) with a Pallas frontier-expansion kernel,
+//!   AOT-lowered to HLO text artifacts that `runtime::` loads and executes
+//!   via the PJRT CPU client. Python never runs on the traversal path.
+//!
+//! Start with [`coordinator::engine::ButterflyBfs`] or the
+//! `examples/quickstart.rs` example.
+
+pub mod bfs;
+pub mod comm;
+pub mod coordinator;
+pub mod graph;
+pub mod harness;
+pub mod net;
+pub mod partition;
+pub mod runtime;
+pub mod util;

@@ -1,0 +1,337 @@
+//! `butterfly-bfs` — the command-line launcher.
+//!
+//! Subcommands:
+//! * `run`       — traverse a graph with the distributed ButterFly BFS
+//!                 engine (simulated multi-node, DGX-2 timing model).
+//! * `baseline`  — run the single-node CPU baselines (top-down /
+//!                 direction-optimizing), the paper's GapBS comparators.
+//! * `generate`  — generate a suite graph and write it to disk.
+//! * `inspect`   — print graph properties (|V|, |E|, degrees, diameter).
+//! * `schedule`  — print a butterfly/all-to-all schedule and its costs.
+//!
+//! Run `butterfly-bfs <subcommand> --help` for options.
+
+use anyhow::{anyhow, bail, Result};
+use butterfly_bfs::bfs::dirop::{diropt_bfs, DirOptParams};
+use butterfly_bfs::bfs::topdown::topdown_bfs;
+use butterfly_bfs::comm::{Butterfly, CommPattern, ConcurrentAllToAll, IterativeAllToAll};
+use butterfly_bfs::coordinator::config::DirectionMode;
+use butterfly_bfs::coordinator::{ButterflyBfs, EngineConfig, PatternKind, PayloadEncoding};
+use butterfly_bfs::graph::csr::Csr;
+use butterfly_bfs::graph::gen::{table1_suite, GraphSpec};
+use butterfly_bfs::graph::{io, props};
+use butterfly_bfs::harness::table::{count, f2, ms, Table};
+use butterfly_bfs::net::model::NetModel;
+use butterfly_bfs::net::sim::simulate_uniform;
+use butterfly_bfs::util::cli::{Args, CliError};
+use butterfly_bfs::util::stats::gteps;
+use std::path::Path;
+
+fn main() {
+    let argv: Vec<String> = std::env::args().skip(1).collect();
+    let code = match dispatch(argv) {
+        Ok(()) => 0,
+        Err(e) => {
+            eprintln!("error: {e:#}");
+            2
+        }
+    };
+    std::process::exit(code);
+}
+
+fn dispatch(argv: Vec<String>) -> Result<()> {
+    let Some(cmd) = argv.first().cloned() else {
+        print_usage();
+        return Ok(());
+    };
+    let rest = argv[1..].to_vec();
+    match cmd.as_str() {
+        "run" => cmd_run(rest),
+        "baseline" => cmd_baseline(rest),
+        "generate" => cmd_generate(rest),
+        "inspect" => cmd_inspect(rest),
+        "schedule" => cmd_schedule(rest),
+        "--help" | "-h" | "help" => {
+            print_usage();
+            Ok(())
+        }
+        other => bail!("unknown subcommand {other:?} (see --help)"),
+    }
+}
+
+fn print_usage() {
+    println!(
+        "butterfly-bfs — multi-node BFS with butterfly frontier synchronization\n\n\
+         Subcommands:\n\
+         \x20 run       distributed ButterFly BFS on a suite graph or file\n\
+         \x20 baseline  single-node CPU top-down / direction-optimizing BFS\n\
+         \x20 generate  generate a suite graph to a file\n\
+         \x20 inspect   print graph properties\n\
+         \x20 schedule  print a communication schedule and its costs\n"
+    );
+}
+
+fn handle_help(r: Result<Args, CliError>, spec: &Args) -> Result<Args> {
+    match r {
+        Ok(a) => Ok(a),
+        Err(CliError::HelpRequested) => {
+            println!("{}", spec.help_text());
+            std::process::exit(0);
+        }
+        Err(e) => Err(anyhow!(e)),
+    }
+}
+
+/// Resolve `--graph` into a CSR: a suite name (`kron-like`, …), or a path
+/// to a `.bbfs` / edge-list / MatrixMarket file.
+fn load_graph(name: &str, scale_delta: i32) -> Result<Csr> {
+    if let Some(spec) = suite_spec(name) {
+        return Ok(spec.generate_scaled(scale_delta));
+    }
+    let p = Path::new(name);
+    if !p.exists() {
+        bail!(
+            "graph {name:?} is neither a suite name ({}) nor a file",
+            table1_suite()
+                .iter()
+                .map(|s| s.name)
+                .collect::<Vec<_>>()
+                .join(", ")
+        );
+    }
+    let ext = p.extension().and_then(|e| e.to_str()).unwrap_or("");
+    Ok(match ext {
+        "bbfs" => io::read_binary(p)?,
+        "mtx" => io::read_matrix_market(p)?.0,
+        _ => io::read_edge_list(p, None)?.0,
+    })
+}
+
+fn suite_spec(name: &str) -> Option<GraphSpec> {
+    table1_suite().into_iter().find(|s| s.name == name)
+}
+
+fn cmd_run(argv: Vec<String>) -> Result<()> {
+    let spec = Args::new("butterfly-bfs run", "distributed ButterFly BFS traversal")
+        .req("graph", "suite graph name or path (.bbfs/.mtx/edge list)")
+        .opt("nodes", "16", "number of simulated compute nodes")
+        .opt("fanout", "4", "butterfly fanout (1 = classic butterfly)")
+        .opt("pattern", "butterfly", "butterfly | alltoall | iterative")
+        .opt("payload", "auto", "payload encoding: queue | bitmap | auto")
+        .opt("root", "0", "BFS root vertex")
+        .opt("scale-delta", "0", "suite graph scale adjustment (+/- log2)")
+        .opt("net", "dgx2", "interconnect: dgx2 | dgx-a100 | pcie3 | dyn-alloc")
+        .opt("direction", "topdown", "phase-1 direction: topdown | bottomup | diropt")
+        .flag("no-lrb", "disable LRB load balancing")
+        .flag("parallel", "run Phase 1 on threads")
+        .flag("json", "dump metrics as JSON");
+    let a = handle_help(spec.clone().parse(argv), &spec)?;
+
+    let g = load_graph(&a.get("graph"), a.get_parse::<i32>("scale-delta")?)?;
+    let nodes = a.get_usize("nodes")?;
+    let pattern = match a.get("pattern").as_str() {
+        "butterfly" => PatternKind::Butterfly { fanout: a.get_parse("fanout")? },
+        "alltoall" => PatternKind::AllToAllConcurrent,
+        "iterative" => PatternKind::AllToAllIterative,
+        p => bail!("unknown pattern {p:?}"),
+    };
+    let payload = match a.get("payload").as_str() {
+        "queue" => PayloadEncoding::Queue,
+        "bitmap" => PayloadEncoding::Bitmap,
+        "auto" => PayloadEncoding::Auto,
+        p => bail!("unknown payload {p:?}"),
+    };
+    let net = net_by_name(&a.get("net"))?;
+    let direction = match a.get("direction").as_str() {
+        "topdown" => DirectionMode::TopDown,
+        "bottomup" => DirectionMode::BottomUp,
+        "diropt" => DirectionMode::diropt(),
+        d => bail!("unknown direction {d:?}"),
+    };
+    let cfg = EngineConfig {
+        num_nodes: nodes,
+        pattern,
+        payload,
+        use_lrb: !a.get_flag("no-lrb"),
+        direction,
+        parallel_phase1: a.get_flag("parallel"),
+        net,
+        ..EngineConfig::dgx2(nodes, 1)
+    };
+    let mut engine = ButterflyBfs::new(&g, cfg);
+    let root = a.get_parse::<u32>("root")?;
+    let m = engine.run(root);
+    engine
+        .assert_agreement()
+        .map_err(|e| anyhow!("node disagreement: {e}"))?;
+
+    if a.get_flag("json") {
+        println!("{}", m.to_json().render());
+        return Ok(());
+    }
+    println!(
+        "graph: |V|={} |E|={}  nodes={nodes} pattern={}",
+        count(g.num_vertices() as u64),
+        count(g.num_edges()),
+        engine.config().pattern.name()
+    );
+    println!(
+        "reached {} vertices in {} levels; examined {} edges",
+        count(m.reached),
+        m.depth(),
+        count(m.edges_examined())
+    );
+    println!(
+        "wall {:.3} ms | sim-device {:.3} ms ({:.1}% comm) | sim GTEPS {:.2} (|E|/t) {:.2} (honest)",
+        m.wall_seconds * 1e3,
+        m.sim_seconds() * 1e3,
+        m.sim_comm_fraction() * 100.0,
+        m.sim_gteps(),
+        m.sim_honest_gteps()
+    );
+    println!(
+        "comm: {} messages, {} bytes over {} levels",
+        count(m.messages()),
+        count(m.bytes()),
+        m.depth()
+    );
+    Ok(())
+}
+
+fn net_by_name(name: &str) -> Result<NetModel> {
+    Ok(match name {
+        "dgx2" => NetModel::dgx2(),
+        "dgx-a100" => NetModel::dgx_a100(),
+        "pcie3" => NetModel::pcie_gen3(),
+        "dyn-alloc" => NetModel::dynamic_alloc_baseline(),
+        n => bail!("unknown net model {n:?}"),
+    })
+}
+
+fn cmd_baseline(argv: Vec<String>) -> Result<()> {
+    let spec = Args::new("butterfly-bfs baseline", "single-node CPU BFS baselines")
+        .req("graph", "suite graph name or path")
+        .opt("root", "0", "BFS root vertex")
+        .opt("scale-delta", "0", "suite graph scale adjustment")
+        .opt("algo", "both", "topdown | diropt | both");
+    let a = handle_help(spec.clone().parse(argv), &spec)?;
+    let g = load_graph(&a.get("graph"), a.get_parse::<i32>("scale-delta")?)?;
+    let root = a.get_parse::<u32>("root")?;
+    let algo = a.get("algo");
+
+    let mut t = Table::new(&["algo", "time_ms", "gteps(|E|/t)", "edges_examined", "depth"]);
+    if algo == "topdown" || algo == "both" {
+        let t0 = std::time::Instant::now();
+        let r = topdown_bfs(&g, root, true);
+        let dt = t0.elapsed().as_secs_f64();
+        t.row(vec![
+            "topdown".into(),
+            ms(dt),
+            f2(gteps(g.num_edges(), dt)),
+            count(r.edges_examined),
+            r.depth().to_string(),
+        ]);
+    }
+    if algo == "diropt" || algo == "both" {
+        let t0 = std::time::Instant::now();
+        let r = diropt_bfs(&g, root, DirOptParams::default());
+        let dt = t0.elapsed().as_secs_f64();
+        t.row(vec![
+            "diropt".into(),
+            ms(dt),
+            f2(gteps(g.num_edges(), dt)),
+            count(r.edges_examined),
+            r.levels.len().to_string(),
+        ]);
+    }
+    println!("{}", t.render());
+    Ok(())
+}
+
+fn cmd_generate(argv: Vec<String>) -> Result<()> {
+    let spec = Args::new("butterfly-bfs generate", "generate a suite graph")
+        .req("graph", "suite graph name")
+        .req("out", "output path (.bbfs binary or .txt edge list)")
+        .opt("scale-delta", "0", "scale adjustment");
+    let a = handle_help(spec.clone().parse(argv), &spec)?;
+    let g = load_graph(&a.get("graph"), a.get_parse::<i32>("scale-delta")?)?;
+    let out = a.get("out");
+    let p = Path::new(&out);
+    if out.ends_with(".bbfs") {
+        io::write_binary(&g, p)?;
+    } else {
+        io::write_edge_list(&g, p)?;
+    }
+    println!(
+        "wrote {} (|V|={}, |E|={})",
+        out,
+        count(g.num_vertices() as u64),
+        count(g.num_edges())
+    );
+    Ok(())
+}
+
+fn cmd_inspect(argv: Vec<String>) -> Result<()> {
+    let spec = Args::new("butterfly-bfs inspect", "print graph properties")
+        .req("graph", "suite graph name or path")
+        .opt("scale-delta", "0", "scale adjustment");
+    let a = handle_help(spec.clone().parse(argv), &spec)?;
+    let g = load_graph(&a.get("graph"), a.get_parse::<i32>("scale-delta")?)?;
+    let ds = props::degree_stats(&g);
+    let cc = props::connected_components(&g);
+    let diam = props::pseudo_diameter(&g, 0);
+    println!("vertices:      {}", count(g.num_vertices() as u64));
+    println!("arcs:          {}", count(g.num_edges()));
+    println!("degree:        min {} mean {:.2} max {}", ds.min, ds.mean, ds.max);
+    println!("components:    {} (largest {:.1}%)", cc.count(), cc.largest_fraction() * 100.0);
+    println!("pseudo-diam:   {diam}");
+    println!("log2 degree histogram: {:?}", ds.log2_hist);
+    Ok(())
+}
+
+fn cmd_schedule(argv: Vec<String>) -> Result<()> {
+    let spec = Args::new("butterfly-bfs schedule", "print a communication schedule")
+        .opt("nodes", "16", "number of compute nodes")
+        .opt("fanout", "1", "butterfly fanout")
+        .opt("pattern", "butterfly", "butterfly | alltoall | iterative")
+        .opt("payload-mb", "1", "per-message payload (MB) for pricing")
+        .opt("net", "dgx2", "interconnect model")
+        .flag("verbose", "print every transfer");
+    let a = handle_help(spec.clone().parse(argv), &spec)?;
+    let cn = a.get_parse::<u32>("nodes")?;
+    let pattern: Box<dyn CommPattern> = match a.get("pattern").as_str() {
+        "butterfly" => Box::new(Butterfly::new(a.get_parse("fanout")?)),
+        "alltoall" => Box::new(ConcurrentAllToAll),
+        "iterative" => Box::new(IterativeAllToAll),
+        p => bail!("unknown pattern {p:?}"),
+    };
+    let s = pattern.schedule(cn);
+    s.validate().map_err(|e| anyhow!(e))?;
+    butterfly_bfs::comm::analysis::verify_full_coverage(&s).map_err(|e| anyhow!(e))?;
+    let payload = (a.get_f64("payload-mb")? * 1024.0 * 1024.0) as u64;
+    let net = net_by_name(&a.get("net"))?;
+    let timing = simulate_uniform(&s, &net, payload);
+    println!(
+        "{} over {cn} nodes: {} rounds, {} messages, max sends/round {}, max recvs/round {}",
+        pattern.name(),
+        s.depth(),
+        s.total_messages(),
+        s.max_sends_per_round(),
+        s.max_recvs_per_round(),
+    );
+    println!(
+        "simulated on {}: total {:.3} ms ({} bytes)",
+        net.name,
+        timing.total() * 1e3,
+        count(timing.total_bytes)
+    );
+    for (i, (round, t)) in s.rounds.iter().zip(&timing.round_times).enumerate() {
+        println!("  round {i}: {} transfers, {:.3} ms", round.len(), t * 1e3);
+        if a.get_flag("verbose") {
+            for tr in round {
+                println!("    {} -> {}", tr.src, tr.dst);
+            }
+        }
+    }
+    Ok(())
+}

@@ -1,0 +1,8 @@
+//! Interconnect and device models + the timing simulator that prices
+//! communication schedules (DESIGN.md §2: the NVSwitch substitution).
+
+pub mod model;
+pub mod sim;
+
+pub use model::{DeviceModel, Fabric, NetModel};
+pub use sim::{simulate_schedule, simulate_uniform, CommTiming};

@@ -1,0 +1,194 @@
+//! Interconnect models: the hardware parameters that price a communication
+//! schedule into time.
+//!
+//! The paper's testbed is NVSwitch: "each GPU has six incoming and
+//! outgoing links at 25 GB/s (each) … a GPU can send and receive 150 GB/s
+//! concurrently", with uniform latency between all pairs (§4 DGX-2). The
+//! presets capture that, plus the architectures the related work ran on
+//! (PCIe shared bus for the Gunrock/Groute era, a ring, and DGX-A100).
+
+/// How concurrent messages from one node share the interconnect.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum Fabric {
+    /// Per-node point-to-point links through a non-blocking switch
+    /// (NVSwitch): each node owns `ports` full-duplex links; different
+    /// nodes never contend with each other.
+    Switched,
+    /// One bus shared by every node (PCI-E era): all traffic in a round is
+    /// serialized over the single shared capacity.
+    SharedBus,
+}
+
+/// An interconnect model.
+#[derive(Clone, Copy, Debug)]
+pub struct NetModel {
+    /// Human-readable preset name.
+    pub name: &'static str,
+    /// Sharing discipline.
+    pub fabric: Fabric,
+    /// Bandwidth of one link in bytes/second (25 GB/s per NVLink).
+    pub link_bandwidth: f64,
+    /// Full-duplex links per node (6 on a DGX-2 V100).
+    pub ports_per_node: u32,
+    /// Per-message latency in seconds (setup + switch traversal).
+    pub latency: f64,
+    /// Per-message software overhead for *dynamically allocated* receive
+    /// buffers, in seconds. 0 for preallocated buffers (the paper's
+    /// design); > 0 models Gunrock/Groute-style `cudaMalloc`-per-level
+    /// behavior (§5 "Both Gunrock and Groute need to use dynamic memory
+    /// allocations for the buffers used for transferring the frontiers").
+    pub alloc_overhead: f64,
+}
+
+impl NetModel {
+    /// DGX-2 / NVSwitch: 6 × 25 GB/s per V100, ~2 µs message latency.
+    pub fn dgx2() -> Self {
+        Self {
+            name: "dgx2-nvswitch",
+            fabric: Fabric::Switched,
+            link_bandwidth: 25.0e9,
+            ports_per_node: 6,
+            latency: 2.0e-6,
+            alloc_overhead: 0.0,
+        }
+    }
+
+    /// DGX-A100: 12 × 50 GB/s NVLink3 per A100.
+    pub fn dgx_a100() -> Self {
+        Self {
+            name: "dgx-a100-nvswitch",
+            fabric: Fabric::Switched,
+            link_bandwidth: 50.0e9,
+            ports_per_node: 12,
+            latency: 2.0e-6,
+            alloc_overhead: 0.0,
+        }
+    }
+
+    /// PCI-E gen3 ×16 shared bus (the multi-GPU era the related work ran
+    /// on): 16 GB/s shared by everyone, 10 µs latency.
+    pub fn pcie_gen3() -> Self {
+        Self {
+            name: "pcie3-shared",
+            fabric: Fabric::SharedBus,
+            link_bandwidth: 16.0e9,
+            ports_per_node: 1,
+            latency: 10.0e-6,
+            alloc_overhead: 0.0,
+        }
+    }
+
+    /// A Gunrock/Groute-style configuration: switched NVLink-class fabric
+    /// but with dynamic buffer allocation on every message (§5's
+    /// explanation for their negative scaling).
+    pub fn dynamic_alloc_baseline() -> Self {
+        Self {
+            name: "nvswitch-dynamic-alloc",
+            alloc_overhead: 150.0e-6, // ~cudaMalloc+free cost per buffer
+            ..Self::dgx2()
+        }
+    }
+
+    /// Aggregate send (or receive) bandwidth of one node.
+    pub fn node_bandwidth(&self) -> f64 {
+        self.link_bandwidth * self.ports_per_node as f64
+    }
+}
+
+/// Compute-side device model: prices Phase-1 traversal work into time, so
+/// simulated end-to-end level times = compute + communication.
+#[derive(Clone, Copy, Debug)]
+pub struct DeviceModel {
+    /// Preset name.
+    pub name: &'static str,
+    /// Sustainable edge-examination rate (edges/second) for one device.
+    pub edge_rate: f64,
+    /// Per-level fixed overhead (kernel launches, LRB binning dispatch).
+    pub level_overhead: f64,
+    /// Cost multiplier for *bottom-up* edge examinations: the child-finds-
+    /// parent probe is a dependent random access into the frontier bitmap
+    /// with an unpredictable early exit — several times the cost of a
+    /// streamed top-down adjacency read. This is why the paper's measured
+    /// CPU DO/TD gains (Table 1: 1.07-10.5x) sit well below the raw
+    /// examined-edge reduction.
+    pub bu_edge_factor: f64,
+}
+
+impl DeviceModel {
+    /// NVIDIA V100 (SXM3) running an LRB-balanced top-down kernel.
+    ///
+    /// Calibrated from the paper's own GAP_kron row: 4.22 B arcs in
+    /// 0.01 s on 16 GPUs ⇒ ≈26 GTEPS sustained per GPU; we use 22 GTEPS
+    /// (HBM2-bound: 900 GB/s ÷ ~40 B of amortized traffic per examined
+    /// edge with LRB-coalesced adjacency reads).
+    pub fn v100() -> Self {
+        Self {
+            name: "v100",
+            edge_rate: 22.0e9,
+            level_overhead: 12.0e-6,
+            bu_edge_factor: 3.0,
+        }
+    }
+
+    /// A 48-core Skylake server (the paper's CPU comparator, all cores).
+    ///
+    /// Calibrated from the paper's GAP_kron CPU-TD row: 4.22 B arcs in
+    /// 3.04 s ⇒ ≈1.4 GTEPS examined across 96 threads.
+    pub fn xeon_8168_dual() -> Self {
+        Self {
+            name: "2x-xeon-8168",
+            edge_rate: 1.4e9,
+            level_overhead: 8.0e-6,
+            bu_edge_factor: 4.0,
+        }
+    }
+
+    /// Time to examine `edges` edges in one top-down level on this device.
+    pub fn level_time(&self, edges: u64) -> f64 {
+        self.level_time_dir(edges, false)
+    }
+
+    /// Time for one level, direction-aware (bottom-up edges pay
+    /// [`DeviceModel::bu_edge_factor`]).
+    pub fn level_time_dir(&self, edges: u64, bottom_up: bool) -> f64 {
+        let factor = if bottom_up { self.bu_edge_factor } else { 1.0 };
+        self.level_overhead + edges as f64 * factor / self.edge_rate
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn dgx2_matches_published_numbers() {
+        let m = NetModel::dgx2();
+        // §4: "a GPU can send and receive 150GB/s concurrently".
+        assert!((m.node_bandwidth() - 150.0e9).abs() < 1.0);
+        assert_eq!(m.ports_per_node, 6);
+        assert_eq!(m.fabric, Fabric::Switched);
+    }
+
+    #[test]
+    fn pcie_is_shared_and_slower() {
+        let p = NetModel::pcie_gen3();
+        let d = NetModel::dgx2();
+        assert_eq!(p.fabric, Fabric::SharedBus);
+        assert!(p.node_bandwidth() < d.node_bandwidth() / 5.0);
+    }
+
+    #[test]
+    fn device_level_time_scales_with_edges() {
+        let v = DeviceModel::v100();
+        let t1 = v.level_time(1_000_000);
+        let t2 = v.level_time(2_000_000);
+        assert!(t2 > t1);
+        assert!(v.level_time(0) == v.level_overhead);
+    }
+
+    #[test]
+    fn dynamic_alloc_has_positive_overhead() {
+        assert!(NetModel::dynamic_alloc_baseline().alloc_overhead > 0.0);
+        assert_eq!(NetModel::dgx2().alloc_overhead, 0.0);
+    }
+}

@@ -1,0 +1,192 @@
+//! Interconnect timing simulator: prices a [`Schedule`]'s rounds into
+//! seconds under a [`NetModel`].
+//!
+//! Round time under the **switched** fabric = the slowest node's
+//! serialization: a node sending `k` messages over `p` ports pays
+//! `latency·ceil(k/p)` of setup plus `max(largest single message /
+//! link_bw, total bytes / (p·link_bw))` of wire time; receive side is
+//! symmetric (full duplex). This is what turns the Fig 1(f) hotspot
+//! (node 8 serving 8 messages with 6 ports) into the 8→9-GPU slowdown the
+//! paper shows in Fig 3.
+//!
+//! Under the **shared bus**, everything in the round serializes:
+//! `latency·max_msgs_per_node + total_round_bytes / link_bw`.
+
+use super::model::{Fabric, NetModel};
+use crate::comm::pattern::Schedule;
+
+/// Timing breakdown of a simulated synchronization.
+#[derive(Clone, Debug, Default, PartialEq)]
+pub struct CommTiming {
+    /// Per-round times in seconds.
+    pub round_times: Vec<f64>,
+    /// Total bytes shipped.
+    pub total_bytes: u64,
+    /// Total messages.
+    pub total_messages: u64,
+}
+
+impl CommTiming {
+    /// Total synchronization time.
+    pub fn total(&self) -> f64 {
+        self.round_times.iter().sum()
+    }
+}
+
+/// Price `schedule` with per-transfer payload sizes supplied by
+/// `payload_bytes(round, transfer_index)` (the engine passes real measured
+/// queue/bitmap sizes; analyses pass a constant).
+pub fn simulate_schedule<F>(s: &Schedule, net: &NetModel, mut payload_bytes: F) -> CommTiming
+where
+    F: FnMut(usize, usize) -> u64,
+{
+    let mut timing = CommTiming::default();
+    for (ri, round) in s.rounds.iter().enumerate() {
+        let mut send_bytes = vec![0u64; s.num_nodes as usize];
+        let mut recv_bytes = vec![0u64; s.num_nodes as usize];
+        let mut send_msgs = vec![0u32; s.num_nodes as usize];
+        let mut recv_msgs = vec![0u32; s.num_nodes as usize];
+        let mut max_payload = vec![0u64; s.num_nodes as usize];
+        let mut round_bytes = 0u64;
+        for (ti, t) in round.iter().enumerate() {
+            let bytes = payload_bytes(ri, ti);
+            send_bytes[t.src as usize] += bytes;
+            recv_bytes[t.dst as usize] += bytes;
+            send_msgs[t.src as usize] += 1;
+            recv_msgs[t.dst as usize] += 1;
+            max_payload[t.src as usize] = max_payload[t.src as usize].max(bytes);
+            max_payload[t.dst as usize] = max_payload[t.dst as usize].max(bytes);
+            round_bytes += bytes;
+        }
+        timing.total_bytes += round_bytes;
+        timing.total_messages += round.len() as u64;
+        let ports = net.ports_per_node as f64;
+        let t_round = match net.fabric {
+            Fabric::Switched => (0..s.num_nodes as usize)
+                .map(|g| {
+                    let setup_send =
+                        net.latency * (send_msgs[g] as f64 / ports).ceil();
+                    let setup_recv =
+                        net.latency * (recv_msgs[g] as f64 / ports).ceil();
+                    let alloc = net.alloc_overhead * recv_msgs[g] as f64;
+                    // Messages are discrete: a node with k messages over p
+                    // links needs ceil(k/p) serialized slots per link (the
+                    // Fig 1(f) makespan), lower-bounded by the aggregate
+                    // bandwidth limit.
+                    let makespan = |msgs: u32, bytes: u64| -> f64 {
+                        let slots = (msgs as f64 / ports).ceil();
+                        (bytes as f64 / net.node_bandwidth())
+                            .max(slots * max_payload[g] as f64 / net.link_bandwidth)
+                    };
+                    let wire_send = makespan(send_msgs[g], send_bytes[g]);
+                    let wire_recv = makespan(recv_msgs[g], recv_bytes[g]);
+                    (setup_send + wire_send).max(setup_recv + wire_recv) + alloc
+                })
+                .fold(0.0, f64::max),
+            Fabric::SharedBus => {
+                let max_msgs = send_msgs.iter().copied().max().unwrap_or(0) as f64;
+                let alloc: f64 = recv_msgs
+                    .iter()
+                    .map(|&m| net.alloc_overhead * m as f64)
+                    .sum();
+                net.latency * max_msgs
+                    + round_bytes as f64 / net.link_bandwidth
+                    + alloc
+            }
+        };
+        timing.round_times.push(t_round);
+    }
+    timing
+}
+
+/// Price a schedule with a constant per-message payload (bitmap mode:
+/// every frontier message is `ceil(V/64)·8` bytes).
+pub fn simulate_uniform(s: &Schedule, net: &NetModel, payload: u64) -> CommTiming {
+    simulate_schedule(s, net, |_, _| payload)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::comm::alltoall::ConcurrentAllToAll;
+    use crate::comm::butterfly::Butterfly;
+    use crate::comm::pattern::CommPattern;
+    use crate::net::model::NetModel;
+
+    const MB: u64 = 1 << 20;
+
+    #[test]
+    fn single_message_wire_time() {
+        // One 25 MB message over one 25 GB/s link ≈ 1 ms + latency.
+        let s = Butterfly::new(1).schedule(2);
+        let t = simulate_uniform(&s, &NetModel::dgx2(), 25 * MB);
+        assert_eq!(t.total_messages, 2);
+        let expect = 2.0e-6 + 25.0 * MB as f64 / 25.0e9;
+        assert!((t.total() - expect).abs() / expect < 1e-6, "{}", t.total());
+    }
+
+    #[test]
+    fn eight_to_nine_gpu_regression_fanout1() {
+        // The paper's Fig 3 pathology: fanout-1 at 9 nodes is *slower*
+        // than at 8 nodes despite more compute, because node 8 serves
+        // everyone in the last round.
+        let net = NetModel::dgx2();
+        let t8 = simulate_uniform(&Butterfly::new(1).schedule(8), &net, MB).total();
+        let t9 = simulate_uniform(&Butterfly::new(1).schedule(9), &net, MB).total();
+        assert!(t9 > t8 * 1.5, "t8={t8} t9={t9}");
+        // ... and fanout 4 does not regress nearly as hard (§5 "This
+        // bottleneck does not happen for the larger fanout four").
+        let f8 = simulate_uniform(&Butterfly::new(4).schedule(8), &net, MB).total();
+        let f9 = simulate_uniform(&Butterfly::new(4).schedule(9), &net, MB).total();
+        assert!(f9 / f8 < t9 / t8, "f4 ratio {} vs f1 ratio {}", f9 / f8, t9 / t8);
+    }
+
+    #[test]
+    fn fanout4_faster_than_fanout1_at_16_nodes() {
+        // §5 Fanout Difference: at 16 GPUs fanout 4 needs 2 rounds vs 4,
+        // and wins on synchronization time.
+        let net = NetModel::dgx2();
+        let f1 = simulate_uniform(&Butterfly::new(1).schedule(16), &net, MB).total();
+        let f4 = simulate_uniform(&Butterfly::new(4).schedule(16), &net, MB).total();
+        assert!(f4 < f1, "f4={f4} f1={f1}");
+    }
+
+    #[test]
+    fn butterfly_beats_concurrent_alltoall_on_shared_bus() {
+        // On a shared bus the message count dominates; butterfly's
+        // CN·log CN wins over CN².
+        let net = NetModel::pcie_gen3();
+        let bf = simulate_uniform(&Butterfly::new(1).schedule(16), &net, MB).total();
+        let aa = simulate_uniform(&ConcurrentAllToAll.schedule(16), &net, MB).total();
+        assert!(bf < aa, "bf={bf} aa={aa}");
+    }
+
+    #[test]
+    fn dynamic_alloc_overhead_dominates_small_payloads() {
+        // Gunrock/Groute-style dynamic allocation makes many-message
+        // patterns catastrophically slower for small frontiers.
+        let fast = NetModel::dgx2();
+        let slow = NetModel::dynamic_alloc_baseline();
+        let s = ConcurrentAllToAll.schedule(16);
+        let t_fast = simulate_uniform(&s, &fast, 4096).total();
+        let t_slow = simulate_uniform(&s, &slow, 4096).total();
+        assert!(t_slow > t_fast * 50.0, "fast={t_fast} slow={t_slow}");
+    }
+
+    #[test]
+    fn empty_schedule_zero_time() {
+        let s = Butterfly::new(1).schedule(1);
+        let t = simulate_uniform(&s, &NetModel::dgx2(), MB);
+        assert_eq!(t.total(), 0.0);
+        assert_eq!(t.total_bytes, 0);
+    }
+
+    #[test]
+    fn bytes_accounting() {
+        let s = Butterfly::new(4).schedule(16); // 96 messages
+        let t = simulate_uniform(&s, &NetModel::dgx2(), 1000);
+        assert_eq!(t.total_bytes, 96_000);
+        assert_eq!(t.total_messages, 96);
+        assert_eq!(t.round_times.len(), 2);
+    }
+}

@@ -1,0 +1,15 @@
+//! Graph partitioning across compute nodes.
+//!
+//! The paper deliberately uses "a straightforward 1D partitioning scheme
+//! where we divide the vertices to the multiple GPUs such that each GPU
+//! gets a near equal number of edges and the vertices are consecutive in
+//! their ids" (§4 Graph Partitioning). [`one_d`] is that scheme; [`relabel`]
+//! implements the degree-sort vertex relabeling the paper defers to future
+//! work (built here as an ablation).
+
+pub mod one_d;
+pub mod relabel;
+pub mod two_d;
+
+pub use one_d::{partition_1d, Partition1D};
+pub use two_d::Partition2D;

@@ -1,0 +1,139 @@
+//! 2D (grid) partitioning analysis.
+//!
+//! The paper's §2 cites Yoo et al.'s BlueGene/L result that 2D
+//! partitioning "can help reduce the number of messages from P to √P",
+//! and §4 notes Alg. 2 "can also work with 2D partitioning" while the
+//! implementation deliberately stays 1D. This module makes that
+//! discussion executable: a rectangular processor-grid partition of the
+//! adjacency matrix, its ownership/routing rules, and closed-form
+//! synchronization-cost comparisons against 1D — used by the ablation
+//! bench and tests, matching the paper's scoping (analysis, not the
+//! engine's layout).
+
+use crate::graph::csr::{Csr, VertexId};
+
+/// A `rows × cols` processor grid over the adjacency matrix: processor
+/// `(i, j)` owns the edge blocks with source range `i` and target range
+/// `j`; vertex `v` is *primarily* owned by the diagonal holder of its
+/// range.
+#[derive(Clone, Debug)]
+pub struct Partition2D {
+    /// Processor-grid rows.
+    pub grid_rows: u32,
+    /// Processor-grid columns.
+    pub grid_cols: u32,
+    /// Vertex-range cut points (length `max(grid_rows, grid_cols) + 1`
+    /// conceptually; we use a single 1D range split reused on both axes).
+    pub cuts: Vec<VertexId>,
+}
+
+impl Partition2D {
+    /// Build a 2D partition over `g` with a `rows × cols` grid
+    /// (vertex ranges split evenly by vertex count on both axes).
+    pub fn new(g: &Csr, rows: u32, cols: u32) -> Self {
+        assert!(rows >= 1 && cols >= 1);
+        let n = g.num_vertices();
+        let ranges = rows.max(cols) as usize;
+        assert!(ranges <= n.max(1), "grid larger than vertex count");
+        let mut cuts = Vec::with_capacity(ranges + 1);
+        for i in 0..=ranges {
+            cuts.push((n * i / ranges) as VertexId);
+        }
+        Self { grid_rows: rows, grid_cols: cols, cuts }
+    }
+
+    /// Number of processors.
+    pub fn processors(&self) -> u32 {
+        self.grid_rows * self.grid_cols
+    }
+
+    /// Vertex-range index of `v`.
+    fn range_of(&self, v: VertexId) -> u32 {
+        (self.cuts.partition_point(|&c| c <= v) - 1) as u32
+    }
+
+    /// Processor owning edge block `(u → w)`: row range of `u`, column
+    /// range of `w` (folded into the grid).
+    pub fn edge_owner(&self, u: VertexId, w: VertexId) -> (u32, u32) {
+        (
+            self.range_of(u) % self.grid_rows,
+            self.range_of(w) % self.grid_cols,
+        )
+    }
+
+    /// Per-level message count for a 2D-partitioned BFS: each processor
+    /// exchanges along its row (fold) and column (expand) — `√P − 1`
+    /// partners each for a square grid (Yoo et al.).
+    pub fn messages_per_level(&self) -> u64 {
+        let p = self.processors() as u64;
+        let row_msgs = (self.grid_cols as u64 - 1) * p;
+        let col_msgs = (self.grid_rows as u64 - 1) * p;
+        row_msgs + col_msgs
+    }
+
+    /// The 1D all-to-all comparator: `P·(P−1)` messages per level.
+    pub fn messages_per_level_1d_alltoall(&self) -> u64 {
+        let p = self.processors() as u64;
+        p * (p - 1)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::graph::gen::urand::uniform_random;
+
+    #[test]
+    fn square_grid_reduces_messages_sqrt_p() {
+        let (g, _) = uniform_random(1000, 4, 1);
+        // P = 16 as a 4x4 grid: 2·(4−1)·16 = 96 messages vs 240 all-to-all.
+        let p2 = Partition2D::new(&g, 4, 4);
+        assert_eq!(p2.processors(), 16);
+        assert_eq!(p2.messages_per_level(), 96);
+        assert_eq!(p2.messages_per_level_1d_alltoall(), 240);
+        assert!(p2.messages_per_level() < p2.messages_per_level_1d_alltoall());
+    }
+
+    #[test]
+    fn degenerate_1xp_grid_is_1d() {
+        let (g, _) = uniform_random(100, 4, 2);
+        let p2 = Partition2D::new(&g, 1, 8);
+        // 1×P grid: row exchange = (P−1)·P = the all-to-all count.
+        assert_eq!(p2.messages_per_level(), 7 * 8);
+    }
+
+    #[test]
+    fn edge_owner_in_grid() {
+        let (g, _) = uniform_random(160, 4, 3);
+        let p2 = Partition2D::new(&g, 4, 4);
+        for u in (0..160).step_by(13) {
+            for w in (0..160).step_by(17) {
+                let (r, c) = p2.edge_owner(u as VertexId, w as VertexId);
+                assert!(r < 4 && c < 4);
+            }
+        }
+    }
+
+    #[test]
+    fn ranges_cover_all_vertices() {
+        let (g, _) = uniform_random(97, 4, 4); // prime count: uneven cuts
+        let p2 = Partition2D::new(&g, 3, 3);
+        assert_eq!(p2.cuts[0], 0);
+        assert_eq!(*p2.cuts.last().unwrap(), 97);
+        for v in 0..97u32 {
+            let r = p2.range_of(v);
+            assert!(v >= p2.cuts[r as usize] && v < p2.cuts[r as usize + 1]);
+        }
+    }
+
+    #[test]
+    fn butterfly_still_beats_2d_on_messages_at_dgx2_scale() {
+        // The paper's implicit claim: at P = 16, butterfly fanout-1 (64
+        // messages over 4 rounds) undercuts even the 2D scheme's 96.
+        use crate::comm::{Butterfly, CommPattern};
+        let (g, _) = uniform_random(1000, 4, 5);
+        let p2 = Partition2D::new(&g, 4, 4);
+        let bf = Butterfly::new(1).schedule(16).total_messages();
+        assert!(bf < p2.messages_per_level(), "{bf} vs {}", p2.messages_per_level());
+    }
+}

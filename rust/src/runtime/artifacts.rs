@@ -1,0 +1,80 @@
+//! Artifact discovery: locates the HLO text files `make artifacts`
+//! produces under `artifacts/`.
+
+use std::path::{Path, PathBuf};
+
+/// Identifies one compiled model variant.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub struct ArtifactKey {
+    /// Padded vertex count the step was lowered for.
+    pub num_vertices: usize,
+}
+
+impl ArtifactKey {
+    /// File name of this variant.
+    pub fn file_name(&self) -> String {
+        format!("frontier_step_v{}.hlo.txt", self.num_vertices)
+    }
+}
+
+/// The artifact sizes `python/compile/aot.py` emits, ascending.
+pub const ARTIFACT_SIZES: &[usize] = &[256, 1024, 2048];
+
+/// Artifact directory: `$BBFS_ARTIFACTS` if set, else `./artifacts`
+/// relative to the current directory, else relative to the crate root
+/// (for `cargo test` runs from anywhere inside the workspace).
+pub fn artifact_dir() -> PathBuf {
+    if let Ok(p) = std::env::var("BBFS_ARTIFACTS") {
+        return PathBuf::from(p);
+    }
+    let cwd = PathBuf::from("artifacts");
+    if cwd.is_dir() {
+        return cwd;
+    }
+    // CARGO_MANIFEST_DIR is compiled in; works for tests/benches/examples.
+    Path::new(env!("CARGO_MANIFEST_DIR")).join("artifacts")
+}
+
+/// Find the artifact for `key`, if built.
+pub fn find_artifact(key: ArtifactKey) -> Option<PathBuf> {
+    let p = artifact_dir().join(key.file_name());
+    p.is_file().then_some(p)
+}
+
+/// Smallest compiled variant that fits `num_vertices` (artifacts are
+/// padded; a graph with 700 vertices runs on the v1024 variant).
+pub fn variant_for(num_vertices: usize) -> Option<ArtifactKey> {
+    ARTIFACT_SIZES
+        .iter()
+        .copied()
+        .find(|&v| v >= num_vertices)
+        .map(|v| ArtifactKey { num_vertices: v })
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn file_names() {
+        assert_eq!(
+            ArtifactKey { num_vertices: 1024 }.file_name(),
+            "frontier_step_v1024.hlo.txt"
+        );
+    }
+
+    #[test]
+    fn variant_selection() {
+        assert_eq!(variant_for(100).unwrap().num_vertices, 256);
+        assert_eq!(variant_for(256).unwrap().num_vertices, 256);
+        assert_eq!(variant_for(257).unwrap().num_vertices, 1024);
+        assert_eq!(variant_for(2048).unwrap().num_vertices, 2048);
+        assert!(variant_for(1 << 20).is_none());
+    }
+
+    #[test]
+    fn artifact_dir_resolves() {
+        let d = artifact_dir();
+        assert!(d.to_string_lossy().contains("artifacts"));
+    }
+}

@@ -1,0 +1,61 @@
+//! Process-wide PJRT client.
+//!
+//! One `PjRtClient::cpu()` per process (the client owns the thread pool
+//! and device state; constructing several wastes memory). `RuntimeClient`
+//! is a thin handle; `global()` hands out the lazily created singleton.
+
+use anyhow::{Context, Result};
+use std::sync::OnceLock;
+
+/// Shared handle to the PJRT CPU client.
+pub struct RuntimeClient {
+    client: xla::PjRtClient,
+}
+
+// SAFETY: PJRT clients are documented thread-compatible for compilation
+// and execution (XLA's PJRT C API contract); the Rust wrapper only lacks
+// the marker because it stores a raw pointer.
+unsafe impl Send for RuntimeClient {}
+unsafe impl Sync for RuntimeClient {}
+
+static GLOBAL: OnceLock<RuntimeClient> = OnceLock::new();
+
+impl RuntimeClient {
+    /// Create a fresh CPU client (prefer [`RuntimeClient::global`]).
+    pub fn new() -> Result<Self> {
+        let client = xla::PjRtClient::cpu().context("creating PJRT CPU client")?;
+        Ok(Self { client })
+    }
+
+    /// The process-wide client (created on first use).
+    pub fn global() -> &'static RuntimeClient {
+        GLOBAL.get_or_init(|| Self::new().expect("PJRT CPU client must initialize"))
+    }
+
+    /// Underlying xla client.
+    pub fn raw(&self) -> &xla::PjRtClient {
+        &self.client
+    }
+
+    /// Platform name ("cpu" here; "cuda"/"tpu" on real devices).
+    pub fn platform(&self) -> String {
+        self.client.platform_name()
+    }
+
+    /// Compile an HLO computation for this client.
+    pub fn compile(&self, comp: &xla::XlaComputation) -> Result<xla::PjRtLoadedExecutable> {
+        self.client.compile(comp).context("PJRT compile")
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn global_client_initializes_cpu() {
+        let c = RuntimeClient::global();
+        assert_eq!(c.platform(), "cpu");
+        assert!(c.raw().device_count() >= 1);
+    }
+}

@@ -1,0 +1,143 @@
+//! A loaded frontier-step executable.
+//!
+//! The artifact is the L2 JAX model (`python/compile/model.py`) lowered to
+//! HLO text: `frontier_step(adj, frontier, visited) -> (new,)` over
+//! `f32[V,V], f32[V], f32[V]` with 0/1 values, where
+//! `new = saturate(frontier @ adj) * (1 - visited)` — one BFS level in the
+//! Buluç–Madduri BLAS formulation, with the inner product computed by the
+//! L1 Pallas kernel.
+
+use super::client::RuntimeClient;
+use anyhow::{anyhow, Context, Result};
+use std::path::Path;
+
+/// A compiled, ready-to-execute frontier step of a fixed padded size.
+pub struct FrontierStep {
+    exe: xla::PjRtLoadedExecutable,
+    /// Padded vertex count `V` the artifact was lowered for.
+    pub num_vertices: usize,
+}
+
+// SAFETY: PJRT executables are thread-compatible (see client.rs); the
+// wrapper type only stores an opaque handle.
+unsafe impl Send for FrontierStep {}
+unsafe impl Sync for FrontierStep {}
+
+impl FrontierStep {
+    /// Load HLO text from `path` and compile it for the global CPU client.
+    pub fn load(path: &Path, num_vertices: usize) -> Result<Self> {
+        let proto = xla::HloModuleProto::from_text_file(
+            path.to_str().ok_or_else(|| anyhow!("non-utf8 path"))?,
+        )
+        .with_context(|| format!("parsing HLO text {}", path.display()))?;
+        let comp = xla::XlaComputation::from_proto(&proto);
+        let exe = RuntimeClient::global().compile(&comp)?;
+        Ok(Self { exe, num_vertices })
+    }
+
+    /// Build the dense 0/1 adjacency literal for one node's slab, padded
+    /// to `V×V`: `adj[i][j] = 1` iff the slab owns global vertex `i` and
+    /// has arc `i → j`. Build once per node, reuse across levels
+    /// (device-resident graph, as on the real GPU).
+    pub fn adjacency_literal(&self, slab: &crate::graph::csr::CsrSlab) -> Result<xla::Literal> {
+        let v = self.num_vertices;
+        assert!(
+            (slab.end_vertex() as usize) <= v,
+            "slab exceeds artifact size {v}"
+        );
+        let mut dense = vec![0f32; v * v];
+        for r in 0..slab.num_rows() {
+            let g = slab.first_vertex + r as u32;
+            for &u in slab.neighbors_global(g) {
+                dense[g as usize * v + u as usize] = 1.0;
+            }
+        }
+        xla::Literal::vec1(&dense)
+            .reshape(&[v as i64, v as i64])
+            .context("reshaping adjacency literal")
+    }
+
+    /// Execute one level step. `frontier`/`visited` are 0/1 f32 vectors of
+    /// length `V`. Returns the 0/1 `new` vector (discoveries).
+    pub fn run(
+        &self,
+        adj: &xla::Literal,
+        frontier: &[f32],
+        visited: &[f32],
+    ) -> Result<Vec<f32>> {
+        let v = self.num_vertices;
+        assert_eq!(frontier.len(), v);
+        assert_eq!(visited.len(), v);
+        let f = xla::Literal::vec1(frontier);
+        let vis = xla::Literal::vec1(visited);
+        // Borrowed args: the big adjacency literal is never copied.
+        let args: [&xla::Literal; 3] = [adj, &f, &vis];
+        let result = self
+            .exe
+            .execute::<&xla::Literal>(&args)
+            .context("executing frontier step")?[0][0]
+            .to_literal_sync()
+            .context("fetching result")?;
+        // aot.py lowers with return_tuple=True: unwrap the 1-tuple.
+        let out = result.to_tuple1().context("unwrapping result tuple")?;
+        Ok(out.to_vec::<f32>()?)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::runtime::artifacts::{find_artifact, ArtifactKey};
+
+    fn load_smallest() -> Option<FrontierStep> {
+        let key = ArtifactKey { num_vertices: 256 };
+        let path = find_artifact(key)?;
+        Some(FrontierStep::load(&path, 256).expect("artifact must compile"))
+    }
+
+    #[test]
+    fn step_expands_one_level() {
+        // Requires `make artifacts`; skip silently when not built so
+        // `cargo test` stays green pre-AOT (CI runs make first).
+        let Some(step) = load_smallest() else {
+            eprintln!("skipping: artifacts not built");
+            return;
+        };
+        let g = crate::graph::gen::structured::path(256);
+        let slab = g.row_slice(0, 256);
+        let adj = step.adjacency_literal(&slab).unwrap();
+        let mut frontier = vec![0f32; 256];
+        frontier[0] = 1.0;
+        let mut visited = vec![0f32; 256];
+        visited[0] = 1.0;
+        let new = step.run(&adj, &frontier, &visited).unwrap();
+        // From vertex 0 of a path: only vertex 1 discovered.
+        assert_eq!(new[1], 1.0);
+        assert_eq!(new.iter().map(|&x| x as u32).sum::<u32>(), 1);
+    }
+
+    #[test]
+    fn step_masks_visited() {
+        let Some(step) = load_smallest() else {
+            eprintln!("skipping: artifacts not built");
+            return;
+        };
+        let g = crate::graph::gen::structured::complete(16);
+        let slab = g.row_slice(0, 16);
+        let adj = step.adjacency_literal(&slab).unwrap();
+        let mut frontier = vec![0f32; 256];
+        frontier[0] = 1.0;
+        let mut visited = vec![0f32; 256];
+        visited[0] = 1.0;
+        visited[1] = 1.0; // pre-visited: must not reappear
+        let new = step.run(&adj, &frontier, &visited).unwrap();
+        assert_eq!(new[1], 0.0);
+        // Vertices 2..16 all discovered (complete graph).
+        for v in 2..16 {
+            assert_eq!(new[v], 1.0, "vertex {v}");
+        }
+        for v in 16..256 {
+            assert_eq!(new[v], 0.0, "padding vertex {v}");
+        }
+    }
+}

@@ -1,0 +1,13 @@
+//! The PJRT runtime: loads AOT-compiled HLO text artifacts (produced by
+//! `python/compile/aot.py` from the L2 JAX model + L1 Pallas kernel) and
+//! executes them from the Rust traversal path. Python never runs here.
+
+pub mod artifacts;
+pub mod client;
+pub mod executable;
+pub mod xla_backend;
+
+pub use artifacts::{artifact_dir, find_artifact, variant_for, ArtifactKey};
+pub use client::RuntimeClient;
+pub use executable::FrontierStep;
+pub use xla_backend::XlaFrontierBackend;

@@ -1,0 +1,220 @@
+//! The XLA Phase-1 backend: runs the AOT-compiled JAX/Pallas frontier step
+//! (L2+L1) as a node's traversal engine.
+//!
+//! The node's adjacency slab is densified once into a device-resident
+//! literal (the analog of the graph living in GPU HBM); each level then
+//! executes `frontier_step` and converts the 0/1 output vector back into
+//! a discovery queue. Fixed-shape artifacts cap the graph size at the
+//! largest compiled variant (2048 padded vertices) — the demo/e2e scale;
+//! the native backend covers everything larger.
+
+use super::executable::FrontierStep;
+use crate::bfs::frontier::Bitmap;
+use crate::coordinator::backend::{ComputeBackend, ExpandOutput};
+use crate::graph::csr::{CsrSlab, VertexId};
+use std::sync::Arc;
+
+/// Per-node XLA backend state.
+pub struct XlaFrontierBackend {
+    step: Arc<FrontierStep>,
+    adj: xla::Literal,
+    /// Transposed adjacency for the bottom-up step (`adjT[i][j] = adj[j][i]`;
+    /// `frontier @ adjT` computes "owned vertices with a frontier
+    /// neighbor"). Built lazily on first bottom-up call.
+    adj_t: Option<xla::Literal>,
+    /// Scratch f32 frontier/visited vectors (padded size V).
+    frontier_f32: Vec<f32>,
+    visited_f32: Vec<f32>,
+}
+
+// SAFETY: single raw-pointer-backed literal + executable handle; PJRT is
+// thread-compatible and the engine gives each backend exclusive &mut use.
+unsafe impl Send for XlaFrontierBackend {}
+
+impl XlaFrontierBackend {
+    /// Build the backend for one node. `step` may be shared by all nodes
+    /// (same compiled program, different adjacency literals).
+    pub fn new(step: Arc<FrontierStep>, slab: &CsrSlab) -> anyhow::Result<Self> {
+        let adj = step.adjacency_literal(slab)?;
+        let v = step.num_vertices;
+        Ok(Self {
+            step,
+            adj,
+            adj_t: None,
+            frontier_f32: vec![0.0; v],
+            visited_f32: vec![0.0; v],
+        })
+    }
+
+    /// Dense transposed adjacency literal for the bottom-up direction.
+    fn transposed_literal(
+        step: &FrontierStep,
+        slab: &CsrSlab,
+    ) -> anyhow::Result<xla::Literal> {
+        let v = step.num_vertices;
+        let mut dense = vec![0f32; v * v];
+        for r in 0..slab.num_rows() {
+            let g = slab.first_vertex + r as u32;
+            for &u in slab.neighbors_global(g) {
+                dense[u as usize * v + g as usize] = 1.0;
+            }
+        }
+        use anyhow::Context;
+        xla::Literal::vec1(&dense)
+            .reshape(&[v as i64, v as i64])
+            .context("reshaping transposed adjacency literal")
+    }
+
+    /// Build one backend per slab, sharing a single compiled step.
+    pub fn for_slabs(
+        step: Arc<FrontierStep>,
+        slabs: &[CsrSlab],
+    ) -> anyhow::Result<Vec<Box<dyn ComputeBackend>>> {
+        slabs
+            .iter()
+            .map(|s| {
+                Ok(Box::new(Self::new(Arc::clone(&step), s)?) as Box<dyn ComputeBackend>)
+            })
+            .collect()
+    }
+}
+
+impl ComputeBackend for XlaFrontierBackend {
+    fn name(&self) -> &'static str {
+        "xla-frontier"
+    }
+
+    fn expand(
+        &mut self,
+        slab: &CsrSlab,
+        frontier: &[VertexId],
+        visited: &mut Bitmap,
+        out: &mut ExpandOutput,
+    ) {
+        out.discovered.clear();
+        out.edges_examined = 0;
+        if frontier.is_empty() {
+            return;
+        }
+        // Encode inputs.
+        self.frontier_f32.iter_mut().for_each(|x| *x = 0.0);
+        for &v in frontier {
+            self.frontier_f32[v as usize] = 1.0;
+            out.edges_examined += slab.degree_global(v) as u64;
+        }
+        for (i, x) in self.visited_f32.iter_mut().enumerate() {
+            *x = if i < visited.len() && visited.get(i as VertexId) { 1.0 } else { 0.0 };
+        }
+        // One BLAS-formulation level step on the device.
+        let new = self
+            .step
+            .run(&self.adj, &self.frontier_f32, &self.visited_f32)
+            .expect("frontier step execution");
+        for (v, &x) in new.iter().enumerate() {
+            if x > 0.5 && v < visited.len() {
+                let v = v as VertexId;
+                if visited.test_and_set(v) {
+                    out.discovered.push(v);
+                }
+            }
+        }
+    }
+
+    fn expand_bottom_up(
+        &mut self,
+        slab: &CsrSlab,
+        frontier_full: &Bitmap,
+        visited: &mut Bitmap,
+        out: &mut ExpandOutput,
+    ) {
+        out.discovered.clear();
+        out.edges_examined = 0;
+        if frontier_full.is_empty() {
+            return;
+        }
+        if self.adj_t.is_none() {
+            self.adj_t =
+                Some(Self::transposed_literal(&self.step, slab).expect("transposed literal"));
+        }
+        // Encode the FULL frontier (bottom-up checks against everyone).
+        self.frontier_f32.iter_mut().for_each(|x| *x = 0.0);
+        for v in frontier_full.iter() {
+            self.frontier_f32[v as usize] = 1.0;
+        }
+        for (i, x) in self.visited_f32.iter_mut().enumerate() {
+            *x = if i < visited.len() && visited.get(i as VertexId) { 1.0 } else { 0.0 };
+        }
+        // frontier @ adjT = owned unvisited vertices with a parent in the
+        // frontier. The dense kernel has no early exit, so the examined
+        // count is the full slab (this is exactly the GPU bottom-up
+        // trade-off the direction heuristic weighs).
+        out.edges_examined = slab.num_edges();
+        let new = self
+            .step
+            .run(self.adj_t.as_ref().unwrap(), &self.frontier_f32, &self.visited_f32)
+            .expect("bottom-up frontier step execution");
+        for (v, &x) in new.iter().enumerate() {
+            if x > 0.5 && v < visited.len() {
+                let v = v as VertexId;
+                debug_assert!(slab.owns(v));
+                if visited.test_and_set(v) {
+                    out.discovered.push(v);
+                }
+            }
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::bfs::serial::serial_bfs;
+    use crate::coordinator::config::EngineConfig;
+    use crate::coordinator::engine::ButterflyBfs;
+    use crate::graph::gen::urand::uniform_random;
+    use crate::partition::one_d::partition_1d;
+    use crate::runtime::artifacts::{find_artifact, variant_for};
+
+    fn load_step(v: usize) -> Option<Arc<FrontierStep>> {
+        let key = variant_for(v)?;
+        let path = find_artifact(key)?;
+        Some(Arc::new(
+            FrontierStep::load(&path, key.num_vertices).expect("artifact compiles"),
+        ))
+    }
+
+    #[test]
+    fn xla_engine_matches_serial_bfs() {
+        let Some(step) = load_step(240) else {
+            eprintln!("skipping: artifacts not built");
+            return;
+        };
+        let (g, _) = uniform_random(240, 6, 11);
+        let cfg = EngineConfig::dgx2(4, 2);
+        let part = partition_1d(&g, cfg.num_nodes);
+        let backends = XlaFrontierBackend::for_slabs(step, &part.slabs(&g)).unwrap();
+        let mut engine = ButterflyBfs::with_backends(&g, cfg, backends);
+        engine.run(0);
+        engine.assert_agreement().unwrap();
+        assert_eq!(engine.dist(), &serial_bfs(&g, 0)[..]);
+    }
+
+    #[test]
+    fn xla_and_native_backends_agree() {
+        let Some(step) = load_step(200) else {
+            eprintln!("skipping: artifacts not built");
+            return;
+        };
+        let (g, _) = uniform_random(200, 4, 5);
+        let cfg = EngineConfig::dgx2(2, 1);
+        let part = partition_1d(&g, cfg.num_nodes);
+        let backends = XlaFrontierBackend::for_slabs(step, &part.slabs(&g)).unwrap();
+        let mut xla_engine = ButterflyBfs::with_backends(&g, cfg.clone(), backends);
+        let mut native = ButterflyBfs::new(&g, cfg);
+        let mx = xla_engine.run(7);
+        let mn = native.run(7);
+        assert_eq!(xla_engine.dist(), native.dist());
+        assert_eq!(mx.reached, mn.reached);
+        assert_eq!(mx.depth(), mn.depth());
+    }
+}

@@ -1,0 +1,255 @@
+//! A small declarative command-line parser (no `clap` in the offline set).
+//!
+//! Supports `--flag value`, `--flag=value`, boolean `--flag`, positional
+//! arguments, subcommands, and auto-generated `--help` text.
+
+use std::collections::BTreeMap;
+use std::fmt::Write as _;
+
+/// Specification of one option.
+#[derive(Clone, Debug)]
+struct OptSpec {
+    name: &'static str,
+    help: &'static str,
+    default: Option<String>,
+    is_bool: bool,
+}
+
+/// Declarative argument parser for one (sub)command.
+#[derive(Clone, Debug)]
+pub struct Args {
+    program: String,
+    about: &'static str,
+    opts: Vec<OptSpec>,
+    values: BTreeMap<&'static str, String>,
+    positionals: Vec<String>,
+}
+
+/// Errors produced while parsing the command line.
+#[derive(Debug, thiserror::Error)]
+pub enum CliError {
+    /// An option that was not declared.
+    #[error("unknown option --{0} (see --help)")]
+    Unknown(String),
+    /// A declared, non-boolean option with no value.
+    #[error("option --{0} requires a value")]
+    MissingValue(String),
+    /// A required option with no default that was not provided.
+    #[error("required option --{0} not provided")]
+    Required(&'static str),
+    /// Value failed to parse into the requested type.
+    #[error("option --{0}: cannot parse {1:?} as {2}")]
+    BadValue(&'static str, String, &'static str),
+    /// `--help` was requested; the caller should print and exit.
+    #[error("help requested")]
+    HelpRequested,
+}
+
+impl Args {
+    /// Start a parser for `program` with a one-line description.
+    pub fn new(program: &str, about: &'static str) -> Self {
+        Self {
+            program: program.to_string(),
+            about,
+            opts: Vec::new(),
+            values: BTreeMap::new(),
+            positionals: Vec::new(),
+        }
+    }
+
+    /// Declare an option with a default value.
+    pub fn opt(mut self, name: &'static str, default: &str, help: &'static str) -> Self {
+        self.opts.push(OptSpec {
+            name,
+            help,
+            default: Some(default.to_string()),
+            is_bool: false,
+        });
+        self
+    }
+
+    /// Declare a required option (no default).
+    pub fn req(mut self, name: &'static str, help: &'static str) -> Self {
+        self.opts.push(OptSpec { name, help, default: None, is_bool: false });
+        self
+    }
+
+    /// Declare a boolean flag (false unless present).
+    pub fn flag(mut self, name: &'static str, help: &'static str) -> Self {
+        self.opts.push(OptSpec {
+            name,
+            help,
+            default: Some("false".to_string()),
+            is_bool: true,
+        });
+        self
+    }
+
+    /// Render the help text.
+    pub fn help_text(&self) -> String {
+        let mut s = String::new();
+        let _ = writeln!(s, "{} — {}", self.program, self.about);
+        let _ = writeln!(s, "\nOptions:");
+        for o in &self.opts {
+            let kind = if o.is_bool { "" } else { " <value>" };
+            let def = match (&o.default, o.is_bool) {
+                (Some(d), false) => format!(" [default: {d}]"),
+                _ => String::new(),
+            };
+            let _ = writeln!(s, "  --{}{kind}\n      {}{def}", o.name, o.help);
+        }
+        s
+    }
+
+    /// Parse an iterator of raw arguments (not including argv[0]).
+    pub fn parse<I: IntoIterator<Item = String>>(mut self, argv: I) -> Result<Self, CliError> {
+        let mut it = argv.into_iter().peekable();
+        while let Some(arg) = it.next() {
+            if arg == "--help" || arg == "-h" {
+                return Err(CliError::HelpRequested);
+            }
+            if let Some(body) = arg.strip_prefix("--") {
+                let (name, inline) = match body.split_once('=') {
+                    Some((n, v)) => (n.to_string(), Some(v.to_string())),
+                    None => (body.to_string(), None),
+                };
+                let spec = self
+                    .opts
+                    .iter()
+                    .find(|o| o.name == name)
+                    .ok_or_else(|| CliError::Unknown(name.clone()))?
+                    .clone();
+                let value = if spec.is_bool {
+                    inline.unwrap_or_else(|| "true".to_string())
+                } else if let Some(v) = inline {
+                    v
+                } else {
+                    it.next().ok_or_else(|| CliError::MissingValue(name.clone()))?
+                };
+                self.values.insert(spec.name, value);
+            } else {
+                self.positionals.push(arg);
+            }
+        }
+        // Check required options.
+        for o in &self.opts {
+            if o.default.is_none() && !self.values.contains_key(o.name) {
+                return Err(CliError::Required(o.name));
+            }
+        }
+        Ok(self)
+    }
+
+    /// Raw string value of an option (declared default if not given).
+    pub fn get(&self, name: &'static str) -> String {
+        if let Some(v) = self.values.get(name) {
+            return v.clone();
+        }
+        self.opts
+            .iter()
+            .find(|o| o.name == name)
+            .and_then(|o| o.default.clone())
+            .unwrap_or_else(|| panic!("option --{name} not declared"))
+    }
+
+    /// Typed accessor.
+    pub fn get_parse<T: std::str::FromStr>(&self, name: &'static str) -> Result<T, CliError> {
+        let raw = self.get(name);
+        raw.parse::<T>()
+            .map_err(|_| CliError::BadValue(name, raw, std::any::type_name::<T>()))
+    }
+
+    /// `usize` accessor.
+    pub fn get_usize(&self, name: &'static str) -> Result<usize, CliError> {
+        self.get_parse(name)
+    }
+
+    /// `u64` accessor.
+    pub fn get_u64(&self, name: &'static str) -> Result<u64, CliError> {
+        self.get_parse(name)
+    }
+
+    /// `f64` accessor.
+    pub fn get_f64(&self, name: &'static str) -> Result<f64, CliError> {
+        self.get_parse(name)
+    }
+
+    /// Boolean flag accessor.
+    pub fn get_flag(&self, name: &'static str) -> bool {
+        self.get(name) == "true"
+    }
+
+    /// Positional arguments in order.
+    pub fn positionals(&self) -> &[String] {
+        &self.positionals
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn argv(s: &[&str]) -> Vec<String> {
+        s.iter().map(|x| x.to_string()).collect()
+    }
+
+    fn base() -> Args {
+        Args::new("test", "a test command")
+            .opt("scale", "18", "graph scale")
+            .opt("fanout", "4", "butterfly fanout")
+            .flag("verbose", "print more")
+            .req("graph", "graph name")
+    }
+
+    #[test]
+    fn defaults_and_overrides() {
+        let a = base().parse(argv(&["--graph", "kron", "--scale=20"])).unwrap();
+        assert_eq!(a.get("graph"), "kron");
+        assert_eq!(a.get_usize("scale").unwrap(), 20);
+        assert_eq!(a.get_usize("fanout").unwrap(), 4);
+        assert!(!a.get_flag("verbose"));
+    }
+
+    #[test]
+    fn bool_flag_set() {
+        let a = base().parse(argv(&["--graph", "g", "--verbose"])).unwrap();
+        assert!(a.get_flag("verbose"));
+    }
+
+    #[test]
+    fn missing_required_errors() {
+        let e = base().parse(argv(&["--scale", "10"])).unwrap_err();
+        assert!(matches!(e, CliError::Required("graph")));
+    }
+
+    #[test]
+    fn unknown_option_errors() {
+        let e = base().parse(argv(&["--graph", "g", "--bogus", "1"])).unwrap_err();
+        assert!(matches!(e, CliError::Unknown(_)));
+    }
+
+    #[test]
+    fn missing_value_errors() {
+        let e = base().parse(argv(&["--graph"])).unwrap_err();
+        assert!(matches!(e, CliError::MissingValue(_)));
+    }
+
+    #[test]
+    fn bad_value_errors() {
+        let a = base().parse(argv(&["--graph", "g", "--scale", "xyz"])).unwrap();
+        assert!(matches!(a.get_usize("scale"), Err(CliError::BadValue(..))));
+    }
+
+    #[test]
+    fn positionals_collected() {
+        let a = base().parse(argv(&["run", "--graph", "g", "extra"])).unwrap();
+        assert_eq!(a.positionals(), &["run".to_string(), "extra".to_string()]);
+    }
+
+    #[test]
+    fn help_requested() {
+        let e = base().parse(argv(&["-h"])).unwrap_err();
+        assert!(matches!(e, CliError::HelpRequested));
+        assert!(base().help_text().contains("--fanout"));
+    }
+}

@@ -1,0 +1,146 @@
+//! Minimal JSON value model + writer (no `serde` in the offline set).
+//!
+//! Used to dump benchmark results and run metrics in a machine-readable
+//! form alongside the human-readable tables.
+
+use std::collections::BTreeMap;
+use std::fmt::Write as _;
+
+/// A JSON value.
+#[derive(Clone, Debug, PartialEq)]
+pub enum Json {
+    /// `null`
+    Null,
+    /// `true`/`false`
+    Bool(bool),
+    /// Any finite number (rendered with up to 17 significant digits).
+    Num(f64),
+    /// String.
+    Str(String),
+    /// Array.
+    Arr(Vec<Json>),
+    /// Object with deterministic (sorted) key order.
+    Obj(BTreeMap<String, Json>),
+}
+
+impl Json {
+    /// Construct an object from key/value pairs.
+    pub fn obj(pairs: Vec<(&str, Json)>) -> Json {
+        Json::Obj(pairs.into_iter().map(|(k, v)| (k.to_string(), v)).collect())
+    }
+
+    /// Construct a string value.
+    pub fn s(v: impl Into<String>) -> Json {
+        Json::Str(v.into())
+    }
+
+    /// Construct a number value.
+    pub fn n(v: impl Into<f64>) -> Json {
+        Json::Num(v.into())
+    }
+
+    /// Construct a u64 number value (lossless below 2^53).
+    pub fn u(v: u64) -> Json {
+        Json::Num(v as f64)
+    }
+
+    /// Serialize to a compact string.
+    pub fn render(&self) -> String {
+        let mut out = String::new();
+        self.write(&mut out);
+        out
+    }
+
+    fn write(&self, out: &mut String) {
+        match self {
+            Json::Null => out.push_str("null"),
+            Json::Bool(b) => out.push_str(if *b { "true" } else { "false" }),
+            Json::Num(x) => {
+                if x.is_finite() {
+                    if x.fract() == 0.0 && x.abs() < 9.0e15 {
+                        let _ = write!(out, "{}", *x as i64);
+                    } else {
+                        let _ = write!(out, "{x}");
+                    }
+                } else {
+                    out.push_str("null"); // JSON has no Inf/NaN
+                }
+            }
+            Json::Str(s) => {
+                out.push('"');
+                for c in s.chars() {
+                    match c {
+                        '"' => out.push_str("\\\""),
+                        '\\' => out.push_str("\\\\"),
+                        '\n' => out.push_str("\\n"),
+                        '\r' => out.push_str("\\r"),
+                        '\t' => out.push_str("\\t"),
+                        c if (c as u32) < 0x20 => {
+                            let _ = write!(out, "\\u{:04x}", c as u32);
+                        }
+                        c => out.push(c),
+                    }
+                }
+                out.push('"');
+            }
+            Json::Arr(items) => {
+                out.push('[');
+                for (i, item) in items.iter().enumerate() {
+                    if i > 0 {
+                        out.push(',');
+                    }
+                    item.write(out);
+                }
+                out.push(']');
+            }
+            Json::Obj(map) => {
+                out.push('{');
+                for (i, (k, v)) in map.iter().enumerate() {
+                    if i > 0 {
+                        out.push(',');
+                    }
+                    Json::Str(k.clone()).write(out);
+                    out.push(':');
+                    v.write(out);
+                }
+                out.push('}');
+            }
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn scalars() {
+        assert_eq!(Json::Null.render(), "null");
+        assert_eq!(Json::Bool(true).render(), "true");
+        assert_eq!(Json::n(3.0).render(), "3");
+        assert_eq!(Json::n(3.5).render(), "3.5");
+        assert_eq!(Json::u(123456789).render(), "123456789");
+        assert_eq!(Json::s("hi").render(), "\"hi\"");
+    }
+
+    #[test]
+    fn string_escaping() {
+        assert_eq!(Json::s("a\"b\\c\nd").render(), "\"a\\\"b\\\\c\\nd\"");
+        assert_eq!(Json::s("\u{1}").render(), "\"\\u0001\"");
+    }
+
+    #[test]
+    fn nested_structure_sorted_keys() {
+        let v = Json::obj(vec![
+            ("zeta", Json::n(1.0)),
+            ("alpha", Json::Arr(vec![Json::n(1.0), Json::s("x")])),
+        ]);
+        assert_eq!(v.render(), "{\"alpha\":[1,\"x\"],\"zeta\":1}");
+    }
+
+    #[test]
+    fn nonfinite_becomes_null() {
+        assert_eq!(Json::n(f64::INFINITY).render(), "null");
+        assert_eq!(Json::n(f64::NAN).render(), "null");
+    }
+}

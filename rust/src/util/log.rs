@@ -1,0 +1,122 @@
+//! Tiny leveled stderr logger (the `log` crate's facade without the crate).
+//!
+//! Level is controlled by `BBFS_LOG` (error|warn|info|debug|trace) or
+//! programmatically via [`set_level`]. Defaults to `info`.
+
+use std::sync::atomic::{AtomicU8, Ordering};
+
+/// Log severity, ordered from most to least severe.
+#[derive(Clone, Copy, Debug, PartialEq, Eq, PartialOrd, Ord)]
+#[repr(u8)]
+pub enum Level {
+    /// Unrecoverable or wrong-result conditions.
+    Error = 0,
+    /// Suspicious but non-fatal conditions.
+    Warn = 1,
+    /// Run-level progress (default).
+    Info = 2,
+    /// Per-iteration detail.
+    Debug = 3,
+    /// Per-message detail.
+    Trace = 4,
+}
+
+static LEVEL: AtomicU8 = AtomicU8::new(u8::MAX); // MAX = uninitialized
+
+fn init_from_env() -> u8 {
+    let lvl = match std::env::var("BBFS_LOG").as_deref() {
+        Ok("error") => Level::Error,
+        Ok("warn") => Level::Warn,
+        Ok("debug") => Level::Debug,
+        Ok("trace") => Level::Trace,
+        _ => Level::Info,
+    } as u8;
+    LEVEL.store(lvl, Ordering::Relaxed);
+    lvl
+}
+
+/// Set the global log level.
+pub fn set_level(level: Level) {
+    LEVEL.store(level as u8, Ordering::Relaxed);
+}
+
+/// Current global log level.
+pub fn level() -> Level {
+    let raw = LEVEL.load(Ordering::Relaxed);
+    let raw = if raw == u8::MAX { init_from_env() } else { raw };
+    match raw {
+        0 => Level::Error,
+        1 => Level::Warn,
+        2 => Level::Info,
+        3 => Level::Debug,
+        _ => Level::Trace,
+    }
+}
+
+/// True when a message at `l` would be printed.
+pub fn enabled(l: Level) -> bool {
+    l <= level()
+}
+
+/// Core log call; use the macros instead.
+pub fn log(l: Level, args: std::fmt::Arguments<'_>) {
+    if enabled(l) {
+        let tag = match l {
+            Level::Error => "ERROR",
+            Level::Warn => "WARN ",
+            Level::Info => "INFO ",
+            Level::Debug => "DEBUG",
+            Level::Trace => "TRACE",
+        };
+        eprintln!("[{tag}] {args}");
+    }
+}
+
+/// Log at error level.
+#[macro_export]
+macro_rules! error {
+    ($($t:tt)*) => { $crate::util::log::log($crate::util::log::Level::Error, format_args!($($t)*)) };
+}
+/// Log at warn level.
+#[macro_export]
+macro_rules! warn {
+    ($($t:tt)*) => { $crate::util::log::log($crate::util::log::Level::Warn, format_args!($($t)*)) };
+}
+/// Log at info level.
+#[macro_export]
+macro_rules! info {
+    ($($t:tt)*) => { $crate::util::log::log($crate::util::log::Level::Info, format_args!($($t)*)) };
+}
+/// Log at debug level.
+#[macro_export]
+macro_rules! debug {
+    ($($t:tt)*) => { $crate::util::log::log($crate::util::log::Level::Debug, format_args!($($t)*)) };
+}
+/// Log at trace level.
+#[macro_export]
+macro_rules! trace {
+    ($($t:tt)*) => { $crate::util::log::log($crate::util::log::Level::Trace, format_args!($($t)*)) };
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn level_ordering() {
+        assert!(Level::Error < Level::Warn);
+        assert!(Level::Warn < Level::Info);
+        assert!(Level::Info < Level::Debug);
+        assert!(Level::Debug < Level::Trace);
+    }
+
+    #[test]
+    fn set_and_query_level() {
+        set_level(Level::Warn);
+        assert!(enabled(Level::Error));
+        assert!(enabled(Level::Warn));
+        assert!(!enabled(Level::Info));
+        set_level(Level::Info);
+        assert!(enabled(Level::Info));
+    }
+}

@@ -1,0 +1,14 @@
+//! Infrastructure substrates: PRNG, thread pool, CLI, JSON, stats, logging,
+//! and a mini property-testing harness.
+//!
+//! These exist because the offline crate set ships only `xla`, `anyhow`,
+//! and `thiserror`; the roles of `rand`, `rayon`, `clap`, `serde`,
+//! `proptest`, and `log` are filled here.
+
+pub mod cli;
+pub mod json;
+pub mod log;
+pub mod prng;
+pub mod propcheck;
+pub mod stats;
+pub mod threadpool;

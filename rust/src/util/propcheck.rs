@@ -1,0 +1,187 @@
+//! A miniature property-testing harness (no `proptest` in the offline set).
+//!
+//! Provides seeded random-input generation, a configurable number of cases,
+//! and greedy shrinking for integers and vectors. Used throughout the test
+//! suite for the coordinator invariants (routing, schedule coverage,
+//! batching bounds, distance-array agreement).
+//!
+//! ```no_run
+//! use butterfly_bfs::util::propcheck::{Config, forall};
+//! forall(Config::default(), "sum is commutative", |rng| {
+//!     let a = rng.next_below(1000) as i64;
+//!     let b = rng.next_below(1000) as i64;
+//!     (a + b == b + a, format!("a={a} b={b}"))
+//! });
+//! ```
+
+use crate::util::prng::Xoshiro256StarStar;
+
+/// Property-test configuration.
+#[derive(Clone, Copy, Debug)]
+pub struct Config {
+    /// Number of random cases to try.
+    pub cases: usize,
+    /// Base seed; case `i` uses `seed + i`.
+    pub seed: u64,
+}
+
+impl Default for Config {
+    fn default() -> Self {
+        Self { cases: 128, seed: 0xB0FF_EAF1 }
+    }
+}
+
+impl Config {
+    /// Config with a custom case count.
+    pub fn cases(n: usize) -> Self {
+        Self { cases: n, ..Self::default() }
+    }
+}
+
+/// Run `prop` on `cfg.cases` seeded RNGs; the property returns
+/// `(holds, description_of_inputs)`. Panics (failing the test) on the first
+/// violated case, reporting the seed so it can be replayed.
+pub fn forall<F>(cfg: Config, name: &str, mut prop: F)
+where
+    F: FnMut(&mut Xoshiro256StarStar) -> (bool, String),
+{
+    for i in 0..cfg.cases {
+        let case_seed = cfg.seed.wrapping_add(i as u64);
+        let mut rng = Xoshiro256StarStar::seed_from_u64(case_seed);
+        let (ok, desc) = prop(&mut rng);
+        assert!(
+            ok,
+            "property {name:?} violated at case {i} (seed {case_seed:#x}): {desc}"
+        );
+    }
+}
+
+/// Greedy shrink of a failing integer input: repeatedly halve toward
+/// `lo` while the predicate still fails; returns the smallest failing value
+/// found.
+pub fn shrink_int<F>(mut value: u64, lo: u64, mut fails: F) -> u64
+where
+    F: FnMut(u64) -> bool,
+{
+    debug_assert!(fails(value), "shrink_int: initial value does not fail");
+    loop {
+        if value == lo {
+            return value;
+        }
+        let candidate = lo + (value - lo) / 2;
+        if candidate != value && fails(candidate) {
+            value = candidate;
+        } else if value > lo && fails(value - 1) {
+            value -= 1;
+        } else {
+            return value;
+        }
+    }
+}
+
+/// Greedy shrink of a failing vector input: try removing chunks (halves,
+/// quarters, … single elements) while the predicate still fails.
+pub fn shrink_vec<T: Clone, F>(mut v: Vec<T>, mut fails: F) -> Vec<T>
+where
+    F: FnMut(&[T]) -> bool,
+{
+    debug_assert!(fails(&v), "shrink_vec: initial vector does not fail");
+    let mut chunk = (v.len() / 2).max(1);
+    while chunk >= 1 {
+        let mut i = 0;
+        let mut removed_any = false;
+        while i + chunk <= v.len() {
+            let mut candidate = Vec::with_capacity(v.len() - chunk);
+            candidate.extend_from_slice(&v[..i]);
+            candidate.extend_from_slice(&v[i + chunk..]);
+            if fails(&candidate) {
+                v = candidate;
+                removed_any = true;
+                // keep i (next chunk shifted into place)
+            } else {
+                i += chunk;
+            }
+        }
+        if chunk == 1 && !removed_any {
+            break;
+        }
+        if !removed_any {
+            chunk /= 2;
+        }
+    }
+    v
+}
+
+/// Convenience generators used by many properties.
+pub mod gen {
+    use crate::util::prng::Xoshiro256StarStar;
+
+    /// Uniform usize in `[lo, hi]` inclusive.
+    pub fn usize_in(rng: &mut Xoshiro256StarStar, lo: usize, hi: usize) -> usize {
+        assert!(lo <= hi);
+        lo + rng.next_usize(hi - lo + 1)
+    }
+
+    /// A random vector of `len` values below `bound`.
+    pub fn vec_below(rng: &mut Xoshiro256StarStar, len: usize, bound: u64) -> Vec<u64> {
+        (0..len).map(|_| rng.next_below(bound)).collect()
+    }
+
+    /// A random undirected edge list over `n` vertices with `m` edges
+    /// (possibly with duplicates/self-loops — exercise the ETL!).
+    pub fn edge_list(
+        rng: &mut Xoshiro256StarStar,
+        n: usize,
+        m: usize,
+    ) -> Vec<(u32, u32)> {
+        (0..m)
+            .map(|_| (rng.next_usize(n) as u32, rng.next_usize(n) as u32))
+            .collect()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn forall_passes_trivial_property() {
+        forall(Config::cases(32), "xor involution", |rng| {
+            let x = rng.next_u64();
+            let k = rng.next_u64();
+            ((x ^ k) ^ k == x, format!("x={x} k={k}"))
+        });
+    }
+
+    #[test]
+    #[should_panic(expected = "violated")]
+    fn forall_reports_failures() {
+        forall(Config::cases(64), "always false eventually", |rng| {
+            let x = rng.next_below(4);
+            (x != 0, format!("x={x}"))
+        });
+    }
+
+    #[test]
+    fn shrink_int_finds_boundary() {
+        // Fails iff >= 17; shrink from 1000 should land exactly on 17.
+        let s = shrink_int(1000, 0, |v| v >= 17);
+        assert_eq!(s, 17);
+    }
+
+    #[test]
+    fn shrink_vec_minimizes() {
+        // Fails iff the vector contains a 7; minimal failing vector is [7].
+        let v = vec![1u64, 2, 7, 3, 7, 9];
+        let s = shrink_vec(v, |v| v.contains(&7));
+        assert_eq!(s, vec![7]);
+    }
+
+    #[test]
+    fn gen_edge_list_in_range() {
+        let mut rng = crate::util::prng::Xoshiro256StarStar::seed_from_u64(4);
+        let es = gen::edge_list(&mut rng, 50, 200);
+        assert_eq!(es.len(), 200);
+        assert!(es.iter().all(|&(u, v)| (u as usize) < 50 && (v as usize) < 50));
+    }
+}

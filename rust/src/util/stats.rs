@@ -1,0 +1,167 @@
+//! Summary statistics and the paper's root-sampling protocol helpers.
+
+/// Basic summary of a sample.
+#[derive(Clone, Copy, Debug, PartialEq)]
+pub struct Summary {
+    /// Number of observations.
+    pub n: usize,
+    /// Arithmetic mean.
+    pub mean: f64,
+    /// Sample standard deviation (n−1 denominator; 0 for n<2).
+    pub stddev: f64,
+    /// Minimum.
+    pub min: f64,
+    /// Median (average of middle two for even n).
+    pub median: f64,
+    /// Maximum.
+    pub max: f64,
+}
+
+impl Summary {
+    /// Summarize a sample. Panics on an empty slice.
+    pub fn of(xs: &[f64]) -> Self {
+        assert!(!xs.is_empty(), "Summary::of(empty)");
+        let n = xs.len();
+        let mean = xs.iter().sum::<f64>() / n as f64;
+        let var = if n > 1 {
+            xs.iter().map(|x| (x - mean) * (x - mean)).sum::<f64>() / (n - 1) as f64
+        } else {
+            0.0
+        };
+        let mut sorted = xs.to_vec();
+        sorted.sort_by(|a, b| a.partial_cmp(b).expect("NaN in sample"));
+        let median = if n % 2 == 1 {
+            sorted[n / 2]
+        } else {
+            0.5 * (sorted[n / 2 - 1] + sorted[n / 2])
+        };
+        Self {
+            n,
+            mean,
+            stddev: var.sqrt(),
+            min: sorted[0],
+            median,
+            max: sorted[n - 1],
+        }
+    }
+}
+
+/// The paper's benchmarking protocol (§4 Inputs): run many roots, drop the
+/// `k` fastest and `k` slowest times, average the remainder.
+///
+/// Returns the trimmed mean. Panics if `2k >= xs.len()`.
+pub fn trimmed_mean(xs: &[f64], k: usize) -> f64 {
+    assert!(
+        2 * k < xs.len(),
+        "trimmed_mean: dropping {} of {} samples",
+        2 * k,
+        xs.len()
+    );
+    let mut sorted = xs.to_vec();
+    sorted.sort_by(|a, b| a.partial_cmp(b).expect("NaN in sample"));
+    let kept = &sorted[k..xs.len() - k];
+    kept.iter().sum::<f64>() / kept.len() as f64
+}
+
+/// Traversed-edges-per-second in billions (the paper's GTEP/s metric).
+/// Uses the Graph500 convention the paper describes: |E| / time.
+pub fn gteps(edges: u64, seconds: f64) -> f64 {
+    if seconds <= 0.0 {
+        return f64::INFINITY;
+    }
+    edges as f64 / seconds / 1e9
+}
+
+/// Relative speedup utilization (§5 Speedup Analysis):
+/// `speedup = t_min_nodes / t_max_nodes`, `ideal = max_nodes / min_nodes`,
+/// `utilization = speedup / ideal`.
+#[derive(Clone, Copy, Debug)]
+pub struct ScalingUtilization {
+    /// Measured speedup going from the minimal to the maximal node count.
+    pub speedup: f64,
+    /// Ideal (linear) speedup for the same node-count ratio.
+    pub ideal: f64,
+    /// `speedup / ideal`, the paper's headline "75% utilization" metric.
+    pub utilization: f64,
+}
+
+/// Compute the paper's speedup/ideal/utilization triple.
+pub fn scaling_utilization(
+    t_at_min_nodes: f64,
+    min_nodes: usize,
+    t_at_max_nodes: f64,
+    max_nodes: usize,
+) -> ScalingUtilization {
+    let speedup = t_at_min_nodes / t_at_max_nodes;
+    let ideal = max_nodes as f64 / min_nodes as f64;
+    ScalingUtilization {
+        speedup,
+        ideal,
+        utilization: speedup / ideal,
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn summary_simple() {
+        let s = Summary::of(&[1.0, 2.0, 3.0, 4.0]);
+        assert_eq!(s.n, 4);
+        assert!((s.mean - 2.5).abs() < 1e-12);
+        assert!((s.median - 2.5).abs() < 1e-12);
+        assert_eq!(s.min, 1.0);
+        assert_eq!(s.max, 4.0);
+        // sample stddev of 1..4 = sqrt(5/3)
+        assert!((s.stddev - (5.0f64 / 3.0).sqrt()).abs() < 1e-12);
+    }
+
+    #[test]
+    fn summary_single() {
+        let s = Summary::of(&[7.0]);
+        assert_eq!(s.stddev, 0.0);
+        assert_eq!(s.median, 7.0);
+    }
+
+    #[test]
+    fn trimmed_mean_drops_extremes() {
+        // 100 samples: one absurdly fast, one absurdly slow, 98 at 1.0.
+        let mut xs = vec![1.0; 98];
+        xs.push(0.0001);
+        xs.push(1000.0);
+        let tm = trimmed_mean(&xs, 1);
+        assert!((tm - 1.0).abs() < 1e-12);
+    }
+
+    #[test]
+    fn trimmed_mean_paper_protocol() {
+        // The paper: 100 roots, drop 25 fastest + 25 slowest.
+        let xs: Vec<f64> = (0..100).map(|i| i as f64).collect();
+        let tm = trimmed_mean(&xs, 25);
+        // Remaining 25..=74, mean = 49.5
+        assert!((tm - 49.5).abs() < 1e-12);
+    }
+
+    #[test]
+    #[should_panic]
+    fn trimmed_mean_overtrim_panics() {
+        trimmed_mean(&[1.0, 2.0], 1);
+    }
+
+    #[test]
+    fn gteps_matches_paper_scale() {
+        // 8 B edges in ~26 ms ≈ 300 GTEP/s (the paper's headline).
+        let g = gteps(8_000_000_000, 0.0266);
+        assert!((g - 300.75).abs() < 1.0);
+    }
+
+    #[test]
+    fn utilization_example_from_paper() {
+        // GAP-kron: speedup 1.77 over ideal 2.0 → 88.4 %.
+        let u = scaling_utilization(1.77, 8, 1.0, 16);
+        assert!((u.speedup - 1.77).abs() < 1e-12);
+        assert!((u.ideal - 2.0).abs() < 1e-12);
+        assert!((u.utilization - 0.885).abs() < 1e-3);
+    }
+}

@@ -1,0 +1,227 @@
+//! A small scoped thread pool + barrier.
+//!
+//! `rayon`/`tokio` are unavailable in the offline crate set, so the
+//! coordinator drives its simulated compute nodes with this pool. The design
+//! goal is *deterministic structure*, not maximal throughput: each simulated
+//! device is a persistent worker, and the engine issues bulk-synchronous
+//! steps (`run_indexed`) with an implicit barrier at the end — exactly the
+//! synchronization discipline of Alg. 2 in the paper.
+
+use std::sync::atomic::{AtomicUsize, Ordering};
+use std::sync::mpsc;
+use std::sync::{Arc, Condvar, Mutex};
+use std::thread;
+
+type Job = Box<dyn FnOnce() + Send + 'static>;
+
+/// A fixed-size pool of persistent worker threads.
+pub struct ThreadPool {
+    senders: Vec<mpsc::Sender<Job>>,
+    handles: Vec<thread::JoinHandle<()>>,
+    next: AtomicUsize,
+}
+
+impl ThreadPool {
+    /// Create a pool with `n` workers (`n >= 1`).
+    pub fn new(n: usize) -> Self {
+        assert!(n >= 1, "ThreadPool::new(0)");
+        let mut senders = Vec::with_capacity(n);
+        let mut handles = Vec::with_capacity(n);
+        for i in 0..n {
+            let (tx, rx) = mpsc::channel::<Job>();
+            let handle = thread::Builder::new()
+                .name(format!("bbfs-worker-{i}"))
+                .spawn(move || {
+                    while let Ok(job) = rx.recv() {
+                        job();
+                    }
+                })
+                .expect("spawn worker");
+            senders.push(tx);
+            handles.push(handle);
+        }
+        Self { senders, handles, next: AtomicUsize::new(0) }
+    }
+
+    /// Number of workers.
+    pub fn len(&self) -> usize {
+        self.senders.len()
+    }
+
+    /// True when the pool has no workers (never, by construction).
+    pub fn is_empty(&self) -> bool {
+        self.senders.is_empty()
+    }
+
+    /// Fire-and-forget a job on the least-recently-used worker.
+    pub fn spawn<F: FnOnce() + Send + 'static>(&self, f: F) {
+        let i = self.next.fetch_add(1, Ordering::Relaxed) % self.senders.len();
+        self.senders[i].send(Box::new(f)).expect("worker alive");
+    }
+
+    /// Run `f(i)` for `i in 0..count`, pinning task `i` to worker
+    /// `i % workers`, and wait for all of them (bulk-synchronous step).
+    ///
+    /// `f` only needs to live for the duration of the call: we use a scoped
+    /// barrier internally, so borrowed data is fine.
+    pub fn run_indexed<'scope, F>(&self, count: usize, f: F)
+    where
+        F: Fn(usize) + Sync + Send + 'scope,
+    {
+        if count == 0 {
+            return;
+        }
+        let barrier = Arc::new(CountdownLatch::new(count));
+        // Scoped-borrow transport: the worker channel demands 'static jobs,
+        // so we smuggle `&f` through a thin raw pointer. This is sound
+        // because `run_indexed` blocks on the latch below, and every job
+        // signals the latch only after its last use of `f` — `f` therefore
+        // strictly outlives all dereferences.
+        struct SendPtr(*const ());
+        unsafe impl Send for SendPtr {}
+        unsafe impl Sync for SendPtr {}
+        let thin = SendPtr(&f as *const _ as *const ());
+        let thin = Arc::new(thin);
+        for i in 0..count {
+            let latch = Arc::clone(&barrier);
+            let thin = Arc::clone(&thin);
+            let w = i % self.senders.len();
+            let job: Job = Box::new(move || {
+                // Count down even if `f` panics, so the issuing thread does
+                // not deadlock (the panic is reported by the worker thread).
+                struct Guard(Arc<CountdownLatch>);
+                impl Drop for Guard {
+                    fn drop(&mut self) {
+                        self.0.count_down();
+                    }
+                }
+                let _guard = Guard(latch);
+                // SAFETY: `run_indexed` blocks on the latch until every job
+                // has signalled, so `f` (borrowed for 'scope) is alive for
+                // the entire execution of this closure.
+                let f = unsafe { &*(thin.0 as *const F) };
+                f(i);
+            });
+            self.senders[w].send(job).expect("worker alive");
+        }
+        barrier.wait();
+    }
+}
+
+impl Drop for ThreadPool {
+    fn drop(&mut self) {
+        // Closing the channels terminates the workers.
+        self.senders.clear();
+        for h in self.handles.drain(..) {
+            let _ = h.join();
+        }
+    }
+}
+
+/// A simple countdown latch: `count_down()` N times releases all `wait()`ers.
+pub struct CountdownLatch {
+    remaining: Mutex<usize>,
+    cv: Condvar,
+}
+
+impl CountdownLatch {
+    /// Latch that opens after `n` count-downs.
+    pub fn new(n: usize) -> Self {
+        Self { remaining: Mutex::new(n), cv: Condvar::new() }
+    }
+
+    /// Signal one completion.
+    pub fn count_down(&self) {
+        let mut rem = self.remaining.lock().unwrap();
+        assert!(*rem > 0, "latch underflow");
+        *rem -= 1;
+        if *rem == 0 {
+            self.cv.notify_all();
+        }
+    }
+
+    /// Block until the latch opens.
+    pub fn wait(&self) {
+        let mut rem = self.remaining.lock().unwrap();
+        while *rem > 0 {
+            rem = self.cv.wait(rem).unwrap();
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use std::sync::atomic::AtomicU64;
+
+    #[test]
+    fn run_indexed_visits_every_index_once() {
+        let pool = ThreadPool::new(4);
+        let hits: Vec<AtomicU64> = (0..64).map(|_| AtomicU64::new(0)).collect();
+        pool.run_indexed(64, |i| {
+            hits[i].fetch_add(1, Ordering::SeqCst);
+        });
+        for (i, h) in hits.iter().enumerate() {
+            assert_eq!(h.load(Ordering::SeqCst), 1, "index {i}");
+        }
+    }
+
+    #[test]
+    fn run_indexed_is_a_barrier() {
+        let pool = ThreadPool::new(3);
+        let counter = AtomicU64::new(0);
+        for _round in 0..10 {
+            pool.run_indexed(8, |_i| {
+                counter.fetch_add(1, Ordering::SeqCst);
+            });
+            // After return, all 8 increments of this round must be visible.
+            assert_eq!(counter.load(Ordering::SeqCst) % 8, 0);
+        }
+        assert_eq!(counter.load(Ordering::SeqCst), 80);
+    }
+
+    #[test]
+    fn run_indexed_borrows_local_data() {
+        let pool = ThreadPool::new(2);
+        let data: Vec<u64> = (0..32).collect();
+        let out: Vec<AtomicU64> = (0..32).map(|_| AtomicU64::new(0)).collect();
+        pool.run_indexed(32, |i| {
+            out[i].store(data[i] * 2, Ordering::SeqCst);
+        });
+        for i in 0..32 {
+            assert_eq!(out[i].load(Ordering::SeqCst), (i as u64) * 2);
+        }
+    }
+
+    #[test]
+    fn zero_count_returns_immediately() {
+        let pool = ThreadPool::new(2);
+        pool.run_indexed(0, |_| panic!("must not run"));
+    }
+
+    #[test]
+    fn spawn_runs_jobs() {
+        let pool = ThreadPool::new(2);
+        let latch = Arc::new(CountdownLatch::new(5));
+        for _ in 0..5 {
+            let l = Arc::clone(&latch);
+            pool.spawn(move || l.count_down());
+        }
+        latch.wait();
+    }
+
+    #[test]
+    fn latch_opens_exactly_after_n() {
+        let latch = Arc::new(CountdownLatch::new(2));
+        let l2 = Arc::clone(&latch);
+        let t = thread::spawn(move || {
+            l2.wait();
+            true
+        });
+        latch.count_down();
+        thread::sleep(std::time::Duration::from_millis(10));
+        assert!(!t.is_finished(), "latch opened early");
+        latch.count_down();
+        assert!(t.join().unwrap());
+    }
+}

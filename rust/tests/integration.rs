@@ -1,0 +1,197 @@
+//! Cross-module integration tests: the full pipeline (generate → ETL →
+//! partition → distributed traversal → metrics) exercised end-to-end,
+//! including every pattern/fanout/payload combination against the serial
+//! oracle on the whole analog suite.
+
+use butterfly_bfs::bfs::dirop::{diropt_bfs, DirOptParams};
+use butterfly_bfs::bfs::serial::{serial_bfs, INF};
+use butterfly_bfs::bfs::topdown::topdown_bfs;
+use butterfly_bfs::coordinator::{ButterflyBfs, EngineConfig, PatternKind, PayloadEncoding};
+use butterfly_bfs::graph::gen::table1_suite;
+use butterfly_bfs::graph::{io, props};
+use butterfly_bfs::harness::roots::{sample_roots, RootProtocol};
+use butterfly_bfs::partition::one_d::partition_1d;
+
+/// Every suite graph (tiny scale), every engine flavor, multiple roots:
+/// distributed == serial.
+#[test]
+fn full_suite_distributed_equals_serial() {
+    let proto = RootProtocol { num_roots: 3, trim: 0, seed: 7 };
+    for spec in table1_suite() {
+        let g = spec.generate_scaled(-7);
+        let roots = sample_roots(&g, &proto);
+        for fanout in [1u32, 4] {
+            let mut engine = ButterflyBfs::new(&g, EngineConfig::dgx2(16, fanout));
+            for &root in &roots {
+                engine.run(root);
+                engine.assert_agreement().unwrap_or_else(|e| {
+                    panic!("{} f{fanout} root {root}: {e}", spec.name)
+                });
+                assert_eq!(
+                    engine.dist(),
+                    &serial_bfs(&g, root)[..],
+                    "{} f{fanout} root {root}",
+                    spec.name
+                );
+            }
+        }
+    }
+}
+
+/// All single-node baselines agree with each other on the suite.
+#[test]
+fn baselines_agree_across_suite() {
+    for spec in table1_suite() {
+        let g = spec.generate_scaled(-7);
+        let want = serial_bfs(&g, 0);
+        assert_eq!(topdown_bfs(&g, 0, true).dist, want, "{} td", spec.name);
+        assert_eq!(
+            diropt_bfs(&g, 0, DirOptParams::default()).dist,
+            want,
+            "{} do",
+            spec.name
+        );
+    }
+}
+
+/// Payload encodings change bytes but never results.
+#[test]
+fn payload_encoding_is_semantically_transparent() {
+    let g = table1_suite()[6].generate_scaled(-7); // kron-like
+    let mut results = Vec::new();
+    let mut bytes = Vec::new();
+    for payload in [PayloadEncoding::Queue, PayloadEncoding::Bitmap, PayloadEncoding::Auto] {
+        let cfg = EngineConfig { payload, ..EngineConfig::dgx2(8, 4) };
+        let mut engine = ButterflyBfs::new(&g, cfg);
+        let m = engine.run(0);
+        results.push(engine.dist().to_vec());
+        bytes.push(m.bytes());
+    }
+    assert_eq!(results[0], results[1]);
+    assert_eq!(results[1], results[2]);
+    // Auto never ships more than either pure encoding.
+    assert!(bytes[2] <= bytes[0].min(bytes[1]), "{bytes:?}");
+}
+
+/// The three patterns produce identical distances and identical
+/// per-level discovery counts (they only reshape the communication).
+#[test]
+fn patterns_only_change_communication() {
+    let g = table1_suite()[7].generate_scaled(-7); // urand-like
+    let mut dists = Vec::new();
+    let mut discoveries = Vec::new();
+    let mut messages = Vec::new();
+    for pattern in [
+        PatternKind::Butterfly { fanout: 1 },
+        PatternKind::AllToAllConcurrent,
+        PatternKind::AllToAllIterative,
+    ] {
+        let cfg = EngineConfig { pattern, ..EngineConfig::dgx2(9, 1) };
+        let mut engine = ButterflyBfs::new(&g, cfg);
+        let m = engine.run(3);
+        dists.push(engine.dist().to_vec());
+        discoveries.push(m.levels.iter().map(|l| l.discovered).collect::<Vec<_>>());
+        messages.push(m.messages());
+    }
+    assert_eq!(dists[0], dists[1]);
+    assert_eq!(dists[1], dists[2]);
+    assert_eq!(discoveries[0], discoveries[1]);
+    assert_eq!(discoveries[1], discoveries[2]);
+    // Butterfly at 9 nodes sends fewer messages than either all-to-all.
+    assert!(messages[0] < messages[1], "{messages:?}");
+    assert_eq!(messages[1], messages[2]);
+}
+
+/// Graph I/O round-trips through both formats feed the engine correctly.
+#[test]
+fn io_roundtrip_through_engine() {
+    let g = table1_suite()[3].generate_scaled(-8); // twitter-like, tiny
+    let dir = std::env::temp_dir();
+    let bin = dir.join(format!("bbfs-int-{}.bbfs", std::process::id()));
+    let txt = dir.join(format!("bbfs-int-{}.txt", std::process::id()));
+    io::write_binary(&g, &bin).unwrap();
+    io::write_edge_list(&g, &txt).unwrap();
+    let g_bin = io::read_binary(&bin).unwrap();
+    let (g_txt, _) = io::read_edge_list(&txt, Some(g.num_vertices())).unwrap();
+    assert_eq!(g, g_bin);
+    assert_eq!(g, g_txt);
+    let mut e = ButterflyBfs::new(&g_bin, EngineConfig::dgx2(4, 2));
+    e.run(0);
+    assert_eq!(e.dist(), &serial_bfs(&g, 0)[..]);
+    std::fs::remove_file(&bin).ok();
+    std::fs::remove_file(&txt).ok();
+}
+
+/// Suite analogs land in the diameter class of their paper originals.
+#[test]
+fn suite_diameter_classes() {
+    let suite = table1_suite();
+    let diam = |name: &str, delta: i32| {
+        let spec = suite.iter().find(|s| s.name == name).unwrap();
+        let g = spec.generate_scaled(delta);
+        props::pseudo_diameter(&g, 0)
+    };
+    // webbase-like must be high-diameter (tail), kron-like small-world.
+    let webbase = diam("webbase-like", -6);
+    let kron = diam("kron-like", -6);
+    let urand = diam("urand-like", -6);
+    assert!(webbase > 100, "webbase diameter {webbase} (tail = 400)");
+    assert!(kron < 15, "kron diameter {kron}");
+    assert!(urand < 15, "urand diameter {urand}");
+}
+
+/// Per-level frontier sizes from the engine match the serial oracle's
+/// level population (full metric-path check).
+#[test]
+fn level_populations_match_oracle() {
+    let g = table1_suite()[8].generate_scaled(-7); // moliere-like
+    let mut engine = ButterflyBfs::new(&g, EngineConfig::dgx2(8, 4));
+    let m = engine.run(0);
+    let d = serial_bfs(&g, 0);
+    let max_d = d.iter().filter(|&&x| x != INF).max().copied().unwrap();
+    for lvl in 0..=max_d {
+        let pop = d.iter().filter(|&&x| x == lvl).count() as u64;
+        assert_eq!(
+            m.levels[lvl as usize].frontier, pop,
+            "level {lvl} population"
+        );
+    }
+}
+
+/// Partition ownership is exhaustive and consistent with engine routing:
+/// every vertex's distance is set by exactly the rounds of sync implied by
+/// its discovery level (smoke: run on a partitioned star where all
+/// cross-node traffic happens at level 1).
+#[test]
+fn star_graph_cross_node_routing() {
+    use butterfly_bfs::graph::gen::structured::star;
+    let g = star(1000);
+    let part = partition_1d(&g, 8);
+    assert_eq!(part.owner_of(0), 0);
+    let mut engine = ButterflyBfs::new(&g, EngineConfig::dgx2(8, 1));
+    let m = engine.run(0);
+    assert_eq!(m.depth(), 2);
+    assert_eq!(m.reached, 1000);
+    // Level 0: root expands 999 edges; every other node learns the full
+    // frontier through the butterfly.
+    assert_eq!(m.levels[0].edges_examined, 999);
+    engine.assert_agreement().unwrap();
+}
+
+/// Metrics invariants over a random workload: totals equal sums, comm
+/// fraction in [0,1], GTEPS positive and finite.
+#[test]
+fn metrics_invariants() {
+    let g = table1_suite()[4].generate_scaled(-7);
+    let mut engine = ButterflyBfs::new(&g, EngineConfig::dgx2(16, 4));
+    let m = engine.run(0);
+    assert_eq!(
+        m.edges_examined(),
+        m.levels.iter().map(|l| l.edges_examined).sum::<u64>()
+    );
+    assert!(m.sim_comm_fraction() >= 0.0 && m.sim_comm_fraction() <= 1.0);
+    assert!(m.sim_gteps().is_finite() && m.sim_gteps() > 0.0);
+    assert!(m.wall_seconds > 0.0);
+    let total_discovered: u64 = m.levels.iter().map(|l| l.discovered).sum();
+    assert_eq!(total_discovered + 1, m.reached, "discoveries + root = reached");
+}

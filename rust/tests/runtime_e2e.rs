@@ -1,0 +1,132 @@
+//! Three-layer integration: the AOT artifacts (JAX/Pallas → HLO text)
+//! executed through PJRT inside the distributed engine, checked against
+//! the native backend and the serial oracle. Skips (with a notice) when
+//! `make artifacts` has not run.
+
+use butterfly_bfs::bfs::serial::serial_bfs;
+use butterfly_bfs::coordinator::{ButterflyBfs, EngineConfig, PatternKind};
+use butterfly_bfs::graph::gen::kronecker::{kronecker, KroneckerParams};
+use butterfly_bfs::graph::gen::structured::{binary_tree, grid2d, star};
+use butterfly_bfs::partition::one_d::partition_1d;
+use butterfly_bfs::runtime::{find_artifact, variant_for, FrontierStep, XlaFrontierBackend};
+use std::sync::Arc;
+
+fn load_step(v: usize) -> Option<Arc<FrontierStep>> {
+    let key = variant_for(v)?;
+    let path = find_artifact(key)?;
+    Some(Arc::new(FrontierStep::load(&path, key.num_vertices).expect("artifact compiles")))
+}
+
+macro_rules! require_artifacts {
+    ($v:expr) => {
+        match load_step($v) {
+            Some(s) => s,
+            None => {
+                eprintln!("skipping: artifacts not built (run `make artifacts`)");
+                return;
+            }
+        }
+    };
+}
+
+#[test]
+fn xla_engine_structured_graphs() {
+    let step = require_artifacts!(1024);
+    for (name, g) in [
+        ("star", star(900)),
+        ("grid", grid2d(30, 30)),
+        ("tree", binary_tree(1023)),
+    ] {
+        let cfg = EngineConfig::dgx2(4, 2);
+        let part = partition_1d(&g, cfg.num_nodes);
+        let backends = XlaFrontierBackend::for_slabs(Arc::clone(&step), &part.slabs(&g)).unwrap();
+        let mut engine = ButterflyBfs::with_backends(&g, cfg, backends);
+        engine.run(0);
+        engine.assert_agreement().unwrap();
+        assert_eq!(engine.dist(), &serial_bfs(&g, 0)[..], "{name}");
+    }
+}
+
+#[test]
+fn xla_engine_kron_all_patterns() {
+    let step = require_artifacts!(2048);
+    let (g, _) = kronecker(KroneckerParams::graph500(11, 8), 3);
+    for pattern in [
+        PatternKind::Butterfly { fanout: 1 },
+        PatternKind::Butterfly { fanout: 4 },
+        PatternKind::AllToAllIterative,
+    ] {
+        let cfg = EngineConfig { pattern, ..EngineConfig::dgx2(6, 1) };
+        let part = partition_1d(&g, cfg.num_nodes);
+        let backends = XlaFrontierBackend::for_slabs(Arc::clone(&step), &part.slabs(&g)).unwrap();
+        let mut engine = ButterflyBfs::with_backends(&g, cfg, backends);
+        engine.run(5);
+        engine.assert_agreement().unwrap();
+        assert_eq!(engine.dist(), &serial_bfs(&g, 5)[..], "{pattern:?}");
+    }
+}
+
+#[test]
+fn xla_direction_optimizing_matches_serial() {
+    use butterfly_bfs::coordinator::config::DirectionMode;
+    let step = require_artifacts!(1024);
+    let (g, _) = kronecker(KroneckerParams::graph500(9, 16), 21);
+    let cfg = EngineConfig {
+        direction: DirectionMode::diropt(),
+        ..EngineConfig::dgx2(4, 4)
+    };
+    let part = partition_1d(&g, cfg.num_nodes);
+    let backends = XlaFrontierBackend::for_slabs(step, &part.slabs(&g)).unwrap();
+    let mut engine = ButterflyBfs::with_backends(&g, cfg, backends);
+    engine.run(0);
+    engine.assert_agreement().unwrap();
+    assert_eq!(engine.dist(), &serial_bfs(&g, 0)[..]);
+}
+
+#[test]
+fn xla_metrics_match_native_metrics() {
+    let step = require_artifacts!(1024);
+    let (g, _) = kronecker(KroneckerParams::graph500(9, 8), 8);
+    let cfg = EngineConfig::dgx2(4, 4);
+    let part = partition_1d(&g, cfg.num_nodes);
+    let backends = XlaFrontierBackend::for_slabs(step, &part.slabs(&g)).unwrap();
+    let mut xla = ButterflyBfs::with_backends(&g, cfg.clone(), backends);
+    let mut native = ButterflyBfs::new(&g, cfg);
+    let mx = xla.run(1);
+    let mn = native.run(1);
+    // Same traversal structure: depth, reach, per-level discoveries, and
+    // examined-edge counts all coincide.
+    assert_eq!(mx.depth(), mn.depth());
+    assert_eq!(mx.reached, mn.reached);
+    assert_eq!(mx.edges_examined(), mn.edges_examined());
+    for (lx, ln) in mx.levels.iter().zip(&mn.levels) {
+        assert_eq!(lx.discovered, ln.discovered, "level {}", lx.level);
+        assert_eq!(lx.frontier, ln.frontier, "level {}", lx.level);
+    }
+}
+
+#[test]
+fn all_artifact_sizes_load_and_run() {
+    use butterfly_bfs::runtime::artifacts::{ArtifactKey, ARTIFACT_SIZES};
+    for &v in ARTIFACT_SIZES {
+        let Some(path) = find_artifact(ArtifactKey { num_vertices: v }) else {
+            eprintln!("skipping: artifacts not built");
+            return;
+        };
+        let step = FrontierStep::load(&path, v).expect("compiles");
+        // Tiny smoke: a 2-vertex path inside the padded space.
+        use butterfly_bfs::graph::builder::GraphBuilder;
+        let mut b = GraphBuilder::new(v.min(64));
+        b.add_edge(0, 1);
+        let (g, _) = b.build_undirected();
+        let slab = g.row_slice(0, g.num_vertices() as u32);
+        let adj = step.adjacency_literal(&slab).unwrap();
+        let mut f = vec![0f32; v];
+        f[0] = 1.0;
+        let mut vis = vec![0f32; v];
+        vis[0] = 1.0;
+        let new = step.run(&adj, &f, &vis).unwrap();
+        assert_eq!(new[1], 1.0, "v={v}");
+        assert_eq!(new.iter().map(|&x| x as u32).sum::<u32>(), 1, "v={v}");
+    }
+}
