@@ -1,75 +1,90 @@
-//! Domain example: sampled closeness centrality — an APSP-class analytic.
+//! Domain example: sampled closeness centrality — an APSP-class analytic,
+//! now driven by the batched multi-source BFS subsystem.
 //!
 //! The paper's motivation for keeping a fast *top-down* traversal (rather
 //! than relying on direction optimization) is exactly this workload class:
 //! "direction optimizing BFS does not apply to all problems requiring a
 //! BFS traversal. For example, an APSP type of problem such as betweenness
-//! centrality might need to find all paths." Closeness centrality runs one
-//! full BFS per sample vertex and aggregates distances — hundreds of
-//! back-to-back traversals through the same engine, the regime where
-//! per-traversal synchronization overhead (the butterfly's target) is the
-//! whole game.
+//! centrality might need to find all paths." Closeness centrality needs
+//! one full BFS per sample vertex — and with `run_batch` all 64 samples
+//! advance bit-parallel through *one* butterfly exchange per level, so the
+//! per-traversal synchronization overhead (the butterfly's target) is paid
+//! once for the whole batch instead of once per source.
 //!
 //! Run: `cargo run --release --example closeness_centrality`
 
+use butterfly_bfs::bfs::msbfs::sample_batch_roots;
 use butterfly_bfs::bfs::serial::INF;
 use butterfly_bfs::coordinator::{ButterflyBfs, EngineConfig};
 use butterfly_bfs::graph::gen::kronecker::{kronecker, KroneckerParams};
-use butterfly_bfs::harness::table::{count, f3, Table};
-use butterfly_bfs::util::prng::Xoshiro256StarStar;
+use butterfly_bfs::harness::table::{count, f2, f3, Table};
 
 fn main() {
-    let (g, _) = kronecker(KroneckerParams::graph500(15, 16), 0xCC);
+    let (g, _) = kronecker(KroneckerParams::graph500(14, 16), 0xCC);
+    let n = g.num_vertices();
     println!(
         "graph: |V|={} |E|={}\n",
-        count(g.num_vertices() as u64),
+        count(n as u64),
         count(g.num_edges())
     );
     let mut engine = ButterflyBfs::new(&g, EngineConfig::dgx2(16, 4));
 
-    // Sample source vertices (same trick as the root protocol: prefer
-    // non-isolated sources).
-    let mut rng = Xoshiro256StarStar::seed_from_u64(7);
+    // Sample source vertices (prefer non-isolated, duplicates allowed —
+    // each lane is an independent traversal).
     let samples = 64;
-    let n = g.num_vertices();
-    let mut sources = Vec::with_capacity(samples);
-    while sources.len() < samples {
-        let v = rng.next_usize(n) as u32;
-        if g.degree(v) > 0 {
-            sources.push(v);
-        }
-    }
+    let sources = sample_batch_roots(&g, samples, 7);
 
-    // One full traversal per source; accumulate inverse farness for every
-    // reachable vertex (Wasserman–Faust normalization per source sample).
+    // One batched traversal: all 64 sources in lock-step.
     let t0 = std::time::Instant::now();
+    let bm = engine.run_batch(&sources);
+    let wall = t0.elapsed().as_secs_f64();
+    engine.assert_batch_agreement().expect("node agreement");
+    println!(
+        "{} traversals in one batch: wall {:.2} s, simulated DGX-2 {:.2} ms, \
+         {} levels, {} sync rounds, {} bytes shipped",
+        samples,
+        wall,
+        bm.sim_seconds() * 1e3,
+        bm.depth(),
+        bm.sync_rounds,
+        count(bm.bytes())
+    );
+
+    // Accumulate inverse farness for every reachable vertex
+    // (Wasserman–Faust normalization per source sample).
     let mut sum_dist = vec![0u64; n];
     let mut times_reached = vec![0u32; n];
-    let mut sim_total = 0.0;
-    let mut edges_total = 0u64;
-    for &s in &sources {
-        let m = engine.run(s);
-        sim_total += m.sim_seconds();
-        edges_total += m.edges_examined();
-        for (v, &d) in engine.dist().iter().enumerate() {
+    for lane in 0..samples {
+        for (v, &d) in engine.batch_dist(lane).iter().enumerate() {
             if d != INF {
                 sum_dist[v] += d as u64;
                 times_reached[v] += 1;
             }
         }
     }
-    let wall = t0.elapsed().as_secs_f64();
+
+    // What the same 64 sources cost sequentially (the pre-batching path).
+    let seq = engine.sequential_baseline(&sources);
     println!(
-        "{} traversals: wall {:.2} s, simulated DGX-2 {:.2} ms total, {} edges examined",
-        samples,
-        wall,
-        sim_total * 1e3,
-        count(edges_total)
+        "sequential baseline: simulated {:.2} ms, {} sync rounds, {} bytes",
+        seq.sim_seconds * 1e3,
+        seq.sync_rounds,
+        count(seq.bytes)
+    );
+    println!(
+        "amortization: {}x fewer sync rounds, {}x fewer bytes, {}x sim speedup\n",
+        f2(seq.sync_rounds as f64 / bm.sync_rounds.max(1) as f64),
+        f2(seq.bytes as f64 / bm.bytes().max(1) as f64),
+        f2(seq.sim_seconds / bm.sim_seconds().max(1e-12))
     );
 
-    // Closeness estimate: reached_count / sum_of_distances.
+    // Closeness estimate: reached_count / sum_of_distances. A majority
+    // filter (rather than requiring every lane) keeps the ranking robust
+    // even if a sampled source lands outside the giant component.
     let mut ranked: Vec<(u32, f64)> = (0..n as u32)
-        .filter(|&v| times_reached[v as usize] as usize == samples && sum_dist[v as usize] > 0)
+        .filter(|&v| {
+            times_reached[v as usize] as usize * 2 > samples && sum_dist[v as usize] > 0
+        })
         .map(|v| {
             (
                 v,
@@ -104,4 +119,10 @@ fn main() {
          (hubs are central ✓)"
     );
     assert!(top_degree_mean > global_mean);
+
+    // The amortization claims hold outside the test suite too. (The byte
+    // ratio is graph-dependent and asserted in the test suite; rounds and
+    // simulated time are the structural wins.)
+    assert!(bm.sync_rounds * 8 < seq.sync_rounds, "batch must run far fewer rounds");
+    assert!(bm.sim_seconds() < seq.sim_seconds, "batch must be faster on the simulated clock");
 }

@@ -1,0 +1,26 @@
+"""Test collection guard: the L1/L2 tests need the JAX/Pallas toolchain
+(and `hypothesis` for the randomized kernel suite). When a dependency is
+missing, skip the affected module cleanly instead of erroring at import —
+CI environments without the accelerator toolchain still get a green run.
+
+Also puts `python/` on sys.path so `from compile...` imports resolve when
+pytest is invoked from the repository root (`python -m pytest python/tests`).
+"""
+
+import importlib.util
+import os
+import sys
+
+sys.path.insert(0, os.path.dirname(os.path.dirname(os.path.abspath(__file__))))
+
+
+def _missing(module: str) -> bool:
+    return importlib.util.find_spec(module) is None
+
+collect_ignore = []
+if _missing("jax") or _missing("numpy"):
+    # Everything in this suite exercises the JAX model/kernel/AOT layers.
+    collect_ignore += ["test_kernel.py", "test_model.py", "test_aot.py"]
+elif _missing("hypothesis"):
+    # Only the randomized kernel suite needs hypothesis.
+    collect_ignore += ["test_kernel.py"]

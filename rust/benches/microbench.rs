@@ -78,20 +78,26 @@ fn main() {
         );
     }
 
-    // XLA frontier step (only when artifacts exist).
-    use butterfly_bfs::runtime::{find_artifact, ArtifactKey, FrontierStep};
-    if let Some(path) = find_artifact(ArtifactKey { num_vertices: 1024 }) {
-        let step = FrontierStep::load(&path, 1024).expect("artifact compiles");
-        let (small, _) = kronecker(KroneckerParams::graph500(10, 8), 7);
-        let slab = small.row_slice(0, small.num_vertices() as u32);
-        let adj = step.adjacency_literal(&slab).unwrap();
-        let mut frontier = vec![0f32; 1024];
-        frontier[0] = 1.0;
-        let visited = frontier.clone();
-        bench(&cfg, "xla/frontier_step_v1024", || {
-            step.run(&adj, &frontier, &visited).unwrap()
-        });
-    } else {
-        println!("xla/frontier_step_v1024: skipped (run `make artifacts`)");
+    // XLA frontier step (only when the xla feature is on and artifacts
+    // exist).
+    #[cfg(feature = "xla")]
+    {
+        use butterfly_bfs::runtime::{find_artifact, ArtifactKey, FrontierStep};
+        if let Some(path) = find_artifact(ArtifactKey { num_vertices: 1024 }) {
+            let step = FrontierStep::load(&path, 1024).expect("artifact compiles");
+            let (small, _) = kronecker(KroneckerParams::graph500(10, 8), 7);
+            let slab = small.row_slice(0, small.num_vertices() as u32);
+            let adj = step.adjacency_literal(&slab).unwrap();
+            let mut frontier = vec![0f32; 1024];
+            frontier[0] = 1.0;
+            let visited = frontier.clone();
+            bench(&cfg, "xla/frontier_step_v1024", || {
+                step.run(&adj, &frontier, &visited).unwrap()
+            });
+        } else {
+            println!("xla/frontier_step_v1024: skipped (run `make artifacts`)");
+        }
     }
+    #[cfg(not(feature = "xla"))]
+    println!("xla/frontier_step_v1024: skipped (build with --features xla)");
 }

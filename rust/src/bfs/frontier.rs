@@ -125,6 +125,84 @@ impl Bitmap {
     }
 }
 
+/// A batched (multi-source) frontier delta: sparse `(vertex, lane-mask)`
+/// pairs, the payload unit of the MS-BFS butterfly exchange
+/// (`bfs::msbfs`). Bit `i` of a mask refers to the traversal rooted at
+/// `roots[i]` of the batch. On the wire an entry costs
+/// [`MaskFrontier::ENTRY_BYTES`] (a `u32` vertex id + a `u64` mask), so a
+/// level's payload is `12·|entries|` bytes — amortized over up to 64
+/// concurrent traversals, versus `4·|queue|` *per traversal* for the
+/// single-root queue encoding.
+#[derive(Clone, Debug, Default, PartialEq, Eq)]
+pub struct MaskFrontier {
+    entries: Vec<(VertexId, u64)>,
+}
+
+impl MaskFrontier {
+    /// Empty delta list.
+    pub fn new() -> Self {
+        Self::default()
+    }
+
+    /// Append a delta: lanes `mask` newly reached `v`. Masks must be
+    /// nonzero — zero deltas are filtered by the caller.
+    #[inline]
+    pub fn push(&mut self, v: VertexId, mask: u64) {
+        debug_assert!(mask != 0, "empty delta for vertex {v}");
+        self.entries.push((v, mask));
+    }
+
+    /// Number of entries.
+    #[inline]
+    pub fn len(&self) -> usize {
+        self.entries.len()
+    }
+
+    /// True when no deltas are recorded.
+    pub fn is_empty(&self) -> bool {
+        self.entries.is_empty()
+    }
+
+    /// Drop all entries (keeps allocation).
+    pub fn clear(&mut self) {
+        self.entries.clear();
+    }
+
+    /// The raw entries in insertion order.
+    #[inline]
+    pub fn entries(&self) -> &[(VertexId, u64)] {
+        &self.entries
+    }
+
+    /// Wire cost of one entry: 4-byte vertex id + 8-byte lane mask.
+    pub const ENTRY_BYTES: u64 = 12;
+
+    /// Payload size in bytes when shipped over the interconnect.
+    pub fn payload_bytes(&self) -> u64 {
+        self.entries.len() as u64 * Self::ENTRY_BYTES
+    }
+
+    /// Accumulate into a dense per-vertex mask array (entries OR in).
+    pub fn to_masks(&self, len: usize) -> Vec<u64> {
+        let mut masks = vec![0u64; len];
+        for &(v, m) in &self.entries {
+            masks[v as usize] |= m;
+        }
+        masks
+    }
+
+    /// Build from a dense mask array, skipping zero masks.
+    pub fn from_masks(masks: &[u64]) -> Self {
+        let mut f = Self::new();
+        for (v, &m) in masks.iter().enumerate() {
+            if m != 0 {
+                f.push(v as VertexId, m);
+            }
+        }
+        f
+    }
+}
+
 /// A frontier in whichever representation is currently cheaper, mirroring
 /// the queue/bitmap duality the direction-optimizing literature uses.
 #[derive(Clone, Debug)]
@@ -243,6 +321,23 @@ mod tests {
         b.reset();
         assert!(b.is_empty());
         assert_eq!(b.len(), 75);
+    }
+
+    #[test]
+    fn mask_frontier_roundtrip_and_bytes() {
+        let mut f = MaskFrontier::new();
+        assert!(f.is_empty());
+        f.push(3, 0b101);
+        f.push(9, 1 << 63);
+        f.push(3, 0b010); // second delta for the same vertex ORs in densely
+        assert_eq!(f.len(), 3);
+        assert_eq!(f.payload_bytes(), 36);
+        let dense = f.to_masks(16);
+        assert_eq!(dense[3], 0b111);
+        assert_eq!(dense[9], 1 << 63);
+        let g = MaskFrontier::from_masks(&dense);
+        assert_eq!(g.entries(), &[(3, 0b111), (9, 1 << 63)]);
+        assert_eq!(g.payload_bytes(), 24);
     }
 
     #[test]

@@ -6,9 +6,11 @@ pub mod bottomup;
 pub mod dirop;
 pub mod frontier;
 pub mod lrb;
+pub mod msbfs;
 pub mod serial;
 pub mod topdown;
 
-pub use frontier::{Bitmap, Frontier};
+pub use frontier::{Bitmap, Frontier, MaskFrontier};
+pub use msbfs::{mask_delta_bytes, ms_bfs, MsBfsResult, MAX_BATCH};
 pub use serial::{serial_bfs, INF};
 pub use topdown::{topdown_bfs, BfsResult};

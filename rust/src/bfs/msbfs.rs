@@ -1,0 +1,449 @@
+//! Bit-parallel batched multi-source BFS (MS-BFS).
+//!
+//! APSP-class analytics (closeness / betweenness centrality, reachability
+//! sampling) run hundreds of traversals back-to-back — exactly the regime
+//! the paper keeps a fast top-down path for, because "direction optimizing
+//! BFS does not apply to all problems requiring a BFS traversal". Running
+//! those traversals one at a time pays the full per-level synchronization
+//! cost (schedule rounds, message latency, payload bytes) once per root.
+//!
+//! MS-BFS (Then et al., *The More the Merrier: Efficient Multi-Source BFS*)
+//! amortizes that cost: every vertex carries a 64-bit **lane mask** — bit
+//! `i` set means "already seen by the traversal rooted at `roots[i]`" —
+//! and a level expansion ORs frontier masks into neighbor masks. Up to 64
+//! traversals advance in lock-step through *one* frontier sweep, and, in
+//! the distributed engine, through *one* butterfly exchange per level
+//! ([`crate::coordinator::engine::ButterflyBfs::run_batch`]). The exchange
+//! ships `(vertex, mask-delta)` payloads priced by the negotiated encoding
+//! [`mask_delta_bytes`] (the coalescing-agnostic bound is
+//! [`PayloadEncoding::MaskDelta`](crate::coordinator::config::PayloadEncoding)),
+//! so one round of communication serves the whole batch: schedule setup,
+//! per-message latency, and dedup traffic are paid once instead of 64
+//! times.
+//!
+//! This module holds the single-node bit-parallel engine ([`ms_bfs`], the
+//! oracle and CPU baseline), the per-root result view ([`MsBfsResult`]),
+//! and the per-compute-node distributed state ([`MsBfsNodeState`]) that
+//! `run_batch` drives through the butterfly schedule.
+//!
+//! Semantics are identical to running [`serial_bfs`](crate::bfs::serial)
+//! once per root (property-tested in `tests/msbfs_equivalence.rs`):
+//! levels are synchronous, so the first level at which a lane reaches a
+//! vertex is that lane's BFS distance. Duplicate roots simply occupy two
+//! lanes that evolve identically.
+
+use crate::bfs::frontier::MaskFrontier;
+use crate::bfs::serial::INF;
+use crate::graph::csr::{Csr, VertexId};
+use crate::util::prng::Xoshiro256StarStar;
+use std::collections::HashSet;
+
+/// Maximum batch width: one lane per bit of the `u64` mask.
+pub const MAX_BATCH: usize = 64;
+
+/// Negotiated wire cost of one MS-BFS delta message. The sender serializes
+/// its delta prefix in whichever of four equivalent forms is smallest:
+///
+/// 1. **Sparse pairs** — `12` bytes per entry (`u32` vertex + `u64` mask).
+/// 2. **Mask-grouped sparse** — entries grouped by mask value: per group a
+///    mask + count header (`12` bytes) plus `4` bytes per entry (each
+///    entry's vertex id listed once, in its group). Lanes travel
+///    together, so few distinct mask values cover many entries — this is
+///    the redundancy 64 *separate* traversals cannot exploit, and where
+///    the batch's byte win comes from.
+/// 3. **Presence bitmap + packed masks** — `⌈V/64⌉·8` bytes marking which
+///    vertices changed, plus `8` bytes per distinct changed vertex.
+/// 4. **Per-active-lane bitmaps** — `(1 + active_lanes)·⌈V/64⌉·8` bytes
+///    (a presence bitmap per lane that appears in the delta); degenerates
+///    to the single-root bitmap bound when only one lane is active.
+///
+/// `entries` counts delta-list entries, `distinct_vertices` the distinct
+/// vertices among them, `distinct_masks` the distinct mask values, and
+/// `active_lanes` the population count of the OR of all masks.
+pub fn mask_delta_bytes(
+    entries: u64,
+    distinct_vertices: u64,
+    distinct_masks: u64,
+    active_lanes: u32,
+    num_vertices: usize,
+) -> u64 {
+    if entries == 0 {
+        return 0;
+    }
+    let presence = (num_vertices as u64).div_ceil(64) * 8;
+    let sparse = entries * MaskFrontier::ENTRY_BYTES;
+    let grouped = distinct_masks * 12 + entries * 4;
+    let dense = presence + distinct_vertices * 8;
+    let lane_bitmaps = (1 + active_lanes as u64) * presence;
+    sparse.min(grouped).min(dense).min(lane_bitmaps)
+}
+
+/// Distances of a batched traversal: one full distance array per lane,
+/// stored lane-major (`dist[lane * num_vertices + v]`).
+#[derive(Clone, Debug, PartialEq, Eq)]
+pub struct MsBfsResult {
+    num_vertices: usize,
+    num_roots: usize,
+    dist: Vec<u32>,
+}
+
+impl MsBfsResult {
+    /// Build from raw parts (used by the engines in this crate).
+    pub(crate) fn from_parts(num_vertices: usize, num_roots: usize, dist: Vec<u32>) -> Self {
+        assert_eq!(dist.len(), num_vertices * num_roots);
+        Self { num_vertices, num_roots, dist }
+    }
+
+    /// Number of lanes (roots) in the batch.
+    pub fn num_roots(&self) -> usize {
+        self.num_roots
+    }
+
+    /// Number of vertices per lane.
+    pub fn num_vertices(&self) -> usize {
+        self.num_vertices
+    }
+
+    /// Distance array of lane `i` — element `v` is the BFS distance from
+    /// `roots[i]` to `v`, or [`INF`] when unreachable.
+    pub fn dist(&self, lane: usize) -> &[u32] {
+        assert!(lane < self.num_roots, "lane {lane} out of range");
+        &self.dist[lane * self.num_vertices..(lane + 1) * self.num_vertices]
+    }
+
+    /// Total `(lane, vertex)` pairs reached.
+    pub fn reached_pairs(&self) -> u64 {
+        self.dist.iter().filter(|&&d| d != INF).count() as u64
+    }
+}
+
+/// Single-node bit-parallel MS-BFS over a full CSR: the oracle the
+/// distributed `run_batch` is tested against, and the CPU baseline the
+/// `msbfs_amortization` bench compares with.
+///
+/// One pass over the active frontier advances all `roots.len() <= 64`
+/// traversals: for frontier vertex `v` with pending mask `m`, each
+/// neighbor `u` gains lanes `m & !seen[u]`.
+pub fn ms_bfs(g: &Csr, roots: &[VertexId]) -> MsBfsResult {
+    let n = g.num_vertices();
+    let b = roots.len();
+    assert!(b >= 1 && b <= MAX_BATCH, "batch width must be 1..=64 (got {b})");
+    let mut seen = vec![0u64; n];
+    let mut visit = vec![0u64; n];
+    let mut next = vec![0u64; n];
+    let mut dist = vec![INF; n * b];
+    for (lane, &r) in roots.iter().enumerate() {
+        assert!((r as usize) < n, "root {r} out of range");
+        let bit = 1u64 << lane;
+        seen[r as usize] |= bit;
+        visit[r as usize] |= bit;
+        dist[lane * n + r as usize] = 0;
+    }
+    let mut level = 0u32;
+    loop {
+        let mut any = false;
+        for v in 0..n {
+            let mv = visit[v];
+            if mv == 0 {
+                continue;
+            }
+            for &u in g.neighbors(v as VertexId) {
+                let d = mv & !seen[u as usize];
+                if d != 0 {
+                    seen[u as usize] |= d;
+                    next[u as usize] |= d;
+                    let mut m = d;
+                    while m != 0 {
+                        let lane = m.trailing_zeros() as usize;
+                        m &= m - 1;
+                        dist[lane * n + u as usize] = level + 1;
+                    }
+                    any = true;
+                }
+            }
+        }
+        if !any {
+            break;
+        }
+        std::mem::swap(&mut visit, &mut next);
+        next.iter_mut().for_each(|x| *x = 0);
+        level += 1;
+    }
+    MsBfsResult::from_parts(n, b, dist)
+}
+
+/// Sample `width` roots for a batch. Non-isolated vertices are
+/// guaranteed whenever the graph has any edge: after a few random
+/// retries the sampler falls back to a deterministic wrapping scan for
+/// the next vertex with degree > 0 (so an unlucky lane can never land on
+/// an isolated vertex, unlike a bounded-retry sampler). Duplicates are
+/// allowed — MS-BFS handles them as independent lanes.
+pub fn sample_batch_roots(g: &Csr, width: usize, seed: u64) -> Vec<VertexId> {
+    let n = g.num_vertices();
+    assert!(n > 0, "empty graph");
+    assert!(width >= 1 && width <= MAX_BATCH);
+    let mut rng = Xoshiro256StarStar::seed_from_u64(seed);
+    let mut roots = Vec::with_capacity(width);
+    while roots.len() < width {
+        let mut v = rng.next_usize(n) as VertexId;
+        for _ in 0..8 {
+            if g.degree(v) > 0 {
+                break;
+            }
+            v = rng.next_usize(n) as VertexId;
+        }
+        if g.degree(v) == 0 {
+            // Wrapping scan from v: first non-isolated vertex, if any.
+            for off in 1..n {
+                let u = ((v as usize + off) % n) as VertexId;
+                if g.degree(u) > 0 {
+                    v = u;
+                    break;
+                }
+            }
+        }
+        roots.push(v);
+    }
+    roots
+}
+
+/// Per-compute-node state of one distributed batched traversal — the
+/// MS-BFS analog of [`ComputeNode`](crate::coordinator::node::ComputeNode)'s
+/// queues, created fresh by `run_batch` and driven through the same
+/// butterfly schedule the single-root engine uses.
+///
+/// The node's *global queue* analog is [`MsBfsNodeState::delta`]: every
+/// `(vertex, lane-mask)` pair this node discovered or relayed this level —
+/// the butterfly payload.
+#[derive(Clone, Debug)]
+pub struct MsBfsNodeState {
+    num_vertices: usize,
+    /// Per-vertex lanes already seen by this node (`seen[v]` bit `i` ⇔
+    /// lane `i` reached `v` as far as this node knows).
+    pub seen: Vec<u64>,
+    /// Lane-major distances, `dist[lane * V + v]` (every node records all
+    /// lanes — the paper's "All CN set their d" — so agreement is
+    /// checkable).
+    pub dist: Vec<u32>,
+    /// Pending masks of the *current* level's owned frontier vertices.
+    pub visit: Vec<u64>,
+    /// Accumulated masks for the *next* level's owned frontier.
+    pub next_mask: Vec<u64>,
+    /// Owned vertices with a nonzero `visit` mask (current level).
+    pub q_local: Vec<VertexId>,
+    /// Owned vertices with a nonzero `next_mask` (next level).
+    pub q_local_next: Vec<VertexId>,
+    /// Everything this node learned this level — phase-1 discoveries plus
+    /// butterfly-relayed deltas, each entry's mask holding only the lanes
+    /// that were new to this node when it was appended.
+    pub delta: MaskFrontier,
+    /// Edges examined by this node in the current level (metrics).
+    pub edges_this_level: u64,
+    /// Distinct vertices in `delta` (for [`mask_delta_bytes`] pricing).
+    pub delta_distinct: u64,
+    /// Distinct mask values in `delta` (pricing).
+    pub mask_values: HashSet<u64>,
+    /// OR of all masks in `delta` — which lanes are active this level
+    /// (pricing).
+    pub active_lanes: u64,
+    /// Per-vertex level stamp (`level + 1` when `v` was first appended to
+    /// `delta` this level) backing `delta_distinct`.
+    delta_stamp: Vec<u32>,
+}
+
+impl MsBfsNodeState {
+    /// Fresh state for a `num_vertices`-vertex graph and a batch of
+    /// `num_roots` lanes (lanes beyond the width are simply never set).
+    pub fn new(num_vertices: usize, num_roots: usize) -> Self {
+        Self {
+            num_vertices,
+            seen: vec![0; num_vertices],
+            dist: vec![INF; num_vertices * num_roots],
+            visit: vec![0; num_vertices],
+            next_mask: vec![0; num_vertices],
+            q_local: Vec::new(),
+            q_local_next: Vec::new(),
+            delta: MaskFrontier::new(),
+            edges_this_level: 0,
+            delta_distinct: 0,
+            mask_values: HashSet::new(),
+            active_lanes: 0,
+            delta_stamp: vec![0; num_vertices],
+        }
+    }
+
+    /// Wire cost of this node's current delta prefix of `entries` entries
+    /// under the negotiated encoding, using this level's accumulated
+    /// coalescing statistics (see [`mask_delta_bytes`]). The statistics are
+    /// monotone within a level, so snapshotting them alongside the prefix
+    /// length prices exactly that prefix's best serialization bound.
+    pub fn delta_payload_bytes(&self, entries: usize) -> u64 {
+        mask_delta_bytes(
+            entries as u64,
+            self.delta_distinct.min(entries as u64),
+            (self.mask_values.len() as u64).min(entries as u64),
+            self.active_lanes.count_ones(),
+            self.num_vertices,
+        )
+    }
+
+    /// Record that lanes `mask` reached `v` at `level + 1`; only lanes new
+    /// to this node take effect. Appends the filtered delta for relay and,
+    /// when `owned`, routes `v` into the next local frontier. Returns the
+    /// newly-set lanes (0 when everything was already known). This is the
+    /// shared inner step of Phase 1 (edge expansion) and Phase 2 (received
+    /// deltas), mirroring `ComputeNode::discover`.
+    #[inline]
+    pub fn discover(&mut self, v: VertexId, mask: u64, level: u32, owned: bool) -> u64 {
+        let d = mask & !self.seen[v as usize];
+        if d == 0 {
+            return 0;
+        }
+        self.seen[v as usize] |= d;
+        let nv = self.num_vertices;
+        let mut m = d;
+        while m != 0 {
+            let lane = m.trailing_zeros() as usize;
+            m &= m - 1;
+            self.dist[lane * nv + v as usize] = level + 1;
+        }
+        self.delta.push(v, d);
+        // Coalescing statistics for the negotiated payload encoding.
+        if self.delta_stamp[v as usize] != level + 1 {
+            self.delta_stamp[v as usize] = level + 1;
+            self.delta_distinct += 1;
+        }
+        self.active_lanes |= d;
+        self.mask_values.insert(d);
+        if owned {
+            if self.next_mask[v as usize] == 0 {
+                self.q_local_next.push(v);
+            }
+            self.next_mask[v as usize] |= d;
+        }
+        d
+    }
+
+    /// End-of-level rotation (the MS-BFS `SwapQueues`): the next local
+    /// frontier becomes current (its pending masks move from `next_mask`
+    /// to `visit`), and the level's delta list empties.
+    pub fn swap_level(&mut self) {
+        self.q_local.clear();
+        std::mem::swap(&mut self.q_local, &mut self.q_local_next);
+        for &v in &self.q_local {
+            self.visit[v as usize] = self.next_mask[v as usize];
+            self.next_mask[v as usize] = 0;
+        }
+        self.delta.clear();
+        self.delta_distinct = 0;
+        self.mask_values.clear();
+        self.active_lanes = 0;
+        // `delta_stamp` needs no reset: stamps are `level + 1`, which never
+        // recurs in later levels.
+        self.edges_this_level = 0;
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::bfs::serial::serial_bfs;
+    use crate::graph::gen::structured::{grid2d, path, star};
+    use crate::graph::gen::urand::uniform_random;
+
+    fn check_against_serial(g: &Csr, roots: &[VertexId]) {
+        let r = ms_bfs(g, roots);
+        assert_eq!(r.num_roots(), roots.len());
+        for (lane, &root) in roots.iter().enumerate() {
+            assert_eq!(
+                r.dist(lane),
+                &serial_bfs(g, root)[..],
+                "lane {lane} root {root}"
+            );
+        }
+    }
+
+    #[test]
+    fn single_lane_equals_serial() {
+        let (g, _) = uniform_random(300, 6, 11);
+        check_against_serial(&g, &[0]);
+        check_against_serial(&g, &[299]);
+    }
+
+    #[test]
+    fn full_width_batch_equals_serial() {
+        let (g, _) = uniform_random(500, 8, 3);
+        let roots: Vec<VertexId> = (0..64).map(|i| (i * 7) % 500).collect();
+        check_against_serial(&g, &roots);
+    }
+
+    #[test]
+    fn duplicate_roots_are_independent_lanes() {
+        let (g, _) = uniform_random(200, 5, 9);
+        let r = ms_bfs(&g, &[4, 4, 17, 4]);
+        assert_eq!(r.dist(0), r.dist(1));
+        assert_eq!(r.dist(0), r.dist(3));
+        assert_eq!(r.dist(0), &serial_bfs(&g, 4)[..]);
+        assert_eq!(r.dist(2), &serial_bfs(&g, 17)[..]);
+    }
+
+    #[test]
+    fn structured_graphs_mixed_batch() {
+        for g in [path(30), star(40), grid2d(5, 7)] {
+            let n = g.num_vertices() as VertexId;
+            check_against_serial(&g, &[0, n - 1, n / 2]);
+        }
+    }
+
+    #[test]
+    fn disconnected_lanes_stay_inf() {
+        use crate::graph::builder::GraphBuilder;
+        let mut b = GraphBuilder::new(20);
+        b.add_edge(0, 1);
+        b.add_edge(10, 11); // island
+        let (g, _) = b.build_undirected();
+        let r = ms_bfs(&g, &[0, 10]);
+        assert_eq!(r.dist(0)[1], 1);
+        assert_eq!(r.dist(0)[10], INF);
+        assert_eq!(r.dist(1)[11], 1);
+        assert_eq!(r.dist(1)[0], INF);
+        assert_eq!(r.reached_pairs(), 4);
+    }
+
+    #[test]
+    fn sample_batch_roots_prefers_connected() {
+        use crate::graph::builder::GraphBuilder;
+        let mut b = GraphBuilder::new(500);
+        for v in 1..50u32 {
+            b.add_edge(0, v);
+        }
+        let (g, _) = b.build_undirected();
+        let roots = sample_batch_roots(&g, 64, 5);
+        assert_eq!(roots.len(), 64);
+        // The graph has edges, so the fallback scan guarantees every
+        // sampled root is non-isolated.
+        let connected = roots.iter().filter(|&&r| g.degree(r) > 0).count();
+        assert_eq!(connected, roots.len());
+    }
+
+    #[test]
+    fn property_msbfs_equals_serial() {
+        use crate::util::propcheck::{forall, gen, Config};
+        forall(Config::cases(20), "ms_bfs == serial per lane", |rng| {
+            let n = gen::usize_in(rng, 5, 300);
+            let ef = gen::usize_in(rng, 1, 6) as u32;
+            let b = gen::usize_in(rng, 1, 64);
+            let (g, _) = uniform_random(n, ef, rng.next_u64());
+            let roots: Vec<VertexId> =
+                (0..b).map(|_| rng.next_usize(n) as VertexId).collect();
+            let r = ms_bfs(&g, &roots);
+            let ok = roots
+                .iter()
+                .enumerate()
+                .all(|(lane, &root)| r.dist(lane) == &serial_bfs(&g, root)[..]);
+            (ok, format!("n={n} ef={ef} b={b}"))
+        });
+    }
+
+    use crate::graph::csr::Csr;
+}

@@ -51,11 +51,20 @@ pub enum PayloadEncoding {
     /// Per-message minimum of the two (what a production system would
     /// negotiate); still bounded by the bitmap size.
     Auto,
+    /// Batched MS-BFS deltas: sparse `(vertex, 64-bit lane mask)` pairs at
+    /// `12·|entries|` bytes ([`MaskFrontier::ENTRY_BYTES`]), bounded by
+    /// the dense per-vertex mask array `8·V` (the negotiated fallback when
+    /// the delta list outgrows it). One message serves up to 64 concurrent
+    /// traversals — this is what `run_batch`'s exchange ships.
+    ///
+    /// [`MaskFrontier::ENTRY_BYTES`]: crate::bfs::frontier::MaskFrontier::ENTRY_BYTES
+    MaskDelta,
 }
 
 impl PayloadEncoding {
-    /// Bytes on the wire for a message carrying `queue_len` vertices of a
-    /// `num_vertices`-vertex graph.
+    /// Bytes on the wire for a message carrying `queue_len` entries
+    /// (frontier vertices, or `(vertex, mask)` deltas for
+    /// [`PayloadEncoding::MaskDelta`]) of a `num_vertices`-vertex graph.
     pub fn bytes(&self, queue_len: u64, num_vertices: usize) -> u64 {
         let q = queue_len * 4;
         let b = (num_vertices as u64).div_ceil(64) * 8;
@@ -63,6 +72,10 @@ impl PayloadEncoding {
             PayloadEncoding::Queue => q,
             PayloadEncoding::Bitmap => b,
             PayloadEncoding::Auto => q.min(b),
+            PayloadEncoding::MaskDelta => {
+                (queue_len * crate::bfs::frontier::MaskFrontier::ENTRY_BYTES)
+                    .min(num_vertices as u64 * 8)
+            }
         }
     }
 }
@@ -140,6 +153,9 @@ mod tests {
         assert_eq!(PayloadEncoding::Queue.bytes(50, 100), 200);
         assert_eq!(PayloadEncoding::Auto.bytes(50, 100), 16);
         assert_eq!(PayloadEncoding::Auto.bytes(2, 100), 8);
+        // MaskDelta: 12 bytes/entry, capped at the dense 8·V mask array.
+        assert_eq!(PayloadEncoding::MaskDelta.bytes(10, 100), 120);
+        assert_eq!(PayloadEncoding::MaskDelta.bytes(90, 100), 800);
     }
 
     #[test]

@@ -149,6 +149,103 @@ impl RunMetrics {
     }
 }
 
+/// Accumulated synchronization totals of running a set of roots one at a
+/// time through the single-root engine — the baseline
+/// [`run_batch`](crate::coordinator::engine::ButterflyBfs::run_batch) is
+/// compared against (see
+/// [`sequential_baseline`](crate::coordinator::engine::ButterflyBfs::sequential_baseline)).
+#[derive(Clone, Copy, Debug, Default)]
+pub struct SequentialBaseline {
+    /// Total bytes shipped across all runs.
+    pub bytes: u64,
+    /// Total messages across all runs.
+    pub messages: u64,
+    /// Total synchronization rounds: Σ runs (levels × schedule depth).
+    pub sync_rounds: u64,
+    /// Total simulated device time across all runs.
+    pub sim_seconds: f64,
+}
+
+/// Metrics of one batched multi-source traversal
+/// ([`run_batch`](crate::coordinator::engine::ButterflyBfs::run_batch)):
+/// the same per-level breakdown as [`RunMetrics`], but one level now
+/// advances up to 64 traversals, so `levels`/`sync_rounds`/`bytes` are
+/// *shared* across the whole batch. `LevelMetrics::frontier` counts active
+/// owned vertices (not `(vertex, lane)` pairs); `LevelMetrics::discovered`
+/// counts newly-set `(vertex, lane)` pairs.
+#[derive(Clone, Debug, Default)]
+pub struct BatchMetrics {
+    /// Batch width (lanes).
+    pub num_roots: usize,
+    /// Per-level breakdown (shared by all lanes).
+    pub levels: Vec<LevelMetrics>,
+    /// Total synchronization rounds executed: schedule depth × levels —
+    /// the quantity the butterfly amortizes across the batch.
+    pub sync_rounds: u64,
+    /// Measured wallclock of the whole batch (this process).
+    pub wall_seconds: f64,
+    /// |E| of the input graph.
+    pub graph_edges: u64,
+    /// Total `(root, vertex)` pairs reached.
+    pub reached_pairs: u64,
+}
+
+impl BatchMetrics {
+    /// Simulated end-to-end device time: Σ levels (compute + comm).
+    pub fn sim_seconds(&self) -> f64 {
+        self.levels.iter().map(|l| l.sim_compute + l.sim_comm).sum()
+    }
+
+    /// Total edges examined (each edge expansion serves every active lane
+    /// of its frontier vertex at once).
+    pub fn edges_examined(&self) -> u64 {
+        self.levels.iter().map(|l| l.edges_examined).sum()
+    }
+
+    /// Total messages across the batch.
+    pub fn messages(&self) -> u64 {
+        self.levels.iter().map(|l| l.messages).sum()
+    }
+
+    /// Total bytes shipped across the batch.
+    pub fn bytes(&self) -> u64 {
+        self.levels.iter().map(|l| l.bytes).sum()
+    }
+
+    /// Number of levels (the max depth over the batch's lanes).
+    pub fn depth(&self) -> usize {
+        self.levels.len()
+    }
+
+    /// Synchronization bytes amortized per root — the headline
+    /// `msbfs_amortization` comparison against a single run's
+    /// [`RunMetrics::bytes`].
+    pub fn bytes_per_root(&self) -> f64 {
+        self.bytes() as f64 / self.num_roots.max(1) as f64
+    }
+
+    /// Simulated time amortized per root.
+    pub fn sim_seconds_per_root(&self) -> f64 {
+        self.sim_seconds() / self.num_roots.max(1) as f64
+    }
+
+    /// JSON dump for the machine-readable bench logs.
+    pub fn to_json(&self) -> Json {
+        Json::obj(vec![
+            ("num_roots", Json::u(self.num_roots as u64)),
+            ("wall_seconds", Json::n(self.wall_seconds)),
+            ("sim_seconds", Json::n(self.sim_seconds())),
+            ("depth", Json::u(self.depth() as u64)),
+            ("sync_rounds", Json::u(self.sync_rounds)),
+            ("edges_examined", Json::u(self.edges_examined())),
+            ("messages", Json::u(self.messages())),
+            ("bytes", Json::u(self.bytes())),
+            ("bytes_per_root", Json::n(self.bytes_per_root())),
+            ("reached_pairs", Json::u(self.reached_pairs)),
+        ])
+    }
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;
@@ -180,6 +277,36 @@ mod tests {
         m.push_level(0, 1, 500, 500, 5, &timing(0, 0, 0.0), 1.0);
         // Graph500 convention uses |E| = 2000, honest uses 500.
         assert!(m.sim_gteps() > m.sim_honest_gteps());
+    }
+
+    #[test]
+    fn batch_metrics_aggregation_and_json() {
+        let mut b = BatchMetrics {
+            num_roots: 64,
+            graph_edges: 1000,
+            ..Default::default()
+        };
+        b.levels.push(LevelMetrics {
+            level: 0,
+            frontier: 1,
+            edges_examined: 100,
+            max_node_edges: 60,
+            discovered: 320,
+            messages: 4,
+            bytes: 640,
+            sim_compute: 0.002,
+            sim_comm: 0.001,
+        });
+        b.sync_rounds = 4;
+        b.reached_pairs = 321;
+        assert_eq!(b.depth(), 1);
+        assert_eq!(b.bytes(), 640);
+        assert!((b.bytes_per_root() - 10.0).abs() < 1e-12);
+        assert!((b.sim_seconds() - 0.003).abs() < 1e-12);
+        assert!((b.sim_seconds_per_root() - 0.003 / 64.0).abs() < 1e-15);
+        let s = b.to_json().render();
+        assert!(s.contains("\"num_roots\":64"));
+        assert!(s.contains("\"sync_rounds\":4"));
     }
 
     #[test]

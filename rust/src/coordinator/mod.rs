@@ -11,5 +11,5 @@ pub mod node;
 pub use backend::{ComputeBackend, ExpandOutput, NativeCsr};
 pub use config::{DirectionMode, EngineConfig, PatternKind, PayloadEncoding};
 pub use engine::ButterflyBfs;
-pub use metrics::{LevelMetrics, RunMetrics};
+pub use metrics::{BatchMetrics, LevelMetrics, RunMetrics, SequentialBaseline};
 pub use node::ComputeNode;

@@ -7,13 +7,11 @@ use std::io::{BufRead, BufReader, BufWriter, Read, Write};
 use std::path::Path;
 
 /// I/O errors.
-#[derive(Debug, thiserror::Error)]
+#[derive(Debug)]
 pub enum IoError {
     /// Underlying filesystem error.
-    #[error("io: {0}")]
-    Io(#[from] std::io::Error),
+    Io(std::io::Error),
     /// Malformed input file.
-    #[error("parse error at line {line}: {msg}")]
     Parse {
         /// 1-based line number.
         line: usize,
@@ -21,8 +19,32 @@ pub enum IoError {
         msg: String,
     },
     /// Bad magic / version in binary snapshot.
-    #[error("bad .bbfs snapshot: {0}")]
     BadSnapshot(String),
+}
+
+impl std::fmt::Display for IoError {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        match self {
+            IoError::Io(e) => write!(f, "io: {e}"),
+            IoError::Parse { line, msg } => write!(f, "parse error at line {line}: {msg}"),
+            IoError::BadSnapshot(msg) => write!(f, "bad .bbfs snapshot: {msg}"),
+        }
+    }
+}
+
+impl std::error::Error for IoError {
+    fn source(&self) -> Option<&(dyn std::error::Error + 'static)> {
+        match self {
+            IoError::Io(e) => Some(e),
+            _ => None,
+        }
+    }
+}
+
+impl From<std::io::Error> for IoError {
+    fn from(e: std::io::Error) -> Self {
+        IoError::Io(e)
+    }
 }
 
 fn parse_err(line: usize, msg: impl Into<String>) -> IoError {

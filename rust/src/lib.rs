@@ -25,5 +25,6 @@ pub mod graph;
 pub mod harness;
 pub mod net;
 pub mod partition;
+#[cfg(feature = "xla")]
 pub mod runtime;
 pub mod util;

@@ -3,6 +3,8 @@
 //! Subcommands:
 //! * `run`       — traverse a graph with the distributed ButterFly BFS
 //!                 engine (simulated multi-node, DGX-2 timing model).
+//! * `batch`     — batched multi-source BFS: up to 64 roots through one
+//!                 butterfly exchange per level (`run_batch`).
 //! * `baseline`  — run the single-node CPU baselines (top-down /
 //!                 direction-optimizing), the paper's GapBS comparators.
 //! * `generate`  — generate a suite graph and write it to disk.
@@ -11,7 +13,6 @@
 //!
 //! Run `butterfly-bfs <subcommand> --help` for options.
 
-use anyhow::{anyhow, bail, Result};
 use butterfly_bfs::bfs::dirop::{diropt_bfs, DirOptParams};
 use butterfly_bfs::bfs::topdown::topdown_bfs;
 use butterfly_bfs::comm::{Butterfly, CommPattern, ConcurrentAllToAll, IterativeAllToAll};
@@ -27,12 +28,24 @@ use butterfly_bfs::util::cli::{Args, CliError};
 use butterfly_bfs::util::stats::gteps;
 use std::path::Path;
 
+/// Boxed-error result (the offline crate set has no `anyhow`). The
+/// defaulted error parameter lets signatures name a concrete error type,
+/// mirroring `anyhow::Result`.
+type Result<T, E = Box<dyn std::error::Error>> = std::result::Result<T, E>;
+
+/// `anyhow::bail!` stand-in: early-return a formatted error.
+macro_rules! bail {
+    ($($t:tt)*) => {
+        return Err(format!($($t)*).into())
+    };
+}
+
 fn main() {
     let argv: Vec<String> = std::env::args().skip(1).collect();
     let code = match dispatch(argv) {
         Ok(()) => 0,
         Err(e) => {
-            eprintln!("error: {e:#}");
+            eprintln!("error: {e}");
             2
         }
     };
@@ -47,6 +60,7 @@ fn dispatch(argv: Vec<String>) -> Result<()> {
     let rest = argv[1..].to_vec();
     match cmd.as_str() {
         "run" => cmd_run(rest),
+        "batch" => cmd_batch(rest),
         "baseline" => cmd_baseline(rest),
         "generate" => cmd_generate(rest),
         "inspect" => cmd_inspect(rest),
@@ -64,6 +78,7 @@ fn print_usage() {
         "butterfly-bfs — multi-node BFS with butterfly frontier synchronization\n\n\
          Subcommands:\n\
          \x20 run       distributed ButterFly BFS on a suite graph or file\n\
+         \x20 batch     batched multi-source BFS (up to 64 roots per exchange)\n\
          \x20 baseline  single-node CPU top-down / direction-optimizing BFS\n\
          \x20 generate  generate a suite graph to a file\n\
          \x20 inspect   print graph properties\n\
@@ -78,7 +93,7 @@ fn handle_help(r: Result<Args, CliError>, spec: &Args) -> Result<Args> {
             println!("{}", spec.help_text());
             std::process::exit(0);
         }
-        Err(e) => Err(anyhow!(e)),
+        Err(e) => Err(e.into()),
     }
 }
 
@@ -117,7 +132,7 @@ fn cmd_run(argv: Vec<String>) -> Result<()> {
         .opt("nodes", "16", "number of simulated compute nodes")
         .opt("fanout", "4", "butterfly fanout (1 = classic butterfly)")
         .opt("pattern", "butterfly", "butterfly | alltoall | iterative")
-        .opt("payload", "auto", "payload encoding: queue | bitmap | auto")
+        .opt("payload", "auto", "payload encoding: queue | bitmap | auto | maskdelta")
         .opt("root", "0", "BFS root vertex")
         .opt("scale-delta", "0", "suite graph scale adjustment (+/- log2)")
         .opt("net", "dgx2", "interconnect: dgx2 | dgx-a100 | pcie3 | dyn-alloc")
@@ -135,12 +150,7 @@ fn cmd_run(argv: Vec<String>) -> Result<()> {
         "iterative" => PatternKind::AllToAllIterative,
         p => bail!("unknown pattern {p:?}"),
     };
-    let payload = match a.get("payload").as_str() {
-        "queue" => PayloadEncoding::Queue,
-        "bitmap" => PayloadEncoding::Bitmap,
-        "auto" => PayloadEncoding::Auto,
-        p => bail!("unknown payload {p:?}"),
-    };
+    let payload = parse_payload(&a.get("payload"))?;
     let net = net_by_name(&a.get("net"))?;
     let direction = match a.get("direction").as_str() {
         "topdown" => DirectionMode::TopDown,
@@ -163,7 +173,7 @@ fn cmd_run(argv: Vec<String>) -> Result<()> {
     let m = engine.run(root);
     engine
         .assert_agreement()
-        .map_err(|e| anyhow!("node disagreement: {e}"))?;
+        .map_err(|e| format!("node disagreement: {e}"))?;
 
     if a.get_flag("json") {
         println!("{}", m.to_json().render());
@@ -206,6 +216,79 @@ fn net_by_name(name: &str) -> Result<NetModel> {
         "dyn-alloc" => NetModel::dynamic_alloc_baseline(),
         n => bail!("unknown net model {n:?}"),
     })
+}
+
+fn parse_payload(name: &str) -> Result<PayloadEncoding> {
+    Ok(match name {
+        "queue" => PayloadEncoding::Queue,
+        "bitmap" => PayloadEncoding::Bitmap,
+        "auto" => PayloadEncoding::Auto,
+        "maskdelta" => PayloadEncoding::MaskDelta,
+        p => bail!("unknown payload {p:?}"),
+    })
+}
+
+/// Batched multi-source BFS: sample (or take) up to 64 roots and push them
+/// through one `run_batch`, reporting the amortization against what 64
+/// sequential runs would have cost.
+fn cmd_batch(argv: Vec<String>) -> Result<()> {
+    let spec = Args::new("butterfly-bfs batch", "batched multi-source BFS (MS-BFS)")
+        .req("graph", "suite graph name or path (.bbfs/.mtx/edge list)")
+        .opt("nodes", "16", "number of simulated compute nodes")
+        .opt("fanout", "4", "butterfly fanout (1 = classic butterfly)")
+        .opt("roots", "64", "batch width (1..=64 random non-isolated roots)")
+        .opt("seed", "7", "root sampling seed")
+        .opt("scale-delta", "0", "suite graph scale adjustment (+/- log2)")
+        .flag("compare", "also run the roots sequentially and report the ratio");
+    let a = handle_help(spec.clone().parse(argv), &spec)?;
+
+    let g = load_graph(&a.get("graph"), a.get_parse::<i32>("scale-delta")?)?;
+    let nodes = a.get_usize("nodes")?;
+    let fanout: u32 = a.get_parse("fanout")?;
+    let width = a.get_usize("roots")?;
+    if width == 0 || width > 64 {
+        bail!("--roots must be in 1..=64 (got {width})");
+    }
+    let mut engine = ButterflyBfs::new(&g, EngineConfig::dgx2(nodes, fanout));
+    let roots = butterfly_bfs::bfs::msbfs::sample_batch_roots(
+        &g,
+        width,
+        a.get_u64("seed")?,
+    );
+    let bm = engine.run_batch(&roots);
+    engine
+        .assert_batch_agreement()
+        .map_err(|e| format!("node disagreement: {e}"))?;
+    println!(
+        "graph: |V|={} |E|={}  nodes={nodes} fanout={fanout} batch={}",
+        count(g.num_vertices() as u64),
+        count(g.num_edges()),
+        bm.num_roots
+    );
+    println!(
+        "batch: {} levels, {} sync rounds, {} messages, {} bytes, sim {:.3} ms",
+        bm.depth(),
+        bm.sync_rounds,
+        count(bm.messages()),
+        count(bm.bytes()),
+        bm.sim_seconds() * 1e3
+    );
+    if a.get_flag("compare") {
+        let seq = engine.sequential_baseline(&roots);
+        println!(
+            "sequential: {} sync rounds, {} bytes, sim {:.3} ms",
+            seq.sync_rounds,
+            count(seq.bytes),
+            seq.sim_seconds * 1e3
+        );
+        println!(
+            "amortization: {:.1}x fewer rounds, {:.1}x fewer bytes, {:.1}x sim speedup",
+            seq.sync_rounds as f64 / bm.sync_rounds.max(1) as f64,
+            seq.bytes as f64 / bm.bytes().max(1) as f64,
+            seq.sim_seconds / bm.sim_seconds().max(1e-12)
+        );
+    }
+    Ok(())
 }
 
 fn cmd_baseline(argv: Vec<String>) -> Result<()> {
@@ -306,8 +389,8 @@ fn cmd_schedule(argv: Vec<String>) -> Result<()> {
         p => bail!("unknown pattern {p:?}"),
     };
     let s = pattern.schedule(cn);
-    s.validate().map_err(|e| anyhow!(e))?;
-    butterfly_bfs::comm::analysis::verify_full_coverage(&s).map_err(|e| anyhow!(e))?;
+    s.validate()?;
+    butterfly_bfs::comm::analysis::verify_full_coverage(&s)?;
     let payload = (a.get_f64("payload-mb")? * 1024.0 * 1024.0) as u64;
     let net = net_by_name(&a.get("net"))?;
     let timing = simulate_uniform(&s, &net, payload);

@@ -26,24 +26,35 @@ pub struct Args {
 }
 
 /// Errors produced while parsing the command line.
-#[derive(Debug, thiserror::Error)]
+#[derive(Debug)]
 pub enum CliError {
     /// An option that was not declared.
-    #[error("unknown option --{0} (see --help)")]
     Unknown(String),
     /// A declared, non-boolean option with no value.
-    #[error("option --{0} requires a value")]
     MissingValue(String),
     /// A required option with no default that was not provided.
-    #[error("required option --{0} not provided")]
     Required(&'static str),
     /// Value failed to parse into the requested type.
-    #[error("option --{0}: cannot parse {1:?} as {2}")]
     BadValue(&'static str, String, &'static str),
     /// `--help` was requested; the caller should print and exit.
-    #[error("help requested")]
     HelpRequested,
 }
+
+impl std::fmt::Display for CliError {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        match self {
+            CliError::Unknown(name) => write!(f, "unknown option --{name} (see --help)"),
+            CliError::MissingValue(name) => write!(f, "option --{name} requires a value"),
+            CliError::Required(name) => write!(f, "required option --{name} not provided"),
+            CliError::BadValue(name, raw, ty) => {
+                write!(f, "option --{name}: cannot parse {raw:?} as {ty}")
+            }
+            CliError::HelpRequested => write!(f, "help requested"),
+        }
+    }
+}
+
+impl std::error::Error for CliError {}
 
 impl Args {
     /// Start a parser for `program` with a one-line description.

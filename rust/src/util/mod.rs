@@ -1,9 +1,10 @@
 //! Infrastructure substrates: PRNG, thread pool, CLI, JSON, stats, logging,
 //! and a mini property-testing harness.
 //!
-//! These exist because the offline crate set ships only `xla`, `anyhow`,
-//! and `thiserror`; the roles of `rand`, `rayon`, `clap`, `serde`,
-//! `proptest`, and `log` are filled here.
+//! These exist because the default build is fully dependency-free (the
+//! optional `xla` feature is the only thing that pulls external crates);
+//! the roles of `rand`, `rayon`, `clap`, `serde`, `proptest`, and `log`
+//! are filled here.
 
 pub mod cli;
 pub mod json;

@@ -1,0 +1,172 @@
+//! Property tests locking down the butterfly schedule (§3 of the paper):
+//! completeness after `depth_for(cn)` rounds for every node count and
+//! fanout the evaluation sweeps, the padded virtual-node routing scheme,
+//! and the Fig 1(f) 9-node pathology as an explicit regression test.
+
+use butterfly_bfs::comm::analysis::{propagate_knowledge, verify_full_coverage};
+use butterfly_bfs::comm::{Butterfly, CommPattern};
+use butterfly_bfs::util::propcheck::{forall, gen, Config};
+
+/// Exhaustive completeness sweep: for every `cn ∈ 2..=32` and fanout in
+/// {1, 2, 4, 8, 16}, the schedule is valid, runs exactly `depth_for(cn)`
+/// rounds, and leaves every node holding every node's frontier block.
+#[test]
+fn completeness_exhaustive_cn2_to_32_all_fanouts() {
+    for cn in 2..=32u32 {
+        for f in [1u32, 2, 4, 8, 16] {
+            let bf = Butterfly::new(f);
+            let s = bf.schedule(cn);
+            s.validate().unwrap_or_else(|e| panic!("cn={cn} f={f}: {e}"));
+            assert_eq!(s.depth() as u32, bf.depth_for(cn), "cn={cn} f={f}");
+            verify_full_coverage(&s).unwrap_or_else(|e| panic!("cn={cn} f={f}: {e}"));
+            // Contribution 4's receive-buffer bound O(f·V): a node never
+            // receives from more than radix−1 distinct holders per round.
+            assert!(
+                s.max_recvs_per_round() <= (bf.radix() - 1) as u64,
+                "cn={cn} f={f}: {} receives",
+                s.max_recvs_per_round()
+            );
+        }
+    }
+}
+
+/// Coverage is achieved *exactly* at the final round, not before (for
+/// power-of-radix node counts, where no padding blurs the picture): after
+/// `depth − 1` rounds at least one node is still missing a block.
+#[test]
+fn coverage_not_reached_early_at_powers_of_radix() {
+    for (f, cn) in [(1u32, 16u32), (1, 32), (2, 16), (4, 16), (4, 64), (8, 64)] {
+        let bf = Butterfly::new(f);
+        let mut s = bf.schedule(cn);
+        assert!(s.depth() >= 1);
+        s.rounds.pop();
+        let know = propagate_knowledge(&s);
+        let want: u128 = (1u128 << cn) - 1;
+        assert!(
+            know.iter().any(|&k| k != want),
+            "f={f} cn={cn}: coverage already complete one round early"
+        );
+    }
+}
+
+/// The padded virtual-node scheme: for non-power-of-radix node counts the
+/// id space is padded to `radix^depth`, and any partner id beyond the real
+/// range must be served by the *last real node* `cn − 1`. Checked against
+/// an independent re-derivation of the digit-exchange partners.
+#[test]
+fn virtual_blocks_route_to_last_real_node() {
+    for cn in 2..=32u32 {
+        for f in [1u32, 2, 4, 8, 16] {
+            let bf = Butterfly::new(f);
+            let r = bf.radix() as u64;
+            for round in 0..bf.depth_for(cn) {
+                let stride = r.pow(round);
+                for g in 0..cn as u64 {
+                    let digit = (g / stride) % r;
+                    let base = g - digit * stride;
+                    let mut expect: Vec<u32> = Vec::new();
+                    let mut saw_virtual = false;
+                    for j in 0..r {
+                        if j == digit {
+                            continue;
+                        }
+                        let partner = base + j * stride;
+                        let holder = if partner >= cn as u64 {
+                            saw_virtual = true;
+                            cn - 1
+                        } else {
+                            partner as u32
+                        };
+                        if holder != g as u32 && !expect.contains(&holder) {
+                            expect.push(holder);
+                        }
+                    }
+                    let got = bf.butterfly_direction(cn, g as u32, round);
+                    assert_eq!(got, expect, "cn={cn} f={f} round={round} g={g}");
+                    // Every source must be a real node; when a virtual
+                    // partner occurred, cn−1 is the only legal stand-in.
+                    assert!(got.iter().all(|&s| s < cn), "cn={cn} f={f} g={g}");
+                    if saw_virtual && !expect.is_empty() {
+                        assert!(
+                            got.contains(&(cn - 1)) || g as u32 == cn - 1,
+                            "cn={cn} f={f} round={round} g={g}: virtual block \
+                             not routed to node {}",
+                            cn - 1
+                        );
+                    }
+                }
+            }
+        }
+    }
+}
+
+/// The paper's Fig 1(f) pathology, locked as a regression test: 9 nodes at
+/// fanout 1 force node 8 to serve all eight other nodes in the final round
+/// (one NIC, eight sends), while 8 nodes have no hotspot at all.
+#[test]
+fn fig1f_nine_node_regression() {
+    let s = Butterfly::new(1).schedule(9);
+    assert_eq!(s.depth(), 4);
+    verify_full_coverage(&s).unwrap();
+    let last = s.rounds.last().unwrap();
+    let receivers: Vec<u32> = last.iter().filter(|t| t.src == 8).map(|t| t.dst).collect();
+    assert_eq!(receivers.len(), 8, "node 8 must serve all others: {last:?}");
+    let mut sorted = receivers.clone();
+    sorted.sort_unstable();
+    assert_eq!(sorted, (0u32..8).collect::<Vec<_>>());
+    assert_eq!(s.max_sends_per_round(), 8);
+    // Contrast: the 8-node schedule is perfectly balanced …
+    let s8 = Butterfly::new(1).schedule(8);
+    assert_eq!(s8.max_sends_per_round(), 1);
+    // … and fanout 4 at 9 nodes bounds the hotspot well below 8 sends.
+    let s9f4 = Butterfly::new(4).schedule(9);
+    assert!(
+        s9f4.max_sends_per_round() < 8,
+        "f4 hotspot {}",
+        s9f4.max_sends_per_round()
+    );
+}
+
+/// Randomized sweep beyond the exhaustive grid: any (cn ≤ 48, f ≤ 16)
+/// pair keeps the invariants.
+#[test]
+fn property_random_cn_fanout_complete_and_bounded() {
+    forall(Config::cases(64), "butterfly complete + recv-bounded", |rng| {
+        let cn = gen::usize_in(rng, 2, 48) as u32;
+        let f = gen::usize_in(rng, 1, 16) as u32;
+        let bf = Butterfly::new(f);
+        let s = bf.schedule(cn);
+        let ok = s.validate().is_ok()
+            && verify_full_coverage(&s).is_ok()
+            && s.depth() as u32 == bf.depth_for(cn)
+            && s.max_recvs_per_round() <= (bf.radix() - 1) as u64;
+        (ok, format!("cn={cn} f={f}"))
+    });
+}
+
+/// Knowledge growth at fanout f is geometric with ratio radix: after round
+/// i every node of a power-of-radix schedule knows exactly radix^(i+1)
+/// blocks (Fig 1(b)–(e) / Fig 2 generalized).
+#[test]
+fn knowledge_grows_geometrically_at_powers_of_radix() {
+    for (f, cn) in [(1u32, 32u32), (2, 32), (4, 64), (8, 64)] {
+        let bf = Butterfly::new(f);
+        let r = bf.radix();
+        let s = bf.schedule(cn);
+        let mut know: Vec<u128> = (0..cn).map(|g| 1u128 << g).collect();
+        for (i, round) in s.rounds.iter().enumerate() {
+            let snap = know.clone();
+            for t in round {
+                know[t.dst as usize] |= snap[t.src as usize];
+            }
+            let expect = (r as u64).pow(i as u32 + 1).min(cn as u64);
+            for (g, k) in know.iter().enumerate() {
+                assert_eq!(
+                    k.count_ones() as u64,
+                    expect,
+                    "f={f} cn={cn} round={i} node={g}"
+                );
+            }
+        }
+    }
+}

@@ -1,0 +1,121 @@
+//! MS-BFS coverage across the analog suite: `run_batch` distances equal
+//! independent `serial_bfs` runs on every `table1_suite()` graph at tiny
+//! scale — including batches smaller than 64 and duplicate roots — plus
+//! the batched-vs-sequential amortization acceptance check.
+
+use butterfly_bfs::bfs::msbfs::{ms_bfs, sample_batch_roots};
+use butterfly_bfs::bfs::serial::serial_bfs;
+use butterfly_bfs::coordinator::{ButterflyBfs, EngineConfig};
+use butterfly_bfs::graph::csr::VertexId;
+use butterfly_bfs::graph::gen::table1_suite;
+
+/// Every suite graph (tiny scale): an 8-lane batch with a duplicate root
+/// appended matches per-root serial BFS and the single-node bit-parallel
+/// oracle, on two engine shapes.
+#[test]
+fn suite_run_batch_equals_serial() {
+    for spec in table1_suite() {
+        let g = spec.generate_scaled(-7);
+        let mut roots = sample_batch_roots(&g, 8, 0xACE0 ^ spec.seed);
+        roots.push(roots[0]); // duplicate root rides along as its own lane
+        let serial: Vec<Vec<u32>> =
+            roots.iter().map(|&r| serial_bfs(&g, r)).collect();
+        let oracle = ms_bfs(&g, &roots);
+        for (nodes, fanout) in [(16usize, 1u32), (9, 4)] {
+            let mut engine = ButterflyBfs::new(&g, EngineConfig::dgx2(nodes, fanout));
+            let m = engine.run_batch(&roots);
+            engine.assert_batch_agreement().unwrap_or_else(|e| {
+                panic!("{} n{nodes} f{fanout}: {e}", spec.name)
+            });
+            assert_eq!(m.num_roots, roots.len());
+            for (lane, want) in serial.iter().enumerate() {
+                assert_eq!(
+                    engine.batch_dist(lane),
+                    &want[..],
+                    "{} n{nodes} f{fanout} lane {lane}",
+                    spec.name
+                );
+                assert_eq!(oracle.dist(lane), &want[..], "{} oracle", spec.name);
+            }
+        }
+    }
+}
+
+/// A full-width 64-lane batch on the small-world suite member.
+#[test]
+fn full_width_batch_on_kron_like() {
+    let spec = table1_suite()
+        .into_iter()
+        .find(|s| s.name == "kron-like")
+        .unwrap();
+    let g = spec.generate_scaled(-8);
+    let roots = sample_batch_roots(&g, 64, 0x5EED);
+    let mut engine = ButterflyBfs::new(&g, EngineConfig::dgx2(16, 4));
+    let m = engine.run_batch(&roots);
+    engine.assert_batch_agreement().unwrap();
+    assert_eq!(m.num_roots, 64);
+    for (lane, &r) in roots.iter().enumerate() {
+        assert_eq!(engine.batch_dist(lane), &serial_bfs(&g, r)[..], "lane {lane}");
+    }
+}
+
+/// Batch widths 1, 2, and 63 behave identically to full width — the lane
+/// mask never leaks into unused bits.
+#[test]
+fn partial_widths_match_serial() {
+    let spec = table1_suite()
+        .into_iter()
+        .find(|s| s.name == "urand-like")
+        .unwrap();
+    let g = spec.generate_scaled(-8);
+    let mut engine = ButterflyBfs::new(&g, EngineConfig::dgx2(8, 2));
+    for width in [1usize, 2, 63] {
+        let roots = sample_batch_roots(&g, width, width as u64);
+        engine.run_batch(&roots);
+        engine.assert_batch_agreement().unwrap();
+        for (lane, &r) in roots.iter().enumerate() {
+            assert_eq!(
+                engine.batch_dist(lane),
+                &serial_bfs(&g, r)[..],
+                "width {width} lane {lane}"
+            );
+        }
+    }
+}
+
+/// The acceptance criterion on a suite graph: one 64-root batch ships
+/// strictly fewer synchronization bytes and executes many-fold fewer
+/// schedule rounds than the same 64 roots run sequentially.
+#[test]
+fn batch_amortizes_bytes_and_rounds_on_suite_graph() {
+    let spec = table1_suite()
+        .into_iter()
+        .find(|s| s.name == "webbase-like")
+        .unwrap();
+    let g = spec.generate_scaled(-8);
+    let roots: Vec<VertexId> = sample_batch_roots(&g, 64, 0xA11);
+    let mut engine = ButterflyBfs::new(&g, EngineConfig::dgx2(16, 4));
+    let bm = engine.run_batch(&roots);
+    engine.assert_batch_agreement().unwrap();
+    let seq = engine.sequential_baseline(&roots);
+    assert!(
+        bm.bytes() < seq.bytes,
+        "batch bytes {} !< sequential {}",
+        bm.bytes(),
+        seq.bytes
+    );
+    assert!(
+        bm.sync_rounds * 8 < seq.sync_rounds,
+        "batch rounds {} vs sequential {}",
+        bm.sync_rounds,
+        seq.sync_rounds
+    );
+    // The simulated clock agrees with the amortization story: the batch is
+    // faster end-to-end than 64 back-to-back traversals.
+    assert!(
+        bm.sim_seconds() < seq.sim_seconds,
+        "batch sim {} !< sequential {}",
+        bm.sim_seconds(),
+        seq.sim_seconds
+    );
+}

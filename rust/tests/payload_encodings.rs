@@ -1,0 +1,170 @@
+//! Payload-encoding coverage: randomized cross-checks of the byte
+//! accounting of `PayloadEncoding::{Queue, Bitmap, Auto, MaskDelta}`,
+//! semantic transparency of the encoding choice inside the engine, and
+//! `Bitmap::union_in` return-count properties.
+
+use butterfly_bfs::bfs::frontier::{Bitmap, MaskFrontier};
+use butterfly_bfs::bfs::msbfs::mask_delta_bytes;
+use butterfly_bfs::bfs::serial::serial_bfs;
+use butterfly_bfs::coordinator::{ButterflyBfs, EngineConfig, PayloadEncoding};
+use butterfly_bfs::graph::gen::urand::uniform_random;
+use butterfly_bfs::util::propcheck::{forall, gen, Config};
+
+/// Exact closed forms, cross-checked against each other on random
+/// (queue length, vertex count) pairs.
+#[test]
+fn byte_accounting_cross_check() {
+    forall(Config::cases(200), "payload byte accounting", |rng| {
+        let v = gen::usize_in(rng, 1, 1 << 20);
+        let len = gen::usize_in(rng, 0, 2 * v) as u64;
+        let q = PayloadEncoding::Queue.bytes(len, v);
+        let b = PayloadEncoding::Bitmap.bytes(len, v);
+        let a = PayloadEncoding::Auto.bytes(len, v);
+        let m = PayloadEncoding::MaskDelta.bytes(len, v);
+        let ok = q == len * 4
+            && b == (v as u64).div_ceil(64) * 8
+            && a == q.min(b)
+            && m == (len * MaskFrontier::ENTRY_BYTES).min(v as u64 * 8)
+            // Bitmap is queue-length invariant; Auto is never worse than
+            // either pure encoding; MaskDelta never exceeds the dense mask
+            // array (64 lanes × 1 bit, i.e. 64× the bitmap bound).
+            && b == PayloadEncoding::Bitmap.bytes(0, v)
+            && a <= q
+            && a <= b
+            && m <= v as u64 * 8
+            && m <= 64 * b + 64 * 8 // dense masks ≤ 64 bitmaps (word padding)
+        ;
+        (ok, format!("v={v} len={len} q={q} b={b} a={a} m={m}"))
+    });
+}
+
+/// A `MaskFrontier` built from dense masks prices exactly like the
+/// `MaskDelta` encoding's sparse branch.
+#[test]
+fn mask_frontier_matches_maskdelta_accounting() {
+    forall(Config::cases(60), "mask frontier accounting", |rng| {
+        let v = gen::usize_in(rng, 1, 500);
+        let mut masks = vec![0u64; v];
+        for _ in 0..gen::usize_in(rng, 0, v) {
+            masks[rng.next_usize(v)] |= 1u64 << rng.next_usize(64);
+        }
+        let f = MaskFrontier::from_masks(&masks);
+        let sparse = f.payload_bytes();
+        let priced = PayloadEncoding::MaskDelta.bytes(f.len() as u64, v);
+        let nonzero = masks.iter().filter(|&&m| m != 0).count();
+        let ok = f.len() == nonzero
+            && sparse == f.len() as u64 * MaskFrontier::ENTRY_BYTES
+            && priced == sparse.min(v as u64 * 8)
+            && f.to_masks(v) == masks;
+        (ok, format!("v={v} entries={}", f.len()))
+    });
+}
+
+/// The negotiated MS-BFS delta pricing (`mask_delta_bytes`): zero for
+/// empty messages, never worse than any of its four candidate
+/// serializations, and consistent under random (but invariant-respecting)
+/// coalescing statistics.
+#[test]
+fn negotiated_mask_delta_pricing_properties() {
+    forall(Config::cases(200), "mask_delta_bytes negotiation", |rng| {
+        let v = gen::usize_in(rng, 1, 1 << 16);
+        let entries = gen::usize_in(rng, 0, 4 * v) as u64;
+        // Invariants: distinct vertices ≤ min(entries, V); distinct masks
+        // ≤ entries; active lanes ≤ 64, and ≥ 1 when any entry exists.
+        let distinct = gen::usize_in(rng, 0, (entries as usize).min(v)) as u64;
+        let masks = gen::usize_in(rng, 0, entries as usize) as u64;
+        let active = if entries == 0 {
+            0
+        } else {
+            gen::usize_in(rng, 1, 64) as u32
+        };
+        let presence = (v as u64).div_ceil(64) * 8;
+        let priced = mask_delta_bytes(entries, distinct, masks, active, v);
+        let ok = if entries == 0 {
+            priced == 0
+        } else {
+            priced <= entries * MaskFrontier::ENTRY_BYTES
+                && priced <= masks * 12 + entries * 4
+                && priced <= presence + distinct * 8
+                && priced <= (1 + active as u64) * presence
+                // Single active lane with unknown stats never exceeds two
+                // bitmaps — the single-root dense bound plus presence.
+                && (active != 1 || priced <= 2 * presence)
+        };
+        (ok, format!("v={v} e={entries} d={distinct} m={masks} a={active}"))
+    });
+}
+
+/// Every encoding produces identical distances — the encoding only changes
+/// what the interconnect simulator is told about bytes, never the merge
+/// semantics — and the byte totals obey Auto ≤ Queue, Auto ≤ Bitmap.
+#[test]
+fn encodings_semantically_transparent_in_engine() {
+    let (g, _) = uniform_random(900, 8, 42);
+    let want = serial_bfs(&g, 7);
+    let mut bytes = Vec::new();
+    for payload in [
+        PayloadEncoding::Queue,
+        PayloadEncoding::Bitmap,
+        PayloadEncoding::Auto,
+        PayloadEncoding::MaskDelta,
+    ] {
+        let cfg = EngineConfig { payload, ..EngineConfig::dgx2(8, 2) };
+        let mut engine = ButterflyBfs::new(&g, cfg);
+        let m = engine.run(7);
+        engine.assert_agreement().unwrap();
+        assert_eq!(engine.dist(), &want[..], "{payload:?}");
+        bytes.push(m.bytes());
+    }
+    let (q, b, a) = (bytes[0], bytes[1], bytes[2]);
+    assert!(a <= q && a <= b, "{bytes:?}");
+}
+
+/// Randomized `Bitmap::union_in` return-count properties: the return value
+/// is exactly the growth in set bits, a second union is a no-op, and the
+/// result is the bitwise OR.
+#[test]
+fn union_in_return_count_properties() {
+    forall(Config::cases(100), "union_in counts", |rng| {
+        let n = gen::usize_in(rng, 1, 600);
+        let la = gen::usize_in(rng, 0, 80);
+        let lb = gen::usize_in(rng, 0, 80);
+        let qa: Vec<u32> =
+            gen::vec_below(rng, la, n as u64).iter().map(|&x| x as u32).collect();
+        let qb: Vec<u32> =
+            gen::vec_below(rng, lb, n as u64).iter().map(|&x| x as u32).collect();
+        let mut a = Bitmap::from_queue(n, &qa);
+        let b = Bitmap::from_queue(n, &qb);
+        let before = a.count();
+        let grew = a.union_in(&b);
+        let after = a.count();
+        let again = a.union_in(&b);
+        let self_union = {
+            let snap = a.clone();
+            a.union_in(&snap)
+        };
+        let ok = after == before + grew
+            && again == 0
+            && self_union == 0
+            && (0..n as u32).all(|v| a.get(v) == (qa.contains(&v) || qb.contains(&v)));
+        (ok, format!("n={n} |a|={} |b|={}", qa.len(), qb.len()))
+    });
+}
+
+/// The engine's per-level Bitmap payload equals the closed form for every
+/// level regardless of frontier size (the paper's tight bound).
+#[test]
+fn bitmap_bytes_closed_form_in_engine() {
+    let (g, _) = uniform_random(1000, 8, 9);
+    let cfg = EngineConfig {
+        payload: PayloadEncoding::Bitmap,
+        ..EngineConfig::dgx2(8, 1)
+    };
+    let mut engine = ButterflyBfs::new(&g, cfg);
+    let per_msg = PayloadEncoding::Bitmap.bytes(0, g.num_vertices());
+    let msgs = engine.schedule().total_messages();
+    let m = engine.run(0);
+    for l in &m.levels {
+        assert_eq!(l.bytes, per_msg * msgs, "level {}", l.level);
+    }
+}

@@ -1,7 +1,9 @@
 //! Three-layer integration: the AOT artifacts (JAX/Pallas → HLO text)
 //! executed through PJRT inside the distributed engine, checked against
 //! the native backend and the serial oracle. Skips (with a notice) when
-//! `make artifacts` has not run.
+//! `make artifacts` has not run. The whole file is gated on the `xla`
+//! feature (the PJRT runtime needs the offline `xla` crate).
+#![cfg(feature = "xla")]
 
 use butterfly_bfs::bfs::serial::serial_bfs;
 use butterfly_bfs::coordinator::{ButterflyBfs, EngineConfig, PatternKind};
