@@ -1,0 +1,167 @@
+"""Executable spec of the 2D fold/expand exchange (dependency-free).
+
+The Rust engine's 2D mode (``PartitionMode::TwoD`` + ``comm::FoldExpand``)
+is specified here as a ~100-line pure-Python model and checked against a
+serial BFS oracle: distances must agree on *every* processor of the grid,
+and the per-level message count must equal the analytical model
+``P*(cols-1) + P*(rows-1)`` (``Partition2D::message_volume`` on the Rust
+side). This file is the cross-layer contract: if the Rust implementation
+and this spec ever disagree about what fold/expand means, one of the two
+test suites goes red.
+"""
+
+import random
+
+INF = 2**32 - 1
+
+
+def serial_bfs(n, adj, root):
+    dist = [INF] * n
+    dist[root] = 0
+    q, d = [root], 0
+    while q:
+        nq = []
+        for v in q:
+            for u in adj[v]:
+                if dist[u] == INF:
+                    dist[u] = d + 1
+                    nq.append(u)
+        q = nq
+        d += 1
+    return dist
+
+
+def partition_1d_cuts(n, offsets, parts):
+    """Edge-balanced greedy prefix cuts (mirrors partition_1d in Rust)."""
+    m = offsets[n]
+    cuts, v = [0], 0
+    for p in range(1, parts):
+        target = m * p / parts
+        max_v = n - (parts - p)
+        while v < max_v and offsets[v + 1] < target:
+            v += 1
+        v = min(max(v, cuts[-1] + 1), max_v)
+        cuts.append(v)
+    cuts.append(n)
+    return cuts
+
+
+def fold_expand_schedule(rows, cols):
+    """Fold along processor rows, then expand along columns."""
+    rounds, rank = [], lambda i, j: i * cols + j
+    if cols > 1:
+        rounds.append([
+            (rank(i, j), rank(i, j2))
+            for i in range(rows) for j in range(cols)
+            for j2 in range(cols) if j2 != j
+        ])
+    if rows > 1:
+        rounds.append([
+            (rank(i, j), rank(i2, j))
+            for i in range(rows) for j in range(cols)
+            for i2 in range(rows) if i2 != i
+        ])
+    return rounds
+
+
+class Proc:
+    """One grid processor: full distance view + its edge block."""
+
+    def __init__(self, n, srcs, block):
+        self.srcs, self.block = srcs, block
+        self.d = [INF] * n
+        self.visited = [False] * n
+        self.q_local, self.q_next, self.q_global = [], [], []
+
+    def owns(self, v):
+        return self.srcs[0] <= v < self.srcs[1]
+
+    def discover(self, v, level):
+        if self.visited[v]:
+            return
+        self.visited[v] = True
+        self.d[v] = level + 1
+        self.q_global.append(v)
+        if self.owns(v):
+            self.q_next.append(v)
+
+
+def run_2d(n, adj, offsets, rows, cols, root):
+    row_cuts = partition_1d_cuts(n, offsets, rows)
+    col_cuts = [n * j // cols for j in range(cols + 1)]
+    sched = fold_expand_schedule(rows, cols)
+    procs = []
+    for i in range(rows):
+        rlo, rhi = row_cuts[i], row_cuts[i + 1]
+        for j in range(cols):
+            clo, chi = col_cuts[j], col_cuts[j + 1]
+            block = {u: [w for w in adj[u] if clo <= w < chi]
+                     for u in range(rlo, rhi)}
+            procs.append(Proc(n, (rlo, rhi), block))
+    for p in procs:
+        p.d[root] = 0
+        p.visited[root] = True
+        if p.owns(root):
+            p.q_local.append(root)
+    level = messages = levels = 0
+    while any(procs[i * cols].q_local for i in range(rows)):
+        levels += 1
+        for p in procs:
+            for v in p.q_local:
+                for u in p.block[v]:
+                    p.discover(u, level)
+        for rnd in sched:  # CopyFrontier: transfers see round-start state
+            snap = [len(p.q_global) for p in procs]
+            for (src, dst) in rnd:
+                messages += 1
+                for k in range(snap[src]):
+                    procs[dst].discover(procs[src].q_global[k], level)
+        for p in procs:
+            p.q_local, p.q_next, p.q_global = p.q_next, [], []
+        level += 1
+    return procs, messages, levels
+
+
+def random_graph(rng, n, ef):
+    edges = set()
+    for _ in range(n * ef):
+        u, v = rng.randrange(n), rng.randrange(n)
+        if u != v:
+            edges.add((u, v))
+            edges.add((v, u))
+    adj = [[] for _ in range(n)]
+    for (u, v) in sorted(edges):
+        adj[u].append(v)
+    offsets = [0]
+    for v in range(n):
+        offsets.append(offsets[-1] + len(adj[v]))
+    return adj, offsets
+
+
+def test_fold_expand_matches_serial_and_message_model():
+    rng = random.Random(0x2D)
+    for _ in range(60):
+        n = rng.randrange(2, 120)
+        adj, offsets = random_graph(rng, n, rng.randrange(1, 5))
+        rows = rng.randrange(1, min(6, n) + 1)
+        cols = rng.randrange(1, min(6, n) + 1)
+        root = rng.randrange(n)
+        want = serial_bfs(n, adj, root)
+        procs, messages, levels = run_2d(n, adj, offsets, rows, cols, root)
+        for k, p in enumerate(procs):
+            assert p.d == want, (
+                f"n={n} grid={rows}x{cols} root={root}: processor {k} disagrees"
+            )
+        model = levels * (rows * cols) * ((cols - 1) + (rows - 1))
+        assert messages == model, f"n={n} grid={rows}x{cols}: {messages} != {model}"
+
+
+def test_degenerate_grids():
+    # 1x1 never communicates; 1xP folds only; Px1 expands only.
+    adj = [[1], [0, 2], [1]]
+    offsets = [0, 1, 3, 4]
+    for (rows, cols, expected_partners) in [(1, 1, 0), (1, 3, 2), (3, 1, 2)]:
+        procs, messages, levels = run_2d(3, adj, offsets, rows, cols, 0)
+        want = serial_bfs(3, adj, 0)
+        assert all(p.d == want for p in procs)
+        assert messages == levels * rows * cols * expected_partners

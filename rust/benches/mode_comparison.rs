@@ -1,0 +1,119 @@
+//! Mode comparison bench: 1D + butterfly (fanouts 1 and 4) vs the 2D
+//! fold/expand checkerboard, head-to-head at p ∈ {16, 64} simulated nodes
+//! — the experiment the paper argues by formula (§2–3: 2D cuts messages
+//! from P to √P per peer set; butterfly cuts them further to ~log P
+//! rounds of f sends).
+//!
+//! Reported per (graph, p, mode): measured messages and bytes, the
+//! fold/expand split (2D), rounds per level, simulated DGX-2 time, and
+//! the analytical message model next to the measurement — the `model`
+//! column must read `match` for every 2D row
+//! (`Partition2D::message_volume`) and every 1D row (schedule count ×
+//! levels).
+//!
+//! Run: `cargo bench --bench mode_comparison`
+//! (`BBFS_SCALE_DELTA=n` rescales the graphs; `BBFS_BENCH_PROFILE=full`
+//! uses the larger defaults.)
+
+use butterfly_bfs::comm::analysis::ModeVolume;
+use butterfly_bfs::coordinator::{ButterflyBfs, EngineConfig, PartitionMode};
+use butterfly_bfs::graph::gen::table1_suite;
+use butterfly_bfs::harness::table::{count, f2, ms, Table};
+use butterfly_bfs::partition::Partition2D;
+
+fn main() {
+    let scale_delta: i32 = std::env::var("BBFS_SCALE_DELTA")
+        .ok()
+        .and_then(|s| s.parse().ok())
+        .unwrap_or(match std::env::var("BBFS_BENCH_PROFILE").as_deref() {
+            Ok("full") => -4,
+            _ => -6,
+        });
+    let root = 0u32;
+
+    for name in ["kron-like", "webbase-like"] {
+        let spec = table1_suite().into_iter().find(|s| s.name == name).unwrap();
+        let g = spec.generate_scaled(scale_delta);
+        println!(
+            "== mode_comparison on {} (|V|={}, |E|={}), root {root} ==",
+            spec.name,
+            count(g.num_vertices() as u64),
+            count(g.num_edges()),
+        );
+        let mut t = Table::new(&[
+            "p",
+            "mode",
+            "levels",
+            "rounds/level",
+            "messages",
+            "model",
+            "bytes",
+            "fold/expand bytes",
+            "sim ms",
+        ]);
+        for p in [16usize, 64] {
+            let (rows, cols) = Partition2D::near_square_grid(p as u32);
+            let modes: Vec<(String, EngineConfig)> = vec![
+                ("1d butterfly-f1".into(), EngineConfig::dgx2(p, 1)),
+                ("1d butterfly-f4".into(), EngineConfig::dgx2(p, 4)),
+                (
+                    format!("2d-{rows}x{cols} fold-expand"),
+                    EngineConfig::dgx2_2d(rows, cols),
+                ),
+            ];
+            for (label, cfg) in modes {
+                let mut engine = ButterflyBfs::new(&g, cfg);
+                let m = engine.run(root);
+                engine.assert_agreement().expect("node agreement");
+                let levels = m.depth() as u64;
+                let modeled = match engine.config().partition {
+                    PartitionMode::OneD => {
+                        engine.schedule().total_messages() * levels
+                    }
+                    PartitionMode::TwoD { .. } => engine
+                        .partition()
+                        .as_two_d()
+                        .unwrap()
+                        .message_volume(levels),
+                };
+                let volume = ModeVolume {
+                    mode: label.clone(),
+                    levels,
+                    modeled_messages: modeled,
+                    measured_messages: m.messages(),
+                    measured_bytes: m.bytes(),
+                };
+                let split = if m.fold_messages() + m.expand_messages() > 0 {
+                    format!(
+                        "{} / {}",
+                        count(m.fold_bytes()),
+                        count(m.expand_bytes())
+                    )
+                } else {
+                    "-".into()
+                };
+                t.row(vec![
+                    p.to_string(),
+                    label,
+                    levels.to_string(),
+                    f2(engine.schedule().depth() as f64),
+                    count(m.messages()),
+                    if volume.model_matches() {
+                        format!("{} match", count(modeled))
+                    } else {
+                        format!("{} MISMATCH", count(modeled))
+                    },
+                    count(m.bytes()),
+                    split,
+                    ms(m.sim_seconds()),
+                ]);
+            }
+        }
+        println!("{}", t.render());
+    }
+    println!(
+        "note: 2D messages follow P·(√P−1)·2 per level (fold + expand); the\n\
+         butterfly stays at ~CN·f·log_f(CN) — fewer messages at every p here,\n\
+         which is the paper's core claim against 2D decompositions."
+    );
+}

@@ -185,10 +185,26 @@ impl MaskFrontier {
     /// Accumulate into a dense per-vertex mask array (entries OR in).
     pub fn to_masks(&self, len: usize) -> Vec<u64> {
         let mut masks = vec![0u64; len];
-        for &(v, m) in &self.entries {
+        self.accumulate_prefix(self.entries.len(), &mut masks);
+        masks
+    }
+
+    /// OR the first `take` entries into `masks` (one word per vertex) —
+    /// the dense round-start snapshot of a delta *prefix*, used by the
+    /// engine's dense merge fallback (`CopyFrontier` semantics freeze the
+    /// prefix length, not the whole list).
+    pub fn accumulate_prefix(&self, take: usize, masks: &mut [u64]) {
+        self.accumulate_range(0, take, masks);
+    }
+
+    /// OR entries `from..to` into `masks`. The delta list only grows
+    /// within a level, so a caller holding masks for `0..from` extends
+    /// them to `0..to` without replaying the shared prefix (the engine's
+    /// per-round incremental dense snapshot).
+    pub fn accumulate_range(&self, from: usize, to: usize, masks: &mut [u64]) {
+        for &(v, m) in &self.entries[from..to] {
             masks[v as usize] |= m;
         }
-        masks
     }
 
     /// Build from a dense mask array, skipping zero masks.
@@ -338,6 +354,19 @@ mod tests {
         let g = MaskFrontier::from_masks(&dense);
         assert_eq!(g.entries(), &[(3, 0b111), (9, 1 << 63)]);
         assert_eq!(g.payload_bytes(), 24);
+    }
+
+    #[test]
+    fn accumulate_prefix_respects_take() {
+        let mut f = MaskFrontier::new();
+        f.push(1, 0b01);
+        f.push(2, 0b10);
+        f.push(1, 0b100);
+        let mut masks = vec![0u64; 4];
+        f.accumulate_prefix(2, &mut masks);
+        assert_eq!(masks, vec![0, 0b01, 0b10, 0]);
+        f.accumulate_prefix(3, &mut masks);
+        assert_eq!(masks[1], 0b101);
     }
 
     #[test]

@@ -76,6 +76,47 @@ pub fn comm_costs(s: &Schedule, payload_bytes: u64) -> CommCosts {
     }
 }
 
+/// Measured-vs-modeled message volume of one engine run — the executable
+/// check that the analytical per-level models (butterfly schedule counts,
+/// [`Partition2D::message_volume`](crate::partition::Partition2D::message_volume))
+/// describe what the engine *actually* shipped. Built by
+/// `benches/mode_comparison.rs` and the 2D equivalence suite from run
+/// metrics plus the mode's closed-form model.
+#[derive(Clone, Debug, PartialEq, Eq)]
+pub struct ModeVolume {
+    /// Mode label (e.g. `"1d butterfly-f4"`, `"2d-8x8 fold-expand"`).
+    pub mode: String,
+    /// Levels the traversal ran (schedule executions).
+    pub levels: u64,
+    /// Messages the analytical model predicts for `levels` executions.
+    pub modeled_messages: u64,
+    /// Messages the engine measured.
+    pub measured_messages: u64,
+    /// Bytes the engine measured (no closed form — payloads are
+    /// frontier-dependent; this is the "measured, not just modeled" half).
+    pub measured_bytes: u64,
+}
+
+impl ModeVolume {
+    /// True when the measured message count equals the model exactly.
+    pub fn model_matches(&self) -> bool {
+        self.modeled_messages == self.measured_messages
+    }
+
+    /// One-line report for bench tables.
+    pub fn render(&self) -> String {
+        format!(
+            "{}: {} levels, messages {} (model {}, {}), bytes {}",
+            self.mode,
+            self.levels,
+            self.measured_messages,
+            self.modeled_messages,
+            if self.model_matches() { "match" } else { "MISMATCH" },
+            self.measured_bytes
+        )
+    }
+}
+
 /// The paper's approximate message-count formula `CN · f · log_f(CN)`
 /// (§3). Exposed so benches can print "paper formula" next to measured.
 pub fn paper_message_formula(cn: u32, fanout: u32) -> f64 {
@@ -171,6 +212,22 @@ mod tests {
             }
             (ok, format!("cn={cn} f={f}"))
         });
+    }
+
+    #[test]
+    fn mode_volume_match_and_render() {
+        let v = ModeVolume {
+            mode: "2d-4x4 fold-expand".to_string(),
+            levels: 7,
+            modeled_messages: 7 * 96,
+            measured_messages: 7 * 96,
+            measured_bytes: 1234,
+        };
+        assert!(v.model_matches());
+        assert!(v.render().contains("match"));
+        let bad = ModeVolume { measured_messages: 5, ..v };
+        assert!(!bad.model_matches());
+        assert!(bad.render().contains("MISMATCH"));
     }
 
     #[test]

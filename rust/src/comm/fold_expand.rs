@@ -1,0 +1,169 @@
+//! The 2D fold/expand exchange pattern (Buluç & Madduri; Yoo et al.).
+//!
+//! For a `rows × cols` processor grid, each BFS level synchronizes in two
+//! rounds:
+//!
+//! 1. **Fold** (round 0, when `cols > 1`) — every processor ships its
+//!    accumulated discoveries to its `cols − 1` *row* peers. After the
+//!    round, each processor knows everything its processor row discovered
+//!    this level (the row's target ranges tile the whole vertex set, so
+//!    this aggregates the row's frontier segments).
+//! 2. **Expand** (when `rows > 1`) — every processor broadcasts the
+//!    row-merged frontier to its `rows − 1` *column* peers. Each column
+//!    contains one processor from every row, so after the round every
+//!    processor holds the complete deduped level frontier.
+//!
+//! Under the engine's allgather transfer semantics this two-round
+//! schedule achieves full coverage (verified by
+//! [`verify_full_coverage`](crate::comm::analysis::verify_full_coverage)
+//! like every other pattern) with `cols − 1 + rows − 1` partners per
+//! processor — `2(√P − 1)` for a square grid versus the 1D all-to-all's
+//! `P − 1`. That is the classical "P to √P" message reduction the paper's
+//! butterfly is pitched against;
+//! [`messages_per_level`](crate::partition::Partition2D::messages_per_level)
+//! is the matching closed-form count.
+
+use super::pattern::{CommPattern, Schedule, Transfer};
+
+/// The fold/expand pattern for a `rows × cols` grid (ranks row-major:
+/// processor `(i, j)` is rank `i·cols + j`).
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub struct FoldExpand {
+    /// Processor-grid rows.
+    pub rows: u32,
+    /// Processor-grid columns.
+    pub cols: u32,
+}
+
+impl FoldExpand {
+    /// Create the pattern for a `rows × cols` grid.
+    pub fn new(rows: u32, cols: u32) -> Self {
+        assert!(rows >= 1 && cols >= 1);
+        Self { rows, cols }
+    }
+
+    /// Number of fold rounds in the schedule (0 when `cols == 1`).
+    pub fn fold_rounds(&self) -> usize {
+        usize::from(self.cols > 1)
+    }
+
+    /// Number of expand rounds in the schedule (0 when `rows == 1`).
+    pub fn expand_rounds(&self) -> usize {
+        usize::from(self.rows > 1)
+    }
+}
+
+impl CommPattern for FoldExpand {
+    fn name(&self) -> &'static str {
+        "fold-expand"
+    }
+
+    /// Build the two-round schedule. `num_nodes` must equal `rows·cols`.
+    fn schedule(&self, num_nodes: u32) -> Schedule {
+        assert_eq!(
+            num_nodes,
+            self.rows * self.cols,
+            "fold/expand needs num_nodes == rows*cols ({}x{})",
+            self.rows,
+            self.cols
+        );
+        let rank = |i: u32, j: u32| i * self.cols + j;
+        let mut rounds = Vec::with_capacity(2);
+        if self.cols > 1 {
+            let mut fold = Vec::with_capacity((num_nodes * (self.cols - 1)) as usize);
+            for i in 0..self.rows {
+                for j in 0..self.cols {
+                    for j2 in 0..self.cols {
+                        if j2 != j {
+                            fold.push(Transfer { src: rank(i, j), dst: rank(i, j2) });
+                        }
+                    }
+                }
+            }
+            rounds.push(fold);
+        }
+        if self.rows > 1 {
+            let mut expand = Vec::with_capacity((num_nodes * (self.rows - 1)) as usize);
+            for i in 0..self.rows {
+                for j in 0..self.cols {
+                    for i2 in 0..self.rows {
+                        if i2 != i {
+                            expand.push(Transfer { src: rank(i, j), dst: rank(i2, j) });
+                        }
+                    }
+                }
+            }
+            rounds.push(expand);
+        }
+        Schedule { num_nodes, rounds }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::comm::analysis::verify_full_coverage;
+
+    #[test]
+    fn full_coverage_for_exhaustive_grids() {
+        for rows in 1..=8u32 {
+            for cols in 1..=8u32 {
+                let s = FoldExpand::new(rows, cols).schedule(rows * cols);
+                s.validate().unwrap_or_else(|e| panic!("{rows}x{cols}: {e}"));
+                verify_full_coverage(&s)
+                    .unwrap_or_else(|e| panic!("{rows}x{cols}: {e}"));
+            }
+        }
+    }
+
+    #[test]
+    fn message_count_matches_model() {
+        for (rows, cols) in [(4u32, 4u32), (2, 8), (8, 2), (1, 6), (6, 1), (3, 5)] {
+            let p = (rows * cols) as u64;
+            let s = FoldExpand::new(rows, cols).schedule(rows * cols);
+            let want = p * (cols as u64 - 1) + p * (rows as u64 - 1);
+            assert_eq!(s.total_messages(), want, "{rows}x{cols}");
+        }
+    }
+
+    #[test]
+    fn round_structure_and_fanout() {
+        let fe = FoldExpand::new(4, 4);
+        let s = fe.schedule(16);
+        assert_eq!(s.depth(), 2);
+        assert_eq!(fe.fold_rounds(), 1);
+        assert_eq!(fe.expand_rounds(), 1);
+        // Each round: every node sends to and receives from exactly 3 peers.
+        assert_eq!(s.max_sends_per_round(), 3);
+        assert_eq!(s.max_recvs_per_round(), 3);
+        assert_eq!(s.rounds[0].len(), 16 * 3);
+        assert_eq!(s.rounds[1].len(), 16 * 3);
+        // Fold transfers stay within a processor row.
+        for t in &s.rounds[0] {
+            assert_eq!(t.src / 4, t.dst / 4, "{t:?} crosses rows in fold");
+        }
+        // Expand transfers stay within a processor column.
+        for t in &s.rounds[1] {
+            assert_eq!(t.src % 4, t.dst % 4, "{t:?} crosses cols in expand");
+        }
+    }
+
+    #[test]
+    fn degenerate_grids_drop_empty_rounds() {
+        let row_only = FoldExpand::new(1, 8).schedule(8);
+        assert_eq!(row_only.depth(), 1);
+        assert_eq!(row_only.total_messages(), 8 * 7);
+        let col_only = FoldExpand::new(8, 1).schedule(8);
+        assert_eq!(col_only.depth(), 1);
+        assert_eq!(col_only.total_messages(), 8 * 7);
+        let single = FoldExpand::new(1, 1).schedule(1);
+        assert_eq!(single.depth(), 0);
+        assert_eq!(single.total_messages(), 0);
+    }
+
+    #[test]
+    #[should_panic(expected = "num_nodes == rows*cols")]
+    fn wrong_node_count_panics() {
+        FoldExpand::new(4, 4).schedule(15);
+    }
+}

@@ -80,6 +80,38 @@ impl PayloadEncoding {
     }
 }
 
+/// How the graph is laid out across compute nodes — the engine's
+/// multi-pattern seam: each mode pairs a partition (who owns which
+/// edges) with the synchronization schedule that matches it.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum PartitionMode {
+    /// The paper's 1D layout: contiguous edge-balanced vertex ranges,
+    /// synchronized by the configured [`PatternKind`] (butterfly /
+    /// all-to-all).
+    OneD,
+    /// Checkerboard 2D layout (Buluç & Madduri): a `rows × cols`
+    /// processor grid over the adjacency matrix, synchronized by the
+    /// fold-along-rows / expand-along-columns exchange
+    /// ([`crate::comm::FoldExpand`]); [`PatternKind`] is ignored.
+    /// Requires `num_nodes == rows·cols`.
+    TwoD {
+        /// Processor-grid rows (source-axis split).
+        rows: u32,
+        /// Processor-grid columns (target-axis split).
+        cols: u32,
+    },
+}
+
+impl PartitionMode {
+    /// Display name (`"1d"` / `"2d-RxC"`).
+    pub fn name(&self) -> String {
+        match *self {
+            PartitionMode::OneD => "1d".to_string(),
+            PartitionMode::TwoD { rows, cols } => format!("2d-{rows}x{cols}"),
+        }
+    }
+}
+
 /// Traversal direction policy for Phase 1 (the paper's contribution 3:
 /// the butterfly sync composes with either formulation unchanged).
 #[derive(Clone, Copy, Debug, PartialEq, Eq)]
@@ -110,7 +142,10 @@ impl DirectionMode {
 pub struct EngineConfig {
     /// Number of simulated compute nodes (GPUs).
     pub num_nodes: usize,
-    /// Synchronization pattern.
+    /// Graph layout + exchange family (1D/butterfly or 2D/fold-expand).
+    pub partition: PartitionMode,
+    /// Synchronization pattern (1D mode; ignored by the 2D mode, whose
+    /// schedule is fixed by the grid).
     pub pattern: PatternKind,
     /// Payload encoding.
     pub payload: PayloadEncoding,
@@ -131,6 +166,7 @@ impl EngineConfig {
     pub fn dgx2(num_nodes: usize, fanout: u32) -> Self {
         Self {
             num_nodes,
+            partition: PartitionMode::OneD,
             pattern: PatternKind::Butterfly { fanout },
             payload: PayloadEncoding::Auto,
             use_lrb: true,
@@ -138,6 +174,15 @@ impl EngineConfig {
             parallel_phase1: false,
             net: NetModel::dgx2(),
             device: DeviceModel::v100(),
+        }
+    }
+
+    /// The 2D comparator on the same hardware models: a `rows × cols`
+    /// fold/expand grid (`num_nodes = rows·cols`).
+    pub fn dgx2_2d(rows: u32, cols: u32) -> Self {
+        Self {
+            partition: PartitionMode::TwoD { rows, cols },
+            ..Self::dgx2((rows * cols) as usize, 1)
         }
     }
 }
@@ -168,7 +213,17 @@ mod tests {
     fn dgx2_preset() {
         let c = EngineConfig::dgx2(16, 4);
         assert_eq!(c.num_nodes, 16);
+        assert_eq!(c.partition, PartitionMode::OneD);
         assert!(matches!(c.pattern, PatternKind::Butterfly { fanout: 4 }));
         assert_eq!(c.net.name, "dgx2-nvswitch");
+    }
+
+    #[test]
+    fn dgx2_2d_preset_and_mode_names() {
+        let c = EngineConfig::dgx2_2d(4, 8);
+        assert_eq!(c.num_nodes, 32);
+        assert_eq!(c.partition, PartitionMode::TwoD { rows: 4, cols: 8 });
+        assert_eq!(c.partition.name(), "2d-4x8");
+        assert_eq!(PartitionMode::OneD.name(), "1d");
     }
 }

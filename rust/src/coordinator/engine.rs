@@ -1,16 +1,31 @@
-//! The distributed ButterFly BFS engine — Alg. 2 of the paper.
+//! The distributed multi-pattern BFS engine — Alg. 2 of the paper, over
+//! either partition layout.
 //!
 //! Each level runs two strictly separated phases:
 //!
 //! 1. **Traversal** — every compute node expands its owned frontier over
 //!    its adjacency slab (via its [`ComputeBackend`]), discovering vertices
 //!    into its global queue and distance array.
-//! 2. **Butterfly synchronization** — the configured [`CommPattern`]'s
-//!    rounds execute with allgather semantics: each transfer ships the
-//!    sender's accumulated global queue (snapshotted at round start, the
-//!    paper's `CopyFrontier`); receivers dedup against their distance
-//!    array, extend their own global queue (so later rounds relay), and
-//!    route owned vertices into their next local queue.
+//! 2. **Synchronization** — the schedule's rounds execute with allgather
+//!    semantics: each transfer ships the sender's accumulated global queue
+//!    (snapshotted at round start, the paper's `CopyFrontier`); receivers
+//!    dedup against their distance array, extend their own global queue
+//!    (so later rounds relay), and route owned vertices into their next
+//!    local queue.
+//!
+//! The [`PartitionMode`] picks the (layout, schedule) pair — the seam
+//! every exchange pattern plugs into:
+//!
+//! * **1D** (the paper's mode): contiguous edge-balanced row slabs,
+//!   synchronized by the configured
+//!   [`PatternKind`](crate::coordinator::config::PatternKind) — butterfly
+//!   or all-to-all.
+//! * **2D** (the Buluç & Madduri comparator): checkerboard edge blocks of
+//!   a `rows × cols` grid, synchronized by the fold-along-rows /
+//!   expand-along-columns exchange ([`crate::comm::FoldExpand`]). Every
+//!   node of a processor row owns the same source range (each expands its
+//!   own column block), and per-phase fold/expand byte/message accounting
+//!   flows into the level metrics.
 //!
 //! The engine also keeps the simulated clock: Phase-1 compute is priced by
 //! the [`DeviceModel`](crate::net::model::DeviceModel) (slowest node wins —
@@ -20,29 +35,42 @@
 //! Besides the single-root [`ButterflyBfs::run`], the engine offers the
 //! batched multi-source [`ButterflyBfs::run_batch`]: up to 64 roots
 //! advance bit-parallel through the *same* schedule, one exchange per
-//! level serving the whole batch (see [`crate::bfs::msbfs`]).
+//! level serving the whole batch (see [`crate::bfs::msbfs`]). With
+//! `parallel_phase1` set, the batched per-node stepping runs on the
+//! [`ThreadPool`] (the per-(node, batch-state) slices are disjoint).
 
 use super::backend::{ComputeBackend, ExpandOutput, NativeCsr};
-use super::config::{DirectionMode, EngineConfig};
+use super::config::{DirectionMode, EngineConfig, PartitionMode};
 use super::metrics::{BatchMetrics, LevelMetrics, RunMetrics, SequentialBaseline};
 use super::node::ComputeNode;
+use crate::bfs::frontier::MaskFrontier;
 use crate::bfs::msbfs::{MsBfsNodeState, MAX_BATCH};
 use crate::bfs::serial::INF;
-use crate::comm::pattern::Schedule;
+use crate::comm::fold_expand::FoldExpand;
+use crate::comm::pattern::{CommPattern, Schedule};
 use crate::graph::csr::{Csr, VertexId};
 use crate::net::sim::simulate_schedule;
-use crate::partition::one_d::{partition_1d, Partition1D};
+use crate::partition::one_d::partition_1d;
+use crate::partition::{Partition2D, PartitionSpec};
+use crate::util::threadpool::ThreadPool;
 
 /// The multi-node BFS engine.
 pub struct ButterflyBfs {
     config: EngineConfig,
-    partition: Partition1D,
+    partition: PartitionSpec,
     nodes: Vec<ComputeNode>,
     backends: Vec<Box<dyn ComputeBackend>>,
     schedule: Schedule,
+    /// Leading schedule rounds that are the 2D fold phase (0 in 1D mode;
+    /// the remaining rounds are the expand phase).
+    fold_rounds: usize,
     num_vertices: usize,
     graph_edges: u64,
     scratch: Vec<ExpandOutput>,
+    /// Worker pool for batched per-node stepping — created lazily on the
+    /// first [`Self::run_batch`] that wants it (`parallel_phase1` set,
+    /// more than one node), so single-root-only engines never spawn it.
+    pool: Option<ThreadPool>,
     /// Per-node MS-BFS state of the most recent [`Self::run_batch`] (empty
     /// until the first batch).
     batch_states: Vec<MsBfsNodeState>,
@@ -68,15 +96,34 @@ impl ButterflyBfs {
     ) -> Self {
         assert_eq!(backends.len(), config.num_nodes, "one backend per node");
         assert!(config.num_nodes >= 1);
-        let partition = partition_1d(g, config.num_nodes);
-        let nodes: Vec<ComputeNode> = partition
-            .slabs(g)
+        // The multi-pattern seam: each mode yields its (layout, schedule)
+        // pair; everything downstream is mode-agnostic.
+        let (partition, slabs, schedule, fold_rounds) = match config.partition {
+            PartitionMode::OneD => {
+                let p = partition_1d(g, config.num_nodes);
+                let slabs = p.slabs(g);
+                let schedule = config.pattern.build().schedule(config.num_nodes as u32);
+                (PartitionSpec::OneD(p), slabs, schedule, 0)
+            }
+            PartitionMode::TwoD { rows, cols } => {
+                assert_eq!(
+                    config.num_nodes,
+                    rows as usize * cols as usize,
+                    "2D mode needs num_nodes == rows*cols (grid {rows}x{cols})"
+                );
+                let p = Partition2D::new(g, rows, cols);
+                let slabs = p.block_slabs(g);
+                let fe = FoldExpand::new(rows, cols);
+                let schedule = fe.schedule(config.num_nodes as u32);
+                (PartitionSpec::TwoD(p), slabs, schedule, fe.fold_rounds())
+            }
+        };
+        schedule.validate().expect("generated schedule invalid");
+        let nodes: Vec<ComputeNode> = slabs
             .into_iter()
             .enumerate()
             .map(|(i, slab)| ComputeNode::new(i as u32, slab, g.num_vertices()))
             .collect();
-        let schedule = config.pattern.build().schedule(config.num_nodes as u32);
-        schedule.validate().expect("generated schedule invalid");
         let scratch = (0..config.num_nodes).map(|_| ExpandOutput::default()).collect();
         Self {
             config,
@@ -84,17 +131,66 @@ impl ButterflyBfs {
             nodes,
             backends,
             schedule,
+            fold_rounds,
             num_vertices: g.num_vertices(),
             graph_edges: g.num_edges(),
             scratch,
+            pool: None,
             batch_states: Vec::new(),
             batch_width: 0,
         }
     }
 
-    /// The partition in use.
-    pub fn partition(&self) -> &Partition1D {
+    /// The partition in use (1D row slabs or the 2D grid).
+    pub fn partition(&self) -> &PartitionSpec {
         &self.partition
+    }
+
+    /// Distinct active frontier vertices across the machine. In 1D each
+    /// owned vertex is queued on exactly one node; in 2D every node of a
+    /// processor row queues the row's vertices (each expands its own
+    /// column block), so count one column representative per row.
+    fn frontier_len(&self) -> u64 {
+        match self.config.partition {
+            PartitionMode::OneD => {
+                self.nodes.iter().map(|n| n.q_local.len() as u64).sum()
+            }
+            PartitionMode::TwoD { cols, .. } => self
+                .nodes
+                .iter()
+                .step_by(cols as usize)
+                .map(|n| n.q_local.len() as u64)
+                .sum(),
+        }
+    }
+
+    /// Batched analog of [`Self::frontier_len`].
+    fn batch_frontier_len(&self) -> u64 {
+        match self.config.partition {
+            PartitionMode::OneD => self
+                .batch_states
+                .iter()
+                .map(|s| s.q_local.len() as u64)
+                .sum(),
+            PartitionMode::TwoD { cols, .. } => self
+                .batch_states
+                .iter()
+                .step_by(cols as usize)
+                .map(|s| s.q_local.len() as u64)
+                .sum(),
+        }
+    }
+
+    /// 2D mode: the (fold messages, fold bytes, expand messages, expand
+    /// bytes) split of one level's payload matrix; `None` in 1D mode.
+    fn phase_split(&self, payloads: &[Vec<u64>]) -> Option<(u64, u64, u64, u64)> {
+        if !matches!(self.config.partition, PartitionMode::TwoD { .. }) {
+            return None;
+        }
+        let (fold, expand) = payloads.split_at(self.fold_rounds.min(payloads.len()));
+        let msgs = |rs: &[Vec<u64>]| rs.iter().map(|r| r.len() as u64).sum::<u64>();
+        let bytes = |rs: &[Vec<u64>]| rs.iter().flatten().copied().sum::<u64>();
+        Some((msgs(fold), bytes(fold), msgs(expand), bytes(expand)))
     }
 
     /// The synchronization schedule in use.
@@ -126,7 +222,7 @@ impl ButterflyBfs {
         let mut prev_frontier = 0u64;
         let mut m_unexplored = self.graph_edges;
         loop {
-            let frontier: u64 = self.nodes.iter().map(|n| n.q_local.len() as u64).sum();
+            let frontier = self.frontier_len();
             if frontier == 0 {
                 break;
             }
@@ -178,6 +274,13 @@ impl ButterflyBfs {
                 &comm,
                 sim_compute,
             );
+            if let Some((fm, fb, em, eb)) = self.phase_split(&payloads) {
+                let l = metrics.levels.last_mut().expect("level just pushed");
+                l.fold_messages = fm;
+                l.fold_bytes = fb;
+                l.expand_messages = em;
+                l.expand_bytes = eb;
+            }
 
             // Update the DO bookkeeping before queues rotate.
             if let DirectionMode::DirOpt { .. } = self.config.direction {
@@ -356,30 +459,42 @@ impl ButterflyBfs {
             graph_edges: self.graph_edges,
             ..Default::default()
         };
+        if self.pool.is_none() && self.config.parallel_phase1 && self.config.num_nodes > 1
+        {
+            let workers = std::thread::available_parallelism()
+                .map(|n| n.get())
+                .unwrap_or(4)
+                .min(self.config.num_nodes);
+            self.pool = Some(ThreadPool::new(workers));
+        }
         let mut level = 0u32;
         loop {
-            let frontier: u64 = self
-                .batch_states
-                .iter()
-                .map(|s| s.q_local.len() as u64)
-                .sum();
+            let frontier = self.batch_frontier_len();
             if frontier == 0 {
                 break;
             }
             // ---- Phase 1: every node expands its owned masked frontier;
             // one adjacency read serves every active lane of the vertex.
-            for (node, st) in self.nodes.iter().zip(self.batch_states.iter_mut()) {
-                let q = std::mem::take(&mut st.q_local);
-                for &v in &q {
-                    let mv = st.visit[v as usize];
-                    st.visit[v as usize] = 0;
-                    debug_assert!(mv != 0, "frontier vertex {v} with empty mask");
-                    st.edges_this_level += node.slab.degree_global(v) as u64;
-                    for &u in node.slab.neighbors_global(v) {
-                        st.discover(u, mv, level, node.owns(u));
-                    }
+            // The (node, batch-state) pairs are disjoint, so the pool can
+            // step them bulk-synchronously; the per-node work is identical
+            // either way, so pooled results are bit-identical to
+            // sequential stepping.
+            if let Some(pool) = &self.pool {
+                let nodes = &self.nodes;
+                let count = self.batch_states.len();
+                let states = SendPtr(self.batch_states.as_mut_ptr());
+                pool.run_indexed(count, |i| {
+                    // SAFETY: `run_indexed` invokes each index exactly
+                    // once and blocks until every job finished, so the
+                    // `&mut` derived from index `i` aliases nothing and
+                    // outlives no borrow.
+                    let st = unsafe { &mut *states.0.add(i) };
+                    batch_expand_node(&nodes[i], st, level);
+                });
+            } else {
+                for (node, st) in self.nodes.iter().zip(self.batch_states.iter_mut()) {
+                    batch_expand_node(node, st, level);
                 }
-                st.q_local = q; // keep the allocation; cleared at swap
             }
             let edges: u64 = self.batch_states.iter().map(|s| s.edges_this_level).sum();
             let max_node_edges = self
@@ -404,6 +519,7 @@ impl ButterflyBfs {
                 .iter()
                 .map(|&(_, m)| m.count_ones() as u64)
                 .sum();
+            let (fm, fb, em, eb) = self.phase_split(&payloads).unwrap_or_default();
             metrics.levels.push(LevelMetrics {
                 level,
                 frontier,
@@ -412,6 +528,10 @@ impl ButterflyBfs {
                 discovered,
                 messages: comm.total_messages,
                 bytes: comm.total_bytes,
+                fold_messages: fm,
+                fold_bytes: fb,
+                expand_messages: em,
+                expand_bytes: eb,
                 sim_compute,
                 sim_comm: comm.total(),
             });
@@ -436,8 +556,28 @@ impl ButterflyBfs {
     /// semantics (transfers in a round see round-start state, frozen by
     /// snapshotting list lengths — they only grow). Returns per-round
     /// per-transfer payload byte sizes for the interconnect simulator.
+    ///
+    /// Mirrors [`Self::phase2`]'s dense/sparse dispatch: once a sender's
+    /// frozen prefix passes the `8·V`-byte accounting switchover (where
+    /// [`PayloadEncoding::MaskDelta`](super::config::PayloadEncoding) caps
+    /// the sparse `12·entries` at the dense per-vertex mask array), the
+    /// merge follows the wire format — a word-wise OR over the snapshotted
+    /// masks — instead of replaying entries one by one.
     fn batch_phase2(&mut self, level: u32) -> Vec<Vec<u64>> {
+        let nv = self.num_vertices;
+        // Entries at which `12·entries >= 8·V`: the dense mask array is
+        // now the (no larger) negotiated form, so merge it word-wise.
+        let dense_threshold =
+            ((nv as u64 * 8).div_ceil(MaskFrontier::ENTRY_BYTES) as usize).max(1);
         let mut payloads = Vec::with_capacity(self.schedule.rounds.len());
+        // Round-start dense snapshots (one V-word lane-mask array per
+        // dense sender), flat like `phase2`'s `bit_snap` — but built
+        // *incrementally*: deltas only grow within a level and the merge
+        // is an idempotent OR, so each round folds in only the entries
+        // appended since the previous round (`mask_done` tracks the
+        // per-node accumulated prefix) instead of replaying from zero.
+        let mut mask_snap: Vec<u64> = Vec::new();
+        let mut mask_done: Vec<usize> = vec![0; self.batch_states.len()];
         for round in 0..self.schedule.rounds.len() {
             // Snapshot (prefix length, priced bytes) together: the
             // coalescing statistics are monotone within the level, so
@@ -447,6 +587,22 @@ impl ButterflyBfs {
                 .iter()
                 .map(|s| (s.delta.len(), s.delta_payload_bytes(s.delta.len())))
                 .collect();
+            let any_dense = snap.iter().any(|&(l, _)| l >= dense_threshold);
+            if any_dense {
+                if mask_snap.is_empty() {
+                    mask_snap.resize(nv * self.batch_states.len(), 0);
+                }
+                for (k, s) in self.batch_states.iter().enumerate() {
+                    if snap[k].0 >= dense_threshold {
+                        s.delta.accumulate_range(
+                            mask_done[k],
+                            snap[k].0,
+                            &mut mask_snap[k * nv..(k + 1) * nv],
+                        );
+                        mask_done[k] = snap[k].0;
+                    }
+                }
+            }
             let transfers = std::mem::take(&mut self.schedule.rounds[round]);
             let mut round_payloads = Vec::with_capacity(transfers.len());
             for t in &transfers {
@@ -454,17 +610,34 @@ impl ButterflyBfs {
                 let dst = t.dst as usize;
                 let (take, priced) = snap[src];
                 round_payloads.push(priced);
-                let (sender, receiver) = if src < dst {
-                    let (lo, hi) = self.batch_states.split_at_mut(dst);
-                    (&lo[src], &mut hi[0])
-                } else {
-                    let (lo, hi) = self.batch_states.split_at_mut(src);
-                    (&hi[0] as &MsBfsNodeState, &mut lo[dst])
-                };
                 let dst_node = &self.nodes[dst];
-                for i in 0..take {
-                    let (v, m) = sender.delta.entries()[i];
-                    receiver.discover(v, m, level, dst_node.owns(v));
+                if take >= dense_threshold {
+                    // Dense path: the frozen prefix as per-vertex masks.
+                    let masks = &mask_snap[src * nv..(src + 1) * nv];
+                    let receiver = &mut self.batch_states[dst];
+                    for (v, &m) in masks.iter().enumerate() {
+                        if m != 0 {
+                            receiver.discover(
+                                v as VertexId,
+                                m,
+                                level,
+                                dst_node.owns(v as VertexId),
+                            );
+                        }
+                    }
+                } else {
+                    // Sparse path: entry-wise replay of the frozen prefix.
+                    let (sender, receiver) = if src < dst {
+                        let (lo, hi) = self.batch_states.split_at_mut(dst);
+                        (&lo[src], &mut hi[0])
+                    } else {
+                        let (lo, hi) = self.batch_states.split_at_mut(src);
+                        (&hi[0] as &MsBfsNodeState, &mut lo[dst])
+                    };
+                    for i in 0..take {
+                        let (v, m) = sender.delta.entries()[i];
+                        receiver.discover(v, m, level, dst_node.owns(v));
+                    }
                 }
             }
             self.schedule.rounds[round] = transfers;
@@ -561,6 +734,28 @@ impl ButterflyBfs {
         }
         Ok(())
     }
+}
+
+/// Raw-pointer transport for handing the pool disjoint `&mut` slots of one
+/// slice (each `run_indexed` index touches exactly one element).
+struct SendPtr(*mut MsBfsNodeState);
+unsafe impl Send for SendPtr {}
+unsafe impl Sync for SendPtr {}
+
+/// One node's Phase-1 step of a batched level — shared by the pooled and
+/// sequential paths, so the two are bit-identical by construction.
+fn batch_expand_node(node: &ComputeNode, st: &mut MsBfsNodeState, level: u32) {
+    let q = std::mem::take(&mut st.q_local);
+    for &v in &q {
+        let mv = st.visit[v as usize];
+        st.visit[v as usize] = 0;
+        debug_assert!(mv != 0, "frontier vertex {v} with empty mask");
+        st.edges_this_level += node.slab.degree_global(v) as u64;
+        for &u in node.slab.neighbors_global(v) {
+            st.discover(u, mv, level, node.owns(u));
+        }
+    }
+    st.q_local = q; // keep the allocation; cleared at swap
 }
 
 fn expand_node(
@@ -942,6 +1137,164 @@ mod tests {
                 });
             (ok, format!("n={n} ef={ef} nodes={nodes} f={fanout} b={b}"))
         });
+    }
+
+    /// Run a 2D-mode traversal, check distances against serial BFS and
+    /// the measured message count against the analytical
+    /// `Partition2D::message_volume` model, and check the fold/expand
+    /// splits tile the totals.
+    fn check_two_d(g: &Csr, rows: u32, cols: u32, root: VertexId) {
+        let mut engine = ButterflyBfs::new(g, EngineConfig::dgx2_2d(rows, cols));
+        let m = engine.run(root);
+        engine.assert_agreement().unwrap();
+        assert_eq!(
+            engine.dist(),
+            &serial_bfs(g, root)[..],
+            "grid {rows}x{cols} root {root}"
+        );
+        let p2 = engine.partition().as_two_d().expect("2D mode");
+        assert_eq!(
+            m.messages(),
+            p2.message_volume(m.depth() as u64),
+            "grid {rows}x{cols}: measured vs model"
+        );
+        for l in &m.levels {
+            assert_eq!(l.fold_messages + l.expand_messages, l.messages);
+            assert_eq!(l.fold_bytes + l.expand_bytes, l.bytes);
+        }
+    }
+
+    #[test]
+    fn two_d_matches_serial_square_and_ragged_grids() {
+        let (g, _) = uniform_random(900, 8, 77);
+        for (rows, cols) in [(4u32, 4u32), (2, 8), (8, 2), (1, 4), (4, 1), (3, 5)] {
+            check_two_d(&g, rows, cols, 13);
+        }
+    }
+
+    #[test]
+    fn two_d_single_processor_degenerates_to_local_bfs() {
+        let (g, _) = uniform_random(400, 8, 3);
+        let mut engine = ButterflyBfs::new(&g, EngineConfig::dgx2_2d(1, 1));
+        let m = engine.run(0);
+        assert_eq!(engine.dist(), &serial_bfs(&g, 0)[..]);
+        assert_eq!(m.messages(), 0, "one processor never communicates");
+    }
+
+    #[test]
+    fn two_d_direction_modes_match_serial() {
+        use crate::coordinator::config::DirectionMode;
+        let (g, _) = kronecker(KroneckerParams::graph500(10, 8), 9);
+        for direction in [DirectionMode::BottomUp, DirectionMode::diropt()] {
+            let cfg = EngineConfig { direction, ..EngineConfig::dgx2_2d(4, 4) };
+            let mut engine = ButterflyBfs::new(&g, cfg);
+            engine.run(2);
+            engine.assert_agreement().unwrap();
+            assert_eq!(engine.dist(), &serial_bfs(&g, 2)[..], "{direction:?}");
+        }
+    }
+
+    #[test]
+    fn two_d_run_batch_matches_serial_per_lane() {
+        let (g, _) = uniform_random(500, 8, 19);
+        let roots: Vec<VertexId> = (0..32u32).map(|i| (i * 13) % 500).collect();
+        for (rows, cols) in [(4u32, 4u32), (2, 3), (1, 5)] {
+            let mut engine = ButterflyBfs::new(&g, EngineConfig::dgx2_2d(rows, cols));
+            let m = engine.run_batch(&roots);
+            engine.assert_batch_agreement().unwrap();
+            let p2 = engine.partition().as_two_d().unwrap();
+            assert_eq!(m.messages(), p2.message_volume(m.depth() as u64));
+            assert_eq!(m.fold_messages() + m.expand_messages(), m.messages());
+            for (lane, &r) in roots.iter().enumerate() {
+                assert_eq!(
+                    engine.batch_dist(lane),
+                    &serial_bfs(&g, r)[..],
+                    "grid {rows}x{cols} lane {lane}"
+                );
+            }
+        }
+    }
+
+    #[test]
+    fn property_two_d_equals_serial() {
+        use crate::util::propcheck::{forall, gen, Config};
+        forall(Config::cases(20), "2d fold/expand == serial", |rng| {
+            let n = gen::usize_in(rng, 8, 300);
+            let ef = gen::usize_in(rng, 1, 6) as u32;
+            let rows = gen::usize_in(rng, 1, 6.min(n)) as u32;
+            let cols = gen::usize_in(rng, 1, 6.min(n)) as u32;
+            let (g, _) = uniform_random(n, ef, rng.next_u64());
+            let root = rng.next_usize(n) as u32;
+            let mut engine = ButterflyBfs::new(&g, EngineConfig::dgx2_2d(rows, cols));
+            let m = engine.run(root);
+            let p2 = engine.partition().as_two_d().unwrap();
+            let ok = engine.assert_agreement().is_ok()
+                && engine.dist() == &serial_bfs(&g, root)[..]
+                && m.messages() == p2.message_volume(m.depth() as u64);
+            (ok, format!("n={n} ef={ef} grid={rows}x{cols} root={root}"))
+        });
+    }
+
+    #[test]
+    fn pooled_batch_stepping_bit_identical_to_sequential() {
+        // The threadpool determinism acceptance: pooled per-node stepping
+        // must reproduce sequential stepping bit for bit — distances,
+        // per-level byte/message accounting, everything — across 50
+        // seeded configs in both partition modes.
+        use crate::util::propcheck::{forall, gen, Config};
+        forall(Config::cases(50), "pooled run_batch == sequential", |rng| {
+            let n = gen::usize_in(rng, 10, 250);
+            let ef = gen::usize_in(rng, 1, 6) as u32;
+            let b = gen::usize_in(rng, 1, 24);
+            let (g, _) = uniform_random(n, ef, rng.next_u64());
+            let roots: Vec<VertexId> =
+                (0..b).map(|_| rng.next_usize(n) as VertexId).collect();
+            let cfg = if rng.next_below(2) == 0 {
+                let nodes = gen::usize_in(rng, 2, 8.min(n));
+                EngineConfig::dgx2(nodes, gen::usize_in(rng, 1, 4) as u32)
+            } else {
+                let rows = gen::usize_in(rng, 1, 4.min(n)) as u32;
+                let cols = gen::usize_in(rng, 1, 4.min(n)) as u32;
+                EngineConfig::dgx2_2d(rows, cols)
+            };
+            let mut seq = ButterflyBfs::new(&g, cfg.clone());
+            let mut par = ButterflyBfs::new(
+                &g,
+                EngineConfig { parallel_phase1: true, ..cfg },
+            );
+            let ms = seq.run_batch(&roots);
+            let mp = par.run_batch(&roots);
+            let mut ok = par.assert_batch_agreement().is_ok();
+            for lane in 0..roots.len() {
+                ok &= seq.batch_dist(lane) == par.batch_dist(lane);
+            }
+            ok &= ms.depth() == mp.depth();
+            for (a, c) in ms.levels.iter().zip(&mp.levels) {
+                ok &= a.frontier == c.frontier
+                    && a.edges_examined == c.edges_examined
+                    && a.discovered == c.discovered
+                    && a.messages == c.messages
+                    && a.bytes == c.bytes;
+            }
+            (ok, format!("n={n} ef={ef} b={b}"))
+        });
+    }
+
+    #[test]
+    fn batch_dense_merge_fallback_matches_oracle() {
+        // A star forces a level whose delta list (≈ V entries) crosses the
+        // 8·V-byte switchover, so the dense word-wise OR path runs; the
+        // result must match the bit-parallel oracle exactly.
+        use crate::bfs::msbfs::ms_bfs;
+        let g = star(600);
+        let roots: Vec<VertexId> = (0..64u32).map(|i| i % 2).collect();
+        let mut engine = ButterflyBfs::new(&g, EngineConfig::dgx2(8, 2));
+        engine.run_batch(&roots);
+        engine.assert_batch_agreement().unwrap();
+        let want = ms_bfs(&g, &roots);
+        for lane in 0..roots.len() {
+            assert_eq!(engine.batch_dist(lane), want.dist(lane), "lane {lane}");
+        }
     }
 
     #[test]

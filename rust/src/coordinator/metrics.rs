@@ -19,10 +19,18 @@ pub struct LevelMetrics {
     pub max_node_edges: u64,
     /// New vertices discovered (deduped, global).
     pub discovered: u64,
-    /// Butterfly/all-to-all messages this level.
+    /// Butterfly/all-to-all/fold+expand messages this level.
     pub messages: u64,
     /// Bytes shipped this level.
     pub bytes: u64,
+    /// 2D mode: messages in the fold (row-exchange) rounds; 0 in 1D mode.
+    pub fold_messages: u64,
+    /// 2D mode: bytes in the fold rounds; 0 in 1D mode.
+    pub fold_bytes: u64,
+    /// 2D mode: messages in the expand (column-exchange) rounds; 0 in 1D.
+    pub expand_messages: u64,
+    /// 2D mode: bytes in the expand rounds; 0 in 1D mode.
+    pub expand_bytes: u64,
     /// Simulated Phase-1 compute time (slowest node).
     pub sim_compute: f64,
     /// Simulated Phase-2 communication time.
@@ -89,6 +97,26 @@ impl RunMetrics {
         self.levels.len()
     }
 
+    /// Total fold-phase (row-exchange) messages — nonzero only in 2D mode.
+    pub fn fold_messages(&self) -> u64 {
+        self.levels.iter().map(|l| l.fold_messages).sum()
+    }
+
+    /// Total fold-phase bytes — nonzero only in 2D mode.
+    pub fn fold_bytes(&self) -> u64 {
+        self.levels.iter().map(|l| l.fold_bytes).sum()
+    }
+
+    /// Total expand-phase (column-exchange) messages — nonzero only in 2D.
+    pub fn expand_messages(&self) -> u64 {
+        self.levels.iter().map(|l| l.expand_messages).sum()
+    }
+
+    /// Total expand-phase bytes — nonzero only in 2D mode.
+    pub fn expand_bytes(&self) -> u64 {
+        self.levels.iter().map(|l| l.expand_bytes).sum()
+    }
+
     /// Record one level from raw phase outputs.
     pub fn push_level(
         &mut self,
@@ -110,6 +138,7 @@ impl RunMetrics {
             bytes: comm.total_bytes,
             sim_compute,
             sim_comm: comm.total(),
+            ..Default::default()
         });
     }
 
@@ -125,6 +154,10 @@ impl RunMetrics {
             ("edges_examined", Json::u(self.edges_examined())),
             ("messages", Json::u(self.messages())),
             ("bytes", Json::u(self.bytes())),
+            ("fold_messages", Json::u(self.fold_messages())),
+            ("fold_bytes", Json::u(self.fold_bytes())),
+            ("expand_messages", Json::u(self.expand_messages())),
+            ("expand_bytes", Json::u(self.expand_bytes())),
             (
                 "levels",
                 Json::Arr(
@@ -212,6 +245,26 @@ impl BatchMetrics {
         self.levels.iter().map(|l| l.bytes).sum()
     }
 
+    /// Total fold-phase messages — nonzero only in 2D mode.
+    pub fn fold_messages(&self) -> u64 {
+        self.levels.iter().map(|l| l.fold_messages).sum()
+    }
+
+    /// Total fold-phase bytes — nonzero only in 2D mode.
+    pub fn fold_bytes(&self) -> u64 {
+        self.levels.iter().map(|l| l.fold_bytes).sum()
+    }
+
+    /// Total expand-phase messages — nonzero only in 2D mode.
+    pub fn expand_messages(&self) -> u64 {
+        self.levels.iter().map(|l| l.expand_messages).sum()
+    }
+
+    /// Total expand-phase bytes — nonzero only in 2D mode.
+    pub fn expand_bytes(&self) -> u64 {
+        self.levels.iter().map(|l| l.expand_bytes).sum()
+    }
+
     /// Number of levels (the max depth over the batch's lanes).
     pub fn depth(&self) -> usize {
         self.levels.len()
@@ -240,6 +293,10 @@ impl BatchMetrics {
             ("edges_examined", Json::u(self.edges_examined())),
             ("messages", Json::u(self.messages())),
             ("bytes", Json::u(self.bytes())),
+            ("fold_messages", Json::u(self.fold_messages())),
+            ("fold_bytes", Json::u(self.fold_bytes())),
+            ("expand_messages", Json::u(self.expand_messages())),
+            ("expand_bytes", Json::u(self.expand_bytes())),
             ("bytes_per_root", Json::n(self.bytes_per_root())),
             ("reached_pairs", Json::u(self.reached_pairs)),
         ])
@@ -269,6 +326,25 @@ mod tests {
         assert_eq!(m.bytes(), 1200);
         assert!((m.sim_seconds() - 0.010).abs() < 1e-12);
         assert!((m.sim_comm_fraction() - 0.4).abs() < 1e-9);
+        // 1D levels carry no per-phase split.
+        assert_eq!(m.fold_messages(), 0);
+        assert_eq!(m.expand_bytes(), 0);
+    }
+
+    #[test]
+    fn phase_split_aggregates() {
+        let mut m = RunMetrics { graph_edges: 10, ..Default::default() };
+        m.push_level(0, 1, 2, 2, 1, &timing(10, 700, 0.5), 0.5);
+        let l = m.levels.last_mut().unwrap();
+        l.fold_messages = 6;
+        l.fold_bytes = 300;
+        l.expand_messages = 4;
+        l.expand_bytes = 400;
+        assert_eq!(m.fold_messages() + m.expand_messages(), m.messages());
+        assert_eq!(m.fold_bytes() + m.expand_bytes(), m.bytes());
+        let s = m.to_json().render();
+        assert!(s.contains("\"fold_bytes\":300"));
+        assert!(s.contains("\"expand_messages\":4"));
     }
 
     #[test]
@@ -294,6 +370,10 @@ mod tests {
             discovered: 320,
             messages: 4,
             bytes: 640,
+            fold_messages: 3,
+            fold_bytes: 400,
+            expand_messages: 1,
+            expand_bytes: 240,
             sim_compute: 0.002,
             sim_comm: 0.001,
         });
@@ -304,9 +384,13 @@ mod tests {
         assert!((b.bytes_per_root() - 10.0).abs() < 1e-12);
         assert!((b.sim_seconds() - 0.003).abs() < 1e-12);
         assert!((b.sim_seconds_per_root() - 0.003 / 64.0).abs() < 1e-15);
+        assert_eq!(b.fold_messages() + b.expand_messages(), b.messages());
+        assert_eq!(b.fold_bytes() + b.expand_bytes(), b.bytes());
         let s = b.to_json().render();
         assert!(s.contains("\"num_roots\":64"));
         assert!(s.contains("\"sync_rounds\":4"));
+        assert!(s.contains("\"fold_bytes\":400"));
+        assert!(s.contains("\"expand_messages\":1"));
     }
 
     #[test]

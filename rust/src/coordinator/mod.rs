@@ -1,6 +1,7 @@
-//! The L3 coordinator: simulated compute nodes, the distributed ButterFly
-//! BFS engine (Alg. 2), pluggable Phase-1 backends, configuration, and
-//! metrics.
+//! The L3 coordinator: simulated compute nodes, the distributed
+//! multi-pattern BFS engine (Alg. 2 over 1D + butterfly/all-to-all or the
+//! 2D fold/expand checkerboard), pluggable Phase-1 backends,
+//! configuration, and metrics.
 
 pub mod backend;
 pub mod config;
@@ -9,7 +10,9 @@ pub mod metrics;
 pub mod node;
 
 pub use backend::{ComputeBackend, ExpandOutput, NativeCsr};
-pub use config::{DirectionMode, EngineConfig, PatternKind, PayloadEncoding};
+pub use config::{
+    DirectionMode, EngineConfig, PartitionMode, PatternKind, PayloadEncoding,
+};
 pub use engine::ButterflyBfs;
 pub use metrics::{BatchMetrics, LevelMetrics, RunMetrics, SequentialBaseline};
 pub use node::ComputeNode;

@@ -1,13 +1,20 @@
 //! The simulated compute node: one GPU's worth of state (Alg. 2's
 //! per-`CN` variables), owning only its own memory.
 //!
-//! Per the paper each node holds: its adjacency slab (1D partition), a
-//! **full-size local distance array** `d_local` ("All CN set their d"), a
-//! **local queue** (owned frontier vertices — next level's work), and a
-//! **global queue** (every vertex this node discovered or relayed this
-//! level — the butterfly payload). The receive buffer is preallocated at
-//! the `O(f·V)` bound (contribution 4): no allocation happens on the
-//! traversal path after construction.
+//! Per the paper each node holds: its adjacency slab, a **full-size local
+//! distance array** `d_local` ("All CN set their d"), a **local queue**
+//! (owned frontier vertices — next level's work), and a **global queue**
+//! (every vertex this node discovered or relayed this level — the
+//! exchange payload). The receive buffer is preallocated at the `O(f·V)`
+//! bound (contribution 4): no allocation happens on the traversal path
+//! after construction.
+//!
+//! The slab is layout-agnostic: under the 1D mode it is the node's full
+//! adjacency row range; under the 2D mode it is one checkerboard *block*
+//! (the same row range filtered to the node's column range —
+//! [`Partition2D::block_slab`](crate::partition::Partition2D::block_slab)),
+//! so every node of a processor row `owns` the same sources and expands
+//! its own column slice of their edges.
 
 use crate::bfs::frontier::Bitmap;
 use crate::bfs::serial::INF;

@@ -1,10 +1,12 @@
 //! `butterfly-bfs` — the command-line launcher.
 //!
 //! Subcommands:
-//! * `run`       — traverse a graph with the distributed ButterFly BFS
-//!                 engine (simulated multi-node, DGX-2 timing model).
+//! * `run`       — traverse a graph with the distributed BFS engine
+//!                 (simulated multi-node, DGX-2 timing model); `--mode 1d`
+//!                 (butterfly/all-to-all) or `--mode 2d --grid RxC`
+//!                 (checkerboard fold/expand).
 //! * `batch`     — batched multi-source BFS: up to 64 roots through one
-//!                 butterfly exchange per level (`run_batch`).
+//!                 exchange per level (`run_batch`), in either mode.
 //! * `baseline`  — run the single-node CPU baselines (top-down /
 //!                 direction-optimizing), the paper's GapBS comparators.
 //! * `generate`  — generate a suite graph and write it to disk.
@@ -16,15 +18,16 @@
 use butterfly_bfs::bfs::dirop::{diropt_bfs, DirOptParams};
 use butterfly_bfs::bfs::topdown::topdown_bfs;
 use butterfly_bfs::comm::{Butterfly, CommPattern, ConcurrentAllToAll, IterativeAllToAll};
-use butterfly_bfs::coordinator::config::DirectionMode;
+use butterfly_bfs::coordinator::config::{DirectionMode, PartitionMode};
 use butterfly_bfs::coordinator::{ButterflyBfs, EngineConfig, PatternKind, PayloadEncoding};
+use butterfly_bfs::partition::Partition2D;
 use butterfly_bfs::graph::csr::Csr;
 use butterfly_bfs::graph::gen::{table1_suite, GraphSpec};
 use butterfly_bfs::graph::{io, props};
 use butterfly_bfs::harness::table::{count, f2, ms, Table};
 use butterfly_bfs::net::model::NetModel;
 use butterfly_bfs::net::sim::simulate_uniform;
-use butterfly_bfs::util::cli::{Args, CliError};
+use butterfly_bfs::util::cli::{parse_pair, Args, CliError};
 use butterfly_bfs::util::stats::gteps;
 use std::path::Path;
 
@@ -130,8 +133,10 @@ fn cmd_run(argv: Vec<String>) -> Result<()> {
     let spec = Args::new("butterfly-bfs run", "distributed ButterFly BFS traversal")
         .req("graph", "suite graph name or path (.bbfs/.mtx/edge list)")
         .opt("nodes", "16", "number of simulated compute nodes")
+        .opt("mode", "1d", "partition mode: 1d (butterfly/all-to-all) | 2d (fold/expand)")
+        .opt("grid", "auto", "2d processor grid RxC (rows*cols must equal --nodes) or auto")
         .opt("fanout", "4", "butterfly fanout (1 = classic butterfly)")
-        .opt("pattern", "butterfly", "butterfly | alltoall | iterative")
+        .opt("pattern", "butterfly", "butterfly | alltoall | iterative (1d mode)")
         .opt("payload", "auto", "payload encoding: queue | bitmap | auto | maskdelta")
         .opt("root", "0", "BFS root vertex")
         .opt("scale-delta", "0", "suite graph scale adjustment (+/- log2)")
@@ -158,8 +163,11 @@ fn cmd_run(argv: Vec<String>) -> Result<()> {
         "diropt" => DirectionMode::diropt(),
         d => bail!("unknown direction {d:?}"),
     };
+    let partition = parse_partition_mode(&a.get("mode"), &a.get("grid"), nodes)?;
+    check_layout_fits(partition, nodes, g.num_vertices())?;
     let cfg = EngineConfig {
         num_nodes: nodes,
+        partition,
         pattern,
         payload,
         use_lrb: !a.get_flag("no-lrb"),
@@ -180,10 +188,14 @@ fn cmd_run(argv: Vec<String>) -> Result<()> {
         return Ok(());
     }
     println!(
-        "graph: |V|={} |E|={}  nodes={nodes} pattern={}",
+        "graph: |V|={} |E|={}  nodes={nodes} mode={} pattern={}",
         count(g.num_vertices() as u64),
         count(g.num_edges()),
-        engine.config().pattern.name()
+        partition.name(),
+        match partition {
+            PartitionMode::OneD => engine.config().pattern.name(),
+            PartitionMode::TwoD { .. } => "fold-expand".to_string(),
+        }
     );
     println!(
         "reached {} vertices in {} levels; examined {} edges",
@@ -205,7 +217,55 @@ fn cmd_run(argv: Vec<String>) -> Result<()> {
         count(m.bytes()),
         m.depth()
     );
+    if let PartitionMode::TwoD { .. } = partition {
+        println!(
+            "  fold (rows): {} messages, {} bytes | expand (cols): {} messages, {} bytes",
+            count(m.fold_messages()),
+            count(m.fold_bytes()),
+            count(m.expand_messages()),
+            count(m.expand_bytes())
+        );
+    }
     Ok(())
+}
+
+/// Reject layouts the engine would refuse with a deep assert — a
+/// formatted error beats a panic for a CLI mistake.
+fn check_layout_fits(partition: PartitionMode, nodes: usize, n: usize) -> Result<()> {
+    match partition {
+        PartitionMode::OneD if nodes > n => {
+            bail!("--nodes {nodes} exceeds the graph's {n} vertices")
+        }
+        PartitionMode::TwoD { rows, cols }
+            if rows as usize > n || cols as usize > n =>
+        {
+            bail!("--grid {rows}x{cols} has an axis larger than the graph's {n} vertices")
+        }
+        _ => Ok(()),
+    }
+}
+
+/// Resolve `--mode` / `--grid` into a [`PartitionMode`]. `--grid auto`
+/// picks the most-square factorization of `nodes`.
+fn parse_partition_mode(mode: &str, grid: &str, nodes: usize) -> Result<PartitionMode> {
+    Ok(match mode {
+        "1d" => PartitionMode::OneD,
+        "2d" => {
+            let (rows, cols) = if grid == "auto" {
+                Partition2D::near_square_grid(nodes as u32)
+            } else {
+                let Some(rc) = parse_pair(grid, 'x') else {
+                    bail!("--grid must be RxC (e.g. 4x4) or auto, got {grid:?}");
+                };
+                rc
+            };
+            if rows as usize * cols as usize != nodes {
+                bail!("--grid {rows}x{cols} does not cover --nodes {nodes}");
+            }
+            PartitionMode::TwoD { rows, cols }
+        }
+        m => bail!("unknown mode {m:?} (1d | 2d)"),
+    })
 }
 
 fn net_by_name(name: &str) -> Result<NetModel> {
@@ -235,10 +295,13 @@ fn cmd_batch(argv: Vec<String>) -> Result<()> {
     let spec = Args::new("butterfly-bfs batch", "batched multi-source BFS (MS-BFS)")
         .req("graph", "suite graph name or path (.bbfs/.mtx/edge list)")
         .opt("nodes", "16", "number of simulated compute nodes")
+        .opt("mode", "1d", "partition mode: 1d (butterfly) | 2d (fold/expand)")
+        .opt("grid", "auto", "2d processor grid RxC or auto")
         .opt("fanout", "4", "butterfly fanout (1 = classic butterfly)")
         .opt("roots", "64", "batch width (1..=64 random non-isolated roots)")
         .opt("seed", "7", "root sampling seed")
         .opt("scale-delta", "0", "suite graph scale adjustment (+/- log2)")
+        .flag("parallel", "step nodes on the thread pool")
         .flag("compare", "also run the roots sequentially and report the ratio");
     let a = handle_help(spec.clone().parse(argv), &spec)?;
 
@@ -249,7 +312,14 @@ fn cmd_batch(argv: Vec<String>) -> Result<()> {
     if width == 0 || width > 64 {
         bail!("--roots must be in 1..=64 (got {width})");
     }
-    let mut engine = ButterflyBfs::new(&g, EngineConfig::dgx2(nodes, fanout));
+    let partition = parse_partition_mode(&a.get("mode"), &a.get("grid"), nodes)?;
+    check_layout_fits(partition, nodes, g.num_vertices())?;
+    let cfg = EngineConfig {
+        partition,
+        parallel_phase1: a.get_flag("parallel"),
+        ..EngineConfig::dgx2(nodes, fanout)
+    };
+    let mut engine = ButterflyBfs::new(&g, cfg);
     let roots = butterfly_bfs::bfs::msbfs::sample_batch_roots(
         &g,
         width,
@@ -260,9 +330,10 @@ fn cmd_batch(argv: Vec<String>) -> Result<()> {
         .assert_batch_agreement()
         .map_err(|e| format!("node disagreement: {e}"))?;
     println!(
-        "graph: |V|={} |E|={}  nodes={nodes} fanout={fanout} batch={}",
+        "graph: |V|={} |E|={}  nodes={nodes} mode={} fanout={fanout} batch={}",
         count(g.num_vertices() as u64),
         count(g.num_edges()),
+        engine.config().partition.name(),
         bm.num_roots
     );
     println!(

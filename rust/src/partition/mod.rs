@@ -3,9 +3,15 @@
 //! The paper deliberately uses "a straightforward 1D partitioning scheme
 //! where we divide the vertices to the multiple GPUs such that each GPU
 //! gets a near equal number of edges and the vertices are consecutive in
-//! their ids" (§4 Graph Partitioning). [`one_d`] is that scheme; [`relabel`]
-//! implements the degree-sort vertex relabeling the paper defers to future
-//! work (built here as an ablation).
+//! their ids" (§4 Graph Partitioning). [`one_d`] is that scheme; [`two_d`]
+//! is the checkerboard alternative the paper is pitched against (Buluç &
+//! Madduri's fold/expand layout), which the engine's
+//! [`PartitionMode::TwoD`](crate::coordinator::config::PartitionMode) mode
+//! runs head-to-head against 1D+butterfly; [`relabel`] implements the
+//! degree-sort vertex relabeling the paper defers to future work (built
+//! here as an ablation).
+
+use crate::graph::csr::Csr;
 
 pub mod one_d;
 pub mod relabel;
@@ -13,3 +19,82 @@ pub mod two_d;
 
 pub use one_d::{partition_1d, Partition1D};
 pub use two_d::Partition2D;
+
+/// The partition a running engine was built over — 1D row slabs or a 2D
+/// processor grid. This is the layout half of the coordinator's
+/// multi-pattern seam (the other half is the synchronization
+/// [`Schedule`](crate::comm::Schedule) paired with it).
+#[derive(Clone, Debug, PartialEq)]
+pub enum PartitionSpec {
+    /// Contiguous edge-balanced vertex ranges (the paper's layout).
+    OneD(Partition1D),
+    /// `rows × cols` checkerboard edge blocks (fold/expand layout).
+    TwoD(Partition2D),
+}
+
+impl PartitionSpec {
+    /// The 1D partition, when this is one.
+    pub fn as_one_d(&self) -> Option<&Partition1D> {
+        match self {
+            PartitionSpec::OneD(p) => Some(p),
+            PartitionSpec::TwoD(_) => None,
+        }
+    }
+
+    /// The 2D partition, when this is one.
+    pub fn as_two_d(&self) -> Option<&Partition2D> {
+        match self {
+            PartitionSpec::OneD(_) => None,
+            PartitionSpec::TwoD(p) => Some(p),
+        }
+    }
+
+    /// Edge-balance ratio: max per-node edges / mean (1.0 = perfect).
+    pub fn imbalance(&self, g: &Csr) -> f64 {
+        match self {
+            PartitionSpec::OneD(p) => p.imbalance(g),
+            PartitionSpec::TwoD(p) => p.imbalance(g),
+        }
+    }
+
+    /// Short display name — delegates to
+    /// [`PartitionMode::name`](crate::coordinator::config::PartitionMode::name)
+    /// so the `"1d"` / `"2d-RxC"` format has a single definition.
+    pub fn name(&self) -> String {
+        self.mode().name()
+    }
+
+    /// The [`PartitionMode`](crate::coordinator::config::PartitionMode)
+    /// this spec instantiates.
+    pub fn mode(&self) -> crate::coordinator::config::PartitionMode {
+        match self {
+            PartitionSpec::OneD(_) => crate::coordinator::config::PartitionMode::OneD,
+            PartitionSpec::TwoD(p) => crate::coordinator::config::PartitionMode::TwoD {
+                rows: p.grid_rows,
+                cols: p.grid_cols,
+            },
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::graph::gen::urand::uniform_random;
+
+    #[test]
+    fn spec_accessors_and_names() {
+        let (g, _) = uniform_random(120, 4, 7);
+        let one = PartitionSpec::OneD(partition_1d(&g, 4));
+        let two = PartitionSpec::TwoD(Partition2D::new(&g, 2, 3));
+        assert!(one.as_one_d().is_some() && one.as_two_d().is_none());
+        assert!(two.as_two_d().is_some() && two.as_one_d().is_none());
+        assert_eq!(one.name(), "1d");
+        assert_eq!(two.name(), "2d-2x3");
+        use crate::coordinator::config::PartitionMode;
+        assert_eq!(one.mode(), PartitionMode::OneD);
+        assert_eq!(two.mode(), PartitionMode::TwoD { rows: 2, cols: 3 });
+        assert!(one.imbalance(&g) >= 1.0);
+        assert!(two.imbalance(&g) >= 1.0);
+    }
+}

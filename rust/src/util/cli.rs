@@ -196,6 +196,18 @@ impl Args {
     }
 }
 
+/// Parse an `"AxB"`-style dimension pair (e.g. `--grid 4x8`); both parts
+/// must be positive integers. Returns `None` on any malformed input.
+pub fn parse_pair(raw: &str, sep: char) -> Option<(u32, u32)> {
+    let (a, b) = raw.split_once(sep)?;
+    let a: u32 = a.trim().parse().ok()?;
+    let b: u32 = b.trim().parse().ok()?;
+    if a == 0 || b == 0 {
+        return None;
+    }
+    Some((a, b))
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;
@@ -255,6 +267,18 @@ mod tests {
     fn positionals_collected() {
         let a = base().parse(argv(&["run", "--graph", "g", "extra"])).unwrap();
         assert_eq!(a.positionals(), &["run".to_string(), "extra".to_string()]);
+    }
+
+    #[test]
+    fn parse_pair_grid_syntax() {
+        assert_eq!(parse_pair("4x8", 'x'), Some((4, 8)));
+        assert_eq!(parse_pair("1x1", 'x'), Some((1, 1)));
+        assert_eq!(parse_pair(" 4 x 8 ", 'x'), Some((4, 8)));
+        assert_eq!(parse_pair("4x0", 'x'), None);
+        assert_eq!(parse_pair("0x4", 'x'), None);
+        assert_eq!(parse_pair("4", 'x'), None);
+        assert_eq!(parse_pair("4x8x2", 'x'), None);
+        assert_eq!(parse_pair("axb", 'x'), None);
     }
 
     #[test]

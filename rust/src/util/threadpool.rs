@@ -33,7 +33,14 @@ impl ThreadPool {
                 .name(format!("bbfs-worker-{i}"))
                 .spawn(move || {
                     while let Ok(job) = rx.recv() {
-                        job();
+                        // A panicking job must not kill the worker: jobs
+                        // still queued behind it would be dropped without
+                        // ever signalling their latch, deadlocking
+                        // `run_indexed`. The panic payload is re-thrown on
+                        // the issuing thread by `run_indexed` instead.
+                        let _ = std::panic::catch_unwind(
+                            std::panic::AssertUnwindSafe(job),
+                        );
                     }
                 })
                 .expect("spawn worker");
@@ -64,6 +71,10 @@ impl ThreadPool {
     ///
     /// `f` only needs to live for the duration of the call: we use a scoped
     /// barrier internally, so borrowed data is fine.
+    ///
+    /// Panic semantics match `std::thread::scope`: if any `f(i)` panics,
+    /// the call still waits for every task, then re-throws the first
+    /// panic payload on the issuing thread.
     pub fn run_indexed<'scope, F>(&self, count: usize, f: F)
     where
         F: Fn(usize) + Sync + Send + 'scope,
@@ -72,6 +83,8 @@ impl ThreadPool {
             return;
         }
         let barrier = Arc::new(CountdownLatch::new(count));
+        let first_panic: Arc<Mutex<Option<Box<dyn std::any::Any + Send>>>> =
+            Arc::new(Mutex::new(None));
         // Scoped-borrow transport: the worker channel demands 'static jobs,
         // so we smuggle `&f` through a thin raw pointer. This is sound
         // because `run_indexed` blocks on the latch below, and every job
@@ -85,10 +98,11 @@ impl ThreadPool {
         for i in 0..count {
             let latch = Arc::clone(&barrier);
             let thin = Arc::clone(&thin);
+            let panic_slot = Arc::clone(&first_panic);
             let w = i % self.senders.len();
             let job: Job = Box::new(move || {
                 // Count down even if `f` panics, so the issuing thread does
-                // not deadlock (the panic is reported by the worker thread).
+                // not deadlock (the payload is re-thrown there instead).
                 struct Guard(Arc<CountdownLatch>);
                 impl Drop for Guard {
                     fn drop(&mut self) {
@@ -100,11 +114,21 @@ impl ThreadPool {
                 // has signalled, so `f` (borrowed for 'scope) is alive for
                 // the entire execution of this closure.
                 let f = unsafe { &*(thin.0 as *const F) };
-                f(i);
+                if let Err(payload) =
+                    std::panic::catch_unwind(std::panic::AssertUnwindSafe(|| f(i)))
+                {
+                    let mut slot = panic_slot.lock().unwrap();
+                    if slot.is_none() {
+                        *slot = Some(payload);
+                    }
+                }
             });
             self.senders[w].send(job).expect("worker alive");
         }
         barrier.wait();
+        if let Some(payload) = first_panic.lock().unwrap().take() {
+            std::panic::resume_unwind(payload);
+        }
     }
 }
 
@@ -197,6 +221,35 @@ mod tests {
     fn zero_count_returns_immediately() {
         let pool = ThreadPool::new(2);
         pool.run_indexed(0, |_| panic!("must not run"));
+    }
+
+    #[test]
+    fn panicking_task_propagates_without_deadlock() {
+        // More tasks than workers: the panicking job must not kill its
+        // worker (jobs queued behind it would drop their latch signal and
+        // deadlock), and the panic must re-throw on the issuing thread —
+        // `std::thread::scope` semantics.
+        let pool = ThreadPool::new(2);
+        let ran: Vec<AtomicU64> = (0..16).map(|_| AtomicU64::new(0)).collect();
+        let result = std::panic::catch_unwind(std::panic::AssertUnwindSafe(|| {
+            pool.run_indexed(16, |i| {
+                ran[i].fetch_add(1, Ordering::SeqCst);
+                if i == 3 {
+                    panic!("task 3 boom");
+                }
+            });
+        }));
+        assert!(result.is_err(), "panic must propagate to the caller");
+        // Every task still ran exactly once (no dropped queue tail).
+        for (i, r) in ran.iter().enumerate() {
+            assert_eq!(r.load(Ordering::SeqCst), 1, "task {i}");
+        }
+        // The pool stays usable afterwards.
+        let counter = AtomicU64::new(0);
+        pool.run_indexed(8, |_| {
+            counter.fetch_add(1, Ordering::SeqCst);
+        });
+        assert_eq!(counter.load(Ordering::SeqCst), 8);
     }
 
     #[test]

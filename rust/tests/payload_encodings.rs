@@ -151,6 +151,107 @@ fn union_in_return_count_properties() {
     });
 }
 
+/// The `MaskDelta` 8·V accounting switchover, pinned exactly from both
+/// sides: below `⌈8V/12⌉` entries the sparse `12·entries` form is priced,
+/// at and above it the dense per-vertex mask array caps the cost — and
+/// the priced bytes are monotone non-decreasing through the crossing.
+#[test]
+fn mask_delta_switchover_pinned_both_sides() {
+    for v in [96usize, 97, 600, 601] {
+        let cross = (v as u64 * 8).div_ceil(MaskFrontier::ENTRY_BYTES);
+        let mut prev = 0;
+        for e in 0..=(v as u64 + 4) {
+            let priced = PayloadEncoding::MaskDelta.bytes(e, v);
+            if e < cross {
+                assert_eq!(priced, e * 12, "v={v} e={e}: sparse side");
+                assert!(priced < v as u64 * 8);
+            } else {
+                assert_eq!(priced, v as u64 * 8, "v={v} e={e}: dense side");
+            }
+            assert!(priced >= prev, "v={v} e={e}: monotone");
+            prev = priced;
+        }
+        // The negotiated engine pricing respects the same dense family cap
+        // (presence bitmap + per-vertex masks) past the crossover.
+        let presence = (v as u64).div_ceil(64) * 8;
+        let negotiated = mask_delta_bytes(cross, cross.min(v as u64), cross, 64, v);
+        assert!(negotiated <= presence + v as u64 * 8);
+    }
+}
+
+/// Build the crossing graph: a 3-vertex path feeding a hub whose leaves
+/// continue into a second path — so a batch rooted at the path start runs
+/// sparse levels, then a dense (≥ ⌈8V/12⌉-entry) hub level, then sparse
+/// levels again: the dense merge fallback engages and disengages within
+/// one traversal.
+fn hub_with_tails(leaves: u32) -> butterfly_bfs::graph::csr::Csr {
+    use butterfly_bfs::graph::builder::GraphBuilder;
+    // 0-1-2-3(hub); hub-leaves; leaf "leaves+3" continues 3 more hops.
+    let n = 4 + leaves + 3;
+    let mut b = GraphBuilder::new(n as usize);
+    b.add_edge(0, 1);
+    b.add_edge(1, 2);
+    b.add_edge(2, 3);
+    for l in 0..leaves {
+        b.add_edge(3, 4 + l);
+    }
+    for k in 0..3 {
+        b.add_edge(3 + leaves + k, 4 + leaves + k);
+    }
+    b.build_undirected().0
+}
+
+/// The dense-merge byte-accounting regression: the traversal crosses the
+/// 8·V switchover upward (hub level) and back downward (tail levels),
+/// distances stay oracle-exact on every node, and the hot level's priced
+/// bytes stay strictly below the unbounded sparse `12·entries` cost.
+#[test]
+fn batch_dense_fallback_crosses_switchover_both_directions() {
+    use butterfly_bfs::bfs::msbfs::ms_bfs;
+    let g = hub_with_tails(600);
+    let v = g.num_vertices();
+    let dense_entries = (v as u64 * 8).div_ceil(MaskFrontier::ENTRY_BYTES);
+    let roots = vec![0u32; 64]; // duplicate roots: lanes travel together
+    let mut engine = ButterflyBfs::new(&g, EngineConfig::dgx2(4, 1));
+    let m = engine.run_batch(&roots);
+    engine.assert_batch_agreement().unwrap();
+    let want = ms_bfs(&g, &roots);
+    for lane in 0..roots.len() {
+        assert_eq!(engine.batch_dist(lane), want.dist(lane), "lane {lane}");
+    }
+    // Reconstruct per-level delta entries: with 64 duplicate lanes every
+    // discovery carries the full mask, so entries = discovered / 64.
+    let entries: Vec<u64> = m.levels.iter().map(|l| l.discovered / 64).collect();
+    let hot = entries
+        .iter()
+        .position(|&e| e >= dense_entries)
+        .expect("a level must cross the dense threshold");
+    assert!(hot > 0, "sparse levels precede the hub level");
+    assert!(
+        entries[hot + 1..].iter().all(|&e| e < dense_entries),
+        "tail levels drop back below the threshold: {entries:?}"
+    );
+    assert!(
+        entries[..hot].iter().all(|&e| e < dense_entries),
+        "pre-hub levels are sparse: {entries:?}"
+    );
+    // Byte accounting at the hot level: the negotiated encoding must
+    // undercut the unbounded sparse form once past the switchover.
+    let hot_level = &m.levels[hot];
+    let sparse_cost = hot_level.messages * entries[hot] * MaskFrontier::ENTRY_BYTES;
+    assert!(
+        hot_level.bytes < sparse_cost,
+        "dense/grouped pricing caps the hot level: {} !< {sparse_cost}",
+        hot_level.bytes
+    );
+    // And the hard ceiling: no message ever exceeds the dense mask family
+    // bound (presence bitmap + one word per vertex).
+    let presence = (v as u64).div_ceil(64) * 8;
+    for l in &m.levels {
+        assert!(l.bytes <= l.messages * (presence + v as u64 * 8), "level {}", l.level);
+    }
+}
+
 /// The engine's per-level Bitmap payload equals the closed form for every
 /// level regardless of frontier size (the paper's tight bound).
 #[test]

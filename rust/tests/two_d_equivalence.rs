@@ -1,0 +1,189 @@
+//! 2D-mode equivalence suite: the checkerboard fold/expand engine must
+//! produce distances identical to the 1D butterfly engine and to
+//! `bfs::serial` across the whole analog graph suite — including
+//! disconnected graphs, a single-vertex graph, and duplicate-edge inputs
+//! — for square and non-square grids; and its *measured* per-run message
+//! count must equal the analytical `Partition2D::message_volume` model
+//! exactly (the "measured, not just modeled" acceptance).
+
+use butterfly_bfs::bfs::serial::{serial_bfs, INF};
+use butterfly_bfs::comm::analysis::ModeVolume;
+use butterfly_bfs::coordinator::{ButterflyBfs, EngineConfig};
+use butterfly_bfs::graph::csr::{Csr, VertexId};
+use butterfly_bfs::graph::gen::structured::{grid2d, path, star};
+use butterfly_bfs::graph::gen::table1_suite;
+
+/// Square and non-square grid shapes exercised everywhere below.
+const GRIDS: [(u32, u32); 5] = [(4, 4), (2, 8), (8, 2), (3, 3), (1, 4)];
+
+/// Run the full three-way check on one graph/root: 2D (every grid shape)
+/// == 1D butterfly == serial, plus the message-volume model.
+fn check_equivalence(g: &Csr, root: VertexId, label: &str) {
+    let want = serial_bfs(g, root);
+    let nodes_1d = 16.min(g.num_vertices());
+    let mut one_d = ButterflyBfs::new(g, EngineConfig::dgx2(nodes_1d, 4));
+    one_d.run(root);
+    one_d.assert_agreement().unwrap();
+    assert_eq!(one_d.dist(), &want[..], "{label}: 1D vs serial");
+    for (rows, cols) in GRIDS {
+        if rows as usize > g.num_vertices() || cols as usize > g.num_vertices() {
+            continue;
+        }
+        let mut two_d = ButterflyBfs::new(g, EngineConfig::dgx2_2d(rows, cols));
+        let m = two_d.run(root);
+        two_d.assert_agreement().unwrap();
+        assert_eq!(
+            two_d.dist(),
+            &want[..],
+            "{label}: 2D {rows}x{cols} vs serial"
+        );
+        assert_eq!(
+            two_d.dist(),
+            one_d.dist(),
+            "{label}: 2D {rows}x{cols} vs 1D"
+        );
+        let p2 = two_d.partition().as_two_d().unwrap();
+        let volume = ModeVolume {
+            mode: format!("2d-{rows}x{cols} fold-expand"),
+            levels: m.depth() as u64,
+            modeled_messages: p2.message_volume(m.depth() as u64),
+            measured_messages: m.messages(),
+            measured_bytes: m.bytes(),
+        };
+        assert!(volume.model_matches(), "{label}: {}", volume.render());
+        // The per-phase split tiles the totals on every level.
+        for l in &m.levels {
+            assert_eq!(l.fold_messages + l.expand_messages, l.messages);
+            assert_eq!(l.fold_bytes + l.expand_bytes, l.bytes);
+        }
+    }
+}
+
+/// Every suite graph at tiny scale, square and non-square grids.
+#[test]
+fn suite_two_d_equals_one_d_equals_serial() {
+    for spec in table1_suite() {
+        let g = spec.generate_scaled(-7);
+        check_equivalence(&g, 0, spec.name);
+    }
+}
+
+/// Structured graphs from both end roots.
+#[test]
+fn structured_graphs_all_roots() {
+    for g in [path(40), star(50), grid2d(6, 8)] {
+        let last = (g.num_vertices() - 1) as VertexId;
+        check_equivalence(&g, 0, "structured");
+        check_equivalence(&g, last, "structured/last");
+    }
+}
+
+/// Disconnected graph: unreached vertices stay INF in every mode, on
+/// every node.
+#[test]
+fn disconnected_graph_unreached_stay_inf() {
+    use butterfly_bfs::graph::builder::GraphBuilder;
+    let mut b = GraphBuilder::new(40);
+    for v in 1..20u32 {
+        b.add_edge(0, v);
+    }
+    b.add_edge(30, 31); // island
+    let (g, _) = b.build_undirected();
+    check_equivalence(&g, 0, "disconnected");
+    let mut engine = ButterflyBfs::new(&g, EngineConfig::dgx2_2d(4, 4));
+    let m = engine.run(0);
+    assert_eq!(m.reached, 20);
+    assert_eq!(engine.dist()[30], INF);
+}
+
+/// The single-vertex graph runs (only the 1×1 grid fits) and terminates
+/// with distance 0 and zero communication.
+#[test]
+fn single_vertex_graph() {
+    let g = Csr::from_edges(1, &[]);
+    assert_eq!(serial_bfs(&g, 0), vec![0]);
+    let mut engine = ButterflyBfs::new(&g, EngineConfig::dgx2_2d(1, 1));
+    let m = engine.run(0);
+    engine.assert_agreement().unwrap();
+    assert_eq!(engine.dist(), &[0][..]);
+    assert_eq!(m.messages(), 0);
+}
+
+/// Duplicate-edge inputs (the raw CSR constructor does not dedup):
+/// parallel edges change nothing about distances in any mode.
+#[test]
+fn duplicate_edge_input_equivalence() {
+    let mut edges = Vec::new();
+    for (u, v) in [(0u32, 1u32), (1, 2), (2, 3), (3, 0), (1, 3)] {
+        for _ in 0..3 {
+            edges.push((u, v));
+            edges.push((v, u));
+        }
+    }
+    // A few extra vertices reachable through one (duplicated) bridge.
+    edges.push((3, 4));
+    edges.push((4, 3));
+    edges.push((3, 4));
+    edges.push((4, 3));
+    edges.push((4, 5));
+    edges.push((5, 4));
+    let g = Csr::from_edges(6, &edges);
+    check_equivalence(&g, 0, "duplicate-edges");
+}
+
+/// Batched 2D traversals across the suite: per-lane distances equal
+/// serial, and the message model still holds (one schedule execution per
+/// level regardless of batch width).
+#[test]
+fn suite_two_d_run_batch_equals_serial() {
+    use butterfly_bfs::bfs::msbfs::sample_batch_roots;
+    for spec in table1_suite().into_iter().take(3) {
+        let g = spec.generate_scaled(-8);
+        let mut roots = sample_batch_roots(&g, 8, 0x2D ^ spec.seed);
+        roots.push(roots[0]); // duplicate lane rides along
+        for (rows, cols) in [(4u32, 4u32), (2, 3)] {
+            let mut engine = ButterflyBfs::new(&g, EngineConfig::dgx2_2d(rows, cols));
+            let m = engine.run_batch(&roots);
+            engine.assert_batch_agreement().unwrap();
+            let p2 = engine.partition().as_two_d().unwrap();
+            assert_eq!(
+                m.messages(),
+                p2.message_volume(m.depth() as u64),
+                "{} {rows}x{cols}",
+                spec.name
+            );
+            for (lane, &r) in roots.iter().enumerate() {
+                assert_eq!(
+                    engine.batch_dist(lane),
+                    &serial_bfs(&g, r)[..],
+                    "{} {rows}x{cols} lane {lane}",
+                    spec.name
+                );
+            }
+        }
+    }
+}
+
+/// Direction modes compose with the 2D exchange unchanged (the paper's
+/// contribution-3 claim, transplanted to the comparator layout).
+#[test]
+fn two_d_direction_modes_equal_serial_on_suite_graph() {
+    use butterfly_bfs::coordinator::config::DirectionMode;
+    let spec = table1_suite()
+        .into_iter()
+        .find(|s| s.name == "kron-like")
+        .unwrap();
+    let g = spec.generate_scaled(-8);
+    let want = serial_bfs(&g, 1);
+    for direction in [
+        DirectionMode::TopDown,
+        DirectionMode::BottomUp,
+        DirectionMode::diropt(),
+    ] {
+        let cfg = EngineConfig { direction, ..EngineConfig::dgx2_2d(2, 8) };
+        let mut engine = ButterflyBfs::new(&g, cfg);
+        engine.run(1);
+        engine.assert_agreement().unwrap();
+        assert_eq!(engine.dist(), &want[..], "{direction:?}");
+    }
+}

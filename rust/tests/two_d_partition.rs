@@ -1,0 +1,160 @@
+//! Exhaustive `Partition2D` property coverage: for every grid shape
+//! `rows, cols ∈ 1..=8` over every vertex count `|V| ∈ 1..=64` (including
+//! ragged, non-divisible cuts), the checkerboard layout must satisfy the
+//! routing invariants the 2D engine mode builds on:
+//!
+//! * both cut arrays cover `0..n` with monotone, non-overlapping,
+//!   non-empty ranges;
+//! * every edge block `(u, w)` is owned by *exactly one* processor;
+//! * `owner_of_edge` is consistent with the per-axis range lookups;
+//! * the block slabs partition the edge set exactly.
+
+use butterfly_bfs::graph::builder::GraphBuilder;
+use butterfly_bfs::graph::csr::Csr;
+use butterfly_bfs::partition::Partition2D;
+use butterfly_bfs::util::prng::Xoshiro256StarStar;
+
+/// A graph with `n` vertices and a pseudo-random (possibly empty) edge
+/// set — raw edge lists may contain duplicates and self-loops, which the
+/// builder's ETL cleans, so ragged degree distributions are exercised.
+fn random_graph(n: usize, seed: u64) -> Csr {
+    let mut rng = Xoshiro256StarStar::seed_from_u64(seed);
+    let mut b = GraphBuilder::new(n);
+    let m = (n * 2).min(200);
+    for _ in 0..m {
+        b.add_edge(rng.next_usize(n) as u32, rng.next_usize(n) as u32);
+    }
+    b.build_undirected().0
+}
+
+#[test]
+fn exhaustive_grids_cuts_cover_and_are_monotone() {
+    for n in 1..=64usize {
+        let g = random_graph(n, n as u64);
+        for rows in 1..=8.min(n as u32) {
+            for cols in 1..=8.min(n as u32) {
+                let p2 = Partition2D::new(&g, rows, cols);
+                for (axis, cuts) in
+                    [("row", &p2.row_cuts), ("col", &p2.col_cuts)]
+                {
+                    assert_eq!(cuts[0], 0, "n={n} {rows}x{cols} {axis}");
+                    assert_eq!(
+                        *cuts.last().unwrap(),
+                        n as u32,
+                        "n={n} {rows}x{cols} {axis}"
+                    );
+                    assert!(
+                        cuts.windows(2).all(|w| w[0] < w[1]),
+                        "n={n} {rows}x{cols} {axis}: non-monotone/empty {cuts:?}"
+                    );
+                }
+            }
+        }
+    }
+}
+
+#[test]
+fn exhaustive_grids_every_edge_block_owned_exactly_once() {
+    for n in 1..=64usize {
+        let g = random_graph(n, 1000 + n as u64);
+        for rows in 1..=8.min(n as u32) {
+            for cols in 1..=8.min(n as u32) {
+                let p2 = Partition2D::new(&g, rows, cols);
+                // How many processor-row (resp. -column) ranges contain
+                // each vertex; exactly-one per axis makes every (u, w)
+                // block owned by exactly rowcount·colcount = 1 processor.
+                for u in 0..n as u32 {
+                    let owning_rows = (0..rows)
+                        .filter(|&i| {
+                            let (lo, hi) = p2.row_range(i);
+                            lo <= u && u < hi
+                        })
+                        .count();
+                    let owning_cols = (0..cols)
+                        .filter(|&j| {
+                            let (lo, hi) = p2.col_range(j);
+                            lo <= u && u < hi
+                        })
+                        .count();
+                    assert_eq!(owning_rows, 1, "n={n} {rows}x{cols} u={u}");
+                    assert_eq!(owning_cols, 1, "n={n} {rows}x{cols} w={u}");
+                }
+            }
+        }
+    }
+}
+
+#[test]
+fn exhaustive_grids_owner_of_edge_consistent_with_ranges() {
+    for n in 1..=64usize {
+        let g = random_graph(n, 2000 + n as u64);
+        for rows in 1..=8.min(n as u32) {
+            for cols in 1..=8.min(n as u32) {
+                let p2 = Partition2D::new(&g, rows, cols);
+                for u in 0..n as u32 {
+                    for w in 0..n as u32 {
+                        let rank = p2.owner_of_edge(u, w);
+                        let (i, j) = p2.coords(rank);
+                        assert_eq!(rank, p2.rank(i, j));
+                        assert_eq!(i, p2.row_of(u), "n={n} {rows}x{cols} u={u}");
+                        assert_eq!(j, p2.col_of(w), "n={n} {rows}x{cols} w={w}");
+                        let (rlo, rhi) = p2.row_range(i);
+                        let (clo, chi) = p2.col_range(j);
+                        assert!(rlo <= u && u < rhi);
+                        assert!(clo <= w && w < chi);
+                    }
+                }
+            }
+        }
+    }
+}
+
+#[test]
+fn exhaustive_grids_block_slabs_partition_the_edge_set() {
+    for n in 1..=64usize {
+        let g = random_graph(n, 3000 + n as u64);
+        for rows in 1..=8.min(n as u32) {
+            for cols in 1..=8.min(n as u32) {
+                let p2 = Partition2D::new(&g, rows, cols);
+                let slabs = p2.block_slabs(&g);
+                assert_eq!(slabs.len(), (rows * cols) as usize);
+                let total: u64 = slabs.iter().map(|s| s.num_edges()).sum();
+                assert_eq!(total, g.num_edges(), "n={n} {rows}x{cols}");
+                // Each edge lands in the slab `owner_of_edge` names.
+                for u in 0..n as u32 {
+                    for &w in g.neighbors(u) {
+                        let rank = p2.owner_of_edge(u, w) as usize;
+                        assert!(
+                            slabs[rank].neighbors_global(u).contains(&w),
+                            "n={n} {rows}x{cols} edge ({u},{w}) missing from block"
+                        );
+                    }
+                }
+            }
+        }
+    }
+}
+
+/// Larger ragged vertex counts (beyond the exhaustive window) keep the
+/// invariants, property-style.
+#[test]
+fn ragged_large_counts_keep_invariants() {
+    use butterfly_bfs::util::propcheck::{forall, gen, Config};
+    forall(Config::cases(40), "2d partition invariants at scale", |rng| {
+        let n = gen::usize_in(rng, 65, 3000);
+        let rows = gen::usize_in(rng, 1, 8) as u32;
+        let cols = gen::usize_in(rng, 1, 8) as u32;
+        let g = random_graph(n, rng.next_u64());
+        let p2 = Partition2D::new(&g, rows, cols);
+        let edges_total: u64 = p2.block_edges(&g).iter().sum();
+        let ok = edges_total == g.num_edges()
+            && (0..n as u32).all(|v| {
+                let i = p2.row_of(v);
+                let j = p2.col_of(v);
+                let (rlo, rhi) = p2.row_range(i);
+                let (clo, chi) = p2.col_range(j);
+                rlo <= v && v < rhi && clo <= v && v < chi
+            });
+        (ok, format!("n={n} grid={rows}x{cols}"))
+    });
+}
