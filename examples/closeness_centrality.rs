@@ -15,7 +15,7 @@
 
 use butterfly_bfs::bfs::msbfs::sample_batch_roots;
 use butterfly_bfs::bfs::serial::INF;
-use butterfly_bfs::coordinator::{ButterflyBfs, EngineConfig};
+use butterfly_bfs::coordinator::{EngineConfig, TraversalPlan};
 use butterfly_bfs::graph::gen::kronecker::{kronecker, KroneckerParams};
 use butterfly_bfs::harness::table::{count, f2, f3, Table};
 
@@ -27,7 +27,9 @@ fn main() {
         count(n as u64),
         count(g.num_edges())
     );
-    let mut engine = ButterflyBfs::new(&g, EngineConfig::dgx2(16, 4));
+    let plan = TraversalPlan::build(&g, EngineConfig::dgx2(16, 4))
+        .expect("valid engine configuration");
+    let mut session = plan.session();
 
     // Sample source vertices (prefer non-isolated, duplicates allowed —
     // each lane is an independent traversal).
@@ -36,9 +38,10 @@ fn main() {
 
     // One batched traversal: all 64 sources in lock-step.
     let t0 = std::time::Instant::now();
-    let bm = engine.run_batch(&sources);
+    let batch = session.run_batch(&sources).expect("valid batch");
     let wall = t0.elapsed().as_secs_f64();
-    engine.assert_batch_agreement().expect("node agreement");
+    session.assert_batch_agreement().expect("node agreement");
+    let bm = batch.metrics();
     println!(
         "{} traversals in one batch: wall {:.2} s, simulated DGX-2 {:.2} ms, \
          {} levels, {} sync rounds, {} bytes shipped",
@@ -55,7 +58,7 @@ fn main() {
     let mut sum_dist = vec![0u64; n];
     let mut times_reached = vec![0u32; n];
     for lane in 0..samples {
-        for (v, &d) in engine.batch_dist(lane).iter().enumerate() {
+        for (v, &d) in batch.dist(lane).iter().enumerate() {
             if d != INF {
                 sum_dist[v] += d as u64;
                 times_reached[v] += 1;
@@ -64,7 +67,7 @@ fn main() {
     }
 
     // What the same 64 sources cost sequentially (the pre-batching path).
-    let seq = engine.sequential_baseline(&sources);
+    let seq = session.sequential_baseline(&sources).expect("roots in range");
     println!(
         "sequential baseline: simulated {:.2} ms, {} sync rounds, {} bytes",
         seq.sim_seconds * 1e3,

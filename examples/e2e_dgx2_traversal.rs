@@ -19,7 +19,7 @@
 //! (scale via `BBFS_E2E_SCALE`, default 18).
 
 use butterfly_bfs::bfs::serial::serial_bfs;
-use butterfly_bfs::coordinator::{ButterflyBfs, EngineConfig};
+use butterfly_bfs::coordinator::{EngineConfig, TraversalPlan};
 use butterfly_bfs::graph::gen::kronecker::{kronecker, KroneckerParams};
 use butterfly_bfs::graph::props;
 use butterfly_bfs::harness::roots::{run_protocol, RootProtocol};
@@ -60,20 +60,23 @@ fn main() {
 
     // ---- 2. Native-backend traversal, paper protocol ----
     let proto = RootProtocol::from_env();
-    let mut engine = ButterflyBfs::new(&g, EngineConfig::dgx2(16, 4));
+    let plan = TraversalPlan::build(&g, EngineConfig::dgx2(16, 4)).expect("valid plan");
+    let mut session = plan.session();
     let mut wall_times = Vec::new();
     let (sim_mean, _) = run_protocol(&g, &proto, |r| {
-        let m = engine.run(r);
+        let m = session.run_metrics_only(r).expect("protocol root in range");
         wall_times.push(m.wall_seconds);
         m.sim_seconds()
     });
-    engine.assert_agreement().expect("distance agreement");
+    session.assert_agreement().expect("distance agreement");
     // Showcase root: the max-degree vertex (guaranteed in the largest
     // component; random roots can land on isolated Kronecker vertices).
     let showcase_root = (0..g.num_vertices() as u32)
         .max_by_key(|&v| g.degree(v))
         .unwrap();
-    let m = engine.run(showcase_root);
+    let m = session
+        .run_metrics_only(showcase_root)
+        .expect("root in range");
     println!("[native] {} roots (trim {}):", proto.num_roots, proto.trim);
     let mut t = Table::new(&["metric", "value"]);
     t.row(vec!["sim DGX-2 time (trimmed mean)".into(), format!("{} ms", ms(sim_mean))]);
@@ -104,21 +107,24 @@ fn main() {
             let dpart = partition_1d(&dg, cfg.num_nodes);
             let backends =
                 XlaFrontierBackend::for_slabs(Arc::clone(&step), &dpart.slabs(&dg)).unwrap();
-            let mut xla_engine = ButterflyBfs::with_backends(&dg, cfg.clone(), backends);
-            let mut native_engine = ButterflyBfs::new(&dg, cfg);
+            // One plan, two sessions (XLA + native backends) — the
+            // plan/session split at work.
+            let dplan = TraversalPlan::build(&dg, cfg).expect("valid plan");
+            let mut xla_session = dplan.session_with_backends(backends).unwrap();
+            let mut native_session = dplan.session();
             let t0 = std::time::Instant::now();
-            let mx = xla_engine.run(0);
+            let rx = xla_session.run(0).expect("root in range");
             let xla_wall = t0.elapsed().as_secs_f64();
-            native_engine.run(0);
-            xla_engine.assert_agreement().unwrap();
-            assert_eq!(xla_engine.dist(), native_engine.dist());
-            assert_eq!(xla_engine.dist(), &serial_bfs(&dg, 0)[..]);
+            let rn = native_session.run(0).expect("root in range");
+            xla_session.assert_agreement().unwrap();
+            assert_eq!(rx.dist(), rn.dist());
+            assert_eq!(rx.dist(), &serial_bfs(&dg, 0)[..]);
             println!(
                 "[xla] PJRT frontier step (v{} artifact, 8 nodes): reached {} in {} levels, \
                  wall {:.1} ms — distances == native == serial ✓\n",
                 step.num_vertices,
-                count(mx.reached),
-                mx.depth(),
+                count(rx.reached()),
+                rx.depth(),
                 xla_wall * 1e3
             );
         }

@@ -6,21 +6,22 @@
 //!         perf record -g ./target/release/examples/prof_engine &&
 //!         perf report --no-children`
 
-use butterfly_bfs::coordinator::{ButterflyBfs, EngineConfig};
+use butterfly_bfs::coordinator::{EngineConfig, TraversalPlan};
 use butterfly_bfs::graph::gen::kronecker::{kronecker, KroneckerParams};
 
 fn main() {
     let (g, _) = kronecker(KroneckerParams::graph500(16, 16), 42);
-    let mut engine = ButterflyBfs::new(&g, EngineConfig::dgx2(16, 4));
+    let plan = TraversalPlan::build(&g, EngineConfig::dgx2(16, 4)).expect("valid plan");
+    let mut session = plan.session();
     let t0 = std::time::Instant::now();
+    let mut d1 = 0u32;
     for _ in 0..30 {
-        engine.run(0);
+        d1 = session.run(0).expect("root in range").dist()[1];
     }
     let dt = t0.elapsed().as_secs_f64();
     println!(
-        "30 runs in {:.3} s  ({:.1} ms/run, dist[1]={})",
+        "30 runs in {:.3} s  ({:.1} ms/run, dist[1]={d1})",
         dt,
-        dt / 30.0 * 1e3,
-        engine.dist()[1]
+        dt / 30.0 * 1e3
     );
 }

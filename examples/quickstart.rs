@@ -5,7 +5,7 @@
 //! Run: `cargo run --release --example quickstart`
 
 use butterfly_bfs::bfs::serial::serial_bfs;
-use butterfly_bfs::coordinator::{ButterflyBfs, EngineConfig};
+use butterfly_bfs::coordinator::{EngineConfig, TraversalPlan};
 use butterfly_bfs::graph::gen::kronecker::{kronecker, KroneckerParams};
 use butterfly_bfs::harness::table::count;
 
@@ -20,17 +20,23 @@ fn main() {
         etl.duplicates
     );
 
-    // 2. A 16-node engine with the paper's headline config (fanout 4,
-    //    DGX-2 interconnect model).
-    let mut engine = ButterflyBfs::new(&graph, EngineConfig::dgx2(16, 4));
+    // 2. Build the immutable plan once — the paper's headline config
+    //    (16 nodes, fanout 4, DGX-2 interconnect model) — then open a
+    //    cheap query session over it. The plan is `Arc`-shareable, so a
+    //    service would hand one plan to many concurrent sessions.
+    let plan = TraversalPlan::build(&graph, EngineConfig::dgx2(16, 4))
+        .expect("valid engine configuration");
     println!(
-        "engine: 16 nodes, {} sync rounds/level, {} messages/level",
-        engine.schedule().depth(),
-        engine.schedule().total_messages()
+        "plan: 16 nodes, {} sync rounds/level, {} messages/level",
+        plan.schedule().depth(),
+        plan.schedule().total_messages()
     );
+    let mut session = plan.session();
 
-    // 3. Traverse.
-    let metrics = engine.run(0);
+    // 3. Traverse. The result owns its distances and metrics; invalid
+    //    roots would surface as a typed `QueryError`, not a panic.
+    let result = session.run(0).expect("root in range");
+    let metrics = result.metrics();
     println!(
         "traversal: reached {} vertices in {} levels, examined {} edges",
         count(metrics.reached),
@@ -46,7 +52,7 @@ fn main() {
     );
 
     // 4. Verify: every node's distance array equals the serial oracle.
-    engine.assert_agreement().expect("all nodes agree");
-    assert_eq!(engine.dist(), &serial_bfs(&graph, 0)[..]);
+    session.assert_agreement().expect("all nodes agree");
+    assert_eq!(result.dist(), &serial_bfs(&graph, 0)[..]);
     println!("verified: distributed result == serial BFS ✓");
 }

@@ -15,7 +15,7 @@
 //! Run: `cargo run --release --example web_analytics`
 
 use butterfly_bfs::bfs::serial::INF;
-use butterfly_bfs::coordinator::{ButterflyBfs, EngineConfig};
+use butterfly_bfs::coordinator::{EngineConfig, TraversalPlan};
 use butterfly_bfs::graph::gen::weblike::{weblike, WeblikeParams};
 use butterfly_bfs::graph::props;
 use butterfly_bfs::harness::table::{count, Table};
@@ -33,12 +33,14 @@ fn main() {
         props::pseudo_diameter(&g, 0)
     );
 
-    let mut engine = ButterflyBfs::new(&g, EngineConfig::dgx2(16, 4));
+    let plan = TraversalPlan::build(&g, EngineConfig::dgx2(16, 4))
+        .expect("valid engine configuration");
+    let mut session = plan.session();
 
     // --- Reachability + hop histogram from the seed page ---
-    let m = engine.run(0);
-    engine.assert_agreement().unwrap();
-    let dist = engine.dist().to_vec();
+    let seed_result = session.run(0).expect("root in range");
+    session.assert_agreement().unwrap();
+    let m = seed_result.metrics();
     println!("from seed page 0: reached {} pages in {} levels", count(m.reached), m.depth());
     let mut t = Table::new(&["hops", "pages", "frontier share"]);
     let reached = m.reached as f64;
@@ -67,8 +69,8 @@ fn main() {
     // --- k-hop neighborhoods (the intro's 2-3 hop query) ---
     let mut t = Table::new(&["seed", "1-hop", "2-hop", "3-hop"]);
     for seed in [0u32, 17, 4242] {
-        engine.run(seed);
-        let d = engine.dist();
+        let r = session.run(seed).expect("root in range");
+        let d = r.dist();
         let khop = |k: u32| d.iter().filter(|&&x| x != INF && x <= k && x > 0).count() as u64;
         t.row(vec![
             seed.to_string(),
@@ -79,9 +81,9 @@ fn main() {
     }
     println!("k-hop neighborhood sizes:\n{}", t.render());
 
-    // --- s-t hop distances ---
-    engine.run(0);
-    let d = engine.dist();
+    // --- s-t hop distances (the seed result owns its distances, so the
+    // k-hop queries above did not disturb it) ---
+    let d = seed_result.dist();
     let mut t = Table::new(&["target page", "hops from seed 0"]);
     for target in [1u32, 1000, 65_535, 65_935] {
         let hops = d[target as usize];
@@ -91,5 +93,4 @@ fn main() {
         ]);
     }
     println!("s–t distances (65935 = end of the crawl tail):\n{}", t.render());
-    let _ = dist;
 }

@@ -1,0 +1,279 @@
+"""Pure-python spec of the QuerySession pooled-reuse semantics (PR 3).
+
+Line-for-line port of `rust/src/bfs/msbfs.rs::MsBfsNodeState`
+(``discover`` / ``swap_level`` / ``reset``) and the distributed batch
+level loop's CopyFrontier exchange, used to verify the one behavioral
+change this PR makes to the traversal path: `run_batch` now *reuses* the
+per-node lane state across batches via ``reset`` instead of
+reallocating it.
+
+Checked over random graph/engine configs:
+
+* a reused (reset) state produces per-lane distances identical to a
+  fresh state and to the serial BFS oracle — across batches of
+  different widths, including duplicate roots;
+* the per-level delta statistics that feed the negotiated payload
+  pricing (`delta_distinct`, distinct mask values, active lanes) are
+  identical for reused and fresh states. This is where ``reset``'s
+  level-stamp zeroing matters: ``swap_level`` deliberately leaves
+  ``delta_stamp`` behind (stamps are ``level + 1`` and levels only grow
+  within a batch), but a *new* batch restarts levels at 0, so stale
+  stamps from a previous batch would suppress `delta_distinct`
+  increments and mis-price payloads. The `no_reset` regression below
+  demonstrates exactly that failure, proving the test can see the bug
+  the Rust ``reset`` prevents.
+
+No jax/hypothesis needed — runs everywhere CI runs.
+"""
+
+import random
+
+INF = 0xFFFFFFFF
+ENTRY_BYTES = 12
+
+
+def serial_bfs(n, adj, root):
+    dist = [INF] * n
+    dist[root] = 0
+    frontier = [root]
+    level = 0
+    while frontier:
+        nxt = []
+        for v in frontier:
+            for u in adj[v]:
+                if dist[u] == INF:
+                    dist[u] = level + 1
+                    nxt.append(u)
+        frontier = nxt
+        level += 1
+    return dist
+
+
+def mask_delta_bytes(entries, distinct_vertices, distinct_masks, active_lanes, n):
+    if entries == 0:
+        return 0
+    presence = -(-n // 64) * 8
+    sparse = entries * ENTRY_BYTES
+    grouped = distinct_masks * 12 + entries * 4
+    dense = presence + distinct_vertices * 8
+    lane_bitmaps = (1 + active_lanes) * presence
+    return min(sparse, grouped, dense, lane_bitmaps)
+
+
+class MsBfsNodeState:
+    """Port of `MsBfsNodeState` with its pooled `reset`."""
+
+    def __init__(self, n, num_roots):
+        self.n = n
+        self.seen = [0] * n
+        self.dist = [INF] * (n * num_roots)
+        self.visit = [0] * n
+        self.next_mask = [0] * n
+        self.q_local = []
+        self.q_local_next = []
+        self.delta = []  # list of (vertex, mask)
+        self.edges_this_level = 0
+        self.delta_distinct = 0
+        self.mask_values = set()
+        self.active_lanes = 0
+        self.delta_stamp = [0] * n
+
+    def reset(self, num_roots, *, skip_stamps=False):
+        """`MsBfsNodeState::reset`. `skip_stamps` models the bug the
+        Rust implementation avoids (leaving `delta_stamp` dirty)."""
+        self.seen = [0] * self.n
+        self.dist = [INF] * (self.n * num_roots)
+        self.visit = [0] * self.n
+        self.next_mask = [0] * self.n
+        self.q_local = []
+        self.q_local_next = []
+        self.delta = []
+        self.edges_this_level = 0
+        self.delta_distinct = 0
+        self.mask_values = set()
+        self.active_lanes = 0
+        if not skip_stamps:
+            self.delta_stamp = [0] * self.n
+
+    def discover(self, v, mask, level, owned):
+        d = mask & ~self.seen[v]
+        if d == 0:
+            return 0
+        self.seen[v] |= d
+        m = d
+        while m:
+            lane = (m & -m).bit_length() - 1
+            m &= m - 1
+            self.dist[lane * self.n + v] = level + 1
+        self.delta.append((v, d))
+        if self.delta_stamp[v] != level + 1:
+            self.delta_stamp[v] = level + 1
+            self.delta_distinct += 1
+        self.active_lanes |= d
+        self.mask_values.add(d)
+        if owned:
+            if self.next_mask[v] == 0:
+                self.q_local_next.append(v)
+            self.next_mask[v] |= d
+        return d
+
+    def swap_level(self):
+        self.q_local = self.q_local_next
+        self.q_local_next = []
+        for v in self.q_local:
+            self.visit[v] = self.next_mask[v]
+            self.next_mask[v] = 0
+        self.delta = []
+        self.delta_distinct = 0
+        self.mask_values = set()
+        self.active_lanes = 0
+        # delta_stamp deliberately NOT cleared (mirrors swap_level).
+        self.edges_this_level = 0
+
+
+def partition_cuts(n, parts):
+    return [n * p // parts for p in range(parts + 1)]
+
+
+def run_batch(n, adj, states, cuts, roots):
+    """The distributed batched level loop over (possibly reused) states.
+
+    The exchange is modeled as a single allgather round with CopyFrontier
+    semantics (every node replays every other node's frozen delta
+    prefix), which the butterfly/fold-expand schedules are proven
+    equivalent to by `verify_full_coverage` on the Rust side. Returns
+    (per-lane distances of node 0, per-level pricing statistics).
+    """
+    parts = len(states)
+    b = len(roots)
+
+    def owns(k, v):
+        return cuts[k] <= v < cuts[k + 1]
+
+    # Prologue ("All CN set their d").
+    for k, st in enumerate(states):
+        for lane, r in enumerate(roots):
+            bit = 1 << lane
+            st.seen[r] |= bit
+            st.dist[lane * n + r] = 0
+            if owns(k, r):
+                if st.visit[r] == 0:
+                    st.q_local.append(r)
+                st.visit[r] |= bit
+
+    pricing = []
+    level = 0
+    while sum(len(st.q_local) for st in states) > 0:
+        # Phase 1: masked expansion of the owned frontier.
+        for k, st in enumerate(states):
+            q = st.q_local
+            st.q_local = []
+            for v in q:
+                mv = st.visit[v]
+                st.visit[v] = 0
+                st.edges_this_level += len(adj[v])
+                for u in adj[v]:
+                    st.discover(u, mv, level, owns(k, u))
+            del q  # Rust restores the drained list only to keep its allocation
+
+        # Phase 2: one allgather round, frozen prefixes. The trace
+        # records exactly what `delta_payload_bytes` snapshots on the
+        # Rust side: the frozen prefix length, the (clamped) coalescing
+        # statistics, and the priced bytes they yield.
+        snap = []
+        for st in states:
+            entries = len(st.delta)
+            distinct = min(st.delta_distinct, entries)
+            masks = min(len(st.mask_values), entries)
+            lanes = bin(st.active_lanes).count("1")
+            snap.append(
+                (entries, distinct, masks, lanes,
+                 mask_delta_bytes(entries, distinct, masks, lanes, n))
+            )
+        pricing.append(tuple(snap))
+        for src in range(parts):
+            take = snap[src][0]
+            prefix = states[src].delta[:take]
+            for dst in range(parts):
+                if dst == src:
+                    continue
+                for v, m in prefix:
+                    states[dst].discover(v, m, level, owns(dst, v))
+
+        for st in states:
+            st.swap_level()
+        level += 1
+
+    return [states[0].dist[lane * n + v] for lane in range(b) for v in range(n)], pricing
+
+
+def random_graph(rng, n, ef):
+    adj = [set() for _ in range(n)]
+    for _ in range(n * ef):
+        u = rng.randrange(n)
+        v = rng.randrange(n)
+        if u != v:
+            adj[u].add(v)
+            adj[v].add(u)
+    return [sorted(s) for s in adj]
+
+
+def test_reused_states_match_fresh_and_serial():
+    rng = random.Random(0xB3)
+    for _ in range(60):
+        n = rng.randrange(8, 120)
+        adj = random_graph(rng, n, rng.randrange(1, 5))
+        parts = rng.randrange(1, min(6, n) + 1)
+        cuts = partition_cuts(n, parts)
+        pooled = [MsBfsNodeState(n, 1) for _ in range(parts)]
+        first = True
+        # Three back-to-back batches of different widths on the SAME
+        # pooled states, each compared against fresh states + the oracle.
+        for _ in range(3):
+            b = rng.randrange(1, 17)
+            roots = [rng.randrange(n) for _ in range(b)]
+            if b >= 2:
+                roots[1] = roots[0]  # duplicate lanes stay legal
+            if not first:
+                for st in pooled:
+                    st.reset(b)
+            else:
+                pooled = [MsBfsNodeState(n, b) for _ in range(parts)]
+                first = False
+            dist_reused, pricing_reused = run_batch(n, adj, pooled, cuts, roots)
+            fresh = [MsBfsNodeState(n, b) for _ in range(parts)]
+            dist_fresh, pricing_fresh = run_batch(n, adj, fresh, cuts, roots)
+            assert dist_reused == dist_fresh
+            assert pricing_reused == pricing_fresh
+            for lane, r in enumerate(roots):
+                want = serial_bfs(n, adj, r)
+                got = dist_reused[lane * n : (lane + 1) * n]
+                assert got == want, f"n={n} parts={parts} lane={lane}"
+
+
+def test_stale_stamps_would_misprice_payloads():
+    # The regression `reset`'s stamp-zeroing prevents: reuse WITHOUT
+    # clearing delta_stamp must (on some config) disagree with the fresh
+    # pricing trace — stale `level+1` stamps from the previous batch
+    # suppress `delta_distinct`, corrupting the statistics that bound
+    # the dense serialization form.
+    rng = random.Random(7)
+    saw_difference = False
+    for _ in range(40):
+        n = rng.randrange(8, 80)
+        adj = random_graph(rng, n, 3)
+        parts = rng.randrange(1, 5)
+        cuts = partition_cuts(n, parts)
+        roots_a = [rng.randrange(n) for _ in range(8)]
+        roots_b = [rng.randrange(n) for _ in range(8)]
+        dirty = [MsBfsNodeState(n, 8) for _ in range(parts)]
+        run_batch(n, adj, dirty, cuts, roots_a)
+        for st in dirty:
+            st.reset(8, skip_stamps=True)
+        _, pricing_dirty = run_batch(n, adj, dirty, cuts, roots_b)
+        fresh = [MsBfsNodeState(n, 8) for _ in range(parts)]
+        _, pricing_fresh = run_batch(n, adj, fresh, cuts, roots_b)
+        if pricing_dirty != pricing_fresh:
+            saw_difference = True
+            break
+    assert saw_difference, "stale stamps never observable — regression test is vacuous"

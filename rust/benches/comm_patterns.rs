@@ -12,7 +12,7 @@
 
 use butterfly_bfs::comm::analysis::{comm_costs, paper_message_formula};
 use butterfly_bfs::comm::{Butterfly, CommPattern, ConcurrentAllToAll, IterativeAllToAll};
-use butterfly_bfs::coordinator::{ButterflyBfs, EngineConfig, PatternKind};
+use butterfly_bfs::coordinator::{EngineConfig, PatternKind, TraversalPlan};
 use butterfly_bfs::graph::gen::kronecker::{kronecker, KroneckerParams};
 use butterfly_bfs::harness::roots::{run_protocol, RootProtocol};
 use butterfly_bfs::harness::table::{count, f2, ms, Table};
@@ -82,15 +82,21 @@ fn main() {
     let mut prev_naive = 0.0;
     let mut naive_increases = true;
     for nodes in [2usize, 4, 8, 16] {
-        let mut bf = ButterflyBfs::new(&g, EngineConfig::dgx2(nodes, 4));
-        let (t_bf, _) = run_protocol(&g, &proto, |r| bf.run(r).sim_seconds());
+        let mut bf = TraversalPlan::build(&g, EngineConfig::dgx2(nodes, 4))
+            .expect("valid plan")
+            .session();
+        let (t_bf, _) = run_protocol(&g, &proto, |r| {
+            bf.run_metrics_only(r).expect("root in range").sim_seconds()
+        });
         let naive_cfg = EngineConfig {
             pattern: PatternKind::AllToAllConcurrent,
             net: NetModel::dynamic_alloc_baseline(),
             ..EngineConfig::dgx2(nodes, 1)
         };
-        let mut naive = ButterflyBfs::new(&g, naive_cfg);
-        let (t_naive, _) = run_protocol(&g, &proto, |r| naive.run(r).sim_seconds());
+        let mut naive = TraversalPlan::build(&g, naive_cfg).expect("valid plan").session();
+        let (t_naive, _) = run_protocol(&g, &proto, |r| {
+            naive.run_metrics_only(r).expect("root in range").sim_seconds()
+        });
         if nodes > 2 && t_naive < prev_naive {
             naive_increases = false;
         }

@@ -10,7 +10,7 @@
 //! Run: `cargo bench --bench fanout_ablation`
 
 use butterfly_bfs::comm::{Butterfly, CommPattern};
-use butterfly_bfs::coordinator::{ButterflyBfs, EngineConfig};
+use butterfly_bfs::coordinator::{EngineConfig, TraversalPlan};
 use butterfly_bfs::graph::gen::table1_suite;
 use butterfly_bfs::harness::roots::{run_protocol, RootProtocol};
 use butterfly_bfs::harness::table::{f2, ms, Table};
@@ -40,8 +40,12 @@ fn main() {
     for f in [1u32, 2, 4, 8, 16] {
         let s = Butterfly::new(f).schedule(16);
         let sync = simulate_uniform(&s, &net, 1 << 20);
-        let mut engine = ButterflyBfs::new(&g, EngineConfig::dgx2(16, f));
-        let (bfs_time, _) = run_protocol(&g, &proto, |r| engine.run(r).sim_seconds());
+        let mut session = TraversalPlan::build(&g, EngineConfig::dgx2(16, f))
+            .expect("valid plan")
+            .session();
+        let (bfs_time, _) = run_protocol(&g, &proto, |r| {
+            session.run_metrics_only(r).expect("root in range").sim_seconds()
+        });
         t.row(vec![
             f.to_string(),
             s.depth().to_string(),
@@ -58,8 +62,12 @@ fn main() {
     for nodes in [8usize, 9] {
         let mut row = vec![nodes.to_string()];
         for f in [1u32, 4] {
-            let mut engine = ButterflyBfs::new(&g, EngineConfig::dgx2(nodes, f));
-            let (time, _) = run_protocol(&g, &proto, |r| engine.run(r).sim_seconds());
+            let mut session = TraversalPlan::build(&g, EngineConfig::dgx2(nodes, f))
+                .expect("valid plan")
+                .session();
+            let (time, _) = run_protocol(&g, &proto, |r| {
+                session.run_metrics_only(r).expect("root in range").sim_seconds()
+            });
             row.push(ms(time));
         }
         t.row(row);
@@ -71,9 +79,11 @@ fn main() {
     let mut t = Table::new(&["lrb", "sim ms", "max/mean node edges"]);
     for lrb in [true, false] {
         let cfg = EngineConfig { use_lrb: lrb, ..EngineConfig::dgx2(16, 4) };
-        let mut engine = ButterflyBfs::new(&g, cfg);
-        let m = engine.run(0);
-        let (time, _) = run_protocol(&g, &proto, |r| engine.run(r).sim_seconds());
+        let mut session = TraversalPlan::build(&g, cfg).expect("valid plan").session();
+        let m = session.run_metrics_only(0).expect("root in range");
+        let (time, _) = run_protocol(&g, &proto, |r| {
+            session.run_metrics_only(r).expect("root in range").sim_seconds()
+        });
         let imbalance: f64 = {
             let tot: u64 = m.levels.iter().map(|l| l.edges_examined).sum();
             let max: u64 = m.levels.iter().map(|l| l.max_node_edges).sum();
@@ -93,9 +103,11 @@ fn main() {
         ("diropt", DirectionMode::diropt()),
     ] {
         let cfg = EngineConfig { direction: dir, ..EngineConfig::dgx2(16, 4) };
-        let mut engine = ButterflyBfs::new(&g, cfg);
-        let m = engine.run(0);
-        let (time, _) = run_protocol(&g, &proto, |r| engine.run(r).sim_seconds());
+        let mut session = TraversalPlan::build(&g, cfg).expect("valid plan").session();
+        let m = session.run_metrics_only(0).expect("root in range");
+        let (time, _) = run_protocol(&g, &proto, |r| {
+            session.run_metrics_only(r).expect("root in range").sim_seconds()
+        });
         t.row(vec![name.into(), ms(time), m.edges_examined().to_string()]);
     }
     println!("{}", t.render());
@@ -105,9 +117,13 @@ fn main() {
     let relabeled = apply_relabeling(&g, &degree_sort_relabeling(&g));
     let mut t = Table::new(&["graph", "partition imbalance", "sim ms"]);
     for (name, graph) in [("original", &g), ("degree-sorted", &relabeled)] {
-        let mut engine = ButterflyBfs::new(graph, EngineConfig::dgx2(16, 4));
-        let imb = engine.partition().imbalance(graph);
-        let (time, _) = run_protocol(graph, &proto, |r| engine.run(r).sim_seconds());
+        let plan =
+            TraversalPlan::build(graph, EngineConfig::dgx2(16, 4)).expect("valid plan");
+        let imb = plan.partition().imbalance(graph);
+        let mut session = plan.session();
+        let (time, _) = run_protocol(graph, &proto, |r| {
+            session.run_metrics_only(r).expect("root in range").sim_seconds()
+        });
         t.row(vec![name.into(), f2(imb), ms(time)]);
     }
     println!("{}", t.render());

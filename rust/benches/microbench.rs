@@ -14,7 +14,7 @@ use butterfly_bfs::bfs::frontier::Bitmap;
 use butterfly_bfs::bfs::lrb::bin_frontier;
 use butterfly_bfs::bfs::topdown::topdown_bfs;
 use butterfly_bfs::comm::{Butterfly, CommPattern};
-use butterfly_bfs::coordinator::{ButterflyBfs, EngineConfig};
+use butterfly_bfs::coordinator::{EngineConfig, TraversalPlan};
 use butterfly_bfs::graph::gen::kronecker::{kronecker, KroneckerParams};
 use butterfly_bfs::harness::bench::{bench, black_box, BenchConfig};
 use butterfly_bfs::harness::table::count;
@@ -65,11 +65,16 @@ fn main() {
         Butterfly::new(4).schedule(64)
     });
 
-    // End-to-end distributed engine wallclock.
+    // End-to-end distributed engine wallclock (one plan, one reused
+    // session — the production query path).
     for (nodes, fanout) in [(16usize, 1u32), (16, 4)] {
-        let mut engine = ButterflyBfs::new(&g, EngineConfig::dgx2(nodes, fanout));
-        let m = bench(&cfg, &format!("engine/n{nodes}_f{fanout}"), || engine.run(0));
-        let metrics = engine.run(0);
+        let plan = TraversalPlan::build(&g, EngineConfig::dgx2(nodes, fanout))
+            .expect("valid plan");
+        let mut session = plan.session();
+        let m = bench(&cfg, &format!("engine/n{nodes}_f{fanout}"), || {
+            session.run_metrics_only(0).expect("root in range")
+        });
+        let metrics = session.run_metrics_only(0).expect("root in range");
         println!(
             "    -> wall {:.1} M edges/s, sim {:.2} GTEPS (|E|/t), comm {:.1}%",
             metrics.edges_examined() as f64 / m.seconds.median / 1e6,

@@ -16,7 +16,7 @@
 //! uses the larger defaults.)
 
 use butterfly_bfs::comm::analysis::ModeVolume;
-use butterfly_bfs::coordinator::{ButterflyBfs, EngineConfig, PartitionMode};
+use butterfly_bfs::coordinator::{EngineConfig, PartitionMode, TraversalPlan};
 use butterfly_bfs::graph::gen::table1_suite;
 use butterfly_bfs::harness::table::{count, f2, ms, Table};
 use butterfly_bfs::partition::Partition2D;
@@ -62,15 +62,16 @@ fn main() {
                 ),
             ];
             for (label, cfg) in modes {
-                let mut engine = ButterflyBfs::new(&g, cfg);
-                let m = engine.run(root);
-                engine.assert_agreement().expect("node agreement");
+                let plan = TraversalPlan::build(&g, cfg).expect("valid plan");
+                let mut session = plan.session();
+                let m = session.run_metrics_only(root).expect("root in range");
+                session.assert_agreement().expect("node agreement");
                 let levels = m.depth() as u64;
-                let modeled = match engine.config().partition {
+                let modeled = match plan.config().partition {
                     PartitionMode::OneD => {
-                        engine.schedule().total_messages() * levels
+                        plan.schedule().total_messages() * levels
                     }
-                    PartitionMode::TwoD { .. } => engine
+                    PartitionMode::TwoD { .. } => plan
                         .partition()
                         .as_two_d()
                         .unwrap()
@@ -96,7 +97,7 @@ fn main() {
                     p.to_string(),
                     label,
                     levels.to_string(),
-                    f2(engine.schedule().depth() as f64),
+                    f2(plan.schedule().depth() as f64),
                     count(m.messages()),
                     if volume.model_matches() {
                         format!("{} match", count(modeled))

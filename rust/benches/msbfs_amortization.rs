@@ -18,7 +18,7 @@
 //! uses the larger defaults.)
 
 use butterfly_bfs::bfs::msbfs::sample_batch_roots;
-use butterfly_bfs::coordinator::{ButterflyBfs, EngineConfig};
+use butterfly_bfs::coordinator::{EngineConfig, TraversalPlan};
 use butterfly_bfs::graph::csr::VertexId;
 use butterfly_bfs::graph::gen::table1_suite;
 use butterfly_bfs::harness::table::{count, f2, ms, Table};
@@ -56,18 +56,21 @@ fn main() {
             "wall ms",
         ]);
         for fanout in [1u32, 2, 4, 8] {
-            let mut engine = ButterflyBfs::new(&g, EngineConfig::dgx2(nodes, fanout));
+            let plan = TraversalPlan::build(&g, EngineConfig::dgx2(nodes, fanout))
+                .expect("valid plan");
+            let mut session = plan.session();
 
             // 64 sequential single-root traversals.
             let t0 = std::time::Instant::now();
-            let seq = engine.sequential_baseline(&roots);
+            let seq = session.sequential_baseline(&roots).expect("roots in range");
             let seq_wall = t0.elapsed().as_secs_f64();
 
             // One batched traversal over the same roots.
             let t0 = std::time::Instant::now();
-            let bm = engine.run_batch(&roots);
+            let batch_result = session.run_batch(&roots).expect("valid batch");
             let batch_wall = t0.elapsed().as_secs_f64();
-            engine.assert_batch_agreement().expect("batch agreement");
+            session.assert_batch_agreement().expect("batch agreement");
+            let bm = batch_result.metrics();
 
             t.row(vec![
                 fanout.to_string(),

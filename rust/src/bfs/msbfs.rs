@@ -13,7 +13,7 @@
 //! and a level expansion ORs frontier masks into neighbor masks. Up to 64
 //! traversals advance in lock-step through *one* frontier sweep, and, in
 //! the distributed engine, through *one* butterfly exchange per level
-//! ([`crate::coordinator::engine::ButterflyBfs::run_batch`]). The exchange
+//! ([`crate::coordinator::session::QuerySession::run_batch`]). The exchange
 //! ships `(vertex, mask-delta)` payloads priced by the negotiated encoding
 //! [`mask_delta_bytes`] (the coalescing-agnostic bound is
 //! [`PayloadEncoding::MaskDelta`](crate::coordinator::config::PayloadEncoding)),
@@ -324,6 +324,29 @@ impl MsBfsNodeState {
         d
     }
 
+    /// Clear all traversal state so the buffers can serve a fresh batch of
+    /// `num_roots` lanes — the pooled-reuse path of
+    /// [`QuerySession::run_batch`](crate::coordinator::session::QuerySession::run_batch):
+    /// allocations are kept (the distance array only reallocates when the
+    /// batch widens). Unlike [`Self::swap_level`], this *does* zero
+    /// `delta_stamp`: its stamps are level-scoped and levels restart at 0
+    /// in the next batch.
+    pub fn reset(&mut self, num_roots: usize) {
+        self.seen.iter_mut().for_each(|x| *x = 0);
+        self.dist.clear();
+        self.dist.resize(self.num_vertices * num_roots, INF);
+        self.visit.iter_mut().for_each(|x| *x = 0);
+        self.next_mask.iter_mut().for_each(|x| *x = 0);
+        self.q_local.clear();
+        self.q_local_next.clear();
+        self.delta.clear();
+        self.edges_this_level = 0;
+        self.delta_distinct = 0;
+        self.mask_values.clear();
+        self.active_lanes = 0;
+        self.delta_stamp.iter_mut().for_each(|x| *x = 0);
+    }
+
     /// End-of-level rotation (the MS-BFS `SwapQueues`): the next local
     /// frontier becomes current (its pending masks move from `next_mask`
     /// to `visit`), and the level's delta list empties.
@@ -424,6 +447,33 @@ mod tests {
         // sampled root is non-isolated.
         let connected = roots.iter().filter(|&&r| g.degree(r) > 0).count();
         assert_eq!(connected, roots.len());
+    }
+
+    #[test]
+    fn node_state_reset_equals_fresh() {
+        // Pooled session reuse depends on `reset` restoring the exact
+        // fresh-state invariants — including the private level stamps,
+        // which `swap_level` deliberately leaves behind.
+        let mut st = MsBfsNodeState::new(60, 4);
+        for v in 0..20u32 {
+            st.discover(v, 0b1011, 0, v % 2 == 0);
+        }
+        st.edges_this_level = 9;
+        st.swap_level();
+        st.discover(30, 0b1, 1, true);
+        st.reset(7);
+        let fresh = MsBfsNodeState::new(60, 7);
+        assert_eq!(st.seen, fresh.seen);
+        assert_eq!(st.dist, fresh.dist);
+        assert_eq!(st.visit, fresh.visit);
+        assert_eq!(st.next_mask, fresh.next_mask);
+        assert_eq!(st.delta_stamp, fresh.delta_stamp);
+        assert!(st.q_local.is_empty() && st.q_local_next.is_empty());
+        assert!(st.delta.is_empty());
+        assert_eq!(st.edges_this_level, 0);
+        assert_eq!(st.delta_distinct, 0);
+        assert_eq!(st.active_lanes, 0);
+        assert!(st.mask_values.is_empty());
     }
 
     #[test]

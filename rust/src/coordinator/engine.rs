@@ -1,1317 +1,234 @@
-//! The distributed multi-pattern BFS engine — Alg. 2 of the paper, over
-//! either partition layout.
+//! Deprecated single-object engine façade.
 //!
-//! Each level runs two strictly separated phases:
+//! [`ButterflyBfs`] predates the plan/session split: it conflated the
+//! expensive, reusable artifacts (CSR slabs, partition, schedule) with
+//! per-query mutable state, so two queries could never run concurrently,
+//! results had to be scraped out via `dist()`/`batch_dist()` after the
+//! fact, and invalid input panicked. It survives as a thin compatibility
+//! shim over [`TraversalPlan`] + [`QuerySession`] — same construction
+//! signatures, same panicking behavior on invalid input, same accessors —
+//! so downstream code keeps compiling while it migrates:
 //!
-//! 1. **Traversal** — every compute node expands its owned frontier over
-//!    its adjacency slab (via its [`ComputeBackend`]), discovering vertices
-//!    into its global queue and distance array.
-//! 2. **Synchronization** — the schedule's rounds execute with allgather
-//!    semantics: each transfer ships the sender's accumulated global queue
-//!    (snapshotted at round start, the paper's `CopyFrontier`); receivers
-//!    dedup against their distance array, extend their own global queue
-//!    (so later rounds relay), and route owned vertices into their next
-//!    local queue.
+//! | old (`ButterflyBfs`)                | new (plan/session)                          |
+//! |-------------------------------------|---------------------------------------------|
+//! | `ButterflyBfs::new(&g, cfg)`        | `TraversalPlan::build(&g, cfg)?` + `.session()` |
+//! | `engine.run(root)` then `.dist()`   | `session.run(root)? -> TraversalResult`     |
+//! | `engine.run_batch(&roots)` then `.batch_dist(lane)` | `session.run_batch(&roots)? -> BatchResult` |
+//! | panic on bad root/grid/batch        | typed [`PlanError`] / [`QueryError`]        |
+//! | one engine = one traversal at a time | N sessions share one `Arc<TraversalPlan>`  |
 //!
-//! The [`PartitionMode`] picks the (layout, schedule) pair — the seam
-//! every exchange pattern plugs into:
-//!
-//! * **1D** (the paper's mode): contiguous edge-balanced row slabs,
-//!   synchronized by the configured
-//!   [`PatternKind`](crate::coordinator::config::PatternKind) — butterfly
-//!   or all-to-all.
-//! * **2D** (the Buluç & Madduri comparator): checkerboard edge blocks of
-//!   a `rows × cols` grid, synchronized by the fold-along-rows /
-//!   expand-along-columns exchange ([`crate::comm::FoldExpand`]). Every
-//!   node of a processor row owns the same source range (each expands its
-//!   own column block), and per-phase fold/expand byte/message accounting
-//!   flows into the level metrics.
-//!
-//! The engine also keeps the simulated clock: Phase-1 compute is priced by
-//! the [`DeviceModel`](crate::net::model::DeviceModel) (slowest node wins —
-//! the bulk-synchronous barrier), Phase-2 by the interconnect simulator
-//! with the *actual measured payloads* of every message.
-//!
-//! Besides the single-root [`ButterflyBfs::run`], the engine offers the
-//! batched multi-source [`ButterflyBfs::run_batch`]: up to 64 roots
-//! advance bit-parallel through the *same* schedule, one exchange per
-//! level serving the whole batch (see [`crate::bfs::msbfs`]). With
-//! `parallel_phase1` set, the batched per-node stepping runs on the
-//! [`ThreadPool`] (the per-(node, batch-state) slices are disjoint).
+//! [`PlanError`]: super::plan::PlanError
+//! [`QueryError`]: super::session::QueryError
 
-use super::backend::{ComputeBackend, ExpandOutput, NativeCsr};
-use super::config::{DirectionMode, EngineConfig, PartitionMode};
-use super::metrics::{BatchMetrics, LevelMetrics, RunMetrics, SequentialBaseline};
-use super::node::ComputeNode;
-use crate::bfs::frontier::MaskFrontier;
-use crate::bfs::msbfs::{MsBfsNodeState, MAX_BATCH};
-use crate::bfs::serial::INF;
-use crate::comm::fold_expand::FoldExpand;
-use crate::comm::pattern::{CommPattern, Schedule};
+use super::backend::ComputeBackend;
+use super::config::EngineConfig;
+use super::metrics::{BatchMetrics, RunMetrics, SequentialBaseline};
+use super::plan::TraversalPlan;
+use super::session::QuerySession;
+use crate::comm::pattern::Schedule;
 use crate::graph::csr::{Csr, VertexId};
-use crate::net::sim::simulate_schedule;
-use crate::partition::one_d::partition_1d;
-use crate::partition::{Partition2D, PartitionSpec};
-use crate::util::threadpool::ThreadPool;
+use crate::partition::PartitionSpec;
 
-/// The multi-node BFS engine.
+/// The legacy multi-node BFS engine: a deprecated shim over
+/// [`TraversalPlan`] + [`QuerySession`]. Prefer the split API — it shares
+/// one plan across concurrent sessions and returns typed results and
+/// errors instead of panicking and scraping.
+#[deprecated(
+    since = "0.1.0",
+    note = "use TraversalPlan::build(..) + plan.session(); run()/run_batch() \
+            return typed results and errors there"
+)]
 pub struct ButterflyBfs {
-    config: EngineConfig,
-    partition: PartitionSpec,
-    nodes: Vec<ComputeNode>,
-    backends: Vec<Box<dyn ComputeBackend>>,
-    schedule: Schedule,
-    /// Leading schedule rounds that are the 2D fold phase (0 in 1D mode;
-    /// the remaining rounds are the expand phase).
-    fold_rounds: usize,
-    num_vertices: usize,
-    graph_edges: u64,
-    scratch: Vec<ExpandOutput>,
-    /// Worker pool for batched per-node stepping — created lazily on the
-    /// first [`Self::run_batch`] that wants it (`parallel_phase1` set,
-    /// more than one node), so single-root-only engines never spawn it.
-    pool: Option<ThreadPool>,
-    /// Per-node MS-BFS state of the most recent [`Self::run_batch`] (empty
-    /// until the first batch).
-    batch_states: Vec<MsBfsNodeState>,
-    /// Lane count of the most recent batch.
-    batch_width: usize,
+    plan: TraversalPlan,
+    session: QuerySession,
 }
 
+#[allow(deprecated)]
 impl ButterflyBfs {
     /// Build an engine over `g` with the native CSR backend on every node.
+    ///
+    /// # Panics
+    ///
+    /// On any invalid layout (the legacy behavior). Use
+    /// [`TraversalPlan::build`] for a typed error instead.
     pub fn new(g: &Csr, config: EngineConfig) -> Self {
-        let backends: Vec<Box<dyn ComputeBackend>> = (0..config.num_nodes)
-            .map(|_| Box::new(NativeCsr::new(config.use_lrb)) as Box<dyn ComputeBackend>)
-            .collect();
-        Self::with_backends(g, config, backends)
+        let plan = TraversalPlan::build(g, config).expect("invalid engine configuration");
+        let session = plan.session();
+        Self { plan, session }
     }
 
     /// Build an engine with caller-supplied per-node backends (e.g. the
     /// XLA/PJRT backend from `runtime::`).
+    ///
+    /// # Panics
+    ///
+    /// On any invalid layout or backend count (the legacy behavior). Use
+    /// [`TraversalPlan::session_with_backends`] for a typed error.
     pub fn with_backends(
         g: &Csr,
         config: EngineConfig,
         backends: Vec<Box<dyn ComputeBackend>>,
     ) -> Self {
-        assert_eq!(backends.len(), config.num_nodes, "one backend per node");
-        assert!(config.num_nodes >= 1);
-        // The multi-pattern seam: each mode yields its (layout, schedule)
-        // pair; everything downstream is mode-agnostic.
-        let (partition, slabs, schedule, fold_rounds) = match config.partition {
-            PartitionMode::OneD => {
-                let p = partition_1d(g, config.num_nodes);
-                let slabs = p.slabs(g);
-                let schedule = config.pattern.build().schedule(config.num_nodes as u32);
-                (PartitionSpec::OneD(p), slabs, schedule, 0)
-            }
-            PartitionMode::TwoD { rows, cols } => {
-                assert_eq!(
-                    config.num_nodes,
-                    rows as usize * cols as usize,
-                    "2D mode needs num_nodes == rows*cols (grid {rows}x{cols})"
-                );
-                let p = Partition2D::new(g, rows, cols);
-                let slabs = p.block_slabs(g);
-                let fe = FoldExpand::new(rows, cols);
-                let schedule = fe.schedule(config.num_nodes as u32);
-                (PartitionSpec::TwoD(p), slabs, schedule, fe.fold_rounds())
-            }
-        };
-        schedule.validate().expect("generated schedule invalid");
-        let nodes: Vec<ComputeNode> = slabs
-            .into_iter()
-            .enumerate()
-            .map(|(i, slab)| ComputeNode::new(i as u32, slab, g.num_vertices()))
-            .collect();
-        let scratch = (0..config.num_nodes).map(|_| ExpandOutput::default()).collect();
-        Self {
-            config,
-            partition,
-            nodes,
-            backends,
-            schedule,
-            fold_rounds,
-            num_vertices: g.num_vertices(),
-            graph_edges: g.num_edges(),
-            scratch,
-            pool: None,
-            batch_states: Vec::new(),
-            batch_width: 0,
-        }
+        let plan = TraversalPlan::build(g, config).expect("invalid engine configuration");
+        let session = plan
+            .session_with_backends(backends)
+            .expect("one backend per node");
+        Self { plan, session }
     }
 
     /// The partition in use (1D row slabs or the 2D grid).
     pub fn partition(&self) -> &PartitionSpec {
-        &self.partition
-    }
-
-    /// Distinct active frontier vertices across the machine. In 1D each
-    /// owned vertex is queued on exactly one node; in 2D every node of a
-    /// processor row queues the row's vertices (each expands its own
-    /// column block), so count one column representative per row.
-    fn frontier_len(&self) -> u64 {
-        match self.config.partition {
-            PartitionMode::OneD => {
-                self.nodes.iter().map(|n| n.q_local.len() as u64).sum()
-            }
-            PartitionMode::TwoD { cols, .. } => self
-                .nodes
-                .iter()
-                .step_by(cols as usize)
-                .map(|n| n.q_local.len() as u64)
-                .sum(),
-        }
-    }
-
-    /// Batched analog of [`Self::frontier_len`].
-    fn batch_frontier_len(&self) -> u64 {
-        match self.config.partition {
-            PartitionMode::OneD => self
-                .batch_states
-                .iter()
-                .map(|s| s.q_local.len() as u64)
-                .sum(),
-            PartitionMode::TwoD { cols, .. } => self
-                .batch_states
-                .iter()
-                .step_by(cols as usize)
-                .map(|s| s.q_local.len() as u64)
-                .sum(),
-        }
-    }
-
-    /// 2D mode: the (fold messages, fold bytes, expand messages, expand
-    /// bytes) split of one level's payload matrix; `None` in 1D mode.
-    fn phase_split(&self, payloads: &[Vec<u64>]) -> Option<(u64, u64, u64, u64)> {
-        if !matches!(self.config.partition, PartitionMode::TwoD { .. }) {
-            return None;
-        }
-        let (fold, expand) = payloads.split_at(self.fold_rounds.min(payloads.len()));
-        let msgs = |rs: &[Vec<u64>]| rs.iter().map(|r| r.len() as u64).sum::<u64>();
-        let bytes = |rs: &[Vec<u64>]| rs.iter().flatten().copied().sum::<u64>();
-        Some((msgs(fold), bytes(fold), msgs(expand), bytes(expand)))
+        self.plan.partition()
     }
 
     /// The synchronization schedule in use.
     pub fn schedule(&self) -> &Schedule {
-        &self.schedule
+        self.plan.schedule()
     }
 
     /// Engine configuration.
     pub fn config(&self) -> &EngineConfig {
-        &self.config
+        self.plan.config()
     }
 
     /// Run a full traversal from `root`; returns metrics. Distances are
     /// afterwards available via [`Self::dist`].
+    ///
+    /// # Panics
+    ///
+    /// When `root` is out of range (the legacy behavior);
+    /// [`QuerySession::run`] returns a typed error instead.
     pub fn run(&mut self, root: VertexId) -> RunMetrics {
-        assert!((root as usize) < self.num_vertices, "root out of range");
-        let t0 = std::time::Instant::now();
-        for n in &mut self.nodes {
-            n.init_root(root);
-        }
-        let mut metrics = RunMetrics {
-            graph_edges: self.graph_edges,
-            ..Default::default()
-        };
-        let mut level = 0u32;
-        // Direction-optimizing state (global statistics — the leader
-        // computes these from per-node counts each level).
-        let mut bottom_up = false;
-        let mut prev_frontier = 0u64;
-        let mut m_unexplored = self.graph_edges;
-        loop {
-            let frontier = self.frontier_len();
-            if frontier == 0 {
-                break;
-            }
-            // ---- Direction choice (contribution 3: independent of sync) ----
-            match self.config.direction {
-                DirectionMode::TopDown => {}
-                DirectionMode::BottomUp => bottom_up = true,
-                DirectionMode::DirOpt { alpha, beta } => {
-                    let m_frontier: u64 = self
-                        .nodes
-                        .iter()
-                        .flat_map(|n| n.q_local.iter().map(|&v| n.slab.degree_global(v) as u64))
-                        .sum();
-                    let growing = frontier > prev_frontier;
-                    if !bottom_up && alpha > 0 && growing && m_frontier > m_unexplored / alpha {
-                        bottom_up = true;
-                    } else if bottom_up
-                        && beta > 0
-                        && !growing
-                        && frontier < (self.num_vertices as u64) / beta
-                    {
-                        bottom_up = false;
-                    }
-                    prev_frontier = frontier;
-                }
-            }
-            // ---- Phase 1: traversal ----
-            self.phase1(level, bottom_up);
-            let edges: u64 = self.nodes.iter().map(|n| n.edges_this_level).sum();
-            let max_node_edges =
-                self.nodes.iter().map(|n| n.edges_this_level).max().unwrap_or(0);
-            let sim_compute = self.config.device.level_time_dir(max_node_edges, bottom_up);
-
-            // ---- Phase 2: frontier synchronization ----
-            let payloads = self.phase2(level);
-            let comm = simulate_schedule(&self.schedule, &self.config.net, |r, t| {
-                payloads[r][t]
-            });
-
-            // After full coverage, every node's global queue holds the
-            // complete deduped set of this level's discoveries.
-            let discovered = self.nodes[0].q_global.len() as u64;
-            metrics.push_level(
-                level,
-                frontier,
-                edges,
-                max_node_edges,
-                discovered,
-                &comm,
-                sim_compute,
-            );
-            if let Some((fm, fb, em, eb)) = self.phase_split(&payloads) {
-                let l = metrics.levels.last_mut().expect("level just pushed");
-                l.fold_messages = fm;
-                l.fold_bytes = fb;
-                l.expand_messages = em;
-                l.expand_bytes = eb;
-            }
-
-            // Update the DO bookkeeping before queues rotate.
-            if let DirectionMode::DirOpt { .. } = self.config.direction {
-                let next_edges: u64 = self
-                    .nodes
-                    .iter()
-                    .flat_map(|n| {
-                        n.q_local_next.iter().map(|&v| n.slab.degree_global(v) as u64)
-                    })
-                    .sum();
-                m_unexplored = m_unexplored.saturating_sub(next_edges);
-            }
-            for n in &mut self.nodes {
-                n.swap_queues();
-            }
-            level += 1;
-        }
-        metrics.wall_seconds = t0.elapsed().as_secs_f64();
-        metrics.reached = self.nodes[0]
-            .d_local
-            .iter()
-            .filter(|&&d| d != INF)
-            .count() as u64;
-        metrics
+        self.session
+            .run_metrics_only(root)
+            .expect("root out of range")
     }
 
-    /// Phase 1: expand every node's owned frontier (top-down) or scan its
-    /// owned unvisited vertices against the full frontier (bottom-up).
-    /// Discoveries are routed into global/local queues (Alg. 2's inner
-    /// loop).
-    fn phase1(&mut self, level: u32, bottom_up: bool) {
-        if self.config.parallel_phase1 {
-            // Each (node, backend, scratch) triple is disjoint: scoped
-            // threads give safe parallelism without locks.
-            std::thread::scope(|s| {
-                for ((node, backend), out) in self
-                    .nodes
-                    .iter_mut()
-                    .zip(self.backends.iter_mut())
-                    .zip(self.scratch.iter_mut())
-                {
-                    s.spawn(move || {
-                        expand_node(node, backend.as_mut(), out, bottom_up);
-                    });
-                }
-            });
-        } else {
-            for ((node, backend), out) in self
-                .nodes
-                .iter_mut()
-                .zip(self.backends.iter_mut())
-                .zip(self.scratch.iter_mut())
-            {
-                expand_node(node, backend.as_mut(), out, bottom_up);
-            }
-        }
-        // Route discoveries (cheap, sequential: O(discovered)).
-        for (node, out) in self.nodes.iter_mut().zip(self.scratch.iter()) {
-            node.edges_this_level = out.edges_examined;
-            for &v in &out.discovered {
-                // Backend already marked `visited`; record queues+distance.
-                node.d_local[v as usize] = level + 1;
-                node.q_global.push(v);
-                node.q_global_bits.set(v);
-                if node.owns(v) {
-                    node.q_local_next.push(v);
-                }
-            }
-        }
-    }
-
-    /// Phase 2: execute the synchronization schedule. Returns per-round
-    /// per-transfer payload byte sizes for the interconnect simulator.
-    fn phase2(&mut self, level: u32) -> Vec<Vec<u64>> {
-        let encoding = self.config.payload;
-        let nv = self.num_vertices;
-        let words = nv.div_ceil(64);
-        // Dense/sparse dispatch threshold (§Perf optimization 1): word-wise
-        // bitmap merge costs O(V/64) per transfer; entry-wise costs
-        // O(queue). Cross-over at queue ≈ V/16 entries (4 words of queue
-        // per bitmap word, measured on the microbench).
-        let dense_threshold = (nv / 16).max(64);
-        let mut payloads = Vec::with_capacity(self.schedule.rounds.len());
-        // `CopyFrontier` semantics: transfers in a round see round-start
-        // state. Queues are frozen by snapshotting *lengths* (they only
-        // grow); bitmaps by copying words into a flat scratch buffer.
-        let mut bit_snap: Vec<u64> = Vec::new();
-        for round in 0..self.schedule.rounds.len() {
-            let snap_len: Vec<usize> =
-                self.nodes.iter().map(|n| n.q_global.len()).collect();
-            let any_dense = snap_len.iter().any(|&l| l >= dense_threshold);
-            if any_dense {
-                bit_snap.clear();
-                bit_snap.reserve(words * self.nodes.len());
-                for n in &self.nodes {
-                    bit_snap.extend_from_slice(n.q_global_bits.words());
-                }
-            }
-            let transfers = std::mem::take(&mut self.schedule.rounds[round]);
-            let mut round_payloads = Vec::with_capacity(transfers.len());
-            for t in &transfers {
-                let src = t.src as usize;
-                let dst = t.dst as usize;
-                let take = snap_len[src];
-                round_payloads.push(encoding.bytes(take as u64, nv));
-                if take >= dense_threshold {
-                    // Dense path: 64-way duplicate rejection.
-                    let src_words = &bit_snap[src * words..(src + 1) * words];
-                    self.nodes[dst].merge_bits(src_words, level);
-                } else {
-                    // Sparse path: entry-wise merge of the frozen prefix.
-                    let (sender, receiver) = if src < dst {
-                        let (lo, hi) = self.nodes.split_at_mut(dst);
-                        (&lo[src], &mut hi[0])
-                    } else {
-                        let (lo, hi) = self.nodes.split_at_mut(src);
-                        (&hi[0] as &ComputeNode, &mut lo[dst])
-                    };
-                    for i in 0..take {
-                        let v = sender.q_global[i];
-                        receiver.discover(v, level);
-                    }
-                }
-            }
-            self.schedule.rounds[round] = transfers;
-            payloads.push(round_payloads);
-        }
-        payloads
-    }
-
-    /// Run a batched multi-source BFS: up to [`MAX_BATCH`] roots advance
-    /// in lock-step, one butterfly exchange per level serving the whole
-    /// batch (the MS-BFS bit-parallel formulation — see
-    /// [`crate::bfs::msbfs`]). The engine's schedule, partition, and node
-    /// slabs are reused as-is; payloads are priced by the negotiated
-    /// mask-delta encoding ([`crate::bfs::msbfs::mask_delta_bytes`])
-    /// regardless of the configured single-root encoding, because the
-    /// exchange genuinely ships `(vertex, lane-mask)` deltas.
-    ///
+    /// Run a batched multi-source BFS (up to 64 roots); returns metrics.
     /// Per-lane distances are afterwards available via
-    /// [`Self::batch_dist`]; [`Self::assert_batch_agreement`] checks the
-    /// cross-node correctness invariant.
-    pub fn run_batch(&mut self, roots: &[VertexId]) -> BatchMetrics {
-        assert!(
-            !roots.is_empty() && roots.len() <= MAX_BATCH,
-            "batch width must be 1..=64 (got {})",
-            roots.len()
-        );
-        for &r in roots {
-            assert!((r as usize) < self.num_vertices, "root {r} out of range");
-        }
-        let t0 = std::time::Instant::now();
-        let nv = self.num_vertices;
-        let b = roots.len();
-        self.batch_width = b;
-        self.batch_states = (0..self.config.num_nodes)
-            .map(|_| MsBfsNodeState::new(nv, b))
-            .collect();
-        // Alg. 2 prologue, batched: every node marks every root's lane
-        // ("All CN set their d"); only the owner enqueues it locally.
-        for (node, st) in self.nodes.iter().zip(self.batch_states.iter_mut()) {
-            for (lane, &r) in roots.iter().enumerate() {
-                let bit = 1u64 << lane;
-                st.seen[r as usize] |= bit;
-                st.dist[lane * nv + r as usize] = 0;
-                if node.owns(r) {
-                    if st.visit[r as usize] == 0 {
-                        st.q_local.push(r);
-                    }
-                    st.visit[r as usize] |= bit;
-                }
-            }
-        }
-        let mut metrics = BatchMetrics {
-            num_roots: b,
-            graph_edges: self.graph_edges,
-            ..Default::default()
-        };
-        if self.pool.is_none() && self.config.parallel_phase1 && self.config.num_nodes > 1
-        {
-            let workers = std::thread::available_parallelism()
-                .map(|n| n.get())
-                .unwrap_or(4)
-                .min(self.config.num_nodes);
-            self.pool = Some(ThreadPool::new(workers));
-        }
-        let mut level = 0u32;
-        loop {
-            let frontier = self.batch_frontier_len();
-            if frontier == 0 {
-                break;
-            }
-            // ---- Phase 1: every node expands its owned masked frontier;
-            // one adjacency read serves every active lane of the vertex.
-            // The (node, batch-state) pairs are disjoint, so the pool can
-            // step them bulk-synchronously; the per-node work is identical
-            // either way, so pooled results are bit-identical to
-            // sequential stepping.
-            if let Some(pool) = &self.pool {
-                let nodes = &self.nodes;
-                let count = self.batch_states.len();
-                let states = SendPtr(self.batch_states.as_mut_ptr());
-                pool.run_indexed(count, |i| {
-                    // SAFETY: `run_indexed` invokes each index exactly
-                    // once and blocks until every job finished, so the
-                    // `&mut` derived from index `i` aliases nothing and
-                    // outlives no borrow.
-                    let st = unsafe { &mut *states.0.add(i) };
-                    batch_expand_node(&nodes[i], st, level);
-                });
-            } else {
-                for (node, st) in self.nodes.iter().zip(self.batch_states.iter_mut()) {
-                    batch_expand_node(node, st, level);
-                }
-            }
-            let edges: u64 = self.batch_states.iter().map(|s| s.edges_this_level).sum();
-            let max_node_edges = self
-                .batch_states
-                .iter()
-                .map(|s| s.edges_this_level)
-                .max()
-                .unwrap_or(0);
-            let sim_compute = self.config.device.level_time_dir(max_node_edges, false);
-
-            // ---- Phase 2: one butterfly exchange for the whole batch.
-            let payloads = self.batch_phase2(level);
-            let comm = simulate_schedule(&self.schedule, &self.config.net, |r, t| {
-                payloads[r][t]
-            });
-
-            // After full coverage every node's delta list holds the
-            // complete set of this level's (vertex, lane) discoveries.
-            let discovered: u64 = self.batch_states[0]
-                .delta
-                .entries()
-                .iter()
-                .map(|&(_, m)| m.count_ones() as u64)
-                .sum();
-            let (fm, fb, em, eb) = self.phase_split(&payloads).unwrap_or_default();
-            metrics.levels.push(LevelMetrics {
-                level,
-                frontier,
-                edges_examined: edges,
-                max_node_edges,
-                discovered,
-                messages: comm.total_messages,
-                bytes: comm.total_bytes,
-                fold_messages: fm,
-                fold_bytes: fb,
-                expand_messages: em,
-                expand_bytes: eb,
-                sim_compute,
-                sim_comm: comm.total(),
-            });
-            metrics.sync_rounds += self.schedule.depth() as u64;
-
-            for st in &mut self.batch_states {
-                st.swap_level();
-            }
-            level += 1;
-        }
-        metrics.wall_seconds = t0.elapsed().as_secs_f64();
-        metrics.reached_pairs = self.batch_states[0]
-            .dist
-            .iter()
-            .filter(|&&d| d != INF)
-            .count() as u64;
-        metrics
-    }
-
-    /// Phase 2 of a batched level: execute the synchronization schedule on
-    /// the nodes' `(vertex, mask)` delta lists with `CopyFrontier`
-    /// semantics (transfers in a round see round-start state, frozen by
-    /// snapshotting list lengths — they only grow). Returns per-round
-    /// per-transfer payload byte sizes for the interconnect simulator.
+    /// [`Self::batch_dist`].
     ///
-    /// Mirrors [`Self::phase2`]'s dense/sparse dispatch: once a sender's
-    /// frozen prefix passes the `8·V`-byte accounting switchover (where
-    /// [`PayloadEncoding::MaskDelta`](super::config::PayloadEncoding) caps
-    /// the sparse `12·entries` at the dense per-vertex mask array), the
-    /// merge follows the wire format — a word-wise OR over the snapshotted
-    /// masks — instead of replaying entries one by one.
-    fn batch_phase2(&mut self, level: u32) -> Vec<Vec<u64>> {
-        let nv = self.num_vertices;
-        // Entries at which `12·entries >= 8·V`: the dense mask array is
-        // now the (no larger) negotiated form, so merge it word-wise.
-        let dense_threshold =
-            ((nv as u64 * 8).div_ceil(MaskFrontier::ENTRY_BYTES) as usize).max(1);
-        let mut payloads = Vec::with_capacity(self.schedule.rounds.len());
-        // Round-start dense snapshots (one V-word lane-mask array per
-        // dense sender), flat like `phase2`'s `bit_snap` — but built
-        // *incrementally*: deltas only grow within a level and the merge
-        // is an idempotent OR, so each round folds in only the entries
-        // appended since the previous round (`mask_done` tracks the
-        // per-node accumulated prefix) instead of replaying from zero.
-        let mut mask_snap: Vec<u64> = Vec::new();
-        let mut mask_done: Vec<usize> = vec![0; self.batch_states.len()];
-        for round in 0..self.schedule.rounds.len() {
-            // Snapshot (prefix length, priced bytes) together: the
-            // coalescing statistics are monotone within the level, so
-            // pricing at snapshot time is exact for the frozen prefix.
-            let snap: Vec<(usize, u64)> = self
-                .batch_states
-                .iter()
-                .map(|s| (s.delta.len(), s.delta_payload_bytes(s.delta.len())))
-                .collect();
-            let any_dense = snap.iter().any(|&(l, _)| l >= dense_threshold);
-            if any_dense {
-                if mask_snap.is_empty() {
-                    mask_snap.resize(nv * self.batch_states.len(), 0);
-                }
-                for (k, s) in self.batch_states.iter().enumerate() {
-                    if snap[k].0 >= dense_threshold {
-                        s.delta.accumulate_range(
-                            mask_done[k],
-                            snap[k].0,
-                            &mut mask_snap[k * nv..(k + 1) * nv],
-                        );
-                        mask_done[k] = snap[k].0;
-                    }
-                }
-            }
-            let transfers = std::mem::take(&mut self.schedule.rounds[round]);
-            let mut round_payloads = Vec::with_capacity(transfers.len());
-            for t in &transfers {
-                let src = t.src as usize;
-                let dst = t.dst as usize;
-                let (take, priced) = snap[src];
-                round_payloads.push(priced);
-                let dst_node = &self.nodes[dst];
-                if take >= dense_threshold {
-                    // Dense path: the frozen prefix as per-vertex masks.
-                    let masks = &mask_snap[src * nv..(src + 1) * nv];
-                    let receiver = &mut self.batch_states[dst];
-                    for (v, &m) in masks.iter().enumerate() {
-                        if m != 0 {
-                            receiver.discover(
-                                v as VertexId,
-                                m,
-                                level,
-                                dst_node.owns(v as VertexId),
-                            );
-                        }
-                    }
-                } else {
-                    // Sparse path: entry-wise replay of the frozen prefix.
-                    let (sender, receiver) = if src < dst {
-                        let (lo, hi) = self.batch_states.split_at_mut(dst);
-                        (&lo[src], &mut hi[0])
-                    } else {
-                        let (lo, hi) = self.batch_states.split_at_mut(src);
-                        (&hi[0] as &MsBfsNodeState, &mut lo[dst])
-                    };
-                    for i in 0..take {
-                        let (v, m) = sender.delta.entries()[i];
-                        receiver.discover(v, m, level, dst_node.owns(v));
-                    }
-                }
-            }
-            self.schedule.rounds[round] = transfers;
-            payloads.push(round_payloads);
-        }
-        payloads
+    /// # Panics
+    ///
+    /// On an empty/oversized batch or out-of-range root (the legacy
+    /// behavior); [`QuerySession::run_batch`] returns a typed error.
+    pub fn run_batch(&mut self, roots: &[VertexId]) -> BatchMetrics {
+        self.session
+            .run_batch_metrics_only(roots)
+            .expect("invalid batch")
     }
 
     /// Run each root one at a time through [`Self::run`] and accumulate
-    /// the synchronization totals — the baseline [`Self::run_batch`] is
-    /// compared against (used by the CLI `batch --compare`, the
-    /// `msbfs_amortization` bench, the amortization tests, and the
-    /// closeness-centrality example).
+    /// the synchronization totals.
     pub fn sequential_baseline(&mut self, roots: &[VertexId]) -> SequentialBaseline {
-        let sched_depth = self.schedule.depth() as u64;
-        let mut b = SequentialBaseline::default();
-        for &r in roots {
-            let m = self.run(r);
-            b.bytes += m.bytes();
-            b.messages += m.messages();
-            b.sync_rounds += m.depth() as u64 * sched_depth;
-            b.sim_seconds += m.sim_seconds();
-        }
-        b
+        self.session
+            .sequential_baseline(roots)
+            .expect("root out of range")
+    }
+
+    /// Distance array after a run (node 0's live view, exactly as the
+    /// pre-split engine exposed it: INF-filled before the first run,
+    /// reflecting whatever single-root query — including
+    /// [`Self::sequential_baseline`]'s last root — ran most recently).
+    pub fn dist(&self) -> &[u32] {
+        self.session.node0_dist()
     }
 
     /// Lane count of the most recent [`Self::run_batch`] (0 before any).
     pub fn batch_width(&self) -> usize {
-        self.batch_width
+        self.session.batch_width()
     }
 
     /// Distance array of batch lane `lane` after [`Self::run_batch`]
-    /// (node 0's view; [`Self::assert_batch_agreement`] verifies all
-    /// views coincide).
+    /// (node 0's live view).
+    ///
+    /// # Panics
+    ///
+    /// When no batch has run yet or `lane` is out of range (the legacy
+    /// behavior).
     pub fn batch_dist(&self, lane: usize) -> &[u32] {
-        assert!(
-            !self.batch_states.is_empty(),
-            "run_batch has not been called"
-        );
-        assert!(lane < self.batch_width, "lane {lane} out of range");
-        let nv = self.num_vertices;
-        &self.batch_states[0].dist[lane * nv..(lane + 1) * nv]
-    }
-
-    /// Check that every node ended the batch with identical per-lane
-    /// distance arrays — the batched analog of [`Self::assert_agreement`].
-    pub fn assert_batch_agreement(&self) -> Result<(), String> {
-        let Some(first) = self.batch_states.first() else {
-            return Err("run_batch has not been called".to_string());
-        };
-        let nv = self.num_vertices;
-        for (i, st) in self.batch_states.iter().enumerate().skip(1) {
-            if st.dist != first.dist {
-                let bad = first
-                    .dist
-                    .iter()
-                    .zip(&st.dist)
-                    .position(|(a, c)| a != c)
-                    .unwrap();
-                return Err(format!(
-                    "node {i} disagrees with node 0 at lane {} vertex {}: {} vs {}",
-                    bad / nv,
-                    bad % nv,
-                    st.dist[bad],
-                    first.dist[bad]
-                ));
-            }
-        }
-        Ok(())
-    }
-
-    /// Distance array after a run (node 0's view; `assert_agreement`
-    /// verifies all views coincide).
-    pub fn dist(&self) -> &[u32] {
-        &self.nodes[0].d_local
+        self.session.node0_batch_dist(lane)
     }
 
     /// Check that every node ended with an identical distance array — the
     /// correctness invariant of the synchronization pattern.
     pub fn assert_agreement(&self) -> Result<(), String> {
-        let d0 = &self.nodes[0].d_local;
-        for n in &self.nodes[1..] {
-            if &n.d_local != d0 {
-                let bad = d0
-                    .iter()
-                    .zip(&n.d_local)
-                    .position(|(a, b)| a != b)
-                    .unwrap();
-                return Err(format!(
-                    "node {} disagrees with node 0 at vertex {bad}: {} vs {}",
-                    n.id, n.d_local[bad], d0[bad]
-                ));
-            }
-        }
-        Ok(())
+        self.session.assert_agreement()
     }
-}
 
-/// Raw-pointer transport for handing the pool disjoint `&mut` slots of one
-/// slice (each `run_indexed` index touches exactly one element).
-struct SendPtr(*mut MsBfsNodeState);
-unsafe impl Send for SendPtr {}
-unsafe impl Sync for SendPtr {}
-
-/// One node's Phase-1 step of a batched level — shared by the pooled and
-/// sequential paths, so the two are bit-identical by construction.
-fn batch_expand_node(node: &ComputeNode, st: &mut MsBfsNodeState, level: u32) {
-    let q = std::mem::take(&mut st.q_local);
-    for &v in &q {
-        let mv = st.visit[v as usize];
-        st.visit[v as usize] = 0;
-        debug_assert!(mv != 0, "frontier vertex {v} with empty mask");
-        st.edges_this_level += node.slab.degree_global(v) as u64;
-        for &u in node.slab.neighbors_global(v) {
-            st.discover(u, mv, level, node.owns(u));
-        }
-    }
-    st.q_local = q; // keep the allocation; cleared at swap
-}
-
-fn expand_node(
-    node: &mut ComputeNode,
-    backend: &mut dyn ComputeBackend,
-    out: &mut ExpandOutput,
-    bottom_up: bool,
-) {
-    if bottom_up {
-        // The full-frontier bitmap is moved out so the backend can borrow
-        // it alongside the mutable visited bitmap.
-        let frontier_full = std::mem::replace(
-            &mut node.frontier_full,
-            crate::bfs::frontier::Bitmap::new(0),
-        );
-        backend.expand_bottom_up(&node.slab, &frontier_full, &mut node.visited, out);
-        node.frontier_full = frontier_full;
-    } else {
-        // The frontier is moved out so backend gets plain slices.
-        let frontier = std::mem::take(&mut node.q_local);
-        backend.expand(&node.slab, &frontier, &mut node.visited, out);
-        node.q_local = frontier; // restored for metrics/debug; cleared at swap
+    /// Check that every node ended the batch with identical per-lane
+    /// distance arrays — the batched analog of [`Self::assert_agreement`].
+    pub fn assert_batch_agreement(&self) -> Result<(), String> {
+        self.session.assert_batch_agreement()
     }
 }
 
 #[cfg(test)]
 mod tests {
+    #![allow(deprecated)]
+
     use super::*;
     use crate::bfs::serial::serial_bfs;
-    use crate::coordinator::config::{PatternKind, PayloadEncoding};
-    use crate::graph::gen::kronecker::{kronecker, KroneckerParams};
-    use crate::graph::gen::structured::{grid2d, path, star};
     use crate::graph::gen::urand::uniform_random;
 
-    fn check_against_serial(g: &Csr, cfg: EngineConfig, root: VertexId) {
-        let mut engine = ButterflyBfs::new(g, cfg);
-        let metrics = engine.run(root);
-        engine.assert_agreement().unwrap();
-        let want = serial_bfs(g, root);
-        assert_eq!(engine.dist(), &want[..], "distances match serial");
-        let reached = want.iter().filter(|&&d| d != INF).count() as u64;
-        assert_eq!(metrics.reached, reached);
+    #[test]
+    fn shim_matches_plan_session_results() {
+        let (g, _) = uniform_random(400, 6, 11);
+        let mut shim = ButterflyBfs::new(&g, EngineConfig::dgx2(4, 2));
+        let sm = shim.run(3);
+        shim.assert_agreement().unwrap();
+        let plan = TraversalPlan::build(&g, EngineConfig::dgx2(4, 2)).unwrap();
+        let mut session = plan.session();
+        let r = session.run(3).unwrap();
+        assert_eq!(shim.dist(), r.dist());
+        assert_eq!(shim.dist(), &serial_bfs(&g, 3)[..]);
+        // Shim metrics are the session metrics, field for field (modulo
+        // wallclock, which is measured per run).
+        let mut a = sm.clone();
+        let mut b = r.metrics().clone();
+        a.wall_seconds = 0.0;
+        b.wall_seconds = 0.0;
+        assert_eq!(a.to_json().render(), b.to_json().render());
     }
 
     #[test]
-    fn matches_serial_16_nodes_fanout1_and_4() {
-        let (g, _) = kronecker(KroneckerParams::graph500(11, 8), 31);
-        for fanout in [1, 4] {
-            check_against_serial(&g, EngineConfig::dgx2(16, fanout), 0);
-        }
+    fn shim_dist_is_a_live_view_like_the_old_engine() {
+        use crate::bfs::serial::INF;
+        let (g, _) = uniform_random(200, 5, 2);
+        let mut shim = ButterflyBfs::new(&g, EngineConfig::dgx2(4, 1));
+        // Before the first run: the INF-initialized array, not a panic.
+        assert!(shim.dist().iter().all(|&d| d == INF));
+        // After sequential_baseline: the last baseline root's distances.
+        shim.sequential_baseline(&[3, 9]);
+        assert_eq!(shim.dist(), &serial_bfs(&g, 9)[..]);
     }
 
     #[test]
-    fn matches_serial_all_patterns() {
-        let (g, _) = uniform_random(900, 8, 77);
-        for pattern in [
-            PatternKind::Butterfly { fanout: 1 },
-            PatternKind::Butterfly { fanout: 2 },
-            PatternKind::Butterfly { fanout: 4 },
-            PatternKind::AllToAllConcurrent,
-            PatternKind::AllToAllIterative,
-        ] {
-            let cfg = EngineConfig {
-                pattern,
-                ..EngineConfig::dgx2(8, 1)
-            };
-            check_against_serial(&g, cfg, 13);
-        }
-    }
-
-    #[test]
-    fn matches_serial_non_power_of_two_nodes() {
-        let (g, _) = uniform_random(1100, 8, 5);
-        for nodes in [3, 5, 9, 13] {
-            check_against_serial(&g, EngineConfig::dgx2(nodes, 1), 1);
-            check_against_serial(&g, EngineConfig::dgx2(nodes, 4), 1);
-        }
-    }
-
-    #[test]
-    fn structured_graphs_all_roots() {
-        let graphs = vec![path(40), star(50), grid2d(6, 8)];
-        for g in &graphs {
-            for root in [0u32, (g.num_vertices() - 1) as u32] {
-                check_against_serial(g, EngineConfig::dgx2(4, 1), root);
-            }
-        }
-    }
-
-    #[test]
-    fn disconnected_graph_unreached_stay_inf() {
-        use crate::graph::builder::GraphBuilder;
-        let mut b = GraphBuilder::new(40);
-        for v in 1..20u32 {
-            b.add_edge(0, v);
-        }
-        b.add_edge(30, 31); // island
-        let (g, _) = b.build_undirected();
-        let mut engine = ButterflyBfs::new(&g, EngineConfig::dgx2(4, 2));
-        let m = engine.run(0);
-        assert_eq!(m.reached, 20);
-        assert_eq!(engine.dist()[30], INF);
-        engine.assert_agreement().unwrap();
-    }
-
-    #[test]
-    fn single_node_degenerates_to_local_bfs() {
-        let (g, _) = uniform_random(400, 8, 3);
-        let mut engine = ButterflyBfs::new(&g, EngineConfig::dgx2(1, 1));
-        let m = engine.run(0);
-        assert_eq!(engine.dist(), &serial_bfs(&g, 0)[..]);
-        assert_eq!(m.messages(), 0, "one node never communicates");
-    }
-
-    #[test]
-    fn parallel_phase1_matches_sequential() {
-        let (g, _) = kronecker(KroneckerParams::graph500(10, 8), 4);
-        let mut seq = ButterflyBfs::new(&g, EngineConfig::dgx2(8, 4));
-        let mut par = ButterflyBfs::new(
-            &g,
-            EngineConfig {
-                parallel_phase1: true,
-                ..EngineConfig::dgx2(8, 4)
-            },
-        );
-        let ms = seq.run(9);
-        let mp = par.run(9);
-        assert_eq!(seq.dist(), par.dist());
-        assert_eq!(ms.edges_examined(), mp.edges_examined());
-    }
-
-    #[test]
-    fn metrics_level_structure() {
-        let g = path(12);
-        let mut engine = ButterflyBfs::new(&g, EngineConfig::dgx2(2, 1));
-        let m = engine.run(0);
-        // Path of 12 vertices from one end: 11 expansion levels with
-        // nonempty frontiers.
-        assert_eq!(m.depth(), 12);
-        assert!(m.levels.iter().all(|l| l.frontier >= 1));
-        // Graph500 vs honest GTEPS both finite.
-        assert!(m.sim_gteps() > 0.0);
-        assert!(m.sim_seconds() > 0.0);
-    }
-
-    #[test]
-    fn message_count_per_level_matches_schedule() {
-        let (g, _) = uniform_random(600, 8, 8);
-        let mut engine = ButterflyBfs::new(&g, EngineConfig::dgx2(16, 1));
-        let sched_msgs = engine.schedule().total_messages();
-        let m = engine.run(0);
-        for l in &m.levels {
-            assert_eq!(l.messages, sched_msgs, "level {}", l.level);
-        }
-    }
-
-    #[test]
-    fn bitmap_payload_is_level_invariant() {
-        let (g, _) = uniform_random(640, 8, 2);
-        let cfg = EngineConfig {
-            payload: PayloadEncoding::Bitmap,
-            ..EngineConfig::dgx2(4, 1)
-        };
-        let mut engine = ButterflyBfs::new(&g, cfg);
-        let m = engine.run(0);
-        // Bitmap encoding: every level ships the same number of bytes —
-        // the paper's tight bound (contribution 4).
-        let per_level: Vec<u64> = m.levels.iter().map(|l| l.bytes).collect();
-        assert!(per_level.windows(2).all(|w| w[0] == w[1]), "{per_level:?}");
-    }
-
-    #[test]
-    fn rerunning_engine_is_reusable() {
-        let (g, _) = uniform_random(500, 8, 6);
-        let mut engine = ButterflyBfs::new(&g, EngineConfig::dgx2(4, 4));
-        let d1 = {
-            engine.run(3);
-            engine.dist().to_vec()
-        };
-        engine.run(10);
-        let want = serial_bfs(&g, 10);
-        assert_eq!(engine.dist(), &want[..]);
-        assert_ne!(d1, want, "different roots differ");
-    }
-
-    #[test]
-    fn bottom_up_mode_matches_serial() {
-        use crate::coordinator::config::DirectionMode;
-        let (g, _) = uniform_random(800, 8, 12);
-        let cfg = EngineConfig {
-            direction: DirectionMode::BottomUp,
-            ..EngineConfig::dgx2(8, 4)
-        };
-        let mut engine = ButterflyBfs::new(&g, cfg);
-        engine.run(0);
-        engine.assert_agreement().unwrap();
-        assert_eq!(engine.dist(), &serial_bfs(&g, 0)[..]);
-    }
-
-    #[test]
-    fn diropt_mode_matches_serial_and_saves_edges() {
-        use crate::coordinator::config::DirectionMode;
-        let (g, _) = uniform_random(4000, 16, 6);
-        let mut td = ButterflyBfs::new(&g, EngineConfig::dgx2(8, 4));
-        let cfg = EngineConfig {
-            direction: DirectionMode::diropt(),
-            ..EngineConfig::dgx2(8, 4)
-        };
-        let mut dopt = ButterflyBfs::new(&g, cfg);
-        let mtd = td.run(0);
-        let mdo = dopt.run(0);
-        dopt.assert_agreement().unwrap();
-        assert_eq!(dopt.dist(), td.dist());
-        assert_eq!(dopt.dist(), &serial_bfs(&g, 0)[..]);
-        // Small-world graph: DO must examine fewer edges (the paper's
-        // "promising optimization").
-        assert!(
-            mdo.edges_examined() < mtd.edges_examined(),
-            "DO {} vs TD {}",
-            mdo.edges_examined(),
-            mtd.edges_examined()
-        );
-    }
-
-    #[test]
-    fn diropt_mode_many_node_counts() {
-        use crate::coordinator::config::DirectionMode;
-        let (g, _) = kronecker(KroneckerParams::graph500(11, 8), 5);
-        for nodes in [1usize, 3, 9, 16] {
-            let cfg = EngineConfig {
-                direction: DirectionMode::diropt(),
-                ..EngineConfig::dgx2(nodes, 1)
-            };
-            let mut engine = ButterflyBfs::new(&g, cfg);
-            engine.run(2);
-            engine.assert_agreement().unwrap();
-            assert_eq!(engine.dist(), &serial_bfs(&g, 2)[..], "nodes={nodes}");
-        }
-    }
-
-    #[test]
-    fn run_batch_matches_serial_per_lane() {
-        let (g, _) = uniform_random(700, 8, 19);
-        let roots: Vec<VertexId> = (0..64u32).map(|i| (i * 11) % 700).collect();
-        for (nodes, fanout) in [(1usize, 1u32), (4, 1), (16, 4), (9, 2)] {
-            let mut engine = ButterflyBfs::new(&g, EngineConfig::dgx2(nodes, fanout));
-            let m = engine.run_batch(&roots);
-            engine.assert_batch_agreement().unwrap();
-            assert_eq!(m.num_roots, 64);
-            for (lane, &r) in roots.iter().enumerate() {
-                assert_eq!(
-                    engine.batch_dist(lane),
-                    &serial_bfs(&g, r)[..],
-                    "nodes={nodes} f={fanout} lane={lane}"
-                );
-            }
-        }
-    }
-
-    #[test]
-    fn run_batch_small_and_duplicate_batches() {
-        let (g, _) = uniform_random(400, 6, 2);
-        let mut engine = ButterflyBfs::new(&g, EngineConfig::dgx2(8, 4));
-        for roots in [vec![5u32], vec![1, 1, 1], vec![0, 399, 7, 7, 200]] {
-            let m = engine.run_batch(&roots);
-            engine.assert_batch_agreement().unwrap();
-            assert_eq!(m.num_roots, roots.len());
-            for (lane, &r) in roots.iter().enumerate() {
-                assert_eq!(engine.batch_dist(lane), &serial_bfs(&g, r)[..]);
-            }
-        }
-    }
-
-    #[test]
-    fn run_batch_matches_bit_parallel_oracle() {
-        use crate::bfs::msbfs::ms_bfs;
-        let (g, _) = kronecker(KroneckerParams::graph500(10, 8), 77);
-        let roots: Vec<VertexId> = (0..32u32).map(|i| i * 3).collect();
-        let mut engine = ButterflyBfs::new(&g, EngineConfig::dgx2(16, 1));
-        let m = engine.run_batch(&roots);
-        let want = ms_bfs(&g, &roots);
-        for lane in 0..roots.len() {
-            assert_eq!(engine.batch_dist(lane), want.dist(lane), "lane {lane}");
-        }
-        assert_eq!(m.reached_pairs, want.reached_pairs());
-    }
-
-    #[test]
-    fn run_batch_amortizes_bytes_and_rounds() {
-        // The acceptance criterion: one 64-root batch must ship measurably
-        // fewer synchronization bytes and execute fewer schedule rounds
-        // than 64 sequential runs of the same roots.
-        let (g, _) = kronecker(KroneckerParams::graph500(11, 8), 13);
-        let roots: Vec<VertexId> =
-            crate::bfs::msbfs::sample_batch_roots(&g, 64, 0xBEEF);
-        let mut engine = ButterflyBfs::new(&g, EngineConfig::dgx2(16, 4));
-        let bm = engine.run_batch(&roots);
-        engine.assert_batch_agreement().unwrap();
-        let seq = engine.sequential_baseline(&roots);
-        // Bytes: strictly fewer. (The dense mask forms are information-
-        // equivalent to 64 bitmaps, so hot levels roughly tie; the win
-        // comes from the mask-grouped encoding collapsing lanes that
-        // travel together.)
-        assert!(
-            bm.bytes() < seq.bytes,
-            "batch bytes {} vs sequential {}",
-            bm.bytes(),
-            seq.bytes
-        );
-        // Rounds: the headline amortization — one schedule execution per
-        // level serves all 64 roots, so the reduction is ~batch-width ×
-        // (sum of depths / max depth) and far exceeds 8×.
-        assert!(
-            bm.sync_rounds * 8 < seq.sync_rounds,
-            "batch rounds {} vs sequential {}",
-            bm.sync_rounds,
-            seq.sync_rounds
-        );
-    }
-
-    #[test]
-    fn run_batch_duplicate_roots_amortize_sharply() {
-        // 64 identical roots: the batch's mask-grouped encoding collapses
-        // the whole batch to near one traversal's bytes, while the
-        // sequential path pays 64 full runs — a many-fold reduction.
-        let (g, _) = kronecker(KroneckerParams::graph500(10, 8), 3);
-        let roots = vec![5u32; 64];
-        let mut engine = ButterflyBfs::new(&g, EngineConfig::dgx2(16, 4));
-        let bm = engine.run_batch(&roots);
-        engine.assert_batch_agreement().unwrap();
-        let seq = engine.sequential_baseline(&roots);
-        assert!(
-            bm.bytes() * 4 < seq.bytes,
-            "batch bytes {} vs sequential {}",
-            bm.bytes(),
-            seq.bytes
-        );
-        assert_eq!(engine.batch_dist(0), engine.batch_dist(63));
-    }
-
-    #[test]
-    fn run_batch_engine_reusable_and_interleaves_with_run() {
+    fn shim_batch_accessors_delegate() {
         let (g, _) = uniform_random(300, 6, 4);
-        let mut engine = ButterflyBfs::new(&g, EngineConfig::dgx2(4, 2));
-        engine.run_batch(&[3, 9]);
-        let d1 = engine.batch_dist(1).to_vec();
-        engine.run(5); // single-root state is independent of batch state
-        assert_eq!(engine.dist(), &serial_bfs(&g, 5)[..]);
-        assert_eq!(d1, serial_bfs(&g, 9));
-        engine.run_batch(&[8]);
-        assert_eq!(engine.batch_dist(0), &serial_bfs(&g, 8)[..]);
-        assert_eq!(engine.batch_width(), 1);
+        let mut shim = ButterflyBfs::new(&g, EngineConfig::dgx2(4, 2));
+        assert_eq!(shim.batch_width(), 0);
+        assert!(shim.assert_batch_agreement().is_err());
+        let bm = shim.run_batch(&[3, 9, 9]);
+        shim.assert_batch_agreement().unwrap();
+        assert_eq!(bm.num_roots, 3);
+        assert_eq!(shim.batch_width(), 3);
+        assert_eq!(shim.batch_dist(1), &serial_bfs(&g, 9)[..]);
+        assert_eq!(shim.batch_dist(1), shim.batch_dist(2));
+        // Single-root runs do not disturb the stored batch result.
+        shim.run(5);
+        assert_eq!(shim.dist(), &serial_bfs(&g, 5)[..]);
+        assert_eq!(shim.batch_dist(0), &serial_bfs(&g, 3)[..]);
+        let seq = shim.sequential_baseline(&[3, 9]);
+        assert!(seq.bytes > 0 && seq.sync_rounds > 0);
     }
 
     #[test]
-    fn batch_agreement_errors_before_any_batch() {
-        let (g, _) = uniform_random(50, 4, 1);
-        let engine = ButterflyBfs::new(&g, EngineConfig::dgx2(2, 1));
-        assert!(engine.assert_batch_agreement().is_err());
-    }
-
-    #[test]
-    fn property_run_batch_equals_serial() {
-        use crate::util::propcheck::{forall, gen, Config};
-        forall(Config::cases(12), "run_batch == serial per lane", |rng| {
-            let n = gen::usize_in(rng, 10, 300);
-            let ef = gen::usize_in(rng, 1, 6) as u32;
-            let nodes = gen::usize_in(rng, 1, 8.min(n));
-            let fanout = gen::usize_in(rng, 1, 4) as u32;
-            let b = gen::usize_in(rng, 1, 16);
-            let (g, _) = uniform_random(n, ef, rng.next_u64());
-            let roots: Vec<VertexId> =
-                (0..b).map(|_| rng.next_usize(n) as VertexId).collect();
-            let mut engine = ButterflyBfs::new(&g, EngineConfig::dgx2(nodes, fanout));
-            engine.run_batch(&roots);
-            let ok = engine.assert_batch_agreement().is_ok()
-                && roots.iter().enumerate().all(|(lane, &r)| {
-                    engine.batch_dist(lane) == &serial_bfs(&g, r)[..]
-                });
-            (ok, format!("n={n} ef={ef} nodes={nodes} f={fanout} b={b}"))
-        });
-    }
-
-    /// Run a 2D-mode traversal, check distances against serial BFS and
-    /// the measured message count against the analytical
-    /// `Partition2D::message_volume` model, and check the fold/expand
-    /// splits tile the totals.
-    fn check_two_d(g: &Csr, rows: u32, cols: u32, root: VertexId) {
-        let mut engine = ButterflyBfs::new(g, EngineConfig::dgx2_2d(rows, cols));
-        let m = engine.run(root);
-        engine.assert_agreement().unwrap();
-        assert_eq!(
-            engine.dist(),
-            &serial_bfs(g, root)[..],
-            "grid {rows}x{cols} root {root}"
-        );
-        let p2 = engine.partition().as_two_d().expect("2D mode");
-        assert_eq!(
-            m.messages(),
-            p2.message_volume(m.depth() as u64),
-            "grid {rows}x{cols}: measured vs model"
-        );
-        for l in &m.levels {
-            assert_eq!(l.fold_messages + l.expand_messages, l.messages);
-            assert_eq!(l.fold_bytes + l.expand_bytes, l.bytes);
-        }
-    }
-
-    #[test]
-    fn two_d_matches_serial_square_and_ragged_grids() {
-        let (g, _) = uniform_random(900, 8, 77);
-        for (rows, cols) in [(4u32, 4u32), (2, 8), (8, 2), (1, 4), (4, 1), (3, 5)] {
-            check_two_d(&g, rows, cols, 13);
-        }
-    }
-
-    #[test]
-    fn two_d_single_processor_degenerates_to_local_bfs() {
-        let (g, _) = uniform_random(400, 8, 3);
-        let mut engine = ButterflyBfs::new(&g, EngineConfig::dgx2_2d(1, 1));
-        let m = engine.run(0);
-        assert_eq!(engine.dist(), &serial_bfs(&g, 0)[..]);
-        assert_eq!(m.messages(), 0, "one processor never communicates");
-    }
-
-    #[test]
-    fn two_d_direction_modes_match_serial() {
-        use crate::coordinator::config::DirectionMode;
-        let (g, _) = kronecker(KroneckerParams::graph500(10, 8), 9);
-        for direction in [DirectionMode::BottomUp, DirectionMode::diropt()] {
-            let cfg = EngineConfig { direction, ..EngineConfig::dgx2_2d(4, 4) };
-            let mut engine = ButterflyBfs::new(&g, cfg);
-            engine.run(2);
-            engine.assert_agreement().unwrap();
-            assert_eq!(engine.dist(), &serial_bfs(&g, 2)[..], "{direction:?}");
-        }
-    }
-
-    #[test]
-    fn two_d_run_batch_matches_serial_per_lane() {
-        let (g, _) = uniform_random(500, 8, 19);
-        let roots: Vec<VertexId> = (0..32u32).map(|i| (i * 13) % 500).collect();
-        for (rows, cols) in [(4u32, 4u32), (2, 3), (1, 5)] {
-            let mut engine = ButterflyBfs::new(&g, EngineConfig::dgx2_2d(rows, cols));
-            let m = engine.run_batch(&roots);
-            engine.assert_batch_agreement().unwrap();
-            let p2 = engine.partition().as_two_d().unwrap();
-            assert_eq!(m.messages(), p2.message_volume(m.depth() as u64));
-            assert_eq!(m.fold_messages() + m.expand_messages(), m.messages());
-            for (lane, &r) in roots.iter().enumerate() {
-                assert_eq!(
-                    engine.batch_dist(lane),
-                    &serial_bfs(&g, r)[..],
-                    "grid {rows}x{cols} lane {lane}"
-                );
-            }
-        }
-    }
-
-    #[test]
-    fn property_two_d_equals_serial() {
-        use crate::util::propcheck::{forall, gen, Config};
-        forall(Config::cases(20), "2d fold/expand == serial", |rng| {
-            let n = gen::usize_in(rng, 8, 300);
-            let ef = gen::usize_in(rng, 1, 6) as u32;
-            let rows = gen::usize_in(rng, 1, 6.min(n)) as u32;
-            let cols = gen::usize_in(rng, 1, 6.min(n)) as u32;
-            let (g, _) = uniform_random(n, ef, rng.next_u64());
-            let root = rng.next_usize(n) as u32;
-            let mut engine = ButterflyBfs::new(&g, EngineConfig::dgx2_2d(rows, cols));
-            let m = engine.run(root);
-            let p2 = engine.partition().as_two_d().unwrap();
-            let ok = engine.assert_agreement().is_ok()
-                && engine.dist() == &serial_bfs(&g, root)[..]
-                && m.messages() == p2.message_volume(m.depth() as u64);
-            (ok, format!("n={n} ef={ef} grid={rows}x{cols} root={root}"))
-        });
-    }
-
-    #[test]
-    fn pooled_batch_stepping_bit_identical_to_sequential() {
-        // The threadpool determinism acceptance: pooled per-node stepping
-        // must reproduce sequential stepping bit for bit — distances,
-        // per-level byte/message accounting, everything — across 50
-        // seeded configs in both partition modes.
-        use crate::util::propcheck::{forall, gen, Config};
-        forall(Config::cases(50), "pooled run_batch == sequential", |rng| {
-            let n = gen::usize_in(rng, 10, 250);
-            let ef = gen::usize_in(rng, 1, 6) as u32;
-            let b = gen::usize_in(rng, 1, 24);
-            let (g, _) = uniform_random(n, ef, rng.next_u64());
-            let roots: Vec<VertexId> =
-                (0..b).map(|_| rng.next_usize(n) as VertexId).collect();
-            let cfg = if rng.next_below(2) == 0 {
-                let nodes = gen::usize_in(rng, 2, 8.min(n));
-                EngineConfig::dgx2(nodes, gen::usize_in(rng, 1, 4) as u32)
-            } else {
-                let rows = gen::usize_in(rng, 1, 4.min(n)) as u32;
-                let cols = gen::usize_in(rng, 1, 4.min(n)) as u32;
-                EngineConfig::dgx2_2d(rows, cols)
-            };
-            let mut seq = ButterflyBfs::new(&g, cfg.clone());
-            let mut par = ButterflyBfs::new(
-                &g,
-                EngineConfig { parallel_phase1: true, ..cfg },
-            );
-            let ms = seq.run_batch(&roots);
-            let mp = par.run_batch(&roots);
-            let mut ok = par.assert_batch_agreement().is_ok();
-            for lane in 0..roots.len() {
-                ok &= seq.batch_dist(lane) == par.batch_dist(lane);
-            }
-            ok &= ms.depth() == mp.depth();
-            for (a, c) in ms.levels.iter().zip(&mp.levels) {
-                ok &= a.frontier == c.frontier
-                    && a.edges_examined == c.edges_examined
-                    && a.discovered == c.discovered
-                    && a.messages == c.messages
-                    && a.bytes == c.bytes;
-            }
-            (ok, format!("n={n} ef={ef} b={b}"))
-        });
-    }
-
-    #[test]
-    fn batch_dense_merge_fallback_matches_oracle() {
-        // A star forces a level whose delta list (≈ V entries) crosses the
-        // 8·V-byte switchover, so the dense word-wise OR path runs; the
-        // result must match the bit-parallel oracle exactly.
-        use crate::bfs::msbfs::ms_bfs;
-        let g = star(600);
-        let roots: Vec<VertexId> = (0..64u32).map(|i| i % 2).collect();
-        let mut engine = ButterflyBfs::new(&g, EngineConfig::dgx2(8, 2));
-        engine.run_batch(&roots);
-        engine.assert_batch_agreement().unwrap();
-        let want = ms_bfs(&g, &roots);
-        for lane in 0..roots.len() {
-            assert_eq!(engine.batch_dist(lane), want.dist(lane), "lane {lane}");
-        }
-    }
-
-    #[test]
-    fn property_distributed_equals_serial() {
-        use crate::util::propcheck::{forall, gen, Config};
-        forall(Config::cases(25), "butterfly bfs == serial bfs", |rng| {
-            let n = gen::usize_in(rng, 10, 500);
-            let ef = gen::usize_in(rng, 1, 8) as u32;
-            let nodes = gen::usize_in(rng, 1, 10.min(n));
-            let fanout = gen::usize_in(rng, 1, 5) as u32;
-            let (g, _) = uniform_random(n, ef, rng.next_u64());
-            let root = rng.next_usize(n) as u32;
-            let mut engine = ButterflyBfs::new(&g, EngineConfig::dgx2(nodes, fanout));
-            engine.run(root);
-            let ok = engine.assert_agreement().is_ok()
-                && engine.dist() == &serial_bfs(&g, root)[..];
-            (ok, format!("n={n} ef={ef} nodes={nodes} f={fanout} root={root}"))
-        });
+    fn shim_exposes_plan_artifacts() {
+        let (g, _) = uniform_random(200, 4, 7);
+        let shim = ButterflyBfs::new(&g, EngineConfig::dgx2_2d(2, 3));
+        assert!(shim.partition().as_two_d().is_some());
+        assert_eq!(shim.config().num_nodes, 6);
+        assert!(shim.schedule().depth() >= 1);
     }
 }

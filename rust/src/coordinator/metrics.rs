@@ -184,9 +184,9 @@ impl RunMetrics {
 
 /// Accumulated synchronization totals of running a set of roots one at a
 /// time through the single-root engine — the baseline
-/// [`run_batch`](crate::coordinator::engine::ButterflyBfs::run_batch) is
+/// [`run_batch`](crate::coordinator::session::QuerySession::run_batch) is
 /// compared against (see
-/// [`sequential_baseline`](crate::coordinator::engine::ButterflyBfs::sequential_baseline)).
+/// [`sequential_baseline`](crate::coordinator::session::QuerySession::sequential_baseline)).
 #[derive(Clone, Copy, Debug, Default)]
 pub struct SequentialBaseline {
     /// Total bytes shipped across all runs.
@@ -200,7 +200,7 @@ pub struct SequentialBaseline {
 }
 
 /// Metrics of one batched multi-source traversal
-/// ([`run_batch`](crate::coordinator::engine::ButterflyBfs::run_batch)):
+/// ([`run_batch`](crate::coordinator::session::QuerySession::run_batch)):
 /// the same per-level breakdown as [`RunMetrics`], but one level now
 /// advances up to 64 traversals, so `levels`/`sync_rounds`/`bytes` are
 /// *shared* across the whole batch. `LevelMetrics::frontier` counts active

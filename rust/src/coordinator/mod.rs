@@ -2,17 +2,30 @@
 //! multi-pattern BFS engine (Alg. 2 over 1D + butterfly/all-to-all or the
 //! 2D fold/expand checkerboard), pluggable Phase-1 backends,
 //! configuration, and metrics.
+//!
+//! The engine is split into an immutable, `Arc`-shareable
+//! [`TraversalPlan`] (graph slabs + partition + schedule + config, built
+//! once per graph via [`TraversalPlan::build`]) and cheap, concurrent
+//! [`QuerySession`]s (`plan.session()`) owning all per-query mutable
+//! state. Queries return typed results ([`TraversalResult`],
+//! [`BatchResult`]) and typed errors ([`PlanError`], [`QueryError`]).
+//! The pre-split [`ButterflyBfs`] remains as a deprecated shim.
 
 pub mod backend;
 pub mod config;
 pub mod engine;
 pub mod metrics;
 pub mod node;
+pub mod plan;
+pub mod session;
 
 pub use backend::{ComputeBackend, ExpandOutput, NativeCsr};
 pub use config::{
     DirectionMode, EngineConfig, PartitionMode, PatternKind, PayloadEncoding,
 };
+#[allow(deprecated)]
 pub use engine::ButterflyBfs;
 pub use metrics::{BatchMetrics, LevelMetrics, RunMetrics, SequentialBaseline};
 pub use node::ComputeNode;
+pub use plan::{PlanError, TraversalPlan};
+pub use session::{BatchResult, QueryError, QuerySession, TraversalResult};

@@ -19,14 +19,18 @@
 use crate::bfs::frontier::Bitmap;
 use crate::bfs::serial::INF;
 use crate::graph::csr::{CsrSlab, VertexId};
+use std::sync::Arc;
 
 /// One simulated device.
 #[derive(Clone, Debug)]
 pub struct ComputeNode {
     /// Node id (0-based rank).
     pub id: u32,
-    /// The adjacency rows this node owns (global column ids).
-    pub slab: CsrSlab,
+    /// The adjacency rows this node owns (global column ids). Shared: the
+    /// slab is an immutable plan artifact, so concurrent sessions over one
+    /// [`TraversalPlan`](crate::coordinator::plan::TraversalPlan) reference
+    /// the same memory instead of cloning the graph.
+    pub slab: Arc<CsrSlab>,
     /// This node's view of every vertex's distance.
     pub d_local: Vec<u32>,
     /// Bitmap shadow of `d_local != INF` for O(1) membership tests.
@@ -57,6 +61,12 @@ impl ComputeNode {
     /// queue gets `O(V)` capacity and the node never reallocates during
     /// traversal (asserted in debug builds).
     pub fn new(id: u32, slab: CsrSlab, num_vertices: usize) -> Self {
+        Self::from_shared(id, Arc::new(slab), num_vertices)
+    }
+
+    /// Construct a node over a plan-owned (shared) slab — the
+    /// session-construction path: no adjacency data is copied.
+    pub fn from_shared(id: u32, slab: Arc<CsrSlab>, num_vertices: usize) -> Self {
         Self {
             id,
             slab,

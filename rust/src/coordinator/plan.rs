@@ -1,0 +1,373 @@
+//! The immutable half of the engine: [`TraversalPlan`].
+//!
+//! Building a plan is the expensive, once-per-graph step — partitioning
+//! the CSR into per-node slabs, generating and validating the
+//! synchronization [`Schedule`], and freezing the [`EngineConfig`] with
+//! its device/interconnect models. Everything a plan owns is immutable
+//! and internally reference-counted, so a plan can be wrapped in an
+//! [`Arc`](std::sync::Arc) and shared by any number of concurrently
+//! running [`QuerySession`]s: `plan.session()` hands out cheap per-query
+//! state (distance arrays, queues, metrics) that references — never
+//! copies — the slabs and schedule.
+//!
+//! All input validation lives here as the typed [`PlanError`] (and, on
+//! the query side, [`QueryError`](super::session::QueryError)): a bad
+//! grid, an oversized node count, or an empty graph is a value the caller
+//! can match on, not a panic.
+//!
+//! # Build once, query many
+//!
+//! ```
+//! use butterfly_bfs::coordinator::{EngineConfig, TraversalPlan};
+//! use butterfly_bfs::graph::gen::structured::path;
+//! use std::sync::Arc;
+//!
+//! let g = path(8);
+//! let plan = Arc::new(TraversalPlan::build(&g, EngineConfig::dgx2(2, 1))?);
+//! let mut session = plan.session();
+//! let first = session.run(0)?;
+//! assert_eq!(first.dist()[7], 7);
+//! let second = session.run(7)?; // same session, buffers reused
+//! assert_eq!(second.dist()[0], 7);
+//! # Ok::<(), Box<dyn std::error::Error>>(())
+//! ```
+//!
+//! # Typed errors instead of panics
+//!
+//! ```
+//! use butterfly_bfs::coordinator::{EngineConfig, PlanError, TraversalPlan};
+//! use butterfly_bfs::graph::gen::structured::path;
+//!
+//! let g = path(3); // 3 vertices cannot host a 4-column grid
+//! let err = TraversalPlan::build(&g, EngineConfig::dgx2_2d(2, 4)).unwrap_err();
+//! assert!(matches!(err, PlanError::GridTooLarge { .. }));
+//! ```
+
+use super::backend::ComputeBackend;
+use super::config::{EngineConfig, PartitionMode};
+use super::session::QuerySession;
+use crate::comm::fold_expand::FoldExpand;
+use crate::comm::pattern::{CommPattern, Schedule};
+use crate::graph::csr::{Csr, CsrSlab};
+use crate::partition::one_d::partition_1d;
+use crate::partition::{Partition2D, PartitionSpec};
+use std::sync::Arc;
+
+/// Why a [`TraversalPlan`] could not be built. Every invalid engine
+/// layout surfaces as one of these values — never a panic or a
+/// `process::exit` — so services can report configuration mistakes to
+/// their callers.
+#[derive(Clone, Debug, PartialEq, Eq)]
+pub enum PlanError {
+    /// `num_nodes` was zero.
+    NoNodes,
+    /// The graph has no vertices.
+    EmptyGraph,
+    /// 1D mode: more compute nodes than vertices — some slabs would own
+    /// nothing.
+    TooManyNodes {
+        /// Requested node count.
+        num_nodes: usize,
+        /// Vertices available to partition.
+        num_vertices: usize,
+    },
+    /// 2D mode: `rows * cols` does not equal `num_nodes`.
+    GridMismatch {
+        /// Requested grid rows.
+        rows: u32,
+        /// Requested grid columns.
+        cols: u32,
+        /// Configured node count the grid must cover.
+        num_nodes: usize,
+    },
+    /// 2D mode: a grid axis exceeds the vertex count, which would leave
+    /// empty (degenerate) row or column cuts.
+    GridTooLarge {
+        /// Requested grid rows.
+        rows: u32,
+        /// Requested grid columns.
+        cols: u32,
+        /// Vertices available along each axis.
+        num_vertices: usize,
+    },
+    /// Session construction: the caller supplied a backend vector whose
+    /// length differs from the node count.
+    BackendMismatch {
+        /// Supplied backend count.
+        backends: usize,
+        /// Configured node count.
+        num_nodes: usize,
+    },
+    /// The generated synchronization schedule failed validation — an
+    /// internal invariant violation in a
+    /// [`CommPattern`](crate::comm::CommPattern) implementation.
+    InvalidSchedule(String),
+}
+
+impl std::fmt::Display for PlanError {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        match self {
+            PlanError::NoNodes => write!(f, "engine needs at least one compute node"),
+            PlanError::EmptyGraph => {
+                write!(f, "cannot plan a traversal over a graph with no vertices")
+            }
+            PlanError::TooManyNodes { num_nodes, num_vertices } => write!(
+                f,
+                "{num_nodes} compute nodes exceed the graph's {num_vertices} vertices \
+                 (1D slabs would be empty)"
+            ),
+            PlanError::GridMismatch { rows, cols, num_nodes } => write!(
+                f,
+                "grid {rows}x{cols} does not cover num_nodes={num_nodes} \
+                 (need rows*cols == num_nodes)"
+            ),
+            PlanError::GridTooLarge { rows, cols, num_vertices } => write!(
+                f,
+                "grid {rows}x{cols} has an axis larger than the graph's \
+                 {num_vertices} vertices"
+            ),
+            PlanError::BackendMismatch { backends, num_nodes } => write!(
+                f,
+                "{backends} backends supplied for {num_nodes} compute nodes \
+                 (need exactly one per node)"
+            ),
+            PlanError::InvalidSchedule(msg) => {
+                write!(f, "generated synchronization schedule invalid: {msg}")
+            }
+        }
+    }
+}
+
+impl std::error::Error for PlanError {}
+
+/// The immutable, shareable artifacts of a traversal engine: partition,
+/// per-node adjacency slabs, synchronization schedule, and configuration
+/// (device + interconnect models included).
+///
+/// A plan holds no per-query state whatsoever — two threads holding the
+/// same `Arc<TraversalPlan>` can each [`session()`](Self::session) and
+/// run queries fully independently; results are bit-identical to running
+/// the same roots sequentially (asserted in `tests/concurrent_queries.rs`).
+#[derive(Clone, Debug)]
+pub struct TraversalPlan {
+    config: EngineConfig,
+    partition: PartitionSpec,
+    schedule: Arc<Schedule>,
+    /// Leading schedule rounds that are the 2D fold phase (0 in 1D mode;
+    /// the remaining rounds are the expand phase).
+    fold_rounds: usize,
+    slabs: Vec<Arc<CsrSlab>>,
+    num_vertices: usize,
+    graph_edges: u64,
+}
+
+impl TraversalPlan {
+    /// Partition `g` across `config.num_nodes` simulated devices and
+    /// generate the matching synchronization schedule.
+    ///
+    /// This is the only expensive step of the plan/session API: it walks
+    /// the CSR once per partition axis and materializes the per-node
+    /// slabs. Every layout mistake is a typed [`PlanError`].
+    pub fn build(g: &Csr, config: EngineConfig) -> Result<Self, PlanError> {
+        let n = g.num_vertices();
+        if config.num_nodes == 0 {
+            return Err(PlanError::NoNodes);
+        }
+        if n == 0 {
+            return Err(PlanError::EmptyGraph);
+        }
+        // The multi-pattern seam: each mode yields its (layout, schedule)
+        // pair; everything downstream is mode-agnostic.
+        let (partition, slabs, schedule, fold_rounds) = match config.partition {
+            PartitionMode::OneD => {
+                if config.num_nodes > n {
+                    return Err(PlanError::TooManyNodes {
+                        num_nodes: config.num_nodes,
+                        num_vertices: n,
+                    });
+                }
+                let p = partition_1d(g, config.num_nodes);
+                let slabs = p.slabs(g);
+                let schedule = config.pattern.build().schedule(config.num_nodes as u32);
+                (PartitionSpec::OneD(p), slabs, schedule, 0)
+            }
+            PartitionMode::TwoD { rows, cols } => {
+                if rows as usize * cols as usize != config.num_nodes {
+                    return Err(PlanError::GridMismatch {
+                        rows,
+                        cols,
+                        num_nodes: config.num_nodes,
+                    });
+                }
+                if rows as usize > n || cols as usize > n {
+                    return Err(PlanError::GridTooLarge { rows, cols, num_vertices: n });
+                }
+                let p = Partition2D::new(g, rows, cols);
+                let slabs = p.block_slabs(g);
+                let fe = FoldExpand::new(rows, cols);
+                let schedule = fe.schedule(config.num_nodes as u32);
+                (PartitionSpec::TwoD(p), slabs, schedule, fe.fold_rounds())
+            }
+        };
+        schedule.validate().map_err(PlanError::InvalidSchedule)?;
+        Ok(Self {
+            config,
+            partition,
+            schedule: Arc::new(schedule),
+            fold_rounds,
+            slabs: slabs.into_iter().map(Arc::new).collect(),
+            num_vertices: n,
+            graph_edges: g.num_edges(),
+        })
+    }
+
+    /// Open a query session with the native CSR backend on every node.
+    ///
+    /// Sessions are cheap relative to the plan (per-query distance arrays
+    /// and queues; the slabs and schedule are shared by reference) and
+    /// reusable: run any number of queries back to back, or call
+    /// [`QuerySession::reset`] to drop result state while keeping the
+    /// buffers.
+    pub fn session(&self) -> QuerySession {
+        QuerySession::with_native_backends(self)
+    }
+
+    /// Open a session with caller-supplied per-node backends (e.g. the
+    /// XLA/PJRT backend from `runtime::`). Fails with
+    /// [`PlanError::BackendMismatch`] unless there is exactly one backend
+    /// per node.
+    pub fn session_with_backends(
+        &self,
+        backends: Vec<Box<dyn ComputeBackend>>,
+    ) -> Result<QuerySession, PlanError> {
+        if backends.len() != self.config.num_nodes {
+            return Err(PlanError::BackendMismatch {
+                backends: backends.len(),
+                num_nodes: self.config.num_nodes,
+            });
+        }
+        Ok(QuerySession::from_parts(self, backends))
+    }
+
+    /// Engine configuration the plan was built with.
+    pub fn config(&self) -> &EngineConfig {
+        &self.config
+    }
+
+    /// The partition in use (1D row slabs or the 2D grid).
+    pub fn partition(&self) -> &PartitionSpec {
+        &self.partition
+    }
+
+    /// The synchronization schedule every session executes per level.
+    pub fn schedule(&self) -> &Schedule {
+        &self.schedule
+    }
+
+    /// Vertex count of the planned graph.
+    pub fn num_vertices(&self) -> usize {
+        self.num_vertices
+    }
+
+    /// Arc count of the planned graph.
+    pub fn graph_edges(&self) -> u64 {
+        self.graph_edges
+    }
+
+    /// Number of simulated compute nodes.
+    pub fn num_nodes(&self) -> usize {
+        self.config.num_nodes
+    }
+
+    /// Shared handle to the schedule (session construction).
+    pub(crate) fn schedule_arc(&self) -> Arc<Schedule> {
+        Arc::clone(&self.schedule)
+    }
+
+    /// Leading fold rounds of the schedule (0 in 1D mode).
+    pub(crate) fn fold_rounds(&self) -> usize {
+        self.fold_rounds
+    }
+
+    /// Shared per-node slabs (session construction).
+    pub(crate) fn slabs(&self) -> &[Arc<CsrSlab>] {
+        &self.slabs
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::coordinator::config::PatternKind;
+    use crate::graph::gen::structured::path;
+    use crate::graph::gen::urand::uniform_random;
+
+    #[test]
+    fn build_validates_layouts() {
+        let (g, _) = uniform_random(50, 4, 1);
+        assert!(TraversalPlan::build(&g, EngineConfig::dgx2(8, 2)).is_ok());
+        assert!(TraversalPlan::build(&g, EngineConfig::dgx2_2d(5, 10)).is_ok());
+        let err = TraversalPlan::build(&g, EngineConfig::dgx2(0, 1)).unwrap_err();
+        assert_eq!(err, PlanError::NoNodes);
+        let err = TraversalPlan::build(&g, EngineConfig::dgx2(51, 1)).unwrap_err();
+        assert_eq!(err, PlanError::TooManyNodes { num_nodes: 51, num_vertices: 50 });
+    }
+
+    #[test]
+    fn build_rejects_degenerate_grids() {
+        let g = path(3);
+        let err = TraversalPlan::build(&g, EngineConfig::dgx2_2d(2, 4)).unwrap_err();
+        assert_eq!(err, PlanError::GridTooLarge { rows: 2, cols: 4, num_vertices: 3 });
+        let err = TraversalPlan::build(&g, EngineConfig::dgx2_2d(4, 2)).unwrap_err();
+        assert_eq!(err, PlanError::GridTooLarge { rows: 4, cols: 2, num_vertices: 3 });
+        // A mismatched grid is a distinct error from an oversized one.
+        let cfg = EngineConfig {
+            partition: PartitionMode::TwoD { rows: 2, cols: 2 },
+            ..EngineConfig::dgx2(6, 1)
+        };
+        let (big, _) = uniform_random(40, 4, 2);
+        let err = TraversalPlan::build(&big, cfg).unwrap_err();
+        assert_eq!(err, PlanError::GridMismatch { rows: 2, cols: 2, num_nodes: 6 });
+    }
+
+    #[test]
+    fn build_rejects_empty_graph() {
+        let g = Csr::from_edges(0, &[]);
+        let err = TraversalPlan::build(&g, EngineConfig::dgx2(1, 1)).unwrap_err();
+        assert_eq!(err, PlanError::EmptyGraph);
+    }
+
+    #[test]
+    fn plan_accessors() {
+        let (g, _) = uniform_random(120, 4, 9);
+        let plan = TraversalPlan::build(&g, EngineConfig::dgx2(4, 2)).unwrap();
+        assert_eq!(plan.num_vertices(), 120);
+        assert_eq!(plan.num_nodes(), 4);
+        assert_eq!(plan.graph_edges(), g.num_edges());
+        assert!(plan.partition().as_one_d().is_some());
+        assert!(matches!(plan.config().pattern, PatternKind::Butterfly { fanout: 2 }));
+        assert!(plan.schedule().depth() >= 1);
+        assert_eq!(plan.fold_rounds(), 0);
+        let plan2 = TraversalPlan::build(&g, EngineConfig::dgx2_2d(2, 3)).unwrap();
+        assert!(plan2.partition().as_two_d().is_some());
+        assert!(plan2.fold_rounds() >= 1);
+    }
+
+    #[test]
+    fn errors_display_and_box() {
+        let e: Box<dyn std::error::Error> =
+            Box::new(PlanError::GridMismatch { rows: 3, cols: 3, num_nodes: 8 });
+        let s = e.to_string();
+        assert!(s.contains("3x3") && s.contains("num_nodes=8"), "{s}");
+        assert!(PlanError::NoNodes.to_string().contains("at least one"));
+        assert!(PlanError::InvalidSchedule("boom".into()).to_string().contains("boom"));
+    }
+
+    #[test]
+    fn backend_mismatch_is_typed() {
+        let (g, _) = uniform_random(30, 4, 3);
+        let plan = TraversalPlan::build(&g, EngineConfig::dgx2(4, 1)).unwrap();
+        let err = plan.session_with_backends(Vec::new()).unwrap_err();
+        assert_eq!(err, PlanError::BackendMismatch { backends: 0, num_nodes: 4 });
+    }
+}

@@ -1,0 +1,1661 @@
+//! The mutable half of the engine: [`QuerySession`] plus its typed
+//! results ([`TraversalResult`], [`BatchResult`]) and [`QueryError`].
+//!
+//! A session owns everything one in-flight query needs — per-node
+//! [`ComputeNode`] state (distance arrays, queues, bitmaps), Phase-1
+//! backends and scratch, batched MS-BFS lane state, and the worker pool —
+//! while the expensive artifacts (slabs, schedule, partition) stay in the
+//! shared immutable [`TraversalPlan`]. Any number of sessions over one
+//! plan run concurrently and independently; one session runs any number
+//! of queries back to back, reusing its buffers (a pooled
+//! [`reset`](QuerySession::reset) between queries, never a reallocation
+//! of the per-vertex arrays).
+//!
+//! Each level of a query runs the paper's two strictly separated phases:
+//!
+//! 1. **Traversal** — every compute node expands its owned frontier over
+//!    its adjacency slab (via its [`ComputeBackend`]), discovering
+//!    vertices into its global queue and distance array. With
+//!    `parallel_phase1` set, the per-node steps run on the persistent
+//!    [`ThreadPool`] (the per-node state is disjoint, so pooled results
+//!    are bit-identical to sequential stepping).
+//! 2. **Synchronization** — the plan's schedule rounds execute with
+//!    allgather semantics: each transfer ships the sender's accumulated
+//!    global queue (snapshotted at round start, the paper's
+//!    `CopyFrontier`); receivers dedup against their distance array,
+//!    extend their own global queue (so later rounds relay), and route
+//!    owned vertices into their next local queue.
+//!
+//! The partition mode picks the (layout, schedule) pair at plan build
+//! time: 1D row slabs + butterfly/all-to-all, or the 2D checkerboard +
+//! fold/expand (with per-phase byte/message accounting). The session also
+//! keeps the simulated clock: Phase-1 compute is priced by the
+//! [`DeviceModel`](crate::net::model::DeviceModel) (slowest node wins —
+//! the bulk-synchronous barrier), Phase-2 by the interconnect simulator
+//! with the *actual measured payloads* of every message.
+//!
+//! Results are returned, not scraped: [`QuerySession::run`] hands back a
+//! [`TraversalResult`] that owns its distances and metrics, and
+//! [`QuerySession::run_batch`] a [`BatchResult`] with per-lane distances
+//! — both `Send`, so a service can hand them off while the session moves
+//! on to the next query. Metrics-only hot loops (harness sweeps, bench
+//! timing) use [`QuerySession::run_metrics_only`] /
+//! [`QuerySession::run_batch_metrics_only`] to skip the owned distance
+//! copy. Invalid inputs are values ([`QueryError`]), not panics.
+
+use super::backend::{ComputeBackend, ExpandOutput, NativeCsr};
+use super::config::{DirectionMode, EngineConfig, PartitionMode};
+use super::metrics::{BatchMetrics, LevelMetrics, RunMetrics, SequentialBaseline};
+use super::node::ComputeNode;
+use super::plan::TraversalPlan;
+use crate::bfs::frontier::MaskFrontier;
+use crate::bfs::msbfs::{MsBfsNodeState, MAX_BATCH};
+use crate::bfs::serial::INF;
+use crate::comm::pattern::Schedule;
+use crate::graph::csr::VertexId;
+use crate::net::sim::simulate_schedule;
+use crate::util::threadpool::ThreadPool;
+use std::sync::Arc;
+
+/// Why a query could not run. Every invalid input to
+/// [`QuerySession::run`] / [`QuerySession::run_batch`] surfaces as one of
+/// these values — never a panic.
+#[derive(Clone, Debug, PartialEq, Eq)]
+pub enum QueryError {
+    /// The requested root is not a vertex of the planned graph.
+    RootOutOfRange {
+        /// The offending root.
+        root: VertexId,
+        /// Vertices in the planned graph.
+        num_vertices: usize,
+    },
+    /// `run_batch` was called with no roots.
+    EmptyBatch,
+    /// `run_batch` was called with more roots than lanes. Duplicate roots
+    /// are *not* an error — each occupies its own lane — but the total
+    /// width is capped at [`MAX_BATCH`].
+    BatchTooWide {
+        /// Requested batch width.
+        got: usize,
+        /// The lane limit ([`MAX_BATCH`]).
+        max: usize,
+    },
+}
+
+impl std::fmt::Display for QueryError {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        match self {
+            QueryError::RootOutOfRange { root, num_vertices } => {
+                write!(f, "root {root} out of range for a {num_vertices}-vertex graph")
+            }
+            QueryError::EmptyBatch => write!(f, "batch contains no roots"),
+            QueryError::BatchTooWide { got, max } => {
+                write!(f, "batch of {got} roots exceeds the {max}-lane limit")
+            }
+        }
+    }
+}
+
+impl std::error::Error for QueryError {}
+
+/// Outcome of one single-root traversal: the distances and metrics are
+/// *owned* by the result (no post-hoc scraping from the engine), so the
+/// session is immediately free for the next query.
+#[derive(Clone, Debug)]
+pub struct TraversalResult {
+    root: VertexId,
+    dist: Vec<u32>,
+    metrics: RunMetrics,
+}
+
+impl TraversalResult {
+    /// The root this traversal started from.
+    pub fn root(&self) -> VertexId {
+        self.root
+    }
+
+    /// Distance of every vertex from the root ([`INF`] = unreachable).
+    pub fn dist(&self) -> &[u32] {
+        &self.dist
+    }
+
+    /// Consume the result, keeping only the distance array.
+    pub fn into_dist(self) -> Vec<u32> {
+        self.dist
+    }
+
+    /// Number of vertices reached (root included).
+    pub fn reached(&self) -> u64 {
+        self.metrics.reached
+    }
+
+    /// Number of BFS levels.
+    pub fn depth(&self) -> usize {
+        self.metrics.depth()
+    }
+
+    /// Full per-level metrics of the traversal.
+    pub fn metrics(&self) -> &RunMetrics {
+        &self.metrics
+    }
+
+    /// Consume the result, keeping only the metrics.
+    pub fn into_metrics(self) -> RunMetrics {
+        self.metrics
+    }
+}
+
+/// Outcome of one batched multi-source traversal: per-lane distances
+/// (lane `i` corresponds to `roots()[i]`) plus the shared batch metrics.
+#[derive(Clone, Debug)]
+pub struct BatchResult {
+    roots: Vec<VertexId>,
+    num_vertices: usize,
+    /// Lane-major distances: `dist[lane * num_vertices + v]`.
+    dist: Vec<u32>,
+    metrics: BatchMetrics,
+}
+
+impl BatchResult {
+    /// The batch's roots, in lane order.
+    pub fn roots(&self) -> &[VertexId] {
+        &self.roots
+    }
+
+    /// Number of lanes in the batch.
+    pub fn num_roots(&self) -> usize {
+        self.roots.len()
+    }
+
+    /// Distance array of lane `lane` (the traversal rooted at
+    /// `roots()[lane]`).
+    ///
+    /// # Panics
+    ///
+    /// Like slice indexing, panics when `lane >= num_roots()`; use
+    /// [`Self::lane_dist`] for a checked lookup.
+    pub fn dist(&self, lane: usize) -> &[u32] {
+        match self.lane_dist(lane) {
+            Some(d) => d,
+            None => panic!(
+                "lane {lane} out of range for a {}-root batch",
+                self.roots.len()
+            ),
+        }
+    }
+
+    /// Checked variant of [`Self::dist`].
+    pub fn lane_dist(&self, lane: usize) -> Option<&[u32]> {
+        if lane >= self.roots.len() {
+            return None;
+        }
+        Some(&self.dist[lane * self.num_vertices..(lane + 1) * self.num_vertices])
+    }
+
+    /// Total `(root, vertex)` pairs reached.
+    pub fn reached_pairs(&self) -> u64 {
+        self.metrics.reached_pairs
+    }
+
+    /// Number of levels (the max depth over the batch's lanes).
+    pub fn depth(&self) -> usize {
+        self.metrics.depth()
+    }
+
+    /// Full per-level metrics of the batch.
+    pub fn metrics(&self) -> &BatchMetrics {
+        &self.metrics
+    }
+
+    /// Consume the result, keeping only the metrics.
+    pub fn into_metrics(self) -> BatchMetrics {
+        self.metrics
+    }
+}
+
+/// One query's worth of mutable engine state over a shared
+/// [`TraversalPlan`] — see the [module docs](self) for the phase
+/// structure.
+///
+/// ```
+/// use butterfly_bfs::coordinator::{EngineConfig, QueryError, TraversalPlan};
+/// use butterfly_bfs::graph::gen::structured::path;
+///
+/// let g = path(6);
+/// let plan = TraversalPlan::build(&g, EngineConfig::dgx2(2, 1))?;
+/// let mut session = plan.session();
+/// // Invalid input is a typed error, not a panic:
+/// assert!(matches!(session.run(99).unwrap_err(), QueryError::RootOutOfRange { .. }));
+/// // Results own their distances:
+/// let batch = session.run_batch(&[0, 5])?;
+/// assert_eq!(batch.dist(1)[0], 5);
+/// # Ok::<(), Box<dyn std::error::Error>>(())
+/// ```
+pub struct QuerySession {
+    config: EngineConfig,
+    schedule: Arc<Schedule>,
+    /// Leading schedule rounds that are the 2D fold phase (0 in 1D mode).
+    fold_rounds: usize,
+    num_vertices: usize,
+    graph_edges: u64,
+    nodes: Vec<ComputeNode>,
+    backends: Vec<Box<dyn ComputeBackend>>,
+    scratch: Vec<ExpandOutput>,
+    /// Persistent worker pool for Phase-1 stepping — created lazily on
+    /// the first query that wants it (`parallel_phase1` set, more than
+    /// one node), so sequential sessions never spawn threads.
+    pool: Option<ThreadPool>,
+    /// Pooled per-node MS-BFS state, reset (not reallocated) per batch.
+    batch_states: Vec<MsBfsNodeState>,
+    /// Lane count of the most recent batch.
+    batch_width: usize,
+}
+
+impl QuerySession {
+    /// Session with the native CSR backend on every node
+    /// ([`TraversalPlan::session`]).
+    pub(crate) fn with_native_backends(plan: &TraversalPlan) -> Self {
+        let backends: Vec<Box<dyn ComputeBackend>> = (0..plan.num_nodes())
+            .map(|_| Box::new(NativeCsr::new(plan.config().use_lrb)) as Box<dyn ComputeBackend>)
+            .collect();
+        Self::from_parts(plan, backends)
+    }
+
+    /// Session with caller-supplied backends; the count was validated by
+    /// [`TraversalPlan::session_with_backends`].
+    pub(crate) fn from_parts(
+        plan: &TraversalPlan,
+        backends: Vec<Box<dyn ComputeBackend>>,
+    ) -> Self {
+        debug_assert_eq!(backends.len(), plan.num_nodes());
+        let nodes: Vec<ComputeNode> = plan
+            .slabs()
+            .iter()
+            .enumerate()
+            .map(|(i, slab)| {
+                ComputeNode::from_shared(i as u32, Arc::clone(slab), plan.num_vertices())
+            })
+            .collect();
+        let scratch = (0..plan.num_nodes()).map(|_| ExpandOutput::default()).collect();
+        Self {
+            config: plan.config().clone(),
+            schedule: plan.schedule_arc(),
+            fold_rounds: plan.fold_rounds(),
+            num_vertices: plan.num_vertices(),
+            graph_edges: plan.graph_edges(),
+            nodes,
+            backends,
+            scratch,
+            pool: None,
+            batch_states: Vec::new(),
+            batch_width: 0,
+        }
+    }
+
+    /// Engine configuration (shared with the plan).
+    pub fn config(&self) -> &EngineConfig {
+        &self.config
+    }
+
+    /// The synchronization schedule this session executes per level.
+    pub fn schedule(&self) -> &Schedule {
+        &self.schedule
+    }
+
+    /// Vertex count of the planned graph.
+    pub fn num_vertices(&self) -> usize {
+        self.num_vertices
+    }
+
+    /// Clear all per-query state (single-root and batched) while keeping
+    /// every buffer allocation — the pooled-reuse path for long-lived
+    /// sessions. Calling [`Self::run`] / [`Self::run_batch`] resets
+    /// implicitly, so an explicit `reset` is only needed to drop state
+    /// early.
+    pub fn reset(&mut self) {
+        for n in &mut self.nodes {
+            n.reset();
+        }
+        let bw = self.batch_width;
+        for st in &mut self.batch_states {
+            st.reset(bw);
+        }
+    }
+
+    /// Spawn the persistent worker pool if this session wants one and it
+    /// does not exist yet.
+    fn ensure_pool(&mut self) {
+        if self.pool.is_none() && self.config.parallel_phase1 && self.config.num_nodes > 1 {
+            let workers = std::thread::available_parallelism()
+                .map(|n| n.get())
+                .unwrap_or(4)
+                .min(self.config.num_nodes);
+            self.pool = Some(ThreadPool::new(workers));
+        }
+    }
+
+    /// Distinct active frontier vertices across the machine. In 1D each
+    /// owned vertex is queued on exactly one node; in 2D every node of a
+    /// processor row queues the row's vertices (each expands its own
+    /// column block), so count one column representative per row.
+    fn frontier_len(&self) -> u64 {
+        match self.config.partition {
+            PartitionMode::OneD => self.nodes.iter().map(|n| n.q_local.len() as u64).sum(),
+            PartitionMode::TwoD { cols, .. } => self
+                .nodes
+                .iter()
+                .step_by(cols as usize)
+                .map(|n| n.q_local.len() as u64)
+                .sum(),
+        }
+    }
+
+    /// Batched analog of [`Self::frontier_len`].
+    fn batch_frontier_len(&self) -> u64 {
+        match self.config.partition {
+            PartitionMode::OneD => self
+                .batch_states
+                .iter()
+                .map(|s| s.q_local.len() as u64)
+                .sum(),
+            PartitionMode::TwoD { cols, .. } => self
+                .batch_states
+                .iter()
+                .step_by(cols as usize)
+                .map(|s| s.q_local.len() as u64)
+                .sum(),
+        }
+    }
+
+    /// 2D mode: the (fold messages, fold bytes, expand messages, expand
+    /// bytes) split of one level's payload matrix; `None` in 1D mode.
+    fn phase_split(&self, payloads: &[Vec<u64>]) -> Option<(u64, u64, u64, u64)> {
+        if !matches!(self.config.partition, PartitionMode::TwoD { .. }) {
+            return None;
+        }
+        let (fold, expand) = payloads.split_at(self.fold_rounds.min(payloads.len()));
+        let msgs = |rs: &[Vec<u64>]| rs.iter().map(|r| r.len() as u64).sum::<u64>();
+        let bytes = |rs: &[Vec<u64>]| rs.iter().flatten().copied().sum::<u64>();
+        Some((msgs(fold), bytes(fold), msgs(expand), bytes(expand)))
+    }
+
+    /// Run a full traversal from `root`. The returned [`TraversalResult`]
+    /// owns its distances and metrics; the session's buffers are reused
+    /// by the next query.
+    pub fn run(&mut self, root: VertexId) -> Result<TraversalResult, QueryError> {
+        let metrics = self.run_inner(root)?;
+        Ok(TraversalResult {
+            root,
+            dist: self.nodes[0].d_local.clone(),
+            metrics,
+        })
+    }
+
+    /// Metrics-only variant of [`Self::run`]: identical traversal, but
+    /// skips materializing the owned distance array — the right call for
+    /// harness/bench hot loops that only consume the simulated clock and
+    /// counters (one `O(V)` copy per query saved).
+    pub fn run_metrics_only(&mut self, root: VertexId) -> Result<RunMetrics, QueryError> {
+        self.run_inner(root)
+    }
+
+    fn run_inner(&mut self, root: VertexId) -> Result<RunMetrics, QueryError> {
+        if root as usize >= self.num_vertices {
+            return Err(QueryError::RootOutOfRange { root, num_vertices: self.num_vertices });
+        }
+        let t0 = std::time::Instant::now();
+        self.ensure_pool();
+        for n in &mut self.nodes {
+            n.init_root(root);
+        }
+        let mut metrics = RunMetrics {
+            graph_edges: self.graph_edges,
+            ..Default::default()
+        };
+        let mut level = 0u32;
+        // Direction-optimizing state (global statistics — the leader
+        // computes these from per-node counts each level).
+        let mut bottom_up = false;
+        let mut prev_frontier = 0u64;
+        let mut m_unexplored = self.graph_edges;
+        loop {
+            let frontier = self.frontier_len();
+            if frontier == 0 {
+                break;
+            }
+            // ---- Direction choice (contribution 3: independent of sync) ----
+            match self.config.direction {
+                DirectionMode::TopDown => {}
+                DirectionMode::BottomUp => bottom_up = true,
+                DirectionMode::DirOpt { alpha, beta } => {
+                    let m_frontier: u64 = self
+                        .nodes
+                        .iter()
+                        .flat_map(|n| n.q_local.iter().map(|&v| n.slab.degree_global(v) as u64))
+                        .sum();
+                    let growing = frontier > prev_frontier;
+                    if !bottom_up && alpha > 0 && growing && m_frontier > m_unexplored / alpha {
+                        bottom_up = true;
+                    } else if bottom_up
+                        && beta > 0
+                        && !growing
+                        && frontier < (self.num_vertices as u64) / beta
+                    {
+                        bottom_up = false;
+                    }
+                    prev_frontier = frontier;
+                }
+            }
+            // ---- Phase 1: traversal ----
+            self.phase1(level, bottom_up);
+            let edges: u64 = self.nodes.iter().map(|n| n.edges_this_level).sum();
+            let max_node_edges =
+                self.nodes.iter().map(|n| n.edges_this_level).max().unwrap_or(0);
+            let sim_compute = self.config.device.level_time_dir(max_node_edges, bottom_up);
+
+            // ---- Phase 2: frontier synchronization ----
+            let payloads = self.phase2(level);
+            let comm = simulate_schedule(&self.schedule, &self.config.net, |r, t| {
+                payloads[r][t]
+            });
+
+            // After full coverage, every node's global queue holds the
+            // complete deduped set of this level's discoveries.
+            let discovered = self.nodes[0].q_global.len() as u64;
+            metrics.push_level(
+                level,
+                frontier,
+                edges,
+                max_node_edges,
+                discovered,
+                &comm,
+                sim_compute,
+            );
+            if let Some((fm, fb, em, eb)) = self.phase_split(&payloads) {
+                let l = metrics.levels.last_mut().expect("level just pushed");
+                l.fold_messages = fm;
+                l.fold_bytes = fb;
+                l.expand_messages = em;
+                l.expand_bytes = eb;
+            }
+
+            // Update the DO bookkeeping before queues rotate.
+            if let DirectionMode::DirOpt { .. } = self.config.direction {
+                let next_edges: u64 = self
+                    .nodes
+                    .iter()
+                    .flat_map(|n| {
+                        n.q_local_next.iter().map(|&v| n.slab.degree_global(v) as u64)
+                    })
+                    .sum();
+                m_unexplored = m_unexplored.saturating_sub(next_edges);
+            }
+            for n in &mut self.nodes {
+                n.swap_queues();
+            }
+            level += 1;
+        }
+        metrics.wall_seconds = t0.elapsed().as_secs_f64();
+        metrics.reached = self.nodes[0]
+            .d_local
+            .iter()
+            .filter(|&&d| d != INF)
+            .count() as u64;
+        Ok(metrics)
+    }
+
+    /// Phase 1: expand every node's owned frontier (top-down) or scan its
+    /// owned unvisited vertices against the full frontier (bottom-up).
+    /// Discoveries are routed into global/local queues (Alg. 2's inner
+    /// loop). With the pool present, the (node, backend, scratch) triples
+    /// step on persistent workers — they are disjoint, so pooled results
+    /// are bit-identical to sequential stepping.
+    fn phase1(&mut self, level: u32, bottom_up: bool) {
+        if let Some(pool) = &self.pool {
+            let count = self.nodes.len();
+            let nodes = SendPtr(self.nodes.as_mut_ptr());
+            let backends = SendPtr(self.backends.as_mut_ptr());
+            let scratch = SendPtr(self.scratch.as_mut_ptr());
+            pool.run_indexed(count, |i| {
+                // SAFETY: `run_indexed` invokes each index exactly once
+                // and blocks until every job finished, so each `&mut`
+                // derived from index `i` aliases nothing and outlives no
+                // borrow.
+                let node = unsafe { &mut *nodes.at(i) };
+                let backend = unsafe { &mut *backends.at(i) };
+                let out = unsafe { &mut *scratch.at(i) };
+                expand_node(node, backend.as_mut(), out, bottom_up);
+            });
+        } else {
+            for ((node, backend), out) in self
+                .nodes
+                .iter_mut()
+                .zip(self.backends.iter_mut())
+                .zip(self.scratch.iter_mut())
+            {
+                expand_node(node, backend.as_mut(), out, bottom_up);
+            }
+        }
+        // Route discoveries (cheap, sequential: O(discovered)).
+        for (node, out) in self.nodes.iter_mut().zip(self.scratch.iter()) {
+            node.edges_this_level = out.edges_examined;
+            for &v in &out.discovered {
+                // Backend already marked `visited`; record queues+distance.
+                node.d_local[v as usize] = level + 1;
+                node.q_global.push(v);
+                node.q_global_bits.set(v);
+                if node.owns(v) {
+                    node.q_local_next.push(v);
+                }
+            }
+        }
+    }
+
+    /// Phase 2: execute the synchronization schedule. Returns per-round
+    /// per-transfer payload byte sizes for the interconnect simulator.
+    fn phase2(&mut self, level: u32) -> Vec<Vec<u64>> {
+        // The schedule is plan-owned and immutable; clone the handle so
+        // iterating rounds never borrows `self` (nodes mutate freely).
+        let schedule = Arc::clone(&self.schedule);
+        let encoding = self.config.payload;
+        let nv = self.num_vertices;
+        let words = nv.div_ceil(64);
+        // Dense/sparse dispatch threshold (§Perf optimization 1): word-wise
+        // bitmap merge costs O(V/64) per transfer; entry-wise costs
+        // O(queue). Cross-over at queue ≈ V/16 entries (4 words of queue
+        // per bitmap word, measured on the microbench).
+        let dense_threshold = (nv / 16).max(64);
+        let mut payloads = Vec::with_capacity(schedule.rounds.len());
+        // `CopyFrontier` semantics: transfers in a round see round-start
+        // state. Queues are frozen by snapshotting *lengths* (they only
+        // grow); bitmaps by copying words into a flat scratch buffer.
+        let mut bit_snap: Vec<u64> = Vec::new();
+        for round in &schedule.rounds {
+            let snap_len: Vec<usize> =
+                self.nodes.iter().map(|n| n.q_global.len()).collect();
+            let any_dense = snap_len.iter().any(|&l| l >= dense_threshold);
+            if any_dense {
+                bit_snap.clear();
+                bit_snap.reserve(words * self.nodes.len());
+                for n in &self.nodes {
+                    bit_snap.extend_from_slice(n.q_global_bits.words());
+                }
+            }
+            let mut round_payloads = Vec::with_capacity(round.len());
+            for t in round {
+                let src = t.src as usize;
+                let dst = t.dst as usize;
+                let take = snap_len[src];
+                round_payloads.push(encoding.bytes(take as u64, nv));
+                if take >= dense_threshold {
+                    // Dense path: 64-way duplicate rejection.
+                    let src_words = &bit_snap[src * words..(src + 1) * words];
+                    self.nodes[dst].merge_bits(src_words, level);
+                } else {
+                    // Sparse path: entry-wise merge of the frozen prefix.
+                    let (sender, receiver) = if src < dst {
+                        let (lo, hi) = self.nodes.split_at_mut(dst);
+                        (&lo[src], &mut hi[0])
+                    } else {
+                        let (lo, hi) = self.nodes.split_at_mut(src);
+                        (&hi[0] as &ComputeNode, &mut lo[dst])
+                    };
+                    for &v in &sender.q_global[..take] {
+                        receiver.discover(v, level);
+                    }
+                }
+            }
+            payloads.push(round_payloads);
+        }
+        payloads
+    }
+
+    /// Run a batched multi-source BFS: up to [`MAX_BATCH`] roots advance
+    /// in lock-step, one exchange per level serving the whole batch (the
+    /// MS-BFS bit-parallel formulation — see [`crate::bfs::msbfs`]). The
+    /// plan's schedule, partition, and slabs are reused as-is; payloads
+    /// are priced by the negotiated mask-delta encoding
+    /// ([`crate::bfs::msbfs::mask_delta_bytes`]) regardless of the
+    /// configured single-root encoding, because the exchange genuinely
+    /// ships `(vertex, lane-mask)` deltas.
+    ///
+    /// The returned [`BatchResult`] owns every lane's distances;
+    /// [`Self::assert_batch_agreement`] checks the cross-node correctness
+    /// invariant. Duplicate roots are allowed (independent lanes).
+    pub fn run_batch(&mut self, roots: &[VertexId]) -> Result<BatchResult, QueryError> {
+        let metrics = self.run_batch_inner(roots)?;
+        Ok(BatchResult {
+            roots: roots.to_vec(),
+            num_vertices: self.num_vertices,
+            dist: self.batch_states[0].dist.clone(),
+            metrics,
+        })
+    }
+
+    /// Metrics-only variant of [`Self::run_batch`]: identical traversal,
+    /// but skips materializing the owned `b·V` lane-major distance copy.
+    pub fn run_batch_metrics_only(
+        &mut self,
+        roots: &[VertexId],
+    ) -> Result<BatchMetrics, QueryError> {
+        self.run_batch_inner(roots)
+    }
+
+    fn run_batch_inner(&mut self, roots: &[VertexId]) -> Result<BatchMetrics, QueryError> {
+        if roots.is_empty() {
+            return Err(QueryError::EmptyBatch);
+        }
+        if roots.len() > MAX_BATCH {
+            return Err(QueryError::BatchTooWide { got: roots.len(), max: MAX_BATCH });
+        }
+        for &r in roots {
+            if r as usize >= self.num_vertices {
+                return Err(QueryError::RootOutOfRange {
+                    root: r,
+                    num_vertices: self.num_vertices,
+                });
+            }
+        }
+        let t0 = std::time::Instant::now();
+        let nv = self.num_vertices;
+        let b = roots.len();
+        self.batch_width = b;
+        // Pooled lane state: reset in place (allocations kept) once the
+        // session has run a batch before.
+        if self.batch_states.len() == self.config.num_nodes {
+            for st in &mut self.batch_states {
+                st.reset(b);
+            }
+        } else {
+            self.batch_states = (0..self.config.num_nodes)
+                .map(|_| MsBfsNodeState::new(nv, b))
+                .collect();
+        }
+        // Alg. 2 prologue, batched: every node marks every root's lane
+        // ("All CN set their d"); only the owner enqueues it locally.
+        for (node, st) in self.nodes.iter().zip(self.batch_states.iter_mut()) {
+            for (lane, &r) in roots.iter().enumerate() {
+                let bit = 1u64 << lane;
+                st.seen[r as usize] |= bit;
+                st.dist[lane * nv + r as usize] = 0;
+                if node.owns(r) {
+                    if st.visit[r as usize] == 0 {
+                        st.q_local.push(r);
+                    }
+                    st.visit[r as usize] |= bit;
+                }
+            }
+        }
+        let mut metrics = BatchMetrics {
+            num_roots: b,
+            graph_edges: self.graph_edges,
+            ..Default::default()
+        };
+        self.ensure_pool();
+        let mut level = 0u32;
+        loop {
+            let frontier = self.batch_frontier_len();
+            if frontier == 0 {
+                break;
+            }
+            // ---- Phase 1: every node expands its owned masked frontier;
+            // one adjacency read serves every active lane of the vertex.
+            // The (node, batch-state) pairs are disjoint, so the pool can
+            // step them bulk-synchronously; the per-node work is identical
+            // either way, so pooled results are bit-identical to
+            // sequential stepping.
+            if let Some(pool) = &self.pool {
+                let nodes = &self.nodes;
+                let count = self.batch_states.len();
+                let states = SendPtr(self.batch_states.as_mut_ptr());
+                pool.run_indexed(count, |i| {
+                    // SAFETY: `run_indexed` invokes each index exactly
+                    // once and blocks until every job finished, so the
+                    // `&mut` derived from index `i` aliases nothing and
+                    // outlives no borrow.
+                    let st = unsafe { &mut *states.at(i) };
+                    batch_expand_node(&nodes[i], st, level);
+                });
+            } else {
+                for (node, st) in self.nodes.iter().zip(self.batch_states.iter_mut()) {
+                    batch_expand_node(node, st, level);
+                }
+            }
+            let edges: u64 = self.batch_states.iter().map(|s| s.edges_this_level).sum();
+            let max_node_edges = self
+                .batch_states
+                .iter()
+                .map(|s| s.edges_this_level)
+                .max()
+                .unwrap_or(0);
+            let sim_compute = self.config.device.level_time_dir(max_node_edges, false);
+
+            // ---- Phase 2: one exchange for the whole batch.
+            let payloads = self.batch_phase2(level);
+            let comm = simulate_schedule(&self.schedule, &self.config.net, |r, t| {
+                payloads[r][t]
+            });
+
+            // After full coverage every node's delta list holds the
+            // complete set of this level's (vertex, lane) discoveries.
+            let discovered: u64 = self.batch_states[0]
+                .delta
+                .entries()
+                .iter()
+                .map(|&(_, m)| m.count_ones() as u64)
+                .sum();
+            let (fm, fb, em, eb) = self.phase_split(&payloads).unwrap_or_default();
+            metrics.levels.push(LevelMetrics {
+                level,
+                frontier,
+                edges_examined: edges,
+                max_node_edges,
+                discovered,
+                messages: comm.total_messages,
+                bytes: comm.total_bytes,
+                fold_messages: fm,
+                fold_bytes: fb,
+                expand_messages: em,
+                expand_bytes: eb,
+                sim_compute,
+                sim_comm: comm.total(),
+            });
+            metrics.sync_rounds += self.schedule.depth() as u64;
+
+            for st in &mut self.batch_states {
+                st.swap_level();
+            }
+            level += 1;
+        }
+        metrics.wall_seconds = t0.elapsed().as_secs_f64();
+        metrics.reached_pairs = self.batch_states[0]
+            .dist
+            .iter()
+            .filter(|&&d| d != INF)
+            .count() as u64;
+        Ok(metrics)
+    }
+
+    /// Phase 2 of a batched level: execute the synchronization schedule on
+    /// the nodes' `(vertex, mask)` delta lists with `CopyFrontier`
+    /// semantics (transfers in a round see round-start state, frozen by
+    /// snapshotting list lengths — they only grow). Returns per-round
+    /// per-transfer payload byte sizes for the interconnect simulator.
+    ///
+    /// Mirrors [`Self::phase2`]'s dense/sparse dispatch: once a sender's
+    /// frozen prefix passes the `8·V`-byte accounting switchover (where
+    /// [`PayloadEncoding::MaskDelta`](super::config::PayloadEncoding) caps
+    /// the sparse `12·entries` at the dense per-vertex mask array), the
+    /// merge follows the wire format — a word-wise OR over the snapshotted
+    /// masks — instead of replaying entries one by one.
+    fn batch_phase2(&mut self, level: u32) -> Vec<Vec<u64>> {
+        let schedule = Arc::clone(&self.schedule);
+        let nv = self.num_vertices;
+        // Entries at which `12·entries >= 8·V`: the dense mask array is
+        // now the (no larger) negotiated form, so merge it word-wise.
+        let dense_threshold =
+            ((nv as u64 * 8).div_ceil(MaskFrontier::ENTRY_BYTES) as usize).max(1);
+        let mut payloads = Vec::with_capacity(schedule.rounds.len());
+        // Round-start dense snapshots (one V-word lane-mask array per
+        // dense sender), flat like `phase2`'s `bit_snap` — but built
+        // *incrementally*: deltas only grow within a level and the merge
+        // is an idempotent OR, so each round folds in only the entries
+        // appended since the previous round (`mask_done` tracks the
+        // per-node accumulated prefix) instead of replaying from zero.
+        let mut mask_snap: Vec<u64> = Vec::new();
+        let mut mask_done: Vec<usize> = vec![0; self.batch_states.len()];
+        for round in &schedule.rounds {
+            // Snapshot (prefix length, priced bytes) together: the
+            // coalescing statistics are monotone within the level, so
+            // pricing at snapshot time is exact for the frozen prefix.
+            let snap: Vec<(usize, u64)> = self
+                .batch_states
+                .iter()
+                .map(|s| (s.delta.len(), s.delta_payload_bytes(s.delta.len())))
+                .collect();
+            let any_dense = snap.iter().any(|&(l, _)| l >= dense_threshold);
+            if any_dense {
+                if mask_snap.is_empty() {
+                    mask_snap.resize(nv * self.batch_states.len(), 0);
+                }
+                for (k, s) in self.batch_states.iter().enumerate() {
+                    if snap[k].0 >= dense_threshold {
+                        s.delta.accumulate_range(
+                            mask_done[k],
+                            snap[k].0,
+                            &mut mask_snap[k * nv..(k + 1) * nv],
+                        );
+                        mask_done[k] = snap[k].0;
+                    }
+                }
+            }
+            let mut round_payloads = Vec::with_capacity(round.len());
+            for t in round {
+                let src = t.src as usize;
+                let dst = t.dst as usize;
+                let (take, priced) = snap[src];
+                round_payloads.push(priced);
+                let dst_node = &self.nodes[dst];
+                if take >= dense_threshold {
+                    // Dense path: the frozen prefix as per-vertex masks.
+                    let masks = &mask_snap[src * nv..(src + 1) * nv];
+                    let receiver = &mut self.batch_states[dst];
+                    for (v, &m) in masks.iter().enumerate() {
+                        if m != 0 {
+                            receiver.discover(
+                                v as VertexId,
+                                m,
+                                level,
+                                dst_node.owns(v as VertexId),
+                            );
+                        }
+                    }
+                } else {
+                    // Sparse path: entry-wise replay of the frozen prefix.
+                    let (sender, receiver) = if src < dst {
+                        let (lo, hi) = self.batch_states.split_at_mut(dst);
+                        (&lo[src], &mut hi[0])
+                    } else {
+                        let (lo, hi) = self.batch_states.split_at_mut(src);
+                        (&hi[0] as &MsBfsNodeState, &mut lo[dst])
+                    };
+                    for &(v, m) in &sender.delta.entries()[..take] {
+                        receiver.discover(v, m, level, dst_node.owns(v));
+                    }
+                }
+            }
+            payloads.push(round_payloads);
+        }
+        payloads
+    }
+
+    /// Run each root one at a time through [`Self::run`] and accumulate
+    /// the synchronization totals — the baseline [`Self::run_batch`] is
+    /// compared against (used by the CLI `batch --compare`, the
+    /// `msbfs_amortization` bench, the amortization tests, and the
+    /// closeness-centrality example). Fails fast on the first invalid
+    /// root; totals from roots already run are discarded.
+    pub fn sequential_baseline(
+        &mut self,
+        roots: &[VertexId],
+    ) -> Result<SequentialBaseline, QueryError> {
+        let sched_depth = self.schedule.depth() as u64;
+        let mut b = SequentialBaseline::default();
+        for &r in roots {
+            let m = self.run_metrics_only(r)?;
+            b.bytes += m.bytes();
+            b.messages += m.messages();
+            b.sync_rounds += m.depth() as u64 * sched_depth;
+            b.sim_seconds += m.sim_seconds();
+        }
+        Ok(b)
+    }
+
+    /// Node 0's *live* distance array — legacy shim support: the old
+    /// engine exposed this view via `dist()` (INF-filled before the
+    /// first run, reflecting whatever query ran last).
+    pub(crate) fn node0_dist(&self) -> &[u32] {
+        &self.nodes[0].d_local
+    }
+
+    /// Node 0's live lane-major batch distances — legacy shim support
+    /// with the old engine's panic messages.
+    pub(crate) fn node0_batch_dist(&self, lane: usize) -> &[u32] {
+        assert!(
+            !self.batch_states.is_empty(),
+            "run_batch has not been called"
+        );
+        assert!(lane < self.batch_width, "lane {lane} out of range");
+        let nv = self.num_vertices;
+        &self.batch_states[0].dist[lane * nv..(lane + 1) * nv]
+    }
+
+    /// Lane count of the most recent batch (legacy shim support).
+    pub(crate) fn batch_width(&self) -> usize {
+        self.batch_width
+    }
+
+    /// Check that every node ended the last single-root query with an
+    /// identical distance array — the correctness invariant of the
+    /// synchronization pattern.
+    pub fn assert_agreement(&self) -> Result<(), String> {
+        let d0 = &self.nodes[0].d_local;
+        for n in &self.nodes[1..] {
+            if &n.d_local != d0 {
+                let bad = d0
+                    .iter()
+                    .zip(&n.d_local)
+                    .position(|(a, b)| a != b)
+                    .unwrap();
+                return Err(format!(
+                    "node {} disagrees with node 0 at vertex {bad}: {} vs {}",
+                    n.id, n.d_local[bad], d0[bad]
+                ));
+            }
+        }
+        Ok(())
+    }
+
+    /// Check that every node ended the last batch with identical per-lane
+    /// distance arrays — the batched analog of [`Self::assert_agreement`].
+    pub fn assert_batch_agreement(&self) -> Result<(), String> {
+        let Some(first) = self.batch_states.first() else {
+            return Err("run_batch has not been called".to_string());
+        };
+        let nv = self.num_vertices;
+        for (i, st) in self.batch_states.iter().enumerate().skip(1) {
+            if st.dist != first.dist {
+                let bad = first
+                    .dist
+                    .iter()
+                    .zip(&st.dist)
+                    .position(|(a, c)| a != c)
+                    .unwrap();
+                return Err(format!(
+                    "node {i} disagrees with node 0 at lane {} vertex {}: {} vs {}",
+                    bad / nv,
+                    bad % nv,
+                    st.dist[bad],
+                    first.dist[bad]
+                ));
+            }
+        }
+        Ok(())
+    }
+}
+
+/// Raw-pointer transport for handing the pool disjoint `&mut` slots of
+/// parallel vectors (each `run_indexed` index touches exactly one element
+/// of each).
+struct SendPtr<T>(*mut T);
+unsafe impl<T> Send for SendPtr<T> {}
+unsafe impl<T> Sync for SendPtr<T> {}
+
+impl<T> SendPtr<T> {
+    /// Pointer to slot `i`. A method (not a field access) so that
+    /// edition-2021 precise closure capture grabs the `Sync` wrapper
+    /// itself rather than its raw-pointer field (which is neither `Send`
+    /// nor `Sync`, and would poison the pool closure).
+    fn at(&self, i: usize) -> *mut T {
+        // SAFETY of the arithmetic: callers index within the vector the
+        // pointer was taken from (`i < count`).
+        unsafe { self.0.add(i) }
+    }
+}
+
+/// One node's Phase-1 step of a batched level — shared by the pooled and
+/// sequential paths, so the two are bit-identical by construction.
+fn batch_expand_node(node: &ComputeNode, st: &mut MsBfsNodeState, level: u32) {
+    let q = std::mem::take(&mut st.q_local);
+    for &v in &q {
+        let mv = st.visit[v as usize];
+        st.visit[v as usize] = 0;
+        debug_assert!(mv != 0, "frontier vertex {v} with empty mask");
+        st.edges_this_level += node.slab.degree_global(v) as u64;
+        for &u in node.slab.neighbors_global(v) {
+            st.discover(u, mv, level, node.owns(u));
+        }
+    }
+    st.q_local = q; // keep the allocation; cleared at swap
+}
+
+/// One node's Phase-1 step of a single-root level — shared by the pooled
+/// and sequential paths, so the two are bit-identical by construction.
+fn expand_node(
+    node: &mut ComputeNode,
+    backend: &mut dyn ComputeBackend,
+    out: &mut ExpandOutput,
+    bottom_up: bool,
+) {
+    if bottom_up {
+        // The full-frontier bitmap is moved out so the backend can borrow
+        // it alongside the mutable visited bitmap.
+        let frontier_full = std::mem::replace(
+            &mut node.frontier_full,
+            crate::bfs::frontier::Bitmap::new(0),
+        );
+        backend.expand_bottom_up(&node.slab, &frontier_full, &mut node.visited, out);
+        node.frontier_full = frontier_full;
+    } else {
+        // The frontier is moved out so backend gets plain slices.
+        let frontier = std::mem::take(&mut node.q_local);
+        backend.expand(&node.slab, &frontier, &mut node.visited, out);
+        node.q_local = frontier; // restored for metrics/debug; cleared at swap
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::bfs::serial::serial_bfs;
+    use crate::coordinator::config::{PatternKind, PayloadEncoding};
+    use crate::graph::csr::Csr;
+    use crate::graph::gen::kronecker::{kronecker, KroneckerParams};
+    use crate::graph::gen::structured::{grid2d, path, star};
+    use crate::graph::gen::urand::uniform_random;
+
+    fn session_for(g: &Csr, cfg: EngineConfig) -> QuerySession {
+        TraversalPlan::build(g, cfg).expect("valid plan").session()
+    }
+
+    fn check_against_serial(g: &Csr, cfg: EngineConfig, root: VertexId) {
+        let mut session = session_for(g, cfg);
+        let r = session.run(root).unwrap();
+        session.assert_agreement().unwrap();
+        let want = serial_bfs(g, root);
+        assert_eq!(r.dist(), &want[..], "distances match serial");
+        let reached = want.iter().filter(|&&d| d != INF).count() as u64;
+        assert_eq!(r.reached(), reached);
+        assert_eq!(r.root(), root);
+    }
+
+    /// The integer (deterministic) slice of one level's metrics.
+    fn level_key(l: &LevelMetrics) -> (u64, u64, u64, u64, u64, u64, u64) {
+        (
+            l.frontier,
+            l.edges_examined,
+            l.max_node_edges,
+            l.discovered,
+            l.messages,
+            l.bytes,
+            l.fold_bytes + l.expand_bytes,
+        )
+    }
+
+    #[test]
+    fn matches_serial_16_nodes_fanout1_and_4() {
+        let (g, _) = kronecker(KroneckerParams::graph500(11, 8), 31);
+        for fanout in [1, 4] {
+            check_against_serial(&g, EngineConfig::dgx2(16, fanout), 0);
+        }
+    }
+
+    #[test]
+    fn matches_serial_all_patterns() {
+        let (g, _) = uniform_random(900, 8, 77);
+        for pattern in [
+            PatternKind::Butterfly { fanout: 1 },
+            PatternKind::Butterfly { fanout: 2 },
+            PatternKind::Butterfly { fanout: 4 },
+            PatternKind::AllToAllConcurrent,
+            PatternKind::AllToAllIterative,
+        ] {
+            let cfg = EngineConfig {
+                pattern,
+                ..EngineConfig::dgx2(8, 1)
+            };
+            check_against_serial(&g, cfg, 13);
+        }
+    }
+
+    #[test]
+    fn matches_serial_non_power_of_two_nodes() {
+        let (g, _) = uniform_random(1100, 8, 5);
+        for nodes in [3, 5, 9, 13] {
+            check_against_serial(&g, EngineConfig::dgx2(nodes, 1), 1);
+            check_against_serial(&g, EngineConfig::dgx2(nodes, 4), 1);
+        }
+    }
+
+    #[test]
+    fn structured_graphs_all_roots() {
+        let graphs = vec![path(40), star(50), grid2d(6, 8)];
+        for g in &graphs {
+            for root in [0u32, (g.num_vertices() - 1) as u32] {
+                check_against_serial(g, EngineConfig::dgx2(4, 1), root);
+            }
+        }
+    }
+
+    #[test]
+    fn disconnected_graph_unreached_stay_inf() {
+        use crate::graph::builder::GraphBuilder;
+        let mut b = GraphBuilder::new(40);
+        for v in 1..20u32 {
+            b.add_edge(0, v);
+        }
+        b.add_edge(30, 31); // island
+        let (g, _) = b.build_undirected();
+        let mut session = session_for(&g, EngineConfig::dgx2(4, 2));
+        let r = session.run(0).unwrap();
+        assert_eq!(r.reached(), 20);
+        assert_eq!(r.dist()[30], INF);
+        session.assert_agreement().unwrap();
+    }
+
+    #[test]
+    fn single_node_degenerates_to_local_bfs() {
+        let (g, _) = uniform_random(400, 8, 3);
+        let mut session = session_for(&g, EngineConfig::dgx2(1, 1));
+        let r = session.run(0).unwrap();
+        assert_eq!(r.dist(), &serial_bfs(&g, 0)[..]);
+        assert_eq!(r.metrics().messages(), 0, "one node never communicates");
+    }
+
+    #[test]
+    fn parallel_phase1_matches_sequential() {
+        let (g, _) = kronecker(KroneckerParams::graph500(10, 8), 4);
+        let mut seq = session_for(&g, EngineConfig::dgx2(8, 4));
+        let mut par = session_for(
+            &g,
+            EngineConfig {
+                parallel_phase1: true,
+                ..EngineConfig::dgx2(8, 4)
+            },
+        );
+        let rs = seq.run(9).unwrap();
+        let rp = par.run(9).unwrap();
+        assert_eq!(rs.dist(), rp.dist());
+        assert_eq!(rs.metrics().edges_examined(), rp.metrics().edges_examined());
+        assert_eq!(rs.depth(), rp.depth());
+        for (a, b) in rs.metrics().levels.iter().zip(&rp.metrics().levels) {
+            assert_eq!(level_key(a), level_key(b), "level {}", a.level);
+        }
+    }
+
+    #[test]
+    fn pooled_run_bit_identical_to_sequential() {
+        // Satellite acceptance: single-root Phase 1 now steps on the
+        // persistent pool under `parallel_phase1`, and pooled stepping
+        // must reproduce sequential stepping bit for bit — distances and
+        // per-level accounting — across seeded configs in both partition
+        // modes and all direction policies.
+        use crate::util::propcheck::{forall, gen, Config};
+        forall(Config::cases(30), "pooled run == sequential", |rng| {
+            let n = gen::usize_in(rng, 10, 300);
+            let ef = gen::usize_in(rng, 1, 6) as u32;
+            let (g, _) = uniform_random(n, ef, rng.next_u64());
+            let root = rng.next_usize(n) as u32;
+            let base = if rng.next_below(2) == 0 {
+                let nodes = gen::usize_in(rng, 2, 8.min(n));
+                EngineConfig::dgx2(nodes, gen::usize_in(rng, 1, 4) as u32)
+            } else {
+                let rows = gen::usize_in(rng, 1, 4.min(n)) as u32;
+                let cols = gen::usize_in(rng, 1, 4.min(n)) as u32;
+                EngineConfig::dgx2_2d(rows, cols)
+            };
+            let direction = match rng.next_below(3) {
+                0 => DirectionMode::TopDown,
+                1 => DirectionMode::BottomUp,
+                _ => DirectionMode::diropt(),
+            };
+            let cfg = EngineConfig { direction, ..base };
+            let mut seq = session_for(&g, cfg.clone());
+            let mut par =
+                session_for(&g, EngineConfig { parallel_phase1: true, ..cfg });
+            let rs = seq.run(root).unwrap();
+            let rp = par.run(root).unwrap();
+            let mut ok = par.assert_agreement().is_ok()
+                && rs.dist() == rp.dist()
+                && rs.depth() == rp.depth()
+                && rs.reached() == rp.reached();
+            for (a, b) in rs.metrics().levels.iter().zip(&rp.metrics().levels) {
+                ok &= level_key(a) == level_key(b);
+            }
+            (ok, format!("n={n} ef={ef} root={root} {direction:?}"))
+        });
+    }
+
+    #[test]
+    fn metrics_level_structure() {
+        let g = path(12);
+        let mut session = session_for(&g, EngineConfig::dgx2(2, 1));
+        let r = session.run(0).unwrap();
+        let m = r.metrics();
+        // Path of 12 vertices from one end: 11 expansion levels with
+        // nonempty frontiers.
+        assert_eq!(m.depth(), 12);
+        assert!(m.levels.iter().all(|l| l.frontier >= 1));
+        // Graph500 vs honest GTEPS both finite.
+        assert!(m.sim_gteps() > 0.0);
+        assert!(m.sim_seconds() > 0.0);
+    }
+
+    #[test]
+    fn message_count_per_level_matches_schedule() {
+        let (g, _) = uniform_random(600, 8, 8);
+        let plan = TraversalPlan::build(&g, EngineConfig::dgx2(16, 1)).unwrap();
+        let sched_msgs = plan.schedule().total_messages();
+        let mut session = plan.session();
+        let r = session.run(0).unwrap();
+        for l in &r.metrics().levels {
+            assert_eq!(l.messages, sched_msgs, "level {}", l.level);
+        }
+    }
+
+    #[test]
+    fn bitmap_payload_is_level_invariant() {
+        let (g, _) = uniform_random(640, 8, 2);
+        let cfg = EngineConfig {
+            payload: PayloadEncoding::Bitmap,
+            ..EngineConfig::dgx2(4, 1)
+        };
+        let mut session = session_for(&g, cfg);
+        let r = session.run(0).unwrap();
+        // Bitmap encoding: every level ships the same number of bytes —
+        // the paper's tight bound (contribution 4).
+        let per_level: Vec<u64> = r.metrics().levels.iter().map(|l| l.bytes).collect();
+        assert!(per_level.windows(2).all(|w| w[0] == w[1]), "{per_level:?}");
+    }
+
+    #[test]
+    fn session_is_reusable_across_roots() {
+        let (g, _) = uniform_random(500, 8, 6);
+        let mut session = session_for(&g, EngineConfig::dgx2(4, 4));
+        let d1 = session.run(3).unwrap().into_dist();
+        let r2 = session.run(10).unwrap();
+        let want = serial_bfs(&g, 10);
+        assert_eq!(r2.dist(), &want[..]);
+        assert_ne!(d1, want, "different roots differ");
+        // An explicit reset is also allowed between queries.
+        session.reset();
+        let r3 = session.run(3).unwrap();
+        assert_eq!(r3.dist(), &d1[..]);
+    }
+
+    #[test]
+    fn bottom_up_mode_matches_serial() {
+        let (g, _) = uniform_random(800, 8, 12);
+        let cfg = EngineConfig {
+            direction: DirectionMode::BottomUp,
+            ..EngineConfig::dgx2(8, 4)
+        };
+        let mut session = session_for(&g, cfg);
+        let r = session.run(0).unwrap();
+        session.assert_agreement().unwrap();
+        assert_eq!(r.dist(), &serial_bfs(&g, 0)[..]);
+    }
+
+    #[test]
+    fn diropt_mode_matches_serial_and_saves_edges() {
+        let (g, _) = uniform_random(4000, 16, 6);
+        let mut td = session_for(&g, EngineConfig::dgx2(8, 4));
+        let cfg = EngineConfig {
+            direction: DirectionMode::diropt(),
+            ..EngineConfig::dgx2(8, 4)
+        };
+        let mut dopt = session_for(&g, cfg);
+        let rtd = td.run(0).unwrap();
+        let rdo = dopt.run(0).unwrap();
+        dopt.assert_agreement().unwrap();
+        assert_eq!(rdo.dist(), rtd.dist());
+        assert_eq!(rdo.dist(), &serial_bfs(&g, 0)[..]);
+        // Small-world graph: DO must examine fewer edges (the paper's
+        // "promising optimization").
+        assert!(
+            rdo.metrics().edges_examined() < rtd.metrics().edges_examined(),
+            "DO {} vs TD {}",
+            rdo.metrics().edges_examined(),
+            rtd.metrics().edges_examined()
+        );
+    }
+
+    #[test]
+    fn diropt_mode_many_node_counts() {
+        let (g, _) = kronecker(KroneckerParams::graph500(11, 8), 5);
+        for nodes in [1usize, 3, 9, 16] {
+            let cfg = EngineConfig {
+                direction: DirectionMode::diropt(),
+                ..EngineConfig::dgx2(nodes, 1)
+            };
+            let mut session = session_for(&g, cfg);
+            let r = session.run(2).unwrap();
+            session.assert_agreement().unwrap();
+            assert_eq!(r.dist(), &serial_bfs(&g, 2)[..], "nodes={nodes}");
+        }
+    }
+
+    #[test]
+    fn run_batch_matches_serial_per_lane() {
+        let (g, _) = uniform_random(700, 8, 19);
+        let roots: Vec<VertexId> = (0..64u32).map(|i| (i * 11) % 700).collect();
+        for (nodes, fanout) in [(1usize, 1u32), (4, 1), (16, 4), (9, 2)] {
+            let mut session = session_for(&g, EngineConfig::dgx2(nodes, fanout));
+            let b = session.run_batch(&roots).unwrap();
+            session.assert_batch_agreement().unwrap();
+            assert_eq!(b.num_roots(), 64);
+            assert_eq!(b.roots(), &roots[..]);
+            for (lane, &r) in roots.iter().enumerate() {
+                assert_eq!(
+                    b.dist(lane),
+                    &serial_bfs(&g, r)[..],
+                    "nodes={nodes} f={fanout} lane={lane}"
+                );
+            }
+        }
+    }
+
+    #[test]
+    fn run_batch_small_and_duplicate_batches() {
+        let (g, _) = uniform_random(400, 6, 2);
+        let mut session = session_for(&g, EngineConfig::dgx2(8, 4));
+        for roots in [vec![5u32], vec![1, 1, 1], vec![0, 399, 7, 7, 200]] {
+            let b = session.run_batch(&roots).unwrap();
+            session.assert_batch_agreement().unwrap();
+            assert_eq!(b.num_roots(), roots.len());
+            for (lane, &r) in roots.iter().enumerate() {
+                assert_eq!(b.dist(lane), &serial_bfs(&g, r)[..]);
+            }
+        }
+    }
+
+    #[test]
+    fn run_batch_matches_bit_parallel_oracle() {
+        use crate::bfs::msbfs::ms_bfs;
+        let (g, _) = kronecker(KroneckerParams::graph500(10, 8), 77);
+        let roots: Vec<VertexId> = (0..32u32).map(|i| i * 3).collect();
+        let mut session = session_for(&g, EngineConfig::dgx2(16, 1));
+        let b = session.run_batch(&roots).unwrap();
+        let want = ms_bfs(&g, &roots);
+        for lane in 0..roots.len() {
+            assert_eq!(b.dist(lane), want.dist(lane), "lane {lane}");
+        }
+        assert_eq!(b.reached_pairs(), want.reached_pairs());
+    }
+
+    #[test]
+    fn run_batch_amortizes_bytes_and_rounds() {
+        // The acceptance criterion: one 64-root batch must ship measurably
+        // fewer synchronization bytes and execute fewer schedule rounds
+        // than 64 sequential runs of the same roots.
+        let (g, _) = kronecker(KroneckerParams::graph500(11, 8), 13);
+        let roots: Vec<VertexId> =
+            crate::bfs::msbfs::sample_batch_roots(&g, 64, 0xBEEF);
+        let mut session = session_for(&g, EngineConfig::dgx2(16, 4));
+        let bm = session.run_batch(&roots).unwrap();
+        session.assert_batch_agreement().unwrap();
+        let seq = session.sequential_baseline(&roots).unwrap();
+        // Bytes: strictly fewer. (The dense mask forms are information-
+        // equivalent to 64 bitmaps, so hot levels roughly tie; the win
+        // comes from the mask-grouped encoding collapsing lanes that
+        // travel together.)
+        assert!(
+            bm.metrics().bytes() < seq.bytes,
+            "batch bytes {} vs sequential {}",
+            bm.metrics().bytes(),
+            seq.bytes
+        );
+        // Rounds: the headline amortization — one schedule execution per
+        // level serves all 64 roots, so the reduction is ~batch-width ×
+        // (sum of depths / max depth) and far exceeds 8×.
+        assert!(
+            bm.metrics().sync_rounds * 8 < seq.sync_rounds,
+            "batch rounds {} vs sequential {}",
+            bm.metrics().sync_rounds,
+            seq.sync_rounds
+        );
+    }
+
+    #[test]
+    fn run_batch_duplicate_roots_amortize_sharply() {
+        // 64 identical roots: the batch's mask-grouped encoding collapses
+        // the whole batch to near one traversal's bytes, while the
+        // sequential path pays 64 full runs — a many-fold reduction.
+        let (g, _) = kronecker(KroneckerParams::graph500(10, 8), 3);
+        let roots = vec![5u32; 64];
+        let mut session = session_for(&g, EngineConfig::dgx2(16, 4));
+        let bm = session.run_batch(&roots).unwrap();
+        session.assert_batch_agreement().unwrap();
+        let seq = session.sequential_baseline(&roots).unwrap();
+        assert!(
+            bm.metrics().bytes() * 4 < seq.bytes,
+            "batch bytes {} vs sequential {}",
+            bm.metrics().bytes(),
+            seq.bytes
+        );
+        assert_eq!(bm.dist(0), bm.dist(63));
+    }
+
+    #[test]
+    fn batch_results_outlive_later_queries() {
+        // Results own their distances, so a batch result is immune to the
+        // session moving on to other queries (the old engine required
+        // scraping `batch_dist` before the next `run_batch`).
+        let (g, _) = uniform_random(300, 6, 4);
+        let mut session = session_for(&g, EngineConfig::dgx2(4, 2));
+        let b1 = session.run_batch(&[3, 9]).unwrap();
+        let r = session.run(5).unwrap();
+        let b2 = session.run_batch(&[8]).unwrap();
+        assert_eq!(b1.dist(1), &serial_bfs(&g, 9)[..]);
+        assert_eq!(r.dist(), &serial_bfs(&g, 5)[..]);
+        assert_eq!(b2.dist(0), &serial_bfs(&g, 8)[..]);
+        assert_eq!(b2.num_roots(), 1);
+        assert!(b2.lane_dist(1).is_none());
+    }
+
+    #[test]
+    fn batch_agreement_errors_before_any_batch() {
+        let (g, _) = uniform_random(50, 4, 1);
+        let session = session_for(&g, EngineConfig::dgx2(2, 1));
+        assert!(session.assert_batch_agreement().is_err());
+    }
+
+    #[test]
+    fn query_errors_are_typed_and_session_stays_usable() {
+        let (g, _) = uniform_random(50, 4, 9);
+        let mut session = session_for(&g, EngineConfig::dgx2(4, 2));
+        assert_eq!(
+            session.run(50).unwrap_err(),
+            QueryError::RootOutOfRange { root: 50, num_vertices: 50 }
+        );
+        assert_eq!(session.run_batch(&[]).unwrap_err(), QueryError::EmptyBatch);
+        let wide: Vec<VertexId> = (0..65).map(|i| i % 50).collect();
+        assert_eq!(
+            session.run_batch(&wide).unwrap_err(),
+            QueryError::BatchTooWide { got: 65, max: MAX_BATCH }
+        );
+        assert_eq!(
+            session.run_batch(&[0, 99]).unwrap_err(),
+            QueryError::RootOutOfRange { root: 99, num_vertices: 50 }
+        );
+        assert_eq!(
+            session.sequential_baseline(&[0, 99]).unwrap_err(),
+            QueryError::RootOutOfRange { root: 99, num_vertices: 50 }
+        );
+        // A failed query leaves the session fully usable.
+        let r = session.run(7).unwrap();
+        assert_eq!(r.dist(), &serial_bfs(&g, 7)[..]);
+    }
+
+    #[test]
+    fn property_run_batch_equals_serial() {
+        use crate::util::propcheck::{forall, gen, Config};
+        forall(Config::cases(12), "run_batch == serial per lane", |rng| {
+            let n = gen::usize_in(rng, 10, 300);
+            let ef = gen::usize_in(rng, 1, 6) as u32;
+            let nodes = gen::usize_in(rng, 1, 8.min(n));
+            let fanout = gen::usize_in(rng, 1, 4) as u32;
+            let b = gen::usize_in(rng, 1, 16);
+            let (g, _) = uniform_random(n, ef, rng.next_u64());
+            let roots: Vec<VertexId> =
+                (0..b).map(|_| rng.next_usize(n) as VertexId).collect();
+            let mut session = session_for(&g, EngineConfig::dgx2(nodes, fanout));
+            let batch = session.run_batch(&roots).unwrap();
+            let ok = session.assert_batch_agreement().is_ok()
+                && roots.iter().enumerate().all(|(lane, &r)| {
+                    batch.dist(lane) == &serial_bfs(&g, r)[..]
+                });
+            (ok, format!("n={n} ef={ef} nodes={nodes} f={fanout} b={b}"))
+        });
+    }
+
+    /// Run a 2D-mode traversal, check distances against serial BFS and
+    /// the measured message count against the analytical
+    /// `Partition2D::message_volume` model, and check the fold/expand
+    /// splits tile the totals.
+    fn check_two_d(g: &Csr, rows: u32, cols: u32, root: VertexId) {
+        let plan = TraversalPlan::build(g, EngineConfig::dgx2_2d(rows, cols)).unwrap();
+        let mut session = plan.session();
+        let r = session.run(root).unwrap();
+        session.assert_agreement().unwrap();
+        assert_eq!(
+            r.dist(),
+            &serial_bfs(g, root)[..],
+            "grid {rows}x{cols} root {root}"
+        );
+        let p2 = plan.partition().as_two_d().expect("2D mode");
+        let m = r.metrics();
+        assert_eq!(
+            m.messages(),
+            p2.message_volume(m.depth() as u64),
+            "grid {rows}x{cols}: measured vs model"
+        );
+        for l in &m.levels {
+            assert_eq!(l.fold_messages + l.expand_messages, l.messages);
+            assert_eq!(l.fold_bytes + l.expand_bytes, l.bytes);
+        }
+    }
+
+    #[test]
+    fn two_d_matches_serial_square_and_ragged_grids() {
+        let (g, _) = uniform_random(900, 8, 77);
+        for (rows, cols) in [(4u32, 4u32), (2, 8), (8, 2), (1, 4), (4, 1), (3, 5)] {
+            check_two_d(&g, rows, cols, 13);
+        }
+    }
+
+    #[test]
+    fn two_d_single_processor_degenerates_to_local_bfs() {
+        let (g, _) = uniform_random(400, 8, 3);
+        let mut session = session_for(&g, EngineConfig::dgx2_2d(1, 1));
+        let r = session.run(0).unwrap();
+        assert_eq!(r.dist(), &serial_bfs(&g, 0)[..]);
+        assert_eq!(r.metrics().messages(), 0, "one processor never communicates");
+    }
+
+    #[test]
+    fn two_d_direction_modes_match_serial() {
+        let (g, _) = kronecker(KroneckerParams::graph500(10, 8), 9);
+        for direction in [DirectionMode::BottomUp, DirectionMode::diropt()] {
+            let cfg = EngineConfig { direction, ..EngineConfig::dgx2_2d(4, 4) };
+            let mut session = session_for(&g, cfg);
+            let r = session.run(2).unwrap();
+            session.assert_agreement().unwrap();
+            assert_eq!(r.dist(), &serial_bfs(&g, 2)[..], "{direction:?}");
+        }
+    }
+
+    #[test]
+    fn two_d_run_batch_matches_serial_per_lane() {
+        let (g, _) = uniform_random(500, 8, 19);
+        let roots: Vec<VertexId> = (0..32u32).map(|i| (i * 13) % 500).collect();
+        for (rows, cols) in [(4u32, 4u32), (2, 3), (1, 5)] {
+            let plan =
+                TraversalPlan::build(&g, EngineConfig::dgx2_2d(rows, cols)).unwrap();
+            let mut session = plan.session();
+            let b = session.run_batch(&roots).unwrap();
+            session.assert_batch_agreement().unwrap();
+            let p2 = plan.partition().as_two_d().unwrap();
+            let m = b.metrics();
+            assert_eq!(m.messages(), p2.message_volume(m.depth() as u64));
+            assert_eq!(m.fold_messages() + m.expand_messages(), m.messages());
+            for (lane, &r) in roots.iter().enumerate() {
+                assert_eq!(
+                    b.dist(lane),
+                    &serial_bfs(&g, r)[..],
+                    "grid {rows}x{cols} lane {lane}"
+                );
+            }
+        }
+    }
+
+    #[test]
+    fn property_two_d_equals_serial() {
+        use crate::util::propcheck::{forall, gen, Config};
+        forall(Config::cases(20), "2d fold/expand == serial", |rng| {
+            let n = gen::usize_in(rng, 8, 300);
+            let ef = gen::usize_in(rng, 1, 6) as u32;
+            let rows = gen::usize_in(rng, 1, 6.min(n)) as u32;
+            let cols = gen::usize_in(rng, 1, 6.min(n)) as u32;
+            let (g, _) = uniform_random(n, ef, rng.next_u64());
+            let root = rng.next_usize(n) as u32;
+            let plan =
+                TraversalPlan::build(&g, EngineConfig::dgx2_2d(rows, cols)).unwrap();
+            let mut session = plan.session();
+            let r = session.run(root).unwrap();
+            let p2 = plan.partition().as_two_d().unwrap();
+            let ok = session.assert_agreement().is_ok()
+                && r.dist() == &serial_bfs(&g, root)[..]
+                && r.metrics().messages() == p2.message_volume(r.depth() as u64);
+            (ok, format!("n={n} ef={ef} grid={rows}x{cols} root={root}"))
+        });
+    }
+
+    #[test]
+    fn pooled_batch_stepping_bit_identical_to_sequential() {
+        // The threadpool determinism acceptance: pooled per-node stepping
+        // must reproduce sequential stepping bit for bit — distances,
+        // per-level byte/message accounting, everything — across 50
+        // seeded configs in both partition modes.
+        use crate::util::propcheck::{forall, gen, Config};
+        forall(Config::cases(50), "pooled run_batch == sequential", |rng| {
+            let n = gen::usize_in(rng, 10, 250);
+            let ef = gen::usize_in(rng, 1, 6) as u32;
+            let b = gen::usize_in(rng, 1, 24);
+            let (g, _) = uniform_random(n, ef, rng.next_u64());
+            let roots: Vec<VertexId> =
+                (0..b).map(|_| rng.next_usize(n) as VertexId).collect();
+            let cfg = if rng.next_below(2) == 0 {
+                let nodes = gen::usize_in(rng, 2, 8.min(n));
+                EngineConfig::dgx2(nodes, gen::usize_in(rng, 1, 4) as u32)
+            } else {
+                let rows = gen::usize_in(rng, 1, 4.min(n)) as u32;
+                let cols = gen::usize_in(rng, 1, 4.min(n)) as u32;
+                EngineConfig::dgx2_2d(rows, cols)
+            };
+            let mut seq = session_for(&g, cfg.clone());
+            let mut par =
+                session_for(&g, EngineConfig { parallel_phase1: true, ..cfg });
+            let bs = seq.run_batch(&roots).unwrap();
+            let bp = par.run_batch(&roots).unwrap();
+            let mut ok = par.assert_batch_agreement().is_ok();
+            for lane in 0..roots.len() {
+                ok &= bs.dist(lane) == bp.dist(lane);
+            }
+            ok &= bs.depth() == bp.depth();
+            for (a, c) in bs.metrics().levels.iter().zip(&bp.metrics().levels) {
+                ok &= a.frontier == c.frontier
+                    && a.edges_examined == c.edges_examined
+                    && a.discovered == c.discovered
+                    && a.messages == c.messages
+                    && a.bytes == c.bytes;
+            }
+            (ok, format!("n={n} ef={ef} b={b}"))
+        });
+    }
+
+    #[test]
+    fn batch_dense_merge_fallback_matches_oracle() {
+        // A star forces a level whose delta list (≈ V entries) crosses the
+        // 8·V-byte switchover, so the dense word-wise OR path runs; the
+        // result must match the bit-parallel oracle exactly.
+        use crate::bfs::msbfs::ms_bfs;
+        let g = star(600);
+        let roots: Vec<VertexId> = (0..64u32).map(|i| i % 2).collect();
+        let mut session = session_for(&g, EngineConfig::dgx2(8, 2));
+        let b = session.run_batch(&roots).unwrap();
+        session.assert_batch_agreement().unwrap();
+        let want = ms_bfs(&g, &roots);
+        for lane in 0..roots.len() {
+            assert_eq!(b.dist(lane), want.dist(lane), "lane {lane}");
+        }
+    }
+
+    #[test]
+    fn property_distributed_equals_serial() {
+        use crate::util::propcheck::{forall, gen, Config};
+        forall(Config::cases(25), "butterfly bfs == serial bfs", |rng| {
+            let n = gen::usize_in(rng, 10, 500);
+            let ef = gen::usize_in(rng, 1, 8) as u32;
+            let nodes = gen::usize_in(rng, 1, 10.min(n));
+            let fanout = gen::usize_in(rng, 1, 5) as u32;
+            let (g, _) = uniform_random(n, ef, rng.next_u64());
+            let root = rng.next_usize(n) as u32;
+            let mut session = session_for(&g, EngineConfig::dgx2(nodes, fanout));
+            let r = session.run(root).unwrap();
+            let ok = session.assert_agreement().is_ok()
+                && r.dist() == &serial_bfs(&g, root)[..];
+            (ok, format!("n={n} ef={ef} nodes={nodes} f={fanout} root={root}"))
+        });
+    }
+}

@@ -3,7 +3,7 @@
 
 use crate::bfs::dirop::{diropt_bfs, DirOptParams};
 use crate::bfs::topdown::topdown_bfs;
-use crate::coordinator::{ButterflyBfs, EngineConfig, PatternKind};
+use crate::coordinator::{EngineConfig, PatternKind, TraversalPlan};
 use crate::graph::csr::Csr;
 use crate::graph::gen::GraphSpec;
 use crate::harness::roots::{run_protocol, RootProtocol};
@@ -90,9 +90,13 @@ pub fn table1_row(spec: &GraphSpec, g: &Csr, proto: &RootProtocol) -> Table1Row 
         let res = topdown_bfs(g, r, true);
         cpu_sim_time(&res.levels, &cpu)
     });
-    // Simulated DGX-2: 16 nodes, butterfly fanout 4.
-    let mut engine = ButterflyBfs::new(g, EngineConfig::dgx2(16, 4));
-    let (dgx2_time, _) = run_protocol(g, proto, |r| engine.run(r).sim_seconds());
+    // Simulated DGX-2: 16 nodes, butterfly fanout 4. One plan, one
+    // session, reused across the whole root protocol.
+    let plan = TraversalPlan::build(g, EngineConfig::dgx2(16, 4)).expect("valid plan");
+    let mut session = plan.session();
+    let (dgx2_time, _) = run_protocol(g, proto, |r| {
+        session.run_metrics_only(r).expect("protocol root in range").sim_seconds()
+    });
     Table1Row {
         name: spec.name,
         paper_graph: spec.paper_graph,
@@ -127,8 +131,12 @@ pub fn scaling_sweep(
     let mut out = Vec::new();
     for &nodes in node_counts {
         for &fanout in fanouts {
-            let mut engine = ButterflyBfs::new(g, EngineConfig::dgx2(nodes, fanout));
-            let (sim_time, _) = run_protocol(g, proto, |r| engine.run(r).sim_seconds());
+            let plan =
+                TraversalPlan::build(g, EngineConfig::dgx2(nodes, fanout)).expect("valid plan");
+            let mut session = plan.session();
+            let (sim_time, _) = run_protocol(g, proto, |r| {
+                session.run_metrics_only(r).expect("protocol root in range").sim_seconds()
+            });
             out.push(ScalingPoint { nodes, fanout, sim_time });
         }
     }
@@ -152,8 +160,11 @@ pub fn pattern_comparison(
                 net: *net,
                 ..EngineConfig::dgx2(nodes, 1)
             };
-            let mut engine = ButterflyBfs::new(g, cfg);
-            let (t, _) = run_protocol(g, proto, |r| engine.run(r).sim_seconds());
+            let plan = TraversalPlan::build(g, cfg).expect("valid plan");
+            let mut session = plan.session();
+            let (t, _) = run_protocol(g, proto, |r| {
+                session.run_metrics_only(r).expect("protocol root in range").sim_seconds()
+            });
             (format!("{}@{}", p.name(), net.name), t)
         })
         .collect()

@@ -17,14 +17,17 @@
 //!   AOT-lowered to HLO text artifacts that `runtime::` loads and executes
 //!   via the PJRT CPU client. Python never runs on the traversal path.
 //!
-//! Start with [`coordinator::engine::ButterflyBfs`] or the
-//! `examples/quickstart.rs` example.
+//! The engine API is split into a **build-once** immutable
+//! [`coordinator::TraversalPlan`] (partition + slabs + schedule, shareable
+//! across threads via `Arc`) and **per-query** [`coordinator::QuerySession`]s
+//! whose `run`/`run_batch` return typed results and errors. Start with
+//! [`coordinator::TraversalPlan::build`] or the `examples/quickstart.rs`
+//! example.
 
 // CI runs `cargo clippy --all-targets -- -D warnings`. Two style lints are
-// deliberate idioms here rather than defects: the Phase-2 round loops must
-// index (each round is `mem::take`n and restored around mutable node
-// access), and the per-level metrics constructors mirror the paper's
-// per-level tuple of quantities.
+// deliberate idioms here rather than defects: a few Phase-2 snapshot loops
+// index frozen prefixes, and the per-level metrics constructors mirror the
+// paper's per-level tuple of quantities.
 #![allow(clippy::needless_range_loop, clippy::too_many_arguments)]
 
 pub mod bfs;

@@ -19,7 +19,7 @@ use butterfly_bfs::bfs::dirop::{diropt_bfs, DirOptParams};
 use butterfly_bfs::bfs::topdown::topdown_bfs;
 use butterfly_bfs::comm::{Butterfly, CommPattern, ConcurrentAllToAll, IterativeAllToAll};
 use butterfly_bfs::coordinator::config::{DirectionMode, PartitionMode};
-use butterfly_bfs::coordinator::{ButterflyBfs, EngineConfig, PatternKind, PayloadEncoding};
+use butterfly_bfs::coordinator::{EngineConfig, PatternKind, PayloadEncoding, TraversalPlan};
 use butterfly_bfs::partition::Partition2D;
 use butterfly_bfs::graph::csr::Csr;
 use butterfly_bfs::graph::gen::{table1_suite, GraphSpec};
@@ -164,7 +164,6 @@ fn cmd_run(argv: Vec<String>) -> Result<()> {
         d => bail!("unknown direction {d:?}"),
     };
     let partition = parse_partition_mode(&a.get("mode"), &a.get("grid"), nodes)?;
-    check_layout_fits(partition, nodes, g.num_vertices())?;
     let cfg = EngineConfig {
         num_nodes: nodes,
         partition,
@@ -176,12 +175,17 @@ fn cmd_run(argv: Vec<String>) -> Result<()> {
         net,
         ..EngineConfig::dgx2(nodes, 1)
     };
-    let mut engine = ButterflyBfs::new(&g, cfg);
+    // Invalid layouts (grid too large for the graph, more nodes than
+    // vertices, mismatched grid) surface as typed `PlanError`s and print
+    // as clean CLI errors.
+    let plan = TraversalPlan::build(&g, cfg)?;
+    let mut session = plan.session();
     let root = a.get_parse::<u32>("root")?;
-    let m = engine.run(root);
-    engine
+    let result = session.run(root)?;
+    session
         .assert_agreement()
         .map_err(|e| format!("node disagreement: {e}"))?;
+    let m = result.metrics();
 
     if a.get_flag("json") {
         println!("{}", m.to_json().render());
@@ -193,7 +197,7 @@ fn cmd_run(argv: Vec<String>) -> Result<()> {
         count(g.num_edges()),
         partition.name(),
         match partition {
-            PartitionMode::OneD => engine.config().pattern.name(),
+            PartitionMode::OneD => plan.config().pattern.name(),
             PartitionMode::TwoD { .. } => "fold-expand".to_string(),
         }
     );
@@ -229,24 +233,11 @@ fn cmd_run(argv: Vec<String>) -> Result<()> {
     Ok(())
 }
 
-/// Reject layouts the engine would refuse with a deep assert — a
-/// formatted error beats a panic for a CLI mistake.
-fn check_layout_fits(partition: PartitionMode, nodes: usize, n: usize) -> Result<()> {
-    match partition {
-        PartitionMode::OneD if nodes > n => {
-            bail!("--nodes {nodes} exceeds the graph's {n} vertices")
-        }
-        PartitionMode::TwoD { rows, cols }
-            if rows as usize > n || cols as usize > n =>
-        {
-            bail!("--grid {rows}x{cols} has an axis larger than the graph's {n} vertices")
-        }
-        _ => Ok(()),
-    }
-}
-
 /// Resolve `--mode` / `--grid` into a [`PartitionMode`]. `--grid auto`
-/// picks the most-square factorization of `nodes`.
+/// picks the most-square factorization of `nodes`. Whether the layout
+/// fits the graph (grid covers `--nodes`, axes fit the vertex count) is
+/// validated by [`TraversalPlan::build`], whose typed `PlanError`s print
+/// as CLI errors.
 fn parse_partition_mode(mode: &str, grid: &str, nodes: usize) -> Result<PartitionMode> {
     Ok(match mode {
         "1d" => PartitionMode::OneD,
@@ -259,9 +250,6 @@ fn parse_partition_mode(mode: &str, grid: &str, nodes: usize) -> Result<Partitio
                 };
                 rc
             };
-            if rows as usize * cols as usize != nodes {
-                bail!("--grid {rows}x{cols} does not cover --nodes {nodes}");
-            }
             PartitionMode::TwoD { rows, cols }
         }
         m => bail!("unknown mode {m:?} (1d | 2d)"),
@@ -313,28 +301,29 @@ fn cmd_batch(argv: Vec<String>) -> Result<()> {
         bail!("--roots must be in 1..=64 (got {width})");
     }
     let partition = parse_partition_mode(&a.get("mode"), &a.get("grid"), nodes)?;
-    check_layout_fits(partition, nodes, g.num_vertices())?;
     let cfg = EngineConfig {
         partition,
         parallel_phase1: a.get_flag("parallel"),
         ..EngineConfig::dgx2(nodes, fanout)
     };
-    let mut engine = ButterflyBfs::new(&g, cfg);
+    let plan = TraversalPlan::build(&g, cfg)?;
+    let mut session = plan.session();
     let roots = butterfly_bfs::bfs::msbfs::sample_batch_roots(
         &g,
         width,
         a.get_u64("seed")?,
     );
-    let bm = engine.run_batch(&roots);
-    engine
+    let batch = session.run_batch(&roots)?;
+    session
         .assert_batch_agreement()
         .map_err(|e| format!("node disagreement: {e}"))?;
+    let bm = batch.metrics();
     println!(
         "graph: |V|={} |E|={}  nodes={nodes} mode={} fanout={fanout} batch={}",
         count(g.num_vertices() as u64),
         count(g.num_edges()),
-        engine.config().partition.name(),
-        bm.num_roots
+        plan.config().partition.name(),
+        batch.num_roots()
     );
     println!(
         "batch: {} levels, {} sync rounds, {} messages, {} bytes, sim {:.3} ms",
@@ -345,7 +334,7 @@ fn cmd_batch(argv: Vec<String>) -> Result<()> {
         bm.sim_seconds() * 1e3
     );
     if a.get_flag("compare") {
-        let seq = engine.sequential_baseline(&roots);
+        let seq = session.sequential_baseline(&roots)?;
         println!(
             "sequential: {} sync rounds, {} bytes, sim {:.3} ms",
             seq.sync_rounds,

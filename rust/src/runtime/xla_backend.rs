@@ -170,7 +170,7 @@ mod tests {
     use super::*;
     use crate::bfs::serial::serial_bfs;
     use crate::coordinator::config::EngineConfig;
-    use crate::coordinator::engine::ButterflyBfs;
+    use crate::coordinator::plan::TraversalPlan;
     use crate::graph::gen::urand::uniform_random;
     use crate::partition::one_d::partition_1d;
     use crate::runtime::artifacts::{find_artifact, variant_for};
@@ -184,7 +184,7 @@ mod tests {
     }
 
     #[test]
-    fn xla_engine_matches_serial_bfs() {
+    fn xla_session_matches_serial_bfs() {
         let Some(step) = load_step(240) else {
             eprintln!("skipping: artifacts not built");
             return;
@@ -193,10 +193,11 @@ mod tests {
         let cfg = EngineConfig::dgx2(4, 2);
         let part = partition_1d(&g, cfg.num_nodes);
         let backends = XlaFrontierBackend::for_slabs(step, &part.slabs(&g)).unwrap();
-        let mut engine = ButterflyBfs::with_backends(&g, cfg, backends);
-        engine.run(0);
-        engine.assert_agreement().unwrap();
-        assert_eq!(engine.dist(), &serial_bfs(&g, 0)[..]);
+        let plan = TraversalPlan::build(&g, cfg).unwrap();
+        let mut session = plan.session_with_backends(backends).unwrap();
+        let r = session.run(0).unwrap();
+        session.assert_agreement().unwrap();
+        assert_eq!(r.dist(), &serial_bfs(&g, 0)[..]);
     }
 
     #[test]
@@ -209,12 +210,13 @@ mod tests {
         let cfg = EngineConfig::dgx2(2, 1);
         let part = partition_1d(&g, cfg.num_nodes);
         let backends = XlaFrontierBackend::for_slabs(step, &part.slabs(&g)).unwrap();
-        let mut xla_engine = ButterflyBfs::with_backends(&g, cfg.clone(), backends);
-        let mut native = ButterflyBfs::new(&g, cfg);
-        let mx = xla_engine.run(7);
-        let mn = native.run(7);
-        assert_eq!(xla_engine.dist(), native.dist());
-        assert_eq!(mx.reached, mn.reached);
-        assert_eq!(mx.depth(), mn.depth());
+        let plan = TraversalPlan::build(&g, cfg).unwrap();
+        let mut xla_session = plan.session_with_backends(backends).unwrap();
+        let mut native = plan.session();
+        let rx = xla_session.run(7).unwrap();
+        let rn = native.run(7).unwrap();
+        assert_eq!(rx.dist(), rn.dist());
+        assert_eq!(rx.reached(), rn.reached());
+        assert_eq!(rx.depth(), rn.depth());
     }
 }

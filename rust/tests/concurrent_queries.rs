@@ -1,0 +1,143 @@
+//! The plan/session concurrency acceptance: N threads sharing one
+//! `Arc<TraversalPlan>` through independent `QuerySession`s must produce
+//! results bit-identical to running the same queries sequentially on a
+//! single session — distances, reach, depth, and every deterministic
+//! per-level metric — in both the 1D butterfly and 2D fold/expand modes,
+//! for single-root and batched traversals.
+
+use butterfly_bfs::coordinator::{
+    BatchResult, EngineConfig, QuerySession, TraversalPlan, TraversalResult,
+};
+use butterfly_bfs::graph::csr::VertexId;
+use butterfly_bfs::graph::gen::urand::uniform_random;
+use std::sync::Arc;
+use std::thread;
+
+/// Everything deterministic about a single-root result.
+fn run_key(r: &TraversalResult) -> (Vec<u32>, u64, usize, Vec<(u64, u64, u64, u64, u64)>) {
+    (
+        r.dist().to_vec(),
+        r.reached(),
+        r.depth(),
+        r.metrics()
+            .levels
+            .iter()
+            .map(|l| (l.frontier, l.edges_examined, l.discovered, l.messages, l.bytes))
+            .collect(),
+    )
+}
+
+/// Everything deterministic about a batched result.
+fn batch_key(b: &BatchResult) -> (Vec<u32>, u64, usize, u64, u64, u64) {
+    let dist: Vec<u32> = (0..b.num_roots()).flat_map(|l| b.dist(l).to_vec()).collect();
+    (
+        dist,
+        b.reached_pairs(),
+        b.depth(),
+        b.metrics().messages(),
+        b.metrics().bytes(),
+        b.metrics().sync_rounds,
+    )
+}
+
+/// Four threads, two roots each, one shared plan — versus one session
+/// running all eight roots back to back.
+fn concurrent_equals_sequential(cfg: EngineConfig) {
+    let (g, _) = uniform_random(700, 8, 21);
+    let plan = Arc::new(TraversalPlan::build(&g, cfg).unwrap());
+    let roots: Vec<VertexId> = (0..8u32).map(|i| (i * 97) % 700).collect();
+
+    let mut session = plan.session();
+    let sequential: Vec<_> = roots
+        .iter()
+        .map(|&r| run_key(&session.run(r).unwrap()))
+        .collect();
+
+    let mut handles = Vec::new();
+    for chunk in roots.chunks(2) {
+        let plan = Arc::clone(&plan);
+        let chunk = chunk.to_vec();
+        handles.push(thread::spawn(move || {
+            let mut s = plan.session();
+            chunk
+                .iter()
+                .map(|&r| run_key(&s.run(r).unwrap()))
+                .collect::<Vec<_>>()
+        }));
+    }
+    assert!(handles.len() >= 4, "acceptance demands >= 4 concurrent sessions");
+    let concurrent: Vec<_> = handles
+        .into_iter()
+        .flat_map(|h| h.join().unwrap())
+        .collect();
+
+    assert_eq!(sequential.len(), concurrent.len());
+    for (i, (a, b)) in sequential.iter().zip(&concurrent).enumerate() {
+        assert_eq!(a, b, "root {} differs between sequential and concurrent", roots[i]);
+    }
+}
+
+#[test]
+fn concurrent_sessions_bit_identical_1d() {
+    concurrent_equals_sequential(EngineConfig::dgx2(8, 4));
+    concurrent_equals_sequential(EngineConfig::dgx2(9, 1));
+}
+
+#[test]
+fn concurrent_sessions_bit_identical_2d() {
+    concurrent_equals_sequential(EngineConfig::dgx2_2d(2, 3));
+    concurrent_equals_sequential(EngineConfig::dgx2_2d(4, 4));
+}
+
+#[test]
+fn concurrent_sessions_bit_identical_with_parallel_phase1() {
+    // Sessions that each spawn their own worker pool still agree.
+    concurrent_equals_sequential(EngineConfig {
+        parallel_phase1: true,
+        ..EngineConfig::dgx2(8, 4)
+    });
+}
+
+#[test]
+fn concurrent_batch_sessions_bit_identical() {
+    for cfg in [EngineConfig::dgx2(8, 2), EngineConfig::dgx2_2d(2, 2)] {
+        let (g, _) = uniform_random(500, 6, 5);
+        let plan = Arc::new(TraversalPlan::build(&g, cfg).unwrap());
+        let batches: Vec<Vec<VertexId>> = (0..4u32)
+            .map(|t| (0..16u32).map(move |i| (t * 131 + i * 17) % 500).collect())
+            .collect();
+
+        let mut session = plan.session();
+        let sequential: Vec<_> = batches
+            .iter()
+            .map(|b| batch_key(&session.run_batch(b).unwrap()))
+            .collect();
+
+        let handles: Vec<_> = batches
+            .iter()
+            .cloned()
+            .map(|b| {
+                let plan = Arc::clone(&plan);
+                thread::spawn(move || {
+                    let mut s = plan.session();
+                    batch_key(&s.run_batch(&b).unwrap())
+                })
+            })
+            .collect();
+        for (i, h) in handles.into_iter().enumerate() {
+            assert_eq!(h.join().unwrap(), sequential[i], "batch {i}");
+        }
+    }
+}
+
+#[test]
+fn plan_and_results_cross_threads() {
+    fn assert_send<T: Send>() {}
+    fn assert_send_sync<T: Send + Sync>() {}
+    // The plan is shared by reference across threads; results are handed
+    // off between threads; sessions move into worker threads.
+    assert_send_sync::<TraversalPlan>();
+    assert_send_sync::<TraversalResult>();
+    assert_send_sync::<BatchResult>();
+    assert_send::<QuerySession>();
+}

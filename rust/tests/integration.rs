@@ -6,7 +6,7 @@
 use butterfly_bfs::bfs::dirop::{diropt_bfs, DirOptParams};
 use butterfly_bfs::bfs::serial::{serial_bfs, INF};
 use butterfly_bfs::bfs::topdown::topdown_bfs;
-use butterfly_bfs::coordinator::{ButterflyBfs, EngineConfig, PatternKind, PayloadEncoding};
+use butterfly_bfs::coordinator::{EngineConfig, PatternKind, PayloadEncoding, TraversalPlan};
 use butterfly_bfs::graph::gen::table1_suite;
 use butterfly_bfs::graph::{io, props};
 use butterfly_bfs::harness::roots::{sample_roots, RootProtocol};
@@ -21,14 +21,16 @@ fn full_suite_distributed_equals_serial() {
         let g = spec.generate_scaled(-7);
         let roots = sample_roots(&g, &proto);
         for fanout in [1u32, 4] {
-            let mut engine = ButterflyBfs::new(&g, EngineConfig::dgx2(16, fanout));
+            let mut session = TraversalPlan::build(&g, EngineConfig::dgx2(16, fanout))
+                .unwrap()
+                .session();
             for &root in &roots {
-                engine.run(root);
-                engine.assert_agreement().unwrap_or_else(|e| {
+                let r = session.run(root).unwrap();
+                session.assert_agreement().unwrap_or_else(|e| {
                     panic!("{} f{fanout} root {root}: {e}", spec.name)
                 });
                 assert_eq!(
-                    engine.dist(),
+                    r.dist(),
                     &serial_bfs(&g, root)[..],
                     "{} f{fanout} root {root}",
                     spec.name
@@ -62,10 +64,10 @@ fn payload_encoding_is_semantically_transparent() {
     let mut bytes = Vec::new();
     for payload in [PayloadEncoding::Queue, PayloadEncoding::Bitmap, PayloadEncoding::Auto] {
         let cfg = EngineConfig { payload, ..EngineConfig::dgx2(8, 4) };
-        let mut engine = ButterflyBfs::new(&g, cfg);
-        let m = engine.run(0);
-        results.push(engine.dist().to_vec());
-        bytes.push(m.bytes());
+        let mut session = TraversalPlan::build(&g, cfg).unwrap().session();
+        let r = session.run(0).unwrap();
+        results.push(r.dist().to_vec());
+        bytes.push(r.metrics().bytes());
     }
     assert_eq!(results[0], results[1]);
     assert_eq!(results[1], results[2]);
@@ -87,9 +89,10 @@ fn patterns_only_change_communication() {
         PatternKind::AllToAllIterative,
     ] {
         let cfg = EngineConfig { pattern, ..EngineConfig::dgx2(9, 1) };
-        let mut engine = ButterflyBfs::new(&g, cfg);
-        let m = engine.run(3);
-        dists.push(engine.dist().to_vec());
+        let mut session = TraversalPlan::build(&g, cfg).unwrap().session();
+        let r = session.run(3).unwrap();
+        let m = r.metrics();
+        dists.push(r.dist().to_vec());
         discoveries.push(m.levels.iter().map(|l| l.discovered).collect::<Vec<_>>());
         messages.push(m.messages());
     }
@@ -115,9 +118,11 @@ fn io_roundtrip_through_engine() {
     let (g_txt, _) = io::read_edge_list(&txt, Some(g.num_vertices())).unwrap();
     assert_eq!(g, g_bin);
     assert_eq!(g, g_txt);
-    let mut e = ButterflyBfs::new(&g_bin, EngineConfig::dgx2(4, 2));
-    e.run(0);
-    assert_eq!(e.dist(), &serial_bfs(&g, 0)[..]);
+    let mut session = TraversalPlan::build(&g_bin, EngineConfig::dgx2(4, 2))
+        .unwrap()
+        .session();
+    let r = session.run(0).unwrap();
+    assert_eq!(r.dist(), &serial_bfs(&g, 0)[..]);
     std::fs::remove_file(&bin).ok();
     std::fs::remove_file(&txt).ok();
 }
@@ -145,8 +150,11 @@ fn suite_diameter_classes() {
 #[test]
 fn level_populations_match_oracle() {
     let g = table1_suite()[8].generate_scaled(-7); // moliere-like
-    let mut engine = ButterflyBfs::new(&g, EngineConfig::dgx2(8, 4));
-    let m = engine.run(0);
+    let mut session = TraversalPlan::build(&g, EngineConfig::dgx2(8, 4))
+        .unwrap()
+        .session();
+    let r = session.run(0).unwrap();
+    let m = r.metrics();
     let d = serial_bfs(&g, 0);
     let max_d = d.iter().filter(|&&x| x != INF).max().copied().unwrap();
     for lvl in 0..=max_d {
@@ -168,14 +176,17 @@ fn star_graph_cross_node_routing() {
     let g = star(1000);
     let part = partition_1d(&g, 8);
     assert_eq!(part.owner_of(0), 0);
-    let mut engine = ButterflyBfs::new(&g, EngineConfig::dgx2(8, 1));
-    let m = engine.run(0);
+    let mut session = TraversalPlan::build(&g, EngineConfig::dgx2(8, 1))
+        .unwrap()
+        .session();
+    let r = session.run(0).unwrap();
+    let m = r.metrics();
     assert_eq!(m.depth(), 2);
     assert_eq!(m.reached, 1000);
     // Level 0: root expands 999 edges; every other node learns the full
     // frontier through the butterfly.
     assert_eq!(m.levels[0].edges_examined, 999);
-    engine.assert_agreement().unwrap();
+    session.assert_agreement().unwrap();
 }
 
 /// Metrics invariants over a random workload: totals equal sums, comm
@@ -183,8 +194,11 @@ fn star_graph_cross_node_routing() {
 #[test]
 fn metrics_invariants() {
     let g = table1_suite()[4].generate_scaled(-7);
-    let mut engine = ButterflyBfs::new(&g, EngineConfig::dgx2(16, 4));
-    let m = engine.run(0);
+    let mut session = TraversalPlan::build(&g, EngineConfig::dgx2(16, 4))
+        .unwrap()
+        .session();
+    let r = session.run(0).unwrap();
+    let m = r.metrics();
     assert_eq!(
         m.edges_examined(),
         m.levels.iter().map(|l| l.edges_examined).sum::<u64>()

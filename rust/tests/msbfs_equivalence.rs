@@ -5,7 +5,7 @@
 
 use butterfly_bfs::bfs::msbfs::{ms_bfs, sample_batch_roots};
 use butterfly_bfs::bfs::serial::serial_bfs;
-use butterfly_bfs::coordinator::{ButterflyBfs, EngineConfig};
+use butterfly_bfs::coordinator::{EngineConfig, TraversalPlan};
 use butterfly_bfs::graph::csr::VertexId;
 use butterfly_bfs::graph::gen::table1_suite;
 
@@ -22,15 +22,17 @@ fn suite_run_batch_equals_serial() {
             roots.iter().map(|&r| serial_bfs(&g, r)).collect();
         let oracle = ms_bfs(&g, &roots);
         for (nodes, fanout) in [(16usize, 1u32), (9, 4)] {
-            let mut engine = ButterflyBfs::new(&g, EngineConfig::dgx2(nodes, fanout));
-            let m = engine.run_batch(&roots);
-            engine.assert_batch_agreement().unwrap_or_else(|e| {
+            let mut session = TraversalPlan::build(&g, EngineConfig::dgx2(nodes, fanout))
+                .unwrap()
+                .session();
+            let b = session.run_batch(&roots).unwrap();
+            session.assert_batch_agreement().unwrap_or_else(|e| {
                 panic!("{} n{nodes} f{fanout}: {e}", spec.name)
             });
-            assert_eq!(m.num_roots, roots.len());
+            assert_eq!(b.num_roots(), roots.len());
             for (lane, want) in serial.iter().enumerate() {
                 assert_eq!(
-                    engine.batch_dist(lane),
+                    b.dist(lane),
                     &want[..],
                     "{} n{nodes} f{fanout} lane {lane}",
                     spec.name
@@ -50,12 +52,14 @@ fn full_width_batch_on_kron_like() {
         .unwrap();
     let g = spec.generate_scaled(-8);
     let roots = sample_batch_roots(&g, 64, 0x5EED);
-    let mut engine = ButterflyBfs::new(&g, EngineConfig::dgx2(16, 4));
-    let m = engine.run_batch(&roots);
-    engine.assert_batch_agreement().unwrap();
-    assert_eq!(m.num_roots, 64);
+    let mut session = TraversalPlan::build(&g, EngineConfig::dgx2(16, 4))
+        .unwrap()
+        .session();
+    let b = session.run_batch(&roots).unwrap();
+    session.assert_batch_agreement().unwrap();
+    assert_eq!(b.num_roots(), 64);
     for (lane, &r) in roots.iter().enumerate() {
-        assert_eq!(engine.batch_dist(lane), &serial_bfs(&g, r)[..], "lane {lane}");
+        assert_eq!(b.dist(lane), &serial_bfs(&g, r)[..], "lane {lane}");
     }
 }
 
@@ -68,14 +72,18 @@ fn partial_widths_match_serial() {
         .find(|s| s.name == "urand-like")
         .unwrap();
     let g = spec.generate_scaled(-8);
-    let mut engine = ButterflyBfs::new(&g, EngineConfig::dgx2(8, 2));
+    // One session serves every width back to back — the pooled-reuse
+    // path (lane state resets in place between batches).
+    let mut session = TraversalPlan::build(&g, EngineConfig::dgx2(8, 2))
+        .unwrap()
+        .session();
     for width in [1usize, 2, 63] {
         let roots = sample_batch_roots(&g, width, width as u64);
-        engine.run_batch(&roots);
-        engine.assert_batch_agreement().unwrap();
+        let b = session.run_batch(&roots).unwrap();
+        session.assert_batch_agreement().unwrap();
         for (lane, &r) in roots.iter().enumerate() {
             assert_eq!(
-                engine.batch_dist(lane),
+                b.dist(lane),
                 &serial_bfs(&g, r)[..],
                 "width {width} lane {lane}"
             );
@@ -94,10 +102,13 @@ fn batch_amortizes_bytes_and_rounds_on_suite_graph() {
         .unwrap();
     let g = spec.generate_scaled(-8);
     let roots: Vec<VertexId> = sample_batch_roots(&g, 64, 0xA11);
-    let mut engine = ButterflyBfs::new(&g, EngineConfig::dgx2(16, 4));
-    let bm = engine.run_batch(&roots);
-    engine.assert_batch_agreement().unwrap();
-    let seq = engine.sequential_baseline(&roots);
+    let mut session = TraversalPlan::build(&g, EngineConfig::dgx2(16, 4))
+        .unwrap()
+        .session();
+    let batch = session.run_batch(&roots).unwrap();
+    session.assert_batch_agreement().unwrap();
+    let bm = batch.metrics();
+    let seq = session.sequential_baseline(&roots).unwrap();
     assert!(
         bm.bytes() < seq.bytes,
         "batch bytes {} !< sequential {}",

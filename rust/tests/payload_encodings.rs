@@ -6,7 +6,7 @@
 use butterfly_bfs::bfs::frontier::{Bitmap, MaskFrontier};
 use butterfly_bfs::bfs::msbfs::mask_delta_bytes;
 use butterfly_bfs::bfs::serial::serial_bfs;
-use butterfly_bfs::coordinator::{ButterflyBfs, EngineConfig, PayloadEncoding};
+use butterfly_bfs::coordinator::{EngineConfig, PayloadEncoding, TraversalPlan};
 use butterfly_bfs::graph::gen::urand::uniform_random;
 use butterfly_bfs::util::propcheck::{forall, gen, Config};
 
@@ -110,11 +110,11 @@ fn encodings_semantically_transparent_in_engine() {
         PayloadEncoding::MaskDelta,
     ] {
         let cfg = EngineConfig { payload, ..EngineConfig::dgx2(8, 2) };
-        let mut engine = ButterflyBfs::new(&g, cfg);
-        let m = engine.run(7);
-        engine.assert_agreement().unwrap();
-        assert_eq!(engine.dist(), &want[..], "{payload:?}");
-        bytes.push(m.bytes());
+        let mut session = TraversalPlan::build(&g, cfg).unwrap().session();
+        let r = session.run(7).unwrap();
+        session.assert_agreement().unwrap();
+        assert_eq!(r.dist(), &want[..], "{payload:?}");
+        bytes.push(r.metrics().bytes());
     }
     let (q, b, a) = (bytes[0], bytes[1], bytes[2]);
     assert!(a <= q && a <= b, "{bytes:?}");
@@ -212,12 +212,15 @@ fn batch_dense_fallback_crosses_switchover_both_directions() {
     let v = g.num_vertices();
     let dense_entries = (v as u64 * 8).div_ceil(MaskFrontier::ENTRY_BYTES);
     let roots = vec![0u32; 64]; // duplicate roots: lanes travel together
-    let mut engine = ButterflyBfs::new(&g, EngineConfig::dgx2(4, 1));
-    let m = engine.run_batch(&roots);
-    engine.assert_batch_agreement().unwrap();
+    let mut session = TraversalPlan::build(&g, EngineConfig::dgx2(4, 1))
+        .unwrap()
+        .session();
+    let b = session.run_batch(&roots).unwrap();
+    session.assert_batch_agreement().unwrap();
+    let m = b.metrics();
     let want = ms_bfs(&g, &roots);
     for lane in 0..roots.len() {
-        assert_eq!(engine.batch_dist(lane), want.dist(lane), "lane {lane}");
+        assert_eq!(b.dist(lane), want.dist(lane), "lane {lane}");
     }
     // Reconstruct per-level delta entries: with 64 duplicate lanes every
     // discovery carries the full mask, so entries = discovered / 64.
@@ -261,11 +264,12 @@ fn bitmap_bytes_closed_form_in_engine() {
         payload: PayloadEncoding::Bitmap,
         ..EngineConfig::dgx2(8, 1)
     };
-    let mut engine = ButterflyBfs::new(&g, cfg);
+    let plan = TraversalPlan::build(&g, cfg).unwrap();
+    let mut session = plan.session();
     let per_msg = PayloadEncoding::Bitmap.bytes(0, g.num_vertices());
-    let msgs = engine.schedule().total_messages();
-    let m = engine.run(0);
-    for l in &m.levels {
+    let msgs = plan.schedule().total_messages();
+    let r = session.run(0).unwrap();
+    for l in &r.metrics().levels {
         assert_eq!(l.bytes, per_msg * msgs, "level {}", l.level);
     }
 }

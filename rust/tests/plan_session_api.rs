@@ -1,0 +1,209 @@
+//! Plan/session API surface tests: typed `PlanError`/`QueryError` values
+//! on every invalid input (API and CLI paths — no panics, no
+//! `process::exit` mid-query), pooled session reuse equivalence against
+//! fresh sessions, and field-for-field metrics fidelity against the
+//! legacy `ButterflyBfs` engine.
+
+use butterfly_bfs::coordinator::{
+    EngineConfig, PlanError, QueryError, TraversalPlan,
+};
+use butterfly_bfs::graph::csr::VertexId;
+use butterfly_bfs::graph::gen::urand::uniform_random;
+use std::io::Write;
+
+// ---------- typed errors: API path ----------
+
+#[test]
+fn grid_too_large_is_a_typed_plan_error() {
+    // The satellite fix: `EngineConfig::dgx2_2d` on a graph with fewer
+    // vertices than grid columns (or rows) used to die inside the
+    // partitioner; it now surfaces as `PlanError::GridTooLarge`.
+    let (g, _) = uniform_random(3, 1, 1);
+    let err = TraversalPlan::build(&g, EngineConfig::dgx2_2d(2, 4)).unwrap_err();
+    assert_eq!(err, PlanError::GridTooLarge { rows: 2, cols: 4, num_vertices: 3 });
+    let shown = err.to_string();
+    assert!(shown.contains("2x4") && shown.contains("3 vertices"), "{shown}");
+    // Row axis too: the error is symmetric in the axes.
+    let err = TraversalPlan::build(&g, EngineConfig::dgx2_2d(7, 1)).unwrap_err();
+    assert!(matches!(err, PlanError::GridTooLarge { rows: 7, cols: 1, .. }));
+    // And the 1D analog.
+    let err = TraversalPlan::build(&g, EngineConfig::dgx2(16, 4)).unwrap_err();
+    assert_eq!(err, PlanError::TooManyNodes { num_nodes: 16, num_vertices: 3 });
+}
+
+#[test]
+fn query_errors_round_trip_as_std_errors() {
+    let (g, _) = uniform_random(40, 4, 2);
+    let mut session = TraversalPlan::build(&g, EngineConfig::dgx2(4, 1))
+        .unwrap()
+        .session();
+    let err: Box<dyn std::error::Error> = Box::new(session.run(40).unwrap_err());
+    assert!(err.to_string().contains("root 40 out of range"), "{err}");
+    let err = session.run_batch(&[]).unwrap_err();
+    assert_eq!(err, QueryError::EmptyBatch);
+    let wide: Vec<VertexId> = vec![0; 65];
+    assert_eq!(
+        session.run_batch(&wide).unwrap_err(),
+        QueryError::BatchTooWide { got: 65, max: 64 }
+    );
+    // Duplicates are valid — only width and range are errors.
+    let b = session.run_batch(&[1, 1, 2]).unwrap();
+    assert_eq!(b.dist(0), b.dist(1));
+}
+
+// ---------- typed errors: CLI path ----------
+
+/// Write a tiny 3-vertex edge list the CLI can load.
+fn tiny_graph_file(tag: &str) -> std::path::PathBuf {
+    let p = std::env::temp_dir().join(format!("bbfs-api-{}-{tag}.txt", std::process::id()));
+    let mut f = std::fs::File::create(&p).unwrap();
+    writeln!(f, "0 1").unwrap();
+    writeln!(f, "1 2").unwrap();
+    p
+}
+
+#[test]
+fn cli_reports_grid_too_large_cleanly() {
+    let graph = tiny_graph_file("grid");
+    let exe = env!("CARGO_BIN_EXE_butterfly-bfs");
+    let out = std::process::Command::new(exe)
+        .args([
+            "run",
+            "--graph",
+            graph.to_str().unwrap(),
+            "--nodes",
+            "8",
+            "--mode",
+            "2d",
+            "--grid",
+            "2x4",
+        ])
+        .output()
+        .unwrap();
+    assert_eq!(out.status.code(), Some(2), "typed error exits with code 2");
+    let stderr = String::from_utf8_lossy(&out.stderr);
+    assert!(
+        stderr.contains("error:") && stderr.contains("2x4"),
+        "clean error line, got: {stderr}"
+    );
+    std::fs::remove_file(&graph).ok();
+}
+
+#[test]
+fn cli_reports_root_out_of_range_cleanly() {
+    let graph = tiny_graph_file("root");
+    let exe = env!("CARGO_BIN_EXE_butterfly-bfs");
+    let out = std::process::Command::new(exe)
+        .args([
+            "run",
+            "--graph",
+            graph.to_str().unwrap(),
+            "--nodes",
+            "2",
+            "--root",
+            "99",
+        ])
+        .output()
+        .unwrap();
+    assert_eq!(out.status.code(), Some(2));
+    let stderr = String::from_utf8_lossy(&out.stderr);
+    assert!(stderr.contains("out of range"), "got: {stderr}");
+    std::fs::remove_file(&graph).ok();
+}
+
+// ---------- session reuse ----------
+
+/// The deterministic slice of a run's metrics.
+fn metrics_key(m: &butterfly_bfs::coordinator::RunMetrics) -> (u64, u64, u64, usize) {
+    (m.reached, m.messages(), m.bytes(), m.depth())
+}
+
+#[test]
+fn session_reuse_matches_fresh_sessions() {
+    let (g, _) = uniform_random(600, 8, 3);
+    for cfg in [EngineConfig::dgx2(8, 4), EngineConfig::dgx2_2d(2, 4)] {
+        let plan = TraversalPlan::build(&g, cfg).unwrap();
+        let mut reused = plan.session();
+        for root in [0u32, 17, 401, 17] {
+            let r = reused.run(root).unwrap();
+            let fresh = plan.session().run(root).unwrap();
+            assert_eq!(r.dist(), fresh.dist(), "root {root}");
+            assert_eq!(metrics_key(r.metrics()), metrics_key(fresh.metrics()));
+            // An explicit reset between queries changes nothing.
+            reused.reset();
+            let after_reset = reused.run(root).unwrap();
+            assert_eq!(after_reset.dist(), fresh.dist());
+        }
+    }
+}
+
+#[test]
+fn batch_after_single_root_and_width_changes_match_fresh() {
+    let (g, _) = uniform_random(600, 8, 9);
+    for cfg in [EngineConfig::dgx2(8, 4), EngineConfig::dgx2_2d(2, 4)] {
+        let plan = TraversalPlan::build(&g, cfg).unwrap();
+        let mut reused = plan.session();
+        // Interleave: single-root, then batches of shrinking and growing
+        // widths — the pooled lane state resets (and resizes) in place.
+        reused.run(5).unwrap();
+        let widths: Vec<Vec<VertexId>> = vec![
+            (0..48u32).map(|i| (i * 7) % 600).collect(),
+            vec![3],
+            (0..64u32).map(|i| (i * 11) % 600).collect(),
+        ];
+        for roots in &widths {
+            let b = reused.run_batch(roots).unwrap();
+            reused.assert_batch_agreement().unwrap();
+            let fresh = plan.session().run_batch(roots).unwrap();
+            assert_eq!(b.num_roots(), fresh.num_roots());
+            for lane in 0..b.num_roots() {
+                assert_eq!(b.dist(lane), fresh.dist(lane), "lane {lane}");
+            }
+            assert_eq!(b.metrics().bytes(), fresh.metrics().bytes());
+            assert_eq!(b.metrics().sync_rounds, fresh.metrics().sync_rounds);
+            assert_eq!(b.reached_pairs(), fresh.reached_pairs());
+        }
+        // And a single-root query after all that batching is untouched.
+        let r = reused.run(5).unwrap();
+        let fresh = plan.session().run(5).unwrap();
+        assert_eq!(r.dist(), fresh.dist());
+    }
+}
+
+// ---------- legacy-shim fidelity ----------
+
+#[allow(deprecated)]
+#[test]
+fn traversal_result_metrics_match_legacy_runmetrics_json() {
+    use butterfly_bfs::coordinator::ButterflyBfs;
+    let (g, _) = uniform_random(400, 6, 13);
+    for cfg in [EngineConfig::dgx2(4, 2), EngineConfig::dgx2_2d(2, 2)] {
+        let mut legacy = ButterflyBfs::new(&g, cfg.clone());
+        let mut lm = legacy.run(7);
+        let mut session = TraversalPlan::build(&g, cfg).unwrap().session();
+        let mut nm = session.run(7).unwrap().into_metrics();
+        // Wallclock is measured per process run; everything else —
+        // reach, depth, per-level counts, bytes, simulated clock, the
+        // fold/expand split — must match field for field in the JSON.
+        lm.wall_seconds = 0.0;
+        nm.wall_seconds = 0.0;
+        assert_eq!(lm.to_json().render(), nm.to_json().render());
+    }
+}
+
+#[allow(deprecated)]
+#[test]
+fn batch_result_metrics_match_legacy_batchmetrics_json() {
+    use butterfly_bfs::coordinator::ButterflyBfs;
+    let (g, _) = uniform_random(400, 6, 21);
+    let roots: Vec<VertexId> = (0..32u32).map(|i| (i * 9) % 400).collect();
+    for cfg in [EngineConfig::dgx2(8, 4), EngineConfig::dgx2_2d(2, 4)] {
+        let mut legacy = ButterflyBfs::new(&g, cfg.clone());
+        let mut lm = legacy.run_batch(&roots);
+        let mut session = TraversalPlan::build(&g, cfg).unwrap().session();
+        let mut nm = session.run_batch(&roots).unwrap().into_metrics();
+        lm.wall_seconds = 0.0;
+        nm.wall_seconds = 0.0;
+        assert_eq!(lm.to_json().render(), nm.to_json().render());
+    }
+}

@@ -6,7 +6,7 @@
 #![cfg(feature = "xla")]
 
 use butterfly_bfs::bfs::serial::serial_bfs;
-use butterfly_bfs::coordinator::{ButterflyBfs, EngineConfig, PatternKind};
+use butterfly_bfs::coordinator::{EngineConfig, PatternKind, TraversalPlan};
 use butterfly_bfs::graph::gen::kronecker::{kronecker, KroneckerParams};
 use butterfly_bfs::graph::gen::structured::{binary_tree, grid2d, star};
 use butterfly_bfs::partition::one_d::partition_1d;
@@ -42,10 +42,11 @@ fn xla_engine_structured_graphs() {
         let cfg = EngineConfig::dgx2(4, 2);
         let part = partition_1d(&g, cfg.num_nodes);
         let backends = XlaFrontierBackend::for_slabs(Arc::clone(&step), &part.slabs(&g)).unwrap();
-        let mut engine = ButterflyBfs::with_backends(&g, cfg, backends);
-        engine.run(0);
-        engine.assert_agreement().unwrap();
-        assert_eq!(engine.dist(), &serial_bfs(&g, 0)[..], "{name}");
+        let plan = TraversalPlan::build(&g, cfg).unwrap();
+        let mut session = plan.session_with_backends(backends).unwrap();
+        let r = session.run(0).unwrap();
+        session.assert_agreement().unwrap();
+        assert_eq!(r.dist(), &serial_bfs(&g, 0)[..], "{name}");
     }
 }
 
@@ -61,10 +62,11 @@ fn xla_engine_kron_all_patterns() {
         let cfg = EngineConfig { pattern, ..EngineConfig::dgx2(6, 1) };
         let part = partition_1d(&g, cfg.num_nodes);
         let backends = XlaFrontierBackend::for_slabs(Arc::clone(&step), &part.slabs(&g)).unwrap();
-        let mut engine = ButterflyBfs::with_backends(&g, cfg, backends);
-        engine.run(5);
-        engine.assert_agreement().unwrap();
-        assert_eq!(engine.dist(), &serial_bfs(&g, 5)[..], "{pattern:?}");
+        let plan = TraversalPlan::build(&g, cfg).unwrap();
+        let mut session = plan.session_with_backends(backends).unwrap();
+        let r = session.run(5).unwrap();
+        session.assert_agreement().unwrap();
+        assert_eq!(r.dist(), &serial_bfs(&g, 5)[..], "{pattern:?}");
     }
 }
 
@@ -79,10 +81,11 @@ fn xla_direction_optimizing_matches_serial() {
     };
     let part = partition_1d(&g, cfg.num_nodes);
     let backends = XlaFrontierBackend::for_slabs(step, &part.slabs(&g)).unwrap();
-    let mut engine = ButterflyBfs::with_backends(&g, cfg, backends);
-    engine.run(0);
-    engine.assert_agreement().unwrap();
-    assert_eq!(engine.dist(), &serial_bfs(&g, 0)[..]);
+    let plan = TraversalPlan::build(&g, cfg).unwrap();
+    let mut session = plan.session_with_backends(backends).unwrap();
+    let r = session.run(0).unwrap();
+    session.assert_agreement().unwrap();
+    assert_eq!(r.dist(), &serial_bfs(&g, 0)[..]);
 }
 
 #[test]
@@ -92,10 +95,14 @@ fn xla_metrics_match_native_metrics() {
     let cfg = EngineConfig::dgx2(4, 4);
     let part = partition_1d(&g, cfg.num_nodes);
     let backends = XlaFrontierBackend::for_slabs(step, &part.slabs(&g)).unwrap();
-    let mut xla = ButterflyBfs::with_backends(&g, cfg.clone(), backends);
-    let mut native = ButterflyBfs::new(&g, cfg);
-    let mx = xla.run(1);
-    let mn = native.run(1);
+    // One plan, two sessions with different backends — the split API's
+    // way of running backend comparisons over identical artifacts.
+    let plan = TraversalPlan::build(&g, cfg).unwrap();
+    let mut xla = plan.session_with_backends(backends).unwrap();
+    let mut native = plan.session();
+    let rx = xla.run(1).unwrap();
+    let rn = native.run(1).unwrap();
+    let (mx, mn) = (rx.metrics(), rn.metrics());
     // Same traversal structure: depth, reach, per-level discoveries, and
     // examined-edge counts all coincide.
     assert_eq!(mx.depth(), mn.depth());

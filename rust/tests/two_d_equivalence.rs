@@ -8,7 +8,7 @@
 
 use butterfly_bfs::bfs::serial::{serial_bfs, INF};
 use butterfly_bfs::comm::analysis::ModeVolume;
-use butterfly_bfs::coordinator::{ButterflyBfs, EngineConfig};
+use butterfly_bfs::coordinator::{EngineConfig, TraversalPlan};
 use butterfly_bfs::graph::csr::{Csr, VertexId};
 use butterfly_bfs::graph::gen::structured::{grid2d, path, star};
 use butterfly_bfs::graph::gen::table1_suite;
@@ -21,28 +21,32 @@ const GRIDS: [(u32, u32); 5] = [(4, 4), (2, 8), (8, 2), (3, 3), (1, 4)];
 fn check_equivalence(g: &Csr, root: VertexId, label: &str) {
     let want = serial_bfs(g, root);
     let nodes_1d = 16.min(g.num_vertices());
-    let mut one_d = ButterflyBfs::new(g, EngineConfig::dgx2(nodes_1d, 4));
-    one_d.run(root);
+    let mut one_d = TraversalPlan::build(g, EngineConfig::dgx2(nodes_1d, 4))
+        .unwrap()
+        .session();
+    let r1 = one_d.run(root).unwrap();
     one_d.assert_agreement().unwrap();
-    assert_eq!(one_d.dist(), &want[..], "{label}: 1D vs serial");
+    assert_eq!(r1.dist(), &want[..], "{label}: 1D vs serial");
     for (rows, cols) in GRIDS {
         if rows as usize > g.num_vertices() || cols as usize > g.num_vertices() {
             continue;
         }
-        let mut two_d = ButterflyBfs::new(g, EngineConfig::dgx2_2d(rows, cols));
-        let m = two_d.run(root);
+        let plan = TraversalPlan::build(g, EngineConfig::dgx2_2d(rows, cols)).unwrap();
+        let mut two_d = plan.session();
+        let r2 = two_d.run(root).unwrap();
         two_d.assert_agreement().unwrap();
+        let m = r2.metrics();
         assert_eq!(
-            two_d.dist(),
+            r2.dist(),
             &want[..],
             "{label}: 2D {rows}x{cols} vs serial"
         );
         assert_eq!(
-            two_d.dist(),
-            one_d.dist(),
+            r2.dist(),
+            r1.dist(),
             "{label}: 2D {rows}x{cols} vs 1D"
         );
-        let p2 = two_d.partition().as_two_d().unwrap();
+        let p2 = plan.partition().as_two_d().unwrap();
         let volume = ModeVolume {
             mode: format!("2d-{rows}x{cols} fold-expand"),
             levels: m.depth() as u64,
@@ -90,10 +94,12 @@ fn disconnected_graph_unreached_stay_inf() {
     b.add_edge(30, 31); // island
     let (g, _) = b.build_undirected();
     check_equivalence(&g, 0, "disconnected");
-    let mut engine = ButterflyBfs::new(&g, EngineConfig::dgx2_2d(4, 4));
-    let m = engine.run(0);
-    assert_eq!(m.reached, 20);
-    assert_eq!(engine.dist()[30], INF);
+    let mut session = TraversalPlan::build(&g, EngineConfig::dgx2_2d(4, 4))
+        .unwrap()
+        .session();
+    let r = session.run(0).unwrap();
+    assert_eq!(r.reached(), 20);
+    assert_eq!(r.dist()[30], INF);
 }
 
 /// The single-vertex graph runs (only the 1×1 grid fits) and terminates
@@ -102,11 +108,13 @@ fn disconnected_graph_unreached_stay_inf() {
 fn single_vertex_graph() {
     let g = Csr::from_edges(1, &[]);
     assert_eq!(serial_bfs(&g, 0), vec![0]);
-    let mut engine = ButterflyBfs::new(&g, EngineConfig::dgx2_2d(1, 1));
-    let m = engine.run(0);
-    engine.assert_agreement().unwrap();
-    assert_eq!(engine.dist(), &[0][..]);
-    assert_eq!(m.messages(), 0);
+    let mut session = TraversalPlan::build(&g, EngineConfig::dgx2_2d(1, 1))
+        .unwrap()
+        .session();
+    let r = session.run(0).unwrap();
+    session.assert_agreement().unwrap();
+    assert_eq!(r.dist(), &[0][..]);
+    assert_eq!(r.metrics().messages(), 0);
 }
 
 /// Duplicate-edge inputs (the raw CSR constructor does not dedup):
@@ -142,10 +150,12 @@ fn suite_two_d_run_batch_equals_serial() {
         let mut roots = sample_batch_roots(&g, 8, 0x2D ^ spec.seed);
         roots.push(roots[0]); // duplicate lane rides along
         for (rows, cols) in [(4u32, 4u32), (2, 3)] {
-            let mut engine = ButterflyBfs::new(&g, EngineConfig::dgx2_2d(rows, cols));
-            let m = engine.run_batch(&roots);
-            engine.assert_batch_agreement().unwrap();
-            let p2 = engine.partition().as_two_d().unwrap();
+            let plan = TraversalPlan::build(&g, EngineConfig::dgx2_2d(rows, cols)).unwrap();
+            let mut session = plan.session();
+            let b = session.run_batch(&roots).unwrap();
+            session.assert_batch_agreement().unwrap();
+            let p2 = plan.partition().as_two_d().unwrap();
+            let m = b.metrics();
             assert_eq!(
                 m.messages(),
                 p2.message_volume(m.depth() as u64),
@@ -154,7 +164,7 @@ fn suite_two_d_run_batch_equals_serial() {
             );
             for (lane, &r) in roots.iter().enumerate() {
                 assert_eq!(
-                    engine.batch_dist(lane),
+                    b.dist(lane),
                     &serial_bfs(&g, r)[..],
                     "{} {rows}x{cols} lane {lane}",
                     spec.name
@@ -181,9 +191,9 @@ fn two_d_direction_modes_equal_serial_on_suite_graph() {
         DirectionMode::diropt(),
     ] {
         let cfg = EngineConfig { direction, ..EngineConfig::dgx2_2d(2, 8) };
-        let mut engine = ButterflyBfs::new(&g, cfg);
-        engine.run(1);
-        engine.assert_agreement().unwrap();
-        assert_eq!(engine.dist(), &want[..], "{direction:?}");
+        let mut session = TraversalPlan::build(&g, cfg).unwrap().session();
+        let r = session.run(1).unwrap();
+        session.assert_agreement().unwrap();
+        assert_eq!(r.dist(), &want[..], "{direction:?}");
     }
 }
