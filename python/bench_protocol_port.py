@@ -1,0 +1,706 @@
+"""Line-for-line Python port of the `bench-protocol` pipeline.
+
+This is the generation/validation tool behind the committed
+``BENCH_engine.json``: a faithful port of the Rust crate's PRNG
+(SplitMix64 -> xoshiro256**), the Graph500 Kronecker generator + ETL,
+the 1D edge-balanced partition, the butterfly schedule, the batched
+MS-BFS engine with the direction-optimizing state machine (top-down /
+bottom-up / alpha-beta), the negotiated mask-delta payload pricing, and
+the DGX-2 interconnect/device timing models. Integer counters reproduce
+the Rust engine exactly; simulated-clock floats reproduce it to ~1e-15
+(the Rust checker compares floats with 1e-6 relative tolerance).
+
+The canonical way to regenerate the artifact is the Rust CLI::
+
+    cargo run --release -- bench-protocol --out BENCH_engine.json
+
+This port exists so the artifact can be produced and cross-checked in
+environments without a Rust toolchain, and doubles as an executable
+spec: ``python python/bench_protocol_port.py --selftest`` sweeps the
+batched engine against a serial BFS oracle across random configs and
+direction policies before writing anything.
+"""
+
+import argparse
+import json
+import math
+import sys
+
+MASK64 = (1 << 64) - 1
+INF = 2**32 - 1
+
+
+# --------------------------------------------------------------------------
+# PRNG (util/prng.rs)
+# --------------------------------------------------------------------------
+
+
+class SplitMix64:
+    def __init__(self, seed):
+        self.state = seed & MASK64
+
+    def next_u64(self):
+        self.state = (self.state + 0x9E3779B97F4A7C15) & MASK64
+        z = self.state
+        z = ((z ^ (z >> 30)) * 0xBF58476D1CE4E5B9) & MASK64
+        z = ((z ^ (z >> 27)) * 0x94D049BB133111EB) & MASK64
+        return (z ^ (z >> 31)) & MASK64
+
+
+def _rotl(x, k):
+    return ((x << k) | (x >> (64 - k))) & MASK64
+
+
+class Xoshiro256StarStar:
+    def __init__(self, seed):
+        sm = SplitMix64(seed)
+        self.s = [sm.next_u64() for _ in range(4)]
+
+    def next_u64(self):
+        s = self.s
+        result = (_rotl((s[1] * 5) & MASK64, 7) * 9) & MASK64
+        t = (s[1] << 17) & MASK64
+        s[2] ^= s[0]
+        s[3] ^= s[1]
+        s[1] ^= s[2]
+        s[0] ^= s[3]
+        s[2] ^= t
+        s[3] = _rotl(s[3], 45)
+        return result
+
+    def next_f64(self):
+        return (self.next_u64() >> 11) * (1.0 / (1 << 53))
+
+    def next_below(self, bound):
+        assert bound > 0
+        x = self.next_u64()
+        m = x * bound
+        lo = m & MASK64
+        if lo < bound:
+            t = ((1 << 64) - bound) % bound
+            while lo < t:
+                x = self.next_u64()
+                m = x * bound
+                lo = m & MASK64
+        return m >> 64
+
+    def shuffle(self, xs):
+        for i in range(len(xs) - 1, 0, -1):
+            j = self.next_below(i + 1)
+            xs[i], xs[j] = xs[j], xs[i]
+
+
+# --------------------------------------------------------------------------
+# Graph generation + ETL (graph/gen/kronecker.rs, graph/builder.rs)
+# --------------------------------------------------------------------------
+
+
+class Csr:
+    def __init__(self, n, arcs):
+        """`arcs` must already be clean (symmetrized, deduped, sorted)."""
+        self.n = n
+        self.offsets = [0] * (n + 1)
+        self.edges = [v for (_, v) in arcs]
+        for (u, _) in arcs:
+            self.offsets[u + 1] += 1
+        for i in range(n):
+            self.offsets[i + 1] += self.offsets[i]
+
+    def num_edges(self):
+        return len(self.edges)
+
+    def neighbors(self, v):
+        return self.edges[self.offsets[v]:self.offsets[v + 1]]
+
+    def degree(self, v):
+        return self.offsets[v + 1] - self.offsets[v]
+
+
+def build_undirected(n, raw_arcs):
+    arcs = []
+    for (u, v) in raw_arcs:
+        if u == v:
+            continue
+        arcs.append((u, v))
+        arcs.append((v, u))
+    arcs.sort()
+    dedup = []
+    for a in arcs:
+        if not dedup or dedup[-1] != a:
+            dedup.append(a)
+    return Csr(n, dedup)
+
+
+def kronecker(scale, edge_factor, seed):
+    """Graph500 defaults: A,B,C = .57,.19,.19, noise 0, permuted ids."""
+    n = 1 << scale
+    m = n * edge_factor
+    rng = Xoshiro256StarStar(seed)
+    ids = list(range(n))
+    rng.shuffle(ids)
+    raw = []
+    for _ in range(m):
+        u = v = 0
+        for lvl in range(scale):
+            r = rng.next_f64()
+            bit = 1 << (scale - 1 - lvl)
+            if r < 0.57:
+                pass
+            elif r < 0.57 + 0.19:
+                v |= bit
+            elif r < 0.57 + 0.19 + 0.19:
+                u |= bit
+            else:
+                u |= bit
+                v |= bit
+        raw.append((ids[u], ids[v]))
+    return build_undirected(n, raw)
+
+
+def uniform_random(n, edge_factor, seed):
+    rng = Xoshiro256StarStar(seed)
+    raw = []
+    for _ in range(n * edge_factor):
+        u = rng.next_below(n)
+        v = rng.next_below(n)
+        raw.append((u, v))
+    return build_undirected(n, raw)
+
+
+def sample_batch_roots(g, width, seed):
+    rng = Xoshiro256StarStar(seed)
+    roots = []
+    while len(roots) < width:
+        v = rng.next_below(g.n)
+        for _ in range(8):
+            if g.degree(v) > 0:
+                break
+            v = rng.next_below(g.n)
+        if g.degree(v) == 0:
+            for off in range(1, g.n):
+                u = (v + off) % g.n
+                if g.degree(u) > 0:
+                    v = u
+                    break
+        roots.append(v)
+    return roots
+
+
+# --------------------------------------------------------------------------
+# Partition + schedule (partition/one_d.rs, comm/butterfly.rs)
+# --------------------------------------------------------------------------
+
+
+def partition_1d_cuts(g, parts):
+    m = float(g.num_edges())
+    cuts, v = [0], 0
+    for p in range(1, parts):
+        target = m * p / parts
+        max_v = g.n - (parts - p)
+        while v < max_v and g.offsets[v + 1] < target:
+            v += 1
+        v = min(max(v, cuts[-1] + 1), max_v)
+        cuts.append(v)
+    cuts.append(g.n)
+    return cuts
+
+
+def butterfly_schedule(cn, fanout):
+    radix = max(fanout, 2)
+    depth, span = 0, 1
+    while span < cn:
+        span *= radix
+        depth += 1
+    rounds = []
+    for i in range(depth):
+        stride = radix**i
+        rnd = []
+        for gdst in range(cn):
+            digit = (gdst // stride) % radix
+            base = gdst - digit * stride
+            srcs = []
+            for j in range(radix):
+                if j == digit:
+                    continue
+                partner = base + j * stride
+                holder = cn - 1 if partner >= cn else partner
+                if holder != gdst and holder not in srcs:
+                    srcs.append(holder)
+            for src in srcs:
+                rnd.append((src, gdst))
+        rnd = sorted(set(rnd))
+        rounds.append(rnd)
+    return rounds
+
+
+# --------------------------------------------------------------------------
+# Timing models (net/model.rs, net/sim.rs)
+# --------------------------------------------------------------------------
+
+DGX2 = dict(link_bw=25.0e9, ports=6, latency=2.0e-6)
+V100 = dict(edge_rate=22.0e9, level_overhead=12.0e-6, bu_factor=3.0)
+
+
+def level_time(edges, bottom_up):
+    f = V100["bu_factor"] if bottom_up else 1.0
+    return V100["level_overhead"] + edges * f / V100["edge_rate"]
+
+
+def simulate_schedule(rounds, payloads, cn):
+    """Switched (NVSwitch) fabric — mirrors net/sim.rs exactly."""
+    ports = float(DGX2["ports"])
+    node_bw = DGX2["link_bw"] * DGX2["ports"]
+    total_bytes = total_msgs = 0
+    round_times = []
+    for ri, rnd in enumerate(rounds):
+        send_b = [0] * cn
+        recv_b = [0] * cn
+        send_m = [0] * cn
+        recv_m = [0] * cn
+        max_p = [0] * cn
+        rbytes = 0
+        for ti, (src, dst) in enumerate(rnd):
+            b = payloads[ri][ti]
+            send_b[src] += b
+            recv_b[dst] += b
+            send_m[src] += 1
+            recv_m[dst] += 1
+            max_p[src] = max(max_p[src], b)
+            max_p[dst] = max(max_p[dst], b)
+            rbytes += b
+        total_bytes += rbytes
+        total_msgs += len(rnd)
+        t_round = 0.0
+        for gg in range(cn):
+            setup_send = DGX2["latency"] * math.ceil(send_m[gg] / ports)
+            setup_recv = DGX2["latency"] * math.ceil(recv_m[gg] / ports)
+
+            def makespan(msgs, byts):
+                slots = math.ceil(msgs / ports)
+                return max(byts / node_bw, slots * max_p[gg] / DGX2["link_bw"])
+
+            t = max(setup_send + makespan(send_m[gg], send_b[gg]),
+                    setup_recv + makespan(recv_m[gg], recv_b[gg]))
+            t_round = max(t_round, t)
+        round_times.append(t_round)
+    return round_times, total_bytes, total_msgs
+
+
+# --------------------------------------------------------------------------
+# Payload pricing (bfs/msbfs.rs)
+# --------------------------------------------------------------------------
+
+
+def mask_delta_bytes(entries, distinct_vertices, distinct_masks, active_lanes, nv):
+    if entries == 0:
+        return 0
+    presence = -(-nv // 64) * 8
+    sparse = entries * 12
+    grouped = distinct_masks * 12 + entries * 4
+    dense = presence + distinct_vertices * 8
+    lane_bitmaps = (1 + active_lanes) * presence
+    return min(sparse, grouped, dense, lane_bitmaps)
+
+
+def mask_delta_bytes_dense(distinct_vertices, active_lanes, nv):
+    if distinct_vertices == 0:
+        return 0
+    presence = -(-nv // 64) * 8
+    return min(presence + distinct_vertices * 8, (1 + active_lanes) * presence)
+
+
+# --------------------------------------------------------------------------
+# Batched engine (coordinator/session.rs run_batch, 1D)
+# --------------------------------------------------------------------------
+
+
+class NodeState:
+    def __init__(self, nv, lo, hi, track_full):
+        self.lo, self.hi = lo, hi
+        self.nv = nv
+        self.seen = [0] * nv
+        self.visit = [0] * nv
+        self.next_mask = [0] * nv
+        self.q_local = []
+        self.q_next = []
+        self.delta = []
+        self.delta_stamp = [0] * nv
+        self.delta_distinct = 0
+        self.mask_values = set()
+        self.active_lanes = 0
+        self.edges = 0
+        self.track_full = track_full
+        self.visit_full = [0] * nv if track_full else None
+        self.dist = None  # lane-major, node 0 only
+
+    def owns(self, v):
+        return self.lo <= v < self.hi
+
+    def discover(self, v, mask, level, owned):
+        d = mask & ~self.seen[v] & MASK64
+        if d == 0:
+            return
+        self.seen[v] |= d
+        if self.dist is not None:
+            m, lane = d, 0
+            while m:
+                if m & 1:
+                    self.dist[lane][v] = level + 1
+                m >>= 1
+                lane += 1
+        self.delta.append((v, d))
+        if self.delta_stamp[v] != level + 1:
+            self.delta_stamp[v] = level + 1
+            self.delta_distinct += 1
+        self.active_lanes |= d
+        self.mask_values.add(d)
+        if owned:
+            if self.next_mask[v] == 0:
+                self.q_next.append(v)
+            self.next_mask[v] |= d
+
+    def priced(self, entries, bottom_up):
+        if bottom_up:
+            return mask_delta_bytes_dense(
+                min(self.delta_distinct, entries),
+                bin(self.active_lanes).count("1"),
+                self.nv,
+            )
+        return mask_delta_bytes(
+            entries,
+            min(self.delta_distinct, entries),
+            min(len(self.mask_values), entries),
+            bin(self.active_lanes).count("1"),
+            self.nv,
+        )
+
+    def swap_level(self):
+        if self.track_full:
+            self.visit_full = [0] * self.nv
+            for (v, m) in self.delta:
+                self.visit_full[v] |= m
+        self.q_local = self.q_next
+        self.q_next = []
+        for v in self.q_local:
+            self.visit[v] = self.next_mask[v]
+            self.next_mask[v] = 0
+        self.delta = []
+        self.delta_distinct = 0
+        self.mask_values = set()
+        self.active_lanes = 0
+        self.edges = 0
+
+
+def run_batch(g, nodes, fanout, roots, direction, alpha=15, beta=18):
+    """direction in {'topdown', 'bottomup', 'diropt'}; returns metrics dict."""
+    cuts = partition_1d_cuts(g, nodes)
+    rounds = butterfly_schedule(nodes, fanout)
+    b = len(roots)
+    full = (1 << b) - 1 if b < 64 else MASK64
+    track = direction != "topdown"
+    sts = [NodeState(g.n, cuts[i], cuts[i + 1], track) for i in range(nodes)]
+    sts[0].dist = [[INF] * g.n for _ in range(b)]
+    for st in sts:
+        for lane, r in enumerate(roots):
+            bit = 1 << lane
+            st.seen[r] |= bit
+            if st.dist is not None:
+                st.dist[lane][r] = 0
+            if track:
+                st.visit_full[r] |= bit
+            if st.owns(r):
+                if st.visit[r] == 0:
+                    st.q_local.append(r)
+                st.visit[r] |= bit
+    dense_threshold_td = max(-(-(g.n * 8) // 12), 1)
+    levels = []
+    sync_rounds = 0
+    bottom_up = False
+    prev_frontier = 0
+    m_unexplored = g.num_edges()
+    level = 0
+    while True:
+        frontier = sum(len(st.q_local) for st in sts)
+        if frontier == 0:
+            break
+        if direction == "bottomup":
+            bottom_up = True
+        elif direction == "diropt":
+            m_frontier = sum(
+                g.degree(v) for st in sts for v in st.q_local
+            )
+            growing = frontier > prev_frontier
+            if (not bottom_up and alpha > 0 and growing
+                    and m_frontier > m_unexplored // alpha):
+                bottom_up = True
+            elif (bottom_up and beta > 0 and not growing
+                    and frontier < g.n // beta):
+                bottom_up = False
+            prev_frontier = frontier
+        # Phase 1
+        if bottom_up:
+            for st in sts:
+                st.edges = 0
+                found = []
+                for v in range(st.lo, st.hi):
+                    missing = full & ~st.seen[v] & MASK64
+                    if missing == 0:
+                        continue
+                    acc = 0
+                    for u in g.neighbors(v):
+                        st.edges += 1
+                        acc |= st.visit_full[u]
+                        if acc & missing == missing:
+                            break
+                    d = acc & missing
+                    if d:
+                        found.append((v, d))
+                for (v, d) in found:
+                    st.discover(v, d, level, True)
+        else:
+            for st in sts:
+                q = st.q_local
+                for v in q:
+                    mv = st.visit[v]
+                    st.visit[v] = 0
+                    st.edges += g.degree(v)
+                    for u in g.neighbors(v):
+                        st.discover(u, mv, level, st.owns(u))
+        edges = sum(st.edges for st in sts)
+        max_node_edges = max(st.edges for st in sts) if sts else 0
+        sim_compute = level_time(max_node_edges, bottom_up)
+        # Phase 2: pricing is direction-aware (dense wire forms for
+        # bottom-up), merge dispatch stays on the entry-count threshold.
+        dense_threshold = dense_threshold_td
+        payloads = []
+        mask_snap = [None] * nodes
+        mask_done = [0] * nodes
+        for rnd in rounds:
+            snap = [(len(st.delta), st.priced(len(st.delta), bottom_up))
+                    for st in sts]
+            for k, st in enumerate(sts):
+                if snap[k][0] >= dense_threshold:
+                    if mask_snap[k] is None:
+                        mask_snap[k] = [0] * g.n
+                    for (v, m) in st.delta[mask_done[k]:snap[k][0]]:
+                        mask_snap[k][v] |= m
+                    mask_done[k] = snap[k][0]
+            payloads.append([snap[src][1] for (src, _) in rnd])
+            for (src, dst) in rnd:
+                take = snap[src][0]
+                if take >= dense_threshold:
+                    for v, m in enumerate(mask_snap[src]):
+                        if m:
+                            sts[dst].discover(v, m, level, sts[dst].owns(v))
+                else:
+                    prefix = sts[src].delta[:take]
+                    for (v, m) in prefix:
+                        sts[dst].discover(v, m, level, sts[dst].owns(v))
+        round_times, rbytes, rmsgs = simulate_schedule(rounds, payloads, nodes)
+        discovered = sum(bin(m).count("1") for (_, m) in sts[0].delta)
+        levels.append(dict(
+            level=level,
+            frontier=frontier,
+            edges=edges,
+            max_node_edges=max_node_edges,
+            discovered=discovered,
+            messages=rmsgs,
+            bytes=rbytes,
+            direction="bottomup" if bottom_up else "topdown",
+            sim_compute=sim_compute,
+            sim_comm=sum(round_times),
+        ))
+        sync_rounds += len(rounds)
+        if direction == "diropt":
+            next_edges = sum(g.degree(v) for st in sts for v in st.q_next)
+            m_unexplored = max(m_unexplored - next_edges, 0)
+        for st in sts:
+            st.swap_level()
+        level += 1
+    reached_pairs = sum(
+        1 for lane in range(b) for d in sts[0].dist[lane] if d != INF
+    )
+    return dict(
+        levels=levels,
+        sync_rounds=sync_rounds,
+        reached_pairs=reached_pairs,
+        dist=sts[0].dist,
+        graph_edges=g.num_edges(),
+    )
+
+
+def serial_bfs(g, root):
+    dist = [INF] * g.n
+    dist[root] = 0
+    q, d = [root], 0
+    while q:
+        nq = []
+        for v in q:
+            for u in g.neighbors(v):
+                if dist[u] == INF:
+                    dist[u] = d + 1
+                    nq.append(u)
+        q = nq
+        d += 1
+    return dist
+
+
+# --------------------------------------------------------------------------
+# The protocol (harness/protocol.rs)
+# --------------------------------------------------------------------------
+
+PROTOCOL = dict(
+    name="engine-bench-v1",
+    graph="kron-like",
+    kron_scale=21,
+    kron_edge_factor=16,
+    kron_seed=0xB0B0_0007,
+    scale_delta=-10,
+    batch_width=64,
+    root_seed=7,
+    node_counts=[16, 64],
+    fanout=4,
+)
+
+
+def gteps(edges, seconds):
+    return float("inf") if seconds <= 0 else edges / seconds / 1e9
+
+
+def direction_report(m):
+    depth = len(m["levels"])
+    bu_levels = sum(1 for l in m["levels"] if l["direction"] == "bottomup")
+    total_edges = sum(l["edges"] for l in m["levels"])
+    bu_edges = sum(l["edges"] for l in m["levels"] if l["direction"] == "bottomup")
+    total_bytes = sum(l["bytes"] for l in m["levels"])
+    sim_seconds = sum(l["sim_compute"] + l["sim_comm"] for l in m["levels"])
+    return {
+        "levels": depth,
+        "bottom_up_levels": bu_levels,
+        "edges_inspected": total_edges,
+        "bottom_up_edges": bu_edges,
+        "bytes": total_bytes,
+        "bytes_per_level": total_bytes / max(depth, 1),
+        "messages": sum(l["messages"] for l in m["levels"]),
+        "sync_rounds": m["sync_rounds"],
+        "reached_pairs": m["reached_pairs"],
+        "sim_seconds": sim_seconds,
+        "sim_gteps": gteps(m["graph_edges"], sim_seconds),
+        "per_level": [
+            {
+                "level": l["level"],
+                "frontier": l["frontier"],
+                "edges": l["edges"],
+                "bytes": l["bytes"],
+                "direction": l["direction"],
+            }
+            for l in m["levels"]
+        ],
+    }
+
+
+def engine_bench_report():
+    scale = max(PROTOCOL["kron_scale"] + PROTOCOL["scale_delta"], 4)
+    g = kronecker(scale, PROTOCOL["kron_edge_factor"], PROTOCOL["kron_seed"])
+    roots = sample_batch_roots(g, PROTOCOL["batch_width"], PROTOCOL["root_seed"])
+    configs = []
+    for p in PROTOCOL["node_counts"]:
+        dirs = {}
+        for d in ["topdown", "bottomup", "diropt"]:
+            m = run_batch(g, p, PROTOCOL["fanout"], roots, d)
+            dirs[d] = direction_report(m)
+        configs.append({
+            "nodes": p,
+            "fanout": PROTOCOL["fanout"],
+            "mode": "1d",
+            "directions": dirs,
+        })
+    return {
+        "protocol": PROTOCOL["name"],
+        "graph": {
+            "name": PROTOCOL["graph"],
+            "scale_delta": PROTOCOL["scale_delta"],
+            "vertices": g.n,
+            "edges": g.num_edges(),
+        },
+        "batch": {
+            "width": PROTOCOL["batch_width"],
+            "seed": PROTOCOL["root_seed"],
+        },
+        "configs": configs,
+    }
+
+
+# --------------------------------------------------------------------------
+# Self-test + CLI
+# --------------------------------------------------------------------------
+
+
+def selftest():
+    rng = Xoshiro256StarStar(0x5E1F)
+    cases = 0
+    for _ in range(60):
+        n = 5 + rng.next_below(200)
+        ef = 1 + rng.next_below(5)
+        g = uniform_random(n, ef, rng.next_u64())
+        b = 1 + rng.next_below(16)
+        roots = [rng.next_below(n) for _ in range(b)]
+        nodes = 1 + rng.next_below(min(8, n))
+        fanout = 1 + rng.next_below(4)
+        want = [serial_bfs(g, r) for r in roots]
+        base = None
+        for d in ["topdown", "bottomup", "diropt"]:
+            m = run_batch(g, nodes, fanout, roots, d)
+            for lane in range(b):
+                assert m["dist"][lane] == want[lane], (
+                    f"n={n} nodes={nodes} f={fanout} {d} lane {lane}"
+                )
+            tm = (len(m["levels"]), m["reached_pairs"])
+            if base is None:
+                base = tm
+            else:
+                assert tm == base, f"level count diverged under {d}"
+            cases += 1
+    print(f"selftest: {cases} direction runs bit-identical to serial oracle")
+
+
+def validate_acceptance(report):
+    """The invariants harness/protocol.rs::acceptance checks in Rust."""
+    for c in report["configs"]:
+        d = c["directions"]
+        td, dopt = d["topdown"], d["diropt"]
+        assert dopt["edges_inspected"] < td["edges_inspected"], c["nodes"]
+        assert dopt["bottom_up_levels"] >= 1, c["nodes"]
+        dense = max(td["per_level"], key=lambda l: l["frontier"])
+        ddo = dopt["per_level"][dense["level"]]
+        assert ddo["edges"] < dense["edges"], (c["nodes"], dense, ddo)
+        assert ddo["direction"] == "bottomup", (c["nodes"], ddo)
+    print("acceptance invariants hold on the fresh report")
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--selftest", action="store_true")
+    ap.add_argument("--out", default=None)
+    args = ap.parse_args()
+    if args.selftest:
+        selftest()
+    report = engine_bench_report()
+    validate_acceptance(report)
+    for c in report["configs"]:
+        d = c["directions"]
+        print(f"p={c['nodes']}: edges td={d['topdown']['edges_inspected']} "
+              f"bu={d['bottomup']['edges_inspected']} "
+              f"do={d['diropt']['edges_inspected']} "
+              f"(do bu-levels {d['diropt']['bottom_up_levels']}"
+              f"/{d['diropt']['levels']})")
+    if args.out:
+        text = json.dumps(report, sort_keys=True, separators=(",", ":"))
+        with open(args.out, "w") as f:
+            f.write(text + "\n")
+        print(f"wrote {args.out}")
+
+
+if __name__ == "__main__":
+    sys.setrecursionlimit(10000)
+    main()

@@ -46,6 +46,36 @@ def partition_1d_cuts(n, offsets, parts):
     return cuts
 
 
+def weight_balanced_cuts(weights, parts):
+    """Greedy prefix cuts over arbitrary per-vertex weights (mirrors
+    weight_balanced_cuts in Rust; the 2D column cuts use in-degrees)."""
+    n = len(weights)
+    total = float(sum(weights))
+    prefix = [0]
+    for w in weights:
+        prefix.append(prefix[-1] + w)
+    cuts, v = [0], 0
+    for p in range(1, parts):
+        target = total * p / parts
+        max_v = n - (parts - p)
+        while v < max_v and prefix[v + 1] < target:
+            v += 1
+        v = min(max(v, cuts[-1] + 1), max_v)
+        cuts.append(v)
+    cuts.append(n)
+    return cuts
+
+
+def col_cuts_for(n, adj, cols):
+    """Edge-balanced (by in-degree) target-axis cuts — the column-cut
+    policy of ``Partition2D::new``."""
+    in_deg = [0] * n
+    for u in range(n):
+        for w in adj[u]:
+            in_deg[w] += 1
+    return weight_balanced_cuts(in_deg, cols)
+
+
 def fold_expand_schedule(rows, cols):
     """Fold along processor rows, then expand along columns."""
     rounds, rank = [], lambda i, j: i * cols + j
@@ -88,7 +118,7 @@ class Proc:
 
 def run_2d(n, adj, offsets, rows, cols, root):
     row_cuts = partition_1d_cuts(n, offsets, rows)
-    col_cuts = [n * j // cols for j in range(cols + 1)]
+    col_cuts = col_cuts_for(n, adj, cols)
     sched = fold_expand_schedule(rows, cols)
     procs = []
     for i in range(rows):
@@ -165,3 +195,165 @@ def test_degenerate_grids():
         want = serial_bfs(3, adj, 0)
         assert all(p.d == want for p in procs)
         assert messages == levels * rows * cols * expected_partners
+
+
+def test_col_cuts_are_in_edge_balanced():
+    rng = random.Random(0xC01)
+    for _ in range(40):
+        n = rng.randrange(2, 150)
+        adj, _ = random_graph(rng, n, rng.randrange(1, 5))
+        cols = rng.randrange(1, min(8, n) + 1)
+        cuts = col_cuts_for(n, adj, cols)
+        assert cuts[0] == 0 and cuts[-1] == n
+        assert all(a < b for a, b in zip(cuts, cuts[1:]))
+        in_deg = [0] * n
+        for u in range(n):
+            for w in adj[u]:
+                in_deg[w] += 1
+        per = [sum(in_deg[cuts[j]:cuts[j + 1]]) for j in range(cols)]
+        assert sum(per) == sum(in_deg)
+        ideal = sum(in_deg) / cols
+        bound = 2 * ideal + (max(in_deg) if in_deg else 0)
+        assert all(p <= bound for p in per), (n, cols, per)
+
+
+# ---------------------------------------------------------------------------
+# Batched (MS-BFS) direction-aware spec: up to 64 traversals as lane masks,
+# each level expanded top-down (frontier scatters masks) or bottom-up (an
+# unseen vertex accumulates ``acc |= visit_full[u]`` over its block
+# neighbors, early-exiting once every missing lane found a parent). The
+# exchange relays (vertex, mask) deltas with CopyFrontier semantics. The
+# contract: distances are bit-identical per lane to serial BFS *for every
+# per-level direction assignment* — this is what makes the Rust engine's
+# ``run_batch`` direction equivalence suite meaningful.
+# ---------------------------------------------------------------------------
+
+
+class BatchProc:
+    """One grid processor of the batched model (lane-mask state)."""
+
+    def __init__(self, n, srcs, block, nroots):
+        self.n, self.srcs, self.block = n, srcs, block
+        self.seen = [0] * n
+        self.visit = [0] * n
+        self.next_mask = [0] * n
+        self.visit_full = [0] * n
+        self.dist = [[INF] * n for _ in range(nroots)]
+        self.q_local, self.q_next, self.delta = [], [], []
+
+    def owns(self, v):
+        return self.srcs[0] <= v < self.srcs[1]
+
+    def discover(self, v, mask, level, owned):
+        d = mask & ~self.seen[v]
+        if d == 0:
+            return
+        self.seen[v] |= d
+        lane = 0
+        m = d
+        while m:
+            if m & 1:
+                self.dist[lane][v] = level + 1
+            m >>= 1
+            lane += 1
+        self.delta.append((v, d))
+        if owned:
+            if self.next_mask[v] == 0:
+                self.q_next.append(v)
+            self.next_mask[v] |= d
+
+
+def run_2d_batch(n, adj, offsets, rows, cols, roots, direction_for_level):
+    """Direction-aware batched traversal over the checkerboard grid.
+
+    ``direction_for_level(level)`` returns True for a bottom-up level —
+    any assignment must produce identical distances.
+    """
+    row_cuts = partition_1d_cuts(n, offsets, rows)
+    col_cuts = col_cuts_for(n, adj, cols)
+    sched = fold_expand_schedule(rows, cols)
+    full = (1 << len(roots)) - 1
+    procs = []
+    for i in range(rows):
+        rlo, rhi = row_cuts[i], row_cuts[i + 1]
+        for j in range(cols):
+            clo, chi = col_cuts[j], col_cuts[j + 1]
+            block = {u: [w for w in adj[u] if clo <= w < chi]
+                     for u in range(rlo, rhi)}
+            procs.append(BatchProc(n, (rlo, rhi), block, len(roots)))
+    for p in procs:
+        for lane, r in enumerate(roots):
+            bit = 1 << lane
+            p.seen[r] |= bit
+            p.dist[lane][r] = 0
+            p.visit_full[r] |= bit
+            if p.owns(r):
+                if p.visit[r] == 0:
+                    p.q_local.append(r)
+                p.visit[r] |= bit
+    level = 0
+    while any(procs[i * cols].q_local for i in range(rows)):
+        bottom_up = direction_for_level(level)
+        for p in procs:
+            if bottom_up:
+                found = []
+                for v in range(p.srcs[0], p.srcs[1]):
+                    missing = full & ~p.seen[v]
+                    if missing == 0:
+                        continue
+                    acc = 0
+                    for u in p.block[v]:
+                        acc |= p.visit_full[u]
+                        if acc & missing == missing:
+                            break
+                    d = acc & missing
+                    if d:
+                        found.append((v, d))
+                for (v, d) in found:
+                    p.discover(v, d, level, True)
+            else:
+                for v in p.q_local:
+                    mv = p.visit[v]
+                    p.visit[v] = 0
+                    for u in p.block[v]:
+                        p.discover(u, mv, level, p.owns(u))
+        for rnd in sched:  # CopyFrontier: transfers see round-start state
+            snap = [len(p.delta) for p in procs]
+            for (src, dst) in rnd:
+                for k in range(snap[src]):
+                    v, m = procs[src].delta[k]
+                    procs[dst].discover(v, m, level, procs[dst].owns(v))
+        for p in procs:
+            p.visit_full = [0] * n
+            for (v, m) in p.delta:
+                p.visit_full[v] |= m
+            p.q_local, p.q_next, p.delta = p.q_next, [], []
+            for v in p.q_local:
+                p.visit[v] = p.next_mask[v]
+                p.next_mask[v] = 0
+        level += 1
+    return procs
+
+
+def test_batched_directions_match_serial_per_lane_on_grids():
+    rng = random.Random(0xD1A)
+    policies = [
+        ("topdown", lambda lvl: False),
+        ("bottomup", lambda lvl: True),
+        ("alternating", lambda lvl: lvl % 2 == 1),
+    ]
+    for _ in range(25):
+        n = rng.randrange(2, 100)
+        adj, offsets = random_graph(rng, n, rng.randrange(1, 5))
+        rows = rng.randrange(1, min(4, n) + 1)
+        cols = rng.randrange(1, min(4, n) + 1)
+        b = rng.randrange(1, 9)
+        roots = [rng.randrange(n) for _ in range(b)]
+        want = [serial_bfs(n, adj, r) for r in roots]
+        for name, policy in policies:
+            procs = run_2d_batch(n, adj, offsets, rows, cols, roots, policy)
+            for k, p in enumerate(procs):
+                for lane in range(b):
+                    assert p.dist[lane] == want[lane], (
+                        f"n={n} grid={rows}x{cols} {name} proc {k} lane {lane}"
+                    )

@@ -1,0 +1,94 @@
+//! Batched direction ablation: `run_batch` under topdown / bottomup /
+//! diropt, head-to-head at p ∈ {16, 64} simulated nodes on the RMAT and
+//! web-like suite graphs — the experiment behind the batched
+//! direction-optimizing path (Beamer's switch composed with the MS-BFS
+//! lane-mask bottom-up formulation of Then et al.).
+//!
+//! Reported per (graph, p, direction): levels and how many ran bottom-up,
+//! edges inspected (the quantity direction optimization shrinks; ratio vs
+//! top-down in the last column), exchange bytes, and simulated DGX-2
+//! time. Distances are asserted identical across directions before any
+//! number is printed.
+//!
+//! Run: `cargo bench --bench batch_direction`
+//! (`BBFS_SCALE_DELTA=n` rescales the graphs; `BBFS_BENCH_PROFILE=full`
+//! uses the larger defaults.)
+
+use butterfly_bfs::bfs::msbfs::sample_batch_roots;
+use butterfly_bfs::coordinator::config::DirectionMode;
+use butterfly_bfs::coordinator::{EngineConfig, TraversalPlan};
+use butterfly_bfs::graph::gen::table1_suite;
+use butterfly_bfs::harness::table::{count, f2, ms, Table};
+
+fn main() {
+    let scale_delta: i32 = std::env::var("BBFS_SCALE_DELTA")
+        .ok()
+        .and_then(|s| s.parse().ok())
+        .unwrap_or(match std::env::var("BBFS_BENCH_PROFILE").as_deref() {
+            Ok("full") => -4,
+            _ => -6,
+        });
+
+    for name in ["kron-like", "webbase-like"] {
+        let spec = table1_suite().into_iter().find(|s| s.name == name).unwrap();
+        let g = spec.generate_scaled(scale_delta);
+        let roots = sample_batch_roots(&g, 64, 7);
+        println!(
+            "== batch_direction on {} (|V|={}, |E|={}), 64 roots ==",
+            spec.name,
+            count(g.num_vertices() as u64),
+            count(g.num_edges()),
+        );
+        let mut t = Table::new(&[
+            "p",
+            "direction",
+            "levels",
+            "bu levels",
+            "edges inspected",
+            "bytes",
+            "sim ms",
+            "edges vs topdown",
+        ]);
+        for p in [16usize, 64] {
+            let mut td_edges = 0u64;
+            let mut td_dist: Option<Vec<Vec<u32>>> = None;
+            for (label, direction) in [
+                ("topdown", DirectionMode::TopDown),
+                ("bottomup", DirectionMode::BottomUp),
+                ("diropt", DirectionMode::diropt()),
+            ] {
+                let cfg = EngineConfig { direction, ..EngineConfig::dgx2(p, 4) };
+                let plan = TraversalPlan::build(&g, cfg).expect("valid plan");
+                let mut session = plan.session();
+                let b = session.run_batch(&roots).expect("roots in range");
+                session.assert_batch_agreement().expect("node agreement");
+                // Distances must not depend on the direction policy.
+                let dists: Vec<Vec<u32>> =
+                    (0..roots.len()).map(|l| b.dist(l).to_vec()).collect();
+                match &td_dist {
+                    None => td_dist = Some(dists),
+                    Some(want) => assert_eq!(want, &dists, "{label} diverged"),
+                }
+                let m = b.metrics();
+                if direction == DirectionMode::TopDown {
+                    td_edges = m.edges_examined();
+                }
+                t.row(vec![
+                    p.to_string(),
+                    label.to_string(),
+                    m.depth().to_string(),
+                    m.bottom_up_levels().to_string(),
+                    count(m.edges_examined()),
+                    count(m.bytes()),
+                    ms(m.sim_seconds()),
+                    f2(m.edges_examined() as f64 / td_edges.max(1) as f64),
+                ]);
+            }
+        }
+        println!("{}", t.render());
+    }
+    println!(
+        "note: the committed perf trajectory for the fixed protocol configs \
+         lives in BENCH_engine.json (butterfly-bfs bench-protocol --check)."
+    );
+}

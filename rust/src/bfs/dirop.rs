@@ -16,7 +16,7 @@ use crate::graph::csr::{Csr, VertexId};
 
 /// Tuning constants (GapBS defaults; the paper notes per-graph tuning
 /// helps but uses the defaults, as do we).
-#[derive(Clone, Copy, Debug)]
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
 pub struct DirOptParams {
     /// TD→BU switch threshold divisor (`0` disables bottom-up entirely,
     /// degrading to classic top-down — the "CPU (TD)" baseline).

@@ -32,6 +32,7 @@
 //! vertex is that lane's BFS distance. Duplicate roots simply occupy two
 //! lanes that evolve identically.
 
+use crate::bfs::dirop::DirOptParams;
 use crate::bfs::frontier::MaskFrontier;
 use crate::bfs::serial::INF;
 use crate::graph::csr::{Csr, VertexId};
@@ -40,6 +41,17 @@ use std::collections::HashSet;
 
 /// Maximum batch width: one lane per bit of the `u64` mask.
 pub const MAX_BATCH: usize = 64;
+
+/// Mask with the low `width` lanes set — "every lane of the batch".
+#[inline]
+pub fn full_mask(width: usize) -> u64 {
+    debug_assert!(width >= 1 && width <= MAX_BATCH);
+    if width == MAX_BATCH {
+        u64::MAX
+    } else {
+        (1u64 << width) - 1
+    }
+}
 
 /// Negotiated wire cost of one MS-BFS delta message. The sender serializes
 /// its delta prefix in whichever of four equivalent forms is smallest:
@@ -76,6 +88,27 @@ pub fn mask_delta_bytes(
     let dense = presence + distinct_vertices * 8;
     let lane_bitmaps = (1 + active_lanes as u64) * presence;
     sparse.min(grouped).min(dense).min(lane_bitmaps)
+}
+
+/// Wire cost of a bottom-up level's delta under the *dense* (presence-
+/// bitmap) forms only — arms 3 and 4 of [`mask_delta_bytes`]. A bottom-up
+/// scan produces its discoveries as a dense sweep over the sender's owned
+/// vertex range, so the natural wire format is a presence bitmap plus
+/// either packed per-vertex masks (arm 3) or one bitmap per active lane
+/// (arm 4); the sorted sparse forms would require an extra compaction
+/// pass the sender never runs.
+pub fn mask_delta_bytes_dense(
+    distinct_vertices: u64,
+    active_lanes: u32,
+    num_vertices: usize,
+) -> u64 {
+    if distinct_vertices == 0 {
+        return 0;
+    }
+    let presence = (num_vertices as u64).div_ceil(64) * 8;
+    let dense = presence + distinct_vertices * 8;
+    let lane_bitmaps = (1 + active_lanes as u64) * presence;
+    dense.min(lane_bitmaps)
 }
 
 /// Distances of a batched traversal: one full distance array per lane,
@@ -172,6 +205,183 @@ pub fn ms_bfs(g: &Csr, roots: &[VertexId]) -> MsBfsResult {
     MsBfsResult::from_parts(n, b, dist)
 }
 
+/// Phase-1 direction policy of the direction-aware oracle — mirrors the
+/// engine's `DirectionMode` without depending on the coordinator layer.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum MsBfsDirection {
+    /// Classic top-down expansion every level.
+    TopDown,
+    /// Bottom-up lane-mask expansion every level.
+    BottomUp,
+    /// GapBS-style α/β switching on union-frontier edge mass.
+    DirOpt(DirOptParams),
+}
+
+/// Per-level accounting of a direction-aware oracle run.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub struct MsBfsLevelStats {
+    /// Level index.
+    pub level: u32,
+    /// Distinct vertices in the union frontier entering the level.
+    pub frontier: u64,
+    /// Edges inspected this level (top-down: full adjacency of every
+    /// frontier vertex; bottom-up: neighbors probed before early exit).
+    pub edges_inspected: u64,
+    /// True when the level ran bottom-up.
+    pub bottom_up: bool,
+}
+
+/// Result + per-level direction trace of [`ms_bfs_dir`].
+#[derive(Clone, Debug)]
+pub struct MsBfsDirRun {
+    /// Per-lane distances (identical to [`ms_bfs`]'s for any policy —
+    /// levels are synchronous, so direction cannot change distances).
+    pub result: MsBfsResult,
+    /// Per-level frontier/edge/direction trace.
+    pub levels: Vec<MsBfsLevelStats>,
+}
+
+/// Direction-aware single-node bit-parallel MS-BFS — the oracle for the
+/// batched direction-optimizing engine path
+/// ([`run_batch`](crate::coordinator::session::QuerySession::run_batch)
+/// with a non-top-down `DirectionMode`).
+///
+/// The bottom-up formulation (Then et al. §aggregated neighbor
+/// processing, composed with Beamer's direction switch): a vertex `v`
+/// with `seen[v] != full` scans its neighbors `u`, accumulating
+/// `acc |= visit[u]`, and early-exits once `acc` covers every lane still
+/// missing at `v` — one sequential read per unseen vertex replaces
+/// per-edge top-down scatter at dense levels. The α/β heuristic runs on
+/// *union-frontier* statistics: the frontier's edge mass is
+/// `Σ deg(v)` over distinct active vertices (a vertex active in many
+/// lanes still costs one adjacency read), compared against the edge mass
+/// not yet claimed by any lane's traversal.
+pub fn ms_bfs_dir(g: &Csr, roots: &[VertexId], direction: MsBfsDirection) -> MsBfsDirRun {
+    let n = g.num_vertices();
+    let b = roots.len();
+    assert!(b >= 1 && b <= MAX_BATCH, "batch width must be 1..=64 (got {b})");
+    let full = full_mask(b);
+    let mut seen = vec![0u64; n];
+    let mut visit = vec![0u64; n];
+    let mut next = vec![0u64; n];
+    let mut dist = vec![INF; n * b];
+    for (lane, &r) in roots.iter().enumerate() {
+        assert!((r as usize) < n, "root {r} out of range");
+        let bit = 1u64 << lane;
+        seen[r as usize] |= bit;
+        visit[r as usize] |= bit;
+        dist[lane * n + r as usize] = 0;
+    }
+    let mut levels = Vec::new();
+    let mut level = 0u32;
+    let mut bottom_up = false;
+    let mut prev_frontier = 0u64;
+    let mut m_unexplored = g.num_edges();
+    loop {
+        let frontier = visit.iter().filter(|&&m| m != 0).count() as u64;
+        if frontier == 0 {
+            break;
+        }
+        match direction {
+            MsBfsDirection::TopDown => {}
+            MsBfsDirection::BottomUp => bottom_up = true,
+            MsBfsDirection::DirOpt(DirOptParams { alpha, beta }) => {
+                let m_frontier: u64 = visit
+                    .iter()
+                    .enumerate()
+                    .filter(|&(_, &m)| m != 0)
+                    .map(|(v, _)| g.degree(v as VertexId) as u64)
+                    .sum();
+                let growing = frontier > prev_frontier;
+                if !bottom_up && alpha > 0 && growing && m_frontier > m_unexplored / alpha {
+                    bottom_up = true;
+                } else if bottom_up
+                    && beta > 0
+                    && !growing
+                    && frontier < (n as u64) / beta
+                {
+                    bottom_up = false;
+                }
+                prev_frontier = frontier;
+            }
+        }
+        let mut edges = 0u64;
+        let mut any = false;
+        if bottom_up {
+            for v in 0..n {
+                let missing = full & !seen[v];
+                if missing == 0 {
+                    continue;
+                }
+                let mut acc = 0u64;
+                for &u in g.neighbors(v as VertexId) {
+                    edges += 1;
+                    acc |= visit[u as usize];
+                    if acc & missing == missing {
+                        // Every still-missing lane found a parent — the
+                        // early exit that makes dense levels cheap.
+                        break;
+                    }
+                }
+                let d = acc & missing;
+                if d != 0 {
+                    seen[v] |= d;
+                    next[v] |= d;
+                    let mut m = d;
+                    while m != 0 {
+                        let lane = m.trailing_zeros() as usize;
+                        m &= m - 1;
+                        dist[lane * n + v] = level + 1;
+                    }
+                    any = true;
+                }
+            }
+        } else {
+            for v in 0..n {
+                let mv = visit[v];
+                if mv == 0 {
+                    continue;
+                }
+                edges += g.degree(v as VertexId) as u64;
+                for &u in g.neighbors(v as VertexId) {
+                    let d = mv & !seen[u as usize];
+                    if d != 0 {
+                        seen[u as usize] |= d;
+                        next[u as usize] |= d;
+                        let mut m = d;
+                        while m != 0 {
+                            let lane = m.trailing_zeros() as usize;
+                            m &= m - 1;
+                            dist[lane * n + u as usize] = level + 1;
+                        }
+                        any = true;
+                    }
+                }
+            }
+        }
+        levels.push(MsBfsLevelStats { level, frontier, edges_inspected: edges, bottom_up });
+        if let MsBfsDirection::DirOpt(_) = direction {
+            let next_edges: u64 = next
+                .iter()
+                .enumerate()
+                .filter(|&(_, &m)| m != 0)
+                .map(|(v, _)| g.degree(v as VertexId) as u64)
+                .sum();
+            m_unexplored = m_unexplored.saturating_sub(next_edges);
+        }
+        if !any {
+            break;
+        }
+        std::mem::swap(&mut visit, &mut next);
+        next.iter_mut().for_each(|x| *x = 0);
+        level += 1;
+    }
+    MsBfsDirRun {
+        result: MsBfsResult::from_parts(n, b, dist),
+        levels,
+    }
+}
+
 /// Sample `width` roots for a batch. Non-isolated vertices are
 /// guaranteed whenever the graph has any edge: after a few random
 /// retries the sampler falls back to a deterministic wrapping scan for
@@ -249,6 +459,18 @@ pub struct MsBfsNodeState {
     /// Per-vertex level stamp (`level + 1` when `v` was first appended to
     /// `delta` this level) backing `delta_distinct`.
     delta_stamp: Vec<u32>,
+    /// The complete *current* frontier as per-vertex lane masks over ALL
+    /// vertices (not just owned) — what the batched bottom-up scan probes,
+    /// the lane-mask analog of `ComputeNode::frontier_full`. Rebuilt at
+    /// [`Self::swap_level`] from the post-exchange delta (which holds the
+    /// level's complete discoveries after full coverage). Allocated only
+    /// when [`Self::set_full_tracking`] enables it.
+    visit_full: Vec<u64>,
+    /// Nonzero entries of `visit_full`, so clearing costs O(frontier).
+    visit_full_touched: Vec<VertexId>,
+    /// Whether `swap_level` maintains `visit_full` (bottom-up-capable
+    /// direction modes only; pure top-down batches skip the upkeep).
+    track_full: bool,
 }
 
 impl MsBfsNodeState {
@@ -269,7 +491,37 @@ impl MsBfsNodeState {
             mask_values: HashSet::new(),
             active_lanes: 0,
             delta_stamp: vec![0; num_vertices],
+            visit_full: Vec::new(),
+            visit_full_touched: Vec::new(),
+            track_full: false,
         }
+    }
+
+    /// Enable or disable full-frontier tracking. The batched engine turns
+    /// this on for bottom-up-capable direction modes before seeding a
+    /// batch; the dense mask array is allocated on first enable and kept
+    /// across [`Self::reset`] (pooled reuse).
+    pub fn set_full_tracking(&mut self, on: bool) {
+        self.track_full = on;
+        if on && self.visit_full.is_empty() {
+            self.visit_full = vec![0; self.num_vertices];
+        }
+    }
+
+    /// Seed lanes `mask` of vertex `v` into the level-0 full frontier
+    /// (the batch prologue: every node knows every root).
+    pub fn seed_full_frontier(&mut self, v: VertexId, mask: u64) {
+        debug_assert!(self.track_full, "seeding without tracking enabled");
+        if self.visit_full[v as usize] == 0 {
+            self.visit_full_touched.push(v);
+        }
+        self.visit_full[v as usize] |= mask;
+    }
+
+    /// The complete current frontier as per-vertex lane masks (empty slice
+    /// unless tracking is enabled).
+    pub fn full_frontier(&self) -> &[u64] {
+        &self.visit_full
     }
 
     /// Wire cost of this node's current delta prefix of `entries` entries
@@ -282,6 +534,21 @@ impl MsBfsNodeState {
             entries as u64,
             self.delta_distinct.min(entries as u64),
             (self.mask_values.len() as u64).min(entries as u64),
+            self.active_lanes.count_ones(),
+            self.num_vertices,
+        )
+    }
+
+    /// Bottom-up pricing of the current delta prefix: the dense presence-
+    /// bitmap forms only (see [`mask_delta_bytes_dense`]) — the wire
+    /// format of a bottom-up level, whose discoveries come out of a dense
+    /// owned-range sweep rather than a sorted sparse queue.
+    pub fn delta_payload_bytes_dense(&self, entries: usize) -> u64 {
+        if entries == 0 {
+            return 0;
+        }
+        mask_delta_bytes_dense(
+            self.delta_distinct.min(entries as u64),
             self.active_lanes.count_ones(),
             self.num_vertices,
         )
@@ -345,12 +612,33 @@ impl MsBfsNodeState {
         self.mask_values.clear();
         self.active_lanes = 0;
         self.delta_stamp.iter_mut().for_each(|x| *x = 0);
+        // Nonzero `visit_full` entries are exactly the touched list.
+        for &v in &self.visit_full_touched {
+            self.visit_full[v as usize] = 0;
+        }
+        self.visit_full_touched.clear();
     }
 
     /// End-of-level rotation (the MS-BFS `SwapQueues`): the next local
     /// frontier becomes current (its pending masks move from `next_mask`
-    /// to `visit`), and the level's delta list empties.
+    /// to `visit`), and the level's delta list empties. With full-frontier
+    /// tracking on, the post-exchange delta — the complete set of this
+    /// level's `(vertex, lanes)` discoveries after full coverage — first
+    /// becomes the next `visit_full`, mirroring how the single-root
+    /// engine's post-sync global queue becomes `frontier_full`.
     pub fn swap_level(&mut self) {
+        if self.track_full {
+            for &v in &self.visit_full_touched {
+                self.visit_full[v as usize] = 0;
+            }
+            self.visit_full_touched.clear();
+            for &(v, m) in self.delta.entries() {
+                if self.visit_full[v as usize] == 0 {
+                    self.visit_full_touched.push(v);
+                }
+                self.visit_full[v as usize] |= m;
+            }
+        }
         self.q_local.clear();
         std::mem::swap(&mut self.q_local, &mut self.q_local_next);
         for &v in &self.q_local {
@@ -474,6 +762,128 @@ mod tests {
         assert_eq!(st.delta_distinct, 0);
         assert_eq!(st.active_lanes, 0);
         assert!(st.mask_values.is_empty());
+    }
+
+    #[test]
+    fn full_mask_widths() {
+        assert_eq!(full_mask(1), 1);
+        assert_eq!(full_mask(3), 0b111);
+        assert_eq!(full_mask(63), u64::MAX >> 1);
+        assert_eq!(full_mask(64), u64::MAX);
+    }
+
+    #[test]
+    fn dense_pricing_is_the_dense_arms_of_the_negotiation() {
+        // 640 vertices => presence bitmap = 80 bytes.
+        assert_eq!(mask_delta_bytes_dense(0, 5, 640), 0);
+        // Arm 3: presence + 8·distinct; arm 4: (1+lanes)·presence.
+        assert_eq!(mask_delta_bytes_dense(10, 63, 640), 80 + 80);
+        assert_eq!(mask_delta_bytes_dense(500, 1, 640), 2 * 80);
+        // The dense forms are always an upper bound on the full
+        // negotiation (which may also pick a sparse arm).
+        for (e, dv, dm, al) in [(5u64, 5u64, 2u64, 7u32), (300, 200, 40, 64)] {
+            assert!(
+                mask_delta_bytes(e, dv, dm, al, 640)
+                    <= mask_delta_bytes_dense(dv, al, 640)
+            );
+        }
+    }
+
+    #[test]
+    fn ms_bfs_dir_all_policies_match_topdown_oracle() {
+        let (g, _) = uniform_random(400, 8, 21);
+        let roots: Vec<VertexId> = (0..48).map(|i| (i * 5) % 400).collect();
+        let want = ms_bfs(&g, &roots);
+        for dir in [
+            MsBfsDirection::TopDown,
+            MsBfsDirection::BottomUp,
+            MsBfsDirection::DirOpt(DirOptParams::default()),
+        ] {
+            let r = ms_bfs_dir(&g, &roots, dir);
+            for lane in 0..roots.len() {
+                assert_eq!(r.result.dist(lane), want.dist(lane), "{dir:?} lane {lane}");
+            }
+        }
+    }
+
+    #[test]
+    fn ms_bfs_dir_bottom_up_inspects_fewer_edges_on_dense_levels() {
+        // A star's level 1 (from the center) is the densest possible
+        // frontier: top-down scatters every leaf edge per active lane
+        // pass, while bottom-up early-exits after one probe per leaf.
+        let g = star(800);
+        let roots = vec![0u32; 32];
+        let td = ms_bfs_dir(&g, &roots, MsBfsDirection::TopDown);
+        let bu = ms_bfs_dir(&g, &roots, MsBfsDirection::BottomUp);
+        for lane in 0..roots.len() {
+            assert_eq!(td.result.dist(lane), bu.result.dist(lane));
+        }
+        let td_edges: u64 = td.levels.iter().map(|l| l.edges_inspected).sum();
+        let bu_edges: u64 = bu.levels.iter().map(|l| l.edges_inspected).sum();
+        assert!(bu_edges < td_edges, "BU {bu_edges} vs TD {td_edges}");
+        assert!(bu.levels.iter().all(|l| l.bottom_up));
+        assert!(td.levels.iter().all(|l| !l.bottom_up));
+    }
+
+    #[test]
+    fn ms_bfs_dir_diropt_switches_and_matches() {
+        let (g, _) = uniform_random(2000, 16, 6);
+        let roots: Vec<VertexId> = (0..64u32).map(|i| (i * 31) % 2000).collect();
+        let run = ms_bfs_dir(&g, &roots, MsBfsDirection::DirOpt(DirOptParams::default()));
+        let want = ms_bfs(&g, &roots);
+        for lane in 0..roots.len() {
+            assert_eq!(run.result.dist(lane), want.dist(lane));
+        }
+        // A dense small-world batch must actually switch bottom-up…
+        assert!(run.levels.iter().any(|l| l.bottom_up), "{:?}", run.levels);
+        // …and save edges against pure top-down.
+        let td = ms_bfs_dir(&g, &roots, MsBfsDirection::TopDown);
+        let do_edges: u64 = run.levels.iter().map(|l| l.edges_inspected).sum();
+        let td_edges: u64 = td.levels.iter().map(|l| l.edges_inspected).sum();
+        assert!(do_edges < td_edges, "DO {do_edges} vs TD {td_edges}");
+    }
+
+    #[test]
+    fn node_state_full_frontier_tracking() {
+        let mut st = MsBfsNodeState::new(40, 8);
+        st.set_full_tracking(true);
+        st.seed_full_frontier(3, 0b1);
+        st.seed_full_frontier(3, 0b10);
+        assert_eq!(st.full_frontier()[3], 0b11);
+        // A level's post-exchange delta becomes the next full frontier.
+        st.discover(7, 0b101, 0, true);
+        st.discover(9, 0b1, 0, false);
+        st.swap_level();
+        assert_eq!(st.full_frontier()[3], 0, "previous frontier cleared");
+        assert_eq!(st.full_frontier()[7], 0b101);
+        assert_eq!(st.full_frontier()[9], 0b1);
+        // Reset restores the all-zero frontier without reallocating.
+        st.reset(8);
+        assert!(st.full_frontier().iter().all(|&m| m == 0));
+    }
+
+    #[test]
+    fn property_msbfs_dir_equals_serial() {
+        use crate::util::propcheck::{forall, gen, Config};
+        forall(Config::cases(20), "ms_bfs_dir == serial per lane", |rng| {
+            let n = gen::usize_in(rng, 5, 300);
+            let ef = gen::usize_in(rng, 1, 6) as u32;
+            let b = gen::usize_in(rng, 1, 64);
+            let dir = match rng.next_below(3) {
+                0 => MsBfsDirection::TopDown,
+                1 => MsBfsDirection::BottomUp,
+                _ => MsBfsDirection::DirOpt(DirOptParams::default()),
+            };
+            let (g, _) = uniform_random(n, ef, rng.next_u64());
+            let roots: Vec<VertexId> =
+                (0..b).map(|_| rng.next_usize(n) as VertexId).collect();
+            let r = ms_bfs_dir(&g, &roots, dir);
+            let ok = roots
+                .iter()
+                .enumerate()
+                .all(|(lane, &root)| r.result.dist(lane) == &serial_bfs(&g, root)[..]);
+            (ok, format!("n={n} ef={ef} b={b} {dir:?}"))
+        });
     }
 
     #[test]

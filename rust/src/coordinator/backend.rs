@@ -23,6 +23,19 @@ pub struct ExpandOutput {
     pub edges_examined: u64,
 }
 
+/// Output of one node's *batched* (MS-BFS) Phase-1 bottom-up expansion:
+/// every owned vertex that gained lanes, with exactly the newly-gained
+/// lane mask (already filtered against the node's `seen` masks).
+#[derive(Clone, Debug, Default)]
+pub struct BatchExpandOutput {
+    /// `(vertex, new-lane-mask)` discoveries, ascending by vertex (the
+    /// owned-range scan order). Masks are nonzero.
+    pub discovered: Vec<(VertexId, u64)>,
+    /// Edges (neighbor probes) examined, counting the bottom-up early
+    /// exit — the quantity the direction heuristic is trying to shrink.
+    pub edges_examined: u64,
+}
+
 /// A per-node Phase-1 implementation.
 pub trait ComputeBackend: Send {
     /// Backend name for metrics.
@@ -58,6 +71,41 @@ pub trait ComputeBackend: Send {
     /// True when [`ComputeBackend::expand_bottom_up`] is implemented.
     fn supports_bottom_up(&self) -> bool {
         true
+    }
+
+    /// Batched (MS-BFS) bottom-up step: scan this node's owned vertices
+    /// whose `seen` mask is not yet `full_mask` and accumulate
+    /// `new = !seen[v] & (visit_full[u₀] | visit_full[u₁] | …)` over the
+    /// slab's neighbors, early-exiting once every missing lane found a
+    /// parent. `visit_full` is the complete previous-level frontier as
+    /// per-vertex lane masks — every node holds it after the exchange
+    /// (the batched analog of `frontier_full`). Discoveries go into `out`
+    /// only; the session routes them through `MsBfsNodeState::discover`.
+    ///
+    /// Only called when [`ComputeBackend::supports_bottom_up_batch`]
+    /// returns true — the default body panics so an unprobed call is loud.
+    fn expand_bottom_up_batch(
+        &mut self,
+        slab: &CsrSlab,
+        visit_full: &[u64],
+        seen: &[u64],
+        full_mask: u64,
+        out: &mut BatchExpandOutput,
+    ) {
+        let _ = (slab, visit_full, seen, full_mask, out);
+        unimplemented!(
+            "backend {} has no batched bottom-up kernel; probe \
+             supports_bottom_up_batch() before dispatching",
+            self.name()
+        );
+    }
+
+    /// Capability probe for [`ComputeBackend::expand_bottom_up_batch`].
+    /// Defaults to `false`: the engine degrades the whole batch to
+    /// top-down when any node's backend lacks the kernel (the XLA
+    /// backend's fixed-shape artifacts have no lane-mask step).
+    fn supports_bottom_up_batch(&self) -> bool {
+        false
     }
 }
 
@@ -142,6 +190,42 @@ impl ComputeBackend for NativeCsr {
             }
         }
     }
+
+    fn expand_bottom_up_batch(
+        &mut self,
+        slab: &CsrSlab,
+        visit_full: &[u64],
+        seen: &[u64],
+        full_mask: u64,
+        out: &mut BatchExpandOutput,
+    ) {
+        out.discovered.clear();
+        out.edges_examined = 0;
+        for v in slab.first_vertex..slab.end_vertex() {
+            let missing = full_mask & !seen[v as usize];
+            if missing == 0 {
+                continue;
+            }
+            let mut acc = 0u64;
+            for &u in slab.neighbors_global(v) {
+                out.edges_examined += 1;
+                acc |= visit_full[u as usize];
+                if acc & missing == missing {
+                    // Every still-missing lane found a parent — the
+                    // lane-mask generalization of first-parent-wins.
+                    break;
+                }
+            }
+            let d = acc & missing;
+            if d != 0 {
+                out.discovered.push((v, d));
+            }
+        }
+    }
+
+    fn supports_bottom_up_batch(&self) -> bool {
+        true
+    }
 }
 
 #[cfg(test)]
@@ -186,6 +270,74 @@ mod tests {
         let (d2, e2) = run(true);
         assert_eq!(d1, d2);
         assert_eq!(e1, e2);
+    }
+
+    #[test]
+    fn batch_bottom_up_matches_manual_accumulation() {
+        let (g, _) = uniform_random(200, 6, 33);
+        let slab = g.row_slice(50, 150);
+        let full = 0b1111u64;
+        // A synthetic frontier: every third vertex carries some lanes.
+        let mut visit_full = vec![0u64; 200];
+        for v in (0..200).step_by(3) {
+            visit_full[v] = 1 << (v % 4);
+        }
+        // Partially-seen owned range: vertex 60 already has lane 0.
+        let mut seen = vec![0u64; 200];
+        seen[60] = 0b1;
+        let mut out = BatchExpandOutput::default();
+        NativeCsr::new(false).expand_bottom_up_batch(
+            &slab,
+            &visit_full,
+            &seen,
+            full,
+            &mut out,
+        );
+        assert!(NativeCsr::new(false).supports_bottom_up_batch());
+        // Every discovery must be an owned vertex gaining exactly the
+        // union of its neighbors' frontier lanes, minus what it had seen.
+        for &(v, d) in &out.discovered {
+            assert!(slab.owns(v));
+            let acc: u64 = g
+                .neighbors(v)
+                .iter()
+                .map(|&u| visit_full[u as usize])
+                .fold(0, |a, m| a | m);
+            // The early exit may stop before the full union, but never
+            // before all missing lanes are covered or the list ends —
+            // so d is the full filtered union whenever it is nonzero.
+            assert_eq!(d & !(full & !seen[v as usize]), 0, "v={v} leaked lanes");
+            assert!(d <= acc, "v={v}");
+            let missing = full & !seen[v as usize];
+            if acc & missing == missing {
+                assert_eq!(d, missing, "v={v} early exit must cover all");
+            }
+        }
+        // Completeness: any owned unseen vertex with a frontier neighbor
+        // must appear.
+        for v in 50..150u32 {
+            let missing = full & !seen[v as usize];
+            let acc: u64 = g
+                .neighbors(v)
+                .iter()
+                .map(|&u| visit_full[u as usize])
+                .fold(0, |a, m| a | m);
+            let want = acc & missing;
+            let got = out
+                .discovered
+                .iter()
+                .find(|&&(x, _)| x == v)
+                .map(|&(_, d)| d)
+                .unwrap_or(0);
+            // Early exit can only *truncate* acc when missing is already
+            // covered, in which case got == missing == want.
+            if want != 0 {
+                assert!(got != 0, "v={v} missing discovery");
+            } else {
+                assert_eq!(got, 0, "v={v} spurious discovery");
+            }
+        }
+        assert!(out.edges_examined > 0);
     }
 
     #[test]

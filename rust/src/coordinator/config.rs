@@ -155,6 +155,12 @@ pub struct EngineConfig {
     pub direction: DirectionMode,
     /// Run Phase 1 across worker threads (native backend only).
     pub parallel_phase1: bool,
+    /// Run the Phase-2 merges across worker threads: each destination
+    /// node's received transfers are replayed on its own worker (senders
+    /// are frozen round-start snapshots, receivers are disjoint, and each
+    /// receiver sees its transfers in schedule order — so pooled merging
+    /// is bit-identical to sequential merging).
+    pub parallel_phase2: bool,
     /// Interconnect model for simulated communication time.
     pub net: NetModel,
     /// Device model for simulated compute time.
@@ -172,6 +178,7 @@ impl EngineConfig {
             use_lrb: true,
             direction: DirectionMode::TopDown,
             parallel_phase1: false,
+            parallel_phase2: false,
             net: NetModel::dgx2(),
             device: DeviceModel::v100(),
         }

@@ -35,6 +35,20 @@ pub struct LevelMetrics {
     pub sim_compute: f64,
     /// Simulated Phase-2 communication time.
     pub sim_comm: f64,
+    /// Direction tag: true when Phase 1 ran bottom-up this level (the
+    /// direction-optimizing trace; always false under pure top-down).
+    pub bottom_up: bool,
+}
+
+impl LevelMetrics {
+    /// Direction tag as the CLI/JSON spelling.
+    pub fn direction_name(&self) -> &'static str {
+        if self.bottom_up {
+            "bottomup"
+        } else {
+            "topdown"
+        }
+    }
 }
 
 /// Metrics of a full traversal.
@@ -97,6 +111,20 @@ impl RunMetrics {
         self.levels.len()
     }
 
+    /// Levels that ran bottom-up (the direction-optimizing trace).
+    pub fn bottom_up_levels(&self) -> u64 {
+        self.levels.iter().filter(|l| l.bottom_up).count() as u64
+    }
+
+    /// Edges inspected by bottom-up levels only.
+    pub fn bottom_up_edges(&self) -> u64 {
+        self.levels
+            .iter()
+            .filter(|l| l.bottom_up)
+            .map(|l| l.edges_examined)
+            .sum()
+    }
+
     /// Total fold-phase (row-exchange) messages — nonzero only in 2D mode.
     pub fn fold_messages(&self) -> u64 {
         self.levels.iter().map(|l| l.fold_messages).sum()
@@ -127,6 +155,7 @@ impl RunMetrics {
         discovered: u64,
         comm: &CommTiming,
         sim_compute: f64,
+        bottom_up: bool,
     ) {
         self.levels.push(LevelMetrics {
             level,
@@ -138,6 +167,7 @@ impl RunMetrics {
             bytes: comm.total_bytes,
             sim_compute,
             sim_comm: comm.total(),
+            bottom_up,
             ..Default::default()
         });
     }
@@ -152,6 +182,8 @@ impl RunMetrics {
             ("reached", Json::u(self.reached)),
             ("depth", Json::u(self.depth() as u64)),
             ("edges_examined", Json::u(self.edges_examined())),
+            ("bottom_up_levels", Json::u(self.bottom_up_levels())),
+            ("bottom_up_edges", Json::u(self.bottom_up_edges())),
             ("messages", Json::u(self.messages())),
             ("bytes", Json::u(self.bytes())),
             ("fold_messages", Json::u(self.fold_messages())),
@@ -171,6 +203,7 @@ impl RunMetrics {
                                 ("discovered", Json::u(l.discovered)),
                                 ("messages", Json::u(l.messages)),
                                 ("bytes", Json::u(l.bytes)),
+                                ("direction", Json::s(l.direction_name())),
                                 ("sim_compute", Json::n(l.sim_compute)),
                                 ("sim_comm", Json::n(l.sim_comm)),
                             ])
@@ -270,6 +303,22 @@ impl BatchMetrics {
         self.levels.len()
     }
 
+    /// Levels that ran bottom-up — the batched direction-optimizing
+    /// trace (0 under pure top-down or when a backend lacks the batched
+    /// bottom-up kernel and the batch degraded).
+    pub fn bottom_up_levels(&self) -> u64 {
+        self.levels.iter().filter(|l| l.bottom_up).count() as u64
+    }
+
+    /// Edges inspected by bottom-up levels only.
+    pub fn bottom_up_edges(&self) -> u64 {
+        self.levels
+            .iter()
+            .filter(|l| l.bottom_up)
+            .map(|l| l.edges_examined)
+            .sum()
+    }
+
     /// Synchronization bytes amortized per root — the headline
     /// `msbfs_amortization` comparison against a single run's
     /// [`RunMetrics::bytes`].
@@ -291,6 +340,8 @@ impl BatchMetrics {
             ("depth", Json::u(self.depth() as u64)),
             ("sync_rounds", Json::u(self.sync_rounds)),
             ("edges_examined", Json::u(self.edges_examined())),
+            ("bottom_up_levels", Json::u(self.bottom_up_levels())),
+            ("bottom_up_edges", Json::u(self.bottom_up_edges())),
             ("messages", Json::u(self.messages())),
             ("bytes", Json::u(self.bytes())),
             ("fold_messages", Json::u(self.fold_messages())),
@@ -318,8 +369,8 @@ mod tests {
     #[test]
     fn aggregation() {
         let mut m = RunMetrics { graph_edges: 1000, ..Default::default() };
-        m.push_level(0, 1, 100, 60, 5, &timing(4, 400, 0.001), 0.002);
-        m.push_level(1, 5, 900, 500, 20, &timing(4, 800, 0.003), 0.004);
+        m.push_level(0, 1, 100, 60, 5, &timing(4, 400, 0.001), 0.002, false);
+        m.push_level(1, 5, 900, 500, 20, &timing(4, 800, 0.003), 0.004, true);
         assert_eq!(m.depth(), 2);
         assert_eq!(m.edges_examined(), 1000);
         assert_eq!(m.messages(), 8);
@@ -329,12 +380,20 @@ mod tests {
         // 1D levels carry no per-phase split.
         assert_eq!(m.fold_messages(), 0);
         assert_eq!(m.expand_bytes(), 0);
+        // Direction trace: level 1 ran bottom-up.
+        assert_eq!(m.bottom_up_levels(), 1);
+        assert_eq!(m.bottom_up_edges(), 900);
+        let s = m.to_json().render();
+        assert!(s.contains("\"bottom_up_levels\":1"));
+        assert!(s.contains("\"bottom_up_edges\":900"));
+        assert!(s.contains("\"direction\":\"topdown\""));
+        assert!(s.contains("\"direction\":\"bottomup\""));
     }
 
     #[test]
     fn phase_split_aggregates() {
         let mut m = RunMetrics { graph_edges: 10, ..Default::default() };
-        m.push_level(0, 1, 2, 2, 1, &timing(10, 700, 0.5), 0.5);
+        m.push_level(0, 1, 2, 2, 1, &timing(10, 700, 0.5), 0.5, false);
         let l = m.levels.last_mut().unwrap();
         l.fold_messages = 6;
         l.fold_bytes = 300;
@@ -350,7 +409,7 @@ mod tests {
     #[test]
     fn gteps_conventions_differ() {
         let mut m = RunMetrics { graph_edges: 2000, ..Default::default() };
-        m.push_level(0, 1, 500, 500, 5, &timing(0, 0, 0.0), 1.0);
+        m.push_level(0, 1, 500, 500, 5, &timing(0, 0, 0.0), 1.0, false);
         // Graph500 convention uses |E| = 2000, honest uses 500.
         assert!(m.sim_gteps() > m.sim_honest_gteps());
     }
@@ -376,9 +435,12 @@ mod tests {
             expand_bytes: 240,
             sim_compute: 0.002,
             sim_comm: 0.001,
+            bottom_up: true,
         });
         b.sync_rounds = 4;
         b.reached_pairs = 321;
+        assert_eq!(b.bottom_up_levels(), 1);
+        assert_eq!(b.bottom_up_edges(), 100);
         assert_eq!(b.depth(), 1);
         assert_eq!(b.bytes(), 640);
         assert!((b.bytes_per_root() - 10.0).abs() < 1e-12);
@@ -389,6 +451,8 @@ mod tests {
         let s = b.to_json().render();
         assert!(s.contains("\"num_roots\":64"));
         assert!(s.contains("\"sync_rounds\":4"));
+        assert!(s.contains("\"bottom_up_levels\":1"));
+        assert!(s.contains("\"bottom_up_edges\":100"));
         assert!(s.contains("\"fold_bytes\":400"));
         assert!(s.contains("\"expand_messages\":1"));
     }
@@ -396,7 +460,7 @@ mod tests {
     #[test]
     fn json_renders() {
         let mut m = RunMetrics { graph_edges: 10, ..Default::default() };
-        m.push_level(0, 1, 2, 2, 1, &timing(1, 8, 0.5), 0.5);
+        m.push_level(0, 1, 2, 2, 1, &timing(1, 8, 0.5), 0.5, false);
         let s = m.to_json().render();
         assert!(s.contains("\"sim_seconds\":1"));
         assert!(s.contains("\"levels\":[{"));

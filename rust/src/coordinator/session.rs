@@ -43,13 +43,13 @@
 //! [`QuerySession::run_batch_metrics_only`] to skip the owned distance
 //! copy. Invalid inputs are values ([`QueryError`]), not panics.
 
-use super::backend::{ComputeBackend, ExpandOutput, NativeCsr};
+use super::backend::{BatchExpandOutput, ComputeBackend, ExpandOutput, NativeCsr};
 use super::config::{DirectionMode, EngineConfig, PartitionMode};
 use super::metrics::{BatchMetrics, LevelMetrics, RunMetrics, SequentialBaseline};
 use super::node::ComputeNode;
 use super::plan::TraversalPlan;
 use crate::bfs::frontier::MaskFrontier;
-use crate::bfs::msbfs::{MsBfsNodeState, MAX_BATCH};
+use crate::bfs::msbfs::{full_mask, MsBfsNodeState, MAX_BATCH};
 use crate::bfs::serial::INF;
 use crate::comm::pattern::Schedule;
 use crate::graph::csr::VertexId;
@@ -247,8 +247,82 @@ pub struct QuerySession {
     pool: Option<ThreadPool>,
     /// Pooled per-node MS-BFS state, reset (not reallocated) per batch.
     batch_states: Vec<MsBfsNodeState>,
+    /// Per-node scratch for batched bottom-up Phase-1 steps.
+    batch_scratch: Vec<BatchExpandOutput>,
+    /// Per-round destination buckets of the schedule — the pooled
+    /// Phase-2 merge plan, a pure function of the (immutable) schedule:
+    /// computed lazily once, shared by both query kinds, no per-round
+    /// allocation on the merge hot path.
+    pooled_buckets: Option<Arc<RoundBuckets>>,
     /// Lane count of the most recent batch.
     batch_width: usize,
+}
+
+/// One merge plan per schedule round: for each destination that receives
+/// anything, the sources it receives from, in schedule order.
+type RoundBuckets = Vec<Vec<(usize, Vec<usize>)>>;
+
+/// The direction-optimizing α/β hysteresis machine — one implementation
+/// drives both the single-root and the batched level loop, so the two
+/// engine paths cannot drift apart. (The single-node oracle
+/// [`ms_bfs_dir`](crate::bfs::msbfs::ms_bfs_dir) mirrors the policy
+/// *independently* on purpose: it is the cross-check the equivalence
+/// suite compares the engine against.)
+struct DirOptState {
+    bottom_up: bool,
+    prev_frontier: u64,
+    /// Edge mass not yet claimed by any traversal (lane-union for
+    /// batches) — the denominator of the TD→BU threshold.
+    m_unexplored: u64,
+}
+
+impl DirOptState {
+    fn new(graph_edges: u64) -> Self {
+        Self { bottom_up: false, prev_frontier: 0, m_unexplored: graph_edges }
+    }
+
+    /// Decide this level's direction from the level-start statistics.
+    /// `m_frontier` (the frontier's distinct-vertex edge mass) is taken
+    /// lazily: it is only needed for the TD→BU check, so latched
+    /// bottom-up levels skip the O(frontier) degree sum entirely.
+    fn step(
+        &mut self,
+        direction: DirectionMode,
+        frontier: u64,
+        num_vertices: u64,
+        m_frontier: impl FnOnce() -> u64,
+    ) -> bool {
+        match direction {
+            DirectionMode::TopDown => {}
+            DirectionMode::BottomUp => self.bottom_up = true,
+            DirectionMode::DirOpt { alpha, beta } => {
+                let growing = frontier > self.prev_frontier;
+                if !self.bottom_up
+                    && alpha > 0
+                    && growing
+                    && m_frontier() > self.m_unexplored / alpha
+                {
+                    self.bottom_up = true;
+                } else if self.bottom_up
+                    && beta > 0
+                    && !growing
+                    && frontier < num_vertices / beta
+                {
+                    self.bottom_up = false;
+                }
+                self.prev_frontier = frontier;
+            }
+        }
+        self.bottom_up
+    }
+
+    /// Post-level bookkeeping: claim the next frontier's edge mass out of
+    /// the unexplored pool (lazy for the same reason as `step`).
+    fn claim_next(&mut self, direction: DirectionMode, next_edges: impl FnOnce() -> u64) {
+        if let DirectionMode::DirOpt { .. } = direction {
+            self.m_unexplored = self.m_unexplored.saturating_sub(next_edges());
+        }
+    }
 }
 
 impl QuerySession {
@@ -288,6 +362,8 @@ impl QuerySession {
             scratch,
             pool: None,
             batch_states: Vec::new(),
+            batch_scratch: Vec::new(),
+            pooled_buckets: None,
             batch_width: 0,
         }
     }
@@ -322,10 +398,11 @@ impl QuerySession {
         }
     }
 
-    /// Spawn the persistent worker pool if this session wants one and it
-    /// does not exist yet.
+    /// Spawn the persistent worker pool if this session wants one (either
+    /// phase pooled) and it does not exist yet.
     fn ensure_pool(&mut self) {
-        if self.pool.is_none() && self.config.parallel_phase1 && self.config.num_nodes > 1 {
+        let wants = self.config.parallel_phase1 || self.config.parallel_phase2;
+        if self.pool.is_none() && wants && self.config.num_nodes > 1 {
             let workers = std::thread::available_parallelism()
                 .map(|n| n.get())
                 .unwrap_or(4)
@@ -365,6 +442,33 @@ impl QuerySession {
                 .map(|s| s.q_local.len() as u64)
                 .sum(),
         }
+    }
+
+    /// The pooled Phase-2 merge plan (see [`RoundBuckets`]), computed on
+    /// first use and handed out as a cheap `Arc` clone so the Phase-2
+    /// loops hold no borrow of `self` while mutating receivers.
+    fn pooled_buckets(&mut self) -> Arc<RoundBuckets> {
+        if self.pooled_buckets.is_none() {
+            let buckets = self
+                .schedule
+                .rounds
+                .iter()
+                .map(|round| {
+                    let mut by_dst: Vec<Vec<usize>> =
+                        vec![Vec::new(); self.config.num_nodes];
+                    for t in round {
+                        by_dst[t.dst as usize].push(t.src as usize);
+                    }
+                    by_dst
+                        .into_iter()
+                        .enumerate()
+                        .filter(|(_, srcs)| !srcs.is_empty())
+                        .collect()
+                })
+                .collect();
+            self.pooled_buckets = Some(Arc::new(buckets));
+        }
+        Arc::clone(self.pooled_buckets.as_ref().expect("just filled"))
     }
 
     /// 2D mode: the (fold messages, fold bytes, expand messages, expand
@@ -415,37 +519,26 @@ impl QuerySession {
         let mut level = 0u32;
         // Direction-optimizing state (global statistics — the leader
         // computes these from per-node counts each level).
-        let mut bottom_up = false;
-        let mut prev_frontier = 0u64;
-        let mut m_unexplored = self.graph_edges;
+        let mut dir_state = DirOptState::new(self.graph_edges);
         loop {
             let frontier = self.frontier_len();
             if frontier == 0 {
                 break;
             }
             // ---- Direction choice (contribution 3: independent of sync) ----
-            match self.config.direction {
-                DirectionMode::TopDown => {}
-                DirectionMode::BottomUp => bottom_up = true,
-                DirectionMode::DirOpt { alpha, beta } => {
-                    let m_frontier: u64 = self
-                        .nodes
+            let bottom_up = dir_state.step(
+                self.config.direction,
+                frontier,
+                self.num_vertices as u64,
+                || {
+                    self.nodes
                         .iter()
-                        .flat_map(|n| n.q_local.iter().map(|&v| n.slab.degree_global(v) as u64))
-                        .sum();
-                    let growing = frontier > prev_frontier;
-                    if !bottom_up && alpha > 0 && growing && m_frontier > m_unexplored / alpha {
-                        bottom_up = true;
-                    } else if bottom_up
-                        && beta > 0
-                        && !growing
-                        && frontier < (self.num_vertices as u64) / beta
-                    {
-                        bottom_up = false;
-                    }
-                    prev_frontier = frontier;
-                }
-            }
+                        .flat_map(|n| {
+                            n.q_local.iter().map(|&v| n.slab.degree_global(v) as u64)
+                        })
+                        .sum()
+                },
+            );
             // ---- Phase 1: traversal ----
             self.phase1(level, bottom_up);
             let edges: u64 = self.nodes.iter().map(|n| n.edges_this_level).sum();
@@ -470,6 +563,7 @@ impl QuerySession {
                 discovered,
                 &comm,
                 sim_compute,
+                bottom_up,
             );
             if let Some((fm, fb, em, eb)) = self.phase_split(&payloads) {
                 let l = metrics.levels.last_mut().expect("level just pushed");
@@ -480,16 +574,14 @@ impl QuerySession {
             }
 
             // Update the DO bookkeeping before queues rotate.
-            if let DirectionMode::DirOpt { .. } = self.config.direction {
-                let next_edges: u64 = self
-                    .nodes
+            dir_state.claim_next(self.config.direction, || {
+                self.nodes
                     .iter()
                     .flat_map(|n| {
                         n.q_local_next.iter().map(|&v| n.slab.degree_global(v) as u64)
                     })
-                    .sum();
-                m_unexplored = m_unexplored.saturating_sub(next_edges);
-            }
+                    .sum()
+            });
             for n in &mut self.nodes {
                 n.swap_queues();
             }
@@ -511,7 +603,8 @@ impl QuerySession {
     /// step on persistent workers — they are disjoint, so pooled results
     /// are bit-identical to sequential stepping.
     fn phase1(&mut self, level: u32, bottom_up: bool) {
-        if let Some(pool) = &self.pool {
+        let pool = if self.config.parallel_phase1 { self.pool.as_ref() } else { None };
+        if let Some(pool) = pool {
             let count = self.nodes.len();
             let nodes = SendPtr(self.nodes.as_mut_ptr());
             let backends = SendPtr(self.backends.as_mut_ptr());
@@ -553,6 +646,11 @@ impl QuerySession {
 
     /// Phase 2: execute the synchronization schedule. Returns per-round
     /// per-transfer payload byte sizes for the interconnect simulator.
+    ///
+    /// With `parallel_phase2` set, each destination's merges run on its
+    /// own worker: senders are frozen round-start snapshots, receivers are
+    /// disjoint, and every receiver replays its transfers in schedule
+    /// order — bit-identical to the sequential merge loop.
     fn phase2(&mut self, level: u32) -> Vec<Vec<u64>> {
         // The schedule is plan-owned and immutable; clone the handle so
         // iterating rounds never borrows `self` (nodes mutate freely).
@@ -565,12 +663,23 @@ impl QuerySession {
         // O(queue). Cross-over at queue ≈ V/16 entries (4 words of queue
         // per bitmap word, measured on the microbench).
         let dense_threshold = (nv / 16).max(64);
+        let pooled =
+            self.config.parallel_phase2 && self.pool.is_some() && self.nodes.len() > 1;
+        let buckets = if pooled { Some(self.pooled_buckets()) } else { None };
         let mut payloads = Vec::with_capacity(schedule.rounds.len());
         // `CopyFrontier` semantics: transfers in a round see round-start
         // state. Queues are frozen by snapshotting *lengths* (they only
         // grow); bitmaps by copying words into a flat scratch buffer.
         let mut bit_snap: Vec<u64> = Vec::new();
-        for round in &schedule.rounds {
+        // Pooled merging also freezes the sparse queue prefixes by copy
+        // (a receiver appending to its queue may reallocate it under a
+        // concurrent sender-side read; the sequential path is zero-copy).
+        let mut sparse_snap: Vec<Vec<VertexId>> = if pooled {
+            vec![Vec::new(); self.nodes.len()]
+        } else {
+            Vec::new()
+        };
+        for (ri, round) in schedule.rounds.iter().enumerate() {
             let snap_len: Vec<usize> =
                 self.nodes.iter().map(|n| n.q_global.len()).collect();
             let any_dense = snap_len.iter().any(|&l| l >= dense_threshold);
@@ -583,25 +692,54 @@ impl QuerySession {
             }
             let mut round_payloads = Vec::with_capacity(round.len());
             for t in round {
-                let src = t.src as usize;
-                let dst = t.dst as usize;
-                let take = snap_len[src];
-                round_payloads.push(encoding.bytes(take as u64, nv));
-                if take >= dense_threshold {
-                    // Dense path: 64-way duplicate rejection.
-                    let src_words = &bit_snap[src * words..(src + 1) * words];
-                    self.nodes[dst].merge_bits(src_words, level);
-                } else {
-                    // Sparse path: entry-wise merge of the frozen prefix.
-                    let (sender, receiver) = if src < dst {
-                        let (lo, hi) = self.nodes.split_at_mut(dst);
-                        (&lo[src], &mut hi[0])
+                round_payloads.push(encoding.bytes(snap_len[t.src as usize] as u64, nv));
+            }
+            if let Some(buckets) = &buckets {
+                for (k, n) in self.nodes.iter().enumerate() {
+                    sparse_snap[k].clear();
+                    if snap_len[k] < dense_threshold {
+                        sparse_snap[k].extend_from_slice(&n.q_global[..snap_len[k]]);
+                    }
+                }
+                let (snap_ref, bits_ref, sparse_ref) =
+                    (&snap_len, &bit_snap, &sparse_snap);
+                let nodes = SendPtr(self.nodes.as_mut_ptr());
+                let pool = self.pool.as_ref().expect("pooled implies pool");
+                merge_round_pooled(pool, &buckets[ri], &nodes, |receiver, _dst, src| {
+                    let take = snap_ref[src];
+                    if take >= dense_threshold {
+                        receiver.merge_bits(
+                            &bits_ref[src * words..(src + 1) * words],
+                            level,
+                        );
                     } else {
-                        let (lo, hi) = self.nodes.split_at_mut(src);
-                        (&hi[0] as &ComputeNode, &mut lo[dst])
-                    };
-                    for &v in &sender.q_global[..take] {
-                        receiver.discover(v, level);
+                        for &v in &sparse_ref[src][..take] {
+                            receiver.discover(v, level);
+                        }
+                    }
+                });
+            } else {
+                for t in round {
+                    let src = t.src as usize;
+                    let dst = t.dst as usize;
+                    let take = snap_len[src];
+                    if take >= dense_threshold {
+                        // Dense path: 64-way duplicate rejection.
+                        let src_words = &bit_snap[src * words..(src + 1) * words];
+                        self.nodes[dst].merge_bits(src_words, level);
+                    } else {
+                        // Sparse path: entry-wise merge of the frozen
+                        // prefix.
+                        let (sender, receiver) = if src < dst {
+                            let (lo, hi) = self.nodes.split_at_mut(dst);
+                            (&lo[src], &mut hi[0])
+                        } else {
+                            let (lo, hi) = self.nodes.split_at_mut(src);
+                            (&hi[0] as &ComputeNode, &mut lo[dst])
+                        };
+                        for &v in &sender.q_global[..take] {
+                            receiver.discover(v, level);
+                        }
                     }
                 }
             }
@@ -671,13 +809,30 @@ impl QuerySession {
                 .map(|_| MsBfsNodeState::new(nv, b))
                 .collect();
         }
+        // Direction policy: bottom-up needs the batched kernel on *every*
+        // node's backend (capability probe) — otherwise the whole batch
+        // degrades to top-down (the XLA backend path), keeping results
+        // correct and the metrics honestly tagged.
+        let direction = if self.backends.iter().all(|bk| bk.supports_bottom_up_batch()) {
+            self.config.direction
+        } else {
+            DirectionMode::TopDown
+        };
+        let track_full = !matches!(direction, DirectionMode::TopDown);
+        let full = full_mask(b);
         // Alg. 2 prologue, batched: every node marks every root's lane
-        // ("All CN set their d"); only the owner enqueues it locally.
+        // ("All CN set their d"); only the owner enqueues it locally. With
+        // a bottom-up-capable direction, every node also seeds the level-0
+        // full frontier (every node knows every root).
         for (node, st) in self.nodes.iter().zip(self.batch_states.iter_mut()) {
+            st.set_full_tracking(track_full);
             for (lane, &r) in roots.iter().enumerate() {
                 let bit = 1u64 << lane;
                 st.seen[r as usize] |= bit;
                 st.dist[lane * nv + r as usize] = 0;
+                if track_full {
+                    st.seed_full_frontier(r, bit);
+                }
                 if node.owns(r) {
                     if st.visit[r as usize] == 0 {
                         st.q_local.push(r);
@@ -693,18 +848,44 @@ impl QuerySession {
         };
         self.ensure_pool();
         let mut level = 0u32;
+        // Direction-optimizing state — the same growing/shrinking machine
+        // the single-root `run` drives (shared `DirOptState`), on
+        // *union-frontier* statistics: a vertex active in many lanes still
+        // costs one adjacency read, so the edge masses are over distinct
+        // frontier vertices (in 2D, row-mates' block degrees sum to each
+        // vertex's full degree).
+        let mut dir_state = DirOptState::new(self.graph_edges);
         loop {
             let frontier = self.batch_frontier_len();
             if frontier == 0 {
                 break;
             }
-            // ---- Phase 1: every node expands its owned masked frontier;
-            // one adjacency read serves every active lane of the vertex.
-            // The (node, batch-state) pairs are disjoint, so the pool can
-            // step them bulk-synchronously; the per-node work is identical
-            // either way, so pooled results are bit-identical to
-            // sequential stepping.
-            if let Some(pool) = &self.pool {
+            // ---- Direction choice (independent of the sync pattern) ----
+            let bottom_up = dir_state.step(
+                direction,
+                frontier,
+                self.num_vertices as u64,
+                || {
+                    self.nodes
+                        .iter()
+                        .zip(&self.batch_states)
+                        .flat_map(|(n, s)| {
+                            s.q_local.iter().map(|&v| n.slab.degree_global(v) as u64)
+                        })
+                        .sum()
+                },
+            );
+            // ---- Phase 1 dispatch: top-down expands the owned masked
+            // frontier (one adjacency read serves every active lane of the
+            // vertex); bottom-up scans owned not-fully-seen vertices
+            // against the full frontier masks through the backend kernel.
+            // Either way the per-node state is disjoint, so the pool can
+            // step nodes bulk-synchronously with bit-identical results.
+            if bottom_up {
+                self.batch_phase1_bottom_up(level, full);
+            } else if let Some(pool) =
+                (if self.config.parallel_phase1 { self.pool.as_ref() } else { None })
+            {
                 let nodes = &self.nodes;
                 let count = self.batch_states.len();
                 let states = SendPtr(self.batch_states.as_mut_ptr());
@@ -728,10 +909,10 @@ impl QuerySession {
                 .map(|s| s.edges_this_level)
                 .max()
                 .unwrap_or(0);
-            let sim_compute = self.config.device.level_time_dir(max_node_edges, false);
+            let sim_compute = self.config.device.level_time_dir(max_node_edges, bottom_up);
 
             // ---- Phase 2: one exchange for the whole batch.
-            let payloads = self.batch_phase2(level);
+            let payloads = self.batch_phase2(level, bottom_up);
             let comm = simulate_schedule(&self.schedule, &self.config.net, |r, t| {
                 payloads[r][t]
             });
@@ -759,9 +940,21 @@ impl QuerySession {
                 expand_bytes: eb,
                 sim_compute,
                 sim_comm: comm.total(),
+                bottom_up,
             });
             metrics.sync_rounds += self.schedule.depth() as u64;
 
+            // Direction bookkeeping before queues rotate: claim the next
+            // frontier's edge mass out of the unexplored pool.
+            dir_state.claim_next(direction, || {
+                self.nodes
+                    .iter()
+                    .zip(&self.batch_states)
+                    .flat_map(|(n, s)| {
+                        s.q_local_next.iter().map(|&v| n.slab.degree_global(v) as u64)
+                    })
+                    .sum()
+            });
             for st in &mut self.batch_states {
                 st.swap_level();
             }
@@ -776,6 +969,65 @@ impl QuerySession {
         Ok(metrics)
     }
 
+    /// Phase 1 of a batched *bottom-up* level: every node's backend scans
+    /// its owned not-fully-seen vertices against the complete previous-
+    /// level frontier masks (`visit_full`, held by every node after the
+    /// exchange), then the session routes the `(vertex, new-lanes)`
+    /// discoveries through [`MsBfsNodeState::discover`] in node/scan order
+    /// — the same deterministic order pooled and sequential stepping
+    /// produce, so the two are bit-identical.
+    fn batch_phase1_bottom_up(&mut self, level: u32, full: u64) {
+        if self.batch_scratch.len() != self.nodes.len() {
+            self.batch_scratch =
+                (0..self.nodes.len()).map(|_| BatchExpandOutput::default()).collect();
+        }
+        let pool = if self.config.parallel_phase1 { self.pool.as_ref() } else { None };
+        if let Some(pool) = pool {
+            let nodes = &self.nodes;
+            let states = &self.batch_states;
+            let count = self.nodes.len();
+            let backends = SendPtr(self.backends.as_mut_ptr());
+            let scratch = SendPtr(self.batch_scratch.as_mut_ptr());
+            pool.run_indexed(count, |i| {
+                // SAFETY: `run_indexed` invokes each index exactly once and
+                // blocks until every job finished, so each `&mut` derived
+                // from index `i` aliases nothing and outlives no borrow.
+                let backend = unsafe { &mut *backends.at(i) };
+                let out = unsafe { &mut *scratch.at(i) };
+                backend.expand_bottom_up_batch(
+                    &nodes[i].slab,
+                    states[i].full_frontier(),
+                    &states[i].seen,
+                    full,
+                    out,
+                );
+            });
+        } else {
+            for ((node, st), (backend, out)) in self
+                .nodes
+                .iter()
+                .zip(self.batch_states.iter())
+                .zip(self.backends.iter_mut().zip(self.batch_scratch.iter_mut()))
+            {
+                backend.expand_bottom_up_batch(
+                    &node.slab,
+                    st.full_frontier(),
+                    &st.seen,
+                    full,
+                    out,
+                );
+            }
+        }
+        // Route discoveries (cheap, sequential: O(discovered)). Bottom-up
+        // discoveries are always owned vertices of the scanning node.
+        for (st, out) in self.batch_states.iter_mut().zip(self.batch_scratch.iter()) {
+            st.edges_this_level = out.edges_examined;
+            for &(v, d) in &out.discovered {
+                st.discover(v, d, level, true);
+            }
+        }
+    }
+
     /// Phase 2 of a batched level: execute the synchronization schedule on
     /// the nodes' `(vertex, mask)` delta lists with `CopyFrontier`
     /// semantics (transfers in a round see round-start state, frozen by
@@ -788,13 +1040,28 @@ impl QuerySession {
     /// the sparse `12·entries` at the dense per-vertex mask array), the
     /// merge follows the wire format — a word-wise OR over the snapshotted
     /// masks — instead of replaying entries one by one.
-    fn batch_phase2(&mut self, level: u32) -> Vec<Vec<u64>> {
+    ///
+    /// Bottom-up levels ship the dense presence-bitmap wire format (the
+    /// scan produces discoveries as a dense sweep, not a sorted queue):
+    /// every nonempty sender is *priced* by the per-lane-bitmap/presence
+    /// arms of the negotiated encoding
+    /// ([`MsBfsNodeState::delta_payload_bytes_dense`]). The merge
+    /// dispatch stays on the entry-count threshold regardless of
+    /// direction — replaying sparse entries is idempotent and
+    /// bit-identical to the word-wise OR, so a sparse bottom-up level
+    /// (deep-graph tail under `DirectionMode::BottomUp`) merges in
+    /// O(entries) instead of O(V) per transfer.
+    fn batch_phase2(&mut self, level: u32, bottom_up: bool) -> Vec<Vec<u64>> {
         let schedule = Arc::clone(&self.schedule);
         let nv = self.num_vertices;
         // Entries at which `12·entries >= 8·V`: the dense mask array is
         // now the (no larger) negotiated form, so merge it word-wise.
         let dense_threshold =
             ((nv as u64 * 8).div_ceil(MaskFrontier::ENTRY_BYTES) as usize).max(1);
+        let pooled = self.config.parallel_phase2
+            && self.pool.is_some()
+            && self.batch_states.len() > 1;
+        let buckets = if pooled { Some(self.pooled_buckets()) } else { None };
         let mut payloads = Vec::with_capacity(schedule.rounds.len());
         // Round-start dense snapshots (one V-word lane-mask array per
         // dense sender), flat like `phase2`'s `bit_snap` — but built
@@ -804,14 +1071,31 @@ impl QuerySession {
         // per-node accumulated prefix) instead of replaying from zero.
         let mut mask_snap: Vec<u64> = Vec::new();
         let mut mask_done: Vec<usize> = vec![0; self.batch_states.len()];
-        for round in &schedule.rounds {
+        // Pooled merging freezes the sparse sender prefixes by copy: a
+        // node can be sender and receiver in the same round, and a
+        // receiver appending to its delta list may reallocate it under a
+        // concurrent reader. (The sequential path reads senders zero-copy.)
+        let mut sparse_snap: Vec<Vec<(VertexId, u64)>> = if pooled {
+            vec![Vec::new(); self.batch_states.len()]
+        } else {
+            Vec::new()
+        };
+        for (ri, round) in schedule.rounds.iter().enumerate() {
             // Snapshot (prefix length, priced bytes) together: the
             // coalescing statistics are monotone within the level, so
             // pricing at snapshot time is exact for the frozen prefix.
             let snap: Vec<(usize, u64)> = self
                 .batch_states
                 .iter()
-                .map(|s| (s.delta.len(), s.delta_payload_bytes(s.delta.len())))
+                .map(|s| {
+                    let len = s.delta.len();
+                    let priced = if bottom_up {
+                        s.delta_payload_bytes_dense(len)
+                    } else {
+                        s.delta_payload_bytes(len)
+                    };
+                    (len, priced)
+                })
                 .collect();
             let any_dense = snap.iter().any(|&(l, _)| l >= dense_threshold);
             if any_dense {
@@ -831,36 +1115,73 @@ impl QuerySession {
             }
             let mut round_payloads = Vec::with_capacity(round.len());
             for t in round {
-                let src = t.src as usize;
-                let dst = t.dst as usize;
-                let (take, priced) = snap[src];
-                round_payloads.push(priced);
-                let dst_node = &self.nodes[dst];
-                if take >= dense_threshold {
-                    // Dense path: the frozen prefix as per-vertex masks.
-                    let masks = &mask_snap[src * nv..(src + 1) * nv];
-                    let receiver = &mut self.batch_states[dst];
-                    for (v, &m) in masks.iter().enumerate() {
-                        if m != 0 {
-                            receiver.discover(
-                                v as VertexId,
-                                m,
-                                level,
-                                dst_node.owns(v as VertexId),
-                            );
+                round_payloads.push(snap[t.src as usize].1);
+            }
+            if let Some(buckets) = &buckets {
+                for (k, s) in self.batch_states.iter().enumerate() {
+                    sparse_snap[k].clear();
+                    if snap[k].0 < dense_threshold {
+                        sparse_snap[k].extend_from_slice(&s.delta.entries()[..snap[k].0]);
+                    }
+                }
+                let nodes = &self.nodes;
+                let (snap_ref, mask_ref, sparse_ref) = (&snap, &mask_snap, &sparse_snap);
+                let states = SendPtr(self.batch_states.as_mut_ptr());
+                let pool = self.pool.as_ref().expect("pooled implies pool");
+                merge_round_pooled(pool, &buckets[ri], &states, |receiver, dst, src| {
+                    let take = snap_ref[src].0;
+                    let dst_node = &nodes[dst];
+                    if take >= dense_threshold {
+                        let masks = &mask_ref[src * nv..(src + 1) * nv];
+                        for (v, &m) in masks.iter().enumerate() {
+                            if m != 0 {
+                                receiver.discover(
+                                    v as VertexId,
+                                    m,
+                                    level,
+                                    dst_node.owns(v as VertexId),
+                                );
+                            }
+                        }
+                    } else {
+                        for &(v, m) in &sparse_ref[src][..take] {
+                            receiver.discover(v, m, level, dst_node.owns(v));
                         }
                     }
-                } else {
-                    // Sparse path: entry-wise replay of the frozen prefix.
-                    let (sender, receiver) = if src < dst {
-                        let (lo, hi) = self.batch_states.split_at_mut(dst);
-                        (&lo[src], &mut hi[0])
+                });
+            } else {
+                for t in round {
+                    let src = t.src as usize;
+                    let dst = t.dst as usize;
+                    let take = snap[src].0;
+                    let dst_node = &self.nodes[dst];
+                    if take >= dense_threshold {
+                        // Dense path: the frozen prefix as per-vertex masks.
+                        let masks = &mask_snap[src * nv..(src + 1) * nv];
+                        let receiver = &mut self.batch_states[dst];
+                        for (v, &m) in masks.iter().enumerate() {
+                            if m != 0 {
+                                receiver.discover(
+                                    v as VertexId,
+                                    m,
+                                    level,
+                                    dst_node.owns(v as VertexId),
+                                );
+                            }
+                        }
                     } else {
-                        let (lo, hi) = self.batch_states.split_at_mut(src);
-                        (&hi[0] as &MsBfsNodeState, &mut lo[dst])
-                    };
-                    for &(v, m) in &sender.delta.entries()[..take] {
-                        receiver.discover(v, m, level, dst_node.owns(v));
+                        // Sparse path: entry-wise replay of the frozen
+                        // prefix.
+                        let (sender, receiver) = if src < dst {
+                            let (lo, hi) = self.batch_states.split_at_mut(dst);
+                            (&lo[src], &mut hi[0])
+                        } else {
+                            let (lo, hi) = self.batch_states.split_at_mut(src);
+                            (&hi[0] as &MsBfsNodeState, &mut lo[dst])
+                        };
+                        for &(v, m) in &sender.delta.entries()[..take] {
+                            receiver.discover(v, m, level, dst_node.owns(v));
+                        }
                     }
                 }
             }
@@ -962,6 +1283,39 @@ impl QuerySession {
         }
         Ok(())
     }
+}
+
+/// Execute one synchronization round's pooled merges: one worker per
+/// destination in `bucket`, each replaying its transfers in schedule
+/// order via `merge(receiver, dst, src)` — so every receiver sees exactly
+/// the subsequence of merges the sequential loop would apply to it, and
+/// pooled merging is bit-identical by construction. Shared by the
+/// single-root and batched Phase 2 so the snapshot/aliasing discipline
+/// lives in one place.
+///
+/// Contract: sender data must already be frozen (round-start snapshots —
+/// a node can be sender and receiver in the same round), and `receivers`
+/// must point at live elements nothing else touches during the call;
+/// destinations are distinct across bucket entries, so each element gets
+/// at most one `&mut`.
+fn merge_round_pooled<R, F>(
+    pool: &ThreadPool,
+    bucket: &[(usize, Vec<usize>)],
+    receivers: &SendPtr<R>,
+    merge: F,
+) where
+    F: Fn(&mut R, usize, usize) + Sync + Send,
+{
+    pool.run_indexed(bucket.len(), |k| {
+        let (dst, srcs) = &bucket[k];
+        // SAFETY: destinations are distinct across bucket entries and
+        // `run_indexed` blocks until every job finished, so this `&mut`
+        // aliases nothing (see the contract above).
+        let receiver = unsafe { &mut *receivers.at(*dst) };
+        for &src in srcs {
+            merge(receiver, *dst, src);
+        }
+    });
 }
 
 /// Raw-pointer transport for handing the pool disjoint `&mut` slots of

@@ -3,6 +3,7 @@
 
 pub mod bench;
 pub mod experiments;
+pub mod protocol;
 pub mod roots;
 pub mod table;
 

@@ -1,0 +1,320 @@
+//! The committed perf-trajectory artifact: `BENCH_engine.json`.
+//!
+//! A fixed, fully deterministic bench protocol — the RMAT (`kron-like`)
+//! suite graph at a fixed scale delta, a fixed 64-root batch, the
+//! butterfly fanout-4 engine at p ∈ {16, 64} — run once per direction
+//! policy (`topdown` / `bottomup` / `diropt`). The report records the
+//! numbers the direction-optimization work is accountable for: edges
+//! inspected (total and per level, per direction tag), bytes per level,
+//! GTEPS on the simulated clock, and the per-direction level counts.
+//!
+//! The artifact lives at the repository root and is kept fresh by CI:
+//! `butterfly-bfs bench-protocol --check` recomputes the protocol and
+//! fails when the committed file drifts (integer counters compare
+//! exactly; simulated-clock floats within relative tolerance, so the
+//! check is robust to float formatting). Regenerate with
+//! `butterfly-bfs bench-protocol` after any change that moves the
+//! numbers, and commit the diff — that *is* the perf trajectory.
+
+use crate::bfs::msbfs::sample_batch_roots;
+use crate::coordinator::config::DirectionMode;
+use crate::coordinator::metrics::BatchMetrics;
+use crate::coordinator::{EngineConfig, TraversalPlan};
+use crate::graph::gen::table1_suite;
+use crate::util::json::Json;
+use crate::util::stats::gteps;
+use std::path::Path;
+
+/// Protocol identifier (bump when the schema or configs change).
+pub const PROTOCOL_NAME: &str = "engine-bench-v1";
+/// Suite graph the protocol runs on (the paper's GAP_kron analog).
+pub const PROTOCOL_GRAPH: &str = "kron-like";
+/// Scale adjustment: `kron-like` is scale 21; −10 ⇒ 2^11 vertices — big
+/// enough for dense mid-levels, small enough for CI.
+pub const PROTOCOL_SCALE_DELTA: i32 = -10;
+/// Batch width (full lane occupancy).
+pub const PROTOCOL_BATCH_WIDTH: usize = 64;
+/// Root-sampling seed (the CLI `batch` default).
+pub const PROTOCOL_ROOT_SEED: u64 = 7;
+/// Simulated node counts (the paper's DGX-2 scale and 4 racks of it).
+pub const PROTOCOL_NODE_COUNTS: [usize; 2] = [16, 64];
+/// Butterfly fanout (the paper's headline configuration).
+pub const PROTOCOL_FANOUT: u32 = 4;
+
+fn direction_modes() -> [(&'static str, DirectionMode); 3] {
+    [
+        ("topdown", DirectionMode::TopDown),
+        ("bottomup", DirectionMode::BottomUp),
+        ("diropt", DirectionMode::diropt()),
+    ]
+}
+
+/// One direction's metrics as the protocol records them.
+fn direction_json(m: &BatchMetrics) -> Json {
+    let per_level: Vec<Json> = m
+        .levels
+        .iter()
+        .map(|l| {
+            Json::obj(vec![
+                ("level", Json::u(l.level as u64)),
+                ("frontier", Json::u(l.frontier)),
+                ("edges", Json::u(l.edges_examined)),
+                ("bytes", Json::u(l.bytes)),
+                ("direction", Json::s(l.direction_name())),
+            ])
+        })
+        .collect();
+    Json::obj(vec![
+        ("levels", Json::u(m.depth() as u64)),
+        ("bottom_up_levels", Json::u(m.bottom_up_levels())),
+        ("edges_inspected", Json::u(m.edges_examined())),
+        ("bottom_up_edges", Json::u(m.bottom_up_edges())),
+        ("bytes", Json::u(m.bytes())),
+        (
+            "bytes_per_level",
+            Json::n(m.bytes() as f64 / m.depth().max(1) as f64),
+        ),
+        ("messages", Json::u(m.messages())),
+        ("sync_rounds", Json::u(m.sync_rounds)),
+        ("reached_pairs", Json::u(m.reached_pairs)),
+        ("sim_seconds", Json::n(m.sim_seconds())),
+        ("sim_gteps", Json::n(gteps(m.graph_edges, m.sim_seconds()))),
+        ("per_level", Json::Arr(per_level)),
+    ])
+}
+
+/// Run the full protocol and build the report. Deterministic: fixed
+/// graph seed, fixed roots, simulated clocks only (no wallclock fields).
+pub fn engine_bench_report() -> Json {
+    let spec = table1_suite()
+        .into_iter()
+        .find(|s| s.name == PROTOCOL_GRAPH)
+        .expect("suite contains the protocol graph");
+    let g = spec.generate_scaled(PROTOCOL_SCALE_DELTA);
+    let roots = sample_batch_roots(&g, PROTOCOL_BATCH_WIDTH, PROTOCOL_ROOT_SEED);
+    let mut configs = Vec::new();
+    for &p in &PROTOCOL_NODE_COUNTS {
+        let mut dirs: Vec<(&str, Json)> = Vec::new();
+        for (name, direction) in direction_modes() {
+            let cfg = EngineConfig {
+                direction,
+                ..EngineConfig::dgx2(p, PROTOCOL_FANOUT)
+            };
+            let mut session =
+                TraversalPlan::build(&g, cfg).expect("valid protocol plan").session();
+            let m = session
+                .run_batch_metrics_only(&roots)
+                .expect("protocol roots in range");
+            dirs.push((name, direction_json(&m)));
+        }
+        configs.push(Json::obj(vec![
+            ("nodes", Json::u(p as u64)),
+            ("fanout", Json::u(PROTOCOL_FANOUT as u64)),
+            ("mode", Json::s("1d")),
+            ("directions", Json::obj(dirs)),
+        ]));
+    }
+    Json::obj(vec![
+        ("protocol", Json::s(PROTOCOL_NAME)),
+        (
+            "graph",
+            Json::obj(vec![
+                ("name", Json::s(PROTOCOL_GRAPH)),
+                ("scale_delta", Json::n(PROTOCOL_SCALE_DELTA as f64)),
+                ("vertices", Json::u(g.num_vertices() as u64)),
+                ("edges", Json::u(g.num_edges())),
+            ]),
+        ),
+        (
+            "batch",
+            Json::obj(vec![
+                ("width", Json::u(PROTOCOL_BATCH_WIDTH as u64)),
+                ("seed", Json::u(PROTOCOL_ROOT_SEED)),
+            ]),
+        ),
+        ("configs", Json::Arr(configs)),
+    ])
+}
+
+/// Write (or overwrite) the artifact at `path`.
+pub fn write_engine_bench(path: &Path) -> std::io::Result<()> {
+    let mut text = engine_bench_report().render();
+    text.push('\n');
+    std::fs::write(path, text)
+}
+
+/// Recompute the protocol and verify the committed artifact matches:
+/// integer counters exactly, floats within relative tolerance 1e-6 —
+/// then verify the direction-optimization acceptance invariants on the
+/// fresh report itself. Any drift or invariant break is an `Err` with
+/// the offending JSON path.
+pub fn check_engine_bench(path: &Path) -> Result<(), String> {
+    let committed = std::fs::read_to_string(path).map_err(|e| {
+        format!("cannot read {}: {e} (run bench-protocol to create it)", path.display())
+    })?;
+    let committed = Json::parse(&committed)
+        .map_err(|e| format!("{} is not valid JSON: {e}", path.display()))?;
+    let fresh = engine_bench_report();
+    compare("$", &committed, &fresh)
+        .map_err(|e| format!("{} is stale: {e} (regenerate with bench-protocol)", path.display()))?;
+    acceptance(&fresh)
+}
+
+/// Structural + numeric comparison (committed vs recomputed).
+fn compare(path: &str, a: &Json, b: &Json) -> Result<(), String> {
+    match (a, b) {
+        (Json::Num(x), Json::Num(y)) => {
+            let int_x = x.fract() == 0.0 && x.abs() < 9.0e15;
+            let int_y = y.fract() == 0.0 && y.abs() < 9.0e15;
+            if int_x && int_y {
+                if x != y {
+                    return Err(format!("{path}: {x} != {y}"));
+                }
+            } else {
+                let scale = x.abs().max(y.abs());
+                if (x - y).abs() > 1e-6 * scale && (x - y).abs() > 1e-12 {
+                    return Err(format!("{path}: {x} !~ {y}"));
+                }
+            }
+            Ok(())
+        }
+        (Json::Str(x), Json::Str(y)) => {
+            if x == y {
+                Ok(())
+            } else {
+                Err(format!("{path}: {x:?} != {y:?}"))
+            }
+        }
+        (Json::Bool(x), Json::Bool(y)) => {
+            if x == y {
+                Ok(())
+            } else {
+                Err(format!("{path}: {x} != {y}"))
+            }
+        }
+        (Json::Null, Json::Null) => Ok(()),
+        (Json::Arr(xs), Json::Arr(ys)) => {
+            if xs.len() != ys.len() {
+                return Err(format!("{path}: array lengths {} vs {}", xs.len(), ys.len()));
+            }
+            for (i, (x, y)) in xs.iter().zip(ys).enumerate() {
+                compare(&format!("{path}[{i}]"), x, y)?;
+            }
+            Ok(())
+        }
+        (Json::Obj(xm), Json::Obj(ym)) => {
+            if xm.keys().ne(ym.keys()) {
+                return Err(format!(
+                    "{path}: key sets differ ({:?} vs {:?})",
+                    xm.keys().collect::<Vec<_>>(),
+                    ym.keys().collect::<Vec<_>>()
+                ));
+            }
+            for (k, x) in xm {
+                compare(&format!("{path}.{k}"), x, &ym[k])?;
+            }
+            Ok(())
+        }
+        _ => Err(format!("{path}: value kinds differ")),
+    }
+}
+
+/// The acceptance invariants the committed trajectory must show: on the
+/// dense-frontier RMAT configs, direction optimization switches bottom-up
+/// and inspects measurably fewer edges than pure top-down — in total and
+/// at the densest level.
+fn acceptance(report: &Json) -> Result<(), String> {
+    fn dir_of<'a>(c: &'a Json, nodes: u64, name: &str) -> Result<&'a Json, String> {
+        c.get("directions")
+            .and_then(|d| d.get(name))
+            .ok_or_else(|| format!("p={nodes}: missing direction {name}"))
+    }
+    fn u64_field(d: &Json, key: &str) -> Result<u64, String> {
+        d.get(key).and_then(Json::as_u64).ok_or_else(|| format!("missing {key}"))
+    }
+    fn per_level_of(d: &Json) -> Result<&[Json], String> {
+        d.get("per_level")
+            .and_then(Json::as_arr)
+            .ok_or_else(|| "missing per_level".to_string())
+    }
+    let configs = report
+        .get("configs")
+        .and_then(Json::as_arr)
+        .ok_or("missing configs")?;
+    for c in configs {
+        let nodes = u64_field(c, "nodes")?;
+        let td = u64_field(dir_of(c, nodes, "topdown")?, "edges_inspected")?;
+        let dopt = u64_field(dir_of(c, nodes, "diropt")?, "edges_inspected")?;
+        if dopt >= td {
+            return Err(format!(
+                "p={nodes}: diropt inspected {dopt} edges, not fewer than top-down's {td}"
+            ));
+        }
+        let bu_levels = u64_field(dir_of(c, nodes, "diropt")?, "bottom_up_levels")?;
+        if bu_levels == 0 {
+            return Err(format!("p={nodes}: diropt never switched bottom-up"));
+        }
+        // Densest level: bottom-up must beat top-down exactly where the
+        // optimization claims to pay.
+        let td_levels = per_level_of(dir_of(c, nodes, "topdown")?)?;
+        let dense = td_levels
+            .iter()
+            .max_by_key(|l| l.get("frontier").and_then(Json::as_u64).unwrap_or(0))
+            .ok_or("empty per_level")?;
+        let dense_idx = u64_field(dense, "level")? as usize;
+        let dopt_levels = per_level_of(dir_of(c, nodes, "diropt")?)?;
+        let td_dense = u64_field(&td_levels[dense_idx], "edges")?;
+        let dopt_dense = dopt_levels
+            .get(dense_idx)
+            .and_then(|l| l.get("edges"))
+            .and_then(Json::as_u64)
+            .ok_or_else(|| format!("p={nodes}: diropt has no level {dense_idx}"))?;
+        if dopt_dense >= td_dense {
+            return Err(format!(
+                "p={nodes} level {dense_idx}: diropt inspected {dopt_dense}, \
+                 not fewer than top-down's {td_dense}"
+            ));
+        }
+    }
+    Ok(())
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn report_is_deterministic_self_consistent_and_accepted() {
+        let a = engine_bench_report();
+        let b = engine_bench_report();
+        assert_eq!(a.render(), b.render(), "protocol must be deterministic");
+        compare("$", &a, &b).unwrap();
+        // The acceptance invariants are properties of the engine, not of
+        // the committed file — they must hold on any fresh report.
+        acceptance(&a).unwrap();
+        // Schema spot checks.
+        assert_eq!(a.get("protocol").unwrap().as_str(), Some(PROTOCOL_NAME));
+        let configs = a.get("configs").unwrap().as_arr().unwrap();
+        assert_eq!(configs.len(), PROTOCOL_NODE_COUNTS.len());
+        for c in configs {
+            for d in ["topdown", "bottomup", "diropt"] {
+                assert!(c.get("directions").unwrap().get(d).is_some(), "{d}");
+            }
+        }
+    }
+
+    #[test]
+    fn write_then_check_roundtrip() {
+        let dir = std::env::temp_dir().join("bbfs_protocol_test");
+        std::fs::create_dir_all(&dir).unwrap();
+        let path = dir.join("BENCH_engine.json");
+        write_engine_bench(&path).unwrap();
+        check_engine_bench(&path).unwrap();
+        // A perturbed integer is caught.
+        let text = std::fs::read_to_string(&path).unwrap();
+        let broken = text.replacen("\"sync_rounds\":", "\"sync_rounds\":1", 1);
+        std::fs::write(&path, broken).unwrap();
+        assert!(check_engine_bench(&path).is_err());
+        let _ = std::fs::remove_file(&path);
+    }
+}

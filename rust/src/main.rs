@@ -68,6 +68,7 @@ fn dispatch(argv: Vec<String>) -> Result<()> {
         "generate" => cmd_generate(rest),
         "inspect" => cmd_inspect(rest),
         "schedule" => cmd_schedule(rest),
+        "bench-protocol" => cmd_bench_protocol(rest),
         "--help" | "-h" | "help" => {
             print_usage();
             Ok(())
@@ -85,7 +86,8 @@ fn print_usage() {
          \x20 baseline  single-node CPU top-down / direction-optimizing BFS\n\
          \x20 generate  generate a suite graph to a file\n\
          \x20 inspect   print graph properties\n\
-         \x20 schedule  print a communication schedule and its costs\n"
+         \x20 schedule  print a communication schedule and its costs\n\
+         \x20 bench-protocol  write or check the committed BENCH_engine.json\n"
     );
 }
 
@@ -144,6 +146,7 @@ fn cmd_run(argv: Vec<String>) -> Result<()> {
         .opt("direction", "topdown", "phase-1 direction: topdown | bottomup | diropt")
         .flag("no-lrb", "disable LRB load balancing")
         .flag("parallel", "run Phase 1 on threads")
+        .flag("parallel-sync", "run the Phase-2 merges on threads")
         .flag("json", "dump metrics as JSON");
     let a = handle_help(spec.clone().parse(argv), &spec)?;
 
@@ -157,12 +160,7 @@ fn cmd_run(argv: Vec<String>) -> Result<()> {
     };
     let payload = parse_payload(&a.get("payload"))?;
     let net = net_by_name(&a.get("net"))?;
-    let direction = match a.get("direction").as_str() {
-        "topdown" => DirectionMode::TopDown,
-        "bottomup" => DirectionMode::BottomUp,
-        "diropt" => DirectionMode::diropt(),
-        d => bail!("unknown direction {d:?}"),
-    };
+    let direction = parse_direction(&a.get("direction"))?;
     let partition = parse_partition_mode(&a.get("mode"), &a.get("grid"), nodes)?;
     let cfg = EngineConfig {
         num_nodes: nodes,
@@ -172,6 +170,7 @@ fn cmd_run(argv: Vec<String>) -> Result<()> {
         use_lrb: !a.get_flag("no-lrb"),
         direction,
         parallel_phase1: a.get_flag("parallel"),
+        parallel_phase2: a.get_flag("parallel-sync"),
         net,
         ..EngineConfig::dgx2(nodes, 1)
     };
@@ -221,6 +220,15 @@ fn cmd_run(argv: Vec<String>) -> Result<()> {
         count(m.bytes()),
         m.depth()
     );
+    if !matches!(direction, DirectionMode::TopDown) {
+        println!(
+            "direction: {}/{} levels bottom-up ({} of {} edges inspected bottom-up)",
+            m.bottom_up_levels(),
+            m.depth(),
+            count(m.bottom_up_edges()),
+            count(m.edges_examined())
+        );
+    }
     if let PartitionMode::TwoD { .. } = partition {
         println!(
             "  fold (rows): {} messages, {} bytes | expand (cols): {} messages, {} bytes",
@@ -276,6 +284,15 @@ fn parse_payload(name: &str) -> Result<PayloadEncoding> {
     })
 }
 
+fn parse_direction(name: &str) -> Result<DirectionMode> {
+    Ok(match name {
+        "topdown" => DirectionMode::TopDown,
+        "bottomup" => DirectionMode::BottomUp,
+        "diropt" => DirectionMode::diropt(),
+        d => bail!("unknown direction {d:?}"),
+    })
+}
+
 /// Batched multi-source BFS: sample (or take) up to 64 roots and push them
 /// through one `run_batch`, reporting the amortization against what 64
 /// sequential runs would have cost.
@@ -289,7 +306,9 @@ fn cmd_batch(argv: Vec<String>) -> Result<()> {
         .opt("roots", "64", "batch width (1..=64 random non-isolated roots)")
         .opt("seed", "7", "root sampling seed")
         .opt("scale-delta", "0", "suite graph scale adjustment (+/- log2)")
+        .opt("direction", "topdown", "phase-1 direction: topdown | bottomup | diropt")
         .flag("parallel", "step nodes on the thread pool")
+        .flag("parallel-sync", "run the Phase-2 merges on threads")
         .flag("compare", "also run the roots sequentially and report the ratio");
     let a = handle_help(spec.clone().parse(argv), &spec)?;
 
@@ -301,9 +320,12 @@ fn cmd_batch(argv: Vec<String>) -> Result<()> {
         bail!("--roots must be in 1..=64 (got {width})");
     }
     let partition = parse_partition_mode(&a.get("mode"), &a.get("grid"), nodes)?;
+    let direction = parse_direction(&a.get("direction"))?;
     let cfg = EngineConfig {
         partition,
+        direction,
         parallel_phase1: a.get_flag("parallel"),
+        parallel_phase2: a.get_flag("parallel-sync"),
         ..EngineConfig::dgx2(nodes, fanout)
     };
     let plan = TraversalPlan::build(&g, cfg)?;
@@ -332,6 +354,14 @@ fn cmd_batch(argv: Vec<String>) -> Result<()> {
         count(bm.messages()),
         count(bm.bytes()),
         bm.sim_seconds() * 1e3
+    );
+    println!(
+        "phase 1: {} edges inspected; direction {}: {}/{} levels bottom-up ({} edges)",
+        count(bm.edges_examined()),
+        a.get("direction"),
+        bm.bottom_up_levels(),
+        bm.depth(),
+        count(bm.bottom_up_edges())
     );
     if a.get_flag("compare") {
         let seq = session.sequential_baseline(&roots)?;
@@ -475,6 +505,32 @@ fn cmd_schedule(argv: Vec<String>) -> Result<()> {
                 println!("    {} -> {}", tr.src, tr.dst);
             }
         }
+    }
+    Ok(())
+}
+
+/// Write or verify the committed perf-trajectory artifact
+/// (`BENCH_engine.json`): deterministic direction-ablation counters for
+/// the fixed RMAT batch configs at p ∈ {16, 64} — see
+/// `harness::protocol`. `--check` recomputes the protocol and fails when
+/// the committed file is stale (integer counters compare exactly, float
+/// fields within tolerance).
+fn cmd_bench_protocol(argv: Vec<String>) -> Result<()> {
+    let spec = Args::new(
+        "butterfly-bfs bench-protocol",
+        "write or check the committed BENCH_engine.json artifact",
+    )
+    .opt("out", "BENCH_engine.json", "artifact path (the repo root copy is committed)")
+    .flag("check", "verify the committed artifact instead of writing");
+    let a = handle_help(spec.clone().parse(argv), &spec)?;
+    let path = a.get("out");
+    let p = Path::new(&path);
+    if a.get_flag("check") {
+        butterfly_bfs::harness::protocol::check_engine_bench(p)?;
+        println!("{path}: fresh (matches the recomputed protocol)");
+    } else {
+        butterfly_bfs::harness::protocol::write_engine_bench(p)?;
+        println!("wrote {path}");
     }
     Ok(())
 }

@@ -78,25 +78,39 @@ impl Partition1D {
 ///
 /// Greedy prefix scan: part `p` ends at the first vertex where the running
 /// edge count reaches `(p+1)·m/parts`. Every part is non-empty when
-/// `parts <= num_vertices`.
+/// `parts <= num_vertices`. The CSR offsets array *is* the out-edge
+/// prefix-weight array, so this delegates to the shared greedy.
 pub fn partition_1d(g: &Csr, parts: usize) -> Partition1D {
+    Partition1D { cuts: balanced_cuts_from_prefix(g.offsets(), parts) }
+}
+
+/// The one greedy cut policy behind every contiguous balanced partition
+/// axis: given `prefix[v]` = total weight of vertices `0..v` (length
+/// `n + 1`, monotone), cut into `parts` non-empty ranges of near-equal
+/// weight. Range `p` ends at the first vertex where the running weight
+/// reaches `(p+1)·total/parts`, always leaving at least one vertex per
+/// remaining range. The 1D row cuts use the CSR offsets (out-edges); the
+/// 2D column cuts use an in-degree prefix
+/// ([`Partition2D::new`](crate::partition::Partition2D)) — one
+/// implementation, so the two axes can never drift apart.
+pub fn balanced_cuts_from_prefix(prefix: &[u64], parts: usize) -> Vec<VertexId> {
     assert!(parts >= 1, "parts must be >= 1");
-    let n = g.num_vertices();
+    assert!(!prefix.is_empty(), "prefix must have n + 1 entries");
+    let n = prefix.len() - 1;
     assert!(
         parts <= n.max(1),
         "more parts ({parts}) than vertices ({n})"
     );
-    let m = g.num_edges() as f64;
-    let offsets = g.offsets();
+    let total = prefix[n] as f64;
     let mut cuts = Vec::with_capacity(parts + 1);
     cuts.push(0 as VertexId);
     let mut v = 0usize;
     for p in 1..parts {
-        let target = m * p as f64 / parts as f64;
-        // Advance to the first vertex whose prefix-edge count >= target,
-        // but always leave enough vertices for the remaining parts.
+        let target = total * p as f64 / parts as f64;
+        // Advance to the first vertex whose prefix weight >= target, but
+        // always leave enough vertices for the remaining parts.
         let max_v = n - (parts - p); // leave >= 1 vertex per remaining part
-        while v < max_v && (offsets[v + 1] as f64) < target {
+        while v < max_v && (prefix[v + 1] as f64) < target {
             v += 1;
         }
         // Ensure strictly increasing cuts (non-empty parts).
@@ -105,7 +119,7 @@ pub fn partition_1d(g: &Csr, parts: usize) -> Partition1D {
         cuts.push(v as VertexId);
     }
     cuts.push(n as VertexId);
-    Partition1D { cuts }
+    cuts
 }
 
 #[cfg(test)]

@@ -29,10 +29,14 @@ pub struct Partition2D {
     pub grid_rows: u32,
     /// Processor-grid columns (target-axis split).
     pub grid_cols: u32,
-    /// Source-axis cut points, length `grid_rows + 1` (edge-balanced —
-    /// Phase-1 expansion work is proportional to block edges).
+    /// Source-axis cut points, length `grid_rows + 1` (edge-balanced by
+    /// out-edges — Phase-1 expansion work is proportional to block edges).
     pub row_cuts: Vec<VertexId>,
-    /// Target-axis cut points, length `grid_cols + 1` (vertex-balanced).
+    /// Target-axis cut points, length `grid_cols + 1` (edge-balanced by
+    /// *in*-edges: a processor column's work is receiving/scattering the
+    /// edges that target its vertex range, so vertex-balanced cuts load
+    /// one column with every hub of a skewed graph — the same argument
+    /// the paper makes for the 1D row cuts).
     pub col_cuts: Vec<VertexId>,
 }
 
@@ -48,9 +52,12 @@ impl Partition2D {
             "grid {rows}x{cols} larger than vertex count {n}"
         );
         let row_cuts = partition_1d(g, rows as usize).cuts;
-        let col_cuts = (0..=cols as usize)
-            .map(|j| (n * j / cols as usize) as VertexId)
-            .collect();
+        // In-degree mass per target vertex: one pass over the arc array.
+        let mut in_deg = vec![0u64; n];
+        for &w in g.edges() {
+            in_deg[w as usize] += 1;
+        }
+        let col_cuts = weight_balanced_cuts(&in_deg, cols as usize);
         Self { grid_rows: rows, grid_cols: cols, row_cuts, col_cuts }
     }
 
@@ -140,6 +147,31 @@ impl Partition2D {
         self.block_slabs(g).iter().map(|s| s.num_edges()).collect()
     }
 
+    /// In-edges targeting each processor column's vertex range, in column
+    /// order — the quantity the column cuts balance.
+    pub fn col_in_edges(&self, g: &Csr) -> Vec<u64> {
+        let mut per = vec![0u64; self.grid_cols as usize];
+        for &w in g.edges() {
+            per[self.col_of(w) as usize] += 1;
+        }
+        per
+    }
+
+    /// Column in-edge balance ratio: max column in-edges / mean (1.0 =
+    /// perfect). The edge-balanced cuts keep this near 1 on skewed graphs
+    /// where vertex-balanced cuts would load one processor column with
+    /// every hub.
+    pub fn col_imbalance(&self, g: &Csr) -> f64 {
+        let per = self.col_in_edges(g);
+        let max = *per.iter().max().unwrap_or(&0) as f64;
+        let mean = per.iter().sum::<u64>() as f64 / per.len() as f64;
+        if mean == 0.0 {
+            1.0
+        } else {
+            max / mean
+        }
+    }
+
     /// Edge-balance ratio: max block edges / mean block edges (1.0 =
     /// perfect; the column filter makes blocks less balanced than the 1D
     /// row cuts alone).
@@ -190,6 +222,21 @@ impl Partition2D {
         }
         (rows.max(1), p / rows.max(1))
     }
+}
+
+/// Contiguous cuts over `weights` into `parts` non-empty ranges with
+/// near-equal weight per range: builds the prefix-weight array and
+/// delegates to the shared greedy
+/// ([`balanced_cuts_from_prefix`](crate::partition::one_d::balanced_cuts_from_prefix)
+/// — the exact policy the 1D row cuts use, so the two axes follow one
+/// implementation).
+fn weight_balanced_cuts(weights: &[u64], parts: usize) -> Vec<VertexId> {
+    let mut prefix = Vec::with_capacity(weights.len() + 1);
+    prefix.push(0u64);
+    for &w in weights {
+        prefix.push(prefix.last().unwrap() + w);
+    }
+    crate::partition::one_d::balanced_cuts_from_prefix(&prefix, parts)
 }
 
 #[cfg(test)]
@@ -272,6 +319,61 @@ mod tests {
                 assert_eq!(merged, g.neighbors(u), "row {u}");
             }
         }
+    }
+
+    #[test]
+    fn col_cuts_adapt_to_in_edge_skew() {
+        use crate::graph::gen::structured::star;
+        // A 64-leaf star: symmetrized, vertex 0 carries half of all arcs.
+        // Vertex-balanced cuts would give column 0 the hub *plus* 31
+        // leaves (~75% of in-edges); edge-balanced cuts end column 0
+        // right after the hub.
+        let g = star(64);
+        let p2 = Partition2D::new(&g, 1, 2);
+        assert_eq!(p2.col_cuts, vec![0, 1, 64], "hub isolated in column 0");
+        let per = p2.col_in_edges(&g);
+        assert_eq!(per.iter().sum::<u64>(), g.num_edges());
+        assert!(p2.col_imbalance(&g) < 1.1, "imbalance {}", p2.col_imbalance(&g));
+    }
+
+    #[test]
+    fn col_cuts_edge_balanced_on_skewed_kronecker() {
+        use crate::graph::gen::kronecker::{kronecker, KroneckerParams};
+        let (g, _) = kronecker(KroneckerParams::graph500(12, 16), 9);
+        let p2 = Partition2D::new(&g, 2, 8);
+        // Same bound the 1D row cuts promise on the same family: greedy
+        // prefix stays within 2x of the mean unless one hub dominates.
+        assert!(p2.col_imbalance(&g) < 2.0, "imbalance {}", p2.col_imbalance(&g));
+        // A vertex-balanced split of the same graph is measurably worse
+        // (this is the regression the edge-balanced cuts fix).
+        let n = g.num_vertices();
+        let vertex_cuts: Vec<VertexId> =
+            (0..=8usize).map(|j| (n * j / 8) as VertexId).collect();
+        let mut per = vec![0u64; 8];
+        for &w in g.edges() {
+            let j = vertex_cuts.partition_point(|&c| c <= w) - 1;
+            per[j] += 1;
+        }
+        let vmax = *per.iter().max().unwrap() as f64;
+        let vmean = per.iter().sum::<u64>() as f64 / 8.0;
+        assert!(
+            p2.col_imbalance(&g) < vmax / vmean,
+            "edge-balanced {} vs vertex-balanced {}",
+            p2.col_imbalance(&g),
+            vmax / vmean
+        );
+    }
+
+    #[test]
+    fn weight_balanced_cuts_degenerate_inputs() {
+        // All-zero weights: unit ranges from the front (same shape the 1D
+        // greedy produces on an empty graph).
+        assert_eq!(weight_balanced_cuts(&[0, 0, 0, 0], 3), vec![0, 1, 2, 4]);
+        // Single part spans everything; parts == n isolates every vertex.
+        assert_eq!(weight_balanced_cuts(&[5, 1, 3], 1), vec![0, 3]);
+        assert_eq!(weight_balanced_cuts(&[5, 1, 3], 3), vec![0, 1, 2, 3]);
+        // One dominant weight: it gets its own range as soon as possible.
+        assert_eq!(weight_balanced_cuts(&[100, 1, 1, 1, 1], 2), vec![0, 1, 5]);
     }
 
     #[test]

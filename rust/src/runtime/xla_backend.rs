@@ -163,6 +163,16 @@ impl ComputeBackend for XlaFrontierBackend {
             }
         }
     }
+
+    /// The compiled artifacts are 0/1 frontier steps with no lane-mask
+    /// variant, so batched bottom-up stays unsupported: `run_batch` with a
+    /// bottom-up-capable `DirectionMode` degrades the whole batch to
+    /// top-down on sessions carrying this backend (the engine's
+    /// capability probe). Explicit here (the trait default is already
+    /// `false`) so the degradation contract is visible at the impl.
+    fn supports_bottom_up_batch(&self) -> bool {
+        false
+    }
 }
 
 #[cfg(test)]

@@ -1,0 +1,402 @@
+//! Batched direction-optimization equivalence suite.
+//!
+//! The direction policy is a pure Phase-1 strategy: levels are
+//! synchronous, so `run_batch` distances must be **bit-identical** across
+//! `topdown` / `bottomup` / `diropt` and equal to the serial per-root
+//! oracle — on every partition mode, for duplicate and partial batches
+//! alike. On top of the equivalence, the α/β switch must honor its
+//! hysteresis contract (switch bottom-up only on a growing frontier, back
+//! only on a shrinking one below `V/β`; `α = 0` disables bottom-up,
+//! `β = 0` latches it), and the pooled Phase-2 merge path must reproduce
+//! the sequential merge bit for bit.
+
+use butterfly_bfs::bfs::msbfs::ms_bfs;
+use butterfly_bfs::bfs::serial::serial_bfs;
+use butterfly_bfs::coordinator::config::DirectionMode;
+use butterfly_bfs::coordinator::{BatchResult, EngineConfig, QuerySession, TraversalPlan};
+use butterfly_bfs::graph::csr::{Csr, VertexId};
+use butterfly_bfs::graph::gen::kronecker::{kronecker, KroneckerParams};
+use butterfly_bfs::graph::gen::structured::{grid2d, path, star};
+use butterfly_bfs::graph::gen::urand::uniform_random;
+use butterfly_bfs::util::propcheck::{forall, gen, Config};
+
+fn session_for(g: &Csr, cfg: EngineConfig) -> QuerySession {
+    TraversalPlan::build(g, cfg).expect("valid plan").session()
+}
+
+const DIRECTIONS: [DirectionMode; 3] = [
+    DirectionMode::TopDown,
+    DirectionMode::BottomUp,
+    DirectionMode::DirOpt { alpha: 15, beta: 18 },
+];
+
+/// Run `roots` through `run_batch` under every direction policy on `base`
+/// and assert all lanes' distances are bit-identical to each other and to
+/// the serial oracle.
+fn check_direction_equivalence(g: &Csr, base: EngineConfig, roots: &[VertexId]) {
+    let mut results: Vec<BatchResult> = Vec::new();
+    for direction in DIRECTIONS {
+        let mut session = session_for(g, EngineConfig { direction, ..base.clone() });
+        let b = session.run_batch(roots).unwrap();
+        session.assert_batch_agreement().unwrap();
+        results.push(b);
+    }
+    for (lane, &r) in roots.iter().enumerate() {
+        let want = serial_bfs(g, r);
+        for (b, direction) in results.iter().zip(DIRECTIONS) {
+            assert_eq!(
+                b.dist(lane),
+                &want[..],
+                "{direction:?} lane {lane} root {r}"
+            );
+        }
+    }
+    // Reached-pair totals agree too (same information, cheaper signal).
+    assert_eq!(results[0].reached_pairs(), results[1].reached_pairs());
+    assert_eq!(results[0].reached_pairs(), results[2].reached_pairs());
+}
+
+#[test]
+fn directions_equivalent_one_d_across_node_counts() {
+    let (g, _) = kronecker(KroneckerParams::graph500(10, 8), 77);
+    let roots: Vec<VertexId> = (0..64u32).map(|i| (i * 13) % 1024).collect();
+    for (nodes, fanout) in [(1usize, 1u32), (4, 1), (16, 4), (9, 2)] {
+        check_direction_equivalence(&g, EngineConfig::dgx2(nodes, fanout), &roots);
+    }
+}
+
+#[test]
+fn directions_equivalent_two_d_grids() {
+    let (g, _) = uniform_random(700, 8, 19);
+    let roots: Vec<VertexId> = (0..32u32).map(|i| (i * 17) % 700).collect();
+    for (rows, cols) in [(4u32, 4u32), (2, 3), (1, 5), (5, 1)] {
+        check_direction_equivalence(&g, EngineConfig::dgx2_2d(rows, cols), &roots);
+    }
+}
+
+#[test]
+fn directions_equivalent_duplicate_and_partial_batches() {
+    let (g, _) = uniform_random(400, 6, 2);
+    for roots in [
+        vec![5u32],
+        vec![1, 1, 1],
+        vec![0, 399, 7, 7, 200],
+        vec![9u32; 64],
+    ] {
+        check_direction_equivalence(&g, EngineConfig::dgx2(8, 4), &roots);
+        check_direction_equivalence(&g, EngineConfig::dgx2_2d(2, 2), &roots);
+    }
+}
+
+#[test]
+fn directions_equivalent_structured_graphs() {
+    for g in [path(40), star(300), grid2d(8, 9)] {
+        let n = g.num_vertices() as VertexId;
+        let roots = vec![0, n - 1, n / 2, 0];
+        check_direction_equivalence(&g, EngineConfig::dgx2(4, 2), &roots);
+    }
+}
+
+#[test]
+fn bottom_up_matches_bit_parallel_oracle_exactly() {
+    let (g, _) = kronecker(KroneckerParams::graph500(10, 8), 3);
+    let roots: Vec<VertexId> = (0..48u32).map(|i| i * 7).collect();
+    let cfg = EngineConfig {
+        direction: DirectionMode::BottomUp,
+        ..EngineConfig::dgx2(16, 4)
+    };
+    let mut session = session_for(&g, cfg);
+    let b = session.run_batch(&roots).unwrap();
+    let want = ms_bfs(&g, &roots);
+    for lane in 0..roots.len() {
+        assert_eq!(b.dist(lane), want.dist(lane), "lane {lane}");
+    }
+    assert_eq!(b.reached_pairs(), want.reached_pairs());
+    // Every level is tagged bottom-up in the metrics.
+    assert!(b.metrics().levels.iter().all(|l| l.bottom_up));
+    assert_eq!(b.metrics().bottom_up_edges(), b.metrics().edges_examined());
+}
+
+#[test]
+fn diropt_batch_saves_edges_on_dense_frontier_rmat() {
+    // The tentpole's acceptance shape (the committed BENCH_engine.json
+    // shows the same on the fixed protocol configs): on a low-diameter
+    // RMAT batch, diropt must (a) actually switch bottom-up, (b) inspect
+    // fewer edges than pure top-down overall, and (c) win at the densest
+    // level specifically.
+    let (g, _) = kronecker(KroneckerParams::graph500(11, 16), 13);
+    let roots: Vec<VertexId> =
+        butterfly_bfs::bfs::msbfs::sample_batch_roots(&g, 64, 0xBEEF);
+    let mut td = session_for(&g, EngineConfig::dgx2(16, 4));
+    let mut dopt = session_for(
+        &g,
+        EngineConfig {
+            direction: DirectionMode::diropt(),
+            ..EngineConfig::dgx2(16, 4)
+        },
+    );
+    let btd = td.run_batch(&roots).unwrap();
+    let bdo = dopt.run_batch(&roots).unwrap();
+    for lane in 0..roots.len() {
+        assert_eq!(btd.dist(lane), bdo.dist(lane), "lane {lane}");
+    }
+    let (mtd, mdo) = (btd.metrics(), bdo.metrics());
+    assert!(mdo.bottom_up_levels() >= 1, "diropt never switched");
+    assert!(
+        mdo.edges_examined() < mtd.edges_examined(),
+        "diropt {} vs topdown {}",
+        mdo.edges_examined(),
+        mtd.edges_examined()
+    );
+    let dense = mtd
+        .levels
+        .iter()
+        .max_by_key(|l| l.frontier)
+        .expect("nonempty run");
+    let dense_do = &mdo.levels[dense.level as usize];
+    assert!(dense_do.bottom_up, "densest level should run bottom-up");
+    assert!(
+        dense_do.edges_examined < dense.edges_examined,
+        "dense level: diropt {} vs topdown {}",
+        dense_do.edges_examined,
+        dense.edges_examined
+    );
+}
+
+#[test]
+fn alpha_zero_disables_bottom_up_beta_zero_latches_it() {
+    let (g, _) = kronecker(KroneckerParams::graph500(10, 16), 5);
+    let roots: Vec<VertexId> = (0..64u32).map(|i| (i * 3) % 1024).collect();
+    // α = 0: the TD→BU condition can never fire — pure top-down.
+    let mut s = session_for(
+        &g,
+        EngineConfig {
+            direction: DirectionMode::DirOpt { alpha: 0, beta: 18 },
+            ..EngineConfig::dgx2(8, 2)
+        },
+    );
+    let b = s.run_batch(&roots).unwrap();
+    assert_eq!(b.metrics().bottom_up_levels(), 0);
+    // Aggressive α with β = 0: once bottom-up, never back.
+    let mut s = session_for(
+        &g,
+        EngineConfig {
+            direction: DirectionMode::DirOpt { alpha: 1_000_000, beta: 0 },
+            ..EngineConfig::dgx2(8, 2)
+        },
+    );
+    let b = s.run_batch(&roots).unwrap();
+    let tags: Vec<bool> = b.metrics().levels.iter().map(|l| l.bottom_up).collect();
+    if let Some(first_bu) = tags.iter().position(|&t| t) {
+        assert!(
+            tags[first_bu..].iter().all(|&t| t),
+            "β = 0 must latch bottom-up: {tags:?}"
+        );
+    }
+    for (lane, &r) in roots.iter().enumerate() {
+        assert_eq!(b.dist(lane), &serial_bfs(&g, r)[..], "lane {lane}");
+    }
+}
+
+/// The α/β hysteresis contract, checked against the recorded per-level
+/// trace: a TD→BU transition requires a *growing* frontier; a BU→TD
+/// transition requires a *shrinking* frontier strictly below `V/β`.
+/// (These are exactly the guards at the switch boundary — the regression
+/// this test pins is the switch firing on the wrong side of them.)
+fn assert_hysteresis(b: &BatchResult, num_vertices: u64, beta: u64) {
+    let levels = &b.metrics().levels;
+    for w in levels.windows(2) {
+        let (prev, cur) = (&w[0], &w[1]);
+        if !prev.bottom_up && cur.bottom_up {
+            assert!(
+                cur.frontier > prev.frontier,
+                "TD->BU at level {} without growth: {} -> {}",
+                cur.level,
+                prev.frontier,
+                cur.frontier
+            );
+        }
+        if prev.bottom_up && !cur.bottom_up {
+            assert!(
+                cur.frontier <= prev.frontier,
+                "BU->TD at level {} while growing: {} -> {}",
+                cur.level,
+                prev.frontier,
+                cur.frontier
+            );
+            assert!(
+                cur.frontier < num_vertices / beta,
+                "BU->TD at level {} above V/beta: {} >= {}/{}",
+                cur.level,
+                cur.frontier,
+                num_vertices,
+                beta
+            );
+        }
+    }
+}
+
+#[test]
+fn switch_hysteresis_holds_at_the_boundary() {
+    // A web-like graph (dense core + deep strands) drives the frontier
+    // up through the core and back down the strands, crossing the switch
+    // boundary in both directions.
+    let spec = butterfly_bfs::graph::gen::table1_suite()
+        .into_iter()
+        .find(|s| s.name == "webbase-like")
+        .unwrap();
+    let g = spec.generate_scaled(-9);
+    let roots: Vec<VertexId> =
+        butterfly_bfs::bfs::msbfs::sample_batch_roots(&g, 48, 11);
+    for (alpha, beta) in [(15u64, 18u64), (1, 1), (4, 64), (100, 2)] {
+        let mut s = session_for(
+            &g,
+            EngineConfig {
+                direction: DirectionMode::DirOpt { alpha, beta },
+                ..EngineConfig::dgx2(8, 2)
+            },
+        );
+        let b = s.run_batch(&roots).unwrap();
+        assert_hysteresis(&b, g.num_vertices() as u64, beta);
+        for (lane, &r) in roots.iter().enumerate() {
+            assert_eq!(
+                b.dist(lane),
+                &serial_bfs(&g, r)[..],
+                "alpha={alpha} beta={beta} lane {lane}"
+            );
+        }
+    }
+}
+
+#[test]
+fn property_batch_directions_equal_serial() {
+    forall(Config::cases(18), "run_batch direction-invariant == serial", |rng| {
+        let n = gen::usize_in(rng, 10, 300);
+        let ef = gen::usize_in(rng, 1, 6) as u32;
+        let b = gen::usize_in(rng, 1, 32);
+        let (g, _) = uniform_random(n, ef, rng.next_u64());
+        let roots: Vec<VertexId> =
+            (0..b).map(|_| rng.next_usize(n) as VertexId).collect();
+        let base = if rng.next_below(2) == 0 {
+            let nodes = gen::usize_in(rng, 1, 8.min(n));
+            EngineConfig::dgx2(nodes, gen::usize_in(rng, 1, 4) as u32)
+        } else {
+            let rows = gen::usize_in(rng, 1, 4.min(n)) as u32;
+            let cols = gen::usize_in(rng, 1, 4.min(n)) as u32;
+            EngineConfig::dgx2_2d(rows, cols)
+        };
+        let mut ok = true;
+        for direction in DIRECTIONS {
+            let mut session = TraversalPlan::build(&g, EngineConfig { direction, ..base.clone() })
+                .unwrap()
+                .session();
+            let batch = session.run_batch(&roots).unwrap();
+            ok &= session.assert_batch_agreement().is_ok()
+                && roots
+                    .iter()
+                    .enumerate()
+                    .all(|(lane, &r)| batch.dist(lane) == &serial_bfs(&g, r)[..]);
+        }
+        (ok, format!("n={n} ef={ef} b={b}"))
+    });
+}
+
+/// Pooled Phase-2 merging must be bit-identical to sequential merging —
+/// distances *and* the integer level accounting — for single-root and
+/// batched queries, all directions, both partition modes.
+#[test]
+fn property_pooled_phase2_bit_identical() {
+    forall(Config::cases(30), "parallel_phase2 == sequential", |rng| {
+        let n = gen::usize_in(rng, 10, 250);
+        let ef = gen::usize_in(rng, 1, 6) as u32;
+        let (g, _) = uniform_random(n, ef, rng.next_u64());
+        let base = if rng.next_below(2) == 0 {
+            let nodes = gen::usize_in(rng, 2, 8.min(n));
+            EngineConfig::dgx2(nodes, gen::usize_in(rng, 1, 4) as u32)
+        } else {
+            let rows = gen::usize_in(rng, 1, 4.min(n)) as u32;
+            let cols = gen::usize_in(rng, 2, 4.min(n)) as u32;
+            EngineConfig::dgx2_2d(rows, cols)
+        };
+        let direction = match rng.next_below(3) {
+            0 => DirectionMode::TopDown,
+            1 => DirectionMode::BottomUp,
+            _ => DirectionMode::diropt(),
+        };
+        let cfg = EngineConfig { direction, ..base };
+        let mut seq = session_for(&g, cfg.clone());
+        let mut par = session_for(&g, EngineConfig { parallel_phase2: true, ..cfg });
+        let mut ok = true;
+        // Single-root.
+        let root = rng.next_usize(n) as u32;
+        let rs = seq.run(root).unwrap();
+        let rp = par.run(root).unwrap();
+        ok &= par.assert_agreement().is_ok() && rs.dist() == rp.dist();
+        for (a, c) in rs.metrics().levels.iter().zip(&rp.metrics().levels) {
+            ok &= a.frontier == c.frontier
+                && a.edges_examined == c.edges_examined
+                && a.discovered == c.discovered
+                && a.messages == c.messages
+                && a.bytes == c.bytes
+                && a.bottom_up == c.bottom_up;
+        }
+        // Batched.
+        let b = gen::usize_in(rng, 1, 24);
+        let roots: Vec<VertexId> =
+            (0..b).map(|_| rng.next_usize(n) as VertexId).collect();
+        let bs = seq.run_batch(&roots).unwrap();
+        let bp = par.run_batch(&roots).unwrap();
+        ok &= par.assert_batch_agreement().is_ok();
+        for lane in 0..roots.len() {
+            ok &= bs.dist(lane) == bp.dist(lane);
+        }
+        for (a, c) in bs.metrics().levels.iter().zip(&bp.metrics().levels) {
+            ok &= a.frontier == c.frontier
+                && a.edges_examined == c.edges_examined
+                && a.discovered == c.discovered
+                && a.messages == c.messages
+                && a.bytes == c.bytes
+                && a.bottom_up == c.bottom_up;
+        }
+        (ok, format!("n={n} ef={ef} {direction:?}"))
+    });
+}
+
+/// Both pools at once (Phase 1 + Phase 2) still reproduce sequential
+/// results — the configuration the CLI's `--parallel --parallel-sync`
+/// smoke exercises.
+#[test]
+fn both_phases_pooled_match_sequential() {
+    let (g, _) = kronecker(KroneckerParams::graph500(10, 8), 4);
+    let roots: Vec<VertexId> = (0..64u32).map(|i| (i * 9) % 1024).collect();
+    for base in [EngineConfig::dgx2(8, 4), EngineConfig::dgx2_2d(2, 4)] {
+        let cfg = EngineConfig {
+            direction: DirectionMode::diropt(),
+            ..base
+        };
+        let mut seq = session_for(&g, cfg.clone());
+        let mut par = session_for(
+            &g,
+            EngineConfig {
+                parallel_phase1: true,
+                parallel_phase2: true,
+                ..cfg
+            },
+        );
+        let bs = seq.run_batch(&roots).unwrap();
+        let bp = par.run_batch(&roots).unwrap();
+        par.assert_batch_agreement().unwrap();
+        for lane in 0..roots.len() {
+            assert_eq!(bs.dist(lane), bp.dist(lane), "lane {lane}");
+        }
+        assert_eq!(bs.metrics().bytes(), bp.metrics().bytes());
+        assert_eq!(
+            bs.metrics().edges_examined(),
+            bp.metrics().edges_examined()
+        );
+        assert_eq!(
+            bs.metrics().bottom_up_levels(),
+            bp.metrics().bottom_up_levels()
+        );
+    }
+}

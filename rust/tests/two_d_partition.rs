@@ -135,6 +135,69 @@ fn exhaustive_grids_block_slabs_partition_the_edge_set() {
     }
 }
 
+/// The column cuts are *in-edge* balanced (not vertex-balanced): over the
+/// exhaustive grid window, every column's in-edge load must stay within
+/// one vertex's in-degree of the ideal `total/cols` share — the greedy
+/// prefix bound — and the per-column loads must tile the arc set.
+#[test]
+fn exhaustive_grids_col_cuts_are_in_edge_balanced() {
+    for n in 1..=64usize {
+        let g = random_graph(n, 4000 + n as u64);
+        let mut in_deg = vec![0u64; n];
+        for u in 0..n as u32 {
+            for &w in g.neighbors(u) {
+                in_deg[w as usize] += 1;
+            }
+        }
+        let max_in = in_deg.iter().copied().max().unwrap_or(0);
+        for rows in 1..=8.min(n as u32) {
+            for cols in 1..=8.min(n as u32) {
+                let p2 = Partition2D::new(&g, rows, cols);
+                let per = p2.col_in_edges(&g);
+                assert_eq!(per.len(), cols as usize);
+                assert_eq!(
+                    per.iter().sum::<u64>(),
+                    g.num_edges(),
+                    "n={n} {rows}x{cols}: columns tile the arcs"
+                );
+                // Greedy prefix bound: a column overshoots the ideal share
+                // by at most the in-degree of its boundary vertex (modulo
+                // the forced non-empty-range clamping, which only *shrinks*
+                // ranges). The last column additionally absorbs rounding.
+                let ideal = g.num_edges() as f64 / cols as f64;
+                for (j, &load) in per.iter().enumerate() {
+                    assert!(
+                        (load as f64) <= 2.0 * ideal + max_in as f64,
+                        "n={n} {rows}x{cols} col {j}: load {load} vs ideal {ideal}"
+                    );
+                }
+            }
+        }
+    }
+}
+
+/// On an in-degree-skewed graph the edge-balanced column cuts isolate the
+/// hub instead of packing it with a vertex-balanced share of leaves — the
+/// processor-column load regression this cut policy fixes.
+#[test]
+fn skewed_graph_hub_column_is_not_overloaded() {
+    let mut b = GraphBuilder::new(512);
+    // Hub 0 touches everyone; a sparse ring keeps the rest connected.
+    for v in 1..512u32 {
+        b.add_edge(0, v);
+        b.add_edge(v, (v % 511) + 1);
+    }
+    let g = b.build_undirected().0;
+    let p2 = Partition2D::new(&g, 2, 4);
+    let imb = p2.col_imbalance(&g);
+    assert!(imb < 1.5, "edge-balanced column imbalance {imb}");
+    // The hub's column must be far narrower than the vertex-balanced
+    // 512/4 = 128 vertices.
+    let (lo, hi) = p2.col_range(0);
+    assert_eq!(lo, 0);
+    assert!(hi < 64, "hub column spans {hi} vertices");
+}
+
 /// Larger ragged vertex counts (beyond the exhaustive window) keep the
 /// invariants, property-style.
 #[test]
