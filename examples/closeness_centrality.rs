@@ -1,21 +1,25 @@
 //! Domain example: sampled closeness centrality — an APSP-class analytic,
-//! now driven by the batched multi-source BFS subsystem.
+//! driven by one **256-wide** batched multi-source BFS.
 //!
 //! The paper's motivation for keeping a fast *top-down* traversal (rather
 //! than relying on direction optimization) is exactly this workload class:
 //! "direction optimizing BFS does not apply to all problems requiring a
 //! BFS traversal. For example, an APSP type of problem such as betweenness
 //! centrality might need to find all paths." Closeness centrality needs
-//! one full BFS per sample vertex — and with `run_batch` all 64 samples
-//! advance bit-parallel through *one* butterfly exchange per level, so the
-//! per-traversal synchronization overhead (the butterfly's target) is paid
-//! once for the whole batch instead of once per source.
+//! one full BFS per sample vertex — and with the const-generic wide lane
+//! masks all 256 samples advance bit-parallel through *one* butterfly
+//! exchange per level. Before lane widening this took four chunked
+//! 64-root batches: four level loops, four exchange sequences. The
+//! example runs both and prints what the single wide batch saves — sync
+//! rounds (the headline: one exchange sequence serves 4× the roots) and
+//! exchange bytes (the cohort-factored negotiated encoding never prices
+//! worse than the chunks, and coalescing lanes price better).
 //!
 //! Run: `cargo run --release --example closeness_centrality`
 
 use butterfly_bfs::bfs::msbfs::sample_batch_roots;
 use butterfly_bfs::bfs::serial::INF;
-use butterfly_bfs::coordinator::{EngineConfig, TraversalPlan};
+use butterfly_bfs::coordinator::{BatchWidth, EngineConfig, TraversalPlan};
 use butterfly_bfs::graph::gen::kronecker::{kronecker, KroneckerParams};
 use butterfly_bfs::harness::table::{count, f2, f3, Table};
 
@@ -27,25 +31,31 @@ fn main() {
         count(n as u64),
         count(g.num_edges())
     );
-    let plan = TraversalPlan::build(&g, EngineConfig::dgx2(16, 4))
-        .expect("valid engine configuration");
+    let samples = 256usize;
+    let cfg = EngineConfig {
+        batch_width: BatchWidth::for_lanes(samples),
+        ..EngineConfig::dgx2(16, 4)
+    };
+    let plan = TraversalPlan::build(&g, cfg).expect("valid engine configuration");
     let mut session = plan.session();
 
     // Sample source vertices (prefer non-isolated, duplicates allowed —
     // each lane is an independent traversal).
-    let samples = 64;
     let sources = sample_batch_roots(&g, samples, 7);
 
-    // One batched traversal: all 64 sources in lock-step.
+    // One batched traversal: all 256 sources in lock-step, four mask
+    // words per vertex, one exchange per level.
     let t0 = std::time::Instant::now();
     let batch = session.run_batch(&sources).expect("valid batch");
     let wall = t0.elapsed().as_secs_f64();
     session.assert_batch_agreement().expect("node agreement");
     let bm = batch.metrics();
     println!(
-        "{} traversals in one batch: wall {:.2} s, simulated DGX-2 {:.2} ms, \
-         {} levels, {} sync rounds, {} bytes shipped",
+        "{} traversals in ONE batch ({} mask words, {} lanes/exchange): \
+         wall {:.2} s, simulated DGX-2 {:.2} ms, {} levels, {} sync rounds, {} bytes",
         samples,
+        bm.lane_words,
+        bm.lanes_per_exchange(),
         wall,
         bm.sim_seconds() * 1e3,
         bm.depth(),
@@ -66,19 +76,32 @@ fn main() {
         }
     }
 
-    // What the same 64 sources cost sequentially (the pre-batching path).
-    let seq = session.sequential_baseline(&sources).expect("roots in range");
+    // What the same 256 sources cost as four chunked 64-root batches —
+    // the pre-widening execution (single-word lane masks, default width).
+    let mut chunked = TraversalPlan::build(&g, EngineConfig::dgx2(16, 4))
+        .expect("valid engine configuration")
+        .session();
+    let (mut c_rounds, mut c_bytes, mut c_sim) = (0u64, 0u64, 0f64);
+    for chunk in sources.chunks(64) {
+        let cm = chunked
+            .run_batch_metrics_only(chunk)
+            .expect("valid chunk");
+        c_rounds += cm.sync_rounds;
+        c_bytes += cm.bytes();
+        c_sim += cm.sim_seconds();
+    }
     println!(
-        "sequential baseline: simulated {:.2} ms, {} sync rounds, {} bytes",
-        seq.sim_seconds * 1e3,
-        seq.sync_rounds,
-        count(seq.bytes)
+        "chunked 4 x 64 baseline: simulated {:.2} ms, {} sync rounds, {} bytes",
+        c_sim * 1e3,
+        c_rounds,
+        count(c_bytes)
     );
     println!(
-        "amortization: {}x fewer sync rounds, {}x fewer bytes, {}x sim speedup\n",
-        f2(seq.sync_rounds as f64 / bm.sync_rounds.max(1) as f64),
-        f2(seq.bytes as f64 / bm.bytes().max(1) as f64),
-        f2(seq.sim_seconds / bm.sim_seconds().max(1e-12))
+        "wide-lane saving: {}x fewer sync rounds, {} fewer bytes ({}x), {}x sim speedup\n",
+        f2(c_rounds as f64 / bm.sync_rounds.max(1) as f64),
+        count(c_bytes.saturating_sub(bm.bytes())),
+        f2(c_bytes as f64 / bm.bytes().max(1) as f64),
+        f2(c_sim / bm.sim_seconds().max(1e-12))
     );
 
     // Closeness estimate: reached_count / sum_of_distances. A majority
@@ -106,7 +129,7 @@ fn main() {
             g.degree(v).to_string(),
         ]);
     }
-    println!("top-10 closeness (sampled):\n{}", t.render());
+    println!("top-10 closeness (sampled, 256 sources):\n{}", t.render());
 
     // Sanity: high closeness should correlate with high degree on
     // Kronecker graphs (hubs are central).
@@ -123,9 +146,14 @@ fn main() {
     );
     assert!(top_degree_mean > global_mean);
 
-    // The amortization claims hold outside the test suite too. (The byte
-    // ratio is graph-dependent and asserted in the test suite; rounds and
-    // simulated time are the structural wins.)
-    assert!(bm.sync_rounds * 8 < seq.sync_rounds, "batch must run far fewer rounds");
-    assert!(bm.sim_seconds() < seq.sim_seconds, "batch must be faster on the simulated clock");
+    // The wide-lane claims hold outside the test suite too: one wide
+    // batch runs strictly fewer sync rounds and ships no more bytes than
+    // its four 64-root chunks (the protocol's acceptance invariant).
+    assert_eq!(bm.lane_words, 4);
+    assert!(bm.sync_rounds < c_rounds, "wide batch must run fewer rounds");
+    assert!(bm.bytes() <= c_bytes, "wide batch must not ship more bytes");
+    assert!(
+        bm.sim_seconds() < c_sim,
+        "wide batch must be faster on the simulated clock"
+    );
 }

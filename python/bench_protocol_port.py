@@ -22,6 +22,7 @@ direction policies before writing anything.
 """
 
 import argparse
+import bisect
 import json
 import math
 import sys
@@ -187,22 +188,89 @@ def sample_batch_roots(g, width, seed):
 
 
 # --------------------------------------------------------------------------
-# Partition + schedule (partition/one_d.rs, comm/butterfly.rs)
+# Partition + schedule (partition/one_d.rs, partition/two_d.rs,
+# comm/butterfly.rs, comm/fold_expand.rs)
 # --------------------------------------------------------------------------
 
 
-def partition_1d_cuts(g, parts):
-    m = float(g.num_edges())
+def balanced_cuts_from_prefix(prefix, parts):
+    """Port of one_d.rs::balanced_cuts_from_prefix (shared greedy)."""
+    n = len(prefix) - 1
+    total = float(prefix[n])
     cuts, v = [0], 0
     for p in range(1, parts):
-        target = m * p / parts
-        max_v = g.n - (parts - p)
-        while v < max_v and g.offsets[v + 1] < target:
+        target = total * p / parts
+        max_v = n - (parts - p)
+        while v < max_v and prefix[v + 1] < target:
             v += 1
         v = min(max(v, cuts[-1] + 1), max_v)
         cuts.append(v)
-    cuts.append(g.n)
+    cuts.append(n)
     return cuts
+
+
+def partition_1d_cuts(g, parts):
+    return balanced_cuts_from_prefix(g.offsets, parts)
+
+
+def node_layout(g, nodes, mode, grid):
+    """Per-node (lo, hi) owned row range + block adjacency.
+
+    1D: edge-balanced row slabs, full adjacency (``adj`` entry None).
+    2D (``grid = (rows, cols)``): checkerboard blocks — edge-balanced row
+    cuts × in-edge-balanced column cuts (two_d.rs); node ``i·cols + j``
+    owns rows ``row_range(i)`` with neighbors filtered to
+    ``col_range(j)``.
+    """
+    if mode == "1d":
+        cuts = partition_1d_cuts(g, nodes)
+        return [(cuts[i], cuts[i + 1]) for i in range(nodes)], [None] * nodes
+    rows, cols = grid
+    assert rows * cols == nodes
+    row_cuts = balanced_cuts_from_prefix(g.offsets, rows)
+    in_prefix = [0] * (g.n + 1)
+    for w in g.edges:
+        in_prefix[w + 1] += 1
+    for i in range(g.n):
+        in_prefix[i + 1] += in_prefix[i]
+    col_cuts = balanced_cuts_from_prefix(in_prefix, cols)
+    ranges, adjs = [], []
+    for r in range(nodes):
+        i, j = r // cols, r % cols
+        lo, hi = row_cuts[i], row_cuts[i + 1]
+        clo, chi = col_cuts[j], col_cuts[j + 1]
+        adj = []
+        for v in range(lo, hi):
+            ns = g.neighbors(v)
+            s = bisect.bisect_left(ns, clo)
+            e = bisect.bisect_left(ns, chi)
+            adj.append(ns[s:e])
+        ranges.append((lo, hi))
+        adjs.append(adj)
+    return ranges, adjs
+
+
+def fold_expand_schedule(rows, cols):
+    """Port of comm/fold_expand.rs (transfer order preserved)."""
+    rank = lambda i, j: i * cols + j
+    rounds = []
+    if cols > 1:
+        rounds.append([
+            (rank(i, j), rank(i, j2))
+            for i in range(rows)
+            for j in range(cols)
+            for j2 in range(cols)
+            if j2 != j
+        ])
+    if rows > 1:
+        rounds.append([
+            (rank(i, j), rank(i2, j))
+            for i in range(rows)
+            for j in range(cols)
+            for i2 in range(rows)
+            if i2 != i
+        ])
+    return rounds
 
 
 def butterfly_schedule(cn, fanout):
@@ -291,33 +359,70 @@ def simulate_schedule(rounds, payloads, cn):
 # --------------------------------------------------------------------------
 
 
-def mask_delta_bytes(entries, distinct_vertices, distinct_masks, active_lanes, nv):
+def mask_delta_bytes(entries, distinct_vertices, distinct_masks, active_lanes, nv,
+                     words, active_words, entry_words, vertex_words, group_words):
+    """Port of msbfs.rs::mask_delta_bytes (word-sparse wide forms).
+
+    For words > 1 the sparse/grouped masks ship word-sparse (a 1-byte
+    word-presence bitmap plus only the nonzero 64-bit words), and the
+    dense arm ships one presence bitmap per *active* 64-lane cohort plus
+    its nonzero cells; at words == 1 the word byte vanishes and the word
+    statistics equal the counts, reproducing the original single-word
+    pricing exactly.
+    """
     if entries == 0:
         return 0
+    wb = 1 if words > 1 else 0
     presence = -(-nv // 64) * 8
-    sparse = entries * 12
-    grouped = distinct_masks * 12 + entries * 4
-    dense = presence + distinct_vertices * 8
+    sparse = entries * (4 + wb) + 8 * entry_words
+    grouped = distinct_masks * (4 + wb) + 8 * group_words + entries * 4
+    dense = active_words * presence + 8 * vertex_words
     lane_bitmaps = (1 + active_lanes) * presence
     return min(sparse, grouped, dense, lane_bitmaps)
 
 
-def mask_delta_bytes_dense(distinct_vertices, active_lanes, nv):
-    if distinct_vertices == 0:
+def mask_delta_bytes_dense(vertex_words, active_words, active_lanes, nv):
+    if vertex_words == 0:
         return 0
     presence = -(-nv // 64) * 8
-    return min(presence + distinct_vertices * 8, (1 + active_lanes) * presence)
+    return min(active_words * presence + 8 * vertex_words,
+               (1 + active_lanes) * presence)
+
+
+def nz_words(m, words):
+    """Nonzero 64-bit words of mask m at the given width."""
+    c = 0
+    for w in range(words):
+        if (m >> (64 * w)) & MASK64:
+            c += 1
+    return c
+
+
+def words_for_lanes(lanes):
+    """Port of msbfs.rs::words_for_lanes: {1, 2, 4, 8}."""
+    assert 1 <= lanes <= 512
+    w = 1
+    while w * 64 < lanes:
+        w *= 2
+    return w
 
 
 # --------------------------------------------------------------------------
-# Batched engine (coordinator/session.rs run_batch, 1D)
+# Batched engine (coordinator/session.rs run_batch, 1D + 2D, W-word lanes)
 # --------------------------------------------------------------------------
+#
+# Masks are python bigints, which represent any lane width exactly; the
+# Rust engine's const-generic word count `W` only changes the *pricing*
+# (entry bytes `4 + 8W`, dense switchover `⌈8WV/(4+8W)⌉`), which is what
+# the `words` plumbing below mirrors.
 
 
 class NodeState:
-    def __init__(self, nv, lo, hi, track_full):
+    def __init__(self, nv, lo, hi, track_full, words, adj):
         self.lo, self.hi = lo, hi
         self.nv = nv
+        self.words = words
+        self.adj = adj  # None = full adjacency (1D); list per owned row (2D)
         self.seen = [0] * nv
         self.visit = [0] * nv
         self.next_mask = [0] * nv
@@ -325,19 +430,31 @@ class NodeState:
         self.q_next = []
         self.delta = []
         self.delta_stamp = [0] * nv
+        self.delta_word_stamp = [0] * (nv * words)
         self.delta_distinct = 0
         self.mask_values = set()
         self.active_lanes = 0
+        self.word_entries = [0] * words
+        self.word_vertices = [0] * words
+        self.group_words = 0
+        self.word_mask_values = [set() for _ in range(words)]
         self.edges = 0
         self.track_full = track_full
         self.visit_full = [0] * nv if track_full else None
         self.dist = None  # lane-major, node 0 only
+        self.g = None  # set by run_batch (1D adjacency)
 
     def owns(self, v):
         return self.lo <= v < self.hi
 
+    def nbrs(self, v):
+        """Owned vertex v's neighbors within this node's block."""
+        if self.adj is None:
+            return self.g.neighbors(v)
+        return self.adj[v - self.lo]
+
     def discover(self, v, mask, level, owned):
-        d = mask & ~self.seen[v] & MASK64
+        d = mask & ~self.seen[v]
         if d == 0:
             return
         self.seen[v] |= d
@@ -353,26 +470,70 @@ class NodeState:
             self.delta_stamp[v] = level + 1
             self.delta_distinct += 1
         self.active_lanes |= d
-        self.mask_values.add(d)
+        nzw = 0
+        base = v * self.words
+        for w in range(self.words):
+            dw = (d >> (64 * w)) & MASK64
+            if dw:
+                nzw += 1
+                self.word_entries[w] += 1
+                self.word_mask_values[w].add(dw)
+                if self.delta_word_stamp[base + w] != level + 1:
+                    self.delta_word_stamp[base + w] = level + 1
+                    self.word_vertices[w] += 1
+        if d not in self.mask_values:
+            self.mask_values.add(d)
+            self.group_words += nzw
         if owned:
             if self.next_mask[v] == 0:
                 self.q_next.append(v)
             self.next_mask[v] |= d
 
+    def per_word_bytes(self, dense_only):
+        """Cohort-factored price: W independent single-word messages."""
+        total = 0
+        for w in range(self.words):
+            e = self.word_entries[w]
+            dv = self.word_vertices[w]
+            al = bin((self.active_lanes >> (64 * w)) & MASK64).count("1")
+            if dense_only:
+                total += mask_delta_bytes_dense(dv, 1 if dv else 0, al, self.nv)
+            else:
+                dm = min(len(self.word_mask_values[w]), e)
+                total += mask_delta_bytes(
+                    e, min(dv, e), dm, al, self.nv, 1,
+                    1 if e else 0, e, min(dv, e), dm,
+                )
+        return total
+
     def priced(self, entries, bottom_up):
         if bottom_up:
-            return mask_delta_bytes_dense(
-                min(self.delta_distinct, entries),
+            if entries == 0:
+                return 0
+            whole = mask_delta_bytes_dense(
+                sum(self.word_vertices),
+                nz_words(self.active_lanes, self.words),
                 bin(self.active_lanes).count("1"),
                 self.nv,
             )
-        return mask_delta_bytes(
+            if self.words == 1:
+                return whole
+            return min(whole, self.per_word_bytes(True))
+        whole = mask_delta_bytes(
             entries,
             min(self.delta_distinct, entries),
             min(len(self.mask_values), entries),
             bin(self.active_lanes).count("1"),
             self.nv,
+            self.words,
+            nz_words(self.active_lanes, self.words),
+            sum(self.word_entries),
+            sum(self.word_vertices),
+            self.group_words,
         )
+        if self.words == 1 or entries == 0:
+            return whole
+        return min(whole, self.per_word_bytes(False))
 
     def swap_level(self):
         if self.track_full:
@@ -388,17 +549,35 @@ class NodeState:
         self.delta_distinct = 0
         self.mask_values = set()
         self.active_lanes = 0
+        self.word_entries = [0] * self.words
+        self.word_vertices = [0] * self.words
+        self.group_words = 0
+        self.word_mask_values = [set() for _ in range(self.words)]
         self.edges = 0
 
 
-def run_batch(g, nodes, fanout, roots, direction, alpha=15, beta=18):
-    """direction in {'topdown', 'bottomup', 'diropt'}; returns metrics dict."""
-    cuts = partition_1d_cuts(g, nodes)
-    rounds = butterfly_schedule(nodes, fanout)
+def run_batch(g, nodes, fanout, roots, direction, alpha=15, beta=18,
+              mode="1d", grid=None, width_words=1):
+    """direction in {'topdown', 'bottomup', 'diropt'}; mode '1d' or '2d'
+    (with ``grid = (rows, cols)``); ``width_words`` is the configured
+    BatchWidth floor. Returns a metrics dict."""
+    ranges, adjs = node_layout(g, nodes, mode, grid)
+    if mode == "1d":
+        rounds = butterfly_schedule(nodes, fanout)
+        cols = 1
+    else:
+        rows, cols = grid
+        rounds = fold_expand_schedule(rows, cols)
     b = len(roots)
-    full = (1 << b) - 1 if b < 64 else MASK64
+    words = max(width_words, words_for_lanes(b))
+    full = (1 << b) - 1
     track = direction != "topdown"
-    sts = [NodeState(g.n, cuts[i], cuts[i + 1], track) for i in range(nodes)]
+    sts = [
+        NodeState(g.n, ranges[i][0], ranges[i][1], track, words, adjs[i])
+        for i in range(nodes)
+    ]
+    for st in sts:
+        st.g = g
     sts[0].dist = [[INF] * g.n for _ in range(b)]
     for st in sts:
         for lane, r in enumerate(roots):
@@ -412,7 +591,7 @@ def run_batch(g, nodes, fanout, roots, direction, alpha=15, beta=18):
                 if st.visit[r] == 0:
                     st.q_local.append(r)
                 st.visit[r] |= bit
-    dense_threshold_td = max(-(-(g.n * 8) // 12), 1)
+    dense_threshold = max(-(-(g.n * 8 * words) // (4 + 8 * words)), 1)
     levels = []
     sync_rounds = 0
     bottom_up = False
@@ -420,14 +599,18 @@ def run_batch(g, nodes, fanout, roots, direction, alpha=15, beta=18):
     m_unexplored = g.num_edges()
     level = 0
     while True:
-        frontier = sum(len(st.q_local) for st in sts)
+        # Distinct frontier vertices: in 2D every node of a processor row
+        # queues the row's vertices, so count column-0 representatives.
+        frontier = sum(len(st.q_local) for st in sts[::cols])
         if frontier == 0:
             break
         if direction == "bottomup":
             bottom_up = True
         elif direction == "diropt":
+            # Edge mass over ALL nodes: row-mates' block degrees sum to
+            # each frontier vertex's full degree.
             m_frontier = sum(
-                g.degree(v) for st in sts for v in st.q_local
+                len(st.nbrs(v)) for st in sts for v in st.q_local
             )
             growing = frontier > prev_frontier
             if (not bottom_up and alpha > 0 and growing
@@ -443,11 +626,11 @@ def run_batch(g, nodes, fanout, roots, direction, alpha=15, beta=18):
                 st.edges = 0
                 found = []
                 for v in range(st.lo, st.hi):
-                    missing = full & ~st.seen[v] & MASK64
+                    missing = full & ~st.seen[v]
                     if missing == 0:
                         continue
                     acc = 0
-                    for u in g.neighbors(v):
+                    for u in st.nbrs(v):
                         st.edges += 1
                         acc |= st.visit_full[u]
                         if acc & missing == missing:
@@ -463,15 +646,15 @@ def run_batch(g, nodes, fanout, roots, direction, alpha=15, beta=18):
                 for v in q:
                     mv = st.visit[v]
                     st.visit[v] = 0
-                    st.edges += g.degree(v)
-                    for u in g.neighbors(v):
+                    ns = st.nbrs(v)
+                    st.edges += len(ns)
+                    for u in ns:
                         st.discover(u, mv, level, st.owns(u))
         edges = sum(st.edges for st in sts)
         max_node_edges = max(st.edges for st in sts) if sts else 0
         sim_compute = level_time(max_node_edges, bottom_up)
         # Phase 2: pricing is direction-aware (dense wire forms for
         # bottom-up), merge dispatch stays on the entry-count threshold.
-        dense_threshold = dense_threshold_td
         payloads = []
         mask_snap = [None] * nodes
         mask_done = [0] * nodes
@@ -512,7 +695,7 @@ def run_batch(g, nodes, fanout, roots, direction, alpha=15, beta=18):
         ))
         sync_rounds += len(rounds)
         if direction == "diropt":
-            next_edges = sum(g.degree(v) for st in sts for v in st.q_next)
+            next_edges = sum(len(st.nbrs(v)) for st in sts for v in st.q_next)
             m_unexplored = max(m_unexplored - next_edges, 0)
         for st in sts:
             st.swap_level()
@@ -526,6 +709,7 @@ def run_batch(g, nodes, fanout, roots, direction, alpha=15, beta=18):
         reached_pairs=reached_pairs,
         dist=sts[0].dist,
         graph_edges=g.num_edges(),
+        lane_words=words,
     )
 
 
@@ -550,7 +734,7 @@ def serial_bfs(g, root):
 # --------------------------------------------------------------------------
 
 PROTOCOL = dict(
-    name="engine-bench-v1",
+    name="engine-bench-v2",
     graph="kron-like",
     kron_scale=21,
     kron_edge_factor=16,
@@ -560,6 +744,11 @@ PROTOCOL = dict(
     root_seed=7,
     node_counts=[16, 64],
     fanout=4,
+    # Width ablation (v2): wide lane masks vs chunked 64-root execution.
+    wide_widths=[64, 256],
+    wide_nodes=16,
+    wide_grid=(4, 4),
+    chunk=64,
 )
 
 
@@ -599,6 +788,57 @@ def direction_report(m):
     }
 
 
+def batch_totals(m):
+    """Width-ablation totals of one run_batch metrics dict."""
+    return dict(
+        levels=len(m["levels"]),
+        sync_rounds=m["sync_rounds"],
+        messages=sum(l["messages"] for l in m["levels"]),
+        bytes=sum(l["bytes"] for l in m["levels"]),
+        edges_inspected=sum(l["edges"] for l in m["levels"]),
+        reached_pairs=m["reached_pairs"],
+        sim_seconds=sum(l["sim_compute"] + l["sim_comm"] for l in m["levels"]),
+    )
+
+
+def width_ablation(g):
+    """Port of harness/protocol.rs::width_ablation_json."""
+    entries = []
+    for mode_2d in [False, True]:
+        for width in PROTOCOL["wide_widths"]:
+            roots = sample_batch_roots(g, width, PROTOCOL["root_seed"])
+            words = words_for_lanes(width)
+            kw = (dict(mode="2d", grid=PROTOCOL["wide_grid"])
+                  if mode_2d else dict())
+            m = run_batch(g, PROTOCOL["wide_nodes"], PROTOCOL["fanout"],
+                          roots, "topdown", width_words=words, **kw)
+            chunked = dict(chunks=0, sync_rounds=0, messages=0, bytes=0,
+                           reached_pairs=0, sim_seconds=0.0)
+            for k in range(0, width, PROTOCOL["chunk"]):
+                cm = run_batch(g, PROTOCOL["wide_nodes"], PROTOCOL["fanout"],
+                               roots[k:k + PROTOCOL["chunk"]], "topdown",
+                               width_words=1, **kw)
+                ct = batch_totals(cm)
+                chunked["chunks"] += 1
+                for key in ["sync_rounds", "messages", "bytes",
+                            "reached_pairs", "sim_seconds"]:
+                    chunked[key] += ct[key]
+            entry = {
+                "mode": "2d" if mode_2d else "1d",
+                "width": width,
+                "nodes": PROTOCOL["wide_nodes"],
+                "direction": "topdown",
+                "lane_words": m["lane_words"],
+                "entry_bytes": 4 + 8 * m["lane_words"],
+                "chunked": chunked,
+            }
+            if mode_2d:
+                entry["grid"] = "%dx%d" % PROTOCOL["wide_grid"]
+            entry.update(batch_totals(m))
+            entries.append(entry)
+    return entries
+
+
 def engine_bench_report():
     scale = max(PROTOCOL["kron_scale"] + PROTOCOL["scale_delta"], 4)
     g = kronecker(scale, PROTOCOL["kron_edge_factor"], PROTOCOL["kron_seed"])
@@ -628,6 +868,7 @@ def engine_bench_report():
             "seed": PROTOCOL["root_seed"],
         },
         "configs": configs,
+        "width_ablation": width_ablation(g),
     }
 
 
@@ -662,6 +903,47 @@ def selftest():
                 assert tm == base, f"level count diverged under {d}"
             cases += 1
     print(f"selftest: {cases} direction runs bit-identical to serial oracle")
+    # Wide lanes × modes: widths crossing every word boundary, 1D and 2D
+    # grids, every direction, plus a width_words floor above the minimum
+    # (pricing-only — distances must not move).
+    wide_cases = 0
+    for _ in range(24):
+        n = 8 + rng.next_below(120)
+        ef = 1 + rng.next_below(4)
+        g = uniform_random(n, ef, rng.next_u64())
+        b = 1 + rng.next_below(140)
+        roots = [rng.next_below(n) for _ in range(b)]
+        want = [serial_bfs(g, r) for r in roots]
+        if rng.next_below(2) == 0:
+            mode, grid = "1d", None
+            nodes = 1 + rng.next_below(min(6, n))
+        else:
+            mode = "2d"
+            grid = (1 + rng.next_below(min(3, n)), 1 + rng.next_below(min(3, n)))
+            nodes = grid[0] * grid[1]
+        d = ["topdown", "bottomup", "diropt"][rng.next_below(3)]
+        floor = words_for_lanes(b) * (1 + rng.next_below(2))
+        floor = min(floor, 8)
+        m = run_batch(g, nodes, 1 + rng.next_below(4), roots, d,
+                      mode=mode, grid=grid, width_words=floor)
+        for lane in range(b):
+            assert m["dist"][lane] == want[lane], (
+                f"wide n={n} b={b} mode={mode} grid={grid} {d} lane {lane}"
+            )
+        wide_cases += 1
+    print(f"selftest: {wide_cases} wide-lane runs (1d+2d) match serial oracle")
+    # Chunked == wide distance identity + amortization direction.
+    g = uniform_random(150, 4, 0xC0FFEE)
+    roots = [(i * 7 + 1) % 150 for i in range(130)]
+    wide = run_batch(g, 4, 2, roots, "topdown", width_words=2)
+    crounds = 0
+    for k in range(0, 130, 64):
+        cm = run_batch(g, 4, 2, roots[k:k + 64], "topdown")
+        for j, lane_dist in enumerate(cm["dist"]):
+            assert lane_dist == wide["dist"][k + j], f"chunk lane {k + j}"
+        crounds += cm["sync_rounds"]
+    assert wide["sync_rounds"] < crounds, (wide["sync_rounds"], crounds)
+    print("selftest: one 130-wide batch == 3 chunked batches, fewer rounds")
 
 
 def validate_acceptance(report):
@@ -675,6 +957,14 @@ def validate_acceptance(report):
         ddo = dopt["per_level"][dense["level"]]
         assert ddo["edges"] < dense["edges"], (c["nodes"], dense, ddo)
         assert ddo["direction"] == "bottomup", (c["nodes"], ddo)
+    for entry in report["width_ablation"]:
+        c = entry["chunked"]
+        assert entry["reached_pairs"] == c["reached_pairs"], entry["mode"]
+        if entry["width"] <= PROTOCOL["chunk"]:
+            continue
+        key = (entry["mode"], entry["width"])
+        assert entry["sync_rounds"] < c["sync_rounds"], key
+        assert entry["bytes"] < c["bytes"], key
     print("acceptance invariants hold on the fresh report")
 
 
@@ -694,6 +984,11 @@ def main():
               f"do={d['diropt']['edges_inspected']} "
               f"(do bu-levels {d['diropt']['bottom_up_levels']}"
               f"/{d['diropt']['levels']})")
+    for e in report["width_ablation"]:
+        c = e["chunked"]
+        print(f"{e['mode']} width={e['width']} (W={e['lane_words']}): "
+              f"rounds {e['sync_rounds']} vs chunked {c['sync_rounds']}, "
+              f"bytes {e['bytes']} vs chunked {c['bytes']}")
     if args.out:
         text = json.dumps(report, sort_keys=True, separators=(",", ":"))
         with open(args.out, "w") as f:

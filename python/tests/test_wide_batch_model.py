@@ -1,0 +1,86 @@
+"""Pure-python spec of the const-generic wide lane masks (this PR).
+
+Drives the line-for-line engine port in ``bench_protocol_port`` — the
+same code that generates the committed ``BENCH_engine.json`` — through
+the wide-batch semantics the Rust engine must honor:
+
+* batches crossing every lane-word boundary (W ∈ {2, 4, 8}) stay
+  bit-identical to the serial per-root oracle, in 1D and 2D, under all
+  three direction policies;
+* one wide batch equals its 64-root chunks lane for lane, while running
+  strictly fewer sync rounds and (via the cohort-factored negotiated
+  pricing) no more exchange bytes;
+* the configured width floor (``width_words``) changes pricing only —
+  never distances — and the W = 1 pricing identities hold exactly
+  (``word`` statistics collapse onto the counts), which is what keeps
+  the committed single-word counters stable across this PR.
+
+No jax/hypothesis needed — runs everywhere CI runs.
+"""
+
+import bench_protocol_port as bp
+
+
+def small_graph(seed=0xFACE, n=120, ef=4):
+    return bp.uniform_random(n, ef, seed)
+
+
+def test_wide_batches_match_serial_in_both_modes():
+    g = small_graph()
+    n = g.n
+    for width in [70, 130, 260]:
+        roots = [(i * 11 + 3) % n for i in range(width)]
+        want = [bp.serial_bfs(g, r) for r in roots]
+        for kw in [dict(), dict(mode="2d", grid=(2, 2))]:
+            for d in ["topdown", "bottomup", "diropt"]:
+                m = bp.run_batch(g, 4, 2, roots, d,
+                                 width_words=bp.words_for_lanes(width), **kw)
+                assert m["lane_words"] == bp.words_for_lanes(width)
+                for lane in range(width):
+                    assert m["dist"][lane] == want[lane], (width, kw, d, lane)
+
+
+def test_chunked_equals_wide_and_amortizes():
+    g = small_graph(seed=0xBEAD, n=150)
+    width = 200
+    roots = [(i * 7 + 1) % g.n for i in range(width)]
+    for kw in [dict(), dict(mode="2d", grid=(2, 3))]:
+        wide = bp.run_batch(g, 6 if kw else 4, 2, roots, "topdown",
+                            width_words=4, **kw)
+        rounds = bytes_ = 0
+        for k in range(0, width, 64):
+            cm = bp.run_batch(g, 6 if kw else 4, 2, roots[k:k + 64],
+                              "topdown", **kw)
+            assert cm["lane_words"] == 1
+            for j, lane_dist in enumerate(cm["dist"]):
+                assert lane_dist == wide["dist"][k + j], (kw, k + j)
+            rounds += cm["sync_rounds"]
+            bytes_ += sum(l["bytes"] for l in cm["levels"])
+        assert wide["sync_rounds"] < rounds, kw
+        assert sum(l["bytes"] for l in wide["levels"]) <= bytes_, kw
+
+
+def test_width_floor_changes_pricing_never_distances():
+    g = small_graph(seed=0x1DEA)
+    roots = [(i * 5) % g.n for i in range(20)]
+    narrow = bp.run_batch(g, 4, 2, roots, "topdown", width_words=1)
+    wide = bp.run_batch(g, 4, 2, roots, "topdown", width_words=8)
+    assert narrow["lane_words"] == 1 and wide["lane_words"] == 8
+    assert narrow["dist"] == wide["dist"]
+    assert narrow["reached_pairs"] == wide["reached_pairs"]
+    nb = sum(l["bytes"] for l in narrow["levels"])
+    wb = sum(l["bytes"] for l in wide["levels"])
+    # The cohort-factored negotiation caps the wide format at the
+    # single-word (chunk-equivalent) cost; with one 64-lane cohort active
+    # the two prices coincide exactly.
+    assert wb == nb
+
+
+def test_w1_pricing_identities():
+    # At words == 1 the word-sparse formulas collapse to the original
+    # single-word pricing (the committed-counter stability guarantee).
+    for (e, dv, dm, al, nv) in [(10, 8, 3, 7, 640), (500, 400, 2, 64, 2048)]:
+        legacy = min(e * 12, dm * 12 + e * 4,
+                     -(-nv // 64) * 8 + dv * 8, (1 + al) * -(-nv // 64) * 8)
+        got = bp.mask_delta_bytes(e, dv, dm, al, nv, 1, 1, e, dv, dm)
+        assert got == legacy, (e, dv, dm, al, nv)

@@ -1,0 +1,121 @@
+//! Batch-width ablation: one wide batch (W ∈ {1, 2, 4, 8} lane words)
+//! against the same roots executed as 64-root single-word chunks, in 1D
+//! (butterfly f4) and 2D (fold/expand) — the experiment behind the
+//! const-generic wide lane masks.
+//!
+//! Reported per (mode, width): the lane words and sparse entry bytes of
+//! the wire format, sync rounds and exchange bytes for the wide batch vs
+//! its chunks, and the simulated DGX-2 time per root. Distances are
+//! asserted bit-identical between the wide batch and its chunks before
+//! any number is printed — the chunked run *is* the correctness oracle.
+//!
+//! The structural claim on display: sync rounds per level are
+//! width-invariant (one exchange serves the whole batch), so rounds per
+//! root fall ~linearly with width, while the cohort-factored negotiated
+//! encoding keeps total bytes at or below the chunked cost.
+//!
+//! Run: `cargo bench --bench batch_width`
+//! (`BBFS_SCALE_DELTA=n` rescales the graph; `BBFS_BENCH_PROFILE=full`
+//! uses the larger default.)
+
+use butterfly_bfs::bfs::msbfs::sample_batch_roots;
+use butterfly_bfs::coordinator::{BatchWidth, EngineConfig, PartitionMode, TraversalPlan};
+use butterfly_bfs::graph::gen::table1_suite;
+use butterfly_bfs::harness::table::{count, f2, ms, Table};
+
+fn main() {
+    let scale_delta: i32 = std::env::var("BBFS_SCALE_DELTA")
+        .ok()
+        .and_then(|s| s.parse().ok())
+        .unwrap_or(match std::env::var("BBFS_BENCH_PROFILE").as_deref() {
+            Ok("full") => -5,
+            _ => -7,
+        });
+    let spec = table1_suite()
+        .into_iter()
+        .find(|s| s.name == "kron-like")
+        .unwrap();
+    let g = spec.generate_scaled(scale_delta);
+    println!(
+        "== batch_width on {} (|V|={}, |E|={}) ==",
+        spec.name,
+        count(g.num_vertices() as u64),
+        count(g.num_edges()),
+    );
+    let mut t = Table::new(&[
+        "mode",
+        "width",
+        "W",
+        "entry B",
+        "rounds",
+        "rounds chunked",
+        "bytes",
+        "bytes chunked",
+        "sim ms/root",
+        "chunked ms/root",
+        "bytes vs chunked",
+    ]);
+    for mode in ["1d", "2d"] {
+        for width in [64usize, 128, 256, 512] {
+            let roots = sample_batch_roots(&g, width, 7);
+            let base = match mode {
+                "1d" => EngineConfig::dgx2(16, 4),
+                _ => EngineConfig {
+                    partition: PartitionMode::TwoD { rows: 4, cols: 4 },
+                    ..EngineConfig::dgx2(16, 1)
+                },
+            };
+            let cfg = EngineConfig {
+                batch_width: BatchWidth::for_lanes(width),
+                ..base.clone()
+            };
+            let plan = TraversalPlan::build(&g, cfg).expect("valid plan");
+            let mut session = plan.session();
+            let wide = session.run_batch(&roots).expect("roots in range");
+            session.assert_batch_agreement().expect("node agreement");
+
+            // Chunked baseline through one pooled single-word session —
+            // also the oracle: every lane must match bit for bit.
+            let mut chunked = TraversalPlan::build(&g, base)
+                .expect("valid plan")
+                .session();
+            let (mut c_rounds, mut c_bytes, mut c_sim) = (0u64, 0u64, 0f64);
+            for (ci, chunk) in roots.chunks(64).enumerate() {
+                let cb = chunked.run_batch(chunk).expect("roots in range");
+                for (lane, _) in chunk.iter().enumerate() {
+                    assert_eq!(
+                        cb.dist(lane),
+                        wide.dist(ci * 64 + lane),
+                        "{mode} width {width} chunk {ci} lane {lane}"
+                    );
+                }
+                c_rounds += cb.metrics().sync_rounds;
+                c_bytes += cb.metrics().bytes();
+                c_sim += cb.metrics().sim_seconds();
+            }
+            let m = wide.metrics();
+            t.row(vec![
+                mode.to_string(),
+                width.to_string(),
+                m.lane_words.to_string(),
+                m.entry_bytes().to_string(),
+                m.sync_rounds.to_string(),
+                c_rounds.to_string(),
+                count(m.bytes()),
+                count(c_bytes),
+                ms(m.sim_seconds() / width as f64),
+                ms(c_sim / width as f64),
+                f2(m.bytes() as f64 / c_bytes.max(1) as f64),
+            ]);
+            assert!(
+                m.sync_rounds <= c_rounds,
+                "{mode} width {width}: wide rounds exceed chunked"
+            );
+        }
+    }
+    println!("{}", t.render());
+    println!(
+        "note: the committed width trajectory for the fixed protocol configs \
+         lives in BENCH_engine.json (butterfly-bfs bench-protocol --check)."
+    );
+}

@@ -1,4 +1,6 @@
-//! Frontier representations: vertex queue and bitmap, with conversions.
+//! Frontier representations: vertex queue and bitmap, with conversions,
+//! plus the const-generic wide lane mask the batched MS-BFS subsystem is
+//! built on.
 //!
 //! Top-down traversals want a queue (work ∝ frontier size); bottom-up and
 //! the butterfly exchange want bitmaps (fixed O(V/8) payloads, constant-
@@ -7,6 +9,46 @@
 //! than `ceil(V/64)` words regardless of how many vertices it contains.
 
 use crate::graph::csr::VertexId;
+
+/// A `W`-word lane mask: bit `i` of the mask (word `i / 64`, bit
+/// `i % 64`) refers to the traversal rooted at `roots[i]` of a batch, so
+/// one mask tracks up to `64·W` concurrent traversals. `W = 1` is the
+/// classic MS-BFS single-word mask; the engine monomorphizes over
+/// `W ∈ {1, 2, 4, 8}` ([`BatchWidth`]) to batch up to 512 roots per
+/// butterfly exchange — the amortization knob for centrality-scale
+/// workloads (one exchange per level serves the whole batch regardless
+/// of `W`, while per-entry wire cost grows only linearly:
+/// [`MaskFrontier::ENTRY_BYTES`] `= 4 + 8·W`).
+///
+/// Masks are plain word arrays so every layer — the bit-parallel oracle,
+/// the per-node engine state, the bottom-up backend kernel, and the wire
+/// pricing — operates word-wise with compile-time-unrolled `W`-loops.
+/// Helper predicates live alongside: [`lane_mask_is_zero`],
+/// [`lane_mask_count`], [`lane_bit`].
+///
+/// [`BatchWidth`]: crate::coordinator::config::BatchWidth
+pub type LaneMask<const W: usize> = [u64; W];
+
+/// True when no lane bit is set in `m`.
+#[inline]
+pub fn lane_mask_is_zero<const W: usize>(m: &LaneMask<W>) -> bool {
+    m.iter().all(|&w| w == 0)
+}
+
+/// Number of set lane bits across all `W` words of `m`.
+#[inline]
+pub fn lane_mask_count<const W: usize>(m: &LaneMask<W>) -> u32 {
+    m.iter().map(|w| w.count_ones()).sum()
+}
+
+/// The single-lane mask with only bit `lane` set (`lane < 64·W`).
+#[inline]
+pub fn lane_bit<const W: usize>(lane: usize) -> LaneMask<W> {
+    debug_assert!(lane < 64 * W, "lane {lane} out of range for {W} words");
+    let mut m = [0u64; W];
+    m[lane / 64] = 1u64 << (lane % 64);
+    m
+}
 
 /// A dense bitmap over vertex ids.
 #[derive(Clone, Debug, PartialEq, Eq)]
@@ -127,28 +169,37 @@ impl Bitmap {
 
 /// A batched (multi-source) frontier delta: sparse `(vertex, lane-mask)`
 /// pairs, the payload unit of the MS-BFS butterfly exchange
-/// (`bfs::msbfs`). Bit `i` of a mask refers to the traversal rooted at
-/// `roots[i]` of the batch. On the wire an entry costs
-/// [`MaskFrontier::ENTRY_BYTES`] (a `u32` vertex id + a `u64` mask), so a
-/// level's payload is `12·|entries|` bytes — amortized over up to 64
-/// concurrent traversals, versus `4·|queue|` *per traversal* for the
-/// single-root queue encoding.
+/// (`bfs::msbfs`). Bit `i` of a [`LaneMask`] refers to the traversal
+/// rooted at `roots[i]` of the batch. On the wire an entry costs
+/// [`MaskFrontier::ENTRY_BYTES`] `= 4 + 8·W` (a `u32` vertex id plus `W`
+/// mask words), so a level's payload is `(4 + 8W)·|entries|` bytes —
+/// amortized over up to `64·W` concurrent traversals, versus `4·|queue|`
+/// *per traversal* for the single-root queue encoding.
+///
+/// Dense conversions ([`Self::to_masks`] / [`Self::accumulate_prefix`] /
+/// [`Self::accumulate_range`] / [`Self::from_masks`]) operate on *flat*
+/// vertex-major word arrays of length `len·W` (`masks[v·W + w]` is word
+/// `w` of vertex `v`'s mask) — the layout the engine's dense merge
+/// snapshots and the backend's bottom-up kernel share.
 #[derive(Clone, Debug, Default, PartialEq, Eq)]
-pub struct MaskFrontier {
-    entries: Vec<(VertexId, u64)>,
+pub struct MaskFrontier<const W: usize> {
+    entries: Vec<(VertexId, LaneMask<W>)>,
 }
 
-impl MaskFrontier {
+impl<const W: usize> MaskFrontier<W> {
+    /// Wire cost of one entry: 4-byte vertex id + `W` 8-byte mask words.
+    pub const ENTRY_BYTES: u64 = 4 + 8 * W as u64;
+
     /// Empty delta list.
     pub fn new() -> Self {
-        Self::default()
+        Self { entries: Vec::new() }
     }
 
     /// Append a delta: lanes `mask` newly reached `v`. Masks must be
     /// nonzero — zero deltas are filtered by the caller.
     #[inline]
-    pub fn push(&mut self, v: VertexId, mask: u64) {
-        debug_assert!(mask != 0, "empty delta for vertex {v}");
+    pub fn push(&mut self, v: VertexId, mask: LaneMask<W>) {
+        debug_assert!(!lane_mask_is_zero(&mask), "empty delta for vertex {v}");
         self.entries.push((v, mask));
     }
 
@@ -170,48 +221,52 @@ impl MaskFrontier {
 
     /// The raw entries in insertion order.
     #[inline]
-    pub fn entries(&self) -> &[(VertexId, u64)] {
+    pub fn entries(&self) -> &[(VertexId, LaneMask<W>)] {
         &self.entries
     }
-
-    /// Wire cost of one entry: 4-byte vertex id + 8-byte lane mask.
-    pub const ENTRY_BYTES: u64 = 12;
 
     /// Payload size in bytes when shipped over the interconnect.
     pub fn payload_bytes(&self) -> u64 {
         self.entries.len() as u64 * Self::ENTRY_BYTES
     }
 
-    /// Accumulate into a dense per-vertex mask array (entries OR in).
+    /// Accumulate into a dense per-vertex mask array (entries OR in):
+    /// flat vertex-major words, `len·W` long.
     pub fn to_masks(&self, len: usize) -> Vec<u64> {
-        let mut masks = vec![0u64; len];
+        let mut masks = vec![0u64; len * W];
         self.accumulate_prefix(self.entries.len(), &mut masks);
         masks
     }
 
-    /// OR the first `take` entries into `masks` (one word per vertex) —
-    /// the dense round-start snapshot of a delta *prefix*, used by the
-    /// engine's dense merge fallback (`CopyFrontier` semantics freeze the
-    /// prefix length, not the whole list).
+    /// OR the first `take` entries into `masks` (`W` words per vertex,
+    /// flat) — the dense round-start snapshot of a delta *prefix*, used
+    /// by the engine's dense merge fallback (`CopyFrontier` semantics
+    /// freeze the prefix length, not the whole list).
     pub fn accumulate_prefix(&self, take: usize, masks: &mut [u64]) {
         self.accumulate_range(0, take, masks);
     }
 
-    /// OR entries `from..to` into `masks`. The delta list only grows
-    /// within a level, so a caller holding masks for `0..from` extends
-    /// them to `0..to` without replaying the shared prefix (the engine's
-    /// per-round incremental dense snapshot).
+    /// OR entries `from..to` into `masks` (flat vertex-major words). The
+    /// delta list only grows within a level, so a caller holding masks
+    /// for `0..from` extends them to `0..to` without replaying the shared
+    /// prefix (the engine's per-round incremental dense snapshot).
     pub fn accumulate_range(&self, from: usize, to: usize, masks: &mut [u64]) {
         for &(v, m) in &self.entries[from..to] {
-            masks[v as usize] |= m;
+            let base = v as usize * W;
+            for w in 0..W {
+                masks[base + w] |= m[w];
+            }
         }
     }
 
-    /// Build from a dense mask array, skipping zero masks.
+    /// Build from a flat vertex-major dense mask array (length a multiple
+    /// of `W`), skipping all-zero masks.
     pub fn from_masks(masks: &[u64]) -> Self {
+        debug_assert_eq!(masks.len() % W.max(1), 0);
         let mut f = Self::new();
-        for (v, &m) in masks.iter().enumerate() {
-            if m != 0 {
+        for (v, chunk) in masks.chunks_exact(W).enumerate() {
+            let m: LaneMask<W> = chunk.try_into().expect("chunk of W words");
+            if !lane_mask_is_zero(&m) {
                 f.push(v as VertexId, m);
             }
         }
@@ -340,33 +395,81 @@ mod tests {
     }
 
     #[test]
+    fn lane_mask_helpers() {
+        assert!(lane_mask_is_zero(&[0u64; 4]));
+        assert!(!lane_mask_is_zero(&[0, 0, 1, 0]));
+        assert_eq!(lane_mask_count(&[0b101u64, 1 << 63]), 3);
+        let b: LaneMask<4> = lane_bit(130);
+        assert_eq!(b, [0, 0, 1 << 2, 0]);
+        assert_eq!(lane_bit::<1>(63), [1u64 << 63]);
+    }
+
+    #[test]
     fn mask_frontier_roundtrip_and_bytes() {
-        let mut f = MaskFrontier::new();
+        let mut f = MaskFrontier::<1>::new();
         assert!(f.is_empty());
-        f.push(3, 0b101);
-        f.push(9, 1 << 63);
-        f.push(3, 0b010); // second delta for the same vertex ORs in densely
+        f.push(3, [0b101]);
+        f.push(9, [1 << 63]);
+        f.push(3, [0b010]); // second delta for the same vertex ORs in densely
         assert_eq!(f.len(), 3);
+        assert_eq!(MaskFrontier::<1>::ENTRY_BYTES, 12);
         assert_eq!(f.payload_bytes(), 36);
         let dense = f.to_masks(16);
         assert_eq!(dense[3], 0b111);
         assert_eq!(dense[9], 1 << 63);
-        let g = MaskFrontier::from_masks(&dense);
-        assert_eq!(g.entries(), &[(3, 0b111), (9, 1 << 63)]);
+        let g = MaskFrontier::<1>::from_masks(&dense);
+        assert_eq!(g.entries(), &[(3, [0b111]), (9, [1 << 63])]);
         assert_eq!(g.payload_bytes(), 24);
     }
 
     #[test]
+    fn wide_mask_frontier_roundtrip_and_entry_bytes() {
+        // The W-word generalization: entry cost scales as 4 + 8·W, and
+        // the flat vertex-major dense layout round-trips.
+        assert_eq!(MaskFrontier::<2>::ENTRY_BYTES, 20);
+        assert_eq!(MaskFrontier::<4>::ENTRY_BYTES, 36);
+        assert_eq!(MaskFrontier::<8>::ENTRY_BYTES, 68);
+        let mut f = MaskFrontier::<4>::new();
+        f.push(2, lane_bit(70)); // word 1
+        f.push(5, lane_bit(255)); // word 3
+        f.push(2, lane_bit(0)); // word 0, same vertex
+        assert_eq!(f.payload_bytes(), 3 * 36);
+        let dense = f.to_masks(8);
+        assert_eq!(dense[2 * 4], 1);
+        assert_eq!(dense[2 * 4 + 1], 1 << 6);
+        assert_eq!(dense[5 * 4 + 3], 1 << 63);
+        let g = MaskFrontier::<4>::from_masks(&dense);
+        assert_eq!(g.len(), 2, "two distinct vertices");
+        assert_eq!(g.entries()[0].0, 2);
+        assert_eq!(g.entries()[0].1, [1, 1 << 6, 0, 0]);
+        assert_eq!(g.entries()[1], (5, lane_bit(255)));
+    }
+
+    #[test]
     fn accumulate_prefix_respects_take() {
-        let mut f = MaskFrontier::new();
-        f.push(1, 0b01);
-        f.push(2, 0b10);
-        f.push(1, 0b100);
+        let mut f = MaskFrontier::<1>::new();
+        f.push(1, [0b01]);
+        f.push(2, [0b10]);
+        f.push(1, [0b100]);
         let mut masks = vec![0u64; 4];
         f.accumulate_prefix(2, &mut masks);
         assert_eq!(masks, vec![0, 0b01, 0b10, 0]);
         f.accumulate_prefix(3, &mut masks);
         assert_eq!(masks[1], 0b101);
+    }
+
+    #[test]
+    fn accumulate_range_is_incremental() {
+        let mut f = MaskFrontier::<2>::new();
+        f.push(0, [1, 0]);
+        f.push(1, [0, 2]);
+        f.push(0, [4, 8]);
+        let mut masks = vec![0u64; 2 * 2];
+        f.accumulate_range(0, 2, &mut masks);
+        assert_eq!(masks, vec![1, 0, 0, 2]);
+        // Extending the prefix folds in only the new entries.
+        f.accumulate_range(2, 3, &mut masks);
+        assert_eq!(masks, vec![5, 8, 0, 2]);
     }
 
     #[test]

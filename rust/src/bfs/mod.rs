@@ -10,7 +10,10 @@ pub mod msbfs;
 pub mod serial;
 pub mod topdown;
 
-pub use frontier::{Bitmap, Frontier, MaskFrontier};
-pub use msbfs::{mask_delta_bytes, ms_bfs, MsBfsResult, MAX_BATCH};
+pub use frontier::{Bitmap, Frontier, LaneMask, MaskFrontier};
+pub use msbfs::{
+    mask_delta_bytes, ms_bfs, words_for_lanes, MaskDeltaStats, MsBfsResult, MAX_BATCH,
+    MAX_LANES,
+};
 pub use serial::{serial_bfs, INF};
 pub use topdown::{topdown_bfs, BfsResult};

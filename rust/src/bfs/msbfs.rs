@@ -1,4 +1,5 @@
-//! Bit-parallel batched multi-source BFS (MS-BFS).
+//! Bit-parallel batched multi-source BFS (MS-BFS), generic over the lane
+//! width.
 //!
 //! APSP-class analytics (closeness / betweenness centrality, reachability
 //! sampling) run hundreds of traversals back-to-back — exactly the regime
@@ -8,23 +9,31 @@
 //! cost (schedule rounds, message latency, payload bytes) once per root.
 //!
 //! MS-BFS (Then et al., *The More the Merrier: Efficient Multi-Source BFS*)
-//! amortizes that cost: every vertex carries a 64-bit **lane mask** — bit
-//! `i` set means "already seen by the traversal rooted at `roots[i]`" —
-//! and a level expansion ORs frontier masks into neighbor masks. Up to 64
-//! traversals advance in lock-step through *one* frontier sweep, and, in
-//! the distributed engine, through *one* butterfly exchange per level
-//! ([`crate::coordinator::session::QuerySession::run_batch`]). The exchange
-//! ships `(vertex, mask-delta)` payloads priced by the negotiated encoding
-//! [`mask_delta_bytes`] (the coalescing-agnostic bound is
+//! amortizes that cost: every vertex carries a **lane mask** — bit `i` set
+//! means "already seen by the traversal rooted at `roots[i]`" — and a
+//! level expansion ORs frontier masks into neighbor masks. The mask is a
+//! const-generic [`LaneMask<W>`] of `W ∈ {1, 2, 4, 8}` 64-bit words, so
+//! up to [`MAX_LANES`] (512) traversals advance in lock-step through
+//! *one* frontier sweep, and, in the distributed engine, through *one*
+//! butterfly exchange per level
+//! ([`crate::coordinator::session::QuerySession::run_batch`]). The
+//! exchange ships `(vertex, mask-delta)` payloads priced by the negotiated
+//! encoding [`mask_delta_bytes`] (the coalescing-agnostic bound is
 //! [`PayloadEncoding::MaskDelta`](crate::coordinator::config::PayloadEncoding)),
 //! so one round of communication serves the whole batch: schedule setup,
-//! per-message latency, and dedup traffic are paid once instead of 64
-//! times.
+//! per-message latency, and dedup traffic are paid once instead of once
+//! per root. Widening `W` multiplies the lanes served per exchange while
+//! the per-entry wire cost grows only linearly (`4 + 8·W` bytes) and the
+//! presence-bitmap term of the dense wire forms does not grow at all —
+//! the amortization analysis of the distributed-BFS literature (Buluç &
+//! Madduri) applied to batching.
 //!
 //! This module holds the single-node bit-parallel engine ([`ms_bfs`], the
-//! oracle and CPU baseline), the per-root result view ([`MsBfsResult`]),
-//! and the per-compute-node distributed state ([`MsBfsNodeState`]) that
-//! `run_batch` drives through the butterfly schedule.
+//! oracle and CPU baseline — accepts any width up to [`MAX_LANES`] and
+//! dispatches to the monomorphized word count internally), the per-root
+//! result view ([`MsBfsResult`]), and the per-compute-node distributed
+//! state ([`MsBfsNodeState`]) that `run_batch` drives through the
+//! butterfly schedule.
 //!
 //! Semantics are identical to running [`serial_bfs`](crate::bfs::serial)
 //! once per root (property-tested in `tests/msbfs_equivalence.rs`):
@@ -33,16 +42,43 @@
 //! lanes that evolve identically.
 
 use crate::bfs::dirop::DirOptParams;
-use crate::bfs::frontier::MaskFrontier;
+use crate::bfs::frontier::{lane_mask_count, lane_mask_is_zero, LaneMask, MaskFrontier};
 use crate::bfs::serial::INF;
 use crate::graph::csr::{Csr, VertexId};
 use crate::util::prng::Xoshiro256StarStar;
 use std::collections::HashSet;
 
-/// Maximum batch width: one lane per bit of the `u64` mask.
-pub const MAX_BATCH: usize = 64;
+/// Lanes per mask word.
+pub const LANES_PER_WORD: usize = 64;
 
-/// Mask with the low `width` lanes set — "every lane of the batch".
+/// Maximum mask width in words the engine monomorphizes over.
+pub const MAX_LANE_WORDS: usize = 8;
+
+/// Maximum batch width: [`MAX_LANE_WORDS`] words of [`LANES_PER_WORD`]
+/// lanes each.
+pub const MAX_LANES: usize = MAX_LANE_WORDS * LANES_PER_WORD;
+
+/// Maximum batch width of a *single-word* (`W = 1`) lane mask — the
+/// classic MS-BFS width, kept for compatibility; the engine now batches
+/// up to [`MAX_LANES`] roots via wider masks.
+pub const MAX_BATCH: usize = LANES_PER_WORD;
+
+/// Smallest supported word count whose lane capacity covers `lanes`
+/// roots: `{1, 2, 4, 8}` for up to 64 / 128 / 256 / 512 lanes.
+///
+/// # Panics
+///
+/// When `lanes` is zero or exceeds [`MAX_LANES`].
+pub fn words_for_lanes(lanes: usize) -> usize {
+    assert!(
+        lanes >= 1 && lanes <= MAX_LANES,
+        "batch width must be 1..={MAX_LANES} (got {lanes})"
+    );
+    lanes.div_ceil(LANES_PER_WORD).next_power_of_two()
+}
+
+/// Single-word mask with the low `width` lanes set — "every lane of the
+/// batch" for `W = 1` (see [`full_lane_mask`] for the wide form).
 #[inline]
 pub fn full_mask(width: usize) -> u64 {
     debug_assert!(width >= 1 && width <= MAX_BATCH);
@@ -53,40 +89,114 @@ pub fn full_mask(width: usize) -> u64 {
     }
 }
 
-/// Negotiated wire cost of one MS-BFS delta message. The sender serializes
-/// its delta prefix in whichever of four equivalent forms is smallest:
+/// `W`-word mask with the low `width` lanes set — "every lane of the
+/// batch".
+#[inline]
+pub fn full_lane_mask<const W: usize>(width: usize) -> LaneMask<W> {
+    debug_assert!(
+        width >= 1 && width <= W * LANES_PER_WORD,
+        "width {width} exceeds {W}-word capacity"
+    );
+    let mut m = [0u64; W];
+    for (w, word) in m.iter_mut().enumerate() {
+        let lo = w * LANES_PER_WORD;
+        *word = if width >= lo + LANES_PER_WORD {
+            u64::MAX
+        } else if width > lo {
+            (1u64 << (width - lo)) - 1
+        } else {
+            0
+        };
+    }
+    m
+}
+
+/// Coalescing statistics of one delta prefix — the inputs of the
+/// negotiated wire pricing ([`mask_delta_bytes`]). Every field is
+/// monotone non-decreasing within a level, so snapshotting `(prefix
+/// length, stats)` together prices exactly that prefix.
 ///
-/// 1. **Sparse pairs** — `12` bytes per entry (`u32` vertex + `u64` mask).
-/// 2. **Mask-grouped sparse** — entries grouped by mask value: per group a
-///    mask + count header (`12` bytes) plus `4` bytes per entry (each
-///    entry's vertex id listed once, in its group). Lanes travel
-///    together, so few distinct mask values cover many entries — this is
-///    the redundancy 64 *separate* traversals cannot exploit, and where
-///    the batch's byte win comes from.
-/// 3. **Presence bitmap + packed masks** — `⌈V/64⌉·8` bytes marking which
-///    vertices changed, plus `8` bytes per distinct changed vertex.
+/// At `W = 1` the three `*_words` fields collapse onto their counts
+/// (`entry_words == entries`, `vertex_words == distinct_vertices`,
+/// `group_words == distinct_masks`): a nonzero single-word mask has
+/// exactly one nonzero word. That identity is what keeps the `W = 1`
+/// wire bytes bit-identical to the original single-word pricing.
+#[derive(Clone, Copy, Debug, Default, PartialEq, Eq)]
+pub struct MaskDeltaStats {
+    /// Delta-list entries.
+    pub entries: u64,
+    /// Distinct vertices among the entries.
+    pub distinct_vertices: u64,
+    /// Distinct mask values among the entries.
+    pub distinct_masks: u64,
+    /// Population count of the OR of all masks (over all `W` words).
+    pub active_lanes: u32,
+    /// Nonzero *words* of the OR of all masks — how many 64-lane cohorts
+    /// are active this level (1 at `W = 1` whenever any entry exists).
+    pub active_words: u32,
+    /// Σ nonzero mask words over entries.
+    pub entry_words: u64,
+    /// Distinct `(vertex, word)` cells with a nonzero accumulated mask
+    /// word this level.
+    pub vertex_words: u64,
+    /// Σ nonzero mask words over distinct mask values.
+    pub group_words: u64,
+}
+
+/// Per-mask word-presence header bytes: wide masks (`W > 1`) ship a
+/// 1-byte word bitmap so all-zero words cost nothing; at `W = 1` the
+/// word is implied by the entry's existence.
+#[inline]
+fn word_header(lane_words: usize) -> u64 {
+    u64::from(lane_words > 1)
+}
+
+/// Negotiated wire cost of one MS-BFS delta message carrying
+/// `lane_words`-word masks. The sender serializes its delta prefix in
+/// whichever of four equivalent forms is smallest. For `W > 1` every
+/// mask is shipped *word-sparse*: a 1-byte word-presence bitmap (`W <=
+/// 8`) followed by only the nonzero 64-bit words — so a wide batch whose
+/// lanes cluster in few words (the common case: each vertex is typically
+/// reached by roots from one 64-lane cohort at a time) pays close to the
+/// single-word cost, not `8·W` per mask.
+///
+/// 1. **Sparse pairs** — per entry a `u32` vertex id, the word-presence
+///    byte, and the entry's nonzero mask words:
+///    `(4 + ⟦W>1⟧)·entries + 8·entry_words` bytes.
+/// 2. **Mask-grouped sparse** — entries grouped by mask value: per group
+///    a word-sparse mask + count header, plus `4` bytes per entry (each
+///    entry's vertex id listed once, in its group):
+///    `(4 + ⟦W>1⟧)·distinct_masks + 8·group_words + 4·entries`. Lanes
+///    travel together, so few distinct mask values cover many entries —
+///    this is the redundancy `64·W` *separate* traversals cannot
+///    exploit, and where the batch's byte win comes from.
+/// 3. **Per-word presence bitmaps + packed masks** — for each *active*
+///    word (64-lane cohort with any delta), a `⌈V/64⌉·8`-byte presence
+///    bitmap marking which vertices gained lanes of that cohort, plus
+///    `8` bytes per nonzero `(vertex, word)` cell:
+///    `active_words·presence + 8·vertex_words`. This is exactly the
+///    single-word arm 3 applied per cohort, so a wide batch never pays
+///    for provisioned-but-idle words, and at `W = 1` it reduces to the
+///    original `presence + 8·distinct_vertices`.
 /// 4. **Per-active-lane bitmaps** — `(1 + active_lanes)·⌈V/64⌉·8` bytes
-///    (a presence bitmap per lane that appears in the delta); degenerates
-///    to the single-root bitmap bound when only one lane is active.
-///
-/// `entries` counts delta-list entries, `distinct_vertices` the distinct
-/// vertices among them, `distinct_masks` the distinct mask values, and
-/// `active_lanes` the population count of the OR of all masks.
+///    (a presence bitmap per lane that appears in the delta);
+///    degenerates to the single-root bitmap bound when only one lane is
+///    active, and is width-independent: the presence term never grows
+///    with `W`.
 pub fn mask_delta_bytes(
-    entries: u64,
-    distinct_vertices: u64,
-    distinct_masks: u64,
-    active_lanes: u32,
+    s: &MaskDeltaStats,
     num_vertices: usize,
+    lane_words: usize,
 ) -> u64 {
-    if entries == 0 {
+    if s.entries == 0 {
         return 0;
     }
+    let wb = word_header(lane_words);
     let presence = (num_vertices as u64).div_ceil(64) * 8;
-    let sparse = entries * MaskFrontier::ENTRY_BYTES;
-    let grouped = distinct_masks * 12 + entries * 4;
-    let dense = presence + distinct_vertices * 8;
-    let lane_bitmaps = (1 + active_lanes as u64) * presence;
+    let sparse = s.entries * (4 + wb) + 8 * s.entry_words;
+    let grouped = s.distinct_masks * (4 + wb) + 8 * s.group_words + s.entries * 4;
+    let dense = s.active_words as u64 * presence + 8 * s.vertex_words;
+    let lane_bitmaps = (1 + s.active_lanes as u64) * presence;
     sparse.min(grouped).min(dense).min(lane_bitmaps)
 }
 
@@ -94,19 +204,20 @@ pub fn mask_delta_bytes(
 /// bitmap) forms only — arms 3 and 4 of [`mask_delta_bytes`]. A bottom-up
 /// scan produces its discoveries as a dense sweep over the sender's owned
 /// vertex range, so the natural wire format is a presence bitmap plus
-/// either packed per-vertex masks (arm 3) or one bitmap per active lane
-/// (arm 4); the sorted sparse forms would require an extra compaction
-/// pass the sender never runs.
+/// either word-sparse packed per-vertex masks (arm 3) or one bitmap per
+/// active lane (arm 4); the sorted sparse forms would require an extra
+/// compaction pass the sender never runs.
 pub fn mask_delta_bytes_dense(
-    distinct_vertices: u64,
+    vertex_words: u64,
+    active_words: u32,
     active_lanes: u32,
     num_vertices: usize,
 ) -> u64 {
-    if distinct_vertices == 0 {
+    if vertex_words == 0 {
         return 0;
     }
     let presence = (num_vertices as u64).div_ceil(64) * 8;
-    let dense = presence + distinct_vertices * 8;
+    let dense = active_words as u64 * presence + 8 * vertex_words;
     let lane_bitmaps = (1 + active_lanes as u64) * presence;
     dense.min(lane_bitmaps)
 }
@@ -150,47 +261,79 @@ impl MsBfsResult {
     }
 }
 
+/// Stamp `dist[lane·n + v] = d` for every lane set in the `W`-word delta.
+#[inline]
+fn stamp_lanes<const W: usize>(dist: &mut [u32], n: usize, v: usize, delta: &LaneMask<W>, d: u32) {
+    for (w, &word) in delta.iter().enumerate() {
+        let mut m = word;
+        while m != 0 {
+            let lane = w * LANES_PER_WORD + m.trailing_zeros() as usize;
+            m &= m - 1;
+            dist[lane * n + v] = d;
+        }
+    }
+}
+
 /// Single-node bit-parallel MS-BFS over a full CSR: the oracle the
 /// distributed `run_batch` is tested against, and the CPU baseline the
 /// `msbfs_amortization` bench compares with.
 ///
-/// One pass over the active frontier advances all `roots.len() <= 64`
-/// traversals: for frontier vertex `v` with pending mask `m`, each
-/// neighbor `u` gains lanes `m & !seen[u]`.
+/// One pass over the active frontier advances all `roots.len() <=`
+/// [`MAX_LANES`] traversals: for frontier vertex `v` with pending mask
+/// `m`, each neighbor `u` gains lanes `m & !seen[u]`, word-wise. The
+/// word count is monomorphized internally ([`words_for_lanes`]).
 pub fn ms_bfs(g: &Csr, roots: &[VertexId]) -> MsBfsResult {
+    match words_for_lanes(roots.len()) {
+        1 => ms_bfs_w::<1>(g, roots),
+        2 => ms_bfs_w::<2>(g, roots),
+        4 => ms_bfs_w::<4>(g, roots),
+        _ => ms_bfs_w::<8>(g, roots),
+    }
+}
+
+fn ms_bfs_w<const W: usize>(g: &Csr, roots: &[VertexId]) -> MsBfsResult {
     let n = g.num_vertices();
     let b = roots.len();
-    assert!(b >= 1 && b <= MAX_BATCH, "batch width must be 1..=64 (got {b})");
-    let mut seen = vec![0u64; n];
-    let mut visit = vec![0u64; n];
-    let mut next = vec![0u64; n];
+    debug_assert!(b >= 1 && b <= W * LANES_PER_WORD);
+    let mut seen = vec![0u64; n * W];
+    let mut visit = vec![0u64; n * W];
+    let mut next = vec![0u64; n * W];
     let mut dist = vec![INF; n * b];
     for (lane, &r) in roots.iter().enumerate() {
         assert!((r as usize) < n, "root {r} out of range");
-        let bit = 1u64 << lane;
-        seen[r as usize] |= bit;
-        visit[r as usize] |= bit;
+        let base = r as usize * W;
+        seen[base + lane / LANES_PER_WORD] |= 1u64 << (lane % LANES_PER_WORD);
+        visit[base + lane / LANES_PER_WORD] |= 1u64 << (lane % LANES_PER_WORD);
         dist[lane * n + r as usize] = 0;
     }
     let mut level = 0u32;
     loop {
         let mut any = false;
         for v in 0..n {
-            let mv = visit[v];
-            if mv == 0 {
+            let vbase = v * W;
+            let mut mv = [0u64; W];
+            let mut nonzero = 0u64;
+            for w in 0..W {
+                mv[w] = visit[vbase + w];
+                nonzero |= mv[w];
+            }
+            if nonzero == 0 {
                 continue;
             }
             for &u in g.neighbors(v as VertexId) {
-                let d = mv & !seen[u as usize];
-                if d != 0 {
-                    seen[u as usize] |= d;
-                    next[u as usize] |= d;
-                    let mut m = d;
-                    while m != 0 {
-                        let lane = m.trailing_zeros() as usize;
-                        m &= m - 1;
-                        dist[lane * n + u as usize] = level + 1;
+                let ubase = u as usize * W;
+                let mut d = [0u64; W];
+                let mut found = 0u64;
+                for w in 0..W {
+                    d[w] = mv[w] & !seen[ubase + w];
+                    found |= d[w];
+                }
+                if found != 0 {
+                    for w in 0..W {
+                        seen[ubase + w] |= d[w];
+                        next[ubase + w] |= d[w];
                     }
+                    stamp_lanes(&mut dist, n, u as usize, &d, level + 1);
                     any = true;
                 }
             }
@@ -244,41 +387,58 @@ pub struct MsBfsDirRun {
 /// Direction-aware single-node bit-parallel MS-BFS — the oracle for the
 /// batched direction-optimizing engine path
 /// ([`run_batch`](crate::coordinator::session::QuerySession::run_batch)
-/// with a non-top-down `DirectionMode`).
+/// with a non-top-down `DirectionMode`). Like [`ms_bfs`], accepts up to
+/// [`MAX_LANES`] roots and dispatches to the monomorphized word count.
 ///
 /// The bottom-up formulation (Then et al. §aggregated neighbor
 /// processing, composed with Beamer's direction switch): a vertex `v`
 /// with `seen[v] != full` scans its neighbors `u`, accumulating
-/// `acc |= visit[u]`, and early-exits once `acc` covers every lane still
-/// missing at `v` — one sequential read per unseen vertex replaces
-/// per-edge top-down scatter at dense levels. The α/β heuristic runs on
-/// *union-frontier* statistics: the frontier's edge mass is
+/// `acc |= visit[u]` word-wise, and early-exits once `acc` covers every
+/// lane still missing at `v` — one sequential read per unseen vertex
+/// replaces per-edge top-down scatter at dense levels. The α/β heuristic
+/// runs on *union-frontier* statistics: the frontier's edge mass is
 /// `Σ deg(v)` over distinct active vertices (a vertex active in many
 /// lanes still costs one adjacency read), compared against the edge mass
 /// not yet claimed by any lane's traversal.
 pub fn ms_bfs_dir(g: &Csr, roots: &[VertexId], direction: MsBfsDirection) -> MsBfsDirRun {
+    match words_for_lanes(roots.len()) {
+        1 => ms_bfs_dir_w::<1>(g, roots, direction),
+        2 => ms_bfs_dir_w::<2>(g, roots, direction),
+        4 => ms_bfs_dir_w::<4>(g, roots, direction),
+        _ => ms_bfs_dir_w::<8>(g, roots, direction),
+    }
+}
+
+fn ms_bfs_dir_w<const W: usize>(
+    g: &Csr,
+    roots: &[VertexId],
+    direction: MsBfsDirection,
+) -> MsBfsDirRun {
     let n = g.num_vertices();
     let b = roots.len();
-    assert!(b >= 1 && b <= MAX_BATCH, "batch width must be 1..=64 (got {b})");
-    let full = full_mask(b);
-    let mut seen = vec![0u64; n];
-    let mut visit = vec![0u64; n];
-    let mut next = vec![0u64; n];
+    debug_assert!(b >= 1 && b <= W * LANES_PER_WORD);
+    let full: LaneMask<W> = full_lane_mask(b);
+    let mut seen = vec![0u64; n * W];
+    let mut visit = vec![0u64; n * W];
+    let mut next = vec![0u64; n * W];
     let mut dist = vec![INF; n * b];
     for (lane, &r) in roots.iter().enumerate() {
         assert!((r as usize) < n, "root {r} out of range");
-        let bit = 1u64 << lane;
-        seen[r as usize] |= bit;
-        visit[r as usize] |= bit;
+        let base = r as usize * W;
+        seen[base + lane / LANES_PER_WORD] |= 1u64 << (lane % LANES_PER_WORD);
+        visit[base + lane / LANES_PER_WORD] |= 1u64 << (lane % LANES_PER_WORD);
         dist[lane * n + r as usize] = 0;
     }
+    let nonzero = |masks: &[u64], v: usize| -> bool {
+        masks[v * W..v * W + W].iter().any(|&w| w != 0)
+    };
     let mut levels = Vec::new();
     let mut level = 0u32;
     let mut bottom_up = false;
     let mut prev_frontier = 0u64;
     let mut m_unexplored = g.num_edges();
     loop {
-        let frontier = visit.iter().filter(|&&m| m != 0).count() as u64;
+        let frontier = (0..n).filter(|&v| nonzero(&visit, v)).count() as u64;
         if frontier == 0 {
             break;
         }
@@ -286,11 +446,9 @@ pub fn ms_bfs_dir(g: &Csr, roots: &[VertexId], direction: MsBfsDirection) -> MsB
             MsBfsDirection::TopDown => {}
             MsBfsDirection::BottomUp => bottom_up = true,
             MsBfsDirection::DirOpt(DirOptParams { alpha, beta }) => {
-                let m_frontier: u64 = visit
-                    .iter()
-                    .enumerate()
-                    .filter(|&(_, &m)| m != 0)
-                    .map(|(v, _)| g.degree(v as VertexId) as u64)
+                let m_frontier: u64 = (0..n)
+                    .filter(|&v| nonzero(&visit, v))
+                    .map(|v| g.degree(v as VertexId) as u64)
                     .sum();
                 let growing = frontier > prev_frontier;
                 if !bottom_up && alpha > 0 && growing && m_frontier > m_unexplored / alpha {
@@ -309,51 +467,73 @@ pub fn ms_bfs_dir(g: &Csr, roots: &[VertexId], direction: MsBfsDirection) -> MsB
         let mut any = false;
         if bottom_up {
             for v in 0..n {
-                let missing = full & !seen[v];
-                if missing == 0 {
+                let vbase = v * W;
+                let mut missing = [0u64; W];
+                let mut miss_any = 0u64;
+                for w in 0..W {
+                    missing[w] = full[w] & !seen[vbase + w];
+                    miss_any |= missing[w];
+                }
+                if miss_any == 0 {
                     continue;
                 }
-                let mut acc = 0u64;
+                let mut acc = [0u64; W];
                 for &u in g.neighbors(v as VertexId) {
                     edges += 1;
-                    acc |= visit[u as usize];
-                    if acc & missing == missing {
+                    let ubase = u as usize * W;
+                    let mut covered = true;
+                    for w in 0..W {
+                        acc[w] |= visit[ubase + w];
+                        covered &= acc[w] & missing[w] == missing[w];
+                    }
+                    if covered {
                         // Every still-missing lane found a parent — the
                         // early exit that makes dense levels cheap.
                         break;
                     }
                 }
-                let d = acc & missing;
-                if d != 0 {
-                    seen[v] |= d;
-                    next[v] |= d;
-                    let mut m = d;
-                    while m != 0 {
-                        let lane = m.trailing_zeros() as usize;
-                        m &= m - 1;
-                        dist[lane * n + v] = level + 1;
+                let mut d = [0u64; W];
+                let mut d_any = 0u64;
+                for w in 0..W {
+                    d[w] = acc[w] & missing[w];
+                    d_any |= d[w];
+                }
+                if d_any != 0 {
+                    for w in 0..W {
+                        seen[vbase + w] |= d[w];
+                        next[vbase + w] |= d[w];
                     }
+                    stamp_lanes(&mut dist, n, v, &d, level + 1);
                     any = true;
                 }
             }
         } else {
             for v in 0..n {
-                let mv = visit[v];
-                if mv == 0 {
+                let vbase = v * W;
+                let mut mv = [0u64; W];
+                let mut mv_any = 0u64;
+                for w in 0..W {
+                    mv[w] = visit[vbase + w];
+                    mv_any |= mv[w];
+                }
+                if mv_any == 0 {
                     continue;
                 }
                 edges += g.degree(v as VertexId) as u64;
                 for &u in g.neighbors(v as VertexId) {
-                    let d = mv & !seen[u as usize];
-                    if d != 0 {
-                        seen[u as usize] |= d;
-                        next[u as usize] |= d;
-                        let mut m = d;
-                        while m != 0 {
-                            let lane = m.trailing_zeros() as usize;
-                            m &= m - 1;
-                            dist[lane * n + u as usize] = level + 1;
+                    let ubase = u as usize * W;
+                    let mut d = [0u64; W];
+                    let mut found = 0u64;
+                    for w in 0..W {
+                        d[w] = mv[w] & !seen[ubase + w];
+                        found |= d[w];
+                    }
+                    if found != 0 {
+                        for w in 0..W {
+                            seen[ubase + w] |= d[w];
+                            next[ubase + w] |= d[w];
                         }
+                        stamp_lanes(&mut dist, n, u as usize, &d, level + 1);
                         any = true;
                     }
                 }
@@ -361,11 +541,9 @@ pub fn ms_bfs_dir(g: &Csr, roots: &[VertexId], direction: MsBfsDirection) -> MsB
         }
         levels.push(MsBfsLevelStats { level, frontier, edges_inspected: edges, bottom_up });
         if let MsBfsDirection::DirOpt(_) = direction {
-            let next_edges: u64 = next
-                .iter()
-                .enumerate()
-                .filter(|&(_, &m)| m != 0)
-                .map(|(v, _)| g.degree(v as VertexId) as u64)
+            let next_edges: u64 = (0..n)
+                .filter(|&v| nonzero(&next, v))
+                .map(|v| g.degree(v as VertexId) as u64)
                 .sum();
             m_unexplored = m_unexplored.saturating_sub(next_edges);
         }
@@ -382,16 +560,16 @@ pub fn ms_bfs_dir(g: &Csr, roots: &[VertexId], direction: MsBfsDirection) -> MsB
     }
 }
 
-/// Sample `width` roots for a batch. Non-isolated vertices are
-/// guaranteed whenever the graph has any edge: after a few random
-/// retries the sampler falls back to a deterministic wrapping scan for
-/// the next vertex with degree > 0 (so an unlucky lane can never land on
-/// an isolated vertex, unlike a bounded-retry sampler). Duplicates are
+/// Sample `width` roots for a batch (up to [`MAX_LANES`]). Non-isolated
+/// vertices are guaranteed whenever the graph has any edge: after a few
+/// random retries the sampler falls back to a deterministic wrapping scan
+/// for the next vertex with degree > 0 (so an unlucky lane can never land
+/// on an isolated vertex, unlike a bounded-retry sampler). Duplicates are
 /// allowed — MS-BFS handles them as independent lanes.
 pub fn sample_batch_roots(g: &Csr, width: usize, seed: u64) -> Vec<VertexId> {
     let n = g.num_vertices();
     assert!(n > 0, "empty graph");
-    assert!(width >= 1 && width <= MAX_BATCH);
+    assert!(width >= 1 && width <= MAX_LANES);
     let mut rng = Xoshiro256StarStar::seed_from_u64(seed);
     let mut roots = Vec::with_capacity(width);
     while roots.len() < width {
@@ -420,24 +598,29 @@ pub fn sample_batch_roots(g: &Csr, width: usize, seed: u64) -> Vec<VertexId> {
 /// Per-compute-node state of one distributed batched traversal — the
 /// MS-BFS analog of [`ComputeNode`](crate::coordinator::node::ComputeNode)'s
 /// queues, created fresh by `run_batch` and driven through the same
-/// butterfly schedule the single-root engine uses.
+/// butterfly schedule the single-root engine uses. Generic over the lane
+/// word count `W` ([`LaneMask`]); the per-vertex mask arrays are stored
+/// *flat vertex-major* (`seen[v·W + w]` is word `w` of vertex `v`'s
+/// mask), the layout the width-agnostic backend kernel consumes.
 ///
 /// The node's *global queue* analog is [`MsBfsNodeState::delta`]: every
 /// `(vertex, lane-mask)` pair this node discovered or relayed this level —
 /// the butterfly payload.
 #[derive(Clone, Debug)]
-pub struct MsBfsNodeState {
+pub struct MsBfsNodeState<const W: usize> {
     num_vertices: usize,
-    /// Per-vertex lanes already seen by this node (`seen[v]` bit `i` ⇔
-    /// lane `i` reached `v` as far as this node knows).
+    /// Per-vertex lanes already seen by this node, flat vertex-major
+    /// (`seen[v·W + w]` bit `i` ⇔ lane `w·64 + i` reached `v` as far as
+    /// this node knows).
     pub seen: Vec<u64>,
     /// Lane-major distances, `dist[lane * V + v]` (every node records all
     /// lanes — the paper's "All CN set their d" — so agreement is
     /// checkable).
     pub dist: Vec<u32>,
-    /// Pending masks of the *current* level's owned frontier vertices.
+    /// Pending masks of the *current* level's owned frontier vertices
+    /// (flat vertex-major, like `seen`).
     pub visit: Vec<u64>,
-    /// Accumulated masks for the *next* level's owned frontier.
+    /// Accumulated masks for the *next* level's owned frontier (flat).
     pub next_mask: Vec<u64>,
     /// Owned vertices with a nonzero `visit` mask (current level).
     pub q_local: Vec<VertexId>,
@@ -446,51 +629,78 @@ pub struct MsBfsNodeState {
     /// Everything this node learned this level — phase-1 discoveries plus
     /// butterfly-relayed deltas, each entry's mask holding only the lanes
     /// that were new to this node when it was appended.
-    pub delta: MaskFrontier,
+    pub delta: MaskFrontier<W>,
     /// Edges examined by this node in the current level (metrics).
     pub edges_this_level: u64,
     /// Distinct vertices in `delta` (for [`mask_delta_bytes`] pricing).
     pub delta_distinct: u64,
     /// Distinct mask values in `delta` (pricing).
-    pub mask_values: HashSet<u64>,
+    pub mask_values: HashSet<LaneMask<W>>,
     /// OR of all masks in `delta` — which lanes are active this level
     /// (pricing).
-    pub active_lanes: u64,
+    pub active_lanes: LaneMask<W>,
+    /// Per-word entry counts: `word_entries[w]` is the number of delta
+    /// entries whose word `w` is nonzero (the cohort-factored pricing's
+    /// per-cohort entry count; Σ over words = nonzero mask words over all
+    /// entries, the word-sparse entry cost).
+    pub word_entries: [u64; W],
+    /// Per-word distinct-vertex counts: `word_vertices[w]` is the number
+    /// of distinct vertices whose accumulated mask word `w` is nonzero
+    /// this level.
+    pub word_vertices: [u64; W],
+    /// Σ nonzero mask words over distinct whole-mask values (word-sparse
+    /// grouped pricing).
+    pub group_words: u64,
+    /// Per-word distinct word-values (the cohort-factored grouped
+    /// pricing's per-cohort mask-value sets).
+    word_mask_values: Vec<HashSet<u64>>,
     /// Per-vertex level stamp (`level + 1` when `v` was first appended to
     /// `delta` this level) backing `delta_distinct`.
     delta_stamp: Vec<u32>,
+    /// Per-`(vertex, word)` level stamp backing `word_vertices` (flat
+    /// vertex-major, like `seen`).
+    delta_word_stamp: Vec<u32>,
     /// The complete *current* frontier as per-vertex lane masks over ALL
-    /// vertices (not just owned) — what the batched bottom-up scan probes,
-    /// the lane-mask analog of `ComputeNode::frontier_full`. Rebuilt at
-    /// [`Self::swap_level`] from the post-exchange delta (which holds the
-    /// level's complete discoveries after full coverage). Allocated only
-    /// when [`Self::set_full_tracking`] enables it.
+    /// vertices (not just owned), flat vertex-major — what the batched
+    /// bottom-up scan probes, the lane-mask analog of
+    /// `ComputeNode::frontier_full`. Rebuilt at [`Self::swap_level`] from
+    /// the post-exchange delta (which holds the level's complete
+    /// discoveries after full coverage). Allocated only when
+    /// [`Self::set_full_tracking`] enables it.
     visit_full: Vec<u64>,
-    /// Nonzero entries of `visit_full`, so clearing costs O(frontier).
+    /// Vertices with a nonzero `visit_full` mask, so clearing costs
+    /// O(frontier·W).
     visit_full_touched: Vec<VertexId>,
     /// Whether `swap_level` maintains `visit_full` (bottom-up-capable
     /// direction modes only; pure top-down batches skip the upkeep).
     track_full: bool,
 }
 
-impl MsBfsNodeState {
+impl<const W: usize> MsBfsNodeState<W> {
     /// Fresh state for a `num_vertices`-vertex graph and a batch of
-    /// `num_roots` lanes (lanes beyond the width are simply never set).
+    /// `num_roots <= 64·W` lanes (lanes beyond the width are simply never
+    /// set).
     pub fn new(num_vertices: usize, num_roots: usize) -> Self {
+        debug_assert!(num_roots <= W * LANES_PER_WORD);
         Self {
             num_vertices,
-            seen: vec![0; num_vertices],
+            seen: vec![0; num_vertices * W],
             dist: vec![INF; num_vertices * num_roots],
-            visit: vec![0; num_vertices],
-            next_mask: vec![0; num_vertices],
+            visit: vec![0; num_vertices * W],
+            next_mask: vec![0; num_vertices * W],
             q_local: Vec::new(),
             q_local_next: Vec::new(),
             delta: MaskFrontier::new(),
             edges_this_level: 0,
             delta_distinct: 0,
             mask_values: HashSet::new(),
-            active_lanes: 0,
+            active_lanes: [0; W],
+            word_entries: [0; W],
+            word_vertices: [0; W],
+            group_words: 0,
+            word_mask_values: (0..W).map(|_| HashSet::new()).collect(),
             delta_stamp: vec![0; num_vertices],
+            delta_word_stamp: vec![0; num_vertices * W],
             visit_full: Vec::new(),
             visit_full_touched: Vec::new(),
             track_full: false,
@@ -504,22 +714,25 @@ impl MsBfsNodeState {
     pub fn set_full_tracking(&mut self, on: bool) {
         self.track_full = on;
         if on && self.visit_full.is_empty() {
-            self.visit_full = vec![0; self.num_vertices];
+            self.visit_full = vec![0; self.num_vertices * W];
         }
     }
 
     /// Seed lanes `mask` of vertex `v` into the level-0 full frontier
     /// (the batch prologue: every node knows every root).
-    pub fn seed_full_frontier(&mut self, v: VertexId, mask: u64) {
+    pub fn seed_full_frontier(&mut self, v: VertexId, mask: &LaneMask<W>) {
         debug_assert!(self.track_full, "seeding without tracking enabled");
-        if self.visit_full[v as usize] == 0 {
+        let base = v as usize * W;
+        if self.visit_full[base..base + W].iter().all(|&x| x == 0) {
             self.visit_full_touched.push(v);
         }
-        self.visit_full[v as usize] |= mask;
+        for w in 0..W {
+            self.visit_full[base + w] |= mask[w];
+        }
     }
 
-    /// The complete current frontier as per-vertex lane masks (empty slice
-    /// unless tracking is enabled).
+    /// The complete current frontier as flat vertex-major per-vertex lane
+    /// masks (empty slice unless tracking is enabled).
     pub fn full_frontier(&self) -> &[u64] {
         &self.visit_full
     }
@@ -530,13 +743,63 @@ impl MsBfsNodeState {
     /// monotone within a level, so snapshotting them alongside the prefix
     /// length prices exactly that prefix's best serialization bound.
     pub fn delta_payload_bytes(&self, entries: usize) -> u64 {
-        mask_delta_bytes(
-            entries as u64,
-            self.delta_distinct.min(entries as u64),
-            (self.mask_values.len() as u64).min(entries as u64),
-            self.active_lanes.count_ones(),
+        let e = entries as u64;
+        let whole = mask_delta_bytes(
+            &MaskDeltaStats {
+                entries: e,
+                distinct_vertices: self.delta_distinct.min(e),
+                distinct_masks: (self.mask_values.len() as u64).min(e),
+                active_lanes: lane_mask_count(&self.active_lanes),
+                active_words: self.active_lanes.iter().filter(|&&w| w != 0).count()
+                    as u32,
+                entry_words: self.word_entries.iter().sum(),
+                vertex_words: self.word_vertices.iter().sum(),
+                group_words: self.group_words,
+            },
             self.num_vertices,
-        )
+            W,
+        );
+        if W == 1 {
+            return whole;
+        }
+        whole.min(self.per_word_bytes(false))
+    }
+
+    /// The cohort-factored serialization: the wide delta shipped as up to
+    /// `W` independent single-word messages, one per active 64-lane
+    /// cohort, each priced by the original `W = 1` negotiation on that
+    /// cohort's own statistics (`dense_only` restricts each cohort to the
+    /// dense bottom-up forms). This is exactly what executing the batch
+    /// as 64-root chunks would ship, so widening the lanes never prices
+    /// *worse* than chunked execution — the whole-mask forms then win
+    /// whenever lanes coalesce across cohorts.
+    fn per_word_bytes(&self, dense_only: bool) -> u64 {
+        (0..W)
+            .map(|w| {
+                let e = self.word_entries[w];
+                let dv = self.word_vertices[w];
+                let al = self.active_lanes[w].count_ones();
+                if dense_only {
+                    mask_delta_bytes_dense(dv, u32::from(dv > 0), al, self.num_vertices)
+                } else {
+                    let dm = (self.word_mask_values[w].len() as u64).min(e);
+                    mask_delta_bytes(
+                        &MaskDeltaStats {
+                            entries: e,
+                            distinct_vertices: dv.min(e),
+                            distinct_masks: dm,
+                            active_lanes: al,
+                            active_words: u32::from(e > 0),
+                            entry_words: e,
+                            vertex_words: dv.min(e),
+                            group_words: dm,
+                        },
+                        self.num_vertices,
+                        1,
+                    )
+                }
+            })
+            .sum()
     }
 
     /// Bottom-up pricing of the current delta prefix: the dense presence-
@@ -547,48 +810,72 @@ impl MsBfsNodeState {
         if entries == 0 {
             return 0;
         }
-        mask_delta_bytes_dense(
-            self.delta_distinct.min(entries as u64),
-            self.active_lanes.count_ones(),
+        let whole = mask_delta_bytes_dense(
+            self.word_vertices.iter().sum(),
+            self.active_lanes.iter().filter(|&&w| w != 0).count() as u32,
+            lane_mask_count(&self.active_lanes),
             self.num_vertices,
-        )
+        );
+        if W == 1 {
+            return whole;
+        }
+        whole.min(self.per_word_bytes(true))
     }
 
     /// Record that lanes `mask` reached `v` at `level + 1`; only lanes new
     /// to this node take effect. Appends the filtered delta for relay and,
-    /// when `owned`, routes `v` into the next local frontier. Returns the
-    /// newly-set lanes (0 when everything was already known). This is the
-    /// shared inner step of Phase 1 (edge expansion) and Phase 2 (received
-    /// deltas), mirroring `ComputeNode::discover`.
+    /// when `owned`, routes `v` into the next local frontier. Returns
+    /// whether any lane was newly set. This is the shared inner step of
+    /// Phase 1 (edge expansion) and Phase 2 (received deltas), mirroring
+    /// `ComputeNode::discover`.
     #[inline]
-    pub fn discover(&mut self, v: VertexId, mask: u64, level: u32, owned: bool) -> u64 {
-        let d = mask & !self.seen[v as usize];
-        if d == 0 {
-            return 0;
+    pub fn discover(&mut self, v: VertexId, mask: &LaneMask<W>, level: u32, owned: bool) -> bool {
+        let base = v as usize * W;
+        let mut d = [0u64; W];
+        let mut found = 0u64;
+        for w in 0..W {
+            d[w] = mask[w] & !self.seen[base + w];
+            found |= d[w];
         }
-        self.seen[v as usize] |= d;
+        if found == 0 {
+            return false;
+        }
+        for w in 0..W {
+            self.seen[base + w] |= d[w];
+        }
         let nv = self.num_vertices;
-        let mut m = d;
-        while m != 0 {
-            let lane = m.trailing_zeros() as usize;
-            m &= m - 1;
-            self.dist[lane * nv + v as usize] = level + 1;
-        }
+        stamp_lanes(&mut self.dist, nv, v as usize, &d, level + 1);
         self.delta.push(v, d);
         // Coalescing statistics for the negotiated payload encoding.
         if self.delta_stamp[v as usize] != level + 1 {
             self.delta_stamp[v as usize] = level + 1;
             self.delta_distinct += 1;
         }
-        self.active_lanes |= d;
-        self.mask_values.insert(d);
+        let mut nzw = 0u64;
+        for w in 0..W {
+            self.active_lanes[w] |= d[w];
+            if d[w] != 0 {
+                nzw += 1;
+                self.word_entries[w] += 1;
+                self.word_mask_values[w].insert(d[w]);
+                if self.delta_word_stamp[base + w] != level + 1 {
+                    self.delta_word_stamp[base + w] = level + 1;
+                    self.word_vertices[w] += 1;
+                }
+            }
+        }
+        if self.mask_values.insert(d) {
+            self.group_words += nzw;
+        }
         if owned {
-            if self.next_mask[v as usize] == 0 {
+            if self.next_mask[base..base + W].iter().all(|&x| x == 0) {
                 self.q_local_next.push(v);
             }
-            self.next_mask[v as usize] |= d;
+            for w in 0..W {
+                self.next_mask[base + w] |= d[w];
+            }
         }
-        d
+        true
     }
 
     /// Clear all traversal state so the buffers can serve a fresh batch of
@@ -599,6 +886,7 @@ impl MsBfsNodeState {
     /// `delta_stamp`: its stamps are level-scoped and levels restart at 0
     /// in the next batch.
     pub fn reset(&mut self, num_roots: usize) {
+        debug_assert!(num_roots <= W * LANES_PER_WORD);
         self.seen.iter_mut().for_each(|x| *x = 0);
         self.dist.clear();
         self.dist.resize(self.num_vertices * num_roots, INF);
@@ -610,11 +898,17 @@ impl MsBfsNodeState {
         self.edges_this_level = 0;
         self.delta_distinct = 0;
         self.mask_values.clear();
-        self.active_lanes = 0;
+        self.active_lanes = [0; W];
+        self.word_entries = [0; W];
+        self.word_vertices = [0; W];
+        self.group_words = 0;
+        self.word_mask_values.iter_mut().for_each(|s| s.clear());
         self.delta_stamp.iter_mut().for_each(|x| *x = 0);
+        self.delta_word_stamp.iter_mut().for_each(|x| *x = 0);
         // Nonzero `visit_full` entries are exactly the touched list.
         for &v in &self.visit_full_touched {
-            self.visit_full[v as usize] = 0;
+            let base = v as usize * W;
+            self.visit_full[base..base + W].iter_mut().for_each(|x| *x = 0);
         }
         self.visit_full_touched.clear();
     }
@@ -629,28 +923,39 @@ impl MsBfsNodeState {
     pub fn swap_level(&mut self) {
         if self.track_full {
             for &v in &self.visit_full_touched {
-                self.visit_full[v as usize] = 0;
+                let base = v as usize * W;
+                self.visit_full[base..base + W].iter_mut().for_each(|x| *x = 0);
             }
             self.visit_full_touched.clear();
             for &(v, m) in self.delta.entries() {
-                if self.visit_full[v as usize] == 0 {
+                let base = v as usize * W;
+                if self.visit_full[base..base + W].iter().all(|&x| x == 0) {
                     self.visit_full_touched.push(v);
                 }
-                self.visit_full[v as usize] |= m;
+                for w in 0..W {
+                    self.visit_full[base + w] |= m[w];
+                }
             }
         }
         self.q_local.clear();
         std::mem::swap(&mut self.q_local, &mut self.q_local_next);
         for &v in &self.q_local {
-            self.visit[v as usize] = self.next_mask[v as usize];
-            self.next_mask[v as usize] = 0;
+            let base = v as usize * W;
+            for w in 0..W {
+                self.visit[base + w] = self.next_mask[base + w];
+                self.next_mask[base + w] = 0;
+            }
         }
         self.delta.clear();
         self.delta_distinct = 0;
         self.mask_values.clear();
-        self.active_lanes = 0;
-        // `delta_stamp` needs no reset: stamps are `level + 1`, which never
-        // recurs in later levels.
+        self.active_lanes = [0; W];
+        self.word_entries = [0; W];
+        self.word_vertices = [0; W];
+        self.group_words = 0;
+        self.word_mask_values.iter_mut().for_each(|s| s.clear());
+        // `delta_stamp` / `delta_word_stamp` need no reset: stamps are
+        // `level + 1`, which never recurs in later levels.
         self.edges_this_level = 0;
     }
 }
@@ -689,6 +994,38 @@ mod tests {
     }
 
     #[test]
+    fn wide_batches_equal_serial_at_every_word_count() {
+        // The tentpole: widths crossing every word boundary — 65 (2
+        // words), 130 (4), 260 (8), and the full 512 — all remain
+        // bit-identical to per-root serial BFS.
+        let (g, _) = uniform_random(250, 6, 17);
+        for width in [65usize, 128, 130, 256, 260, 512] {
+            let roots: Vec<VertexId> =
+                (0..width).map(|i| ((i * 13 + 5) % 250) as VertexId).collect();
+            check_against_serial(&g, &roots);
+        }
+    }
+
+    #[test]
+    fn words_for_lanes_rounds_to_supported_widths() {
+        assert_eq!(words_for_lanes(1), 1);
+        assert_eq!(words_for_lanes(64), 1);
+        assert_eq!(words_for_lanes(65), 2);
+        assert_eq!(words_for_lanes(128), 2);
+        assert_eq!(words_for_lanes(129), 4);
+        assert_eq!(words_for_lanes(192), 4);
+        assert_eq!(words_for_lanes(256), 4);
+        assert_eq!(words_for_lanes(257), 8);
+        assert_eq!(words_for_lanes(512), 8);
+    }
+
+    #[test]
+    #[should_panic(expected = "batch width must be 1..=512")]
+    fn words_for_lanes_rejects_past_max() {
+        words_for_lanes(513);
+    }
+
+    #[test]
     fn duplicate_roots_are_independent_lanes() {
         let (g, _) = uniform_random(200, 5, 9);
         let r = ms_bfs(&g, &[4, 4, 17, 4]);
@@ -696,6 +1033,19 @@ mod tests {
         assert_eq!(r.dist(0), r.dist(3));
         assert_eq!(r.dist(0), &serial_bfs(&g, 4)[..]);
         assert_eq!(r.dist(2), &serial_bfs(&g, 17)[..]);
+    }
+
+    #[test]
+    fn wide_duplicate_roots_collapse_to_one_traversal() {
+        // 300 identical roots (5 words worth of lanes → W = 8): every
+        // lane's distances are the one traversal's distances.
+        let (g, _) = uniform_random(150, 5, 21);
+        let roots = vec![7u32; 300];
+        let r = ms_bfs(&g, &roots);
+        let want = serial_bfs(&g, 7);
+        for lane in [0usize, 63, 64, 128, 255, 299] {
+            assert_eq!(r.dist(lane), &want[..], "lane {lane}");
+        }
     }
 
     #[test]
@@ -729,12 +1079,14 @@ mod tests {
             b.add_edge(0, v);
         }
         let (g, _) = b.build_undirected();
-        let roots = sample_batch_roots(&g, 64, 5);
-        assert_eq!(roots.len(), 64);
-        // The graph has edges, so the fallback scan guarantees every
-        // sampled root is non-isolated.
-        let connected = roots.iter().filter(|&&r| g.degree(r) > 0).count();
-        assert_eq!(connected, roots.len());
+        for width in [64usize, 512] {
+            let roots = sample_batch_roots(&g, width, 5);
+            assert_eq!(roots.len(), width);
+            // The graph has edges, so the fallback scan guarantees every
+            // sampled root is non-isolated.
+            let connected = roots.iter().filter(|&&r| g.degree(r) > 0).count();
+            assert_eq!(connected, roots.len());
+        }
     }
 
     #[test]
@@ -742,26 +1094,101 @@ mod tests {
         // Pooled session reuse depends on `reset` restoring the exact
         // fresh-state invariants — including the private level stamps,
         // which `swap_level` deliberately leaves behind.
-        let mut st = MsBfsNodeState::new(60, 4);
+        let mut st = MsBfsNodeState::<1>::new(60, 4);
         for v in 0..20u32 {
-            st.discover(v, 0b1011, 0, v % 2 == 0);
+            st.discover(v, &[0b1011], 0, v % 2 == 0);
         }
         st.edges_this_level = 9;
         st.swap_level();
-        st.discover(30, 0b1, 1, true);
+        st.discover(30, &[0b1], 1, true);
         st.reset(7);
-        let fresh = MsBfsNodeState::new(60, 7);
+        let fresh = MsBfsNodeState::<1>::new(60, 7);
         assert_eq!(st.seen, fresh.seen);
         assert_eq!(st.dist, fresh.dist);
         assert_eq!(st.visit, fresh.visit);
         assert_eq!(st.next_mask, fresh.next_mask);
         assert_eq!(st.delta_stamp, fresh.delta_stamp);
+        assert_eq!(st.delta_word_stamp, fresh.delta_word_stamp);
         assert!(st.q_local.is_empty() && st.q_local_next.is_empty());
         assert!(st.delta.is_empty());
         assert_eq!(st.edges_this_level, 0);
         assert_eq!(st.delta_distinct, 0);
-        assert_eq!(st.active_lanes, 0);
+        assert_eq!(st.active_lanes, [0]);
         assert!(st.mask_values.is_empty());
+        assert_eq!((st.word_entries, st.word_vertices, st.group_words), ([0], [0], 0));
+    }
+
+    #[test]
+    fn word_sparse_statistics_track_nonzero_words() {
+        let mut st = MsBfsNodeState::<4>::new(30, 256);
+        let lo = crate::bfs::frontier::lane_bit::<4>(3);
+        let hi = crate::bfs::frontier::lane_bit::<4>(200);
+        let mut both = lo;
+        both[3] |= hi[3];
+        // Entry 1: one nonzero word; entry 2 (same vertex, other word):
+        // one more (vertex, word) cell; entry 3: a two-word mask at a new
+        // vertex.
+        st.discover(5, &lo, 0, true);
+        st.discover(5, &hi, 0, true);
+        st.discover(9, &both, 0, true);
+        assert_eq!(st.delta_distinct, 2);
+        assert_eq!(st.word_entries, [2, 0, 0, 2], "per-cohort entry counts");
+        assert_eq!(
+            st.word_vertices,
+            [2, 0, 0, 2],
+            "cells (5,w0) (5,w3) (9,w0) (9,w3)"
+        );
+        assert_eq!(st.mask_values.len(), 3);
+        assert_eq!(st.group_words, 4, "1 + 1 + 2 over distinct whole masks");
+        // A repeated whole-mask value adds entry cells but no group words.
+        st.discover(11, &lo, 0, true);
+        assert_eq!(st.word_entries, [3, 0, 0, 2]);
+        assert_eq!(st.group_words, 4);
+        assert_eq!(st.word_vertices, [3, 0, 0, 2]);
+    }
+
+    #[test]
+    fn cohort_factored_pricing_never_beats_whole_but_bounds_chunked() {
+        // A node whose delta holds two independent cohorts prices no
+        // worse than the two single-word messages a chunked execution
+        // would ship; a coalesced cross-cohort mask prices strictly
+        // better than the factored form.
+        let mut st = MsBfsNodeState::<2>::new(1000, 128);
+        for v in 0..50u32 {
+            let mut m = [0u64; 2];
+            m[(v % 2) as usize] = 0b11;
+            st.discover(v, &m, 0, true);
+        }
+        let factored = st.delta_payload_bytes(st.delta.len());
+        // Each cohort: 25 entries, 1 distinct mask → grouped 12 + 100.
+        assert_eq!(factored, 2 * (12 + 100));
+        // Coalesced: every vertex gains the same two-word mask.
+        let mut co = MsBfsNodeState::<2>::new(1000, 128);
+        let m = [0b11u64, 0b11u64];
+        for v in 0..50u32 {
+            co.discover(v, &m, 0, true);
+        }
+        // Whole-mask grouped: one (5 + 16)-byte header + 4·50 vertex ids,
+        // beating the factored 2 × (12 + 100).
+        assert_eq!(co.delta_payload_bytes(co.delta.len()), 5 + 16 + 200);
+    }
+
+    #[test]
+    fn wide_node_state_discover_and_reset() {
+        let mut st = MsBfsNodeState::<4>::new(50, 200);
+        // Lane 150 lives in word 2; discovering it twice filters to once.
+        let m = crate::bfs::frontier::lane_bit::<4>(150);
+        assert!(st.discover(9, &m, 0, true));
+        assert!(!st.discover(9, &m, 0, true), "already seen");
+        assert_eq!(st.dist[150 * 50 + 9], 1);
+        assert_eq!(st.delta.len(), 1);
+        assert_eq!(st.active_lanes, m);
+        assert_eq!(st.q_local_next, vec![9]);
+        st.reset(130);
+        let fresh = MsBfsNodeState::<4>::new(50, 130);
+        assert_eq!(st.seen, fresh.seen);
+        assert_eq!(st.dist, fresh.dist);
+        assert_eq!(st.active_lanes, [0; 4]);
     }
 
     #[test]
@@ -773,20 +1200,91 @@ mod tests {
     }
 
     #[test]
+    fn full_lane_mask_widths() {
+        assert_eq!(full_lane_mask::<1>(5), [0b11111]);
+        assert_eq!(full_lane_mask::<2>(64), [u64::MAX, 0]);
+        assert_eq!(full_lane_mask::<2>(65), [u64::MAX, 1]);
+        assert_eq!(full_lane_mask::<4>(200), [u64::MAX, u64::MAX, u64::MAX, 0xFF]);
+        assert_eq!(full_lane_mask::<8>(512), [u64::MAX; 8]);
+    }
+
+    /// Convenience: stats with the `W = 1` identities filled in from the
+    /// counts (one nonzero word per nonzero mask) unless overridden.
+    fn stats(e: u64, dv: u64, dm: u64, al: u32) -> MaskDeltaStats {
+        MaskDeltaStats {
+            entries: e,
+            distinct_vertices: dv,
+            distinct_masks: dm,
+            active_lanes: al,
+            active_words: 1,
+            entry_words: e,
+            vertex_words: dv,
+            group_words: dm,
+        }
+    }
+
+    #[test]
     fn dense_pricing_is_the_dense_arms_of_the_negotiation() {
         // 640 vertices => presence bitmap = 80 bytes.
-        assert_eq!(mask_delta_bytes_dense(0, 5, 640), 0);
-        // Arm 3: presence + 8·distinct; arm 4: (1+lanes)·presence.
-        assert_eq!(mask_delta_bytes_dense(10, 63, 640), 80 + 80);
-        assert_eq!(mask_delta_bytes_dense(500, 1, 640), 2 * 80);
+        assert_eq!(mask_delta_bytes_dense(0, 0, 0, 640), 0);
+        // Arm 3: active_words·presence + 8·cells; arm 4: (1+lanes)·presence.
+        assert_eq!(mask_delta_bytes_dense(10, 1, 63, 640), 80 + 80);
+        assert_eq!(mask_delta_bytes_dense(500, 1, 1, 640), 2 * 80);
+        // Wide: one presence bitmap per active 64-lane cohort — idle
+        // provisioned words cost nothing.
+        assert_eq!(mask_delta_bytes_dense(25, 4, 255, 640), 4 * 80 + 200);
+        assert_eq!(mask_delta_bytes_dense(500, 8, 1, 640), 2 * 80);
         // The dense forms are always an upper bound on the full
         // negotiation (which may also pick a sparse arm).
-        for (e, dv, dm, al) in [(5u64, 5u64, 2u64, 7u32), (300, 200, 40, 64)] {
-            assert!(
-                mask_delta_bytes(e, dv, dm, al, 640)
-                    <= mask_delta_bytes_dense(dv, al, 640)
-            );
+        for words in [1usize, 2, 4, 8] {
+            for (e, dv, dm, al) in [(5u64, 5u64, 2u64, 7u32), (300, 200, 40, 64)] {
+                assert!(
+                    mask_delta_bytes(&stats(e, dv, dm, al), 640, words)
+                        <= mask_delta_bytes_dense(dv, 1, al, 640)
+                );
+            }
         }
+    }
+
+    #[test]
+    fn mask_delta_bytes_reprices_every_arm_for_width() {
+        // Pin each arm at a width where it wins.
+        // Sparse, W = 2: 4-byte id + word byte + one nonzero word each.
+        assert_eq!(mask_delta_bytes(&stats(3, 3, 3, 100), 10_000, 2), 3 * (5 + 8));
+        // Sparse, W = 2, both words nonzero per entry (and per distinct
+        // mask, so the grouped arm pays the same word cost).
+        let two_words = MaskDeltaStats {
+            active_words: 2,
+            entry_words: 6,
+            group_words: 6,
+            ..stats(3, 3, 3, 100)
+        };
+        assert_eq!(mask_delta_bytes(&two_words, 10_000, 2), 3 * 5 + 48);
+        // Grouped: many entries, one mask value (W = 8 word-sparse header
+        // with 8 nonzero words = 5 + 64 B).
+        let grouped = MaskDeltaStats {
+            active_words: 8,
+            group_words: 8,
+            ..stats(100, 100, 1, 512)
+        };
+        assert_eq!(mask_delta_bytes(&grouped, 1 << 20, 8), 5 + 64 + 400);
+        // Per-word presence + packed masks: 2 active cohorts at 640
+        // vertices, 8 cells.
+        let presence = (640u64).div_ceil(64) * 8;
+        let dense = MaskDeltaStats {
+            active_words: 2,
+            vertex_words: 8,
+            ..stats(600, 2, 600, 512)
+        };
+        assert_eq!(mask_delta_bytes(&dense, 640, 4), 2 * presence + 64);
+        // Lane bitmaps: one active lane in a wide batch still prices at
+        // two bitmaps (width-independent arm).
+        assert_eq!(mask_delta_bytes(&stats(600, 600, 600, 1), 640, 8), 2 * presence);
+        // W = 1 is exactly the legacy pricing (12·dm + 4·e grouped arm).
+        assert_eq!(
+            mask_delta_bytes(&stats(10, 8, 3, 7), 640, 1),
+            (3 * 12 + 10 * 4).min(120)
+        );
     }
 
     #[test]
@@ -802,6 +1300,29 @@ mod tests {
             let r = ms_bfs_dir(&g, &roots, dir);
             for lane in 0..roots.len() {
                 assert_eq!(r.result.dist(lane), want.dist(lane), "{dir:?} lane {lane}");
+            }
+        }
+    }
+
+    #[test]
+    fn ms_bfs_dir_wide_batches_match_serial() {
+        let (g, _) = uniform_random(200, 6, 31);
+        for width in [96usize, 140, 300] {
+            let roots: Vec<VertexId> =
+                (0..width).map(|i| ((i * 11 + 1) % 200) as VertexId).collect();
+            for dir in [
+                MsBfsDirection::TopDown,
+                MsBfsDirection::BottomUp,
+                MsBfsDirection::DirOpt(DirOptParams::default()),
+            ] {
+                let r = ms_bfs_dir(&g, &roots, dir);
+                for (lane, &root) in roots.iter().enumerate() {
+                    assert_eq!(
+                        r.result.dist(lane),
+                        &serial_bfs(&g, root)[..],
+                        "{dir:?} width {width} lane {lane}"
+                    );
+                }
             }
         }
     }
@@ -845,14 +1366,14 @@ mod tests {
 
     #[test]
     fn node_state_full_frontier_tracking() {
-        let mut st = MsBfsNodeState::new(40, 8);
+        let mut st = MsBfsNodeState::<1>::new(40, 8);
         st.set_full_tracking(true);
-        st.seed_full_frontier(3, 0b1);
-        st.seed_full_frontier(3, 0b10);
+        st.seed_full_frontier(3, &[0b1]);
+        st.seed_full_frontier(3, &[0b10]);
         assert_eq!(st.full_frontier()[3], 0b11);
         // A level's post-exchange delta becomes the next full frontier.
-        st.discover(7, 0b101, 0, true);
-        st.discover(9, 0b1, 0, false);
+        st.discover(7, &[0b101], 0, true);
+        st.discover(9, &[0b1], 0, false);
         st.swap_level();
         assert_eq!(st.full_frontier()[3], 0, "previous frontier cleared");
         assert_eq!(st.full_frontier()[7], 0b101);
@@ -860,6 +1381,19 @@ mod tests {
         // Reset restores the all-zero frontier without reallocating.
         st.reset(8);
         assert!(st.full_frontier().iter().all(|&m| m == 0));
+    }
+
+    #[test]
+    fn wide_node_state_full_frontier_tracking() {
+        let mut st = MsBfsNodeState::<2>::new(20, 100);
+        st.set_full_tracking(true);
+        let hi = crate::bfs::frontier::lane_bit::<2>(99);
+        st.seed_full_frontier(3, &hi);
+        assert_eq!(st.full_frontier()[3 * 2 + 1], 1 << 35);
+        st.discover(7, &hi, 0, true);
+        st.swap_level();
+        assert_eq!(st.full_frontier()[3 * 2 + 1], 0, "previous frontier cleared");
+        assert_eq!(st.full_frontier()[7 * 2 + 1], 1 << 35);
     }
 
     #[test]
@@ -892,7 +1426,9 @@ mod tests {
         forall(Config::cases(20), "ms_bfs == serial per lane", |rng| {
             let n = gen::usize_in(rng, 5, 300);
             let ef = gen::usize_in(rng, 1, 6) as u32;
-            let b = gen::usize_in(rng, 1, 64);
+            // Bias toward single-word widths but cross the word boundary
+            // regularly.
+            let b = gen::usize_in(rng, 1, 150);
             let (g, _) = uniform_random(n, ef, rng.next_u64());
             let roots: Vec<VertexId> =
                 (0..b).map(|_| rng.next_usize(n) as VertexId).collect();

@@ -11,6 +11,7 @@
 
 use crate::bfs::frontier::Bitmap;
 use crate::bfs::lrb::bin_frontier;
+use crate::bfs::msbfs::MAX_LANE_WORDS;
 use crate::graph::csr::{CsrSlab, VertexId};
 
 /// Output of one node's Phase-1 expansion.
@@ -25,12 +26,18 @@ pub struct ExpandOutput {
 
 /// Output of one node's *batched* (MS-BFS) Phase-1 bottom-up expansion:
 /// every owned vertex that gained lanes, with exactly the newly-gained
-/// lane mask (already filtered against the node's `seen` masks).
+/// lane mask (already filtered against the node's `seen` masks). The
+/// masks are width-agnostic: `masks` holds `words` 64-bit words per
+/// discovered vertex, parallel to `discovered` (`masks[i·words..]` is
+/// entry `i`'s mask), so one trait signature serves every monomorphized
+/// lane width.
 #[derive(Clone, Debug, Default)]
 pub struct BatchExpandOutput {
-    /// `(vertex, new-lane-mask)` discoveries, ascending by vertex (the
-    /// owned-range scan order). Masks are nonzero.
-    pub discovered: Vec<(VertexId, u64)>,
+    /// Discovered vertices, ascending (the owned-range scan order).
+    pub discovered: Vec<VertexId>,
+    /// `words` mask words per discovered vertex, parallel to
+    /// `discovered`; each entry's mask is nonzero.
+    pub masks: Vec<u64>,
     /// Edges (neighbor probes) examined, counting the bottom-up early
     /// exit — the quantity the direction heuristic is trying to shrink.
     pub edges_examined: u64,
@@ -73,14 +80,18 @@ pub trait ComputeBackend: Send {
         true
     }
 
-    /// Batched (MS-BFS) bottom-up step: scan this node's owned vertices
-    /// whose `seen` mask is not yet `full_mask` and accumulate
-    /// `new = !seen[v] & (visit_full[u₀] | visit_full[u₁] | …)` over the
-    /// slab's neighbors, early-exiting once every missing lane found a
-    /// parent. `visit_full` is the complete previous-level frontier as
-    /// per-vertex lane masks — every node holds it after the exchange
-    /// (the batched analog of `frontier_full`). Discoveries go into `out`
-    /// only; the session routes them through `MsBfsNodeState::discover`.
+    /// Batched (MS-BFS) bottom-up step over `full_mask.len()`-word lane
+    /// masks: scan this node's owned vertices whose `seen` mask is not
+    /// yet `full_mask` and accumulate
+    /// `new = !seen[v] & (visit_full[u₀] | visit_full[u₁] | …)` word-wise
+    /// over the slab's neighbors, early-exiting once every missing lane
+    /// (across all words) found a parent. `visit_full` and `seen` are
+    /// flat vertex-major word arrays (`W` words per vertex, `W =
+    /// full_mask.len() <= `[`MAX_LANE_WORDS`]) — the complete
+    /// previous-level frontier as per-vertex lane masks, which every node
+    /// holds after the exchange (the batched analog of `frontier_full`).
+    /// Discoveries go into `out` only; the session routes them through
+    /// `MsBfsNodeState::discover`.
     ///
     /// Only called when [`ComputeBackend::supports_bottom_up_batch`]
     /// returns true — the default body panics so an unprobed call is loud.
@@ -89,7 +100,7 @@ pub trait ComputeBackend: Send {
         slab: &CsrSlab,
         visit_full: &[u64],
         seen: &[u64],
-        full_mask: u64,
+        full_mask: &[u64],
         out: &mut BatchExpandOutput,
     ) {
         let _ = (slab, visit_full, seen, full_mask, out);
@@ -196,29 +207,50 @@ impl ComputeBackend for NativeCsr {
         slab: &CsrSlab,
         visit_full: &[u64],
         seen: &[u64],
-        full_mask: u64,
+        full_mask: &[u64],
         out: &mut BatchExpandOutput,
     ) {
+        let w = full_mask.len();
+        debug_assert!(w >= 1 && w <= MAX_LANE_WORDS);
         out.discovered.clear();
+        out.masks.clear();
         out.edges_examined = 0;
+        let mut missing = [0u64; MAX_LANE_WORDS];
+        let mut acc = [0u64; MAX_LANE_WORDS];
         for v in slab.first_vertex..slab.end_vertex() {
-            let missing = full_mask & !seen[v as usize];
-            if missing == 0 {
+            let base = v as usize * w;
+            let mut miss_any = 0u64;
+            for k in 0..w {
+                missing[k] = full_mask[k] & !seen[base + k];
+                miss_any |= missing[k];
+            }
+            if miss_any == 0 {
                 continue;
             }
-            let mut acc = 0u64;
+            acc[..w].iter_mut().for_each(|x| *x = 0);
             for &u in slab.neighbors_global(v) {
                 out.edges_examined += 1;
-                acc |= visit_full[u as usize];
-                if acc & missing == missing {
-                    // Every still-missing lane found a parent — the
-                    // lane-mask generalization of first-parent-wins.
+                let ubase = u as usize * w;
+                let mut covered = true;
+                for k in 0..w {
+                    acc[k] |= visit_full[ubase + k];
+                    covered &= acc[k] & missing[k] == missing[k];
+                }
+                if covered {
+                    // Every still-missing lane (in every word) found a
+                    // parent — the lane-mask generalization of
+                    // first-parent-wins.
                     break;
                 }
             }
-            let d = acc & missing;
-            if d != 0 {
-                out.discovered.push((v, d));
+            let mut d_any = 0u64;
+            for k in 0..w {
+                missing[k] &= acc[k];
+                d_any |= missing[k];
+            }
+            if d_any != 0 {
+                out.discovered.push(v);
+                out.masks.extend_from_slice(&missing[..w]);
             }
         }
     }
@@ -272,72 +304,92 @@ mod tests {
         assert_eq!(e1, e2);
     }
 
-    #[test]
-    fn batch_bottom_up_matches_manual_accumulation() {
+    /// Generic checker for the batched bottom-up kernel at `words` lane
+    /// words: every discovery is an owned vertex gaining exactly its
+    /// neighbors' frontier lanes minus what it had seen, early exit can
+    /// only truncate once all missing lanes are covered, and no owned
+    /// unseen vertex with a frontier neighbor is skipped.
+    fn check_batch_bottom_up(words: usize) {
         let (g, _) = uniform_random(200, 6, 33);
         let slab = g.row_slice(50, 150);
-        let full = 0b1111u64;
-        // A synthetic frontier: every third vertex carries some lanes.
-        let mut visit_full = vec![0u64; 200];
-        for v in (0..200).step_by(3) {
-            visit_full[v] = 1 << (v % 4);
+        let lanes = words * 64;
+        let mut full = vec![u64::MAX; words];
+        if words == 1 {
+            full[0] = 0b1111; // the original 4-lane case
+        }
+        // A synthetic frontier: every third vertex carries one lane
+        // (striped across all words so every word is exercised).
+        let mut visit_full = vec![0u64; 200 * words];
+        for v in (0..200usize).step_by(3) {
+            let lane = (v * 7) % lanes;
+            visit_full[v * words + lane / 64] |= 1 << (lane % 64);
         }
         // Partially-seen owned range: vertex 60 already has lane 0.
-        let mut seen = vec![0u64; 200];
-        seen[60] = 0b1;
+        let mut seen = vec![0u64; 200 * words];
+        seen[60 * words] = 0b1;
         let mut out = BatchExpandOutput::default();
         NativeCsr::new(false).expand_bottom_up_batch(
             &slab,
             &visit_full,
             &seen,
-            full,
+            &full,
             &mut out,
         );
         assert!(NativeCsr::new(false).supports_bottom_up_batch());
-        // Every discovery must be an owned vertex gaining exactly the
-        // union of its neighbors' frontier lanes, minus what it had seen.
-        for &(v, d) in &out.discovered {
+        assert_eq!(out.masks.len(), out.discovered.len() * words);
+        for (i, &v) in out.discovered.iter().enumerate() {
             assert!(slab.owns(v));
-            let acc: u64 = g
-                .neighbors(v)
-                .iter()
-                .map(|&u| visit_full[u as usize])
-                .fold(0, |a, m| a | m);
-            // The early exit may stop before the full union, but never
-            // before all missing lanes are covered or the list ends —
-            // so d is the full filtered union whenever it is nonzero.
-            assert_eq!(d & !(full & !seen[v as usize]), 0, "v={v} leaked lanes");
-            assert!(d <= acc, "v={v}");
-            let missing = full & !seen[v as usize];
-            if acc & missing == missing {
-                assert_eq!(d, missing, "v={v} early exit must cover all");
+            let d = &out.masks[i * words..(i + 1) * words];
+            assert!(d.iter().any(|&x| x != 0), "v={v} zero mask recorded");
+            // Accumulate the full neighbor union for comparison.
+            let mut acc = vec![0u64; words];
+            for &u in g.neighbors(v) {
+                for k in 0..words {
+                    acc[k] |= visit_full[u as usize * words + k];
+                }
+            }
+            let vb = v as usize * words;
+            for k in 0..words {
+                let missing = full[k] & !seen[vb + k];
+                assert_eq!(d[k] & !missing, 0, "v={v} word {k} leaked lanes");
+                assert_eq!(d[k] & !acc[k], 0, "v={v} word {k} invented lanes");
+                // Early exit can only truncate acc when missing is fully
+                // covered, in which case d == missing in every word.
+                if (0..words).all(|j| {
+                    let mj = full[j] & !seen[vb + j];
+                    acc[j] & mj == mj
+                }) {
+                    assert_eq!(d[k], missing, "v={v} word {k} early exit must cover all");
+                }
             }
         }
         // Completeness: any owned unseen vertex with a frontier neighbor
         // must appear.
         for v in 50..150u32 {
-            let missing = full & !seen[v as usize];
-            let acc: u64 = g
-                .neighbors(v)
-                .iter()
-                .map(|&u| visit_full[u as usize])
-                .fold(0, |a, m| a | m);
-            let want = acc & missing;
-            let got = out
-                .discovered
-                .iter()
-                .find(|&&(x, _)| x == v)
-                .map(|&(_, d)| d)
-                .unwrap_or(0);
-            // Early exit can only *truncate* acc when missing is already
-            // covered, in which case got == missing == want.
-            if want != 0 {
-                assert!(got != 0, "v={v} missing discovery");
-            } else {
-                assert_eq!(got, 0, "v={v} spurious discovery");
+            let vb = v as usize * words;
+            let mut want_any = 0u64;
+            for &u in g.neighbors(v) {
+                for k in 0..words {
+                    want_any |=
+                        visit_full[u as usize * words + k] & full[k] & !seen[vb + k];
+                }
             }
+            let got = out.discovered.iter().any(|&x| x == v);
+            assert_eq!(got, want_any != 0, "v={v} words={words}");
         }
         assert!(out.edges_examined > 0);
+    }
+
+    #[test]
+    fn batch_bottom_up_matches_manual_accumulation() {
+        check_batch_bottom_up(1);
+    }
+
+    #[test]
+    fn batch_bottom_up_wide_words() {
+        for words in [2usize, 4, 8] {
+            check_batch_bottom_up(words);
+        }
     }
 
     #[test]

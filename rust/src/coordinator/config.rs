@@ -39,6 +39,81 @@ impl PatternKind {
     }
 }
 
+/// Provisioned lane width of batched (MS-BFS) queries — how many 64-bit
+/// mask words the engine monomorphizes
+/// [`run_batch`](crate::coordinator::session::QuerySession::run_batch)
+/// over, and therefore how many roots one butterfly exchange serves.
+///
+/// The width is a *floor*: a batch wider than the provisioned lanes
+/// automatically widens to the smallest supported width that fits (up to
+/// [`MAX_LANES`](crate::bfs::msbfs::MAX_LANES) = 512 roots), so the knob
+/// matters for (a) pre-sizing pooled lane state and (b) pinning the wire
+/// format — an experiment comparing chunked 64-root batches against one
+/// wide batch can price both at the same per-entry cost by fixing the
+/// width. Default [`BatchWidth::W64`] keeps the classic single-word
+/// MS-BFS wire format (12-byte entries) for every batch of at most 64
+/// roots.
+#[derive(Clone, Copy, Debug, Default, PartialEq, Eq)]
+pub enum BatchWidth {
+    /// One mask word: up to 64 lanes, 12-byte delta entries.
+    #[default]
+    W64,
+    /// Two mask words: up to 128 lanes, 20-byte delta entries.
+    W128,
+    /// Four mask words: up to 256 lanes, 36-byte delta entries.
+    W256,
+    /// Eight mask words: up to 512 lanes, 68-byte delta entries.
+    W512,
+}
+
+impl BatchWidth {
+    /// Mask words this width provisions (1, 2, 4 or 8).
+    pub fn words(&self) -> usize {
+        match self {
+            BatchWidth::W64 => 1,
+            BatchWidth::W128 => 2,
+            BatchWidth::W256 => 4,
+            BatchWidth::W512 => 8,
+        }
+    }
+
+    /// Lanes this width provisions (`64 · words`).
+    pub fn lanes(&self) -> usize {
+        self.words() * 64
+    }
+
+    /// Wire cost of one `(vertex, mask)` delta entry at this width
+    /// (`4 + 8 · words` bytes).
+    pub fn entry_bytes(&self) -> u64 {
+        4 + 8 * self.words() as u64
+    }
+
+    /// Smallest width whose lane capacity covers `lanes` roots.
+    ///
+    /// # Panics
+    ///
+    /// When `lanes` is zero or exceeds
+    /// [`MAX_LANES`](crate::bfs::msbfs::MAX_LANES).
+    pub fn for_lanes(lanes: usize) -> Self {
+        match crate::bfs::msbfs::words_for_lanes(lanes) {
+            1 => BatchWidth::W64,
+            2 => BatchWidth::W128,
+            4 => BatchWidth::W256,
+            _ => BatchWidth::W512,
+        }
+    }
+
+    /// Display name (`"64"` / `"128"` / `"256"` / `"512"`).
+    pub fn name(&self) -> &'static str {
+        match self {
+            BatchWidth::W64 => "64",
+            BatchWidth::W128 => "128",
+            BatchWidth::W256 => "256",
+            BatchWidth::W512 => "512",
+        }
+    }
+}
+
 /// How frontier payloads are encoded on the wire.
 #[derive(Clone, Copy, Debug, PartialEq, Eq)]
 pub enum PayloadEncoding {
@@ -51,13 +126,14 @@ pub enum PayloadEncoding {
     /// Per-message minimum of the two (what a production system would
     /// negotiate); still bounded by the bitmap size.
     Auto,
-    /// Batched MS-BFS deltas: sparse `(vertex, 64-bit lane mask)` pairs at
-    /// `12·|entries|` bytes ([`MaskFrontier::ENTRY_BYTES`]), bounded by
-    /// the dense per-vertex mask array `8·V` (the negotiated fallback when
-    /// the delta list outgrows it). One message serves up to 64 concurrent
-    /// traversals — this is what `run_batch`'s exchange ships.
-    ///
-    /// [`MaskFrontier::ENTRY_BYTES`]: crate::bfs::frontier::MaskFrontier::ENTRY_BYTES
+    /// Batched MS-BFS deltas at the single-word width: sparse
+    /// `(vertex, 64-bit lane mask)` pairs at `12·|entries|` bytes
+    /// (`MaskFrontier::<1>::ENTRY_BYTES`), bounded by the dense
+    /// per-vertex mask array `8·V` (the negotiated fallback when the
+    /// delta list outgrows it). One message serves up to 64 concurrent
+    /// traversals; wider batches are priced by the width-aware negotiated
+    /// encoding ([`mask_delta_bytes`](crate::bfs::msbfs::mask_delta_bytes))
+    /// inside `run_batch` regardless of this setting.
     MaskDelta,
 }
 
@@ -73,7 +149,7 @@ impl PayloadEncoding {
             PayloadEncoding::Bitmap => b,
             PayloadEncoding::Auto => q.min(b),
             PayloadEncoding::MaskDelta => {
-                (queue_len * crate::bfs::frontier::MaskFrontier::ENTRY_BYTES)
+                (queue_len * crate::bfs::frontier::MaskFrontier::<1>::ENTRY_BYTES)
                     .min(num_vertices as u64 * 8)
             }
         }
@@ -149,6 +225,8 @@ pub struct EngineConfig {
     pub pattern: PatternKind,
     /// Payload encoding.
     pub payload: PayloadEncoding,
+    /// Provisioned lane width of batched queries (see [`BatchWidth`]).
+    pub batch_width: BatchWidth,
     /// Use LRB binning in Phase 1.
     pub use_lrb: bool,
     /// Phase-1 direction policy.
@@ -175,6 +253,7 @@ impl EngineConfig {
             partition: PartitionMode::OneD,
             pattern: PatternKind::Butterfly { fanout },
             payload: PayloadEncoding::Auto,
+            batch_width: BatchWidth::W64,
             use_lrb: true,
             direction: DirectionMode::TopDown,
             parallel_phase1: false,
@@ -217,9 +296,31 @@ mod tests {
     }
 
     #[test]
+    fn batch_width_knob() {
+        assert_eq!(BatchWidth::default(), BatchWidth::W64);
+        for (w, words, lanes, entry) in [
+            (BatchWidth::W64, 1usize, 64usize, 12u64),
+            (BatchWidth::W128, 2, 128, 20),
+            (BatchWidth::W256, 4, 256, 36),
+            (BatchWidth::W512, 8, 512, 68),
+        ] {
+            assert_eq!(w.words(), words);
+            assert_eq!(w.lanes(), lanes);
+            assert_eq!(w.entry_bytes(), entry);
+            assert_eq!(BatchWidth::for_lanes(lanes), w);
+        }
+        assert_eq!(BatchWidth::for_lanes(1), BatchWidth::W64);
+        assert_eq!(BatchWidth::for_lanes(65), BatchWidth::W128);
+        assert_eq!(BatchWidth::for_lanes(129), BatchWidth::W256);
+        assert_eq!(BatchWidth::for_lanes(257), BatchWidth::W512);
+        assert_eq!(BatchWidth::W256.name(), "256");
+    }
+
+    #[test]
     fn dgx2_preset() {
         let c = EngineConfig::dgx2(16, 4);
         assert_eq!(c.num_nodes, 16);
+        assert_eq!(c.batch_width, BatchWidth::W64);
         assert_eq!(c.partition, PartitionMode::OneD);
         assert!(matches!(c.pattern, PatternKind::Butterfly { fanout: 4 }));
         assert_eq!(c.net.name, "dgx2-nvswitch");

@@ -104,7 +104,7 @@ impl ButterflyBfs {
             .expect("root out of range")
     }
 
-    /// Run a batched multi-source BFS (up to 64 roots); returns metrics.
+    /// Run a batched multi-source BFS (up to 512 roots); returns metrics.
     /// Per-lane distances are afterwards available via
     /// [`Self::batch_dist`].
     ///

@@ -243,6 +243,10 @@ pub struct SequentialBaseline {
 pub struct BatchMetrics {
     /// Batch width (lanes).
     pub num_roots: usize,
+    /// Lane-mask words (`W`) the batch was monomorphized over — the
+    /// per-width byte accounting key: delta entries cost `4 + 8·W` bytes
+    /// on the wire, and one exchange serves up to `64·W` roots.
+    pub lane_words: usize,
     /// Per-level breakdown (shared by all lanes).
     pub levels: Vec<LevelMetrics>,
     /// Total synchronization rounds executed: schedule depth × levels —
@@ -260,6 +264,19 @@ impl BatchMetrics {
     /// Simulated end-to-end device time: Σ levels (compute + comm).
     pub fn sim_seconds(&self) -> f64 {
         self.levels.iter().map(|l| l.sim_compute + l.sim_comm).sum()
+    }
+
+    /// Lane capacity one exchange served: `64 · lane_words`. The
+    /// amortization headline — sync rounds per level are width-invariant,
+    /// so widening the mask divides rounds-per-root by this.
+    pub fn lanes_per_exchange(&self) -> usize {
+        64 * self.lane_words
+    }
+
+    /// Wire cost of one sparse delta entry at this batch's width
+    /// (`4 + 8·lane_words` bytes).
+    pub fn entry_bytes(&self) -> u64 {
+        4 + 8 * self.lane_words as u64
     }
 
     /// Total edges examined (each edge expansion serves every active lane
@@ -335,6 +352,8 @@ impl BatchMetrics {
     pub fn to_json(&self) -> Json {
         Json::obj(vec![
             ("num_roots", Json::u(self.num_roots as u64)),
+            ("lane_words", Json::u(self.lane_words as u64)),
+            ("lanes_per_exchange", Json::u(self.lanes_per_exchange() as u64)),
             ("wall_seconds", Json::n(self.wall_seconds)),
             ("sim_seconds", Json::n(self.sim_seconds())),
             ("depth", Json::u(self.depth() as u64)),
@@ -418,6 +437,7 @@ mod tests {
     fn batch_metrics_aggregation_and_json() {
         let mut b = BatchMetrics {
             num_roots: 64,
+            lane_words: 1,
             graph_edges: 1000,
             ..Default::default()
         };
@@ -448,8 +468,15 @@ mod tests {
         assert!((b.sim_seconds_per_root() - 0.003 / 64.0).abs() < 1e-15);
         assert_eq!(b.fold_messages() + b.expand_messages(), b.messages());
         assert_eq!(b.fold_bytes() + b.expand_bytes(), b.bytes());
+        assert_eq!(b.lanes_per_exchange(), 64);
+        assert_eq!(b.entry_bytes(), 12);
+        let wide = BatchMetrics { num_roots: 256, lane_words: 4, ..Default::default() };
+        assert_eq!(wide.lanes_per_exchange(), 256);
+        assert_eq!(wide.entry_bytes(), 36);
         let s = b.to_json().render();
         assert!(s.contains("\"num_roots\":64"));
+        assert!(s.contains("\"lane_words\":1"));
+        assert!(s.contains("\"lanes_per_exchange\":64"));
         assert!(s.contains("\"sync_rounds\":4"));
         assert!(s.contains("\"bottom_up_levels\":1"));
         assert!(s.contains("\"bottom_up_edges\":100"));

@@ -17,15 +17,17 @@ pub mod engine;
 pub mod metrics;
 pub mod node;
 pub mod plan;
+pub mod pool;
 pub mod session;
 
 pub use backend::{ComputeBackend, ExpandOutput, NativeCsr};
 pub use config::{
-    DirectionMode, EngineConfig, PartitionMode, PatternKind, PayloadEncoding,
+    BatchWidth, DirectionMode, EngineConfig, PartitionMode, PatternKind, PayloadEncoding,
 };
 #[allow(deprecated)]
 pub use engine::ButterflyBfs;
 pub use metrics::{BatchMetrics, LevelMetrics, RunMetrics, SequentialBaseline};
 pub use node::ComputeNode;
 pub use plan::{PlanError, TraversalPlan};
+pub use pool::{PooledSession, SessionPool};
 pub use session::{BatchResult, QueryError, QuerySession, TraversalResult};

@@ -48,8 +48,8 @@ use super::config::{DirectionMode, EngineConfig, PartitionMode};
 use super::metrics::{BatchMetrics, LevelMetrics, RunMetrics, SequentialBaseline};
 use super::node::ComputeNode;
 use super::plan::TraversalPlan;
-use crate::bfs::frontier::MaskFrontier;
-use crate::bfs::msbfs::{full_mask, MsBfsNodeState, MAX_BATCH};
+use crate::bfs::frontier::{lane_bit, lane_mask_count, lane_mask_is_zero, LaneMask, MaskFrontier};
+use crate::bfs::msbfs::{full_lane_mask, words_for_lanes, MsBfsNodeState, MAX_LANES};
 use crate::bfs::serial::INF;
 use crate::comm::pattern::Schedule;
 use crate::graph::csr::VertexId;
@@ -71,13 +71,15 @@ pub enum QueryError {
     },
     /// `run_batch` was called with no roots.
     EmptyBatch,
-    /// `run_batch` was called with more roots than lanes. Duplicate roots
-    /// are *not* an error — each occupies its own lane — but the total
-    /// width is capped at [`MAX_BATCH`].
-    BatchTooWide {
+    /// `run_batch` was called with more roots than the widest supported
+    /// lane mask holds. Duplicate roots are *not* an error — each
+    /// occupies its own lane — and a batch wider than the configured
+    /// [`BatchWidth`](super::config::BatchWidth) automatically widens,
+    /// so the only hard cap is [`MAX_LANES`] (512).
+    WidthTooLarge {
         /// Requested batch width.
         got: usize,
-        /// The lane limit ([`MAX_BATCH`]).
+        /// The lane limit ([`MAX_LANES`]).
         max: usize,
     },
 }
@@ -89,7 +91,7 @@ impl std::fmt::Display for QueryError {
                 write!(f, "root {root} out of range for a {num_vertices}-vertex graph")
             }
             QueryError::EmptyBatch => write!(f, "batch contains no roots"),
-            QueryError::BatchTooWide { got, max } => {
+            QueryError::WidthTooLarge { got, max } => {
                 write!(f, "batch of {got} roots exceeds the {max}-lane limit")
             }
         }
@@ -245,8 +247,10 @@ pub struct QuerySession {
     /// the first query that wants it (`parallel_phase1` set, more than
     /// one node), so sequential sessions never spawn threads.
     pool: Option<ThreadPool>,
-    /// Pooled per-node MS-BFS state, reset (not reallocated) per batch.
-    batch_states: Vec<MsBfsNodeState>,
+    /// Pooled per-node MS-BFS state, reset (not reallocated) per batch;
+    /// the enum variant is the lane width the last batch monomorphized
+    /// over (a width change rebuilds the states).
+    batch_lanes: BatchLanes,
     /// Per-node scratch for batched bottom-up Phase-1 steps.
     batch_scratch: Vec<BatchExpandOutput>,
     /// Per-round destination buckets of the schedule — the pooled
@@ -261,6 +265,84 @@ pub struct QuerySession {
 /// One merge plan per schedule round: for each destination that receives
 /// anything, the sources it receives from, in schedule order.
 type RoundBuckets = Vec<Vec<(usize, Vec<usize>)>>;
+
+/// Run `$body` with `$s` bound to the pooled lane-state vector of
+/// whichever width the slot currently holds — the width-erasure seam of
+/// the monomorphized batch engine. The body may only touch
+/// width-agnostic state (`dist`, lengths); width-specific work goes
+/// through [`LaneSlot`] + [`QuerySession::run_batch_w`].
+macro_rules! for_lanes {
+    ($lanes:expr, $s:ident => $body:expr) => {
+        match $lanes {
+            BatchLanes::W1($s) => $body,
+            BatchLanes::W2($s) => $body,
+            BatchLanes::W4($s) => $body,
+            BatchLanes::W8($s) => $body,
+        }
+    };
+}
+
+/// Width-erased storage for the pooled per-node MS-BFS lane states: one
+/// variant per monomorphized word count `W ∈ {1, 2, 4, 8}` (64–512
+/// lanes). `run_batch` picks the variant from the batch width and the
+/// configured [`BatchWidth`](super::config::BatchWidth) floor; reusing a
+/// session at the same width resets the states in place (allocations
+/// kept), while a width change rebuilds them.
+enum BatchLanes {
+    /// Single-word lanes (up to 64 roots).
+    W1(Vec<MsBfsNodeState<1>>),
+    /// Two-word lanes (up to 128 roots).
+    W2(Vec<MsBfsNodeState<2>>),
+    /// Four-word lanes (up to 256 roots).
+    W4(Vec<MsBfsNodeState<4>>),
+    /// Eight-word lanes (up to 512 roots).
+    W8(Vec<MsBfsNodeState<8>>),
+}
+
+impl BatchLanes {
+    /// The no-batch-yet slot (an empty single-word vector).
+    fn empty() -> Self {
+        BatchLanes::W1(Vec::new())
+    }
+
+    /// Node 0's lane-major distance array, if a batch has run.
+    fn node0_dist(&self) -> Option<&[u32]> {
+        for_lanes!(self, s => s.first().map(|st| st.dist.as_slice()))
+    }
+}
+
+/// The take/put seam between the width-erased [`BatchLanes`] slot and the
+/// monomorphized batch loop: implemented for exactly the four supported
+/// `MsBfsNodeState` widths, so `run_batch_w::<W>` can move its typed
+/// state vector out of the session, run without borrow entanglement, and
+/// store it back for pooled reuse.
+trait LaneSlot: Sized {
+    /// Move the pooled state vector out of the slot when the slot is at
+    /// this width (otherwise an empty vector — the caller rebuilds).
+    fn take(lanes: &mut BatchLanes) -> Vec<Self>;
+    /// Store the state vector back into the slot at this width.
+    fn put(lanes: &mut BatchLanes, states: Vec<Self>);
+}
+
+macro_rules! impl_lane_slot {
+    ($w:literal, $variant:ident) => {
+        impl LaneSlot for MsBfsNodeState<$w> {
+            fn take(lanes: &mut BatchLanes) -> Vec<Self> {
+                match std::mem::replace(lanes, BatchLanes::empty()) {
+                    BatchLanes::$variant(v) => v,
+                    _ => Vec::new(),
+                }
+            }
+            fn put(lanes: &mut BatchLanes, states: Vec<Self>) {
+                *lanes = BatchLanes::$variant(states);
+            }
+        }
+    };
+}
+impl_lane_slot!(1, W1);
+impl_lane_slot!(2, W2);
+impl_lane_slot!(4, W4);
+impl_lane_slot!(8, W8);
 
 /// The direction-optimizing α/β hysteresis machine — one implementation
 /// drives both the single-root and the batched level loop, so the two
@@ -361,7 +443,7 @@ impl QuerySession {
             backends,
             scratch,
             pool: None,
-            batch_states: Vec::new(),
+            batch_lanes: BatchLanes::empty(),
             batch_scratch: Vec::new(),
             pooled_buckets: None,
             batch_width: 0,
@@ -393,9 +475,11 @@ impl QuerySession {
             n.reset();
         }
         let bw = self.batch_width;
-        for st in &mut self.batch_states {
-            st.reset(bw);
-        }
+        for_lanes!(&mut self.batch_lanes, s => {
+            for st in s.iter_mut() {
+                st.reset(bw);
+            }
+        });
     }
 
     /// Spawn the persistent worker pool if this session wants one (either
@@ -427,16 +511,12 @@ impl QuerySession {
         }
     }
 
-    /// Batched analog of [`Self::frontier_len`].
-    fn batch_frontier_len(&self) -> u64 {
+    /// Batched analog of [`Self::frontier_len`] (over the monomorphized
+    /// lane states the caller holds).
+    fn batch_frontier_len<const W: usize>(&self, states: &[MsBfsNodeState<W>]) -> u64 {
         match self.config.partition {
-            PartitionMode::OneD => self
-                .batch_states
-                .iter()
-                .map(|s| s.q_local.len() as u64)
-                .sum(),
-            PartitionMode::TwoD { cols, .. } => self
-                .batch_states
+            PartitionMode::OneD => states.iter().map(|s| s.q_local.len() as u64).sum(),
+            PartitionMode::TwoD { cols, .. } => states
                 .iter()
                 .step_by(cols as usize)
                 .map(|s| s.q_local.len() as u64)
@@ -748,14 +828,21 @@ impl QuerySession {
         payloads
     }
 
-    /// Run a batched multi-source BFS: up to [`MAX_BATCH`] roots advance
-    /// in lock-step, one exchange per level serving the whole batch (the
-    /// MS-BFS bit-parallel formulation — see [`crate::bfs::msbfs`]). The
-    /// plan's schedule, partition, and slabs are reused as-is; payloads
-    /// are priced by the negotiated mask-delta encoding
-    /// ([`crate::bfs::msbfs::mask_delta_bytes`]) regardless of the
-    /// configured single-root encoding, because the exchange genuinely
-    /// ships `(vertex, lane-mask)` deltas.
+    /// Run a batched multi-source BFS: up to [`MAX_LANES`] (512) roots
+    /// advance in lock-step, one exchange per level serving the whole
+    /// batch (the MS-BFS bit-parallel formulation — see
+    /// [`crate::bfs::msbfs`]). The lane mask is a const-generic
+    /// [`LaneMask`] of `W ∈ {1, 2, 4, 8}` words: the engine monomorphizes
+    /// the whole level loop over the smallest width that fits the batch
+    /// (never below the configured
+    /// [`BatchWidth`](super::config::BatchWidth) floor), so a 64-root
+    /// batch keeps the classic 12-byte wire entries while a 256-root
+    /// batch runs four words per mask — one exchange per level either
+    /// way. The plan's schedule, partition, and slabs are reused as-is;
+    /// payloads are priced by the width-aware negotiated mask-delta
+    /// encoding ([`crate::bfs::msbfs::mask_delta_bytes`]) regardless of
+    /// the configured single-root encoding, because the exchange
+    /// genuinely ships `(vertex, lane-mask)` deltas.
     ///
     /// The returned [`BatchResult`] owns every lane's distances;
     /// [`Self::assert_batch_agreement`] checks the cross-node correctness
@@ -765,7 +852,11 @@ impl QuerySession {
         Ok(BatchResult {
             roots: roots.to_vec(),
             num_vertices: self.num_vertices,
-            dist: self.batch_states[0].dist.clone(),
+            dist: self
+                .batch_lanes
+                .node0_dist()
+                .expect("batch just ran")
+                .to_vec(),
             metrics,
         })
     }
@@ -779,12 +870,17 @@ impl QuerySession {
         self.run_batch_inner(roots)
     }
 
+    /// Validate the batch and dispatch to the monomorphized level loop:
+    /// the lane word count is the smallest of `{1, 2, 4, 8}` covering
+    /// `roots.len()`, floored by the configured
+    /// [`BatchWidth`](super::config::BatchWidth) (so experiments can pin
+    /// the wire format across batch sizes).
     fn run_batch_inner(&mut self, roots: &[VertexId]) -> Result<BatchMetrics, QueryError> {
         if roots.is_empty() {
             return Err(QueryError::EmptyBatch);
         }
-        if roots.len() > MAX_BATCH {
-            return Err(QueryError::BatchTooWide { got: roots.len(), max: MAX_BATCH });
+        if roots.len() > MAX_LANES {
+            return Err(QueryError::WidthTooLarge { got: roots.len(), max: MAX_LANES });
         }
         for &r in roots {
             if r as usize >= self.num_vertices {
@@ -794,19 +890,41 @@ impl QuerySession {
                 });
             }
         }
+        let words = self.config.batch_width.words().max(words_for_lanes(roots.len()));
+        match words {
+            1 => self.run_batch_w::<1>(roots),
+            2 => self.run_batch_w::<2>(roots),
+            4 => self.run_batch_w::<4>(roots),
+            _ => self.run_batch_w::<8>(roots),
+        }
+    }
+
+    /// The batched level loop, monomorphized over the lane word count
+    /// `W`. The typed lane states move out of the width-erased
+    /// [`BatchLanes`] slot for the duration of the run (reset in place
+    /// when the previous batch used the same width) and move back in at
+    /// the end — pooled reuse without borrow entanglement.
+    fn run_batch_w<const W: usize>(
+        &mut self,
+        roots: &[VertexId],
+    ) -> Result<BatchMetrics, QueryError>
+    where
+        MsBfsNodeState<W>: LaneSlot,
+    {
         let t0 = std::time::Instant::now();
         let nv = self.num_vertices;
         let b = roots.len();
         self.batch_width = b;
-        // Pooled lane state: reset in place (allocations kept) once the
-        // session has run a batch before.
-        if self.batch_states.len() == self.config.num_nodes {
-            for st in &mut self.batch_states {
+        // Pooled lane state: reset in place (allocations kept) when the
+        // session has run a batch at this width before.
+        let mut states: Vec<MsBfsNodeState<W>> = LaneSlot::take(&mut self.batch_lanes);
+        if states.len() == self.config.num_nodes {
+            for st in &mut states {
                 st.reset(b);
             }
         } else {
-            self.batch_states = (0..self.config.num_nodes)
-                .map(|_| MsBfsNodeState::new(nv, b))
+            states = (0..self.config.num_nodes)
+                .map(|_| MsBfsNodeState::<W>::new(nv, b))
                 .collect();
         }
         // Direction policy: bottom-up needs the batched kernel on *every*
@@ -819,30 +937,32 @@ impl QuerySession {
             DirectionMode::TopDown
         };
         let track_full = !matches!(direction, DirectionMode::TopDown);
-        let full = full_mask(b);
+        let full: LaneMask<W> = full_lane_mask(b);
         // Alg. 2 prologue, batched: every node marks every root's lane
         // ("All CN set their d"); only the owner enqueues it locally. With
         // a bottom-up-capable direction, every node also seeds the level-0
         // full frontier (every node knows every root).
-        for (node, st) in self.nodes.iter().zip(self.batch_states.iter_mut()) {
+        for (node, st) in self.nodes.iter().zip(states.iter_mut()) {
             st.set_full_tracking(track_full);
             for (lane, &r) in roots.iter().enumerate() {
-                let bit = 1u64 << lane;
-                st.seen[r as usize] |= bit;
+                let bit: LaneMask<W> = lane_bit(lane);
+                let base = r as usize * W;
+                st.seen[base + lane / 64] |= 1u64 << (lane % 64);
                 st.dist[lane * nv + r as usize] = 0;
                 if track_full {
-                    st.seed_full_frontier(r, bit);
+                    st.seed_full_frontier(r, &bit);
                 }
                 if node.owns(r) {
-                    if st.visit[r as usize] == 0 {
+                    if st.visit[base..base + W].iter().all(|&x| x == 0) {
                         st.q_local.push(r);
                     }
-                    st.visit[r as usize] |= bit;
+                    st.visit[base + lane / 64] |= 1u64 << (lane % 64);
                 }
             }
         }
         let mut metrics = BatchMetrics {
             num_roots: b,
+            lane_words: W,
             graph_edges: self.graph_edges,
             ..Default::default()
         };
@@ -856,7 +976,7 @@ impl QuerySession {
         // vertex's full degree).
         let mut dir_state = DirOptState::new(self.graph_edges);
         loop {
-            let frontier = self.batch_frontier_len();
+            let frontier = self.batch_frontier_len(&states);
             if frontier == 0 {
                 break;
             }
@@ -868,7 +988,7 @@ impl QuerySession {
                 || {
                     self.nodes
                         .iter()
-                        .zip(&self.batch_states)
+                        .zip(states.iter())
                         .flat_map(|(n, s)| {
                             s.q_local.iter().map(|&v| n.slab.degree_global(v) as u64)
                         })
@@ -882,48 +1002,43 @@ impl QuerySession {
             // Either way the per-node state is disjoint, so the pool can
             // step nodes bulk-synchronously with bit-identical results.
             if bottom_up {
-                self.batch_phase1_bottom_up(level, full);
+                self.batch_phase1_bottom_up(&mut states, level, &full);
             } else if let Some(pool) =
                 (if self.config.parallel_phase1 { self.pool.as_ref() } else { None })
             {
                 let nodes = &self.nodes;
-                let count = self.batch_states.len();
-                let states = SendPtr(self.batch_states.as_mut_ptr());
+                let count = states.len();
+                let states_ptr = SendPtr(states.as_mut_ptr());
                 pool.run_indexed(count, |i| {
                     // SAFETY: `run_indexed` invokes each index exactly
                     // once and blocks until every job finished, so the
                     // `&mut` derived from index `i` aliases nothing and
                     // outlives no borrow.
-                    let st = unsafe { &mut *states.at(i) };
+                    let st = unsafe { &mut *states_ptr.at(i) };
                     batch_expand_node(&nodes[i], st, level);
                 });
             } else {
-                for (node, st) in self.nodes.iter().zip(self.batch_states.iter_mut()) {
+                for (node, st) in self.nodes.iter().zip(states.iter_mut()) {
                     batch_expand_node(node, st, level);
                 }
             }
-            let edges: u64 = self.batch_states.iter().map(|s| s.edges_this_level).sum();
-            let max_node_edges = self
-                .batch_states
-                .iter()
-                .map(|s| s.edges_this_level)
-                .max()
-                .unwrap_or(0);
+            let edges: u64 = states.iter().map(|s| s.edges_this_level).sum();
+            let max_node_edges = states.iter().map(|s| s.edges_this_level).max().unwrap_or(0);
             let sim_compute = self.config.device.level_time_dir(max_node_edges, bottom_up);
 
             // ---- Phase 2: one exchange for the whole batch.
-            let payloads = self.batch_phase2(level, bottom_up);
+            let payloads = self.batch_phase2(&mut states, level, bottom_up);
             let comm = simulate_schedule(&self.schedule, &self.config.net, |r, t| {
                 payloads[r][t]
             });
 
             // After full coverage every node's delta list holds the
             // complete set of this level's (vertex, lane) discoveries.
-            let discovered: u64 = self.batch_states[0]
+            let discovered: u64 = states[0]
                 .delta
                 .entries()
                 .iter()
-                .map(|&(_, m)| m.count_ones() as u64)
+                .map(|&(_, m)| lane_mask_count(&m) as u64)
                 .sum();
             let (fm, fb, em, eb) = self.phase_split(&payloads).unwrap_or_default();
             metrics.levels.push(LevelMetrics {
@@ -949,34 +1064,37 @@ impl QuerySession {
             dir_state.claim_next(direction, || {
                 self.nodes
                     .iter()
-                    .zip(&self.batch_states)
+                    .zip(states.iter())
                     .flat_map(|(n, s)| {
                         s.q_local_next.iter().map(|&v| n.slab.degree_global(v) as u64)
                     })
                     .sum()
             });
-            for st in &mut self.batch_states {
+            for st in &mut states {
                 st.swap_level();
             }
             level += 1;
         }
         metrics.wall_seconds = t0.elapsed().as_secs_f64();
-        metrics.reached_pairs = self.batch_states[0]
-            .dist
-            .iter()
-            .filter(|&&d| d != INF)
-            .count() as u64;
+        metrics.reached_pairs = states[0].dist.iter().filter(|&&d| d != INF).count() as u64;
+        LaneSlot::put(&mut self.batch_lanes, states);
         Ok(metrics)
     }
 
     /// Phase 1 of a batched *bottom-up* level: every node's backend scans
     /// its owned not-fully-seen vertices against the complete previous-
-    /// level frontier masks (`visit_full`, held by every node after the
-    /// exchange), then the session routes the `(vertex, new-lanes)`
-    /// discoveries through [`MsBfsNodeState::discover`] in node/scan order
-    /// — the same deterministic order pooled and sequential stepping
-    /// produce, so the two are bit-identical.
-    fn batch_phase1_bottom_up(&mut self, level: u32, full: u64) {
+    /// level frontier masks (`visit_full`, flat `W`-word-per-vertex, held
+    /// by every node after the exchange), then the session routes the
+    /// `(vertex, new-lanes)` discoveries through
+    /// [`MsBfsNodeState::discover`] in node/scan order — the same
+    /// deterministic order pooled and sequential stepping produce, so the
+    /// two are bit-identical.
+    fn batch_phase1_bottom_up<const W: usize>(
+        &mut self,
+        states: &mut [MsBfsNodeState<W>],
+        level: u32,
+        full: &LaneMask<W>,
+    ) {
         if self.batch_scratch.len() != self.nodes.len() {
             self.batch_scratch =
                 (0..self.nodes.len()).map(|_| BatchExpandOutput::default()).collect();
@@ -984,7 +1102,7 @@ impl QuerySession {
         let pool = if self.config.parallel_phase1 { self.pool.as_ref() } else { None };
         if let Some(pool) = pool {
             let nodes = &self.nodes;
-            let states = &self.batch_states;
+            let states_ref: &[MsBfsNodeState<W>] = states;
             let count = self.nodes.len();
             let backends = SendPtr(self.backends.as_mut_ptr());
             let scratch = SendPtr(self.batch_scratch.as_mut_ptr());
@@ -996,8 +1114,8 @@ impl QuerySession {
                 let out = unsafe { &mut *scratch.at(i) };
                 backend.expand_bottom_up_batch(
                     &nodes[i].slab,
-                    states[i].full_frontier(),
-                    &states[i].seen,
+                    states_ref[i].full_frontier(),
+                    &states_ref[i].seen,
                     full,
                     out,
                 );
@@ -1006,7 +1124,7 @@ impl QuerySession {
             for ((node, st), (backend, out)) in self
                 .nodes
                 .iter()
-                .zip(self.batch_states.iter())
+                .zip(states.iter())
                 .zip(self.backends.iter_mut().zip(self.batch_scratch.iter_mut()))
             {
                 backend.expand_bottom_up_batch(
@@ -1018,11 +1136,13 @@ impl QuerySession {
                 );
             }
         }
-        // Route discoveries (cheap, sequential: O(discovered)). Bottom-up
-        // discoveries are always owned vertices of the scanning node.
-        for (st, out) in self.batch_states.iter_mut().zip(self.batch_scratch.iter()) {
+        // Route discoveries (cheap, sequential: O(discovered·W)). Bottom-
+        // up discoveries are always owned vertices of the scanning node.
+        for (st, out) in states.iter_mut().zip(self.batch_scratch.iter()) {
             st.edges_this_level = out.edges_examined;
-            for &(v, d) in &out.discovered {
+            for (i, &v) in out.discovered.iter().enumerate() {
+                let d: &LaneMask<W> =
+                    out.masks[i * W..(i + 1) * W].try_into().expect("W mask words");
                 st.discover(v, d, level, true);
             }
         }
@@ -1035,11 +1155,13 @@ impl QuerySession {
     /// per-transfer payload byte sizes for the interconnect simulator.
     ///
     /// Mirrors [`Self::phase2`]'s dense/sparse dispatch: once a sender's
-    /// frozen prefix passes the `8·V`-byte accounting switchover (where
-    /// [`PayloadEncoding::MaskDelta`](super::config::PayloadEncoding) caps
-    /// the sparse `12·entries` at the dense per-vertex mask array), the
-    /// merge follows the wire format — a word-wise OR over the snapshotted
-    /// masks — instead of replaying entries one by one.
+    /// frozen prefix passes the `8·W·V`-byte accounting switchover (where
+    /// the negotiated encoding caps the sparse `(4 + 8W)·entries` at the
+    /// dense per-vertex `W`-word mask array — for `W = 1`, exactly
+    /// [`PayloadEncoding::MaskDelta`](super::config::PayloadEncoding)'s
+    /// `⌈8V/12⌉` crossover), the merge follows the wire format — a
+    /// word-wise OR over the snapshotted masks — instead of replaying
+    /// entries one by one.
     ///
     /// Bottom-up levels ship the dense presence-bitmap wire format (the
     /// scan produces discoveries as a dense sweep, not a sorted queue):
@@ -1051,32 +1173,37 @@ impl QuerySession {
     /// bit-identical to the word-wise OR, so a sparse bottom-up level
     /// (deep-graph tail under `DirectionMode::BottomUp`) merges in
     /// O(entries) instead of O(V) per transfer.
-    fn batch_phase2(&mut self, level: u32, bottom_up: bool) -> Vec<Vec<u64>> {
+    fn batch_phase2<const W: usize>(
+        &mut self,
+        states: &mut [MsBfsNodeState<W>],
+        level: u32,
+        bottom_up: bool,
+    ) -> Vec<Vec<u64>> {
         let schedule = Arc::clone(&self.schedule);
         let nv = self.num_vertices;
-        // Entries at which `12·entries >= 8·V`: the dense mask array is
-        // now the (no larger) negotiated form, so merge it word-wise.
-        let dense_threshold =
-            ((nv as u64 * 8).div_ceil(MaskFrontier::ENTRY_BYTES) as usize).max(1);
-        let pooled = self.config.parallel_phase2
-            && self.pool.is_some()
-            && self.batch_states.len() > 1;
+        // Entries at which `(4 + 8W)·entries >= 8·W·V`: the dense mask
+        // array is now the (no larger) negotiated form, so merge it
+        // word-wise. For W = 1 this is the classic `⌈8V/12⌉` switchover.
+        let dense_threshold = ((nv as u64 * 8 * W as u64)
+            .div_ceil(MaskFrontier::<W>::ENTRY_BYTES) as usize)
+            .max(1);
+        let pooled = self.config.parallel_phase2 && self.pool.is_some() && states.len() > 1;
         let buckets = if pooled { Some(self.pooled_buckets()) } else { None };
         let mut payloads = Vec::with_capacity(schedule.rounds.len());
-        // Round-start dense snapshots (one V-word lane-mask array per
+        // Round-start dense snapshots (one V·W-word lane-mask array per
         // dense sender), flat like `phase2`'s `bit_snap` — but built
         // *incrementally*: deltas only grow within a level and the merge
         // is an idempotent OR, so each round folds in only the entries
         // appended since the previous round (`mask_done` tracks the
         // per-node accumulated prefix) instead of replaying from zero.
         let mut mask_snap: Vec<u64> = Vec::new();
-        let mut mask_done: Vec<usize> = vec![0; self.batch_states.len()];
+        let mut mask_done: Vec<usize> = vec![0; states.len()];
         // Pooled merging freezes the sparse sender prefixes by copy: a
         // node can be sender and receiver in the same round, and a
         // receiver appending to its delta list may reallocate it under a
         // concurrent reader. (The sequential path reads senders zero-copy.)
-        let mut sparse_snap: Vec<Vec<(VertexId, u64)>> = if pooled {
-            vec![Vec::new(); self.batch_states.len()]
+        let mut sparse_snap: Vec<Vec<(VertexId, LaneMask<W>)>> = if pooled {
+            vec![Vec::new(); states.len()]
         } else {
             Vec::new()
         };
@@ -1084,8 +1211,7 @@ impl QuerySession {
             // Snapshot (prefix length, priced bytes) together: the
             // coalescing statistics are monotone within the level, so
             // pricing at snapshot time is exact for the frozen prefix.
-            let snap: Vec<(usize, u64)> = self
-                .batch_states
+            let snap: Vec<(usize, u64)> = states
                 .iter()
                 .map(|s| {
                     let len = s.delta.len();
@@ -1100,14 +1226,14 @@ impl QuerySession {
             let any_dense = snap.iter().any(|&(l, _)| l >= dense_threshold);
             if any_dense {
                 if mask_snap.is_empty() {
-                    mask_snap.resize(nv * self.batch_states.len(), 0);
+                    mask_snap.resize(nv * W * states.len(), 0);
                 }
-                for (k, s) in self.batch_states.iter().enumerate() {
+                for (k, s) in states.iter().enumerate() {
                     if snap[k].0 >= dense_threshold {
                         s.delta.accumulate_range(
                             mask_done[k],
                             snap[k].0,
-                            &mut mask_snap[k * nv..(k + 1) * nv],
+                            &mut mask_snap[k * nv * W..(k + 1) * nv * W],
                         );
                         mask_done[k] = snap[k].0;
                     }
@@ -1118,7 +1244,7 @@ impl QuerySession {
                 round_payloads.push(snap[t.src as usize].1);
             }
             if let Some(buckets) = &buckets {
-                for (k, s) in self.batch_states.iter().enumerate() {
+                for (k, s) in states.iter().enumerate() {
                     sparse_snap[k].clear();
                     if snap[k].0 < dense_threshold {
                         sparse_snap[k].extend_from_slice(&s.delta.entries()[..snap[k].0]);
@@ -1126,15 +1252,17 @@ impl QuerySession {
                 }
                 let nodes = &self.nodes;
                 let (snap_ref, mask_ref, sparse_ref) = (&snap, &mask_snap, &sparse_snap);
-                let states = SendPtr(self.batch_states.as_mut_ptr());
+                let states_ptr = SendPtr(states.as_mut_ptr());
                 let pool = self.pool.as_ref().expect("pooled implies pool");
-                merge_round_pooled(pool, &buckets[ri], &states, |receiver, dst, src| {
+                merge_round_pooled(pool, &buckets[ri], &states_ptr, |receiver, dst, src| {
                     let take = snap_ref[src].0;
                     let dst_node = &nodes[dst];
                     if take >= dense_threshold {
-                        let masks = &mask_ref[src * nv..(src + 1) * nv];
-                        for (v, &m) in masks.iter().enumerate() {
-                            if m != 0 {
+                        let masks = &mask_ref[src * nv * W..(src + 1) * nv * W];
+                        for v in 0..nv {
+                            let m: &LaneMask<W> =
+                                masks[v * W..(v + 1) * W].try_into().expect("W words");
+                            if !lane_mask_is_zero(m) {
                                 receiver.discover(
                                     v as VertexId,
                                     m,
@@ -1144,7 +1272,7 @@ impl QuerySession {
                             }
                         }
                     } else {
-                        for &(v, m) in &sparse_ref[src][..take] {
+                        for &(v, ref m) in &sparse_ref[src][..take] {
                             receiver.discover(v, m, level, dst_node.owns(v));
                         }
                     }
@@ -1157,10 +1285,12 @@ impl QuerySession {
                     let dst_node = &self.nodes[dst];
                     if take >= dense_threshold {
                         // Dense path: the frozen prefix as per-vertex masks.
-                        let masks = &mask_snap[src * nv..(src + 1) * nv];
-                        let receiver = &mut self.batch_states[dst];
-                        for (v, &m) in masks.iter().enumerate() {
-                            if m != 0 {
+                        let masks = &mask_snap[src * nv * W..(src + 1) * nv * W];
+                        let receiver = &mut states[dst];
+                        for v in 0..nv {
+                            let m: &LaneMask<W> =
+                                masks[v * W..(v + 1) * W].try_into().expect("W words");
+                            if !lane_mask_is_zero(m) {
                                 receiver.discover(
                                     v as VertexId,
                                     m,
@@ -1173,13 +1303,13 @@ impl QuerySession {
                         // Sparse path: entry-wise replay of the frozen
                         // prefix.
                         let (sender, receiver) = if src < dst {
-                            let (lo, hi) = self.batch_states.split_at_mut(dst);
+                            let (lo, hi) = states.split_at_mut(dst);
                             (&lo[src], &mut hi[0])
                         } else {
-                            let (lo, hi) = self.batch_states.split_at_mut(src);
-                            (&hi[0] as &MsBfsNodeState, &mut lo[dst])
+                            let (lo, hi) = states.split_at_mut(src);
+                            (&hi[0] as &MsBfsNodeState<W>, &mut lo[dst])
                         };
-                        for &(v, m) in &sender.delta.entries()[..take] {
+                        for &(v, ref m) in &sender.delta.entries()[..take] {
                             receiver.discover(v, m, level, dst_node.owns(v));
                         }
                     }
@@ -1222,13 +1352,13 @@ impl QuerySession {
     /// Node 0's live lane-major batch distances — legacy shim support
     /// with the old engine's panic messages.
     pub(crate) fn node0_batch_dist(&self, lane: usize) -> &[u32] {
-        assert!(
-            !self.batch_states.is_empty(),
-            "run_batch has not been called"
-        );
+        let dist = self
+            .batch_lanes
+            .node0_dist()
+            .expect("run_batch has not been called");
         assert!(lane < self.batch_width, "lane {lane} out of range");
         let nv = self.num_vertices;
-        &self.batch_states[0].dist[lane * nv..(lane + 1) * nv]
+        &dist[lane * nv..(lane + 1) * nv]
     }
 
     /// Lane count of the most recent batch (legacy shim support).
@@ -1260,28 +1390,30 @@ impl QuerySession {
     /// Check that every node ended the last batch with identical per-lane
     /// distance arrays — the batched analog of [`Self::assert_agreement`].
     pub fn assert_batch_agreement(&self) -> Result<(), String> {
-        let Some(first) = self.batch_states.first() else {
-            return Err("run_batch has not been called".to_string());
-        };
         let nv = self.num_vertices;
-        for (i, st) in self.batch_states.iter().enumerate().skip(1) {
-            if st.dist != first.dist {
-                let bad = first
-                    .dist
-                    .iter()
-                    .zip(&st.dist)
-                    .position(|(a, c)| a != c)
-                    .unwrap();
-                return Err(format!(
-                    "node {i} disagrees with node 0 at lane {} vertex {}: {} vs {}",
-                    bad / nv,
-                    bad % nv,
-                    st.dist[bad],
-                    first.dist[bad]
-                ));
+        for_lanes!(&self.batch_lanes, s => {
+            let Some(first) = s.first() else {
+                return Err("run_batch has not been called".to_string());
+            };
+            for (i, st) in s.iter().enumerate().skip(1) {
+                if st.dist != first.dist {
+                    let bad = first
+                        .dist
+                        .iter()
+                        .zip(&st.dist)
+                        .position(|(a, c)| a != c)
+                        .unwrap();
+                    return Err(format!(
+                        "node {i} disagrees with node 0 at lane {} vertex {}: {} vs {}",
+                        bad / nv,
+                        bad % nv,
+                        st.dist[bad],
+                        first.dist[bad]
+                    ));
+                }
             }
-        }
-        Ok(())
+            Ok(())
+        })
     }
 }
 
@@ -1338,16 +1470,26 @@ impl<T> SendPtr<T> {
 }
 
 /// One node's Phase-1 step of a batched level — shared by the pooled and
-/// sequential paths, so the two are bit-identical by construction.
-fn batch_expand_node(node: &ComputeNode, st: &mut MsBfsNodeState, level: u32) {
+/// sequential paths, so the two are bit-identical by construction. One
+/// adjacency read serves every active lane of the vertex regardless of
+/// the lane width `W`.
+fn batch_expand_node<const W: usize>(
+    node: &ComputeNode,
+    st: &mut MsBfsNodeState<W>,
+    level: u32,
+) {
     let q = std::mem::take(&mut st.q_local);
     for &v in &q {
-        let mv = st.visit[v as usize];
-        st.visit[v as usize] = 0;
-        debug_assert!(mv != 0, "frontier vertex {v} with empty mask");
+        let base = v as usize * W;
+        let mut mv = [0u64; W];
+        for w in 0..W {
+            mv[w] = st.visit[base + w];
+            st.visit[base + w] = 0;
+        }
+        debug_assert!(!lane_mask_is_zero(&mv), "frontier vertex {v} with empty mask");
         st.edges_this_level += node.slab.degree_global(v) as u64;
         for &u in node.slab.neighbors_global(v) {
-            st.discover(u, mv, level, node.owns(u));
+            st.discover(u, &mv, level, node.owns(u));
         }
     }
     st.q_local = q; // keep the allocation; cleared at swap
@@ -1793,10 +1935,17 @@ mod tests {
             QueryError::RootOutOfRange { root: 50, num_vertices: 50 }
         );
         assert_eq!(session.run_batch(&[]).unwrap_err(), QueryError::EmptyBatch);
-        let wide: Vec<VertexId> = (0..65).map(|i| i % 50).collect();
+        // 65 roots used to be an error at the single-word width; the
+        // engine now auto-widens the lane mask, and the hard cap sits at
+        // MAX_LANES = 512.
+        let wide65: Vec<VertexId> = (0..65).map(|i| i % 50).collect();
+        let b65 = session.run_batch(&wide65).unwrap();
+        assert_eq!(b65.num_roots(), 65);
+        assert_eq!(b65.metrics().lane_words, 2);
+        let too_wide: Vec<VertexId> = (0..513).map(|i| i % 50).collect();
         assert_eq!(
-            session.run_batch(&wide).unwrap_err(),
-            QueryError::BatchTooWide { got: 65, max: MAX_BATCH }
+            session.run_batch(&too_wide).unwrap_err(),
+            QueryError::WidthTooLarge { got: 513, max: MAX_LANES }
         );
         assert_eq!(
             session.run_batch(&[0, 99]).unwrap_err(),
@@ -1976,6 +2125,82 @@ mod tests {
             }
             (ok, format!("n={n} ef={ef} b={b}"))
         });
+    }
+
+    #[test]
+    fn wide_batch_matches_oracle_and_serial() {
+        // The tentpole's core equivalence: a 256-root batch (4 mask
+        // words) through one exchange per level is bit-identical to the
+        // bit-parallel oracle and the serial per-root BFS, in 1D and 2D.
+        use crate::bfs::msbfs::ms_bfs;
+        let (g, _) = uniform_random(400, 6, 29);
+        let roots: Vec<VertexId> = (0..256u32).map(|i| (i * 3 + 1) % 400).collect();
+        let want = ms_bfs(&g, &roots);
+        for cfg in [EngineConfig::dgx2(8, 2), EngineConfig::dgx2_2d(2, 3)] {
+            let mut session = session_for(&g, cfg.clone());
+            let b = session.run_batch(&roots).unwrap();
+            session.assert_batch_agreement().unwrap();
+            assert_eq!(b.metrics().lane_words, 4);
+            assert_eq!(b.metrics().lanes_per_exchange(), 256);
+            for lane in 0..roots.len() {
+                assert_eq!(b.dist(lane), want.dist(lane), "{cfg:?} lane {lane}");
+            }
+            assert_eq!(b.dist(17), &serial_bfs(&g, roots[17])[..]);
+        }
+    }
+
+    #[test]
+    fn configured_width_floor_pins_the_wire_format() {
+        // A 10-root batch under a W256 floor runs four-word lanes: same
+        // distances, lane_words == 4, and priced bytes at least the
+        // single-word pricing (wider entries can only cost more; the
+        // presence-bitmap arm is width-invariant).
+        use crate::coordinator::config::BatchWidth;
+        let (g, _) = uniform_random(300, 6, 8);
+        let roots: Vec<VertexId> = (0..10u32).map(|i| i * 7).collect();
+        let mut narrow = session_for(&g, EngineConfig::dgx2(4, 2));
+        let mut wide = session_for(
+            &g,
+            EngineConfig {
+                batch_width: BatchWidth::W256,
+                ..EngineConfig::dgx2(4, 2)
+            },
+        );
+        let bn = narrow.run_batch(&roots).unwrap();
+        let bw = wide.run_batch(&roots).unwrap();
+        assert_eq!(bn.metrics().lane_words, 1);
+        assert_eq!(bw.metrics().lane_words, 4);
+        for lane in 0..roots.len() {
+            assert_eq!(bn.dist(lane), bw.dist(lane), "lane {lane}");
+        }
+        assert_eq!(
+            bn.metrics().edges_examined(),
+            bw.metrics().edges_examined(),
+            "width changes pricing, never traversal work"
+        );
+        assert!(bw.metrics().bytes() >= bn.metrics().bytes());
+    }
+
+    #[test]
+    fn width_change_reuses_session_bit_identically() {
+        // Crossing every word width in one session (pooled lane state is
+        // rebuilt on width change, reset in place otherwise) matches
+        // fresh sessions bit for bit.
+        let (g, _) = uniform_random(350, 6, 40);
+        let plan = TraversalPlan::build(&g, EngineConfig::dgx2(4, 2)).unwrap();
+        let mut reused = plan.session();
+        for width in [48usize, 130, 3, 256, 65, 512] {
+            let roots: Vec<VertexId> =
+                (0..width).map(|i| ((i * 11 + 2) % 350) as VertexId).collect();
+            let b = reused.run_batch(&roots).unwrap();
+            reused.assert_batch_agreement().unwrap();
+            let fresh = plan.session().run_batch(&roots).unwrap();
+            assert_eq!(b.metrics().lane_words, fresh.metrics().lane_words);
+            assert_eq!(b.metrics().bytes(), fresh.metrics().bytes());
+            for lane in 0..width {
+                assert_eq!(b.dist(lane), fresh.dist(lane), "w={width} lane={lane}");
+            }
+        }
     }
 
     #[test]

@@ -8,6 +8,13 @@
 //! inspected (total and per level, per direction tag), bytes per level,
 //! GTEPS on the simulated clock, and the per-direction level counts.
 //!
+//! Since v2 the report also carries a **batch-width ablation**
+//! (`width_ablation`): width ∈ {64, 256} × mode ∈ {1d, 2d}, each wide
+//! batch against the same roots executed as 64-root single-word chunks —
+//! the perf trajectory of the const-generic wide lane masks (the
+//! acceptance pass requires the 256-wide batch to use strictly fewer
+//! sync rounds *and* fewer total exchange bytes than its 4 × 64 chunks).
+//!
 //! The artifact lives at the repository root and is kept fresh by CI:
 //! `butterfly-bfs bench-protocol --check` recomputes the protocol and
 //! fails when the committed file drifts (integer counters compare
@@ -17,16 +24,19 @@
 //! numbers, and commit the diff — that *is* the perf trajectory.
 
 use crate::bfs::msbfs::sample_batch_roots;
-use crate::coordinator::config::DirectionMode;
+use crate::coordinator::config::{BatchWidth, DirectionMode};
 use crate::coordinator::metrics::BatchMetrics;
 use crate::coordinator::{EngineConfig, TraversalPlan};
+use crate::graph::csr::Csr;
 use crate::graph::gen::table1_suite;
 use crate::util::json::Json;
 use crate::util::stats::gteps;
 use std::path::Path;
 
 /// Protocol identifier (bump when the schema or configs change).
-pub const PROTOCOL_NAME: &str = "engine-bench-v1";
+/// v2 added the batch-width ablation section (`width_ablation`): wide
+/// lane masks vs chunked 64-root execution, in 1D and 2D.
+pub const PROTOCOL_NAME: &str = "engine-bench-v2";
 /// Suite graph the protocol runs on (the paper's GAP_kron analog).
 pub const PROTOCOL_GRAPH: &str = "kron-like";
 /// Scale adjustment: `kron-like` is scale 21; −10 ⇒ 2^11 vertices — big
@@ -40,6 +50,16 @@ pub const PROTOCOL_ROOT_SEED: u64 = 7;
 pub const PROTOCOL_NODE_COUNTS: [usize; 2] = [16, 64];
 /// Butterfly fanout (the paper's headline configuration).
 pub const PROTOCOL_FANOUT: u32 = 4;
+/// Batch widths of the width-ablation section (wide lane masks).
+pub const PROTOCOL_WIDE_WIDTHS: [usize; 2] = [64, 256];
+/// Node count of the width-ablation configs (1D; the 2D grid covers the
+/// same count).
+pub const PROTOCOL_WIDE_NODES: usize = 16;
+/// 2D processor grid of the width-ablation configs.
+pub const PROTOCOL_WIDE_GRID: (u32, u32) = (4, 4);
+/// Chunk size of the chunked-execution baseline (the single-word lane
+/// width).
+pub const PROTOCOL_CHUNK: usize = 64;
 
 fn direction_modes() -> [(&'static str, DirectionMode); 3] {
     [
@@ -81,6 +101,97 @@ fn direction_json(m: &BatchMetrics) -> Json {
         ("sim_gteps", Json::n(gteps(m.graph_edges, m.sim_seconds()))),
         ("per_level", Json::Arr(per_level)),
     ])
+}
+
+/// The width-ablation base config for one mode (direction stays
+/// top-down: the ablation isolates the lane-width effect on sync rounds
+/// and wire bytes; the direction ablation above covers diropt).
+fn width_config(mode_2d: bool) -> EngineConfig {
+    if mode_2d {
+        EngineConfig::dgx2_2d(PROTOCOL_WIDE_GRID.0, PROTOCOL_WIDE_GRID.1)
+    } else {
+        EngineConfig::dgx2(PROTOCOL_WIDE_NODES, PROTOCOL_FANOUT)
+    }
+}
+
+/// The width-ablation section: for each mode × width, one wide batch
+/// (the lane mask sized to the width) against the same roots executed in
+/// 64-root single-word chunks — the committed evidence that widening the
+/// lanes amortizes exchange startup across more roots (strictly fewer
+/// sync rounds *and* fewer total bytes at width 256, checked by
+/// [`check_engine_bench`]'s acceptance pass).
+fn width_ablation_json(g: &Csr) -> Json {
+    let mut entries = Vec::new();
+    for mode_2d in [false, true] {
+        for &width in &PROTOCOL_WIDE_WIDTHS {
+            let roots = sample_batch_roots(g, width, PROTOCOL_ROOT_SEED);
+            let mut cfg = width_config(mode_2d);
+            cfg.batch_width = BatchWidth::for_lanes(width);
+            let mut session =
+                TraversalPlan::build(g, cfg).expect("valid protocol plan").session();
+            let m = session
+                .run_batch_metrics_only(&roots)
+                .expect("protocol roots in range");
+            // Chunked baseline: same roots, 64-root single-word chunks
+            // through one pooled session (the pre-widening execution).
+            let mut chunked =
+                TraversalPlan::build(g, width_config(mode_2d))
+                    .expect("valid protocol plan")
+                    .session();
+            let (mut c_rounds, mut c_msgs, mut c_bytes) = (0u64, 0u64, 0u64);
+            let (mut c_sim, mut c_reached, mut chunks) = (0f64, 0u64, 0u64);
+            for chunk in roots.chunks(PROTOCOL_CHUNK) {
+                let cm = chunked
+                    .run_batch_metrics_only(chunk)
+                    .expect("protocol roots in range");
+                c_rounds += cm.sync_rounds;
+                c_msgs += cm.messages();
+                c_bytes += cm.bytes();
+                c_sim += cm.sim_seconds();
+                c_reached += cm.reached_pairs;
+                chunks += 1;
+            }
+            let mut fields = vec![
+                ("mode", Json::s(if mode_2d { "2d" } else { "1d" })),
+                ("width", Json::u(width as u64)),
+                ("nodes", Json::u(PROTOCOL_WIDE_NODES as u64)),
+            ];
+            if mode_2d {
+                fields.push((
+                    "grid",
+                    Json::s(format!(
+                        "{}x{}",
+                        PROTOCOL_WIDE_GRID.0, PROTOCOL_WIDE_GRID.1
+                    )),
+                ));
+            }
+            fields.extend([
+                ("direction", Json::s("topdown")),
+                ("lane_words", Json::u(m.lane_words as u64)),
+                ("entry_bytes", Json::u(m.entry_bytes())),
+                ("levels", Json::u(m.depth() as u64)),
+                ("sync_rounds", Json::u(m.sync_rounds)),
+                ("messages", Json::u(m.messages())),
+                ("bytes", Json::u(m.bytes())),
+                ("edges_inspected", Json::u(m.edges_examined())),
+                ("reached_pairs", Json::u(m.reached_pairs)),
+                ("sim_seconds", Json::n(m.sim_seconds())),
+                (
+                    "chunked",
+                    Json::obj(vec![
+                        ("chunks", Json::u(chunks)),
+                        ("sync_rounds", Json::u(c_rounds)),
+                        ("messages", Json::u(c_msgs)),
+                        ("bytes", Json::u(c_bytes)),
+                        ("reached_pairs", Json::u(c_reached)),
+                        ("sim_seconds", Json::n(c_sim)),
+                    ]),
+                ),
+            ]);
+            entries.push(Json::obj(fields));
+        }
+    }
+    Json::Arr(entries)
 }
 
 /// Run the full protocol and build the report. Deterministic: fixed
@@ -133,6 +244,7 @@ pub fn engine_bench_report() -> Json {
             ]),
         ),
         ("configs", Json::Arr(configs)),
+        ("width_ablation", width_ablation_json(&g)),
     ])
 }
 
@@ -276,6 +388,48 @@ fn acceptance(report: &Json) -> Result<(), String> {
             ));
         }
     }
+    // Width-ablation invariants: at 256 lanes the wide batch must
+    // strictly beat its own roots run as 4 × 64-root chunks on both sync
+    // rounds and total exchange bytes, in both modes — and reach exactly
+    // the same (root, vertex) pairs (a free correctness cross-check).
+    let ablation = report
+        .get("width_ablation")
+        .and_then(Json::as_arr)
+        .ok_or("missing width_ablation")?;
+    for entry in ablation {
+        let mode = entry
+            .get("mode")
+            .and_then(Json::as_str)
+            .ok_or("width_ablation entry missing mode")?
+            .to_string();
+        let width = u64_field(entry, "width")?;
+        let chunked = entry
+            .get("chunked")
+            .ok_or_else(|| format!("{mode} width {width}: missing chunked"))?;
+        if u64_field(entry, "reached_pairs")? != u64_field(chunked, "reached_pairs")? {
+            return Err(format!(
+                "{mode} width {width}: wide and chunked reached different pair counts"
+            ));
+        }
+        if width as usize <= PROTOCOL_CHUNK {
+            continue; // a single chunk is the batch itself
+        }
+        let (wide_r, chunk_r) =
+            (u64_field(entry, "sync_rounds")?, u64_field(chunked, "sync_rounds")?);
+        if wide_r >= chunk_r {
+            return Err(format!(
+                "{mode} width {width}: {wide_r} sync rounds, not fewer than \
+                 chunked's {chunk_r}"
+            ));
+        }
+        let (wide_b, chunk_b) = (u64_field(entry, "bytes")?, u64_field(chunked, "bytes")?);
+        if wide_b >= chunk_b {
+            return Err(format!(
+                "{mode} width {width}: {wide_b} exchange bytes, not fewer than \
+                 chunked's {chunk_b}"
+            ));
+        }
+    }
     Ok(())
 }
 
@@ -300,6 +454,14 @@ mod tests {
             for d in ["topdown", "bottomup", "diropt"] {
                 assert!(c.get("directions").unwrap().get(d).is_some(), "{d}");
             }
+        }
+        let ablation = a.get("width_ablation").unwrap().as_arr().unwrap();
+        assert_eq!(ablation.len(), 2 * PROTOCOL_WIDE_WIDTHS.len());
+        for entry in ablation {
+            assert!(entry.get("chunked").is_some());
+            let words = entry.get("lane_words").and_then(Json::as_u64).unwrap();
+            let width = entry.get("width").and_then(Json::as_u64).unwrap();
+            assert_eq!(words, width.div_ceil(64).next_power_of_two());
         }
     }
 

@@ -5,8 +5,9 @@
 //!                 (simulated multi-node, DGX-2 timing model); `--mode 1d`
 //!                 (butterfly/all-to-all) or `--mode 2d --grid RxC`
 //!                 (checkerboard fold/expand).
-//! * `batch`     — batched multi-source BFS: up to 64 roots through one
-//!                 exchange per level (`run_batch`), in either mode.
+//! * `batch`     — batched multi-source BFS: up to 512 roots through one
+//!                 exchange per level (`run_batch`, const-generic wide
+//!                 lane masks), in either mode.
 //! * `baseline`  — run the single-node CPU baselines (top-down /
 //!                 direction-optimizing), the paper's GapBS comparators.
 //! * `generate`  — generate a suite graph and write it to disk.
@@ -19,7 +20,9 @@ use butterfly_bfs::bfs::dirop::{diropt_bfs, DirOptParams};
 use butterfly_bfs::bfs::topdown::topdown_bfs;
 use butterfly_bfs::comm::{Butterfly, CommPattern, ConcurrentAllToAll, IterativeAllToAll};
 use butterfly_bfs::coordinator::config::{DirectionMode, PartitionMode};
-use butterfly_bfs::coordinator::{EngineConfig, PatternKind, PayloadEncoding, TraversalPlan};
+use butterfly_bfs::coordinator::{
+    BatchWidth, EngineConfig, PatternKind, PayloadEncoding, TraversalPlan,
+};
 use butterfly_bfs::partition::Partition2D;
 use butterfly_bfs::graph::csr::Csr;
 use butterfly_bfs::graph::gen::{table1_suite, GraphSpec};
@@ -82,7 +85,7 @@ fn print_usage() {
         "butterfly-bfs — multi-node BFS with butterfly frontier synchronization\n\n\
          Subcommands:\n\
          \x20 run       distributed ButterFly BFS on a suite graph or file\n\
-         \x20 batch     batched multi-source BFS (up to 64 roots per exchange)\n\
+         \x20 batch     batched multi-source BFS (up to 512 roots per exchange)\n\
          \x20 baseline  single-node CPU top-down / direction-optimizing BFS\n\
          \x20 generate  generate a suite graph to a file\n\
          \x20 inspect   print graph properties\n\
@@ -293,9 +296,11 @@ fn parse_direction(name: &str) -> Result<DirectionMode> {
     })
 }
 
-/// Batched multi-source BFS: sample (or take) up to 64 roots and push them
-/// through one `run_batch`, reporting the amortization against what 64
-/// sequential runs would have cost.
+/// Batched multi-source BFS: sample (or take) up to 512 roots and push
+/// them through one `run_batch` — the lane mask widens with the batch
+/// (`--width`), so one exchange per level serves the whole batch —
+/// reporting the amortization against what the same roots would have
+/// cost sequentially.
 fn cmd_batch(argv: Vec<String>) -> Result<()> {
     let spec = Args::new("butterfly-bfs batch", "batched multi-source BFS (MS-BFS)")
         .req("graph", "suite graph name or path (.bbfs/.mtx/edge list)")
@@ -303,7 +308,7 @@ fn cmd_batch(argv: Vec<String>) -> Result<()> {
         .opt("mode", "1d", "partition mode: 1d (butterfly) | 2d (fold/expand)")
         .opt("grid", "auto", "2d processor grid RxC or auto")
         .opt("fanout", "4", "butterfly fanout (1 = classic butterfly)")
-        .opt("roots", "64", "batch width (1..=64 random non-isolated roots)")
+        .opt("width", "64", "batch width (1..=512 random non-isolated roots)")
         .opt("seed", "7", "root sampling seed")
         .opt("scale-delta", "0", "suite graph scale adjustment (+/- log2)")
         .opt("direction", "topdown", "phase-1 direction: topdown | bottomup | diropt")
@@ -315,15 +320,16 @@ fn cmd_batch(argv: Vec<String>) -> Result<()> {
     let g = load_graph(&a.get("graph"), a.get_parse::<i32>("scale-delta")?)?;
     let nodes = a.get_usize("nodes")?;
     let fanout: u32 = a.get_parse("fanout")?;
-    let width = a.get_usize("roots")?;
-    if width == 0 || width > 64 {
-        bail!("--roots must be in 1..=64 (got {width})");
+    let width = a.get_usize("width")?;
+    if width == 0 || width > 512 {
+        bail!("--width must be in 1..=512 (got {width})");
     }
     let partition = parse_partition_mode(&a.get("mode"), &a.get("grid"), nodes)?;
     let direction = parse_direction(&a.get("direction"))?;
     let cfg = EngineConfig {
         partition,
         direction,
+        batch_width: BatchWidth::for_lanes(width),
         parallel_phase1: a.get_flag("parallel"),
         parallel_phase2: a.get_flag("parallel-sync"),
         ..EngineConfig::dgx2(nodes, fanout)
@@ -354,6 +360,12 @@ fn cmd_batch(argv: Vec<String>) -> Result<()> {
         count(bm.messages()),
         count(bm.bytes()),
         bm.sim_seconds() * 1e3
+    );
+    println!(
+        "lanes: {} mask words ({} lanes/exchange, {} B sparse entries)",
+        bm.lane_words,
+        bm.lanes_per_exchange(),
+        bm.entry_bytes()
     );
     println!(
         "phase 1: {} edges inspected; direction {}: {}/{} levels bottom-up ({} edges)",

@@ -88,6 +88,48 @@ fn directions_equivalent_duplicate_and_partial_batches() {
     }
 }
 
+/// The tentpole coverage: wide batches at W ∈ {2, 4, 8} remain
+/// direction-invariant and serial-exact in both partition modes —
+/// including a duplicate-heavy 200-lane batch (coalescing masks span
+/// word boundaries) and a partial 130-lane batch (unused high words stay
+/// silent).
+#[test]
+fn directions_equivalent_wide_batches_one_d_and_two_d() {
+    let (g, _) = uniform_random(500, 8, 23);
+    let wide_sets: Vec<Vec<VertexId>> = vec![
+        (0..96u32).map(|i| (i * 11) % 500).collect(), // W = 2
+        (0..130u32).map(|i| (i * 7 + 3) % 500).collect(), // W = 4, partial
+        (0..200u32).map(|i| if i % 3 == 0 { 42 } else { (i * 13) % 500 }).collect(),
+        (0..260u32).map(|i| (i * 17) % 500).collect(), // W = 8, partial
+    ];
+    for roots in &wide_sets {
+        check_direction_equivalence(&g, EngineConfig::dgx2(8, 4), roots);
+        check_direction_equivalence(&g, EngineConfig::dgx2_2d(2, 3), roots);
+    }
+}
+
+/// Wide bottom-up against the wide bit-parallel oracle: the W-word
+/// `expand_bottom_up_batch` kernel (word-wise accumulate, all-missing-
+/// lanes early exit) reproduces `ms_bfs` exactly at 256 lanes.
+#[test]
+fn wide_bottom_up_matches_bit_parallel_oracle_exactly() {
+    let (g, _) = kronecker(KroneckerParams::graph500(10, 8), 7);
+    let roots: Vec<VertexId> = (0..256u32).map(|i| (i * 3) % 1024).collect();
+    let cfg = EngineConfig {
+        direction: DirectionMode::BottomUp,
+        ..EngineConfig::dgx2(8, 2)
+    };
+    let mut session = session_for(&g, cfg);
+    let b = session.run_batch(&roots).unwrap();
+    session.assert_batch_agreement().unwrap();
+    let want = ms_bfs(&g, &roots);
+    for lane in 0..roots.len() {
+        assert_eq!(b.dist(lane), want.dist(lane), "lane {lane}");
+    }
+    assert_eq!(b.metrics().lane_words, 4);
+    assert!(b.metrics().levels.iter().all(|l| l.bottom_up));
+}
+
 #[test]
 fn directions_equivalent_structured_graphs() {
     for g in [path(40), star(300), grid2d(8, 9)] {
@@ -273,7 +315,12 @@ fn property_batch_directions_equal_serial() {
     forall(Config::cases(18), "run_batch direction-invariant == serial", |rng| {
         let n = gen::usize_in(rng, 10, 300);
         let ef = gen::usize_in(rng, 1, 6) as u32;
-        let b = gen::usize_in(rng, 1, 32);
+        // One case in four crosses a lane-word boundary.
+        let b = if rng.next_below(4) == 0 {
+            gen::usize_in(rng, 65, 160)
+        } else {
+            gen::usize_in(rng, 1, 32)
+        };
         let (g, _) = uniform_random(n, ef, rng.next_u64());
         let roots: Vec<VertexId> =
             (0..b).map(|_| rng.next_usize(n) as VertexId).collect();

@@ -1,13 +1,17 @@
 //! MS-BFS coverage across the analog suite: `run_batch` distances equal
 //! independent `serial_bfs` runs on every `table1_suite()` graph at tiny
-//! scale — including batches smaller than 64 and duplicate roots — plus
-//! the batched-vs-sequential amortization acceptance check.
+//! scale — including batches smaller than 64, duplicate roots, and wide
+//! batches at every lane word count (W ∈ {2, 4, 8}) — plus the
+//! batched-vs-sequential amortization acceptance check and the
+//! chunked-64 == one-wide-batch bit-identity property.
 
 use butterfly_bfs::bfs::msbfs::{ms_bfs, sample_batch_roots};
 use butterfly_bfs::bfs::serial::serial_bfs;
 use butterfly_bfs::coordinator::{EngineConfig, TraversalPlan};
 use butterfly_bfs::graph::csr::VertexId;
 use butterfly_bfs::graph::gen::table1_suite;
+use butterfly_bfs::graph::gen::urand::uniform_random;
+use butterfly_bfs::util::propcheck::{forall, gen, Config};
 
 /// Every suite graph (tiny scale): an 8-lane batch with a duplicate root
 /// appended matches per-root serial BFS and the single-node bit-parallel
@@ -63,8 +67,10 @@ fn full_width_batch_on_kron_like() {
     }
 }
 
-/// Batch widths 1, 2, and 63 behave identically to full width — the lane
-/// mask never leaks into unused bits.
+/// Partial batch widths on both sides of every word boundary behave
+/// identically to full width — the lane mask never leaks into unused
+/// bits, and one session serves every width back to back (the pooled
+/// lane state rebuilds on word-count changes, resets in place otherwise).
 #[test]
 fn partial_widths_match_serial() {
     let spec = table1_suite()
@@ -77,18 +83,94 @@ fn partial_widths_match_serial() {
     let mut session = TraversalPlan::build(&g, EngineConfig::dgx2(8, 2))
         .unwrap()
         .session();
-    for width in [1usize, 2, 63] {
+    for width in [1usize, 2, 63, 65, 127, 129, 257, 511] {
         let roots = sample_batch_roots(&g, width, width as u64);
         let b = session.run_batch(&roots).unwrap();
         session.assert_batch_agreement().unwrap();
-        for (lane, &r) in roots.iter().enumerate() {
+        // Spot-check a handful of lanes per width (serial per root is the
+        // cost driver at 511 lanes).
+        for lane in [0, width / 2, width - 1] {
             assert_eq!(
                 b.dist(lane),
-                &serial_bfs(&g, r)[..],
+                &serial_bfs(&g, roots[lane])[..],
                 "width {width} lane {lane}"
             );
         }
+        // Full-lane cross-check against the bit-parallel oracle.
+        let oracle = ms_bfs(&g, &roots);
+        for lane in 0..width {
+            assert_eq!(b.dist(lane), oracle.dist(lane), "width {width}");
+        }
     }
+}
+
+/// Wide batches at every word count: W ∈ {2, 4, 8} via widths 96 / 200 /
+/// 300, duplicate-heavy and structured root sets, 1D and 2D, against the
+/// bit-parallel oracle and serial spot checks.
+#[test]
+fn wide_batches_all_word_counts_match_oracle() {
+    let spec = table1_suite()
+        .into_iter()
+        .find(|s| s.name == "urand-like")
+        .unwrap();
+    let g = spec.generate_scaled(-9);
+    let n = g.num_vertices() as u32;
+    for (width, want_words) in [(96usize, 2usize), (200, 4), (300, 8)] {
+        // Structured + duplicate lanes: every fourth lane repeats root 0.
+        let roots: Vec<VertexId> = (0..width)
+            .map(|i| if i % 4 == 0 { 0 } else { (i as u32 * 13) % n })
+            .collect();
+        let oracle = ms_bfs(&g, &roots);
+        for cfg in [EngineConfig::dgx2(8, 4), EngineConfig::dgx2_2d(2, 3)] {
+            let mut session = TraversalPlan::build(&g, cfg).unwrap().session();
+            let b = session.run_batch(&roots).unwrap();
+            session.assert_batch_agreement().unwrap();
+            assert_eq!(b.metrics().lane_words, want_words, "width {width}");
+            for lane in 0..width {
+                assert_eq!(b.dist(lane), oracle.dist(lane), "w={width} lane={lane}");
+            }
+            // Duplicate lanes agree with each other and with serial.
+            assert_eq!(b.dist(0), b.dist(4));
+            assert_eq!(b.dist(0), &serial_bfs(&g, 0)[..]);
+        }
+    }
+}
+
+/// The chunked-execution identity: one wide batch is bit-identical, lane
+/// for lane, to its 64-root chunks run through the same session — and
+/// never runs more sync rounds than the chunks combined.
+#[test]
+fn property_chunked_64_equals_one_wide_batch() {
+    forall(Config::cases(10), "chunked == wide batch", |rng| {
+        let n = gen::usize_in(rng, 20, 250);
+        let ef = gen::usize_in(rng, 1, 5) as u32;
+        let width = gen::usize_in(rng, 65, 300);
+        let (g, _) = uniform_random(n, ef, rng.next_u64());
+        let roots: Vec<VertexId> =
+            (0..width).map(|_| rng.next_usize(n) as VertexId).collect();
+        let cfg = if rng.next_below(2) == 0 {
+            EngineConfig::dgx2(gen::usize_in(rng, 1, 8.min(n)), 2)
+        } else {
+            let rows = gen::usize_in(rng, 1, 3.min(n)) as u32;
+            let cols = gen::usize_in(rng, 1, 3.min(n)) as u32;
+            EngineConfig::dgx2_2d(rows, cols)
+        };
+        let plan = TraversalPlan::build(&g, cfg).unwrap();
+        let mut session = plan.session();
+        let wide = session.run_batch(&roots).unwrap();
+        let mut ok = session.assert_batch_agreement().is_ok();
+        let mut chunk_rounds = 0;
+        for (ci, chunk) in roots.chunks(64).enumerate() {
+            let cb = session.run_batch(chunk).unwrap();
+            ok &= cb.metrics().lane_words == 1;
+            chunk_rounds += cb.metrics().sync_rounds;
+            for (lane, _) in chunk.iter().enumerate() {
+                ok &= cb.dist(lane) == wide.dist(ci * 64 + lane);
+            }
+        }
+        ok &= wide.metrics().sync_rounds <= chunk_rounds;
+        (ok, format!("n={n} ef={ef} width={width}"))
+    });
 }
 
 /// The acceptance criterion on a suite graph: one 64-root batch ships

@@ -4,7 +4,7 @@
 //! `Bitmap::union_in` return-count properties.
 
 use butterfly_bfs::bfs::frontier::{Bitmap, MaskFrontier};
-use butterfly_bfs::bfs::msbfs::mask_delta_bytes;
+use butterfly_bfs::bfs::msbfs::{mask_delta_bytes, mask_delta_bytes_dense, MaskDeltaStats};
 use butterfly_bfs::bfs::serial::serial_bfs;
 use butterfly_bfs::coordinator::{EngineConfig, PayloadEncoding, TraversalPlan};
 use butterfly_bfs::graph::gen::urand::uniform_random;
@@ -24,7 +24,7 @@ fn byte_accounting_cross_check() {
         let ok = q == len * 4
             && b == (v as u64).div_ceil(64) * 8
             && a == q.min(b)
-            && m == (len * MaskFrontier::ENTRY_BYTES).min(v as u64 * 8)
+            && m == (len * MaskFrontier::<1>::ENTRY_BYTES).min(v as u64 * 8)
             // Bitmap is queue-length invariant; Auto is never worse than
             // either pure encoding; MaskDelta never exceeds the dense mask
             // array (64 lanes × 1 bit, i.e. 64× the bitmap bound).
@@ -48,12 +48,12 @@ fn mask_frontier_matches_maskdelta_accounting() {
         for _ in 0..gen::usize_in(rng, 0, v) {
             masks[rng.next_usize(v)] |= 1u64 << rng.next_usize(64);
         }
-        let f = MaskFrontier::from_masks(&masks);
+        let f = MaskFrontier::<1>::from_masks(&masks);
         let sparse = f.payload_bytes();
         let priced = PayloadEncoding::MaskDelta.bytes(f.len() as u64, v);
         let nonzero = masks.iter().filter(|&&m| m != 0).count();
         let ok = f.len() == nonzero
-            && sparse == f.len() as u64 * MaskFrontier::ENTRY_BYTES
+            && sparse == f.len() as u64 * MaskFrontier::<1>::ENTRY_BYTES
             && priced == sparse.min(v as u64 * 8)
             && f.to_masks(v) == masks;
         (ok, format!("v={v} entries={}", f.len()))
@@ -79,11 +79,21 @@ fn negotiated_mask_delta_pricing_properties() {
             gen::usize_in(rng, 1, 64) as u32
         };
         let presence = (v as u64).div_ceil(64) * 8;
-        let priced = mask_delta_bytes(entries, distinct, masks, active, v);
+        // At W = 1 the word statistics are the counts themselves.
+        let s = MaskDeltaStats {
+            entries,
+            distinct_vertices: distinct,
+            distinct_masks: masks,
+            active_lanes: active,
+            entry_words: entries,
+            vertex_words: distinct,
+            group_words: masks,
+        };
+        let priced = mask_delta_bytes(&s, v, 1);
         let ok = if entries == 0 {
             priced == 0
         } else {
-            priced <= entries * MaskFrontier::ENTRY_BYTES
+            priced <= entries * MaskFrontier::<1>::ENTRY_BYTES
                 && priced <= masks * 12 + entries * 4
                 && priced <= presence + distinct * 8
                 && priced <= (1 + active as u64) * presence
@@ -92,6 +102,76 @@ fn negotiated_mask_delta_pricing_properties() {
                 && (active != 1 || priced <= 2 * presence)
         };
         (ok, format!("v={v} e={entries} d={distinct} m={masks} a={active}"))
+    });
+}
+
+/// The width-aware negotiation: every arm reprices with the lane word
+/// count exactly as specified (`4 + 8W` entries, `8W`-byte packed masks)
+/// while the presence-bitmap arms stay width-invariant — so a wide batch
+/// with few active lanes never pays for its provisioned width.
+#[test]
+fn negotiated_pricing_scales_with_lane_words() {
+    forall(Config::cases(120), "mask_delta_bytes width scaling", |rng| {
+        let v = gen::usize_in(rng, 1, 1 << 16);
+        let entries = gen::usize_in(rng, 1, 2 * v) as u64;
+        let distinct = gen::usize_in(rng, 1, (entries as usize).min(v)) as u64;
+        let masks = gen::usize_in(rng, 1, entries as usize) as u64;
+        let presence = (v as u64).div_ceil(64) * 8;
+        let mut ok = true;
+        for words in [2usize, 4, 8] {
+            let active = gen::usize_in(rng, 1, 64 * words) as u32;
+            // Word statistics within their invariant ranges: each entry /
+            // vertex / group has between 1 and W nonzero words, a
+            // vertex's cells never exceed the entry words that fed them,
+            // and the active cohorts must hold the active lanes.
+            let aw = gen::usize_in(
+                rng,
+                (active as usize).div_ceil(64),
+                words.min(active as usize),
+            ) as u32;
+            let entry_words =
+                gen::usize_in(rng, entries as usize, entries as usize * words) as u64;
+            let vertex_words = gen::usize_in(
+                rng,
+                distinct as usize,
+                (distinct as usize * words).min(entry_words as usize),
+            ) as u64;
+            let group_words =
+                gen::usize_in(rng, masks as usize, masks as usize * words) as u64;
+            let s = MaskDeltaStats {
+                entries,
+                distinct_vertices: distinct,
+                distinct_masks: masks,
+                active_lanes: active,
+                active_words: aw,
+                entry_words,
+                vertex_words,
+                group_words,
+            };
+            let priced = mask_delta_bytes(&s, v, words);
+            ok &= priced <= entries * 5 + 8 * entry_words
+                && priced <= masks * 5 + 8 * group_words + entries * 4
+                && priced <= aw as u64 * presence + 8 * vertex_words
+                && priced <= words as u64 * presence + 8 * vertex_words
+                && priced <= (1 + active as u64) * presence
+                // One active lane: two bitmaps regardless of width.
+                && (active != 1 || priced <= 2 * presence)
+                // The dense bottom-up forms bound the full negotiation.
+                && priced <= mask_delta_bytes_dense(vertex_words, aw, active, v)
+                // The word-sparse forms never exceed the full-width
+                // serialization a naive encoder would ship.
+                && priced <= entries * (4 + 8 * words as u64) + entries;
+            // All-words-nonzero stats degrade gracefully: still bounded
+            // by the width-invariant lane-bitmap arm.
+            let full = MaskDeltaStats {
+                entry_words: entries * words as u64,
+                vertex_words: distinct * words as u64,
+                group_words: masks * words as u64,
+                ..s
+            };
+            ok &= mask_delta_bytes(&full, v, words) <= (1 + active as u64) * presence;
+        }
+        (ok, format!("v={v} e={entries} d={distinct} m={masks}"))
     });
 }
 
@@ -158,7 +238,7 @@ fn union_in_return_count_properties() {
 #[test]
 fn mask_delta_switchover_pinned_both_sides() {
     for v in [96usize, 97, 600, 601] {
-        let cross = (v as u64 * 8).div_ceil(MaskFrontier::ENTRY_BYTES);
+        let cross = (v as u64 * 8).div_ceil(MaskFrontier::<1>::ENTRY_BYTES);
         let mut prev = 0;
         for e in 0..=(v as u64 + 4) {
             let priced = PayloadEncoding::MaskDelta.bytes(e, v);
@@ -174,7 +254,20 @@ fn mask_delta_switchover_pinned_both_sides() {
         // The negotiated engine pricing respects the same dense family cap
         // (presence bitmap + per-vertex masks) past the crossover.
         let presence = (v as u64).div_ceil(64) * 8;
-        let negotiated = mask_delta_bytes(cross, cross.min(v as u64), cross, 64, v);
+        let dv = cross.min(v as u64);
+        let negotiated = mask_delta_bytes(
+            &MaskDeltaStats {
+                entries: cross,
+                distinct_vertices: dv,
+                distinct_masks: cross,
+                active_lanes: 64,
+                entry_words: cross,
+                vertex_words: dv,
+                group_words: cross,
+            },
+            v,
+            1,
+        );
         assert!(negotiated <= presence + v as u64 * 8);
     }
 }
@@ -210,7 +303,7 @@ fn batch_dense_fallback_crosses_switchover_both_directions() {
     use butterfly_bfs::bfs::msbfs::ms_bfs;
     let g = hub_with_tails(600);
     let v = g.num_vertices();
-    let dense_entries = (v as u64 * 8).div_ceil(MaskFrontier::ENTRY_BYTES);
+    let dense_entries = (v as u64 * 8).div_ceil(MaskFrontier::<1>::ENTRY_BYTES);
     let roots = vec![0u32; 64]; // duplicate roots: lanes travel together
     let mut session = TraversalPlan::build(&g, EngineConfig::dgx2(4, 1))
         .unwrap()
@@ -241,7 +334,7 @@ fn batch_dense_fallback_crosses_switchover_both_directions() {
     // Byte accounting at the hot level: the negotiated encoding must
     // undercut the unbounded sparse form once past the switchover.
     let hot_level = &m.levels[hot];
-    let sparse_cost = hot_level.messages * entries[hot] * MaskFrontier::ENTRY_BYTES;
+    let sparse_cost = hot_level.messages * entries[hot] * MaskFrontier::<1>::ENTRY_BYTES;
     assert!(
         hot_level.bytes < sparse_cost,
         "dense/grouped pricing caps the hot level: {} !< {sparse_cost}",

@@ -41,11 +41,14 @@ fn query_errors_round_trip_as_std_errors() {
     assert!(err.to_string().contains("root 40 out of range"), "{err}");
     let err = session.run_batch(&[]).unwrap_err();
     assert_eq!(err, QueryError::EmptyBatch);
+    // 65 roots are no longer an error: the lane mask widens with the
+    // batch. The hard cap moved from >64 to >512 (WidthTooLarge).
     let wide: Vec<VertexId> = vec![0; 65];
-    assert_eq!(
-        session.run_batch(&wide).unwrap_err(),
-        QueryError::BatchTooWide { got: 65, max: 64 }
-    );
+    assert_eq!(session.run_batch(&wide).unwrap().num_roots(), 65);
+    let too_wide: Vec<VertexId> = vec![0; 513];
+    let err = session.run_batch(&too_wide).unwrap_err();
+    assert_eq!(err, QueryError::WidthTooLarge { got: 513, max: 512 });
+    assert!(err.to_string().contains("512-lane limit"), "{err}");
     // Duplicates are valid — only width and range are errors.
     let b = session.run_batch(&[1, 1, 2]).unwrap();
     assert_eq!(b.dist(0), b.dist(1));
@@ -150,6 +153,11 @@ fn batch_after_single_root_and_width_changes_match_fresh() {
             (0..48u32).map(|i| (i * 7) % 600).collect(),
             vec![3],
             (0..64u32).map(|i| (i * 11) % 600).collect(),
+            // Crossing lane-word boundaries rebuilds the pooled states;
+            // returning below rebuilds them back.
+            (0..130u32).map(|i| (i * 13) % 600).collect(),
+            (0..300u32).map(|i| (i * 3) % 600).collect(),
+            vec![7, 7],
         ];
         for roots in &widths {
             let b = reused.run_batch(roots).unwrap();
