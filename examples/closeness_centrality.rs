@@ -33,7 +33,8 @@ fn main() {
     );
     let samples = 256usize;
     let cfg = EngineConfig {
-        batch_width: BatchWidth::for_lanes(samples),
+        batch_width: BatchWidth::for_lanes(samples)
+            .expect("sample count is within the 512-lane limit"),
         ..EngineConfig::dgx2(16, 4)
     };
     let plan = TraversalPlan::build(&g, cfg).expect("valid engine configuration");

@@ -6,9 +6,11 @@ This is the generation/validation tool behind the committed
 the 1D edge-balanced partition, the butterfly schedule, the batched
 MS-BFS engine with the direction-optimizing state machine (top-down /
 bottom-up / alpha-beta), the negotiated mask-delta payload pricing, and
-the DGX-2 interconnect/device timing models. Integer counters reproduce
-the Rust engine exactly; simulated-clock floats reproduce it to ~1e-15
-(the Rust checker compares floats with 1e-6 relative tolerance).
+the DGX-2 interconnect/device timing models, and (v3) the serve-mode
+request coalescer with its deterministic open-loop throughput sim.
+Integer counters reproduce the Rust engine exactly; simulated-clock
+floats reproduce it to ~1e-15 (the Rust checker compares floats with
+1e-6 relative tolerance).
 
 The canonical way to regenerate the artifact is the Rust CLI::
 
@@ -734,7 +736,7 @@ def serial_bfs(g, root):
 # --------------------------------------------------------------------------
 
 PROTOCOL = dict(
-    name="engine-bench-v2",
+    name="engine-bench-v3",
     graph="kron-like",
     kron_scale=21,
     kron_edge_factor=16,
@@ -749,6 +751,15 @@ PROTOCOL = dict(
     wide_nodes=16,
     wide_grid=(4, 4),
     chunk=64,
+    # Serve throughput (v3): open-loop coalescing sim at a fixed load
+    # point — 256 requests 30 us apart against a single simulated worker,
+    # baseline (window 0, batch 1) vs coalesced (window 240 us, batch 64).
+    serve_requests=256,
+    serve_gap_us=30,
+    serve_queue_depth=64,
+    serve_window_us=240,
+    serve_max_batch=64,
+    serve_seed=11,
 )
 
 
@@ -839,6 +850,175 @@ def width_ablation(g):
     return entries
 
 
+# --------------------------------------------------------------------------
+# Serve-mode coalescer + throughput sim (serve/coalescer.rs, serve/metrics.rs,
+# harness/protocol.rs::serve_sim_mode)
+# --------------------------------------------------------------------------
+
+
+class Coalescer:
+    """Port of rust/src/serve/coalescer.rs::Coalescer.
+
+    Bounded FIFO admission queue with window/batch-full dispatch over an
+    abstract microsecond clock: a batch is due when it is full (at the
+    arrival time of the request that filled it) or when the oldest
+    request's window expires, whichever comes first; ``take_batch``
+    drains oldest-first; past ``depth`` queued requests admission is
+    refused (the server answers a typed Overloaded). Pending entries are
+    ``(arrived_us, deadline_us_or_None, item)`` tuples.
+    """
+
+    def __init__(self, window_us, max_batch, depth):
+        assert max_batch >= 1, "max_batch must be at least 1"
+        assert depth >= 1, "queue depth must be at least 1"
+        self.window_us = window_us
+        self.max_batch = max_batch
+        self.depth = depth
+        self.pending = []
+
+    def __len__(self):
+        return len(self.pending)
+
+    def try_push(self, now_us, deadline_us, item):
+        """Admit a request; False when the queue is at capacity."""
+        if len(self.pending) >= self.depth:
+            return False
+        self.pending.append((now_us, deadline_us, item))
+        return True
+
+    def due_at(self):
+        """Instant the oldest batch becomes due, None when empty.
+
+        Batch-full beats window expiry: with ``max_batch`` requests
+        queued the batch was due the moment the filling one arrived.
+        """
+        if len(self.pending) >= self.max_batch:
+            return self.pending[self.max_batch - 1][0]
+        if not self.pending:
+            return None
+        return self.pending[0][0] + self.window_us
+
+    def due(self, now_us):
+        t = self.due_at()
+        return t is not None and t <= now_us
+
+    def take_batch(self):
+        """Drain the oldest ``min(len, max_batch)`` requests, FIFO."""
+        n = min(len(self.pending), self.max_batch)
+        batch, self.pending = self.pending[:n], self.pending[n:]
+        return batch
+
+    def expire(self, now_us):
+        """Remove every request past its deadline, preserving order."""
+        expired = [p for p in self.pending
+                   if p[1] is not None and now_us >= p[1]]
+        self.pending = [p for p in self.pending
+                        if p[1] is None or now_us < p[1]]
+        return expired
+
+
+def nearest_rank_us(sorted_us, p):
+    """Port of rust/src/serve/metrics.rs::nearest_rank_us."""
+    n = len(sorted_us)
+    if n == 0:
+        return 0
+    rank = min(max(math.ceil(p / 100.0 * n), 1), n)
+    return sorted_us[rank - 1]
+
+
+def serve_sim_mode(g, window_us, max_batch, service_cache=None):
+    """Port of harness/protocol.rs::serve_sim_mode.
+
+    Discrete-event loop: request i arrives at ``i * serve_gap_us``; a
+    batch starts at ``max(due_at, worker_free)`` with arrivals at or
+    before that instant admitted first; service time is the real
+    engine's simulated clock for that root multiset quantized up to
+    integer microseconds (``ceil(sim_seconds * 1e6)``), so every latency
+    is an integer and the Rust checker compares them exactly.
+    """
+    if service_cache is None:
+        service_cache = {}
+
+    def service_us(batch_roots):
+        key = tuple(batch_roots)
+        if key not in service_cache:
+            m = run_batch(g, PROTOCOL["wide_nodes"], PROTOCOL["fanout"],
+                          list(batch_roots), "topdown", width_words=1)
+            service_cache[key] = int(
+                math.ceil(batch_totals(m)["sim_seconds"] * 1e6))
+        return service_cache[key]
+
+    roots = sample_batch_roots(g, PROTOCOL["serve_requests"],
+                               PROTOCOL["serve_seed"])
+    c = Coalescer(window_us, max_batch, PROTOCOL["serve_queue_depth"])
+    latencies, widths = [], []
+    rejected, worker_free, last_finish = 0, 0, 0
+    nxt = 0
+    while True:
+        t_arr = nxt * PROTOCOL["serve_gap_us"] if nxt < len(roots) else None
+        t_disp = c.due_at()
+        if t_disp is not None:
+            t_disp = max(t_disp, worker_free)
+        if t_arr is None and t_disp is None:
+            break
+        # Ties admit the arrival first (mirrors the Rust `ta <= t`).
+        arrival_first = t_disp is None or (
+            t_arr is not None and t_arr <= t_disp)
+        if arrival_first:
+            if not c.try_push(t_arr, None, roots[nxt]):
+                rejected += 1
+            nxt += 1
+        else:
+            batch = c.take_batch()
+            finish = t_disp + service_us([p[2] for p in batch])
+            worker_free = last_finish = finish
+            widths.append(len(batch))
+            for arrived, _deadline, _item in batch:
+                latencies.append(finish - arrived)
+    completed = len(latencies)
+    s = sorted(latencies)
+    mean_latency = sum(latencies) / completed if completed else 0.0
+    qps = completed * 1e6 / last_finish if last_finish else 0.0
+    batches = len(widths)
+    mean_width = sum(widths) / batches if batches else 0.0
+    return {
+        "window_us": window_us,
+        "max_batch": max_batch,
+        "offered": len(roots),
+        "completed": completed,
+        "rejected": rejected,
+        "timed_out": 0,
+        "p50_us": nearest_rank_us(s, 50.0),
+        "p99_us": nearest_rank_us(s, 99.0),
+        "mean_latency_us": mean_latency,
+        "qps": qps,
+        "batches": batches,
+        "mean_width": mean_width,
+        "max_width": max(widths) if widths else 0,
+        "span_us": last_finish,
+    }
+
+
+def serve_throughput(g):
+    """Port of harness/protocol.rs::serve_throughput_json."""
+    cache = {}
+    return {
+        "sim": {
+            "requests": PROTOCOL["serve_requests"],
+            "arrival_gap_us": PROTOCOL["serve_gap_us"],
+            "queue_depth": PROTOCOL["serve_queue_depth"],
+            "root_seed": PROTOCOL["serve_seed"],
+            "nodes": PROTOCOL["wide_nodes"],
+            "fanout": PROTOCOL["fanout"],
+            "mode": "1d",
+            "direction": "topdown",
+            "baseline": serve_sim_mode(g, 0, 1, cache),
+            "coalesced": serve_sim_mode(g, PROTOCOL["serve_window_us"],
+                                        PROTOCOL["serve_max_batch"], cache),
+        }
+    }
+
+
 def engine_bench_report():
     scale = max(PROTOCOL["kron_scale"] + PROTOCOL["scale_delta"], 4)
     g = kronecker(scale, PROTOCOL["kron_edge_factor"], PROTOCOL["kron_seed"])
@@ -869,6 +1049,7 @@ def engine_bench_report():
         },
         "configs": configs,
         "width_ablation": width_ablation(g),
+        "serve_throughput": serve_throughput(g),
     }
 
 
@@ -965,6 +1146,18 @@ def validate_acceptance(report):
         key = (entry["mode"], entry["width"])
         assert entry["sync_rounds"] < c["sync_rounds"], key
         assert entry["bytes"] < c["bytes"], key
+    sim = report["serve_throughput"]["sim"]
+    base, coal = sim["baseline"], sim["coalesced"]
+    for name, mode in [("baseline", base), ("coalesced", coal)]:
+        total = mode["completed"] + mode["rejected"] + mode["timed_out"]
+        assert total == mode["offered"], (name, total, mode["offered"])
+        assert mode["p50_us"] <= mode["p99_us"], name
+    assert coal["qps"] > base["qps"], (base["qps"], coal["qps"])
+    assert base["mean_width"] == 1.0, base["mean_width"]
+    assert coal["mean_width"] > 1.0, coal["mean_width"]
+    assert base["rejected"] > 0, "load point must overload the baseline"
+    assert coal["rejected"] == 0, "coalesced service must keep up"
+    assert coal["p50_us"] < base["p50_us"], (coal["p50_us"], base["p50_us"])
     print("acceptance invariants hold on the fresh report")
 
 
@@ -989,7 +1182,24 @@ def main():
         print(f"{e['mode']} width={e['width']} (W={e['lane_words']}): "
               f"rounds {e['sync_rounds']} vs chunked {c['sync_rounds']}, "
               f"bytes {e['bytes']} vs chunked {c['bytes']}")
+    sim = report["serve_throughput"]["sim"]
+    for name in ["baseline", "coalesced"]:
+        m = sim[name]
+        print(f"serve {name}: completed {m['completed']}/{m['offered']} "
+              f"rejected {m['rejected']} p50 {m['p50_us']}us "
+              f"p99 {m['p99_us']}us qps {m['qps']:.0f} "
+              f"mean width {m['mean_width']:.2f}")
     if args.out:
+        # Mirror write_engine_bench: a `measured` subtree recorded into
+        # the existing artifact by the load generator is live-wallclock
+        # data the sim cannot regenerate — carry it over.
+        try:
+            with open(args.out) as f:
+                measured = json.load(f)["serve_throughput"]["measured"]
+        except (OSError, ValueError, KeyError, TypeError):
+            measured = None
+        if measured is not None:
+            report["serve_throughput"]["measured"] = measured
         text = json.dumps(report, sort_keys=True, separators=(",", ":"))
         with open(args.out, "w") as f:
             f.write(text + "\n")

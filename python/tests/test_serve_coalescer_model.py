@@ -1,0 +1,215 @@
+"""Executable spec of the serve-mode coalescer and its throughput sim
+(PR 6): drives the Python mirror of `rust/src/serve/coalescer.rs` (the
+pack/deadline logic behind the `serve` subcommand) plus the
+`serve_sim_mode` discrete-event loop from `bench_protocol_port.py`.
+
+The Rust unit tests pin the same behaviors on the real type; this file
+pins the mirror, and — with the engine stubbed to a constant service
+time — checks the event loop's dispatch schedule against hand-computed
+timelines, something the end-to-end sim (real engine, 256 requests)
+is too slow and too opaque to do.
+
+No jax/hypothesis needed — runs everywhere CI runs.
+"""
+
+import math
+
+import bench_protocol_port as bp
+
+
+# --------------------------------------------------------------------------
+# Coalescer dispatch contract (mirror of serve/coalescer.rs unit tests)
+# --------------------------------------------------------------------------
+
+
+def test_lone_request_dispatches_on_window_expiry_as_width_1():
+    c = bp.Coalescer(window_us=200, max_batch=64, depth=8)
+    assert c.due_at() is None
+    assert c.try_push(1_000, None, 7)
+    assert c.due_at() == 1_200
+    assert not c.due(1_199)
+    assert c.due(1_200)
+    batch = c.take_batch()
+    assert [p[2] for p in batch] == [7]
+    assert batch[0][0] == 1_000
+    assert len(c) == 0
+
+
+def test_batch_full_beats_window_expiry():
+    c = bp.Coalescer(window_us=1_000, max_batch=4, depth=16)
+    for i, t in enumerate([10, 20, 30, 40]):
+        assert c.try_push(t, None, i)
+    # Full at the arrival of the 4th request — long before the oldest
+    # window would expire at t=1_010.
+    assert c.due_at() == 40
+    assert c.due(40)
+    assert [p[2] for p in c.take_batch()] == [0, 1, 2, 3]
+
+
+def test_take_batch_is_fifo_and_leaves_the_remainder():
+    c = bp.Coalescer(window_us=100, max_batch=2, depth=16)
+    for i, t in enumerate([1, 2, 3, 4, 5]):
+        assert c.try_push(t, None, i)
+    assert [p[2] for p in c.take_batch()] == [0, 1]
+    assert [p[2] for p in c.take_batch()] == [2, 3]
+    # The straggler's window now drives the next dispatch.
+    assert c.due_at() == 105
+    assert [p[2] for p in c.take_batch()] == [4]
+    assert c.due_at() is None
+
+
+def test_admission_is_bounded_and_refused_past_depth():
+    c = bp.Coalescer(window_us=100, max_batch=64, depth=2)
+    assert c.try_push(0, None, "a")
+    assert c.try_push(1, None, "b")
+    assert not c.try_push(2, None, "c")
+    assert len(c) == 2
+    # Draining frees capacity again.
+    c.take_batch()
+    assert c.try_push(3, None, "c")
+
+
+def test_expire_removes_only_past_deadline_requests_in_order():
+    c = bp.Coalescer(window_us=1_000, max_batch=64, depth=16)
+    c.try_push(0, 50, 0)
+    c.try_push(1, None, 1)
+    c.try_push(2, 40, 2)
+    c.try_push(3, 500, 3)
+    expired = c.expire(50)
+    assert [p[2] for p in expired] == [0, 2]
+    assert [p[2] for p in c.take_batch()] == [1, 3]
+
+
+def test_window_zero_max_batch_one_degenerates_to_no_coalescing():
+    # The baseline mode of the serve_throughput protocol section.
+    c = bp.Coalescer(window_us=0, max_batch=1, depth=64)
+    assert c.try_push(100, None, 1)
+    assert c.try_push(100, None, 2)
+    assert c.due_at() == 100
+    assert len(c.take_batch()) == 1
+    assert len(c.take_batch()) == 1
+
+
+# --------------------------------------------------------------------------
+# nearest-rank percentiles (mirror of serve/metrics.rs)
+# --------------------------------------------------------------------------
+
+
+def test_nearest_rank_percentiles():
+    assert bp.nearest_rank_us([], 50.0) == 0
+    assert bp.nearest_rank_us([7], 50.0) == 7
+    assert bp.nearest_rank_us([7], 99.0) == 7
+    xs = list(range(1, 101))  # 1..=100
+    assert bp.nearest_rank_us(xs, 50.0) == 50
+    assert bp.nearest_rank_us(xs, 99.0) == 99
+    assert bp.nearest_rank_us(xs, 100.0) == 100
+    # rank clamps to [1, n] even for tiny p.
+    assert bp.nearest_rank_us(xs, 0.0) == 1
+
+
+# --------------------------------------------------------------------------
+# serve_sim_mode event loop against hand-computed timelines
+# --------------------------------------------------------------------------
+
+def _stub_engine(monkeypatch, requests, gap_us, queue_depth,
+                 service_seconds):
+    """Shrink the protocol load point and pin the engine's simulated
+    clock to a constant, so the dispatch schedule is hand-checkable."""
+    monkeypatch.setitem(bp.PROTOCOL, "serve_requests", requests)
+    monkeypatch.setitem(bp.PROTOCOL, "serve_gap_us", gap_us)
+    monkeypatch.setitem(bp.PROTOCOL, "serve_queue_depth", queue_depth)
+
+    def fake_run_batch(g, nodes, fanout, roots, direction, **kw):
+        return {
+            "levels": [{"sim_compute": service_seconds, "sim_comm": 0.0,
+                        "messages": 0, "bytes": 0, "edges": 0,
+                        "frontier": 0, "level": 0, "direction": direction}],
+            "sync_rounds": 1,
+            "reached_pairs": len(roots),
+            "dist": [],
+            "graph_edges": 0,
+            "lane_words": 1,
+        }
+
+    monkeypatch.setattr(bp, "run_batch", fake_run_batch)
+    # The quantization the sim applies, computed the same way.
+    return math.ceil(service_seconds * 1e6)
+
+
+def _tiny_graph():
+    return bp.uniform_random(60, 3, 0xBEEF)
+
+
+def test_sim_uncontended_baseline_has_pure_service_latency(monkeypatch):
+    # Service shorter than the arrival gap: the width-1 server never
+    # queues, so every latency is exactly the service time.
+    svc = _stub_engine(monkeypatch, requests=10, gap_us=30, queue_depth=8,
+                       service_seconds=12e-6)
+    m = bp.serve_sim_mode(_tiny_graph(), window_us=0, max_batch=1)
+    assert m["completed"] == 10 and m["rejected"] == 0
+    assert m["p50_us"] == svc and m["p99_us"] == svc
+    assert m["mean_latency_us"] == float(svc)
+    assert m["batches"] == 10 and m["mean_width"] == 1.0
+    # Last arrival at 9*30, dispatched immediately, done svc later.
+    assert m["span_us"] == 9 * 30 + svc
+
+
+def test_sim_batch_full_dispatch_schedule(monkeypatch):
+    # window 100 > 3*gap, max_batch 4: every batch fills at its 4th
+    # arrival and dispatches there (batch-full beats window expiry).
+    svc = _stub_engine(monkeypatch, requests=8, gap_us=30, queue_depth=64,
+                       service_seconds=12e-6)
+    m = bp.serve_sim_mode(_tiny_graph(), window_us=100, max_batch=4)
+    assert m["batches"] == 2 and m["max_width"] == 4
+    # Batch 1: arrivals 0,30,60,90 -> start 90; batch 2: arrivals
+    # 120..210 -> start 210 (worker long free by then).
+    finish1, finish2 = 90 + svc, 210 + svc
+    assert m["span_us"] == finish2
+    lat = sorted([finish1 - t for t in (0, 30, 60, 90)]
+                 + [finish2 - t for t in (120, 150, 180, 210)])
+    assert m["completed"] == 8
+    assert m["p50_us"] == bp.nearest_rank_us(lat, 50.0)
+    assert m["p99_us"] == lat[-1]
+    assert m["mean_latency_us"] == sum(lat) / 8
+
+
+def test_sim_straggler_dispatches_alone_on_window_expiry(monkeypatch):
+    # 5 requests, max_batch 4: the 5th never sees a full batch and must
+    # go out alone once its window runs out.
+    svc = _stub_engine(monkeypatch, requests=5, gap_us=30, queue_depth=64,
+                       service_seconds=12e-6)
+    m = bp.serve_sim_mode(_tiny_graph(), window_us=100, max_batch=4)
+    assert m["batches"] == 2
+    assert m["max_width"] == 4
+    # Straggler arrives at 120, window expires at 220, done svc later.
+    assert m["span_us"] == 220 + svc
+
+
+def test_sim_overload_rejects_and_accounting_closes(monkeypatch):
+    # Service far above the gap with a depth-2 queue: the width-1 server
+    # falls behind and sheds load, but every request is accounted for.
+    _stub_engine(monkeypatch, requests=20, gap_us=30, queue_depth=2,
+                 service_seconds=500e-6)
+    m = bp.serve_sim_mode(_tiny_graph(), window_us=0, max_batch=1)
+    assert m["rejected"] > 0
+    assert m["completed"] + m["rejected"] + m["timed_out"] == m["offered"]
+    assert m["p50_us"] <= m["p99_us"]
+
+
+def test_sim_is_deterministic_and_coalescing_pays_under_load(monkeypatch):
+    # At a load point that overloads the width-1 server, coalescing must
+    # lift qps and cut p50 — the acceptance invariant of the committed
+    # BENCH_engine.json section, replayed at stub scale.
+    _stub_engine(monkeypatch, requests=40, gap_us=30, queue_depth=16,
+                 service_seconds=100e-6)
+    g = _tiny_graph()
+    base = bp.serve_sim_mode(g, window_us=0, max_batch=1)
+    coal = bp.serve_sim_mode(g, window_us=240, max_batch=16)
+    assert base == bp.serve_sim_mode(g, window_us=0, max_batch=1)
+    assert coal == bp.serve_sim_mode(g, window_us=240, max_batch=16)
+    assert base["rejected"] > 0
+    assert coal["rejected"] == 0
+    assert coal["qps"] > base["qps"]
+    assert coal["p50_us"] < base["p50_us"]
+    assert base["mean_width"] == 1.0
+    assert coal["mean_width"] > 1.0

@@ -66,7 +66,8 @@ fn main() {
                 },
             };
             let cfg = EngineConfig {
-                batch_width: BatchWidth::for_lanes(width),
+                batch_width: BatchWidth::for_lanes(width)
+                    .expect("bench widths are within the lane limit"),
                 ..base.clone()
             };
             let plan = TraversalPlan::build(&g, cfg).expect("valid plan");

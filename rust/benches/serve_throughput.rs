@@ -1,0 +1,225 @@
+//! Open-loop load generator for the `serve` mode: a fixed arrival rate
+//! (not closed-loop — requests are sent on schedule whether or not
+//! earlier responses have come back, so queueing delay is *measured*,
+//! not hidden), driven over a real localhost socket.
+//!
+//! The same arrival schedule runs twice: against a no-coalescing server
+//! (window 0, max batch 1) and against the coalescing configuration —
+//! the wallclock counterpart of the deterministic `serve_throughput.sim`
+//! section in `BENCH_engine.json`. Per mode the report carries the
+//! server-side latency percentiles (nearest-rank, integer µs), the
+//! client-observed qps over the active window, and the coalesced
+//! batch-width distribution.
+//!
+//! Run: `cargo bench --bench serve_throughput`
+//! `--update` records the measured report into `BENCH_engine.json`'s
+//! `serve_throughput.measured` subtree (excluded from the freshness
+//! compare, sanity-checked by `bench-protocol --check`).
+
+use butterfly_bfs::bfs::msbfs::sample_batch_roots;
+use butterfly_bfs::coordinator::{BatchWidth, DirectionMode, EngineConfig, TraversalPlan};
+use butterfly_bfs::graph::gen::table1_suite;
+use butterfly_bfs::harness::protocol::update_measured_serve;
+use butterfly_bfs::serve::{ServeConfig, Server};
+use butterfly_bfs::util::cli::{Args, CliError};
+use butterfly_bfs::util::json::Json;
+use std::io::{BufRead, BufReader, Write};
+use std::net::TcpStream;
+use std::path::Path;
+use std::sync::Arc;
+use std::time::{Duration, Instant};
+
+fn main() {
+    let spec = Args::new(
+        "serve_throughput",
+        "open-loop load generator for the serve mode (baseline vs coalesced)",
+    )
+    .opt("requests", "400", "requests per mode")
+    .opt("gap-us", "300", "fixed inter-arrival gap in microseconds")
+    .opt("window-us", "2000", "coalescing window of the coalesced mode")
+    .opt("max-batch", "64", "max coalesced batch width (1..=512)")
+    .opt("queue-depth", "256", "admission-queue bound")
+    .opt("workers", "2", "server worker threads")
+    .opt("scale-delta", "-10", "kron-like scale adjustment (protocol default)")
+    .opt("out", "BENCH_engine.json", "artifact path for --update")
+    .flag("update", "record the measured report into the committed artifact");
+    // `cargo bench` passes a literal `--bench` to harness=false targets.
+    let argv = std::env::args().skip(1).filter(|s| s != "--bench");
+    let a = match spec.clone().parse(argv) {
+        Ok(a) => a,
+        Err(CliError::HelpRequested) => {
+            println!("{}", spec.help_text());
+            return;
+        }
+        Err(e) => {
+            eprintln!("error: {e}");
+            std::process::exit(2);
+        }
+    };
+    let requests: usize = a.get_usize("requests").unwrap();
+    let gap_us: u64 = a.get_u64("gap-us").unwrap();
+    let window_us: u64 = a.get_u64("window-us").unwrap();
+    let max_batch: usize = a.get_usize("max-batch").unwrap();
+    let queue_depth: usize = a.get_usize("queue-depth").unwrap();
+    let workers: usize = a.get_usize("workers").unwrap();
+    let scale_delta: i32 = a.get_parse("scale-delta").unwrap();
+    if BatchWidth::for_lanes(max_batch).is_none() {
+        eprintln!("error: --max-batch must be in 1..=512 (got {max_batch})");
+        std::process::exit(2);
+    }
+
+    let g = table1_suite()
+        .into_iter()
+        .find(|s| s.name == "kron-like")
+        .unwrap()
+        .generate_scaled(scale_delta);
+    let cfg = EngineConfig {
+        direction: DirectionMode::TopDown,
+        batch_width: BatchWidth::for_lanes(max_batch).unwrap(),
+        ..EngineConfig::dgx2(16, 4)
+    };
+    let plan = Arc::new(TraversalPlan::build(&g, cfg).expect("valid engine configuration"));
+    println!(
+        "== serve_throughput on kron-like (|V|={}, |E|={}) — {requests} requests, \
+         {gap_us} us gap ==",
+        g.num_vertices(),
+        g.num_edges()
+    );
+
+    let baseline = run_mode(&plan, &g, 0, 1, queue_depth, workers, requests, gap_us);
+    let coalesced =
+        run_mode(&plan, &g, window_us, max_batch, queue_depth, workers, requests, gap_us);
+    summarize("baseline ", &baseline);
+    summarize("coalesced", &coalesced);
+
+    let measured = Json::obj(vec![
+        ("requests", Json::u(requests as u64)),
+        ("gap_us", Json::u(gap_us)),
+        ("baseline", baseline),
+        ("coalesced", coalesced),
+    ]);
+    println!("{}", Json::obj(vec![("serve_throughput_measured", measured.clone())]).render());
+    if a.get_flag("update") {
+        let path = a.get("out");
+        if let Err(e) = update_measured_serve(Path::new(&path), measured) {
+            eprintln!("error: {e}");
+            std::process::exit(2);
+        }
+        println!("recorded measured serve report into {path}");
+    }
+}
+
+/// One mode: boot a server, fire the open-loop schedule, collect every
+/// response, shut down cleanly, and merge server + client views.
+#[allow(clippy::too_many_arguments)]
+fn run_mode(
+    plan: &Arc<TraversalPlan>,
+    g: &butterfly_bfs::graph::csr::Csr,
+    window_us: u64,
+    max_batch: usize,
+    queue_depth: usize,
+    workers: usize,
+    requests: usize,
+    gap_us: u64,
+) -> Json {
+    let server = Server::bind(
+        Arc::clone(plan),
+        ServeConfig {
+            addr: "127.0.0.1:0".to_string(),
+            workers,
+            coalesce_window_us: window_us,
+            max_batch,
+            queue_depth,
+            default_timeout_us: None,
+        },
+    )
+    .expect("bind ephemeral port");
+    let addr = server.local_addr().expect("bound address");
+    let server_thread = std::thread::spawn(move || server.run().expect("server run"));
+
+    let roots = sample_batch_roots(g, 512.min(requests), 11);
+    let stream = TcpStream::connect(addr).expect("connect to server");
+    stream
+        .set_read_timeout(Some(Duration::from_secs(30)))
+        .expect("set read timeout");
+    let mut writer = stream.try_clone().expect("clone stream");
+    let mut reader = BufReader::new(stream);
+
+    let t0 = Instant::now();
+    let writer_thread = std::thread::spawn(move || {
+        for i in 0..requests {
+            // Open loop: hold the schedule regardless of response
+            // progress (sleep to the absolute deadline, not by the gap).
+            let due = Duration::from_micros(i as u64 * gap_us);
+            let now = t0.elapsed();
+            if due > now {
+                std::thread::sleep(due - now);
+            }
+            let req = Json::obj(vec![
+                ("op", Json::s("query")),
+                ("id", Json::u(i as u64)),
+                ("root", Json::u(roots[i % roots.len()] as u64)),
+            ]);
+            writer.write_all(req.render().as_bytes()).expect("send request");
+            writer.write_all(b"\n").expect("send request");
+        }
+        writer
+    });
+
+    // Every query gets exactly one response (ok / overloaded / timeout /
+    // error); read until all are accounted for.
+    let mut line = String::new();
+    let mut ok = 0u64;
+    let mut last_ok_us = 0u64;
+    for _ in 0..requests {
+        line.clear();
+        let n = reader.read_line(&mut line).expect("response before read timeout");
+        assert!(n > 0, "server closed the connection mid-run");
+        let resp = Json::parse(line.trim()).expect("valid response JSON");
+        if resp.get("status").and_then(|s| s.as_str()) == Some("ok") {
+            ok += 1;
+            last_ok_us = t0.elapsed().as_micros() as u64;
+        }
+    }
+    let mut writer = writer_thread.join().expect("writer thread");
+
+    // Clean shutdown: the server drains and its run() returns the final
+    // metrics report.
+    writer.write_all(b"{\"op\":\"shutdown\"}\n").expect("send shutdown");
+    line.clear();
+    reader.read_line(&mut line).expect("shutdown ack");
+    let ack = Json::parse(line.trim()).expect("valid shutdown ack");
+    assert_eq!(
+        ack.get("shutting_down").map(|b| b == &Json::Bool(true)),
+        Some(true),
+        "expected a shutdown acknowledgement"
+    );
+    let mut report = server_thread.join().expect("server thread");
+
+    // The server's elapsed time includes boot/shutdown slack; qps over
+    // the client's active window is the honest figure.
+    let span_us = last_ok_us.max(1);
+    let qps = ok as f64 * 1e6 / span_us as f64;
+    if let Json::Obj(map) = &mut report {
+        map.insert("qps".to_string(), Json::n(qps));
+        map.insert("offered".to_string(), Json::u(requests as u64));
+        map.insert("window_us".to_string(), Json::u(window_us));
+        map.insert("max_batch".to_string(), Json::u(max_batch as u64));
+        map.insert("span_us".to_string(), Json::u(span_us));
+    }
+    report
+}
+
+fn summarize(name: &str, r: &Json) {
+    let f = |k: &str| r.get(k).and_then(Json::as_f64).unwrap_or(0.0);
+    println!(
+        "{name}  completed {:>5}  rejected {:>4}  p50 {:>7} us  p99 {:>7} us  \
+         qps {:>8.0}  mean width {:>5.1}",
+        f("completed"),
+        f("rejected"),
+        f("p50_us"),
+        f("p99_us"),
+        f("qps"),
+        f("mean_batch_width"),
+    );
+}

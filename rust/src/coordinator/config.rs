@@ -88,19 +88,28 @@ impl BatchWidth {
         4 + 8 * self.words() as u64
     }
 
-    /// Smallest width whose lane capacity covers `lanes` roots.
+    /// Smallest width whose lane capacity covers `lanes` roots, or
+    /// `None` when no supported width does (`lanes == 0`, or `lanes`
+    /// exceeds [`MAX_LANES`](crate::bfs::msbfs::MAX_LANES) = 512).
     ///
-    /// # Panics
-    ///
-    /// When `lanes` is zero or exceeds
-    /// [`MAX_LANES`](crate::bfs::msbfs::MAX_LANES).
-    pub fn for_lanes(lanes: usize) -> Self {
-        match crate::bfs::msbfs::words_for_lanes(lanes) {
+    /// This is *checked on purpose*: the pre-PR-6 version mapped any
+    /// over-wide request to [`BatchWidth::W512`] through a `_ =>` arm, so
+    /// a library caller asking for 1024 lanes silently got a 512-lane
+    /// engine and a confusing
+    /// [`WidthTooLarge`](super::session::QueryError::WidthTooLarge) only
+    /// once a too-wide batch actually ran. Over-wide configurations now fail at config
+    /// time, with the request echoed back by the caller (the CLI and the
+    /// serve admission path both route through here).
+    pub fn for_lanes(lanes: usize) -> Option<Self> {
+        if lanes == 0 || lanes > crate::bfs::msbfs::MAX_LANES {
+            return None;
+        }
+        Some(match crate::bfs::msbfs::words_for_lanes(lanes) {
             1 => BatchWidth::W64,
             2 => BatchWidth::W128,
             4 => BatchWidth::W256,
             _ => BatchWidth::W512,
-        }
+        })
     }
 
     /// Display name (`"64"` / `"128"` / `"256"` / `"512"`).
@@ -307,13 +316,25 @@ mod tests {
             assert_eq!(w.words(), words);
             assert_eq!(w.lanes(), lanes);
             assert_eq!(w.entry_bytes(), entry);
-            assert_eq!(BatchWidth::for_lanes(lanes), w);
+            assert_eq!(BatchWidth::for_lanes(lanes), Some(w));
         }
-        assert_eq!(BatchWidth::for_lanes(1), BatchWidth::W64);
-        assert_eq!(BatchWidth::for_lanes(65), BatchWidth::W128);
-        assert_eq!(BatchWidth::for_lanes(129), BatchWidth::W256);
-        assert_eq!(BatchWidth::for_lanes(257), BatchWidth::W512);
+        assert_eq!(BatchWidth::for_lanes(1), Some(BatchWidth::W64));
+        assert_eq!(BatchWidth::for_lanes(65), Some(BatchWidth::W128));
+        assert_eq!(BatchWidth::for_lanes(129), Some(BatchWidth::W256));
+        assert_eq!(BatchWidth::for_lanes(257), Some(BatchWidth::W512));
         assert_eq!(BatchWidth::W256.name(), "256");
+    }
+
+    #[test]
+    fn for_lanes_rejects_out_of_range_instead_of_clamping() {
+        // The PR-6 bugfix regression: 513+ lanes used to silently clamp
+        // to W512 (and 0 panicked inside words_for_lanes); both are now
+        // config-time `None`s the caller can echo back.
+        assert_eq!(BatchWidth::for_lanes(512), Some(BatchWidth::W512));
+        assert_eq!(BatchWidth::for_lanes(0), None);
+        assert_eq!(BatchWidth::for_lanes(513), None);
+        assert_eq!(BatchWidth::for_lanes(1024), None);
+        assert_eq!(BatchWidth::for_lanes(usize::MAX), None);
     }
 
     #[test]

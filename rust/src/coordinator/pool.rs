@@ -20,11 +20,23 @@
 //! Pooled sessions are bit-identical to fresh ones (the pooled-reuse
 //! invariant `tests` below pin across 4 threads × 8 queries): a session
 //! holds no query state a reset does not clear.
+//!
+//! The pool is **panic-hardened** for service use: a query thread that
+//! panics while holding a [`PooledSession`] (or even while inside the
+//! pool's own lock) neither poisons the pool for every later caller nor
+//! returns its possibly-torn session. Lock acquisition recovers from
+//! poisoning (`PoisonError::into_inner` — the guarded `Vec` cannot be
+//! left torn by a push/pop), and `PooledSession::drop` *discards* the
+//! session when the thread is unwinding (`std::thread::panicking()`),
+//! because a mid-query unwind can leave lane state that violates the
+//! "the next query's reset clears everything" invariant. Other threads
+//! keep acquiring and keep getting bit-identical results — the
+//! regression tests below inject both failure modes.
 
 use super::plan::TraversalPlan;
 use super::session::QuerySession;
 use std::ops::{Deref, DerefMut};
-use std::sync::{Arc, Mutex};
+use std::sync::{Arc, Mutex, MutexGuard};
 
 /// A mutex-guarded stack of idle [`QuerySession`]s over one plan.
 ///
@@ -51,6 +63,17 @@ pub struct SessionPool {
 }
 
 impl SessionPool {
+    /// Lock the idle stack, *recovering* from poisoning: the guarded
+    /// state is a plain `Vec<QuerySession>` whose push/pop cannot leave
+    /// it torn, so a panic on some other thread while it held this lock
+    /// must not cascade into every later `acquire()`/`idle()` (and — the
+    /// fatal case — into `PooledSession::drop` during an unwind, which
+    /// would abort the process). The panicking thread's *session* is the
+    /// only state that may be mid-query inconsistent, and that session is
+    /// discarded, not returned (see [`PooledSession`]'s `Drop`).
+    fn idle_lock(&self) -> MutexGuard<'_, Vec<QuerySession>> {
+        self.idle.lock().unwrap_or_else(|poisoned| poisoned.into_inner())
+    }
     /// An empty pool over `plan`; sessions are built lazily on
     /// [`acquire`](Self::acquire) misses (with the plan's native
     /// backends) and accumulate up to the peak concurrency actually
@@ -66,7 +89,7 @@ impl SessionPool {
 
     /// Number of sessions currently idle in the pool.
     pub fn idle(&self) -> usize {
-        self.idle.lock().expect("pool lock").len()
+        self.idle_lock().len()
     }
 
     /// Check out a session — an idle one, or a fresh one when the pool
@@ -75,12 +98,7 @@ impl SessionPool {
     /// entry, so checkout stays O(1) even after a wide batch left large
     /// lane buffers behind.
     pub fn acquire(&self) -> PooledSession<'_> {
-        let session = self
-            .idle
-            .lock()
-            .expect("pool lock")
-            .pop()
-            .unwrap_or_else(|| self.plan.session());
+        let session = self.idle_lock().pop().unwrap_or_else(|| self.plan.session());
         PooledSession { pool: self, session: Some(session) }
     }
 }
@@ -109,8 +127,20 @@ impl DerefMut for PooledSession<'_> {
 
 impl Drop for PooledSession<'_> {
     fn drop(&mut self) {
+        // A drop that runs while this thread is unwinding means the
+        // session may have been abandoned mid-query: lane state, queues,
+        // and distance arrays can be torn in ways the per-query entry
+        // resets were never designed to repair (they clear exactly the
+        // state a *completed* query used). Discard the session instead of
+        // returning it — the pool rebuilds on the next acquire miss — so
+        // the "pooled == fresh, bit-identical" invariant survives a
+        // panicking query thread.
+        if std::thread::panicking() {
+            self.session.take();
+            return;
+        }
         if let Some(s) = self.session.take() {
-            self.pool.idle.lock().expect("pool lock").push(s);
+            self.pool.idle_lock().push(s);
         }
     }
 }
@@ -189,5 +219,82 @@ mod tests {
         });
         // Everything came back.
         assert!(pool.idle() >= 1 && pool.idle() <= 4);
+    }
+
+    #[test]
+    fn panicking_query_thread_does_not_poison_the_pool() {
+        // The PR-6 bugfix regression: one thread panics mid-query while
+        // holding a pooled session. Before the fix this poisoned the
+        // idle mutex (every later acquire()/idle() panicked, and a
+        // PooledSession dropped during another unwind aborted the
+        // process); the session it held could also have been returned
+        // with torn lane state. After the fix: the session is discarded,
+        // the pool stays usable, and results stay bit-identical.
+        let (g, _) = uniform_random(300, 5, 9);
+        let plan = Arc::new(TraversalPlan::build(&g, EngineConfig::dgx2(4, 2)).unwrap());
+        let pool = SessionPool::new(Arc::clone(&plan));
+        // Warm the pool so the panicking thread reuses a pooled session.
+        drop(pool.acquire());
+        assert_eq!(pool.idle(), 1);
+        let panicked = std::thread::scope(|scope| {
+            scope
+                .spawn(|| {
+                    let mut session = pool.acquire();
+                    // A query has run: the session holds live state...
+                    session.run(5).unwrap();
+                    // ...and the thread dies before the query cycle
+                    // completes cleanly.
+                    panic!("injected mid-query panic");
+                })
+                .join()
+        });
+        assert!(panicked.is_err(), "the injected panic must propagate to join()");
+        // The dirty session was discarded, not returned.
+        assert_eq!(pool.idle(), 0, "a mid-panic session must not re-enter the pool");
+        // Other threads keep acquiring, and pooled results stay
+        // bit-identical to fresh sessions.
+        std::thread::scope(|scope| {
+            for t in 0..3u32 {
+                let pool = &pool;
+                let plan = &plan;
+                let g = &g;
+                scope.spawn(move || {
+                    let root = t * 37 % 300;
+                    let mut session = pool.acquire();
+                    let r = session.run(root).unwrap();
+                    assert_eq!(r.dist(), &serial_bfs(g, root)[..]);
+                    let fresh = plan.session().run(root).unwrap();
+                    assert_eq!(r.dist(), fresh.dist());
+                    assert_eq!(r.metrics().bytes(), fresh.metrics().bytes());
+                });
+            }
+        });
+        assert!(pool.idle() >= 1);
+    }
+
+    #[test]
+    fn poisoned_idle_lock_is_recovered() {
+        // Poison the idle mutex directly (a panic while the lock itself
+        // is held — the narrowest window of the old cascade) and check
+        // every public path still works instead of propagating the
+        // poison: acquire, checkout count, and the return-on-drop.
+        let (g, _) = uniform_random(120, 4, 2);
+        let plan = Arc::new(TraversalPlan::build(&g, EngineConfig::dgx2(2, 1)).unwrap());
+        let pool = SessionPool::new(Arc::clone(&plan));
+        drop(pool.acquire()); // one idle session
+        let result = std::panic::catch_unwind(std::panic::AssertUnwindSafe(|| {
+            let _guard = pool.idle.lock().unwrap();
+            panic!("poison the pool lock");
+        }));
+        assert!(result.is_err());
+        assert!(pool.idle.is_poisoned(), "test precondition: lock is poisoned");
+        assert_eq!(pool.idle(), 1);
+        {
+            let mut s = pool.acquire();
+            assert_eq!(pool.idle(), 0);
+            let r = s.run(3).unwrap();
+            assert_eq!(r.dist(), &serial_bfs(&g, 3)[..]);
+        } // drop returns the session through the poisoned lock
+        assert_eq!(pool.idle(), 1);
     }
 }

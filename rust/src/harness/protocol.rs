@@ -15,6 +15,21 @@
 //! acceptance pass requires the 256-wide batch to use strictly fewer
 //! sync rounds *and* fewer total exchange bytes than its 4 × 64 chunks).
 //!
+//! Since v3 the report carries a **serve-throughput** section
+//! (`serve_throughput`): a fully deterministic discrete-event simulation
+//! of the `serve` mode's cross-request coalescing, run through the *real*
+//! [`Coalescer`](crate::serve::Coalescer) dispatch logic and real engine
+//! service times quantized to integer microseconds — one open-loop
+//! arrival schedule served twice, without coalescing (window 0, batch 1)
+//! and with it. The committed numbers are the evidence that coalescing
+//! turns an overloaded single-session service (bounded queue full,
+//! rejections, multi-millisecond p50) into one that keeps up (strictly
+//! higher qps, lower p50, mean batch width > 1) at the committed load
+//! point. The section may additionally carry a `measured` subtree written
+//! by `benches/serve_throughput.rs --update` (wallclock numbers from a
+//! live socket run); `measured` is excluded from the freshness compare —
+//! wallclock is not reproducible — but its invariants are still checked.
+//!
 //! The artifact lives at the repository root and is kept fresh by CI:
 //! `butterfly-bfs bench-protocol --check` recomputes the protocol and
 //! fails when the committed file drifts (integer counters compare
@@ -27,8 +42,10 @@ use crate::bfs::msbfs::sample_batch_roots;
 use crate::coordinator::config::{BatchWidth, DirectionMode};
 use crate::coordinator::metrics::BatchMetrics;
 use crate::coordinator::{EngineConfig, TraversalPlan};
-use crate::graph::csr::Csr;
+use crate::graph::csr::{Csr, VertexId};
 use crate::graph::gen::table1_suite;
+use crate::serve::coalescer::Coalescer;
+use crate::serve::metrics::nearest_rank_us;
 use crate::util::json::Json;
 use crate::util::stats::gteps;
 use std::path::Path;
@@ -36,7 +53,8 @@ use std::path::Path;
 /// Protocol identifier (bump when the schema or configs change).
 /// v2 added the batch-width ablation section (`width_ablation`): wide
 /// lane masks vs chunked 64-root execution, in 1D and 2D.
-pub const PROTOCOL_NAME: &str = "engine-bench-v2";
+/// v3 added the serve-throughput simulation (`serve_throughput`).
+pub const PROTOCOL_NAME: &str = "engine-bench-v3";
 /// Suite graph the protocol runs on (the paper's GAP_kron analog).
 pub const PROTOCOL_GRAPH: &str = "kron-like";
 /// Scale adjustment: `kron-like` is scale 21; −10 ⇒ 2^11 vertices — big
@@ -60,6 +78,20 @@ pub const PROTOCOL_WIDE_GRID: (u32, u32) = (4, 4);
 /// Chunk size of the chunked-execution baseline (the single-word lane
 /// width).
 pub const PROTOCOL_CHUNK: usize = 64;
+/// Serve sim: number of open-loop requests.
+pub const PROTOCOL_SERVE_REQUESTS: usize = 256;
+/// Serve sim: fixed inter-arrival gap (µs) — ~33 k offered qps, chosen
+/// to overload a single uncoalesced session (whose per-query service
+/// time on this graph is ≈ 4× the gap) while a coalesced one keeps up.
+pub const PROTOCOL_SERVE_GAP_US: u64 = 30;
+/// Serve sim: admission-queue bound (requests past it are rejected).
+pub const PROTOCOL_SERVE_QUEUE_DEPTH: usize = 64;
+/// Serve sim: coalescing window of the coalesced mode (µs).
+pub const PROTOCOL_SERVE_WINDOW_US: u64 = 240;
+/// Serve sim: maximum coalesced batch width.
+pub const PROTOCOL_SERVE_MAX_BATCH: usize = 64;
+/// Serve sim: root-sampling seed of the request stream.
+pub const PROTOCOL_SERVE_SEED: u64 = 11;
 
 fn direction_modes() -> [(&'static str, DirectionMode); 3] {
     [
@@ -126,7 +158,8 @@ fn width_ablation_json(g: &Csr) -> Json {
         for &width in &PROTOCOL_WIDE_WIDTHS {
             let roots = sample_batch_roots(g, width, PROTOCOL_ROOT_SEED);
             let mut cfg = width_config(mode_2d);
-            cfg.batch_width = BatchWidth::for_lanes(width);
+            cfg.batch_width =
+                BatchWidth::for_lanes(width).expect("protocol widths are within the lane limit");
             let mut session =
                 TraversalPlan::build(g, cfg).expect("valid protocol plan").session();
             let m = session
@@ -194,6 +227,137 @@ fn width_ablation_json(g: &Csr) -> Json {
     Json::Arr(entries)
 }
 
+/// One serve-sim mode: drive the fixed open-loop arrival schedule
+/// through the real [`Coalescer`] against a single simulated worker.
+///
+/// Discrete-event rules (mirrored line-for-line in
+/// `python/bench_protocol_port.py::serve_sim_mode`):
+///
+/// * request `i` arrives at `i * PROTOCOL_SERVE_GAP_US`, rooted at the
+///   `i`-th sampled protocol root;
+/// * an arrival that finds the admission queue full is rejected
+///   (counted, never served);
+/// * a batch starts at `max(due_at, worker_free)` — the coalescer's own
+///   batch-full-or-window-expiry rule, gated on the single worker —
+///   with arrivals at or before that instant admitted first;
+/// * service time is the *real engine's* simulated clock for exactly
+///   that root multiset, quantized up to integer microseconds
+///   (`ceil(sim_seconds × 1e6)`), so every latency in the section is an
+///   integer and the CI freshness check compares them exactly;
+/// * per-request latency is `finish − arrival`.
+fn serve_sim_mode(g: &Csr, window_us: u64, max_batch: usize) -> Json {
+    let cfg = EngineConfig {
+        direction: DirectionMode::TopDown,
+        batch_width: BatchWidth::for_lanes(PROTOCOL_SERVE_MAX_BATCH)
+            .expect("protocol widths are within the lane limit"),
+        ..EngineConfig::dgx2(PROTOCOL_WIDE_NODES, PROTOCOL_FANOUT)
+    };
+    let plan = TraversalPlan::build(g, cfg).expect("valid protocol plan");
+    let mut session = plan.session();
+    let mut service_us = |roots: &[VertexId]| -> u64 {
+        let m = session.run_batch_metrics_only(roots).expect("protocol roots in range");
+        (m.sim_seconds() * 1e6).ceil() as u64
+    };
+    let roots = sample_batch_roots(g, PROTOCOL_SERVE_REQUESTS, PROTOCOL_SERVE_SEED);
+    let mut c: Coalescer<VertexId> =
+        Coalescer::new(window_us, max_batch, PROTOCOL_SERVE_QUEUE_DEPTH);
+    let mut latencies: Vec<u64> = Vec::new();
+    let mut widths: Vec<u64> = Vec::new();
+    let (mut rejected, mut worker_free, mut last_finish) = (0u64, 0u64, 0u64);
+    let mut next = 0usize;
+    loop {
+        let t_arr = (next < roots.len()).then(|| next as u64 * PROTOCOL_SERVE_GAP_US);
+        let t_disp = c.due_at().map(|d| d.max(worker_free));
+        let arrival_first = match (t_arr, t_disp) {
+            (None, None) => break,
+            (Some(_), None) => true,
+            (Some(ta), Some(t)) => ta <= t,
+            (None, Some(_)) => false,
+        };
+        if arrival_first {
+            let ta = t_arr.expect("arrival branch has an arrival");
+            if c.try_push(ta, None, roots[next]).is_err() {
+                rejected += 1;
+            }
+            next += 1;
+        } else {
+            let start = t_disp.expect("dispatch branch has a due batch");
+            let batch = c.take_batch();
+            let batch_roots: Vec<VertexId> = batch.iter().map(|p| p.item).collect();
+            let finish = start + service_us(&batch_roots);
+            worker_free = finish;
+            last_finish = finish;
+            widths.push(batch.len() as u64);
+            for p in &batch {
+                latencies.push(finish - p.arrived_us);
+            }
+        }
+    }
+    let completed = latencies.len() as u64;
+    let mut sorted = latencies.clone();
+    sorted.sort_unstable();
+    let mean_latency = if completed == 0 {
+        0.0
+    } else {
+        latencies.iter().sum::<u64>() as f64 / completed as f64
+    };
+    let qps = if last_finish == 0 {
+        0.0
+    } else {
+        completed as f64 * 1e6 / last_finish as f64
+    };
+    let batches = widths.len() as u64;
+    let mean_width = if batches == 0 {
+        0.0
+    } else {
+        widths.iter().sum::<u64>() as f64 / batches as f64
+    };
+    Json::obj(vec![
+        ("window_us", Json::u(window_us)),
+        ("max_batch", Json::u(max_batch as u64)),
+        ("offered", Json::u(roots.len() as u64)),
+        ("completed", Json::u(completed)),
+        ("rejected", Json::u(rejected)),
+        ("timed_out", Json::u(0)),
+        ("p50_us", Json::u(nearest_rank_us(&sorted, 50.0))),
+        ("p99_us", Json::u(nearest_rank_us(&sorted, 99.0))),
+        ("mean_latency_us", Json::n(mean_latency)),
+        ("qps", Json::n(qps)),
+        ("batches", Json::u(batches)),
+        ("mean_width", Json::n(mean_width)),
+        ("max_width", Json::u(widths.iter().copied().max().unwrap_or(0))),
+        ("span_us", Json::u(last_finish)),
+    ])
+}
+
+/// The serve-throughput section: the committed load point served with
+/// and without coalescing. The `measured` subtree (live wallclock
+/// numbers from `benches/serve_throughput.rs --update`) is attached by
+/// [`write_engine_bench`] when present in the existing artifact and is
+/// never part of the freshness compare.
+fn serve_throughput_json(g: &Csr) -> Json {
+    Json::obj(vec![
+        (
+            "sim",
+            Json::obj(vec![
+                ("requests", Json::u(PROTOCOL_SERVE_REQUESTS as u64)),
+                ("arrival_gap_us", Json::u(PROTOCOL_SERVE_GAP_US)),
+                ("queue_depth", Json::u(PROTOCOL_SERVE_QUEUE_DEPTH as u64)),
+                ("root_seed", Json::u(PROTOCOL_SERVE_SEED)),
+                ("nodes", Json::u(PROTOCOL_WIDE_NODES as u64)),
+                ("fanout", Json::u(PROTOCOL_FANOUT as u64)),
+                ("mode", Json::s("1d")),
+                ("direction", Json::s("topdown")),
+                ("baseline", serve_sim_mode(g, 0, 1)),
+                (
+                    "coalesced",
+                    serve_sim_mode(g, PROTOCOL_SERVE_WINDOW_US, PROTOCOL_SERVE_MAX_BATCH),
+                ),
+            ]),
+        ),
+    ])
+}
+
 /// Run the full protocol and build the report. Deterministic: fixed
 /// graph seed, fixed roots, simulated clocks only (no wallclock fields).
 pub fn engine_bench_report() -> Json {
@@ -245,31 +409,82 @@ pub fn engine_bench_report() -> Json {
         ),
         ("configs", Json::Arr(configs)),
         ("width_ablation", width_ablation_json(&g)),
+        ("serve_throughput", serve_throughput_json(&g)),
     ])
 }
 
-/// Write (or overwrite) the artifact at `path`.
+/// Detach `serve_throughput.measured` from a report, returning it.
+/// Wallclock numbers are not reproducible, so they never participate in
+/// the freshness compare.
+fn take_measured(report: &mut Json) -> Option<Json> {
+    let Json::Obj(top) = report else { return None };
+    let Some(Json::Obj(serve)) = top.get_mut("serve_throughput") else { return None };
+    serve.remove("measured")
+}
+
+/// Attach a `measured` subtree to a report's `serve_throughput` section.
+fn put_measured(report: &mut Json, measured: Json) {
+    if let Json::Obj(top) = report {
+        if let Some(Json::Obj(serve)) = top.get_mut("serve_throughput") {
+            serve.insert("measured".to_string(), measured);
+        }
+    }
+}
+
+/// Write (or overwrite) the artifact at `path`, preserving an existing
+/// `serve_throughput.measured` subtree (the load-generator's recorded
+/// wallclock numbers survive a protocol regeneration).
 pub fn write_engine_bench(path: &Path) -> std::io::Result<()> {
-    let mut text = engine_bench_report().render();
+    let mut report = engine_bench_report();
+    if let Ok(old_text) = std::fs::read_to_string(path) {
+        if let Ok(mut old) = Json::parse(&old_text) {
+            if let Some(measured) = take_measured(&mut old) {
+                put_measured(&mut report, measured);
+            }
+        }
+    }
+    let mut text = report.render();
     text.push('\n');
     std::fs::write(path, text)
+}
+
+/// Record the load generator's wallclock report into the committed
+/// artifact's `serve_throughput.measured` subtree (used by
+/// `benches/serve_throughput.rs --update`). Everything else in the
+/// artifact is left byte-untouched apart from re-rendering.
+pub fn update_measured_serve(path: &Path, measured: Json) -> Result<(), String> {
+    let text = std::fs::read_to_string(path).map_err(|e| {
+        format!("cannot read {}: {e} (run bench-protocol first)", path.display())
+    })?;
+    let mut report = Json::parse(&text)
+        .map_err(|e| format!("{} is not valid JSON: {e}", path.display()))?;
+    put_measured(&mut report, measured);
+    let mut out = report.render();
+    out.push('\n');
+    std::fs::write(path, out).map_err(|e| format!("cannot write {}: {e}", path.display()))
 }
 
 /// Recompute the protocol and verify the committed artifact matches:
 /// integer counters exactly, floats within relative tolerance 1e-6 —
 /// then verify the direction-optimization acceptance invariants on the
 /// fresh report itself. Any drift or invariant break is an `Err` with
-/// the offending JSON path.
+/// the offending JSON path. A `serve_throughput.measured` subtree is
+/// excluded from the compare (wallclock) but still invariant-checked.
 pub fn check_engine_bench(path: &Path) -> Result<(), String> {
     let committed = std::fs::read_to_string(path).map_err(|e| {
         format!("cannot read {}: {e} (run bench-protocol to create it)", path.display())
     })?;
-    let committed = Json::parse(&committed)
+    let mut committed = Json::parse(&committed)
         .map_err(|e| format!("{} is not valid JSON: {e}", path.display()))?;
+    let measured = take_measured(&mut committed);
     let fresh = engine_bench_report();
     compare("$", &committed, &fresh)
         .map_err(|e| format!("{} is stale: {e} (regenerate with bench-protocol)", path.display()))?;
-    acceptance(&fresh)
+    acceptance(&fresh)?;
+    if let Some(m) = measured {
+        acceptance_measured(&m)?;
+    }
+    Ok(())
 }
 
 /// Structural + numeric comparison (committed vs recomputed).
@@ -430,6 +645,98 @@ fn acceptance(report: &Json) -> Result<(), String> {
             ));
         }
     }
+    // Serve-throughput invariants: at the committed load point the
+    // coalesced service must strictly out-serve the uncoalesced one.
+    let sim = report
+        .get("serve_throughput")
+        .and_then(|s| s.get("sim"))
+        .ok_or("missing serve_throughput.sim")?;
+    let base = sim.get("baseline").ok_or("missing serve_throughput.sim.baseline")?;
+    let coal = sim.get("coalesced").ok_or("missing serve_throughput.sim.coalesced")?;
+    fn f64_field(d: &Json, key: &str) -> Result<f64, String> {
+        d.get(key).and_then(Json::as_f64).ok_or_else(|| format!("missing {key}"))
+    }
+    for (name, mode) in [("baseline", base), ("coalesced", coal)] {
+        let offered = u64_field(mode, "offered")?;
+        let completed = u64_field(mode, "completed")?;
+        let rejected = u64_field(mode, "rejected")?;
+        let timed_out = u64_field(mode, "timed_out")?;
+        if completed + rejected + timed_out != offered {
+            return Err(format!(
+                "serve sim {name}: {completed} completed + {rejected} rejected + \
+                 {timed_out} timed out != {offered} offered (requests went missing)"
+            ));
+        }
+        if u64_field(mode, "p50_us")? > u64_field(mode, "p99_us")? {
+            return Err(format!("serve sim {name}: p50 exceeds p99"));
+        }
+    }
+    let (base_qps, coal_qps) = (f64_field(base, "qps")?, f64_field(coal, "qps")?);
+    if coal_qps <= base_qps {
+        return Err(format!(
+            "serve sim: coalesced qps {coal_qps:.0} not strictly above baseline's \
+             {base_qps:.0} — coalescing stopped paying at the committed load point"
+        ));
+    }
+    if f64_field(base, "mean_width")? != 1.0 {
+        return Err("serve sim baseline: mean batch width must be exactly 1".to_string());
+    }
+    if f64_field(coal, "mean_width")? <= 1.0 {
+        return Err("serve sim coalesced: mean batch width must exceed 1".to_string());
+    }
+    if u64_field(base, "rejected")? == 0 {
+        return Err(
+            "serve sim baseline: expected rejections (the load point must overload \
+             the uncoalesced service)"
+                .to_string(),
+        );
+    }
+    if u64_field(coal, "rejected")? != 0 {
+        return Err("serve sim coalesced: must keep up with the load (no rejections)"
+            .to_string());
+    }
+    if u64_field(coal, "p50_us")? >= u64_field(base, "p50_us")? {
+        return Err("serve sim: coalesced p50 must beat the overloaded baseline's"
+            .to_string());
+    }
+    Ok(())
+}
+
+/// Invariants of the optional `serve_throughput.measured` subtree (live
+/// wallclock numbers from the load generator). Wallclock is noisy, so
+/// these are sanity checks — the fields CI's smoke asserts on must exist
+/// and be internally consistent — not perf gates.
+fn acceptance_measured(measured: &Json) -> Result<(), String> {
+    for mode in ["baseline", "coalesced"] {
+        let m = measured
+            .get(mode)
+            .ok_or_else(|| format!("serve measured: missing {mode}"))?;
+        for key in ["completed", "p50_us", "p99_us", "qps", "mean_batch_width"] {
+            m.get(key)
+                .and_then(Json::as_f64)
+                .ok_or_else(|| format!("serve measured {mode}: missing {key}"))?;
+        }
+        let completed = m.get("completed").and_then(Json::as_u64).unwrap_or(0);
+        if completed == 0 {
+            return Err(format!("serve measured {mode}: no completed requests"));
+        }
+        let p50 = m.get("p50_us").and_then(Json::as_u64).unwrap_or(0);
+        let p99 = m.get("p99_us").and_then(Json::as_u64).unwrap_or(0);
+        if p50 > p99 {
+            return Err(format!("serve measured {mode}: p50 exceeds p99"));
+        }
+        if m.get("qps").and_then(Json::as_f64).unwrap_or(0.0) <= 0.0 {
+            return Err(format!("serve measured {mode}: non-positive qps"));
+        }
+    }
+    let width = measured
+        .get("coalesced")
+        .and_then(|m| m.get("mean_batch_width"))
+        .and_then(Json::as_f64)
+        .unwrap_or(0.0);
+    if width < 1.0 {
+        return Err("serve measured coalesced: mean batch width below 1".to_string());
+    }
     Ok(())
 }
 
@@ -463,6 +770,19 @@ mod tests {
             let width = entry.get("width").and_then(Json::as_u64).unwrap();
             assert_eq!(words, width.div_ceil(64).next_power_of_two());
         }
+        // Serve-sim schema: all latencies are integer µs (the freshness
+        // compare is exact on them), and the accounting closes.
+        let sim = a.get("serve_throughput").unwrap().get("sim").unwrap();
+        for mode in ["baseline", "coalesced"] {
+            let m = sim.get(mode).unwrap();
+            for key in ["p50_us", "p99_us", "offered", "completed", "rejected"] {
+                assert!(m.get(key).and_then(Json::as_u64).is_some(), "{mode}.{key}");
+            }
+            assert_eq!(
+                m.get("offered").unwrap().as_u64().unwrap(),
+                PROTOCOL_SERVE_REQUESTS as u64
+            );
+        }
     }
 
     #[test]
@@ -477,6 +797,43 @@ mod tests {
         let broken = text.replacen("\"sync_rounds\":", "\"sync_rounds\":1", 1);
         std::fs::write(&path, broken).unwrap();
         assert!(check_engine_bench(&path).is_err());
+        let _ = std::fs::remove_file(&path);
+    }
+
+    #[test]
+    fn measured_subtree_is_preserved_excluded_from_compare_and_checked() {
+        let dir = std::env::temp_dir().join("bbfs_protocol_measured_test");
+        std::fs::create_dir_all(&dir).unwrap();
+        let path = dir.join("BENCH_engine.json");
+        write_engine_bench(&path).unwrap();
+        let mode = |p50: u64| {
+            Json::obj(vec![
+                ("completed", Json::u(100)),
+                ("p50_us", Json::u(p50)),
+                ("p99_us", Json::u(2_000)),
+                ("qps", Json::n(1234.5)),
+                ("mean_batch_width", Json::n(4.0)),
+            ])
+        };
+        update_measured_serve(
+            &path,
+            Json::obj(vec![("baseline", mode(900)), ("coalesced", mode(300))]),
+        )
+        .unwrap();
+        // Wallclock numbers are not in the recomputation, yet the check
+        // passes: measured is stripped before the compare.
+        check_engine_bench(&path).unwrap();
+        // Regenerating the artifact keeps the measured subtree.
+        write_engine_bench(&path).unwrap();
+        let kept = Json::parse(&std::fs::read_to_string(&path).unwrap()).unwrap();
+        assert!(
+            kept.get("serve_throughput").unwrap().get("measured").is_some(),
+            "write_engine_bench must preserve measured"
+        );
+        // But a malformed measured subtree still fails the check.
+        update_measured_serve(&path, Json::obj(vec![("baseline", mode(900))])).unwrap();
+        let err = check_engine_bench(&path).unwrap_err();
+        assert!(err.contains("missing coalesced"), "{err}");
         let _ = std::fs::remove_file(&path);
     }
 }

@@ -37,6 +37,7 @@ pub mod graph;
 pub mod harness;
 pub mod net;
 pub mod partition;
+pub mod serve;
 #[cfg(feature = "xla")]
 pub mod runtime;
 pub mod util;

@@ -13,6 +13,8 @@
 //! * `generate`  — generate a suite graph and write it to disk.
 //! * `inspect`   — print graph properties (|V|, |E|, degrees, diameter).
 //! * `schedule`  — print a butterfly/all-to-all schedule and its costs.
+//! * `serve`     — long-running TCP query service with cross-request
+//!                 batch coalescing (newline-delimited JSON protocol).
 //!
 //! Run `butterfly-bfs <subcommand> --help` for options.
 
@@ -71,6 +73,7 @@ fn dispatch(argv: Vec<String>) -> Result<()> {
         "generate" => cmd_generate(rest),
         "inspect" => cmd_inspect(rest),
         "schedule" => cmd_schedule(rest),
+        "serve" => cmd_serve(rest),
         "bench-protocol" => cmd_bench_protocol(rest),
         "--help" | "-h" | "help" => {
             print_usage();
@@ -90,6 +93,7 @@ fn print_usage() {
          \x20 generate  generate a suite graph to a file\n\
          \x20 inspect   print graph properties\n\
          \x20 schedule  print a communication schedule and its costs\n\
+         \x20 serve     TCP query service with cross-request batch coalescing\n\
          \x20 bench-protocol  write or check the committed BENCH_engine.json\n"
     );
 }
@@ -321,15 +325,15 @@ fn cmd_batch(argv: Vec<String>) -> Result<()> {
     let nodes = a.get_usize("nodes")?;
     let fanout: u32 = a.get_parse("fanout")?;
     let width = a.get_usize("width")?;
-    if width == 0 || width > 512 {
+    let Some(batch_width) = BatchWidth::for_lanes(width) else {
         bail!("--width must be in 1..=512 (got {width})");
-    }
+    };
     let partition = parse_partition_mode(&a.get("mode"), &a.get("grid"), nodes)?;
     let direction = parse_direction(&a.get("direction"))?;
     let cfg = EngineConfig {
         partition,
         direction,
-        batch_width: BatchWidth::for_lanes(width),
+        batch_width,
         parallel_phase1: a.get_flag("parallel"),
         parallel_phase2: a.get_flag("parallel-sync"),
         ..EngineConfig::dgx2(nodes, fanout)
@@ -390,6 +394,62 @@ fn cmd_batch(argv: Vec<String>) -> Result<()> {
             seq.sim_seconds / bm.sim_seconds().max(1e-12)
         );
     }
+    Ok(())
+}
+
+/// Long-running TCP query service over one shared plan. Single-root
+/// requests arriving within `--coalesce-window-us` are coalesced into
+/// one wide `run_batch` (up to `--max-batch` lanes — the MS-BFS
+/// amortization applied across clients); the admission queue is bounded
+/// (`--queue-depth`, typed `overloaded` past it) and per-request
+/// deadlines answer `timeout`. Send `{"op":"shutdown"}` to stop; the
+/// final metrics report prints as one JSON line on stdout.
+fn cmd_serve(argv: Vec<String>) -> Result<()> {
+    let spec = Args::new("butterfly-bfs serve", "TCP query service with batch coalescing")
+        .req("graph", "suite graph name or path (.bbfs/.mtx/edge list)")
+        .opt("addr", "127.0.0.1:0", "bind address (port 0 = ephemeral, printed on start)")
+        .opt("nodes", "16", "number of simulated compute nodes")
+        .opt("mode", "1d", "partition mode: 1d (butterfly) | 2d (fold/expand)")
+        .opt("grid", "auto", "2d processor grid RxC or auto")
+        .opt("fanout", "4", "butterfly fanout (1 = classic butterfly)")
+        .opt("scale-delta", "0", "suite graph scale adjustment (+/- log2)")
+        .opt("direction", "topdown", "phase-1 direction: topdown | bottomup | diropt")
+        .opt("workers", "2", "worker threads executing coalesced batches")
+        .opt("coalesce-window-us", "200", "how long a lone request waits for co-travellers")
+        .opt("max-batch", "64", "max coalesced batch width (1..=512)")
+        .opt("queue-depth", "1024", "admission-queue bound (overloaded past it)")
+        .opt("timeout-us", "0", "default per-request deadline in us (0 = none)");
+    let a = handle_help(spec.clone().parse(argv), &spec)?;
+
+    let max_batch = a.get_usize("max-batch")?;
+    // The serve-side face of the for_lanes width-clamp fix: an over-wide
+    // --max-batch is a config-time error echoing the requested width,
+    // never a silently narrower service.
+    let Some(batch_width) = BatchWidth::for_lanes(max_batch) else {
+        bail!("--max-batch must be in 1..=512 (got {max_batch})");
+    };
+    let g = load_graph(&a.get("graph"), a.get_parse::<i32>("scale-delta")?)?;
+    let nodes = a.get_usize("nodes")?;
+    let cfg = EngineConfig {
+        partition: parse_partition_mode(&a.get("mode"), &a.get("grid"), nodes)?,
+        direction: parse_direction(&a.get("direction"))?,
+        batch_width,
+        ..EngineConfig::dgx2(nodes, a.get_parse("fanout")?)
+    };
+    let plan = std::sync::Arc::new(TraversalPlan::build(&g, cfg)?);
+    let timeout = a.get_u64("timeout-us")?;
+    let serve_cfg = butterfly_bfs::serve::ServeConfig {
+        addr: a.get("addr"),
+        workers: a.get_usize("workers")?,
+        coalesce_window_us: a.get_u64("coalesce-window-us")?,
+        max_batch,
+        queue_depth: a.get_usize("queue-depth")?,
+        default_timeout_us: (timeout > 0).then_some(timeout),
+    };
+    let server = butterfly_bfs::serve::Server::bind(plan, serve_cfg)?;
+    println!("serving on {}", server.local_addr()?);
+    let report = server.run()?;
+    println!("{}", report.render());
     Ok(())
 }
 

@@ -1,0 +1,217 @@
+//! Cross-request batch coalescing: the admission queue + dispatch rule.
+//!
+//! The coalescer is the heart of the serve mode: single-root queries
+//! arriving within a window are packed into one wide `run_batch`, so
+//! one butterfly exchange per level serves the whole batch (the MS-BFS
+//! amortization applied across *tenants* instead of across one caller's
+//! root list). It is deliberately a pure data structure over an abstract
+//! clock — every decision is a function of caller-supplied microsecond
+//! timestamps — so the exact same logic drives the threaded server, the
+//! deterministic `serve_throughput` simulation in `harness/protocol.rs`,
+//! and the Python mirror in `python/bench_protocol_port.py`.
+//!
+//! Dispatch rule (the fairness contract):
+//!
+//! * a batch becomes due when it is **full** (`max_batch` pending — due
+//!   at the arrival time of the request that filled it), or when the
+//!   **window expires** for the oldest pending request
+//!   (`arrived_us + window_us`), whichever comes first;
+//! * `take_batch` always drains the *oldest* requests first (FIFO), so
+//!   a straggler that never sees a full batch still dispatches — alone,
+//!   as a width-1 batch — once its window runs out;
+//! * admission is bounded: past `depth` queued requests, `try_push`
+//!   hands the request back for a typed `Overloaded` response instead
+//!   of growing an unbounded queue.
+
+use std::collections::VecDeque;
+
+/// One queued request: the caller's payload plus the timestamps the
+/// dispatch rule needs.
+#[derive(Clone, Debug)]
+pub struct Pending<T> {
+    /// Arrival time (microseconds on the caller's clock).
+    pub arrived_us: u64,
+    /// Absolute deadline; a request still queued at its deadline is
+    /// expired via [`Coalescer::expire`] rather than dispatched.
+    pub deadline_us: Option<u64>,
+    /// The caller's request payload.
+    pub item: T,
+}
+
+/// Bounded FIFO admission queue with window/batch-full dispatch.
+///
+/// Time is abstract: all methods take `now_us` (or store timestamps the
+/// caller supplied), so the structure is fully deterministic under a
+/// simulated clock. See the module docs for the dispatch contract.
+#[derive(Debug)]
+pub struct Coalescer<T> {
+    window_us: u64,
+    max_batch: usize,
+    depth: usize,
+    pending: VecDeque<Pending<T>>,
+}
+
+impl<T> Coalescer<T> {
+    /// A coalescer that packs up to `max_batch` requests per dispatch,
+    /// waits at most `window_us` for co-travellers, and admits at most
+    /// `depth` queued requests.
+    pub fn new(window_us: u64, max_batch: usize, depth: usize) -> Self {
+        assert!(max_batch >= 1, "max_batch must be at least 1");
+        assert!(depth >= 1, "queue depth must be at least 1");
+        Self { window_us, max_batch, depth, pending: VecDeque::new() }
+    }
+
+    /// Number of queued requests.
+    pub fn len(&self) -> usize {
+        self.pending.len()
+    }
+
+    /// True when nothing is queued.
+    pub fn is_empty(&self) -> bool {
+        self.pending.is_empty()
+    }
+
+    /// Maximum batch width this coalescer will dispatch.
+    pub fn max_batch(&self) -> usize {
+        self.max_batch
+    }
+
+    /// Admit a request, or hand it back if the queue is at capacity
+    /// (the caller should answer `Overloaded`).
+    pub fn try_push(
+        &mut self,
+        now_us: u64,
+        deadline_us: Option<u64>,
+        item: T,
+    ) -> Result<(), T> {
+        if self.pending.len() >= self.depth {
+            return Err(item);
+        }
+        self.pending.push_back(Pending { arrived_us: now_us, deadline_us, item });
+        Ok(())
+    }
+
+    /// The instant the oldest batch becomes due, or `None` when the
+    /// queue is empty. Batch-full beats window expiry: with `max_batch`
+    /// requests queued the batch was due the moment the last one
+    /// arrived, which is never later than the oldest window expiry.
+    pub fn due_at(&self) -> Option<u64> {
+        if self.pending.len() >= self.max_batch {
+            return Some(self.pending[self.max_batch - 1].arrived_us);
+        }
+        self.pending.front().map(|p| p.arrived_us.saturating_add(self.window_us))
+    }
+
+    /// True when a batch should dispatch at `now_us`.
+    pub fn due(&self, now_us: u64) -> bool {
+        self.due_at().is_some_and(|t| t <= now_us)
+    }
+
+    /// Drain the oldest `min(len, max_batch)` requests, in arrival
+    /// order. Callers decide *when* via [`due`](Self::due); taking early
+    /// (e.g. on shutdown drain) is allowed.
+    pub fn take_batch(&mut self) -> Vec<Pending<T>> {
+        let n = self.pending.len().min(self.max_batch);
+        self.pending.drain(..n).collect()
+    }
+
+    /// Remove and return every queued request whose deadline has passed
+    /// (`now_us >= deadline_us`), preserving arrival order of both the
+    /// expired set and the survivors.
+    pub fn expire(&mut self, now_us: u64) -> Vec<Pending<T>> {
+        let mut expired = Vec::new();
+        let mut kept = VecDeque::with_capacity(self.pending.len());
+        for p in self.pending.drain(..) {
+            match p.deadline_us {
+                Some(d) if now_us >= d => expired.push(p),
+                _ => kept.push_back(p),
+            }
+        }
+        self.pending = kept;
+        expired
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn lone_request_dispatches_on_window_expiry_as_width_1() {
+        let mut c: Coalescer<u32> = Coalescer::new(200, 64, 8);
+        assert_eq!(c.due_at(), None);
+        c.try_push(1_000, None, 7).unwrap();
+        assert_eq!(c.due_at(), Some(1_200));
+        assert!(!c.due(1_199));
+        assert!(c.due(1_200));
+        let batch = c.take_batch();
+        assert_eq!(batch.len(), 1);
+        assert_eq!(batch[0].item, 7);
+        assert_eq!(batch[0].arrived_us, 1_000);
+        assert!(c.is_empty());
+    }
+
+    #[test]
+    fn batch_full_beats_window_expiry() {
+        let mut c: Coalescer<u32> = Coalescer::new(1_000, 4, 16);
+        for (i, t) in [10u64, 20, 30, 40].into_iter().enumerate() {
+            c.try_push(t, None, i as u32).unwrap();
+        }
+        // Full at the arrival of the 4th request — long before the
+        // oldest window would expire at t=1_010.
+        assert_eq!(c.due_at(), Some(40));
+        assert!(c.due(40));
+        let batch = c.take_batch();
+        assert_eq!(batch.iter().map(|p| p.item).collect::<Vec<_>>(), [0, 1, 2, 3]);
+    }
+
+    #[test]
+    fn take_batch_is_fifo_and_leaves_the_remainder() {
+        let mut c: Coalescer<u32> = Coalescer::new(100, 2, 16);
+        for (i, t) in [1u64, 2, 3, 4, 5].into_iter().enumerate() {
+            c.try_push(t, None, i as u32).unwrap();
+        }
+        assert_eq!(c.take_batch().iter().map(|p| p.item).collect::<Vec<_>>(), [0, 1]);
+        assert_eq!(c.take_batch().iter().map(|p| p.item).collect::<Vec<_>>(), [2, 3]);
+        // The straggler's window now drives the next dispatch.
+        assert_eq!(c.due_at(), Some(105));
+        assert_eq!(c.take_batch().iter().map(|p| p.item).collect::<Vec<_>>(), [4]);
+        assert_eq!(c.due_at(), None);
+    }
+
+    #[test]
+    fn admission_is_bounded_and_hands_the_request_back() {
+        let mut c: Coalescer<&str> = Coalescer::new(100, 64, 2);
+        c.try_push(0, None, "a").unwrap();
+        c.try_push(1, None, "b").unwrap();
+        assert_eq!(c.try_push(2, None, "c"), Err("c"));
+        assert_eq!(c.len(), 2);
+        // Draining frees capacity again.
+        let _ = c.take_batch();
+        c.try_push(3, None, "c").unwrap();
+    }
+
+    #[test]
+    fn expire_removes_only_past_deadline_requests_in_order() {
+        let mut c: Coalescer<u32> = Coalescer::new(1_000, 64, 16);
+        c.try_push(0, Some(50), 0).unwrap();
+        c.try_push(1, None, 1).unwrap();
+        c.try_push(2, Some(40), 2).unwrap();
+        c.try_push(3, Some(500), 3).unwrap();
+        let expired = c.expire(50);
+        assert_eq!(expired.iter().map(|p| p.item).collect::<Vec<_>>(), [0, 2]);
+        assert_eq!(c.len(), 2);
+        assert_eq!(c.take_batch().iter().map(|p| p.item).collect::<Vec<_>>(), [1, 3]);
+    }
+
+    #[test]
+    fn window_zero_max_batch_one_degenerates_to_no_coalescing() {
+        // The baseline mode of the serve_throughput protocol section.
+        let mut c: Coalescer<u32> = Coalescer::new(0, 1, 64);
+        c.try_push(100, None, 1).unwrap();
+        c.try_push(100, None, 2).unwrap();
+        assert_eq!(c.due_at(), Some(100));
+        assert_eq!(c.take_batch().len(), 1);
+        assert_eq!(c.take_batch().len(), 1);
+    }
+}

@@ -1,0 +1,223 @@
+//! Serving metrics: latency percentiles, throughput, and the
+//! coalesced-batch-width distribution.
+//!
+//! The same statistics appear in three places and must agree: the live
+//! server's `stats` op, the `benches/serve_throughput.rs` load-generator
+//! report, and the deterministic `serve_throughput` simulation committed
+//! to `BENCH_engine.json`. The shared definitions live here —
+//! percentiles are **nearest-rank on integer microseconds**
+//! ([`nearest_rank_us`]), so a simulated run produces bit-stable values
+//! the CI check can recompute exactly.
+
+use std::collections::BTreeMap;
+use std::sync::{Mutex, MutexGuard};
+
+use crate::util::json::Json;
+
+/// Nearest-rank percentile over an ascending-sorted slice of integer
+/// microsecond latencies: the smallest value with at least `p`% of the
+/// samples at or below it. Returns 0 for an empty slice.
+pub fn nearest_rank_us(sorted: &[u64], p: f64) -> u64 {
+    if sorted.is_empty() {
+        return 0;
+    }
+    let rank = ((p / 100.0) * sorted.len() as f64).ceil() as usize;
+    sorted[rank.clamp(1, sorted.len()) - 1]
+}
+
+/// Exact latency record: every completed request's queue-to-response
+/// time in microseconds. At serving-bench scale (thousands of requests)
+/// storing the samples beats a lossy sketch — percentiles stay exact and
+/// deterministic.
+#[derive(Debug, Default)]
+pub struct LatencyHistogram {
+    samples: Vec<u64>,
+}
+
+impl LatencyHistogram {
+    /// Record one completed request's latency.
+    pub fn record(&mut self, latency_us: u64) {
+        self.samples.push(latency_us);
+    }
+
+    /// Number of recorded samples.
+    pub fn count(&self) -> usize {
+        self.samples.len()
+    }
+
+    /// Nearest-rank percentile (integer microseconds).
+    pub fn percentile(&self, p: f64) -> u64 {
+        let mut sorted = self.samples.clone();
+        sorted.sort_unstable();
+        nearest_rank_us(&sorted, p)
+    }
+
+    /// Mean latency in microseconds (0 when empty).
+    pub fn mean(&self) -> f64 {
+        if self.samples.is_empty() {
+            return 0.0;
+        }
+        self.samples.iter().sum::<u64>() as f64 / self.samples.len() as f64
+    }
+}
+
+#[derive(Debug, Default)]
+struct MetricsInner {
+    latency: LatencyHistogram,
+    /// Dispatched batches keyed by width — the coalescing evidence.
+    width_counts: BTreeMap<usize, u64>,
+    completed: u64,
+    rejected: u64,
+    timed_out: u64,
+    bad_requests: u64,
+    errors: u64,
+}
+
+/// Thread-safe serving counters, shared by workers and the `stats` op.
+///
+/// Lock poisoning is recovered the same way as in
+/// [`SessionPool`](crate::coordinator::SessionPool): the guarded state
+/// is plain counters, always valid, so a panic elsewhere must not take
+/// the stats endpoint down with it.
+#[derive(Debug, Default)]
+pub struct ServeMetrics {
+    inner: Mutex<MetricsInner>,
+}
+
+impl ServeMetrics {
+    /// Fresh, all-zero metrics.
+    pub fn new() -> Self {
+        Self::default()
+    }
+
+    fn lock(&self) -> MutexGuard<'_, MetricsInner> {
+        self.inner.lock().unwrap_or_else(|poisoned| poisoned.into_inner())
+    }
+
+    /// Record one dispatched batch of `width` coalesced requests.
+    pub fn record_batch(&self, width: usize) {
+        *self.lock().width_counts.entry(width).or_insert(0) += 1;
+    }
+
+    /// Record one successfully answered request and its latency
+    /// (admission to response, microseconds).
+    pub fn record_completed(&self, latency_us: u64) {
+        let mut m = self.lock();
+        m.completed += 1;
+        m.latency.record(latency_us);
+    }
+
+    /// Record a request rejected with `Overloaded`.
+    pub fn record_rejected(&self) {
+        self.lock().rejected += 1;
+    }
+
+    /// Record a request that timed out in the queue.
+    pub fn record_timed_out(&self) {
+        self.lock().timed_out += 1;
+    }
+
+    /// Record a malformed or inadmissible request.
+    pub fn record_bad_request(&self) {
+        self.lock().bad_requests += 1;
+    }
+
+    /// Record a server-side execution failure.
+    pub fn record_error(&self) {
+        self.lock().errors += 1;
+    }
+
+    /// Number of completed requests so far.
+    pub fn completed(&self) -> u64 {
+        self.lock().completed
+    }
+
+    /// Snapshot every statistic as JSON. `elapsed_us` is the
+    /// observation-window length used for the qps figure.
+    pub fn report(&self, elapsed_us: u64) -> Json {
+        let m = self.lock();
+        let batches: u64 = m.width_counts.values().sum();
+        let coalesced_requests: u64 =
+            m.width_counts.iter().map(|(w, c)| *w as u64 * c).sum();
+        let mean_width =
+            if batches == 0 { 0.0 } else { coalesced_requests as f64 / batches as f64 };
+        let qps = if elapsed_us == 0 {
+            0.0
+        } else {
+            m.completed as f64 / (elapsed_us as f64 / 1e6)
+        };
+        let width_counts = Json::Obj(
+            m.width_counts
+                .iter()
+                .map(|(w, c)| (w.to_string(), Json::u(*c)))
+                .collect(),
+        );
+        Json::obj(vec![
+            ("completed", Json::u(m.completed)),
+            ("rejected", Json::u(m.rejected)),
+            ("timed_out", Json::u(m.timed_out)),
+            ("bad_requests", Json::u(m.bad_requests)),
+            ("errors", Json::u(m.errors)),
+            ("p50_us", Json::u(m.latency.percentile(50.0))),
+            ("p99_us", Json::u(m.latency.percentile(99.0))),
+            ("mean_latency_us", Json::n(m.latency.mean())),
+            ("qps", Json::n(qps)),
+            ("batches", Json::u(batches)),
+            ("mean_batch_width", Json::n(mean_width)),
+            ("width_counts", width_counts),
+        ])
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn nearest_rank_matches_hand_computed_values() {
+        let sorted = [10u64, 20, 30, 40, 50, 60, 70, 80, 90, 100];
+        assert_eq!(nearest_rank_us(&sorted, 50.0), 50);
+        assert_eq!(nearest_rank_us(&sorted, 99.0), 100);
+        assert_eq!(nearest_rank_us(&sorted, 10.0), 10);
+        assert_eq!(nearest_rank_us(&sorted, 100.0), 100);
+        assert_eq!(nearest_rank_us(&[], 50.0), 0);
+        assert_eq!(nearest_rank_us(&[7], 50.0), 7);
+        assert_eq!(nearest_rank_us(&[7], 99.0), 7);
+    }
+
+    #[test]
+    fn report_aggregates_counters_widths_and_percentiles() {
+        let m = ServeMetrics::new();
+        for lat in [100u64, 200, 300, 400] {
+            m.record_completed(lat);
+        }
+        m.record_batch(1);
+        m.record_batch(3);
+        m.record_rejected();
+        m.record_timed_out();
+        let r = m.report(2_000_000); // 2 seconds
+        assert_eq!(r.get("completed").unwrap().as_u64(), Some(4));
+        assert_eq!(r.get("rejected").unwrap().as_u64(), Some(1));
+        assert_eq!(r.get("timed_out").unwrap().as_u64(), Some(1));
+        assert_eq!(r.get("p50_us").unwrap().as_u64(), Some(200));
+        assert_eq!(r.get("p99_us").unwrap().as_u64(), Some(400));
+        assert_eq!(r.get("qps").unwrap().as_f64(), Some(2.0));
+        assert_eq!(r.get("batches").unwrap().as_u64(), Some(2));
+        assert_eq!(r.get("mean_batch_width").unwrap().as_f64(), Some(2.0));
+        let wc = r.get("width_counts").unwrap();
+        assert_eq!(wc.get("1").unwrap().as_u64(), Some(1));
+        assert_eq!(wc.get("3").unwrap().as_u64(), Some(1));
+    }
+
+    #[test]
+    fn metrics_survive_a_poisoning_panic() {
+        let m = std::sync::Arc::new(ServeMetrics::new());
+        let m2 = m.clone();
+        let _ = std::panic::catch_unwind(std::panic::AssertUnwindSafe(move || {
+            let _guard = m2.inner.lock().unwrap();
+            panic!("injected while holding the metrics lock");
+        }));
+        m.record_completed(10);
+        assert_eq!(m.completed(), 1);
+    }
+}

@@ -1,0 +1,50 @@
+//! Online query serving: a long-running TCP service over one shared
+//! [`TraversalPlan`](crate::coordinator::TraversalPlan), with
+//! **cross-request batch coalescing**.
+//!
+//! The engine's MS-BFS lane batching amortizes one butterfly exchange
+//! per level across up to 512 roots — but only if someone supplies 512
+//! roots at once. A single interactive user supplies one. This module
+//! turns the amortization into a *multi-tenant* win: single-root
+//! queries from many clients that arrive within a configurable window
+//! are packed into one wide
+//! [`run_batch`](crate::coordinator::QuerySession::run_batch), so 512
+//! users' queries cost one exchange per level instead of 512. Results
+//! are bit-identical to running each query alone (lanes are
+//! independent; the integration tests pin this), so coalescing is
+//! purely a scheduling decision.
+//!
+//! The moving parts:
+//!
+//! * [`coalescer`] — the bounded admission queue and the dispatch rule
+//!   (batch-full OR window-expiry, whichever first; per-request
+//!   deadlines). Pure and clock-agnostic, so the identical logic runs
+//!   in the threaded server, the deterministic `serve_throughput`
+//!   protocol simulation, and the Python mirror.
+//! * [`protocol`] — the newline-delimited JSON wire format and the
+//!   typed response statuses (`ok`, `overloaded`, `timeout`,
+//!   `bad_request`, `error`).
+//! * [`metrics`] — latency percentiles (nearest-rank, integer µs),
+//!   qps, and the coalesced-width distribution.
+//! * [`server`] — the threaded TCP server: acceptor, per-connection
+//!   readers (admission + validation), a dispatcher that owns the
+//!   clock, and workers drawing
+//!   [`PooledSession`](crate::coordinator::PooledSession)s from the
+//!   panic-hardened [`SessionPool`](crate::coordinator::SessionPool).
+//!
+//! Tuning in one sentence each: `--coalesce-window-us` trades p50
+//! latency (every request may wait the window) for throughput (wider
+//! batches, fewer exchanges); `--max-batch` caps the lane width (and
+//! thus per-batch memory); `--queue-depth` bounds admission so
+//! overload degrades into fast typed `overloaded` rejections instead
+//! of unbounded queueing collapse.
+
+pub mod coalescer;
+pub mod metrics;
+pub mod protocol;
+pub mod server;
+
+pub use coalescer::{Coalescer, Pending};
+pub use metrics::{nearest_rank_us, LatencyHistogram, ServeMetrics};
+pub use protocol::Request;
+pub use server::{ServeConfig, Server};

@@ -1,0 +1,225 @@
+//! The serve wire protocol: newline-delimited JSON over TCP.
+//!
+//! One request per line, one response per line, both compact JSON
+//! rendered by [`util::json`](crate::util::json) — the default build
+//! stays dependency-free. Requests:
+//!
+//! * `{"op":"query","root":R}` — BFS from root `R`. Optional fields:
+//!   `"id"` (u64 correlation tag, echoed back — responses on a pipelined
+//!   connection may complete out of order), `"targets"` (array of vertex
+//!   ids whose distances to return), `"timeout_us"` (per-request
+//!   deadline; a request still queued past it gets `status:"timeout"`).
+//! * `{"op":"stats"}` — server metrics snapshot, answered immediately.
+//! * `{"op":"shutdown"}` — graceful shutdown: queued queries drain,
+//!   then the listener closes.
+//!
+//! Every response carries `"status"`: `ok`, `overloaded` (admission
+//! queue at capacity — real backpressure), `timeout`, `bad_request`
+//! (malformed line, unknown op, out-of-range root — rejected at
+//! admission so one bad root can never fail a coalesced batch), or
+//! `error` (the query panicked server-side; the pooled session is
+//! discarded, other requests are unaffected).
+
+use crate::util::json::Json;
+
+/// A parsed client request.
+#[derive(Clone, Debug, PartialEq)]
+pub enum Request {
+    /// BFS from `root`, optionally reporting distances to `targets`.
+    Query {
+        /// Client correlation tag, echoed in the response (default 0).
+        id: u64,
+        /// Source vertex.
+        root: u64,
+        /// Vertices whose distances the response should include.
+        targets: Vec<u64>,
+        /// Per-request deadline relative to arrival, in microseconds.
+        timeout_us: Option<u64>,
+    },
+    /// Metrics snapshot.
+    Stats,
+    /// Graceful shutdown.
+    Shutdown,
+}
+
+/// Parse one request line. Errors are human-readable strings the server
+/// wraps into a `bad_request` response.
+pub fn parse_request(line: &str) -> Result<Request, String> {
+    let v = Json::parse(line).map_err(|e| format!("malformed JSON: {e}"))?;
+    let op = v
+        .get("op")
+        .and_then(|o| o.as_str())
+        .ok_or_else(|| "missing string field \"op\"".to_string())?;
+    match op {
+        "stats" => Ok(Request::Stats),
+        "shutdown" => Ok(Request::Shutdown),
+        "query" => {
+            let root = v
+                .get("root")
+                .and_then(|r| r.as_u64())
+                .ok_or_else(|| "query requires an unsigned \"root\"".to_string())?;
+            let id = v.get("id").and_then(|i| i.as_u64()).unwrap_or(0);
+            let timeout_us = v.get("timeout_us").and_then(|t| t.as_u64());
+            let targets = match v.get("targets") {
+                None => Vec::new(),
+                Some(t) => t
+                    .as_arr()
+                    .ok_or_else(|| "\"targets\" must be an array".to_string())?
+                    .iter()
+                    .map(|x| {
+                        x.as_u64().ok_or_else(|| {
+                            "\"targets\" entries must be unsigned integers".to_string()
+                        })
+                    })
+                    .collect::<Result<Vec<u64>, String>>()?,
+            };
+            Ok(Request::Query { id, root, targets, timeout_us })
+        }
+        other => Err(format!("unknown op {other:?}")),
+    }
+}
+
+/// Successful query response. `dists[i]` is the distance to
+/// `targets[i]`, `None` for unreachable (rendered as JSON `null`).
+/// `batch_width` and `wait_us` expose the coalescing decision: how many
+/// co-travellers this query shared its exchange with, and how long it
+/// sat in the admission queue.
+pub fn ok_query(
+    id: u64,
+    root: u64,
+    batch_width: usize,
+    wait_us: u64,
+    reached: u64,
+    depth: u64,
+    targets: &[u64],
+    dists: &[Option<u32>],
+) -> Json {
+    debug_assert_eq!(targets.len(), dists.len());
+    let mut pairs = vec![
+        ("status", Json::s("ok")),
+        ("id", Json::u(id)),
+        ("root", Json::u(root)),
+        ("batch_width", Json::u(batch_width as u64)),
+        ("wait_us", Json::u(wait_us)),
+        ("reached", Json::u(reached)),
+        ("depth", Json::u(depth)),
+    ];
+    if !targets.is_empty() {
+        pairs.push(("targets", Json::Arr(targets.iter().map(|&t| Json::u(t)).collect())));
+        pairs.push((
+            "dist",
+            Json::Arr(
+                dists
+                    .iter()
+                    .map(|d| d.map_or(Json::Null, |x| Json::u(x as u64)))
+                    .collect(),
+            ),
+        ));
+    }
+    Json::obj(pairs)
+}
+
+/// The admission queue was at capacity.
+pub fn overloaded(id: u64) -> Json {
+    Json::obj(vec![("status", Json::s("overloaded")), ("id", Json::u(id))])
+}
+
+/// The request's deadline passed while it was still queued.
+pub fn timeout(id: u64) -> Json {
+    Json::obj(vec![("status", Json::s("timeout")), ("id", Json::u(id))])
+}
+
+/// The request could not be admitted (malformed, unknown op, or
+/// out-of-range root/target — validated *before* coalescing).
+pub fn bad_request(id: u64, error: &str) -> Json {
+    Json::obj(vec![
+        ("status", Json::s("bad_request")),
+        ("id", Json::u(id)),
+        ("error", Json::s(error)),
+    ])
+}
+
+/// The query failed server-side (e.g. a panic inside the batch); the
+/// session was discarded, the pool stays healthy.
+pub fn internal_error(id: u64, error: &str) -> Json {
+    Json::obj(vec![
+        ("status", Json::s("error")),
+        ("id", Json::u(id)),
+        ("error", Json::s(error)),
+    ])
+}
+
+/// Metrics snapshot response.
+pub fn stats_ok(stats: Json) -> Json {
+    Json::obj(vec![("status", Json::s("ok")), ("stats", stats)])
+}
+
+/// Acknowledgement that a graceful shutdown has begun.
+pub fn shutdown_ok() -> Json {
+    Json::obj(vec![("status", Json::s("ok")), ("shutting_down", Json::Bool(true))])
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn parses_minimal_and_full_query() {
+        assert_eq!(
+            parse_request("{\"op\":\"query\",\"root\":5}").unwrap(),
+            Request::Query { id: 0, root: 5, targets: vec![], timeout_us: None }
+        );
+        assert_eq!(
+            parse_request(
+                "{\"op\":\"query\",\"id\":9,\"root\":5,\"targets\":[1,2],\"timeout_us\":250}"
+            )
+            .unwrap(),
+            Request::Query { id: 9, root: 5, targets: vec![1, 2], timeout_us: Some(250) }
+        );
+    }
+
+    #[test]
+    fn parses_control_ops() {
+        assert_eq!(parse_request("{\"op\":\"stats\"}").unwrap(), Request::Stats);
+        assert_eq!(parse_request("{\"op\":\"shutdown\"}").unwrap(), Request::Shutdown);
+    }
+
+    #[test]
+    fn rejects_malformed_requests_with_a_reason() {
+        assert!(parse_request("not json").unwrap_err().contains("malformed"));
+        assert!(parse_request("{\"root\":1}").unwrap_err().contains("op"));
+        assert!(parse_request("{\"op\":\"frobnicate\"}").unwrap_err().contains("unknown op"));
+        assert!(parse_request("{\"op\":\"query\"}").unwrap_err().contains("root"));
+        assert!(parse_request("{\"op\":\"query\",\"root\":1,\"targets\":3}")
+            .unwrap_err()
+            .contains("array"));
+    }
+
+    #[test]
+    fn ok_response_reports_coalescing_and_null_for_unreachable() {
+        let r = ok_query(3, 7, 12, 180, 900, 6, &[1, 2], &[Some(4), None]);
+        let text = r.render();
+        assert!(text.starts_with('{') && !text.contains('\n'));
+        assert_eq!(r.get("status").unwrap().as_str(), Some("ok"));
+        assert_eq!(r.get("batch_width").unwrap().as_u64(), Some(12));
+        assert_eq!(r.get("wait_us").unwrap().as_u64(), Some(180));
+        let dist = r.get("dist").unwrap().as_arr().unwrap();
+        assert_eq!(dist[0].as_u64(), Some(4));
+        assert_eq!(dist[1], Json::Null);
+        // Round-trips through the parser.
+        assert_eq!(Json::parse(&text).unwrap(), r);
+    }
+
+    #[test]
+    fn error_statuses_echo_the_id() {
+        for (resp, status) in [
+            (overloaded(42), "overloaded"),
+            (timeout(42), "timeout"),
+            (bad_request(42, "boom"), "bad_request"),
+            (internal_error(42, "boom"), "error"),
+        ] {
+            assert_eq!(resp.get("status").unwrap().as_str(), Some(status));
+            assert_eq!(resp.get("id").unwrap().as_u64(), Some(42));
+        }
+    }
+}

@@ -1,0 +1,424 @@
+//! The threaded TCP server: admission, coalescing dispatch, pooled
+//! execution, and graceful shutdown.
+//!
+//! Thread anatomy (all scoped — `run` returns only after every thread
+//! has exited):
+//!
+//! * **acceptor** — accepts connections until shutdown; the shutdown
+//!   path wakes a blocked `accept()` with a loop-back connection.
+//! * **reader (one per connection)** — parses newline-delimited JSON
+//!   requests. *Admission* happens here: roots and targets are
+//!   validated against the plan before a query may enter the coalescer
+//!   (one out-of-range root answered at admission can never fail a
+//!   whole coalesced batch with `RootOutOfRange`), `stats` is answered
+//!   inline, and a full queue answers `overloaded` immediately.
+//! * **dispatcher** — owns the clock side of the
+//!   [`Coalescer`](super::coalescer::Coalescer) contract: sleeps until
+//!   the earliest due time, expires past-deadline requests with
+//!   `timeout` responses, and hands due batches to the workers.
+//! * **workers** — draw a [`PooledSession`](crate::coordinator::PooledSession)
+//!   from the panic-hardened [`SessionPool`], run the coalesced
+//!   `run_batch`, and write every member's response. Batch execution is
+//!   wrapped in `catch_unwind`: a panicking query answers `error` for
+//!   its batch and discards the session (the pool's unwind-discard
+//!   path), while every other connection keeps being served.
+
+use std::io::{BufRead, BufReader, ErrorKind, Write};
+use std::net::{SocketAddr, TcpListener, TcpStream};
+use std::panic::{catch_unwind, AssertUnwindSafe};
+use std::sync::atomic::{AtomicBool, Ordering};
+use std::sync::{mpsc, Arc, Condvar, Mutex};
+use std::time::{Duration, Instant};
+
+use crate::bfs::serial::INF;
+use crate::coordinator::{BatchWidth, SessionPool, TraversalPlan};
+use crate::graph::csr::VertexId;
+use crate::util::json::Json;
+
+use super::coalescer::{Coalescer, Pending};
+use super::metrics::ServeMetrics;
+use super::protocol::{self, Request};
+
+/// Serving knobs; see the field docs for the latency/throughput levers.
+#[derive(Clone, Debug)]
+pub struct ServeConfig {
+    /// Bind address, e.g. `127.0.0.1:4600` (`:0` for an ephemeral port).
+    pub addr: String,
+    /// Worker threads executing coalesced batches.
+    pub workers: usize,
+    /// How long a lone request waits for co-travellers before it
+    /// dispatches anyway (the p50-vs-throughput lever; 0 disables
+    /// coalescing).
+    pub coalesce_window_us: u64,
+    /// Maximum coalesced batch width (1..=512 — one `BatchWidth` lane
+    /// set; checked at [`Server::bind`] via [`BatchWidth::for_lanes`]).
+    pub max_batch: usize,
+    /// Admission-queue bound; requests past it get `overloaded`.
+    pub queue_depth: usize,
+    /// Default per-request deadline when the request carries no
+    /// `timeout_us` field; `None` = wait indefinitely.
+    pub default_timeout_us: Option<u64>,
+}
+
+impl Default for ServeConfig {
+    fn default() -> Self {
+        Self {
+            addr: "127.0.0.1:0".to_string(),
+            workers: 2,
+            coalesce_window_us: 200,
+            max_batch: 64,
+            queue_depth: 1024,
+            default_timeout_us: None,
+        }
+    }
+}
+
+/// One admitted query waiting in the coalescer.
+struct QueuedQuery {
+    id: u64,
+    root: VertexId,
+    targets: Vec<VertexId>,
+    conn: Arc<Mutex<TcpStream>>,
+}
+
+/// A batch the dispatcher handed to the workers, stamped with its
+/// dispatch time (for the `wait_us` figure in responses).
+struct DispatchedBatch {
+    members: Vec<Pending<QueuedQuery>>,
+    dispatched_us: u64,
+}
+
+/// Write one response line, ignoring a vanished client.
+fn send_line(conn: &Mutex<TcpStream>, response: &Json) {
+    let mut stream = conn.lock().unwrap_or_else(|poisoned| poisoned.into_inner());
+    let _ = stream.write_all(response.render().as_bytes());
+    let _ = stream.write_all(b"\n");
+}
+
+/// A bound, not-yet-running query server over one shared plan.
+pub struct Server {
+    listener: TcpListener,
+    plan: Arc<TraversalPlan>,
+    cfg: ServeConfig,
+    metrics: Arc<ServeMetrics>,
+}
+
+impl Server {
+    /// Bind the listener and validate the config. A `max_batch` outside
+    /// `1..=512` is a config-time error echoing the requested width —
+    /// the serve-side face of the `for_lanes` width-clamp bugfix.
+    pub fn bind(plan: Arc<TraversalPlan>, cfg: ServeConfig) -> std::io::Result<Self> {
+        if BatchWidth::for_lanes(cfg.max_batch).is_none() {
+            return Err(std::io::Error::new(
+                ErrorKind::InvalidInput,
+                format!("--max-batch must be in 1..=512 (got {})", cfg.max_batch),
+            ));
+        }
+        if cfg.workers == 0 {
+            return Err(std::io::Error::new(
+                ErrorKind::InvalidInput,
+                "--workers must be at least 1",
+            ));
+        }
+        let listener = TcpListener::bind(&cfg.addr)?;
+        Ok(Self { listener, plan, cfg, metrics: Arc::new(ServeMetrics::new()) })
+    }
+
+    /// The bound address (resolves `:0` to the actual ephemeral port).
+    pub fn local_addr(&self) -> std::io::Result<SocketAddr> {
+        self.listener.local_addr()
+    }
+
+    /// Live metrics handle (shared with the `stats` op).
+    pub fn metrics(&self) -> Arc<ServeMetrics> {
+        Arc::clone(&self.metrics)
+    }
+
+    /// Serve until a client sends `{"op":"shutdown"}`: queued queries
+    /// drain (every admitted request is answered), then all threads
+    /// join. Returns the final metrics report.
+    pub fn run(self) -> std::io::Result<Json> {
+        let start = Instant::now();
+        let now_us = move || start.elapsed().as_micros() as u64;
+        let shutdown = AtomicBool::new(false);
+        let queue = (
+            Mutex::new(Coalescer::<QueuedQuery>::new(
+                self.cfg.coalesce_window_us,
+                self.cfg.max_batch,
+                self.cfg.queue_depth,
+            )),
+            Condvar::new(),
+        );
+        let pool = SessionPool::new(Arc::clone(&self.plan));
+        let (tx, rx) = mpsc::channel::<DispatchedBatch>();
+        let rx = Mutex::new(rx);
+        let local = self.local_addr()?;
+
+        std::thread::scope(|scope| -> std::io::Result<()> {
+            // Workers: coalesced batches through pooled sessions.
+            for _ in 0..self.cfg.workers {
+                let rx = &rx;
+                let pool = &pool;
+                let metrics = &self.metrics;
+                scope.spawn(move || loop {
+                    let batch = {
+                        let guard =
+                            rx.lock().unwrap_or_else(|poisoned| poisoned.into_inner());
+                        guard.recv()
+                    };
+                    let Ok(batch) = batch else { break };
+                    run_one_batch(pool, metrics, batch, now_us);
+                });
+            }
+
+            // Dispatcher: the coalescer's clock.
+            {
+                let queue = &queue;
+                let shutdown = &shutdown;
+                let metrics = &self.metrics;
+                let tx = tx.clone();
+                scope.spawn(move || {
+                    let (lock, cvar) = queue;
+                    let mut q =
+                        lock.lock().unwrap_or_else(|poisoned| poisoned.into_inner());
+                    loop {
+                        let now = now_us();
+                        for expired in q.expire(now) {
+                            metrics.record_timed_out();
+                            send_line(
+                                &expired.item.conn,
+                                &protocol::timeout(expired.item.id),
+                            );
+                        }
+                        let draining = shutdown.load(Ordering::SeqCst);
+                        if q.due(now) || (draining && !q.is_empty()) {
+                            let batch = DispatchedBatch {
+                                members: q.take_batch(),
+                                dispatched_us: now,
+                            };
+                            let _ = tx.send(batch);
+                            continue;
+                        }
+                        if draining && q.is_empty() {
+                            break;
+                        }
+                        // Sleep until the earliest due time (capped so a
+                        // shutdown or a sharper deadline is noticed).
+                        let wait = q
+                            .due_at()
+                            .map(|t| t.saturating_sub(now))
+                            .unwrap_or(50_000)
+                            .clamp(1, 50_000);
+                        let (guard, _) = cvar
+                            .wait_timeout(q, Duration::from_micros(wait))
+                            .unwrap_or_else(|poisoned| poisoned.into_inner());
+                        q = guard;
+                    }
+                    drop(tx); // last sender (with the one below) gone → workers exit
+                });
+            }
+            drop(tx);
+
+            // Acceptor + readers, on the scope's own thread.
+            for stream in self.listener.incoming() {
+                if shutdown.load(Ordering::SeqCst) {
+                    break;
+                }
+                let Ok(stream) = stream else { continue };
+                let queue = &queue;
+                let shutdown = &shutdown;
+                let metrics = &self.metrics;
+                let plan = &self.plan;
+                let cfg = &self.cfg;
+                scope.spawn(move || {
+                    serve_connection(stream, plan, queue, shutdown, metrics, cfg, now_us, local);
+                });
+            }
+            // Unblock the dispatcher in case it is mid-sleep.
+            queue.1.notify_all();
+            Ok(())
+        })?;
+
+        Ok(self.metrics.report(now_us()))
+    }
+}
+
+/// Per-connection reader: parse, validate, admit (or answer inline).
+fn serve_connection(
+    stream: TcpStream,
+    plan: &TraversalPlan,
+    queue: &(Mutex<Coalescer<QueuedQuery>>, Condvar),
+    shutdown: &AtomicBool,
+    metrics: &ServeMetrics,
+    cfg: &ServeConfig,
+    now_us: impl Fn() -> u64,
+    local: SocketAddr,
+) {
+    // Short read timeouts keep the reader responsive to shutdown even
+    // on an idle connection.
+    let _ = stream.set_read_timeout(Some(Duration::from_millis(100)));
+    let conn = Arc::new(Mutex::new(match stream.try_clone() {
+        Ok(w) => w,
+        Err(_) => return,
+    }));
+    let mut reader = BufReader::new(stream);
+    let mut line = String::new();
+    loop {
+        line.clear();
+        match reader.read_line(&mut line) {
+            Ok(0) => return, // EOF
+            Ok(_) => {}
+            Err(e)
+                if e.kind() == ErrorKind::WouldBlock || e.kind() == ErrorKind::TimedOut =>
+            {
+                if shutdown.load(Ordering::SeqCst) {
+                    return;
+                }
+                continue;
+            }
+            Err(_) => return,
+        }
+        if line.trim().is_empty() {
+            continue;
+        }
+        let request = match protocol::parse_request(line.trim()) {
+            Ok(r) => r,
+            Err(e) => {
+                metrics.record_bad_request();
+                send_line(&conn, &protocol::bad_request(0, &e));
+                continue;
+            }
+        };
+        match request {
+            Request::Stats => {
+                send_line(&conn, &protocol::stats_ok(metrics.report(now_us())));
+            }
+            Request::Shutdown => {
+                shutdown.store(true, Ordering::SeqCst);
+                send_line(&conn, &protocol::shutdown_ok());
+                queue.1.notify_all();
+                // Wake a blocked accept() so the acceptor loop observes
+                // the flag and stops.
+                let _ = TcpStream::connect(local);
+                return;
+            }
+            Request::Query { id, root, targets, timeout_us } => {
+                let n = plan.num_vertices() as u64;
+                if root >= n {
+                    metrics.record_bad_request();
+                    let e = format!("root {root} out of range (graph has {n} vertices)");
+                    send_line(&conn, &protocol::bad_request(id, &e));
+                    continue;
+                }
+                if let Some(&t) = targets.iter().find(|&&t| t >= n) {
+                    metrics.record_bad_request();
+                    let e = format!("target {t} out of range (graph has {n} vertices)");
+                    send_line(&conn, &protocol::bad_request(id, &e));
+                    continue;
+                }
+                if shutdown.load(Ordering::SeqCst) {
+                    metrics.record_rejected();
+                    send_line(&conn, &protocol::overloaded(id));
+                    continue;
+                }
+                let now = now_us();
+                let deadline = timeout_us
+                    .or(cfg.default_timeout_us)
+                    .map(|t| now.saturating_add(t));
+                let query = QueuedQuery {
+                    id,
+                    root: root as VertexId,
+                    targets: targets.iter().map(|&t| t as VertexId).collect(),
+                    conn: Arc::clone(&conn),
+                };
+                let admitted = {
+                    let mut q =
+                        queue.0.lock().unwrap_or_else(|poisoned| poisoned.into_inner());
+                    q.try_push(now, deadline, query)
+                };
+                match admitted {
+                    Ok(()) => queue.1.notify_all(),
+                    Err(rejected) => {
+                        metrics.record_rejected();
+                        send_line(&rejected.conn, &protocol::overloaded(rejected.id));
+                    }
+                }
+            }
+        }
+    }
+}
+
+/// Execute one coalesced batch through a pooled session and answer
+/// every member. Panics inside the engine answer `error` and discard
+/// the session via the pool's unwind-discard path.
+fn run_one_batch(
+    pool: &SessionPool,
+    metrics: &ServeMetrics,
+    batch: DispatchedBatch,
+    now_us: impl Fn() -> u64,
+) {
+    let roots: Vec<VertexId> = batch.members.iter().map(|p| p.item.root).collect();
+    let width = roots.len();
+    let result = catch_unwind(AssertUnwindSafe(|| {
+        // The PooledSession lives entirely inside the unwind boundary:
+        // a panic drops it while `thread::panicking()` is observable on
+        // the unwind path of this closure's stack, discarding the
+        // possibly-torn session instead of returning it to the pool.
+        let mut session = pool.acquire();
+        session.run_batch(&roots)
+    }));
+    match result {
+        Ok(Ok(b)) => {
+            metrics.record_batch(width);
+            let finished_us = now_us();
+            for (lane, p) in batch.members.iter().enumerate() {
+                let dist = b.dist(lane);
+                let reached = dist.iter().filter(|&&d| d != INF).count() as u64;
+                let depth =
+                    dist.iter().filter(|&&d| d != INF).max().copied().unwrap_or(0) as u64;
+                let dists: Vec<Option<u32>> = p
+                    .item
+                    .targets
+                    .iter()
+                    .map(|&t| {
+                        let d = dist[t as usize];
+                        (d != INF).then_some(d)
+                    })
+                    .collect();
+                let latency = finished_us.saturating_sub(p.arrived_us);
+                let wait = batch.dispatched_us.saturating_sub(p.arrived_us);
+                metrics.record_completed(latency);
+                send_line(
+                    &p.item.conn,
+                    &protocol::ok_query(
+                        p.item.id,
+                        p.item.root as u64,
+                        width,
+                        wait,
+                        reached,
+                        depth,
+                        &p.item.targets.iter().map(|&t| t as u64).collect::<Vec<_>>(),
+                        &dists,
+                    ),
+                );
+            }
+        }
+        Ok(Err(e)) => {
+            // Roots are validated at admission, so this is unreachable
+            // in practice; answer every member rather than going silent.
+            for p in &batch.members {
+                metrics.record_error();
+                send_line(&p.item.conn, &protocol::internal_error(p.item.id, &e.to_string()));
+            }
+        }
+        Err(_panic) => {
+            for p in &batch.members {
+                metrics.record_error();
+                send_line(
+                    &p.item.conn,
+                    &protocol::internal_error(p.item.id, "query panicked server-side"),
+                );
+            }
+        }
+    }
+}

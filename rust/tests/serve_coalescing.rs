@@ -1,0 +1,362 @@
+//! Serve-mode integration tests: coalesced results are bit-identical to
+//! per-request runs (the property the whole serving layer rests on),
+//! the fairness/deadline rules hold end-to-end over a real socket, and
+//! overload produces typed backpressure instead of queue collapse.
+
+use butterfly_bfs::coordinator::{
+    BatchWidth, EngineConfig, PartitionMode, SessionPool, TraversalPlan,
+};
+use butterfly_bfs::graph::csr::VertexId;
+use butterfly_bfs::graph::gen::urand::uniform_random;
+use butterfly_bfs::serve::{ServeConfig, Server};
+use butterfly_bfs::util::json::Json;
+use std::io::{BufRead, BufReader, Write};
+use std::net::TcpStream;
+use std::sync::Arc;
+use std::time::Duration;
+
+// ---------- the coalescing-correctness property ----------
+
+/// N single-root requests coalesced into one wide batch must return
+/// distances bit-identical to N fresh `session.run(root)` calls. This is
+/// the exact substitution the server performs, checked across both
+/// partition modes, duplicate roots, and partial final batches.
+#[test]
+fn coalesced_batches_bit_identical_to_per_request_runs() {
+    let (g, _) = uniform_random(600, 6, 23);
+    let configs = [
+        ("1d", EngineConfig::dgx2(4, 2)),
+        (
+            "2d",
+            EngineConfig {
+                partition: PartitionMode::TwoD { rows: 2, cols: 2 },
+                ..EngineConfig::dgx2(4, 1)
+            },
+        ),
+    ];
+    for (mode, cfg) in configs {
+        let plan = TraversalPlan::build(&g, cfg).unwrap();
+        // Width sweep crosses lane-word boundaries and includes the
+        // partial final batch a coalescing window produces (widths that
+        // are not multiples of anything), plus duplicate roots across
+        // "requests" — each lane is an independent traversal even when
+        // two clients ask for the same root.
+        for width in [1usize, 2, 7, 64, 65, 130] {
+            let roots: Vec<VertexId> = (0..width)
+                .map(|i| if i % 5 == 4 { 17 } else { ((i * 53) % 600) as VertexId })
+                .collect();
+            let mut session = plan.session();
+            let batch = session.run_batch(&roots).unwrap();
+            for (lane, &root) in roots.iter().enumerate() {
+                let solo = plan.session().run(root).unwrap();
+                assert_eq!(
+                    batch.dist(lane),
+                    solo.dist(),
+                    "{mode} width {width} lane {lane} root {root}: coalesced \
+                     distances diverge from a per-request run"
+                );
+            }
+        }
+    }
+}
+
+/// The same property through the SessionPool (the server's actual
+/// execution path), with an injected panic in between: a panicking query
+/// on one thread must not perturb any later pooled result.
+#[test]
+fn pooled_coalescing_survives_injected_panic_bitwise() {
+    let (g, _) = uniform_random(500, 5, 31);
+    let plan = Arc::new(TraversalPlan::build(&g, EngineConfig::dgx2(4, 2)).unwrap());
+    let pool = SessionPool::new(Arc::clone(&plan));
+    let roots: Vec<VertexId> = (0..9).map(|i| (i * 37 % 500) as VertexId).collect();
+    let before = pool.acquire().run_batch(&roots).unwrap();
+    let panicked = std::thread::scope(|scope| {
+        scope
+            .spawn(|| {
+                let mut session = pool.acquire();
+                session.run(1).unwrap();
+                panic!("injected");
+            })
+            .join()
+    });
+    assert!(panicked.is_err());
+    let after = pool.acquire().run_batch(&roots).unwrap();
+    for lane in 0..roots.len() {
+        assert_eq!(before.dist(lane), after.dist(lane), "lane {lane}");
+        assert_eq!(before.dist(lane), plan.session().run(roots[lane]).unwrap().dist());
+    }
+}
+
+// ---------- socket end-to-end ----------
+
+struct Client {
+    reader: BufReader<TcpStream>,
+    writer: TcpStream,
+    line: String,
+}
+
+impl Client {
+    fn connect(addr: std::net::SocketAddr) -> Client {
+        let stream = TcpStream::connect(addr).unwrap();
+        stream.set_read_timeout(Some(Duration::from_secs(30))).unwrap();
+        Client {
+            writer: stream.try_clone().unwrap(),
+            reader: BufReader::new(stream),
+            line: String::new(),
+        }
+    }
+
+    fn send(&mut self, req: &Json) {
+        self.writer.write_all(req.render().as_bytes()).unwrap();
+        self.writer.write_all(b"\n").unwrap();
+    }
+
+    fn recv(&mut self) -> Json {
+        self.line.clear();
+        let n = self.reader.read_line(&mut self.line).unwrap();
+        assert!(n > 0, "server closed the connection");
+        Json::parse(self.line.trim()).unwrap()
+    }
+}
+
+fn query(id: u64, root: u64, targets: &[u64]) -> Json {
+    let mut fields = vec![
+        ("op", Json::s("query")),
+        ("id", Json::u(id)),
+        ("root", Json::u(root)),
+    ];
+    if !targets.is_empty() {
+        fields.push(("targets", Json::Arr(targets.iter().map(|&t| Json::u(t)).collect())));
+    }
+    Json::obj(fields)
+}
+
+fn boot(
+    plan: &Arc<TraversalPlan>,
+    cfg: ServeConfig,
+) -> (std::net::SocketAddr, std::thread::JoinHandle<Json>) {
+    let server = Server::bind(Arc::clone(plan), cfg).unwrap();
+    let addr = server.local_addr().unwrap();
+    (addr, std::thread::spawn(move || server.run().unwrap()))
+}
+
+/// Distances over the wire match fresh in-process runs, for every
+/// status-ok response of a burst of coalescible single-root queries.
+#[test]
+fn served_distances_match_in_process_runs() {
+    let (g, _) = uniform_random(400, 5, 7);
+    let plan = Arc::new(TraversalPlan::build(&g, EngineConfig::dgx2(4, 2)).unwrap());
+    let (addr, server) = boot(
+        &plan,
+        ServeConfig {
+            coalesce_window_us: 20_000,
+            max_batch: 16,
+            ..ServeConfig::default()
+        },
+    );
+    let mut c = Client::connect(addr);
+    let n = 12u64;
+    let targets: Vec<u64> = vec![0, 17, 399];
+    for id in 0..n {
+        c.send(&query(id, id * 31 % 400, &targets));
+    }
+    let mut seen = vec![false; n as usize];
+    for _ in 0..n {
+        let resp = c.recv();
+        assert_eq!(resp.get("status").unwrap().as_str(), Some("ok"));
+        let id = resp.get("id").unwrap().as_u64().unwrap();
+        let root = resp.get("root").unwrap().as_u64().unwrap();
+        assert_eq!(root, id * 31 % 400, "responses must echo their request");
+        seen[id as usize] = true;
+        let solo = plan.session().run(root as VertexId).unwrap();
+        let dist = resp.get("dist").unwrap().as_arr().unwrap();
+        for (t, d) in targets.iter().zip(dist) {
+            let expect = solo.dist()[*t as usize];
+            match d.as_u64() {
+                Some(served) => assert_eq!(served, expect as u64, "root {root} target {t}"),
+                None => assert_eq!(expect, u32::MAX, "root {root} target {t}"),
+            }
+        }
+        let reached = solo.dist().iter().filter(|&&d| d != u32::MAX).count() as u64;
+        assert_eq!(resp.get("reached").unwrap().as_u64(), Some(reached));
+        // Burst of 12 with a 3 ms window and max_batch 16: at least some
+        // requests must have shared a batch.
+        assert!(resp.get("batch_width").unwrap().as_u64().unwrap() >= 1);
+    }
+    assert!(seen.iter().all(|&s| s), "every request answered exactly once");
+    c.send(&Json::obj(vec![("op", Json::s("shutdown"))]));
+    assert_eq!(c.recv().get("shutting_down"), Some(&Json::Bool(true)));
+    let report = server.join().unwrap();
+    assert_eq!(report.get("completed").unwrap().as_u64(), Some(n));
+    // The burst coalesced: strictly fewer batches than requests.
+    assert!(report.get("batches").unwrap().as_u64().unwrap() < n);
+    assert!(report.get("mean_batch_width").unwrap().as_f64().unwrap() > 1.0);
+}
+
+/// The deadline rule: a lone request whose window expires still
+/// dispatches — as a width-1 batch — rather than waiting for company.
+#[test]
+fn lone_request_dispatches_as_width_1_on_window_expiry() {
+    let (g, _) = uniform_random(200, 4, 3);
+    let plan = Arc::new(TraversalPlan::build(&g, EngineConfig::dgx2(2, 1)).unwrap());
+    let (addr, server) = boot(
+        &plan,
+        ServeConfig {
+            coalesce_window_us: 2_000,
+            max_batch: 64,
+            ..ServeConfig::default()
+        },
+    );
+    let mut c = Client::connect(addr);
+    c.send(&query(1, 5, &[]));
+    let resp = c.recv();
+    assert_eq!(resp.get("status").unwrap().as_str(), Some("ok"));
+    assert_eq!(resp.get("batch_width").unwrap().as_u64(), Some(1));
+    c.send(&Json::obj(vec![("op", Json::s("shutdown"))]));
+    c.recv();
+    server.join().unwrap();
+}
+
+/// Typed backpressure, deterministically: queue depth 1 and an hour-long
+/// window mean the second concurrent request *must* be rejected with
+/// `overloaded`, while the first is still answered on shutdown drain.
+#[test]
+fn overload_is_a_typed_rejection_and_drain_answers_the_queued() {
+    let (g, _) = uniform_random(200, 4, 5);
+    let plan = Arc::new(TraversalPlan::build(&g, EngineConfig::dgx2(2, 1)).unwrap());
+    let (addr, server) = boot(
+        &plan,
+        ServeConfig {
+            coalesce_window_us: 3_600_000_000, // effectively forever
+            max_batch: 64,
+            queue_depth: 1,
+            ..ServeConfig::default()
+        },
+    );
+    let mut c = Client::connect(addr);
+    // One connection's requests are admitted strictly in order by its
+    // reader thread, so this sequence is deterministic: query 1 occupies
+    // the depth-1 queue (its window never expires) before query 2 is
+    // even parsed. The interleaved stats op proves it is queued, not
+    // completed, and exercises the inline stats path.
+    c.send(&query(1, 3, &[]));
+    c.send(&Json::obj(vec![("op", Json::s("stats"))]));
+    let stats = c.recv();
+    assert_eq!(stats.get("status").unwrap().as_str(), Some("ok"));
+    let s = stats.get("stats").unwrap();
+    assert_eq!(s.get("completed").unwrap().as_u64(), Some(0));
+    assert_eq!(s.get("rejected").unwrap().as_u64(), Some(0));
+    c.send(&query(2, 4, &[]));
+    let resp = c.recv();
+    assert_eq!(resp.get("status").unwrap().as_str(), Some("overloaded"));
+    assert_eq!(resp.get("id").unwrap().as_u64(), Some(2));
+    // Shutdown drains the queue: the first query is answered, not lost.
+    c.send(&Json::obj(vec![("op", Json::s("shutdown"))]));
+    let mut statuses = Vec::new();
+    for _ in 0..2 {
+        let r = c.recv();
+        if r.get("shutting_down").is_some() {
+            statuses.push("shutdown".to_string());
+        } else {
+            assert_eq!(r.get("status").unwrap().as_str(), Some("ok"));
+            assert_eq!(r.get("id").unwrap().as_u64(), Some(1));
+            statuses.push("ok".to_string());
+        }
+    }
+    assert!(statuses.contains(&"ok".to_string()), "drained query must be answered");
+    let report = server.join().unwrap();
+    assert_eq!(report.get("completed").unwrap().as_u64(), Some(1));
+    assert_eq!(report.get("rejected").unwrap().as_u64(), Some(1));
+}
+
+/// A request carrying a short deadline times out in the queue (window
+/// far longer than the deadline) with a typed `timeout` response.
+#[test]
+fn queued_request_past_its_deadline_times_out() {
+    let (g, _) = uniform_random(200, 4, 6);
+    let plan = Arc::new(TraversalPlan::build(&g, EngineConfig::dgx2(2, 1)).unwrap());
+    let (addr, server) = boot(
+        &plan,
+        ServeConfig {
+            coalesce_window_us: 3_600_000_000,
+            max_batch: 64,
+            ..ServeConfig::default()
+        },
+    );
+    let mut c = Client::connect(addr);
+    c.send(&Json::obj(vec![
+        ("op", Json::s("query")),
+        ("id", Json::u(9)),
+        ("root", Json::u(3)),
+        ("timeout_us", Json::u(5_000)),
+    ]));
+    let resp = c.recv();
+    assert_eq!(resp.get("status").unwrap().as_str(), Some("timeout"));
+    assert_eq!(resp.get("id").unwrap().as_u64(), Some(9));
+    c.send(&Json::obj(vec![("op", Json::s("shutdown"))]));
+    c.recv();
+    let report = server.join().unwrap();
+    assert_eq!(report.get("timed_out").unwrap().as_u64(), Some(1));
+}
+
+/// Admission-time validation: a bad root (or target) is answered
+/// `bad_request` immediately and can never poison a coalesced batch;
+/// malformed lines likewise. Well-formed traffic on the same connection
+/// keeps working afterwards.
+#[test]
+fn bad_requests_rejected_at_admission_not_in_batch() {
+    let (g, _) = uniform_random(100, 4, 8);
+    let plan = Arc::new(TraversalPlan::build(&g, EngineConfig::dgx2(2, 1)).unwrap());
+    let (addr, server) = boot(
+        &plan,
+        ServeConfig { coalesce_window_us: 500, max_batch: 8, ..ServeConfig::default() },
+    );
+    let mut c = Client::connect(addr);
+    // Root out of range: echoed back with the graph size.
+    c.send(&query(1, 100, &[]));
+    let resp = c.recv();
+    assert_eq!(resp.get("status").unwrap().as_str(), Some("bad_request"));
+    assert!(resp.get("error").unwrap().as_str().unwrap().contains("100"));
+    // Target out of range.
+    c.send(&query(2, 0, &[1_000]));
+    assert_eq!(c.recv().get("status").unwrap().as_str(), Some("bad_request"));
+    // Malformed JSON.
+    c.writer.write_all(b"this is not json\n").unwrap();
+    assert_eq!(c.recv().get("status").unwrap().as_str(), Some("bad_request"));
+    // Unknown op.
+    c.send(&Json::obj(vec![("op", Json::s("frobnicate"))]));
+    assert_eq!(c.recv().get("status").unwrap().as_str(), Some("bad_request"));
+    // The connection still serves good queries — and the earlier bad
+    // root did not fail this coalesced batch.
+    c.send(&query(3, 7, &[]));
+    let resp = c.recv();
+    assert_eq!(resp.get("status").unwrap().as_str(), Some("ok"));
+    assert_eq!(resp.get("id").unwrap().as_u64(), Some(3));
+    c.send(&Json::obj(vec![("op", Json::s("shutdown"))]));
+    c.recv();
+    let report = server.join().unwrap();
+    assert_eq!(report.get("bad_requests").unwrap().as_u64(), Some(4));
+    assert_eq!(report.get("completed").unwrap().as_u64(), Some(1));
+}
+
+/// Over-wide serve configs fail at bind time with the width echoed back
+/// — the serve-side face of the `for_lanes` clamp fix.
+#[test]
+fn over_wide_max_batch_fails_at_config_time_with_width_echoed() {
+    let (g, _) = uniform_random(100, 4, 9);
+    let plan = Arc::new(TraversalPlan::build(&g, EngineConfig::dgx2(2, 1)).unwrap());
+    for bad in [0usize, 513, 1024] {
+        let err = Server::bind(
+            Arc::clone(&plan),
+            ServeConfig { max_batch: bad, ..ServeConfig::default() },
+        )
+        .unwrap_err();
+        assert!(
+            err.to_string().contains(&bad.to_string()),
+            "error must echo the requested width: {err}"
+        );
+    }
+    // And the library-level check itself.
+    assert_eq!(BatchWidth::for_lanes(513), None);
+    assert_eq!(BatchWidth::for_lanes(512), Some(BatchWidth::W512));
+}
