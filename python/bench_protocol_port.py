@@ -732,11 +732,267 @@ def serial_bfs(g, root):
 
 
 # --------------------------------------------------------------------------
+# Web-like generator (graph/gen/weblike.rs) — the storage-section graph
+# --------------------------------------------------------------------------
+
+
+def weblike(n, edge_factor, seed, copy_prob=0.25, tail_len=0, window=0,
+            strand_frac=0.0, strand_len=0):
+    """Port of graph/gen/weblike.rs::weblike (RNG call order preserved)."""
+    assert n >= 2
+    strand_total = int(n * strand_frac)
+    n_core = max(n - strand_total, 2)
+    total = n + tail_len
+    rng = Xoshiro256StarStar(seed)
+    raw = [(0, 1)]
+    endpoints = [0, 1]
+    for v in range(2, n_core):
+        for _ in range(edge_factor):
+            lo = (len(endpoints) - window
+                  if window > 0 and len(endpoints) > window else 0)
+            t = endpoints[lo + rng.next_below(len(endpoints) - lo)]
+            if rng.next_f64() < copy_prob:
+                wlo = v - window if window > 0 and v > window else 0
+                t = wlo + rng.next_below(v - wlo)
+            raw.append((v, t))
+            endpoints.append(v)
+            endpoints.append(t)
+    if strand_total > 0:
+        slen = max(strand_len, 1)
+        next_id = n_core
+        end = n_core + strand_total
+        while next_id < end:
+            prev = rng.next_below(n_core)
+            for _ in range(slen):
+                if next_id >= end:
+                    break
+                raw.append((prev, next_id))
+                prev = next_id
+                next_id += 1
+    prev = 0
+    for i in range(tail_len):
+        t = n + i
+        raw.append((prev, t))
+        prev = t
+    return build_undirected(total, raw)
+
+
+# --------------------------------------------------------------------------
+# Degree-sort relabeling (partition/relabel.rs)
+# --------------------------------------------------------------------------
+
+
+def degree_sort_relabeling(g):
+    """Returns (new_id, old_id); stable descending-degree order."""
+    order = sorted(range(g.n), key=lambda v: -g.degree(v))
+    new_id = [0] * g.n
+    for new, old in enumerate(order):
+        new_id[old] = new
+    return new_id, order
+
+
+def apply_relabeling(g, new_id):
+    arcs = []
+    for u in range(g.n):
+        nu = new_id[u]
+        for v in g.neighbors(u):
+            arcs.append((nu, new_id[v]))
+    arcs.sort()
+    return Csr(g.n, arcs)
+
+
+# --------------------------------------------------------------------------
+# .bbfs v2 store codec (graph/store/{varint,writer,loader}.rs)
+# --------------------------------------------------------------------------
+#
+# The encoder is a byte-for-byte mirror of the Rust writer: the committed
+# `storage` section's sizes and fingerprint only cross-validate the two
+# implementations if both produce the identical container image.
+
+V2_MAGIC = b"BBFSCSR2"
+HEADER_LEN = 72
+DATA_ALIGN = 4096
+BLOCK_SIZE_DEFAULT = 1024
+MAX_VARINT_LEN = 10
+FNV_OFFSET = 0xCBF29CE484222325
+FNV_PRIME = 0x100000001B3
+
+
+def encode_varint(value, out):
+    while True:
+        byte = value & 0x7F
+        value >>= 7
+        if value == 0:
+            out.append(byte)
+            return
+        out.append(byte | 0x80)
+
+
+def decode_varint(buf, pos):
+    value, shift = 0, 0
+    for i in range(MAX_VARINT_LEN):
+        byte = buf[pos + i]
+        group = byte & 0x7F
+        assert shift < 64 and not (shift == 63 and group > 1), "varint overflow"
+        value |= group << shift
+        if not byte & 0x80:
+            return value, pos + i + 1
+        shift += 7
+    raise AssertionError("varint longer than 10 bytes")
+
+
+def v1_snapshot_bytes(g):
+    """Size of the raw-CSR v1 snapshot (store/writer.rs)."""
+    return 24 + 8 * (g.n + 1) + 4 * g.num_edges()
+
+
+def encode_store(g, relabel=False, block_size=BLOCK_SIZE_DEFAULT):
+    """Port of store/writer.rs::encode_store. Returns (image, old_id)."""
+    if relabel:
+        new_id, old_id = degree_sort_relabeling(g)
+        graph = apply_relabeling(g, new_id)
+    else:
+        old_id = None
+        graph = g
+    n, m = graph.n, graph.num_edges()
+    bs = block_size
+    num_blocks = -(-n // bs)
+    data = bytearray()
+    index = []
+    for b in range(num_blocks):
+        index.append((len(data), graph.offsets[b * bs]))
+        lo, hi = b * bs, min((b + 1) * bs, n)
+        for v in range(lo, hi):
+            encode_varint(graph.degree(v), data)
+        for v in range(lo, hi):
+            prev = None
+            for w in graph.neighbors(v):
+                if prev is not None:
+                    assert w >= prev, "unsorted adjacency"
+                encode_varint(w if prev is None else w - prev, data)
+                prev = w
+    index.append((len(data), m))
+    flags = 1 if relabel else 0
+    index_len = 16 * (num_blocks + 1)
+    perm_len = 4 * n if relabel else 0
+    perm_off = HEADER_LEN + index_len if relabel else 0
+    data_off = -(-(HEADER_LEN + index_len + perm_len) // DATA_ALIGN) * DATA_ALIGN
+    file_len = data_off + len(data)
+    out = bytearray()
+    out += V2_MAGIC
+    out += (2).to_bytes(4, "little")
+    out += flags.to_bytes(4, "little")
+    out += n.to_bytes(8, "little")
+    out += m.to_bytes(8, "little")
+    out += bs.to_bytes(4, "little")
+    out += num_blocks.to_bytes(4, "little")
+    out += HEADER_LEN.to_bytes(8, "little")
+    out += perm_off.to_bytes(8, "little")
+    out += data_off.to_bytes(8, "little")
+    out += file_len.to_bytes(8, "little")
+    for start, first_edge in index:
+        out += start.to_bytes(8, "little")
+        out += first_edge.to_bytes(8, "little")
+    if relabel:
+        for old in old_id:
+            out += old.to_bytes(4, "little")
+    out += bytes(data_off - len(out))
+    out += data
+    assert len(out) == file_len
+    return bytes(out), old_id
+
+
+def decode_store(image):
+    """Happy-path port of store/loader.rs: image -> (Csr, old_id|None).
+
+    Mirrors the structural checks (spans, id bounds, degree sums); the
+    Rust corpus tests own the full hostile-input error taxonomy.
+    """
+    assert image[0:8] == V2_MAGIC, "bad magic"
+    assert int.from_bytes(image[8:12], "little") == 2, "bad version"
+    flags = int.from_bytes(image[12:16], "little")
+    n = int.from_bytes(image[16:24], "little")
+    m = int.from_bytes(image[24:32], "little")
+    bs = int.from_bytes(image[32:36], "little")
+    num_blocks = int.from_bytes(image[36:40], "little")
+    data_off = int.from_bytes(image[56:64], "little")
+    assert int.from_bytes(image[64:72], "little") == len(image), "file_len"
+    index = []
+    for b in range(num_blocks + 1):
+        at = HEADER_LEN + 16 * b
+        index.append((int.from_bytes(image[at:at + 8], "little"),
+                      int.from_bytes(image[at + 8:at + 16], "little")))
+    old_id = None
+    if flags & 1:
+        at = HEADER_LEN + 16 * (num_blocks + 1)
+        old_id = [int.from_bytes(image[at + 4 * i:at + 4 * i + 4], "little")
+                  for i in range(n)]
+    offsets = [0]
+    edges = []
+    for b in range(num_blocks):
+        lo, hi = b * bs, min((b + 1) * bs, n)
+        buf = image[data_off + index[b][0]:data_off + index[b + 1][0]]
+        pos = 0
+        degrees = []
+        for _ in range(lo, hi):
+            d, pos = decode_varint(buf, pos)
+            degrees.append(d)
+        assert sum(degrees) == index[b + 1][1] - index[b][1], "degree sum"
+        for d in degrees:
+            prev = 0
+            for k in range(d):
+                raw, pos = decode_varint(buf, pos)
+                w = raw if k == 0 else prev + raw
+                assert w < n, "neighbor out of range"
+                prev = w
+                edges.append(w)
+            offsets.append(len(edges))
+        assert pos == len(buf), "trailing bytes"
+    assert len(edges) == m, "edge count"
+    csr = Csr(0, [])
+    csr.n, csr.offsets, csr.edges = n, offsets, edges
+    return csr, old_id
+
+
+def store_fingerprint(image):
+    """FNV-1a 64 over header + index + permutation bytes (loader.rs)."""
+    flags = int.from_bytes(image[12:16], "little")
+    n = int.from_bytes(image[16:24], "little")
+    num_blocks = int.from_bytes(image[36:40], "little")
+    end = HEADER_LEN + 16 * (num_blocks + 1) + (4 * n if flags & 1 else 0)
+    h = FNV_OFFSET
+    for b in image[:end]:
+        h = ((h ^ b) * FNV_PRIME) & MASK64
+    return h
+
+
+def materialize_counters(prefix, cuts, n, bs):
+    """Decode-counter deltas of materializing 1D row slabs.
+
+    Mirrors loader.rs::decode_rows_filtered per part (lo, hi): every
+    overlapped block pays one block fetch and a full degree pass, and
+    adjacency decoding runs from the block start (sequential varints
+    cannot be skipped) up to min(block end, hi) — so the edge counter
+    includes rows below `lo` in the first block.
+    """
+    deg = edges = blocks = 0
+    for i in range(len(cuts) - 1):
+        lo, hi = cuts[i], cuts[i + 1]
+        first, last = lo // bs, max(-(-hi // bs), lo // bs)
+        blocks += last - first
+        for b in range(first, last):
+            blo, bhi = b * bs, min((b + 1) * bs, n)
+            deg += bhi - blo
+            edges += prefix[min(bhi, hi)] - prefix[blo]
+    return deg, edges, blocks
+
+
+# --------------------------------------------------------------------------
 # The protocol (harness/protocol.rs)
 # --------------------------------------------------------------------------
 
 PROTOCOL = dict(
-    name="engine-bench-v3",
+    name="engine-bench-v4",
     graph="kron-like",
     kron_scale=21,
     kron_edge_factor=16,
@@ -760,6 +1016,18 @@ PROTOCOL = dict(
     serve_window_us=240,
     serve_max_batch=64,
     serve_seed=11,
+    # Storage (v4): `.bbfs` v2 container of the web-like suite graph —
+    # compression sizes, container fingerprint, warm-start decode
+    # counters. The weblike parameters are the suite's "web-like" row
+    # (GAP_web analog) at scale delta -8.
+    storage_graph="web-like",
+    storage_scale=20,
+    storage_scale_delta=-8,
+    storage_edge_factor=38,
+    storage_strand_permille=180,
+    storage_strand_len=9,
+    storage_seed=0xB0B0_0006,
+    storage_nodes=16,
 )
 
 
@@ -1019,6 +1287,90 @@ def serve_throughput(g):
     }
 
 
+def storage_report():
+    """Port of harness/protocol.rs::storage_json.
+
+    Sizes and the fingerprint come from the byte-exact encoder; the
+    decode counters are computed analytically from the degree prefix and
+    the 1D partition cuts (the same arithmetic the Rust loader's
+    counters perform); the distance probes run against the serial BFS
+    oracle, which the engine is bit-identical to (selftest).
+    """
+    p = PROTOCOL
+    scale = max(p["storage_scale"] + p["storage_scale_delta"], 4)
+    g = weblike(1 << scale, p["storage_edge_factor"], p["storage_seed"],
+                strand_frac=p["storage_strand_permille"] / 1000.0,
+                strand_len=p["storage_strand_len"])
+    n, m = g.n, g.num_edges()
+    v1 = v1_snapshot_bytes(g)
+    plain, _ = encode_store(g)
+    relabeled, old_id = encode_store(g, relabel=True)
+    bs = BLOCK_SIZE_DEFAULT
+    num_blocks = -(-n // bs)
+    root = sample_batch_roots(g, 1, p["root_seed"])[0]
+    reference = serial_bfs(g, root)
+
+    # Round-trip both containers and probe distances through each.
+    decoded, dperm = decode_store(plain)
+    assert dperm is None
+    plain_ok = decoded.offsets == g.offsets and decoded.edges == g.edges
+    rdecoded, rold = decode_store(relabeled)
+    assert rold == old_id
+    new_id = [0] * n
+    for newv, old in enumerate(rold):
+        new_id[old] = newv
+    rg = apply_relabeling(g, new_id)
+    relabeled_ok = (rdecoded.offsets == rg.offsets
+                    and rdecoded.edges == rg.edges)
+    cold_dist = serial_bfs(decoded, root)
+    warm_dist = serial_bfs(decoded, root)  # same bytes, same graph
+    rdist_new = serial_bfs(rdecoded, new_id[root])
+    relabeled_dist = [rdist_new[new_id[v]] for v in range(n)]
+
+    # Decode counters: cold 1D build = one degree-only pass (n entries),
+    # then materialize decodes each partition slab's blocks; warm start
+    # decodes nothing until materialize. Eager = one full decode.
+    cuts = balanced_cuts_from_prefix(g.offsets, p["storage_nodes"])
+    deg, edec, blocks = materialize_counters(g.offsets, cuts, n, bs)
+
+    def counters(d, e, b):
+        return {"degree_entries": d, "edges": e, "blocks": b}
+
+    return {
+        "graph": {
+            "name": p["storage_graph"],
+            "scale_delta": p["storage_scale_delta"],
+            "vertices": n,
+            "edges": m,
+        },
+        "nodes": p["storage_nodes"],
+        "fanout": p["fanout"],
+        "mode": "1d",
+        "block_size": bs,
+        "v1_bytes": v1,
+        "v2_bytes": len(plain),
+        "v2_relabeled_bytes": len(relabeled),
+        "compression_ratio": v1 / len(plain),
+        "relabeled_ratio": v1 / len(relabeled),
+        "fingerprint": "%016x" % store_fingerprint(plain),
+        "load_counters": {
+            "eager": counters(n, m, num_blocks),
+            "cold_build": {
+                "at_load": counters(n, 0, 0),
+                "after_materialize": counters(n + deg, edec, blocks),
+            },
+            "warm_start": {
+                "at_load": counters(0, 0, 0),
+                "after_materialize": counters(deg, edec, blocks),
+            },
+        },
+        "warm_equals_cold": warm_dist == cold_dist,
+        "matches_in_memory": (plain_ok and relabeled_ok
+                              and cold_dist == reference
+                              and relabeled_dist == reference),
+    }
+
+
 def engine_bench_report():
     scale = max(PROTOCOL["kron_scale"] + PROTOCOL["scale_delta"], 4)
     g = kronecker(scale, PROTOCOL["kron_edge_factor"], PROTOCOL["kron_seed"])
@@ -1050,6 +1402,7 @@ def engine_bench_report():
         "configs": configs,
         "width_ablation": width_ablation(g),
         "serve_throughput": serve_throughput(g),
+        "storage": storage_report(),
     }
 
 
@@ -1125,6 +1478,39 @@ def selftest():
         crounds += cm["sync_rounds"]
     assert wide["sync_rounds"] < crounds, (wide["sync_rounds"], crounds)
     print("selftest: one 130-wide batch == 3 chunked batches, fewer rounds")
+    # Store codec: varint edge values, container round-trips (plain +
+    # relabeled, odd block sizes), fingerprint sensitivity.
+    for v in [0, 1, 127, 128, 129, 16383, 16384, (1 << 32) - 1, (1 << 64) - 1]:
+        buf = bytearray()
+        encode_varint(v, buf)
+        got, pos = decode_varint(bytes(buf), 0)
+        assert (got, pos) == (v, len(buf)), v
+    codec_cases = 0
+    for _ in range(12):
+        n = 2 + rng.next_below(300)
+        gg = uniform_random(n, 1 + rng.next_below(6), rng.next_u64())
+        for bs in [1, 3, BLOCK_SIZE_DEFAULT]:
+            img, _ = encode_store(gg, block_size=bs)
+            dec, perm = decode_store(img)
+            assert perm is None
+            assert dec.offsets == gg.offsets and dec.edges == gg.edges, (n, bs)
+            rimg, rold = encode_store(gg, relabel=True, block_size=bs)
+            rdec, rgot = decode_store(rimg)
+            assert rgot == rold
+            nid = [0] * gg.n
+            for newv, old in enumerate(rold):
+                nid[old] = newv
+            rg = apply_relabeling(gg, nid)
+            assert rdec.offsets == rg.offsets and rdec.edges == rg.edges
+            codec_cases += 1
+    gw = weblike(512, 6, 0xB0B0_0006, strand_frac=0.18, strand_len=9)
+    img, _ = encode_store(gw)
+    assert decode_store(img)[0].edges == gw.edges
+    fp = store_fingerprint(img)
+    flipped = bytearray(img)
+    flipped[40] ^= 0xFF  # first index entry
+    assert store_fingerprint(bytes(flipped)) != fp, "fingerprint must move"
+    print(f"selftest: {codec_cases} store codec round-trips (plain + relabeled)")
 
 
 def validate_acceptance(report):
@@ -1158,6 +1544,16 @@ def validate_acceptance(report):
     assert base["rejected"] > 0, "load point must overload the baseline"
     assert coal["rejected"] == 0, "coalesced service must keep up"
     assert coal["p50_us"] < base["p50_us"], (coal["p50_us"], base["p50_us"])
+    st = report["storage"]
+    assert st["compression_ratio"] >= 2.0, st["compression_ratio"]
+    lc = st["load_counters"]
+    assert lc["eager"]["edges"] == st["graph"]["edges"], lc["eager"]
+    assert lc["cold_build"]["at_load"]["degree_entries"] > 0
+    assert lc["cold_build"]["at_load"]["edges"] == 0
+    warm0 = lc["warm_start"]["at_load"]
+    assert warm0["degree_entries"] == 0 and warm0["edges"] == 0, warm0
+    assert lc["warm_start"]["after_materialize"]["edges"] > 0
+    assert st["warm_equals_cold"] and st["matches_in_memory"]
     print("acceptance invariants hold on the fresh report")
 
 
@@ -1189,6 +1585,12 @@ def main():
               f"rejected {m['rejected']} p50 {m['p50_us']}us "
               f"p99 {m['p99_us']}us qps {m['qps']:.0f} "
               f"mean width {m['mean_width']:.2f}")
+    st = report["storage"]
+    print(f"storage {st['graph']['name']}: v1 {st['v1_bytes']} -> "
+          f"v2 {st['v2_bytes']} ({st['compression_ratio']:.2f}x, relabeled "
+          f"{st['relabeled_ratio']:.2f}x), fingerprint {st['fingerprint']}, "
+          f"warm at_load decodes "
+          f"{st['load_counters']['warm_start']['at_load']['edges']} edges")
     if args.out:
         # Mirror write_engine_bench: a `measured` subtree recorded into
         # the existing artifact by the load generator is live-wallclock

@@ -1,0 +1,173 @@
+"""Executable spec of the `.bbfs` v2 store codec (PR 7): the Python
+mirror of `rust/src/graph/store/{varint,writer,loader}.rs` from
+`bench_protocol_port.py`.
+
+The committed `BENCH_engine.json` `storage` section cross-validates the
+Rust codec against this mirror byte-for-byte (sizes + fingerprint), so
+these tests are the fast, isolated half of that contract: varint edge
+values, container layout invariants, round-trips across block sizes and
+degenerate graphs, relabeling algebra, and the decode-counter formulas
+behind the warm-start claim.
+
+No jax/hypothesis needed — runs everywhere CI runs.
+"""
+
+import bench_protocol_port as bp
+
+
+def _roundtrip(g, **kw):
+    img, old_id = bp.encode_store(g, **kw)
+    dec, perm = bp.decode_store(img)
+    assert perm == old_id
+    return img, dec, perm
+
+
+# --------------------------------------------------------------------------
+# Varints
+# --------------------------------------------------------------------------
+
+
+def test_varint_round_trips_edge_values():
+    for v in [0, 1, 127, 128, 129, 16383, 16384, 2097151,
+              (1 << 32) - 1, (1 << 63), (1 << 64) - 1]:
+        buf = bytearray()
+        bp.encode_varint(v, buf)
+        assert len(buf) <= bp.MAX_VARINT_LEN
+        got, pos = bp.decode_varint(bytes(buf), 0)
+        assert (got, pos) == (v, len(buf))
+
+
+def test_varint_single_byte_below_128():
+    for v in range(128):
+        buf = bytearray()
+        bp.encode_varint(v, buf)
+        assert bytes(buf) == bytes([v])
+
+
+# --------------------------------------------------------------------------
+# Container round-trips
+# --------------------------------------------------------------------------
+
+
+def test_roundtrip_uniform_random_across_block_sizes():
+    g = bp.uniform_random(300, 5, 71)
+    for bs in [1, 2, 3, 64, 1024]:
+        _, dec, _ = _roundtrip(g, block_size=bs)
+        assert dec.offsets == g.offsets and dec.edges == g.edges
+
+
+def test_roundtrip_degenerate_graphs():
+    for g in [
+        bp.build_undirected(0, []),          # empty
+        bp.build_undirected(1, []),          # single isolated vertex
+        bp.build_undirected(3, [(0, 0)]),    # self-loop only: no edges kept
+        bp.build_undirected(5, [(0, 1), (0, 1), (1, 0)]),  # duplicates
+    ]:
+        for bs in [1, 1024]:
+            _, dec, _ = _roundtrip(g, block_size=bs)
+            assert dec.n == g.n
+            assert dec.offsets == g.offsets and dec.edges == g.edges
+
+
+def test_roundtrip_weblike_relabeled():
+    g = bp.weblike(600, 7, 0xB0B0_0006, strand_frac=0.18, strand_len=9)
+    img, dec, perm = _roundtrip(g, relabel=True, block_size=128)
+    # Stored permutation is a bijection, and the payload is the graph
+    # permuted by it.
+    assert sorted(perm) == list(range(g.n))
+    new_id = [0] * g.n
+    for new, old in enumerate(perm):
+        new_id[old] = new
+    rg = bp.apply_relabeling(g, new_id)
+    assert dec.offsets == rg.offsets and dec.edges == rg.edges
+    # Degree sort: degrees are non-increasing in the stored id space.
+    degs = [dec.degree(v) for v in range(dec.n)]
+    assert all(degs[i] >= degs[i + 1] for i in range(len(degs) - 1))
+
+
+def test_relabeled_bfs_unmaps_to_original_distances():
+    g = bp.weblike(400, 5, 13, strand_frac=0.1, strand_len=4)
+    _, dec, perm = _roundtrip(g, relabel=True)
+    new_id = [0] * g.n
+    for new, old in enumerate(perm):
+        new_id[old] = new
+    for root in [0, 7, 399]:
+        want = bp.serial_bfs(g, root)
+        got_new = bp.serial_bfs(dec, new_id[root])
+        assert [got_new[new_id[v]] for v in range(g.n)] == want
+
+
+# --------------------------------------------------------------------------
+# Layout invariants + fingerprint
+# --------------------------------------------------------------------------
+
+
+def test_header_layout_and_alignment():
+    g = bp.uniform_random(200, 4, 11)
+    img, _ = bp.encode_store(g, block_size=64)
+    assert img[0:8] == bp.V2_MAGIC
+    assert int.from_bytes(img[8:12], "little") == 2
+    n = int.from_bytes(img[16:24], "little")
+    nb = int.from_bytes(img[36:40], "little")
+    assert n == 200 and nb == -(-200 // 64)
+    data_off = int.from_bytes(img[56:64], "little")
+    assert data_off % bp.DATA_ALIGN == 0
+    assert int.from_bytes(img[64:72], "little") == len(img)
+    # Index sentinel closes the data section exactly.
+    at = bp.HEADER_LEN + 16 * nb
+    assert int.from_bytes(img[at:at + 8], "little") == len(img) - data_off
+    assert int.from_bytes(img[at + 8:at + 16], "little") == g.num_edges()
+
+
+def test_fingerprint_covers_header_index_perm_but_not_data():
+    g = bp.uniform_random(150, 3, 5)
+    img, _ = bp.encode_store(g)
+    fp = bp.store_fingerprint(img)
+    # Flipping a data byte leaves the fingerprint unchanged (it pins the
+    # header/index/permutation, which is what a plan cache depends on) …
+    data_off = int.from_bytes(img[56:64], "little")
+    tail = bytearray(img)
+    tail[data_off] ^= 0xFF
+    assert bp.store_fingerprint(bytes(tail)) == fp
+    # … while flipping an index byte moves it.
+    head = bytearray(img)
+    head[bp.HEADER_LEN + 3] ^= 0xFF
+    assert bp.store_fingerprint(bytes(head)) != fp
+
+
+def test_compression_beats_v1_twofold_on_weblike():
+    g = bp.weblike(1024, 12, 0xB0B0_0006, strand_frac=0.18, strand_len=9)
+    img, _ = bp.encode_store(g)
+    assert bp.v1_snapshot_bytes(g) / len(img) >= 2.0
+
+
+# --------------------------------------------------------------------------
+# Warm-start decode-counter arithmetic
+# --------------------------------------------------------------------------
+
+
+def test_materialize_counters_match_brute_force():
+    g = bp.uniform_random(500, 4, 23)
+    bs = 64
+    cuts = bp.balanced_cuts_from_prefix(g.offsets, 7)
+    deg, edges, blocks = bp.materialize_counters(g.offsets, cuts, g.n, bs)
+    # Brute force: replay the loader's per-part block walk.
+    bdeg = bedges = bblocks = 0
+    for i in range(len(cuts) - 1):
+        lo, hi = cuts[i], cuts[i + 1]
+        for b in range(lo // bs, -(-hi // bs)):
+            blo, bhi = b * bs, min((b + 1) * bs, g.n)
+            bblocks += 1
+            bdeg += bhi - blo
+            bedges += sum(g.degree(v) for v in range(blo, min(bhi, hi)))
+    assert (deg, edges, blocks) == (bdeg, bedges, bblocks)
+
+
+def test_single_block_store_counts_whole_graph_once_per_part():
+    g = bp.uniform_random(100, 3, 9)
+    cuts = bp.balanced_cuts_from_prefix(g.offsets, 4)
+    deg, edges, blocks = bp.materialize_counters(g.offsets, cuts, g.n, 1024)
+    # One block: every part decodes it fully up to its own hi.
+    assert blocks == 4
+    assert deg == 4 * g.n
+    assert edges == sum(g.offsets[hi] for hi in cuts[1:])

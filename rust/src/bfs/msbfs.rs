@@ -567,7 +567,19 @@ fn ms_bfs_dir_w<const W: usize>(
 /// on an isolated vertex, unlike a bounded-retry sampler). Duplicates are
 /// allowed — MS-BFS handles them as independent lanes.
 pub fn sample_batch_roots(g: &Csr, width: usize, seed: u64) -> Vec<VertexId> {
-    let n = g.num_vertices();
+    sample_batch_roots_by(g.num_vertices(), |v| g.degree(v), width, seed)
+}
+
+/// [`sample_batch_roots`] generalized over the degree lookup, so roots
+/// can be sampled without an eager CSR — e.g. from a `.bbfs` v2 store's
+/// O(n) degree stream on a lazily loaded plan. Identical sampling
+/// sequence for identical degrees.
+pub fn sample_batch_roots_by(
+    n: usize,
+    degree: impl Fn(VertexId) -> u32,
+    width: usize,
+    seed: u64,
+) -> Vec<VertexId> {
     assert!(n > 0, "empty graph");
     assert!(width >= 1 && width <= MAX_LANES);
     let mut rng = Xoshiro256StarStar::seed_from_u64(seed);
@@ -575,16 +587,16 @@ pub fn sample_batch_roots(g: &Csr, width: usize, seed: u64) -> Vec<VertexId> {
     while roots.len() < width {
         let mut v = rng.next_usize(n) as VertexId;
         for _ in 0..8 {
-            if g.degree(v) > 0 {
+            if degree(v) > 0 {
                 break;
             }
             v = rng.next_usize(n) as VertexId;
         }
-        if g.degree(v) == 0 {
+        if degree(v) == 0 {
             // Wrapping scan from v: first non-isolated vertex, if any.
             for off in 1..n {
                 let u = ((v as usize + off) % n) as VertexId;
-                if g.degree(u) > 0 {
+                if degree(u) > 0 {
                     v = u;
                     break;
                 }

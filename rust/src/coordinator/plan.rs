@@ -48,10 +48,16 @@ use super::config::{EngineConfig, PartitionMode};
 use super::session::QuerySession;
 use crate::comm::fold_expand::FoldExpand;
 use crate::comm::pattern::{CommPattern, Schedule};
-use crate::graph::csr::{Csr, CsrSlab};
-use crate::partition::one_d::partition_1d;
+use crate::graph::csr::{Csr, CsrSlab, VertexId};
+use crate::graph::store::GraphStore;
+use crate::partition::one_d::{balanced_cuts_from_prefix, partition_1d, Partition1D};
+use crate::partition::relabel::Relabeling;
 use crate::partition::{Partition2D, PartitionSpec};
-use std::sync::Arc;
+use crate::util::json::Json;
+use std::sync::{Arc, OnceLock};
+
+/// Plan-cache format identifier (the first thing version-checked on load).
+const PLAN_CACHE_FORMAT: &str = "bbfs-plan-v1";
 
 /// Why a [`TraversalPlan`] could not be built. Every invalid engine
 /// layout surfaces as one of these values — never a panic or a
@@ -102,6 +108,27 @@ pub enum PlanError {
     /// internal invariant violation in a
     /// [`CommPattern`](crate::comm::CommPattern) implementation.
     InvalidSchedule(String),
+    /// Decoding the backing `.bbfs` v2 store failed (corrupt payload,
+    /// truncated block, out-of-range id, I/O error).
+    StoreDecode(String),
+    /// A plan cache declared a format this build does not speak.
+    CacheVersionMismatch {
+        /// The format string found in the cache file.
+        found: String,
+    },
+    /// A plan cache was built against a different store or engine
+    /// configuration than the one being loaded — warm-start must fall
+    /// back to a cold build.
+    CacheFingerprintMismatch {
+        /// Which fingerprint field disagreed.
+        field: String,
+        /// Value the current store/config requires.
+        expected: String,
+        /// Value recorded in the cache.
+        found: String,
+    },
+    /// A plan cache file was unreadable or structurally malformed.
+    CacheCorrupt(String),
 }
 
 impl std::fmt::Display for PlanError {
@@ -134,6 +161,19 @@ impl std::fmt::Display for PlanError {
             PlanError::InvalidSchedule(msg) => {
                 write!(f, "generated synchronization schedule invalid: {msg}")
             }
+            PlanError::StoreDecode(msg) => {
+                write!(f, "failed to decode the backing graph store: {msg}")
+            }
+            PlanError::CacheVersionMismatch { found } => write!(
+                f,
+                "plan cache format {found:?} is not {PLAN_CACHE_FORMAT:?} — rebuild the cache"
+            ),
+            PlanError::CacheFingerprintMismatch { field, expected, found } => write!(
+                f,
+                "plan cache was built for a different {field} \
+                 (cache has {found}, store/config needs {expected})"
+            ),
+            PlanError::CacheCorrupt(msg) => write!(f, "plan cache unreadable: {msg}"),
         }
     }
 }
@@ -156,9 +196,64 @@ pub struct TraversalPlan {
     /// Leading schedule rounds that are the 2D fold phase (0 in 1D mode;
     /// the remaining rounds are the expand phase).
     fold_rounds: usize,
-    slabs: Vec<Arc<CsrSlab>>,
+    slabs: SlabSet,
     num_vertices: usize,
     graph_edges: u64,
+    /// Degree-sort permutation of the backing store, if the graph was
+    /// relabeled on conversion — callers map roots in and distances out.
+    relabeling: Option<Arc<Relabeling>>,
+    /// Fingerprint of the backing v2 store (hex), when built from one.
+    /// This is what [`cache_json`](Self::cache_json) pins the cache to.
+    store_fingerprint: Option<String>,
+}
+
+/// The vertex (and, for 2D blocks, neighbor-column) range one lazy slab
+/// covers.
+#[derive(Clone, Copy, Debug)]
+struct SlabRange {
+    rows: (VertexId, VertexId),
+    cols: Option<(VertexId, VertexId)>,
+}
+
+/// Per-node slabs: either materialized up front (in-memory build, 2D
+/// cold build) or decoded on demand from a [`GraphStore`] (warm start —
+/// the load path performs **zero** adjacency decoding until a slab is
+/// first touched or [`materialize`](TraversalPlan::materialize) runs).
+#[derive(Clone, Debug)]
+enum SlabSet {
+    Eager(Vec<Arc<CsrSlab>>),
+    Lazy(LazySlabs),
+}
+
+#[derive(Clone, Debug)]
+struct LazySlabs {
+    store: Arc<GraphStore>,
+    ranges: Vec<SlabRange>,
+    cells: Vec<OnceLock<Arc<CsrSlab>>>,
+}
+
+impl LazySlabs {
+    fn new(store: Arc<GraphStore>, ranges: Vec<SlabRange>) -> Self {
+        let cells = ranges.iter().map(|_| OnceLock::new()).collect();
+        Self { store, ranges, cells }
+    }
+
+    fn decode(&self, i: usize) -> Result<CsrSlab, PlanError> {
+        let r = self.ranges[i];
+        self.store
+            .decode_rows_filtered(r.rows.0, r.rows.1, r.cols)
+            .map_err(|e| PlanError::StoreDecode(e.to_string()))
+    }
+
+    fn force(&self, i: usize) -> Result<Arc<CsrSlab>, PlanError> {
+        if let Some(slab) = self.cells[i].get() {
+            return Ok(Arc::clone(slab));
+        }
+        let slab = Arc::new(self.decode(i)?);
+        // A concurrent materialization may have won the race; either
+        // value is identical (decoding is deterministic).
+        Ok(Arc::clone(self.cells[i].get_or_init(|| slab)))
+    }
 }
 
 impl TraversalPlan {
@@ -215,9 +310,116 @@ impl TraversalPlan {
             partition,
             schedule: Arc::new(schedule),
             fold_rounds,
-            slabs: slabs.into_iter().map(Arc::new).collect(),
+            slabs: SlabSet::Eager(slabs.into_iter().map(Arc::new).collect()),
             num_vertices: n,
             graph_edges: g.num_edges(),
+            relabeling: None,
+            store_fingerprint: None,
+        })
+    }
+
+    /// Build a plan directly from an open `.bbfs` v2 store — the **cold**
+    /// store-backed path.
+    ///
+    /// In 1D mode this decodes only the degree stream (O(n) varints, no
+    /// adjacency bytes) to compute edge-balanced cuts, then installs lazy
+    /// row slabs: adjacency decodes on first touch or at
+    /// [`materialize`](Self::materialize). In 2D mode the checkerboard's
+    /// column cuts need in-degrees, so the graph is decoded eagerly —
+    /// the cache written by [`cache_json`](Self::cache_json) is what makes
+    /// the *next* 2D start cheap.
+    ///
+    /// If the store was converted with `--relabel`, the plan carries the
+    /// permutation: map roots through [`relabeling`](Self::relabeling)
+    /// before running, and distances back through
+    /// [`Relabeling::unmap_dist`] after.
+    pub fn build_from_store(store: Arc<GraphStore>, config: EngineConfig) -> Result<Self, PlanError> {
+        let n = store.num_vertices();
+        if config.num_nodes == 0 {
+            return Err(PlanError::NoNodes);
+        }
+        if n == 0 {
+            return Err(PlanError::EmptyGraph);
+        }
+        let relabeling = store.relabeling().map(Arc::new);
+        let fingerprint = Some(store.fingerprint_hex());
+        match config.partition {
+            PartitionMode::OneD => {
+                if config.num_nodes > n {
+                    return Err(PlanError::TooManyNodes {
+                        num_nodes: config.num_nodes,
+                        num_vertices: n,
+                    });
+                }
+                let prefix =
+                    store.degree_prefix().map_err(|e| PlanError::StoreDecode(e.to_string()))?;
+                let cuts = balanced_cuts_from_prefix(&prefix, config.num_nodes);
+                Self::assemble_lazy_1d(store, config, Partition1D { cuts }, relabeling, fingerprint)
+            }
+            PartitionMode::TwoD { .. } => {
+                let g = store.to_csr().map_err(|e| PlanError::StoreDecode(e.to_string()))?;
+                let mut plan = Self::build(&g, config)?;
+                plan.relabeling = relabeling;
+                plan.store_fingerprint = fingerprint;
+                Ok(plan)
+            }
+        }
+    }
+
+    fn assemble_lazy_1d(
+        store: Arc<GraphStore>,
+        config: EngineConfig,
+        p: Partition1D,
+        relabeling: Option<Arc<Relabeling>>,
+        store_fingerprint: Option<String>,
+    ) -> Result<Self, PlanError> {
+        let n = store.num_vertices();
+        let m = store.num_edges();
+        let ranges: Vec<SlabRange> =
+            (0..p.parts()).map(|i| SlabRange { rows: p.range(i), cols: None }).collect();
+        let schedule = config.pattern.build().schedule(config.num_nodes as u32);
+        schedule.validate().map_err(PlanError::InvalidSchedule)?;
+        Ok(Self {
+            config,
+            partition: PartitionSpec::OneD(p),
+            schedule: Arc::new(schedule),
+            fold_rounds: 0,
+            slabs: SlabSet::Lazy(LazySlabs::new(store, ranges)),
+            num_vertices: n,
+            graph_edges: m,
+            relabeling,
+            store_fingerprint,
+        })
+    }
+
+    fn assemble_lazy_2d(
+        store: Arc<GraphStore>,
+        config: EngineConfig,
+        p: Partition2D,
+        relabeling: Option<Arc<Relabeling>>,
+        store_fingerprint: Option<String>,
+    ) -> Result<Self, PlanError> {
+        let n = store.num_vertices();
+        let m = store.num_edges();
+        let mut ranges = Vec::with_capacity(config.num_nodes);
+        for rank in 0..p.processors() {
+            let (i, j) = p.coords(rank);
+            ranges.push(SlabRange { rows: p.row_range(i), cols: Some(p.col_range(j)) });
+        }
+        let (rows, cols) = (p.grid_rows, p.grid_cols);
+        let fe = FoldExpand::new(rows, cols);
+        let schedule = fe.schedule(config.num_nodes as u32);
+        schedule.validate().map_err(PlanError::InvalidSchedule)?;
+        Ok(Self {
+            config,
+            partition: PartitionSpec::TwoD(p),
+            schedule: Arc::new(schedule),
+            fold_rounds: fe.fold_rounds(),
+            slabs: SlabSet::Lazy(LazySlabs::new(store, ranges)),
+            num_vertices: n,
+            graph_edges: m,
+            relabeling,
+            store_fingerprint,
         })
     }
 
@@ -289,9 +491,236 @@ impl TraversalPlan {
         self.fold_rounds
     }
 
-    /// Shared per-node slabs (session construction).
-    pub(crate) fn slabs(&self) -> &[Arc<CsrSlab>] {
-        &self.slabs
+    /// Shared slab for compute node `i` (session construction).
+    ///
+    /// On a warm-started plan this forces the lazy decode of node `i`'s
+    /// block. Public flows call [`materialize`](Self::materialize) first,
+    /// which surfaces corrupt-store failures as typed errors; if that was
+    /// skipped and the store is corrupt, this panics with the decode
+    /// error (the documented trade-off for keeping `session()` infallible).
+    pub(crate) fn slab(&self, i: usize) -> Arc<CsrSlab> {
+        match &self.slabs {
+            SlabSet::Eager(slabs) => Arc::clone(&slabs[i]),
+            SlabSet::Lazy(lazy) => lazy
+                .force(i)
+                .expect("corrupt graph store: call TraversalPlan::materialize() before session()"),
+        }
+    }
+
+    /// Force-decode every lazy slab, surfacing any store corruption as a
+    /// typed [`PlanError::StoreDecode`]. No-op on eager plans. Call this
+    /// once after a warm start (every CLI/server path does) so later
+    /// [`session`](Self::session) construction cannot fail.
+    pub fn materialize(&self) -> Result<(), PlanError> {
+        if let SlabSet::Lazy(lazy) = &self.slabs {
+            for i in 0..lazy.cells.len() {
+                lazy.force(i)?;
+            }
+        }
+        Ok(())
+    }
+
+    /// The stored degree-sort permutation, when the plan's backing store
+    /// was converted with relabeling. Map roots via `new_id`, distances
+    /// back via [`Relabeling::unmap_dist`].
+    pub fn relabeling(&self) -> Option<&Arc<Relabeling>> {
+        self.relabeling.as_ref()
+    }
+
+    /// Serialize the partition layout + fingerprint as a plan-cache JSON
+    /// value, or `None` if the plan was not built from a v2 store (an
+    /// in-memory plan has no stable fingerprint to pin against).
+    ///
+    /// The cache stores only what is expensive or non-derivable: the
+    /// partition cuts and the identity of the store/config pair. The
+    /// schedule is regenerated on load (pure function of the config) and
+    /// the slab index lives in the store itself.
+    pub fn cache_json(&self) -> Option<Json> {
+        let store = self.store_fingerprint.clone()?;
+        let (mode, grid) = match self.config.partition {
+            PartitionMode::OneD => ("1d".to_string(), String::new()),
+            PartitionMode::TwoD { rows, cols } => ("2d".to_string(), format!("{rows}x{cols}")),
+        };
+        let fingerprint = Json::obj(vec![
+            ("store", Json::s(store)),
+            ("n", Json::u(self.num_vertices as u64)),
+            ("m", Json::u(self.graph_edges)),
+            ("nodes", Json::u(self.config.num_nodes as u64)),
+            ("mode", Json::s(mode)),
+            ("grid", Json::s(grid)),
+            ("pattern", Json::s(self.config.pattern.name())),
+            ("relabeled", Json::Bool(self.relabeling.is_some())),
+        ]);
+        let cuts_arr = |cuts: &[VertexId]| {
+            Json::Arr(cuts.iter().map(|&c| Json::u(u64::from(c))).collect())
+        };
+        let mut pairs = vec![
+            ("format", Json::s(PLAN_CACHE_FORMAT)),
+            ("fingerprint", fingerprint),
+        ];
+        match &self.partition {
+            PartitionSpec::OneD(p) => pairs.push(("cuts", cuts_arr(&p.cuts))),
+            PartitionSpec::TwoD(p) => {
+                pairs.push(("row_cuts", cuts_arr(&p.row_cuts)));
+                pairs.push(("col_cuts", cuts_arr(&p.col_cuts)));
+            }
+        }
+        Some(Json::obj(pairs))
+    }
+
+    /// Reconstruct a plan from a cache value produced by
+    /// [`cache_json`](Self::cache_json) — the **warm** path.
+    ///
+    /// Validates the cache format and every fingerprint field against the
+    /// open store and requested config (typed mismatch errors tell the
+    /// caller to fall back to a cold build), then installs **lazy** slabs
+    /// in both modes: the load itself decodes zero degree entries and
+    /// zero adjacency bytes.
+    pub fn from_cache_json(
+        store: Arc<GraphStore>,
+        config: EngineConfig,
+        cache: &Json,
+    ) -> Result<Self, PlanError> {
+        let format = cache.get("format").and_then(Json::as_str).unwrap_or("<missing>");
+        if format != PLAN_CACHE_FORMAT {
+            return Err(PlanError::CacheVersionMismatch { found: format.to_string() });
+        }
+        let fp = cache
+            .get("fingerprint")
+            .ok_or_else(|| PlanError::CacheCorrupt("missing fingerprint".into()))?;
+        let (mode, grid) = match config.partition {
+            PartitionMode::OneD => ("1d".to_string(), String::new()),
+            PartitionMode::TwoD { rows, cols } => ("2d".to_string(), format!("{rows}x{cols}")),
+        };
+        let expect_str = |field: &str, expected: &str| -> Result<(), PlanError> {
+            let found = fp.get(field).and_then(Json::as_str).unwrap_or("<missing>");
+            if found != expected {
+                return Err(PlanError::CacheFingerprintMismatch {
+                    field: field.to_string(),
+                    expected: expected.to_string(),
+                    found: found.to_string(),
+                });
+            }
+            Ok(())
+        };
+        let expect_u64 = |field: &str, expected: u64| -> Result<(), PlanError> {
+            let found = fp.get(field).and_then(Json::as_u64);
+            if found != Some(expected) {
+                return Err(PlanError::CacheFingerprintMismatch {
+                    field: field.to_string(),
+                    expected: expected.to_string(),
+                    found: found.map_or("<missing>".to_string(), |v| v.to_string()),
+                });
+            }
+            Ok(())
+        };
+        expect_str("store", &store.fingerprint_hex())?;
+        expect_u64("n", store.num_vertices() as u64)?;
+        expect_u64("m", store.num_edges())?;
+        expect_u64("nodes", config.num_nodes as u64)?;
+        expect_str("mode", &mode)?;
+        expect_str("grid", &grid)?;
+        expect_str("pattern", &config.pattern.name())?;
+        let relabeled = matches!(fp.get("relabeled"), Some(Json::Bool(true)));
+        if relabeled != store.is_relabeled() {
+            return Err(PlanError::CacheFingerprintMismatch {
+                field: "relabeled".to_string(),
+                expected: store.is_relabeled().to_string(),
+                found: relabeled.to_string(),
+            });
+        }
+
+        let n = store.num_vertices();
+        if config.num_nodes == 0 {
+            return Err(PlanError::NoNodes);
+        }
+        if n == 0 {
+            return Err(PlanError::EmptyGraph);
+        }
+        let read_cuts = |key: &str, parts: usize| -> Result<Vec<VertexId>, PlanError> {
+            let arr = cache
+                .get(key)
+                .and_then(Json::as_arr)
+                .ok_or_else(|| PlanError::CacheCorrupt(format!("missing {key} array")))?;
+            if arr.len() != parts + 1 {
+                return Err(PlanError::CacheCorrupt(format!(
+                    "{key} has {} entries, expected {}",
+                    arr.len(),
+                    parts + 1
+                )));
+            }
+            let mut cuts = Vec::with_capacity(arr.len());
+            let mut prev = 0u64;
+            for (i, v) in arr.iter().enumerate() {
+                let c = v
+                    .as_u64()
+                    .filter(|&c| c <= n as u64)
+                    .ok_or_else(|| PlanError::CacheCorrupt(format!("bad {key}[{i}]")))?;
+                if (i == 0 && c != 0) || c < prev {
+                    return Err(PlanError::CacheCorrupt(format!("{key} not monotone from 0")));
+                }
+                prev = c;
+                cuts.push(c as VertexId);
+            }
+            if prev != n as u64 {
+                return Err(PlanError::CacheCorrupt(format!("{key} does not end at n={n}")));
+            }
+            Ok(cuts)
+        };
+        let relabeling = store.relabeling().map(Arc::new);
+        let fingerprint = Some(store.fingerprint_hex());
+        match config.partition {
+            PartitionMode::OneD => {
+                if config.num_nodes > n {
+                    return Err(PlanError::TooManyNodes {
+                        num_nodes: config.num_nodes,
+                        num_vertices: n,
+                    });
+                }
+                let cuts = read_cuts("cuts", config.num_nodes)?;
+                Self::assemble_lazy_1d(store, config, Partition1D { cuts }, relabeling, fingerprint)
+            }
+            PartitionMode::TwoD { rows, cols } => {
+                if rows as usize * cols as usize != config.num_nodes {
+                    return Err(PlanError::GridMismatch {
+                        rows,
+                        cols,
+                        num_nodes: config.num_nodes,
+                    });
+                }
+                if rows as usize > n || cols as usize > n {
+                    return Err(PlanError::GridTooLarge { rows, cols, num_vertices: n });
+                }
+                let row_cuts = read_cuts("row_cuts", rows as usize)?;
+                let col_cuts = read_cuts("col_cuts", cols as usize)?;
+                let p = Partition2D { grid_rows: rows, grid_cols: cols, row_cuts, col_cuts };
+                Self::assemble_lazy_2d(store, config, p, relabeling, fingerprint)
+            }
+        }
+    }
+
+    /// Write the plan cache next to the store (see
+    /// [`cache_json`](Self::cache_json)). Errors if this plan was not
+    /// built from a store.
+    pub fn save_cache(&self, path: &std::path::Path) -> Result<(), PlanError> {
+        let json = self.cache_json().ok_or_else(|| {
+            PlanError::CacheCorrupt("plan was not built from a v2 store".into())
+        })?;
+        std::fs::write(path, json.render() + "\n")
+            .map_err(|e| PlanError::CacheCorrupt(format!("write {}: {e}", path.display())))
+    }
+
+    /// Load a plan cache file and warm-start against `store` (see
+    /// [`from_cache_json`](Self::from_cache_json)).
+    pub fn load_cache(
+        store: Arc<GraphStore>,
+        config: EngineConfig,
+        path: &std::path::Path,
+    ) -> Result<Self, PlanError> {
+        let text = std::fs::read_to_string(path)
+            .map_err(|e| PlanError::CacheCorrupt(format!("read {}: {e}", path.display())))?;
+        let json = Json::parse(&text).map_err(PlanError::CacheCorrupt)?;
+        Self::from_cache_json(store, config, &json)
     }
 }
 

@@ -424,13 +424,8 @@ impl QuerySession {
         backends: Vec<Box<dyn ComputeBackend>>,
     ) -> Self {
         debug_assert_eq!(backends.len(), plan.num_nodes());
-        let nodes: Vec<ComputeNode> = plan
-            .slabs()
-            .iter()
-            .enumerate()
-            .map(|(i, slab)| {
-                ComputeNode::from_shared(i as u32, Arc::clone(slab), plan.num_vertices())
-            })
+        let nodes: Vec<ComputeNode> = (0..plan.num_nodes())
+            .map(|i| ComputeNode::from_shared(i as u32, plan.slab(i), plan.num_vertices()))
             .collect();
         let scratch = (0..plan.num_nodes()).map(|_| ExpandOutput::default()).collect();
         Self {

@@ -186,8 +186,15 @@ pub fn write_binary(g: &Csr, path: &Path) -> Result<(), IoError> {
 }
 
 /// Read a `.bbfs` snapshot written by [`write_binary`].
+///
+/// The header-declared `n`/`m` are validated against the actual file
+/// length **before** any allocation, and offsets/edge ids are fully
+/// bound-checked — a truncated, oversized, or hostile snapshot returns
+/// [`IoError::BadSnapshot`] instead of aborting on OOM or panicking
+/// later inside the traversal.
 pub fn read_binary(path: &Path) -> Result<Csr, IoError> {
     let f = std::fs::File::open(path)?;
+    let actual_len = f.metadata()?.len();
     let mut r = BufReader::new(f);
     let mut magic = [0u8; 8];
     r.read_exact(&mut magic)?;
@@ -196,24 +203,86 @@ pub fn read_binary(path: &Path) -> Result<Csr, IoError> {
     }
     let mut b8 = [0u8; 8];
     r.read_exact(&mut b8)?;
-    let n = u64::from_le_bytes(b8) as usize;
+    let n = u64::from_le_bytes(b8);
     r.read_exact(&mut b8)?;
-    let m = u64::from_le_bytes(b8) as usize;
+    let m = u64::from_le_bytes(b8);
+    if n > u32::MAX as u64 {
+        return Err(IoError::BadSnapshot(format!(
+            "declared {n} vertices exceed the u32 id space"
+        )));
+    }
+    // Exact length check in u128 so a header like n = u64::MAX can't
+    // overflow the arithmetic, let alone reach an allocator.
+    let expected_len = 24u128 + 8 * (n as u128 + 1) + 4 * m as u128;
+    if expected_len != u128::from(actual_len) {
+        return Err(IoError::BadSnapshot(format!(
+            "declared sizes need {expected_len} bytes but file has {actual_len}"
+        )));
+    }
+    let n = n as usize;
+    let m = m as usize;
     let mut offsets = Vec::with_capacity(n + 1);
-    for _ in 0..=n {
+    let mut prev = 0u64;
+    for i in 0..=n {
         r.read_exact(&mut b8)?;
-        offsets.push(u64::from_le_bytes(b8));
+        let o = u64::from_le_bytes(b8);
+        if i == 0 && o != 0 {
+            return Err(IoError::BadSnapshot("offsets must start at 0".into()));
+        }
+        if o < prev {
+            return Err(IoError::BadSnapshot(format!(
+                "non-monotonic offset at vertex {i}: {o} < {prev}"
+            )));
+        }
+        prev = o;
+        offsets.push(o);
+    }
+    if prev != m as u64 {
+        return Err(IoError::BadSnapshot(format!(
+            "offsets end at {prev}, expected edge count {m}"
+        )));
     }
     let mut edges = Vec::with_capacity(m);
     let mut b4 = [0u8; 4];
     for _ in 0..m {
         r.read_exact(&mut b4)?;
-        edges.push(u32::from_le_bytes(b4));
+        let e = u32::from_le_bytes(b4);
+        if e as u64 >= n as u64 {
+            return Err(IoError::BadSnapshot(format!("edge target {e} out of range (n={n})")));
+        }
+        edges.push(e);
     }
-    if offsets.last().copied() != Some(m as u64) {
-        return Err(IoError::BadSnapshot("offsets/edges mismatch".into()));
-    }
+    // All invariants `Csr::from_parts` asserts are now proven, so this
+    // constructor cannot panic on hostile input.
     Ok(Csr::from_parts(offsets, edges))
+}
+
+/// Which `.bbfs` container generation a file holds.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum SnapshotKind {
+    /// Raw-CSR v1 snapshot ([`read_binary`]).
+    V1,
+    /// Compressed v2 container ([`crate::graph::store::GraphStore`]).
+    V2,
+    /// Neither magic — not a `.bbfs` file.
+    Unknown,
+}
+
+/// Sniff the snapshot generation from the file magic (first 8 bytes),
+/// so `.bbfs` paths dispatch to the right reader.
+pub fn snapshot_kind(path: &Path) -> Result<SnapshotKind, IoError> {
+    let mut f = std::fs::File::open(path)?;
+    let mut magic = [0u8; 8];
+    if f.read_exact(&mut magic).is_err() {
+        return Ok(SnapshotKind::Unknown);
+    }
+    Ok(if &magic == BBFS_MAGIC {
+        SnapshotKind::V1
+    } else if &magic == crate::graph::store::V2_MAGIC {
+        SnapshotKind::V2
+    } else {
+        SnapshotKind::Unknown
+    })
 }
 
 #[cfg(test)]
@@ -296,6 +365,118 @@ mod tests {
         let p = tmp("bad.bbfs");
         std::fs::write(&p, b"NOTMAGIC________").unwrap();
         assert!(matches!(read_binary(&p), Err(IoError::BadSnapshot(_))));
+        std::fs::remove_file(&p).ok();
+    }
+
+    /// A valid snapshot image for the corpus tests below.
+    fn valid_v1_image() -> Vec<u8> {
+        let (g, _) = kronecker(KroneckerParams::graph500(6, 4), 17);
+        let p = tmp("corpus-base.bbfs");
+        write_binary(&g, &p).unwrap();
+        let bytes = std::fs::read(&p).unwrap();
+        std::fs::remove_file(&p).ok();
+        bytes
+    }
+
+    fn read_image(name: &str, bytes: &[u8]) -> Result<Csr, IoError> {
+        let p = tmp(name);
+        std::fs::write(&p, bytes).unwrap();
+        let out = read_binary(&p);
+        std::fs::remove_file(&p).ok();
+        out
+    }
+
+    /// Corrupt-snapshot corpus: every hostile mutation must come back as
+    /// a typed `BadSnapshot` — no panic, no attempted huge allocation.
+    #[test]
+    fn binary_corrupt_corpus_returns_typed_errors() {
+        let base = valid_v1_image();
+        let n = u64::from_le_bytes(base[8..16].try_into().unwrap()) as usize;
+        let offsets_at = 24;
+        let edges_at = offsets_at + 8 * (n + 1);
+
+        // Truncation at every section boundary (and mid-section).
+        for (name, cut) in [
+            ("empty", 0usize),
+            ("mid-magic", 4),
+            ("after-magic", 8),
+            ("mid-header", 20),
+            ("after-header", 24),
+            ("mid-offsets", offsets_at + 12),
+            ("after-offsets", edges_at),
+            ("mid-edges", base.len() - 2),
+        ] {
+            let img = &base[..cut];
+            assert!(
+                read_image("corpus-trunc.bbfs", img).is_err(),
+                "truncation at {name} ({cut} bytes) must be rejected"
+            );
+        }
+
+        // Oversized header: n = u64::MAX must fail the length check
+        // before any allocation (the arithmetic is done in u128).
+        let mut img = base.clone();
+        img[8..16].copy_from_slice(&u64::MAX.to_le_bytes());
+        assert!(matches!(
+            read_image("corpus-huge-n.bbfs", &img),
+            Err(IoError::BadSnapshot(_))
+        ));
+
+        // Declared m inflated without matching bytes.
+        let mut img = base.clone();
+        let m = u64::from_le_bytes(base[16..24].try_into().unwrap());
+        img[16..24].copy_from_slice(&(m + 1).to_le_bytes());
+        assert!(matches!(
+            read_image("corpus-bad-m.bbfs", &img),
+            Err(IoError::BadSnapshot(_))
+        ));
+
+        // Non-monotonic offsets.
+        let mut img = base.clone();
+        img[offsets_at + 8..offsets_at + 16].copy_from_slice(&u64::MAX.to_le_bytes());
+        assert!(matches!(
+            read_image("corpus-nonmono.bbfs", &img),
+            Err(IoError::BadSnapshot(_))
+        ));
+
+        // First offset not zero.
+        let mut img = base.clone();
+        img[offsets_at..offsets_at + 8].copy_from_slice(&1u64.to_le_bytes());
+        assert!(matches!(
+            read_image("corpus-off0.bbfs", &img),
+            Err(IoError::BadSnapshot(_))
+        ));
+
+        // Edge target out of range.
+        let mut img = base.clone();
+        img[edges_at..edges_at + 4].copy_from_slice(&u32::MAX.to_le_bytes());
+        assert!(matches!(
+            read_image("corpus-bad-edge.bbfs", &img),
+            Err(IoError::BadSnapshot(_))
+        ));
+
+        // Trailing garbage (length mismatch in the other direction).
+        let mut img = base.clone();
+        img.extend_from_slice(&[0u8; 7]);
+        assert!(matches!(
+            read_image("corpus-trailing.bbfs", &img),
+            Err(IoError::BadSnapshot(_))
+        ));
+
+        // And the untouched base still reads fine.
+        assert!(read_image("corpus-ok.bbfs", &base).is_ok());
+    }
+
+    #[test]
+    fn snapshot_kind_sniffs_generations() {
+        let (g, _) = kronecker(KroneckerParams::graph500(5, 4), 3);
+        let p = tmp("kind.bbfs");
+        write_binary(&g, &p).unwrap();
+        assert_eq!(snapshot_kind(&p).unwrap(), SnapshotKind::V1);
+        std::fs::write(&p, crate::graph::store::V2_MAGIC).unwrap();
+        assert_eq!(snapshot_kind(&p).unwrap(), SnapshotKind::V2);
+        std::fs::write(&p, b"short").unwrap();
+        assert_eq!(snapshot_kind(&p).unwrap(), SnapshotKind::Unknown);
         std::fs::remove_file(&p).ok();
     }
 }

@@ -7,6 +7,7 @@ pub mod csr;
 pub mod gen;
 pub mod io;
 pub mod props;
+pub mod store;
 
 pub use builder::{EtlStats, GraphBuilder};
 pub use csr::{Csr, CsrSlab, VertexId};

@@ -1,0 +1,120 @@
+//! The `.bbfs` **v2** on-disk graph container: compressed, validated,
+//! memory-mappable — the storage layer behind plan warm-start.
+//!
+//! # Why
+//!
+//! The paper's headline graph is scale-29 Kronecker (0.5 B vertices, 4 B
+//! edges). The v1 snapshot is raw CSR — 8 bytes per offset, 4 per edge —
+//! and loading it rebuilds every in-memory array up front: a server
+//! restart is O(E). v2 gap-encodes adjacency with LEB128 varints
+//! (web-like graphs compress 3–5×, more after degree-sort relabeling),
+//! splits vertices into fixed-size blocks with a byte/edge index, and
+//! page-aligns the data section so the file can be `mmap`ed and decoded
+//! lazily, block by block, on first touch.
+//!
+//! # Layout (all integers little-endian)
+//!
+//! ```text
+//! offset  size  field
+//!      0     8  magic "BBFSCSR2"
+//!      8     4  version        = 2
+//!     12     4  flags          (bit 0: permutation section present)
+//!     16     8  n              vertex count (<= u32::MAX)
+//!     24     8  m              directed arc count
+//!     32     4  block_size     vertices per block (>= 1)
+//!     36     4  num_blocks     = ceil(n / block_size)
+//!     40     8  index_off      = 72 (immediately after this header)
+//!     48     8  perm_off       0, or 72 + 16*(num_blocks+1)
+//!     56     8  data_off       4096-aligned end of index/perm sections
+//!     64     8  file_len       total container length (validated)
+//! ```
+//!
+//! **Block index** at `index_off`: `num_blocks + 1` entries of
+//! `{ data_start: u64 (relative to data_off), first_edge: u64 }`,
+//! sentinel-terminated — the last entry is `(data_len, m)`, so both the
+//! byte span and the edge span of block `b` are `index[b+1] - index[b]`.
+//!
+//! **Permutation** (iff flag bit 0): `n × u32` — entry `i` is the
+//! *original* id of relabeled vertex `i` (new→old).
+//!
+//! **Data** at `data_off` (zero-padded gap before it): per block, first
+//! the varint degree of every vertex in the block (so degree-only decode
+//! — what 1D partition cuts need — never touches adjacency bytes), then
+//! each vertex's sorted adjacency as varint(first neighbor) followed by
+//! varint gaps (duplicates encode as gap 0).
+//!
+//! The writer and this loader are mirrored line-for-line in
+//! `python/bench_protocol_port.py`; the committed `BENCH_engine.json`
+//! `storage` section cross-validates the two byte-for-byte.
+
+mod loader;
+mod source;
+pub mod varint;
+mod writer;
+
+pub use loader::{GraphStore, StoreCounters};
+pub use source::{FileSource, MemSource, SlabSource};
+#[cfg(unix)]
+pub use source::MmapSource;
+pub use writer::{encode_store, v1_snapshot_bytes, write_store, EncodedStore, StoreWriteOptions};
+
+use crate::graph::csr::VertexId;
+
+/// v2 container magic.
+pub const V2_MAGIC: &[u8; 8] = b"BBFSCSR2";
+/// Fixed header length in bytes.
+pub const HEADER_LEN: u64 = 72;
+/// Alignment of the data section — one page, so `mmap` serves block
+/// payloads without copying across page boundaries on load.
+pub const DATA_ALIGN: u64 = 4096;
+/// Default vertices per block.
+pub const BLOCK_SIZE_DEFAULT: u32 = 1024;
+
+/// Typed storage-layer error. Corrupt or hostile container bytes always
+/// surface as one of these — the loader has no panicking path.
+#[derive(Debug)]
+pub enum StoreError {
+    /// Underlying I/O failure (open, read, write).
+    Io(std::io::Error),
+    /// The container bytes are malformed: bad magic/version, declared
+    /// sizes disagreeing with the actual file, non-monotonic index,
+    /// out-of-range ids, truncated or overlong varints, …
+    Corrupt(String),
+    /// The request or options are invalid for this store (bad row range,
+    /// zero block size, graph too large to encode).
+    Invalid(String),
+    /// Write-side: an adjacency run violated the sorted-ascending CSR
+    /// invariant, which gap encoding cannot represent.
+    UnsortedAdjacency {
+        /// The vertex whose adjacency run is out of order.
+        vertex: VertexId,
+    },
+}
+
+impl std::fmt::Display for StoreError {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        match self {
+            StoreError::Io(e) => write!(f, "store i/o error: {e}"),
+            StoreError::Corrupt(msg) => write!(f, "corrupt .bbfs v2 container: {msg}"),
+            StoreError::Invalid(msg) => write!(f, "invalid store request: {msg}"),
+            StoreError::UnsortedAdjacency { vertex } => {
+                write!(f, "adjacency of vertex {vertex} is not sorted ascending")
+            }
+        }
+    }
+}
+
+impl std::error::Error for StoreError {
+    fn source(&self) -> Option<&(dyn std::error::Error + 'static)> {
+        match self {
+            StoreError::Io(e) => Some(e),
+            _ => None,
+        }
+    }
+}
+
+impl From<std::io::Error> for StoreError {
+    fn from(e: std::io::Error) -> Self {
+        StoreError::Io(e)
+    }
+}

@@ -1,0 +1,225 @@
+//! Byte sources backing a [`GraphStore`](super::GraphStore): the
+//! [`SlabSource`] trait plus three std-only implementations — in-memory
+//! bytes (tests, benches), positioned file reads (`pread(2)`, the
+//! dependency-free default), and a real `mmap(2)` mapping behind a small
+//! `unsafe` seam.
+
+use std::fs::File;
+use std::io;
+
+/// Random-access byte source for the v2 container. Implementations must
+/// be cheap to read from concurrently — the lazy slab decoder calls
+/// [`read_at`](SlabSource::read_at) from multiple plan-materialization
+/// threads.
+pub trait SlabSource: Send + Sync + std::fmt::Debug {
+    /// Total length in bytes.
+    fn len(&self) -> u64;
+
+    /// Whether the source is empty.
+    fn is_empty(&self) -> bool {
+        self.len() == 0
+    }
+
+    /// Fill `buf` from `offset`. Errors (rather than panics) on any read
+    /// past the end — the loader treats that as a truncated file.
+    fn read_at(&self, offset: u64, buf: &mut [u8]) -> io::Result<()>;
+}
+
+/// An owned in-memory byte buffer. Used by tests and the bench protocol,
+/// where the container never touches disk.
+#[derive(Debug)]
+pub struct MemSource(pub Vec<u8>);
+
+impl SlabSource for MemSource {
+    fn len(&self) -> u64 {
+        self.0.len() as u64
+    }
+
+    fn read_at(&self, offset: u64, buf: &mut [u8]) -> io::Result<()> {
+        let start = usize::try_from(offset)
+            .ok()
+            .filter(|&s| s <= self.0.len())
+            .ok_or_else(|| io::Error::new(io::ErrorKind::UnexpectedEof, "read past end"))?;
+        let end = start
+            .checked_add(buf.len())
+            .filter(|&e| e <= self.0.len())
+            .ok_or_else(|| io::Error::new(io::ErrorKind::UnexpectedEof, "read past end"))?;
+        buf.copy_from_slice(&self.0[start..end]);
+        Ok(())
+    }
+}
+
+/// Positioned reads against an open file — `pread(2)` on unix, so no seek
+/// state is shared and concurrent block loads need no lock. This is the
+/// default source: lazy, dependency-free, works on any filesystem.
+#[derive(Debug)]
+pub struct FileSource {
+    file: File,
+    len: u64,
+}
+
+impl FileSource {
+    /// Open `file` as a source, capturing its current length.
+    pub fn new(file: File) -> io::Result<Self> {
+        let len = file.metadata()?.len();
+        Ok(Self { file, len })
+    }
+}
+
+impl SlabSource for FileSource {
+    fn len(&self) -> u64 {
+        self.len
+    }
+
+    #[cfg(unix)]
+    fn read_at(&self, offset: u64, buf: &mut [u8]) -> io::Result<()> {
+        use std::os::unix::fs::FileExt;
+        self.file.read_exact_at(buf, offset)
+    }
+
+    #[cfg(not(unix))]
+    fn read_at(&self, offset: u64, buf: &mut [u8]) -> io::Result<()> {
+        // No positioned-read API: clone the handle (shares the inode, not
+        // the cursor on Windows via seek_read; elsewhere fall back to a
+        // fresh seek on a duplicated descriptor).
+        use std::io::{Read, Seek, SeekFrom};
+        let mut f = self.file.try_clone()?;
+        f.seek(SeekFrom::Start(offset))?;
+        f.read_exact(buf)
+    }
+}
+
+/// A read-only `mmap(2)` of the whole container. The page-aligned data
+/// section means block payloads are served straight from the page cache;
+/// cold blocks fault in on first touch instead of being deserialized up
+/// front.
+///
+/// This is the one `unsafe` seam in the storage layer: the syscalls are
+/// declared directly (std already links libc) and the mapping is private
+/// + read-only, so the only soundness requirement is that nobody
+/// truncates the file while mapped — same contract as every mmap reader.
+#[cfg(unix)]
+#[derive(Debug)]
+pub struct MmapSource {
+    ptr: *mut u8,
+    len: usize,
+}
+
+#[cfg(unix)]
+mod sys {
+    //! Minimal direct bindings for `mmap`/`munmap`; std links libc so no
+    //! crate dependency is needed.
+    use std::os::raw::{c_int, c_void};
+
+    pub const PROT_READ: c_int = 1;
+    pub const MAP_PRIVATE: c_int = 2;
+
+    extern "C" {
+        pub fn mmap(
+            addr: *mut c_void,
+            len: usize,
+            prot: c_int,
+            flags: c_int,
+            fd: c_int,
+            offset: i64,
+        ) -> *mut c_void;
+        pub fn munmap(addr: *mut c_void, len: usize) -> c_int;
+    }
+}
+
+#[cfg(unix)]
+impl MmapSource {
+    /// Map `file` read-only. Empty files get a valid zero-length source
+    /// without calling `mmap` (which rejects length 0).
+    pub fn new(file: &File) -> io::Result<Self> {
+        use std::os::fd::AsRawFd;
+        let len = usize::try_from(file.metadata()?.len())
+            .map_err(|_| io::Error::new(io::ErrorKind::InvalidData, "file too large to map"))?;
+        if len == 0 {
+            return Ok(Self { ptr: std::ptr::null_mut(), len: 0 });
+        }
+        // SAFETY: requesting a fresh private read-only mapping of a file
+        // we hold open; the kernel picks the address. We never hand out
+        // `&[u8]` views that outlive `self`, and Drop unmaps exactly the
+        // region returned here.
+        let ptr = unsafe {
+            sys::mmap(
+                std::ptr::null_mut(),
+                len,
+                sys::PROT_READ,
+                sys::MAP_PRIVATE,
+                file.as_raw_fd(),
+                0,
+            )
+        };
+        if ptr as isize == -1 {
+            return Err(io::Error::last_os_error());
+        }
+        Ok(Self { ptr: ptr.cast(), len })
+    }
+
+    fn as_slice(&self) -> &[u8] {
+        if self.len == 0 {
+            return &[];
+        }
+        // SAFETY: `ptr` is a live PROT_READ mapping of exactly `len`
+        // bytes (established in `new`, released only in Drop).
+        unsafe { std::slice::from_raw_parts(self.ptr, self.len) }
+    }
+}
+
+// SAFETY: the mapping is read-only and private; sharing the pointer
+// across threads is no different from sharing a `&[u8]`.
+#[cfg(unix)]
+unsafe impl Send for MmapSource {}
+#[cfg(unix)]
+unsafe impl Sync for MmapSource {}
+
+#[cfg(unix)]
+impl Drop for MmapSource {
+    fn drop(&mut self) {
+        if !self.ptr.is_null() {
+            // SAFETY: unmapping the exact region mapped in `new`.
+            unsafe {
+                sys::munmap(self.ptr.cast(), self.len);
+            }
+        }
+    }
+}
+
+#[cfg(unix)]
+impl SlabSource for MmapSource {
+    fn len(&self) -> u64 {
+        self.len as u64
+    }
+
+    fn read_at(&self, offset: u64, buf: &mut [u8]) -> io::Result<()> {
+        let data = self.as_slice();
+        let start = usize::try_from(offset)
+            .ok()
+            .filter(|&s| s <= data.len())
+            .ok_or_else(|| io::Error::new(io::ErrorKind::UnexpectedEof, "read past end"))?;
+        let end = start
+            .checked_add(buf.len())
+            .filter(|&e| e <= data.len())
+            .ok_or_else(|| io::Error::new(io::ErrorKind::UnexpectedEof, "read past end"))?;
+        buf.copy_from_slice(&data[start..end]);
+        Ok(())
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn mem_source_bounds_checked() {
+        let src = MemSource(vec![1, 2, 3, 4]);
+        let mut buf = [0u8; 2];
+        src.read_at(1, &mut buf).unwrap();
+        assert_eq!(buf, [2, 3]);
+        assert!(src.read_at(3, &mut buf).is_err());
+        assert!(src.read_at(u64::MAX, &mut buf).is_err());
+        assert!(!src.is_empty());
+    }
+}

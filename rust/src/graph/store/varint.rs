@@ -1,0 +1,102 @@
+//! LEB128 unsigned varints — the integer wire format of the `.bbfs` v2
+//! container (degrees, first-neighbor ids, adjacency gaps).
+//!
+//! Encoding: 7 payload bits per byte, least-significant group first, high
+//! bit set on every byte except the last. A `u64` takes at most 10 bytes;
+//! small gaps (the common case after degree-sort relabeling) take one.
+
+use super::StoreError;
+
+/// Maximum encoded length of a `u64` varint.
+pub const MAX_VARINT_LEN: usize = 10;
+
+/// Append the LEB128 encoding of `value` to `out`.
+pub fn encode_varint(mut value: u64, out: &mut Vec<u8>) {
+    loop {
+        let byte = (value & 0x7f) as u8;
+        value >>= 7;
+        if value == 0 {
+            out.push(byte);
+            return;
+        }
+        out.push(byte | 0x80);
+    }
+}
+
+/// Decode one LEB128 varint from `buf[*pos..]`, advancing `*pos` past it.
+///
+/// Returns a typed [`StoreError::Corrupt`] on truncation, on an encoding
+/// longer than [`MAX_VARINT_LEN`], or on bits overflowing 64 — a hostile
+/// payload can never panic the decoder.
+pub fn decode_varint(buf: &[u8], pos: &mut usize) -> Result<u64, StoreError> {
+    let mut value: u64 = 0;
+    let mut shift: u32 = 0;
+    for i in 0..MAX_VARINT_LEN {
+        let Some(&byte) = buf.get(*pos + i) else {
+            return Err(StoreError::Corrupt("truncated varint".into()));
+        };
+        let group = u64::from(byte & 0x7f);
+        if shift >= 64 || (shift == 63 && group > 1) {
+            return Err(StoreError::Corrupt("varint overflows u64".into()));
+        }
+        value |= group << shift;
+        if byte & 0x80 == 0 {
+            *pos += i + 1;
+            return Ok(value);
+        }
+        shift += 7;
+    }
+    Err(StoreError::Corrupt("varint longer than 10 bytes".into()))
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn round_trips_edge_values() {
+        let mut buf = Vec::new();
+        let values = [
+            0u64,
+            1,
+            127,
+            128,
+            129,
+            16_383,
+            16_384,
+            u64::from(u32::MAX),
+            u64::MAX - 1,
+            u64::MAX,
+        ];
+        for &v in &values {
+            buf.clear();
+            encode_varint(v, &mut buf);
+            let mut pos = 0;
+            assert_eq!(decode_varint(&buf, &mut pos).unwrap(), v);
+            assert_eq!(pos, buf.len());
+        }
+    }
+
+    #[test]
+    fn rejects_truncation_and_overflow() {
+        // Truncated: continuation bit set with nothing after it.
+        let mut pos = 0;
+        assert!(decode_varint(&[0x80], &mut pos).is_err());
+        // 10 continuation bytes: longer than any valid u64 encoding.
+        let mut pos = 0;
+        assert!(decode_varint(&[0x80; 10], &mut pos).is_err());
+        // Overflows 64 bits in the final group.
+        let mut pos = 0;
+        let overflow = [0xff, 0xff, 0xff, 0xff, 0xff, 0xff, 0xff, 0xff, 0xff, 0x7f];
+        assert!(decode_varint(&overflow, &mut pos).is_err());
+    }
+
+    #[test]
+    fn single_byte_small_values() {
+        for v in 0u64..128 {
+            let mut buf = Vec::new();
+            encode_varint(v, &mut buf);
+            assert_eq!(buf, vec![v as u8]);
+        }
+    }
+}

@@ -1,0 +1,155 @@
+//! `.bbfs` v2 encoder: gap-compressed blocks, block index, optional
+//! degree-sort permutation, page-aligned data section.
+//!
+//! The byte layout is specified in the [module docs](super) and mirrored
+//! line-for-line by `python/bench_protocol_port.py` — any change here must
+//! land in both, or `bench-protocol --check` drifts.
+
+use super::varint::encode_varint;
+use super::{StoreError, BLOCK_SIZE_DEFAULT, DATA_ALIGN, HEADER_LEN, V2_MAGIC};
+use crate::graph::csr::Csr;
+use crate::partition::relabel::{apply_relabeling, degree_sort_relabeling, Relabeling};
+
+/// Options for [`encode_store`] / [`write_store`].
+#[derive(Clone, Copy, Debug)]
+pub struct StoreWriteOptions {
+    /// Apply the degree-sort relabeling before encoding (high-degree
+    /// vertices first). Improves both gap compression and cache locality
+    /// on skewed graphs; the permutation is stored so results unmap
+    /// transparently.
+    pub relabel: bool,
+    /// Vertices per block. Smaller blocks mean finer lazy loading but a
+    /// larger index.
+    pub block_size: u32,
+}
+
+impl Default for StoreWriteOptions {
+    fn default() -> Self {
+        Self { relabel: false, block_size: BLOCK_SIZE_DEFAULT }
+    }
+}
+
+/// Result of encoding: the full container bytes plus the permutation that
+/// was applied (present iff `relabel` was requested).
+#[derive(Debug)]
+pub struct EncodedStore {
+    /// The complete `.bbfs` v2 file image.
+    pub bytes: Vec<u8>,
+    /// The stored relabeling, if the graph was permuted before encoding.
+    pub relabeling: Option<Relabeling>,
+}
+
+/// Size in bytes of the uncompressed `.bbfs` v1 snapshot of `g` —
+/// the baseline for compression-ratio reporting.
+pub fn v1_snapshot_bytes(g: &Csr) -> u64 {
+    24 + 8 * (g.num_vertices() as u64 + 1) + 4 * g.num_edges()
+}
+
+fn align_up(x: u64, align: u64) -> u64 {
+    x.div_ceil(align) * align
+}
+
+/// Encode `g` into a `.bbfs` v2 container image.
+///
+/// Fails with a typed error (never panics) if `n` exceeds the `u32`
+/// vertex-id space or an adjacency run is not sorted ascending — the CSR
+/// invariant every constructor in this crate maintains, re-checked here
+/// because gap encoding silently corrupts on violation.
+pub fn encode_store(g: &Csr, opts: StoreWriteOptions) -> Result<EncodedStore, StoreError> {
+    if opts.block_size == 0 {
+        return Err(StoreError::Invalid("block_size must be >= 1".into()));
+    }
+    if g.num_vertices() > u32::MAX as usize {
+        return Err(StoreError::Invalid(format!(
+            "{} vertices exceed the u32 id space",
+            g.num_vertices()
+        )));
+    }
+    let (graph, relabeling) = if opts.relabel {
+        let r = degree_sort_relabeling(g);
+        (apply_relabeling(g, &r), Some(r))
+    } else {
+        (g.clone(), None)
+    };
+
+    let n = graph.num_vertices();
+    let m = graph.num_edges();
+    let bs = opts.block_size as usize;
+    let num_blocks = n.div_ceil(bs);
+
+    // Per-block payloads: degree stream first (so degree-only decode
+    // never touches adjacency bytes), then per-vertex gap-encoded lists.
+    let mut data = Vec::new();
+    let mut index: Vec<(u64, u64)> = Vec::with_capacity(num_blocks + 1);
+    let mut edges_before: u64 = 0;
+    for b in 0..num_blocks {
+        index.push((data.len() as u64, edges_before));
+        let lo = b * bs;
+        let hi = ((b + 1) * bs).min(n);
+        for v in lo..hi {
+            encode_varint(u64::from(graph.degree(v as u32)), &mut data);
+        }
+        for v in lo..hi {
+            let ns = graph.neighbors(v as u32);
+            edges_before += ns.len() as u64;
+            let mut prev: Option<u32> = None;
+            for &w in ns {
+                match prev {
+                    None => encode_varint(u64::from(w), &mut data),
+                    Some(p) if w >= p => encode_varint(u64::from(w - p), &mut data),
+                    Some(_) => return Err(StoreError::UnsortedAdjacency { vertex: v as u32 }),
+                }
+                prev = Some(w);
+            }
+        }
+    }
+    index.push((data.len() as u64, m));
+    debug_assert_eq!(edges_before, m);
+
+    let flags: u32 = if relabeling.is_some() { 1 } else { 0 };
+    let index_len = 16 * (num_blocks as u64 + 1);
+    let perm_len = if relabeling.is_some() { 4 * n as u64 } else { 0 };
+    let perm_off = if relabeling.is_some() { HEADER_LEN + index_len } else { 0 };
+    let data_off = align_up(HEADER_LEN + index_len + perm_len, DATA_ALIGN);
+    let file_len = data_off + data.len() as u64;
+
+    let mut out = Vec::with_capacity(file_len as usize);
+    out.extend_from_slice(V2_MAGIC);
+    out.extend_from_slice(&2u32.to_le_bytes());
+    out.extend_from_slice(&flags.to_le_bytes());
+    out.extend_from_slice(&(n as u64).to_le_bytes());
+    out.extend_from_slice(&m.to_le_bytes());
+    out.extend_from_slice(&opts.block_size.to_le_bytes());
+    out.extend_from_slice(&(num_blocks as u32).to_le_bytes());
+    out.extend_from_slice(&HEADER_LEN.to_le_bytes());
+    out.extend_from_slice(&perm_off.to_le_bytes());
+    out.extend_from_slice(&data_off.to_le_bytes());
+    out.extend_from_slice(&file_len.to_le_bytes());
+    debug_assert_eq!(out.len() as u64, HEADER_LEN);
+    for &(start, first_edge) in &index {
+        out.extend_from_slice(&start.to_le_bytes());
+        out.extend_from_slice(&first_edge.to_le_bytes());
+    }
+    if let Some(r) = &relabeling {
+        for &old in &r.old_id {
+            out.extend_from_slice(&old.to_le_bytes());
+        }
+    }
+    out.resize(data_off as usize, 0);
+    out.extend_from_slice(&data);
+    debug_assert_eq!(out.len() as u64, file_len);
+
+    Ok(EncodedStore { bytes: out, relabeling })
+}
+
+/// Encode `g` and write the container to `path`. Returns the encoding
+/// (bytes still in memory) so callers can report sizes without re-reading.
+pub fn write_store(
+    g: &Csr,
+    path: &std::path::Path,
+    opts: StoreWriteOptions,
+) -> Result<EncodedStore, StoreError> {
+    let enc = encode_store(g, opts)?;
+    std::fs::write(path, &enc.bytes)?;
+    Ok(enc)
+}

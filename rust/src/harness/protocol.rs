@@ -30,6 +30,16 @@
 //! live socket run); `measured` is excluded from the freshness compare —
 //! wallclock is not reproducible — but its invariants are still checked.
 //!
+//! Since v4 the report carries a **storage** section (`storage`): the
+//! `.bbfs` v2 container encoded from the web-like suite graph, committed
+//! as byte counts (v1 vs v2 vs degree-sorted v2), the container
+//! fingerprint, and the loader's decode counters for three load paths —
+//! eager full decode, cold plan build (degree-only pass + materialize),
+//! and warm start from a plan cache (zero decode work up front). The
+//! integers cross-validate the Rust codec against its line-for-line
+//! Python port: both produce the identical container, so both report the
+//! identical sizes, fingerprint, and counter deltas.
+//!
 //! The artifact lives at the repository root and is kept fresh by CI:
 //! `butterfly-bfs bench-protocol --check` recomputes the protocol and
 //! fails when the committed file drifts (integer counters compare
@@ -44,17 +54,24 @@ use crate::coordinator::metrics::BatchMetrics;
 use crate::coordinator::{EngineConfig, TraversalPlan};
 use crate::graph::csr::{Csr, VertexId};
 use crate::graph::gen::table1_suite;
+use crate::graph::store::{
+    encode_store, v1_snapshot_bytes, GraphStore, StoreCounters, StoreWriteOptions,
+};
 use crate::serve::coalescer::Coalescer;
 use crate::serve::metrics::nearest_rank_us;
 use crate::util::json::Json;
 use crate::util::stats::gteps;
 use std::path::Path;
+use std::sync::Arc;
 
 /// Protocol identifier (bump when the schema or configs change).
 /// v2 added the batch-width ablation section (`width_ablation`): wide
 /// lane masks vs chunked 64-root execution, in 1D and 2D.
 /// v3 added the serve-throughput simulation (`serve_throughput`).
-pub const PROTOCOL_NAME: &str = "engine-bench-v3";
+/// v4 added the on-disk storage section (`storage`): `.bbfs` v2
+/// compression sizes, container fingerprint, and warm-start decode
+/// counters.
+pub const PROTOCOL_NAME: &str = "engine-bench-v4";
 /// Suite graph the protocol runs on (the paper's GAP_kron analog).
 pub const PROTOCOL_GRAPH: &str = "kron-like";
 /// Scale adjustment: `kron-like` is scale 21; −10 ⇒ 2^11 vertices — big
@@ -92,6 +109,14 @@ pub const PROTOCOL_SERVE_WINDOW_US: u64 = 240;
 pub const PROTOCOL_SERVE_MAX_BATCH: usize = 64;
 /// Serve sim: root-sampling seed of the request stream.
 pub const PROTOCOL_SERVE_SEED: u64 = 11;
+/// Storage section: suite graph the container is encoded from (the
+/// paper's GAP_web analog — the graph class v2's gap encoding targets).
+pub const PROTOCOL_STORAGE_GRAPH: &str = "web-like";
+/// Storage section: scale adjustment (`web-like` is scale 20; −8 ⇒ 2^12
+/// vertices — several container blocks, small enough for CI).
+pub const PROTOCOL_STORAGE_SCALE_DELTA: i32 = -8;
+/// Storage section: node count of the cold/warm plan builds (1D).
+pub const PROTOCOL_STORAGE_NODES: usize = 16;
 
 fn direction_modes() -> [(&'static str, DirectionMode); 3] {
     [
@@ -358,6 +383,155 @@ fn serve_throughput_json(g: &Csr) -> Json {
     ])
 }
 
+/// A decode-counter snapshot as the storage section records it.
+fn store_counters_json(c: &StoreCounters) -> Json {
+    Json::obj(vec![
+        ("degree_entries", Json::u(c.degree_entries_decoded)),
+        ("edges", Json::u(c.edges_decoded)),
+        ("blocks", Json::u(c.blocks_decoded)),
+    ])
+}
+
+/// The storage section: `.bbfs` v2 sizes, fingerprint, and the decode
+/// counters of the three load paths — eager full decode, cold plan build
+/// (degree-only pass, then materialize), and warm start from a plan
+/// cache (zero adjacency decoding up front; the acceptance pass pins
+/// that gap). Every integer here is reproduced by the Python port of
+/// the codec, so the committed numbers cross-validate the two
+/// implementations byte-for-byte.
+fn storage_json() -> Json {
+    let spec = table1_suite()
+        .into_iter()
+        .find(|s| s.name == PROTOCOL_STORAGE_GRAPH)
+        .expect("suite contains the storage graph");
+    let g = spec.generate_scaled(PROTOCOL_STORAGE_SCALE_DELTA);
+    let v1 = v1_snapshot_bytes(&g);
+    let plain =
+        encode_store(&g, StoreWriteOptions::default()).expect("suite graph encodes");
+    let relabeled = encode_store(
+        &g,
+        StoreWriteOptions { relabel: true, ..StoreWriteOptions::default() },
+    )
+    .expect("suite graph encodes relabeled");
+    let v2 = plain.bytes.len() as u64;
+    let v2_relabeled = relabeled.bytes.len() as u64;
+    let cfg = EngineConfig::dgx2(PROTOCOL_STORAGE_NODES, PROTOCOL_FANOUT);
+    let root = sample_batch_roots(&g, 1, PROTOCOL_ROOT_SEED)[0];
+    let reference = TraversalPlan::build(&g, cfg.clone())
+        .expect("valid protocol plan")
+        .session()
+        .run(root)
+        .expect("protocol root in range")
+        .dist()
+        .to_vec();
+
+    // Eager path: full decode back to CSR on a dedicated handle.
+    let eager_store =
+        GraphStore::open_bytes(plain.bytes.clone()).expect("own encoding opens");
+    let decoded = eager_store.to_csr().expect("own encoding decodes");
+    let eager = eager_store.counters();
+
+    // Cold path: plan build (degree-only pass) + materialize, then save
+    // the partition cuts as a plan cache.
+    let cold_store = Arc::new(
+        GraphStore::open_bytes(plain.bytes.clone()).expect("own encoding opens"),
+    );
+    let fingerprint = cold_store.fingerprint_hex();
+    let cold_plan = TraversalPlan::build_from_store(Arc::clone(&cold_store), cfg.clone())
+        .expect("valid store plan");
+    let cold_at_load = cold_store.counters();
+    cold_plan.materialize().expect("own encoding materializes");
+    let cold_after = cold_store.counters();
+    let cache = cold_plan.cache_json().expect("store-built plan has a cache");
+    let cold_dist = cold_plan
+        .session()
+        .run(root)
+        .expect("protocol root in range")
+        .dist()
+        .to_vec();
+
+    // Warm path: restart from the cache on a fresh handle — the counter
+    // snapshot before materialize is the warm-start evidence.
+    let warm_store =
+        Arc::new(GraphStore::open_bytes(plain.bytes).expect("own encoding opens"));
+    let warm_plan = TraversalPlan::from_cache_json(Arc::clone(&warm_store), cfg.clone(), &cache)
+        .expect("own cache validates");
+    let warm_at_load = warm_store.counters();
+    warm_plan.materialize().expect("own encoding materializes");
+    let warm_after = warm_store.counters();
+    let warm_dist = warm_plan
+        .session()
+        .run(root)
+        .expect("protocol root in range")
+        .dist()
+        .to_vec();
+
+    // Relabeled store: answers must unmap to the in-memory plan's.
+    let relabeled_store =
+        Arc::new(GraphStore::open_bytes(relabeled.bytes).expect("own encoding opens"));
+    let relabeled_plan = TraversalPlan::build_from_store(Arc::clone(&relabeled_store), cfg)
+        .expect("valid store plan");
+    relabeled_plan.materialize().expect("own encoding materializes");
+    let perm = relabeled_plan
+        .relabeling()
+        .expect("relabeled store plan carries the permutation")
+        .clone();
+    let relabeled_dist = perm.unmap_dist(
+        relabeled_plan
+            .session()
+            .run(perm.new_id[root as usize])
+            .expect("protocol root in range")
+            .dist(),
+    );
+
+    let warm_equals_cold = warm_dist == cold_dist;
+    let matches_in_memory =
+        decoded == g && cold_dist == reference && relabeled_dist == reference;
+    Json::obj(vec![
+        (
+            "graph",
+            Json::obj(vec![
+                ("name", Json::s(PROTOCOL_STORAGE_GRAPH)),
+                ("scale_delta", Json::n(PROTOCOL_STORAGE_SCALE_DELTA as f64)),
+                ("vertices", Json::u(g.num_vertices() as u64)),
+                ("edges", Json::u(g.num_edges())),
+            ]),
+        ),
+        ("nodes", Json::u(PROTOCOL_STORAGE_NODES as u64)),
+        ("fanout", Json::u(PROTOCOL_FANOUT as u64)),
+        ("mode", Json::s("1d")),
+        ("block_size", Json::u(crate::graph::store::BLOCK_SIZE_DEFAULT as u64)),
+        ("v1_bytes", Json::u(v1)),
+        ("v2_bytes", Json::u(v2)),
+        ("v2_relabeled_bytes", Json::u(v2_relabeled)),
+        ("compression_ratio", Json::n(v1 as f64 / v2 as f64)),
+        ("relabeled_ratio", Json::n(v1 as f64 / v2_relabeled as f64)),
+        ("fingerprint", Json::s(fingerprint)),
+        (
+            "load_counters",
+            Json::obj(vec![
+                ("eager", store_counters_json(&eager)),
+                (
+                    "cold_build",
+                    Json::obj(vec![
+                        ("at_load", store_counters_json(&cold_at_load)),
+                        ("after_materialize", store_counters_json(&cold_after)),
+                    ]),
+                ),
+                (
+                    "warm_start",
+                    Json::obj(vec![
+                        ("at_load", store_counters_json(&warm_at_load)),
+                        ("after_materialize", store_counters_json(&warm_after)),
+                    ]),
+                ),
+            ]),
+        ),
+        ("warm_equals_cold", Json::Bool(warm_equals_cold)),
+        ("matches_in_memory", Json::Bool(matches_in_memory)),
+    ])
+}
+
 /// Run the full protocol and build the report. Deterministic: fixed
 /// graph seed, fixed roots, simulated clocks only (no wallclock fields).
 pub fn engine_bench_report() -> Json {
@@ -410,6 +584,7 @@ pub fn engine_bench_report() -> Json {
         ("configs", Json::Arr(configs)),
         ("width_ablation", width_ablation_json(&g)),
         ("serve_throughput", serve_throughput_json(&g)),
+        ("storage", storage_json()),
     ])
 }
 
@@ -699,6 +874,55 @@ fn acceptance(report: &Json) -> Result<(), String> {
         return Err("serve sim: coalesced p50 must beat the overloaded baseline's"
             .to_string());
     }
+    // Storage invariants: the compression claim and the warm-start claim,
+    // each pinned as a counter fact rather than prose.
+    let storage = report.get("storage").ok_or("missing storage")?;
+    let ratio = f64_field(storage, "compression_ratio")?;
+    if ratio < 2.0 {
+        return Err(format!(
+            "storage: v2 compression ratio {ratio:.2} below the promised 2x"
+        ));
+    }
+    let edges = u64_field(storage.get("graph").ok_or("storage: missing graph")?, "edges")?;
+    let counters = storage.get("load_counters").ok_or("storage: missing load_counters")?;
+    fn at<'a>(counters: &'a Json, path: &[&str]) -> Result<&'a Json, String> {
+        let mut cur = counters;
+        for key in path {
+            cur = cur
+                .get(key)
+                .ok_or_else(|| format!("storage: missing load_counters.{}", path.join(".")))?;
+        }
+        Ok(cur)
+    }
+    if u64_field(at(counters, &["eager"])?, "edges")? != edges {
+        return Err("storage: eager decode must touch every edge".to_string());
+    }
+    let cold_at_load = at(counters, &["cold_build", "at_load"])?;
+    if u64_field(cold_at_load, "degree_entries")? == 0 {
+        return Err("storage: cold build must run the degree-only pass".to_string());
+    }
+    if u64_field(cold_at_load, "edges")? != 0 {
+        return Err(
+            "storage: cold build decoded adjacency before materialize".to_string()
+        );
+    }
+    let warm_at_load = at(counters, &["warm_start", "at_load"])?;
+    if u64_field(warm_at_load, "degree_entries")? != 0
+        || u64_field(warm_at_load, "edges")? != 0
+    {
+        return Err(
+            "storage: warm start must decode nothing up front (that is the point)"
+                .to_string(),
+        );
+    }
+    if u64_field(at(counters, &["warm_start", "after_materialize"])?, "edges")? == 0 {
+        return Err("storage: warm materialize never decoded adjacency".to_string());
+    }
+    for key in ["warm_equals_cold", "matches_in_memory"] {
+        if storage.get(key).and_then(Json::as_bool) != Some(true) {
+            return Err(format!("storage: {key} must be true"));
+        }
+    }
     Ok(())
 }
 
@@ -783,6 +1007,37 @@ mod tests {
                 PROTOCOL_SERVE_REQUESTS as u64
             );
         }
+        // Storage schema: integer byte counts, a 16-hex fingerprint, and
+        // counter snapshots for all three load paths.
+        let storage = a.get("storage").unwrap();
+        for key in ["v1_bytes", "v2_bytes", "v2_relabeled_bytes", "block_size"] {
+            assert!(storage.get(key).and_then(Json::as_u64).is_some(), "{key}");
+        }
+        let fp = storage.get("fingerprint").unwrap().as_str().unwrap();
+        assert_eq!(fp.len(), 16, "fingerprint must be 16 hex digits: {fp:?}");
+        assert!(fp.bytes().all(|b| b.is_ascii_hexdigit()), "{fp:?}");
+        let counters = storage.get("load_counters").unwrap();
+        for path in [
+            vec!["eager"],
+            vec!["cold_build", "at_load"],
+            vec!["cold_build", "after_materialize"],
+            vec!["warm_start", "at_load"],
+            vec!["warm_start", "after_materialize"],
+        ] {
+            let mut cur = counters;
+            for key in &path {
+                cur = cur.get(key).unwrap_or_else(|| panic!("{path:?}"));
+            }
+            for key in ["degree_entries", "edges", "blocks"] {
+                assert!(cur.get(key).and_then(Json::as_u64).is_some(), "{path:?}.{key}");
+            }
+        }
+        // Relabeling stores a 4-bytes/vertex permutation (plus alignment
+        // padding); the gap encoding must not degrade beyond that.
+        let v2 = storage.get("v2_bytes").unwrap().as_u64().unwrap();
+        let v2r = storage.get("v2_relabeled_bytes").unwrap().as_u64().unwrap();
+        let n = storage.get("graph").unwrap().get("vertices").unwrap().as_u64().unwrap();
+        assert!(v2r <= v2 + 4 * n + 4096, "relabeled {v2r} vs plain {v2}");
     }
 
     #[test]

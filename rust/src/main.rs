@@ -25,9 +25,11 @@ use butterfly_bfs::coordinator::config::{DirectionMode, PartitionMode};
 use butterfly_bfs::coordinator::{
     BatchWidth, EngineConfig, PatternKind, PayloadEncoding, TraversalPlan,
 };
+use butterfly_bfs::partition::relabel::{apply_relabeling, Relabeling};
 use butterfly_bfs::partition::Partition2D;
 use butterfly_bfs::graph::csr::Csr;
 use butterfly_bfs::graph::gen::{table1_suite, GraphSpec};
+use butterfly_bfs::graph::store::{self, GraphStore, StoreWriteOptions};
 use butterfly_bfs::graph::{io, props};
 use butterfly_bfs::harness::table::{count, f2, ms, Table};
 use butterfly_bfs::net::model::NetModel;
@@ -70,6 +72,7 @@ fn dispatch(argv: Vec<String>) -> Result<()> {
         "run" => cmd_run(rest),
         "batch" => cmd_batch(rest),
         "baseline" => cmd_baseline(rest),
+        "convert" => cmd_convert(rest),
         "generate" => cmd_generate(rest),
         "inspect" => cmd_inspect(rest),
         "schedule" => cmd_schedule(rest),
@@ -90,6 +93,7 @@ fn print_usage() {
          \x20 run       distributed ButterFly BFS on a suite graph or file\n\
          \x20 batch     batched multi-source BFS (up to 512 roots per exchange)\n\
          \x20 baseline  single-node CPU top-down / direction-optimizing BFS\n\
+         \x20 convert   write a graph as a compressed .bbfs v2 store\n\
          \x20 generate  generate a suite graph to a file\n\
          \x20 inspect   print graph properties\n\
          \x20 schedule  print a communication schedule and its costs\n\
@@ -110,7 +114,9 @@ fn handle_help(r: Result<Args, CliError>, spec: &Args) -> Result<Args> {
 }
 
 /// Resolve `--graph` into a CSR: a suite name (`kron-like`, …), or a path
-/// to a `.bbfs` / edge-list / MatrixMarket file.
+/// to a `.bbfs` (v1 or v2) / edge-list / MatrixMarket file. A relabeled
+/// v2 store is unmapped back to original ids, so eager loading is
+/// transparent regardless of how the file was converted.
 fn load_graph(name: &str, scale_delta: i32) -> Result<Csr> {
     if let Some(spec) = suite_spec(name) {
         return Ok(spec.generate_scaled(scale_delta));
@@ -128,10 +134,105 @@ fn load_graph(name: &str, scale_delta: i32) -> Result<Csr> {
     }
     let ext = p.extension().and_then(|e| e.to_str()).unwrap_or("");
     Ok(match ext {
-        "bbfs" => io::read_binary(p)?,
+        "bbfs" => match io::snapshot_kind(p)? {
+            io::SnapshotKind::V1 => io::read_binary(p)?,
+            io::SnapshotKind::V2 => {
+                let s = GraphStore::open(p)?;
+                let g = s.to_csr()?;
+                match s.relabeling() {
+                    // Invert the stored permutation: the decoded graph is
+                    // in relabeled ids, callers expect original ids.
+                    Some(r) => apply_relabeling(
+                        &g,
+                        &Relabeling { new_id: r.old_id.clone(), old_id: r.new_id.clone() },
+                    ),
+                    None => g,
+                }
+            }
+            io::SnapshotKind::Unknown => bail!("{name}: not a .bbfs snapshot (bad magic)"),
+        },
         "mtx" => io::read_matrix_market(p)?.0,
         _ => io::read_edge_list(p, None)?.0,
     })
+}
+
+/// A plan plus where it came from — shared by `run`/`batch`/`serve`.
+struct PlanSource {
+    plan: TraversalPlan,
+    /// The eagerly loaded CSR, when `--graph` was used.
+    graph: Option<Csr>,
+    /// The open v2 store, when `--graph-file` pointed at one.
+    store: Option<std::sync::Arc<GraphStore>>,
+    /// True when the plan warm-started from a valid `--plan-cache`.
+    warm: bool,
+}
+
+/// Build the traversal plan from either `--graph` (suite name or eagerly
+/// loaded file) or `--graph-file` (store-backed `.bbfs`, v2 enabling lazy
+/// slabs + `--plan-cache` warm-start). The returned plan is always
+/// materialized: corrupt stores surface here as typed errors, and
+/// `session()` construction afterwards cannot fail.
+fn build_plan(a: &Args, cfg: EngineConfig) -> Result<PlanSource> {
+    let graph = a.get("graph");
+    let graph_file = a.get("graph-file");
+    let plan_cache = a.get("plan-cache");
+    if graph.is_empty() == graph_file.is_empty() {
+        bail!("pass exactly one of --graph <suite|file> or --graph-file <path.bbfs>");
+    }
+    if graph_file.is_empty() {
+        if !plan_cache.is_empty() {
+            bail!("--plan-cache requires --graph-file with a .bbfs v2 store (run convert first)");
+        }
+        let g = load_graph(&graph, a.get_parse::<i32>("scale-delta")?)?;
+        let plan = TraversalPlan::build(&g, cfg)?;
+        return Ok(PlanSource { plan, graph: Some(g), store: None, warm: false });
+    }
+    let p = Path::new(&graph_file);
+    match io::snapshot_kind(p)? {
+        io::SnapshotKind::V1 => {
+            if !plan_cache.is_empty() {
+                bail!("--plan-cache requires a .bbfs v2 store; {graph_file} is v1 (run convert)");
+            }
+            let g = io::read_binary(p)?;
+            let plan = TraversalPlan::build(&g, cfg)?;
+            Ok(PlanSource { plan, graph: Some(g), store: None, warm: false })
+        }
+        io::SnapshotKind::V2 => {
+            let store = std::sync::Arc::new(if a.get_flag("mmap") {
+                GraphStore::open_mmap(p)?
+            } else {
+                GraphStore::open(p)?
+            });
+            let mut warm = false;
+            let plan = if !plan_cache.is_empty() && Path::new(&plan_cache).exists() {
+                match TraversalPlan::load_cache(
+                    std::sync::Arc::clone(&store),
+                    cfg.clone(),
+                    Path::new(&plan_cache),
+                ) {
+                    Ok(plan) => {
+                        warm = true;
+                        plan
+                    }
+                    Err(e) => {
+                        eprintln!("plan cache {plan_cache} ignored ({e}); rebuilding");
+                        TraversalPlan::build_from_store(std::sync::Arc::clone(&store), cfg)?
+                    }
+                }
+            } else {
+                TraversalPlan::build_from_store(std::sync::Arc::clone(&store), cfg)?
+            };
+            if !plan_cache.is_empty() && !warm {
+                plan.save_cache(Path::new(&plan_cache))?;
+                eprintln!("plan cache written to {plan_cache}");
+            }
+            // Force lazy slabs now: a corrupt data section becomes a
+            // typed error here instead of a panic inside session().
+            plan.materialize()?;
+            Ok(PlanSource { plan, graph: None, store: Some(store), warm })
+        }
+        io::SnapshotKind::Unknown => bail!("{graph_file}: not a .bbfs snapshot (bad magic)"),
+    }
 }
 
 fn suite_spec(name: &str) -> Option<GraphSpec> {
@@ -140,7 +241,10 @@ fn suite_spec(name: &str) -> Option<GraphSpec> {
 
 fn cmd_run(argv: Vec<String>) -> Result<()> {
     let spec = Args::new("butterfly-bfs run", "distributed ButterFly BFS traversal")
-        .req("graph", "suite graph name or path (.bbfs/.mtx/edge list)")
+        .opt("graph", "", "suite graph name or path (.bbfs/.mtx/edge list), loaded eagerly")
+        .opt("graph-file", "", "store-backed .bbfs path (v2 enables lazy load + --plan-cache)")
+        .opt("plan-cache", "", "plan cache path: warm-start when valid, written after cold build")
+        .flag("mmap", "map a v2 store with mmap(2) instead of pread")
         .opt("nodes", "16", "number of simulated compute nodes")
         .opt("mode", "1d", "partition mode: 1d (butterfly/all-to-all) | 2d (fold/expand)")
         .opt("grid", "auto", "2d processor grid RxC (rows*cols must equal --nodes) or auto")
@@ -157,7 +261,6 @@ fn cmd_run(argv: Vec<String>) -> Result<()> {
         .flag("json", "dump metrics as JSON");
     let a = handle_help(spec.clone().parse(argv), &spec)?;
 
-    let g = load_graph(&a.get("graph"), a.get_parse::<i32>("scale-delta")?)?;
     let nodes = a.get_usize("nodes")?;
     let pattern = match a.get("pattern").as_str() {
         "butterfly" => PatternKind::Butterfly { fanout: a.get_parse("fanout")? },
@@ -184,10 +287,20 @@ fn cmd_run(argv: Vec<String>) -> Result<()> {
     // Invalid layouts (grid too large for the graph, more nodes than
     // vertices, mismatched grid) surface as typed `PlanError`s and print
     // as clean CLI errors.
-    let plan = TraversalPlan::build(&g, cfg)?;
+    let src = build_plan(&a, cfg)?;
+    let plan = src.plan;
+    if src.warm {
+        eprintln!("warm start: plan loaded from cache (no cold partition build)");
+    }
     let mut session = plan.session();
     let root = a.get_parse::<u32>("root")?;
-    let result = session.run(root)?;
+    // On a relabeled store the engine runs in permuted id space: map the
+    // root in (aggregate outputs are permutation-invariant).
+    let exec_root = match plan.relabeling() {
+        Some(r) if (root as usize) < r.new_id.len() => r.new_id[root as usize],
+        _ => root,
+    };
+    let result = session.run(exec_root)?;
     session
         .assert_agreement()
         .map_err(|e| format!("node disagreement: {e}"))?;
@@ -199,8 +312,8 @@ fn cmd_run(argv: Vec<String>) -> Result<()> {
     }
     println!(
         "graph: |V|={} |E|={}  nodes={nodes} mode={} pattern={}",
-        count(g.num_vertices() as u64),
-        count(g.num_edges()),
+        count(plan.num_vertices() as u64),
+        count(plan.graph_edges()),
         partition.name(),
         match partition {
             PartitionMode::OneD => plan.config().pattern.name(),
@@ -307,7 +420,10 @@ fn parse_direction(name: &str) -> Result<DirectionMode> {
 /// cost sequentially.
 fn cmd_batch(argv: Vec<String>) -> Result<()> {
     let spec = Args::new("butterfly-bfs batch", "batched multi-source BFS (MS-BFS)")
-        .req("graph", "suite graph name or path (.bbfs/.mtx/edge list)")
+        .opt("graph", "", "suite graph name or path (.bbfs/.mtx/edge list), loaded eagerly")
+        .opt("graph-file", "", "store-backed .bbfs path (v2 enables lazy load + --plan-cache)")
+        .opt("plan-cache", "", "plan cache path: warm-start when valid, written after cold build")
+        .flag("mmap", "map a v2 store with mmap(2) instead of pread")
         .opt("nodes", "16", "number of simulated compute nodes")
         .opt("mode", "1d", "partition mode: 1d (butterfly) | 2d (fold/expand)")
         .opt("grid", "auto", "2d processor grid RxC or auto")
@@ -321,7 +437,6 @@ fn cmd_batch(argv: Vec<String>) -> Result<()> {
         .flag("compare", "also run the roots sequentially and report the ratio");
     let a = handle_help(spec.clone().parse(argv), &spec)?;
 
-    let g = load_graph(&a.get("graph"), a.get_parse::<i32>("scale-delta")?)?;
     let nodes = a.get_usize("nodes")?;
     let fanout: u32 = a.get_parse("fanout")?;
     let width = a.get_usize("width")?;
@@ -338,13 +453,32 @@ fn cmd_batch(argv: Vec<String>) -> Result<()> {
         parallel_phase2: a.get_flag("parallel-sync"),
         ..EngineConfig::dgx2(nodes, fanout)
     };
-    let plan = TraversalPlan::build(&g, cfg)?;
+    let src = build_plan(&a, cfg)?;
+    let plan = src.plan;
+    if src.warm {
+        eprintln!("warm start: plan loaded from cache (no cold partition build)");
+    }
     let mut session = plan.session();
-    let roots = butterfly_bfs::bfs::msbfs::sample_batch_roots(
-        &g,
-        width,
-        a.get_u64("seed")?,
-    );
+    let seed = a.get_u64("seed")?;
+    // Store-backed plans have no eager CSR to sample from; degrees come
+    // from the store's O(n) degree stream instead. (On a relabeled store
+    // the roots are sampled in relabeled space — batch output is
+    // aggregate-only, so ids never surface.)
+    let roots = match &src.store {
+        Some(store) => {
+            let prefix = store.degree_prefix()?;
+            butterfly_bfs::bfs::msbfs::sample_batch_roots_by(
+                plan.num_vertices(),
+                |v| (prefix[v as usize + 1] - prefix[v as usize]) as u32,
+                width,
+                seed,
+            )
+        }
+        None => {
+            let g = src.graph.as_ref().expect("eager plan keeps its graph");
+            butterfly_bfs::bfs::msbfs::sample_batch_roots(g, width, seed)
+        }
+    };
     let batch = session.run_batch(&roots)?;
     session
         .assert_batch_agreement()
@@ -352,8 +486,8 @@ fn cmd_batch(argv: Vec<String>) -> Result<()> {
     let bm = batch.metrics();
     println!(
         "graph: |V|={} |E|={}  nodes={nodes} mode={} fanout={fanout} batch={}",
-        count(g.num_vertices() as u64),
-        count(g.num_edges()),
+        count(plan.num_vertices() as u64),
+        count(plan.graph_edges()),
         plan.config().partition.name(),
         batch.num_roots()
     );
@@ -406,7 +540,10 @@ fn cmd_batch(argv: Vec<String>) -> Result<()> {
 /// final metrics report prints as one JSON line on stdout.
 fn cmd_serve(argv: Vec<String>) -> Result<()> {
     let spec = Args::new("butterfly-bfs serve", "TCP query service with batch coalescing")
-        .req("graph", "suite graph name or path (.bbfs/.mtx/edge list)")
+        .opt("graph", "", "suite graph name or path (.bbfs/.mtx/edge list), loaded eagerly")
+        .opt("graph-file", "", "store-backed .bbfs path (v2 enables lazy load + --plan-cache)")
+        .opt("plan-cache", "", "plan cache path: warm-start restart is O(mmap), not O(E)")
+        .flag("mmap", "map a v2 store with mmap(2) instead of pread")
         .opt("addr", "127.0.0.1:0", "bind address (port 0 = ephemeral, printed on start)")
         .opt("nodes", "16", "number of simulated compute nodes")
         .opt("mode", "1d", "partition mode: 1d (butterfly) | 2d (fold/expand)")
@@ -428,7 +565,6 @@ fn cmd_serve(argv: Vec<String>) -> Result<()> {
     let Some(batch_width) = BatchWidth::for_lanes(max_batch) else {
         bail!("--max-batch must be in 1..=512 (got {max_batch})");
     };
-    let g = load_graph(&a.get("graph"), a.get_parse::<i32>("scale-delta")?)?;
     let nodes = a.get_usize("nodes")?;
     let cfg = EngineConfig {
         partition: parse_partition_mode(&a.get("mode"), &a.get("grid"), nodes)?,
@@ -436,7 +572,11 @@ fn cmd_serve(argv: Vec<String>) -> Result<()> {
         batch_width,
         ..EngineConfig::dgx2(nodes, a.get_parse("fanout")?)
     };
-    let plan = std::sync::Arc::new(TraversalPlan::build(&g, cfg)?);
+    let src = build_plan(&a, cfg)?;
+    if src.warm {
+        eprintln!("warm start: plan loaded from cache (no cold partition build)");
+    }
+    let plan = std::sync::Arc::new(src.plan);
     let timeout = a.get_u64("timeout-us")?;
     let serve_cfg = butterfly_bfs::serve::ServeConfig {
         addr: a.get("addr"),
@@ -490,6 +630,53 @@ fn cmd_baseline(argv: Vec<String>) -> Result<()> {
         ]);
     }
     println!("{}", t.render());
+    Ok(())
+}
+
+/// Convert any loadable graph into the compressed `.bbfs` v2 store (or,
+/// with `--v1`, the legacy raw-CSR snapshot), reporting the compression
+/// ratio against the v1 byte size.
+fn cmd_convert(argv: Vec<String>) -> Result<()> {
+    let spec = Args::new("butterfly-bfs convert", "write a graph as a .bbfs v2 store")
+        .req("graph", "suite graph name or input path (.bbfs/.mtx/edge list)")
+        .req("out", "output .bbfs path")
+        .opt("scale-delta", "0", "suite graph scale adjustment (+/- log2)")
+        .opt("block-size", "1024", "vertices per compressed block")
+        .flag("relabel", "degree-sort relabel before encoding (stores the permutation)")
+        .flag("v1", "write the legacy uncompressed v1 snapshot instead");
+    let a = handle_help(spec.clone().parse(argv), &spec)?;
+    let g = load_graph(&a.get("graph"), a.get_parse::<i32>("scale-delta")?)?;
+    let out = a.get("out");
+    let p = Path::new(&out);
+    let v1_bytes = store::v1_snapshot_bytes(&g);
+    if a.get_flag("v1") {
+        io::write_binary(&g, p)?;
+        println!(
+            "wrote {out} (v1, {} bytes, |V|={}, |E|={})",
+            count(v1_bytes),
+            count(g.num_vertices() as u64),
+            count(g.num_edges())
+        );
+        return Ok(());
+    }
+    let opts = StoreWriteOptions {
+        relabel: a.get_flag("relabel"),
+        block_size: a.get_parse::<u32>("block-size")?,
+    };
+    let enc = store::write_store(&g, p, opts)?;
+    let v2_bytes = enc.bytes.len() as u64;
+    println!(
+        "wrote {out} (v2{}, |V|={}, |E|={})",
+        if enc.relabeling.is_some() { ", degree-sort relabeled" } else { "" },
+        count(g.num_vertices() as u64),
+        count(g.num_edges())
+    );
+    println!(
+        "size: {} bytes vs {} v1 — {:.2}x smaller",
+        count(v2_bytes),
+        count(v1_bytes),
+        v1_bytes as f64 / v2_bytes.max(1) as f64
+    );
     Ok(())
 }
 

@@ -25,39 +25,73 @@ pub fn nearest_rank_us(sorted: &[u64], p: f64) -> u64 {
     sorted[rank.clamp(1, sorted.len()) - 1]
 }
 
-/// Exact latency record: every completed request's queue-to-response
-/// time in microseconds. At serving-bench scale (thousands of requests)
-/// storing the samples beats a lossy sketch — percentiles stay exact and
-/// deterministic.
+/// Samples the latency window keeps before old values rotate out. Below
+/// the cap statistics are exact; past it, percentiles describe the most
+/// recent [`LATENCY_WINDOW_CAP`] requests — which is what a live `stats`
+/// probe wants anyway — while counts and the mean stay exact lifetime
+/// values. The point of the cap: a server up for weeks no longer grows an
+/// unbounded vector, and a `stats` report no longer clones + sorts the
+/// entire service history.
+pub const LATENCY_WINDOW_CAP: usize = 4096;
+
+/// Bounded latency record: a ring of the last [`LATENCY_WINDOW_CAP`]
+/// queue-to-response times (microseconds) plus exact lifetime count/sum.
+/// Deterministic: same record sequence, same window, same percentiles.
 #[derive(Debug, Default)]
 pub struct LatencyHistogram {
+    /// Ring buffer, insertion order until the cap, then rotating.
     samples: Vec<u64>,
+    /// Next ring slot to overwrite once the cap is reached.
+    cursor: usize,
+    /// Lifetime sample count (exact, never truncated).
+    total: u64,
+    /// Lifetime latency sum in microseconds (exact).
+    sum_us: u64,
 }
 
 impl LatencyHistogram {
     /// Record one completed request's latency.
     pub fn record(&mut self, latency_us: u64) {
-        self.samples.push(latency_us);
+        if self.samples.len() < LATENCY_WINDOW_CAP {
+            self.samples.push(latency_us);
+        } else {
+            self.samples[self.cursor] = latency_us;
+            self.cursor = (self.cursor + 1) % LATENCY_WINDOW_CAP;
+        }
+        self.total += 1;
+        self.sum_us = self.sum_us.saturating_add(latency_us);
     }
 
-    /// Number of recorded samples.
-    pub fn count(&self) -> usize {
+    /// Lifetime number of recorded samples (exact past the window cap).
+    pub fn count(&self) -> u64 {
+        self.total
+    }
+
+    /// Samples currently held in the window (`min(count, cap)`).
+    pub fn window_len(&self) -> usize {
         self.samples.len()
     }
 
-    /// Nearest-rank percentile (integer microseconds).
-    pub fn percentile(&self, p: f64) -> u64 {
+    /// Nearest-rank percentiles over the window, computed with **one**
+    /// sort for any number of requested ranks — a `stats` report asks for
+    /// p50 and p99 together instead of sorting the history twice.
+    pub fn percentiles(&self, ps: &[f64]) -> Vec<u64> {
         let mut sorted = self.samples.clone();
         sorted.sort_unstable();
-        nearest_rank_us(&sorted, p)
+        ps.iter().map(|&p| nearest_rank_us(&sorted, p)).collect()
     }
 
-    /// Mean latency in microseconds (0 when empty).
+    /// Nearest-rank percentile (integer microseconds) over the window.
+    pub fn percentile(&self, p: f64) -> u64 {
+        self.percentiles(&[p])[0]
+    }
+
+    /// Lifetime mean latency in microseconds (0 when empty).
     pub fn mean(&self) -> f64 {
-        if self.samples.is_empty() {
+        if self.total == 0 {
             return 0.0;
         }
-        self.samples.iter().sum::<u64>() as f64 / self.samples.len() as f64
+        self.sum_us as f64 / self.total as f64
     }
 }
 
@@ -71,6 +105,7 @@ struct MetricsInner {
     timed_out: u64,
     bad_requests: u64,
     errors: u64,
+    cancelled: u64,
 }
 
 /// Thread-safe serving counters, shared by workers and the `stats` op.
@@ -127,6 +162,17 @@ impl ServeMetrics {
         self.lock().errors += 1;
     }
 
+    /// Record a queued request dropped at dispatch because its client
+    /// connection had already closed — dead work the batch never carried.
+    pub fn record_cancelled(&self) {
+        self.lock().cancelled += 1;
+    }
+
+    /// Number of cancelled (client-gone-at-dispatch) requests so far.
+    pub fn cancelled(&self) -> u64 {
+        self.lock().cancelled
+    }
+
     /// Number of completed requests so far.
     pub fn completed(&self) -> u64 {
         self.lock().completed
@@ -152,14 +198,17 @@ impl ServeMetrics {
                 .map(|(w, c)| (w.to_string(), Json::u(*c)))
                 .collect(),
         );
+        // One sort serves every requested rank.
+        let pcts = m.latency.percentiles(&[50.0, 99.0]);
         Json::obj(vec![
             ("completed", Json::u(m.completed)),
             ("rejected", Json::u(m.rejected)),
             ("timed_out", Json::u(m.timed_out)),
             ("bad_requests", Json::u(m.bad_requests)),
             ("errors", Json::u(m.errors)),
-            ("p50_us", Json::u(m.latency.percentile(50.0))),
-            ("p99_us", Json::u(m.latency.percentile(99.0))),
+            ("cancelled", Json::u(m.cancelled)),
+            ("p50_us", Json::u(pcts[0])),
+            ("p99_us", Json::u(pcts[1])),
             ("mean_latency_us", Json::n(m.latency.mean())),
             ("qps", Json::n(qps)),
             ("batches", Json::u(batches)),
@@ -207,6 +256,48 @@ mod tests {
         let wc = r.get("width_counts").unwrap();
         assert_eq!(wc.get("1").unwrap().as_u64(), Some(1));
         assert_eq!(wc.get("3").unwrap().as_u64(), Some(1));
+    }
+
+    #[test]
+    fn percentiles_stable_across_the_window_cap() {
+        let mut h = LatencyHistogram::default();
+        // Below the cap: exact over everything recorded.
+        for _ in 0..LATENCY_WINDOW_CAP {
+            h.record(100);
+        }
+        assert_eq!(h.count(), LATENCY_WINDOW_CAP as u64);
+        assert_eq!(h.window_len(), LATENCY_WINDOW_CAP);
+        assert_eq!(h.percentiles(&[50.0, 99.0]), vec![100, 100]);
+        // A full cap of newer, slower samples rotates the old era out
+        // entirely: the window now describes recent behavior only, while
+        // the lifetime count stays exact.
+        for _ in 0..LATENCY_WINDOW_CAP {
+            h.record(200);
+        }
+        assert_eq!(h.count(), 2 * LATENCY_WINDOW_CAP as u64);
+        assert_eq!(h.window_len(), LATENCY_WINDOW_CAP);
+        assert_eq!(h.percentiles(&[50.0, 99.0]), vec![200, 200]);
+        // Half a cap of 300s: the window is half 200s, half 300s — p50
+        // pins to the old value, p99 to the new, deterministically.
+        for _ in 0..LATENCY_WINDOW_CAP / 2 {
+            h.record(300);
+        }
+        assert_eq!(h.percentiles(&[50.0, 99.0]), vec![200, 300]);
+        assert_eq!(h.count(), 2 * LATENCY_WINDOW_CAP as u64 + LATENCY_WINDOW_CAP as u64 / 2);
+        // Lifetime mean is exact across all eras, not just the window.
+        let cap = LATENCY_WINDOW_CAP as f64;
+        let expect = (100.0 * cap + 200.0 * cap + 300.0 * (cap / 2.0)) / (2.5 * cap);
+        assert!((h.mean() - expect).abs() < 1e-9, "{}", h.mean());
+    }
+
+    #[test]
+    fn report_counts_cancelled_requests() {
+        let m = ServeMetrics::new();
+        m.record_cancelled();
+        m.record_cancelled();
+        let r = m.report(1_000_000);
+        assert_eq!(r.get("cancelled").unwrap().as_u64(), Some(2));
+        assert_eq!(m.cancelled(), 2);
     }
 
     #[test]

@@ -74,11 +74,21 @@ impl Default for ServeConfig {
 }
 
 /// One admitted query waiting in the coalescer.
+///
+/// `root`/`targets` are in *execution* id space (relabeled when the plan
+/// came from a degree-sorted store); `root_echo`/`targets_echo` keep the
+/// client's original ids for the response. `closed` is the per-connection
+/// liveness flag: the reader raises it when the socket dies, and the
+/// dispatcher drops still-queued queries from a dead client into the
+/// `cancelled` metric instead of burning a batch lane on them.
 struct QueuedQuery {
     id: u64,
     root: VertexId,
+    root_echo: u64,
     targets: Vec<VertexId>,
+    targets_echo: Vec<u64>,
     conn: Arc<Mutex<TcpStream>>,
+    closed: Arc<AtomicBool>,
 }
 
 /// A batch the dispatcher handed to the workers, stamped with its
@@ -192,10 +202,22 @@ impl Server {
                         }
                         let draining = shutdown.load(Ordering::SeqCst);
                         if q.due(now) || (draining && !q.is_empty()) {
-                            let batch = DispatchedBatch {
-                                members: q.take_batch(),
-                                dispatched_us: now,
-                            };
+                            let mut members = q.take_batch();
+                            // A client that hung up while its query was
+                            // queued gets no lane and no response — just
+                            // the `cancelled` metric.
+                            members.retain(|p| {
+                                if p.item.closed.load(Ordering::SeqCst) {
+                                    metrics.record_cancelled();
+                                    false
+                                } else {
+                                    true
+                                }
+                            });
+                            if members.is_empty() {
+                                continue;
+                            }
+                            let batch = DispatchedBatch { members, dispatched_us: now };
                             let _ = tx.send(batch);
                             continue;
                         }
@@ -261,12 +283,21 @@ fn serve_connection(
         Ok(w) => w,
         Err(_) => return,
     }));
+    // Raised when the socket dies (EOF or a hard read error) so the
+    // dispatcher can cancel this connection's still-queued queries. A
+    // clean shutdown return leaves it low: those clients are alive and
+    // expect their drained answers.
+    let closed = Arc::new(AtomicBool::new(false));
     let mut reader = BufReader::new(stream);
     let mut line = String::new();
     loop {
         line.clear();
         match reader.read_line(&mut line) {
-            Ok(0) => return, // EOF
+            Ok(0) => {
+                // EOF: the client hung up.
+                closed.store(true, Ordering::SeqCst);
+                return;
+            }
             Ok(_) => {}
             Err(e)
                 if e.kind() == ErrorKind::WouldBlock || e.kind() == ErrorKind::TimedOut =>
@@ -276,7 +307,10 @@ fn serve_connection(
                 }
                 continue;
             }
-            Err(_) => return,
+            Err(_) => {
+                closed.store(true, Ordering::SeqCst);
+                return;
+            }
         }
         if line.trim().is_empty() {
             continue;
@@ -325,11 +359,23 @@ fn serve_connection(
                 let deadline = timeout_us
                     .or(cfg.default_timeout_us)
                     .map(|t| now.saturating_add(t));
+                // Clients speak original ids; a degree-sorted store plan
+                // executes in relabeled space. Map at admission, echo the
+                // originals back in the response.
+                let to_exec = |v: u64| -> VertexId {
+                    match plan.relabeling() {
+                        Some(r) => r.new_id[v as usize],
+                        None => v as VertexId,
+                    }
+                };
                 let query = QueuedQuery {
                     id,
-                    root: root as VertexId,
-                    targets: targets.iter().map(|&t| t as VertexId).collect(),
+                    root: to_exec(root),
+                    root_echo: root,
+                    targets: targets.iter().map(|&t| to_exec(t)).collect(),
+                    targets_echo: targets.clone(),
                     conn: Arc::clone(&conn),
+                    closed: Arc::clone(&closed),
                 };
                 let admitted = {
                     let mut q =
@@ -392,12 +438,12 @@ fn run_one_batch(
                     &p.item.conn,
                     &protocol::ok_query(
                         p.item.id,
-                        p.item.root as u64,
+                        p.item.root_echo,
                         width,
                         wait,
                         reached,
                         depth,
-                        &p.item.targets.iter().map(|&t| t as u64).collect::<Vec<_>>(),
+                        &p.item.targets_echo,
                         &dists,
                     ),
                 );

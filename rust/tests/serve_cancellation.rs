@@ -1,0 +1,181 @@
+//! Serve-mode cancellation and relabeled-store serving: a client that
+//! hangs up while its query is still coalescing must be dropped into the
+//! `cancelled` metric (no batch lane, no write to a dead socket), and a
+//! plan built from a degree-sorted `.bbfs` store must keep speaking the
+//! client's original vertex ids over the wire.
+
+use butterfly_bfs::coordinator::{EngineConfig, TraversalPlan};
+use butterfly_bfs::graph::gen::urand::uniform_random;
+use butterfly_bfs::graph::store::{encode_store, GraphStore, StoreWriteOptions};
+use butterfly_bfs::serve::{ServeConfig, Server};
+use butterfly_bfs::util::json::Json;
+use std::io::{BufRead, BufReader, Write};
+use std::net::TcpStream;
+use std::sync::Arc;
+use std::time::Duration;
+
+struct Client {
+    reader: BufReader<TcpStream>,
+    writer: TcpStream,
+    line: String,
+}
+
+impl Client {
+    fn connect(addr: std::net::SocketAddr) -> Client {
+        let stream = TcpStream::connect(addr).unwrap();
+        stream.set_read_timeout(Some(Duration::from_secs(30))).unwrap();
+        Client {
+            writer: stream.try_clone().unwrap(),
+            reader: BufReader::new(stream),
+            line: String::new(),
+        }
+    }
+
+    fn send(&mut self, req: &Json) {
+        self.writer.write_all(req.render().as_bytes()).unwrap();
+        self.writer.write_all(b"\n").unwrap();
+    }
+
+    fn recv(&mut self) -> Json {
+        self.line.clear();
+        let n = self.reader.read_line(&mut self.line).unwrap();
+        assert!(n > 0, "server closed the connection");
+        Json::parse(self.line.trim()).unwrap()
+    }
+}
+
+fn query(id: u64, root: u64, targets: &[u64]) -> Json {
+    let mut fields = vec![
+        ("op", Json::s("query")),
+        ("id", Json::u(id)),
+        ("root", Json::u(root)),
+    ];
+    if !targets.is_empty() {
+        fields.push(("targets", Json::Arr(targets.iter().map(|&t| Json::u(t)).collect())));
+    }
+    Json::obj(fields)
+}
+
+fn boot(
+    plan: &Arc<TraversalPlan>,
+    cfg: ServeConfig,
+) -> (std::net::SocketAddr, std::thread::JoinHandle<Json>) {
+    let server = Server::bind(Arc::clone(plan), cfg).unwrap();
+    let addr = server.local_addr().unwrap();
+    (addr, std::thread::spawn(move || server.run().unwrap()))
+}
+
+/// Client A queues a query into a long coalescing window and then drops
+/// its socket. The dispatcher must detect the dead connection at
+/// dispatch time, skip the query (it gets no lane), and count it in
+/// `cancelled` — while client B's traffic on the same server keeps
+/// working normally.
+#[test]
+fn dropped_connection_cancels_queued_query_at_dispatch() {
+    let (g, _) = uniform_random(200, 4, 11);
+    let plan = Arc::new(TraversalPlan::build(&g, EngineConfig::dgx2(2, 1)).unwrap());
+    let (addr, server) = boot(
+        &plan,
+        ServeConfig {
+            coalesce_window_us: 300_000, // long enough to hang up inside
+            max_batch: 64,
+            workers: 1,
+            ..ServeConfig::default()
+        },
+    );
+    {
+        // Client A: queue a query, then vanish without reading anything.
+        let mut a = Client::connect(addr);
+        a.send(&query(1, 5, &[]));
+        // Dropping both halves closes the socket; the server's reader
+        // sees EOF while the query is still waiting out its window.
+    }
+    // Client B polls live stats until the dispatcher has observed the
+    // hang-up (bounded: 5 s worst case, far beyond the 300 ms window).
+    let mut b = Client::connect(addr);
+    let mut cancelled = 0;
+    for _ in 0..100 {
+        b.send(&Json::obj(vec![("op", Json::s("stats"))]));
+        let stats = b.recv();
+        assert_eq!(stats.get("status").unwrap().as_str(), Some("ok"));
+        cancelled = stats
+            .get("stats")
+            .unwrap()
+            .get("cancelled")
+            .unwrap()
+            .as_u64()
+            .unwrap();
+        if cancelled >= 1 {
+            break;
+        }
+        std::thread::sleep(Duration::from_millis(50));
+    }
+    assert_eq!(cancelled, 1, "dropped client's query must be counted as cancelled");
+    // The server is still healthy: B's own query is answered.
+    b.send(&query(7, 3, &[]));
+    let resp = b.recv();
+    assert_eq!(resp.get("status").unwrap().as_str(), Some("ok"));
+    assert_eq!(resp.get("id").unwrap().as_u64(), Some(7));
+    b.send(&Json::obj(vec![("op", Json::s("shutdown"))]));
+    b.recv();
+    let report = server.join().unwrap();
+    assert_eq!(report.get("cancelled").unwrap().as_u64(), Some(1));
+    // Only B's query ran; A's never consumed a lane.
+    assert_eq!(report.get("completed").unwrap().as_u64(), Some(1));
+}
+
+/// Serving from a degree-sorted (relabeled) store plan: clients keep
+/// speaking original vertex ids. Responses echo the original ids and the
+/// distances match an in-memory plan over the unrelabeled graph.
+#[test]
+fn relabeled_store_plan_serves_original_id_answers() {
+    let (g, _) = uniform_random(300, 5, 13);
+    let reference = Arc::new(TraversalPlan::build(&g, EngineConfig::dgx2(2, 1)).unwrap());
+    let encoded = encode_store(
+        &g,
+        StoreWriteOptions { relabel: true, ..StoreWriteOptions::default() },
+    )
+    .unwrap();
+    let store = Arc::new(GraphStore::open_bytes(encoded.bytes).unwrap());
+    assert!(store.is_relabeled());
+    let plan =
+        TraversalPlan::build_from_store(Arc::clone(&store), EngineConfig::dgx2(2, 1)).unwrap();
+    plan.materialize().unwrap();
+    let plan = Arc::new(plan);
+    let (addr, server) = boot(
+        &plan,
+        ServeConfig { coalesce_window_us: 500, max_batch: 8, ..ServeConfig::default() },
+    );
+    let mut c = Client::connect(addr);
+    let targets: Vec<u64> = vec![0, 42, 299];
+    for (id, root) in [(1u64, 9u64), (2, 131), (3, 250)] {
+        c.send(&query(id, root, &targets));
+        let resp = c.recv();
+        assert_eq!(resp.get("status").unwrap().as_str(), Some("ok"), "id {id}");
+        // The response speaks the client's id space, not the store's.
+        assert_eq!(resp.get("root").unwrap().as_u64(), Some(root));
+        let echoed: Vec<u64> = resp
+            .get("targets")
+            .unwrap()
+            .as_arr()
+            .unwrap()
+            .iter()
+            .map(|t| t.as_u64().unwrap())
+            .collect();
+        assert_eq!(echoed, targets);
+        let solo = reference.session().run(root as u32).unwrap();
+        let dist = resp.get("dist").unwrap().as_arr().unwrap();
+        for (t, d) in targets.iter().zip(dist) {
+            let expect = solo.dist()[*t as usize];
+            match d.as_u64() {
+                Some(served) => {
+                    assert_eq!(served, expect as u64, "root {root} target {t}")
+                }
+                None => assert_eq!(expect, u32::MAX, "root {root} target {t}"),
+            }
+        }
+    }
+    c.send(&Json::obj(vec![("op", Json::s("shutdown"))]));
+    c.recv();
+    server.join().unwrap();
+}

@@ -1,0 +1,349 @@
+//! `.bbfs` v2 store integration tests: encode→load round-trips across
+//! the generator suite (including degenerate graphs), relabeled stores
+//! executing bit-identically to in-memory plans in both partition modes,
+//! plan warm-starts that decode nothing up front yet answer identically
+//! to cold builds, and a corrupt/fuzz corpus that must never panic.
+
+use butterfly_bfs::coordinator::{EngineConfig, PartitionMode, TraversalPlan};
+use butterfly_bfs::graph::csr::{Csr, VertexId};
+use butterfly_bfs::graph::gen::structured::{binary_tree, grid2d, path, star};
+use butterfly_bfs::graph::gen::suite::table1_suite;
+use butterfly_bfs::graph::gen::urand::uniform_random;
+use butterfly_bfs::graph::store::{
+    encode_store, v1_snapshot_bytes, write_store, GraphStore, StoreWriteOptions,
+};
+use butterfly_bfs::partition::relabel::apply_relabeling;
+use std::sync::Arc;
+
+fn tmp(name: &str) -> std::path::PathBuf {
+    let mut p = std::env::temp_dir();
+    p.push(format!("bbfs-store-test-{}-{name}", std::process::id()));
+    p
+}
+
+fn roundtrip(g: &Csr, opts: StoreWriteOptions) -> (Csr, GraphStore) {
+    let relabel = opts.relabel;
+    let enc = encode_store(g, opts).unwrap();
+    let store = GraphStore::open_bytes(enc.bytes).unwrap();
+    assert_eq!(store.num_vertices(), g.num_vertices());
+    assert_eq!(store.num_edges(), g.num_edges());
+    assert_eq!(store.is_relabeled(), relabel && g.num_vertices() > 0);
+    let decoded = store.to_csr().unwrap();
+    (decoded, store)
+}
+
+/// `load(convert(g)) == g` across the whole generator suite, plain and
+/// relabeled (relabeled stores decode to the permuted graph, which maps
+/// back to the original exactly).
+#[test]
+fn store_roundtrips_generator_suite() {
+    let mut graphs: Vec<(String, Csr)> = table1_suite()
+        .iter()
+        .map(|spec| (spec.name.to_string(), spec.generate_scaled(-10)))
+        .collect();
+    graphs.push(("path".into(), path(257)));
+    graphs.push(("star".into(), star(300)));
+    graphs.push(("grid".into(), grid2d(17, 13)));
+    graphs.push(("tree".into(), binary_tree(200)));
+    for (name, g) in &graphs {
+        let (decoded, _) = roundtrip(g, StoreWriteOptions::default());
+        assert_eq!(&decoded, g, "{name}: plain store round-trip");
+
+        let enc = encode_store(g, StoreWriteOptions { relabel: true, ..Default::default() })
+            .unwrap();
+        let r = enc.relabeling.as_ref().unwrap();
+        let store = GraphStore::open_bytes(enc.bytes).unwrap();
+        let decoded = store.to_csr().unwrap();
+        assert_eq!(decoded, apply_relabeling(g, r), "{name}: relabeled store holds P(g)");
+        // The stored permutation matches the writer's.
+        let stored = store.relabeling().unwrap();
+        assert_eq!(stored.new_id, r.new_id, "{name}: stored new_id");
+        assert_eq!(stored.old_id, r.old_id, "{name}: stored old_id");
+    }
+}
+
+/// Degenerate inputs round-trip too: the empty graph, a single vertex,
+/// isolated vertices, and duplicate (multi-)edges, across block sizes
+/// that force partial and many-block layouts.
+#[test]
+fn store_roundtrips_degenerate_graphs() {
+    let cases: Vec<(&str, Csr)> = vec![
+        ("empty", Csr::from_edges(0, &[])),
+        ("single-vertex", Csr::from_edges(1, &[])),
+        ("self-loop", Csr::from_edges(1, &[(0, 0)])),
+        ("isolated", Csr::from_edges(5, &[(2, 4), (4, 2)])),
+        (
+            "duplicate-edges",
+            Csr::from_edges(4, &[(0, 1), (0, 1), (0, 1), (1, 0), (3, 2), (3, 2)]),
+        ),
+    ];
+    for (name, g) in &cases {
+        for block_size in [1u32, 2, 3, 1024] {
+            let opts = StoreWriteOptions { relabel: false, block_size };
+            let (decoded, store) = roundtrip(g, opts);
+            assert_eq!(&decoded, g, "{name} bs={block_size}");
+            assert_eq!(store.block_size(), block_size);
+        }
+    }
+}
+
+/// File-backed loads agree with the in-memory image: `open` (pread) and
+/// `open_mmap` return identical graphs and identical fingerprints.
+#[test]
+fn file_and_mmap_loads_match_bytes() {
+    let (g, _) = uniform_random(700, 6, 41);
+    let p = tmp("file-mmap.bbfs");
+    let enc = write_store(&g, &p, StoreWriteOptions::default()).unwrap();
+    let mem = GraphStore::open_bytes(enc.bytes).unwrap();
+    let file = GraphStore::open(&p).unwrap();
+    assert_eq!(file.fingerprint(), mem.fingerprint());
+    assert_eq!(file.to_csr().unwrap(), g);
+    let mapped = GraphStore::open_mmap(&p).unwrap();
+    assert_eq!(mapped.fingerprint(), mem.fingerprint());
+    assert_eq!(mapped.to_csr().unwrap(), g);
+    std::fs::remove_file(&p).ok();
+}
+
+/// The headline size claim, checked in-repo: on the web-like suite graph
+/// the v2 container is at least 2× smaller than the v1 raw-CSR snapshot.
+#[test]
+fn v2_at_least_twice_smaller_than_v1_on_weblike() {
+    let spec = table1_suite().into_iter().find(|s| s.name == "web-like").unwrap();
+    let g = spec.generate_scaled(-8);
+    let enc = encode_store(&g, StoreWriteOptions::default()).unwrap();
+    let v1 = v1_snapshot_bytes(&g) as f64;
+    let v2 = enc.bytes.len() as f64;
+    assert!(
+        v1 / v2 >= 2.0,
+        "compression ratio {:.2} below the 2x floor (v1={v1} v2={v2})",
+        v1 / v2
+    );
+}
+
+/// A plan built from a relabeled store returns BFS distances
+/// bit-identical to an in-memory plan over the original graph, in both
+/// 1D and 2D partition modes (distances unmapped via the stored
+/// permutation).
+#[test]
+fn relabeled_store_plans_bit_identical_to_in_memory() {
+    let (g, _) = uniform_random(900, 6, 59);
+    let enc =
+        encode_store(&g, StoreWriteOptions { relabel: true, ..Default::default() }).unwrap();
+    let store = Arc::new(GraphStore::open_bytes(enc.bytes).unwrap());
+    let configs = [
+        ("1d", EngineConfig::dgx2(4, 2)),
+        (
+            "2d",
+            EngineConfig {
+                partition: PartitionMode::TwoD { rows: 2, cols: 2 },
+                ..EngineConfig::dgx2(4, 1)
+            },
+        ),
+    ];
+    for (mode, cfg) in configs {
+        let reference = TraversalPlan::build(&g, cfg.clone()).unwrap();
+        let plan = TraversalPlan::build_from_store(Arc::clone(&store), cfg).unwrap();
+        plan.materialize().unwrap();
+        let r = plan.relabeling().expect("relabeled store plan carries the permutation");
+        for root in [0 as VertexId, 13, 444, 899] {
+            let want = reference.session().run(root).unwrap().dist().to_vec();
+            let exec_root = r.new_id[root as usize];
+            let got_new = plan.session().run(exec_root).unwrap().dist().to_vec();
+            let got = r.unmap_dist(&got_new);
+            assert_eq!(got, want, "{mode} root {root}: distances diverge");
+        }
+    }
+}
+
+/// Warm-start: `save_cache` then `load_cache` against a fresh store
+/// handle decodes **zero** degree entries and **zero** adjacency edges at
+/// load time, and after materializing answers bit-identically to the
+/// cold build — in both partition modes.
+#[test]
+fn warm_start_decodes_nothing_up_front_and_matches_cold() {
+    let (g, _) = uniform_random(800, 5, 67);
+    let p = tmp("warm.bbfs");
+    write_store(&g, &p, StoreWriteOptions::default()).unwrap();
+    let configs = [
+        ("1d", EngineConfig::dgx2(4, 2)),
+        (
+            "2d",
+            EngineConfig {
+                partition: PartitionMode::TwoD { rows: 2, cols: 2 },
+                ..EngineConfig::dgx2(4, 1)
+            },
+        ),
+    ];
+    for (mode, cfg) in configs {
+        let cache = tmp(&format!("warm-{mode}.plan.json"));
+        let cold_store = Arc::new(GraphStore::open(&p).unwrap());
+        let cold =
+            TraversalPlan::build_from_store(Arc::clone(&cold_store), cfg.clone()).unwrap();
+        cold.materialize().unwrap();
+        cold.save_cache(&cache).unwrap();
+
+        let warm_store = Arc::new(GraphStore::open(&p).unwrap());
+        let warm =
+            TraversalPlan::load_cache(Arc::clone(&warm_store), cfg.clone(), &cache).unwrap();
+        let at_load = warm_store.counters();
+        assert_eq!(
+            (at_load.degree_entries_decoded, at_load.edges_decoded),
+            (0, 0),
+            "{mode}: warm-start load must not decode anything"
+        );
+        warm.materialize().unwrap();
+        let after = warm_store.counters();
+        assert!(after.edges_decoded > 0, "{mode}: materialize decodes the slabs");
+        for root in [0 as VertexId, 7, 399, 799] {
+            assert_eq!(
+                warm.session().run(root).unwrap().dist(),
+                cold.session().run(root).unwrap().dist(),
+                "{mode} root {root}: warm answers diverge from cold"
+            );
+        }
+
+        // A mismatched config is a typed fingerprint error, not silence:
+        // warming a 16-node cache with an 8-node config must fail.
+        let other = EngineConfig { num_nodes: cfg.num_nodes * 2, ..cfg.clone() };
+        assert!(
+            TraversalPlan::load_cache(Arc::clone(&warm_store), other, &cache).is_err(),
+            "{mode}: node-count mismatch must be rejected"
+        );
+        std::fs::remove_file(&cache).ok();
+    }
+    std::fs::remove_file(&p).ok();
+}
+
+// ---------- hostile inputs ----------
+
+/// Header/index/perm field offsets for targeted corruption (see the
+/// layout table in `graph::store`).
+const OFF_VERSION: usize = 8;
+const OFF_FLAGS: usize = 12;
+const OFF_N: usize = 16;
+const OFF_INDEX: usize = 72;
+
+fn open_and_decode(bytes: Vec<u8>) -> Result<Csr, butterfly_bfs::graph::store::StoreError> {
+    let store = GraphStore::open_bytes(bytes)?;
+    store.degree_prefix()?;
+    store.to_csr()
+}
+
+/// Targeted v2 corruption corpus: every mutation must surface as a typed
+/// `StoreError`, never a panic or a wrong graph.
+#[test]
+fn v2_corrupt_corpus_returns_typed_errors() {
+    let (g, _) = uniform_random(300, 5, 71);
+    let enc = encode_store(
+        &g,
+        StoreWriteOptions { relabel: true, block_size: 64 },
+    )
+    .unwrap();
+    let base = enc.bytes;
+
+    let put_u32 = |img: &mut [u8], at: usize, v: u32| {
+        img[at..at + 4].copy_from_slice(&v.to_le_bytes())
+    };
+    let put_u64 = |img: &mut [u8], at: usize, v: u64| {
+        img[at..at + 8].copy_from_slice(&v.to_le_bytes())
+    };
+
+    let mut cases: Vec<(&str, Vec<u8>)> = Vec::new();
+
+    let mut img = base.clone();
+    img[..8].copy_from_slice(b"WRONGMAG");
+    cases.push(("wrong magic", img));
+
+    let mut img = base.clone();
+    put_u32(&mut img, OFF_VERSION, 3);
+    cases.push(("future version", img));
+
+    let mut img = base.clone();
+    put_u32(&mut img, OFF_FLAGS, 0xFFFF_FFFF);
+    cases.push(("unknown flags", img));
+
+    let mut img = base.clone();
+    put_u64(&mut img, OFF_N, u64::from(u32::MAX) + 7);
+    cases.push(("n past u32", img));
+
+    let mut img = base.clone();
+    put_u64(&mut img, OFF_N, 301);
+    cases.push(("n inflated", img));
+
+    let mut img = base.clone();
+    img.truncate(base.len() - 1);
+    cases.push(("truncated tail", img));
+
+    let mut img = base.clone();
+    img.extend_from_slice(&[0xAB; 3]);
+    cases.push(("trailing garbage", img));
+
+    let mut img = base.clone();
+    img.truncate(40);
+    cases.push(("header only", img));
+
+    // Index entry 1: non-monotone data_start.
+    let mut img = base.clone();
+    put_u64(&mut img, OFF_INDEX + 16, u64::MAX);
+    cases.push(("non-monotone index", img));
+
+    // Index entry 1: first_edge beyond m.
+    let mut img = base.clone();
+    put_u64(&mut img, OFF_INDEX + 24, g.num_edges() + 99);
+    cases.push(("index first_edge past m", img));
+
+    // Sentinel edge count off by one (degree sums can no longer match).
+    let n_blocks = (300u64).div_ceil(64) as usize;
+    let sentinel = OFF_INDEX + 16 * n_blocks;
+    let mut img = base.clone();
+    put_u64(&mut img, sentinel + 8, g.num_edges() - 1);
+    cases.push(("bad sentinel", img));
+
+    // Permutation: duplicate entry (no longer a bijection).
+    let perm_off = OFF_INDEX + 16 * (n_blocks + 1);
+    let mut img = base.clone();
+    let first = u32::from_le_bytes(base[perm_off..perm_off + 4].try_into().unwrap());
+    put_u32(&mut img, perm_off + 4, first);
+    cases.push(("duplicate perm entry", img));
+
+    // Permutation: out-of-range id.
+    let mut img = base.clone();
+    put_u32(&mut img, perm_off, 300);
+    cases.push(("perm id out of range", img));
+
+    // Adjacency data: force a 10-byte all-continuation varint at the
+    // start of the first block's degree stream (overlong/overflow).
+    let data_off =
+        u64::from_le_bytes(base[56..64].try_into().unwrap()) as usize;
+    let mut img = base.clone();
+    for b in img[data_off..data_off + 10].iter_mut() {
+        *b = 0x80;
+    }
+    cases.push(("overflowing varint", img));
+
+    for (name, img) in cases {
+        assert!(open_and_decode(img).is_err(), "{name}: must be a typed error");
+    }
+
+    // The unmutated base still decodes to the permuted graph.
+    assert!(open_and_decode(base).is_ok());
+}
+
+/// Bit-flip fuzz: flipping any single byte of a small store image may be
+/// rejected or (for dead bytes like alignment padding) still decode, but
+/// it must never panic — the loader's whole contract under hostile input.
+#[test]
+fn v2_single_byte_flips_never_panic() {
+    let g = Csr::from_edges(
+        40,
+        &(0..40u32).flat_map(|v| [(v, (v + 1) % 40), ((v + 1) % 40, v)]).collect::<Vec<_>>(),
+    );
+    let enc = encode_store(&g, StoreWriteOptions { relabel: true, block_size: 8 }).unwrap();
+    let base = enc.bytes;
+    for at in 0..base.len() {
+        let mut img = base.clone();
+        img[at] ^= 0xFF;
+        // Ok or Err are both acceptable; a panic fails the test run.
+        let _ = open_and_decode(img);
+    }
+}
