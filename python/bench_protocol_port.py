@@ -303,12 +303,42 @@ def butterfly_schedule(cn, fanout):
     return rounds
 
 
+def hierarchical_schedule(islands, per_island, fanout):
+    """Port of comm/hierarchical.rs::GridOfIslands (transfer order
+    preserved): butterfly inside each island, butterfly across island
+    representatives, then a one-round rep -> island broadcast."""
+    rounds = []
+    for rnd in butterfly_schedule(per_island, fanout):
+        out = []
+        for isl in range(islands):
+            base = isl * per_island
+            out.extend((base + s, base + d) for (s, d) in rnd)
+        out.sort()
+        rounds.append(out)
+    for rnd in butterfly_schedule(islands, fanout):
+        rounds.append(sorted((s * per_island, d * per_island) for (s, d) in rnd))
+    if islands > 1 and per_island > 1:
+        rounds.append([
+            (isl * per_island, isl * per_island + local)
+            for isl in range(islands)
+            for local in range(1, per_island)
+        ])
+    return rounds
+
+
 # --------------------------------------------------------------------------
 # Timing models (net/model.rs, net/sim.rs)
 # --------------------------------------------------------------------------
 
 DGX2 = dict(link_bw=25.0e9, ports=6, latency=2.0e-6)
+ISLAND_UPLINK = dict(link_bw=2.5e9, ports=2, latency=20.0e-6)
 V100 = dict(edge_rate=22.0e9, level_overhead=12.0e-6, bu_factor=3.0)
+
+
+def dgx2_cluster_topo(per_island):
+    """Port of net/model.rs::TopologyModel::dgx2_cluster (10:1 ratio)."""
+    return dict(name="dgx2-cluster", per_island=max(per_island, 1),
+                intra=dict(DGX2), inter=dict(ISLAND_UPLINK))
 
 
 def level_time(edges, bottom_up):
@@ -354,6 +384,85 @@ def simulate_schedule(rounds, payloads, cn):
             t_round = max(t_round, t)
         round_times.append(t_round)
     return round_times, total_bytes, total_msgs
+
+
+def price_round(num_endpoints, transfers, net):
+    """Port of net/sim.rs::price_round — one link class, switched fabric.
+
+    ``transfers`` is (src, dst, bytes) triples in endpoint id space
+    (ranks for the intra class, islands for the inter class)."""
+    send_b = [0] * num_endpoints
+    recv_b = [0] * num_endpoints
+    send_m = [0] * num_endpoints
+    recv_m = [0] * num_endpoints
+    max_p = [0] * num_endpoints
+    for (src, dst, b) in transfers:
+        send_b[src] += b
+        recv_b[dst] += b
+        send_m[src] += 1
+        recv_m[dst] += 1
+        max_p[src] = max(max_p[src], b)
+        max_p[dst] = max(max_p[dst], b)
+    ports = float(net["ports"])
+    node_bw = net["link_bw"] * net["ports"]
+    alloc_over = net.get("alloc", 0.0)
+    t_round = 0.0
+    for g in range(num_endpoints):
+        setup_send = net["latency"] * math.ceil(send_m[g] / ports)
+        setup_recv = net["latency"] * math.ceil(recv_m[g] / ports)
+
+        def makespan(msgs, byts):
+            slots = math.ceil(msgs / ports)
+            return max(byts / node_bw, slots * max_p[g] / net["link_bw"])
+
+        t = max(setup_send + makespan(send_m[g], send_b[g]),
+                setup_recv + makespan(recv_m[g], recv_b[g]))
+        t_round = max(t_round, t + alloc_over * recv_m[g])
+    return t_round
+
+
+def simulate_topology(rounds, payloads, cn, topo):
+    """Port of net/sim.rs::simulate_topology — two-class clustered
+    pricing. Intra transfers contend per rank under ``topo['intra']``,
+    inter transfers are re-addressed to their island endpoints and
+    contend per island under ``topo['inter']`` (the classes overlap, so
+    a round costs the max of the two). Returns ``(round_times, totals)``
+    with the per-class byte/message split."""
+    per_island = topo["per_island"]
+    num_islands = -(-cn // per_island)
+    tot = dict(bytes=0, messages=0, intra_bytes=0, intra_messages=0,
+               inter_bytes=0, inter_messages=0)
+    round_times = []
+    for ri, rnd in enumerate(rounds):
+        intra, inter = [], []
+        for ti, (src, dst) in enumerate(rnd):
+            b = payloads[ri][ti]
+            tot["bytes"] += b
+            if src // per_island == dst // per_island:
+                tot["intra_bytes"] += b
+                tot["intra_messages"] += 1
+                intra.append((src, dst, b))
+            else:
+                tot["inter_bytes"] += b
+                tot["inter_messages"] += 1
+                inter.append((src // per_island, dst // per_island, b))
+        tot["messages"] += len(rnd)
+        t_intra = price_round(cn, intra, topo["intra"])
+        t_inter = price_round(num_islands, inter, topo["inter"])
+        round_times.append(max(t_intra, t_inter))
+    return round_times, tot
+
+
+def class_volume(rounds, per_island):
+    """Port of comm/analysis.rs::class_volume: (intra, inter) messages."""
+    intra = inter = 0
+    for rnd in rounds:
+        for (s, d) in rnd:
+            if s // per_island == d // per_island:
+                intra += 1
+            else:
+                inter += 1
+    return intra, inter
 
 
 # --------------------------------------------------------------------------
@@ -559,13 +668,21 @@ class NodeState:
 
 
 def run_batch(g, nodes, fanout, roots, direction, alpha=15, beta=18,
-              mode="1d", grid=None, width_words=1):
-    """direction in {'topdown', 'bottomup', 'diropt'}; mode '1d' or '2d'
-    (with ``grid = (rows, cols)``); ``width_words`` is the configured
-    BatchWidth floor. Returns a metrics dict."""
-    ranges, adjs = node_layout(g, nodes, mode, grid)
+              mode="1d", grid=None, width_words=1, topo=None):
+    """direction in {'topdown', 'bottomup', 'diropt'}; mode '1d', '2d'
+    (with ``grid = (rows, cols)``), or 'hier' (1D slabs exchanged over the
+    grid-of-islands schedule, ``grid = (islands, per_island)``);
+    ``width_words`` is the configured BatchWidth floor; ``topo`` switches
+    Phase-2 pricing to the two-class clustered simulator (``None`` keeps
+    the flat DGX2 pricing bit-for-bit). Returns a metrics dict."""
+    ranges, adjs = node_layout(g, nodes, "2d" if mode == "2d" else "1d", grid)
     if mode == "1d":
         rounds = butterfly_schedule(nodes, fanout)
+        cols = 1
+    elif mode == "hier":
+        islands, per_island = grid
+        assert islands * per_island == nodes
+        rounds = hierarchical_schedule(islands, per_island, fanout)
         cols = 1
     else:
         rows, cols = grid
@@ -681,9 +798,14 @@ def run_batch(g, nodes, fanout, roots, direction, alpha=15, beta=18,
                     prefix = sts[src].delta[:take]
                     for (v, m) in prefix:
                         sts[dst].discover(v, m, level, sts[dst].owns(v))
-        round_times, rbytes, rmsgs = simulate_schedule(rounds, payloads, nodes)
+        if topo is None:
+            round_times, rbytes, rmsgs = simulate_schedule(rounds, payloads, nodes)
+            cls = None
+        else:
+            round_times, cls = simulate_topology(rounds, payloads, nodes, topo)
+            rbytes, rmsgs = cls["bytes"], cls["messages"]
         discovered = sum(bin(m).count("1") for (_, m) in sts[0].delta)
-        levels.append(dict(
+        lvl = dict(
             level=level,
             frontier=frontier,
             edges=edges,
@@ -694,7 +816,13 @@ def run_batch(g, nodes, fanout, roots, direction, alpha=15, beta=18,
             direction="bottomup" if bottom_up else "topdown",
             sim_compute=sim_compute,
             sim_comm=sum(round_times),
-        ))
+        )
+        if cls is not None:
+            lvl.update(intra_messages=cls["intra_messages"],
+                       intra_bytes=cls["intra_bytes"],
+                       inter_messages=cls["inter_messages"],
+                       inter_bytes=cls["inter_bytes"])
+        levels.append(lvl)
         sync_rounds += len(rounds)
         if direction == "diropt":
             next_edges = sum(len(st.nbrs(v)) for st in sts for v in st.q_next)
@@ -992,7 +1120,7 @@ def materialize_counters(prefix, cuts, n, bs):
 # --------------------------------------------------------------------------
 
 PROTOCOL = dict(
-    name="engine-bench-v4",
+    name="engine-bench-v5",
     graph="kron-like",
     kron_scale=21,
     kron_edge_factor=16,
@@ -1028,6 +1156,11 @@ PROTOCOL = dict(
     storage_strand_len=9,
     storage_seed=0xB0B0_0006,
     storage_nodes=16,
+    # Hierarchical (v5): flat 1D vs 2D fold/expand vs grid-of-islands at
+    # p = 64, all priced under the same heterogeneous `dgx2-cluster`
+    # topology (8 islands of 8, 10:1 intra:inter bandwidth).
+    hier_nodes=64,
+    hier_grid=(8, 8),
 )
 
 
@@ -1287,6 +1420,73 @@ def serve_throughput(g):
     }
 
 
+def hier_mode_report(m):
+    """Port of harness/protocol.rs::hier_mode_json: one mode's totals
+    with the per-link-class traffic split."""
+    ls = m["levels"]
+    return {
+        "levels": len(ls),
+        "sync_rounds": m["sync_rounds"],
+        "messages": sum(l["messages"] for l in ls),
+        "bytes": sum(l["bytes"] for l in ls),
+        "intra_messages": sum(l["intra_messages"] for l in ls),
+        "intra_bytes": sum(l["intra_bytes"] for l in ls),
+        "inter_messages": sum(l["inter_messages"] for l in ls),
+        "inter_bytes": sum(l["inter_bytes"] for l in ls),
+        "reached_pairs": m["reached_pairs"],
+        "sim_seconds": sum(l["sim_compute"] + l["sim_comm"] for l in ls),
+    }
+
+
+def static_schedule_report(rounds, per_island):
+    """Port of harness/protocol.rs::static_schedule_json."""
+    intra, inter = class_volume(rounds, per_island)
+    return {
+        "rounds": len(rounds),
+        "messages": sum(len(r) for r in rounds),
+        "intra_messages": intra,
+        "inter_messages": inter,
+    }
+
+
+def hierarchical_report(g):
+    """Port of harness/protocol.rs::hierarchical_json: the three layouts
+    at p = 64 under identical dgx2-cluster pricing."""
+    p = PROTOCOL
+    islands, per_island = p["hier_grid"]
+    nodes = p["hier_nodes"]
+    roots = sample_batch_roots(g, p["batch_width"], p["root_seed"])
+    topo = dgx2_cluster_topo(per_island)
+    modes = {}
+    for mode in ["1d", "2d", "hier"]:
+        grid = None if mode == "1d" else (islands, per_island)
+        m = run_batch(g, nodes, p["fanout"], roots, "topdown",
+                      mode=mode, grid=grid, topo=topo)
+        modes[mode] = hier_mode_report(m)
+    s1 = modes["1d"]["sim_seconds"]
+    s2 = modes["2d"]["sim_seconds"]
+    sh = modes["hier"]["sim_seconds"]
+    flat = butterfly_schedule(nodes, p["fanout"])
+    hier = hierarchical_schedule(islands, per_island, p["fanout"])
+    return {
+        "nodes": nodes,
+        "islands": f"{islands}x{per_island}",
+        "fanout": p["fanout"],
+        "width": p["batch_width"],
+        "seed": p["root_seed"],
+        "net": topo["name"],
+        "speed_ratio": topo["intra"]["link_bw"] / topo["inter"]["link_bw"],
+        "direction": "topdown",
+        "modes": modes,
+        "speedup_vs_1d": s1 / sh,
+        "speedup_vs_2d": s2 / sh,
+        "static_schedule": {
+            "flat_1d": static_schedule_report(flat, per_island),
+            "hier": static_schedule_report(hier, per_island),
+        },
+    }
+
+
 def storage_report():
     """Port of harness/protocol.rs::storage_json.
 
@@ -1363,6 +1563,12 @@ def storage_report():
                 "at_load": counters(0, 0, 0),
                 "after_materialize": counters(deg, edec, blocks),
             },
+            # 2D cold build: one streaming degree/in-degree pass decodes
+            # every block exactly once (stream_degree_prefixes) — the
+            # counters at load are exactly {n, m, num_blocks}.
+            "two_d_cold": {
+                "at_load": counters(n, m, num_blocks),
+            },
         },
         "warm_equals_cold": warm_dist == cold_dist,
         "matches_in_memory": (plain_ok and relabeled_ok
@@ -1403,6 +1609,7 @@ def engine_bench_report():
         "width_ablation": width_ablation(g),
         "serve_throughput": serve_throughput(g),
         "storage": storage_report(),
+        "hierarchical": hierarchical_report(g),
     }
 
 
@@ -1466,6 +1673,42 @@ def selftest():
             )
         wide_cases += 1
     print(f"selftest: {wide_cases} wide-lane runs (1d+2d) match serial oracle")
+    # Hierarchical grid-of-islands: distances bit-identical to the serial
+    # oracle across random island grids, all directions, with and without
+    # heterogeneous cluster pricing (pricing must never move distances).
+    hier_cases = 0
+    for _ in range(24):
+        n = 20 + rng.next_below(120)
+        ef = 1 + rng.next_below(4)
+        g = uniform_random(n, ef, rng.next_u64())
+        b = 1 + rng.next_below(20)
+        roots = [rng.next_below(n) for _ in range(b)]
+        want = [serial_bfs(g, r) for r in roots]
+        islands = 1 + rng.next_below(4)
+        per_island = 1 + rng.next_below(4)
+        nodes = islands * per_island
+        fanout = 1 + rng.next_below(4)
+        d = ["topdown", "bottomup", "diropt"][rng.next_below(3)]
+        topo = dgx2_cluster_topo(per_island) if rng.next_below(2) else None
+        m = run_batch(g, nodes, fanout, roots, d, mode="hier",
+                      grid=(islands, per_island), topo=topo)
+        for lane in range(b):
+            assert m["dist"][lane] == want[lane], (
+                f"hier n={n} grid={islands}x{per_island} f={fanout} {d} lane {lane}"
+            )
+        hier_cases += 1
+    print(f"selftest: {hier_cases} grid-of-islands runs match serial oracle")
+    # A uniform topology (one island spanning every rank) must reproduce
+    # the flat single-class pricing bit-for-bit.
+    g = uniform_random(120, 3, 0xABCD)
+    roots = [(i * 11 + 2) % 120 for i in range(8)]
+    flatm = run_batch(g, 8, 2, roots, "topdown")
+    unim = run_batch(g, 8, 2, roots, "topdown", topo=dict(
+        name="uniform", per_island=1 << 30, intra=dict(DGX2), inter=dict(DGX2)))
+    assert ([l["sim_comm"] for l in unim["levels"]]
+            == [l["sim_comm"] for l in flatm["levels"]])
+    assert all(l["inter_messages"] == 0 for l in unim["levels"])
+    print("selftest: uniform topology reproduces flat pricing bit-for-bit")
     # Chunked == wide distance identity + amortization direction.
     g = uniform_random(150, 4, 0xC0FFEE)
     roots = [(i * 7 + 1) % 150 for i in range(130)]
@@ -1554,6 +1797,20 @@ def validate_acceptance(report):
     assert warm0["degree_entries"] == 0 and warm0["edges"] == 0, warm0
     assert lc["warm_start"]["after_materialize"]["edges"] > 0
     assert st["warm_equals_cold"] and st["matches_in_memory"]
+    twod0 = lc["two_d_cold"]["at_load"]
+    assert twod0["edges"] == st["graph"]["edges"], twod0
+    assert twod0["blocks"] == lc["eager"]["blocks"], twod0
+    hier = report["hierarchical"]
+    m1, m2, mh = (hier["modes"][k] for k in ["1d", "2d", "hier"])
+    assert m1["reached_pairs"] == mh["reached_pairs"], "hier vs 1d pairs"
+    assert m2["reached_pairs"] == mh["reached_pairs"], "hier vs 2d pairs"
+    assert mh["sim_seconds"] < m1["sim_seconds"], (
+        mh["sim_seconds"], m1["sim_seconds"])
+    assert mh["sim_seconds"] < m2["sim_seconds"], (
+        mh["sim_seconds"], m2["sim_seconds"])
+    assert mh["inter_bytes"] < m1["inter_bytes"], (
+        mh["inter_bytes"], m1["inter_bytes"])
+    assert mh["intra_messages"] > 0 and mh["inter_messages"] > 0, mh
     print("acceptance invariants hold on the fresh report")
 
 
@@ -1591,6 +1848,13 @@ def main():
           f"{st['relabeled_ratio']:.2f}x), fingerprint {st['fingerprint']}, "
           f"warm at_load decodes "
           f"{st['load_counters']['warm_start']['at_load']['edges']} edges")
+    h = report["hierarchical"]
+    hm = h["modes"]["hier"]
+    print(f"hier p={h['nodes']} ({h['islands']}, {h['net']}): "
+          f"sim {hm['sim_seconds'] * 1e3:.3f}ms, "
+          f"{h['speedup_vs_1d']:.2f}x vs 1d, {h['speedup_vs_2d']:.2f}x vs 2d, "
+          f"inter bytes {hm['inter_bytes']} vs 1d "
+          f"{h['modes']['1d']['inter_bytes']}")
     if args.out:
         # Mirror write_engine_bench: a `measured` subtree recorded into
         # the existing artifact by the load generator is live-wallclock

@@ -1,0 +1,187 @@
+"""Executable spec of the hierarchical grid-of-islands exchange.
+
+The Rust engine's hierarchical mode (``PartitionMode::Hierarchical`` +
+``comm::GridOfIslands``) composes a butterfly inside each island with a
+butterfly across island representatives and a final rep -> island
+broadcast, priced under a two-class link model
+(``net::model::TopologyModel`` + ``net::sim::simulate_topology``). This
+suite checks the Python port of that composition against first
+principles: the schedule must be a complete dissemination pattern, the
+class split must tile the totals, a uniform topology must reproduce flat
+pricing bit-for-bit, distances must stay bit-identical to the serial BFS
+oracle in every direction mode, and under a 10:1 intra:inter bandwidth
+ratio the hierarchical layout must beat flat 1D at p = 64 — the
+tentpole claim the CI-checked BENCH_engine.json `hierarchical` section
+records.
+"""
+
+import random
+
+import bench_protocol_port as bp
+
+
+def rand_graph(rng, n, ef):
+    return bp.uniform_random(n, ef, rng.randrange(1 << 60))
+
+
+# ---------------------------------------------------------------------------
+# Schedule shape + dissemination
+# ---------------------------------------------------------------------------
+
+
+def test_hierarchical_schedule_shape_and_class_split():
+    for islands in range(1, 9):
+        for per_island in range(1, 9):
+            for fanout in [1, 2, 4]:
+                nodes = islands * per_island
+                rounds = bp.hierarchical_schedule(islands, per_island, fanout)
+                intra_depth = len(bp.butterfly_schedule(per_island, fanout))
+                inter_depth = len(bp.butterfly_schedule(islands, fanout))
+                bcast = 1 if islands > 1 and per_island > 1 else 0
+                assert len(rounds) == intra_depth + inter_depth + bcast
+                for rnd in rounds[:intra_depth]:
+                    # Intra phase never crosses an island boundary.
+                    assert all(s // per_island == d // per_island
+                               for (s, d) in rnd)
+                for rnd in rounds[intra_depth:]:
+                    # Inter + broadcast phases touch representatives only
+                    # as sources.
+                    assert all(s % per_island == 0 for (s, _) in rnd)
+                for rnd in rounds:
+                    assert all(0 <= s < nodes and 0 <= d < nodes and s != d
+                               for (s, d) in rnd)
+                    assert rnd == sorted(rnd), "deterministic transfer order"
+                intra, inter = bp.class_volume(rounds, per_island)
+                assert intra + inter == sum(len(r) for r in rounds)
+                if islands > 1:
+                    assert inter > 0
+                if per_island > 1:
+                    assert intra > 0
+
+
+def test_degenerate_grids_reduce_to_flat_butterfly():
+    # 1 x P: one island — identical to the flat butterfly over P ranks.
+    for p, fanout in [(2, 1), (5, 2), (8, 4)]:
+        assert (bp.hierarchical_schedule(1, p, fanout)
+                == bp.butterfly_schedule(p, fanout))
+    # P x 1: every rank is its own representative — the flat butterfly
+    # again (representative mapping is the identity).
+    for p, fanout in [(2, 1), (5, 2), (8, 4)]:
+        assert (bp.hierarchical_schedule(p, 1, fanout)
+                == bp.butterfly_schedule(p, fanout))
+
+
+def test_schedule_disseminates_all_to_all():
+    """Round-synchronous token closure: with CopyFrontier semantics
+    (transfers see round-start state) every rank must end up knowing
+    every rank's token — the property that makes one exchange per BFS
+    level sufficient."""
+    for islands in range(1, 9):
+        for per_island in range(1, 9):
+            for fanout in [1, 2, 4]:
+                nodes = islands * per_island
+                know = [{r} for r in range(nodes)]
+                for rnd in bp.hierarchical_schedule(islands, per_island, fanout):
+                    snap = [set(k) for k in know]
+                    for (s, d) in rnd:
+                        know[d] |= snap[s]
+                assert all(len(k) == nodes for k in know), (
+                    f"{islands}x{per_island} fanout {fanout}"
+                )
+
+
+# ---------------------------------------------------------------------------
+# Two-class pricing
+# ---------------------------------------------------------------------------
+
+
+def test_uniform_topology_reproduces_flat_pricing():
+    rng = random.Random(0x01)
+    for _ in range(10):
+        cn = rng.randrange(2, 10)
+        rounds = bp.butterfly_schedule(cn, rng.randrange(1, 5))
+        payloads = [[rng.randrange(0, 1 << 20) for _ in rnd] for rnd in rounds]
+        want_times, want_bytes, want_msgs = bp.simulate_schedule(
+            rounds, payloads, cn)
+        topo = dict(name="uniform", per_island=1 << 30,
+                    intra=dict(bp.DGX2), inter=dict(bp.DGX2))
+        times, tot = bp.simulate_topology(rounds, payloads, cn, topo)
+        assert times == want_times, "must be bit-identical, not just close"
+        assert (tot["bytes"], tot["messages"]) == (want_bytes, want_msgs)
+        assert tot["inter_messages"] == 0 and tot["inter_bytes"] == 0
+        assert tot["intra_messages"] == want_msgs
+
+
+def test_inter_class_contends_per_island_uplink():
+    # Two islands of 2; both members of island 0 message both members of
+    # island 1 in one round. The inter class is re-addressed to island
+    # endpoints, so island 0's shared uplink serializes all 4 sends:
+    # setup latency * ceil(4/2) + max(4B / (2 * link_bw), 2 slots * B / link_bw).
+    B = 1 << 20
+    rounds = [[(0, 2), (0, 3), (1, 2), (1, 3)]]
+    payloads = [[B] * 4]
+    topo = bp.dgx2_cluster_topo(2)
+    up = bp.ISLAND_UPLINK
+    times, tot = bp.simulate_topology(rounds, payloads, 4, topo)
+    assert tot["inter_messages"] == 4 and tot["intra_messages"] == 0
+    expect = up["latency"] * 2 + 2 * B / up["link_bw"]
+    assert abs(times[0] - expect) / expect < 1e-12, (times[0], expect)
+
+
+def test_cluster_pricing_prefers_hierarchical_at_p64():
+    """The static half of the tentpole claim: at p = 64 under the 10:1
+    dgx2-cluster model, the grid-of-islands schedule both moves fewer
+    inter-island messages and prices strictly faster than the flat
+    butterfly, at any uniform payload."""
+    flat = bp.butterfly_schedule(64, 4)
+    hier = bp.hierarchical_schedule(8, 8, 4)
+    topo = bp.dgx2_cluster_topo(8)
+    _, flat_inter = bp.class_volume(flat, 8)
+    _, hier_inter = bp.class_volume(hier, 8)
+    assert hier_inter < flat_inter
+    for payload in [1 << 10, 1 << 20]:
+        tf, _ = bp.simulate_topology(
+            flat, [[payload] * len(r) for r in flat], 64, topo)
+        th, _ = bp.simulate_topology(
+            hier, [[payload] * len(r) for r in hier], 64, topo)
+        assert sum(th) < sum(tf), (payload, sum(th), sum(tf))
+
+
+# ---------------------------------------------------------------------------
+# End-to-end equivalence (the engine contract)
+# ---------------------------------------------------------------------------
+
+
+def test_hier_mode_matches_serial_oracle_every_direction():
+    rng = random.Random(0x15A)
+    for _ in range(18):
+        n = rng.randrange(20, 140)
+        g = rand_graph(rng, n, rng.randrange(1, 5))
+        b = rng.randrange(1, 17)
+        roots = [rng.randrange(n) for _ in range(b)]
+        want = [bp.serial_bfs(g, r) for r in roots]
+        islands = rng.randrange(1, 5)
+        per_island = rng.randrange(1, 5)
+        fanout = rng.randrange(1, 5)
+        topo = bp.dgx2_cluster_topo(per_island) if rng.random() < 0.5 else None
+        for d in ["topdown", "bottomup", "diropt"]:
+            m = bp.run_batch(g, islands * per_island, fanout, roots, d,
+                             mode="hier", grid=(islands, per_island),
+                             topo=topo)
+            for lane in range(b):
+                assert m["dist"][lane] == want[lane], (
+                    f"n={n} grid={islands}x{per_island} f={fanout} {d} "
+                    f"lane {lane}"
+                )
+
+
+def test_hier_levels_carry_class_split_that_tiles_totals():
+    rng = random.Random(0xC1A)
+    g = rand_graph(rng, 150, 3)
+    roots = [rng.randrange(150) for _ in range(8)]
+    for mode, grid in [("1d", None), ("2d", (3, 2)), ("hier", (2, 3))]:
+        m = bp.run_batch(g, 6, 2, roots, "topdown", mode=mode, grid=grid,
+                         topo=bp.dgx2_cluster_topo(3))
+        for l in m["levels"]:
+            assert l["intra_messages"] + l["inter_messages"] == l["messages"]
+            assert l["intra_bytes"] + l["inter_bytes"] == l["bytes"]

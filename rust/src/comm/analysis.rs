@@ -8,6 +8,7 @@
 //! bound, data volume), which `net::sim` prices into time.
 
 use super::pattern::Schedule;
+use crate::net::model::TopologyModel;
 
 /// Simulate knowledge propagation: `knowledge[g]` is the set of nodes
 /// whose frontier `g` holds (as a bitset; supports up to 128 nodes which
@@ -115,6 +116,47 @@ impl ModeVolume {
             self.measured_bytes
         )
     }
+}
+
+/// Link-class split of a schedule's message count under a topology model
+/// — the *modeled* side of the per-class accounting the engine measures
+/// into its level metrics (`intra_messages` / `inter_messages`). Because
+/// schedules are static, this is exact per schedule execution: a
+/// traversal of `L` levels measures `L ×` these counts.
+#[derive(Clone, Copy, Debug, Default, PartialEq, Eq)]
+pub struct ClassVolume {
+    /// Messages whose endpoints share an island.
+    pub intra_messages: u64,
+    /// Messages crossing an island boundary (the shared-uplink class).
+    pub inter_messages: u64,
+}
+
+impl ClassVolume {
+    /// Total messages (both classes).
+    pub fn total(&self) -> u64 {
+        self.intra_messages + self.inter_messages
+    }
+}
+
+/// Classify every transfer of `s` by island under `topo` — the
+/// closed-form companion of
+/// [`simulate_topology`](crate::net::simulate_topology)'s measured
+/// counters. A hierarchical schedule's whole point is driving
+/// `inter_messages` down to the representative exchange; compare a flat
+/// butterfly's split against [`GridOfIslands`](super::GridOfIslands)'s at
+/// the same node count to see the reduction.
+pub fn class_volume(s: &Schedule, topo: &TopologyModel) -> ClassVolume {
+    let mut v = ClassVolume::default();
+    for round in &s.rounds {
+        for t in round {
+            if topo.is_intra(t.src, t.dst) {
+                v.intra_messages += 1;
+            } else {
+                v.inter_messages += 1;
+            }
+        }
+    }
+    v
 }
 
 /// The paper's approximate message-count formula `CN · f · log_f(CN)`
@@ -228,6 +270,33 @@ mod tests {
         let bad = ModeVolume { measured_messages: 5, ..v };
         assert!(!bad.model_matches());
         assert!(bad.render().contains("MISMATCH"));
+    }
+
+    #[test]
+    fn class_volume_splits_and_hierarchical_reduces_inter() {
+        use crate::comm::hierarchical::GridOfIslands;
+        use crate::net::model::TopologyModel;
+        let topo = TopologyModel::dgx2_cluster(8);
+        // Under a uniform topology everything is intra.
+        let flat = Butterfly::new(4).schedule(64);
+        let uni = class_volume(&flat, &TopologyModel::uniform(crate::net::NetModel::dgx2()));
+        assert_eq!(uni.inter_messages, 0);
+        assert_eq!(uni.total(), flat.total_messages());
+        // Same schedule under the 8-rank-island cluster crosses islands
+        // heavily; the grid-of-islands composition confines crossings to
+        // the representative exchange.
+        let flat_split = class_volume(&flat, &topo);
+        let hier = GridOfIslands::new(8, 8, 4).schedule(64);
+        let hier_split = class_volume(&hier, &topo);
+        assert_eq!(flat_split.total(), flat.total_messages());
+        assert_eq!(hier_split.total(), hier.total_messages());
+        assert!(hier_split.inter_messages > 0);
+        assert!(
+            hier_split.inter_messages * 4 < flat_split.inter_messages,
+            "hier {} vs flat {} inter messages",
+            hier_split.inter_messages,
+            flat_split.inter_messages
+        );
     }
 
     #[test]

@@ -1,0 +1,319 @@
+//! Hierarchical grid-of-islands synchronization: butterfly *within* each
+//! island, a representative exchange *across* islands.
+//!
+//! Real multi-node clusters are not the flat NVSwitch fabric the paper's
+//! butterfly assumes: they are islands of fast links (NVLink inside a
+//! DGX-2) stitched together by a much slower inter-node network — the
+//! regime of Pan/Pearce/Owens' GPU-cluster BFS and Bisson et al.'s
+//! Kepler-cluster BFS (PAPERS.md). A flat schedule ships most of its
+//! accumulated-frontier payloads straight across that slow boundary; the
+//! hierarchical schedule makes locality structural instead:
+//!
+//! 1. **Aggregate (intra)** — a butterfly over each island's
+//!    `per_island` members. After `ceil(log_r per_island)` rounds every
+//!    member holds its whole island's frontier knowledge. All transfers
+//!    stay on fast intra-island links.
+//! 2. **Exchange (inter)** — each island's *representative* (its lowest
+//!    rank) runs a butterfly over the `islands` axis. Only
+//!    representatives touch the slow boundary, and they cross it with
+//!    island-aggregated payloads: `islands·(r−1)·ceil(log_r islands)`
+//!    inter-island messages total, instead of the flat all-to-all's
+//!    `p·(p−1)` or the flat butterfly's mostly-inter high-stride rounds.
+//! 3. **Broadcast (intra)** — one final round in which each
+//!    representative ships the now-global knowledge to its
+//!    `per_island − 1` island peers over fast links.
+//!
+//! The result is emitted as a perfectly ordinary [`Schedule`], so
+//! [`validate`](Schedule::validate),
+//! [`verify_full_coverage`](crate::comm::analysis::verify_full_coverage),
+//! and both engine phases work unchanged; only
+//! [`net::TopologyModel`](crate::net::TopologyModel) prices the two link
+//! classes differently.
+//!
+//! Degenerate grids collapse to the flat pattern: `islands = 1` is a
+//! plain butterfly over `per_island` nodes (phases 2–3 vanish), and
+//! `per_island = 1` makes every node its own representative (phase 1 and
+//! 3 vanish — a plain butterfly over `islands` nodes).
+
+use super::butterfly::Butterfly;
+use super::pattern::{CommPattern, Schedule, Transfer};
+
+/// The hierarchical grid-of-islands pattern: `islands × per_island`
+/// compute nodes in island-major rank order (`rank = island · per_island
+/// + local`), synchronized by butterfly-within-island, representative
+/// butterfly across islands, and a representative broadcast round.
+///
+/// The `fanout` is the paper's butterfly fanout, applied to *both*
+/// butterflies (`1` ⇒ radix 2). Non-power-of-radix axes use the paper's
+/// virtual-node padding within each axis, so any `islands × per_island`
+/// shape is valid.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub struct GridOfIslands {
+    /// Number of islands (the slow axis).
+    pub islands: u32,
+    /// Compute nodes per island (the fast axis).
+    pub per_island: u32,
+    /// Butterfly fanout used on both axes (`1` ⇒ classic radix 2).
+    pub fanout: u32,
+}
+
+impl GridOfIslands {
+    /// Create a grid-of-islands pattern. Both axes must be ≥ 1.
+    pub fn new(islands: u32, per_island: u32, fanout: u32) -> Self {
+        assert!(islands >= 1, "need at least one island");
+        assert!(per_island >= 1, "need at least one node per island");
+        assert!(fanout >= 1, "fanout must be >= 1");
+        Self { islands, per_island, fanout }
+    }
+
+    /// Total compute nodes covered: `islands · per_island`.
+    pub fn num_nodes(&self) -> u32 {
+        self.islands * self.per_island
+    }
+
+    /// Island index of a rank (island-major layout).
+    #[inline]
+    pub fn island_of(&self, rank: u32) -> u32 {
+        rank / self.per_island
+    }
+
+    /// Representative rank of an island: its lowest member.
+    #[inline]
+    pub fn representative(&self, island: u32) -> u32 {
+        island * self.per_island
+    }
+
+    /// Whether a transfer crosses the slow island boundary.
+    #[inline]
+    pub fn is_inter(&self, t: &Transfer) -> bool {
+        self.island_of(t.src) != self.island_of(t.dst)
+    }
+
+    /// Rounds of the intra-island aggregation butterfly:
+    /// `ceil(log_r per_island)`.
+    pub fn intra_rounds(&self) -> usize {
+        Butterfly::new(self.fanout).depth_for(self.per_island) as usize
+    }
+
+    /// Rounds of the cross-island representative butterfly:
+    /// `ceil(log_r islands)`.
+    pub fn inter_rounds(&self) -> usize {
+        Butterfly::new(self.fanout).depth_for(self.islands) as usize
+    }
+
+    /// Broadcast rounds: 1 when both axes are non-degenerate (the
+    /// representatives learned something their peers have not), else 0.
+    pub fn broadcast_rounds(&self) -> usize {
+        usize::from(self.islands > 1 && self.per_island > 1)
+    }
+
+    /// Total schedule depth.
+    pub fn depth(&self) -> usize {
+        self.intra_rounds() + self.inter_rounds() + self.broadcast_rounds()
+    }
+}
+
+impl CommPattern for GridOfIslands {
+    fn name(&self) -> &'static str {
+        "grid-of-islands"
+    }
+
+    fn schedule(&self, cn: u32) -> Schedule {
+        assert_eq!(
+            cn,
+            self.num_nodes(),
+            "grid {}x{} does not cover {cn} nodes",
+            self.islands,
+            self.per_island
+        );
+        let bf = Butterfly::new(self.fanout);
+        let mut rounds: Vec<Vec<Transfer>> = Vec::with_capacity(self.depth());
+
+        // Phase 1 — aggregate: the same island-local butterfly round runs
+        // in every island concurrently, offset by the island's rank base.
+        let intra = bf.schedule(self.per_island);
+        for local_round in &intra.rounds {
+            let mut round = Vec::with_capacity(local_round.len() * self.islands as usize);
+            for island in 0..self.islands {
+                let base = self.representative(island);
+                for t in local_round {
+                    round.push(Transfer { src: base + t.src, dst: base + t.dst });
+                }
+            }
+            round.sort_by_key(|t| (t.src, t.dst));
+            rounds.push(round);
+        }
+
+        // Phase 2 — exchange: a butterfly over the island axis, executed
+        // by the representatives (virtual-island blocks are held by the
+        // last island's representative, mirroring the flat padding rule).
+        let inter = bf.schedule(self.islands);
+        for island_round in &inter.rounds {
+            let mut round: Vec<Transfer> = island_round
+                .iter()
+                .map(|t| Transfer {
+                    src: self.representative(t.src),
+                    dst: self.representative(t.dst),
+                })
+                .collect();
+            round.sort_by_key(|t| (t.src, t.dst));
+            rounds.push(round);
+        }
+
+        // Phase 3 — broadcast: each representative ships the global
+        // knowledge to its island peers.
+        if self.broadcast_rounds() == 1 {
+            let mut round = Vec::with_capacity(cn as usize - self.islands as usize);
+            for island in 0..self.islands {
+                let rep = self.representative(island);
+                for local in 1..self.per_island {
+                    round.push(Transfer { src: rep, dst: rep + local });
+                }
+            }
+            rounds.push(round);
+        }
+
+        Schedule { num_nodes: cn, rounds }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::comm::analysis::verify_full_coverage;
+
+    #[test]
+    fn covers_and_validates_all_small_grids() {
+        for islands in 1..=8u32 {
+            for per_island in 1..=8u32 {
+                for fanout in [1u32, 2, 4] {
+                    let g = GridOfIslands::new(islands, per_island, fanout);
+                    let s = g.schedule(g.num_nodes());
+                    s.validate().unwrap_or_else(|e| {
+                        panic!("{islands}x{per_island} f={fanout}: {e}")
+                    });
+                    verify_full_coverage(&s).unwrap_or_else(|e| {
+                        panic!("{islands}x{per_island} f={fanout}: {e}")
+                    });
+                    assert_eq!(s.depth(), g.depth(), "{islands}x{per_island} f={fanout}");
+                }
+            }
+        }
+    }
+
+    #[test]
+    fn property_random_grids_cover() {
+        use crate::util::propcheck::{forall, gen, Config};
+        forall(Config::cases(60), "grid-of-islands covers all nodes", |rng| {
+            let islands = gen::usize_in(rng, 1, 8) as u32;
+            let per_island = gen::usize_in(rng, 1, 8) as u32;
+            let fanout = gen::usize_in(rng, 1, 6) as u32;
+            let g = GridOfIslands::new(islands, per_island, fanout);
+            let s = g.schedule(g.num_nodes());
+            let ok = s.validate().is_ok() && verify_full_coverage(&s).is_ok();
+            (ok, format!("islands={islands} per_island={per_island} fanout={fanout}"))
+        });
+    }
+
+    #[test]
+    fn degenerate_grids_are_flat_butterflies() {
+        // 1 island: the intra butterfly alone, identical to the flat one.
+        let one_island = GridOfIslands::new(1, 9, 1).schedule(9);
+        assert_eq!(one_island, Butterfly::new(1).schedule(9));
+        // 1 node per island: every node is its own representative.
+        let singletons = GridOfIslands::new(9, 1, 1).schedule(9);
+        assert_eq!(singletons, Butterfly::new(1).schedule(9));
+    }
+
+    #[test]
+    fn phase_structure_4x4_fanout1() {
+        let g = GridOfIslands::new(4, 4, 1);
+        let s = g.schedule(16);
+        // radix 2: 2 intra rounds + 2 inter rounds + 1 broadcast.
+        assert_eq!(g.intra_rounds(), 2);
+        assert_eq!(g.inter_rounds(), 2);
+        assert_eq!(g.broadcast_rounds(), 1);
+        assert_eq!(s.depth(), 5);
+        // Intra rounds: 4 islands × (4 nodes × 1 partner) = 16 transfers,
+        // all within islands. Inter rounds: 4 reps × 1 partner = 4
+        // transfers, all across. Broadcast: 4 reps × 3 peers = 12.
+        let inter_per_round: Vec<u64> = s
+            .rounds
+            .iter()
+            .map(|r| r.iter().filter(|t| g.is_inter(t)).count() as u64)
+            .collect();
+        assert_eq!(inter_per_round, vec![0, 0, 4, 4, 0]);
+        assert_eq!(s.total_messages(), 16 + 16 + 4 + 4 + 12);
+        // The slow boundary carries 8 messages; the flat radix-2
+        // butterfly over 16 nodes ships 64 total, 32 of them inter
+        // (strides 4 and 8 always leave a 4-node island).
+        let flat = Butterfly::new(1).schedule(16);
+        let flat_inter: u64 = flat
+            .rounds
+            .iter()
+            .flatten()
+            .filter(|t| g.island_of(t.src) != g.island_of(t.dst))
+            .count() as u64;
+        assert_eq!(flat_inter, 32);
+    }
+
+    #[test]
+    fn inter_messages_only_representatives() {
+        let g = GridOfIslands::new(8, 8, 4);
+        let s = g.schedule(64);
+        for round in &s.rounds {
+            for t in round {
+                if g.is_inter(t) {
+                    assert_eq!(t.src % 8, 0, "inter sender must be a representative");
+                    assert_eq!(t.dst % 8, 0, "inter receiver must be a representative");
+                }
+            }
+        }
+        // 8 islands under radix 4 need 2 exchange rounds.
+        assert_eq!(g.depth(), 2 + 2 + 1);
+        verify_full_coverage(&s).unwrap();
+    }
+
+    #[test]
+    fn message_count_formula_power_of_radix() {
+        // Exact per-phase counts when both axes are powers of the radix:
+        // islands·per_island·(r−1)·log_r(per_island) intra-butterfly +
+        // islands·(r−1)·log_r(islands) inter + islands·(per_island−1).
+        let g = GridOfIslands::new(4, 16, 4);
+        let s = g.schedule(64);
+        let intra_bf = 4 * 16 * 3 * 2; // 4 islands, 2 rounds of 16×3
+        let inter_bf = 4 * 3; // 1 round of 4×3
+        let broadcast = 4 * 15;
+        assert_eq!(s.total_messages() as u64, (intra_bf + inter_bf + broadcast) as u64);
+        let inter: u64 =
+            s.rounds.iter().flatten().filter(|t| g.is_inter(t)).count() as u64;
+        assert_eq!(inter, inter_bf as u64);
+    }
+
+    #[test]
+    fn island_major_layout_helpers() {
+        let g = GridOfIslands::new(3, 5, 1);
+        assert_eq!(g.num_nodes(), 15);
+        assert_eq!(g.island_of(0), 0);
+        assert_eq!(g.island_of(4), 0);
+        assert_eq!(g.island_of(5), 1);
+        assert_eq!(g.island_of(14), 2);
+        assert_eq!(g.representative(0), 0);
+        assert_eq!(g.representative(2), 10);
+        assert!(g.is_inter(&Transfer { src: 4, dst: 5 }));
+        assert!(!g.is_inter(&Transfer { src: 0, dst: 4 }));
+    }
+
+    #[test]
+    fn single_node_needs_no_rounds() {
+        let s = GridOfIslands::new(1, 1, 1).schedule(1);
+        assert_eq!(s.depth(), 0);
+        assert_eq!(s.total_messages(), 0);
+    }
+
+    #[test]
+    #[should_panic(expected = "does not cover")]
+    fn schedule_rejects_mismatched_node_count() {
+        GridOfIslands::new(2, 4, 1).schedule(9);
+    }
+}

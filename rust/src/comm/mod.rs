@@ -1,14 +1,18 @@
 //! Frontier-synchronization communication patterns: the paper's butterfly
-//! network, all-to-all baselines, the 2D fold/expand exchange, and the
-//! executable complexity analysis.
+//! network, all-to-all baselines, the 2D fold/expand exchange, the
+//! hierarchical grid-of-islands composition, and the executable
+//! complexity analysis.
 
 pub mod alltoall;
 pub mod analysis;
 pub mod butterfly;
 pub mod fold_expand;
+pub mod hierarchical;
 pub mod pattern;
 
 pub use alltoall::{ConcurrentAllToAll, IterativeAllToAll};
+pub use analysis::{class_volume, ClassVolume};
 pub use butterfly::Butterfly;
 pub use fold_expand::FoldExpand;
+pub use hierarchical::GridOfIslands;
 pub use pattern::{CommPattern, Schedule, Transfer};

@@ -1,7 +1,7 @@
 //! Engine configuration: fanout, pattern choice, payload encoding,
 //! backend, and the simulated hardware models.
 
-use crate::net::model::{DeviceModel, NetModel};
+use crate::net::model::{DeviceModel, NetModel, TopologyModel};
 
 /// Which synchronization pattern Phase 2 uses.
 #[derive(Clone, Copy, Debug, PartialEq, Eq)]
@@ -185,14 +185,31 @@ pub enum PartitionMode {
         /// Processor-grid columns (target-axis split).
         cols: u32,
     },
+    /// Hierarchical grid-of-islands layout
+    /// ([`crate::comm::GridOfIslands`]): vertex ownership is the same
+    /// contiguous edge-balanced 1D slab layout, assigned island-major
+    /// (`rank = island·per_island + local`), but synchronization runs
+    /// butterfly-within-island + representative exchange across islands.
+    /// The butterfly fanout comes from [`PatternKind::Butterfly`] (other
+    /// patterns fall back to fanout 1). Requires
+    /// `num_nodes == islands·per_island`.
+    Hierarchical {
+        /// Number of islands (the slow axis).
+        islands: u32,
+        /// Compute nodes per island (the fast axis).
+        per_island: u32,
+    },
 }
 
 impl PartitionMode {
-    /// Display name (`"1d"` / `"2d-RxC"`).
+    /// Display name (`"1d"` / `"2d-RxC"` / `"hier-AxB"`).
     pub fn name(&self) -> String {
         match *self {
             PartitionMode::OneD => "1d".to_string(),
             PartitionMode::TwoD { rows, cols } => format!("2d-{rows}x{cols}"),
+            PartitionMode::Hierarchical { islands, per_island } => {
+                format!("hier-{islands}x{per_island}")
+            }
         }
     }
 }
@@ -248,8 +265,16 @@ pub struct EngineConfig {
     /// receiver sees its transfers in schedule order — so pooled merging
     /// is bit-identical to sequential merging).
     pub parallel_phase2: bool,
-    /// Interconnect model for simulated communication time.
+    /// Interconnect model for simulated communication time (the uniform
+    /// fallback when no [`topology`](Self::topology) is set).
     pub net: NetModel,
+    /// Two-class interconnect topology, when the simulated cluster is not
+    /// flat: `Some` prices every transfer per link class
+    /// ([`crate::net::simulate_topology`]); `None` falls back to uniform
+    /// pricing under [`net`](Self::net) — except in hierarchical mode,
+    /// where transfers are still *classified* by island (so intra/inter
+    /// counters stay meaningful) while both classes price as `net`.
+    pub topology: Option<TopologyModel>,
     /// Device model for simulated compute time.
     pub device: DeviceModel,
 }
@@ -268,6 +293,7 @@ impl EngineConfig {
             parallel_phase1: false,
             parallel_phase2: false,
             net: NetModel::dgx2(),
+            topology: None,
             device: DeviceModel::v100(),
         }
     }
@@ -278,6 +304,33 @@ impl EngineConfig {
         Self {
             partition: PartitionMode::TwoD { rows, cols },
             ..Self::dgx2((rows * cols) as usize, 1)
+        }
+    }
+
+    /// A clustered hierarchical configuration: `islands × per_island`
+    /// nodes in grid-of-islands mode, priced under the 10:1
+    /// [`TopologyModel::dgx2_cluster`] topology.
+    pub fn dgx2_cluster_hier(islands: u32, per_island: u32, fanout: u32) -> Self {
+        Self {
+            partition: PartitionMode::Hierarchical { islands, per_island },
+            topology: Some(TopologyModel::dgx2_cluster(per_island)),
+            ..Self::dgx2((islands * per_island) as usize, fanout)
+        }
+    }
+
+    /// The topology every session prices its schedule under: the
+    /// explicitly configured one, an island-classified uniform topology
+    /// in hierarchical mode, or the flat uniform wrap of
+    /// [`net`](Self::net).
+    pub fn resolved_topology(&self) -> TopologyModel {
+        if let Some(t) = self.topology {
+            return t;
+        }
+        match self.partition {
+            PartitionMode::Hierarchical { per_island, .. } => {
+                TopologyModel::classified(self.net, per_island)
+            }
+            _ => TopologyModel::uniform(self.net),
         }
     }
 }
@@ -354,5 +407,32 @@ mod tests {
         assert_eq!(c.partition, PartitionMode::TwoD { rows: 4, cols: 8 });
         assert_eq!(c.partition.name(), "2d-4x8");
         assert_eq!(PartitionMode::OneD.name(), "1d");
+        assert_eq!(
+            PartitionMode::Hierarchical { islands: 8, per_island: 8 }.name(),
+            "hier-8x8"
+        );
+    }
+
+    #[test]
+    fn cluster_hier_preset_and_topology_resolution() {
+        let c = EngineConfig::dgx2_cluster_hier(8, 8, 4);
+        assert_eq!(c.num_nodes, 64);
+        assert_eq!(c.partition, PartitionMode::Hierarchical { islands: 8, per_island: 8 });
+        assert!(matches!(c.pattern, PatternKind::Butterfly { fanout: 4 }));
+        let topo = c.resolved_topology();
+        assert_eq!(topo.name, "dgx2-cluster");
+        assert_eq!(topo.per_island, 8);
+        assert!((topo.speed_ratio() - 10.0).abs() < 1e-12);
+        // Flat configs resolve to a uniform (single-island) topology...
+        let flat = EngineConfig::dgx2(16, 4);
+        assert_eq!(flat.resolved_topology().num_islands(16), 1);
+        // ... while hierarchical mode under a flat net still classifies.
+        let hier_flat = EngineConfig {
+            partition: PartitionMode::Hierarchical { islands: 4, per_island: 4 },
+            ..EngineConfig::dgx2(16, 4)
+        };
+        let t = hier_flat.resolved_topology();
+        assert_eq!(t.num_islands(16), 4);
+        assert!((t.speed_ratio() - 1.0).abs() < 1e-12);
     }
 }

@@ -31,6 +31,16 @@ pub struct LevelMetrics {
     pub expand_messages: u64,
     /// 2D mode: bytes in the expand rounds; 0 in 1D mode.
     pub expand_bytes: u64,
+    /// Messages priced on intra-island links (all of them under a flat
+    /// [`TopologyModel::uniform`](crate::net::TopologyModel::uniform)).
+    pub intra_messages: u64,
+    /// Bytes shipped over intra-island links.
+    pub intra_bytes: u64,
+    /// Messages crossing an island boundary (island-uplink class); 0
+    /// under a uniform topology.
+    pub inter_messages: u64,
+    /// Bytes crossing an island boundary.
+    pub inter_bytes: u64,
     /// Simulated Phase-1 compute time (slowest node).
     pub sim_compute: f64,
     /// Simulated Phase-2 communication time.
@@ -145,6 +155,26 @@ impl RunMetrics {
         self.levels.iter().map(|l| l.expand_bytes).sum()
     }
 
+    /// Total intra-island messages (everything under a uniform topology).
+    pub fn intra_messages(&self) -> u64 {
+        self.levels.iter().map(|l| l.intra_messages).sum()
+    }
+
+    /// Total intra-island bytes.
+    pub fn intra_bytes(&self) -> u64 {
+        self.levels.iter().map(|l| l.intra_bytes).sum()
+    }
+
+    /// Total island-crossing messages — 0 under a uniform topology.
+    pub fn inter_messages(&self) -> u64 {
+        self.levels.iter().map(|l| l.inter_messages).sum()
+    }
+
+    /// Total island-crossing bytes.
+    pub fn inter_bytes(&self) -> u64 {
+        self.levels.iter().map(|l| l.inter_bytes).sum()
+    }
+
     /// Record one level from raw phase outputs.
     pub fn push_level(
         &mut self,
@@ -165,6 +195,10 @@ impl RunMetrics {
             discovered,
             messages: comm.total_messages,
             bytes: comm.total_bytes,
+            intra_messages: comm.intra_messages,
+            intra_bytes: comm.intra_bytes,
+            inter_messages: comm.inter_messages,
+            inter_bytes: comm.inter_bytes,
             sim_compute,
             sim_comm: comm.total(),
             bottom_up,
@@ -190,6 +224,10 @@ impl RunMetrics {
             ("fold_bytes", Json::u(self.fold_bytes())),
             ("expand_messages", Json::u(self.expand_messages())),
             ("expand_bytes", Json::u(self.expand_bytes())),
+            ("intra_messages", Json::u(self.intra_messages())),
+            ("intra_bytes", Json::u(self.intra_bytes())),
+            ("inter_messages", Json::u(self.inter_messages())),
+            ("inter_bytes", Json::u(self.inter_bytes())),
             (
                 "levels",
                 Json::Arr(
@@ -315,6 +353,26 @@ impl BatchMetrics {
         self.levels.iter().map(|l| l.expand_bytes).sum()
     }
 
+    /// Total intra-island messages (everything under a uniform topology).
+    pub fn intra_messages(&self) -> u64 {
+        self.levels.iter().map(|l| l.intra_messages).sum()
+    }
+
+    /// Total intra-island bytes.
+    pub fn intra_bytes(&self) -> u64 {
+        self.levels.iter().map(|l| l.intra_bytes).sum()
+    }
+
+    /// Total island-crossing messages — 0 under a uniform topology.
+    pub fn inter_messages(&self) -> u64 {
+        self.levels.iter().map(|l| l.inter_messages).sum()
+    }
+
+    /// Total island-crossing bytes.
+    pub fn inter_bytes(&self) -> u64 {
+        self.levels.iter().map(|l| l.inter_bytes).sum()
+    }
+
     /// Number of levels (the max depth over the batch's lanes).
     pub fn depth(&self) -> usize {
         self.levels.len()
@@ -367,6 +425,10 @@ impl BatchMetrics {
             ("fold_bytes", Json::u(self.fold_bytes())),
             ("expand_messages", Json::u(self.expand_messages())),
             ("expand_bytes", Json::u(self.expand_bytes())),
+            ("intra_messages", Json::u(self.intra_messages())),
+            ("intra_bytes", Json::u(self.intra_bytes())),
+            ("inter_messages", Json::u(self.inter_messages())),
+            ("inter_bytes", Json::u(self.inter_bytes())),
             ("bytes_per_root", Json::n(self.bytes_per_root())),
             ("reached_pairs", Json::u(self.reached_pairs)),
         ])
@@ -382,6 +444,9 @@ mod tests {
             round_times: vec![secs],
             total_bytes: bytes,
             total_messages: msgs,
+            intra_bytes: bytes,
+            intra_messages: msgs,
+            ..Default::default()
         }
     }
 
@@ -456,6 +521,11 @@ mod tests {
             sim_compute: 0.002,
             sim_comm: 0.001,
             bottom_up: true,
+            intra_messages: 3,
+            intra_bytes: 440,
+            inter_messages: 1,
+            inter_bytes: 200,
+            ..Default::default()
         });
         b.sync_rounds = 4;
         b.reached_pairs = 321;
@@ -468,6 +538,8 @@ mod tests {
         assert!((b.sim_seconds_per_root() - 0.003 / 64.0).abs() < 1e-15);
         assert_eq!(b.fold_messages() + b.expand_messages(), b.messages());
         assert_eq!(b.fold_bytes() + b.expand_bytes(), b.bytes());
+        assert_eq!(b.intra_messages() + b.inter_messages(), b.messages());
+        assert_eq!(b.intra_bytes() + b.inter_bytes(), b.bytes());
         assert_eq!(b.lanes_per_exchange(), 64);
         assert_eq!(b.entry_bytes(), 12);
         let wide = BatchMetrics { num_roots: 256, lane_words: 4, ..Default::default() };
@@ -482,6 +554,29 @@ mod tests {
         assert!(s.contains("\"bottom_up_edges\":100"));
         assert!(s.contains("\"fold_bytes\":400"));
         assert!(s.contains("\"expand_messages\":1"));
+        assert!(s.contains("\"inter_bytes\":200"));
+        assert!(s.contains("\"intra_messages\":3"));
+    }
+
+    #[test]
+    fn per_class_split_flows_from_comm_timing() {
+        let mut m = RunMetrics { graph_edges: 10, ..Default::default() };
+        let comm = CommTiming {
+            round_times: vec![0.25, 0.25],
+            total_bytes: 900,
+            total_messages: 9,
+            intra_bytes: 600,
+            intra_messages: 6,
+            inter_bytes: 300,
+            inter_messages: 3,
+        };
+        m.push_level(0, 1, 2, 2, 1, &comm, 0.5, false);
+        assert_eq!(m.intra_messages(), 6);
+        assert_eq!(m.inter_messages(), 3);
+        assert_eq!(m.intra_bytes() + m.inter_bytes(), m.bytes());
+        let s = m.to_json().render();
+        assert!(s.contains("\"inter_messages\":3"));
+        assert!(s.contains("\"intra_bytes\":600"));
     }
 
     #[test]

@@ -44,9 +44,10 @@
 //! ```
 
 use super::backend::ComputeBackend;
-use super::config::{EngineConfig, PartitionMode};
+use super::config::{EngineConfig, PartitionMode, PatternKind};
 use super::session::QuerySession;
 use crate::comm::fold_expand::FoldExpand;
+use crate::comm::hierarchical::GridOfIslands;
 use crate::comm::pattern::{CommPattern, Schedule};
 use crate::graph::csr::{Csr, CsrSlab, VertexId};
 use crate::graph::store::GraphStore;
@@ -77,7 +78,9 @@ pub enum PlanError {
         /// Vertices available to partition.
         num_vertices: usize,
     },
-    /// 2D mode: `rows * cols` does not equal `num_nodes`.
+    /// 2D mode: `rows * cols` does not equal `num_nodes`; hierarchical
+    /// mode: `islands * per_island` does not equal `num_nodes` (reported
+    /// with `rows = islands`, `cols = per_island`).
     GridMismatch {
         /// Requested grid rows.
         rows: u32,
@@ -256,6 +259,29 @@ impl LazySlabs {
     }
 }
 
+/// Butterfly fanout of a hierarchical plan: honor the configured
+/// butterfly pattern, fall back to fanout 1 (radix 2) for the all-to-all
+/// patterns (which have no per-axis fanout to compose).
+fn hier_fanout(config: &EngineConfig) -> u32 {
+    match config.pattern {
+        PatternKind::Butterfly { fanout } => fanout,
+        _ => 1,
+    }
+}
+
+/// Schedule of the 1D-slab family of modes: the configured pattern in
+/// [`PartitionMode::OneD`], the grid-of-islands composition in
+/// [`PartitionMode::Hierarchical`].
+fn one_d_family_schedule(config: &EngineConfig) -> Schedule {
+    match config.partition {
+        PartitionMode::Hierarchical { islands, per_island } => {
+            GridOfIslands::new(islands, per_island, hier_fanout(config))
+                .schedule(config.num_nodes as u32)
+        }
+        _ => config.pattern.build().schedule(config.num_nodes as u32),
+    }
+}
+
 impl TraversalPlan {
     /// Partition `g` across `config.num_nodes` simulated devices and
     /// generate the matching synchronization schedule.
@@ -303,6 +329,28 @@ impl TraversalPlan {
                 let schedule = fe.schedule(config.num_nodes as u32);
                 (PartitionSpec::TwoD(p), slabs, schedule, fe.fold_rounds())
             }
+            PartitionMode::Hierarchical { islands, per_island } => {
+                if islands as usize * per_island as usize != config.num_nodes {
+                    return Err(PlanError::GridMismatch {
+                        rows: islands,
+                        cols: per_island,
+                        num_nodes: config.num_nodes,
+                    });
+                }
+                if config.num_nodes > n {
+                    return Err(PlanError::TooManyNodes {
+                        num_nodes: config.num_nodes,
+                        num_vertices: n,
+                    });
+                }
+                // Island-major rank order over the same contiguous 1D
+                // slabs: rank = island·per_island + local, so slab
+                // ownership composes with the 1D machinery unchanged.
+                let p = partition_1d(g, config.num_nodes);
+                let slabs = p.slabs(g);
+                let schedule = one_d_family_schedule(&config);
+                (PartitionSpec::OneD(p), slabs, schedule, 0)
+            }
         };
         schedule.validate().map_err(PlanError::InvalidSchedule)?;
         Ok(Self {
@@ -321,13 +369,16 @@ impl TraversalPlan {
     /// Build a plan directly from an open `.bbfs` v2 store — the **cold**
     /// store-backed path.
     ///
-    /// In 1D mode this decodes only the degree stream (O(n) varints, no
-    /// adjacency bytes) to compute edge-balanced cuts, then installs lazy
-    /// row slabs: adjacency decodes on first touch or at
-    /// [`materialize`](Self::materialize). In 2D mode the checkerboard's
-    /// column cuts need in-degrees, so the graph is decoded eagerly —
-    /// the cache written by [`cache_json`](Self::cache_json) is what makes
-    /// the *next* 2D start cheap.
+    /// In 1D and hierarchical modes this decodes only the degree stream
+    /// (O(n) varints, no adjacency bytes) to compute edge-balanced cuts,
+    /// then installs lazy row slabs: adjacency decodes on first touch or
+    /// at [`materialize`](Self::materialize). In 2D mode the
+    /// checkerboard's column cuts need in-degrees, so each block is
+    /// streamed **exactly once** through
+    /// [`GraphStore::stream_degree_prefixes`] — never materializing a
+    /// full CSR — and the slabs themselves stay lazy. The cuts are
+    /// bit-identical to [`Partition2D::new`]'s because both axes route
+    /// through the same [`balanced_cuts_from_prefix`] greedy.
     ///
     /// If the store was converted with `--relabel`, the plan carries the
     /// permutation: map roots through [`relabeling`](Self::relabeling)
@@ -356,12 +407,46 @@ impl TraversalPlan {
                 let cuts = balanced_cuts_from_prefix(&prefix, config.num_nodes);
                 Self::assemble_lazy_1d(store, config, Partition1D { cuts }, relabeling, fingerprint)
             }
-            PartitionMode::TwoD { .. } => {
-                let g = store.to_csr().map_err(|e| PlanError::StoreDecode(e.to_string()))?;
-                let mut plan = Self::build(&g, config)?;
-                plan.relabeling = relabeling;
-                plan.store_fingerprint = fingerprint;
-                Ok(plan)
+            PartitionMode::TwoD { rows, cols } => {
+                if rows as usize * cols as usize != config.num_nodes {
+                    return Err(PlanError::GridMismatch {
+                        rows,
+                        cols,
+                        num_nodes: config.num_nodes,
+                    });
+                }
+                if rows as usize > n || cols as usize > n {
+                    return Err(PlanError::GridTooLarge { rows, cols, num_vertices: n });
+                }
+                let (out_prefix, in_prefix) = store
+                    .stream_degree_prefixes()
+                    .map_err(|e| PlanError::StoreDecode(e.to_string()))?;
+                let p = Partition2D {
+                    grid_rows: rows,
+                    grid_cols: cols,
+                    row_cuts: balanced_cuts_from_prefix(&out_prefix, rows as usize),
+                    col_cuts: balanced_cuts_from_prefix(&in_prefix, cols as usize),
+                };
+                Self::assemble_lazy_2d(store, config, p, relabeling, fingerprint)
+            }
+            PartitionMode::Hierarchical { islands, per_island } => {
+                if islands as usize * per_island as usize != config.num_nodes {
+                    return Err(PlanError::GridMismatch {
+                        rows: islands,
+                        cols: per_island,
+                        num_nodes: config.num_nodes,
+                    });
+                }
+                if config.num_nodes > n {
+                    return Err(PlanError::TooManyNodes {
+                        num_nodes: config.num_nodes,
+                        num_vertices: n,
+                    });
+                }
+                let prefix =
+                    store.degree_prefix().map_err(|e| PlanError::StoreDecode(e.to_string()))?;
+                let cuts = balanced_cuts_from_prefix(&prefix, config.num_nodes);
+                Self::assemble_lazy_1d(store, config, Partition1D { cuts }, relabeling, fingerprint)
             }
         }
     }
@@ -377,7 +462,7 @@ impl TraversalPlan {
         let m = store.num_edges();
         let ranges: Vec<SlabRange> =
             (0..p.parts()).map(|i| SlabRange { rows: p.range(i), cols: None }).collect();
-        let schedule = config.pattern.build().schedule(config.num_nodes as u32);
+        let schedule = one_d_family_schedule(&config);
         schedule.validate().map_err(PlanError::InvalidSchedule)?;
         Ok(Self {
             config,
@@ -540,6 +625,9 @@ impl TraversalPlan {
         let (mode, grid) = match self.config.partition {
             PartitionMode::OneD => ("1d".to_string(), String::new()),
             PartitionMode::TwoD { rows, cols } => ("2d".to_string(), format!("{rows}x{cols}")),
+            PartitionMode::Hierarchical { islands, per_island } => {
+                ("hier".to_string(), format!("{islands}x{per_island}"))
+            }
         };
         let fingerprint = Json::obj(vec![
             ("store", Json::s(store)),
@@ -591,6 +679,9 @@ impl TraversalPlan {
         let (mode, grid) = match config.partition {
             PartitionMode::OneD => ("1d".to_string(), String::new()),
             PartitionMode::TwoD { rows, cols } => ("2d".to_string(), format!("{rows}x{cols}")),
+            PartitionMode::Hierarchical { islands, per_island } => {
+                ("hier".to_string(), format!("{islands}x{per_island}"))
+            }
         };
         let expect_str = |field: &str, expected: &str| -> Result<(), PlanError> {
             let found = fp.get(field).and_then(Json::as_str).unwrap_or("<missing>");
@@ -696,6 +787,23 @@ impl TraversalPlan {
                 let p = Partition2D { grid_rows: rows, grid_cols: cols, row_cuts, col_cuts };
                 Self::assemble_lazy_2d(store, config, p, relabeling, fingerprint)
             }
+            PartitionMode::Hierarchical { islands, per_island } => {
+                if islands as usize * per_island as usize != config.num_nodes {
+                    return Err(PlanError::GridMismatch {
+                        rows: islands,
+                        cols: per_island,
+                        num_nodes: config.num_nodes,
+                    });
+                }
+                if config.num_nodes > n {
+                    return Err(PlanError::TooManyNodes {
+                        num_nodes: config.num_nodes,
+                        num_vertices: n,
+                    });
+                }
+                let cuts = read_cuts("cuts", config.num_nodes)?;
+                Self::assemble_lazy_1d(store, config, Partition1D { cuts }, relabeling, fingerprint)
+            }
         }
     }
 
@@ -790,6 +898,80 @@ mod tests {
         assert!(s.contains("3x3") && s.contains("num_nodes=8"), "{s}");
         assert!(PlanError::NoNodes.to_string().contains("at least one"));
         assert!(PlanError::InvalidSchedule("boom".into()).to_string().contains("boom"));
+    }
+
+    #[test]
+    fn hierarchical_plan_matches_grid_schedule() {
+        let (g, _) = uniform_random(200, 4, 5);
+        let plan = TraversalPlan::build(&g, EngineConfig::dgx2_cluster_hier(2, 4, 2)).unwrap();
+        assert_eq!(plan.num_nodes(), 8);
+        assert_eq!(plan.fold_rounds(), 0);
+        // Slab layout is plain 1D — identical cuts to the flat config.
+        let flat = TraversalPlan::build(&g, EngineConfig::dgx2(8, 2)).unwrap();
+        assert_eq!(
+            plan.partition().as_one_d().unwrap().cuts,
+            flat.partition().as_one_d().unwrap().cuts
+        );
+        // The schedule is the grid-of-islands composition.
+        let want = GridOfIslands::new(2, 4, 2).schedule(8);
+        assert_eq!(plan.schedule().rounds, want.rounds);
+    }
+
+    #[test]
+    fn hierarchical_grid_must_cover_nodes() {
+        let (g, _) = uniform_random(100, 4, 5);
+        let cfg = EngineConfig {
+            partition: PartitionMode::Hierarchical { islands: 3, per_island: 3 },
+            ..EngineConfig::dgx2(8, 2)
+        };
+        let err = TraversalPlan::build(&g, cfg).unwrap_err();
+        assert_eq!(err, PlanError::GridMismatch { rows: 3, cols: 3, num_nodes: 8 });
+    }
+
+    #[test]
+    fn two_d_store_cold_streams_each_block_once() {
+        use crate::graph::store::{encode_store, GraphStore, StoreWriteOptions};
+        let (g, _) = uniform_random(300, 6, 11);
+        let enc = encode_store(&g, StoreWriteOptions { relabel: false, block_size: 64 }).unwrap();
+        let store = Arc::new(GraphStore::open_bytes(enc.bytes).unwrap());
+        let plan =
+            TraversalPlan::build_from_store(Arc::clone(&store), EngineConfig::dgx2_2d(2, 3))
+                .unwrap();
+        let c = store.counters();
+        let n = store.num_vertices() as u64;
+        let blocks = n.div_ceil(u64::from(store.block_size()));
+        assert_eq!(c.degree_entries_decoded, n);
+        assert_eq!(c.edges_decoded, store.num_edges());
+        assert_eq!(c.blocks_decoded, blocks, "each block decoded exactly once");
+        // Streamed cuts are bit-identical to the in-memory constructor's.
+        let reference = Partition2D::new(&g, 2, 3);
+        let p = plan.partition().as_two_d().unwrap();
+        assert_eq!(p.row_cuts, reference.row_cuts);
+        assert_eq!(p.col_cuts, reference.col_cuts);
+    }
+
+    #[test]
+    fn hierarchical_store_cold_and_cache_roundtrip() {
+        use crate::graph::store::{encode_store, GraphStore, StoreWriteOptions};
+        let (g, _) = uniform_random(150, 4, 3);
+        let enc = encode_store(&g, StoreWriteOptions::default()).unwrap();
+        let store = Arc::new(GraphStore::open_bytes(enc.bytes).unwrap());
+        let cfg = EngineConfig::dgx2_cluster_hier(2, 3, 2);
+        let cold = TraversalPlan::build_from_store(Arc::clone(&store), cfg.clone()).unwrap();
+        let cache = cold.cache_json().unwrap();
+        let fp = cache.get("fingerprint").unwrap();
+        assert_eq!(fp.get("mode").and_then(Json::as_str), Some("hier"));
+        assert_eq!(fp.get("grid").and_then(Json::as_str), Some("2x3"));
+        let warm = TraversalPlan::from_cache_json(Arc::clone(&store), cfg, &cache).unwrap();
+        assert_eq!(
+            warm.partition().as_one_d().unwrap().cuts,
+            cold.partition().as_one_d().unwrap().cuts
+        );
+        assert_eq!(warm.schedule().rounds, cold.schedule().rounds);
+        // A different grid in the config is a typed mismatch vs the cache.
+        let other = EngineConfig::dgx2_cluster_hier(3, 2, 2);
+        let err = TraversalPlan::from_cache_json(Arc::clone(&store), other, &cache).unwrap_err();
+        assert!(matches!(err, PlanError::CacheFingerprintMismatch { .. }));
     }
 
     #[test]

@@ -53,7 +53,8 @@ use crate::bfs::msbfs::{full_lane_mask, words_for_lanes, MsBfsNodeState, MAX_LAN
 use crate::bfs::serial::INF;
 use crate::comm::pattern::Schedule;
 use crate::graph::csr::VertexId;
-use crate::net::sim::simulate_schedule;
+use crate::net::model::TopologyModel;
+use crate::net::sim::simulate_topology;
 use crate::util::threadpool::ThreadPool;
 use std::sync::Arc;
 
@@ -235,6 +236,11 @@ impl BatchResult {
 /// ```
 pub struct QuerySession {
     config: EngineConfig,
+    /// The link-class pricing model every Phase-2 simulation runs under —
+    /// resolved once from the config ([`EngineConfig::resolved_topology`]):
+    /// uniform for flat modes, per-island classified for hierarchical
+    /// mode, or whatever heterogeneous model the config pins explicitly.
+    topology: TopologyModel,
     schedule: Arc<Schedule>,
     /// Leading schedule rounds that are the 2D fold phase (0 in 1D mode).
     fold_rounds: usize,
@@ -430,6 +436,7 @@ impl QuerySession {
         let scratch = (0..plan.num_nodes()).map(|_| ExpandOutput::default()).collect();
         Self {
             config: plan.config().clone(),
+            topology: plan.config().resolved_topology(),
             schedule: plan.schedule_arc(),
             fold_rounds: plan.fold_rounds(),
             num_vertices: plan.num_vertices(),
@@ -496,7 +503,9 @@ impl QuerySession {
     /// column block), so count one column representative per row.
     fn frontier_len(&self) -> u64 {
         match self.config.partition {
-            PartitionMode::OneD => self.nodes.iter().map(|n| n.q_local.len() as u64).sum(),
+            PartitionMode::OneD | PartitionMode::Hierarchical { .. } => {
+                self.nodes.iter().map(|n| n.q_local.len() as u64).sum()
+            }
             PartitionMode::TwoD { cols, .. } => self
                 .nodes
                 .iter()
@@ -510,7 +519,9 @@ impl QuerySession {
     /// lane states the caller holds).
     fn batch_frontier_len<const W: usize>(&self, states: &[MsBfsNodeState<W>]) -> u64 {
         match self.config.partition {
-            PartitionMode::OneD => states.iter().map(|s| s.q_local.len() as u64).sum(),
+            PartitionMode::OneD | PartitionMode::Hierarchical { .. } => {
+                states.iter().map(|s| s.q_local.len() as u64).sum()
+            }
             PartitionMode::TwoD { cols, .. } => states
                 .iter()
                 .step_by(cols as usize)
@@ -623,7 +634,7 @@ impl QuerySession {
 
             // ---- Phase 2: frontier synchronization ----
             let payloads = self.phase2(level);
-            let comm = simulate_schedule(&self.schedule, &self.config.net, |r, t| {
+            let comm = simulate_topology(&self.schedule, &self.topology, |r, t| {
                 payloads[r][t]
             });
 
@@ -1023,7 +1034,7 @@ impl QuerySession {
 
             // ---- Phase 2: one exchange for the whole batch.
             let payloads = self.batch_phase2(&mut states, level, bottom_up);
-            let comm = simulate_schedule(&self.schedule, &self.config.net, |r, t| {
+            let comm = simulate_topology(&self.schedule, &self.topology, |r, t| {
                 payloads[r][t]
             });
 
@@ -1048,6 +1059,10 @@ impl QuerySession {
                 fold_bytes: fb,
                 expand_messages: em,
                 expand_bytes: eb,
+                intra_messages: comm.intra_messages,
+                intra_bytes: comm.intra_bytes,
+                inter_messages: comm.inter_messages,
+                inter_bytes: comm.inter_bytes,
                 sim_compute,
                 sim_comm: comm.total(),
                 bottom_up,
@@ -2213,6 +2228,118 @@ mod tests {
         for lane in 0..roots.len() {
             assert_eq!(b.dist(lane), want.dist(lane), "lane {lane}");
         }
+    }
+
+    /// A hierarchical cluster preset: butterfly inside each island, a
+    /// representative butterfly across islands, priced by the 10:1
+    /// dgx2-cluster topology model.
+    fn hier_cfg(islands: u32, per_island: u32, fanout: u32) -> EngineConfig {
+        EngineConfig::dgx2_cluster_hier(islands, per_island, fanout)
+    }
+
+    #[test]
+    fn hierarchical_matches_serial_and_flat_1d() {
+        let (g, _) = uniform_random(900, 8, 77);
+        for (islands, per_island, fanout) in [(2u32, 4u32, 1u32), (4, 2, 2), (2, 2, 4), (3, 3, 1)]
+        {
+            let mut hier = session_for(&g, hier_cfg(islands, per_island, fanout));
+            let r = hier.run(13).unwrap();
+            hier.assert_agreement().unwrap();
+            assert_eq!(
+                r.dist(),
+                &serial_bfs(&g, 13)[..],
+                "grid {islands}x{per_island} f={fanout}"
+            );
+            let mut flat =
+                session_for(&g, EngineConfig::dgx2((islands * per_island) as usize, fanout));
+            assert_eq!(r.dist(), flat.run(13).unwrap().dist());
+            // Per-class accounting tiles the totals, and a true grid
+            // actually crosses island boundaries.
+            let m = r.metrics();
+            assert_eq!(m.intra_messages() + m.inter_messages(), m.messages());
+            assert_eq!(m.intra_bytes() + m.inter_bytes(), m.bytes());
+            assert!(m.inter_messages() > 0, "grid {islands}x{per_island}");
+            assert!(m.intra_messages() > 0, "grid {islands}x{per_island}");
+        }
+    }
+
+    #[test]
+    fn hierarchical_direction_modes_match_serial() {
+        let (g, _) = kronecker(KroneckerParams::graph500(10, 8), 9);
+        for direction in
+            [DirectionMode::TopDown, DirectionMode::BottomUp, DirectionMode::diropt()]
+        {
+            let cfg = EngineConfig { direction, ..hier_cfg(2, 4, 2) };
+            let mut session = session_for(&g, cfg);
+            let r = session.run(2).unwrap();
+            session.assert_agreement().unwrap();
+            assert_eq!(r.dist(), &serial_bfs(&g, 2)[..], "{direction:?}");
+        }
+    }
+
+    #[test]
+    fn hierarchical_wide_batches_match_oracle() {
+        use crate::bfs::msbfs::ms_bfs;
+        let (g, _) = uniform_random(400, 6, 29);
+        for width in [1usize, 64, 256, 512] {
+            let roots: Vec<VertexId> =
+                (0..width).map(|i| ((i * 3 + 1) % 400) as VertexId).collect();
+            let mut session = session_for(&g, hier_cfg(2, 4, 2));
+            let b = session.run_batch(&roots).unwrap();
+            session.assert_batch_agreement().unwrap();
+            let want = ms_bfs(&g, &roots);
+            for lane in 0..width {
+                assert_eq!(b.dist(lane), want.dist(lane), "width {width} lane {lane}");
+            }
+            let m = b.metrics();
+            assert_eq!(m.intra_messages() + m.inter_messages(), m.messages());
+            assert_eq!(m.intra_bytes() + m.inter_bytes(), m.bytes());
+            assert!(m.inter_messages() > 0);
+        }
+    }
+
+    #[test]
+    fn hierarchical_degenerate_grids_match_flat_butterfly() {
+        // 1×p and p×1 grids collapse to the flat butterfly schedule;
+        // without an explicit cluster topology the classified pricing is
+        // numerically identical to flat pricing, so the whole metrics
+        // stream — bytes, messages, simulated clock — matches exactly.
+        let (g, _) = uniform_random(600, 8, 8);
+        let mut flat = session_for(&g, EngineConfig::dgx2(6, 1));
+        let rf = flat.run(0).unwrap();
+        for (islands, per_island) in [(1u32, 6u32), (6, 1)] {
+            let cfg = EngineConfig { topology: None, ..hier_cfg(islands, per_island, 1) };
+            let mut hier = session_for(&g, cfg);
+            let rh = hier.run(0).unwrap();
+            assert_eq!(rh.dist(), rf.dist(), "grid {islands}x{per_island}");
+            let (mh, mf) = (rh.metrics(), rf.metrics());
+            assert_eq!(mh.messages(), mf.messages(), "grid {islands}x{per_island}");
+            assert_eq!(mh.bytes(), mf.bytes(), "grid {islands}x{per_island}");
+            assert_eq!(
+                mh.sim_seconds(),
+                mf.sim_seconds(),
+                "grid {islands}x{per_island}: degenerate pricing must be exact"
+            );
+        }
+    }
+
+    #[test]
+    fn property_hierarchical_equals_serial() {
+        use crate::util::propcheck::{forall, gen, Config};
+        forall(Config::cases(20), "grid-of-islands == serial", |rng| {
+            let n = gen::usize_in(rng, 64, 300);
+            let ef = gen::usize_in(rng, 1, 6) as u32;
+            let islands = gen::usize_in(rng, 1, 8) as u32;
+            let per_island = gen::usize_in(rng, 1, 8) as u32;
+            let fanout = gen::usize_in(rng, 1, 4) as u32;
+            let (g, _) = uniform_random(n, ef, rng.next_u64());
+            let root = rng.next_usize(n) as u32;
+            let mut session = session_for(&g, hier_cfg(islands, per_island, fanout));
+            let r = session.run(root).unwrap();
+            let ok = session.assert_agreement().is_ok()
+                && r.dist() == &serial_bfs(&g, root)[..];
+            (ok, format!("n={n} grid={islands}x{per_island} f={fanout} root={root}"))
+        });
     }
 
     #[test]

@@ -444,6 +444,43 @@ impl GraphStore {
         self.decode_rows_filtered(lo, hi, None)
     }
 
+    /// One streaming pass over the container — each block decoded exactly
+    /// once, one block resident at a time — returning the **out**-degree
+    /// prefix array and the **in**-degree prefix array (both `n + 1`
+    /// entries).
+    ///
+    /// This is what the 2D *cold* build consumes: the checkerboard's
+    /// column cuts need in-degrees, which only a full adjacency scan can
+    /// produce, but nothing requires materializing the whole CSR to get
+    /// them. Cost is `n` degree entries + `m` adjacency varints +
+    /// `num_blocks` block fetches on the decode counters — the
+    /// `storage` bench records exactly that to prove no block decodes
+    /// twice.
+    pub fn stream_degree_prefixes(&self) -> Result<(Vec<u64>, Vec<u64>), StoreError> {
+        let bs = self.block_size as usize;
+        let mut out_prefix = Vec::with_capacity(self.n + 1);
+        out_prefix.push(0u64);
+        let mut in_deg = vec![0u64; self.n];
+        let mut lo = 0usize;
+        while lo < self.n {
+            let hi = (lo + bs).min(self.n);
+            let slab = self.decode_rows_filtered(lo as VertexId, hi as VertexId, None)?;
+            for w in slab.offsets.windows(2) {
+                out_prefix.push(out_prefix.last().unwrap() + (w[1] - w[0]));
+            }
+            for &t in &slab.edges {
+                in_deg[t as usize] += 1;
+            }
+            lo = hi;
+        }
+        let mut in_prefix = Vec::with_capacity(self.n + 1);
+        in_prefix.push(0u64);
+        for &d in &in_deg {
+            in_prefix.push(in_prefix.last().unwrap() + d);
+        }
+        Ok((out_prefix, in_prefix))
+    }
+
     /// Decode the whole container back into an in-memory [`Csr`] —
     /// the eager path, and the round-trip inverse of
     /// [`encode_store`](super::encode_store) (in relabeled id space when a

@@ -40,6 +40,21 @@
 //! Python port: both produce the identical container, so both report the
 //! identical sizes, fingerprint, and counter deltas.
 //!
+//! Since v5 the report carries a **hierarchical** section
+//! (`hierarchical`): the fixed 64-root batch at p = 64 executed in all
+//! three partition modes — flat 1D butterfly, 8×8 2D fold/expand, and
+//! the 8×8 grid-of-islands composition — every mode priced under the
+//! *same* heterogeneous `dgx2-cluster` topology (NVLink-class links
+//! inside an island, one shared ~10× slower uplink per island). The
+//! committed numbers are the evidence for the hierarchical claim: the
+//! grid-of-islands schedule pushes an order of magnitude fewer bytes
+//! through the slow inter-island class and finishes the batch faster
+//! than both flat layouts ([`check_engine_bench`]'s acceptance pass
+//! requires strictly smaller simulated time than 1D *and* 2D, plus the
+//! inter-byte reduction). A `static_schedule` subtree pins the
+//! per-class message split of the bare schedules, independent of any
+//! graph.
+//!
 //! The artifact lives at the repository root and is kept fresh by CI:
 //! `butterfly-bfs bench-protocol --check` recomputes the protocol and
 //! fails when the committed file drifts (integer counters compare
@@ -49,9 +64,11 @@
 //! numbers, and commit the diff — that *is* the perf trajectory.
 
 use crate::bfs::msbfs::sample_batch_roots;
+use crate::comm::{class_volume, Butterfly, ClassVolume, CommPattern, GridOfIslands, Schedule};
 use crate::coordinator::config::{BatchWidth, DirectionMode};
 use crate::coordinator::metrics::BatchMetrics;
 use crate::coordinator::{EngineConfig, TraversalPlan};
+use crate::net::model::TopologyModel;
 use crate::graph::csr::{Csr, VertexId};
 use crate::graph::gen::table1_suite;
 use crate::graph::store::{
@@ -71,7 +88,10 @@ use std::sync::Arc;
 /// v4 added the on-disk storage section (`storage`): `.bbfs` v2
 /// compression sizes, container fingerprint, and warm-start decode
 /// counters.
-pub const PROTOCOL_NAME: &str = "engine-bench-v4";
+/// v5 added the hierarchical section (`hierarchical`): 1d vs 2d vs
+/// grid-of-islands at p = 64 under the heterogeneous `dgx2-cluster`
+/// topology, with per-link-class message/byte splits.
+pub const PROTOCOL_NAME: &str = "engine-bench-v5";
 /// Suite graph the protocol runs on (the paper's GAP_kron analog).
 pub const PROTOCOL_GRAPH: &str = "kron-like";
 /// Scale adjustment: `kron-like` is scale 21; −10 ⇒ 2^11 vertices — big
@@ -117,6 +137,11 @@ pub const PROTOCOL_STORAGE_GRAPH: &str = "web-like";
 pub const PROTOCOL_STORAGE_SCALE_DELTA: i32 = -8;
 /// Storage section: node count of the cold/warm plan builds (1D).
 pub const PROTOCOL_STORAGE_NODES: usize = 16;
+/// Hierarchical section: node count (4 racks of DGX-2 scale — the point
+/// where flat butterfly rounds start crossing islands heavily).
+pub const PROTOCOL_HIER_NODES: usize = 64;
+/// Hierarchical section: island grid (islands × nodes-per-island).
+pub const PROTOCOL_HIER_GRID: (u32, u32) = (8, 8);
 
 fn direction_modes() -> [(&'static str, DirectionMode); 3] {
     [
@@ -450,6 +475,16 @@ fn storage_json() -> Json {
         .dist()
         .to_vec();
 
+    // 2D cold build: the streaming degree/in-degree pass decodes every
+    // block exactly once instead of round-tripping the store through a
+    // full CSR — the counters at load are exactly {n, m, num_blocks}.
+    let twod_store = Arc::new(
+        GraphStore::open_bytes(plain.bytes.clone()).expect("own encoding opens"),
+    );
+    TraversalPlan::build_from_store(Arc::clone(&twod_store), EngineConfig::dgx2_2d(4, 4))
+        .expect("valid store plan");
+    let twod_at_load = twod_store.counters();
+
     // Warm path: restart from the cache on a fresh handle — the counter
     // snapshot before materialize is the warm-start evidence.
     let warm_store =
@@ -525,10 +560,106 @@ fn storage_json() -> Json {
                         ("after_materialize", store_counters_json(&warm_after)),
                     ]),
                 ),
+                (
+                    "two_d_cold",
+                    Json::obj(vec![("at_load", store_counters_json(&twod_at_load))]),
+                ),
             ]),
         ),
         ("warm_equals_cold", Json::Bool(warm_equals_cold)),
         ("matches_in_memory", Json::Bool(matches_in_memory)),
+    ])
+}
+
+/// The engine config for one mode of the hierarchical section. All
+/// three modes run at p = 64 and are priced under the identical
+/// heterogeneous cluster ([`TopologyModel::dgx2_cluster`]), so the only
+/// variable is the communication layout itself.
+fn hier_mode_config(mode: &str) -> EngineConfig {
+    let (islands, per_island) = PROTOCOL_HIER_GRID;
+    let mut cfg = match mode {
+        "1d" => EngineConfig::dgx2(PROTOCOL_HIER_NODES, PROTOCOL_FANOUT),
+        "2d" => EngineConfig::dgx2_2d(islands, per_island),
+        "hier" => EngineConfig::dgx2_cluster_hier(islands, per_island, PROTOCOL_FANOUT),
+        m => unreachable!("unknown hierarchical protocol mode {m}"),
+    };
+    cfg.batch_width = BatchWidth::for_lanes(PROTOCOL_BATCH_WIDTH)
+        .expect("protocol widths are within the lane limit");
+    cfg.topology = Some(TopologyModel::dgx2_cluster(per_island));
+    cfg
+}
+
+/// One mode of the hierarchical section: the fixed 64-root batch,
+/// recorded with the per-link-class traffic split.
+fn hier_mode_json(g: &Csr, roots: &[VertexId], mode: &str) -> Json {
+    let mut session =
+        TraversalPlan::build(g, hier_mode_config(mode)).expect("valid protocol plan").session();
+    let m = session.run_batch_metrics_only(roots).expect("protocol roots in range");
+    Json::obj(vec![
+        ("levels", Json::u(m.depth() as u64)),
+        ("sync_rounds", Json::u(m.sync_rounds)),
+        ("messages", Json::u(m.messages())),
+        ("bytes", Json::u(m.bytes())),
+        ("intra_messages", Json::u(m.intra_messages())),
+        ("intra_bytes", Json::u(m.intra_bytes())),
+        ("inter_messages", Json::u(m.inter_messages())),
+        ("inter_bytes", Json::u(m.inter_bytes())),
+        ("reached_pairs", Json::u(m.reached_pairs)),
+        ("sim_seconds", Json::n(m.sim_seconds())),
+    ])
+}
+
+/// The per-class message split of a bare schedule — the graph-free half
+/// of the hierarchical evidence.
+fn static_schedule_json(s: &Schedule, cv: &ClassVolume) -> Json {
+    Json::obj(vec![
+        ("rounds", Json::u(s.depth() as u64)),
+        ("messages", Json::u(s.total_messages())),
+        ("intra_messages", Json::u(cv.intra_messages)),
+        ("inter_messages", Json::u(cv.inter_messages)),
+    ])
+}
+
+/// The hierarchical section: flat 1D, 2D fold/expand, and the
+/// grid-of-islands composition, all at p = 64 under the same
+/// `dgx2-cluster` pricing. [`check_engine_bench`]'s acceptance pass
+/// requires the hierarchical mode to finish the batch strictly faster
+/// than both flat layouts while moving strictly fewer inter-island
+/// bytes than flat 1D — the committed trajectory of the tentpole claim.
+fn hierarchical_json(g: &Csr) -> Json {
+    let (islands, per_island) = PROTOCOL_HIER_GRID;
+    let roots = sample_batch_roots(g, PROTOCOL_BATCH_WIDTH, PROTOCOL_ROOT_SEED);
+    let modes: Vec<(&str, Json)> =
+        ["1d", "2d", "hier"].iter().map(|m| (*m, hier_mode_json(g, &roots, m))).collect();
+    let sim = |j: &Json| {
+        j.get("sim_seconds").and_then(Json::as_f64).expect("mode entries carry sim_seconds")
+    };
+    let (s1, s2, sh) = (sim(&modes[0].1), sim(&modes[1].1), sim(&modes[2].1));
+    let topo = TopologyModel::dgx2_cluster(per_island);
+    let n = PROTOCOL_HIER_NODES as u32;
+    let flat = Butterfly::new(PROTOCOL_FANOUT).schedule(n);
+    let hier = GridOfIslands::new(islands, per_island, PROTOCOL_FANOUT).schedule(n);
+    let flat_cv = class_volume(&flat, &topo);
+    let hier_cv = class_volume(&hier, &topo);
+    Json::obj(vec![
+        ("nodes", Json::u(PROTOCOL_HIER_NODES as u64)),
+        ("islands", Json::s(format!("{islands}x{per_island}"))),
+        ("fanout", Json::u(PROTOCOL_FANOUT as u64)),
+        ("width", Json::u(PROTOCOL_BATCH_WIDTH as u64)),
+        ("seed", Json::u(PROTOCOL_ROOT_SEED)),
+        ("net", Json::s(topo.name)),
+        ("speed_ratio", Json::n(topo.speed_ratio())),
+        ("direction", Json::s("topdown")),
+        ("modes", Json::obj(modes)),
+        ("speedup_vs_1d", Json::n(s1 / sh)),
+        ("speedup_vs_2d", Json::n(s2 / sh)),
+        (
+            "static_schedule",
+            Json::obj(vec![
+                ("flat_1d", static_schedule_json(&flat, &flat_cv)),
+                ("hier", static_schedule_json(&hier, &hier_cv)),
+            ]),
+        ),
     ])
 }
 
@@ -585,6 +716,7 @@ pub fn engine_bench_report() -> Json {
         ("width_ablation", width_ablation_json(&g)),
         ("serve_throughput", serve_throughput_json(&g)),
         ("storage", storage_json()),
+        ("hierarchical", hierarchical_json(&g)),
     ])
 }
 
@@ -918,10 +1050,57 @@ fn acceptance(report: &Json) -> Result<(), String> {
     if u64_field(at(counters, &["warm_start", "after_materialize"])?, "edges")? == 0 {
         return Err("storage: warm materialize never decoded adjacency".to_string());
     }
+    let twod_at_load = at(counters, &["two_d_cold", "at_load"])?;
+    if u64_field(twod_at_load, "edges")? != edges
+        || u64_field(twod_at_load, "blocks")? != u64_field(at(counters, &["eager"])?, "blocks")?
+    {
+        return Err(
+            "storage: 2d cold build must stream each block exactly once".to_string()
+        );
+    }
     for key in ["warm_equals_cold", "matches_in_memory"] {
         if storage.get(key).and_then(Json::as_bool) != Some(true) {
             return Err(format!("storage: {key} must be true"));
         }
+    }
+    // Hierarchical invariants: under the shared dgx2-cluster pricing the
+    // grid-of-islands layout must strictly beat both flat layouts on the
+    // simulated clock, move strictly fewer inter-island bytes than flat
+    // 1D, and — the free correctness cross-check — reach exactly the
+    // same (root, vertex) pairs as both.
+    let hier = report.get("hierarchical").ok_or("missing hierarchical")?;
+    let modes = hier.get("modes").ok_or("hierarchical: missing modes")?;
+    let mode_of = |name: &str| -> Result<&Json, String> {
+        modes.get(name).ok_or_else(|| format!("hierarchical: missing mode {name}"))
+    };
+    let (m1, m2, mh) = (mode_of("1d")?, mode_of("2d")?, mode_of("hier")?);
+    let pairs = u64_field(mh, "reached_pairs")?;
+    if u64_field(m1, "reached_pairs")? != pairs || u64_field(m2, "reached_pairs")? != pairs {
+        return Err("hierarchical: modes reached different pair counts".to_string());
+    }
+    let (s1, s2, sh) = (
+        f64_field(m1, "sim_seconds")?,
+        f64_field(m2, "sim_seconds")?,
+        f64_field(mh, "sim_seconds")?,
+    );
+    if sh >= s1 {
+        return Err(format!(
+            "hierarchical: sim {sh:.6}s not strictly below flat 1d's {s1:.6}s"
+        ));
+    }
+    if sh >= s2 {
+        return Err(format!(
+            "hierarchical: sim {sh:.6}s not strictly below 2d's {s2:.6}s"
+        ));
+    }
+    let (ib1, ibh) = (u64_field(m1, "inter_bytes")?, u64_field(mh, "inter_bytes")?);
+    if ibh >= ib1 {
+        return Err(format!(
+            "hierarchical: {ibh} inter-island bytes, not fewer than flat 1d's {ib1}"
+        ));
+    }
+    if u64_field(mh, "inter_messages")? == 0 || u64_field(mh, "intra_messages")? == 0 {
+        return Err("hierarchical: hier mode must use both link classes".to_string());
     }
     Ok(())
 }
@@ -1023,6 +1202,7 @@ mod tests {
             vec!["cold_build", "after_materialize"],
             vec!["warm_start", "at_load"],
             vec!["warm_start", "after_materialize"],
+            vec!["two_d_cold", "at_load"],
         ] {
             let mut cur = counters;
             for key in &path {
@@ -1031,6 +1211,21 @@ mod tests {
             for key in ["degree_entries", "edges", "blocks"] {
                 assert!(cur.get(key).and_then(Json::as_u64).is_some(), "{path:?}.{key}");
             }
+        }
+        // Hierarchical schema: all three modes with per-class splits
+        // that tile the totals, plus the static schedule subtree.
+        let hier = a.get("hierarchical").unwrap();
+        assert_eq!(hier.get("islands").unwrap().as_str(), Some("8x8"));
+        for mode in ["1d", "2d", "hier"] {
+            let m = hier.get("modes").unwrap().get(mode).unwrap();
+            let get = |k: &str| m.get(k).and_then(Json::as_u64).unwrap();
+            assert_eq!(get("messages"), get("intra_messages") + get("inter_messages"), "{mode}");
+            assert_eq!(get("bytes"), get("intra_bytes") + get("inter_bytes"), "{mode}");
+        }
+        for sched in ["flat_1d", "hier"] {
+            let s = hier.get("static_schedule").unwrap().get(sched).unwrap();
+            let get = |k: &str| s.get(k).and_then(Json::as_u64).unwrap();
+            assert_eq!(get("messages"), get("intra_messages") + get("inter_messages"), "{sched}");
         }
         // Relabeling stores a 4-bytes/vertex permutation (plus alignment
         // padding); the gap encoding must not degrade beyond that.

@@ -3,14 +3,19 @@
 //! Subcommands:
 //! * `run`       — traverse a graph with the distributed BFS engine
 //!                 (simulated multi-node, DGX-2 timing model); `--mode 1d`
-//!                 (butterfly/all-to-all) or `--mode 2d --grid RxC`
-//!                 (checkerboard fold/expand).
+//!                 (butterfly/all-to-all), `--mode 2d --grid RxC`
+//!                 (checkerboard fold/expand), or `--mode hier
+//!                 --islands AxB` (butterfly inside islands + a
+//!                 representative exchange across them, priced per link
+//!                 class under `--net dgx2-cluster`).
 //! * `batch`     — batched multi-source BFS: up to 512 roots through one
 //!                 exchange per level (`run_batch`, const-generic wide
 //!                 lane masks), in either mode.
 //! * `baseline`  — run the single-node CPU baselines (top-down /
 //!                 direction-optimizing), the paper's GapBS comparators.
-//! * `generate`  — generate a suite graph and write it to disk.
+//! * `generate`  — generate a suite graph and write it to disk (a
+//!                 `.bbfs` destination gets the compressed v2 store by
+//!                 default; `--v1` keeps the legacy raw snapshot).
 //! * `inspect`   — print graph properties (|V|, |E|, degrees, diameter).
 //! * `schedule`  — print a butterfly/all-to-all schedule and its costs.
 //! * `serve`     — long-running TCP query service with cross-request
@@ -32,7 +37,7 @@ use butterfly_bfs::graph::gen::{table1_suite, GraphSpec};
 use butterfly_bfs::graph::store::{self, GraphStore, StoreWriteOptions};
 use butterfly_bfs::graph::{io, props};
 use butterfly_bfs::harness::table::{count, f2, ms, Table};
-use butterfly_bfs::net::model::NetModel;
+use butterfly_bfs::net::model::{NetModel, TopologyModel};
 use butterfly_bfs::net::sim::simulate_uniform;
 use butterfly_bfs::util::cli::{parse_pair, Args, CliError};
 use butterfly_bfs::util::stats::gteps;
@@ -246,14 +251,15 @@ fn cmd_run(argv: Vec<String>) -> Result<()> {
         .opt("plan-cache", "", "plan cache path: warm-start when valid, written after cold build")
         .flag("mmap", "map a v2 store with mmap(2) instead of pread")
         .opt("nodes", "16", "number of simulated compute nodes")
-        .opt("mode", "1d", "partition mode: 1d (butterfly/all-to-all) | 2d (fold/expand)")
+        .opt("mode", "1d", "partition mode: 1d (butterfly) | 2d (fold/expand) | hier (islands)")
         .opt("grid", "auto", "2d processor grid RxC (rows*cols must equal --nodes) or auto")
+        .opt("islands", "auto", "hier island grid AxB (islands x nodes-per-island) or auto")
         .opt("fanout", "4", "butterfly fanout (1 = classic butterfly)")
         .opt("pattern", "butterfly", "butterfly | alltoall | iterative (1d mode)")
         .opt("payload", "auto", "payload encoding: queue | bitmap | auto | maskdelta")
         .opt("root", "0", "BFS root vertex")
         .opt("scale-delta", "0", "suite graph scale adjustment (+/- log2)")
-        .opt("net", "dgx2", "interconnect: dgx2 | dgx-a100 | pcie3 | dyn-alloc")
+        .opt("net", "dgx2", "interconnect: dgx2 | dgx-a100 | pcie3 | dyn-alloc | dgx2-cluster")
         .opt("direction", "topdown", "phase-1 direction: topdown | bottomup | diropt")
         .flag("no-lrb", "disable LRB load balancing")
         .flag("parallel", "run Phase 1 on threads")
@@ -269,9 +275,9 @@ fn cmd_run(argv: Vec<String>) -> Result<()> {
         p => bail!("unknown pattern {p:?}"),
     };
     let payload = parse_payload(&a.get("payload"))?;
-    let net = net_by_name(&a.get("net"))?;
     let direction = parse_direction(&a.get("direction"))?;
-    let partition = parse_partition_mode(&a.get("mode"), &a.get("grid"), nodes)?;
+    let partition = parse_partition_mode(&a.get("mode"), &a.get("grid"), &a.get("islands"), nodes)?;
+    let (net, topology) = resolve_net(&a.get("net"), partition, nodes)?;
     let cfg = EngineConfig {
         num_nodes: nodes,
         partition,
@@ -282,6 +288,7 @@ fn cmd_run(argv: Vec<String>) -> Result<()> {
         parallel_phase1: a.get_flag("parallel"),
         parallel_phase2: a.get_flag("parallel-sync"),
         net,
+        topology,
         ..EngineConfig::dgx2(nodes, 1)
     };
     // Invalid layouts (grid too large for the graph, more nodes than
@@ -318,6 +325,7 @@ fn cmd_run(argv: Vec<String>) -> Result<()> {
         match partition {
             PartitionMode::OneD => plan.config().pattern.name(),
             PartitionMode::TwoD { .. } => "fold-expand".to_string(),
+            PartitionMode::Hierarchical { .. } => "grid-of-islands".to_string(),
         }
     );
     println!(
@@ -358,15 +366,29 @@ fn cmd_run(argv: Vec<String>) -> Result<()> {
             count(m.expand_bytes())
         );
     }
+    if let PartitionMode::Hierarchical { islands, per_island } = partition {
+        println!(
+            "  islands {islands}x{per_island} | intra: {} messages, {} bytes | inter: {} messages, {} bytes",
+            count(m.intra_messages()),
+            count(m.intra_bytes()),
+            count(m.inter_messages()),
+            count(m.inter_bytes())
+        );
+    }
     Ok(())
 }
 
-/// Resolve `--mode` / `--grid` into a [`PartitionMode`]. `--grid auto`
-/// picks the most-square factorization of `nodes`. Whether the layout
-/// fits the graph (grid covers `--nodes`, axes fit the vertex count) is
-/// validated by [`TraversalPlan::build`], whose typed `PlanError`s print
-/// as CLI errors.
-fn parse_partition_mode(mode: &str, grid: &str, nodes: usize) -> Result<PartitionMode> {
+/// Resolve `--mode` / `--grid` / `--islands` into a [`PartitionMode`].
+/// `--grid auto` and `--islands auto` pick the most-square factorization
+/// of `nodes`. Whether the layout fits the graph (grid covers `--nodes`,
+/// axes fit the vertex count) is validated by [`TraversalPlan::build`],
+/// whose typed `PlanError`s print as CLI errors.
+fn parse_partition_mode(
+    mode: &str,
+    grid: &str,
+    islands: &str,
+    nodes: usize,
+) -> Result<PartitionMode> {
     Ok(match mode {
         "1d" => PartitionMode::OneD,
         "2d" => {
@@ -380,8 +402,40 @@ fn parse_partition_mode(mode: &str, grid: &str, nodes: usize) -> Result<Partitio
             };
             PartitionMode::TwoD { rows, cols }
         }
-        m => bail!("unknown mode {m:?} (1d | 2d)"),
+        "hier" => {
+            let (islands, per_island) = if islands == "auto" {
+                Partition2D::near_square_grid(nodes as u32)
+            } else {
+                let Some(ab) = parse_pair(islands, 'x') else {
+                    bail!("--islands must be AxB (e.g. 8x8) or auto, got {islands:?}");
+                };
+                ab
+            };
+            PartitionMode::Hierarchical { islands, per_island }
+        }
+        m => bail!("unknown mode {m:?} (1d | 2d | hier)"),
     })
+}
+
+/// Resolve `--net` into the flat [`NetModel`] plus, for `dgx2-cluster`,
+/// the two-class [`TopologyModel`] (NVLink-class links inside an island,
+/// a shared ~10x-slower uplink between islands). Flat modes derive the
+/// island size from the same near-square factorization `--islands auto`
+/// would pick, so `1d`/`2d`/`hier` runs at equal `--nodes` are priced
+/// under an identical physical cluster and stay comparable.
+fn resolve_net(
+    name: &str,
+    partition: PartitionMode,
+    nodes: usize,
+) -> Result<(NetModel, Option<TopologyModel>)> {
+    if name == "dgx2-cluster" {
+        let per_island = match partition {
+            PartitionMode::Hierarchical { per_island, .. } => per_island,
+            _ => Partition2D::near_square_grid(nodes as u32).1,
+        };
+        return Ok((NetModel::dgx2(), Some(TopologyModel::dgx2_cluster(per_island))));
+    }
+    Ok((net_by_name(name)?, None))
 }
 
 fn net_by_name(name: &str) -> Result<NetModel> {
@@ -425,12 +479,14 @@ fn cmd_batch(argv: Vec<String>) -> Result<()> {
         .opt("plan-cache", "", "plan cache path: warm-start when valid, written after cold build")
         .flag("mmap", "map a v2 store with mmap(2) instead of pread")
         .opt("nodes", "16", "number of simulated compute nodes")
-        .opt("mode", "1d", "partition mode: 1d (butterfly) | 2d (fold/expand)")
+        .opt("mode", "1d", "partition mode: 1d (butterfly) | 2d (fold/expand) | hier (islands)")
         .opt("grid", "auto", "2d processor grid RxC or auto")
+        .opt("islands", "auto", "hier island grid AxB (islands x nodes-per-island) or auto")
         .opt("fanout", "4", "butterfly fanout (1 = classic butterfly)")
         .opt("width", "64", "batch width (1..=512 random non-isolated roots)")
         .opt("seed", "7", "root sampling seed")
         .opt("scale-delta", "0", "suite graph scale adjustment (+/- log2)")
+        .opt("net", "dgx2", "interconnect: dgx2 | dgx-a100 | pcie3 | dyn-alloc | dgx2-cluster")
         .opt("direction", "topdown", "phase-1 direction: topdown | bottomup | diropt")
         .flag("parallel", "step nodes on the thread pool")
         .flag("parallel-sync", "run the Phase-2 merges on threads")
@@ -443,7 +499,8 @@ fn cmd_batch(argv: Vec<String>) -> Result<()> {
     let Some(batch_width) = BatchWidth::for_lanes(width) else {
         bail!("--width must be in 1..=512 (got {width})");
     };
-    let partition = parse_partition_mode(&a.get("mode"), &a.get("grid"), nodes)?;
+    let partition = parse_partition_mode(&a.get("mode"), &a.get("grid"), &a.get("islands"), nodes)?;
+    let (net, topology) = resolve_net(&a.get("net"), partition, nodes)?;
     let direction = parse_direction(&a.get("direction"))?;
     let cfg = EngineConfig {
         partition,
@@ -451,6 +508,8 @@ fn cmd_batch(argv: Vec<String>) -> Result<()> {
         batch_width,
         parallel_phase1: a.get_flag("parallel"),
         parallel_phase2: a.get_flag("parallel-sync"),
+        net,
+        topology,
         ..EngineConfig::dgx2(nodes, fanout)
     };
     let src = build_plan(&a, cfg)?;
@@ -505,6 +564,15 @@ fn cmd_batch(argv: Vec<String>) -> Result<()> {
         bm.lanes_per_exchange(),
         bm.entry_bytes()
     );
+    if let PartitionMode::Hierarchical { islands, per_island } = partition {
+        println!(
+            "islands {islands}x{per_island} | intra: {} messages, {} bytes | inter: {} messages, {} bytes",
+            count(bm.intra_messages()),
+            count(bm.intra_bytes()),
+            count(bm.inter_messages()),
+            count(bm.inter_bytes())
+        );
+    }
     println!(
         "phase 1: {} edges inspected; direction {}: {}/{} levels bottom-up ({} edges)",
         count(bm.edges_examined()),
@@ -546,10 +614,12 @@ fn cmd_serve(argv: Vec<String>) -> Result<()> {
         .flag("mmap", "map a v2 store with mmap(2) instead of pread")
         .opt("addr", "127.0.0.1:0", "bind address (port 0 = ephemeral, printed on start)")
         .opt("nodes", "16", "number of simulated compute nodes")
-        .opt("mode", "1d", "partition mode: 1d (butterfly) | 2d (fold/expand)")
+        .opt("mode", "1d", "partition mode: 1d (butterfly) | 2d (fold/expand) | hier (islands)")
         .opt("grid", "auto", "2d processor grid RxC or auto")
+        .opt("islands", "auto", "hier island grid AxB (islands x nodes-per-island) or auto")
         .opt("fanout", "4", "butterfly fanout (1 = classic butterfly)")
         .opt("scale-delta", "0", "suite graph scale adjustment (+/- log2)")
+        .opt("net", "dgx2", "interconnect: dgx2 | dgx-a100 | pcie3 | dyn-alloc | dgx2-cluster")
         .opt("direction", "topdown", "phase-1 direction: topdown | bottomup | diropt")
         .opt("workers", "2", "worker threads executing coalesced batches")
         .opt("coalesce-window-us", "200", "how long a lone request waits for co-travellers")
@@ -566,10 +636,14 @@ fn cmd_serve(argv: Vec<String>) -> Result<()> {
         bail!("--max-batch must be in 1..=512 (got {max_batch})");
     };
     let nodes = a.get_usize("nodes")?;
+    let partition = parse_partition_mode(&a.get("mode"), &a.get("grid"), &a.get("islands"), nodes)?;
+    let (net, topology) = resolve_net(&a.get("net"), partition, nodes)?;
     let cfg = EngineConfig {
-        partition: parse_partition_mode(&a.get("mode"), &a.get("grid"), nodes)?,
+        partition,
         direction: parse_direction(&a.get("direction"))?,
         batch_width,
+        net,
+        topology,
         ..EngineConfig::dgx2(nodes, a.get_parse("fanout")?)
     };
     let src = build_plan(&a, cfg)?;
@@ -680,23 +754,42 @@ fn cmd_convert(argv: Vec<String>) -> Result<()> {
     Ok(())
 }
 
+/// Generate a suite graph to disk. A `.bbfs` destination gets the
+/// compressed v2 store (the format every other subcommand prefers:
+/// lazy slabs, `--plan-cache`, mmap) unless `--v1` asks for the legacy
+/// raw-CSR snapshot; any other extension gets a text edge list.
 fn cmd_generate(argv: Vec<String>) -> Result<()> {
     let spec = Args::new("butterfly-bfs generate", "generate a suite graph")
         .req("graph", "suite graph name")
-        .req("out", "output path (.bbfs binary or .txt edge list)")
-        .opt("scale-delta", "0", "scale adjustment");
+        .req("out", "output path (.bbfs store or .txt edge list)")
+        .opt("scale-delta", "0", "scale adjustment")
+        .opt("block-size", "1024", "vertices per compressed block (.bbfs v2)")
+        .flag("relabel", "degree-sort relabel before encoding (stores the permutation)")
+        .flag("v1", "write the legacy uncompressed v1 snapshot instead of the v2 store");
     let a = handle_help(spec.clone().parse(argv), &spec)?;
     let g = load_graph(&a.get("graph"), a.get_parse::<i32>("scale-delta")?)?;
     let out = a.get("out");
     let p = Path::new(&out);
-    if out.ends_with(".bbfs") {
-        io::write_binary(&g, p)?;
+    let kind = if out.ends_with(".bbfs") {
+        if a.get_flag("v1") {
+            io::write_binary(&g, p)?;
+            "v1 snapshot"
+        } else {
+            let opts = StoreWriteOptions {
+                relabel: a.get_flag("relabel"),
+                block_size: a.get_parse::<u32>("block-size")?,
+            };
+            store::write_store(&g, p, opts)?;
+            "v2 store"
+        }
     } else {
         io::write_edge_list(&g, p)?;
-    }
+        "edge list"
+    };
     println!(
-        "wrote {} (|V|={}, |E|={})",
+        "wrote {} ({}, |V|={}, |E|={})",
         out,
+        kind,
         count(g.num_vertices() as u64),
         count(g.num_edges())
     );

@@ -4,5 +4,5 @@
 pub mod model;
 pub mod sim;
 
-pub use model::{DeviceModel, Fabric, NetModel};
-pub use sim::{simulate_schedule, simulate_uniform, CommTiming};
+pub use model::{DeviceModel, Fabric, NetModel, TopologyModel};
+pub use sim::{simulate_schedule, simulate_topology, simulate_uniform, CommTiming};

@@ -93,6 +93,101 @@ impl NetModel {
     pub fn node_bandwidth(&self) -> f64 {
         self.link_bandwidth * self.ports_per_node as f64
     }
+
+    /// The slow inter-island uplink of a clustered topology: each island
+    /// fronts the cluster network with 2 × 2.5 GB/s links at 20 µs — a
+    /// 10:1 per-link speed ratio against [`NetModel::dgx2`], the regime
+    /// the hierarchical experiments run under.
+    pub fn island_uplink() -> Self {
+        Self {
+            name: "island-uplink",
+            fabric: Fabric::Switched,
+            link_bandwidth: 2.5e9,
+            ports_per_node: 2,
+            latency: 20.0e-6,
+            alloc_overhead: 0.0,
+        }
+    }
+}
+
+/// A two-class interconnect topology: islands of `per_island` consecutive
+/// ranks whose members talk over the fast `intra` model, stitched
+/// together by the slow `inter` model.
+///
+/// The class of a transfer is structural — `src` and `dst` in the same
+/// island (`rank / per_island`) makes it intra, otherwise inter. The two
+/// classes differ not only in link parameters but in *contention
+/// granularity*: intra transfers contend per **rank** (every GPU owns its
+/// NVLink ports), while inter transfers contend per **island** (all of an
+/// island's cross-boundary traffic funnels through the island's shared
+/// uplink NIC — the physical reason flat schedules collapse on clusters).
+/// [`simulate_topology`](crate::net::sim::simulate_topology) prices both
+/// classes per round and takes the max.
+///
+/// A [`uniform`](TopologyModel::uniform) topology puts every rank in one
+/// island, reproducing the flat single-[`NetModel`] behavior exactly.
+#[derive(Clone, Copy, Debug)]
+pub struct TopologyModel {
+    /// Human-readable preset name (bench tables, CLI `--net`).
+    pub name: &'static str,
+    /// Consecutive ranks per island; island of rank `r` is
+    /// `r / per_island`.
+    pub per_island: u32,
+    /// Link model within an island (per-rank contention).
+    pub intra: NetModel,
+    /// Link model across islands (per-island uplink contention).
+    pub inter: NetModel,
+}
+
+impl TopologyModel {
+    /// A flat topology: one island spans every rank, so all transfers are
+    /// intra and priced exactly like `net` alone.
+    pub fn uniform(net: NetModel) -> Self {
+        Self { name: net.name, per_island: u32::MAX, intra: net, inter: net }
+    }
+
+    /// A cluster of DGX-2-style islands: NVSwitch inside
+    /// ([`NetModel::dgx2`]), 10:1-slower shared uplinks between
+    /// ([`NetModel::island_uplink`]).
+    pub fn dgx2_cluster(per_island: u32) -> Self {
+        Self {
+            name: "dgx2-cluster",
+            per_island: per_island.max(1),
+            intra: NetModel::dgx2(),
+            inter: NetModel::island_uplink(),
+        }
+    }
+
+    /// A uniform topology that still *classifies* transfers by island —
+    /// both classes priced with `net`, but per-class counters reported.
+    /// This is what a hierarchical run under a flat `--net` uses, so the
+    /// intra/inter accounting stays meaningful.
+    pub fn classified(net: NetModel, per_island: u32) -> Self {
+        Self { name: net.name, per_island: per_island.max(1), intra: net, inter: net }
+    }
+
+    /// Island index of a rank.
+    #[inline]
+    pub fn island_of(&self, rank: u32) -> u32 {
+        rank / self.per_island
+    }
+
+    /// Whether a transfer stays within one island.
+    #[inline]
+    pub fn is_intra(&self, src: u32, dst: u32) -> bool {
+        self.island_of(src) == self.island_of(dst)
+    }
+
+    /// Number of islands covering `num_nodes` ranks.
+    pub fn num_islands(&self, num_nodes: u32) -> usize {
+        (num_nodes as u64).div_ceil(u64::from(self.per_island)) as usize
+    }
+
+    /// Per-link intra:inter bandwidth ratio (10.0 for
+    /// [`dgx2_cluster`](Self::dgx2_cluster)).
+    pub fn speed_ratio(&self) -> f64 {
+        self.intra.link_bandwidth / self.inter.link_bandwidth
+    }
 }
 
 /// Compute-side device model: prices Phase-1 traversal work into time, so
@@ -190,5 +285,30 @@ mod tests {
     fn dynamic_alloc_has_positive_overhead() {
         assert!(NetModel::dynamic_alloc_baseline().alloc_overhead > 0.0);
         assert_eq!(NetModel::dgx2().alloc_overhead, 0.0);
+    }
+
+    #[test]
+    fn dgx2_cluster_has_ten_to_one_ratio() {
+        let t = TopologyModel::dgx2_cluster(8);
+        assert_eq!(t.per_island, 8);
+        assert!((t.speed_ratio() - 10.0).abs() < 1e-12);
+        assert!(t.inter.latency > t.intra.latency);
+        assert!(t.inter.ports_per_node < t.intra.ports_per_node);
+    }
+
+    #[test]
+    fn topology_classification() {
+        let t = TopologyModel::dgx2_cluster(8);
+        assert!(t.is_intra(0, 7));
+        assert!(!t.is_intra(7, 8));
+        assert_eq!(t.island_of(63), 7);
+        assert_eq!(t.num_islands(64), 8);
+        assert_eq!(t.num_islands(60), 8); // ragged last island
+        let u = TopologyModel::uniform(NetModel::dgx2());
+        assert!(u.is_intra(0, 1_000_000));
+        assert_eq!(u.num_islands(64), 1);
+        let c = TopologyModel::classified(NetModel::dgx2(), 4);
+        assert!(!c.is_intra(3, 4));
+        assert!((c.speed_ratio() - 1.0).abs() < 1e-12);
     }
 }

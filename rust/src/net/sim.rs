@@ -1,5 +1,5 @@
 //! Interconnect timing simulator: prices a [`Schedule`]'s rounds into
-//! seconds under a [`NetModel`].
+//! seconds under a [`NetModel`] or a two-class [`TopologyModel`].
 //!
 //! Round time under the **switched** fabric = the slowest node's
 //! serialization: a node sending `k` messages over `p` ports pays
@@ -11,11 +11,21 @@
 //!
 //! Under the **shared bus**, everything in the round serializes:
 //! `latency·max_msgs_per_node + total_round_bytes / link_bw`.
+//!
+//! [`simulate_topology`] generalizes this to a clustered fabric: each
+//! transfer is classed intra- or inter-island, the intra class is priced
+//! per *rank* and the inter class per *island* (an island's cross-boundary
+//! traffic shares its uplink NIC), and the round takes the max of the two
+//! class times. A [`TopologyModel::uniform`] topology reproduces the flat
+//! pricing bit-for-bit.
 
-use super::model::{Fabric, NetModel};
+use super::model::{Fabric, NetModel, TopologyModel};
 use crate::comm::pattern::Schedule;
 
-/// Timing breakdown of a simulated synchronization.
+/// Timing breakdown of a simulated synchronization, with per-link-class
+/// accounting: `intra_*`/`inter_*` split `total_*` by whether each
+/// transfer stayed inside an island (under a flat [`NetModel`] everything
+/// counts as intra).
 #[derive(Clone, Debug, Default, PartialEq)]
 pub struct CommTiming {
     /// Per-round times in seconds.
@@ -24,6 +34,14 @@ pub struct CommTiming {
     pub total_bytes: u64,
     /// Total messages.
     pub total_messages: u64,
+    /// Bytes that stayed on intra-island links.
+    pub intra_bytes: u64,
+    /// Messages that stayed on intra-island links.
+    pub intra_messages: u64,
+    /// Bytes that crossed the slow island boundary.
+    pub inter_bytes: u64,
+    /// Messages that crossed the slow island boundary.
+    pub inter_messages: u64,
 }
 
 impl CommTiming {
@@ -33,70 +51,115 @@ impl CommTiming {
     }
 }
 
-/// Price `schedule` with per-transfer payload sizes supplied by
-/// `payload_bytes(round, transfer_index)` (the engine passes real measured
-/// queue/bitmap sizes; analyses pass a constant).
-pub fn simulate_schedule<F>(s: &Schedule, net: &NetModel, mut payload_bytes: F) -> CommTiming
+/// One class's transfers within a round, in endpoint id space (ranks for
+/// the intra class, islands for the inter class).
+type ClassTransfer = (usize, usize, u64);
+
+/// Price one round of one link class: the flat per-endpoint contention
+/// formula over `num_endpoints` endpoints. Returns 0 for an empty class.
+fn price_round(num_endpoints: usize, transfers: &[ClassTransfer], net: &NetModel) -> f64 {
+    let mut send_bytes = vec![0u64; num_endpoints];
+    let mut recv_bytes = vec![0u64; num_endpoints];
+    let mut send_msgs = vec![0u32; num_endpoints];
+    let mut recv_msgs = vec![0u32; num_endpoints];
+    let mut max_payload = vec![0u64; num_endpoints];
+    let mut round_bytes = 0u64;
+    for &(src, dst, bytes) in transfers {
+        send_bytes[src] += bytes;
+        recv_bytes[dst] += bytes;
+        send_msgs[src] += 1;
+        recv_msgs[dst] += 1;
+        max_payload[src] = max_payload[src].max(bytes);
+        max_payload[dst] = max_payload[dst].max(bytes);
+        round_bytes += bytes;
+    }
+    let ports = net.ports_per_node as f64;
+    match net.fabric {
+        Fabric::Switched => (0..num_endpoints)
+            .map(|g| {
+                let setup_send = net.latency * (send_msgs[g] as f64 / ports).ceil();
+                let setup_recv = net.latency * (recv_msgs[g] as f64 / ports).ceil();
+                let alloc = net.alloc_overhead * recv_msgs[g] as f64;
+                // Messages are discrete: a node with k messages over p
+                // links needs ceil(k/p) serialized slots per link (the
+                // Fig 1(f) makespan), lower-bounded by the aggregate
+                // bandwidth limit.
+                let makespan = |msgs: u32, bytes: u64| -> f64 {
+                    let slots = (msgs as f64 / ports).ceil();
+                    (bytes as f64 / net.node_bandwidth())
+                        .max(slots * max_payload[g] as f64 / net.link_bandwidth)
+                };
+                let wire_send = makespan(send_msgs[g], send_bytes[g]);
+                let wire_recv = makespan(recv_msgs[g], recv_bytes[g]);
+                (setup_send + wire_send).max(setup_recv + wire_recv) + alloc
+            })
+            .fold(0.0, f64::max),
+        Fabric::SharedBus => {
+            if transfers.is_empty() {
+                return 0.0;
+            }
+            let max_msgs = send_msgs.iter().copied().max().unwrap_or(0) as f64;
+            let alloc: f64 =
+                recv_msgs.iter().map(|&m| net.alloc_overhead * m as f64).sum();
+            net.latency * max_msgs + round_bytes as f64 / net.link_bandwidth + alloc
+        }
+    }
+}
+
+/// Price `schedule` under a two-class topology, with per-transfer payload
+/// sizes supplied by `payload_bytes(round, transfer_index)`.
+///
+/// Per round, intra transfers contend per rank under `topo.intra`, inter
+/// transfers are re-addressed to their island endpoints and contend per
+/// island under `topo.inter`; the round costs the max of the two class
+/// times (the classes use disjoint physical links and overlap). Per-class
+/// byte/message totals land in the returned [`CommTiming`].
+pub fn simulate_topology<F>(s: &Schedule, topo: &TopologyModel, mut payload_bytes: F) -> CommTiming
 where
     F: FnMut(usize, usize) -> u64,
 {
+    let num_islands = topo.num_islands(s.num_nodes);
     let mut timing = CommTiming::default();
+    let mut intra: Vec<ClassTransfer> = Vec::new();
+    let mut inter: Vec<ClassTransfer> = Vec::new();
     for (ri, round) in s.rounds.iter().enumerate() {
-        let mut send_bytes = vec![0u64; s.num_nodes as usize];
-        let mut recv_bytes = vec![0u64; s.num_nodes as usize];
-        let mut send_msgs = vec![0u32; s.num_nodes as usize];
-        let mut recv_msgs = vec![0u32; s.num_nodes as usize];
-        let mut max_payload = vec![0u64; s.num_nodes as usize];
-        let mut round_bytes = 0u64;
+        intra.clear();
+        inter.clear();
         for (ti, t) in round.iter().enumerate() {
             let bytes = payload_bytes(ri, ti);
-            send_bytes[t.src as usize] += bytes;
-            recv_bytes[t.dst as usize] += bytes;
-            send_msgs[t.src as usize] += 1;
-            recv_msgs[t.dst as usize] += 1;
-            max_payload[t.src as usize] = max_payload[t.src as usize].max(bytes);
-            max_payload[t.dst as usize] = max_payload[t.dst as usize].max(bytes);
-            round_bytes += bytes;
-        }
-        timing.total_bytes += round_bytes;
-        timing.total_messages += round.len() as u64;
-        let ports = net.ports_per_node as f64;
-        let t_round = match net.fabric {
-            Fabric::Switched => (0..s.num_nodes as usize)
-                .map(|g| {
-                    let setup_send =
-                        net.latency * (send_msgs[g] as f64 / ports).ceil();
-                    let setup_recv =
-                        net.latency * (recv_msgs[g] as f64 / ports).ceil();
-                    let alloc = net.alloc_overhead * recv_msgs[g] as f64;
-                    // Messages are discrete: a node with k messages over p
-                    // links needs ceil(k/p) serialized slots per link (the
-                    // Fig 1(f) makespan), lower-bounded by the aggregate
-                    // bandwidth limit.
-                    let makespan = |msgs: u32, bytes: u64| -> f64 {
-                        let slots = (msgs as f64 / ports).ceil();
-                        (bytes as f64 / net.node_bandwidth())
-                            .max(slots * max_payload[g] as f64 / net.link_bandwidth)
-                    };
-                    let wire_send = makespan(send_msgs[g], send_bytes[g]);
-                    let wire_recv = makespan(recv_msgs[g], recv_bytes[g]);
-                    (setup_send + wire_send).max(setup_recv + wire_recv) + alloc
-                })
-                .fold(0.0, f64::max),
-            Fabric::SharedBus => {
-                let max_msgs = send_msgs.iter().copied().max().unwrap_or(0) as f64;
-                let alloc: f64 = recv_msgs
-                    .iter()
-                    .map(|&m| net.alloc_overhead * m as f64)
-                    .sum();
-                net.latency * max_msgs
-                    + round_bytes as f64 / net.link_bandwidth
-                    + alloc
+            timing.total_bytes += bytes;
+            if topo.is_intra(t.src, t.dst) {
+                timing.intra_bytes += bytes;
+                timing.intra_messages += 1;
+                intra.push((t.src as usize, t.dst as usize, bytes));
+            } else {
+                timing.inter_bytes += bytes;
+                timing.inter_messages += 1;
+                inter.push((
+                    topo.island_of(t.src) as usize,
+                    topo.island_of(t.dst) as usize,
+                    bytes,
+                ));
             }
-        };
-        timing.round_times.push(t_round);
+        }
+        timing.total_messages += round.len() as u64;
+        let t_intra = price_round(s.num_nodes as usize, &intra, &topo.intra);
+        let t_inter = price_round(num_islands, &inter, &topo.inter);
+        timing.round_times.push(t_intra.max(t_inter));
     }
     timing
+}
+
+/// Price `schedule` with per-transfer payload sizes supplied by
+/// `payload_bytes(round, transfer_index)` (the engine passes real measured
+/// queue/bitmap sizes; analyses pass a constant). Flat single-class
+/// pricing: equivalent to [`simulate_topology`] under
+/// [`TopologyModel::uniform`], so every byte counts as intra.
+pub fn simulate_schedule<F>(s: &Schedule, net: &NetModel, payload_bytes: F) -> CommTiming
+where
+    F: FnMut(usize, usize) -> u64,
+{
+    simulate_topology(s, &TopologyModel::uniform(*net), payload_bytes)
 }
 
 /// Price a schedule with a constant per-message payload (bitmap mode:
@@ -110,6 +173,8 @@ mod tests {
     use super::*;
     use crate::comm::alltoall::ConcurrentAllToAll;
     use crate::comm::butterfly::Butterfly;
+    use crate::comm::fold_expand::FoldExpand;
+    use crate::comm::hierarchical::GridOfIslands;
     use crate::comm::pattern::CommPattern;
     use crate::net::model::NetModel;
 
@@ -188,5 +253,94 @@ mod tests {
         assert_eq!(t.total_bytes, 96_000);
         assert_eq!(t.total_messages, 96);
         assert_eq!(t.round_times.len(), 2);
+        // Flat pricing classes everything intra.
+        assert_eq!(t.intra_bytes, 96_000);
+        assert_eq!(t.intra_messages, 96);
+        assert_eq!(t.inter_bytes, 0);
+        assert_eq!(t.inter_messages, 0);
+    }
+
+    #[test]
+    fn uniform_topology_identical_to_flat() {
+        let net = NetModel::dgx2();
+        for cn in [5u32, 9, 16] {
+            let s = Butterfly::new(2).schedule(cn);
+            let flat = simulate_schedule(&s, &net, |r, t| (r * 31 + t * 7 + 100) as u64);
+            let topo = simulate_topology(&s, &TopologyModel::uniform(net), |r, t| {
+                (r * 31 + t * 7 + 100) as u64
+            });
+            assert_eq!(flat, topo, "cn={cn}");
+            assert_eq!(flat.inter_messages, 0);
+        }
+    }
+
+    #[test]
+    fn per_class_split_sums_to_totals() {
+        let g = GridOfIslands::new(4, 4, 1);
+        let s = g.schedule(16);
+        let topo = TopologyModel::dgx2_cluster(4);
+        let t = simulate_topology(&s, &topo, |_, _| 1000);
+        assert_eq!(t.intra_bytes + t.inter_bytes, t.total_bytes);
+        assert_eq!(t.intra_messages + t.inter_messages, t.total_messages);
+        // From the schedule structure: 2 inter rounds of 4 rep messages.
+        assert_eq!(t.inter_messages, 8);
+        assert_eq!(t.inter_bytes, 8_000);
+    }
+
+    #[test]
+    fn inter_class_is_priced_slower() {
+        // Same message shape, different class: one cross-island transfer
+        // must cost more than one within-island transfer under 10:1.
+        let topo = TopologyModel::dgx2_cluster(8);
+        let s_intra = Schedule {
+            num_nodes: 16,
+            rounds: vec![vec![crate::comm::pattern::Transfer { src: 0, dst: 1 }]],
+        };
+        let s_inter = Schedule {
+            num_nodes: 16,
+            rounds: vec![vec![crate::comm::pattern::Transfer { src: 0, dst: 8 }]],
+        };
+        let t_intra = simulate_topology(&s_intra, &topo, |_, _| MB).total();
+        let t_inter = simulate_topology(&s_inter, &topo, |_, _| MB).total();
+        assert!(t_inter > t_intra * 5.0, "intra={t_intra} inter={t_inter}");
+    }
+
+    #[test]
+    fn island_uplink_contention_is_per_island() {
+        // 8 ranks of island 0 each send one message across the boundary:
+        // all 8 funnel through island 0's 2-port uplink (4 slots), so the
+        // round costs ~4× a single rep's message, not ~1×.
+        let topo = TopologyModel::dgx2_cluster(8);
+        let fan: Vec<_> = (0..8u32)
+            .map(|i| crate::comm::pattern::Transfer { src: i, dst: 8 + i })
+            .collect();
+        let s_fan = Schedule { num_nodes: 16, rounds: vec![fan] };
+        let one = Schedule {
+            num_nodes: 16,
+            rounds: vec![vec![crate::comm::pattern::Transfer { src: 0, dst: 8 }]],
+        };
+        let t_fan = simulate_topology(&s_fan, &topo, |_, _| MB).total();
+        let t_one = simulate_topology(&one, &topo, |_, _| MB).total();
+        assert!(t_fan > t_one * 3.0, "fan={t_fan} one={t_one}");
+    }
+
+    #[test]
+    fn hierarchical_beats_flat_at_p64_ten_to_one() {
+        // The ROADMAP acceptance shape: at p = 64 under the 10:1 cluster
+        // topology, grid-of-islands beats both the flat butterfly and the
+        // flat 2D fold/expand on simulated time (uniform payloads here;
+        // the engine-level version with real frontier payloads is the
+        // bench protocol's `hierarchical` section).
+        let topo = TopologyModel::dgx2_cluster(8);
+        let hier = GridOfIslands::new(8, 8, 4).schedule(64);
+        let flat1d = Butterfly::new(4).schedule(64);
+        let flat2d = FoldExpand::new(8, 8).schedule(64);
+        for payload in [4 * 1024u64, MB, 16 * MB] {
+            let t_h = simulate_topology(&hier, &topo, |_, _| payload).total();
+            let t_1 = simulate_topology(&flat1d, &topo, |_, _| payload).total();
+            let t_2 = simulate_topology(&flat2d, &topo, |_, _| payload).total();
+            assert!(t_h < t_1, "payload={payload}: hier={t_h} 1d={t_1}");
+            assert!(t_h < t_2, "payload={payload}: hier={t_h} 2d={t_2}");
+        }
     }
 }

@@ -1,0 +1,218 @@
+//! Hierarchical-mode equivalence suite: the grid-of-islands engine
+//! (butterfly inside each island, representative exchange across
+//! islands, final representative -> island broadcast) must produce
+//! distances bit-identical to the flat 1D butterfly, to the 2D
+//! fold/expand comparator, and to `bfs::serial` across the analog graph
+//! suite — single-root and wide batches up to 512 lanes, in all three
+//! direction modes, including the degenerate one-island and
+//! one-node-per-island grids. Vertex ownership stays 1D row slabs in
+//! every mode, so no layout is allowed to drift by even one distance.
+//! Schedule-validity property tests over islands × per_island ∈ 1..=8
+//! live next to the engine in `coordinator::session`.
+
+use butterfly_bfs::bfs::msbfs::ms_bfs;
+use butterfly_bfs::bfs::serial::{serial_bfs, INF};
+use butterfly_bfs::coordinator::{
+    BatchWidth, DirectionMode, EngineConfig, TraversalPlan,
+};
+use butterfly_bfs::graph::csr::{Csr, VertexId};
+use butterfly_bfs::graph::gen::structured::{grid2d, path, star};
+use butterfly_bfs::graph::gen::table1_suite;
+
+/// Island grids exercised everywhere below: square, skewed both ways,
+/// and the two degenerate shapes (one island / one node per island).
+const GRIDS: [(u32, u32); 6] = [(4, 4), (2, 8), (8, 2), (3, 3), (1, 4), (4, 1)];
+
+fn hier_session(
+    g: &Csr,
+    islands: u32,
+    per_island: u32,
+) -> butterfly_bfs::coordinator::QuerySession {
+    TraversalPlan::build(g, EngineConfig::dgx2_cluster_hier(islands, per_island, 4))
+        .unwrap()
+        .session()
+}
+
+/// Run the full four-way check on one graph/root: hierarchical (every
+/// island grid) == 1D butterfly == 2D fold/expand == serial, with the
+/// per-class accounting tiling the totals.
+fn check_equivalence(g: &Csr, root: VertexId, label: &str) {
+    let want = serial_bfs(g, root);
+    for (islands, per_island) in GRIDS {
+        let nodes = (islands * per_island) as usize;
+        if nodes > g.num_vertices() {
+            continue;
+        }
+        let mut flat = TraversalPlan::build(g, EngineConfig::dgx2(nodes, 4))
+            .unwrap()
+            .session();
+        let r1 = flat.run(root).unwrap();
+        let mut two_d = TraversalPlan::build(g, EngineConfig::dgx2_2d(islands, per_island))
+            .unwrap()
+            .session();
+        let r2 = two_d.run(root).unwrap();
+        let mut hier = hier_session(g, islands, per_island);
+        let rh = hier.run(root).unwrap();
+        hier.assert_agreement().unwrap();
+        assert_eq!(
+            rh.dist(),
+            &want[..],
+            "{label}: hier {islands}x{per_island} vs serial"
+        );
+        assert_eq!(
+            rh.dist(),
+            r1.dist(),
+            "{label}: hier {islands}x{per_island} vs 1D"
+        );
+        assert_eq!(
+            rh.dist(),
+            r2.dist(),
+            "{label}: hier {islands}x{per_island} vs 2D"
+        );
+        // Link-class accounting tiles the totals on every grid, and a
+        // true grid actually uses both classes.
+        let m = rh.metrics();
+        assert_eq!(m.intra_messages() + m.inter_messages(), m.messages());
+        assert_eq!(m.intra_bytes() + m.inter_bytes(), m.bytes());
+        if islands > 1 && per_island > 1 {
+            assert!(m.inter_messages() > 0, "{label}: {islands}x{per_island}");
+            assert!(m.intra_messages() > 0, "{label}: {islands}x{per_island}");
+        }
+    }
+}
+
+/// Every suite graph at tiny scale, across all island grids.
+#[test]
+fn suite_hier_equals_one_d_two_d_serial() {
+    for spec in table1_suite() {
+        let g = spec.generate_scaled(-7);
+        check_equivalence(&g, 0, spec.name);
+    }
+}
+
+/// Structured graphs from both end roots.
+#[test]
+fn structured_graphs_all_roots() {
+    for g in [path(40), star(50), grid2d(6, 8)] {
+        let last = (g.num_vertices() - 1) as VertexId;
+        check_equivalence(&g, 0, "structured");
+        check_equivalence(&g, last, "structured/last");
+    }
+}
+
+/// Disconnected graph: unreached vertices stay INF in hierarchical mode
+/// exactly as in every other mode, on every node.
+#[test]
+fn disconnected_graph_unreached_stay_inf() {
+    use butterfly_bfs::graph::builder::GraphBuilder;
+    let mut b = GraphBuilder::new(40);
+    for v in 1..20u32 {
+        b.add_edge(0, v);
+    }
+    b.add_edge(30, 31); // island (the graph kind, not the topology kind)
+    let (g, _) = b.build_undirected();
+    check_equivalence(&g, 0, "disconnected");
+    let mut session = hier_session(&g, 4, 4);
+    let r = session.run(0).unwrap();
+    assert_eq!(r.reached(), 20);
+    assert_eq!(r.dist()[30], INF);
+}
+
+/// Wide batches through the grid-of-islands exchange: every lane width
+/// class (64/128/256/512 mask words' worth of roots) matches the
+/// multi-source oracle and the 2D comparator lane-for-lane.
+#[test]
+fn wide_batches_up_to_512_lanes_match_oracle_and_two_d() {
+    use butterfly_bfs::graph::gen::uniform_random;
+    let (g, _) = uniform_random(500, 6, 3);
+    for width in [1usize, 64, 256, 512] {
+        let roots: Vec<VertexId> =
+            (0..width).map(|i| ((i * 7 + 1) % 500) as VertexId).collect();
+        let batch_width = BatchWidth::for_lanes(width).unwrap();
+        let cfg =
+            EngineConfig { batch_width, ..EngineConfig::dgx2_cluster_hier(4, 2, 4) };
+        let mut hier = TraversalPlan::build(&g, cfg).unwrap().session();
+        let bh = hier.run_batch(&roots).unwrap();
+        hier.assert_batch_agreement().unwrap();
+        let cfg2 = EngineConfig { batch_width, ..EngineConfig::dgx2_2d(4, 2) };
+        let mut two_d = TraversalPlan::build(&g, cfg2).unwrap().session();
+        let b2 = two_d.run_batch(&roots).unwrap();
+        let want = ms_bfs(&g, &roots);
+        for lane in 0..width {
+            assert_eq!(
+                bh.dist(lane),
+                want.dist(lane),
+                "width {width} lane {lane} vs oracle"
+            );
+            assert_eq!(
+                bh.dist(lane),
+                b2.dist(lane),
+                "width {width} lane {lane} vs 2D"
+            );
+        }
+        let m = bh.metrics();
+        assert_eq!(m.intra_messages() + m.inter_messages(), m.messages());
+        assert!(m.inter_messages() > 0, "width {width}");
+    }
+}
+
+/// Direction modes compose with the hierarchical exchange unchanged:
+/// top-down, bottom-up, and direction-optimizing runs all land on the
+/// same distances as serial and as the 2D engine under the same policy.
+#[test]
+fn direction_modes_equal_serial_and_two_d_on_suite_graph() {
+    let spec = table1_suite()
+        .into_iter()
+        .find(|s| s.name == "kron-like")
+        .unwrap();
+    let g = spec.generate_scaled(-8);
+    let want = serial_bfs(&g, 1);
+    for direction in [
+        DirectionMode::TopDown,
+        DirectionMode::BottomUp,
+        DirectionMode::diropt(),
+    ] {
+        let cfg =
+            EngineConfig { direction, ..EngineConfig::dgx2_cluster_hier(2, 8, 4) };
+        let mut hier = TraversalPlan::build(&g, cfg).unwrap().session();
+        let rh = hier.run(1).unwrap();
+        hier.assert_agreement().unwrap();
+        assert_eq!(rh.dist(), &want[..], "{direction:?} vs serial");
+        let cfg2 = EngineConfig { direction, ..EngineConfig::dgx2_2d(2, 8) };
+        let mut two_d = TraversalPlan::build(&g, cfg2).unwrap().session();
+        assert_eq!(
+            rh.dist(),
+            two_d.run(1).unwrap().dist(),
+            "{direction:?} vs 2D"
+        );
+    }
+}
+
+/// Degenerate grids collapse to the flat butterfly: a 1×P grid is one
+/// island, a P×1 grid makes every rank its own representative — both
+/// must match the flat 1D engine exactly, wide batches included.
+#[test]
+fn degenerate_grids_match_flat_one_d() {
+    use butterfly_bfs::bfs::msbfs::sample_batch_roots;
+    use butterfly_bfs::graph::gen::uniform_random;
+    let (g, _) = uniform_random(300, 5, 11);
+    let roots = sample_batch_roots(&g, 8, 0x41E);
+    let mut flat = TraversalPlan::build(&g, EngineConfig::dgx2(6, 4))
+        .unwrap()
+        .session();
+    let rf = flat.run(2).unwrap();
+    let bf = flat.run_batch(&roots).unwrap();
+    for (islands, per_island) in [(1u32, 6u32), (6, 1)] {
+        let mut hier = hier_session(&g, islands, per_island);
+        let rh = hier.run(2).unwrap();
+        assert_eq!(rh.dist(), rf.dist(), "grid {islands}x{per_island}");
+        let bh = hier.run_batch(&roots).unwrap();
+        for lane in 0..roots.len() {
+            assert_eq!(
+                bh.dist(lane),
+                bf.dist(lane),
+                "grid {islands}x{per_island} lane {lane}"
+            );
+        }
+    }
+}
