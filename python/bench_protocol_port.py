@@ -10,7 +10,9 @@ the DGX-2 interconnect/device timing models, and (v3) the serve-mode
 request coalescer with its deterministic open-loop throughput sim.
 Integer counters reproduce the Rust engine exactly; simulated-clock
 floats reproduce it to ~1e-15 (the Rust checker compares floats with
-1e-6 relative tolerance).
+1e-6 relative tolerance). v6 adds the fault-recovery model
+(fault/plan.rs): the seeded fault schedule, the detect -> retry ->
+backoff pricing, and the committed ``fault_recovery`` bench section.
 
 The canonical way to regenerate the artifact is the Rust CLI::
 
@@ -466,6 +468,125 @@ def class_volume(rounds, per_island):
 
 
 # --------------------------------------------------------------------------
+# Fault injection (fault/plan.rs, net/sim.rs::retransmit_time)
+# --------------------------------------------------------------------------
+
+
+def retransmit_time(topo, src, dst, nbytes):
+    """Port of net/sim.rs::retransmit_time: one point-to-point re-send,
+    priced as per-message latency plus serialization over a single link of
+    the pair's class. ``topo=None`` is the uniform (flat DGX-2) topology."""
+    if topo is None or src // topo["per_island"] == dst // topo["per_island"]:
+        cls = DGX2 if topo is None else topo["intra"]
+    else:
+        cls = topo["inter"]
+    return cls["latency"] + nbytes / cls["link_bw"]
+
+
+def fault_plan_generate(seed, count, levels, rounds, ranks):
+    """Port of fault/plan.rs::FaultPlan::generate: `count` faults addressed
+    uniformly over levels x rounds x ranks^2 via SplitMix64, cycling the
+    recoverable kinds drop / corrupt / delay."""
+    sm = SplitMix64(seed)
+    faults = []
+    for k in range(count):
+        level = sm.next_u64() % max(levels, 1)
+        rnd = sm.next_u64() % max(rounds, 1)
+        src = sm.next_u64() % max(ranks, 1)
+        dst = sm.next_u64() % max(ranks, 1)
+        kind = ["drop", "corrupt", "delay"][k % 3]
+        f = dict(level=level, round=rnd, src=src, dst=dst, kind=kind,
+                 max_fires=0)
+        if kind == "delay":
+            f["delay_us"] = 25
+        else:
+            f["repeat"] = 1
+        faults.append(f)
+    return dict(max_retries=3, backoff_us=10, faults=faults)
+
+
+def fault_backoff_seconds(plan, attempt):
+    """Port of FaultPlan::backoff_seconds: backoff_us * 2^(attempt-1)."""
+    return plan["backoff_us"] * 1e-6 * (1 << min(max(attempt - 1, 0), 20))
+
+
+def fault_plan_json(plan):
+    """Port of FaultPlan::to_json (the `--fault-plan` file format)."""
+    faults = []
+    for f in plan["faults"]:
+        j = {"level": f["level"], "round": f["round"], "kind": f["kind"],
+             "fires": f["max_fires"]}
+        if f["kind"] == "kill":
+            j["rank"] = f["src"]
+        else:
+            j["src"] = f["src"]
+            j["dst"] = f["dst"]
+        if f["kind"] in ("drop", "corrupt"):
+            j["repeat"] = f["repeat"]
+        elif f["kind"] == "delay":
+            j["delay_us"] = f["delay_us"]
+        faults.append(j)
+    return {"max_retries": plan["max_retries"],
+            "backoff_us": plan["backoff_us"], "faults": faults}
+
+
+class FaultInjector:
+    """Port of fault/plan.rs::FaultInjector::apply_level — the recovery
+    accounting for one level's exchange. Tolerated faults return
+    (retries, retry_bytes, recovery_time) deltas; exhausted budgets and
+    killed ranks raise (the engine's typed-error paths)."""
+
+    def __init__(self, plan):
+        self.plan = plan
+        self.fired = [0] * len(plan["faults"])
+
+    def specs_matched(self):
+        return sum(1 for c in self.fired if c > 0)
+
+    def _try_fire(self, idx):
+        prev = self.fired[idx]
+        self.fired[idx] = prev + 1
+        cap = self.plan["faults"][idx]["max_fires"]
+        return cap == 0 or prev < cap
+
+    def apply_level(self, level, rounds, payloads, topo, num_nodes):
+        retries = retry_bytes = 0
+        recovery = 0.0
+        for idx, spec in enumerate(self.plan["faults"]):
+            if spec["level"] != level:
+                continue
+            if spec["kind"] == "kill":
+                if spec["src"] < num_nodes and self._try_fire(idx):
+                    raise RuntimeError(
+                        f"rank {spec['src']} dead at level {level}")
+                continue
+            if spec["round"] >= len(rounds):
+                continue
+            rnd = rounds[spec["round"]]
+            ti = next((i for i, (s, d) in enumerate(rnd)
+                       if s == spec["src"] and d == spec["dst"]), None)
+            if ti is None:
+                continue
+            nbytes = payloads[spec["round"]][ti]
+            if nbytes == 0 or not self._try_fire(idx):
+                continue
+            if spec["kind"] == "delay":
+                recovery += spec["delay_us"] * 1e-6
+            else:
+                if spec["repeat"] > self.plan["max_retries"]:
+                    raise RuntimeError(
+                        f"{spec['kind']} transfer {spec['src']}->"
+                        f"{spec['dst']} past the retry budget")
+                for attempt in range(1, spec["repeat"] + 1):
+                    retries += 1
+                    retry_bytes += nbytes
+                    recovery += (fault_backoff_seconds(self.plan, attempt)
+                                 + retransmit_time(topo, spec["src"],
+                                                   spec["dst"], nbytes))
+        return retries, retry_bytes, recovery
+
+
+# --------------------------------------------------------------------------
 # Payload pricing (bfs/msbfs.rs)
 # --------------------------------------------------------------------------
 
@@ -816,6 +937,9 @@ def run_batch(g, nodes, fanout, roots, direction, alpha=15, beta=18,
             direction="bottomup" if bottom_up else "topdown",
             sim_compute=sim_compute,
             sim_comm=sum(round_times),
+            # Per-(round, transfer) priced bytes — what the fault injector
+            # addresses (fault/plan.rs::apply_level sees the same shape).
+            payloads=payloads,
         )
         if cls is not None:
             lvl.update(intra_messages=cls["intra_messages"],
@@ -1120,7 +1244,7 @@ def materialize_counters(prefix, cuts, n, bs):
 # --------------------------------------------------------------------------
 
 PROTOCOL = dict(
-    name="engine-bench-v5",
+    name="engine-bench-v6",
     graph="kron-like",
     kron_scale=21,
     kron_edge_factor=16,
@@ -1161,6 +1285,15 @@ PROTOCOL = dict(
     # topology (8 islands of 8, 10:1 intra:inter bandwidth).
     hier_nodes=64,
     hier_grid=(8, 8),
+    # Fault recovery (v6): a committed seeded fault schedule against the
+    # 16-node 1D diropt batch; seed 43 fires all three recoverable kinds
+    # (drop, corrupt, delay) against live transfers; acceptance requires
+    # retries >= 1 and bit-identical distances under recovery.
+    fault_seed=43,
+    fault_count=6,
+    fault_levels=4,
+    fault_rounds=2,
+    fault_nodes=16,
 )
 
 
@@ -1577,6 +1710,61 @@ def storage_report():
     }
 
 
+def fault_recovery_report(g):
+    """Port of harness/protocol.rs::fault_recovery_json: the committed
+    seeded schedule injected into the 16-node 1D diropt 64-root batch,
+    next to the identical fault-free run. The faulted run re-executes the
+    batch with the injector applied at every level's exchange — exactly
+    the seam session.rs::check_faults hooks."""
+    p = PROTOCOL
+    nodes = p["fault_nodes"]
+    roots = sample_batch_roots(g, p["batch_width"], p["root_seed"])
+    free = run_batch(g, nodes, p["fanout"], roots, "diropt")
+    free_sim = sum(l["sim_compute"] + l["sim_comm"] for l in free["levels"])
+    free_bytes = sum(l["bytes"] for l in free["levels"])
+    plan = fault_plan_generate(p["fault_seed"], p["fault_count"],
+                               p["fault_levels"], p["fault_rounds"], nodes)
+    inj = FaultInjector(plan)
+    rounds = butterfly_schedule(nodes, p["fanout"])
+    faulted = run_batch(g, nodes, p["fanout"], roots, "diropt")
+    retries = retry_bytes = 0
+    recovery = 0.0
+    for lvl in faulted["levels"]:
+        r, rb, rt = inj.apply_level(lvl["level"], rounds, lvl["payloads"],
+                                    None, nodes)
+        retries += r
+        retry_bytes += rb
+        recovery += rt
+    equal = faulted["dist"] == free["dist"]
+    sim_with_recovery = free_sim + recovery
+    return {
+        "config": {
+            "nodes": nodes,
+            "fanout": p["fanout"],
+            "mode": "1d",
+            "direction": "diropt",
+            "width": p["batch_width"],
+            "seed": p["root_seed"],
+        },
+        "plan": fault_plan_json(plan),
+        "fault_free": {
+            "levels": len(free["levels"]),
+            "bytes": free_bytes,
+            "sim_seconds": free_sim,
+        },
+        "faulted": {
+            "injected": len(plan["faults"]),
+            "matched": inj.specs_matched(),
+            "retries": retries,
+            "retry_bytes": retry_bytes,
+            "recovery_time": recovery,
+            "sim_seconds": sim_with_recovery,
+        },
+        "equal_distances": equal,
+        "overhead_ratio": sim_with_recovery / free_sim,
+    }
+
+
 def engine_bench_report():
     scale = max(PROTOCOL["kron_scale"] + PROTOCOL["scale_delta"], 4)
     g = kronecker(scale, PROTOCOL["kron_edge_factor"], PROTOCOL["kron_seed"])
@@ -1610,6 +1798,7 @@ def engine_bench_report():
         "serve_throughput": serve_throughput(g),
         "storage": storage_report(),
         "hierarchical": hierarchical_report(g),
+        "fault_recovery": fault_recovery_report(g),
     }
 
 
@@ -1811,6 +2000,13 @@ def validate_acceptance(report):
     assert mh["inter_bytes"] < m1["inter_bytes"], (
         mh["inter_bytes"], m1["inter_bytes"])
     assert mh["intra_messages"] > 0 and mh["inter_messages"] > 0, mh
+    fr = report["fault_recovery"]
+    assert fr["equal_distances"] is True, "recovery moved a distance"
+    fl = fr["faulted"]
+    assert fl["matched"] >= 1, "no committed fault matched a live transfer"
+    assert fl["retries"] >= 1 and fl["retry_bytes"] >= 1, fl
+    assert fl["recovery_time"] > 0.0, fl
+    assert fr["overhead_ratio"] > 1.0, fr["overhead_ratio"]
     print("acceptance invariants hold on the fresh report")
 
 
@@ -1855,6 +2051,14 @@ def main():
           f"{h['speedup_vs_1d']:.2f}x vs 1d, {h['speedup_vs_2d']:.2f}x vs 2d, "
           f"inter bytes {hm['inter_bytes']} vs 1d "
           f"{h['modes']['1d']['inter_bytes']}")
+    fr = report["fault_recovery"]
+    fl = fr["faulted"]
+    print(f"fault recovery p={fr['config']['nodes']}: "
+          f"{fl['matched']}/{fl['injected']} faults fired, "
+          f"{fl['retries']} retries ({fl['retry_bytes']} bytes), "
+          f"recovery {fl['recovery_time'] * 1e6:.1f}us "
+          f"({(fr['overhead_ratio'] - 1) * 100:.2f}% overhead), "
+          f"distances equal: {fr['equal_distances']}")
     if args.out:
         # Mirror write_engine_bench: a `measured` subtree recorded into
         # the existing artifact by the load generator is live-wallclock

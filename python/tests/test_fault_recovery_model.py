@@ -1,0 +1,232 @@
+"""Executable spec of the fault-injection + recovery model.
+
+The Rust engine's fault layer (``fault/plan.rs``) injects a seeded,
+fully explicit fault schedule at the Phase-2 exchange seam: drops and
+corruptions are detected (frame checksum / missing frame) and re-sent
+with exponential backoff, stragglers add pure delay, and every
+recovery action is priced through the same interconnect model as
+first-transmission traffic — so a tolerated fault changes *counters and
+simulated time only*, never a distance. This suite pins the Python port
+of that arithmetic: deterministic generation from a seed, the backoff
+and retransmit pricing closed-form, inertness of faults that address
+transfers the schedule never performs, fire-count budgets, the
+unrecoverable paths (budget exhaustion, killed rank), and the headline
+fault-equivalence invariant the CI-checked ``BENCH_engine.json``
+``fault_recovery`` section records.
+"""
+
+import random
+
+import pytest
+
+import bench_protocol_port as bp
+
+
+# ---------------------------------------------------------------------------
+# Seeded generation
+# ---------------------------------------------------------------------------
+
+
+def test_generate_is_deterministic_and_in_range():
+    a = bp.fault_plan_generate(23, 9, 4, 2, 16)
+    b = bp.fault_plan_generate(23, 9, 4, 2, 16)
+    assert a == b
+    assert len(a["faults"]) == 9
+    assert a["max_retries"] == 3 and a["backoff_us"] == 10
+    for k, f in enumerate(a["faults"]):
+        assert f["level"] < 4 and f["round"] < 2
+        assert f["src"] < 16 and f["dst"] < 16
+        assert f["kind"] == ["drop", "corrupt", "delay"][k % 3]
+        if f["kind"] == "delay":
+            assert f["delay_us"] == 25
+        else:
+            assert f["repeat"] == 1
+    assert a != bp.fault_plan_generate(24, 9, 4, 2, 16)
+
+
+def test_generate_draw_order_matches_splitmix_stream():
+    # The generator draws level, round, src, dst in that order from one
+    # SplitMix64 stream — the cross-language contract with Rust.
+    sm = bp.SplitMix64(7)
+    plan = bp.fault_plan_generate(7, 2, 5, 3, 8)
+    for f in plan["faults"]:
+        assert f["level"] == sm.next_u64() % 5
+        assert f["round"] == sm.next_u64() % 3
+        assert f["src"] == sm.next_u64() % 8
+        assert f["dst"] == sm.next_u64() % 8
+
+
+def test_plan_json_shape():
+    plan = bp.fault_plan_generate(1, 3, 2, 2, 4)
+    j = bp.fault_plan_json(plan)
+    assert j["max_retries"] == 3 and j["backoff_us"] == 10
+    assert [f["kind"] for f in j["faults"]] == ["drop", "corrupt", "delay"]
+    for f in j["faults"]:
+        assert set(f) >= {"level", "round", "kind", "fires", "src", "dst"}
+
+
+# ---------------------------------------------------------------------------
+# Pricing closed-forms
+# ---------------------------------------------------------------------------
+
+
+def test_backoff_is_exponential_and_clamped():
+    plan = dict(max_retries=3, backoff_us=10, faults=[])
+    assert bp.fault_backoff_seconds(plan, 1) == pytest.approx(10e-6)
+    assert bp.fault_backoff_seconds(plan, 2) == pytest.approx(20e-6)
+    assert bp.fault_backoff_seconds(plan, 5) == pytest.approx(160e-6)
+    # Exponent clamp keeps hostile plans finite.
+    assert bp.fault_backoff_seconds(plan, 1000) == pytest.approx(
+        10e-6 * (1 << 20))
+
+
+def test_retransmit_uses_pair_link_class():
+    # Uniform topology: always the flat DGX-2 class.
+    t = bp.retransmit_time(None, 0, 9, 25_000_000_000)
+    assert t == pytest.approx(bp.DGX2["latency"] + 1.0)
+    topo = bp.dgx2_cluster_topo(4)
+    intra = bp.retransmit_time(topo, 0, 3, 1000)
+    inter = bp.retransmit_time(topo, 0, 4, 1000)
+    assert intra == pytest.approx(
+        bp.DGX2["latency"] + 1000 / bp.DGX2["link_bw"])
+    assert inter == pytest.approx(
+        bp.ISLAND_UPLINK["latency"] + 1000 / bp.ISLAND_UPLINK["link_bw"])
+    assert inter > intra
+
+
+def test_drop_pricing_sums_backoff_plus_retransmit():
+    plan = dict(max_retries=3, backoff_us=10, faults=[
+        dict(level=0, round=0, src=0, dst=1, kind="drop", repeat=3,
+             max_fires=0),
+    ])
+    inj = bp.FaultInjector(plan)
+    rounds = [[(0, 1), (2, 3)]]
+    payloads = [[500, 700]]
+    r, rb, rec = inj.apply_level(0, rounds, payloads, None, 4)
+    assert (r, rb) == (3, 1500)
+    want = sum(bp.fault_backoff_seconds(plan, k) for k in [1, 2, 3])
+    want += 3 * bp.retransmit_time(None, 0, 1, 500)
+    assert rec == pytest.approx(want, rel=1e-12)
+
+
+def test_delay_adds_pure_time_no_retries():
+    plan = dict(max_retries=3, backoff_us=10, faults=[
+        dict(level=2, round=0, src=1, dst=0, kind="delay", delay_us=40,
+             max_fires=0),
+    ])
+    inj = bp.FaultInjector(plan)
+    r, rb, rec = inj.apply_level(2, [[(1, 0)]], [[64]], None, 2)
+    assert (r, rb) == (0, 0)
+    assert rec == pytest.approx(40e-6)
+
+
+# ---------------------------------------------------------------------------
+# Inertness, budgets, unrecoverable paths
+# ---------------------------------------------------------------------------
+
+
+def test_unmatched_and_empty_transfers_are_inert():
+    plan = dict(max_retries=3, backoff_us=10, faults=[
+        # Wrong level, wrong round, absent pair, and an empty payload.
+        dict(level=5, round=0, src=0, dst=1, kind="drop", repeat=1,
+             max_fires=0),
+        dict(level=0, round=7, src=0, dst=1, kind="drop", repeat=1,
+             max_fires=0),
+        dict(level=0, round=0, src=3, dst=0, kind="corrupt", repeat=1,
+             max_fires=0),
+        dict(level=0, round=0, src=2, dst=3, kind="drop", repeat=1,
+             max_fires=0),
+    ])
+    inj = bp.FaultInjector(plan)
+    r, rb, rec = inj.apply_level(0, [[(0, 1), (2, 3)]], [[100, 0]], None, 4)
+    assert (r, rb, rec) == (0, 0, 0.0)
+    assert inj.specs_matched() == 0
+
+
+def test_max_fires_budget_makes_faults_transient():
+    plan = dict(max_retries=3, backoff_us=10, faults=[
+        dict(level=0, round=0, src=0, dst=1, kind="drop", repeat=1,
+             max_fires=1),
+    ])
+    inj = bp.FaultInjector(plan)
+    r1, _, _ = inj.apply_level(0, [[(0, 1)]], [[100]], None, 2)
+    r2, _, _ = inj.apply_level(0, [[(0, 1)]], [[100]], None, 2)
+    assert (r1, r2) == (1, 0)
+    assert inj.specs_matched() == 1
+
+
+def test_exhausted_budget_raises_instead_of_wrong_answer():
+    plan = dict(max_retries=3, backoff_us=10, faults=[
+        dict(level=0, round=0, src=0, dst=1, kind="corrupt", repeat=4,
+             max_fires=0),
+    ])
+    inj = bp.FaultInjector(plan)
+    with pytest.raises(RuntimeError, match="retry budget"):
+        inj.apply_level(0, [[(0, 1)]], [[100]], None, 2)
+
+
+def test_kill_rank_raises_rank_dead():
+    plan = dict(max_retries=3, backoff_us=10, faults=[
+        dict(level=1, round=0, src=2, dst=0, kind="kill", max_fires=1),
+    ])
+    inj = bp.FaultInjector(plan)
+    # Level 0: no fault addressed, nothing happens.
+    assert inj.apply_level(0, [[(0, 1)]], [[10]], None, 4) == (0, 0, 0.0)
+    with pytest.raises(RuntimeError, match="rank 2 dead at level 1"):
+        inj.apply_level(1, [[(0, 1)]], [[10]], None, 4)
+    # max_fires=1: the replayed level sails past the transient kill.
+    assert inj.apply_level(1, [[(0, 1)]], [[10]], None, 4) == (0, 0, 0.0)
+
+
+# ---------------------------------------------------------------------------
+# Fault equivalence on real traversals
+# ---------------------------------------------------------------------------
+
+
+def test_injection_is_counter_only_on_real_batches():
+    # Injection happens at the exchange seam after payloads are priced:
+    # distances and per-level byte/message counters must be identical to
+    # the fault-free run, while the recovery counters are exactly the
+    # closed-form sum over matched faults.
+    rng = random.Random(0xFA017)
+    for _ in range(6):
+        g = bp.uniform_random(60 + rng.randrange(80), 3, rng.randrange(1 << 40))
+        nodes, fanout = 8, 2
+        roots = [rng.randrange(g.n) for _ in range(5)]
+        direction = rng.choice(["topdown", "bottomup", "diropt"])
+        free = bp.run_batch(g, nodes, fanout, roots, direction)
+        faulted = bp.run_batch(g, nodes, fanout, roots, direction)
+        assert faulted["dist"] == free["dist"]
+        rounds = bp.butterfly_schedule(nodes, fanout)
+        plan = bp.fault_plan_generate(rng.randrange(1 << 30), 5,
+                                      len(free["levels"]), len(rounds), nodes)
+        inj = bp.FaultInjector(plan)
+        total = [0, 0, 0.0]
+        for lvl in faulted["levels"]:
+            r, rb, rec = inj.apply_level(lvl["level"], rounds,
+                                         lvl["payloads"], None, nodes)
+            total[0] += r
+            total[1] += rb
+            total[2] += rec
+        assert total[0] == total[1] == 0 or total[2] > 0.0
+        for lf, lv in zip(free["levels"], faulted["levels"]):
+            assert lf["bytes"] == lv["bytes"]
+            assert lf["messages"] == lv["messages"]
+
+
+def test_committed_bench_schedule_fires():
+    # The committed BENCH_engine.json fault schedule (seed 43) must match
+    # live transfers and force at least one retransmission — the same
+    # invariant the Rust acceptance pass enforces on the artifact.
+    p = bp.PROTOCOL
+    scale = max(p["kron_scale"] + p["scale_delta"], 4)
+    g = bp.kronecker(scale, p["kron_edge_factor"], p["kron_seed"])
+    fr = bp.fault_recovery_report(g)
+    assert fr["equal_distances"] is True
+    assert fr["faulted"]["matched"] >= 1
+    assert fr["faulted"]["retries"] >= 1
+    assert fr["faulted"]["retry_bytes"] >= 1
+    assert fr["faulted"]["recovery_time"] > 0.0
+    assert fr["overhead_ratio"] > 1.0
+    assert fr["faulted"]["sim_seconds"] == pytest.approx(
+        fr["fault_free"]["sim_seconds"] + fr["faulted"]["recovery_time"])

@@ -48,6 +48,17 @@ pub struct LevelMetrics {
     /// Direction tag: true when Phase 1 ran bottom-up this level (the
     /// direction-optimizing trace; always false under pure top-down).
     pub bottom_up: bool,
+    /// Retransmissions performed this level recovering from injected
+    /// faults (0 on a fault-free run).
+    pub retries: u64,
+    /// Bytes re-shipped by those retransmissions — extra wire traffic on
+    /// top of `bytes`, priced per link class.
+    pub retry_bytes: u64,
+    /// Simulated time spent in fault recovery this level: exponential
+    /// backoff plus per-retransmission wire time
+    /// ([`retransmit_time`](crate::net::sim::retransmit_time)); additive
+    /// on top of `sim_comm`.
+    pub recovery_time: f64,
 }
 
 impl LevelMetrics {
@@ -175,6 +186,27 @@ impl RunMetrics {
         self.levels.iter().map(|l| l.inter_bytes).sum()
     }
 
+    /// Total fault-recovery retransmissions (0 on a fault-free run).
+    pub fn retries(&self) -> u64 {
+        self.levels.iter().map(|l| l.retries).sum()
+    }
+
+    /// Total bytes re-shipped by fault-recovery retransmissions.
+    pub fn retry_bytes(&self) -> u64 {
+        self.levels.iter().map(|l| l.retry_bytes).sum()
+    }
+
+    /// Total simulated time spent recovering from faults.
+    pub fn recovery_time(&self) -> f64 {
+        self.levels.iter().map(|l| l.recovery_time).sum()
+    }
+
+    /// Simulated end-to-end time including fault recovery:
+    /// [`sim_seconds`](Self::sim_seconds) + [`recovery_time`](Self::recovery_time).
+    pub fn sim_seconds_with_recovery(&self) -> f64 {
+        self.sim_seconds() + self.recovery_time()
+    }
+
     /// Record one level from raw phase outputs.
     pub fn push_level(
         &mut self,
@@ -228,6 +260,9 @@ impl RunMetrics {
             ("intra_bytes", Json::u(self.intra_bytes())),
             ("inter_messages", Json::u(self.inter_messages())),
             ("inter_bytes", Json::u(self.inter_bytes())),
+            ("retries", Json::u(self.retries())),
+            ("retry_bytes", Json::u(self.retry_bytes())),
+            ("recovery_time", Json::n(self.recovery_time())),
             (
                 "levels",
                 Json::Arr(
@@ -394,6 +429,27 @@ impl BatchMetrics {
             .sum()
     }
 
+    /// Total fault-recovery retransmissions (0 on a fault-free run).
+    pub fn retries(&self) -> u64 {
+        self.levels.iter().map(|l| l.retries).sum()
+    }
+
+    /// Total bytes re-shipped by fault-recovery retransmissions.
+    pub fn retry_bytes(&self) -> u64 {
+        self.levels.iter().map(|l| l.retry_bytes).sum()
+    }
+
+    /// Total simulated time spent recovering from faults.
+    pub fn recovery_time(&self) -> f64 {
+        self.levels.iter().map(|l| l.recovery_time).sum()
+    }
+
+    /// Simulated end-to-end time including fault recovery:
+    /// [`sim_seconds`](Self::sim_seconds) + [`recovery_time`](Self::recovery_time).
+    pub fn sim_seconds_with_recovery(&self) -> f64 {
+        self.sim_seconds() + self.recovery_time()
+    }
+
     /// Synchronization bytes amortized per root — the headline
     /// `msbfs_amortization` comparison against a single run's
     /// [`RunMetrics::bytes`].
@@ -429,6 +485,9 @@ impl BatchMetrics {
             ("intra_bytes", Json::u(self.intra_bytes())),
             ("inter_messages", Json::u(self.inter_messages())),
             ("inter_bytes", Json::u(self.inter_bytes())),
+            ("retries", Json::u(self.retries())),
+            ("retry_bytes", Json::u(self.retry_bytes())),
+            ("recovery_time", Json::n(self.recovery_time())),
             ("bytes_per_root", Json::n(self.bytes_per_root())),
             ("reached_pairs", Json::u(self.reached_pairs)),
         ])
@@ -577,6 +636,33 @@ mod tests {
         let s = m.to_json().render();
         assert!(s.contains("\"inter_messages\":3"));
         assert!(s.contains("\"intra_bytes\":600"));
+    }
+
+    #[test]
+    fn recovery_counters_aggregate_and_render() {
+        let mut m = RunMetrics { graph_edges: 10, ..Default::default() };
+        m.push_level(0, 1, 2, 2, 1, &timing(1, 8, 0.5), 0.5, false);
+        m.push_level(1, 1, 2, 2, 1, &timing(1, 8, 0.5), 0.5, false);
+        // Fault-free: counters default to zero and recovery adds nothing.
+        assert_eq!(m.retries(), 0);
+        assert_eq!(m.retry_bytes(), 0);
+        assert_eq!(m.recovery_time(), 0.0);
+        assert_eq!(m.sim_seconds_with_recovery(), m.sim_seconds());
+        let l = m.levels.last_mut().unwrap();
+        l.retries = 3;
+        l.retry_bytes = 96;
+        l.recovery_time = 0.25;
+        assert_eq!(m.retries(), 3);
+        assert_eq!(m.retry_bytes(), 96);
+        assert!((m.sim_seconds_with_recovery() - (m.sim_seconds() + 0.25)).abs() < 1e-12);
+        let s = m.to_json().render();
+        assert!(s.contains("\"retries\":3"));
+        assert!(s.contains("\"retry_bytes\":96"));
+        assert!(s.contains("\"recovery_time\":0.25"));
+        let mut b = BatchMetrics { num_roots: 2, lane_words: 1, ..Default::default() };
+        b.levels.push(LevelMetrics { retries: 2, retry_bytes: 40, ..Default::default() });
+        assert_eq!(b.retries(), 2);
+        assert!(b.to_json().render().contains("\"retry_bytes\":40"));
     }
 
     #[test]

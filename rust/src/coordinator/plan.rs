@@ -60,6 +60,22 @@ use std::sync::{Arc, OnceLock};
 /// Plan-cache format identifier (the first thing version-checked on load).
 const PLAN_CACHE_FORMAT: &str = "bbfs-plan-v1";
 
+/// The interconnect component of the plan-cache fingerprint: the resolved
+/// topology's preset name, qualified by island width when the fabric is
+/// tiered. A hierarchical plan cached under `--net dgx2` must *miss* (with
+/// a typed [`PlanError::CacheFingerprintMismatch`] naming `net`) when
+/// reopened under `--net dgx2-cluster`, and vice versa — partition cuts
+/// are interconnect-independent, but warm-starting silently across
+/// topologies would let stale pricing masquerade as a valid plan.
+fn net_fingerprint(config: &EngineConfig) -> String {
+    let t = config.resolved_topology();
+    if t.per_island == u32::MAX {
+        t.name.to_string()
+    } else {
+        format!("{}/{}", t.name, t.per_island)
+    }
+}
+
 /// Why a [`TraversalPlan`] could not be built. Every invalid engine
 /// layout surfaces as one of these values — never a panic or a
 /// `process::exit` — so services can report configuration mistakes to
@@ -637,6 +653,7 @@ impl TraversalPlan {
             ("mode", Json::s(mode)),
             ("grid", Json::s(grid)),
             ("pattern", Json::s(self.config.pattern.name())),
+            ("net", Json::s(net_fingerprint(&self.config))),
             ("relabeled", Json::Bool(self.relabeling.is_some())),
         ]);
         let cuts_arr = |cuts: &[VertexId]| {
@@ -712,6 +729,7 @@ impl TraversalPlan {
         expect_str("mode", &mode)?;
         expect_str("grid", &grid)?;
         expect_str("pattern", &config.pattern.name())?;
+        expect_str("net", &net_fingerprint(&config))?;
         let relabeled = matches!(fp.get("relabeled"), Some(Json::Bool(true)));
         if relabeled != store.is_relabeled() {
             return Err(PlanError::CacheFingerprintMismatch {
@@ -810,11 +828,16 @@ impl TraversalPlan {
     /// Write the plan cache next to the store (see
     /// [`cache_json`](Self::cache_json)). Errors if this plan was not
     /// built from a store.
+    ///
+    /// Crash-consistent: published via
+    /// [`crate::util::fsio::atomic_write`], so a crashed writer leaves
+    /// either the previous complete cache or none — never a torn JSON
+    /// prefix that `load_cache` would choke on.
     pub fn save_cache(&self, path: &std::path::Path) -> Result<(), PlanError> {
         let json = self.cache_json().ok_or_else(|| {
             PlanError::CacheCorrupt("plan was not built from a v2 store".into())
         })?;
-        std::fs::write(path, json.render() + "\n")
+        crate::util::fsio::atomic_write(path, (json.render() + "\n").as_bytes())
             .map_err(|e| PlanError::CacheCorrupt(format!("write {}: {e}", path.display())))
     }
 
@@ -972,6 +995,62 @@ mod tests {
         let other = EngineConfig::dgx2_cluster_hier(3, 2, 2);
         let err = TraversalPlan::from_cache_json(Arc::clone(&store), other, &cache).unwrap_err();
         assert!(matches!(err, PlanError::CacheFingerprintMismatch { .. }));
+    }
+
+    #[test]
+    fn cache_fingerprint_covers_net_topology() {
+        use crate::graph::store::{encode_store, GraphStore, StoreWriteOptions};
+        use crate::net::TopologyModel;
+        let (g, _) = uniform_random(150, 4, 3);
+        let enc = encode_store(&g, StoreWriteOptions::default()).unwrap();
+        let store = Arc::new(GraphStore::open_bytes(enc.bytes).unwrap());
+
+        // Cached under the clustered topology…
+        let clustered = EngineConfig::dgx2_cluster_hier(2, 3, 2);
+        let cache = TraversalPlan::build_from_store(Arc::clone(&store), clustered.clone())
+            .unwrap()
+            .cache_json()
+            .unwrap();
+        assert_eq!(
+            cache.get("fingerprint").and_then(|f| f.get("net")).and_then(Json::as_str),
+            Some("dgx2-cluster/3")
+        );
+        // …must miss under the flat dgx2 fabric, naming the field.
+        let mut flat = clustered.clone();
+        flat.topology = None; // hier + no topology resolves to classified dgx2
+        let err =
+            TraversalPlan::from_cache_json(Arc::clone(&store), flat.clone(), &cache).unwrap_err();
+        match err {
+            PlanError::CacheFingerprintMismatch { field, expected, found } => {
+                assert_eq!(field, "net");
+                assert_eq!(expected, "dgx2/3");
+                assert_eq!(found, "dgx2-cluster/3");
+            }
+            other => panic!("expected net mismatch, got {other:?}"),
+        }
+
+        // And the other direction: cached flat, reopened clustered.
+        let cache_flat = TraversalPlan::build_from_store(Arc::clone(&store), flat.clone())
+            .unwrap()
+            .cache_json()
+            .unwrap();
+        let err = TraversalPlan::from_cache_json(Arc::clone(&store), clustered, &cache_flat)
+            .unwrap_err();
+        assert!(
+            matches!(err, PlanError::CacheFingerprintMismatch { ref field, .. } if field == "net"),
+            "expected net mismatch, got {err:?}"
+        );
+
+        // Same topology on both sides still warm-starts.
+        let again = TraversalPlan::from_cache_json(Arc::clone(&store), flat, &cache_flat);
+        assert!(again.is_ok());
+
+        // Uniform (non-tiered) fingerprints omit the island qualifier.
+        let one_d = EngineConfig::dgx2(4, 2);
+        assert_eq!(net_fingerprint(&one_d), "dgx2");
+        let mut tiered_1d = one_d;
+        tiered_1d.topology = Some(TopologyModel::dgx2_cluster(2));
+        assert_eq!(net_fingerprint(&tiered_1d), "dgx2-cluster/2");
     }
 
     #[test]

@@ -52,6 +52,8 @@ use crate::bfs::frontier::{lane_bit, lane_mask_count, lane_mask_is_zero, LaneMas
 use crate::bfs::msbfs::{full_lane_mask, words_for_lanes, MsBfsNodeState, MAX_LANES};
 use crate::bfs::serial::INF;
 use crate::comm::pattern::Schedule;
+use crate::fault::plan::{ExchangeError, FaultFailure, FaultInjector, LevelRecovery};
+use crate::fault::recovery::Checkpoint;
 use crate::graph::csr::VertexId;
 use crate::net::model::TopologyModel;
 use crate::net::sim::simulate_topology;
@@ -83,6 +85,37 @@ pub enum QueryError {
         /// The lane limit ([`MAX_LANES`]).
         max: usize,
     },
+    /// An injected exchange fault exhausted the armed
+    /// [`FaultPlan`](crate::fault::FaultPlan)'s retry budget. The query is
+    /// aborted rather than ever returning a wrong answer.
+    Unrecoverable {
+        /// What the exchange detected.
+        error: ExchangeError,
+        /// Retry attempts consumed before giving up.
+        attempts: u32,
+    },
+    /// A rank died mid-query (injected
+    /// [`FaultKind::KillRank`](crate::fault::FaultKind::KillRank)). The
+    /// session stashes a level checkpoint retrievable via
+    /// [`QuerySession::take_checkpoint`]; a
+    /// [`FaultTolerantRunner`](crate::fault::FaultTolerantRunner) re-plans
+    /// onto the survivors and resumes from it.
+    RankDead {
+        /// The dead rank.
+        rank: u32,
+        /// Level at which it died.
+        level: u32,
+    },
+    /// A [`Checkpoint`] incompatible with this session was passed to
+    /// [`QuerySession::resume`] / [`QuerySession::resume_batch`].
+    CheckpointMismatch {
+        /// Which quantity disagreed (`"lanes"` or `"vertices"`).
+        what: &'static str,
+        /// The value this session requires.
+        expected: usize,
+        /// The value the checkpoint carries.
+        got: usize,
+    },
 }
 
 impl std::fmt::Display for QueryError {
@@ -94,6 +127,15 @@ impl std::fmt::Display for QueryError {
             QueryError::EmptyBatch => write!(f, "batch contains no roots"),
             QueryError::WidthTooLarge { got, max } => {
                 write!(f, "batch of {got} roots exceeds the {max}-lane limit")
+            }
+            QueryError::Unrecoverable { error, attempts } => {
+                write!(f, "unrecoverable exchange fault after {attempts} retries: {error}")
+            }
+            QueryError::RankDead { rank, level } => {
+                write!(f, "rank {rank} died at level {level}; re-plan required")
+            }
+            QueryError::CheckpointMismatch { what, expected, got } => {
+                write!(f, "checkpoint {what} mismatch: session needs {expected}, got {got}")
             }
         }
     }
@@ -266,6 +308,16 @@ pub struct QuerySession {
     pooled_buckets: Option<Arc<RoundBuckets>>,
     /// Lane count of the most recent batch.
     batch_width: usize,
+    /// Armed fault injection ([`Self::arm_faults`]): `None` (the default)
+    /// runs fault-free with zero overhead on the level loop.
+    fault: Option<FaultArm>,
+}
+
+/// A session's armed fault state: the shared injector plus the level
+/// checkpoint stashed when a rank dies mid-query.
+struct FaultArm {
+    injector: Arc<FaultInjector>,
+    checkpoint: Option<Checkpoint>,
 }
 
 /// One merge plan per schedule round: for each destination that receives
@@ -449,7 +501,65 @@ impl QuerySession {
             batch_scratch: Vec::new(),
             pooled_buckets: None,
             batch_width: 0,
+            fault: None,
         }
+    }
+
+    /// Arm (or, with `None`, disarm) deterministic fault injection at the
+    /// Phase-2 exchange seam. The injector is shared — pass clones of one
+    /// `Arc` to correlate fire counts across sessions (serve retries,
+    /// re-planned replays). While armed, every level's exchange is checked
+    /// against the plan: tolerated faults add `retries` / `retry_bytes` /
+    /// `recovery_time` to that level's [`LevelMetrics`] (distances are
+    /// bit-identical to the fault-free run by construction), exhausted
+    /// budgets surface [`QueryError::Unrecoverable`], and a killed rank
+    /// surfaces [`QueryError::RankDead`] with a checkpoint stashed for
+    /// [`Self::take_checkpoint`].
+    pub fn arm_faults(&mut self, injector: Option<Arc<FaultInjector>>) {
+        self.fault = injector.map(|injector| FaultArm { injector, checkpoint: None });
+    }
+
+    /// Take the level checkpoint stashed by the most recent
+    /// [`QueryError::RankDead`] failure, if any. Feed it to
+    /// [`Self::resume`] / [`Self::resume_batch`] on a session over a
+    /// re-planned (degraded) plan to replay only the lost level.
+    pub fn take_checkpoint(&mut self) -> Option<Checkpoint> {
+        self.fault.as_mut().and_then(|f| f.checkpoint.take())
+    }
+
+    /// Apply the armed fault plan (if any) to one level's exchange.
+    fn check_faults(
+        &self,
+        level: u32,
+        payloads: &[Vec<u64>],
+    ) -> Result<LevelRecovery, FaultFailure> {
+        match &self.fault {
+            Some(arm) => {
+                arm.injector.apply_level(level, &self.schedule, payloads, &self.topology)
+            }
+            None => Ok(LevelRecovery::default()),
+        }
+    }
+
+    /// Translate an exchange failure into the session-level error,
+    /// stashing the level checkpoint when a rank died (so the caller can
+    /// re-plan and resume).
+    fn fault_failure(&mut self, fail: FaultFailure, ckpt: Option<Checkpoint>) -> QueryError {
+        match fail.error {
+            ExchangeError::RankDead { rank, level } => {
+                if let Some(arm) = &mut self.fault {
+                    arm.checkpoint = ckpt;
+                }
+                QueryError::RankDead { rank, level }
+            }
+            error => QueryError::Unrecoverable { error, attempts: fail.attempts },
+        }
+    }
+
+    /// True when the armed plan could kill a rank — only then does the
+    /// level loop pay the per-level checkpoint clone.
+    fn capture_checkpoints(&self) -> bool {
+        self.fault.as_ref().is_some_and(|f| f.injector.plan().has_kill())
     }
 
     /// Engine configuration (shared with the plan).
@@ -573,7 +683,38 @@ impl QuerySession {
     /// owns its distances and metrics; the session's buffers are reused
     /// by the next query.
     pub fn run(&mut self, root: VertexId) -> Result<TraversalResult, QueryError> {
-        let metrics = self.run_inner(root)?;
+        let metrics = self.run_inner(root, None)?;
+        Ok(TraversalResult {
+            root,
+            dist: self.nodes[0].d_local.clone(),
+            metrics,
+        })
+    }
+
+    /// Resume a single-root traversal from a level [`Checkpoint`]
+    /// (captured by a fault-armed session when a rank died): seeds every
+    /// node from the checkpoint's distance array and replays from the
+    /// checkpointed level. The checkpoint's completed-level metrics are
+    /// carried over, so the result's per-level trace covers the whole
+    /// traversal. Typically called on a session over a *degraded* re-plan
+    /// by [`FaultTolerantRunner`](crate::fault::FaultTolerantRunner).
+    pub fn resume(&mut self, ck: &Checkpoint) -> Result<TraversalResult, QueryError> {
+        if ck.lanes() != 0 {
+            return Err(QueryError::CheckpointMismatch {
+                what: "lanes",
+                expected: 0,
+                got: ck.lanes(),
+            });
+        }
+        if ck.dist.len() != self.num_vertices {
+            return Err(QueryError::CheckpointMismatch {
+                what: "vertices",
+                expected: self.num_vertices,
+                got: ck.dist.len(),
+            });
+        }
+        let root = ck.roots.first().copied().ok_or(QueryError::EmptyBatch)?;
+        let metrics = self.run_inner(root, Some(ck))?;
         Ok(TraversalResult {
             root,
             dist: self.nodes[0].d_local.clone(),
@@ -586,18 +727,19 @@ impl QuerySession {
     /// harness/bench hot loops that only consume the simulated clock and
     /// counters (one `O(V)` copy per query saved).
     pub fn run_metrics_only(&mut self, root: VertexId) -> Result<RunMetrics, QueryError> {
-        self.run_inner(root)
+        self.run_inner(root, None)
     }
 
-    fn run_inner(&mut self, root: VertexId) -> Result<RunMetrics, QueryError> {
+    fn run_inner(
+        &mut self,
+        root: VertexId,
+        resume: Option<&Checkpoint>,
+    ) -> Result<RunMetrics, QueryError> {
         if root as usize >= self.num_vertices {
             return Err(QueryError::RootOutOfRange { root, num_vertices: self.num_vertices });
         }
         let t0 = std::time::Instant::now();
         self.ensure_pool();
-        for n in &mut self.nodes {
-            n.init_root(root);
-        }
         let mut metrics = RunMetrics {
             graph_edges: self.graph_edges,
             ..Default::default()
@@ -606,10 +748,62 @@ impl QuerySession {
         // Direction-optimizing state (global statistics — the leader
         // computes these from per-node counts each level).
         let mut dir_state = DirOptState::new(self.graph_edges);
+        if let Some(ck) = resume {
+            // Seed every node to the state it would hold entering level
+            // `ck.level`: distances and visited bits for everything
+            // reached, the full-frontier bitmap and (owner-side) local
+            // queue for the checkpointed frontier `{v : dist[v] == level}`.
+            // Queue order differs from the original run's discovery order,
+            // but every downstream quantity (dedup via `visited`, degree
+            // sums, payload lengths) is order-independent.
+            for n in &mut self.nodes {
+                n.reset();
+                for (v, &d) in ck.dist.iter().enumerate() {
+                    if d == INF {
+                        continue;
+                    }
+                    let vid = v as VertexId;
+                    n.d_local[v] = d;
+                    n.visited.set(vid);
+                    if d == ck.level {
+                        n.frontier_full.set(vid);
+                        if n.owns(vid) {
+                            n.q_local.push(vid);
+                        }
+                    }
+                }
+            }
+            level = ck.level;
+            metrics.levels = ck.levels.clone();
+            dir_state = DirOptState {
+                bottom_up: ck.bottom_up,
+                prev_frontier: ck.prev_frontier,
+                m_unexplored: ck.m_unexplored,
+            };
+        } else {
+            for n in &mut self.nodes {
+                n.init_root(root);
+            }
+        }
+        let capture = self.capture_checkpoints();
+        let mut level_ckpt: Option<Checkpoint> = None;
         loop {
             let frontier = self.frontier_len();
             if frontier == 0 {
                 break;
+            }
+            if capture {
+                level_ckpt = Some(Checkpoint {
+                    level,
+                    roots: vec![root],
+                    batch: false,
+                    dist: self.nodes[0].d_local.clone(),
+                    bottom_up: dir_state.bottom_up,
+                    prev_frontier: dir_state.prev_frontier,
+                    m_unexplored: dir_state.m_unexplored,
+                    levels: metrics.levels.clone(),
+                    sync_rounds: 0,
+                });
             }
             // ---- Direction choice (contribution 3: independent of sync) ----
             let bottom_up = dir_state.step(
@@ -634,6 +828,10 @@ impl QuerySession {
 
             // ---- Phase 2: frontier synchronization ----
             let payloads = self.phase2(level);
+            let recovery = match self.check_faults(level, &payloads) {
+                Ok(r) => r,
+                Err(fail) => return Err(self.fault_failure(fail, level_ckpt.take())),
+            };
             let comm = simulate_topology(&self.schedule, &self.topology, |r, t| {
                 payloads[r][t]
             });
@@ -657,6 +855,12 @@ impl QuerySession {
                 l.fold_bytes = fb;
                 l.expand_messages = em;
                 l.expand_bytes = eb;
+            }
+            {
+                let l = metrics.levels.last_mut().expect("level just pushed");
+                l.retries = recovery.retries;
+                l.retry_bytes = recovery.retry_bytes;
+                l.recovery_time = recovery.recovery_time;
             }
 
             // Update the DO bookkeeping before queues rotate.
@@ -854,9 +1058,38 @@ impl QuerySession {
     /// [`Self::assert_batch_agreement`] checks the cross-node correctness
     /// invariant. Duplicate roots are allowed (independent lanes).
     pub fn run_batch(&mut self, roots: &[VertexId]) -> Result<BatchResult, QueryError> {
-        let metrics = self.run_batch_inner(roots)?;
+        let metrics = self.run_batch_inner(roots, None)?;
         Ok(BatchResult {
             roots: roots.to_vec(),
+            num_vertices: self.num_vertices,
+            dist: self
+                .batch_lanes
+                .node0_dist()
+                .expect("batch just ran")
+                .to_vec(),
+            metrics,
+        })
+    }
+
+    /// Resume a batched traversal from a level [`Checkpoint`] — the
+    /// batched analog of [`Self::resume`]: every node's lane state is
+    /// seeded from the checkpoint's lane-major distances and the batch
+    /// replays from the checkpointed level.
+    pub fn resume_batch(&mut self, ck: &Checkpoint) -> Result<BatchResult, QueryError> {
+        if ck.lanes() == 0 {
+            return Err(QueryError::CheckpointMismatch { what: "lanes", expected: 1, got: 0 });
+        }
+        if ck.dist.len() != ck.lanes() * self.num_vertices {
+            return Err(QueryError::CheckpointMismatch {
+                what: "vertices",
+                expected: ck.lanes() * self.num_vertices,
+                got: ck.dist.len(),
+            });
+        }
+        let roots = ck.roots.clone();
+        let metrics = self.run_batch_inner(&roots, Some(ck))?;
+        Ok(BatchResult {
+            roots,
             num_vertices: self.num_vertices,
             dist: self
                 .batch_lanes
@@ -873,7 +1106,7 @@ impl QuerySession {
         &mut self,
         roots: &[VertexId],
     ) -> Result<BatchMetrics, QueryError> {
-        self.run_batch_inner(roots)
+        self.run_batch_inner(roots, None)
     }
 
     /// Validate the batch and dispatch to the monomorphized level loop:
@@ -881,7 +1114,11 @@ impl QuerySession {
     /// `roots.len()`, floored by the configured
     /// [`BatchWidth`](super::config::BatchWidth) (so experiments can pin
     /// the wire format across batch sizes).
-    fn run_batch_inner(&mut self, roots: &[VertexId]) -> Result<BatchMetrics, QueryError> {
+    fn run_batch_inner(
+        &mut self,
+        roots: &[VertexId],
+        resume: Option<&Checkpoint>,
+    ) -> Result<BatchMetrics, QueryError> {
         if roots.is_empty() {
             return Err(QueryError::EmptyBatch);
         }
@@ -898,10 +1135,10 @@ impl QuerySession {
         }
         let words = self.config.batch_width.words().max(words_for_lanes(roots.len()));
         match words {
-            1 => self.run_batch_w::<1>(roots),
-            2 => self.run_batch_w::<2>(roots),
-            4 => self.run_batch_w::<4>(roots),
-            _ => self.run_batch_w::<8>(roots),
+            1 => self.run_batch_w::<1>(roots, resume),
+            2 => self.run_batch_w::<2>(roots, resume),
+            4 => self.run_batch_w::<4>(roots, resume),
+            _ => self.run_batch_w::<8>(roots, resume),
         }
     }
 
@@ -913,6 +1150,7 @@ impl QuerySession {
     fn run_batch_w<const W: usize>(
         &mut self,
         roots: &[VertexId],
+        resume: Option<&Checkpoint>,
     ) -> Result<BatchMetrics, QueryError>
     where
         MsBfsNodeState<W>: LaneSlot,
@@ -944,25 +1182,65 @@ impl QuerySession {
         };
         let track_full = !matches!(direction, DirectionMode::TopDown);
         let full: LaneMask<W> = full_lane_mask(b);
-        // Alg. 2 prologue, batched: every node marks every root's lane
-        // ("All CN set their d"); only the owner enqueues it locally. With
-        // a bottom-up-capable direction, every node also seeds the level-0
-        // full frontier (every node knows every root).
-        for (node, st) in self.nodes.iter().zip(states.iter_mut()) {
-            st.set_full_tracking(track_full);
-            for (lane, &r) in roots.iter().enumerate() {
-                let bit: LaneMask<W> = lane_bit(lane);
-                let base = r as usize * W;
-                st.seen[base + lane / 64] |= 1u64 << (lane % 64);
-                st.dist[lane * nv + r as usize] = 0;
-                if track_full {
-                    st.seed_full_frontier(r, &bit);
-                }
-                if node.owns(r) {
-                    if st.visit[base..base + W].iter().all(|&x| x == 0) {
-                        st.q_local.push(r);
+        if let Some(ck) = resume {
+            // Seed every node's lane state to what it would hold entering
+            // level `ck.level` (the batched analog of the single-root
+            // resume seeding): `seen` bits and distances for every reached
+            // `(vertex, lane)` pair, and the frontier masks
+            // `{(v, lane) : dist == level}` into the full-frontier array
+            // (every node) and the owner's visit mask + local queue.
+            for (node, st) in self.nodes.iter().zip(states.iter_mut()) {
+                st.set_full_tracking(track_full);
+                for v in 0..nv {
+                    let mut fmask: LaneMask<W> = [0u64; W];
+                    let mut any_frontier = false;
+                    for lane in 0..b {
+                        let d = ck.dist[lane * nv + v];
+                        if d == INF {
+                            continue;
+                        }
+                        st.seen[v * W + lane / 64] |= 1u64 << (lane % 64);
+                        st.dist[lane * nv + v] = d;
+                        if d == ck.level {
+                            fmask[lane / 64] |= 1u64 << (lane % 64);
+                            any_frontier = true;
+                        }
                     }
-                    st.visit[base + lane / 64] |= 1u64 << (lane % 64);
+                    if any_frontier {
+                        let vid = v as VertexId;
+                        if track_full {
+                            st.seed_full_frontier(vid, &fmask);
+                        }
+                        if node.owns(vid) {
+                            st.q_local.push(vid);
+                            for w in 0..W {
+                                st.visit[v * W + w] |= fmask[w];
+                            }
+                        }
+                    }
+                }
+            }
+        } else {
+            // Alg. 2 prologue, batched: every node marks every root's lane
+            // ("All CN set their d"); only the owner enqueues it locally.
+            // With a bottom-up-capable direction, every node also seeds the
+            // level-0 full frontier (every node knows every root).
+            for (node, st) in self.nodes.iter().zip(states.iter_mut()) {
+                st.set_full_tracking(track_full);
+                for (lane, &r) in roots.iter().enumerate() {
+                    let bit: LaneMask<W> = lane_bit(lane);
+                    let base = r as usize * W;
+                    st.seen[base + lane / 64] |= 1u64 << (lane % 64);
+                    st.dist[lane * nv + r as usize] = 0;
+                    if track_full {
+                        st.seed_full_frontier(r, &bit);
+                    }
+                    if node.owns(r) {
+                        if st.visit[base..base + W].iter().all(|&x| x == 0) {
+                            st.q_local.push(r);
+                        }
+                        st.visit[base + lane / 64] |= 1u64 << (lane % 64);
+                    }
                 }
             }
         }
@@ -974,6 +1252,13 @@ impl QuerySession {
         };
         self.ensure_pool();
         let mut level = 0u32;
+        if let Some(ck) = resume {
+            level = ck.level;
+            metrics.levels = ck.levels.clone();
+            metrics.sync_rounds = ck.sync_rounds;
+        }
+        let capture = self.capture_checkpoints();
+        let mut level_ckpt: Option<Checkpoint> = None;
         // Direction-optimizing state — the same growing/shrinking machine
         // the single-root `run` drives (shared `DirOptState`), on
         // *union-frontier* statistics: a vertex active in many lanes still
@@ -981,10 +1266,30 @@ impl QuerySession {
         // frontier vertices (in 2D, row-mates' block degrees sum to each
         // vertex's full degree).
         let mut dir_state = DirOptState::new(self.graph_edges);
+        if let Some(ck) = resume {
+            dir_state = DirOptState {
+                bottom_up: ck.bottom_up,
+                prev_frontier: ck.prev_frontier,
+                m_unexplored: ck.m_unexplored,
+            };
+        }
         loop {
             let frontier = self.batch_frontier_len(&states);
             if frontier == 0 {
                 break;
+            }
+            if capture {
+                level_ckpt = Some(Checkpoint {
+                    level,
+                    roots: roots.to_vec(),
+                    batch: true,
+                    dist: states[0].dist.clone(),
+                    bottom_up: dir_state.bottom_up,
+                    prev_frontier: dir_state.prev_frontier,
+                    m_unexplored: dir_state.m_unexplored,
+                    levels: metrics.levels.clone(),
+                    sync_rounds: metrics.sync_rounds,
+                });
             }
             // ---- Direction choice (independent of the sync pattern) ----
             let bottom_up = dir_state.step(
@@ -1034,6 +1339,13 @@ impl QuerySession {
 
             // ---- Phase 2: one exchange for the whole batch.
             let payloads = self.batch_phase2(&mut states, level, bottom_up);
+            let recovery = match self.check_faults(level, &payloads) {
+                Ok(r) => r,
+                Err(fail) => {
+                    LaneSlot::put(&mut self.batch_lanes, states);
+                    return Err(self.fault_failure(fail, level_ckpt.take()));
+                }
+            };
             let comm = simulate_topology(&self.schedule, &self.topology, |r, t| {
                 payloads[r][t]
             });
@@ -1066,6 +1378,9 @@ impl QuerySession {
                 sim_compute,
                 sim_comm: comm.total(),
                 bottom_up,
+                retries: recovery.retries,
+                retry_bytes: recovery.retry_bytes,
+                recovery_time: recovery.recovery_time,
             });
             metrics.sync_rounds += self.schedule.depth() as u64;
 

@@ -1,0 +1,57 @@
+//! FNV-1a payload checksums.
+//!
+//! The same 64-bit FNV-1a the `.bbfs` store uses for its container
+//! fingerprint, exposed as a standalone helper so the wire codec
+//! ([`super::wire`]) can frame a trailer checksum onto every transfer.
+//! FNV-1a is not cryptographic — it detects the fault model's bit flips
+//! and truncations (the `Corrupt` class), not an adversary.
+
+/// FNV-1a 64-bit offset basis.
+pub const FNV_OFFSET: u64 = 0xcbf2_9ce4_8422_2325;
+/// FNV-1a 64-bit prime.
+pub const FNV_PRIME: u64 = 0x0000_0100_0000_01b3;
+
+/// 64-bit FNV-1a over a byte slice.
+pub fn fnv1a64(bytes: &[u8]) -> u64 {
+    let mut h = FNV_OFFSET;
+    for &b in bytes {
+        h ^= u64::from(b);
+        h = h.wrapping_mul(FNV_PRIME);
+    }
+    h
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn reference_vectors() {
+        // Public-domain FNV-1a 64 test vectors (Noll's reference tables).
+        assert_eq!(fnv1a64(b""), 0xcbf2_9ce4_8422_2325);
+        assert_eq!(fnv1a64(b"a"), 0xaf63_dc4c_8601_ec8c);
+        assert_eq!(fnv1a64(b"foobar"), 0x8594_4171_f739_67e8);
+    }
+
+    #[test]
+    fn single_bit_flip_changes_hash() {
+        let base = b"the quick brown fox".to_vec();
+        let h0 = fnv1a64(&base);
+        for i in 0..base.len() {
+            for bit in 0..8 {
+                let mut flipped = base.clone();
+                flipped[i] ^= 1 << bit;
+                assert_ne!(fnv1a64(&flipped), h0, "byte {i} bit {bit}");
+            }
+        }
+    }
+
+    #[test]
+    fn truncation_changes_hash() {
+        let base = b"payload-payload-payload".to_vec();
+        let h0 = fnv1a64(&base);
+        for cut in 0..base.len() {
+            assert_ne!(fnv1a64(&base[..cut]), h0, "cut {cut}");
+        }
+    }
+}

@@ -1,0 +1,38 @@
+//! Deterministic fault injection and the recovery machinery it exercises.
+//!
+//! The ButterFly engine simulates a multi-node fabric; this module makes
+//! that fabric *adversarial* — deterministically, from a seed — and makes
+//! the rest of the stack survive it:
+//!
+//! * [`plan`] — the seeded [`FaultPlan`] (drop / corrupt / delay / kill,
+//!   addressable by level, round, src, dst), the [`FaultInjector`] that
+//!   fires it at the Phase-2 exchange seam, and the typed
+//!   [`ExchangeError`] detection classes. Retry pricing flows through
+//!   [`crate::net::sim::retransmit_time`] into the per-level `retries` /
+//!   `retry_bytes` / `recovery_time` counters on
+//!   [`crate::coordinator::LevelMetrics`].
+//! * [`checksum`] — the FNV-1a hash that lets corruption be *detected*
+//!   rather than silently merged.
+//! * [`wire`] — concrete framed byte encodings for the four negotiated
+//!   `MaskDelta` arms, checksum trailer included, with hardened typed
+//!   decode paths.
+//! * [`recovery`] — level-boundary [`Checkpoint`]s and the
+//!   [`FaultTolerantRunner`] that re-plans onto surviving ranks when a
+//!   rank dies and replays only the lost level.
+//!
+//! The headline invariant (CI-checked in `tests/fault_equivalence.rs`):
+//! under any injected `FaultPlan` that recovery tolerates, distances are
+//! bit-identical to the fault-free run — tolerated faults only ever cost
+//! time and bytes, never answers.
+
+pub mod checksum;
+pub mod plan;
+pub mod recovery;
+pub mod wire;
+
+pub use checksum::fnv1a64;
+pub use plan::{
+    ExchangeError, FaultFailure, FaultInjector, FaultKind, FaultPlan, FaultSpec, LevelRecovery,
+};
+pub use recovery::{degrade_config, Checkpoint, FaultTolerantRunner};
+pub use wire::{WireArm, WireDelta, WireError};

@@ -1,0 +1,647 @@
+//! Deterministic fault plans and the injector that applies them.
+//!
+//! A [`FaultPlan`] is a seeded, fully explicit schedule of faults against
+//! the Phase-2 exchange: each [`FaultSpec`] addresses one transfer by
+//! `(level, round, src, dst)` (or one rank, for [`FaultKind::KillRank`])
+//! and names the failure class. Because the engine *simulates* its
+//! interconnect, injection is exact and replayable: a dropped or corrupted
+//! transfer is detected (checksum/ack in a real fabric, see
+//! [`super::wire`]), re-sent up to [`FaultPlan::max_retries`] times with
+//! exponential backoff, and the retry traffic is priced through the same
+//! [`TopologyModel`] link classes as first-transmission traffic — so a
+//! tolerated fault changes *counters and simulated time only*, never the
+//! merged frontier, which is what makes the fault-equivalence property
+//! (`distances bit-identical to the fault-free run`) hold by construction.
+//!
+//! Faults addressing a `(round, src, dst)` combination the schedule never
+//! performs, or a transfer whose payload is empty, are inert — this keeps
+//! seeded generation ([`FaultPlan::generate`]) total without knowing the
+//! schedule shape. The whole module is mirrored line-for-line by the
+//! Python port (`python/bench_protocol_port.py`), which regenerates the
+//! committed `fault_recovery` bench section from the same arithmetic.
+
+use std::sync::atomic::{AtomicU32, Ordering};
+
+use crate::comm::pattern::Schedule;
+use crate::net::model::TopologyModel;
+use crate::net::sim::retransmit_time;
+use crate::util::json::Json;
+use crate::util::prng::SplitMix64;
+
+/// One fault class.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum FaultKind {
+    /// The transfer is lost `repeat` consecutive times (detected as a
+    /// missing frame; each loss costs one backoff + one retransmission).
+    Drop {
+        /// Consecutive losses before a delivery succeeds.
+        repeat: u32,
+    },
+    /// The payload arrives with flipped bits `repeat` consecutive times
+    /// (detected by the FNV-1a frame checksum; same retry arithmetic as
+    /// [`FaultKind::Drop`]).
+    Corrupt {
+        /// Consecutive corruptions before a delivery succeeds.
+        repeat: u32,
+    },
+    /// The transfer straggles: delivery is correct but `delay_us`
+    /// microseconds late (no retry, pure recovery-time cost).
+    Delay {
+        /// Added latency in microseconds.
+        delay_us: u64,
+    },
+    /// The rank named by [`FaultSpec::src`] dies at the spec's level. Not
+    /// recoverable in-session: the session surfaces
+    /// [`QueryError::RankDead`](crate::coordinator::session::QueryError::RankDead)
+    /// and a [`FaultTolerantRunner`](super::recovery::FaultTolerantRunner)
+    /// re-plans onto the survivors from the last level checkpoint.
+    KillRank,
+}
+
+impl FaultKind {
+    /// CLI/JSON spelling of the kind tag.
+    pub fn name(&self) -> &'static str {
+        match self {
+            FaultKind::Drop { .. } => "drop",
+            FaultKind::Corrupt { .. } => "corrupt",
+            FaultKind::Delay { .. } => "delay",
+            FaultKind::KillRank => "kill",
+        }
+    }
+}
+
+/// One addressed fault.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub struct FaultSpec {
+    /// BFS level the fault strikes at.
+    pub level: u32,
+    /// Schedule round within the level (ignored by [`FaultKind::KillRank`]).
+    pub round: usize,
+    /// Sending rank — or the dying rank for [`FaultKind::KillRank`].
+    pub src: u32,
+    /// Receiving rank (ignored by [`FaultKind::KillRank`]).
+    pub dst: u32,
+    /// Failure class.
+    pub kind: FaultKind,
+    /// How many times this spec may fire across the injector's lifetime;
+    /// `0` means unlimited. `1` models a transient fault a retry (or a
+    /// re-planned replay) sails past.
+    pub max_fires: u32,
+}
+
+impl FaultSpec {
+    /// JSON object form (the `--fault-plan` file format).
+    pub fn to_json(&self) -> Json {
+        let mut pairs = vec![
+            ("level", Json::u(u64::from(self.level))),
+            ("round", Json::u(self.round as u64)),
+            ("kind", Json::s(self.kind.name())),
+            ("fires", Json::u(u64::from(self.max_fires))),
+        ];
+        match self.kind {
+            FaultKind::KillRank => pairs.push(("rank", Json::u(u64::from(self.src)))),
+            _ => {
+                pairs.push(("src", Json::u(u64::from(self.src))));
+                pairs.push(("dst", Json::u(u64::from(self.dst))));
+            }
+        }
+        match self.kind {
+            FaultKind::Drop { repeat } | FaultKind::Corrupt { repeat } => {
+                pairs.push(("repeat", Json::u(u64::from(repeat))));
+            }
+            FaultKind::Delay { delay_us } => pairs.push(("delay_us", Json::u(delay_us))),
+            FaultKind::KillRank => {}
+        }
+        Json::obj(pairs)
+    }
+}
+
+/// A deterministic fault schedule plus the recovery budget it is retried
+/// under.
+#[derive(Clone, Debug, PartialEq, Eq)]
+pub struct FaultPlan {
+    /// Retry budget per faulted transfer: a drop/corrupt streak longer
+    /// than this surfaces
+    /// [`QueryError::Unrecoverable`](crate::coordinator::session::QueryError::Unrecoverable).
+    pub max_retries: u32,
+    /// Base backoff in microseconds; attempt `k` waits
+    /// `backoff_us · 2^(k-1)` before retransmitting.
+    pub backoff_us: u64,
+    /// The fault schedule, applied in order.
+    pub faults: Vec<FaultSpec>,
+}
+
+impl Default for FaultPlan {
+    fn default() -> Self {
+        Self { max_retries: 3, backoff_us: 10, faults: Vec::new() }
+    }
+}
+
+impl FaultPlan {
+    /// Expand a single seed into `count` faults addressed uniformly over
+    /// `levels × rounds × ranks²` via SplitMix64, cycling the recoverable
+    /// kinds (drop, corrupt, delay). Mirrored exactly by the Python port —
+    /// the committed bench fault schedule comes from here.
+    pub fn generate(seed: u64, count: usize, levels: u32, rounds: usize, ranks: u32) -> Self {
+        let mut sm = SplitMix64::new(seed);
+        let levels = u64::from(levels.max(1));
+        let rounds = rounds.max(1) as u64;
+        let ranks = u64::from(ranks.max(1));
+        let mut faults = Vec::with_capacity(count);
+        for k in 0..count {
+            let level = (sm.next_u64() % levels) as u32;
+            let round = (sm.next_u64() % rounds) as usize;
+            let src = (sm.next_u64() % ranks) as u32;
+            let dst = (sm.next_u64() % ranks) as u32;
+            let kind = match k % 3 {
+                0 => FaultKind::Drop { repeat: 1 },
+                1 => FaultKind::Corrupt { repeat: 1 },
+                _ => FaultKind::Delay { delay_us: 25 },
+            };
+            faults.push(FaultSpec { level, round, src, dst, kind, max_fires: 0 });
+        }
+        Self { faults, ..Self::default() }
+    }
+
+    /// True when any spec is a [`FaultKind::KillRank`] — sessions only
+    /// pay the per-level checkpoint clone when one could actually fire.
+    pub fn has_kill(&self) -> bool {
+        self.faults.iter().any(|f| f.kind == FaultKind::KillRank)
+    }
+
+    /// Seconds of exponential backoff before retry attempt `k` (1-based):
+    /// `backoff_us · 2^(k-1)`, exponent clamped to keep the arithmetic
+    /// finite for hostile plans.
+    pub fn backoff_seconds(&self, attempt: u32) -> f64 {
+        let exp = attempt.saturating_sub(1).min(20);
+        self.backoff_us as f64 * 1e-6 * (1u64 << exp) as f64
+    }
+
+    /// JSON form (the `--fault-plan` file format).
+    pub fn to_json(&self) -> Json {
+        Json::obj(vec![
+            ("max_retries", Json::u(u64::from(self.max_retries))),
+            ("backoff_us", Json::u(self.backoff_us)),
+            ("faults", Json::Arr(self.faults.iter().map(FaultSpec::to_json).collect())),
+        ])
+    }
+
+    /// Parse the `--fault-plan` JSON document.
+    pub fn parse_str(text: &str) -> Result<Self, String> {
+        Self::from_json(&Json::parse(text)?)
+    }
+
+    /// Decode from a parsed JSON value.
+    pub fn from_json(json: &Json) -> Result<Self, String> {
+        let u = |j: &Json, key: &str, default: Option<u64>| -> Result<u64, String> {
+            match j.get(key) {
+                Some(v) => v.as_u64().ok_or_else(|| format!("fault plan: `{key}` not a u64")),
+                None => default.ok_or_else(|| format!("fault plan: missing `{key}`")),
+            }
+        };
+        let defaults = Self::default();
+        let max_retries = u(json, "max_retries", Some(u64::from(defaults.max_retries)))? as u32;
+        let backoff_us = u(json, "backoff_us", Some(defaults.backoff_us))?;
+        let arr = json
+            .get("faults")
+            .and_then(Json::as_arr)
+            .ok_or("fault plan: missing `faults` array")?;
+        let mut faults = Vec::with_capacity(arr.len());
+        for f in arr {
+            let kind_name = f
+                .get("kind")
+                .and_then(Json::as_str)
+                .ok_or("fault plan: fault missing `kind`")?;
+            let level = u(f, "level", None)? as u32;
+            let max_fires = u(f, "fires", Some(0))? as u32;
+            let (kind, src, dst, round) = match kind_name {
+                "drop" => (
+                    FaultKind::Drop { repeat: u(f, "repeat", Some(1))? as u32 },
+                    u(f, "src", None)? as u32,
+                    u(f, "dst", None)? as u32,
+                    u(f, "round", Some(0))? as usize,
+                ),
+                "corrupt" => (
+                    FaultKind::Corrupt { repeat: u(f, "repeat", Some(1))? as u32 },
+                    u(f, "src", None)? as u32,
+                    u(f, "dst", None)? as u32,
+                    u(f, "round", Some(0))? as usize,
+                ),
+                "delay" => (
+                    FaultKind::Delay { delay_us: u(f, "delay_us", Some(25))? },
+                    u(f, "src", None)? as u32,
+                    u(f, "dst", None)? as u32,
+                    u(f, "round", Some(0))? as usize,
+                ),
+                "kill" => {
+                    let rank = match f.get("rank") {
+                        Some(v) => {
+                            v.as_u64().ok_or("fault plan: `rank` not a u64")? as u32
+                        }
+                        None => u(f, "src", None)? as u32,
+                    };
+                    (FaultKind::KillRank, rank, 0, 0)
+                }
+                other => return Err(format!("fault plan: unknown kind `{other}`")),
+            };
+            faults.push(FaultSpec { level, round, src, dst, kind, max_fires });
+        }
+        Ok(Self { max_retries, backoff_us, faults })
+    }
+}
+
+/// Typed detection outcome of a failed Phase-2 exchange.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum ExchangeError {
+    /// A transfer's frame checksum kept failing past the retry budget.
+    Corrupt {
+        /// BFS level of the exchange.
+        level: u32,
+        /// Schedule round within the level.
+        round: usize,
+        /// Sending rank.
+        src: u32,
+        /// Receiving rank.
+        dst: u32,
+    },
+    /// A transfer kept going missing (no frame at all) past the retry
+    /// budget.
+    Missing {
+        /// BFS level of the exchange.
+        level: u32,
+        /// Schedule round within the level.
+        round: usize,
+        /// Sending rank.
+        src: u32,
+        /// Receiving rank.
+        dst: u32,
+    },
+    /// A rank stopped responding entirely.
+    RankDead {
+        /// The dead rank.
+        rank: u32,
+        /// Level at which it died.
+        level: u32,
+    },
+}
+
+impl std::fmt::Display for ExchangeError {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        match *self {
+            ExchangeError::Corrupt { level, round, src, dst } => write!(
+                f,
+                "corrupt transfer {src}->{dst} (level {level}, round {round})"
+            ),
+            ExchangeError::Missing { level, round, src, dst } => write!(
+                f,
+                "missing transfer {src}->{dst} (level {level}, round {round})"
+            ),
+            ExchangeError::RankDead { rank, level } => {
+                write!(f, "rank {rank} dead at level {level}")
+            }
+        }
+    }
+}
+
+impl std::error::Error for ExchangeError {}
+
+/// Recovery accounting for one level's exchange: what surviving the
+/// injected faults cost on top of the fault-free schedule.
+#[derive(Clone, Copy, Debug, Default, PartialEq)]
+pub struct LevelRecovery {
+    /// Retransmissions performed.
+    pub retries: u64,
+    /// Bytes re-shipped by those retransmissions.
+    pub retry_bytes: u64,
+    /// Simulated seconds of backoff + retransmission + straggler delay.
+    pub recovery_time: f64,
+}
+
+/// An unrecoverable exchange failure: the typed error plus how many
+/// retries were burned before giving up.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub struct FaultFailure {
+    /// What was detected.
+    pub error: ExchangeError,
+    /// Retry attempts consumed before surfacing.
+    pub attempts: u32,
+}
+
+/// Applies a [`FaultPlan`] to live exchanges, tracking per-spec fire
+/// counts (so `max_fires: 1` faults are transient across serve retries
+/// and re-planned replays) behind interior mutability — sessions share
+/// one injector through an `Arc`.
+#[derive(Debug)]
+pub struct FaultInjector {
+    plan: FaultPlan,
+    fired: Vec<AtomicU32>,
+}
+
+impl FaultInjector {
+    /// Wrap a plan with zeroed fire counters.
+    pub fn new(plan: FaultPlan) -> Self {
+        let fired = plan.faults.iter().map(|_| AtomicU32::new(0)).collect();
+        Self { plan, fired }
+    }
+
+    /// The wrapped plan.
+    pub fn plan(&self) -> &FaultPlan {
+        &self.plan
+    }
+
+    /// Reset all fire counters (fresh deterministic run).
+    pub fn reset(&self) {
+        for c in &self.fired {
+            c.store(0, Ordering::Relaxed);
+        }
+    }
+
+    /// How many times each spec has fired so far (plan order).
+    pub fn fired_counts(&self) -> Vec<u32> {
+        self.fired.iter().map(|c| c.load(Ordering::Relaxed)).collect()
+    }
+
+    /// Number of specs that have fired at least once.
+    pub fn specs_matched(&self) -> usize {
+        self.fired.iter().filter(|c| c.load(Ordering::Relaxed) > 0).count()
+    }
+
+    fn try_fire(&self, idx: usize) -> bool {
+        let prev = self.fired[idx].fetch_add(1, Ordering::Relaxed);
+        let cap = self.plan.faults[idx].max_fires;
+        cap == 0 || prev < cap
+    }
+
+    /// Apply every fault addressed at `level` against the exchange the
+    /// session just performed (`payloads[round][transfer]` in the same
+    /// shape `simulate_topology` prices), returning the recovery
+    /// accounting, or the typed failure when the budget is exhausted or a
+    /// rank dies. Specs addressing a transfer the schedule never performs,
+    /// or one with an empty payload, are inert.
+    pub fn apply_level(
+        &self,
+        level: u32,
+        schedule: &Schedule,
+        payloads: &[Vec<u64>],
+        topo: &TopologyModel,
+    ) -> Result<LevelRecovery, FaultFailure> {
+        let mut rec = LevelRecovery::default();
+        for (idx, spec) in self.plan.faults.iter().enumerate() {
+            if spec.level != level {
+                continue;
+            }
+            if spec.kind == FaultKind::KillRank {
+                if spec.src < schedule.num_nodes && self.try_fire(idx) {
+                    return Err(FaultFailure {
+                        error: ExchangeError::RankDead { rank: spec.src, level },
+                        attempts: 0,
+                    });
+                }
+                continue;
+            }
+            let Some(round) = schedule.rounds.get(spec.round) else { continue };
+            let Some(ti) =
+                round.iter().position(|t| t.src == spec.src && t.dst == spec.dst)
+            else {
+                continue;
+            };
+            let bytes = payloads
+                .get(spec.round)
+                .and_then(|r| r.get(ti))
+                .copied()
+                .unwrap_or(0);
+            if bytes == 0 || !self.try_fire(idx) {
+                continue;
+            }
+            match spec.kind {
+                FaultKind::Delay { delay_us } => {
+                    rec.recovery_time += delay_us as f64 * 1e-6;
+                }
+                FaultKind::Drop { repeat } | FaultKind::Corrupt { repeat } => {
+                    if repeat > self.plan.max_retries {
+                        let error = match spec.kind {
+                            FaultKind::Drop { .. } => ExchangeError::Missing {
+                                level,
+                                round: spec.round,
+                                src: spec.src,
+                                dst: spec.dst,
+                            },
+                            _ => ExchangeError::Corrupt {
+                                level,
+                                round: spec.round,
+                                src: spec.src,
+                                dst: spec.dst,
+                            },
+                        };
+                        return Err(FaultFailure { error, attempts: self.plan.max_retries });
+                    }
+                    for attempt in 1..=repeat {
+                        rec.retries += 1;
+                        rec.retry_bytes += bytes;
+                        rec.recovery_time += self.plan.backoff_seconds(attempt)
+                            + retransmit_time(topo, spec.src, spec.dst, bytes);
+                    }
+                }
+                FaultKind::KillRank => unreachable!("handled above"),
+            }
+        }
+        Ok(rec)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::comm::pattern::Transfer;
+    use crate::net::model::NetModel;
+
+    fn schedule() -> Schedule {
+        Schedule {
+            num_nodes: 4,
+            rounds: vec![
+                vec![Transfer { src: 0, dst: 1 }, Transfer { src: 2, dst: 3 }],
+                vec![Transfer { src: 1, dst: 2 }],
+            ],
+        }
+    }
+
+    fn topo() -> TopologyModel {
+        TopologyModel::uniform(NetModel::dgx2())
+    }
+
+    #[test]
+    fn generate_is_deterministic_and_in_range() {
+        let a = FaultPlan::generate(23, 9, 4, 2, 16);
+        let b = FaultPlan::generate(23, 9, 4, 2, 16);
+        assert_eq!(a, b);
+        assert_eq!(a.faults.len(), 9);
+        for (k, f) in a.faults.iter().enumerate() {
+            assert!(f.level < 4 && f.round < 2 && f.src < 16 && f.dst < 16);
+            match k % 3 {
+                0 => assert!(matches!(f.kind, FaultKind::Drop { repeat: 1 })),
+                1 => assert!(matches!(f.kind, FaultKind::Corrupt { repeat: 1 })),
+                _ => assert!(matches!(f.kind, FaultKind::Delay { delay_us: 25 })),
+            }
+        }
+        assert_ne!(a, FaultPlan::generate(24, 9, 4, 2, 16));
+    }
+
+    #[test]
+    fn json_roundtrip() {
+        let mut plan = FaultPlan::generate(7, 6, 3, 2, 8);
+        plan.faults.push(FaultSpec {
+            level: 2,
+            round: 0,
+            src: 5,
+            dst: 0,
+            kind: FaultKind::KillRank,
+            max_fires: 1,
+        });
+        let text = plan.to_json().render();
+        let back = FaultPlan::parse_str(&text).unwrap();
+        assert_eq!(plan, back);
+    }
+
+    #[test]
+    fn parse_rejects_garbage() {
+        assert!(FaultPlan::parse_str("not json").is_err());
+        assert!(FaultPlan::parse_str("{}").is_err());
+        assert!(FaultPlan::parse_str(r#"{"faults":[{"kind":"frobnicate","level":0}]}"#)
+            .is_err());
+        assert!(FaultPlan::parse_str(r#"{"faults":[{"kind":"drop","level":0}]}"#).is_err());
+    }
+
+    #[test]
+    fn tolerated_drop_prices_backoff_plus_retransmit() {
+        let plan = FaultPlan {
+            faults: vec![FaultSpec {
+                level: 1,
+                round: 0,
+                src: 0,
+                dst: 1,
+                kind: FaultKind::Drop { repeat: 2 },
+                max_fires: 0,
+            }],
+            ..FaultPlan::default()
+        };
+        let inj = FaultInjector::new(plan.clone());
+        let payloads = vec![vec![1000, 500], vec![250]];
+        // Wrong level: inert.
+        let r0 = inj.apply_level(0, &schedule(), &payloads, &topo()).unwrap();
+        assert_eq!(r0, LevelRecovery::default());
+        let r1 = inj.apply_level(1, &schedule(), &payloads, &topo()).unwrap();
+        assert_eq!(r1.retries, 2);
+        assert_eq!(r1.retry_bytes, 2000);
+        let wire = 2.0e-6 + 1000.0 / 25.0e9;
+        let want = (plan.backoff_seconds(1) + wire) + (plan.backoff_seconds(2) + wire);
+        assert!((r1.recovery_time - want).abs() < 1e-15);
+    }
+
+    #[test]
+    fn unmatched_and_empty_transfers_are_inert() {
+        let plan = FaultPlan {
+            faults: vec![
+                // No such transfer in round 0.
+                FaultSpec {
+                    level: 0,
+                    round: 0,
+                    src: 1,
+                    dst: 0,
+                    kind: FaultKind::Drop { repeat: 1 },
+                    max_fires: 0,
+                },
+                // Round out of range.
+                FaultSpec {
+                    level: 0,
+                    round: 9,
+                    src: 0,
+                    dst: 1,
+                    kind: FaultKind::Corrupt { repeat: 1 },
+                    max_fires: 0,
+                },
+                // Matching transfer but empty payload.
+                FaultSpec {
+                    level: 0,
+                    round: 1,
+                    src: 1,
+                    dst: 2,
+                    kind: FaultKind::Drop { repeat: 1 },
+                    max_fires: 0,
+                },
+            ],
+            ..FaultPlan::default()
+        };
+        let inj = FaultInjector::new(plan);
+        let payloads = vec![vec![1000, 500], vec![0]];
+        let r = inj.apply_level(0, &schedule(), &payloads, &topo()).unwrap();
+        assert_eq!(r, LevelRecovery::default());
+        assert_eq!(inj.specs_matched(), 0);
+    }
+
+    #[test]
+    fn budget_exhaustion_is_typed() {
+        let plan = FaultPlan {
+            max_retries: 3,
+            faults: vec![FaultSpec {
+                level: 0,
+                round: 0,
+                src: 0,
+                dst: 1,
+                kind: FaultKind::Corrupt { repeat: 4 },
+                max_fires: 0,
+            }],
+            ..FaultPlan::default()
+        };
+        let inj = FaultInjector::new(plan);
+        let payloads = vec![vec![1000, 500], vec![250]];
+        let err = inj.apply_level(0, &schedule(), &payloads, &topo()).unwrap_err();
+        assert_eq!(err.attempts, 3);
+        assert!(matches!(err.error, ExchangeError::Corrupt { src: 0, dst: 1, .. }));
+    }
+
+    #[test]
+    fn kill_rank_fires_then_respects_max_fires() {
+        let plan = FaultPlan {
+            faults: vec![FaultSpec {
+                level: 1,
+                round: 0,
+                src: 3,
+                dst: 0,
+                kind: FaultKind::KillRank,
+                max_fires: 1,
+            }],
+            ..FaultPlan::default()
+        };
+        let inj = FaultInjector::new(plan);
+        let payloads = vec![vec![1000, 500], vec![250]];
+        let err = inj.apply_level(1, &schedule(), &payloads, &topo()).unwrap_err();
+        assert_eq!(err.error, ExchangeError::RankDead { rank: 3, level: 1 });
+        // Second replay of the same level: the once-only kill is spent.
+        let r = inj.apply_level(1, &schedule(), &payloads, &topo()).unwrap();
+        assert_eq!(r, LevelRecovery::default());
+        // reset() re-arms it.
+        inj.reset();
+        assert!(inj.apply_level(1, &schedule(), &payloads, &topo()).is_err());
+    }
+
+    #[test]
+    fn delay_adds_pure_latency() {
+        let plan = FaultPlan {
+            faults: vec![FaultSpec {
+                level: 0,
+                round: 1,
+                src: 1,
+                dst: 2,
+                kind: FaultKind::Delay { delay_us: 40 },
+                max_fires: 0,
+            }],
+            ..FaultPlan::default()
+        };
+        let inj = FaultInjector::new(plan);
+        let payloads = vec![vec![1000, 500], vec![250]];
+        let r = inj.apply_level(0, &schedule(), &payloads, &topo()).unwrap();
+        assert_eq!(r.retries, 0);
+        assert_eq!(r.retry_bytes, 0);
+        assert!((r.recovery_time - 40.0e-6).abs() < 1e-18);
+    }
+}

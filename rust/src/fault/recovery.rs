@@ -1,0 +1,356 @@
+//! Level-boundary checkpoints and kill-rank recovery.
+//!
+//! A level-boundary [`Checkpoint`] is cheap because the engine's `dist`
+//! array already *is* one: entering level `L`, the frontier is exactly
+//! `{v : dist[v] == L}` and the seen set is `dist != INF`, so a snapshot
+//! of the distances (plus the direction-optimizer scalars and the metrics
+//! accumulated so far) fully determines the rest of the traversal.
+//!
+//! When a [`FaultPlan`](crate::fault::plan::FaultPlan) kills a rank, the
+//! session surfaces [`QueryError::RankDead`] and stashes the checkpoint it
+//! captured at the top of the lost level. [`FaultTolerantRunner`] then
+//! *degrades* the engine configuration onto the surviving ranks
+//! ([`degrade_config`]), rebuilds the plan, and replays only the lost
+//! level via [`QuerySession::resume`] / [`QuerySession::resume_batch`] —
+//! the headline invariant is that the answer is bit-identical to the
+//! fault-free run, because the checkpoint pins the exact per-vertex
+//! distances and re-partitioning only changes *who owns* each vertex,
+//! never what is discovered.
+
+use std::sync::Arc;
+
+use crate::coordinator::{
+    BatchResult, EngineConfig, LevelMetrics, PartitionMode, PlanError, QueryError, QuerySession,
+    TraversalPlan, TraversalResult,
+};
+use crate::fault::plan::{FaultInjector, FaultPlan};
+use crate::graph::{Csr, VertexId};
+use crate::net::TopologyModel;
+
+/// A level-boundary snapshot of a traversal, sufficient to replay the
+/// level it was taken at (and everything after) on *any* plan over the
+/// same graph — including a re-cut plan with fewer ranks.
+#[derive(Clone, Debug)]
+pub struct Checkpoint {
+    /// The level about to be expanded when the snapshot was taken.
+    pub level: u32,
+    /// The query's roots (one entry for a single-root `run`).
+    pub roots: Vec<VertexId>,
+    /// Whether this snapshots a batched (`run_batch`) query; single-root
+    /// checkpoints resume through [`QuerySession::resume`], batched ones
+    /// through [`QuerySession::resume_batch`].
+    pub batch: bool,
+    /// Distances discovered so far: `dist[v]` for single-root snapshots,
+    /// lane-major `dist[lane * num_vertices + v]` for batched ones —
+    /// `u32::MAX` for unreached. The frontier entering
+    /// [`level`](Self::level) is every pair with `dist == level`.
+    pub dist: Vec<u32>,
+    /// Direction-optimizer state: whether the previous level ran
+    /// bottom-up.
+    pub bottom_up: bool,
+    /// Direction-optimizer state: the previous level's frontier size.
+    pub prev_frontier: u64,
+    /// Direction-optimizer state: unclaimed edge mass.
+    pub m_unexplored: u64,
+    /// Per-level metrics accumulated before this level (replay appends to
+    /// these, so the merged run reports every level exactly once).
+    pub levels: Vec<LevelMetrics>,
+    /// Synchronization rounds accumulated before this level.
+    pub sync_rounds: u64,
+}
+
+impl Checkpoint {
+    /// Number of batch lanes this checkpoint carries: `roots.len()` for a
+    /// batched snapshot, 0 for a single-root one.
+    pub fn lanes(&self) -> usize {
+        if self.batch {
+            self.roots.len()
+        } else {
+            0
+        }
+    }
+}
+
+/// Shrink an engine configuration onto the ranks surviving the death of
+/// `dead_rank`, or `None` when no smaller configuration exists (a single
+/// surviving rank cannot lose another).
+///
+/// * **1D** re-cuts the edge-balanced slab partition over `n - 1` ranks.
+/// * **2D** falls back to a 1D butterfly cut over `n - 1` ranks — a
+///   checkerboard cannot drop one cell and stay rectangular.
+/// * **Hierarchical** shrinks the island layout: every island gives up one
+///   local rank (`per_island - 1`) while the island count holds, so the
+///   affected island's load spreads without re-tiering the fabric; once
+///   islands are singletons, a whole island is dropped instead. A
+///   configured [`TopologyModel`] is re-derived with the new island width
+///   so pricing stays consistent.
+pub fn degrade_config(cfg: &EngineConfig, dead_rank: u32) -> Option<EngineConfig> {
+    let _ = dead_rank; // the re-cut excludes the rank by shrinking the count
+    if cfg.num_nodes <= 1 {
+        return None;
+    }
+    let mut next = cfg.clone();
+    match cfg.partition {
+        PartitionMode::OneD => {
+            next.num_nodes = cfg.num_nodes - 1;
+        }
+        PartitionMode::TwoD { .. } => {
+            next.partition = PartitionMode::OneD;
+            next.num_nodes = cfg.num_nodes - 1;
+        }
+        PartitionMode::Hierarchical { islands, per_island } => {
+            let (islands, per_island) = if per_island > 1 {
+                (islands, per_island - 1)
+            } else if islands > 1 {
+                (islands - 1, 1)
+            } else {
+                return None;
+            };
+            next.partition = PartitionMode::Hierarchical { islands, per_island };
+            next.num_nodes = (islands * per_island) as usize;
+            next.topology = cfg
+                .topology
+                .map(|t| TopologyModel { per_island: per_island.max(1), ..t });
+        }
+    }
+    Some(next)
+}
+
+/// Builds a [`TraversalPlan`] for a (degraded) configuration during
+/// recovery.
+pub type PlanRebuild = dyn Fn(&EngineConfig) -> Result<TraversalPlan, PlanError> + Send + Sync;
+
+/// Drives queries through detect → retry → degrade recovery: tolerated
+/// drop/corrupt/delay faults are absorbed (priced) inside the session,
+/// while a [`QueryError::RankDead`] triggers a re-plan onto the surviving
+/// ranks and a resume from the stashed level checkpoint.
+///
+/// The runner holds the [`FaultInjector`] across re-plans, so per-spec
+/// `max_fires` budgets persist: a kill with `max_fires: 1` fires once and
+/// then stays quiet on the degraded plan. An unlimited kill naturally
+/// stops firing once the degraded rank count drops at or below the dying
+/// rank's index, and the degradation ladder itself is finite — so
+/// recovery always terminates, either with an answer or a typed error.
+pub struct FaultTolerantRunner {
+    plan: Arc<TraversalPlan>,
+    injector: Arc<FaultInjector>,
+    rebuild: Box<PlanRebuild>,
+    degraded: Option<Arc<TraversalPlan>>,
+}
+
+impl FaultTolerantRunner {
+    /// Wrap an existing plan with a fault plan and a rebuild callback
+    /// (invoked with the degraded [`EngineConfig`] after a rank death).
+    pub fn new(plan: Arc<TraversalPlan>, faults: FaultPlan, rebuild: Box<PlanRebuild>) -> Self {
+        Self {
+            plan,
+            injector: Arc::new(FaultInjector::new(faults)),
+            rebuild,
+            degraded: None,
+        }
+    }
+
+    /// Convenience constructor: build the initial plan from a graph and
+    /// keep a copy of the graph for rebuilds.
+    pub fn from_graph(g: &Csr, config: EngineConfig, faults: FaultPlan) -> Result<Self, PlanError> {
+        let plan = Arc::new(TraversalPlan::build(g, config)?);
+        let graph = g.clone();
+        Ok(Self::new(
+            plan,
+            faults,
+            Box::new(move |cfg| TraversalPlan::build(&graph, cfg.clone())),
+        ))
+    }
+
+    /// The shared fault injector (e.g. to inspect fired counts).
+    pub fn injector(&self) -> &Arc<FaultInjector> {
+        &self.injector
+    }
+
+    /// Whether a rank death forced a re-plan onto fewer ranks.
+    pub fn is_degraded(&self) -> bool {
+        self.degraded.is_some()
+    }
+
+    /// The degraded plan, once a rank death forced one.
+    pub fn degraded_plan(&self) -> Option<&Arc<TraversalPlan>> {
+        self.degraded.as_ref()
+    }
+
+    /// The plan queries currently run on: the degraded plan if a rank has
+    /// died, the original otherwise.
+    pub fn active_plan(&self) -> &Arc<TraversalPlan> {
+        self.degraded.as_ref().unwrap_or(&self.plan)
+    }
+
+    fn armed_session(&self) -> QuerySession {
+        let mut session = self.active_plan().session();
+        session.arm_faults(Some(self.injector.clone()));
+        session
+    }
+
+    /// Degrade onto the surviving ranks after `rank` died at `level`,
+    /// returning a fresh armed session over the re-built plan. Surfaces
+    /// the original [`QueryError::RankDead`] when no smaller
+    /// configuration exists or the rebuild fails: recovery never
+    /// substitutes a wrong answer for a typed error.
+    fn degrade(&mut self, rank: u32, level: u32) -> Result<QuerySession, QueryError> {
+        let died = QueryError::RankDead { rank, level };
+        let next = degrade_config(self.active_plan().config(), rank).ok_or(died)?;
+        let plan = (self.rebuild)(&next).map_err(|_| died)?;
+        let plan = Arc::new(plan);
+        self.degraded = Some(plan);
+        Ok(self.armed_session())
+    }
+
+    /// Run a single-root traversal under the fault plan, recovering from
+    /// rank deaths by degrade + resume.
+    pub fn run(&mut self, root: VertexId) -> Result<TraversalResult, QueryError> {
+        let mut session = self.armed_session();
+        let mut pending: Option<Checkpoint> = None;
+        loop {
+            let attempt = match &pending {
+                Some(ck) => session.resume(ck),
+                None => session.run(root),
+            };
+            match attempt {
+                Err(QueryError::RankDead { rank, level }) => {
+                    let ck = session
+                        .take_checkpoint()
+                        .ok_or(QueryError::RankDead { rank, level })?;
+                    session = self.degrade(rank, level)?;
+                    pending = Some(ck);
+                }
+                other => return other,
+            }
+        }
+    }
+
+    /// Run a batched traversal under the fault plan, recovering from rank
+    /// deaths by degrade + resume.
+    pub fn run_batch(&mut self, roots: &[VertexId]) -> Result<BatchResult, QueryError> {
+        let mut session = self.armed_session();
+        let mut pending: Option<Checkpoint> = None;
+        loop {
+            let attempt = match &pending {
+                Some(ck) => session.resume_batch(ck),
+                None => session.run_batch(roots),
+            };
+            match attempt {
+                Err(QueryError::RankDead { rank, level }) => {
+                    let ck = session
+                        .take_checkpoint()
+                        .ok_or(QueryError::RankDead { rank, level })?;
+                    session = self.degrade(rank, level)?;
+                    pending = Some(ck);
+                }
+                other => return other,
+            }
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::fault::plan::{FaultKind, FaultSpec};
+
+    fn ring(n: usize) -> Csr {
+        let mut edges = Vec::new();
+        for v in 0..n as VertexId {
+            let w = ((v as usize + 1) % n) as VertexId;
+            edges.push((v, w));
+            edges.push((w, v));
+        }
+        Csr::from_edges(n, &edges)
+    }
+
+    fn kill_plan(rank: u32, level: u32) -> FaultPlan {
+        FaultPlan {
+            faults: vec![FaultSpec {
+                level,
+                round: 0,
+                src: rank,
+                dst: 0,
+                kind: FaultKind::KillRank,
+                max_fires: 1,
+            }],
+            ..FaultPlan::default()
+        }
+    }
+
+    #[test]
+    fn degrade_ladder_shrinks_every_mode() {
+        let one_d = EngineConfig::dgx2(4, 2);
+        let d = degrade_config(&one_d, 2).unwrap();
+        assert_eq!(d.num_nodes, 3);
+        assert_eq!(d.partition, PartitionMode::OneD);
+
+        let two_d = EngineConfig::dgx2_2d(2, 2);
+        let d = degrade_config(&two_d, 0).unwrap();
+        assert_eq!(d.partition, PartitionMode::OneD);
+        assert_eq!(d.num_nodes, 3);
+
+        let hier = EngineConfig::dgx2_cluster_hier(2, 2, 2);
+        let d = degrade_config(&hier, 3).unwrap();
+        assert_eq!(d.partition, PartitionMode::Hierarchical { islands: 2, per_island: 1 });
+        assert_eq!(d.num_nodes, 2);
+        assert_eq!(d.topology.unwrap().per_island, 1);
+        let d2 = degrade_config(&d, 1).unwrap();
+        assert_eq!(d2.partition, PartitionMode::Hierarchical { islands: 1, per_island: 1 });
+        assert_eq!(d2.num_nodes, 1);
+        assert!(degrade_config(&d2, 0).is_none());
+    }
+
+    #[test]
+    fn single_rank_cannot_degrade() {
+        let cfg = EngineConfig::dgx2(1, 2);
+        assert!(degrade_config(&cfg, 0).is_none());
+    }
+
+    #[test]
+    fn killed_rank_recovers_with_identical_distances() {
+        let g = ring(64);
+        let cfg = EngineConfig::dgx2(4, 2);
+        let baseline = {
+            let plan = TraversalPlan::build(&g, cfg.clone()).unwrap();
+            plan.session().run(0).unwrap().dist().to_vec()
+        };
+        let mut runner = FaultTolerantRunner::from_graph(&g, cfg, kill_plan(2, 3)).unwrap();
+        let got = runner.run(0).unwrap();
+        assert!(runner.is_degraded());
+        assert_eq!(runner.active_plan().config().num_nodes, 3);
+        assert_eq!(got.dist(), &baseline[..]);
+    }
+
+    #[test]
+    fn killed_rank_recovers_batches_too() {
+        let g = ring(48);
+        let cfg = EngineConfig::dgx2(4, 2);
+        let roots: Vec<VertexId> = vec![0, 7, 31];
+        let baseline = {
+            let plan = TraversalPlan::build(&g, cfg.clone()).unwrap();
+            let r = plan.session().run_batch(&roots).unwrap();
+            (0..roots.len()).map(|l| r.dist(l).to_vec()).collect::<Vec<_>>()
+        };
+        let mut runner = FaultTolerantRunner::from_graph(&g, cfg, kill_plan(1, 2)).unwrap();
+        let got = runner.run_batch(&roots).unwrap();
+        assert!(runner.is_degraded());
+        for (lane, want) in baseline.iter().enumerate() {
+            assert_eq!(got.dist(lane), &want[..], "lane {lane}");
+        }
+    }
+
+    #[test]
+    fn unrecoverable_kill_surfaces_rank_dead() {
+        // A single-rank engine has no smaller configuration; the typed
+        // error comes back instead of a wrong answer.
+        let g = ring(16);
+        let cfg = EngineConfig::dgx2(1, 2);
+        let mut runner = FaultTolerantRunner::from_graph(&g, cfg, kill_plan(0, 1)).unwrap();
+        match runner.run(0) {
+            Err(QueryError::RankDead { rank: 0, .. }) => {}
+            other => panic!("expected RankDead, got {other:?}"),
+        }
+    }
+}

@@ -1,0 +1,767 @@
+//! Framed `MaskDelta` wire codec with an FNV-1a trailer checksum.
+//!
+//! The engine *simulates* its interconnect, so Phase-2 transfers normally
+//! exist only as priced byte counts (the negotiated
+//! [`mask_delta_bytes`](crate::bfs::msbfs::mask_delta_bytes) arms). This
+//! module pins down the concrete byte format those prices describe — one
+//! frame per transfer, carrying one of the four negotiated serializations
+//! of a `(vertex, lane-mask)` delta — so that the fault model's `Corrupt`
+//! class is a real, detectable event: every frame ends in a 64-bit FNV-1a
+//! checksum ([`super::checksum::fnv1a64`]) over everything before it, and
+//! [`WireDelta::decode`] verifies it before trusting a single field.
+//!
+//! Decoding is hardened the same way the PR-7 snapshot corpus demanded of
+//! `.bbfs` files: every length is validated against the actual buffer
+//! *before* any allocation, counts are cross-checked against the payload
+//! they claim to describe, and every failure class is a typed
+//! [`WireError`] — truncation, bit flips, oversized counts, hostile lane
+//! or vertex indices — never a panic or an unbounded `Vec::with_capacity`.
+//!
+//! Frame layout (all integers little-endian):
+//!
+//! ```text
+//! magic[2] arm[1] lane_words[1] num_vertices[4] count[8]  <payload>  fnv1a64[8]
+//! ```
+//!
+//! `count` is the number of `(vertex, mask)` entries the payload encodes;
+//! the four payload arms mirror the four negotiated pricing arms (sparse
+//! entries, grouped-by-mask, per-word presence bitmaps, per-lane bitmaps).
+
+use super::checksum::fnv1a64;
+use crate::bfs::msbfs::MAX_LANE_WORDS;
+
+/// Frame magic ("BF" for butterfly, 0x5B frame version 1).
+pub const WIRE_MAGIC: [u8; 2] = [0xBF, 0x5B];
+
+/// Frame header bytes before the payload.
+pub const HEADER_BYTES: usize = 16;
+
+/// Trailer (checksum) bytes after the payload.
+pub const TRAILER_BYTES: usize = 8;
+
+/// Which serialization the payload uses — one per negotiated pricing arm.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum WireArm {
+    /// Sparse `(vertex, word-sparse mask)` entries.
+    Sparse,
+    /// Distinct masks, each followed by its member vertex list.
+    Grouped,
+    /// Per-word presence bitmap + packed nonzero mask words (the dense
+    /// bottom-up form).
+    Presence,
+    /// Per-active-lane vertex bitmaps.
+    LaneBitmaps,
+}
+
+impl WireArm {
+    /// All arms, for corpus sweeps.
+    pub const ALL: [WireArm; 4] =
+        [WireArm::Sparse, WireArm::Grouped, WireArm::Presence, WireArm::LaneBitmaps];
+
+    fn tag(self) -> u8 {
+        match self {
+            WireArm::Sparse => 0,
+            WireArm::Grouped => 1,
+            WireArm::Presence => 2,
+            WireArm::LaneBitmaps => 3,
+        }
+    }
+
+    fn from_tag(tag: u8) -> Option<Self> {
+        Some(match tag {
+            0 => WireArm::Sparse,
+            1 => WireArm::Grouped,
+            2 => WireArm::Presence,
+            3 => WireArm::LaneBitmaps,
+            _ => return None,
+        })
+    }
+}
+
+/// Typed decode failure. Every hostile input lands in exactly one of
+/// these; decoding never panics and never allocates from untrusted sizes.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum WireError {
+    /// The buffer ends before a required field.
+    Truncated {
+        /// Bytes the next field needed.
+        need: usize,
+        /// Bytes actually remaining.
+        have: usize,
+    },
+    /// The first two bytes are not [`WIRE_MAGIC`].
+    BadMagic {
+        /// What was found instead.
+        found: [u8; 2],
+    },
+    /// Unknown arm tag.
+    BadArm {
+        /// The unrecognized tag byte.
+        found: u8,
+    },
+    /// `lane_words` outside `1..=8`.
+    BadLaneWords {
+        /// The rejected width.
+        found: u8,
+    },
+    /// The FNV-1a trailer does not match the frame body — a bit flip
+    /// anywhere in the frame (the fault model's `Corrupt` detection).
+    ChecksumMismatch {
+        /// Checksum recomputed over the body.
+        expected: u64,
+        /// Checksum carried in the trailer.
+        found: u64,
+    },
+    /// A declared count could not possibly fit the remaining payload.
+    CountOverflow {
+        /// The declared count.
+        declared: u64,
+        /// Maximum the remaining bytes could hold.
+        limit: u64,
+    },
+    /// The payload decoded to a different number of entries than the
+    /// header declared.
+    CountMismatch {
+        /// Header entry count.
+        declared: u64,
+        /// Entries actually decoded.
+        actual: u64,
+    },
+    /// A vertex id at or beyond `num_vertices`.
+    VertexOutOfRange {
+        /// The offending id.
+        vertex: u32,
+        /// The frame's vertex-space size.
+        num_vertices: u32,
+    },
+    /// A lane index at or beyond `64·lane_words`.
+    LaneOutOfRange {
+        /// The offending lane.
+        lane: u16,
+        /// Lanes this frame's width provisions.
+        lanes: u16,
+    },
+    /// A word-presence byte names words at or beyond `lane_words`.
+    WordIndexOutOfRange {
+        /// The presence byte.
+        bits: u8,
+        /// Words this frame's width provisions.
+        lane_words: u8,
+    },
+    /// An entry or group carried an all-zero mask (non-canonical).
+    EmptyMask {
+        /// The entry's vertex (or first member for a group).
+        vertex: u32,
+    },
+    /// A group declared zero members.
+    EmptyGroup,
+    /// Well-formed payload followed by extra bytes.
+    TrailingBytes {
+        /// How many bytes were left over.
+        extra: usize,
+    },
+}
+
+impl std::fmt::Display for WireError {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        match *self {
+            WireError::Truncated { need, have } => {
+                write!(f, "truncated frame: need {need} bytes, have {have}")
+            }
+            WireError::BadMagic { found } => {
+                write!(f, "bad frame magic {found:02x?}")
+            }
+            WireError::BadArm { found } => write!(f, "unknown arm tag {found}"),
+            WireError::BadLaneWords { found } => {
+                write!(f, "lane_words {found} outside 1..=8")
+            }
+            WireError::ChecksumMismatch { expected, found } => write!(
+                f,
+                "checksum mismatch: body hashes to {expected:#018x}, trailer says {found:#018x}"
+            ),
+            WireError::CountOverflow { declared, limit } => {
+                write!(f, "declared count {declared} exceeds payload capacity {limit}")
+            }
+            WireError::CountMismatch { declared, actual } => {
+                write!(f, "header declared {declared} entries, payload holds {actual}")
+            }
+            WireError::VertexOutOfRange { vertex, num_vertices } => {
+                write!(f, "vertex {vertex} out of range (num_vertices {num_vertices})")
+            }
+            WireError::LaneOutOfRange { lane, lanes } => {
+                write!(f, "lane {lane} out of range ({lanes} lanes)")
+            }
+            WireError::WordIndexOutOfRange { bits, lane_words } => {
+                write!(f, "presence byte {bits:#010b} names words >= lane_words {lane_words}")
+            }
+            WireError::EmptyMask { vertex } => {
+                write!(f, "entry for vertex {vertex} carries an all-zero mask")
+            }
+            WireError::EmptyGroup => write!(f, "group with zero members"),
+            WireError::TrailingBytes { extra } => {
+                write!(f, "{extra} trailing bytes after payload")
+            }
+        }
+    }
+}
+
+impl std::error::Error for WireError {}
+
+/// A decoded (or to-be-encoded) transfer delta: `(vertex, mask)` entries
+/// at a runtime lane width.
+#[derive(Clone, Debug, PartialEq, Eq)]
+pub struct WireDelta {
+    /// Vertex-space size entries are validated against.
+    pub num_vertices: u32,
+    /// Mask words per entry (1..=8).
+    pub lane_words: u8,
+    /// `(vertex, mask words)` pairs; every mask has `lane_words` words and
+    /// at least one nonzero word, vertices strictly ascending.
+    pub entries: Vec<(u32, Vec<u64>)>,
+}
+
+struct Cursor<'a> {
+    buf: &'a [u8],
+    pos: usize,
+}
+
+impl<'a> Cursor<'a> {
+    fn take(&mut self, n: usize) -> Result<&'a [u8], WireError> {
+        let have = self.buf.len() - self.pos;
+        if n > have {
+            return Err(WireError::Truncated { need: n, have });
+        }
+        let s = &self.buf[self.pos..self.pos + n];
+        self.pos += n;
+        Ok(s)
+    }
+
+    fn u8(&mut self) -> Result<u8, WireError> {
+        Ok(self.take(1)?[0])
+    }
+
+    fn u16(&mut self) -> Result<u16, WireError> {
+        Ok(u16::from_le_bytes(self.take(2)?.try_into().expect("len 2")))
+    }
+
+    fn u32(&mut self) -> Result<u32, WireError> {
+        Ok(u32::from_le_bytes(self.take(4)?.try_into().expect("len 4")))
+    }
+
+    fn u64(&mut self) -> Result<u64, WireError> {
+        Ok(u64::from_le_bytes(self.take(8)?.try_into().expect("len 8")))
+    }
+
+    fn remaining(&self) -> usize {
+        self.buf.len() - self.pos
+    }
+}
+
+fn push_u16(out: &mut Vec<u8>, v: u16) {
+    out.extend_from_slice(&v.to_le_bytes());
+}
+fn push_u32(out: &mut Vec<u8>, v: u32) {
+    out.extend_from_slice(&v.to_le_bytes());
+}
+fn push_u64(out: &mut Vec<u8>, v: u64) {
+    out.extend_from_slice(&v.to_le_bytes());
+}
+
+/// Presence byte of a mask's nonzero words.
+fn presence_byte(mask: &[u64]) -> u8 {
+    let mut p = 0u8;
+    for (w, &m) in mask.iter().enumerate() {
+        if m != 0 {
+            p |= 1 << w;
+        }
+    }
+    p
+}
+
+fn encode_mask(out: &mut Vec<u8>, mask: &[u64], lane_words: usize) {
+    if lane_words == 1 {
+        push_u64(out, mask[0]);
+    } else {
+        let p = presence_byte(mask);
+        out.push(p);
+        for &m in mask {
+            if m != 0 {
+                push_u64(out, m);
+            }
+        }
+    }
+}
+
+fn decode_mask(c: &mut Cursor<'_>, lane_words: usize) -> Result<Vec<u64>, WireError> {
+    if lane_words == 1 {
+        return Ok(vec![c.u64()?]);
+    }
+    let p = c.u8()?;
+    if p == 0 {
+        // Caller maps this to EmptyMask with the right vertex attached.
+        return Ok(vec![0; lane_words]);
+    }
+    if usize::from(8 - p.leading_zeros() as u8) > lane_words {
+        return Err(WireError::WordIndexOutOfRange { bits: p, lane_words: lane_words as u8 });
+    }
+    let mut mask = vec![0u64; lane_words];
+    for (w, slot) in mask.iter_mut().enumerate() {
+        if p & (1 << w) != 0 {
+            *slot = c.u64()?;
+        }
+    }
+    Ok(mask)
+}
+
+impl WireDelta {
+    /// Vertices of the presence bitmap covering this delta's vertex space,
+    /// in bytes.
+    fn presence_bitmap_bytes(&self) -> usize {
+        (self.num_vertices as usize).div_ceil(64) * 8
+    }
+
+    /// Encode as one framed transfer using `arm`, with the FNV-1a trailer.
+    pub fn encode(&self, arm: WireArm) -> Vec<u8> {
+        debug_assert!((1..=MAX_LANE_WORDS).contains(&usize::from(self.lane_words)));
+        let w = usize::from(self.lane_words);
+        let mut out = Vec::with_capacity(HEADER_BYTES + TRAILER_BYTES + 16 * self.entries.len());
+        out.extend_from_slice(&WIRE_MAGIC);
+        out.push(arm.tag());
+        out.push(self.lane_words);
+        push_u32(&mut out, self.num_vertices);
+        push_u64(&mut out, self.entries.len() as u64);
+        match arm {
+            WireArm::Sparse => {
+                for (v, mask) in &self.entries {
+                    push_u32(&mut out, *v);
+                    encode_mask(&mut out, mask, w);
+                }
+            }
+            WireArm::Grouped => {
+                // Group consecutive entries sharing a mask (the encoder's
+                // job is validity, not optimality).
+                let mut groups: Vec<(&Vec<u64>, Vec<u32>)> = Vec::new();
+                for (v, mask) in &self.entries {
+                    match groups.last_mut() {
+                        Some((m, members)) if *m == mask => members.push(*v),
+                        _ => groups.push((mask, vec![*v])),
+                    }
+                }
+                push_u32(&mut out, groups.len() as u32);
+                for (mask, members) in &groups {
+                    encode_mask(&mut out, mask, w);
+                    push_u32(&mut out, members.len() as u32);
+                    for &v in members {
+                        push_u32(&mut out, v);
+                    }
+                }
+            }
+            WireArm::Presence => {
+                let pb = self.presence_bitmap_bytes();
+                let mut active = 0u8;
+                for (_, mask) in &self.entries {
+                    active |= presence_byte(mask);
+                }
+                out.push(active);
+                for word in 0..w {
+                    if active & (1 << word) == 0 {
+                        continue;
+                    }
+                    let mut bitmap = vec![0u8; pb];
+                    for (v, mask) in &self.entries {
+                        if mask[word] != 0 {
+                            bitmap[*v as usize / 8] |= 1 << (*v % 8);
+                        }
+                    }
+                    out.extend_from_slice(&bitmap);
+                    for (_, mask) in &self.entries {
+                        if mask[word] != 0 {
+                            push_u64(&mut out, mask[word]);
+                        }
+                    }
+                }
+            }
+            WireArm::LaneBitmaps => {
+                let pb = self.presence_bitmap_bytes();
+                let lanes = 64 * w;
+                let mut active: Vec<u16> = Vec::new();
+                for lane in 0..lanes {
+                    if self.entries.iter().any(|(_, m)| m[lane / 64] >> (lane % 64) & 1 == 1) {
+                        active.push(lane as u16);
+                    }
+                }
+                push_u16(&mut out, active.len() as u16);
+                for &lane in &active {
+                    push_u16(&mut out, lane);
+                    let mut bitmap = vec![0u8; pb];
+                    for (v, mask) in &self.entries {
+                        if mask[usize::from(lane) / 64] >> (usize::from(lane) % 64) & 1 == 1 {
+                            bitmap[*v as usize / 8] |= 1 << (*v % 8);
+                        }
+                    }
+                    out.extend_from_slice(&bitmap);
+                }
+            }
+        }
+        let sum = fnv1a64(&out);
+        push_u64(&mut out, sum);
+        out
+    }
+
+    /// Decode and fully validate one framed transfer.
+    ///
+    /// Validation order: frame length → magic → **checksum** (so any bit
+    /// flip, including in the header, is classed as corruption first) →
+    /// header fields → arm payload with per-field bounds checks → exact
+    /// length and count agreement.
+    pub fn decode(bytes: &[u8]) -> Result<Self, WireError> {
+        if bytes.len() < HEADER_BYTES + TRAILER_BYTES {
+            return Err(WireError::Truncated {
+                need: HEADER_BYTES + TRAILER_BYTES,
+                have: bytes.len(),
+            });
+        }
+        let body = &bytes[..bytes.len() - TRAILER_BYTES];
+        if body[0..2] != WIRE_MAGIC {
+            return Err(WireError::BadMagic { found: [body[0], body[1]] });
+        }
+        let trailer =
+            u64::from_le_bytes(bytes[bytes.len() - TRAILER_BYTES..].try_into().expect("len 8"));
+        let expected = fnv1a64(body);
+        if trailer != expected {
+            return Err(WireError::ChecksumMismatch { expected, found: trailer });
+        }
+        let mut c = Cursor { buf: body, pos: 2 };
+        let arm = {
+            let tag = c.u8()?;
+            WireArm::from_tag(tag).ok_or(WireError::BadArm { found: tag })?
+        };
+        let lane_words = c.u8()?;
+        if !(1..=MAX_LANE_WORDS as u8).contains(&lane_words) {
+            return Err(WireError::BadLaneWords { found: lane_words });
+        }
+        let w = usize::from(lane_words);
+        let num_vertices = c.u32()?;
+        let count = c.u64()?;
+        let mut entries: Vec<(u32, Vec<u64>)> = Vec::new();
+        let check_vertex = |v: u32| -> Result<(), WireError> {
+            if v >= num_vertices {
+                return Err(WireError::VertexOutOfRange { vertex: v, num_vertices });
+            }
+            Ok(())
+        };
+        match arm {
+            WireArm::Sparse => {
+                let min_entry = if w == 1 { 12 } else { 5 };
+                let limit = (c.remaining() / min_entry) as u64;
+                if count > limit {
+                    return Err(WireError::CountOverflow { declared: count, limit });
+                }
+                entries.reserve(count as usize);
+                for _ in 0..count {
+                    let v = c.u32()?;
+                    check_vertex(v)?;
+                    let mask = decode_mask(&mut c, w)?;
+                    if mask.iter().all(|&m| m == 0) {
+                        return Err(WireError::EmptyMask { vertex: v });
+                    }
+                    entries.push((v, mask));
+                }
+            }
+            WireArm::Grouped => {
+                let limit = (c.remaining() / 4) as u64;
+                if count > limit {
+                    return Err(WireError::CountOverflow { declared: count, limit });
+                }
+                let groups = c.u32()?;
+                let min_group = if w == 1 { 16 } else { 17 };
+                let glimit = (c.remaining() / min_group) as u32;
+                if groups > glimit {
+                    return Err(WireError::CountOverflow {
+                        declared: u64::from(groups),
+                        limit: u64::from(glimit),
+                    });
+                }
+                entries.reserve(count as usize);
+                for _ in 0..groups {
+                    let mask = decode_mask(&mut c, w)?;
+                    let members = c.u32()?;
+                    if members == 0 {
+                        return Err(WireError::EmptyGroup);
+                    }
+                    let mlimit = (c.remaining() / 4) as u32;
+                    if members > mlimit {
+                        return Err(WireError::CountOverflow {
+                            declared: u64::from(members),
+                            limit: u64::from(mlimit),
+                        });
+                    }
+                    for _ in 0..members {
+                        let v = c.u32()?;
+                        check_vertex(v)?;
+                        if mask.iter().all(|&m| m == 0) {
+                            return Err(WireError::EmptyMask { vertex: v });
+                        }
+                        entries.push((v, mask.clone()));
+                    }
+                }
+            }
+            WireArm::Presence => {
+                let pb = (num_vertices as usize).div_ceil(64) * 8;
+                let active = c.u8()?;
+                if usize::from(8 - active.leading_zeros() as u8) > w {
+                    return Err(WireError::WordIndexOutOfRange {
+                        bits: active,
+                        lane_words,
+                    });
+                }
+                let mut map: std::collections::BTreeMap<u32, Vec<u64>> =
+                    std::collections::BTreeMap::new();
+                for word in 0..w {
+                    if active & (1 << word) == 0 {
+                        continue;
+                    }
+                    let bitmap = c.take(pb)?.to_vec();
+                    for (byte_idx, &b) in bitmap.iter().enumerate() {
+                        let mut bits = b;
+                        while bits != 0 {
+                            let bit = bits.trailing_zeros() as usize;
+                            bits &= bits - 1;
+                            let v = (byte_idx * 8 + bit) as u32;
+                            check_vertex(v)?;
+                            let m = c.u64()?;
+                            if m == 0 {
+                                return Err(WireError::EmptyMask { vertex: v });
+                            }
+                            map.entry(v).or_insert_with(|| vec![0u64; w])[word] = m;
+                        }
+                    }
+                }
+                entries.extend(map);
+            }
+            WireArm::LaneBitmaps => {
+                let pb = (num_vertices as usize).div_ceil(64) * 8;
+                let lanes = (64 * w) as u16;
+                let active = c.u16()?;
+                if active > lanes {
+                    return Err(WireError::LaneOutOfRange { lane: active, lanes });
+                }
+                let mut map: std::collections::BTreeMap<u32, Vec<u64>> =
+                    std::collections::BTreeMap::new();
+                for _ in 0..active {
+                    let lane = c.u16()?;
+                    if lane >= lanes {
+                        return Err(WireError::LaneOutOfRange { lane, lanes });
+                    }
+                    let bitmap = c.take(pb)?.to_vec();
+                    for (byte_idx, &b) in bitmap.iter().enumerate() {
+                        let mut bits = b;
+                        while bits != 0 {
+                            let bit = bits.trailing_zeros() as usize;
+                            bits &= bits - 1;
+                            let v = (byte_idx * 8 + bit) as u32;
+                            check_vertex(v)?;
+                            map.entry(v).or_insert_with(|| vec![0u64; w])
+                                [usize::from(lane) / 64] |= 1u64 << (usize::from(lane) % 64);
+                        }
+                    }
+                }
+                entries.extend(map);
+            }
+        }
+        if c.remaining() != 0 {
+            return Err(WireError::TrailingBytes { extra: c.remaining() });
+        }
+        if entries.len() as u64 != count {
+            return Err(WireError::CountMismatch {
+                declared: count,
+                actual: entries.len() as u64,
+            });
+        }
+        Ok(Self { num_vertices, lane_words, entries })
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::prng::Xoshiro256StarStar;
+
+    fn random_delta(rng: &mut Xoshiro256StarStar, w: usize) -> WireDelta {
+        let nv = 64 + rng.next_below(400) as u32;
+        let n = rng.next_below(u64::from(nv).min(40)) as usize;
+        let mut verts: Vec<u32> = (0..nv).collect();
+        rng.shuffle(&mut verts);
+        let mut picked: Vec<u32> = verts[..n].to_vec();
+        picked.sort_unstable();
+        let entries = picked
+            .into_iter()
+            .map(|v| {
+                let mut mask = vec![0u64; w];
+                loop {
+                    for m in mask.iter_mut() {
+                        *m = if rng.next_bool(0.5) { rng.next_u64() } else { 0 };
+                    }
+                    if mask.iter().any(|&m| m != 0) {
+                        break;
+                    }
+                }
+                (v, mask)
+            })
+            .collect();
+        WireDelta { num_vertices: nv, lane_words: w as u8, entries }
+    }
+
+    #[test]
+    fn roundtrip_all_arms_all_widths() {
+        let mut rng = Xoshiro256StarStar::seed_from_u64(99);
+        for w in [1usize, 2, 4, 8] {
+            for _ in 0..20 {
+                let d = random_delta(&mut rng, w);
+                for arm in WireArm::ALL {
+                    let bytes = d.encode(arm);
+                    let back = WireDelta::decode(&bytes)
+                        .unwrap_or_else(|e| panic!("{arm:?} w={w}: {e}"));
+                    assert_eq!(back, d, "{arm:?} w={w}");
+                }
+            }
+        }
+    }
+
+    #[test]
+    fn empty_delta_roundtrips() {
+        let d = WireDelta { num_vertices: 100, lane_words: 2, entries: vec![] };
+        for arm in WireArm::ALL {
+            assert_eq!(WireDelta::decode(&d.encode(arm)).unwrap(), d);
+        }
+    }
+
+    #[test]
+    fn every_truncation_is_typed() {
+        let mut rng = Xoshiro256StarStar::seed_from_u64(5);
+        let d = random_delta(&mut rng, 4);
+        for arm in WireArm::ALL {
+            let bytes = d.encode(arm);
+            for cut in 0..bytes.len() {
+                let err = WireDelta::decode(&bytes[..cut])
+                    .expect_err(&format!("{arm:?} cut={cut} must fail"));
+                assert!(
+                    matches!(err, WireError::Truncated { .. } | WireError::ChecksumMismatch { .. }),
+                    "{arm:?} cut={cut}: {err}"
+                );
+            }
+        }
+    }
+
+    #[test]
+    fn every_bit_flip_is_detected() {
+        let mut rng = Xoshiro256StarStar::seed_from_u64(6);
+        let d = random_delta(&mut rng, 2);
+        for arm in WireArm::ALL {
+            let bytes = d.encode(arm);
+            for i in 0..bytes.len() {
+                let mut evil = bytes.clone();
+                evil[i] ^= 1 << (i % 8);
+                match WireDelta::decode(&evil) {
+                    Ok(decoded) => panic!("{arm:?} byte {i}: flipped frame decoded {decoded:?}"),
+                    Err(
+                        WireError::ChecksumMismatch { .. }
+                        | WireError::BadMagic { .. }
+                        | WireError::Truncated { .. },
+                    ) => {}
+                    Err(other) => panic!("{arm:?} byte {i}: unexpected class {other}"),
+                }
+            }
+        }
+    }
+
+    #[test]
+    fn oversized_counts_rejected_without_allocation() {
+        let d = WireDelta {
+            num_vertices: 100,
+            lane_words: 1,
+            entries: vec![(3, vec![1]), (7, vec![2])],
+        };
+        for arm in WireArm::ALL {
+            let mut bytes = d.encode(arm);
+            // Overwrite the header count with an absurd value, re-seal the
+            // checksum so only the count is hostile.
+            bytes[8..16].copy_from_slice(&u64::MAX.to_le_bytes());
+            let body_len = bytes.len() - TRAILER_BYTES;
+            let sum = fnv1a64(&bytes[..body_len]);
+            bytes[body_len..].copy_from_slice(&sum.to_le_bytes());
+            let err = WireDelta::decode(&bytes).expect_err("hostile count must fail");
+            assert!(
+                matches!(
+                    err,
+                    WireError::CountOverflow { .. }
+                        | WireError::CountMismatch { .. }
+                        | WireError::Truncated { .. }
+                ),
+                "{arm:?}: {err}"
+            );
+        }
+    }
+
+    #[test]
+    fn hostile_fields_are_typed() {
+        let reseal = |mut bytes: Vec<u8>| {
+            let body_len = bytes.len() - TRAILER_BYTES;
+            let sum = fnv1a64(&bytes[..body_len]);
+            bytes[body_len..].copy_from_slice(&sum.to_le_bytes());
+            bytes
+        };
+        let d = WireDelta { num_vertices: 10, lane_words: 1, entries: vec![(3, vec![1])] };
+        // Bad arm tag.
+        let mut b = d.encode(WireArm::Sparse);
+        b[2] = 9;
+        assert_eq!(WireDelta::decode(&reseal(b)).unwrap_err(), WireError::BadArm { found: 9 });
+        // Bad lane words.
+        let mut b = d.encode(WireArm::Sparse);
+        b[3] = 0;
+        assert_eq!(
+            WireDelta::decode(&reseal(b)).unwrap_err(),
+            WireError::BadLaneWords { found: 0 }
+        );
+        let mut b = d.encode(WireArm::Sparse);
+        b[3] = 9;
+        // lane_words=9 reinterprets the payload; accept the width error or
+        // any downstream structural error, but never a success.
+        assert!(WireDelta::decode(&reseal(b)).is_err());
+        // Vertex out of range.
+        let mut b = d.encode(WireArm::Sparse);
+        b[16..20].copy_from_slice(&99u32.to_le_bytes());
+        assert_eq!(
+            WireDelta::decode(&reseal(b)).unwrap_err(),
+            WireError::VertexOutOfRange { vertex: 99, num_vertices: 10 }
+        );
+        // Zero mask.
+        let mut b = d.encode(WireArm::Sparse);
+        b[20..28].copy_from_slice(&0u64.to_le_bytes());
+        assert_eq!(
+            WireDelta::decode(&reseal(b)).unwrap_err(),
+            WireError::EmptyMask { vertex: 3 }
+        );
+        // Trailing bytes.
+        let mut b = d.encode(WireArm::Sparse);
+        let trailer_at = b.len() - TRAILER_BYTES;
+        b.splice(trailer_at..trailer_at, [0u8; 4]);
+        assert_eq!(
+            WireDelta::decode(&reseal(b)).unwrap_err(),
+            WireError::TrailingBytes { extra: 4 }
+        );
+    }
+
+    #[test]
+    fn grouped_encoder_coalesces_shared_masks() {
+        let d = WireDelta {
+            num_vertices: 50,
+            lane_words: 1,
+            entries: vec![(1, vec![5]), (2, vec![5]), (3, vec![5]), (9, vec![7])],
+        };
+        let grouped = d.encode(WireArm::Grouped);
+        let sparse = d.encode(WireArm::Sparse);
+        assert!(grouped.len() < sparse.len(), "{} !< {}", grouped.len(), sparse.len());
+        assert_eq!(WireDelta::decode(&grouped).unwrap(), d);
+    }
+}

@@ -170,18 +170,23 @@ pub fn read_matrix_market(path: &Path) -> Result<(Csr, EtlStats), IoError> {
 const BBFS_MAGIC: &[u8; 8] = b"BBFSCSR1";
 
 /// Write the binary `.bbfs` snapshot (magic, n, m, offsets, edges; LE).
+///
+/// Crash-consistent: the snapshot is staged in full and published with
+/// [`crate::util::fsio::atomic_write`], so a writer killed mid-way never
+/// leaves a torn file that [`read_binary`] would have to reject — the
+/// destination is either the old complete snapshot or the new one.
 pub fn write_binary(g: &Csr, path: &Path) -> Result<(), IoError> {
-    let f = std::fs::File::create(path)?;
-    let mut w = BufWriter::new(f);
-    w.write_all(BBFS_MAGIC)?;
-    w.write_all(&(g.num_vertices() as u64).to_le_bytes())?;
-    w.write_all(&g.num_edges().to_le_bytes())?;
+    let mut buf = Vec::with_capacity(8 + 16 + g.offsets().len() * 8 + g.edges().len() * 4);
+    buf.extend_from_slice(BBFS_MAGIC);
+    buf.extend_from_slice(&(g.num_vertices() as u64).to_le_bytes());
+    buf.extend_from_slice(&g.num_edges().to_le_bytes());
     for &o in g.offsets() {
-        w.write_all(&o.to_le_bytes())?;
+        buf.extend_from_slice(&o.to_le_bytes());
     }
     for &e in g.edges() {
-        w.write_all(&e.to_le_bytes())?;
+        buf.extend_from_slice(&e.to_le_bytes());
     }
+    crate::util::fsio::atomic_write(path, &buf)?;
     Ok(())
 }
 

@@ -144,12 +144,17 @@ pub fn encode_store(g: &Csr, opts: StoreWriteOptions) -> Result<EncodedStore, St
 
 /// Encode `g` and write the container to `path`. Returns the encoding
 /// (bytes still in memory) so callers can report sizes without re-reading.
+///
+/// Crash-consistent: published with
+/// [`crate::util::fsio::atomic_write`] (write-tmp → fsync → rename), so a
+/// crashed writer never leaves a torn container that `open` would have to
+/// reject.
 pub fn write_store(
     g: &Csr,
     path: &std::path::Path,
     opts: StoreWriteOptions,
 ) -> Result<EncodedStore, StoreError> {
     let enc = encode_store(g, opts)?;
-    std::fs::write(path, &enc.bytes)?;
+    crate::util::fsio::atomic_write(path, &enc.bytes)?;
     Ok(enc)
 }

@@ -68,6 +68,7 @@ use crate::comm::{class_volume, Butterfly, ClassVolume, CommPattern, GridOfIslan
 use crate::coordinator::config::{BatchWidth, DirectionMode};
 use crate::coordinator::metrics::BatchMetrics;
 use crate::coordinator::{EngineConfig, TraversalPlan};
+use crate::fault::{FaultInjector, FaultPlan};
 use crate::net::model::TopologyModel;
 use crate::graph::csr::{Csr, VertexId};
 use crate::graph::gen::table1_suite;
@@ -91,7 +92,11 @@ use std::sync::Arc;
 /// v5 added the hierarchical section (`hierarchical`): 1d vs 2d vs
 /// grid-of-islands at p = 64 under the heterogeneous `dgx2-cluster`
 /// topology, with per-link-class message/byte splits.
-pub const PROTOCOL_NAME: &str = "engine-bench-v5";
+/// v6 added the fault-recovery section (`fault_recovery`): a committed
+/// seeded fault schedule injected at the exchange seam, the
+/// retry/backoff/retransmit overhead it prices into the simulated
+/// clock, and the bit-identical-distances invariant under recovery.
+pub const PROTOCOL_NAME: &str = "engine-bench-v6";
 /// Suite graph the protocol runs on (the paper's GAP_kron analog).
 pub const PROTOCOL_GRAPH: &str = "kron-like";
 /// Scale adjustment: `kron-like` is scale 21; −10 ⇒ 2^11 vertices — big
@@ -142,6 +147,18 @@ pub const PROTOCOL_STORAGE_NODES: usize = 16;
 pub const PROTOCOL_HIER_NODES: usize = 64;
 /// Hierarchical section: island grid (islands × nodes-per-island).
 pub const PROTOCOL_HIER_GRID: (u32, u32) = (8, 8);
+/// Fault section: seed of the committed [`FaultPlan::generate`] schedule
+/// (chosen so the schedule exercises all three recoverable kinds against
+/// live transfers — the acceptance pass requires `retries >= 1`).
+pub const PROTOCOL_FAULT_SEED: u64 = 43;
+/// Fault section: number of generated faults.
+pub const PROTOCOL_FAULT_COUNT: usize = 6;
+/// Fault section: level span the generator addresses faults over.
+pub const PROTOCOL_FAULT_LEVELS: u32 = 4;
+/// Fault section: round span the generator addresses faults over.
+pub const PROTOCOL_FAULT_ROUNDS: usize = 2;
+/// Fault section: node count (the paper's DGX-2 scale).
+pub const PROTOCOL_FAULT_NODES: usize = 16;
 
 fn direction_modes() -> [(&'static str, DirectionMode); 3] {
     [
@@ -663,6 +680,71 @@ fn hierarchical_json(g: &Csr) -> Json {
     ])
 }
 
+/// The fault-recovery section: the committed seeded
+/// [`FaultPlan::generate`] schedule injected into the 16-node 1D
+/// direction-optimized 64-root batch, next to the identical fault-free
+/// run. [`check_engine_bench`]'s acceptance pass requires at least one
+/// retry to fire, exact retry byte accounting, a strictly positive
+/// priced recovery time, and — the headline invariant — bit-identical
+/// distances to the fault-free run.
+fn fault_recovery_json(g: &Csr) -> Json {
+    let roots = sample_batch_roots(g, PROTOCOL_BATCH_WIDTH, PROTOCOL_ROOT_SEED);
+    let cfg = EngineConfig {
+        direction: DirectionMode::diropt(),
+        ..EngineConfig::dgx2(PROTOCOL_FAULT_NODES, PROTOCOL_FANOUT)
+    };
+    let plan = TraversalPlan::build(g, cfg).expect("valid protocol plan");
+    let free = plan.session().run_batch(&roots).expect("protocol roots in range");
+    let fplan = FaultPlan::generate(
+        PROTOCOL_FAULT_SEED,
+        PROTOCOL_FAULT_COUNT,
+        PROTOCOL_FAULT_LEVELS,
+        PROTOCOL_FAULT_ROUNDS,
+        PROTOCOL_FAULT_NODES as u32,
+    );
+    let injector = Arc::new(FaultInjector::new(fplan.clone()));
+    let mut session = plan.session();
+    session.arm_faults(Some(Arc::clone(&injector)));
+    let faulted = session.run_batch(&roots).expect("committed schedule is tolerated");
+    let equal = (0..roots.len()).all(|lane| free.dist(lane) == faulted.dist(lane));
+    let (fm, rm) = (free.metrics(), faulted.metrics());
+    Json::obj(vec![
+        (
+            "config",
+            Json::obj(vec![
+                ("nodes", Json::u(PROTOCOL_FAULT_NODES as u64)),
+                ("fanout", Json::u(PROTOCOL_FANOUT as u64)),
+                ("mode", Json::s("1d")),
+                ("direction", Json::s("diropt")),
+                ("width", Json::u(PROTOCOL_BATCH_WIDTH as u64)),
+                ("seed", Json::u(PROTOCOL_ROOT_SEED)),
+            ]),
+        ),
+        ("plan", fplan.to_json()),
+        (
+            "fault_free",
+            Json::obj(vec![
+                ("levels", Json::u(fm.depth() as u64)),
+                ("bytes", Json::u(fm.bytes())),
+                ("sim_seconds", Json::n(fm.sim_seconds())),
+            ]),
+        ),
+        (
+            "faulted",
+            Json::obj(vec![
+                ("injected", Json::u(fplan.faults.len() as u64)),
+                ("matched", Json::u(injector.specs_matched() as u64)),
+                ("retries", Json::u(rm.retries())),
+                ("retry_bytes", Json::u(rm.retry_bytes())),
+                ("recovery_time", Json::n(rm.recovery_time())),
+                ("sim_seconds", Json::n(rm.sim_seconds_with_recovery())),
+            ]),
+        ),
+        ("equal_distances", Json::Bool(equal)),
+        ("overhead_ratio", Json::n(rm.sim_seconds_with_recovery() / fm.sim_seconds())),
+    ])
+}
+
 /// Run the full protocol and build the report. Deterministic: fixed
 /// graph seed, fixed roots, simulated clocks only (no wallclock fields).
 pub fn engine_bench_report() -> Json {
@@ -717,6 +799,7 @@ pub fn engine_bench_report() -> Json {
         ("serve_throughput", serve_throughput_json(&g)),
         ("storage", storage_json()),
         ("hierarchical", hierarchical_json(&g)),
+        ("fault_recovery", fault_recovery_json(&g)),
     ])
 }
 
@@ -740,7 +823,10 @@ fn put_measured(report: &mut Json, measured: Json) {
 
 /// Write (or overwrite) the artifact at `path`, preserving an existing
 /// `serve_throughput.measured` subtree (the load-generator's recorded
-/// wallclock numbers survive a protocol regeneration).
+/// wallclock numbers survive a protocol regeneration). Crash-consistent:
+/// the artifact is replaced atomically via
+/// [`atomic_write`](crate::util::fsio::atomic_write), so an interrupted
+/// regeneration never leaves a torn report behind.
 pub fn write_engine_bench(path: &Path) -> std::io::Result<()> {
     let mut report = engine_bench_report();
     if let Ok(old_text) = std::fs::read_to_string(path) {
@@ -752,7 +838,7 @@ pub fn write_engine_bench(path: &Path) -> std::io::Result<()> {
     }
     let mut text = report.render();
     text.push('\n');
-    std::fs::write(path, text)
+    crate::util::fsio::atomic_write(path, text.as_bytes())
 }
 
 /// Record the load generator's wallclock report into the committed
@@ -1101,6 +1187,40 @@ fn acceptance(report: &Json) -> Result<(), String> {
     }
     if u64_field(mh, "inter_messages")? == 0 || u64_field(mh, "intra_messages")? == 0 {
         return Err("hierarchical: hier mode must use both link classes".to_string());
+    }
+    // Fault-recovery invariants: the committed schedule must actually
+    // exercise the detect → retry path (a schedule that never fires
+    // proves nothing), the retry overhead must be priced into the
+    // simulated clock, and recovery must not change a single distance.
+    let fault = report.get("fault_recovery").ok_or("missing fault_recovery")?;
+    if fault.get("equal_distances").and_then(Json::as_bool) != Some(true) {
+        return Err(
+            "fault_recovery: distances under injection must be bit-identical to the \
+             fault-free run"
+                .to_string(),
+        );
+    }
+    let faulted = fault.get("faulted").ok_or("fault_recovery: missing faulted")?;
+    if u64_field(faulted, "matched")? == 0 {
+        return Err(
+            "fault_recovery: no committed fault matched a live transfer (dead schedule)"
+                .to_string(),
+        );
+    }
+    if u64_field(faulted, "retries")? == 0 || u64_field(faulted, "retry_bytes")? == 0 {
+        return Err(
+            "fault_recovery: committed schedule never forced a retransmission".to_string()
+        );
+    }
+    if f64_field(faulted, "recovery_time")? <= 0.0 {
+        return Err("fault_recovery: recovery time must be strictly positive".to_string());
+    }
+    let ratio = f64_field(fault, "overhead_ratio")?;
+    if ratio <= 1.0 {
+        return Err(format!(
+            "fault_recovery: overhead ratio {ratio:.6} not above 1 — recovery priced \
+             as free"
+        ));
     }
     Ok(())
 }

@@ -33,6 +33,7 @@
 pub mod bfs;
 pub mod comm;
 pub mod coordinator;
+pub mod fault;
 pub mod graph;
 pub mod harness;
 pub mod net;

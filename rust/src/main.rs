@@ -30,6 +30,7 @@ use butterfly_bfs::coordinator::config::{DirectionMode, PartitionMode};
 use butterfly_bfs::coordinator::{
     BatchWidth, EngineConfig, PatternKind, PayloadEncoding, TraversalPlan,
 };
+use butterfly_bfs::fault::{FaultInjector, FaultPlan, FaultTolerantRunner};
 use butterfly_bfs::partition::relabel::{apply_relabeling, Relabeling};
 use butterfly_bfs::partition::Partition2D;
 use butterfly_bfs::graph::csr::Csr;
@@ -244,6 +245,34 @@ fn suite_spec(name: &str) -> Option<GraphSpec> {
     table1_suite().into_iter().find(|s| s.name == name)
 }
 
+/// Parse `--fault-plan FILE` into a [`FaultPlan`] (empty flag → `None`).
+fn load_fault_plan(path: &str) -> Result<Option<FaultPlan>> {
+    if path.is_empty() {
+        return Ok(None);
+    }
+    let text = std::fs::read_to_string(path).map_err(|e| format!("--fault-plan {path}: {e}"))?;
+    let plan = FaultPlan::parse_str(&text).map_err(|e| format!("--fault-plan {path}: {e}"))?;
+    Ok(Some(plan))
+}
+
+/// Wrap a built plan in a [`FaultTolerantRunner`] whose rebuild callback
+/// re-cuts the partition from the same source the plan came from — the
+/// eagerly loaded CSR or the open v2 store.
+fn fault_runner(src: PlanSource, faults: FaultPlan) -> Result<FaultTolerantRunner> {
+    let PlanSource { plan, graph, store, .. } = src;
+    let plan = std::sync::Arc::new(plan);
+    let rebuild: Box<butterfly_bfs::fault::recovery::PlanRebuild> = match (graph, store) {
+        (Some(g), _) => Box::new(move |cfg| TraversalPlan::build(&g, cfg.clone())),
+        (None, Some(store)) => Box::new(move |cfg| {
+            let p = TraversalPlan::build_from_store(std::sync::Arc::clone(&store), cfg.clone())?;
+            p.materialize()?;
+            Ok(p)
+        }),
+        (None, None) => bail!("internal: plan has no rebuildable graph source"),
+    };
+    Ok(FaultTolerantRunner::new(plan, faults, rebuild))
+}
+
 fn cmd_run(argv: Vec<String>) -> Result<()> {
     let spec = Args::new("butterfly-bfs run", "distributed ButterFly BFS traversal")
         .opt("graph", "", "suite graph name or path (.bbfs/.mtx/edge list), loaded eagerly")
@@ -261,6 +290,7 @@ fn cmd_run(argv: Vec<String>) -> Result<()> {
         .opt("scale-delta", "0", "suite graph scale adjustment (+/- log2)")
         .opt("net", "dgx2", "interconnect: dgx2 | dgx-a100 | pcie3 | dyn-alloc | dgx2-cluster")
         .opt("direction", "topdown", "phase-1 direction: topdown | bottomup | diropt")
+        .opt("fault-plan", "", "JSON fault schedule to inject (detect → retry → degrade recovery)")
         .flag("no-lrb", "disable LRB load balancing")
         .flag("parallel", "run Phase 1 on threads")
         .flag("parallel-sync", "run the Phase-2 merges on threads")
@@ -295,22 +325,40 @@ fn cmd_run(argv: Vec<String>) -> Result<()> {
     // vertices, mismatched grid) surface as typed `PlanError`s and print
     // as clean CLI errors.
     let src = build_plan(&a, cfg)?;
-    let plan = src.plan;
     if src.warm {
         eprintln!("warm start: plan loaded from cache (no cold partition build)");
     }
-    let mut session = plan.session();
     let root = a.get_parse::<u32>("root")?;
     // On a relabeled store the engine runs in permuted id space: map the
     // root in (aggregate outputs are permutation-invariant).
-    let exec_root = match plan.relabeling() {
+    let exec_root = match src.plan.relabeling() {
         Some(r) if (root as usize) < r.new_id.len() => r.new_id[root as usize],
         _ => root,
     };
-    let result = session.run(exec_root)?;
-    session
-        .assert_agreement()
-        .map_err(|e| format!("node disagreement: {e}"))?;
+    let faults = load_fault_plan(&a.get("fault-plan"))?;
+    let faulted = faults.is_some();
+    let (plan, result) = match faults {
+        Some(fp) => {
+            let mut runner = fault_runner(src, fp)?;
+            let result = runner.run(exec_root)?;
+            if runner.is_degraded() {
+                eprintln!(
+                    "rank death tolerated: degraded to {} nodes, lost level replayed",
+                    runner.active_plan().config().num_nodes
+                );
+            }
+            (std::sync::Arc::clone(runner.active_plan()), result)
+        }
+        None => {
+            let plan = std::sync::Arc::new(src.plan);
+            let mut session = plan.session();
+            let result = session.run(exec_root)?;
+            session
+                .assert_agreement()
+                .map_err(|e| format!("node disagreement: {e}"))?;
+            (plan, result)
+        }
+    };
     let m = result.metrics();
 
     if a.get_flag("json") {
@@ -348,6 +396,14 @@ fn cmd_run(argv: Vec<String>) -> Result<()> {
         count(m.bytes()),
         m.depth()
     );
+    if faulted {
+        println!(
+            "recovery: {} retries, {} bytes retransmitted, {:.3} ms recovery time",
+            count(m.retries()),
+            count(m.retry_bytes()),
+            m.recovery_time() * 1e3
+        );
+    }
     if !matches!(direction, DirectionMode::TopDown) {
         println!(
             "direction: {}/{} levels bottom-up ({} of {} edges inspected bottom-up)",
@@ -488,6 +544,7 @@ fn cmd_batch(argv: Vec<String>) -> Result<()> {
         .opt("scale-delta", "0", "suite graph scale adjustment (+/- log2)")
         .opt("net", "dgx2", "interconnect: dgx2 | dgx-a100 | pcie3 | dyn-alloc | dgx2-cluster")
         .opt("direction", "topdown", "phase-1 direction: topdown | bottomup | diropt")
+        .opt("fault-plan", "", "JSON fault schedule to inject (detect → retry → degrade recovery)")
         .flag("parallel", "step nodes on the thread pool")
         .flag("parallel-sync", "run the Phase-2 merges on threads")
         .flag("compare", "also run the roots sequentially and report the ratio");
@@ -513,11 +570,9 @@ fn cmd_batch(argv: Vec<String>) -> Result<()> {
         ..EngineConfig::dgx2(nodes, fanout)
     };
     let src = build_plan(&a, cfg)?;
-    let plan = src.plan;
     if src.warm {
         eprintln!("warm start: plan loaded from cache (no cold partition build)");
     }
-    let mut session = plan.session();
     let seed = a.get_u64("seed")?;
     // Store-backed plans have no eager CSR to sample from; degrees come
     // from the store's O(n) degree stream instead. (On a relabeled store
@@ -527,7 +582,7 @@ fn cmd_batch(argv: Vec<String>) -> Result<()> {
         Some(store) => {
             let prefix = store.degree_prefix()?;
             butterfly_bfs::bfs::msbfs::sample_batch_roots_by(
-                plan.num_vertices(),
+                src.plan.num_vertices(),
                 |v| (prefix[v as usize + 1] - prefix[v as usize]) as u32,
                 width,
                 seed,
@@ -538,10 +593,30 @@ fn cmd_batch(argv: Vec<String>) -> Result<()> {
             butterfly_bfs::bfs::msbfs::sample_batch_roots(g, width, seed)
         }
     };
-    let batch = session.run_batch(&roots)?;
-    session
-        .assert_batch_agreement()
-        .map_err(|e| format!("node disagreement: {e}"))?;
+    let faults = load_fault_plan(&a.get("fault-plan"))?;
+    let faulted = faults.is_some();
+    let (plan, batch) = match faults {
+        Some(fp) => {
+            let mut runner = fault_runner(src, fp)?;
+            let batch = runner.run_batch(&roots)?;
+            if runner.is_degraded() {
+                eprintln!(
+                    "rank death tolerated: degraded to {} nodes, lost level replayed",
+                    runner.active_plan().config().num_nodes
+                );
+            }
+            (std::sync::Arc::clone(runner.active_plan()), batch)
+        }
+        None => {
+            let plan = std::sync::Arc::new(src.plan);
+            let mut session = plan.session();
+            let batch = session.run_batch(&roots)?;
+            session
+                .assert_batch_agreement()
+                .map_err(|e| format!("node disagreement: {e}"))?;
+            (plan, batch)
+        }
+    };
     let bm = batch.metrics();
     println!(
         "graph: |V|={} |E|={}  nodes={nodes} mode={} fanout={fanout} batch={}",
@@ -581,8 +656,16 @@ fn cmd_batch(argv: Vec<String>) -> Result<()> {
         bm.depth(),
         count(bm.bottom_up_edges())
     );
+    if faulted {
+        println!(
+            "recovery: {} retries, {} bytes retransmitted, {:.3} ms recovery time",
+            count(bm.retries()),
+            count(bm.retry_bytes()),
+            bm.recovery_time() * 1e3
+        );
+    }
     if a.get_flag("compare") {
-        let seq = session.sequential_baseline(&roots)?;
+        let seq = plan.session().sequential_baseline(&roots)?;
         println!(
             "sequential: {} sync rounds, {} bytes, sim {:.3} ms",
             seq.sync_rounds,
@@ -625,7 +708,8 @@ fn cmd_serve(argv: Vec<String>) -> Result<()> {
         .opt("coalesce-window-us", "200", "how long a lone request waits for co-travellers")
         .opt("max-batch", "64", "max coalesced batch width (1..=512)")
         .opt("queue-depth", "1024", "admission-queue bound (overloaded past it)")
-        .opt("timeout-us", "0", "default per-request deadline in us (0 = none)");
+        .opt("timeout-us", "0", "default per-request deadline in us (0 = none)")
+        .opt("fault-plan", "", "JSON fault schedule armed on every worker session");
     let a = handle_help(spec.clone().parse(argv), &spec)?;
 
     let max_batch = a.get_usize("max-batch")?;
@@ -660,7 +744,11 @@ fn cmd_serve(argv: Vec<String>) -> Result<()> {
         queue_depth: a.get_usize("queue-depth")?,
         default_timeout_us: (timeout > 0).then_some(timeout),
     };
-    let server = butterfly_bfs::serve::Server::bind(plan, serve_cfg)?;
+    let mut server = butterfly_bfs::serve::Server::bind(plan, serve_cfg)?;
+    if let Some(fp) = load_fault_plan(&a.get("fault-plan"))? {
+        server.arm_faults(std::sync::Arc::new(FaultInjector::new(fp)));
+        eprintln!("fault plan armed: worker sessions inject + retry deterministically");
+    }
     println!("serving on {}", server.local_addr()?);
     let report = server.run()?;
     println!("{}", report.render());

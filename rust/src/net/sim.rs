@@ -106,6 +106,18 @@ fn price_round(num_endpoints: usize, transfers: &[ClassTransfer], net: &NetModel
     }
 }
 
+/// Price one *retransmission* of a single transfer under the topology's
+/// link class for that pair: per-message latency plus serialization of the
+/// payload over one link. Retries are point-to-point re-sends outside the
+/// bulk round structure (the rest of the round already completed), so they
+/// pay no port contention — this is the unit the fault-recovery machinery
+/// ([`crate::fault`]) uses to price `retry_bytes` into `recovery_time`,
+/// and the Python port mirrors it exactly.
+pub fn retransmit_time(topo: &TopologyModel, src: u32, dst: u32, bytes: u64) -> f64 {
+    let class = if topo.is_intra(src, dst) { &topo.intra } else { &topo.inter };
+    class.latency + bytes as f64 / class.link_bandwidth
+}
+
 /// Price `schedule` under a two-class topology, with per-transfer payload
 /// sizes supplied by `payload_bytes(round, transfer_index)`.
 ///
@@ -322,6 +334,18 @@ mod tests {
         let t_fan = simulate_topology(&s_fan, &topo, |_, _| MB).total();
         let t_one = simulate_topology(&one, &topo, |_, _| MB).total();
         assert!(t_fan > t_one * 3.0, "fan={t_fan} one={t_one}");
+    }
+
+    #[test]
+    fn retransmit_time_uses_the_pair_link_class() {
+        let topo = TopologyModel::dgx2_cluster(8);
+        let fast = retransmit_time(&topo, 0, 1, 1 << 20);
+        let slow = retransmit_time(&topo, 0, 8, 1 << 20);
+        let want_fast = 2.0e-6 + (1u64 << 20) as f64 / 25.0e9;
+        let want_slow = 20.0e-6 + (1u64 << 20) as f64 / 2.5e9;
+        assert!((fast - want_fast).abs() < 1e-15);
+        assert!((slow - want_slow).abs() < 1e-15);
+        assert!(slow > fast * 5.0);
     }
 
     #[test]

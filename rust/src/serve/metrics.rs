@@ -10,9 +10,48 @@
 //! the CI check can recompute exactly.
 
 use std::collections::BTreeMap;
+use std::sync::atomic::{AtomicU8, Ordering};
 use std::sync::{Mutex, MutexGuard};
 
 use crate::util::json::Json;
+
+/// Server health ladder, surfaced in every `stats` response.
+///
+/// Transitions are monotonic (a server never silently "heals"): the
+/// server starts [`Healthy`](Health::Healthy), moves to
+/// [`Degraded`](Health::Degraded) the first time a batch needed the
+/// transparent retry path (an engine fault or panic tore a pooled
+/// session), and to [`Draining`](Health::Draining) once shutdown begins —
+/// queued queries still drain, but new ones are rejected.
+#[derive(Clone, Copy, Debug, PartialEq, Eq, PartialOrd, Ord)]
+pub enum Health {
+    /// No engine faults observed; full capacity.
+    Healthy,
+    /// At least one batch needed a retry on a fresh session; the server
+    /// keeps answering, and `stats` reports `degraded: true`.
+    Degraded,
+    /// Shutdown in progress: admitted queries drain, new ones bounce.
+    Draining,
+}
+
+impl Health {
+    /// Wire name used in the `stats` response.
+    pub fn name(self) -> &'static str {
+        match self {
+            Health::Healthy => "healthy",
+            Health::Degraded => "degraded",
+            Health::Draining => "draining",
+        }
+    }
+
+    fn from_u8(v: u8) -> Self {
+        match v {
+            1 => Health::Degraded,
+            2 => Health::Draining,
+            _ => Health::Healthy,
+        }
+    }
+}
 
 /// Nearest-rank percentile over an ascending-sorted slice of integer
 /// microsecond latencies: the smallest value with at least `p`% of the
@@ -106,6 +145,9 @@ struct MetricsInner {
     bad_requests: u64,
     errors: u64,
     cancelled: u64,
+    /// Batches that failed once and were transparently retried on a
+    /// fresh pooled session.
+    retried: u64,
 }
 
 /// Thread-safe serving counters, shared by workers and the `stats` op.
@@ -117,6 +159,9 @@ struct MetricsInner {
 #[derive(Debug, Default)]
 pub struct ServeMetrics {
     inner: Mutex<MetricsInner>,
+    /// [`Health`] as its ladder index; advanced monotonically with
+    /// `fetch_max` so concurrent workers can only move it forward.
+    health: AtomicU8,
 }
 
 impl ServeMetrics {
@@ -168,6 +213,30 @@ impl ServeMetrics {
         self.lock().cancelled += 1;
     }
 
+    /// Record a batch that failed its first attempt and was retried on a
+    /// fresh pooled session. Also advances health to
+    /// [`Health::Degraded`].
+    pub fn record_retried(&self) {
+        self.lock().retried += 1;
+        self.set_health(Health::Degraded);
+    }
+
+    /// Advance the health ladder. Transitions are monotonic: attempts to
+    /// move backwards (e.g. `Healthy` after `Draining`) are ignored.
+    pub fn set_health(&self, health: Health) {
+        self.health.fetch_max(health as u8, Ordering::SeqCst);
+    }
+
+    /// Current health state.
+    pub fn health(&self) -> Health {
+        Health::from_u8(self.health.load(Ordering::SeqCst))
+    }
+
+    /// Number of transparently retried batches so far.
+    pub fn retried(&self) -> u64 {
+        self.lock().retried
+    }
+
     /// Number of cancelled (client-gone-at-dispatch) requests so far.
     pub fn cancelled(&self) -> u64 {
         self.lock().cancelled
@@ -207,6 +276,9 @@ impl ServeMetrics {
             ("bad_requests", Json::u(m.bad_requests)),
             ("errors", Json::u(m.errors)),
             ("cancelled", Json::u(m.cancelled)),
+            ("retried", Json::u(m.retried)),
+            ("health", Json::s(self.health().name())),
+            ("degraded", Json::Bool(self.health() == Health::Degraded)),
             ("p50_us", Json::u(pcts[0])),
             ("p99_us", Json::u(pcts[1])),
             ("mean_latency_us", Json::n(m.latency.mean())),
@@ -298,6 +370,35 @@ mod tests {
         let r = m.report(1_000_000);
         assert_eq!(r.get("cancelled").unwrap().as_u64(), Some(2));
         assert_eq!(m.cancelled(), 2);
+    }
+
+    #[test]
+    fn health_ladder_is_monotonic_and_surfaced() {
+        let m = ServeMetrics::new();
+        assert_eq!(m.health(), Health::Healthy);
+        let r = m.report(1_000_000);
+        assert_eq!(r.get("health").unwrap().as_str(), Some("healthy"));
+        assert_eq!(r.get("degraded"), Some(&Json::Bool(false)));
+        assert_eq!(r.get("retried").unwrap().as_u64(), Some(0));
+
+        m.record_retried();
+        assert_eq!(m.health(), Health::Degraded);
+        assert_eq!(m.retried(), 1);
+        let r = m.report(1_000_000);
+        assert_eq!(r.get("health").unwrap().as_str(), Some("degraded"));
+        assert_eq!(r.get("degraded"), Some(&Json::Bool(true)));
+        assert_eq!(r.get("retried").unwrap().as_u64(), Some(1));
+
+        // No healing: Healthy after Degraded is a no-op.
+        m.set_health(Health::Healthy);
+        assert_eq!(m.health(), Health::Degraded);
+        // Draining wins over everything and is terminal.
+        m.set_health(Health::Draining);
+        m.set_health(Health::Degraded);
+        assert_eq!(m.health(), Health::Draining);
+        let r = m.report(1_000_000);
+        assert_eq!(r.get("health").unwrap().as_str(), Some("draining"));
+        assert_eq!(r.get("degraded"), Some(&Json::Bool(false)));
     }
 
     #[test]

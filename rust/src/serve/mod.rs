@@ -45,6 +45,6 @@ pub mod protocol;
 pub mod server;
 
 pub use coalescer::{Coalescer, Pending};
-pub use metrics::{nearest_rank_us, LatencyHistogram, ServeMetrics, LATENCY_WINDOW_CAP};
+pub use metrics::{nearest_rank_us, Health, LatencyHistogram, ServeMetrics, LATENCY_WINDOW_CAP};
 pub use protocol::Request;
 pub use server::{ServeConfig, Server};

@@ -32,11 +32,12 @@ use std::time::{Duration, Instant};
 
 use crate::bfs::serial::INF;
 use crate::coordinator::{BatchWidth, SessionPool, TraversalPlan};
+use crate::fault::plan::FaultInjector;
 use crate::graph::csr::VertexId;
 use crate::util::json::Json;
 
 use super::coalescer::{Coalescer, Pending};
-use super::metrics::ServeMetrics;
+use super::metrics::{Health, ServeMetrics};
 use super::protocol::{self, Request};
 
 /// Serving knobs; see the field docs for the latency/throughput levers.
@@ -111,6 +112,7 @@ pub struct Server {
     plan: Arc<TraversalPlan>,
     cfg: ServeConfig,
     metrics: Arc<ServeMetrics>,
+    injector: Option<Arc<FaultInjector>>,
 }
 
 impl Server {
@@ -131,7 +133,15 @@ impl Server {
             ));
         }
         let listener = TcpListener::bind(&cfg.addr)?;
-        Ok(Self { listener, plan, cfg, metrics: Arc::new(ServeMetrics::new()) })
+        Ok(Self { listener, plan, cfg, metrics: Arc::new(ServeMetrics::new()), injector: None })
+    }
+
+    /// Arm every worker session with a deterministic fault injector
+    /// (fault-injection smoke tests and `serve --fault-plan`). Injected
+    /// exchange faults surface as batch errors and exercise the
+    /// transparent-retry / health-degradation path.
+    pub fn arm_faults(&mut self, injector: Arc<FaultInjector>) {
+        self.injector = Some(injector);
     }
 
     /// The bound address (resolves `:0` to the actual ephemeral port).
@@ -170,6 +180,7 @@ impl Server {
                 let rx = &rx;
                 let pool = &pool;
                 let metrics = &self.metrics;
+                let injector = &self.injector;
                 scope.spawn(move || loop {
                     let batch = {
                         let guard =
@@ -177,7 +188,7 @@ impl Server {
                         guard.recv()
                     };
                     let Ok(batch) = batch else { break };
-                    run_one_batch(pool, metrics, batch, now_us);
+                    run_one_batch(pool, metrics, injector.as_ref(), batch, now_us);
                 });
             }
 
@@ -329,6 +340,7 @@ fn serve_connection(
             }
             Request::Shutdown => {
                 shutdown.store(true, Ordering::SeqCst);
+                metrics.set_health(Health::Draining);
                 send_line(&conn, &protocol::shutdown_ok());
                 queue.1.notify_all();
                 // Wake a blocked accept() so the acceptor loop observes
@@ -397,22 +409,39 @@ fn serve_connection(
 /// Execute one coalesced batch through a pooled session and answer
 /// every member. Panics inside the engine answer `error` and discard
 /// the session via the pool's unwind-discard path.
+///
+/// Graceful degradation: a batch whose first attempt fails (engine
+/// error *or* panic) gets **one** transparent retry on a fresh pooled
+/// session — the failed session was already discarded, so transient
+/// faults (an injected exchange fault, a torn session) are invisible to
+/// clients beyond latency. The retry is recorded and moves the server's
+/// health to [`Health::Degraded`]; only a second consecutive failure
+/// answers `error`.
 fn run_one_batch(
     pool: &SessionPool,
     metrics: &ServeMetrics,
+    injector: Option<&Arc<FaultInjector>>,
     batch: DispatchedBatch,
     now_us: impl Fn() -> u64,
 ) {
     let roots: Vec<VertexId> = batch.members.iter().map(|p| p.item.root).collect();
     let width = roots.len();
-    let result = catch_unwind(AssertUnwindSafe(|| {
-        // The PooledSession lives entirely inside the unwind boundary:
-        // a panic drops it while `thread::panicking()` is observable on
-        // the unwind path of this closure's stack, discarding the
-        // possibly-torn session instead of returning it to the pool.
-        let mut session = pool.acquire();
-        session.run_batch(&roots)
-    }));
+    let attempt = || {
+        catch_unwind(AssertUnwindSafe(|| {
+            // The PooledSession lives entirely inside the unwind boundary:
+            // a panic drops it while `thread::panicking()` is observable on
+            // the unwind path of this closure's stack, discarding the
+            // possibly-torn session instead of returning it to the pool.
+            let mut session = pool.acquire();
+            session.arm_faults(injector.map(Arc::clone));
+            session.run_batch(&roots)
+        }))
+    };
+    let mut result = attempt();
+    if !matches!(result, Ok(Ok(_))) {
+        metrics.record_retried();
+        result = attempt();
+    }
     match result {
         Ok(Ok(b)) => {
             metrics.record_batch(width);
@@ -450,8 +479,10 @@ fn run_one_batch(
             }
         }
         Ok(Err(e)) => {
-            // Roots are validated at admission, so this is unreachable
-            // in practice; answer every member rather than going silent.
+            // Roots are validated at admission, so absent injected
+            // faults this is unreachable; with a fault plan armed it is
+            // the retry-budget-exhausted path. Answer every member with
+            // the typed error rather than going silent (or wrong).
             for p in &batch.members {
                 metrics.record_error();
                 send_line(&p.item.conn, &protocol::internal_error(p.item.id, &e.to_string()));

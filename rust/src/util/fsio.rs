@@ -1,0 +1,99 @@
+//! Crash-consistent file writes.
+//!
+//! Every on-disk artifact the engine persists (plan caches, `.bbfs`
+//! snapshots and stores, bench protocol files) goes through
+//! [`atomic_write`]: the bytes land in a same-directory temporary file,
+//! are `fsync`ed, and only then renamed over the destination. POSIX
+//! `rename(2)` is atomic, so a reader — or a writer that crashed mid-way —
+//! can only ever observe the complete old file or the complete new file,
+//! never a torn prefix. `tests/crash_consistency.rs` drives the torn/
+//! partial-write corpus proving the loaders reject anything less.
+
+use std::fs::{File, OpenOptions};
+use std::io::{self, Write};
+use std::path::{Path, PathBuf};
+
+/// Build the sibling temporary path `<file>.tmp.<pid>` used by
+/// [`atomic_write`]. Same directory as the destination, so the final
+/// rename never crosses a filesystem boundary.
+fn tmp_sibling(path: &Path) -> PathBuf {
+    let mut name = path.file_name().map(|n| n.to_os_string()).unwrap_or_default();
+    name.push(format!(".tmp.{}", std::process::id()));
+    path.with_file_name(name)
+}
+
+/// Write `bytes` to `path` crash-consistently: write-tmp → fsync →
+/// atomic-rename. On any error the temporary file is cleaned up and the
+/// destination is left exactly as it was — either the previous complete
+/// contents or absent, never a torn prefix.
+pub fn atomic_write(path: &Path, bytes: &[u8]) -> io::Result<()> {
+    let tmp = tmp_sibling(path);
+    let result = (|| {
+        let mut f = OpenOptions::new().write(true).create(true).truncate(true).open(&tmp)?;
+        f.write_all(bytes)?;
+        f.sync_all()?;
+        drop(f);
+        std::fs::rename(&tmp, path)?;
+        // Durability of the rename itself: fsync the containing directory
+        // (best-effort — some filesystems refuse directory handles).
+        if let Some(dir) = path.parent() {
+            if !dir.as_os_str().is_empty() {
+                if let Ok(d) = File::open(dir) {
+                    let _ = d.sync_all();
+                }
+            }
+        }
+        Ok(())
+    })();
+    if result.is_err() {
+        let _ = std::fs::remove_file(&tmp);
+    }
+    result
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn scratch(name: &str) -> PathBuf {
+        let dir = std::env::temp_dir().join(format!("bbfs-fsio-{}-{name}", std::process::id()));
+        std::fs::create_dir_all(&dir).unwrap();
+        dir.join(name)
+    }
+
+    #[test]
+    fn writes_and_replaces() {
+        let path = scratch("replace.txt");
+        atomic_write(&path, b"first").unwrap();
+        assert_eq!(std::fs::read(&path).unwrap(), b"first");
+        atomic_write(&path, b"second-longer").unwrap();
+        assert_eq!(std::fs::read(&path).unwrap(), b"second-longer");
+        let _ = std::fs::remove_file(&path);
+    }
+
+    #[test]
+    fn failed_write_leaves_destination_untouched() {
+        let path = scratch("keep.txt");
+        atomic_write(&path, b"survivor").unwrap();
+        // Writing *through* the file as if it were a directory must fail
+        // without touching the existing bytes.
+        let bogus = path.join("child.txt");
+        assert!(atomic_write(&bogus, b"x").is_err());
+        assert_eq!(std::fs::read(&path).unwrap(), b"survivor");
+        let _ = std::fs::remove_file(&path);
+    }
+
+    #[test]
+    fn no_tmp_residue_after_success_or_failure() {
+        let path = scratch("clean.txt");
+        atomic_write(&path, b"ok").unwrap();
+        let dir = path.parent().unwrap();
+        let residue: Vec<_> = std::fs::read_dir(dir)
+            .unwrap()
+            .filter_map(|e| e.ok())
+            .filter(|e| e.file_name().to_string_lossy().contains(".tmp."))
+            .collect();
+        assert!(residue.is_empty(), "leftover tmp files: {residue:?}");
+        let _ = std::fs::remove_file(&path);
+    }
+}

@@ -7,6 +7,7 @@
 //! are filled here.
 
 pub mod cli;
+pub mod fsio;
 pub mod json;
 pub mod log;
 pub mod prng;

@@ -1,0 +1,173 @@
+//! Crash-consistency corpus: every persisted artifact is published via
+//! `atomic_write` (write-tmp → fsync → atomic-rename), so a reader can
+//! only ever observe a complete old file or a complete new file. This
+//! suite drives the other half of that contract: if a torn file *did*
+//! appear (a crash mid-write on a filesystem without atomic rename, a
+//! partial copy), every loader rejects it with a typed error — no
+//! panics, no OOM-sized allocations, and never a silently-wrong graph
+//! or plan.
+
+use std::path::PathBuf;
+use std::sync::Arc;
+
+use butterfly_bfs::coordinator::{EngineConfig, PlanError, TraversalPlan};
+use butterfly_bfs::graph::csr::Csr;
+use butterfly_bfs::graph::gen::urand::uniform_random;
+use butterfly_bfs::graph::io::{read_binary, write_binary};
+use butterfly_bfs::graph::store::{write_store, GraphStore, StoreWriteOptions};
+use butterfly_bfs::net::TopologyModel;
+
+fn scratch(name: &str) -> PathBuf {
+    let dir = std::env::temp_dir().join(format!("bbfs-crash-{}", std::process::id()));
+    std::fs::create_dir_all(&dir).unwrap();
+    dir.join(name)
+}
+
+fn graph() -> Csr {
+    let (g, _) = uniform_random(120, 4, 5);
+    g
+}
+
+/// Prefix lengths exercising every structural boundary of a file plus a
+/// stride-sweep through its interior.
+fn torn_prefixes(len: usize) -> Vec<usize> {
+    let mut cuts = vec![0, 1, 7, 8, 15, 16, 23, 24];
+    cuts.extend((0..len).step_by(((len / 64).max(7)) | 1));
+    if len > 0 {
+        cuts.push(len - 1);
+    }
+    cuts.retain(|&c| c < len);
+    cuts.sort_unstable();
+    cuts.dedup();
+    cuts
+}
+
+/// Torn `.bbfs` v1 snapshots are rejected typed at every prefix length,
+/// and trailing garbage after a complete snapshot is rejected too (the
+/// exact-length check). The untorn file still round-trips bit-exactly.
+#[test]
+fn torn_snapshot_corpus_rejected_typed() {
+    let g = graph();
+    let path = scratch("snap.bbfs");
+    write_binary(&g, &path).unwrap();
+    let full = std::fs::read(&path).unwrap();
+    assert_eq!(read_binary(&path).unwrap(), g, "untorn snapshot round-trips");
+
+    let torn = scratch("snap-torn.bbfs");
+    for cut in torn_prefixes(full.len()) {
+        std::fs::write(&torn, &full[..cut]).unwrap();
+        assert!(
+            read_binary(&torn).is_err(),
+            "torn snapshot prefix of {cut}/{} bytes must be rejected",
+            full.len()
+        );
+    }
+    // A torn *suffix* of a concatenated write (old file + partial new
+    // one) fails the exact-length check just the same.
+    let mut padded = full.clone();
+    padded.extend_from_slice(&full[..9]);
+    std::fs::write(&torn, &padded).unwrap();
+    assert!(read_binary(&torn).is_err(), "trailing bytes must be rejected");
+}
+
+/// Torn `.bbfs` v2 store containers are rejected typed at every prefix
+/// length — through both the file loader and the byte loader.
+#[test]
+fn torn_store_corpus_rejected_typed() {
+    let g = graph();
+    let path = scratch("store.bbfs");
+    write_store(&g, &path, StoreWriteOptions::default()).unwrap();
+    let full = std::fs::read(&path).unwrap();
+    let decoded = GraphStore::open(&path).unwrap().to_csr().unwrap();
+    assert_eq!(decoded, g, "untorn store round-trips");
+
+    let torn = scratch("store-torn.bbfs");
+    for cut in torn_prefixes(full.len()) {
+        std::fs::write(&torn, &full[..cut]).unwrap();
+        assert!(
+            GraphStore::open(&torn).is_err(),
+            "torn store prefix of {cut}/{} bytes must be rejected",
+            full.len()
+        );
+        assert!(
+            GraphStore::open_bytes(full[..cut].to_vec()).is_err(),
+            "torn store bytes ({cut}) must be rejected"
+        );
+    }
+}
+
+/// Torn plan-cache files are rejected as [`PlanError::CacheCorrupt`] at
+/// every prefix, the untorn cache warm-starts to bit-identical answers,
+/// and a cache written under one interconnect is refused under another
+/// with a typed fingerprint mismatch naming the `net` field — never
+/// silently reused with stale pricing.
+#[test]
+fn torn_plan_cache_rejected_and_fingerprint_pins_net() {
+    let g = graph();
+    let store_path = scratch("cache-store.bbfs");
+    write_store(&g, &store_path, StoreWriteOptions::default()).unwrap();
+    let store = Arc::new(GraphStore::open(&store_path).unwrap());
+    let cfg = EngineConfig::dgx2(4, 2);
+    let cold = TraversalPlan::build_from_store(Arc::clone(&store), cfg.clone()).unwrap();
+    let cache = scratch("plan.cache.json");
+    cold.save_cache(&cache).unwrap();
+    let full = std::fs::read(&cache).unwrap();
+
+    // Untorn: warm answers == cold answers.
+    let warm = TraversalPlan::load_cache(Arc::clone(&store), cfg.clone(), &cache).unwrap();
+    let a = cold.session().run(3).unwrap();
+    let b = warm.session().run(3).unwrap();
+    assert_eq!(a.dist(), b.dist(), "warm-start must be bit-identical");
+
+    let torn = scratch("plan-torn.cache.json");
+    // `save_cache` appends a trailing newline; cut strictly inside the
+    // JSON text proper so every prefix is genuinely unparseable.
+    for cut in torn_prefixes(full.len() - 1) {
+        std::fs::write(&torn, &full[..cut]).unwrap();
+        match TraversalPlan::load_cache(Arc::clone(&store), cfg.clone(), &torn) {
+            Err(PlanError::CacheCorrupt(_)) => {}
+            other => panic!("torn cache prefix {cut}: expected CacheCorrupt, got {other:?}"),
+        }
+    }
+
+    // Same cache, different interconnect: typed mismatch naming `net`.
+    let tiered = EngineConfig {
+        topology: Some(TopologyModel::dgx2_cluster(2)),
+        ..cfg
+    };
+    match TraversalPlan::load_cache(Arc::clone(&store), tiered, &cache) {
+        Err(PlanError::CacheFingerprintMismatch { field, .. }) => {
+            assert_eq!(field, "net", "the disagreeing field is named");
+        }
+        other => panic!("expected CacheFingerprintMismatch, got {other:?}"),
+    }
+}
+
+/// The publish step itself: a failed `atomic_write` (here: the
+/// destination path runs *through* an existing file) leaves the previous
+/// complete artifact untouched and readable, a successful re-write
+/// replaces it completely, and no `.tmp.` staging residue survives
+/// either way.
+#[test]
+fn failed_publish_preserves_previous_artifact() {
+    let g_old = graph();
+    let (g_new, _) = uniform_random(90, 3, 6);
+    let path = scratch("replace.bbfs");
+    write_binary(&g_old, &path).unwrap();
+
+    // A write that cannot even stage must leave the old snapshot intact.
+    let impossible = path.join("child.bbfs");
+    assert!(write_binary(&g_new, &impossible).is_err());
+    assert_eq!(read_binary(&path).unwrap(), g_old, "old artifact survives");
+
+    // A successful write replaces the contents completely.
+    write_binary(&g_new, &path).unwrap();
+    assert_eq!(read_binary(&path).unwrap(), g_new, "new artifact replaces old");
+
+    let residue: Vec<_> = std::fs::read_dir(path.parent().unwrap())
+        .unwrap()
+        .filter_map(|e| e.ok())
+        .filter(|e| e.file_name().to_string_lossy().contains(".tmp."))
+        .collect();
+    assert!(residue.is_empty(), "staging residue left behind: {residue:?}");
+}

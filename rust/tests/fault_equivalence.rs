@@ -1,0 +1,421 @@
+//! Fault-equivalence suite: the headline invariant of the fault layer.
+//!
+//! Under any injected [`FaultPlan`] that recovery tolerates, distances
+//! are **bit-identical** to the fault-free run — across every partition
+//! mode (1D butterfly, 2D fold+expand, hierarchical), every direction
+//! policy, and batch widths spanning the full 512-lane envelope.
+//! Tolerated faults only ever move the recovery counters (`retries`,
+//! `retry_bytes`, `recovery_time`) and the simulated clock; the Phase-1
+//! byte/message accounting and every lane's answer stay untouched.
+//!
+//! On top of the property, the edge cases the recovery ladder must pin:
+//! faults at the first and the last byte-shipping level, several faults
+//! in one round, a fault striking a bottom-up dense exchange, retry-budget
+//! exhaustion (typed [`QueryError::Unrecoverable`], never a wrong
+//! answer), kill-rank degrade + replay in all three modes, and the serve
+//! layer's transparent retry surfacing `degraded: true` in `stats`.
+
+use std::io::{BufRead, BufReader, Write};
+use std::net::TcpStream;
+use std::sync::Arc;
+use std::time::Duration;
+
+use butterfly_bfs::bfs::serial::serial_bfs;
+use butterfly_bfs::coordinator::config::DirectionMode;
+use butterfly_bfs::coordinator::{
+    BatchMetrics, EngineConfig, QueryError, TraversalPlan,
+};
+use butterfly_bfs::fault::{
+    FaultInjector, FaultKind, FaultPlan, FaultSpec, FaultTolerantRunner,
+};
+use butterfly_bfs::graph::csr::{Csr, VertexId};
+use butterfly_bfs::graph::gen::urand::uniform_random;
+use butterfly_bfs::serve::{ServeConfig, Server};
+use butterfly_bfs::util::json::Json;
+
+const N: usize = 600;
+
+fn graph() -> Csr {
+    let (g, _) = uniform_random(N, 3, 11);
+    g
+}
+
+fn modes() -> [(&'static str, EngineConfig); 3] {
+    [
+        ("1d", EngineConfig::dgx2(4, 2)),
+        ("2d", EngineConfig::dgx2_2d(2, 2)),
+        ("hier", EngineConfig::dgx2_cluster_hier(2, 2, 2)),
+    ]
+}
+
+const DIRECTIONS: [DirectionMode; 3] = [
+    DirectionMode::TopDown,
+    DirectionMode::BottomUp,
+    DirectionMode::DirOpt { alpha: 15, beta: 18 },
+];
+
+fn roots_of(width: usize) -> Vec<VertexId> {
+    (0..width).map(|i| ((i * 37) % N) as VertexId).collect()
+}
+
+/// A drop fault on *every* transfer of *every* round at one level — the
+/// blanket guarantees at least one spec addresses a transfer that
+/// actually ships bytes, so the injection demonstrably fires.
+fn blanket(plan: &TraversalPlan, level: u32, repeat: u32) -> FaultPlan {
+    let mut faults = Vec::new();
+    for (round, transfers) in plan.schedule().rounds.iter().enumerate() {
+        for t in transfers {
+            faults.push(FaultSpec {
+                level,
+                round,
+                src: t.src,
+                dst: t.dst,
+                kind: FaultKind::Drop { repeat },
+                max_fires: 0,
+            });
+        }
+    }
+    FaultPlan { faults, ..FaultPlan::default() }
+}
+
+/// Levels that shipped at least one exchange byte in a fault-free run —
+/// the levels where an injected transfer fault can actually strike.
+fn shipping_levels(m: &BatchMetrics) -> Vec<u32> {
+    m.levels.iter().filter(|l| l.bytes > 0).map(|l| l.level).collect()
+}
+
+fn assert_counter_only(
+    tag: &str,
+    plan: &TraversalPlan,
+    roots: &[VertexId],
+    fplan: FaultPlan,
+) -> (u64, u64) {
+    let free = plan.session().run_batch(roots).unwrap();
+    let injector = Arc::new(FaultInjector::new(fplan));
+    let mut armed = plan.session();
+    armed.arm_faults(Some(Arc::clone(&injector)));
+    let faulted = armed.run_batch(roots).unwrap();
+
+    for lane in 0..roots.len() {
+        assert_eq!(free.dist(lane), faulted.dist(lane), "{tag} lane {lane}");
+    }
+    let (mf, ma) = (free.metrics(), faulted.metrics());
+    assert_eq!(mf.levels.len(), ma.levels.len(), "{tag}: level count");
+    for (a, b) in mf.levels.iter().zip(&ma.levels) {
+        assert_eq!(a.bytes, b.bytes, "{tag} level {}: bytes", a.level);
+        assert_eq!(a.messages, b.messages, "{tag} level {}: messages", a.level);
+        assert_eq!(a.frontier, b.frontier, "{tag} level {}: frontier", a.level);
+    }
+    assert_eq!(mf.retries(), 0, "{tag}: fault-free run must not retry");
+    let matched = injector.specs_matched();
+    if matched > 0 {
+        assert!(
+            ma.recovery_time() > 0.0,
+            "{tag}: {matched} specs fired but recovery_time is zero"
+        );
+        assert!(
+            (ma.sim_seconds_with_recovery() - ma.sim_seconds() - ma.recovery_time()).abs()
+                < 1e-12,
+            "{tag}: with-recovery clock must be sim + recovery"
+        );
+    } else {
+        assert_eq!(ma.retries(), 0, "{tag}: nothing fired, nothing retried");
+        assert_eq!(ma.recovery_time(), 0.0, "{tag}: nothing fired, no recovery");
+    }
+    (matched as u64, ma.retries())
+}
+
+// ---------- the headline property ----------
+
+/// Tolerated seeded fault plans are counter-only on every mode ×
+/// direction × width combination, widths sweeping the full lane
+/// envelope {1, 64, 256, 512}. Suite-wide, the generated schedules must
+/// actually fire (retries > 0 somewhere) — otherwise the property would
+/// pass vacuously.
+#[test]
+fn generated_fault_plans_are_counter_only_everywhere() {
+    let g = graph();
+    let mut total_matched = 0u64;
+    let mut total_retries = 0u64;
+    for (mi, (mode, base)) in modes().into_iter().enumerate() {
+        for (di, direction) in DIRECTIONS.into_iter().enumerate() {
+            let cfg = EngineConfig { direction, ..base.clone() };
+            let plan = TraversalPlan::build(&g, cfg).unwrap();
+            for width in [1usize, 64, 256, 512] {
+                let roots = roots_of(width);
+                let probe = plan.session().run_batch(&roots).unwrap();
+                let seed = 0xF00D ^ ((mi as u64) << 16) ^ ((di as u64) << 8) ^ width as u64;
+                let fplan = FaultPlan::generate(
+                    seed,
+                    8,
+                    probe.metrics().levels.len() as u32,
+                    plan.schedule().rounds.len(),
+                    plan.schedule().num_nodes,
+                );
+                let tag = format!("{mode}/{direction:?}/w{width}");
+                let (m, r) = assert_counter_only(&tag, &plan, &roots, fplan);
+                total_matched += m;
+                total_retries += r;
+            }
+        }
+    }
+    assert!(total_matched > 0, "no generated fault ever matched a live transfer");
+    assert!(total_retries > 0, "no generated drop/corrupt ever forced a retry");
+}
+
+// ---------- edge cases ----------
+
+/// Faults at the *first* and the *last* byte-shipping level are both
+/// absorbed: the boundary levels exercise the seam right after the root
+/// exchange and right before the traversal drains.
+#[test]
+fn faults_at_first_and_last_shipping_level_are_absorbed() {
+    let g = graph();
+    for (mode, base) in modes() {
+        let plan = TraversalPlan::build(&g, base).unwrap();
+        let roots = roots_of(5);
+        let free = plan.session().run_batch(&roots).unwrap();
+        let levels = shipping_levels(free.metrics());
+        let (first, last) =
+            (*levels.first().expect("bytes flow"), *levels.last().expect("bytes flow"));
+        for level in [first, last] {
+            let (matched, retries) = assert_counter_only(
+                &format!("{mode}/level{level}"),
+                &plan,
+                &roots,
+                blanket(&plan, level, 1),
+            );
+            assert!(matched >= 1, "{mode}: blanket at level {level} never fired");
+            assert_eq!(retries, matched, "{mode}: one retry per matched drop");
+        }
+    }
+}
+
+/// Several faults striking the same round are each detected and each
+/// priced: one retry per matched single-drop spec, no coalescing and no
+/// double-counting.
+#[test]
+fn multiple_faults_in_one_round_each_priced() {
+    let g = graph();
+    let plan = TraversalPlan::build(&g, EngineConfig::dgx2(4, 2)).unwrap();
+    let roots = roots_of(64);
+    let free = plan.session().run_batch(&roots).unwrap();
+    let busiest = free
+        .metrics()
+        .levels
+        .iter()
+        .max_by_key(|l| l.bytes)
+        .expect("nonempty run")
+        .level;
+    let fplan = blanket(&plan, busiest, 1);
+    let (matched, retries) =
+        assert_counter_only("two-per-round", &plan, &roots, fplan);
+    // The busiest level of a 4-rank butterfly ships on several transfers
+    // per round — at least two specs must have fired in the same round.
+    assert!(matched >= 2, "expected >= 2 fired specs, got {matched}");
+    assert_eq!(retries, matched);
+}
+
+/// A fault striking a bottom-up dense exchange (the aggregated
+/// whole-range transfer, not a sparse delta) is detected and retried the
+/// same way — direction is invisible to the fault seam.
+#[test]
+fn bottom_up_dense_transfer_fault_is_absorbed() {
+    let g = graph();
+    let cfg = EngineConfig {
+        direction: DirectionMode::BottomUp,
+        ..EngineConfig::dgx2(4, 2)
+    };
+    let plan = TraversalPlan::build(&g, cfg).unwrap();
+    let roots = roots_of(64);
+    let free = plan.session().run_batch(&roots).unwrap();
+    let dense = free
+        .metrics()
+        .levels
+        .iter()
+        .filter(|l| l.bottom_up && l.bytes > 0)
+        .max_by_key(|l| l.bytes)
+        .expect("bottom-up run ships dense frames")
+        .level;
+    let (matched, retries) = assert_counter_only(
+        "bottom-up-dense",
+        &plan,
+        &roots,
+        blanket(&plan, dense, 1),
+    );
+    assert!(matched >= 1, "dense-level blanket never fired");
+    assert!(retries >= 1);
+    // The answers also match the serial oracle, not just each other.
+    let check = plan.session().run_batch(&roots).unwrap();
+    for (lane, &r) in roots.iter().enumerate() {
+        assert_eq!(check.dist(lane), &serial_bfs(&g, r)[..], "lane {lane}");
+    }
+}
+
+/// A drop streak longer than the retry budget aborts with the typed
+/// [`QueryError::Unrecoverable`] — attempts pinned at the budget — and
+/// never returns distances at all, let alone wrong ones.
+#[test]
+fn exhausted_retry_budget_is_typed_never_a_wrong_answer() {
+    let g = graph();
+    for (mode, base) in modes() {
+        let plan = TraversalPlan::build(&g, base).unwrap();
+        let roots = roots_of(8);
+        let free = plan.session().run_batch(&roots).unwrap();
+        let busiest = free
+            .metrics()
+            .levels
+            .iter()
+            .max_by_key(|l| l.bytes)
+            .expect("nonempty run")
+            .level;
+        let fplan = blanket(&plan, busiest, FaultPlan::default().max_retries + 1);
+        let budget = fplan.max_retries;
+        let mut armed = plan.session();
+        armed.arm_faults(Some(Arc::new(FaultInjector::new(fplan))));
+        match armed.run_batch(&roots) {
+            Err(QueryError::Unrecoverable { attempts, .. }) => {
+                assert_eq!(attempts, budget, "{mode}: attempts == retry budget");
+            }
+            other => panic!("{mode}: expected Unrecoverable, got {other:?}"),
+        }
+        // The session is reusable after the typed failure: disarm and the
+        // next query answers correctly.
+        armed.arm_faults(None);
+        let again = armed.run_batch(&roots).unwrap();
+        for lane in 0..roots.len() {
+            assert_eq!(again.dist(lane), free.dist(lane), "{mode} lane {lane}");
+        }
+    }
+}
+
+/// Kill-rank recovery in all three partition modes: the runner degrades
+/// onto the survivors, replays the lost level from the checkpoint, and
+/// the final distances equal the serial oracle lane for lane.
+#[test]
+fn killed_rank_recovers_bit_identical_in_every_mode() {
+    let g = graph();
+    let roots: Vec<VertexId> = vec![0, 17, 300];
+    for (mode, base) in modes() {
+        let ranks = TraversalPlan::build(&g, base.clone())
+            .unwrap()
+            .schedule()
+            .num_nodes;
+        let kill = FaultPlan {
+            faults: vec![FaultSpec {
+                level: 1,
+                round: 0,
+                src: ranks - 1,
+                dst: 0,
+                kind: FaultKind::KillRank,
+                max_fires: 1,
+            }],
+            ..FaultPlan::default()
+        };
+        let mut runner = FaultTolerantRunner::from_graph(&g, base, kill).unwrap();
+        let got = runner.run_batch(&roots).unwrap();
+        assert!(runner.is_degraded(), "{mode}: kill must force a re-plan");
+        assert!(
+            runner.active_plan().config().num_nodes < ranks as usize,
+            "{mode}: degraded plan must use fewer ranks"
+        );
+        for (lane, &r) in roots.iter().enumerate() {
+            assert_eq!(got.dist(lane), &serial_bfs(&g, r)[..], "{mode} lane {lane}");
+        }
+    }
+}
+
+// ---------- serve-layer degradation over a real socket ----------
+
+struct Client {
+    reader: BufReader<TcpStream>,
+    writer: TcpStream,
+    line: String,
+}
+
+impl Client {
+    fn connect(addr: std::net::SocketAddr) -> Client {
+        let stream = TcpStream::connect(addr).unwrap();
+        stream.set_read_timeout(Some(Duration::from_secs(30))).unwrap();
+        Client {
+            writer: stream.try_clone().unwrap(),
+            reader: BufReader::new(stream),
+            line: String::new(),
+        }
+    }
+
+    fn roundtrip(&mut self, req: &Json) -> Json {
+        self.writer.write_all(req.render().as_bytes()).unwrap();
+        self.writer.write_all(b"\n").unwrap();
+        self.line.clear();
+        let n = self.reader.read_line(&mut self.line).unwrap();
+        assert!(n > 0, "server closed the connection");
+        Json::parse(self.line.trim()).unwrap()
+    }
+}
+
+/// A transient kill on the first served batch is invisible to the
+/// client beyond latency: the server's one transparent retry answers
+/// correctly, and `stats` reports `retried >= 1`, `health: degraded`,
+/// `degraded: true`.
+#[test]
+fn serve_retries_transparently_and_reports_degraded() {
+    let (g, _) = uniform_random(400, 5, 7);
+    let plan = Arc::new(TraversalPlan::build(&g, EngineConfig::dgx2(4, 2)).unwrap());
+    let kill = FaultPlan {
+        faults: vec![FaultSpec {
+            level: 1,
+            round: 0,
+            src: 2,
+            dst: 0,
+            kind: FaultKind::KillRank,
+            max_fires: 1,
+        }],
+        ..FaultPlan::default()
+    };
+    let mut server = Server::bind(
+        Arc::clone(&plan),
+        ServeConfig { coalesce_window_us: 1_000, ..ServeConfig::default() },
+    )
+    .unwrap();
+    server.arm_faults(Arc::new(FaultInjector::new(kill)));
+    let addr = server.local_addr().unwrap();
+    let handle = std::thread::spawn(move || server.run().unwrap());
+
+    let mut c = Client::connect(addr);
+    let root: u64 = 42;
+    let resp = c.roundtrip(&Json::obj(vec![
+        ("op", Json::s("query")),
+        ("id", Json::u(1)),
+        ("root", Json::u(root)),
+        ("targets", Json::Arr(vec![Json::u(0), Json::u(399)])),
+    ]));
+    assert_eq!(
+        resp.get("status").unwrap().as_str(),
+        Some("ok"),
+        "transient fault must be retried, not surfaced: {resp:?}"
+    );
+    let solo = plan.session().run(root as VertexId).unwrap();
+    let dist = resp.get("dist").unwrap().as_arr().unwrap();
+    for (t, d) in [0usize, 399].into_iter().zip(dist) {
+        match d.as_u64() {
+            Some(served) => assert_eq!(served, u64::from(solo.dist()[t]), "target {t}"),
+            None => assert_eq!(solo.dist()[t], u32::MAX, "target {t}"),
+        }
+    }
+
+    let stats = c.roundtrip(&Json::obj(vec![("op", Json::s("stats"))]));
+    assert_eq!(stats.get("status").unwrap().as_str(), Some("ok"));
+    let s = stats.get("stats").unwrap();
+    assert!(
+        s.get("retried").unwrap().as_u64().unwrap() >= 1,
+        "retry must be recorded: {s:?}"
+    );
+    assert_eq!(s.get("health").unwrap().as_str(), Some("degraded"));
+    assert_eq!(s.get("degraded"), Some(&Json::Bool(true)));
+
+    let bye = c.roundtrip(&Json::obj(vec![("op", Json::s("shutdown"))]));
+    assert_eq!(bye.get("shutting_down"), Some(&Json::Bool(true)));
+    let report = handle.join().unwrap();
+    assert_eq!(report.get("completed").unwrap().as_u64(), Some(1));
+}

@@ -366,3 +366,205 @@ fn bitmap_bytes_closed_form_in_engine() {
         assert_eq!(l.bytes, per_msg * msgs, "level {}", l.level);
     }
 }
+
+// ---------------------------------------------------------------------------
+// Wire-frame corpus: hostile inputs against `fault::wire::WireDelta`
+// ---------------------------------------------------------------------------
+
+use butterfly_bfs::fault::{fnv1a64, WireArm, WireDelta, WireError};
+use butterfly_bfs::util::prng::Xoshiro256StarStar;
+
+/// A random well-formed delta: sorted unique vertices, nonzero masks.
+fn wire_delta(rng: &mut Xoshiro256StarStar, w: usize) -> WireDelta {
+    let nv = 64 + rng.next_usize(300) as u32;
+    let count = rng.next_usize(24);
+    let mut verts: Vec<u32> = (0..nv).collect();
+    rng.shuffle(&mut verts);
+    let mut picked = verts[..count].to_vec();
+    picked.sort_unstable();
+    let entries = picked
+        .into_iter()
+        .map(|v| {
+            let mut mask = vec![0u64; w];
+            mask[rng.next_usize(w)] = rng.next_u64() | 1;
+            (v, mask)
+        })
+        .collect();
+    WireDelta { num_vertices: nv, lane_words: w as u8, entries }
+}
+
+/// Append the FNV-1a trailer a well-formed sender would.
+fn seal(mut body: Vec<u8>) -> Vec<u8> {
+    let sum = fnv1a64(&body);
+    body.extend_from_slice(&sum.to_le_bytes());
+    body
+}
+
+/// A frame header with attacker-controlled fields (magic always valid).
+fn header(tag: u8, lane_words: u8, num_vertices: u32, count: u64) -> Vec<u8> {
+    let mut b = vec![0xBF, 0x5B, tag, lane_words];
+    b.extend_from_slice(&num_vertices.to_le_bytes());
+    b.extend_from_slice(&count.to_le_bytes());
+    b
+}
+
+/// Every strict prefix of a valid frame must yield a typed error — never a
+/// panic, never a bogus decode. The full frame must still round-trip.
+#[test]
+fn wire_truncation_corpus() {
+    forall(Config::cases(40), "wire truncation", |rng| {
+        let w = [1usize, 2, 4, 8][rng.next_usize(4)];
+        let d = wire_delta(rng, w);
+        for arm in WireArm::ALL {
+            let bytes = d.encode(arm);
+            if WireDelta::decode(&bytes).as_ref() != Ok(&d) {
+                return (false, format!("{arm:?} w={w}: full frame failed"));
+            }
+            for cut in 0..bytes.len() {
+                if WireDelta::decode(&bytes[..cut]).is_ok() {
+                    return (false, format!("{arm:?} w={w}: prefix {cut} decoded"));
+                }
+            }
+        }
+        (true, String::new())
+    });
+}
+
+/// Any single-bit flip anywhere in the frame is detected, and everything
+/// inside the checksummed region is classed as corruption (magic flips
+/// excepted — they fail even earlier). This is the detection path the
+/// fault model's `Corrupt` injection relies on.
+#[test]
+fn wire_bitflip_corpus() {
+    forall(Config::cases(12), "wire bit flips", |rng| {
+        let w = [1usize, 2, 4, 8][rng.next_usize(4)];
+        let d = wire_delta(rng, w);
+        let arm = WireArm::ALL[rng.next_usize(4)];
+        let bytes = d.encode(arm);
+        for byte in 0..bytes.len() {
+            for bit in 0..8 {
+                let mut evil = bytes.clone();
+                evil[byte] ^= 1 << bit;
+                let ok = match WireDelta::decode(&evil) {
+                    Err(WireError::BadMagic { .. }) => byte < 2,
+                    Err(WireError::ChecksumMismatch { .. }) => true,
+                    Err(e) => {
+                        return (false, format!("{arm:?} byte {byte}: wrong class {e:?}"))
+                    }
+                    Ok(_) => false,
+                };
+                if !ok {
+                    return (false, format!("{arm:?} w={w}: flip at byte {byte} missed"));
+                }
+            }
+        }
+        (true, String::new())
+    });
+}
+
+/// Hostile declared counts (entry counts, group counts, member counts,
+/// lane counts) are rejected by capacity arithmetic *before* any
+/// allocation sized from them — a `u64::MAX` count must come back as a
+/// typed `CountOverflow`, instantly.
+#[test]
+fn wire_hostile_counts_rejected_before_allocation() {
+    // Sparse: count says u64::MAX entries, payload holds none.
+    let frame = seal(header(0, 1, 1000, u64::MAX));
+    assert!(matches!(
+        WireDelta::decode(&frame),
+        Err(WireError::CountOverflow { declared: u64::MAX, .. })
+    ));
+    // Grouped: plausible entry count, group count u32::MAX.
+    let mut body = header(1, 1, 1000, 2);
+    body.extend_from_slice(&u32::MAX.to_le_bytes());
+    assert!(matches!(
+        WireDelta::decode(&seal(body)),
+        Err(WireError::CountOverflow { .. })
+    ));
+    // Grouped: valid group, member count beyond the remaining payload.
+    let mut body = header(1, 1, 1000, 1);
+    body.extend_from_slice(&1u32.to_le_bytes()); // one group
+    body.extend_from_slice(&7u64.to_le_bytes()); // its mask
+    body.extend_from_slice(&u32::MAX.to_le_bytes()); // members
+    body.extend_from_slice(&2u32.to_le_bytes()); // room for just one member
+    assert!(matches!(
+        WireDelta::decode(&seal(body)),
+        Err(WireError::CountOverflow { .. })
+    ));
+    // LaneBitmaps: active lane count beyond 64·lane_words.
+    let mut body = header(3, 1, 1000, 0);
+    body.extend_from_slice(&u16::MAX.to_le_bytes());
+    assert!(matches!(
+        WireDelta::decode(&seal(body)),
+        Err(WireError::LaneOutOfRange { lane: u16::MAX, lanes: 64 })
+    ));
+    // Presence: active-word byte naming words past lane_words.
+    let mut body = header(2, 1, 64, 0);
+    body.push(0b1000_0000);
+    body.extend_from_slice(&[0u8; 8]); // the word-0 bitmap it promises
+    assert!(matches!(
+        WireDelta::decode(&seal(body)),
+        Err(WireError::WordIndexOutOfRange { .. })
+    ));
+}
+
+/// Structurally hostile frames with *valid* checksums (a malicious sender,
+/// not line noise) land in the right typed error, not a panic.
+#[test]
+fn wire_hostile_structure_corpus() {
+    // Unknown arm tag.
+    let frame = seal(header(9, 1, 10, 0));
+    assert!(matches!(WireDelta::decode(&frame), Err(WireError::BadArm { found: 9 })));
+    // lane_words outside 1..=8.
+    for lw in [0u8, 9, 255] {
+        let frame = seal(header(0, lw, 10, 0));
+        assert!(matches!(
+            WireDelta::decode(&frame),
+            Err(WireError::BadLaneWords { found }) if found == lw
+        ));
+    }
+    // Sparse entry with a vertex at num_vertices.
+    let mut body = header(0, 1, 5, 1);
+    body.extend_from_slice(&5u32.to_le_bytes());
+    body.extend_from_slice(&1u64.to_le_bytes());
+    assert!(matches!(
+        WireDelta::decode(&seal(body)),
+        Err(WireError::VertexOutOfRange { vertex: 5, num_vertices: 5 })
+    ));
+    // Sparse entry with an all-zero mask (non-canonical).
+    let mut body = header(0, 1, 5, 1);
+    body.extend_from_slice(&3u32.to_le_bytes());
+    body.extend_from_slice(&0u64.to_le_bytes());
+    assert!(matches!(
+        WireDelta::decode(&seal(body)),
+        Err(WireError::EmptyMask { vertex: 3 })
+    ));
+    // Grouped: a group declaring zero members.
+    let mut body = header(1, 1, 5, 0);
+    body.extend_from_slice(&1u32.to_le_bytes()); // one group
+    body.extend_from_slice(&7u64.to_le_bytes()); // mask
+    body.extend_from_slice(&0u32.to_le_bytes()); // zero members
+    assert!(matches!(WireDelta::decode(&seal(body)), Err(WireError::EmptyGroup)));
+    // Declared count disagreeing with the decoded payload.
+    let mut body = header(0, 1, 10, 2);
+    body.extend_from_slice(&1u32.to_le_bytes());
+    body.extend_from_slice(&1u64.to_le_bytes());
+    // Declared 2, shipped 1 — the second read runs off the payload.
+    assert!(matches!(
+        WireDelta::decode(&seal(body)),
+        Err(WireError::Truncated { .. } | WireError::CountOverflow { .. })
+    ));
+    // Well-formed payload followed by garbage the checksum covers.
+    let d = WireDelta {
+        num_vertices: 40,
+        lane_words: 1,
+        entries: vec![(3, vec![0b101]), (17, vec![1])],
+    };
+    let good = d.encode(WireArm::Sparse);
+    let mut body = good[..good.len() - 8].to_vec();
+    body.extend_from_slice(&[0xAB; 5]);
+    assert!(matches!(
+        WireDelta::decode(&seal(body)),
+        Err(WireError::TrailingBytes { extra: 5 })
+    ));
+}
