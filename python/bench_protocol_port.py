@@ -13,6 +13,11 @@ floats reproduce it to ~1e-15 (the Rust checker compares floats with
 1e-6 relative tolerance). v6 adds the fault-recovery model
 (fault/plan.rs): the seeded fault schedule, the detect -> retry ->
 backoff pricing, and the committed ``fault_recovery`` bench section.
+v7 adds the mask-kernel work model (bfs/kernels.rs + the two-stage
+bottom-up sweep/probe of coordinator/backend.rs): deterministic
+words_touched / words_skipped / dispatches / dispatch_max_work counters
+for the scalar and chunked kernel shapes, LRB degree-binned probe
+dispatch, and the committed ``kernel_ablation`` bench section.
 
 The canonical way to regenerate the artifact is the Rust CLI::
 
@@ -640,6 +645,52 @@ def words_for_lanes(lanes):
 
 
 # --------------------------------------------------------------------------
+# Mask-kernel work model (bfs/kernels.rs, bfs/lrb.rs,
+# coordinator/backend.rs two-stage sweep/probe)
+# --------------------------------------------------------------------------
+
+NUM_LRB_BINS = 33  # lrb.rs::NUM_BINS
+CHUNK_VERTICES = 64  # backend.rs::CHUNK_VERTICES
+
+
+def bin_of_degree(d):
+    """Port of lrb.rs::bin_of_degree: degrees 0/1 share bin 0, then one
+    bin per power-of-two degree class (bit length of d-1)."""
+    return 0 if d <= 1 else (d - 1).bit_length()
+
+
+def chunk_range_mask(wi, lo, hi):
+    """Port of backend.rs::chunk_range_mask: the bits of 64-vertex chunk
+    ``wi`` whose vertices fall in the owned range [lo, hi)."""
+    start = max(wi * CHUNK_VERTICES, lo)
+    end = min((wi + 1) * CHUNK_VERTICES, hi)
+    if start >= end:
+        return 0
+    n = end - start
+    shift = start - wi * CHUNK_VERTICES
+    return MASK64 if n == 64 else ((1 << n) - 1) << shift
+
+
+class KernelWork:
+    """Port of kernels.rs::KernelWork (one level's counters; batch
+    totals sum words/dispatches over levels and max the max)."""
+
+    __slots__ = ("words_touched", "words_skipped", "dispatches",
+                 "dispatch_max_work")
+
+    def __init__(self):
+        self.words_touched = 0
+        self.words_skipped = 0
+        self.dispatches = 0
+        self.dispatch_max_work = 0
+
+    def record_dispatch(self, work):
+        self.dispatches += 1
+        if work > self.dispatch_max_work:
+            self.dispatch_max_work = work
+
+
+# --------------------------------------------------------------------------
 # Batched engine (coordinator/session.rs run_batch, 1D + 2D, W-word lanes)
 # --------------------------------------------------------------------------
 #
@@ -671,6 +722,10 @@ class NodeState:
         self.group_words = 0
         self.word_mask_values = [set() for _ in range(words)]
         self.edges = 0
+        # Persistent fully-settled chunk summary (backend.rs bu_done):
+        # bit v%64 of word v//64 set once lane coverage of v is complete.
+        # Fresh per batch (reset_for_batch zeroes it in Rust).
+        self.bu_done = [0] * (-(-nv // CHUNK_VERTICES))
         self.track_full = track_full
         self.visit_full = [0] * nv if track_full else None
         self.dist = None  # lane-major, node 0 only
@@ -789,13 +844,18 @@ class NodeState:
 
 
 def run_batch(g, nodes, fanout, roots, direction, alpha=15, beta=18,
-              mode="1d", grid=None, width_words=1, topo=None):
+              mode="1d", grid=None, width_words=1, topo=None,
+              kernel="auto", use_lrb=True):
     """direction in {'topdown', 'bottomup', 'diropt'}; mode '1d', '2d'
     (with ``grid = (rows, cols)``), or 'hier' (1D slabs exchanged over the
     grid-of-islands schedule, ``grid = (islands, per_island)``);
     ``width_words`` is the configured BatchWidth floor; ``topo`` switches
     Phase-2 pricing to the two-class clustered simulator (``None`` keeps
-    the flat DGX2 pricing bit-for-bit). Returns a metrics dict."""
+    the flat DGX2 pricing bit-for-bit); ``kernel`` in {'auto', 'scalar',
+    'chunked'} selects the mask-kernel shape ('auto' resolves to
+    'chunked', mirroring KernelVariant::resolved) and ``use_lrb`` the
+    degree-binned probe dispatch — both change only the deterministic
+    work counters, never a distance or a byte. Returns a metrics dict."""
     ranges, adjs = node_layout(g, nodes, "2d" if mode == "2d" else "1d", grid)
     if mode == "1d":
         rounds = butterfly_schedule(nodes, fanout)
@@ -832,6 +892,8 @@ def run_batch(g, nodes, fanout, roots, direction, alpha=15, beta=18,
                     st.q_local.append(r)
                 st.visit[r] |= bit
     dense_threshold = max(-(-(g.n * 8 * words) // (4 + 8 * words)), 1)
+    chunked_kernel = kernel != "scalar"  # auto resolves to chunked
+    occ_words = -(-g.n // 64)
     levels = []
     sync_rounds = 0
     bottom_up = False
@@ -860,24 +922,72 @@ def run_batch(g, nodes, fanout, roots, direction, alpha=15, beta=18,
                     and frontier < g.n // beta):
                 bottom_up = False
             prev_frontier = frontier
-        # Phase 1
+        # Phase 1 (two-stage sweep/probe mirror of
+        # backend.rs::expand_bottom_up_batch — same probes, same
+        # discoveries, plus the per-kernel work counters).
+        lw = KernelWork()
         if bottom_up:
             for st in sts:
                 st.edges = 0
+                # Stage 1: the sweep. Scalar reads W words per owned
+                # vertex; chunked reads one bu_done summary word per
+                # chunk and skips settled vertices without touching
+                # their mask words.
+                cand = []
+                if chunked_kernel:
+                    for wi in range(st.lo // 64, -(-st.hi // 64)):
+                        rmask = chunk_range_mask(wi, st.lo, st.hi)
+                        lw.words_touched += 1
+                        settled = st.bu_done[wi] & rmask
+                        lw.words_skipped += words * bin(settled).count("1")
+                        bits = ~st.bu_done[wi] & rmask
+                        while bits:
+                            low = bits & -bits
+                            v = wi * 64 + low.bit_length() - 1
+                            bits ^= low
+                            lw.words_touched += words
+                            missing = full & ~st.seen[v]
+                            if missing == 0:
+                                st.bu_done[wi] |= low
+                            else:
+                                cand.append((v, missing))
+                else:
+                    for v in range(st.lo, st.hi):
+                        lw.words_touched += words
+                        missing = full & ~st.seen[v]
+                        if missing:
+                            cand.append((v, missing))
+                # Stage 2: the probe (pure per candidate, so dispatch
+                # order never moves a counter; results are emitted in
+                # ascending candidate order either way).
                 found = []
-                for v in range(st.lo, st.hi):
-                    missing = full & ~st.seen[v]
-                    if missing == 0:
-                        continue
+                if use_lrb and cand:
+                    bin_work = [0] * NUM_LRB_BINS
+                    seen_bin = [False] * NUM_LRB_BINS
+                for (v, missing) in cand:
                     acc = 0
+                    probes = 0
                     for u in st.nbrs(v):
-                        st.edges += 1
+                        probes += 1
                         acc |= st.visit_full[u]
                         if acc & missing == missing:
                             break
+                    st.edges += probes
                     d = acc & missing
                     if d:
                         found.append((v, d))
+                    if use_lrb:
+                        bi = bin_of_degree(len(st.nbrs(v)))
+                        seen_bin[bi] = True
+                        bin_work[bi] += words * (1 + probes)
+                if cand:
+                    if use_lrb:
+                        for bi in range(NUM_LRB_BINS):
+                            if seen_bin[bi]:
+                                lw.record_dispatch(bin_work[bi])
+                    else:
+                        lw.record_dispatch(
+                            words * len(cand) + words * st.edges)
                 for (v, d) in found:
                     st.discover(v, d, level, True)
         else:
@@ -890,6 +1000,12 @@ def run_batch(g, nodes, fanout, roots, direction, alpha=15, beta=18,
                     st.edges += len(ns)
                     for u in ns:
                         st.discover(u, mv, level, st.owns(u))
+                # session.rs run_batch_w: each nonempty node reads W
+                # mask words per frontier vertex, one dispatch covering
+                # its adjacency work.
+                if q:
+                    lw.words_touched += words * len(q)
+                    lw.record_dispatch(st.edges)
         edges = sum(st.edges for st in sts)
         max_node_edges = max(st.edges for st in sts) if sts else 0
         sim_compute = level_time(max_node_edges, bottom_up)
@@ -898,6 +1014,7 @@ def run_batch(g, nodes, fanout, roots, direction, alpha=15, beta=18,
         payloads = []
         mask_snap = [None] * nodes
         mask_done = [0] * nodes
+        occ_count = [0] * nodes  # popcount of the sender occupancy bitmap
         for rnd in rounds:
             snap = [(len(st.delta), st.priced(len(st.delta), bottom_up))
                     for st in sts]
@@ -906,16 +1023,28 @@ def run_batch(g, nodes, fanout, roots, direction, alpha=15, beta=18,
                     if mask_snap[k] is None:
                         mask_snap[k] = [0] * g.n
                     for (v, m) in st.delta[mask_done[k]:snap[k][0]]:
+                        if mask_snap[k][v] == 0:
+                            occ_count[k] += 1
                         mask_snap[k][v] |= m
                     mask_done[k] = snap[k][0]
             payloads.append([snap[src][1] for (src, _) in rnd])
             for (src, dst) in rnd:
                 take = snap[src][0]
+                # Merge-side word traffic (session.rs batch_phase2): a
+                # scalar dense merge reads all W*V snapshot words; a
+                # chunked one reads the occupancy bitmap plus W words
+                # per occupied vertex; sparse replays W words per entry.
                 if take >= dense_threshold:
+                    if chunked_kernel:
+                        lw.words_touched += occ_words + words * occ_count[src]
+                        lw.words_skipped += words * (g.n - occ_count[src])
+                    else:
+                        lw.words_touched += words * g.n
                     for v, m in enumerate(mask_snap[src]):
                         if m:
                             sts[dst].discover(v, m, level, sts[dst].owns(v))
                 else:
+                    lw.words_touched += words * take
                     prefix = sts[src].delta[:take]
                     for (v, m) in prefix:
                         sts[dst].discover(v, m, level, sts[dst].owns(v))
@@ -937,6 +1066,10 @@ def run_batch(g, nodes, fanout, roots, direction, alpha=15, beta=18,
             direction="bottomup" if bottom_up else "topdown",
             sim_compute=sim_compute,
             sim_comm=sum(round_times),
+            words_touched=lw.words_touched,
+            words_skipped=lw.words_skipped,
+            dispatches=lw.dispatches,
+            dispatch_max_work=lw.dispatch_max_work,
             # Per-(round, transfer) priced bytes — what the fault injector
             # addresses (fault/plan.rs::apply_level sees the same shape).
             payloads=payloads,
@@ -1244,7 +1377,7 @@ def materialize_counters(prefix, cuts, n, bs):
 # --------------------------------------------------------------------------
 
 PROTOCOL = dict(
-    name="engine-bench-v6",
+    name="engine-bench-v7",
     graph="kron-like",
     kron_scale=21,
     kron_edge_factor=16,
@@ -1294,6 +1427,11 @@ PROTOCOL = dict(
     fault_levels=4,
     fault_rounds=2,
     fault_nodes=16,
+    # Kernel ablation (v7): scalar vs chunked mask kernels (and LRB off)
+    # per partition mode, forced bottom-up at 16 nodes — the committed
+    # deterministic work counters behind the SIMD-shaped kernel claims.
+    kernel_widths=[64, 256, 512],
+    kernel_hier_grid=(4, 4),
 )
 
 
@@ -1380,6 +1518,78 @@ def width_ablation(g):
             if mode_2d:
                 entry["grid"] = "%dx%d" % PROTOCOL["wide_grid"]
             entry.update(batch_totals(m))
+            entries.append(entry)
+    return entries
+
+
+def kernel_work_totals(m):
+    """Port of harness/protocol.rs::kernel_work_json: one variant's
+    batch-total counters (words and dispatches sum over levels, the max
+    dispatch is a max; tail_words is the last level's word traffic)."""
+    ls = m["levels"]
+    return {
+        "words_touched": sum(l["words_touched"] for l in ls),
+        "words_skipped": sum(l["words_skipped"] for l in ls),
+        "dispatches": sum(l["dispatches"] for l in ls),
+        "dispatch_max_work": max((l["dispatch_max_work"] for l in ls),
+                                 default=0),
+        "tail_words": ls[-1]["words_touched"] if ls else 0,
+    }
+
+
+def kernel_ablation(g):
+    """Port of harness/protocol.rs::kernel_ablation_json. Roots come
+    from a single connected component (the reachable set of the protocol
+    seed root, cycled in ascending vertex order) so every lane
+    saturates and the chunked kernel's settled-skip has real work to
+    elide on the tail levels."""
+    p = PROTOCOL
+    seed_root = sample_batch_roots(g, 1, p["root_seed"])[0]
+    sd = serial_bfs(g, seed_root)
+    comp = [v for v in range(g.n) if sd[v] != INF]
+    entries = []
+    for mode in ["1d", "2d", "hier"]:
+        if mode == "2d":
+            kw = dict(mode="2d", grid=p["wide_grid"])
+        elif mode == "hier":
+            kw = dict(mode="hier", grid=p["kernel_hier_grid"],
+                      topo=dgx2_cluster_topo(p["kernel_hier_grid"][1]))
+        else:
+            kw = dict()
+        for width in p["kernel_widths"]:
+            roots = [comp[i % len(comp)] for i in range(width)]
+            words = words_for_lanes(width)
+
+            def run(kernel, use_lrb):
+                return run_batch(g, p["wide_nodes"], p["fanout"], roots,
+                                 "bottomup", width_words=words,
+                                 kernel=kernel, use_lrb=use_lrb, **kw)
+
+            scalar = run("scalar", True)
+            chunked = run("chunked", True)
+            no_lrb = run("chunked", False)
+            equal = (scalar["dist"] == chunked["dist"]
+                     and chunked["dist"] == no_lrb["dist"])
+            entry = {
+                "mode": mode,
+                "width": width,
+                "nodes": p["wide_nodes"],
+            }
+            if mode == "2d":
+                entry["grid"] = "%dx%d" % p["wide_grid"]
+            if mode == "hier":
+                entry["islands"] = "%dx%d" % p["kernel_hier_grid"]
+            entry.update(
+                direction="bottomup",
+                lane_words=chunked["lane_words"],
+                levels=len(chunked["levels"]),
+                reached_pairs=chunked["reached_pairs"],
+                edges_inspected=sum(l["edges"] for l in chunked["levels"]),
+                distances_equal=equal,
+                scalar=kernel_work_totals(scalar),
+                chunked=kernel_work_totals(chunked),
+                no_lrb=kernel_work_totals(no_lrb),
+            )
             entries.append(entry)
     return entries
 
@@ -1799,6 +2009,7 @@ def engine_bench_report():
         "storage": storage_report(),
         "hierarchical": hierarchical_report(g),
         "fault_recovery": fault_recovery_report(g),
+        "kernel_ablation": kernel_ablation(g),
     }
 
 
@@ -2007,6 +2218,17 @@ def validate_acceptance(report):
     assert fl["retries"] >= 1 and fl["retry_bytes"] >= 1, fl
     assert fl["recovery_time"] > 0.0, fl
     assert fr["overhead_ratio"] > 1.0, fr["overhead_ratio"]
+    kernel = report["kernel_ablation"]
+    assert kernel, "kernel_ablation: no entries"
+    for entry in kernel:
+        key = (entry["mode"], entry["width"])
+        assert entry["distances_equal"] is True, key
+        s, c, n = entry["scalar"], entry["chunked"], entry["no_lrb"]
+        assert c["words_touched"] < s["words_touched"], (key, c, s)
+        assert c["tail_words"] < s["tail_words"], (key, c, s)
+        assert s["words_skipped"] == 0, (key, s)
+        assert c["words_skipped"] > 0, (key, c)
+        assert c["dispatch_max_work"] < n["dispatch_max_work"], (key, c, n)
     print("acceptance invariants hold on the fresh report")
 
 
@@ -2059,17 +2281,31 @@ def main():
           f"recovery {fl['recovery_time'] * 1e6:.1f}us "
           f"({(fr['overhead_ratio'] - 1) * 100:.2f}% overhead), "
           f"distances equal: {fr['equal_distances']}")
+    for e in report["kernel_ablation"]:
+        s, c, n = e["scalar"], e["chunked"], e["no_lrb"]
+        print(f"kernel {e['mode']} width={e['width']}: words "
+              f"{c['words_touched']} vs scalar {s['words_touched']} "
+              f"({s['words_touched'] / c['words_touched']:.2f}x), skipped "
+              f"{c['words_skipped']}, max dispatch {c['dispatch_max_work']} "
+              f"vs no-lrb {n['dispatch_max_work']}")
     if args.out:
-        # Mirror write_engine_bench: a `measured` subtree recorded into
-        # the existing artifact by the load generator is live-wallclock
-        # data the sim cannot regenerate — carry it over.
+        # Mirror write_engine_bench: the `measured` subtrees recorded
+        # into the existing artifact by the load generator / kernel
+        # bench are live-wallclock data the sim cannot regenerate —
+        # carry them over.
         try:
             with open(args.out) as f:
-                measured = json.load(f)["serve_throughput"]["measured"]
-        except (OSError, ValueError, KeyError, TypeError):
+                old = json.load(f)
+        except (OSError, ValueError):
+            old = {}
+        try:
+            measured = old["serve_throughput"]["measured"]
+        except (KeyError, TypeError):
             measured = None
         if measured is not None:
             report["serve_throughput"]["measured"] = measured
+        if isinstance(old, dict) and "kernel_ablation_measured" in old:
+            report["kernel_ablation_measured"] = old["kernel_ablation_measured"]
         text = json.dumps(report, sort_keys=True, separators=(",", ":"))
         with open(args.out, "w") as f:
             f.write(text + "\n")

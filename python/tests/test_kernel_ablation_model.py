@@ -1,0 +1,163 @@
+"""Pure-python spec of the SIMD-shaped mask kernels (this PR).
+
+Drives the line-for-line engine port in ``bench_protocol_port`` — the
+same code that generates the committed ``BENCH_engine.json`` — through
+the kernel-ablation semantics the Rust engine must honor:
+
+* every kernel variant (auto/scalar/chunked, LRB on/off) is
+  bit-identical on distances, wire bytes, probed edges, and sync rounds
+  — the counters are observers, never participants;
+* the deterministic work-counter model: the scalar sweep reads W words
+  per owned vertex (and never skips), the chunked sweep pays one
+  summary word per 64-vertex chunk and elides settled vertices, the
+  dense merge walks only occupied snapshot slots under the chunked
+  kernel, and LRB degree-binning splits the probe into uniform
+  dispatches without moving a single word counter;
+* the committed ``kernel_ablation`` section's shape and acceptance
+  invariants, entry for entry, against a freshly computed model run.
+
+No jax/hypothesis needed — runs everywhere CI runs.
+"""
+
+import json
+import os
+
+import bench_protocol_port as bp
+
+BENCH = os.path.join(os.path.dirname(os.path.dirname(
+    os.path.dirname(os.path.abspath(__file__)))), "BENCH_engine.json")
+
+VARIANTS = [("auto", True), ("scalar", True),
+            ("chunked", True), ("chunked", False)]
+
+
+def run(g, roots, direction, kernel, use_lrb, **kw):
+    return bp.run_batch(g, 4, 2, roots, direction, kernel=kernel,
+                        use_lrb=use_lrb,
+                        width_words=bp.words_for_lanes(len(roots)), **kw)
+
+
+def test_kernel_variants_bit_identical_everywhere():
+    g = bp.uniform_random(220, 4, 0xFEED)
+    roots = [(i * 13 + 5) % g.n for i in range(90)]
+    want = [bp.serial_bfs(g, r) for r in roots]
+    for kw in [dict(), dict(mode="2d", grid=(2, 2)),
+               dict(mode="hier", grid=(2, 2),
+                    topo=bp.dgx2_cluster_topo(2))]:
+        for d in ["topdown", "bottomup", "diropt"]:
+            sig = None
+            for kernel, use_lrb in VARIANTS:
+                m = run(g, roots, d, kernel, use_lrb, **kw)
+                assert m["dist"] == want, (kw, d, kernel, use_lrb)
+                got = (m["sync_rounds"], m["reached_pairs"],
+                       [(l["edges"], l["bytes"], l["messages"])
+                        for l in m["levels"]])
+                if sig is None:
+                    sig = got
+                else:
+                    assert got == sig, (kw, d, kernel, use_lrb)
+
+
+def test_scalar_never_skips_chunked_always_does():
+    g = bp.uniform_random(300, 5, 0xABBA)
+    roots = [(i * 3 + 1) % g.n for i in range(100)]
+    s = bp.kernel_work_totals(run(g, roots, "bottomup", "scalar", True))
+    c = bp.kernel_work_totals(run(g, roots, "bottomup", "chunked", True))
+    assert s["words_skipped"] == 0
+    assert c["words_skipped"] > 0
+    assert c["words_touched"] < s["words_touched"]
+    # The sparse tail is where the settled-skip pays hardest.
+    assert c["tail_words"] < s["tail_words"]
+
+
+def test_scalar_sweep_counts_w_words_per_owned_vertex():
+    # Single level, single node, top-down off the table: a pure
+    # bottom-up run's first level touches exactly W words per vertex
+    # (sweep) plus the phase-2 merge traffic, which for an all-sparse
+    # exchange is W per replayed entry.
+    g = bp.uniform_random(64, 2, 7)
+    roots = [0]
+    m = run(g, roots, "bottomup", "scalar", True)
+    l0 = m["levels"][0]
+    # 4 nodes sweep their ranges: total = W * n; sparse replays add
+    # W * take per transfer.
+    sweep = 1 * g.n
+    assert l0["words_touched"] >= sweep
+    assert l0["words_skipped"] == 0
+
+
+def test_lrb_moves_dispatches_never_words():
+    g = bp.uniform_random(400, 6, 0xD15C)
+    roots = [(i * 17 + 2) % g.n for i in range(128)]
+    lrb = bp.kernel_work_totals(run(g, roots, "bottomup", "chunked", True))
+    flat = bp.kernel_work_totals(run(g, roots, "bottomup", "chunked", False))
+    assert lrb["words_touched"] == flat["words_touched"]
+    assert lrb["words_skipped"] == flat["words_skipped"]
+    assert lrb["dispatches"] >= flat["dispatches"]
+    assert lrb["dispatch_max_work"] <= flat["dispatch_max_work"]
+
+
+def test_lrb_shrinks_max_dispatch_on_skewed_degrees():
+    # A star graph is the degenerate skew: one hub candidate dominates
+    # the flat probe dispatch; binning isolates it.
+    n = 257
+    g = bp.build_undirected(n, [(0, v) for v in range(1, n)])
+    roots = [(i * 5 + 1) % n for i in range(70)]
+    want = [bp.serial_bfs(g, r) for r in roots]
+    # One node, like the Rust backend unit test: the hub and its leaves
+    # land in the same sweep, so the flat probe dispatch sums both
+    # degree classes while LRB isolates them.
+    w = bp.words_for_lanes(len(roots))
+    lrb = bp.run_batch(g, 1, 2, roots, "bottomup", kernel="chunked",
+                       use_lrb=True, width_words=w)
+    flat = bp.run_batch(g, 1, 2, roots, "bottomup", kernel="chunked",
+                        use_lrb=False, width_words=w)
+    assert lrb["dist"] == want and flat["dist"] == want
+    lt = bp.kernel_work_totals(lrb)
+    ft = bp.kernel_work_totals(flat)
+    assert lt["dispatch_max_work"] < ft["dispatch_max_work"], (lt, ft)
+
+
+def test_bin_of_degree_matches_lrb_rs():
+    assert bp.bin_of_degree(0) == 0
+    assert bp.bin_of_degree(1) == 0
+    assert bp.bin_of_degree(2) == 1
+    assert bp.bin_of_degree(3) == 2
+    assert bp.bin_of_degree(4) == 2
+    assert bp.bin_of_degree(5) == 3
+    assert bp.bin_of_degree(1 << 20) == 20
+    assert bp.bin_of_degree((1 << 20) + 1) == 21
+
+
+def test_chunk_range_mask_matches_backend_rs():
+    assert bp.chunk_range_mask(0, 0, 64) == bp.MASK64
+    assert bp.chunk_range_mask(0, 0, 1) == 1
+    assert bp.chunk_range_mask(0, 63, 64) == 1 << 63
+    assert bp.chunk_range_mask(1, 0, 64) == 0
+    assert bp.chunk_range_mask(1, 70, 130) == (((1 << 58) - 1) << 6)
+    assert bp.chunk_range_mask(2, 70, 130) == (1 << 2) - 1
+
+
+def test_committed_kernel_ablation_section():
+    """The committed BENCH_engine.json kernel section must match a fresh
+    model run entry for entry, and satisfy the acceptance gates."""
+    with open(BENCH) as f:
+        committed = json.load(f)
+    assert committed["protocol"] == bp.PROTOCOL["name"]
+    entries = committed["kernel_ablation"]
+    assert len(entries) == 3 * len(bp.PROTOCOL["kernel_widths"])
+    scale = max(bp.PROTOCOL["kron_scale"] + bp.PROTOCOL["scale_delta"], 4)
+    g = bp.kronecker(scale, bp.PROTOCOL["kron_edge_factor"],
+                     bp.PROTOCOL["kron_seed"])
+    fresh = bp.kernel_ablation(g)
+    assert committed["kernel_ablation"] == fresh
+    for entry in entries:
+        key = (entry["mode"], entry["width"])
+        assert entry["distances_equal"] is True, key
+        s, c, n = entry["scalar"], entry["chunked"], entry["no_lrb"]
+        assert c["words_touched"] < s["words_touched"], key
+        assert c["tail_words"] < s["tail_words"], key
+        assert s["words_skipped"] == 0, key
+        assert c["words_skipped"] > 0, key
+        assert c["dispatch_max_work"] < n["dispatch_max_work"], key
+        assert entry["lane_words"] == bp.words_for_lanes(entry["width"])

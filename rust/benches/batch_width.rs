@@ -14,16 +14,28 @@
 //! root fall ~linearly with width, while the cohort-factored negotiated
 //! encoding keeps total bytes at or below the chunked cost.
 //!
-//! Run: `cargo bench --bench batch_width`
+//! A second table ablates the mask *kernel* (scalar vs chunked, LRB on
+//! vs off) per partition mode at a fixed width, bottom-up — wallclock
+//! next to the deterministic work counters the protocol commits.
+//! `--update` records those wallclock rows into `BENCH_engine.json`'s
+//! `kernel_ablation_measured` subtree (excluded from the freshness
+//! compare, like the serve one).
+//!
+//! Run: `cargo bench --bench batch_width [-- --update]`
 //! (`BBFS_SCALE_DELTA=n` rescales the graph; `BBFS_BENCH_PROFILE=full`
 //! uses the larger default.)
 
 use butterfly_bfs::bfs::msbfs::sample_batch_roots;
-use butterfly_bfs::coordinator::{BatchWidth, EngineConfig, PartitionMode, TraversalPlan};
+use butterfly_bfs::coordinator::config::DirectionMode;
+use butterfly_bfs::coordinator::{
+    BatchWidth, EngineConfig, KernelVariant, PartitionMode, TraversalPlan,
+};
 use butterfly_bfs::graph::gen::table1_suite;
 use butterfly_bfs::harness::table::{count, f2, ms, Table};
+use butterfly_bfs::util::json::Json;
 
 fn main() {
+    let update = std::env::args().any(|a| a == "--update");
     let scale_delta: i32 = std::env::var("BBFS_SCALE_DELTA")
         .ok()
         .and_then(|s| s.parse().ok())
@@ -115,6 +127,92 @@ fn main() {
         }
     }
     println!("{}", t.render());
+
+    // ---- Kernel ablation: scalar vs chunked (and LRB off) per mode. ----
+    const KERNEL_WIDTH: usize = 256;
+    let mut kt = Table::new(&[
+        "mode",
+        "kernel",
+        "lrb",
+        "wall ms",
+        "words touched",
+        "words skipped",
+        "dispatches",
+        "max work",
+    ]);
+    let mut measured_rows: Vec<Json> = Vec::new();
+    for mode in ["1d", "2d", "hier"] {
+        let roots = sample_batch_roots(&g, KERNEL_WIDTH, 7);
+        let mut oracle: Option<Vec<Vec<u32>>> = None;
+        for (kernel, use_lrb) in [
+            (KernelVariant::Scalar, true),
+            (KernelVariant::Chunked, true),
+            (KernelVariant::Chunked, false),
+        ] {
+            let base = match mode {
+                "1d" => EngineConfig::dgx2(16, 4),
+                "2d" => EngineConfig {
+                    partition: PartitionMode::TwoD { rows: 4, cols: 4 },
+                    ..EngineConfig::dgx2(16, 1)
+                },
+                _ => EngineConfig::dgx2_cluster_hier(4, 4, 4),
+            };
+            let cfg = EngineConfig {
+                direction: DirectionMode::BottomUp,
+                kernel,
+                use_lrb,
+                batch_width: BatchWidth::for_lanes(KERNEL_WIDTH)
+                    .expect("bench widths are within the lane limit"),
+                ..base
+            };
+            let mut session = TraversalPlan::build(&g, cfg).expect("valid plan").session();
+            let b = session.run_batch(&roots).expect("roots in range");
+            // Bit-identity oracle: every variant must agree with the
+            // first one, lane for lane, before any number is printed.
+            let dists: Vec<Vec<u32>> =
+                (0..KERNEL_WIDTH).map(|lane| b.dist(lane).to_vec()).collect();
+            match &oracle {
+                None => oracle = Some(dists),
+                Some(o) => assert_eq!(
+                    o, &dists,
+                    "{mode}: kernel {} lrb={use_lrb} changed distances",
+                    kernel.name()
+                ),
+            }
+            let m = b.metrics();
+            kt.row(vec![
+                mode.to_string(),
+                kernel.name().to_string(),
+                use_lrb.to_string(),
+                ms(m.wall_seconds),
+                count(m.words_touched()),
+                count(m.words_skipped()),
+                count(m.dispatches()),
+                count(m.dispatch_max_work()),
+            ]);
+            measured_rows.push(Json::obj(vec![
+                ("mode", Json::s(mode)),
+                ("width", Json::u(KERNEL_WIDTH as u64)),
+                ("kernel", Json::s(kernel.name())),
+                ("lrb", Json::Bool(use_lrb)),
+                ("wall_seconds", Json::n(m.wall_seconds)),
+                ("words_touched", Json::u(m.words_touched())),
+                ("words_skipped", Json::u(m.words_skipped())),
+                ("dispatches", Json::u(m.dispatches())),
+                ("dispatch_max_work", Json::u(m.dispatch_max_work())),
+            ]));
+        }
+    }
+    println!("{}", kt.render());
+    if update {
+        let path = std::path::Path::new("BENCH_engine.json");
+        butterfly_bfs::harness::protocol::update_measured_kernel(
+            path,
+            Json::Arr(measured_rows),
+        )
+        .expect("BENCH_engine.json exists (run bench-protocol first)");
+        println!("recorded kernel wallclock rows into {}", path.display());
+    }
     println!(
         "note: the committed width trajectory for the fixed protocol configs \
          lives in BENCH_engine.json (butterfly-bfs bench-protocol --check)."

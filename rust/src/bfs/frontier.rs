@@ -250,27 +250,98 @@ impl<const W: usize> MaskFrontier<W> {
     /// delta list only grows within a level, so a caller holding masks
     /// for `0..from` extends them to `0..to` without replaying the shared
     /// prefix (the engine's per-round incremental dense snapshot).
+    ///
+    /// The inner OR is a fixed-`W` slice zip — the shape the
+    /// autovectorizer turns into one wide OR per entry instead of `W`
+    /// bounds-checked scalar ORs.
     pub fn accumulate_range(&self, from: usize, to: usize, masks: &mut [u64]) {
         for &(v, m) in &self.entries[from..to] {
             let base = v as usize * W;
-            for w in 0..W {
-                masks[base + w] |= m[w];
+            let dst = &mut masks[base..base + W];
+            for (d, &s) in dst.iter_mut().zip(m.iter()) {
+                *d |= s;
             }
+        }
+    }
+
+    /// [`Self::accumulate_range`] that also maintains a per-vertex
+    /// *occupancy bitmap* (`occ` bit `v` set ⇔ vertex `v`'s accumulated
+    /// mask is nonzero — entries are nonzero by construction, so every
+    /// accumulated vertex is occupied). The occupancy words are the
+    /// chunk-summary structure the chunked dense-merge kernel scans in
+    /// place of the full `len·W` mask array.
+    pub fn accumulate_range_occ(
+        &self,
+        from: usize,
+        to: usize,
+        masks: &mut [u64],
+        occ: &mut [u64],
+    ) {
+        for &(v, m) in &self.entries[from..to] {
+            let base = v as usize * W;
+            let dst = &mut masks[base..base + W];
+            for (d, &s) in dst.iter_mut().zip(m.iter()) {
+                *d |= s;
+            }
+            occ[v as usize / 64] |= 1u64 << (v % 64);
         }
     }
 
     /// Build from a flat vertex-major dense mask array (length a multiple
     /// of `W`), skipping all-zero masks.
+    ///
+    /// The zero test is an OR-reduction over the `W`-word chunk (one
+    /// vector reduce, no early-exit branch chain) — measurably better
+    /// shaped for autovectorization than the word-by-word `all(== 0)`
+    /// predicate at `W ≥ 4`.
     pub fn from_masks(masks: &[u64]) -> Self {
         debug_assert_eq!(masks.len() % W.max(1), 0);
         let mut f = Self::new();
         for (v, chunk) in masks.chunks_exact(W).enumerate() {
-            let m: LaneMask<W> = chunk.try_into().expect("chunk of W words");
-            if !lane_mask_is_zero(&m) {
+            let any = chunk.iter().fold(0u64, |a, &b| a | b);
+            if any != 0 {
+                let m: LaneMask<W> = chunk.try_into().expect("chunk of W words");
                 f.push(v as VertexId, m);
             }
         }
         f
+    }
+
+    /// Chunked-kernel counterpart of [`Self::from_masks`]: walk the
+    /// occupancy bitmap (as maintained by [`Self::accumulate_range_occ`])
+    /// and read only occupied vertices' mask words, skipping settled
+    /// 64-vertex chunks wholesale. Bit-identical to [`Self::from_masks`]
+    /// whenever `occ` covers every nonzero mask (extra occupancy bits
+    /// over zero masks are filtered). Returns the frontier plus `(words
+    /// touched, words skipped)` — summary words count as touched.
+    pub fn from_masks_occ(masks: &[u64], occ: &[u64]) -> (Self, u64, u64) {
+        debug_assert_eq!(masks.len() % W.max(1), 0);
+        let len = masks.len() / W.max(1);
+        debug_assert!(occ.len() * 64 >= len);
+        let mut f = Self::new();
+        let mut touched = occ.len() as u64;
+        let mut skipped = 0u64;
+        for (wi, &word) in occ.iter().enumerate() {
+            let in_range = (len - (wi * 64).min(len)).min(64) as u64;
+            let occupied = (word.count_ones() as u64).min(in_range);
+            skipped += (in_range - occupied) * W as u64;
+            let mut w = word;
+            while w != 0 {
+                let v = wi * 64 + w.trailing_zeros() as usize;
+                w &= w - 1;
+                if v >= len {
+                    break;
+                }
+                touched += W as u64;
+                let chunk = &masks[v * W..(v + 1) * W];
+                let any = chunk.iter().fold(0u64, |a, &b| a | b);
+                if any != 0 {
+                    let m: LaneMask<W> = chunk.try_into().expect("chunk of W words");
+                    f.push(v as VertexId, m);
+                }
+            }
+        }
+        (f, touched, skipped)
     }
 }
 
@@ -470,6 +541,55 @@ mod tests {
         // Extending the prefix folds in only the new entries.
         f.accumulate_range(2, 3, &mut masks);
         assert_eq!(masks, vec![5, 8, 0, 2]);
+    }
+
+    #[test]
+    fn accumulate_range_occ_tracks_occupancy() {
+        let mut f = MaskFrontier::<2>::new();
+        f.push(3, [1, 0]);
+        f.push(70, [0, 2]);
+        f.push(3, [4, 8]);
+        let mut masks = vec![0u64; 80 * 2];
+        let mut occ = vec![0u64; 2];
+        f.accumulate_range_occ(0, 2, &mut masks, &mut occ);
+        assert_eq!(occ[0], 1 << 3);
+        assert_eq!(occ[1], 1 << 6);
+        f.accumulate_range_occ(2, 3, &mut masks, &mut occ);
+        assert_eq!(masks[3 * 2], 5);
+        assert_eq!(masks[3 * 2 + 1], 8);
+        // Occupancy equals the nonzero-mask set.
+        for v in 0..80usize {
+            let nz = masks[v * 2] | masks[v * 2 + 1] != 0;
+            assert_eq!((occ[v / 64] >> (v % 64)) & 1 == 1, nz, "v={v}");
+        }
+    }
+
+    #[test]
+    fn from_masks_occ_bit_identical_to_from_masks() {
+        use crate::util::propcheck::{forall, gen, Config};
+        forall(Config::cases(48), "from_masks_occ == from_masks", |rng| {
+            let len = gen::usize_in(rng, 1, 150);
+            let mut masks = vec![0u64; len * 4];
+            let mut occ = vec![0u64; len.div_ceil(64)];
+            for _ in 0..gen::usize_in(rng, 0, 80) {
+                let v = rng.next_usize(len);
+                let w = rng.next_usize(4);
+                masks[v * 4 + w] |= 1u64 << rng.next_usize(64);
+                occ[v / 64] |= 1u64 << (v % 64);
+            }
+            // Sprinkle occupancy bits over zero masks: they must filter.
+            for _ in 0..3 {
+                let v = rng.next_usize(len);
+                occ[v / 64] |= 1u64 << (v % 64);
+            }
+            let scalar = MaskFrontier::<4>::from_masks(&masks);
+            let (chunked, touched, skipped) = MaskFrontier::<4>::from_masks_occ(&masks, &occ);
+            let occupied: u64 = occ.iter().map(|w| w.count_ones() as u64).sum();
+            let ok = scalar == chunked
+                && touched == occ.len() as u64 + 4 * occupied
+                && skipped == 4 * (len as u64 - occupied);
+            (ok, format!("len={len} occupied={occupied}"))
+        });
     }
 
     #[test]

@@ -1,0 +1,170 @@
+//! Kernel-variant selection and deterministic work accounting for the
+//! wide-lane mask kernels.
+//!
+//! The engine's hot loops — the batched bottom-up accumulate in
+//! `coordinator::backend`, the dense merge fallback in the session's
+//! Phase 2, and the dense/sparse frontier conversions in
+//! [`frontier`](super::frontier) — are word-wise `[u64; W]` sweeps over
+//! per-vertex lane masks. Two shapes of the same loop are offered:
+//!
+//! * **Scalar** — the straight-line sweep: visit every vertex, read its
+//!   `W` mask words, act on the nonzero ones. Simple, branch-light, and
+//!   what the autovectorizer sees best when the data is dense.
+//! * **Chunked** — a 64-vertex-chunk summary pass in front of the sweep:
+//!   one summary word per chunk records which vertices still carry work,
+//!   so fully-settled chunks are skipped without touching their `W·64`
+//!   mask words. This is the SIMD shape a real lane-parallel device wants
+//!   (test a predicate register, skip the whole tile) and it wins exactly
+//!   when the mask array is sparse — the long tail levels of a bottom-up
+//!   traversal where almost every vertex has already been claimed by
+//!   every lane.
+//!
+//! Both shapes are **bit-identical** in output: chunked only elides
+//! vertices whose per-vertex work is provably zero (an all-lanes-seen
+//! mask, an all-zero delta), which the scalar sweep would visit and then
+//! ignore. The difference is *accounted*, not guessed: every kernel
+//! reports the deterministic [`KernelWork`] counters (words touched,
+//! words skipped, dispatches issued, per-dispatch max work) which thread
+//! through `LevelMetrics`/`RunMetrics`/`BatchMetrics` into the bench
+//! protocol, where CI gates `chunked.words_touched <
+//! scalar.words_touched` on the committed sparse tails.
+
+/// Which mask-kernel shape the engine runs (the `--kernel` knob on the
+/// CLI, [`EngineConfig::kernel`](crate::coordinator::config::EngineConfig::kernel)
+/// in the library).
+#[derive(Clone, Copy, Debug, Default, PartialEq, Eq)]
+pub enum KernelVariant {
+    /// Let the engine pick (currently resolves to [`KernelVariant::Chunked`],
+    /// the shape that dominates on the bottom-up tails the batch engine
+    /// spends its levels in).
+    #[default]
+    Auto,
+    /// Straight-line per-vertex sweep, no summary pass.
+    Scalar,
+    /// 64-vertex chunk-summary sweep that skips settled chunks.
+    Chunked,
+}
+
+/// Vertices per chunk of the [`KernelVariant::Chunked`] kernels: one
+/// `u64` summary word covers exactly this many vertices.
+pub const CHUNK_VERTICES: usize = 64;
+
+impl KernelVariant {
+    /// Resolve [`KernelVariant::Auto`] to the concrete shape the engine
+    /// runs (idempotent on the other variants).
+    pub fn resolved(self) -> KernelVariant {
+        match self {
+            KernelVariant::Auto => KernelVariant::Chunked,
+            v => v,
+        }
+    }
+
+    /// True when the resolved shape is the chunked kernel.
+    pub fn is_chunked(self) -> bool {
+        self.resolved() == KernelVariant::Chunked
+    }
+
+    /// Display name (`"auto"` / `"scalar"` / `"chunked"`).
+    pub fn name(&self) -> &'static str {
+        match self {
+            KernelVariant::Auto => "auto",
+            KernelVariant::Scalar => "scalar",
+            KernelVariant::Chunked => "chunked",
+        }
+    }
+
+    /// Parse a CLI spelling (the inverse of [`KernelVariant::name`]).
+    pub fn parse(s: &str) -> Option<KernelVariant> {
+        match s {
+            "auto" => Some(KernelVariant::Auto),
+            "scalar" => Some(KernelVariant::Scalar),
+            "chunked" => Some(KernelVariant::Chunked),
+            _ => None,
+        }
+    }
+}
+
+/// Deterministic per-kernel work counters. All quantities are exact
+/// integer models of the memory traffic and dispatch structure — no
+/// wallclock — so they compare bit-for-bit across machines and between
+/// the Rust engine and its Python port.
+#[derive(Clone, Copy, Debug, Default, PartialEq, Eq)]
+pub struct KernelWork {
+    /// 64-bit mask (or summary) words the kernel actually read or wrote.
+    pub words_touched: u64,
+    /// Mask words the kernel *avoided* via a chunk summary or occupancy
+    /// test (always 0 for the scalar shape).
+    pub words_skipped: u64,
+    /// Kernel dispatches issued (one per flat sweep, one per non-empty
+    /// LRB bin when binning is composed in).
+    pub dispatches: u64,
+    /// Largest single-dispatch work item (in words of lane-mask traffic)
+    /// — the load-balance signal LRB binning exists to shrink.
+    pub dispatch_max_work: u64,
+}
+
+impl KernelWork {
+    /// Zero all counters (keeps the value usable as an accumulator).
+    pub fn clear(&mut self) {
+        *self = KernelWork::default();
+    }
+
+    /// Record one dispatch of `work` words.
+    pub fn record_dispatch(&mut self, work: u64) {
+        self.dispatches += 1;
+        self.dispatch_max_work = self.dispatch_max_work.max(work);
+    }
+
+    /// Fold `other` in: word and dispatch counts add, the per-dispatch
+    /// max takes the max (dispatches in different nodes/levels never
+    /// merge into one).
+    pub fn absorb(&mut self, other: &KernelWork) {
+        self.words_touched += other.words_touched;
+        self.words_skipped += other.words_skipped;
+        self.dispatches += other.dispatches;
+        self.dispatch_max_work = self.dispatch_max_work.max(other.dispatch_max_work);
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn variant_resolution_and_names() {
+        assert_eq!(KernelVariant::default(), KernelVariant::Auto);
+        assert_eq!(KernelVariant::Auto.resolved(), KernelVariant::Chunked);
+        assert_eq!(KernelVariant::Scalar.resolved(), KernelVariant::Scalar);
+        assert_eq!(KernelVariant::Chunked.resolved(), KernelVariant::Chunked);
+        assert!(KernelVariant::Auto.is_chunked());
+        assert!(!KernelVariant::Scalar.is_chunked());
+        for v in [KernelVariant::Auto, KernelVariant::Scalar, KernelVariant::Chunked] {
+            assert_eq!(KernelVariant::parse(v.name()), Some(v));
+        }
+        assert_eq!(KernelVariant::parse("simd"), None);
+    }
+
+    #[test]
+    fn work_accumulation() {
+        let mut w = KernelWork::default();
+        w.words_touched += 10;
+        w.record_dispatch(7);
+        w.record_dispatch(3);
+        assert_eq!(w.dispatches, 2);
+        assert_eq!(w.dispatch_max_work, 7);
+        let mut total = KernelWork::default();
+        total.absorb(&w);
+        total.absorb(&KernelWork {
+            words_touched: 5,
+            words_skipped: 2,
+            dispatches: 1,
+            dispatch_max_work: 9,
+        });
+        assert_eq!(total.words_touched, 15);
+        assert_eq!(total.words_skipped, 2);
+        assert_eq!(total.dispatches, 3);
+        assert_eq!(total.dispatch_max_work, 9);
+        total.clear();
+        assert_eq!(total, KernelWork::default());
+    }
+}

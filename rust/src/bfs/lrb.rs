@@ -31,9 +31,19 @@ impl Binned {
     }
 
     /// Indices of non-empty bins, largest degree class first (the dispatch
-    /// order: schedule the biggest work items first).
-    pub fn dispatch_order(&self) -> Vec<usize> {
-        (0..NUM_BINS).rev().filter(|&b| self.starts[b + 1] > self.starts[b]).collect()
+    /// order: schedule the biggest work items first). Allocation-free:
+    /// the order lives in a fixed [`NUM_BINS`]-slot array (a `Vec` per
+    /// frontier level showed up as pure overhead once LRB composed with
+    /// the per-level wide bottom-up scan).
+    pub fn dispatch_order(&self) -> DispatchOrder {
+        let mut order = DispatchOrder { order: [0; NUM_BINS], len: 0 };
+        for b in (0..NUM_BINS).rev() {
+            if self.starts[b + 1] > self.starts[b] {
+                order.order[order.len] = b;
+                order.len += 1;
+            }
+        }
+        order
     }
 
     /// Total number of binned vertices.
@@ -44,6 +54,33 @@ impl Binned {
     /// True when no vertex was binned.
     pub fn is_empty(&self) -> bool {
         self.vertices.is_empty()
+    }
+}
+
+/// The largest-first dispatch order of one binned frontier: a fixed
+/// [`NUM_BINS`]-slot inline array plus a length, so computing the order
+/// never allocates. Derefs to the `[usize]` slice of non-empty bin
+/// indices and iterates by value.
+#[derive(Clone, Copy, Debug)]
+pub struct DispatchOrder {
+    order: [usize; NUM_BINS],
+    len: usize,
+}
+
+impl std::ops::Deref for DispatchOrder {
+    type Target = [usize];
+
+    fn deref(&self) -> &[usize] {
+        &self.order[..self.len]
+    }
+}
+
+impl IntoIterator for DispatchOrder {
+    type Item = usize;
+    type IntoIter = std::iter::Take<std::array::IntoIter<usize, NUM_BINS>>;
+
+    fn into_iter(self) -> Self::IntoIter {
+        self.order.into_iter().take(self.len)
     }
 }
 
@@ -58,11 +95,18 @@ pub fn bin_of_degree(d: u32) -> usize {
 }
 
 /// Bin `frontier` by vertex degree (two-pass counting sort — exactly the
-/// GPU formulation, which needs stable O(frontier) work).
+/// GPU formulation, which needs stable O(frontier) work). The degree
+/// callback runs **once** per vertex: the first pass caches each
+/// vertex's bin index (a byte), which the scatter pass replays —
+/// `degree` can be a CSR offset subtraction, but through the slab seam
+/// it is a bounds-checked double lookup that used to run twice.
 pub fn bin_frontier<F: Fn(VertexId) -> u32>(frontier: &[VertexId], degree: F) -> Binned {
     let mut counts = [0u32; NUM_BINS];
+    let mut bins: Vec<u8> = Vec::with_capacity(frontier.len());
     for &v in frontier {
-        counts[bin_of_degree(degree(v))] += 1;
+        let b = bin_of_degree(degree(v));
+        bins.push(b as u8);
+        counts[b] += 1;
     }
     let mut starts = vec![0u32; NUM_BINS + 1];
     for b in 0..NUM_BINS {
@@ -70,10 +114,9 @@ pub fn bin_frontier<F: Fn(VertexId) -> u32>(frontier: &[VertexId], degree: F) ->
     }
     let mut cursor = starts.clone();
     let mut vertices = vec![0 as VertexId; frontier.len()];
-    for &v in frontier {
-        let b = bin_of_degree(degree(v));
-        vertices[cursor[b] as usize] = v;
-        cursor[b] += 1;
+    for (&v, &b) in frontier.iter().zip(&bins) {
+        vertices[cursor[b as usize] as usize] = v;
+        cursor[b as usize] += 1;
     }
     Binned { vertices, starts }
 }
@@ -145,5 +188,39 @@ mod tests {
         let binned = bin_frontier(&[], |_| 0);
         assert!(binned.is_empty());
         assert!(binned.dispatch_order().is_empty());
+    }
+
+    #[test]
+    fn degree_evaluated_once_per_vertex() {
+        // The first counting pass caches bin indices; the scatter pass
+        // replays them instead of re-evaluating `degree`.
+        use std::cell::Cell;
+        let calls = Cell::new(0usize);
+        let frontier: Vec<VertexId> = (0..100).collect();
+        let binned = bin_frontier(&frontier, |v| {
+            calls.set(calls.get() + 1);
+            (v % 17) + 1
+        });
+        assert_eq!(calls.get(), frontier.len());
+        assert_eq!(binned.len(), frontier.len());
+    }
+
+    #[test]
+    fn dispatch_order_is_a_slice_and_iterates_by_value() {
+        let degrees = [1u32, 2, 100, 5, 0, 9];
+        let frontier: Vec<VertexId> = (0..degrees.len() as u32).collect();
+        let binned = bin_frontier(&frontier, |v| degrees[v as usize]);
+        let order = binned.dispatch_order();
+        // Slice view (Deref) and by-value iteration agree.
+        let via_slice: Vec<usize> = order.to_vec();
+        let via_iter: Vec<usize> = order.into_iter().collect();
+        assert_eq!(via_slice, via_iter);
+        // Exactly the non-empty bins, strictly descending.
+        let want: Vec<usize> = (0..NUM_BINS)
+            .rev()
+            .filter(|&b| !binned.bin(b).is_empty())
+            .collect();
+        assert_eq!(via_slice, want);
+        assert!(via_slice.windows(2).all(|w| w[0] > w[1]));
     }
 }

@@ -5,12 +5,14 @@
 pub mod bottomup;
 pub mod dirop;
 pub mod frontier;
+pub mod kernels;
 pub mod lrb;
 pub mod msbfs;
 pub mod serial;
 pub mod topdown;
 
 pub use frontier::{Bitmap, Frontier, LaneMask, MaskFrontier};
+pub use kernels::{KernelVariant, KernelWork};
 pub use msbfs::{
     mask_delta_bytes, ms_bfs, words_for_lanes, MaskDeltaStats, MsBfsResult, MAX_BATCH,
     MAX_LANES,

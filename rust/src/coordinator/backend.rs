@@ -3,13 +3,19 @@
 //! The distributed engine is backend-agnostic (the paper: traversal and
 //! communication are "two separate and independent phases"). Backends:
 //!
-//! * [`NativeCsr`] — the Rust CSR engine with LRB binning; handles any
-//!   graph size. This is the performance hot path.
+//! * [`NativeCsr`] — the Rust CSR engine with LRB binning and selectable
+//!   mask-kernel shapes ([`KernelVariant`]); handles any graph size.
+//!   This is the performance hot path.
 //! * `runtime::XlaFrontierBackend` — executes the AOT-compiled JAX/Pallas
 //!   BLAS-formulation level step via PJRT (the L1/L2 layers); fixed-shape
-//!   artifacts, used on demo-scale graphs and in the e2e example.
+//!   artifacts, used on demo-scale graphs and in the e2e example. It has
+//!   no native lane-mask kernel, so batched bottom-up reaches it through
+//!   the *semiring* formulation
+//!   ([`ComputeBackend::expand_bottom_up_batch_semiring`]) instead of
+//!   degrading the whole batch to top-down.
 
 use crate::bfs::frontier::Bitmap;
+use crate::bfs::kernels::{KernelVariant, KernelWork, CHUNK_VERTICES};
 use crate::bfs::lrb::bin_frontier;
 use crate::bfs::msbfs::MAX_LANE_WORDS;
 use crate::graph::csr::{CsrSlab, VertexId};
@@ -22,6 +28,9 @@ pub struct ExpandOutput {
     pub discovered: Vec<VertexId>,
     /// Edges examined.
     pub edges_examined: u64,
+    /// Deterministic kernel work counters for this expansion (words of
+    /// visited/summary traffic plus the dispatch structure).
+    pub work: KernelWork,
 }
 
 /// Output of one node's *batched* (MS-BFS) Phase-1 bottom-up expansion:
@@ -31,6 +40,12 @@ pub struct ExpandOutput {
 /// discovered vertex, parallel to `discovered` (`masks[i·words..]` is
 /// entry `i`'s mask), so one trait signature serves every monomorphized
 /// lane width.
+///
+/// The struct doubles as the kernel's reusable state: the private
+/// candidate/probe scratch buffers and the chunked kernel's cross-level
+/// fully-settled summary live here, so a session that keeps one
+/// `BatchExpandOutput` per node (cleared in place each level, reset via
+/// [`Self::reset_for_batch`] per batch) runs every level allocation-free.
 #[derive(Clone, Debug, Default)]
 pub struct BatchExpandOutput {
     /// Discovered vertices, ascending (the owned-range scan order).
@@ -41,6 +56,52 @@ pub struct BatchExpandOutput {
     /// Edges (neighbor probes) examined, counting the bottom-up early
     /// exit — the quantity the direction heuristic is trying to shrink.
     pub edges_examined: u64,
+    /// Deterministic kernel work counters for this expansion.
+    pub work: KernelWork,
+    /// Chunked-kernel summary bitmap over the slab's global vertex range:
+    /// bit `v` set once vertex `v`'s missing mask was observed all-zero
+    /// (monotone — `seen` only grows within a batch), letting later
+    /// levels skip it (and whole 64-vertex chunks of it) without reading
+    /// `words` mask words. Persistent across levels, zeroed per batch.
+    bu_done: Vec<u64>,
+    /// Sweep-stage candidates (owned vertices with a nonzero missing
+    /// mask), ascending.
+    cand: Vec<VertexId>,
+    /// `words` missing-mask words per candidate, parallel to `cand`.
+    cand_miss: Vec<u64>,
+    /// Probe-stage results: `words` newly-gained words per candidate
+    /// (possibly zero), parallel to `cand`. Filled in dispatch order,
+    /// emitted in ascending candidate order — how the LRB-binned probe
+    /// stays bit-identical to the flat scan.
+    probe_new: Vec<u64>,
+}
+
+impl BatchExpandOutput {
+    /// Reset the cross-level chunked-kernel state (the fully-settled
+    /// summary and the work counters) for a fresh batch. Keeps every
+    /// allocation.
+    pub fn reset_for_batch(&mut self) {
+        self.bu_done.iter_mut().for_each(|x| *x = 0);
+        self.work.clear();
+    }
+}
+
+/// A 64-bit mask selecting the bits of chunk word `wi` that fall inside
+/// the vertex range `lo..hi`.
+#[inline]
+fn chunk_range_mask(wi: usize, lo: usize, hi: usize) -> u64 {
+    let start = (wi * CHUNK_VERTICES).max(lo);
+    let end = ((wi + 1) * CHUNK_VERTICES).min(hi);
+    if start >= end {
+        return 0;
+    }
+    let n = end - start;
+    let shift = start - wi * CHUNK_VERTICES;
+    if n == 64 {
+        u64::MAX
+    } else {
+        ((1u64 << n) - 1) << shift
+    }
 }
 
 /// A per-node Phase-1 implementation.
@@ -112,15 +173,94 @@ pub trait ComputeBackend: Send {
     }
 
     /// Capability probe for [`ComputeBackend::expand_bottom_up_batch`].
-    /// Defaults to `false`: the engine degrades the whole batch to
-    /// top-down when any node's backend lacks the kernel (the XLA
-    /// backend's fixed-shape artifacts have no lane-mask step).
+    /// Defaults to `false`: backends without a native lane-mask kernel
+    /// are reached through
+    /// [`ComputeBackend::expand_bottom_up_batch_semiring`] instead.
     fn supports_bottom_up_batch(&self) -> bool {
         false
     }
+
+    /// Batched bottom-up expansion as a **blocked lane-mask semiring
+    /// step**: `masks_next = Aᵀ ⊗ masks_frontier` over the
+    /// `(OR, AND-NOT-seen)` semiring — for every owned vertex `v`,
+    /// OR-reduce the frontier masks of *all* of `v`'s in-neighbors (one
+    /// dense "row × vector" product per vertex, no early exit), then
+    /// AND the reduction with `full_mask & !seen[v]`. Processed in
+    /// 64-vertex row blocks (one dispatch per block), which is exactly
+    /// the tiled matmul shape a systolic/vector device compiles — the
+    /// formulation the gated XLA path consumes so a backend without a
+    /// native lane-mask kernel still runs batched bottom-up instead of
+    /// degrading the whole batch to top-down.
+    ///
+    /// Bit-identical discoveries to
+    /// [`ComputeBackend::expand_bottom_up_batch`]: the early exit there
+    /// only truncates the OR-reduction once it already covers every
+    /// missing lane, so `missing & acc` agrees whether or not the
+    /// reduction ran to completion. Only `edges_examined` differs — the
+    /// semiring inspects every edge (the GPU bottom-up trade-off the
+    /// direction heuristic weighs).
+    fn expand_bottom_up_batch_semiring(
+        &mut self,
+        slab: &CsrSlab,
+        visit_full: &[u64],
+        seen: &[u64],
+        full_mask: &[u64],
+        out: &mut BatchExpandOutput,
+    ) {
+        let w = full_mask.len();
+        debug_assert!(w >= 1 && w <= MAX_LANE_WORDS);
+        out.discovered.clear();
+        out.masks.clear();
+        out.edges_examined = 0;
+        out.work.clear();
+        let (lo, hi) = (slab.first_vertex as usize, slab.end_vertex() as usize);
+        let mut acc = [0u64; MAX_LANE_WORDS];
+        let mut block = lo;
+        while block < hi {
+            let block_end = (block + CHUNK_VERTICES).min(hi);
+            let mut block_work = 0u64;
+            for v in block as VertexId..block_end as VertexId {
+                let base = v as usize * w;
+                acc[..w].iter_mut().for_each(|x| *x = 0);
+                let neighbors = slab.neighbors_global(v);
+                for &u in neighbors {
+                    let ubase = u as usize * w;
+                    for k in 0..w {
+                        acc[k] |= visit_full[ubase + k];
+                    }
+                }
+                out.edges_examined += neighbors.len() as u64;
+                let row_words = w as u64 * (1 + neighbors.len() as u64);
+                out.work.words_touched += row_words;
+                block_work += row_words;
+                let mut d_any = 0u64;
+                for k in 0..w {
+                    acc[k] &= full_mask[k] & !seen[base + k];
+                    d_any |= acc[k];
+                }
+                if d_any != 0 {
+                    out.discovered.push(v);
+                    out.masks.extend_from_slice(&acc[..w]);
+                }
+            }
+            out.work.record_dispatch(block_work);
+            block = block_end;
+        }
+    }
+
+    /// Capability probe for
+    /// [`ComputeBackend::expand_bottom_up_batch_semiring`]. Defaults to
+    /// `true` — the blocked default body is pure CSR math every backend
+    /// can run. Override to `false` only for a backend that must never
+    /// see batched bottom-up work at all (the engine then degrades the
+    /// batch to top-down).
+    fn supports_bottom_up_batch_semiring(&self) -> bool {
+        true
+    }
 }
 
-/// The native Rust CSR backend (optionally LRB-ordered).
+/// The native Rust CSR backend (optionally LRB-ordered, with a
+/// selectable mask-kernel shape).
 ///
 /// §Perf note: a sorted-frontier variant (ascending row order for
 /// sequential CSR reads) was measured at no gain at suite scale (the
@@ -128,14 +268,25 @@ pub trait ComputeBackend: Send {
 #[derive(Clone, Copy, Debug, Default)]
 pub struct NativeCsr {
     /// Order edge processing by LRB bins (deterministic + the GPU
-    /// load-balancing analog).
+    /// load-balancing analog). Composes with the wide bottom-up probe
+    /// stage: candidates are binned by degree so each dispatch does
+    /// uniform work and one hub stops serializing the lane scan.
     pub use_lrb: bool,
+    /// Mask-kernel shape for the bottom-up sweeps ([`KernelVariant`]).
+    pub kernel: KernelVariant,
 }
 
 impl NativeCsr {
-    /// Create a backend (LRB on/off).
+    /// Create a backend (LRB on/off) with the default ([`KernelVariant::Auto`])
+    /// kernel shape.
     pub fn new(use_lrb: bool) -> Self {
-        Self { use_lrb }
+        Self { use_lrb, kernel: KernelVariant::Auto }
+    }
+
+    /// Builder: select the mask-kernel shape.
+    pub fn with_kernel(mut self, kernel: KernelVariant) -> Self {
+        self.kernel = kernel;
+        self
     }
 }
 
@@ -153,6 +304,7 @@ impl ComputeBackend for NativeCsr {
     ) {
         out.discovered.clear();
         out.edges_examined = 0;
+        out.work.clear();
         let expand_one = |v: VertexId, visited: &mut Bitmap, out: &mut ExpandOutput| {
             // Counter hoisted out of the edge loop (§Perf optimization 3).
             out.edges_examined += slab.degree_global(v) as u64;
@@ -165,13 +317,18 @@ impl ComputeBackend for NativeCsr {
         if self.use_lrb {
             let binned = bin_frontier(frontier, |v| slab.degree_global(v));
             for b in binned.dispatch_order() {
+                let before = out.edges_examined;
                 for &v in binned.bin(b) {
                     expand_one(v, visited, out);
                 }
+                out.work.record_dispatch(out.edges_examined - before);
             }
         } else {
             for &v in frontier {
                 expand_one(v, visited, out);
+            }
+            if !frontier.is_empty() {
+                out.work.record_dispatch(out.edges_examined);
             }
         }
     }
@@ -185,10 +342,9 @@ impl ComputeBackend for NativeCsr {
     ) {
         out.discovered.clear();
         out.edges_examined = 0;
-        for v in slab.first_vertex..slab.end_vertex() {
-            if visited.get(v) {
-                continue;
-            }
+        out.work.clear();
+        let (lo, hi) = (slab.first_vertex as usize, slab.end_vertex() as usize);
+        let probe_one = |v: VertexId, visited: &mut Bitmap, out: &mut ExpandOutput| {
             for &u in slab.neighbors_global(v) {
                 out.edges_examined += 1;
                 if frontier_full.get(u) {
@@ -199,9 +355,58 @@ impl ComputeBackend for NativeCsr {
                     break;
                 }
             }
+        };
+        if self.kernel.is_chunked() {
+            // One visited word per 64-vertex chunk: a fully-visited
+            // chunk is skipped without per-vertex tests. Discoveries
+            // only set bits of vertices already scanned, so the word
+            // snapshot taken at chunk entry is exact.
+            for wi in lo / CHUNK_VERTICES..hi.div_ceil(CHUNK_VERTICES) {
+                let range = chunk_range_mask(wi, lo, hi);
+                out.work.words_touched += 1;
+                let snapshot = visited.words()[wi];
+                let pending = !snapshot & range;
+                out.work.words_skipped += (snapshot & range).count_ones() as u64;
+                out.work.words_touched += pending.count_ones() as u64;
+                let mut bits = pending;
+                while bits != 0 {
+                    let v = (wi * CHUNK_VERTICES) as u32 + bits.trailing_zeros();
+                    bits &= bits - 1;
+                    probe_one(v, visited, out);
+                }
+            }
+        } else {
+            for v in lo as VertexId..hi as VertexId {
+                out.work.words_touched += 1;
+                if visited.get(v) {
+                    continue;
+                }
+                probe_one(v, visited, out);
+            }
+        }
+        if hi > lo {
+            out.work.record_dispatch(out.edges_examined);
         }
     }
 
+    /// The native wide-lane kernel, restructured as two stages so each
+    /// is a clean SIMD shape:
+    ///
+    /// 1. **Sweep** — walk the owned range computing each vertex's
+    ///    missing mask (`full & !seen[v]`), collecting the nonzero ones
+    ///    as candidates in ascending order. The scalar shape reads `W`
+    ///    words per vertex; the chunked shape consults the persistent
+    ///    fully-settled summary ([`BatchExpandOutput`]'s `bu_done`) and
+    ///    skips settled vertices — and whole settled 64-vertex chunks —
+    ///    without touching their mask words.
+    /// 2. **Probe** — for each candidate, OR-accumulate neighbor
+    ///    frontier masks with the covered early exit. The probe is pure
+    ///    (reads only `visit_full`/`seen` fixed at level start), so with
+    ///    LRB composed in the candidates are binned by degree and
+    ///    dispatched largest-bin-first — uniform work per dispatch, one
+    ///    hub no longer serializing the scan — while results are
+    ///    buffered per candidate and emitted in ascending order,
+    ///    bit-identical to the flat scan.
     fn expand_bottom_up_batch(
         &mut self,
         slab: &CsrSlab,
@@ -215,9 +420,18 @@ impl ComputeBackend for NativeCsr {
         out.discovered.clear();
         out.masks.clear();
         out.edges_examined = 0;
+        out.work.clear();
+        out.cand.clear();
+        out.cand_miss.clear();
+        let (lo, hi) = (slab.first_vertex as usize, slab.end_vertex() as usize);
+        let done_words = hi.div_ceil(CHUNK_VERTICES);
+        if out.bu_done.len() < done_words {
+            out.bu_done.resize(done_words, 0);
+        }
         let mut missing = [0u64; MAX_LANE_WORDS];
-        let mut acc = [0u64; MAX_LANE_WORDS];
-        for v in slab.first_vertex..slab.end_vertex() {
+
+        // Stage 1: the sweep.
+        let mut sweep_one = |v: VertexId, out: &mut BatchExpandOutput| -> bool {
             let base = v as usize * w;
             let mut miss_any = 0u64;
             for k in 0..w {
@@ -225,16 +439,59 @@ impl ComputeBackend for NativeCsr {
                 miss_any |= missing[k];
             }
             if miss_any == 0 {
-                continue;
+                return false;
             }
+            out.cand.push(v);
+            out.cand_miss.extend_from_slice(&missing[..w]);
+            true
+        };
+        if self.kernel.is_chunked() {
+            for wi in lo / CHUNK_VERTICES..done_words {
+                let range = chunk_range_mask(wi, lo, hi);
+                out.work.words_touched += 1;
+                let settled = out.bu_done[wi] & range;
+                out.work.words_skipped += w as u64 * settled.count_ones() as u64;
+                let mut bits = !out.bu_done[wi] & range;
+                while bits != 0 {
+                    let v = (wi * CHUNK_VERTICES) as u32 + bits.trailing_zeros();
+                    bits &= bits - 1;
+                    out.work.words_touched += w as u64;
+                    if !sweep_one(v, out) {
+                        // Missing went to zero: settled for the rest of
+                        // the batch (seen is monotone).
+                        out.bu_done[wi] |= 1u64 << (v as usize % CHUNK_VERTICES);
+                    }
+                }
+            }
+        } else {
+            for v in lo as VertexId..hi as VertexId {
+                out.work.words_touched += w as u64;
+                sweep_one(v, out);
+            }
+        }
+
+        // Stage 2: the probe (pure per candidate; any dispatch order).
+        let ncand = out.cand.len();
+        out.probe_new.clear();
+        out.probe_new.resize(ncand * w, 0);
+        let mut acc = [0u64; MAX_LANE_WORDS];
+        let probe_candidate = |idx: usize,
+                               cand: &[VertexId],
+                               cand_miss: &[u64],
+                               probe_new: &mut [u64],
+                               acc: &mut [u64; MAX_LANE_WORDS]|
+         -> u64 {
+            let v = cand[idx];
+            let miss = &cand_miss[idx * w..(idx + 1) * w];
             acc[..w].iter_mut().for_each(|x| *x = 0);
+            let mut probes = 0u64;
             for &u in slab.neighbors_global(v) {
-                out.edges_examined += 1;
+                probes += 1;
                 let ubase = u as usize * w;
                 let mut covered = true;
                 for k in 0..w {
                     acc[k] |= visit_full[ubase + k];
-                    covered &= acc[k] & missing[k] == missing[k];
+                    covered &= acc[k] & miss[k] == miss[k];
                 }
                 if covered {
                     // Every still-missing lane (in every word) found a
@@ -243,14 +500,54 @@ impl ComputeBackend for NativeCsr {
                     break;
                 }
             }
-            let mut d_any = 0u64;
             for k in 0..w {
-                missing[k] &= acc[k];
-                d_any |= missing[k];
+                probe_new[idx * w + k] = miss[k] & acc[k];
             }
-            if d_any != 0 {
-                out.discovered.push(v);
-                out.masks.extend_from_slice(&missing[..w]);
+            probes
+        };
+        if self.use_lrb && ncand > 0 {
+            // Bin candidate *indices* by degree: each dispatch covers one
+            // degree class (within 2×), so per-dispatch work is uniform.
+            let idxs: Vec<VertexId> = (0..ncand as u32).collect();
+            let binned =
+                bin_frontier(&idxs, |i| slab.degree_global(out.cand[i as usize]));
+            for b in binned.dispatch_order() {
+                let mut dispatch_work = 0u64;
+                for &i in binned.bin(b) {
+                    let probes = probe_candidate(
+                        i as usize,
+                        &out.cand,
+                        &out.cand_miss,
+                        &mut out.probe_new,
+                        &mut acc,
+                    );
+                    out.edges_examined += probes;
+                    dispatch_work += w as u64 * (1 + probes);
+                }
+                out.work.record_dispatch(dispatch_work);
+            }
+        } else if ncand > 0 {
+            let mut dispatch_work = 0u64;
+            for idx in 0..ncand {
+                let probes = probe_candidate(
+                    idx,
+                    &out.cand,
+                    &out.cand_miss,
+                    &mut out.probe_new,
+                    &mut acc,
+                );
+                out.edges_examined += probes;
+                dispatch_work += w as u64 * (1 + probes);
+            }
+            out.work.record_dispatch(dispatch_work);
+        }
+
+        // Emit in ascending candidate order regardless of dispatch order.
+        for idx in 0..ncand {
+            let d = &out.probe_new[idx * w..(idx + 1) * w];
+            if d.iter().fold(0u64, |a, &b| a | b) != 0 {
+                out.discovered.push(out.cand[idx]);
+                out.masks.extend_from_slice(d);
             }
         }
     }
@@ -273,7 +570,7 @@ mod tests {
             let mut visited = Bitmap::new(300);
             visited.set(7);
             let mut out = ExpandOutput::default();
-            NativeCsr { use_lrb }.expand(&slab, &[7], &mut visited, &mut out);
+            NativeCsr::new(use_lrb).expand(&slab, &[7], &mut visited, &mut out);
             assert_eq!(out.edges_examined, g.degree(7) as u64);
             let mut want: Vec<VertexId> =
                 g.neighbors(7).iter().copied().filter(|&u| u != 7).collect();
@@ -282,6 +579,8 @@ mod tests {
             got.sort_unstable();
             want.sort_unstable();
             assert_eq!(got, want, "lrb={use_lrb}");
+            assert!(out.work.dispatches >= 1);
+            assert_eq!(out.work.dispatch_max_work, out.edges_examined);
         }
     }
 
@@ -293,22 +592,28 @@ mod tests {
         let run = |use_lrb: bool| {
             let mut visited = Bitmap::from_queue(500, &frontier);
             let mut out = ExpandOutput::default();
-            NativeCsr { use_lrb }.expand(&slab, &frontier, &mut visited, &mut out);
+            NativeCsr::new(use_lrb).expand(&slab, &frontier, &mut visited, &mut out);
             let mut d = out.discovered;
             d.sort_unstable();
-            (d, out.edges_examined)
+            (d, out.edges_examined, out.work)
         };
-        let (d1, e1) = run(false);
-        let (d2, e2) = run(true);
+        let (d1, e1, w1) = run(false);
+        let (d2, e2, w2) = run(true);
         assert_eq!(d1, d2);
         assert_eq!(e1, e2);
+        // LRB splits the flat dispatch into per-bin dispatches: never
+        // fewer dispatches, never a larger max.
+        assert!(w2.dispatches >= w1.dispatches);
+        assert!(w2.dispatch_max_work <= w1.dispatch_max_work);
     }
 
     /// Generic checker for the batched bottom-up kernel at `words` lane
     /// words: every discovery is an owned vertex gaining exactly its
     /// neighbors' frontier lanes minus what it had seen, early exit can
     /// only truncate once all missing lanes are covered, and no owned
-    /// unseen vertex with a frontier neighbor is skipped.
+    /// unseen vertex with a frontier neighbor is skipped. Checked for
+    /// every kernel shape × LRB composition (all must agree bit-for-bit)
+    /// and against the semiring formulation.
     fn check_batch_bottom_up(words: usize) {
         let (g, _) = uniform_random(200, 6, 33);
         let slab = g.row_slice(50, 150);
@@ -336,6 +641,40 @@ mod tests {
             &mut out,
         );
         assert!(NativeCsr::new(false).supports_bottom_up_batch());
+        // Every kernel shape / LRB / semiring combination reproduces the
+        // baseline exactly (discoveries and masks; the semiring also
+        // matches on everything but edges_examined).
+        for (use_lrb, kernel) in [
+            (false, KernelVariant::Scalar),
+            (false, KernelVariant::Chunked),
+            (true, KernelVariant::Scalar),
+            (true, KernelVariant::Chunked),
+            (true, KernelVariant::Auto),
+        ] {
+            let mut alt = BatchExpandOutput::default();
+            NativeCsr::new(use_lrb).with_kernel(kernel).expand_bottom_up_batch(
+                &slab,
+                &visit_full,
+                &seen,
+                &full,
+                &mut alt,
+            );
+            assert_eq!(alt.discovered, out.discovered, "lrb={use_lrb} {kernel:?}");
+            assert_eq!(alt.masks, out.masks, "lrb={use_lrb} {kernel:?}");
+            assert_eq!(alt.edges_examined, out.edges_examined);
+        }
+        let mut semi = BatchExpandOutput::default();
+        NativeCsr::new(false).expand_bottom_up_batch_semiring(
+            &slab,
+            &visit_full,
+            &seen,
+            &full,
+            &mut semi,
+        );
+        assert_eq!(semi.discovered, out.discovered, "semiring discoveries");
+        assert_eq!(semi.masks, out.masks, "semiring masks");
+        assert!(semi.edges_examined >= out.edges_examined);
+
         assert_eq!(out.masks.len(), out.discovered.len() * words);
         for (i, &v) in out.discovered.iter().enumerate() {
             assert!(slab.owns(v));
@@ -393,6 +732,119 @@ mod tests {
     }
 
     #[test]
+    fn chunked_sweep_skips_settled_vertices_across_levels() {
+        // All lanes fully seen on most of the owned range: the second
+        // sweep of a chunked kernel must skip the settled chunks
+        // wholesale, while the scalar kernel re-reads every vertex.
+        let (g, _) = uniform_random(256, 5, 9);
+        let slab = g.row_slice(0, 256);
+        let words = 2usize;
+        let full = vec![u64::MAX; words];
+        let visit_full = vec![0u64; 256 * words];
+        let mut seen = vec![u64::MAX; 256 * words];
+        // Leave vertices 200..205 unseen.
+        for v in 200..205 {
+            for k in 0..words {
+                seen[v * words + k] = 0;
+            }
+        }
+        let mut chunked = BatchExpandOutput::default();
+        let mut bk = NativeCsr::new(false).with_kernel(KernelVariant::Chunked);
+        bk.expand_bottom_up_batch(&slab, &visit_full, &seen, &full, &mut chunked);
+        let first_touched = chunked.work.words_touched;
+        // Level 1: settled bits recorded; the sweep now reads only the
+        // summary words plus the 5 pending vertices.
+        bk.expand_bottom_up_batch(&slab, &visit_full, &seen, &full, &mut chunked);
+        assert_eq!(chunked.work.words_touched, 4 + 5 * words as u64);
+        assert_eq!(chunked.work.words_skipped, (256 - 5) * words as u64);
+        assert!(chunked.work.words_touched < first_touched);
+        let mut scalar = BatchExpandOutput::default();
+        NativeCsr::new(false)
+            .with_kernel(KernelVariant::Scalar)
+            .expand_bottom_up_batch(&slab, &visit_full, &seen, &full, &mut scalar);
+        assert_eq!(scalar.work.words_touched, 256 * words as u64);
+        assert_eq!(scalar.work.words_skipped, 0);
+        assert_eq!(scalar.discovered, chunked.discovered);
+        assert_eq!(scalar.masks, chunked.masks);
+        // reset_for_batch forgets the settled summary.
+        chunked.reset_for_batch();
+        bk.expand_bottom_up_batch(&slab, &visit_full, &seen, &full, &mut chunked);
+        assert_eq!(chunked.work.words_touched, first_touched);
+    }
+
+    #[test]
+    fn lrb_probe_reduces_max_dispatch_work_on_skewed_candidates() {
+        // A hub plus many leaves: flat probing is one dispatch carrying
+        // all the work; LRB splits the hub's bin from the leaves' bin.
+        let n = 400usize;
+        let g = crate::graph::gen::structured::star(n);
+        let slab = g.row_slice(0, n as VertexId);
+        let full = vec![0b1u64];
+        // Frontier: vertex 1 only; nothing seen.
+        let mut visit_full = vec![0u64; n];
+        visit_full[1] = 0b1;
+        let seen = vec![0u64; n];
+        let run = |use_lrb: bool| {
+            let mut out = BatchExpandOutput::default();
+            NativeCsr::new(use_lrb)
+                .with_kernel(KernelVariant::Scalar)
+                .expand_bottom_up_batch(&slab, &visit_full, &seen, &full, &mut out);
+            out
+        };
+        let flat = run(false);
+        let lrb = run(true);
+        assert_eq!(flat.discovered, lrb.discovered);
+        assert_eq!(flat.masks, lrb.masks);
+        assert_eq!(flat.edges_examined, lrb.edges_examined);
+        assert_eq!(flat.work.dispatches, 1);
+        assert!(lrb.work.dispatches > 1);
+        assert!(
+            lrb.work.dispatch_max_work < flat.work.dispatch_max_work,
+            "lrb {} vs flat {}",
+            lrb.work.dispatch_max_work,
+            flat.work.dispatch_max_work
+        );
+    }
+
+    #[test]
+    fn single_root_chunked_bottom_up_matches_scalar() {
+        let (g, _) = uniform_random(300, 6, 41);
+        let slab = g.row_slice(100, 180);
+        let mut frontier_full = Bitmap::new(300);
+        for v in (0..300u32).step_by(7) {
+            frontier_full.set(v);
+        }
+        let run = |kernel: KernelVariant, visited_fill: &[u32]| {
+            let mut visited = Bitmap::from_queue(300, visited_fill);
+            let mut out = ExpandOutput::default();
+            NativeCsr::new(false).with_kernel(kernel).expand_bottom_up(
+                &slab,
+                &frontier_full,
+                &mut visited,
+                &mut out,
+            );
+            (out, visited)
+        };
+        let fill: Vec<u32> = (100..220u32).step_by(2).collect();
+        let (scalar, vs) = run(KernelVariant::Scalar, &fill);
+        let (chunked, vc) = run(KernelVariant::Chunked, &fill);
+        assert_eq!(scalar.discovered, chunked.discovered);
+        assert_eq!(scalar.edges_examined, chunked.edges_examined);
+        assert_eq!(vs, vc);
+        // Scalar reads one visited word per owned vertex (|100..180| = 80);
+        // chunked reads 2 summary words (chunks 64..128, 128..192) plus
+        // one word per pending vertex, skipping the visited ones.
+        assert_eq!(scalar.work.words_touched, 80);
+        assert_eq!(scalar.work.words_skipped, 0);
+        assert!(chunked.work.words_touched < scalar.work.words_touched);
+        assert_eq!(
+            (chunked.work.words_touched - 2) + chunked.work.words_skipped,
+            80,
+            "chunked per-vertex accounting covers the owned range"
+        );
+    }
+
+    #[test]
     fn expand_respects_visited() {
         let (g, _) = uniform_random(100, 8, 9);
         let slab = g.row_slice(0, 100);
@@ -401,7 +853,7 @@ mod tests {
             visited.set(v);
         }
         let mut out = ExpandOutput::default();
-        NativeCsr { use_lrb: false }.expand(&slab, &[0], &mut visited, &mut out);
+        NativeCsr::new(false).expand(&slab, &[0], &mut visited, &mut out);
         assert!(out.discovered.is_empty());
         assert_eq!(out.edges_examined, g.degree(0) as u64);
     }

@@ -1,6 +1,7 @@
 //! Engine configuration: fanout, pattern choice, payload encoding,
 //! backend, and the simulated hardware models.
 
+use crate::bfs::kernels::KernelVariant;
 use crate::net::model::{DeviceModel, NetModel, TopologyModel};
 
 /// Which synchronization pattern Phase 2 uses.
@@ -255,6 +256,12 @@ pub struct EngineConfig {
     pub batch_width: BatchWidth,
     /// Use LRB binning in Phase 1.
     pub use_lrb: bool,
+    /// Mask-kernel shape for the wide-lane hot loops (the `--kernel`
+    /// CLI knob): scalar per-vertex sweeps, or chunked sweeps that skip
+    /// settled 64-vertex chunks via summary words. Bit-identical
+    /// results either way; only the deterministic work counters (and
+    /// wallclock) differ.
+    pub kernel: KernelVariant,
     /// Phase-1 direction policy.
     pub direction: DirectionMode,
     /// Run Phase 1 across worker threads (native backend only).
@@ -289,6 +296,7 @@ impl EngineConfig {
             payload: PayloadEncoding::Auto,
             batch_width: BatchWidth::W64,
             use_lrb: true,
+            kernel: KernelVariant::Auto,
             direction: DirectionMode::TopDown,
             parallel_phase1: false,
             parallel_phase2: false,
@@ -395,6 +403,7 @@ mod tests {
         let c = EngineConfig::dgx2(16, 4);
         assert_eq!(c.num_nodes, 16);
         assert_eq!(c.batch_width, BatchWidth::W64);
+        assert_eq!(c.kernel, KernelVariant::Auto);
         assert_eq!(c.partition, PartitionMode::OneD);
         assert!(matches!(c.pattern, PatternKind::Butterfly { fanout: 4 }));
         assert_eq!(c.net.name, "dgx2-nvswitch");

@@ -59,6 +59,22 @@ pub struct LevelMetrics {
     /// ([`retransmit_time`](crate::net::sim::retransmit_time)); additive
     /// on top of `sim_comm`.
     pub recovery_time: f64,
+    /// Mask words actually read or written by the level's kernels
+    /// (Phase-1 sweeps plus Phase-2 merges; see
+    /// [`KernelWork`](crate::bfs::kernels::KernelWork)). Deterministic —
+    /// a function of graph, roots and kernel variant, not of wallclock.
+    pub words_touched: u64,
+    /// Mask words provably skipped by the chunked kernels' summary
+    /// words (fully-settled chunk runs, untouched dense-merge rows);
+    /// always 0 under the scalar variant.
+    pub words_skipped: u64,
+    /// Phase-1 kernel dispatches issued this level (per degree-bin under
+    /// LRB, per chunk block / nonempty node otherwise). Phase-2 merges
+    /// contribute word traffic but no dispatches.
+    pub dispatches: u64,
+    /// Largest single-dispatch work item this level — the tail-latency
+    /// signal LRB binning is meant to shrink.
+    pub dispatch_max_work: u64,
 }
 
 impl LevelMetrics {
@@ -207,6 +223,26 @@ impl RunMetrics {
         self.sim_seconds() + self.recovery_time()
     }
 
+    /// Total mask words the kernels actually read or wrote.
+    pub fn words_touched(&self) -> u64 {
+        self.levels.iter().map(|l| l.words_touched).sum()
+    }
+
+    /// Total mask words provably skipped by chunked summary words.
+    pub fn words_skipped(&self) -> u64 {
+        self.levels.iter().map(|l| l.words_skipped).sum()
+    }
+
+    /// Total kernel dispatches issued.
+    pub fn dispatches(&self) -> u64 {
+        self.levels.iter().map(|l| l.dispatches).sum()
+    }
+
+    /// Largest single-dispatch work item over the whole run.
+    pub fn dispatch_max_work(&self) -> u64 {
+        self.levels.iter().map(|l| l.dispatch_max_work).max().unwrap_or(0)
+    }
+
     /// Record one level from raw phase outputs.
     pub fn push_level(
         &mut self,
@@ -263,6 +299,10 @@ impl RunMetrics {
             ("retries", Json::u(self.retries())),
             ("retry_bytes", Json::u(self.retry_bytes())),
             ("recovery_time", Json::n(self.recovery_time())),
+            ("words_touched", Json::u(self.words_touched())),
+            ("words_skipped", Json::u(self.words_skipped())),
+            ("dispatches", Json::u(self.dispatches())),
+            ("dispatch_max_work", Json::u(self.dispatch_max_work())),
             (
                 "levels",
                 Json::Arr(
@@ -279,6 +319,10 @@ impl RunMetrics {
                                 ("direction", Json::s(l.direction_name())),
                                 ("sim_compute", Json::n(l.sim_compute)),
                                 ("sim_comm", Json::n(l.sim_comm)),
+                                ("words_touched", Json::u(l.words_touched)),
+                                ("words_skipped", Json::u(l.words_skipped)),
+                                ("dispatches", Json::u(l.dispatches)),
+                                ("dispatch_max_work", Json::u(l.dispatch_max_work)),
                             ])
                         })
                         .collect(),
@@ -450,6 +494,26 @@ impl BatchMetrics {
         self.sim_seconds() + self.recovery_time()
     }
 
+    /// Total mask words the kernels actually read or wrote.
+    pub fn words_touched(&self) -> u64 {
+        self.levels.iter().map(|l| l.words_touched).sum()
+    }
+
+    /// Total mask words provably skipped by chunked summary words.
+    pub fn words_skipped(&self) -> u64 {
+        self.levels.iter().map(|l| l.words_skipped).sum()
+    }
+
+    /// Total kernel dispatches issued.
+    pub fn dispatches(&self) -> u64 {
+        self.levels.iter().map(|l| l.dispatches).sum()
+    }
+
+    /// Largest single-dispatch work item over the whole batch.
+    pub fn dispatch_max_work(&self) -> u64 {
+        self.levels.iter().map(|l| l.dispatch_max_work).max().unwrap_or(0)
+    }
+
     /// Synchronization bytes amortized per root — the headline
     /// `msbfs_amortization` comparison against a single run's
     /// [`RunMetrics::bytes`].
@@ -488,6 +552,10 @@ impl BatchMetrics {
             ("retries", Json::u(self.retries())),
             ("retry_bytes", Json::u(self.retry_bytes())),
             ("recovery_time", Json::n(self.recovery_time())),
+            ("words_touched", Json::u(self.words_touched())),
+            ("words_skipped", Json::u(self.words_skipped())),
+            ("dispatches", Json::u(self.dispatches())),
+            ("dispatch_max_work", Json::u(self.dispatch_max_work())),
             ("bytes_per_root", Json::n(self.bytes_per_root())),
             ("reached_pairs", Json::u(self.reached_pairs)),
         ])
@@ -663,6 +731,51 @@ mod tests {
         b.levels.push(LevelMetrics { retries: 2, retry_bytes: 40, ..Default::default() });
         assert_eq!(b.retries(), 2);
         assert!(b.to_json().render().contains("\"retry_bytes\":40"));
+    }
+
+    #[test]
+    fn kernel_work_counters_aggregate_and_render() {
+        let mut m = RunMetrics { graph_edges: 10, ..Default::default() };
+        m.push_level(0, 1, 2, 2, 1, &timing(1, 8, 0.5), 0.5, false);
+        m.push_level(1, 1, 2, 2, 1, &timing(1, 8, 0.5), 0.5, true);
+        // Default-zero until the session threads kernel work through.
+        assert_eq!(m.words_touched(), 0);
+        assert_eq!(m.dispatch_max_work(), 0);
+        m.levels[0].words_touched = 40;
+        m.levels[0].dispatches = 2;
+        m.levels[0].dispatch_max_work = 30;
+        m.levels[1].words_touched = 10;
+        m.levels[1].words_skipped = 22;
+        m.levels[1].dispatches = 3;
+        m.levels[1].dispatch_max_work = 8;
+        assert_eq!(m.words_touched(), 50);
+        assert_eq!(m.words_skipped(), 22);
+        assert_eq!(m.dispatches(), 5);
+        // Max over levels, not a sum.
+        assert_eq!(m.dispatch_max_work(), 30);
+        let s = m.to_json().render();
+        assert!(s.contains("\"words_touched\":50"));
+        assert!(s.contains("\"words_skipped\":22"));
+        assert!(s.contains("\"dispatches\":5"));
+        assert!(s.contains("\"dispatch_max_work\":30"));
+        // Per-level breakdown carries the counters too.
+        assert!(s.contains("\"words_touched\":40"));
+        assert!(s.contains("\"dispatch_max_work\":8"));
+        let mut b = BatchMetrics { num_roots: 2, lane_words: 1, ..Default::default() };
+        b.levels.push(LevelMetrics {
+            words_touched: 7,
+            words_skipped: 5,
+            dispatches: 4,
+            dispatch_max_work: 6,
+            ..Default::default()
+        });
+        assert_eq!(b.words_touched(), 7);
+        assert_eq!(b.words_skipped(), 5);
+        assert_eq!(b.dispatches(), 4);
+        assert_eq!(b.dispatch_max_work(), 6);
+        let s = b.to_json().render();
+        assert!(s.contains("\"words_touched\":7"));
+        assert!(s.contains("\"dispatch_max_work\":6"));
     }
 
     #[test]

@@ -20,10 +20,11 @@ pub mod plan;
 pub mod pool;
 pub mod session;
 
-pub use backend::{ComputeBackend, ExpandOutput, NativeCsr};
+pub use backend::{BatchExpandOutput, ComputeBackend, ExpandOutput, NativeCsr};
 pub use config::{
     BatchWidth, DirectionMode, EngineConfig, PartitionMode, PatternKind, PayloadEncoding,
 };
+pub use crate::bfs::kernels::{KernelVariant, KernelWork};
 #[allow(deprecated)]
 pub use engine::ButterflyBfs;
 pub use metrics::{BatchMetrics, LevelMetrics, RunMetrics, SequentialBaseline};

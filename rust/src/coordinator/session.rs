@@ -49,6 +49,7 @@ use super::metrics::{BatchMetrics, LevelMetrics, RunMetrics, SequentialBaseline}
 use super::node::ComputeNode;
 use super::plan::TraversalPlan;
 use crate::bfs::frontier::{lane_bit, lane_mask_count, lane_mask_is_zero, LaneMask, MaskFrontier};
+use crate::bfs::kernels::KernelWork;
 use crate::bfs::msbfs::{full_lane_mask, words_for_lanes, MsBfsNodeState, MAX_LANES};
 use crate::bfs::serial::INF;
 use crate::comm::pattern::Schedule;
@@ -308,9 +309,57 @@ pub struct QuerySession {
     pooled_buckets: Option<Arc<RoundBuckets>>,
     /// Lane count of the most recent batch.
     batch_width: usize,
+    /// Hoisted Phase-2 merge scratch (round snapshots, dense mask/bitmap
+    /// accumulators, occupancy words) — reused clear-in-place across
+    /// levels and queries so the steady-state level loop allocates
+    /// nothing ([`Self::scratch_alloc_events`] counts growth events).
+    merge_scratch: MergeScratch,
     /// Armed fault injection ([`Self::arm_faults`]): `None` (the default)
     /// runs fault-free with zero overhead on the level loop.
     fault: Option<FaultArm>,
+}
+
+/// The session's hoisted Phase-2 scratch buffers. Everything here used to
+/// be a per-`phase2`-call local, costing one round of allocations per
+/// *level*; now each buffer is cleared in place and only grows when a
+/// bigger graph/width/node-count demands it — every growth bumps
+/// `alloc_events`, which the zero-alloc regression test pins at 0 for a
+/// repeated identical batch.
+#[derive(Default)]
+struct MergeScratch {
+    /// Single-root per-round queue-length snapshot (one slot per node).
+    snap_len: Vec<usize>,
+    /// Single-root dense bitmap snapshot (flat, `words` per node).
+    bit_snap: Vec<u64>,
+    /// Single-root pooled sparse sender prefixes (frozen by copy).
+    sparse_snap: Vec<Vec<VertexId>>,
+    /// Batched per-round `(prefix length, priced bytes)` snapshot.
+    snap: Vec<(usize, u64)>,
+    /// Batched dense lane-mask snapshot (flat, `V·W` words per node),
+    /// built incrementally across rounds.
+    mask_snap: Vec<u64>,
+    /// Batched occupancy bitmap per sender (`⌈V/64⌉` words each): bit `v`
+    /// set once vertex `v` entered the sender's accumulated snapshot —
+    /// the chunked merge kernel walks these instead of all `V` rows.
+    mask_occ: Vec<u64>,
+    /// Batched per-sender accumulated snapshot prefix (entries folded in).
+    mask_done: Vec<usize>,
+    /// Batched pooled sparse sender prefixes, width-erased: vertices …
+    sparse_snap_v: Vec<Vec<VertexId>>,
+    /// … and flat masks (`W` words per entry), parallel to `sparse_snap_v`.
+    sparse_snap_m: Vec<Vec<u64>>,
+    /// Buffer-growth events (allocations) since the session was built.
+    alloc_events: u64,
+}
+
+impl MergeScratch {
+    /// Bump the growth counter when `buf` is about to grow past its
+    /// current capacity.
+    fn will_grow<T>(events: &mut u64, buf: &Vec<T>, need: usize) {
+        if buf.capacity() < need {
+            *events += 1;
+        }
+    }
 }
 
 /// A session's armed fault state: the shared injector plus the level
@@ -470,7 +519,12 @@ impl QuerySession {
     /// ([`TraversalPlan::session`]).
     pub(crate) fn with_native_backends(plan: &TraversalPlan) -> Self {
         let backends: Vec<Box<dyn ComputeBackend>> = (0..plan.num_nodes())
-            .map(|_| Box::new(NativeCsr::new(plan.config().use_lrb)) as Box<dyn ComputeBackend>)
+            .map(|_| {
+                Box::new(
+                    NativeCsr::new(plan.config().use_lrb)
+                        .with_kernel(plan.config().kernel),
+                ) as Box<dyn ComputeBackend>
+            })
             .collect();
         Self::from_parts(plan, backends)
     }
@@ -501,8 +555,18 @@ impl QuerySession {
             batch_scratch: Vec::new(),
             pooled_buckets: None,
             batch_width: 0,
+            merge_scratch: MergeScratch::default(),
             fault: None,
         }
+    }
+
+    /// Number of buffer-growth events (allocations) the session's pooled
+    /// Phase-1/Phase-2 scratch has taken since construction. A repeated
+    /// identical query adds **zero**: every per-level buffer — the
+    /// batched bottom-up kernel state, dense merge snapshots, occupancy
+    /// words, sparse prefix copies — is cleared in place and reused.
+    pub fn scratch_alloc_events(&self) -> u64 {
+        self.merge_scratch.alloc_events
     }
 
     /// Arm (or, with `None`, disarm) deterministic fault injection at the
@@ -825,9 +889,15 @@ impl QuerySession {
             let max_node_edges =
                 self.nodes.iter().map(|n| n.edges_this_level).max().unwrap_or(0);
             let sim_compute = self.config.device.level_time_dir(max_node_edges, bottom_up);
+            // Deterministic kernel-work counters: every node's Phase-1
+            // sweep/probe work, then the Phase-2 word-wise merge traffic.
+            let mut level_work = KernelWork::default();
+            for out in &self.scratch {
+                level_work.absorb(&out.work);
+            }
 
             // ---- Phase 2: frontier synchronization ----
-            let payloads = self.phase2(level);
+            let payloads = self.phase2(level, &mut level_work);
             let recovery = match self.check_faults(level, &payloads) {
                 Ok(r) => r,
                 Err(fail) => return Err(self.fault_failure(fail, level_ckpt.take())),
@@ -861,6 +931,10 @@ impl QuerySession {
                 l.retries = recovery.retries;
                 l.retry_bytes = recovery.retry_bytes;
                 l.recovery_time = recovery.recovery_time;
+                l.words_touched = level_work.words_touched;
+                l.words_skipped = level_work.words_skipped;
+                l.dispatches = level_work.dispatches;
+                l.dispatch_max_work = level_work.dispatch_max_work;
             }
 
             // Update the DO bookkeeping before queues rotate.
@@ -941,7 +1015,7 @@ impl QuerySession {
     /// own worker: senders are frozen round-start snapshots, receivers are
     /// disjoint, and every receiver replays its transfers in schedule
     /// order — bit-identical to the sequential merge loop.
-    fn phase2(&mut self, level: u32) -> Vec<Vec<u64>> {
+    fn phase2(&mut self, level: u32, work: &mut KernelWork) -> Vec<Vec<u64>> {
         // The schedule is plan-owned and immutable; clone the handle so
         // iterating rounds never borrows `self` (nodes mutate freely).
         let schedule = Arc::clone(&self.schedule);
@@ -957,42 +1031,60 @@ impl QuerySession {
             self.config.parallel_phase2 && self.pool.is_some() && self.nodes.len() > 1;
         let buckets = if pooled { Some(self.pooled_buckets()) } else { None };
         let mut payloads = Vec::with_capacity(schedule.rounds.len());
+        // Hoisted scratch: moved out of the session for the duration of
+        // the call (no field-borrow entanglement), moved back at the end.
+        let mut scratch = std::mem::take(&mut self.merge_scratch);
         // `CopyFrontier` semantics: transfers in a round see round-start
         // state. Queues are frozen by snapshotting *lengths* (they only
-        // grow); bitmaps by copying words into a flat scratch buffer.
-        let mut bit_snap: Vec<u64> = Vec::new();
+        // grow); bitmaps by copying words into the flat scratch buffer.
+        MergeScratch::will_grow(&mut scratch.alloc_events, &scratch.snap_len, self.nodes.len());
         // Pooled merging also freezes the sparse queue prefixes by copy
         // (a receiver appending to its queue may reallocate it under a
         // concurrent sender-side read; the sequential path is zero-copy).
-        let mut sparse_snap: Vec<Vec<VertexId>> = if pooled {
-            vec![Vec::new(); self.nodes.len()]
-        } else {
-            Vec::new()
-        };
+        if pooled && scratch.sparse_snap.len() < self.nodes.len() {
+            scratch.alloc_events += 1;
+            scratch.sparse_snap.resize_with(self.nodes.len(), Vec::new);
+        }
         for (ri, round) in schedule.rounds.iter().enumerate() {
-            let snap_len: Vec<usize> =
-                self.nodes.iter().map(|n| n.q_global.len()).collect();
+            scratch.snap_len.clear();
+            scratch.snap_len.extend(self.nodes.iter().map(|n| n.q_global.len()));
+            let snap_len = &scratch.snap_len;
             let any_dense = snap_len.iter().any(|&l| l >= dense_threshold);
             if any_dense {
-                bit_snap.clear();
-                bit_snap.reserve(words * self.nodes.len());
+                MergeScratch::will_grow(
+                    &mut scratch.alloc_events,
+                    &scratch.bit_snap,
+                    words * self.nodes.len(),
+                );
+                scratch.bit_snap.clear();
                 for n in &self.nodes {
-                    bit_snap.extend_from_slice(n.q_global_bits.words());
+                    scratch.bit_snap.extend_from_slice(n.q_global_bits.words());
                 }
             }
             let mut round_payloads = Vec::with_capacity(round.len());
             for t in round {
-                round_payloads.push(encoding.bytes(snap_len[t.src as usize] as u64, nv));
+                let take = scratch.snap_len[t.src as usize];
+                round_payloads.push(encoding.bytes(take as u64, nv));
+                // Word-wise merge traffic: a dense transfer ORs the
+                // sender's V-bit bitmap (⌈V/64⌉ words) into the receiver;
+                // sparse transfers replay queue entries, not mask words.
+                if take >= dense_threshold {
+                    work.words_touched += words as u64;
+                }
             }
             if let Some(buckets) = &buckets {
                 for (k, n) in self.nodes.iter().enumerate() {
-                    sparse_snap[k].clear();
-                    if snap_len[k] < dense_threshold {
-                        sparse_snap[k].extend_from_slice(&n.q_global[..snap_len[k]]);
+                    let take = scratch.snap_len[k];
+                    let sp = &mut scratch.sparse_snap[k];
+                    sp.clear();
+                    if take < dense_threshold {
+                        MergeScratch::will_grow(&mut scratch.alloc_events, sp, take);
+                        let sp = &mut scratch.sparse_snap[k];
+                        sp.extend_from_slice(&n.q_global[..take]);
                     }
                 }
                 let (snap_ref, bits_ref, sparse_ref) =
-                    (&snap_len, &bit_snap, &sparse_snap);
+                    (&scratch.snap_len, &scratch.bit_snap, &scratch.sparse_snap);
                 let nodes = SendPtr(self.nodes.as_mut_ptr());
                 let pool = self.pool.as_ref().expect("pooled implies pool");
                 merge_round_pooled(pool, &buckets[ri], &nodes, |receiver, _dst, src| {
@@ -1015,7 +1107,7 @@ impl QuerySession {
                     let take = snap_len[src];
                     if take >= dense_threshold {
                         // Dense path: 64-way duplicate rejection.
-                        let src_words = &bit_snap[src * words..(src + 1) * words];
+                        let src_words = &scratch.bit_snap[src * words..(src + 1) * words];
                         self.nodes[dst].merge_bits(src_words, level);
                     } else {
                         // Sparse path: entry-wise merge of the frozen
@@ -1035,6 +1127,7 @@ impl QuerySession {
             }
             payloads.push(round_payloads);
         }
+        self.merge_scratch = scratch;
         payloads
     }
 
@@ -1171,11 +1264,29 @@ impl QuerySession {
                 .map(|_| MsBfsNodeState::<W>::new(nv, b))
                 .collect();
         }
-        // Direction policy: bottom-up needs the batched kernel on *every*
-        // node's backend (capability probe) — otherwise the whole batch
-        // degrades to top-down (the XLA backend path), keeping results
-        // correct and the metrics honestly tagged.
-        let direction = if self.backends.iter().all(|bk| bk.supports_bottom_up_batch()) {
+        // Batch expansion scratch: sized once per session (kept across
+        // batches), with per-batch in-place reset — the settled bitmap and
+        // candidate buffers must not leak across batches.
+        if self.batch_scratch.len() != self.config.num_nodes {
+            self.merge_scratch.alloc_events += 1;
+            self.batch_scratch =
+                (0..self.config.num_nodes).map(|_| BatchExpandOutput::default()).collect();
+        }
+        for out in &mut self.batch_scratch {
+            out.reset_for_batch();
+        }
+        // Direction policy: bottom-up needs a batched wide-lane kernel on
+        // *every* node's backend — native or the semiring formulation
+        // (`masks_next = Aᵀ ⊗ masks_frontier` over (OR, AND-NOT-seen), the
+        // matmul-shaped fallback backends without lane-mask support
+        // provide). Only when a backend has *neither* does the whole batch
+        // degrade to top-down, keeping results correct and the metrics
+        // honestly tagged.
+        let direction = if self
+            .backends
+            .iter()
+            .all(|bk| bk.supports_bottom_up_batch() || bk.supports_bottom_up_batch_semiring())
+        {
             self.config.direction
         } else {
             DirectionMode::TopDown
@@ -1337,8 +1448,27 @@ impl QuerySession {
             let max_node_edges = states.iter().map(|s| s.edges_this_level).max().unwrap_or(0);
             let sim_compute = self.config.device.level_time_dir(max_node_edges, bottom_up);
 
+            // ---- Kernel work accounting for this level's Phase 1.
+            // Bottom-up: the backends tallied word traffic into the batch
+            // scratch. Top-down: each nonempty node reads W mask words per
+            // frontier vertex and issues one dispatch covering its
+            // adjacency work (LRB does not reorder the top-down walk).
+            let mut level_work = KernelWork::default();
+            if bottom_up {
+                for out in &self.batch_scratch {
+                    level_work.absorb(&out.work);
+                }
+            } else {
+                for st in states.iter() {
+                    if !st.q_local.is_empty() {
+                        level_work.words_touched += (W * st.q_local.len()) as u64;
+                        level_work.record_dispatch(st.edges_this_level);
+                    }
+                }
+            }
+
             // ---- Phase 2: one exchange for the whole batch.
-            let payloads = self.batch_phase2(&mut states, level, bottom_up);
+            let payloads = self.batch_phase2(&mut states, level, bottom_up, &mut level_work);
             let recovery = match self.check_faults(level, &payloads) {
                 Ok(r) => r,
                 Err(fail) => {
@@ -1381,6 +1511,10 @@ impl QuerySession {
                 retries: recovery.retries,
                 retry_bytes: recovery.retry_bytes,
                 recovery_time: recovery.recovery_time,
+                words_touched: level_work.words_touched,
+                words_skipped: level_work.words_skipped,
+                dispatches: level_work.dispatches,
+                dispatch_max_work: level_work.dispatch_max_work,
             });
             metrics.sync_rounds += self.schedule.depth() as u64;
 
@@ -1437,13 +1571,23 @@ impl QuerySession {
                 // from index `i` aliases nothing and outlives no borrow.
                 let backend = unsafe { &mut *backends.at(i) };
                 let out = unsafe { &mut *scratch.at(i) };
-                backend.expand_bottom_up_batch(
-                    &nodes[i].slab,
-                    states_ref[i].full_frontier(),
-                    &states_ref[i].seen,
-                    full,
-                    out,
-                );
+                if backend.supports_bottom_up_batch() {
+                    backend.expand_bottom_up_batch(
+                        &nodes[i].slab,
+                        states_ref[i].full_frontier(),
+                        &states_ref[i].seen,
+                        full,
+                        out,
+                    );
+                } else {
+                    backend.expand_bottom_up_batch_semiring(
+                        &nodes[i].slab,
+                        states_ref[i].full_frontier(),
+                        &states_ref[i].seen,
+                        full,
+                        out,
+                    );
+                }
             });
         } else {
             for ((node, st), (backend, out)) in self
@@ -1452,13 +1596,23 @@ impl QuerySession {
                 .zip(states.iter())
                 .zip(self.backends.iter_mut().zip(self.batch_scratch.iter_mut()))
             {
-                backend.expand_bottom_up_batch(
-                    &node.slab,
-                    st.full_frontier(),
-                    &st.seen,
-                    full,
-                    out,
-                );
+                if backend.supports_bottom_up_batch() {
+                    backend.expand_bottom_up_batch(
+                        &node.slab,
+                        st.full_frontier(),
+                        &st.seen,
+                        full,
+                        out,
+                    );
+                } else {
+                    backend.expand_bottom_up_batch_semiring(
+                        &node.slab,
+                        st.full_frontier(),
+                        &st.seen,
+                        full,
+                        out,
+                    );
+                }
             }
         }
         // Route discoveries (cheap, sequential: O(discovered·W)). Bottom-
@@ -1498,14 +1652,26 @@ impl QuerySession {
     /// bit-identical to the word-wise OR, so a sparse bottom-up level
     /// (deep-graph tail under `DirectionMode::BottomUp`) merges in
     /// O(entries) instead of O(V) per transfer.
+    ///
+    /// Under the chunked [`KernelVariant`](super::KernelVariant) the dense
+    /// merge additionally carries a per-sender V-bit *occupancy bitmap*
+    /// (maintained incrementally alongside the mask snapshot), and
+    /// receivers walk occupied vertices in ascending order instead of
+    /// scanning all `V` mask slots — bit-identical discoveries, strictly
+    /// fewer words read whenever the snapshot has empty slots. Word
+    /// traffic is tallied into `work` per transfer (outside the merge
+    /// closures, so pooled and sequential runs report identically).
     fn batch_phase2<const W: usize>(
         &mut self,
         states: &mut [MsBfsNodeState<W>],
         level: u32,
         bottom_up: bool,
+        work: &mut KernelWork,
     ) -> Vec<Vec<u64>> {
         let schedule = Arc::clone(&self.schedule);
         let nv = self.num_vertices;
+        let chunked = self.config.kernel.is_chunked();
+        let occ_words = nv.div_ceil(64);
         // Entries at which `(4 + 8W)·entries >= 8·W·V`: the dense mask
         // array is now the (no larger) negotiated form, so merge it
         // word-wise. For W = 1 this is the classic `⌈8V/12⌉` switchover.
@@ -1515,68 +1681,146 @@ impl QuerySession {
         let pooled = self.config.parallel_phase2 && self.pool.is_some() && states.len() > 1;
         let buckets = if pooled { Some(self.pooled_buckets()) } else { None };
         let mut payloads = Vec::with_capacity(schedule.rounds.len());
+        // Hoisted scratch: moved out of the session for the duration of
+        // the call, moved back at the end. The width-monomorphized sparse
+        // entry snapshots live in width-erased parallel arrays
+        // (`sparse_snap_v` vertices + `sparse_snap_m` flat `W`-word
+        // masks) so one set of buffers serves every lane width.
+        let mut scratch = std::mem::take(&mut self.merge_scratch);
         // Round-start dense snapshots (one V·W-word lane-mask array per
         // dense sender), flat like `phase2`'s `bit_snap` — but built
         // *incrementally*: deltas only grow within a level and the merge
         // is an idempotent OR, so each round folds in only the entries
         // appended since the previous round (`mask_done` tracks the
         // per-node accumulated prefix) instead of replaying from zero.
-        let mut mask_snap: Vec<u64> = Vec::new();
-        let mut mask_done: Vec<usize> = vec![0; states.len()];
+        // The dense snapshot is lazily zeroed once per call; under the
+        // chunked kernel each sender also maintains a V-bit occupancy
+        // bitmap (`mask_occ`) so receivers walk only occupied vertices.
+        let mut mask_ready = false;
+        MergeScratch::will_grow(&mut scratch.alloc_events, &scratch.mask_done, states.len());
+        scratch.mask_done.clear();
+        scratch.mask_done.resize(states.len(), 0);
         // Pooled merging freezes the sparse sender prefixes by copy: a
         // node can be sender and receiver in the same round, and a
         // receiver appending to its delta list may reallocate it under a
         // concurrent reader. (The sequential path reads senders zero-copy.)
-        let mut sparse_snap: Vec<Vec<(VertexId, LaneMask<W>)>> = if pooled {
-            vec![Vec::new(); states.len()]
-        } else {
-            Vec::new()
-        };
+        if pooled && scratch.sparse_snap_v.len() < states.len() {
+            scratch.alloc_events += 1;
+            scratch.sparse_snap_v.resize_with(states.len(), Vec::new);
+            scratch.sparse_snap_m.resize_with(states.len(), Vec::new);
+        }
         for (ri, round) in schedule.rounds.iter().enumerate() {
             // Snapshot (prefix length, priced bytes) together: the
             // coalescing statistics are monotone within the level, so
             // pricing at snapshot time is exact for the frozen prefix.
-            let snap: Vec<(usize, u64)> = states
-                .iter()
-                .map(|s| {
-                    let len = s.delta.len();
-                    let priced = if bottom_up {
-                        s.delta_payload_bytes_dense(len)
-                    } else {
-                        s.delta_payload_bytes(len)
-                    };
-                    (len, priced)
-                })
-                .collect();
-            let any_dense = snap.iter().any(|&(l, _)| l >= dense_threshold);
+            MergeScratch::will_grow(&mut scratch.alloc_events, &scratch.snap, states.len());
+            scratch.snap.clear();
+            scratch.snap.extend(states.iter().map(|s| {
+                let len = s.delta.len();
+                let priced = if bottom_up {
+                    s.delta_payload_bytes_dense(len)
+                } else {
+                    s.delta_payload_bytes(len)
+                };
+                (len, priced)
+            }));
+            let any_dense = scratch.snap.iter().any(|&(l, _)| l >= dense_threshold);
             if any_dense {
-                if mask_snap.is_empty() {
-                    mask_snap.resize(nv * W * states.len(), 0);
+                if !mask_ready {
+                    MergeScratch::will_grow(
+                        &mut scratch.alloc_events,
+                        &scratch.mask_snap,
+                        nv * W * states.len(),
+                    );
+                    scratch.mask_snap.clear();
+                    scratch.mask_snap.resize(nv * W * states.len(), 0);
+                    if chunked {
+                        MergeScratch::will_grow(
+                            &mut scratch.alloc_events,
+                            &scratch.mask_occ,
+                            occ_words * states.len(),
+                        );
+                        scratch.mask_occ.clear();
+                        scratch.mask_occ.resize(occ_words * states.len(), 0);
+                    }
+                    mask_ready = true;
                 }
                 for (k, s) in states.iter().enumerate() {
-                    if snap[k].0 >= dense_threshold {
-                        s.delta.accumulate_range(
-                            mask_done[k],
-                            snap[k].0,
-                            &mut mask_snap[k * nv * W..(k + 1) * nv * W],
-                        );
-                        mask_done[k] = snap[k].0;
+                    let take_k = scratch.snap[k].0;
+                    if take_k >= dense_threshold {
+                        if chunked {
+                            s.delta.accumulate_range_occ(
+                                scratch.mask_done[k],
+                                take_k,
+                                &mut scratch.mask_snap[k * nv * W..(k + 1) * nv * W],
+                                &mut scratch.mask_occ
+                                    [k * occ_words..(k + 1) * occ_words],
+                            );
+                        } else {
+                            s.delta.accumulate_range(
+                                scratch.mask_done[k],
+                                take_k,
+                                &mut scratch.mask_snap[k * nv * W..(k + 1) * nv * W],
+                            );
+                        }
+                        scratch.mask_done[k] = take_k;
                     }
                 }
             }
+            // Per-transfer payload pricing and merge-side word-traffic
+            // accounting (computed here, outside the merge closures, so
+            // pooled and sequential merging tally identically): a scalar
+            // dense merge reads all `W·V` snapshot words; a chunked dense
+            // merge reads the `⌈V/64⌉`-word occupancy bitmap plus `W`
+            // words per occupied vertex, skipping the rest; a sparse
+            // merge reads `W` words per replayed entry.
             let mut round_payloads = Vec::with_capacity(round.len());
             for t in round {
-                round_payloads.push(snap[t.src as usize].1);
+                let (take, priced) = scratch.snap[t.src as usize];
+                round_payloads.push(priced);
+                if take >= dense_threshold {
+                    if chunked {
+                        let src = t.src as usize;
+                        let occ =
+                            &scratch.mask_occ[src * occ_words..(src + 1) * occ_words];
+                        let occupied: u64 =
+                            occ.iter().map(|w| w.count_ones() as u64).sum();
+                        work.words_touched += occ_words as u64 + W as u64 * occupied;
+                        work.words_skipped += W as u64 * (nv as u64 - occupied);
+                    } else {
+                        work.words_touched += (W * nv) as u64;
+                    }
+                } else {
+                    work.words_touched += (W * take) as u64;
+                }
             }
             if let Some(buckets) = &buckets {
                 for (k, s) in states.iter().enumerate() {
-                    sparse_snap[k].clear();
-                    if snap[k].0 < dense_threshold {
-                        sparse_snap[k].extend_from_slice(&s.delta.entries()[..snap[k].0]);
+                    let take_k = scratch.snap[k].0;
+                    scratch.sparse_snap_v[k].clear();
+                    scratch.sparse_snap_m[k].clear();
+                    if take_k < dense_threshold {
+                        MergeScratch::will_grow(
+                            &mut scratch.alloc_events,
+                            &scratch.sparse_snap_v[k],
+                            take_k,
+                        );
+                        MergeScratch::will_grow(
+                            &mut scratch.alloc_events,
+                            &scratch.sparse_snap_m[k],
+                            take_k * W,
+                        );
+                        for &(v, ref m) in &s.delta.entries()[..take_k] {
+                            scratch.sparse_snap_v[k].push(v);
+                            scratch.sparse_snap_m[k].extend_from_slice(m);
+                        }
                     }
                 }
                 let nodes = &self.nodes;
-                let (snap_ref, mask_ref, sparse_ref) = (&snap, &mask_snap, &sparse_snap);
+                let (snap_ref, mask_ref, occ_ref) =
+                    (&scratch.snap, &scratch.mask_snap, &scratch.mask_occ);
+                let (sparse_v_ref, sparse_m_ref) =
+                    (&scratch.sparse_snap_v, &scratch.sparse_snap_m);
                 let states_ptr = SendPtr(states.as_mut_ptr());
                 let pool = self.pool.as_ref().expect("pooled implies pool");
                 merge_round_pooled(pool, &buckets[ri], &states_ptr, |receiver, dst, src| {
@@ -1584,20 +1828,17 @@ impl QuerySession {
                     let dst_node = &nodes[dst];
                     if take >= dense_threshold {
                         let masks = &mask_ref[src * nv * W..(src + 1) * nv * W];
-                        for v in 0..nv {
-                            let m: &LaneMask<W> =
-                                masks[v * W..(v + 1) * W].try_into().expect("W words");
-                            if !lane_mask_is_zero(m) {
-                                receiver.discover(
-                                    v as VertexId,
-                                    m,
-                                    level,
-                                    dst_node.owns(v as VertexId),
-                                );
-                            }
+                        if chunked {
+                            let occ = &occ_ref[src * occ_words..(src + 1) * occ_words];
+                            merge_dense_chunked(receiver, dst_node, masks, occ, nv, level);
+                        } else {
+                            merge_dense_scalar(receiver, dst_node, masks, nv, level);
                         }
                     } else {
-                        for &(v, ref m) in &sparse_ref[src][..take] {
+                        let sm = &sparse_m_ref[src];
+                        for (i, &v) in sparse_v_ref[src][..take].iter().enumerate() {
+                            let m: &LaneMask<W> =
+                                sm[i * W..(i + 1) * W].try_into().expect("W words");
                             receiver.discover(v, m, level, dst_node.owns(v));
                         }
                     }
@@ -1606,23 +1847,18 @@ impl QuerySession {
                 for t in round {
                     let src = t.src as usize;
                     let dst = t.dst as usize;
-                    let take = snap[src].0;
+                    let take = scratch.snap[src].0;
                     let dst_node = &self.nodes[dst];
                     if take >= dense_threshold {
                         // Dense path: the frozen prefix as per-vertex masks.
-                        let masks = &mask_snap[src * nv * W..(src + 1) * nv * W];
+                        let masks = &scratch.mask_snap[src * nv * W..(src + 1) * nv * W];
                         let receiver = &mut states[dst];
-                        for v in 0..nv {
-                            let m: &LaneMask<W> =
-                                masks[v * W..(v + 1) * W].try_into().expect("W words");
-                            if !lane_mask_is_zero(m) {
-                                receiver.discover(
-                                    v as VertexId,
-                                    m,
-                                    level,
-                                    dst_node.owns(v as VertexId),
-                                );
-                            }
+                        if chunked {
+                            let occ =
+                                &scratch.mask_occ[src * occ_words..(src + 1) * occ_words];
+                            merge_dense_chunked(receiver, dst_node, masks, occ, nv, level);
+                        } else {
+                            merge_dense_scalar(receiver, dst_node, masks, nv, level);
                         }
                     } else {
                         // Sparse path: entry-wise replay of the frozen
@@ -1642,6 +1878,7 @@ impl QuerySession {
             }
             payloads.push(round_payloads);
         }
+        self.merge_scratch = scratch;
         payloads
     }
 
@@ -1755,6 +1992,51 @@ impl QuerySession {
 /// must point at live elements nothing else touches during the call;
 /// destinations are distinct across bucket entries, so each element gets
 /// at most one `&mut`.
+/// Scalar dense-merge kernel: scan every vertex's `W`-word snapshot mask
+/// and discover the non-empty ones. `O(W·V)` words read per transfer.
+fn merge_dense_scalar<const W: usize>(
+    receiver: &mut MsBfsNodeState<W>,
+    dst_node: &ComputeNode,
+    masks: &[u64],
+    nv: usize,
+    level: u32,
+) {
+    for v in 0..nv {
+        let m: &LaneMask<W> = masks[v * W..(v + 1) * W].try_into().expect("W words");
+        if !lane_mask_is_zero(m) {
+            receiver.discover(v as VertexId, m, level, dst_node.owns(v as VertexId));
+        }
+    }
+}
+
+/// Chunked dense-merge kernel: walk the sender's occupancy bitmap and
+/// visit only occupied vertices (ascending — bit-identical discovery
+/// order to the scalar scan, which skips empty masks anyway).
+/// `O(⌈V/64⌉ + W·occupied)` words read per transfer.
+fn merge_dense_chunked<const W: usize>(
+    receiver: &mut MsBfsNodeState<W>,
+    dst_node: &ComputeNode,
+    masks: &[u64],
+    occ: &[u64],
+    nv: usize,
+    level: u32,
+) {
+    for (wi, &word) in occ.iter().enumerate() {
+        let mut bits = word;
+        while bits != 0 {
+            let v = wi * 64 + bits.trailing_zeros() as usize;
+            bits &= bits - 1;
+            if v >= nv {
+                break;
+            }
+            let m: &LaneMask<W> = masks[v * W..(v + 1) * W].try_into().expect("W words");
+            if !lane_mask_is_zero(m) {
+                receiver.discover(v as VertexId, m, level, dst_node.owns(v as VertexId));
+            }
+        }
+    }
+}
+
 fn merge_round_pooled<R, F>(
     pool: &ThreadPool,
     bucket: &[(usize, Vec<usize>)],
@@ -2673,5 +2955,36 @@ mod tests {
                 && r.dist() == &serial_bfs(&g, root)[..];
             (ok, format!("n={n} ef={ef} nodes={nodes} f={fanout} root={root}"))
         });
+    }
+
+    /// Satellite: buffer reuse across levels *and* across queries. The
+    /// first run of a batch (and of a single-root query) is allowed to
+    /// grow the session's hoisted merge/expand scratch; re-running the
+    /// identical workload must be allocation-free — every capacity-growth
+    /// event is counted, so the second run's delta must be exactly zero.
+    #[test]
+    fn repeated_queries_reuse_scratch_without_allocating() {
+        let (g, _) = kronecker(KroneckerParams::graph500(10, 8), 7);
+        let roots =
+            crate::bfs::msbfs::sample_batch_roots(&g, 64, 0x5CA7C4);
+        for cfg in [
+            EngineConfig::dgx2(8, 4),
+            EngineConfig {
+                direction: DirectionMode::diropt(),
+                ..EngineConfig::dgx2(8, 4)
+            },
+        ] {
+            let mut session = session_for(&g, cfg);
+            session.run(roots[0]).unwrap();
+            session.run_batch_metrics_only(&roots).unwrap();
+            let warm = session.scratch_alloc_events();
+            session.run(roots[0]).unwrap();
+            session.run_batch_metrics_only(&roots).unwrap();
+            assert_eq!(
+                session.scratch_alloc_events(),
+                warm,
+                "second identical run must not grow any scratch buffer"
+            );
+        }
     }
 }

@@ -55,6 +55,18 @@
 //! per-class message split of the bare schedules, independent of any
 //! graph.
 //!
+//! Since v7 the report carries a **kernel ablation** section
+//! (`kernel_ablation`): kernel variant {scalar, chunked} × lane width
+//! {64, 256, 512} × partition mode {1d, 2d, hier}, run bottom-up against
+//! roots drawn from one connected component (so the chunked kernel's
+//! settled-skip has real work to elide), with the deterministic
+//! per-kernel work counters (mask words touched / provably skipped,
+//! dispatches, and per-dispatch max work) committed as the evidence for
+//! the SIMD-shaped mask kernels: all variants bit-identical distances,
+//! chunked strictly fewer words than scalar (total and on the sparse
+//! tail level), and LRB degree-binning strictly shrinking the largest
+//! single dispatch versus the unbinned probe (`no_lrb`).
+//!
 //! The artifact lives at the repository root and is kept fresh by CI:
 //! `butterfly-bfs bench-protocol --check` recomputes the protocol and
 //! fails when the committed file drifts (integer counters compare
@@ -67,7 +79,7 @@ use crate::bfs::msbfs::sample_batch_roots;
 use crate::comm::{class_volume, Butterfly, ClassVolume, CommPattern, GridOfIslands, Schedule};
 use crate::coordinator::config::{BatchWidth, DirectionMode};
 use crate::coordinator::metrics::BatchMetrics;
-use crate::coordinator::{EngineConfig, TraversalPlan};
+use crate::coordinator::{EngineConfig, KernelVariant, TraversalPlan};
 use crate::fault::{FaultInjector, FaultPlan};
 use crate::net::model::TopologyModel;
 use crate::graph::csr::{Csr, VertexId};
@@ -96,7 +108,11 @@ use std::sync::Arc;
 /// seeded fault schedule injected at the exchange seam, the
 /// retry/backoff/retransmit overhead it prices into the simulated
 /// clock, and the bit-identical-distances invariant under recovery.
-pub const PROTOCOL_NAME: &str = "engine-bench-v6";
+/// v7 added the kernel-ablation section (`kernel_ablation`): scalar vs
+/// chunked mask kernels × width {64, 256, 512} × mode {1d, 2d, hier},
+/// bottom-up, with deterministic work counters and the LRB dispatch
+/// comparison.
+pub const PROTOCOL_NAME: &str = "engine-bench-v7";
 /// Suite graph the protocol runs on (the paper's GAP_kron analog).
 pub const PROTOCOL_GRAPH: &str = "kron-like";
 /// Scale adjustment: `kron-like` is scale 21; −10 ⇒ 2^11 vertices — big
@@ -159,6 +175,12 @@ pub const PROTOCOL_FAULT_LEVELS: u32 = 4;
 pub const PROTOCOL_FAULT_ROUNDS: usize = 2;
 /// Fault section: node count (the paper's DGX-2 scale).
 pub const PROTOCOL_FAULT_NODES: usize = 16;
+/// Kernel-ablation lane widths (lane word counts 1, 4, and 8 — every
+/// mask-kernel shape the const-generic widths monomorphize).
+pub const PROTOCOL_KERNEL_WIDTHS: [usize; 3] = [64, 256, 512];
+/// Kernel-ablation hier island grid (4 islands × 4 nodes = 16, matching
+/// the 1d node count and the 4×4 2d grid).
+pub const PROTOCOL_KERNEL_HIER_GRID: (u32, u32) = (4, 4);
 
 fn direction_modes() -> [(&'static str, DirectionMode); 3] {
     [
@@ -680,6 +702,119 @@ fn hierarchical_json(g: &Csr) -> Json {
     ])
 }
 
+/// The engine config for one kernel-ablation run: the named mode at 16
+/// nodes, forced bottom-up (the direction whose hot loops the mask
+/// kernels restructure), with the kernel variant and LRB toggle under
+/// test.
+fn kernel_mode_config(
+    mode: &str,
+    width: usize,
+    kernel: KernelVariant,
+    use_lrb: bool,
+) -> EngineConfig {
+    let mut cfg = match mode {
+        "1d" => EngineConfig::dgx2(PROTOCOL_WIDE_NODES, PROTOCOL_FANOUT),
+        "2d" => EngineConfig::dgx2_2d(PROTOCOL_WIDE_GRID.0, PROTOCOL_WIDE_GRID.1),
+        "hier" => EngineConfig::dgx2_cluster_hier(
+            PROTOCOL_KERNEL_HIER_GRID.0,
+            PROTOCOL_KERNEL_HIER_GRID.1,
+            PROTOCOL_FANOUT,
+        ),
+        m => unreachable!("unknown kernel protocol mode {m}"),
+    };
+    cfg.direction = DirectionMode::BottomUp;
+    cfg.kernel = kernel;
+    cfg.use_lrb = use_lrb;
+    cfg.batch_width =
+        BatchWidth::for_lanes(width).expect("protocol widths are within the lane limit");
+    cfg
+}
+
+/// One variant's work counters as the kernel-ablation section records
+/// them. `tail_words` is the last level's word traffic — the sparse-tail
+/// slice where the chunked kernel's settled-skip pays hardest.
+fn kernel_work_json(m: &BatchMetrics) -> Json {
+    Json::obj(vec![
+        ("words_touched", Json::u(m.words_touched())),
+        ("words_skipped", Json::u(m.words_skipped())),
+        ("dispatches", Json::u(m.dispatches())),
+        ("dispatch_max_work", Json::u(m.dispatch_max_work())),
+        ("tail_words", Json::u(m.levels.last().map(|l| l.words_touched).unwrap_or(0))),
+    ])
+}
+
+/// The kernel-ablation section. Roots come from a single connected
+/// component (the reachable set of the protocol seed root, cycled in
+/// ascending vertex order) so every lane saturates: by the tail levels
+/// most owned vertices are fully settled and the chunked kernel's
+/// skip-summary words have real work to elide — a mixed-component batch
+/// would leave lanes permanently unsettleable and hide the effect.
+fn kernel_ablation_json(g: &Csr) -> Json {
+    use crate::bfs::serial::{serial_bfs, INF};
+    let seed_root = sample_batch_roots(g, 1, PROTOCOL_ROOT_SEED)[0];
+    let comp: Vec<VertexId> = serial_bfs(g, seed_root)
+        .iter()
+        .enumerate()
+        .filter(|&(_, &d)| d != INF)
+        .map(|(v, _)| v as VertexId)
+        .collect();
+    let mut entries = Vec::new();
+    for mode in ["1d", "2d", "hier"] {
+        for &width in &PROTOCOL_KERNEL_WIDTHS {
+            let roots: Vec<VertexId> =
+                (0..width).map(|i| comp[i % comp.len()]).collect();
+            let mut run = |kernel: KernelVariant, use_lrb: bool| {
+                TraversalPlan::build(g, kernel_mode_config(mode, width, kernel, use_lrb))
+                    .expect("valid protocol plan")
+                    .session()
+                    .run_batch(&roots)
+                    .expect("protocol roots in range")
+            };
+            let scalar = run(KernelVariant::Scalar, true);
+            let chunked = run(KernelVariant::Chunked, true);
+            let no_lrb = run(KernelVariant::Chunked, false);
+            let equal = (0..width).all(|lane| {
+                scalar.dist(lane) == chunked.dist(lane)
+                    && chunked.dist(lane) == no_lrb.dist(lane)
+            });
+            let (sm, cm, nm) = (scalar.metrics(), chunked.metrics(), no_lrb.metrics());
+            let mut fields = vec![
+                ("mode", Json::s(mode)),
+                ("width", Json::u(width as u64)),
+                ("nodes", Json::u(PROTOCOL_WIDE_NODES as u64)),
+            ];
+            if mode == "2d" {
+                fields.push((
+                    "grid",
+                    Json::s(format!("{}x{}", PROTOCOL_WIDE_GRID.0, PROTOCOL_WIDE_GRID.1)),
+                ));
+            }
+            if mode == "hier" {
+                fields.push((
+                    "islands",
+                    Json::s(format!(
+                        "{}x{}",
+                        PROTOCOL_KERNEL_HIER_GRID.0, PROTOCOL_KERNEL_HIER_GRID.1
+                    )),
+                ));
+            }
+            fields.extend([
+                ("direction", Json::s("bottomup")),
+                ("lane_words", Json::u(cm.lane_words as u64)),
+                ("levels", Json::u(cm.depth() as u64)),
+                ("reached_pairs", Json::u(cm.reached_pairs)),
+                ("edges_inspected", Json::u(cm.edges_examined())),
+                ("distances_equal", Json::Bool(equal)),
+                ("scalar", kernel_work_json(sm)),
+                ("chunked", kernel_work_json(cm)),
+                ("no_lrb", kernel_work_json(nm)),
+            ]);
+            entries.push(Json::obj(fields));
+        }
+    }
+    Json::Arr(entries)
+}
+
 /// The fault-recovery section: the committed seeded
 /// [`FaultPlan::generate`] schedule injected into the 16-node 1D
 /// direction-optimized 64-root batch, next to the identical fault-free
@@ -800,23 +935,45 @@ pub fn engine_bench_report() -> Json {
         ("storage", storage_json()),
         ("hierarchical", hierarchical_json(&g)),
         ("fault_recovery", fault_recovery_json(&g)),
+        ("kernel_ablation", kernel_ablation_json(&g)),
     ])
 }
 
-/// Detach `serve_throughput.measured` from a report, returning it.
-/// Wallclock numbers are not reproducible, so they never participate in
-/// the freshness compare.
-fn take_measured(report: &mut Json) -> Option<Json> {
-    let Json::Obj(top) = report else { return None };
-    let Some(Json::Obj(serve)) = top.get_mut("serve_throughput") else { return None };
-    serve.remove("measured")
+/// The wallclock subtrees a committed artifact may carry. Wallclock
+/// numbers are not reproducible, so they never participate in the
+/// freshness compare — they are detached before comparing and
+/// re-attached on regeneration.
+#[derive(Default)]
+struct MeasuredSubtrees {
+    /// `serve_throughput.measured` (live-socket load-generator numbers).
+    serve: Option<Json>,
+    /// Top-level `kernel_ablation_measured` (wallclock kernel timings
+    /// from `benches/batch_width.rs --update`).
+    kernel: Option<Json>,
 }
 
-/// Attach a `measured` subtree to a report's `serve_throughput` section.
-fn put_measured(report: &mut Json, measured: Json) {
+/// Detach every measured subtree from a report, returning them.
+fn take_measured(report: &mut Json) -> MeasuredSubtrees {
+    let mut out = MeasuredSubtrees::default();
     if let Json::Obj(top) = report {
+        out.kernel = top.remove("kernel_ablation_measured");
         if let Some(Json::Obj(serve)) = top.get_mut("serve_throughput") {
-            serve.insert("measured".to_string(), measured);
+            out.serve = serve.remove("measured");
+        }
+    }
+    out
+}
+
+/// Re-attach measured subtrees to a report.
+fn put_measured(report: &mut Json, measured: MeasuredSubtrees) {
+    if let Json::Obj(top) = report {
+        if let Some(kernel) = measured.kernel {
+            top.insert("kernel_ablation_measured".to_string(), kernel);
+        }
+        if let Some(serve) = measured.serve {
+            if let Some(Json::Obj(s)) = top.get_mut("serve_throughput") {
+                s.insert("measured".to_string(), serve);
+            }
         }
     }
 }
@@ -831,9 +988,7 @@ pub fn write_engine_bench(path: &Path) -> std::io::Result<()> {
     let mut report = engine_bench_report();
     if let Ok(old_text) = std::fs::read_to_string(path) {
         if let Ok(mut old) = Json::parse(&old_text) {
-            if let Some(measured) = take_measured(&mut old) {
-                put_measured(&mut report, measured);
-            }
+            put_measured(&mut report, take_measured(&mut old));
         }
     }
     let mut text = report.render();
@@ -846,6 +1001,18 @@ pub fn write_engine_bench(path: &Path) -> std::io::Result<()> {
 /// `benches/serve_throughput.rs --update`). Everything else in the
 /// artifact is left byte-untouched apart from re-rendering.
 pub fn update_measured_serve(path: &Path, measured: Json) -> Result<(), String> {
+    update_measured(path, MeasuredSubtrees { serve: Some(measured), kernel: None })
+}
+
+/// Record wallclock kernel timings (from `benches/batch_width.rs
+/// --update`) into the committed artifact's top-level
+/// `kernel_ablation_measured` subtree. Like the serve subtree, it is
+/// excluded from the freshness compare but still sanity-checked.
+pub fn update_measured_kernel(path: &Path, measured: Json) -> Result<(), String> {
+    update_measured(path, MeasuredSubtrees { serve: None, kernel: Some(measured) })
+}
+
+fn update_measured(path: &Path, measured: MeasuredSubtrees) -> Result<(), String> {
     let text = std::fs::read_to_string(path).map_err(|e| {
         format!("cannot read {}: {e} (run bench-protocol first)", path.display())
     })?;
@@ -874,8 +1041,11 @@ pub fn check_engine_bench(path: &Path) -> Result<(), String> {
     compare("$", &committed, &fresh)
         .map_err(|e| format!("{} is stale: {e} (regenerate with bench-protocol)", path.display()))?;
     acceptance(&fresh)?;
-    if let Some(m) = measured {
+    if let Some(m) = measured.serve {
         acceptance_measured(&m)?;
+    }
+    if let Some(m) = measured.kernel {
+        acceptance_measured_kernel(&m)?;
     }
     Ok(())
 }
@@ -1222,6 +1392,65 @@ fn acceptance(report: &Json) -> Result<(), String> {
              as free"
         ));
     }
+    // Kernel-ablation invariants: every variant must agree bit-for-bit on
+    // distances; the chunked kernel must provably read fewer mask words
+    // than the scalar one (in total and on the sparse tail level, where
+    // the settled-skip pays hardest); and LRB degree-binning must
+    // strictly shrink the largest single dispatch on this hub-heavy RMAT.
+    let kernel = report
+        .get("kernel_ablation")
+        .and_then(Json::as_arr)
+        .ok_or("missing kernel_ablation")?;
+    if kernel.is_empty() {
+        return Err("kernel_ablation: no entries".to_string());
+    }
+    for entry in kernel {
+        let mode = entry
+            .get("mode")
+            .and_then(Json::as_str)
+            .ok_or("kernel_ablation entry missing mode")?
+            .to_string();
+        let width = u64_field(entry, "width")?;
+        let tag = format!("kernel ablation {mode} width {width}");
+        if entry.get("distances_equal").and_then(Json::as_bool) != Some(true) {
+            return Err(format!("{tag}: kernel variants disagree on distances"));
+        }
+        let sub = |name: &str| -> Result<&Json, String> {
+            entry.get(name).ok_or_else(|| format!("{tag}: missing {name}"))
+        };
+        let (scalar, chunked, no_lrb) = (sub("scalar")?, sub("chunked")?, sub("no_lrb")?);
+        let (sw, cw) =
+            (u64_field(scalar, "words_touched")?, u64_field(chunked, "words_touched")?);
+        if cw >= sw {
+            return Err(format!(
+                "{tag}: chunked touched {cw} mask words, not fewer than scalar's {sw}"
+            ));
+        }
+        let (st, ct) =
+            (u64_field(scalar, "tail_words")?, u64_field(chunked, "tail_words")?);
+        if ct >= st {
+            return Err(format!(
+                "{tag}: chunked tail level touched {ct} words, not fewer than \
+                 scalar's {st}"
+            ));
+        }
+        if u64_field(scalar, "words_skipped")? != 0 {
+            return Err(format!("{tag}: scalar kernel claims skipped words"));
+        }
+        if u64_field(chunked, "words_skipped")? == 0 {
+            return Err(format!("{tag}: chunked kernel never skipped a word"));
+        }
+        let (lrb_max, flat_max) = (
+            u64_field(chunked, "dispatch_max_work")?,
+            u64_field(no_lrb, "dispatch_max_work")?,
+        );
+        if lrb_max >= flat_max {
+            return Err(format!(
+                "{tag}: LRB max dispatch work {lrb_max} not below the unbinned \
+                 probe's {flat_max}"
+            ));
+        }
+    }
     Ok(())
 }
 
@@ -1259,6 +1488,37 @@ fn acceptance_measured(measured: &Json) -> Result<(), String> {
         .unwrap_or(0.0);
     if width < 1.0 {
         return Err("serve measured coalesced: mean batch width below 1".to_string());
+    }
+    Ok(())
+}
+
+/// Invariants of the optional top-level `kernel_ablation_measured`
+/// subtree (wallclock kernel timings from `benches/batch_width.rs
+/// --update`). Wallclock is noisy, so only shape and positivity are
+/// checked — the deterministic counter gates live in [`acceptance`].
+fn acceptance_measured_kernel(measured: &Json) -> Result<(), String> {
+    let entries = measured
+        .as_arr()
+        .ok_or("kernel measured: must be an array of timing entries")?;
+    if entries.is_empty() {
+        return Err("kernel measured: no entries".to_string());
+    }
+    for (i, e) in entries.iter().enumerate() {
+        for key in ["mode", "kernel"] {
+            e.get(key)
+                .and_then(Json::as_str)
+                .ok_or_else(|| format!("kernel measured[{i}]: missing {key}"))?;
+        }
+        e.get("width")
+            .and_then(Json::as_u64)
+            .ok_or_else(|| format!("kernel measured[{i}]: missing width"))?;
+        let w = e
+            .get("wall_seconds")
+            .and_then(Json::as_f64)
+            .ok_or_else(|| format!("kernel measured[{i}]: missing wall_seconds"))?;
+        if w <= 0.0 {
+            return Err(format!("kernel measured[{i}]: non-positive wall_seconds"));
+        }
     }
     Ok(())
 }
@@ -1347,6 +1607,27 @@ mod tests {
             let get = |k: &str| s.get(k).and_then(Json::as_u64).unwrap();
             assert_eq!(get("messages"), get("intra_messages") + get("inter_messages"), "{sched}");
         }
+        // Kernel-ablation schema: full mode × width grid, per-variant
+        // counter subtrees with all five committed counters.
+        let kernel = a.get("kernel_ablation").unwrap().as_arr().unwrap();
+        assert_eq!(kernel.len(), 3 * PROTOCOL_KERNEL_WIDTHS.len());
+        for entry in kernel {
+            for variant in ["scalar", "chunked", "no_lrb"] {
+                let v = entry.get(variant).unwrap();
+                for key in [
+                    "words_touched",
+                    "words_skipped",
+                    "dispatches",
+                    "dispatch_max_work",
+                    "tail_words",
+                ] {
+                    assert!(v.get(key).and_then(Json::as_u64).is_some(), "{variant}.{key}");
+                }
+            }
+            let words = entry.get("lane_words").and_then(Json::as_u64).unwrap();
+            let width = entry.get("width").and_then(Json::as_u64).unwrap();
+            assert_eq!(words, width.div_ceil(64).next_power_of_two());
+        }
         // Relabeling stores a 4-bytes/vertex permutation (plus alignment
         // padding); the gap encoding must not degrade beyond that.
         let v2 = storage.get("v2_bytes").unwrap().as_u64().unwrap();
@@ -1393,12 +1674,28 @@ mod tests {
         // Wallclock numbers are not in the recomputation, yet the check
         // passes: measured is stripped before the compare.
         check_engine_bench(&path).unwrap();
-        // Regenerating the artifact keeps the measured subtree.
+        // Wallclock kernel timings ride the same exclusion.
+        update_measured_kernel(
+            &path,
+            Json::Arr(vec![Json::obj(vec![
+                ("mode", Json::s("1d")),
+                ("width", Json::u(256)),
+                ("kernel", Json::s("chunked")),
+                ("wall_seconds", Json::n(0.01)),
+            ])]),
+        )
+        .unwrap();
+        check_engine_bench(&path).unwrap();
+        // Regenerating the artifact keeps both measured subtrees.
         write_engine_bench(&path).unwrap();
         let kept = Json::parse(&std::fs::read_to_string(&path).unwrap()).unwrap();
         assert!(
             kept.get("serve_throughput").unwrap().get("measured").is_some(),
             "write_engine_bench must preserve measured"
+        );
+        assert!(
+            kept.get("kernel_ablation_measured").is_some(),
+            "write_engine_bench must preserve kernel_ablation_measured"
         );
         // But a malformed measured subtree still fails the check.
         update_measured_serve(&path, Json::obj(vec![("baseline", mode(900))])).unwrap();

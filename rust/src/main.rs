@@ -28,7 +28,7 @@ use butterfly_bfs::bfs::topdown::topdown_bfs;
 use butterfly_bfs::comm::{Butterfly, CommPattern, ConcurrentAllToAll, IterativeAllToAll};
 use butterfly_bfs::coordinator::config::{DirectionMode, PartitionMode};
 use butterfly_bfs::coordinator::{
-    BatchWidth, EngineConfig, PatternKind, PayloadEncoding, TraversalPlan,
+    BatchWidth, EngineConfig, KernelVariant, PatternKind, PayloadEncoding, TraversalPlan,
 };
 use butterfly_bfs::fault::{FaultInjector, FaultPlan, FaultTolerantRunner};
 use butterfly_bfs::partition::relabel::{apply_relabeling, Relabeling};
@@ -290,6 +290,7 @@ fn cmd_run(argv: Vec<String>) -> Result<()> {
         .opt("scale-delta", "0", "suite graph scale adjustment (+/- log2)")
         .opt("net", "dgx2", "interconnect: dgx2 | dgx-a100 | pcie3 | dyn-alloc | dgx2-cluster")
         .opt("direction", "topdown", "phase-1 direction: topdown | bottomup | diropt")
+        .opt("kernel", "auto", "mask kernel variant: auto | scalar | chunked")
         .opt("fault-plan", "", "JSON fault schedule to inject (detect → retry → degrade recovery)")
         .flag("no-lrb", "disable LRB load balancing")
         .flag("parallel", "run Phase 1 on threads")
@@ -314,6 +315,7 @@ fn cmd_run(argv: Vec<String>) -> Result<()> {
         pattern,
         payload,
         use_lrb: !a.get_flag("no-lrb"),
+        kernel: parse_kernel(&a.get("kernel"))?,
         direction,
         parallel_phase1: a.get_flag("parallel"),
         parallel_phase2: a.get_flag("parallel-sync"),
@@ -523,6 +525,13 @@ fn parse_direction(name: &str) -> Result<DirectionMode> {
     })
 }
 
+fn parse_kernel(name: &str) -> Result<KernelVariant> {
+    match KernelVariant::parse(name) {
+        Some(k) => Ok(k),
+        None => bail!("unknown kernel {name:?} (expected auto | scalar | chunked)"),
+    }
+}
+
 /// Batched multi-source BFS: sample (or take) up to 512 roots and push
 /// them through one `run_batch` — the lane mask widens with the batch
 /// (`--width`), so one exchange per level serves the whole batch —
@@ -544,6 +553,7 @@ fn cmd_batch(argv: Vec<String>) -> Result<()> {
         .opt("scale-delta", "0", "suite graph scale adjustment (+/- log2)")
         .opt("net", "dgx2", "interconnect: dgx2 | dgx-a100 | pcie3 | dyn-alloc | dgx2-cluster")
         .opt("direction", "topdown", "phase-1 direction: topdown | bottomup | diropt")
+        .opt("kernel", "auto", "mask kernel variant: auto | scalar | chunked")
         .opt("fault-plan", "", "JSON fault schedule to inject (detect → retry → degrade recovery)")
         .flag("parallel", "step nodes on the thread pool")
         .flag("parallel-sync", "run the Phase-2 merges on threads")
@@ -562,6 +572,7 @@ fn cmd_batch(argv: Vec<String>) -> Result<()> {
     let cfg = EngineConfig {
         partition,
         direction,
+        kernel: parse_kernel(&a.get("kernel"))?,
         batch_width,
         parallel_phase1: a.get_flag("parallel"),
         parallel_phase2: a.get_flag("parallel-sync"),
@@ -655,6 +666,14 @@ fn cmd_batch(argv: Vec<String>) -> Result<()> {
         bm.bottom_up_levels(),
         bm.depth(),
         count(bm.bottom_up_edges())
+    );
+    println!(
+        "kernel {}: {} mask words touched, {} skipped, {} dispatches (max work {})",
+        plan.config().kernel.name(),
+        count(bm.words_touched()),
+        count(bm.words_skipped()),
+        count(bm.dispatches()),
+        count(bm.dispatch_max_work())
     );
     if faulted {
         println!(

@@ -93,6 +93,7 @@ impl ComputeBackend for XlaFrontierBackend {
     ) {
         out.discovered.clear();
         out.edges_examined = 0;
+        out.work.clear();
         if frontier.is_empty() {
             return;
         }
@@ -105,7 +106,12 @@ impl ComputeBackend for XlaFrontierBackend {
         for (i, x) in self.visited_f32.iter_mut().enumerate() {
             *x = if i < visited.len() && visited.get(i as VertexId) { 1.0 } else { 0.0 };
         }
-        // One BLAS-formulation level step on the device.
+        // One BLAS-formulation level step on the device: a single dense
+        // dispatch over the padded vertex domain (the device kernel has no
+        // sparse path, so the work counters record the full vector scan).
+        let v_dom = self.frontier_f32.len() as u64;
+        out.work.words_touched += v_dom;
+        out.work.record_dispatch(v_dom);
         let new = self
             .step
             .run(&self.adj, &self.frontier_f32, &self.visited_f32)
@@ -129,6 +135,7 @@ impl ComputeBackend for XlaFrontierBackend {
     ) {
         out.discovered.clear();
         out.edges_examined = 0;
+        out.work.clear();
         if frontier_full.is_empty() {
             return;
         }
@@ -147,8 +154,12 @@ impl ComputeBackend for XlaFrontierBackend {
         // frontier @ adjT = owned unvisited vertices with a parent in the
         // frontier. The dense kernel has no early exit, so the examined
         // count is the full slab (this is exactly the GPU bottom-up
-        // trade-off the direction heuristic weighs).
+        // trade-off the direction heuristic weighs). One dense dispatch
+        // over the padded vertex domain, same as the top-down step.
         out.edges_examined = slab.num_edges();
+        let v_dom = self.frontier_f32.len() as u64;
+        out.work.words_touched += v_dom;
+        out.work.record_dispatch(v_dom);
         let new = self
             .step
             .run(self.adj_t.as_ref().unwrap(), &self.frontier_f32, &self.visited_f32)
@@ -164,12 +175,17 @@ impl ComputeBackend for XlaFrontierBackend {
         }
     }
 
-    /// The compiled artifacts are 0/1 frontier steps with no lane-mask
-    /// variant, so batched bottom-up stays unsupported: `run_batch` with a
-    /// bottom-up-capable `DirectionMode` degrades the whole batch to
-    /// top-down on sessions carrying this backend (the engine's
-    /// capability probe). Explicit here (the trait default is already
-    /// `false`) so the degradation contract is visible at the impl.
+    /// The compiled artifacts are 0/1 frontier steps with no *native*
+    /// lane-mask variant, so this probe stays `false` — but `run_batch`
+    /// with a bottom-up-capable `DirectionMode` no longer degrades the
+    /// batch to top-down: the engine's capability probe falls through to
+    /// [`ComputeBackend::expand_bottom_up_batch_semiring`] (left at its
+    /// default `true` here), whose blocked
+    /// `masks_next = Aᵀ ⊗ masks_frontier` formulation over the
+    /// `(OR, AND-NOT-seen)` semiring is exactly the tiled matmul shape a
+    /// future compiled lane-mask artifact would implement on-device.
+    /// Explicit here (the trait default is already `false`) so the
+    /// capability split is visible at the impl.
     fn supports_bottom_up_batch(&self) -> bool {
         false
     }

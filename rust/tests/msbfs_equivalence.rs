@@ -7,8 +7,10 @@
 
 use butterfly_bfs::bfs::msbfs::{ms_bfs, sample_batch_roots};
 use butterfly_bfs::bfs::serial::serial_bfs;
-use butterfly_bfs::coordinator::{EngineConfig, TraversalPlan};
+use butterfly_bfs::coordinator::config::DirectionMode;
+use butterfly_bfs::coordinator::{EngineConfig, KernelVariant, TraversalPlan};
 use butterfly_bfs::graph::csr::VertexId;
+use butterfly_bfs::graph::gen::structured::star;
 use butterfly_bfs::graph::gen::table1_suite;
 use butterfly_bfs::graph::gen::urand::uniform_random;
 use butterfly_bfs::util::propcheck::{forall, gen, Config};
@@ -211,4 +213,122 @@ fn batch_amortizes_bytes_and_rounds_on_suite_graph() {
         bm.sim_seconds(),
         seq.sim_seconds
     );
+}
+
+/// The tentpole identity: every mask-kernel variant (`scalar`, `chunked`,
+/// and the `auto` resolver) produces bit-identical distances on random
+/// graphs, at widths crossing every lane-word boundary, under all three
+/// partition modes and all three direction policies. The scalar kernel
+/// additionally never reports skipped words (it has no skip path).
+#[test]
+fn property_kernel_variants_bit_identical() {
+    const WIDTHS: [usize; 11] =
+        [63, 64, 65, 128, 129, 192, 256, 257, 320, 448, 512];
+    forall(Config::cases(8), "kernel variants bit-identical", |rng| {
+        let n = gen::usize_in(rng, 20, 200);
+        let ef = gen::usize_in(rng, 1, 5) as u32;
+        let width = WIDTHS[gen::usize_in(rng, 0, WIDTHS.len() - 1)];
+        let (g, _) = uniform_random(n, ef, rng.next_u64());
+        let roots: Vec<VertexId> =
+            (0..width).map(|_| rng.next_usize(n) as VertexId).collect();
+        let base = match gen::usize_in(rng, 0, 2) {
+            0 => EngineConfig::dgx2(gen::usize_in(rng, 1, 8.min(n)), 2),
+            1 => EngineConfig::dgx2_2d(2, 2),
+            _ => EngineConfig::dgx2_cluster_hier(2, 2, 2),
+        };
+        let direction = match gen::usize_in(rng, 0, 2) {
+            0 => DirectionMode::TopDown,
+            1 => DirectionMode::BottomUp,
+            _ => DirectionMode::diropt(),
+        };
+        let mut ok = true;
+        let mut oracle: Option<Vec<Vec<u32>>> = None;
+        for kernel in
+            [KernelVariant::Auto, KernelVariant::Scalar, KernelVariant::Chunked]
+        {
+            let cfg = EngineConfig {
+                direction,
+                kernel,
+                ..base.clone()
+            };
+            let mut session = TraversalPlan::build(&g, cfg).unwrap().session();
+            let b = session.run_batch(&roots).unwrap();
+            ok &= session.assert_batch_agreement().is_ok();
+            if kernel == KernelVariant::Scalar {
+                ok &= b.metrics().words_skipped() == 0;
+            }
+            let dists: Vec<Vec<u32>> =
+                (0..width).map(|lane| b.dist(lane).to_vec()).collect();
+            match &oracle {
+                None => oracle = Some(dists),
+                Some(o) => ok &= o == &dists,
+            }
+        }
+        (
+            ok,
+            format!(
+                "n={n} ef={ef} width={width} dir={direction:?} \
+                 mode={}",
+                base.partition.name()
+            ),
+        )
+    });
+}
+
+/// LRB-binned bottom-up composes with the chunked kernel bit-identically
+/// to the flat candidate scan — on a uniform random graph and on a
+/// degenerate star where every probe candidate lands in the top degree
+/// bin. Binning only regroups the probe dispatches: the word traffic is
+/// unchanged, and the largest single dispatch never grows.
+#[test]
+fn lrb_binned_bottom_up_equals_flat_scan() {
+    let (urand, _) = uniform_random(300, 5, 42);
+    let hub = star(257);
+    for g in [&urand, &hub] {
+        let roots = sample_batch_roots(g, 100, 0xB1B);
+        let serial: Vec<Vec<u32>> =
+            roots.iter().map(|&r| serial_bfs(g, r)).collect();
+        for direction in [DirectionMode::BottomUp, DirectionMode::diropt()] {
+            let mut binned: Option<(Vec<Vec<u32>>, u64, u64)> = None;
+            for use_lrb in [true, false] {
+                let cfg = EngineConfig {
+                    direction,
+                    use_lrb,
+                    kernel: KernelVariant::Chunked,
+                    ..EngineConfig::dgx2(4, 2)
+                };
+                let mut session =
+                    TraversalPlan::build(g, cfg).unwrap().session();
+                let b = session.run_batch(&roots).unwrap();
+                session.assert_batch_agreement().unwrap();
+                let dists: Vec<Vec<u32>> =
+                    (0..roots.len()).map(|l| b.dist(l).to_vec()).collect();
+                assert_eq!(dists, serial, "lrb={use_lrb} {direction:?}");
+                let m = b.metrics();
+                match &binned {
+                    None => {
+                        binned = Some((
+                            dists,
+                            m.words_touched(),
+                            m.dispatch_max_work(),
+                        ));
+                    }
+                    Some((want, words, max_work)) => {
+                        assert_eq!(&dists, want, "{direction:?}");
+                        assert_eq!(
+                            m.words_touched(),
+                            *words,
+                            "binning must not change word traffic ({direction:?})"
+                        );
+                        assert!(
+                            *max_work <= m.dispatch_max_work(),
+                            "LRB max dispatch {} > flat {} ({direction:?})",
+                            max_work,
+                            m.dispatch_max_work(),
+                        );
+                    }
+                }
+            }
+        }
+    }
 }

@@ -6,7 +6,9 @@
 use butterfly_bfs::bfs::frontier::{Bitmap, MaskFrontier};
 use butterfly_bfs::bfs::msbfs::{mask_delta_bytes, mask_delta_bytes_dense, MaskDeltaStats};
 use butterfly_bfs::bfs::serial::serial_bfs;
-use butterfly_bfs::coordinator::{EngineConfig, PayloadEncoding, TraversalPlan};
+use butterfly_bfs::coordinator::{
+    EngineConfig, KernelVariant, PayloadEncoding, TraversalPlan,
+};
 use butterfly_bfs::graph::gen::urand::uniform_random;
 use butterfly_bfs::util::propcheck::{forall, gen, Config};
 
@@ -294,10 +296,13 @@ fn hub_with_tails(leaves: u32) -> butterfly_bfs::graph::csr::Csr {
     b.build_undirected().0
 }
 
-/// The dense-merge byte-accounting regression: the traversal crosses the
-/// 8·V switchover upward (hub level) and back downward (tail levels),
-/// distances stay oracle-exact on every node, and the hot level's priced
-/// bytes stay strictly below the unbounded sparse `12·entries` cost.
+/// The dense-merge byte-accounting regression, re-run under every mask
+/// kernel variant: the traversal crosses the 8·V switchover upward (hub
+/// level) and back downward (tail levels), distances stay oracle-exact on
+/// every node, the hot level's priced bytes stay strictly below the
+/// unbounded sparse `12·entries` cost — and the kernel variant changes
+/// *none* of the wire accounting (bytes are a property of what is sent,
+/// not of how the receiver scans its merge buffers).
 #[test]
 fn batch_dense_fallback_crosses_switchover_both_directions() {
     use butterfly_bfs::bfs::msbfs::ms_bfs;
@@ -305,46 +310,60 @@ fn batch_dense_fallback_crosses_switchover_both_directions() {
     let v = g.num_vertices();
     let dense_entries = (v as u64 * 8).div_ceil(MaskFrontier::<1>::ENTRY_BYTES);
     let roots = vec![0u32; 64]; // duplicate roots: lanes travel together
-    let mut session = TraversalPlan::build(&g, EngineConfig::dgx2(4, 1))
-        .unwrap()
-        .session();
-    let b = session.run_batch(&roots).unwrap();
-    session.assert_batch_agreement().unwrap();
-    let m = b.metrics();
     let want = ms_bfs(&g, &roots);
-    for lane in 0..roots.len() {
-        assert_eq!(b.dist(lane), want.dist(lane), "lane {lane}");
-    }
-    // Reconstruct per-level delta entries: with 64 duplicate lanes every
-    // discovery carries the full mask, so entries = discovered / 64.
-    let entries: Vec<u64> = m.levels.iter().map(|l| l.discovered / 64).collect();
-    let hot = entries
-        .iter()
-        .position(|&e| e >= dense_entries)
-        .expect("a level must cross the dense threshold");
-    assert!(hot > 0, "sparse levels precede the hub level");
-    assert!(
-        entries[hot + 1..].iter().all(|&e| e < dense_entries),
-        "tail levels drop back below the threshold: {entries:?}"
-    );
-    assert!(
-        entries[..hot].iter().all(|&e| e < dense_entries),
-        "pre-hub levels are sparse: {entries:?}"
-    );
-    // Byte accounting at the hot level: the negotiated encoding must
-    // undercut the unbounded sparse form once past the switchover.
-    let hot_level = &m.levels[hot];
-    let sparse_cost = hot_level.messages * entries[hot] * MaskFrontier::<1>::ENTRY_BYTES;
-    assert!(
-        hot_level.bytes < sparse_cost,
-        "dense/grouped pricing caps the hot level: {} !< {sparse_cost}",
-        hot_level.bytes
-    );
-    // And the hard ceiling: no message ever exceeds the dense mask family
-    // bound (presence bitmap + one word per vertex).
-    let presence = (v as u64).div_ceil(64) * 8;
-    for l in &m.levels {
-        assert!(l.bytes <= l.messages * (presence + v as u64 * 8), "level {}", l.level);
+    let mut oracle_bytes: Option<Vec<u64>> = None;
+    for kernel in [KernelVariant::Auto, KernelVariant::Scalar, KernelVariant::Chunked] {
+        let cfg = EngineConfig { kernel, ..EngineConfig::dgx2(4, 1) };
+        let mut session = TraversalPlan::build(&g, cfg).unwrap().session();
+        let b = session.run_batch(&roots).unwrap();
+        session.assert_batch_agreement().unwrap();
+        let m = b.metrics();
+        for lane in 0..roots.len() {
+            assert_eq!(b.dist(lane), want.dist(lane), "{kernel:?} lane {lane}");
+        }
+        // Reconstruct per-level delta entries: with 64 duplicate lanes every
+        // discovery carries the full mask, so entries = discovered / 64.
+        let entries: Vec<u64> = m.levels.iter().map(|l| l.discovered / 64).collect();
+        let hot = entries
+            .iter()
+            .position(|&e| e >= dense_entries)
+            .expect("a level must cross the dense threshold");
+        assert!(hot > 0, "{kernel:?}: sparse levels precede the hub level");
+        assert!(
+            entries[hot + 1..].iter().all(|&e| e < dense_entries),
+            "{kernel:?}: tail levels drop back below the threshold: {entries:?}"
+        );
+        assert!(
+            entries[..hot].iter().all(|&e| e < dense_entries),
+            "{kernel:?}: pre-hub levels are sparse: {entries:?}"
+        );
+        // Byte accounting at the hot level: the negotiated encoding must
+        // undercut the unbounded sparse form once past the switchover.
+        let hot_level = &m.levels[hot];
+        let sparse_cost =
+            hot_level.messages * entries[hot] * MaskFrontier::<1>::ENTRY_BYTES;
+        assert!(
+            hot_level.bytes < sparse_cost,
+            "{kernel:?}: dense/grouped pricing caps the hot level: {} !< {sparse_cost}",
+            hot_level.bytes
+        );
+        // And the hard ceiling: no message ever exceeds the dense mask family
+        // bound (presence bitmap + one word per vertex).
+        let presence = (v as u64).div_ceil(64) * 8;
+        for l in &m.levels {
+            assert!(
+                l.bytes <= l.messages * (presence + v as u64 * 8),
+                "{kernel:?} level {}",
+                l.level
+            );
+        }
+        // The kernel variant is invisible on the wire: per-level bytes are
+        // identical across scalar / chunked / auto.
+        let per_level: Vec<u64> = m.levels.iter().map(|l| l.bytes).collect();
+        match &oracle_bytes {
+            None => oracle_bytes = Some(per_level),
+            Some(o) => assert_eq!(o, &per_level, "{kernel:?} changed wire bytes"),
+        }
     }
 }
 
